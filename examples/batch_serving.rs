@@ -1,0 +1,92 @@
+//! Batching-policy study on the live serve path: sweep the dynamic
+//! batcher's window and plot the throughput/latency trade-off, with a
+//! mixed workload (PaperNet inference + raw conv requests for every conv
+//! artifact in the manifest).
+//!
+//! Run: `cargo run --release --example batch_serving [-- --requests 256]`
+
+use std::time::{Duration, Instant};
+
+use pasconv::coordinator::{BatchConfig, Coordinator, Payload};
+use pasconv::runtime::{default_artifact_dir, ArtifactKind, Runtime, Tensor};
+use pasconv::util::bench::Table;
+use pasconv::util::cli::Args;
+use pasconv::util::rng::Rng;
+use pasconv::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let n = args.get_usize("requests", 256);
+    let dir = default_artifact_dir();
+
+    // conv request templates from the manifest
+    let rt = Runtime::new(&dir)?;
+    let mut conv_templates = vec![];
+    for kind in [ArtifactKind::ConvSingle, ArtifactKind::ConvMulti] {
+        for a in rt.artifacts_of_kind(kind) {
+            conv_templates.push(a.problem()?);
+        }
+    }
+    drop(rt);
+    println!("{} conv shapes + PaperNet; {} requests per config\n", conv_templates.len(), n);
+
+    let mut table = Table::new(&[
+        "window",
+        "max_batch",
+        "req/s",
+        "p50 lat",
+        "p99 lat",
+        "mean batch",
+    ]);
+    for (window_us, max_batch) in
+        [(0u64, 1usize), (500, 4), (1_000, 8), (2_000, 8), (5_000, 8), (10_000, 8)]
+    {
+        let mut coord = Coordinator::start(
+            &dir,
+            BatchConfig { max_batch, max_wait: Duration::from_micros(window_us) },
+        )?;
+        let mut rng = Rng::new(0xBA7C);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                if i % 4 == 3 {
+                    // every 4th request is a raw conv
+                    let p = conv_templates[i % conv_templates.len()];
+                    let image = if p.is_single_channel() {
+                        Tensor::randn(vec![p.wy, p.wx], &mut rng)
+                    } else {
+                        Tensor::randn(vec![p.c, p.wy, p.wx], &mut rng)
+                    };
+                    let filters = if p.is_single_channel() {
+                        Tensor::randn(vec![p.m, p.k, p.k], &mut rng)
+                    } else {
+                        Tensor::randn(vec![p.m, p.c, p.k, p.k], &mut rng)
+                    };
+                    coord.submit(Payload::Conv { problem: p, image, filters })
+                } else {
+                    coord.submit(Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut rng) })
+                }
+            })
+            .collect();
+        let mut lats = vec![];
+        for rx in rxs {
+            let resp = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+            lats.push(resp.latency_secs);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = Summary::of(&lats);
+        let m = coord.metrics();
+        table.row(&[
+            format!("{:.1}ms", window_us as f64 / 1000.0),
+            max_batch.to_string(),
+            format!("{:.0}", n as f64 / wall),
+            format!("{:.2}ms", s.p50 * 1e3),
+            format!("{:.2}ms", s.p99 * 1e3),
+            format!("{:.2}", m.mean_batch_size()),
+        ]);
+        coord.shutdown();
+    }
+    table.print();
+    println!("\nbatch_serving OK");
+    Ok(())
+}

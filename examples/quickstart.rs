@@ -1,0 +1,56 @@
+//! Quickstart: the whole stack in one file.
+//!
+//! 1. load the AOT'd artifacts (built once by `make artifacts`);
+//! 2. run a multi-channel convolution through PJRT (the §3.2
+//!    stride-fixed Pallas kernel's numerics);
+//! 3. verify against the in-repo CPU oracle;
+//! 4. ask the paper's analytic model how this problem would be divided
+//!    on the GTX 1080Ti, and compare the simulated time with cuDNN's.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use pasconv::baselines::cudnn_proxy;
+use pasconv::conv::{conv2d_multi_cpu, max_abs_diff, ConvProblem};
+use pasconv::coordinator::plan_advice;
+use pasconv::gpusim::{gtx_1080ti, simulate};
+use pasconv::plans::plan_for;
+use pasconv::runtime::{default_artifact_dir, Runtime, Tensor};
+use pasconv::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // -- 1. the runtime ----------------------------------------------------
+    let mut rt = Runtime::new(&default_artifact_dir())?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts: {}", rt.names().join(", "));
+
+    // -- 2. a real convolution through the AOT'd Pallas kernel -------------
+    let name = "multi_c32_w14_m32_k3";
+    let p: ConvProblem = rt.artifact(name)?.problem()?;
+    println!("\nrunning {name}: {}", p.label());
+    let mut rng = Rng::new(42);
+    let image = Tensor::randn(vec![p.c, p.wy, p.wx], &mut rng);
+    let filters = Tensor::randn(vec![p.m, p.c, p.k, p.k], &mut rng);
+    let out = rt.execute_conv(name, &image, &filters)?;
+    println!("output shape: {:?}", out.shape);
+
+    // -- 3. verify vs the CPU oracle ---------------------------------------
+    let want = conv2d_multi_cpu(&p, &image.data, &filters.data);
+    let diff = max_abs_diff(&out.data, &want);
+    println!("max |PJRT - CPU oracle| = {diff:.2e}");
+    assert!(diff < 1e-2, "numeric mismatch");
+
+    // -- 4. the paper's model for this problem -----------------------------
+    let g = gtx_1080ti();
+    println!("\non the paper's {}:", g.name);
+    println!("  plan: {}", plan_advice(&p, &g));
+    let ours = simulate(&g, &plan_for(&p, &g));
+    let base = simulate(&g, &cudnn_proxy::plan(&p, &g));
+    println!(
+        "  simulated: ours {:.1} µs vs cuDNN-proxy {:.1} µs  ->  {:.2}x",
+        ours.seconds * 1e6,
+        base.seconds * 1e6,
+        base.seconds / ours.seconds
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Analysis walk-through: what the paper's model *decides* and why.
+//!
+//! For the Figs. 4/5 sweeps this prints, per problem:
+//!   * the §3.1 P/Q decision (method, divisors, prefetch vs V_s volume)
+//!     or the §3.2 stride-fixed parameters (S, M', W'x),
+//!   * the working set vs S_shared and Th vs N_FMA,
+//!   * the simulated time vs every baseline.
+//!
+//! Run: `cargo run --release --example sweep_analysis [-- --gpu titanx]`
+
+use pasconv::analytic::{choose_single, choose_stride_fixed, SingleMethod};
+use pasconv::baselines::{cudnn_proxy, dac17, tan128};
+use pasconv::conv::suites::{fig4_suite, fig5_suite};
+use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell};
+use pasconv::plans::plan_for;
+use pasconv::util::bench::Table;
+use pasconv::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let g = match args.get_or("gpu", "1080ti") {
+        "titanx" => titan_x_maxwell(),
+        _ => gtx_1080ti(),
+    };
+    println!(
+        "GPU: {}   N_FMA = {}   V_s = {} B   S_shared = {} KB\n",
+        g.name,
+        g.n_fma(),
+        g.v_s(),
+        g.shared_mem_bytes / 1024
+    );
+
+    println!("== §3.1 single-channel decisions (Fig. 4 suite) ==");
+    let mut t = Table::new(&["problem", "method", "P", "Q", "D (KB)", "Th/N_FMA", "strategy"]);
+    for p in fig4_suite() {
+        let c = choose_single(&p, &g);
+        let (d, th) = match c.method {
+            SingleMethod::FilterSplit => (c.d1_bytes, c.th1),
+            SingleMethod::MapSplit => (c.d2_bytes, c.th2),
+        };
+        t.row(&[
+            p.label(),
+            format!("{:?}", c.method),
+            c.p.to_string(),
+            c.q.to_string(),
+            format!("{:.1}", d as f64 / 1024.0),
+            format!("{:.2}", th as f64 / g.n_fma() as f64),
+            if c.uses_prefetch { "prefetch".into() } else { "V_s volume".into() },
+        ]);
+    }
+    t.print();
+
+    println!("\n== §3.2 stride-fixed decisions (Fig. 5 suite, S = 32) ==");
+    let mut t = Table::new(&["problem", "S", "M'", "W'x", "W'y", "smem (KB)", "hides latency"]);
+    for p in fig5_suite() {
+        let c = choose_stride_fixed(&p, &g, 32);
+        t.row(&[
+            p.label(),
+            c.s_bytes.to_string(),
+            c.m_prime.to_string(),
+            c.wx_prime.to_string(),
+            c.wy_prime.to_string(),
+            format!("{:.1}", c.smem_bytes as f64 / 1024.0),
+            c.hides_latency.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\n== simulated comparison, all kernels (subset) ==");
+    let mut t = Table::new(&["problem", "ours", "cudnn", "dac17", "tan128"]);
+    for p in fig5_suite().into_iter().step_by(4) {
+        let us = |s: f64| format!("{:.1}µs", s * 1e6);
+        t.row(&[
+            p.label(),
+            us(simulate(&g, &plan_for(&p, &g)).seconds),
+            us(simulate(&g, &cudnn_proxy::plan(&p, &g)).seconds),
+            us(simulate(&g, &dac17::plan(&p, &g)).seconds),
+            us(simulate(&g, &tan128::plan(&p, &g)).seconds),
+        ]);
+    }
+    t.print();
+    println!("\nsweep_analysis OK");
+}

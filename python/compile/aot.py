@@ -1,0 +1,144 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`).  The text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is lowered with ``return_tuple=True``; the rust side
+unwraps with ``to_tuple1()``.
+
+Alongside the ``*.hlo.txt`` files a ``manifest.txt`` is written, one
+artifact per line, ``key=value`` fields separated by whitespace:
+
+  name=multi_c32_w14_m32_k3 kind=conv_multi file=multi_c32_w14_m32_k3.hlo.txt \
+      c=32 wy=14 wx=14 m=32 k=3 dtype=f32
+
+The rust runtime (`rust/src/runtime/manifest.rs`) parses exactly this.
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Catalog: every artifact the rust side knows about.  Conv shapes cover the
+# regimes of Figs. 4/5 at CPU-tractable sizes (the timing sweeps run in the
+# gpusim substrate; these artifacts carry the *numerics*).
+# ---------------------------------------------------------------------------
+
+
+def catalog():
+    """Yield (name, fn, meta) for every artifact."""
+    singles = [
+        # (wy, wx, m, k) — small-map regime of Fig. 4
+        (28, 28, 64, 1),
+        (32, 32, 32, 3),
+        (64, 64, 16, 5),
+        (56, 56, 32, 3),
+    ]
+    for wy, wx, m, k in singles:
+        name = f"single_w{wy}_m{m}_k{k}"
+        fn = model.make_conv_single(wy, wx, m, k)
+        yield name, fn, dict(kind="conv_single", wy=wy, wx=wx, m=m, k=k, dtype="f32")
+
+    multis = [
+        # (c, wy, wx, m, k) — Fig. 5 regimes incl. the 7x7/K=3 deep-layer case
+        (16, 28, 28, 16, 1),
+        (32, 14, 14, 32, 3),
+        (64, 7, 7, 64, 3),
+        (16, 16, 16, 16, 5),
+    ]
+    for c, wy, wx, m, k in multis:
+        name = f"multi_c{c}_w{wy}_m{m}_k{k}"
+        fn = model.make_conv_multi(c, wy, wx, m, k)
+        yield name, fn, dict(kind="conv_multi", c=c, wy=wy, wx=wx, m=m, k=k, dtype="f32")
+
+    # Implicit-GEMM baseline numerics for one representative shape: the
+    # rust integration tests check it agrees with the stride-fixed kernel.
+    c, wy, wx, m, k = 32, 14, 14, 32, 3
+    yield (f"im2col_c{c}_w{wy}_m{m}_k{k}",
+           model.make_conv_im2col(c, wy, wx, m, k),
+           dict(kind="conv_im2col", c=c, wy=wy, wx=wx, m=m, k=k, dtype="f32"))
+
+    # Algorithm-taxonomy baselines (§1 categories 2 and 3) for one
+    # representative shape each — the rust integration tests check all
+    # four families agree numerically through PJRT.
+    c, wy, wx, m = 32, 14, 14, 32
+    yield (f"winograd_c{c}_w{wy}_m{m}_k3",
+           model.make_conv_winograd(c, wy, wx, m),
+           dict(kind="conv_winograd", c=c, wy=wy, wx=wx, m=m, k=3, dtype="f32"))
+    yield (f"fft_c{c}_w{wy}_m{m}_k3",
+           model.make_conv_fft(c, wy, wx, m, 3),
+           dict(kind="conv_fft", c=c, wy=wy, wx=wx, m=m, k=3, dtype="f32"))
+
+    # End-to-end serving workload.
+    for batch in (1, 8):
+        yield (f"papernet_b{batch}",
+               model.make_papernet(batch),
+               dict(kind="cnn", batch=batch, classes=10, in_c=1, in_h=28, in_w=28,
+                    dtype="f32"))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    ``print_large_constants=True`` is essential: the default HLO printer
+    elides big literals as ``constant({...})``, which the rust-side text
+    parser silently reads back as zeros — PaperNet's baked weights would
+    vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_one(fn) -> str:
+    lowered = jax.jit(fn).lower(*fn.arg_specs)
+    return to_hlo_text(lowered)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="build a single artifact by name")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = []
+    t0 = time.time()
+    for name, fn, meta in catalog():
+        if args.only and name != args.only:
+            continue
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        t = time.time()
+        text = lower_one(fn)
+        with open(path, "w") as f:
+            f.write(text)
+        fields = " ".join(f"{k}={v}" for k, v in meta.items())
+        manifest_lines.append(f"name={name} file={name}.hlo.txt {fields}")
+        print(f"  {name}: {len(text) / 1e3:.0f} kB in {time.time() - t:.1f}s", flush=True)
+
+    if not args.only:
+        with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+            f.write("# pasconv artifact manifest — parsed by rust/src/runtime/manifest.rs\n")
+            f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(manifest_lines)} artifacts to {args.out} "
+          f"in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,28 @@
+"""L1 Pallas kernels and their pure-jnp oracle.
+
+Exports:
+  conv2d_single  — §3.1 single-channel kernel (P/Q-tiled)
+  conv2d_multi   — §3.2 stride-fixed block multi-channel kernel
+  conv2d_im2col  — Implicit-GEMM baseline (cuDNN-proxy numerics)
+  conv2d_winograd— Winograd F(2x2,3x3) baseline (§1 category 3)
+  conv2d_fft     — FFT baseline, L2-level (§1 category 2)
+  ref            — reference oracles (eq. 1 / eq. 2)
+"""
+
+from . import ref
+from .single_channel import conv2d_single, choose_single_tiles
+from .multi_channel import conv2d_multi, choose_multi_tiles
+from .im2col_gemm import conv2d_im2col
+from .winograd import conv2d_winograd
+from .fft_conv import conv2d_fft
+
+__all__ = [
+    "ref",
+    "conv2d_single",
+    "conv2d_multi",
+    "conv2d_im2col",
+    "conv2d_winograd",
+    "conv2d_fft",
+    "choose_single_tiles",
+    "choose_multi_tiles",
+]

@@ -1,0 +1,138 @@
+"""L1 Pallas kernel — multi-channel convolution, stride-fixed block (§3.2).
+
+The paper's *stride-fixed block* method fetches, per round and per SM:
+
+  * an S-byte segment of each of M' filters along the ``ch`` dimension
+    (S in {32, 64} bytes — the coalescing minimum, small so M' can be
+    large), and
+  * a W'x-pixel strip of the feature map of the matching channels,
+
+then computes all M' filters against the strip while the next round's
+segments prefetch.  The knobs: S fixes the channel-block depth
+``c_seg = S / (K*K*4)`` (for K=1, S/4 channels per segment; for K>1 a
+segment spans several taps of fewer channels — we round to whole
+channels, the natural TPU re-tiling), W'x fixes the strip width, and
+M' >= N_FMA*4/(S*W'x) fixes the output-filter parallelism.
+
+TPU mapping: the segment stream becomes the *contraction-blocked* grid
+dimension.  grid = (M/m_blk, C/c_seg) with the channel-segment axis
+innermost; the output block index map ignores it, so the output block
+stays resident in VMEM while segments stream through — exactly the
+paper's "red pixels held for the next round" trick.  Each tap's update is
+
+    out(m_blk, Oy*Ox) += F[m_blk, c_seg, i, j] @ I[c_seg, win(i,j)]
+
+an (m_blk x c_seg) @ (c_seg x Oy*Ox) matmul: the inner loop the paper
+feeds its FMA units is literally MXU-shaped here.  The Pallas grid
+pipeline double-buffers the segment fetches, playing the role of the
+paper's explicit prefetch; the <= S_shared/2 constraint of §3.2(4) is
+the two-slot pipeline buffer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["conv2d_multi", "choose_multi_tiles"]
+
+
+def _kernel(img_ref, flt_ref, out_ref, *, k: int, oy: int, ox: int):
+    """One grid step: accumulate one channel segment into the out block.
+
+    img_ref : (c_seg, Wy, Wx)        this segment's map channels
+    flt_ref : (m_blk, c_seg, k, k)   this segment's filter block
+    out_ref : (m_blk, oy, ox)        revisited across the segment axis
+    """
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    img = img_ref[...]
+    flt = flt_ref[...]
+    m_blk, c_seg = flt.shape[0], flt.shape[1]
+    acc = jnp.zeros((m_blk, oy * ox), dtype=jnp.float32)
+    # K*K unrolled taps; each is an MXU-shaped (m_blk, c_seg)@(c_seg, oy*ox).
+    for i in range(k):
+        for j in range(k):
+            win = jax.lax.slice(img, (0, i, j), (c_seg, i + oy, j + ox))
+            acc = acc + jax.lax.dot(
+                flt[:, :, i, j].astype(jnp.float32),
+                win.reshape(c_seg, oy * ox).astype(jnp.float32),
+                precision=jax.lax.Precision.HIGHEST,
+            )
+    out_ref[...] = out_ref[...] + acc.reshape(m_blk, oy, ox).astype(out_ref.dtype)
+
+
+def choose_multi_tiles(c: int, wy: int, wx: int, m: int, k: int,
+                       *, segment_bytes: int = 32,
+                       max_block_floats: int = 24 * 1024) -> tuple[int, int]:
+    """Pick (m_blk, c_seg) — the Pallas analogue of the §3.2 (S, M') step.
+
+    ``segment_bytes`` is the paper's S: the filter bytes fetched per
+    filter per round. c_seg = max(1, S / (K*K*4)) channels, rounded to a
+    divisor of C. m_blk is then the largest divisor of M whose block
+    working set fits ``max_block_floats`` (the S_shared/2 double-buffer
+    constraint at f32).
+    """
+    tap_bytes = k * k * 4
+    want = max(1, segment_bytes // tap_bytes)
+    c_seg = 1
+    for d in range(1, c + 1):
+        if c % d == 0 and d <= want:
+            c_seg = d
+    oy, ox = wy - k + 1, wx - k + 1
+    m_blk = 1
+    for d in range(1, m + 1):
+        if m % d == 0:
+            work = d * c_seg * k * k + c_seg * wy * wx + d * oy * ox
+            if work <= max_block_floats:
+                m_blk = d
+    return m_blk, c_seg
+
+
+@functools.partial(jax.jit, static_argnames=("m_blk", "c_seg"))
+def _conv2d_multi_tiled(image, filters, m_blk: int, c_seg: int):
+    c, wy, wx = image.shape
+    m, _, k, _ = filters.shape
+    oy, ox = wy - k + 1, wx - k + 1
+    # channel-segment axis innermost: segments stream while the output
+    # block stays resident (the paper's round structure, Fig. 3).
+    grid = (m // m_blk, c // c_seg)
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, oy=oy, ox=ox),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c_seg, wy, wx), lambda mi, s: (s, 0, 0)),
+            pl.BlockSpec((m_blk, c_seg, k, k), lambda mi, s: (mi, s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m_blk, oy, ox), lambda mi, s: (mi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, oy, ox), image.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(image, filters)
+
+
+def conv2d_multi(image: jax.Array, filters: jax.Array,
+                 m_blk: int | None = None, c_seg: int | None = None,
+                 segment_bytes: int = 32) -> jax.Array:
+    """Multi-channel convolution (eq. 1) via the stride-fixed block kernel.
+
+    ``m_blk``/``c_seg`` default to :func:`choose_multi_tiles` with the
+    paper's S = ``segment_bytes``; pass them explicitly to reproduce a
+    specific (S, M') point of the §3.2 ablation.
+    """
+    c, wy, wx = image.shape
+    m, c2, k, _ = filters.shape
+    assert c == c2, "channel mismatch"
+    if m_blk is None or c_seg is None:
+        auto_m, auto_c = choose_multi_tiles(c, wy, wx, m, k, segment_bytes=segment_bytes)
+        m_blk = m_blk or auto_m
+        c_seg = c_seg or auto_c
+    if m % m_blk or c % c_seg:
+        raise ValueError(f"blocks must divide: M={m} %% m_blk={m_blk}, C={c} %% c_seg={c_seg}")
+    return _conv2d_multi_tiled(image, filters, m_blk, c_seg)

@@ -1,0 +1,142 @@
+"""Pure-jnp reference oracles for the paper's convolution definitions.
+
+These implement equations (1) and (2) of the paper verbatim (valid
+cross-correlation, no padding, stride 1) and are the single source of
+truth every Pallas kernel is verified against by pytest/hypothesis.
+
+Shapes follow the paper's notation:
+
+  single-channel (eq. 2):
+      image   I : (Wy, Wx)            float
+      filters F : (M, K, K)
+      output  O : (M, Oy, Ox)         Oy = Wy-K+1, Ox = Wx-K+1
+
+  multi-channel (eq. 1):
+      image   I : (C, Wy, Wx)
+      filters F : (M, C, K, K)
+      output  O : (M, Oy, Ox)
+
+Two independent implementations are provided for each case: a direct
+loop-free shift-and-add form, and an ``lax.conv_general_dilated`` form.
+Tests cross-check the two, so a bug in one cannot silently become the
+oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "conv2d_single_ref",
+    "conv2d_multi_ref",
+    "conv2d_single_lax",
+    "conv2d_multi_lax",
+    "im2col_matrix",
+    "conv2d_multi_im2col_ref",
+    "out_shape_single",
+    "out_shape_multi",
+]
+
+
+def out_shape_single(image_shape, filters_shape):
+    """Output shape (M, Oy, Ox) for eq. (2) operands."""
+    (wy, wx) = image_shape
+    (m, k, k2) = filters_shape
+    assert k == k2, "filters must be square"
+    return (m, wy - k + 1, wx - k + 1)
+
+
+def out_shape_multi(image_shape, filters_shape):
+    """Output shape (M, Oy, Ox) for eq. (1) operands."""
+    (c, wy, wx) = image_shape
+    (m, c2, k, k2) = filters_shape
+    assert c == c2, "channel mismatch"
+    assert k == k2, "filters must be square"
+    return (m, wy - k + 1, wx - k + 1)
+
+
+def conv2d_single_ref(image: jax.Array, filters: jax.Array) -> jax.Array:
+    """Eq. (2): O^m(x,y) = sum_{i,j} I(x+i, y+j) * F^m(i,j).
+
+    Shift-and-add form: for each (i, j) filter tap, slice the aligned
+    (Oy, Ox) window of the image and scale it by the tap, broadcast over
+    the M filter dimension.
+    """
+    wy, wx = image.shape
+    m, k, _ = filters.shape
+    oy, ox = wy - k + 1, wx - k + 1
+    acc = jnp.zeros((m, oy, ox), dtype=jnp.promote_types(image.dtype, jnp.float32))
+    for i in range(k):
+        for j in range(k):
+            win = lax.slice(image, (i, j), (i + oy, j + ox))
+            acc = acc + win[None, :, :].astype(acc.dtype) * filters[:, i, j][:, None, None].astype(acc.dtype)
+    return acc.astype(image.dtype)
+
+
+def conv2d_multi_ref(image: jax.Array, filters: jax.Array) -> jax.Array:
+    """Eq. (1): O^m(x,y) = sum_ch sum_{i,j} I^ch(x+i,y+j) * F^{ch,m}(i,j).
+
+    Shift-and-add with a channel contraction per tap: each (i, j) tap
+    contributes  filters[:, :, i, j] @ image[:, i:i+Oy, j:j+Ox]  which is
+    an (M, C) x (C, Oy*Ox) matmul.
+    """
+    c, wy, wx = image.shape
+    m, c2, k, _ = filters.shape
+    assert c == c2
+    oy, ox = wy - k + 1, wx - k + 1
+    acc = jnp.zeros((m, oy * ox), dtype=jnp.promote_types(image.dtype, jnp.float32))
+    for i in range(k):
+        for j in range(k):
+            win = lax.slice(image, (0, i, j), (c, i + oy, j + ox))
+            acc = acc + filters[:, :, i, j].astype(acc.dtype) @ win.reshape(c, oy * ox).astype(acc.dtype)
+    return acc.reshape(m, oy, ox).astype(image.dtype)
+
+
+def conv2d_single_lax(image: jax.Array, filters: jax.Array) -> jax.Array:
+    """Same as :func:`conv2d_single_ref`, via lax.conv_general_dilated."""
+    return conv2d_multi_lax(image[None, :, :], filters[:, None, :, :])
+
+
+def conv2d_multi_lax(image: jax.Array, filters: jax.Array) -> jax.Array:
+    """Same as :func:`conv2d_multi_ref`, via lax.conv_general_dilated.
+
+    The paper's operator is cross-correlation (no filter flip), which is
+    exactly XLA's convolution with identity dimension permutations.
+    """
+    lhs = image[None]  # NCHW, batch of 1
+    out = lax.conv_general_dilated(
+        lhs.astype(jnp.float32),
+        filters.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0].astype(image.dtype)
+
+
+def im2col_matrix(image: jax.Array, k: int) -> jax.Array:
+    """Materialized im2col patch matrix, (C*K*K, Oy*Ox).
+
+    Row order is (ch, i, j) — the filter-memory layout of Fig. 1(b) — so
+    that ``filters.reshape(M, C*K*K) @ im2col_matrix(image, K)`` computes
+    eq. (1). Used by the explicit-GEMM baseline and its tests.
+    """
+    c, wy, wx = image.shape
+    oy, ox = wy - k + 1, wx - k + 1
+    rows = []
+    for ch in range(c):
+        for i in range(k):
+            for j in range(k):
+                rows.append(lax.slice(image, (ch, i, j), (ch + 1, i + oy, j + ox)).reshape(oy * ox))
+    return jnp.stack(rows)
+
+
+def conv2d_multi_im2col_ref(image: jax.Array, filters: jax.Array) -> jax.Array:
+    """Eq. (1) through an explicit im2col + GEMM — a third oracle form."""
+    m, c, k, _ = filters.shape
+    oy, ox = image.shape[1] - k + 1, image.shape[2] - k + 1
+    patches = im2col_matrix(image.astype(jnp.float32), k)
+    flat = filters.reshape(m, c * k * k).astype(jnp.float32) @ patches
+    return flat.reshape(m, oy, ox).astype(image.dtype)

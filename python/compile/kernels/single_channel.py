@@ -1,0 +1,136 @@
+"""L1 Pallas kernel — single-channel convolution (paper §3.1).
+
+The paper divides the work across SMs in one of two ways and picks the
+division with the closed-form P/Q procedure:
+
+  * method 1: filters divided along ``m`` (each SM owns ceil(M/N_sm)
+    filters), the feature map cut into ``P`` pieces along ``y`` and
+    streamed through on-chip memory with prefetching;
+  * method 2: the feature map divided along ``y`` (each SM owns a strip),
+    the filters cut into ``Q`` pieces and streamed.
+
+On the TPU model both divisions become the *grid* of one Pallas kernel:
+
+  grid = (M / m_tile,  Oy / y_tile)
+
+A grid step owns an ``m_tile x y_tile`` output block — exactly the
+(filters-per-SM x map-piece) working set of the paper — and the Pallas
+grid pipeline plays the role of the paper's double-buffered prefetch:
+while step g computes, the BlockSpec machinery fetches step g+1's blocks
+HBM->VMEM.  Method 1 corresponds to iterating y-tiles innermost (the map
+streams past resident filters), method 2 to iterating m-tiles innermost;
+``P``/``Q`` are the respective grid extents.
+
+The y-halo (each map piece needs K-1 extra rows, eq. (5)) cannot be
+expressed as a non-overlapping BlockSpec, so the image is passed
+unblocked and the kernel slices its ``y_tile + K - 1`` rows with a
+dynamic slice — the VMEM working set still matches eq. (5):
+
+  D1 = m_tile*K*K + (y_tile + K - 1) * Wx   floats.
+
+The kernel body unrolls the K*K taps; each tap is a rank-3 broadcast
+multiply-accumulate (VPU-shaped, (m_tile, y_tile, Ox) lanes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["conv2d_single", "choose_single_tiles"]
+
+
+def _kernel(img_ref, flt_ref, out_ref, *, k: int, y_tile: int, ox: int):
+    """One grid step: out[m_tile, y_tile, ox] for this (m, p) block.
+
+    img_ref : (Wy, Wx)            full image, resident (paper: the map
+                                  piece + K-1 halo rows in shared memory)
+    flt_ref : (m_tile, k, k)      this step's filter block
+    out_ref : (m_tile, y_tile, ox)
+    """
+    p = pl.program_id(1)
+    y0 = p * y_tile
+    # The paper's eq.(5) working set: y_tile + K - 1 rows starting at y0.
+    rows = img_ref[pl.ds(y0, y_tile + k - 1), :]
+    flt = flt_ref[...]
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.float32)
+    # Unrolled K*K taps (K <= 5 in every CNN suite the paper tests).
+    for i in range(k):
+        for j in range(k):
+            win = jax.lax.slice(rows, (i, j), (i + y_tile, j + ox))
+            acc = acc + win[None].astype(jnp.float32) * flt[:, i, j][:, None, None].astype(jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def choose_single_tiles(wy: int, wx: int, m: int, k: int,
+                        *, max_block_floats: int = 24 * 1024) -> tuple[int, int]:
+    """Pick (m_tile, y_tile) — the Pallas analogue of the paper's P/Q step.
+
+    The authoritative P/Q procedure (with N_FMA / S_shared / register
+    bounds) lives in ``rust/src/analytic``; this helper only needs a
+    *feasible* tiling for the AOT'd kernels: block working set under
+    ``max_block_floats`` (a 96 KB shared-memory stand-in at f32), tiles
+    exact divisors so the grid covers the output with no remainder.
+    """
+    oy, ox = wy - k + 1, wx - k + 1
+    assert oy >= 1 and ox >= 1, "filter larger than image"
+
+    def divisors(n):
+        return sorted((d for d in range(1, n + 1) if n % d == 0), reverse=True)
+
+    def working_set(mt, yt):
+        # eq.(5): output block + filter block + map piece with K-1 halo rows
+        return mt * yt * ox + mt * k * k + (yt + k - 1) * wx
+
+    # Joint search, largest m_tile first (more output reuse per fetched
+    # map row — the paper's "higher FMA per loaded data" objective).
+    for mt in divisors(m):
+        for yt in divisors(oy):
+            if working_set(mt, yt) <= max_block_floats:
+                return mt, yt
+    return 1, 1  # degenerate fallback (correct, just small blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("m_tile", "y_tile"))
+def _conv2d_single_tiled(image, filters, m_tile: int, y_tile: int):
+    wy, wx = image.shape
+    m, k, _ = filters.shape
+    oy, ox = wy - k + 1, wx - k + 1
+    grid = (m // m_tile, oy // y_tile)
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, y_tile=y_tile, ox=ox),
+        grid=grid,
+        in_specs=[
+            # image: unblocked (halo handled by in-kernel dynamic slice)
+            pl.BlockSpec((wy, wx), lambda mi, p: (0, 0)),
+            # filters: blocked along m only — method-1's per-SM filter set
+            pl.BlockSpec((m_tile, k, k), lambda mi, p: (mi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m_tile, y_tile, ox), lambda mi, p: (mi, p, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, oy, ox), image.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(image, filters)
+
+
+def conv2d_single(image: jax.Array, filters: jax.Array,
+                  m_tile: int | None = None, y_tile: int | None = None) -> jax.Array:
+    """Single-channel convolution (eq. 2) via the §3.1 tiled Pallas kernel.
+
+    ``m_tile``/``y_tile`` default to :func:`choose_single_tiles`; pass
+    them explicitly to reproduce a specific P/Q division (P = Oy/y_tile,
+    Q = M/m_tile).
+    """
+    wy, wx = image.shape
+    m, k, _ = filters.shape
+    if m_tile is None or y_tile is None:
+        auto_m, auto_y = choose_single_tiles(wy, wx, m, k)
+        m_tile = m_tile or auto_m
+        y_tile = y_tile or auto_y
+    oy = wy - k + 1
+    if m % m_tile or oy % y_tile:
+        raise ValueError(f"tiles must divide: M={m} %% m_tile={m_tile}, Oy={oy} %% y_tile={y_tile}")
+    return _conv2d_single_tiled(image, filters, m_tile, y_tile)

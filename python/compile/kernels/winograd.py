@@ -1,0 +1,155 @@
+"""L1 Pallas kernel — Winograd F(2x2, 3x3) convolution baseline.
+
+The paper's §1 taxonomy lists four GPU-convolution families: direct,
+FFT-based, Winograd-based and GEMM-based.  The evaluation compares
+against cuDNN (GEMM family); this kernel implements the Winograd family
+[8] so the taxonomy is executable end-to-end (see
+rust/src/baselines/winograd.rs for its timing plan).
+
+F(2x2, 3x3): each 2x2 output tile is computed from a 4x4 input tile via
+
+    Y = A^T [ (G g G^T) .* (B^T d B) ] A
+
+with the standard transform matrices.  16 multiplies replace 36 — a
+2.25x arithmetic reduction at the cost of transform overhead and 4x4
+input tiles overlapping by 2.
+
+Kernel structure mirrors the stride-fixed kernel: grid = (m-groups,
+channel segments), segment axis innermost and accumulating; per step the
+tile transforms are batched einsums (MXU-shaped) over all tiles.
+
+Constraints: K = 3 only; odd output sizes are handled in the wrapper by
+padding the image and cropping the result.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["conv2d_winograd"]
+
+# transform matrices for F(2x2, 3x3)
+_BT = jnp.array(
+    [[1.0, 0.0, -1.0, 0.0], [0.0, 1.0, 1.0, 0.0], [0.0, -1.0, 1.0, 0.0], [0.0, 1.0, 0.0, -1.0]],
+    jnp.float32,
+)
+_G = jnp.array(
+    [[1.0, 0.0, 0.0], [0.5, 0.5, 0.5], [0.5, -0.5, 0.5], [0.0, 0.0, 1.0]], jnp.float32
+)
+_AT = jnp.array([[1.0, 1.0, 1.0, 0.0], [0.0, 1.0, -1.0, -1.0]], jnp.float32)
+
+
+def _kernel(bt_ref, g_ref, at_ref, img_ref, flt_ref, out_ref, *, ty: int, tx: int):
+    """One grid step: accumulate one channel segment, all tiles.
+
+    bt/g/at : the F(2x2,3x3) transform matrices (pallas kernels cannot
+              close over constants — they ride along as inputs)
+    img_ref : (c_seg, Wy, Wx)   with Wy = 2*ty + 2, Wx = 2*tx + 2
+    flt_ref : (m_blk, c_seg, 3, 3)
+    out_ref : (m_blk, 2*ty, 2*tx)
+    """
+    s = pl.program_id(1)
+    _BT = bt_ref[...]
+    _G = g_ref[...]
+    _AT = at_ref[...]
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    img = img_ref[...].astype(jnp.float32)
+    flt = flt_ref[...].astype(jnp.float32)
+    c_seg = img.shape[0]
+    m_blk = flt.shape[0]
+
+    # gather the overlapping 4x4 input tiles: (c_seg, ty, tx, 4, 4)
+    tiles = jnp.stack(
+        [
+            jnp.stack(
+                [
+                    jax.lax.slice(
+                        img,
+                        (0, i, j),
+                        (c_seg, i + 2 * (ty - 1) + 1, j + 2 * (tx - 1) + 1),
+                        (1, 2, 2),
+                    )
+                    for j in range(4)
+                ],
+                axis=-1,
+            )
+            for i in range(4)
+        ],
+        axis=-2,
+    )  # (c_seg, ty, tx, 4, 4)
+
+    # input transform: V = B^T d B  per tile
+    v = jnp.einsum("ab,ctxbd,de->ctxae", _BT, tiles, _BT.T)
+    # filter transform: U = G g G^T  -> (m_blk, c_seg, 4, 4)
+    u = jnp.einsum("ab,mcbd,de->mcae", _G, flt, _G.T)
+    # elementwise product summed over channels: (m_blk, ty, tx, 4, 4)
+    muv = jnp.einsum("mcae,ctxae->mtxae", u, v)
+    # output transform: Y = A^T M A -> (m_blk, ty, tx, 2, 2)
+    y = jnp.einsum("ab,mtxbd,de->mtxae", _AT, muv, _AT.T)
+    # scatter the 2x2 tiles back to (m_blk, 2*ty, 2*tx)
+    y = y.transpose(0, 1, 3, 2, 4).reshape(m_blk, 2 * ty, 2 * tx)
+    out_ref[...] = out_ref[...] + y.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m_blk", "c_seg"))
+def _conv2d_winograd_tiled(image, filters, m_blk: int, c_seg: int):
+    c, wy, wx = image.shape
+    m = filters.shape[0]
+    ty, tx = (wy - 2) // 2, (wx - 2) // 2
+    grid = (m // m_blk, c // c_seg)
+    return pl.pallas_call(
+        functools.partial(_kernel, ty=ty, tx=tx),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, 4), lambda mi, s: (0, 0)),
+            pl.BlockSpec((4, 3), lambda mi, s: (0, 0)),
+            pl.BlockSpec((2, 4), lambda mi, s: (0, 0)),
+            pl.BlockSpec((c_seg, wy, wx), lambda mi, s: (s, 0, 0)),
+            pl.BlockSpec((m_blk, c_seg, 3, 3), lambda mi, s: (mi, s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m_blk, 2 * ty, 2 * tx), lambda mi, s: (mi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 2 * ty, 2 * tx), image.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(_BT, _G, _AT, image, filters)
+
+
+def conv2d_winograd(image: jax.Array, filters: jax.Array,
+                    m_blk: int | None = None, c_seg: int | None = None) -> jax.Array:
+    """Multi-channel K=3 convolution (eq. 1) via Winograd F(2x2, 3x3).
+
+    Accepts single-channel operands (image (Wy,Wx), filters (M,3,3)) by
+    lifting to C=1.  Output sizes that are not even are produced by
+    padding the input and cropping.
+    """
+    if image.ndim == 2:
+        image = image[None]
+        filters = filters[:, None]
+    c, wy, wx = image.shape
+    m, c2, k, k2 = filters.shape
+    assert c == c2, "channel mismatch"
+    if k != 3 or k2 != 3:
+        raise ValueError("Winograd F(2x2,3x3) requires K=3")
+    oy, ox = wy - 2, wx - 2
+    # pad so the output is even in both dims
+    pad_y, pad_x = oy % 2, ox % 2
+    if pad_y or pad_x:
+        image = jnp.pad(image, ((0, 0), (0, pad_y), (0, pad_x)))
+        wy, wx = wy + pad_y, wx + pad_x
+    if m_blk is None:
+        m_blk = m if m <= 32 else next(d for d in range(32, 0, -1) if m % d == 0)
+    if c_seg is None:
+        c_seg = min(8, c)
+        while c % c_seg:
+            c_seg -= 1
+    if m % m_blk or c % c_seg:
+        raise ValueError(f"blocks must divide: M={m}%%{m_blk}, C={c}%%{c_seg}")
+    out = _conv2d_winograd_tiled(image, filters, m_blk, c_seg)
+    return out[:, :oy, :ox]

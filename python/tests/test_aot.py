@@ -1,0 +1,87 @@
+"""AOT pipeline tests: lowering, HLO-text interchange, manifest format."""
+
+import os
+import re
+
+import pytest
+
+from compile import aot, model
+
+
+def test_catalog_names_unique_and_complete():
+    names = [name for name, _, _ in aot.catalog()]
+    assert len(names) == len(set(names))
+    kinds = {meta["kind"] for _, _, meta in aot.catalog()}
+    assert kinds == {
+        "conv_single",
+        "conv_multi",
+        "conv_im2col",
+        "conv_winograd",
+        "conv_fft",
+        "cnn",
+    }
+    assert "papernet_b1" in names and "papernet_b8" in names
+
+
+def test_catalog_metadata_matches_specs():
+    for name, fn, meta in aot.catalog():
+        if meta["kind"] == "conv_single":
+            assert fn.arg_specs[0].shape == (meta["wy"], meta["wx"])
+            assert fn.arg_specs[1].shape == (meta["m"], meta["k"], meta["k"])
+        elif meta["kind"] in ("conv_multi", "conv_im2col"):
+            assert fn.arg_specs[0].shape == (meta["c"], meta["wy"], meta["wx"])
+            assert fn.arg_specs[1].shape == (meta["m"], meta["c"], meta["k"], meta["k"])
+        elif meta["kind"] == "cnn":
+            assert fn.arg_specs[0].shape == (meta["batch"], 1, 28, 28)
+
+
+def test_lower_one_emits_hlo_text():
+    """The interchange gotcha: must be HLO *text* with an ENTRY computation,
+    parseable by xla_extension 0.5.1 (no 64-bit-id protos)."""
+    fn = model.make_conv_single(8, 8, 2, 3)
+    text = aot.lower_one(fn)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: the root is a tuple — rust unwraps with to_tuple1()
+    assert re.search(r"ROOT.*tuple", text)
+
+
+def test_main_writes_artifacts_and_manifest(tmp_path):
+    rc = aot.main(["--out", str(tmp_path), "--only", "single_w32_m32_k3"])
+    assert rc == 0
+    assert (tmp_path / "single_w32_m32_k3.hlo.txt").exists()
+
+
+def test_manifest_lines_parseable():
+    """Each manifest line must be whitespace-separated key=value fields —
+    the exact grammar rust/src/runtime/manifest.rs implements."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.txt")
+    if not os.path.exists(art):
+        pytest.skip("artifacts not built")
+    with open(art) as f:
+        lines = [l.strip() for l in f if l.strip() and not l.startswith("#")]
+    assert lines, "manifest empty"
+    for line in lines:
+        fields = dict(tok.split("=", 1) for tok in line.split())
+        assert "name" in fields and "file" in fields and "kind" in fields
+        assert fields["file"].endswith(".hlo.txt")
+
+
+def test_lowered_text_keeps_large_constants():
+    """Regression: the default HLO printer elides big literals as
+    constant({...}) and the rust parser reads them back as ZEROS —
+    PaperNet's baked weights vanished this way once. The AOT path must
+    print large constants."""
+    fn = model.make_papernet(batch=1)
+    text = aot.lower_one(fn)
+    assert "{...}" not in text, "elided constants would parse back as zeros"
+
+
+def test_built_artifacts_have_no_elided_constants():
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.exists(os.path.join(art_dir, "manifest.txt")):
+        pytest.skip("artifacts not built")
+    for name in os.listdir(art_dir):
+        if name.endswith(".hlo.txt"):
+            with open(os.path.join(art_dir, name)) as f:
+                assert "{...}" not in f.read(), f"{name} has elided constants"

@@ -1,0 +1,115 @@
+"""Winograd (§1 category 3) and FFT (§1 category 2) baseline kernels vs
+the direct oracle — all four convolution families must agree numerically."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    conv2d_fft,
+    conv2d_im2col,
+    conv2d_multi,
+    conv2d_winograd,
+    ref,
+)
+
+RTOL, ATOL = 1e-3, 1e-3
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Winograd F(2x2, 3x3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c,wy,wx,m", [
+    (1, 6, 6, 2),
+    (4, 12, 12, 6),
+    (8, 7, 7, 8),     # odd output (5x5) -> pad + crop path
+    (16, 14, 15, 8),  # non-square, mixed parity
+    (3, 10, 10, 5),
+])
+def test_winograd_matches_ref(c, wy, wx, m):
+    img, flt = rand((c, wy, wx), 1), rand((m, c, 3, 3), 2)
+    got = conv2d_winograd(img, flt)
+    want = ref.conv2d_multi_ref(img, flt)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_winograd_single_channel_operands():
+    img, flt = rand((9, 10), 3), rand((3, 3, 3), 4)
+    np.testing.assert_allclose(
+        conv2d_winograd(img, flt), ref.conv2d_single_ref(img, flt), rtol=RTOL, atol=ATOL)
+
+
+def test_winograd_rejects_non_k3():
+    img, flt = rand((4, 10, 10), 5), rand((2, 4, 5, 5), 6)
+    with pytest.raises(ValueError):
+        conv2d_winograd(img, flt)
+
+
+@pytest.mark.parametrize("m_blk,c_seg", [(1, 1), (2, 4), (4, 2)])
+def test_winograd_explicit_blocks(m_blk, c_seg):
+    img, flt = rand((4, 10, 10), 7), rand((4, 4, 3, 3), 8)
+    got = conv2d_winograd(img, flt, m_blk=m_blk, c_seg=c_seg)
+    np.testing.assert_allclose(got, ref.conv2d_multi_ref(img, flt), rtol=RTOL, atol=ATOL)
+
+
+def test_winograd_identity_filter():
+    """Center tap of a 3x3 filter = shifted identity — pins the transform
+    matrices' orientation."""
+    img = rand((1, 8, 8), 9)
+    flt = jnp.zeros((1, 1, 3, 3), jnp.float32).at[0, 0, 1, 1].set(1.0)
+    got = conv2d_winograd(img, flt)
+    np.testing.assert_allclose(got[0], img[0, 1:7, 1:7], rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# FFT convolution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c,wy,wx,m,k", [
+    (1, 8, 8, 2, 1),
+    (4, 12, 12, 6, 3),
+    (8, 7, 9, 4, 3),
+    (2, 16, 16, 3, 5),
+    (6, 11, 13, 2, 7),  # large K relative to the map: FFT's home turf
+])
+def test_fft_matches_ref(c, wy, wx, m, k):
+    img, flt = rand((c, wy, wx), 10), rand((m, c, k, k), 11)
+    got = conv2d_fft(img, flt)
+    want = ref.conv2d_multi_ref(img, flt)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_fft_single_channel_operands():
+    img, flt = rand((10, 10), 12), rand((4, 3, 3), 13)
+    np.testing.assert_allclose(
+        conv2d_fft(img, flt), ref.conv2d_single_ref(img, flt), rtol=RTOL, atol=ATOL)
+
+
+def test_fft_is_cross_correlation_not_convolution():
+    """An asymmetric filter distinguishes correlation from convolution —
+    the conj() in the kernel must implement the paper's eq. (1)."""
+    img = rand((1, 6, 6), 14)
+    flt = jnp.zeros((1, 1, 3, 3), jnp.float32).at[0, 0, 0, 0].set(1.0)
+    got = conv2d_fft(img, flt)
+    np.testing.assert_allclose(got[0], img[0, :4, :4], rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# all four families agree
+# ---------------------------------------------------------------------------
+
+def test_all_four_families_agree():
+    c, wy, wx, m, k = 8, 12, 12, 8, 3
+    img, flt = rand((c, wy, wx), 20), rand((m, c, k, k), 21)
+    direct = conv2d_multi(img, flt)          # the paper's kernel (direct family)
+    gemm = conv2d_im2col(img, flt)           # GEMM family
+    wino = conv2d_winograd(img, flt)         # Winograd family
+    fft = conv2d_fft(img, flt)               # FFT family
+    for other, name in [(gemm, "gemm"), (wino, "winograd"), (fft, "fft")]:
+        np.testing.assert_allclose(direct, other, rtol=RTOL, atol=ATOL, err_msg=name)

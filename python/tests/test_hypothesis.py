@@ -1,0 +1,112 @@
+"""Property-based sweeps over kernel shapes/dtypes (hypothesis).
+
+Deliverable (c): hypothesis drives the Pallas kernels across the shape
+space (including every divisor-tiling the wrappers may pick) and asserts
+allclose against the pure-jnp oracle.  Sizes are kept CPU-tractable;
+interpret-mode Pallas is slow, correctness is the point here.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import conv2d_im2col, conv2d_multi, conv2d_single, ref
+
+COMMON = dict(
+    deadline=None,
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+def arr(shape, seed, dtype=np.float32):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape).astype(dtype))
+
+
+@st.composite
+def single_case(draw):
+    k = draw(st.sampled_from([1, 2, 3, 5]))
+    wy = draw(st.integers(k, 24))
+    wx = draw(st.integers(k, 24))
+    m = draw(st.integers(1, 12))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return wy, wx, m, k, seed
+
+
+@st.composite
+def multi_case(draw):
+    k = draw(st.sampled_from([1, 2, 3, 5]))
+    wy = draw(st.integers(k, 16))
+    wx = draw(st.integers(k, 16))
+    c = draw(st.sampled_from([1, 2, 3, 4, 6, 8, 16]))
+    m = draw(st.integers(1, 10))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return c, wy, wx, m, k, seed
+
+
+@given(single_case())
+@settings(**COMMON)
+def test_single_kernel_property(case):
+    wy, wx, m, k, seed = case
+    img, flt = arr((wy, wx), seed), arr((m, k, k), seed + 1)
+    got = conv2d_single(img, flt)
+    want = ref.conv2d_single_ref(img, flt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(multi_case())
+@settings(**COMMON)
+def test_multi_kernel_property(case):
+    c, wy, wx, m, k, seed = case
+    img, flt = arr((c, wy, wx), seed), arr((m, c, k, k), seed + 1)
+    got = conv2d_multi(img, flt)
+    want = ref.conv2d_multi_ref(img, flt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(multi_case())
+@settings(**COMMON, )
+def test_im2col_kernel_property(case):
+    c, wy, wx, m, k, seed = case
+    img, flt = arr((c, wy, wx), seed), arr((m, c, k, k), seed + 1)
+    got = conv2d_im2col(img, flt)
+    want = ref.conv2d_multi_ref(img, flt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(multi_case(), st.sampled_from([32, 64, 128]))
+@settings(**COMMON)
+def test_multi_segment_bytes_property(case, segment_bytes):
+    """The S knob must never change numerics, only the schedule."""
+    c, wy, wx, m, k, seed = case
+    img, flt = arr((c, wy, wx), seed), arr((m, c, k, k), seed + 1)
+    got = conv2d_multi(img, flt, segment_bytes=segment_bytes)
+    want = ref.conv2d_multi_ref(img, flt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(single_case())
+@settings(**COMMON)
+def test_single_linearity_property(case):
+    """Convolution is linear: conv(a*I, F) == a * conv(I, F)."""
+    wy, wx, m, k, seed = case
+    img, flt = arr((wy, wx), seed), arr((m, k, k), seed + 1)
+    got = conv2d_single(2.5 * img, flt)
+    want = 2.5 * ref.conv2d_single_ref(img, flt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(multi_case())
+@settings(**COMMON)
+def test_multi_channel_additivity_property(case):
+    """Eq. (1) decomposes over channels: conv(I, F) == sum_ch conv(I_ch, F_ch)."""
+    c, wy, wx, m, k, seed = case
+    img, flt = arr((c, wy, wx), seed), arr((m, c, k, k), seed + 1)
+    whole = conv2d_multi(img, flt)
+    parts = sum(
+        ref.conv2d_multi_ref(img[ch:ch + 1], flt[:, ch:ch + 1]) for ch in range(c)
+    )
+    np.testing.assert_allclose(whole, parts, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,210 @@
+"""Kernel vs. reference-oracle correctness — the CORE numeric signal.
+
+Every Pallas kernel must agree with the pure-jnp oracle (ref.py) to
+float32 tolerance, across the paper's K values, awkward (non-square,
+prime-sized) maps, explicit tile/segment choices, and both dtypes.
+The two oracle forms are also cross-checked against each other so a bug
+in one cannot silently become the ground truth.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    conv2d_im2col,
+    conv2d_multi,
+    conv2d_single,
+    choose_multi_tiles,
+    choose_single_tiles,
+    ref,
+)
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def rand(shape, seed, dtype=np.float32):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-consistency
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wy,wx,m,k", [(8, 8, 4, 1), (12, 16, 8, 3), (16, 12, 3, 5), (7, 7, 2, 7)])
+def test_single_oracles_agree(wy, wx, m, k):
+    img, flt = rand((wy, wx), 1), rand((m, k, k), 2)
+    np.testing.assert_allclose(
+        ref.conv2d_single_ref(img, flt), ref.conv2d_single_lax(img, flt), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("c,wy,wx,m,k", [(1, 8, 8, 4, 3), (3, 10, 14, 5, 3), (8, 7, 7, 6, 1), (4, 9, 9, 2, 5)])
+def test_multi_oracles_agree(c, wy, wx, m, k):
+    img, flt = rand((c, wy, wx), 3), rand((m, c, k, k), 4)
+    a = ref.conv2d_multi_ref(img, flt)
+    np.testing.assert_allclose(a, ref.conv2d_multi_lax(img, flt), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(a, ref.conv2d_multi_im2col_ref(img, flt), rtol=RTOL, atol=ATOL)
+
+
+def test_single_known_values():
+    """Hand-computed 3x3/K=2 case pins the convolution orientation
+    (cross-correlation, eq. (2) — not flipped-filter convolution)."""
+    img = jnp.arange(9.0, dtype=jnp.float32).reshape(3, 3)
+    flt = jnp.array([[[1.0, 0.0], [0.0, 0.0]]])  # identity tap at (0,0)
+    out = ref.conv2d_single_ref(img, flt)
+    np.testing.assert_allclose(out[0], img[:2, :2])
+    flt2 = jnp.array([[[0.0, 0.0], [0.0, 1.0]]])  # tap at (1,1)
+    out2 = ref.conv2d_single_ref(img, flt2)
+    np.testing.assert_allclose(out2[0], img[1:, 1:])
+
+
+def test_multi_channel_sum_known_values():
+    """C identical channels with all-ones 1x1 filters == C * image."""
+    c = 5
+    img = jnp.stack([jnp.full((4, 4), 2.0)] * c)
+    flt = jnp.ones((1, c, 1, 1), jnp.float32)
+    np.testing.assert_allclose(ref.conv2d_multi_ref(img, flt)[0], jnp.full((4, 4), 2.0 * c))
+
+
+# ---------------------------------------------------------------------------
+# Pallas single-channel kernel (§3.1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wy,wx,m,k", [
+    (8, 8, 4, 1), (12, 16, 8, 3), (16, 12, 4, 5),
+    (28, 28, 16, 3),   # paper's smallest Fig.4 map
+    (11, 13, 3, 3),    # prime sizes force degenerate tiling
+    (32, 32, 32, 1),
+])
+def test_pallas_single_matches_ref(wy, wx, m, k):
+    img, flt = rand((wy, wx), 10), rand((m, k, k), 11)
+    np.testing.assert_allclose(
+        conv2d_single(img, flt), ref.conv2d_single_ref(img, flt), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("m_tile,y_tile", [(1, 1), (2, 5), (4, 10), (8, 2), (1, 10)])
+def test_pallas_single_explicit_tiles(m_tile, y_tile):
+    """Every legal (P, Q) division computes the same result (eq. 5/8)."""
+    wy, wx, m, k = 12, 9, 8, 3  # Oy = 10
+    img, flt = rand((wy, wx), 12), rand((m, k, k), 13)
+    out = conv2d_single(img, flt, m_tile=m_tile, y_tile=y_tile)
+    np.testing.assert_allclose(out, ref.conv2d_single_ref(img, flt), rtol=RTOL, atol=ATOL)
+
+
+def test_pallas_single_rejects_nondividing_tiles():
+    img, flt = rand((12, 9), 14), rand((8, 3, 3), 15)
+    with pytest.raises(ValueError):
+        conv2d_single(img, flt, m_tile=3, y_tile=1)  # 8 % 3 != 0
+    with pytest.raises(ValueError):
+        conv2d_single(img, flt, m_tile=1, y_tile=4)  # 10 % 4 != 0
+
+
+def test_choose_single_tiles_feasible():
+    for (wy, wx, m, k) in [(28, 28, 512, 1), (1024, 1024, 32, 5), (56, 56, 128, 3)]:
+        m_tile, y_tile = choose_single_tiles(wy, wx, m, k)
+        oy = wy - k + 1
+        assert m % m_tile == 0 and oy % y_tile == 0
+        # eq.(5) working set within the block budget
+        assert m_tile * y_tile * (wx - k + 1) + (y_tile + k - 1) * wx <= 24 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Pallas multi-channel stride-fixed block kernel (§3.2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c,wy,wx,m,k", [
+    (1, 8, 8, 4, 3),
+    (4, 12, 12, 6, 3),
+    (8, 7, 7, 8, 3),    # the deep-layer 7x7 case of Fig. 5
+    (16, 14, 14, 8, 1),
+    (4, 9, 11, 2, 5),
+    (32, 7, 7, 16, 3),
+])
+def test_pallas_multi_matches_ref(c, wy, wx, m, k):
+    img, flt = rand((c, wy, wx), 20), rand((m, c, k, k), 21)
+    np.testing.assert_allclose(
+        conv2d_multi(img, flt), ref.conv2d_multi_ref(img, flt), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("m_blk,c_seg", [(1, 1), (2, 4), (4, 2), (8, 8), (1, 8)])
+def test_pallas_multi_explicit_blocks(m_blk, c_seg):
+    """Every legal (S, M') point computes identical results."""
+    c, wy, wx, m, k = 8, 10, 10, 8, 3
+    img, flt = rand((c, wy, wx), 22), rand((m, c, k, k), 23)
+    out = conv2d_multi(img, flt, m_blk=m_blk, c_seg=c_seg)
+    np.testing.assert_allclose(out, ref.conv2d_multi_ref(img, flt), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("segment_bytes", [32, 64, 128])
+def test_pallas_multi_segment_sizes(segment_bytes):
+    """The paper's S ablation points all agree numerically."""
+    c, wy, wx, m, k = 16, 8, 8, 4, 1
+    img, flt = rand((c, wy, wx), 24), rand((m, c, k, k), 25)
+    out = conv2d_multi(img, flt, segment_bytes=segment_bytes)
+    np.testing.assert_allclose(out, ref.conv2d_multi_ref(img, flt), rtol=RTOL, atol=ATOL)
+
+
+def test_pallas_multi_rejects_nondividing_blocks():
+    img, flt = rand((6, 8, 8), 26), rand((4, 6, 3, 3), 27)
+    with pytest.raises(ValueError):
+        conv2d_multi(img, flt, m_blk=3, c_seg=1)
+    with pytest.raises(ValueError):
+        conv2d_multi(img, flt, m_blk=1, c_seg=4)
+
+
+def test_choose_multi_tiles_respects_segment():
+    # K=1: S=32B -> 8 channels per segment; K=3 taps are 36B > 32 -> 1 ch.
+    assert choose_multi_tiles(64, 14, 14, 64, 1, segment_bytes=32)[1] == 8
+    assert choose_multi_tiles(64, 14, 14, 64, 3, segment_bytes=32)[1] == 1
+    assert choose_multi_tiles(64, 14, 14, 64, 1, segment_bytes=64)[1] == 16
+
+
+# ---------------------------------------------------------------------------
+# Implicit-GEMM baseline kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c,wy,wx,m,k", [
+    (4, 12, 12, 6, 3), (8, 7, 7, 8, 3), (16, 14, 14, 8, 1), (4, 9, 11, 2, 5),
+])
+def test_pallas_im2col_matches_ref(c, wy, wx, m, k):
+    img, flt = rand((c, wy, wx), 30), rand((m, c, k, k), 31)
+    np.testing.assert_allclose(
+        conv2d_im2col(img, flt), ref.conv2d_multi_ref(img, flt), rtol=RTOL, atol=ATOL)
+
+
+def test_im2col_accepts_single_channel_operands():
+    img, flt = rand((10, 10), 32), rand((4, 3, 3), 33)
+    np.testing.assert_allclose(
+        conv2d_im2col(img, flt), ref.conv2d_single_ref(img, flt), rtol=RTOL, atol=ATOL)
+
+
+def test_kernels_agree_with_each_other():
+    """stride-fixed vs implicit-GEMM on the same operands (the comparison
+    the rust integration test repeats through PJRT)."""
+    c, wy, wx, m, k = 32, 14, 14, 32, 3
+    img, flt = rand((c, wy, wx), 34), rand((m, c, k, k), 35)
+    np.testing.assert_allclose(
+        conv2d_multi(img, flt), conv2d_im2col(img, flt), rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# dtypes
+# ---------------------------------------------------------------------------
+
+def test_single_bfloat16():
+    img = rand((12, 12), 40).astype(jnp.bfloat16)
+    flt = rand((4, 3, 3), 41).astype(jnp.bfloat16)
+    out = conv2d_single(img, flt)
+    assert out.dtype == jnp.bfloat16
+    want = ref.conv2d_single_ref(img.astype(jnp.float32), flt.astype(jnp.float32))
+    np.testing.assert_allclose(out.astype(jnp.float32), want, rtol=5e-2, atol=5e-2)
+
+
+def test_multi_bfloat16():
+    img = rand((4, 10, 10), 42).astype(jnp.bfloat16)
+    flt = rand((4, 4, 3, 3), 43).astype(jnp.bfloat16)
+    out = conv2d_multi(img, flt)
+    assert out.dtype == jnp.bfloat16
+    want = ref.conv2d_multi_ref(img.astype(jnp.float32), flt.astype(jnp.float32))
+    np.testing.assert_allclose(out.astype(jnp.float32), want, rtol=5e-2, atol=5e-1)

@@ -1,0 +1,107 @@
+"""L2 model tests: conv services and the PaperNet serving workload."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# conv service factories
+# ---------------------------------------------------------------------------
+
+def test_make_conv_single_spec_and_value():
+    fn = model.make_conv_single(12, 12, 4, 3)
+    (img_spec, flt_spec) = fn.arg_specs
+    assert img_spec.shape == (12, 12) and flt_spec.shape == (4, 3, 3)
+    img, flt = rand((12, 12), 0), rand((4, 3, 3), 1)
+    (out,) = fn(img, flt)
+    np.testing.assert_allclose(out, ref.conv2d_single_ref(img, flt), rtol=1e-4, atol=1e-4)
+
+
+def test_make_conv_multi_spec_and_value():
+    fn = model.make_conv_multi(8, 10, 10, 4, 3)
+    img, flt = rand((8, 10, 10), 2), rand((4, 8, 3, 3), 3)
+    (out,) = fn(img, flt)
+    np.testing.assert_allclose(out, ref.conv2d_multi_ref(img, flt), rtol=1e-4, atol=1e-4)
+
+
+def test_make_conv_im2col_matches_multi():
+    f1 = model.make_conv_multi(8, 10, 10, 4, 3)
+    f2 = model.make_conv_im2col(8, 10, 10, 4, 3)
+    img, flt = rand((8, 10, 10), 4), rand((4, 8, 3, 3), 5)
+    np.testing.assert_allclose(f1(img, flt)[0], f2(img, flt)[0], rtol=1e-4, atol=1e-4)
+
+
+def test_conv_service_jits():
+    fn = model.make_conv_single(8, 8, 2, 3)
+    jitted = jax.jit(fn)
+    img, flt = rand((8, 8), 6), rand((2, 3, 3), 7)
+    np.testing.assert_allclose(jitted(img, flt)[0], fn(img, flt)[0], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# PaperNet
+# ---------------------------------------------------------------------------
+
+def test_papernet_params_deterministic():
+    p1, p2 = model.papernet_params(0), model.papernet_params(0)
+    for k in p1:
+        np.testing.assert_array_equal(p1[k][0], p2[k][0])
+    p3 = model.papernet_params(1)
+    assert not np.allclose(p1["conv0"][0], p3["conv0"][0])
+
+
+def test_papernet_layer_shapes():
+    """Walk the documented map-size chain 28->24->12->10->5->5->3."""
+    params = model.papernet_params()
+    for idx, (kind, c, m, k) in enumerate(model.PAPERNET_LAYERS):
+        w, b = params[f"conv{idx}"]
+        assert w.shape == (m, c, k, k) and b.shape == (m,)
+
+
+def test_papernet_apply_logits():
+    params = model.papernet_params()
+    img = rand((1, 28, 28), 8)
+    logits = model.papernet_apply(params, img)
+    assert logits.shape == (10,)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_papernet_batch_consistency():
+    """vmap'd batched forward == per-image forward."""
+    fn = model.make_papernet(batch=4)
+    imgs = rand((4, 1, 28, 28), 9)
+    (batched,) = fn(imgs)
+    params = model.papernet_params()
+    single = jnp.stack([model.papernet_apply(params, imgs[i]) for i in range(4)])
+    np.testing.assert_allclose(batched, single, rtol=1e-4, atol=1e-4)
+
+
+def test_papernet_input_sensitivity():
+    """Different images must produce different logits (weights not degenerate)."""
+    fn = model.make_papernet(batch=2)
+    imgs = jnp.stack([rand((1, 28, 28), 10), rand((1, 28, 28), 11)])
+    (logits,) = fn(imgs)
+    assert not np.allclose(logits[0], logits[1])
+
+
+def test_pool2():
+    x = jnp.arange(16.0).reshape(1, 4, 4)
+    out = model._pool2(x)
+    np.testing.assert_allclose(out[0], [[5.0, 7.0], [13.0, 15.0]])
+
+
+def test_pool2_odd_sizes_truncate():
+    x = jnp.arange(25.0).reshape(1, 5, 5)
+    out = model._pool2(x)
+    assert out.shape == (1, 2, 2)
+    np.testing.assert_allclose(out[0], [[6.0, 8.0], [16.0, 18.0]])

@@ -1,0 +1,71 @@
+//! Ablation: the **§4 preliminary evaluation** that fixed M' = 64 and
+//! W'x = 128 — "According to our preliminary evaluation, when M' = 64
+//! and W'x = 128, the performance becomes best."
+//!
+//! Sweeps the (M', W'x) grid at S = 32 over a large Fig. 5 layer and
+//! reports the best cell; the paper's operating point must sit in the
+//! winning region.
+//!
+//! Run: `cargo bench --bench ablation_block_params`
+
+use pasconv::analytic::multi::{working_set_bytes, wy_prime, StrideFixedChoice};
+use pasconv::conv::ConvProblem;
+use pasconv::gpusim::{gtx_1080ti, simulate};
+use pasconv::plans::stride_fixed::plan_with_choice;
+use pasconv::util::bench::Table;
+
+fn main() {
+    let g = gtx_1080ti();
+    let p = ConvProblem::multi(256, 224, 256, 3); // big-map Fig. 5 layer
+    let s_bytes = 32;
+    println!("== §3.2/§4 ablation: (M', W'x) grid at S=32, {} ==\n", p.label());
+
+    let m_vals = [8usize, 16, 32, 64, 128, 256];
+    let wx_vals = [32usize, 64, 128, 256];
+    let mut t = Table::new(&["M' \\ W'x", "32", "64", "128", "256"]);
+    let mut best = (f64::INFINITY, 0usize, 0usize);
+    for &m in &m_vals {
+        let mut row = vec![format!("{m}")];
+        for &wx in &wx_vals {
+            let c = StrideFixedChoice {
+                s_bytes,
+                wx_prime: wx,
+                m_prime: m,
+                wy_prime: wy_prime(s_bytes, p.k),
+                smem_bytes: working_set_bytes(s_bytes, wx, m, p.k),
+                hides_latency: false,
+            };
+            if c.smem_bytes > g.shared_mem_bytes as usize / 2 {
+                row.push("(smem)".into());
+                continue;
+            }
+            let secs = simulate(&g, &plan_with_choice(&p, &g, &c)).seconds;
+            if secs < best.0 {
+                best = (secs, m, wx);
+            }
+            row.push(format!("{:.0}µs", secs * 1e6));
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!(
+        "\nbest cell: M'={} W'x={} ({:.0}µs)   paper: M'=64, W'x=128 best",
+        best.1,
+        best.2,
+        best.0 * 1e6
+    );
+    // the paper's point must be within 10% of the grid optimum
+    let paper_choice = StrideFixedChoice {
+        s_bytes,
+        wx_prime: 128,
+        m_prime: 64,
+        wy_prime: wy_prime(s_bytes, p.k),
+        smem_bytes: working_set_bytes(s_bytes, 128, 64, p.k),
+        hides_latency: true,
+    };
+    let paper_secs = simulate(&g, &plan_with_choice(&p, &g, &paper_choice)).seconds;
+    println!("paper's point: {:.0}µs ({:.1}% off the optimum)", paper_secs * 1e6,
+        100.0 * (paper_secs / best.0 - 1.0));
+    assert!(paper_secs <= 1.10 * best.0, "paper operating point not near-optimal");
+    println!("ablation_block_params OK");
+}

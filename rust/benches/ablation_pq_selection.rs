@@ -1,0 +1,72 @@
+//! Ablation: the **§3.1 P/Q selection procedure** — does the closed-form
+//! choice beat naive divisions?
+//!
+//! For each Fig. 4 case, compares the chosen (P, Q) against (a) no
+//! division (P=Q=1, everything resident or the raw volume strategy) and
+//! (b) maximal division (P=Wy or Q=M) under the same simulator.
+//!
+//! Run: `cargo bench --bench ablation_pq_selection`
+
+use pasconv::analytic::single::{choose, SingleChoice, SingleMethod};
+use pasconv::conv::suites::fig4_suite;
+use pasconv::gpusim::{gtx_1080ti, simulate};
+use pasconv::plans::single_channel::plan_with_choice;
+use pasconv::util::bench::Table;
+use pasconv::util::stats::geomean;
+
+fn force(c: &SingleChoice, p: usize, q: usize, base: &pasconv::conv::ConvProblem,
+         g: &pasconv::gpusim::GpuSpec) -> SingleChoice {
+    use pasconv::analytic::single::{d1_bytes, d2_bytes, th1, th2};
+    SingleChoice {
+        method: c.method,
+        p,
+        q,
+        d1_bytes: d1_bytes(base, g, p),
+        d2_bytes: d2_bytes(base, g, q),
+        th1: th1(base, g, p),
+        th2: th2(base, g, q),
+        uses_prefetch: c.uses_prefetch,
+    }
+}
+
+fn main() {
+    let g = gtx_1080ti();
+    println!("== §3.1 ablation: chosen P/Q vs naive divisions ==\n");
+    let mut t = Table::new(&["problem", "chosen", "t chosen", "t undivided", "t max-division",
+        "vs undiv", "vs max"]);
+    let (mut vs_undiv, mut vs_max) = (vec![], vec![]);
+    for prob in fig4_suite() {
+        let c = choose(&prob, &g);
+        let t_chosen = simulate(&g, &plan_with_choice(&prob, &g, &c)).seconds;
+        let undiv = force(&c, 1, 1, &prob, &g);
+        let t_undiv = simulate(&g, &plan_with_choice(&prob, &g, &undiv)).seconds;
+        let maxed = match c.method {
+            SingleMethod::FilterSplit => force(&c, prob.wy, 1, &prob, &g),
+            SingleMethod::MapSplit => force(&c, 1, prob.m, &prob, &g),
+        };
+        let t_max = simulate(&g, &plan_with_choice(&prob, &g, &maxed)).seconds;
+        vs_undiv.push(t_undiv / t_chosen);
+        vs_max.push(t_max / t_chosen);
+        t.row(&[
+            prob.label(),
+            format!("{:?} P={} Q={}", c.method, c.p, c.q),
+            format!("{:.1}µs", t_chosen * 1e6),
+            format!("{:.1}µs", t_undiv * 1e6),
+            format!("{:.1}µs", t_max * 1e6),
+            format!("{:.2}x", t_undiv / t_chosen),
+            format!("{:.2}x", t_max / t_chosen),
+        ]);
+    }
+    t.print();
+    println!(
+        "\ngeomean advantage: vs undivided {:.2}x, vs max-division {:.2}x",
+        geomean(&vs_undiv),
+        geomean(&vs_max)
+    );
+    // the procedure must never lose to either naive policy (>2% tolerance
+    // for cases where they coincide)
+    assert!(vs_undiv.iter().all(|&x| x > 0.98), "chosen P/Q loses to no division");
+    assert!(vs_max.iter().all(|&x| x > 0.98), "chosen P/Q loses to max division");
+    assert!(geomean(&vs_max) > 1.02, "max-division not distinguishable");
+    println!("ablation_pq_selection OK");
+}

@@ -1,0 +1,70 @@
+//! End-to-end serving bench: coordinator throughput and latency under
+//! synthetic PaperNet load, across batch windows — the L3 §Perf
+//! experiment of EXPERIMENTS.md (batching policy / queueing).
+//!
+//! Run: `cargo bench --bench e2e_serving`
+
+use std::time::{Duration, Instant};
+
+use pasconv::coordinator::{BatchConfig, Coordinator, Payload};
+use pasconv::runtime::{default_artifact_dir, Tensor};
+use pasconv::util::bench::Table;
+use pasconv::util::rng::Rng;
+use pasconv::util::stats::Summary;
+
+fn run(n: usize, cfg: BatchConfig) -> (f64, Summary, f64) {
+    let mut coord = Coordinator::start(&default_artifact_dir(), cfg).unwrap();
+    let mut rng = Rng::new(0xE2E);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| coord.submit(Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut rng) }))
+        .collect();
+    let lats: Vec<f64> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().unwrap().latency_secs)
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+    let mbs = coord.metrics().mean_batch_size();
+    coord.shutdown();
+    (n as f64 / wall, Summary::of(&lats), mbs)
+}
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        std::process::exit(1);
+    }
+    let n = 512;
+    println!("== e2e serving: {n} PaperNet requests per config ==\n");
+    let mut t = Table::new(&["max_batch", "window", "req/s", "p50 lat", "p99 lat", "mean batch"]);
+    let mut unbatched_tput = 0.0;
+    let mut best_batched_tput: f64 = 0.0;
+    for (mb, win_us) in [(1usize, 0u64), (4, 1_000), (8, 1_000), (8, 2_000), (8, 5_000)] {
+        let (tput, s, mbs) =
+            run(n, BatchConfig { max_batch: mb, max_wait: Duration::from_micros(win_us) });
+        if mb == 1 {
+            unbatched_tput = tput;
+        } else {
+            best_batched_tput = best_batched_tput.max(tput);
+        }
+        t.row(&[
+            mb.to_string(),
+            format!("{:.1}ms", win_us as f64 / 1000.0),
+            format!("{tput:.0}"),
+            format!("{:.2}ms", s.p50 * 1e3),
+            format!("{:.2}ms", s.p99 * 1e3),
+            format!("{mbs:.2}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nbatching speedup (best batched / unbatched): {:.2}x",
+        best_batched_tput / unbatched_tput
+    );
+    assert!(
+        best_batched_tput > unbatched_tput,
+        "dynamic batching must improve throughput"
+    );
+    println!("e2e_serving OK");
+}

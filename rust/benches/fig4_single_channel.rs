@@ -1,0 +1,56 @@
+//! Regenerates **Figure 4** — single-channel convolution performance vs
+//! cuDNN v7.1 on the GTX 1080Ti (simulated substrate, DESIGN.md §3).
+//!
+//! Paper claims: "Our method is faster than Cudnn v7.1 in all tested
+//! cases. The performance gain is 1.5X to 5.6X, and its average is 2.6X."
+//!
+//! Run: `cargo bench --bench fig4_single_channel`
+
+use pasconv::baselines::cudnn_proxy;
+use pasconv::conv::suites::{FIG4_POINTS, PAPER_KS};
+use pasconv::conv::ConvProblem;
+use pasconv::gpusim::{gtx_1080ti, simulate};
+use pasconv::plans::plan_for;
+use pasconv::util::bench::Table;
+use pasconv::util::stats::geomean;
+
+fn main() {
+    let g = gtx_1080ti();
+    println!("== Figure 4: single-channel convolution, {} ==\n", g.name);
+    let mut all = vec![];
+    for &k in &PAPER_KS {
+        println!("-- K = {k} --");
+        let mut t =
+            Table::new(&["map", "M", "ours (µs)", "cudnn (µs)", "ours GFLOP/s", "speedup"]);
+        for &(w, m) in &FIG4_POINTS {
+            let p = ConvProblem::single(w, m, k);
+            let ours = simulate(&g, &plan_for(&p, &g));
+            let base = simulate(&g, &cudnn_proxy::plan(&p, &g));
+            let s = base.seconds / ours.seconds;
+            all.push(s);
+            t.row(&[
+                w.to_string(),
+                m.to_string(),
+                format!("{:.1}", ours.seconds * 1e6),
+                format!("{:.1}", base.seconds * 1e6),
+                format!("{:.0}", ours.gflops),
+                format!("{s:.2}x"),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    let (min, max) = (
+        all.iter().cloned().fold(f64::INFINITY, f64::min),
+        all.iter().cloned().fold(0.0, f64::max),
+    );
+    println!(
+        "speedup range {:.2}x .. {:.2}x   mean {:.2}x   geomean {:.2}x",
+        min,
+        max,
+        all.iter().sum::<f64>() / all.len() as f64,
+        geomean(&all)
+    );
+    println!("paper:        1.5x .. 5.6x    average 2.6x");
+    assert!(min > 1.0, "must win everywhere (paper claim)");
+}

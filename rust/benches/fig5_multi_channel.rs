@@ -1,0 +1,66 @@
+//! Regenerates **Figure 5** — multi-channel convolution performance vs
+//! cuDNN v7.1 on the GTX 1080Ti (simulated substrate, DESIGN.md §3).
+//!
+//! Paper claims: "our method is faster than Cudnn in all tested cases,
+//! and the throughput has been increased by 1.05X to 2X, with an average
+//! increase of 1.39X" (M' = 64, W'x = 128, S in {32, 64}).
+//!
+//! Run: `cargo bench --bench fig5_multi_channel`
+
+use pasconv::baselines::cudnn_proxy;
+use pasconv::conv::suites::{FIG5_POINTS, PAPER_KS};
+use pasconv::conv::ConvProblem;
+use pasconv::gpusim::{gtx_1080ti, simulate};
+use pasconv::plans::plan_for;
+use pasconv::util::bench::Table;
+use pasconv::util::stats::geomean;
+
+fn main() {
+    let g = gtx_1080ti();
+    println!("== Figure 5: multi-channel convolution, {} ==\n", g.name);
+    let mut all = vec![];
+    for &k in &PAPER_KS {
+        println!("-- K = {k} --");
+        let mut t = Table::new(&[
+            "map",
+            "C=M",
+            "plan",
+            "ours (µs)",
+            "cudnn (µs)",
+            "ours GFLOP/s",
+            "speedup",
+        ]);
+        for &(w, c) in &FIG5_POINTS {
+            let p = ConvProblem::multi(c, w, c, k);
+            let plan = plan_for(&p, &g);
+            let ours = simulate(&g, &plan);
+            let base = simulate(&g, &cudnn_proxy::plan(&p, &g));
+            let s = base.seconds / ours.seconds;
+            all.push(s);
+            t.row(&[
+                w.to_string(),
+                c.to_string(),
+                plan.name.clone(),
+                format!("{:.1}", ours.seconds * 1e6),
+                format!("{:.1}", base.seconds * 1e6),
+                format!("{:.0}", ours.gflops),
+                format!("{s:.2}x"),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    let (min, max) = (
+        all.iter().cloned().fold(f64::INFINITY, f64::min),
+        all.iter().cloned().fold(0.0, f64::max),
+    );
+    println!(
+        "speedup range {:.2}x .. {:.2}x   mean {:.2}x   geomean {:.2}x",
+        min,
+        max,
+        all.iter().sum::<f64>() / all.len() as f64,
+        geomean(&all)
+    );
+    println!("paper:        1.05x .. 2x     average 1.39x");
+    assert!(min > 1.0, "must win everywhere (paper claim)");
+}

@@ -1,0 +1,53 @@
+//! Regenerates the **§4 Maxwell portability result** — both kernels on
+//! the GTX Titan X (Maxwell) vs cuDNN.
+//!
+//! Paper: "We also implemented our two kernels on Maxwell series GPU GTX
+//! Titan X, and it also showed that our performance is faster than Cudnn
+//! on the same GPU by 1.3X to 3.7X in the single-channel convolution and
+//! 1.08X to 1.8X in the multi-channel convolution."
+//!
+//! Run: `cargo bench --bench maxwell_titanx`
+
+use pasconv::baselines::cudnn_proxy;
+use pasconv::conv::suites::{fig4_suite, fig5_suite};
+use pasconv::gpusim::{simulate, titan_x_maxwell};
+use pasconv::plans::plan_for;
+use pasconv::util::bench::Table;
+use pasconv::util::stats::geomean;
+
+fn main() {
+    let t = titan_x_maxwell();
+    println!("== Maxwell portability: {} ==\n", t.name);
+
+    for (label, suite, paper_range) in [
+        ("single-channel (Fig. 4 suite)", fig4_suite(), "1.3x .. 3.7x"),
+        ("multi-channel (Fig. 5 suite)", fig5_suite(), "1.08x .. 1.8x"),
+    ] {
+        println!("-- {label} --");
+        let mut table = Table::new(&["problem", "ours (µs)", "cudnn (µs)", "speedup"]);
+        let mut speedups = vec![];
+        for p in suite {
+            let ours = simulate(&t, &plan_for(&p, &t)).seconds;
+            let base = simulate(&t, &cudnn_proxy::plan(&p, &t)).seconds;
+            speedups.push(base / ours);
+            table.row(&[
+                p.label(),
+                format!("{:.1}", ours * 1e6),
+                format!("{:.1}", base * 1e6),
+                format!("{:.2}x", base / ours),
+            ]);
+        }
+        table.print();
+        let (min, max) = (
+            speedups.iter().cloned().fold(f64::INFINITY, f64::min),
+            speedups.iter().cloned().fold(0.0, f64::max),
+        );
+        println!(
+            "range {:.2}x .. {:.2}x   geomean {:.2}x    (paper: {paper_range})\n",
+            min,
+            max,
+            geomean(&speedups)
+        );
+    }
+    println!("maxwell_titanx OK");
+}

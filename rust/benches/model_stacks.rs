@@ -1,0 +1,72 @@
+//! Whole-model conv-stack comparison — §4's "convolutions which are
+//! commonly used in popular CNN models [AlexNet][GoogLeNet][VGG][ResNet]"
+//! aggregated per model: the end-to-end conv time of each network under
+//! our kernels vs the cuDNN proxy, plus the small-map share that drives
+//! the difference (the paper's §1 motivation).
+//!
+//! Run: `cargo bench --bench model_stacks`
+
+use pasconv::baselines::cudnn_proxy;
+use pasconv::conv::suites::{alexnet, googlenet_inception3a, resnet18, small_map_fraction, vgg16};
+use pasconv::conv::ConvProblem;
+use pasconv::gpusim::{gtx_1080ti, simulate};
+use pasconv::plans::plan_for;
+use pasconv::util::bench::Table;
+
+fn stack_time(g: &pasconv::gpusim::GpuSpec, layers: &[ConvProblem], ours: bool) -> f64 {
+    layers
+        .iter()
+        .map(|p| {
+            let plan = if ours { plan_for(p, g) } else { cudnn_proxy::plan(p, g) };
+            simulate(g, &plan).seconds
+        })
+        .sum()
+}
+
+fn main() {
+    let g = gtx_1080ti();
+    println!("== CNN model conv stacks on {} ==\n", g.name);
+    let models: [(&str, Vec<ConvProblem>); 4] = [
+        ("AlexNet (stride-1 convs)", alexnet()),
+        ("VGG-16", vgg16()),
+        ("ResNet-18", resnet18()),
+        ("GoogLeNet inception(3a)", googlenet_inception3a()),
+    ];
+    let mut t = Table::new(&[
+        "model",
+        "layers",
+        "maps<32",
+        "ours (ms)",
+        "cudnn (ms)",
+        "model speedup",
+    ]);
+    let mut speedups = vec![];
+    for (name, layers) in &models {
+        let ours = stack_time(&g, layers, true);
+        let base = stack_time(&g, layers, false);
+        speedups.push((name, base / ours, small_map_fraction(layers)));
+        t.row(&[
+            name.to_string(),
+            layers.len().to_string(),
+            format!("{:.0}%", 100.0 * small_map_fraction(layers)),
+            format!("{:.3}", ours * 1e3),
+            format!("{:.3}", base * 1e3),
+            format!("{:.2}x", base / ours),
+        ]);
+    }
+    t.print();
+
+    // the paper's §1 motivation: models dominated by small maps benefit
+    // the most — speedup should correlate with the small-map share
+    let alex = speedups.iter().find(|(n, _, _)| n.starts_with("AlexNet")).unwrap();
+    let vgg = speedups.iter().find(|(n, _, _)| n.starts_with("VGG")).unwrap();
+    println!(
+        "\nsmall-map-heavy AlexNet ({:.0}% < 32px): {:.2}x   vs map-heavy VGG-16 ({:.0}%): {:.2}x",
+        100.0 * alex.2,
+        alex.1,
+        100.0 * vgg.2,
+        vgg.1
+    );
+    assert!(speedups.iter().all(|(_, s, _)| *s > 1.0), "a model stack regressed");
+    println!("model_stacks OK");
+}

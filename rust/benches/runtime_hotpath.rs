@@ -1,0 +1,91 @@
+//! Real-numerics hot path: PJRT CPU execution latency of every AOT'd
+//! conv artifact (the serve path's compute), plus the overhead split
+//! (literal construction vs execution).  This is the L3 §Perf baseline
+//! of EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench runtime_hotpath`
+
+use std::time::Instant;
+
+use pasconv::runtime::{default_artifact_dir, ArtifactKind, Runtime, Tensor};
+use pasconv::util::bench::{fmt_time, Table};
+use pasconv::util::rng::Rng;
+use pasconv::util::stats::Summary;
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        std::process::exit(1);
+    }
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::new(0xB16B);
+    let iters = 30;
+
+    println!("== PJRT hot path: conv artifacts ({} iters each) ==\n", iters);
+    let mut t = Table::new(&["artifact", "GFLOP", "p50", "p95", "GFLOP/s @p50"]);
+    for kind in [ArtifactKind::ConvSingle, ArtifactKind::ConvMulti, ArtifactKind::ConvIm2col] {
+        let names: Vec<String> =
+            rt.artifacts_of_kind(kind).iter().map(|a| a.name.clone()).collect();
+        for name in names {
+            let p = rt.artifact(&name).unwrap().problem().unwrap();
+            let (img, flt) = if kind == ArtifactKind::ConvSingle {
+                (
+                    Tensor::randn(vec![p.wy, p.wx], &mut rng),
+                    Tensor::randn(vec![p.m, p.k, p.k], &mut rng),
+                )
+            } else {
+                (
+                    Tensor::randn(vec![p.c, p.wy, p.wx], &mut rng),
+                    Tensor::randn(vec![p.m, p.c, p.k, p.k], &mut rng),
+                )
+            };
+            rt.execute_conv(&name, &img, &flt).unwrap(); // warm + compile
+            let mut samples = vec![];
+            for _ in 0..iters {
+                let t0 = Instant::now();
+                let _ = rt.execute_conv(&name, &img, &flt).unwrap();
+                samples.push(t0.elapsed().as_secs_f64());
+            }
+            let s = Summary::of(&samples);
+            let gflop = p.flops() as f64 / 1e9;
+            t.row(&[
+                name.clone(),
+                format!("{gflop:.4}"),
+                fmt_time(s.p50),
+                fmt_time(s.p95),
+                format!("{:.2}", gflop / s.p50),
+            ]);
+        }
+    }
+    t.print();
+
+    // overhead split on one artifact: literal build vs execute
+    println!("\n== overhead split (multi_c32_w14_m32_k3) ==");
+    let p = rt.artifact("multi_c32_w14_m32_k3").unwrap().problem().unwrap();
+    let img = Tensor::randn(vec![p.c, p.wy, p.wx], &mut rng);
+    let flt = Tensor::randn(vec![p.m, p.c, p.k, p.k], &mut rng);
+    rt.execute_conv("multi_c32_w14_m32_k3", &img, &flt).unwrap();
+    let mut lit = vec![];
+    for _ in 0..200 {
+        let t0 = Instant::now();
+        let a = xla::Literal::vec1(&img.data).reshape(&img.dims_i64()).unwrap();
+        let b = xla::Literal::vec1(&flt.data).reshape(&flt.dims_i64()).unwrap();
+        std::hint::black_box((a, b));
+        lit.push(t0.elapsed().as_secs_f64());
+    }
+    let mut full = vec![];
+    for _ in 0..200 {
+        let t0 = Instant::now();
+        let _ = rt.execute_conv("multi_c32_w14_m32_k3", &img, &flt).unwrap();
+        full.push(t0.elapsed().as_secs_f64());
+    }
+    let (ls, fs) = (Summary::of(&lit), Summary::of(&full));
+    println!(
+        "literal build p50 {}   end-to-end p50 {}   literal share {:.0}%",
+        fmt_time(ls.p50),
+        fmt_time(fs.p50),
+        100.0 * ls.p50 / fs.p50
+    );
+    println!("\nruntime_hotpath OK");
+}

@@ -1,0 +1,106 @@
+//! Regenerates **Table 1** — the GTX 1080Ti access parameters.
+//!
+//! Two parts:
+//!  * *measured*: Mei & Chu [5]-style microbenchmarks run against the
+//!    simulated memory system — a dependent pointer-chase recovers the
+//!    latency, a saturating stream recovers the transmission rate.  This
+//!    is the self-consistency gate of DESIGN.md §3: the simulator must
+//!    report back the parameters it was built from.
+//!  * *derived*: the paper's §2.2 arithmetic (N_FMA, V_s, thread/warp
+//!    requirements) from those parameters, pinned to the paper's values.
+//!
+//! Run: `cargo bench --bench table1_microbench`
+
+use pasconv::gpusim::memory::{transfer_cycles, AccessConfig};
+use pasconv::gpusim::{gtx_1080ti, titan_x_maxwell, GpuSpec};
+use pasconv::util::bench::Table;
+
+/// Pointer-chase: dependent 4-B accesses expose the raw latency (the
+/// stream term is negligible at 4 B).
+fn measure_latency(g: &GpuSpec) -> f64 {
+    let cfg = AccessConfig {
+        segment_bytes: 32,
+        sms_active: 1,
+        threads_per_sm: g.threads_required_per_sm() as u32, // stream term ~0
+    };
+    let chase_len = 1000.0;
+    // each dependent access pays full latency; total / n = latency
+    (0..1000)
+        .map(|_| transfer_cycles(g, &cfg, 4.0))
+        .sum::<f64>()
+        / chase_len
+}
+
+/// Stream: slope of transfer time over volume at full occupancy gives
+/// bytes per cycle.
+fn measure_bytes_per_cycle(g: &GpuSpec) -> f64 {
+    let cfg = AccessConfig {
+        segment_bytes: 128,
+        sms_active: 1,
+        threads_per_sm: g.threads_required_per_sm() as u32,
+    };
+    let (small, large) = (1e6, 9e6);
+    let dt = transfer_cycles(g, &cfg, large) - transfer_cycles(g, &cfg, small);
+    (large - small) / dt
+}
+
+fn main() {
+    for g in [gtx_1080ti(), titan_x_maxwell()] {
+        println!("== Table 1 reproduction: {} ({}) ==", g.name, g.architecture);
+        let lat = measure_latency(&g);
+        let bpc = measure_bytes_per_cycle(&g);
+        let mut t = Table::new(&["parameter", "measured/derived", "paper (1080Ti)"]);
+        let paper = |s: &str| if g.name == "GTX 1080Ti" { s.to_string() } else { "—".into() };
+        t.row(&[
+            "Global Memory Latency (cycles)".into(),
+            format!("{lat:.0}"),
+            paper("258"),
+        ]);
+        t.row(&["Bandwidth (GB/s)".into(), format!("{:.0}", g.bandwidth_gb_s), paper("484")]);
+        t.row(&["Base clock (MHz)".into(), format!("{:.0}", g.clock_mhz), paper("1480")]);
+        t.row(&["SM".into(), g.sm_count.to_string(), paper("28")]);
+        t.row(&[
+            "Transmission Rate (B/cycle)".into(),
+            format!("{bpc:.0}"),
+            paper("327"),
+        ]);
+        t.row(&[
+            "Data Requirement (bytes)".into(),
+            g.data_requirement_bytes().to_string(),
+            paper("84,366 (327x258)"),
+        ]);
+        t.row(&[
+            "Thread Requirement/SM".into(),
+            g.threads_required_per_sm().to_string(),
+            paper("768"),
+        ]);
+        t.row(&[
+            "Warp Requirement/SM".into(),
+            g.warps_required_per_sm().to_string(),
+            paper("24"),
+        ]);
+        t.row(&[
+            "Data Requirement/SM (bytes)".into(),
+            g.data_requirement_per_sm().to_string(),
+            paper("3072"),
+        ]);
+        t.row(&[
+            "Flops/clock cycle/core".into(),
+            g.fma_per_core_cycle.to_string(),
+            paper("2"),
+        ]);
+        t.row(&["N_FMA (derived, §2.2)".into(), g.n_fma().to_string(), paper("66,048")]);
+        t.row(&["V_s (derived, §2.2)".into(), g.v_s().to_string(), paper("86,016")]);
+        t.print();
+
+        if g.name == "GTX 1080Ti" {
+            // self-consistency gate: measured == configured == paper
+            assert!((lat - 258.0).abs() < 1.0, "latency {lat}");
+            assert!((bpc - g.bytes_per_cycle()).abs() < 2.0, "bpc {bpc}");
+            assert_eq!(g.n_fma(), 66_048);
+            assert_eq!(g.v_s(), 86_016);
+        }
+        println!();
+    }
+    println!("table1 OK");
+}

@@ -1,0 +1,12 @@
+//! The paper's closed-form performance model: §2.2 strategy selection
+//! (`occupancy`), §3.1 single-channel P/Q procedure (`single`), §3.2
+//! stride-fixed block parameters (`multi`).  `plans` consumes these to
+//! build the per-SM schedules the simulator times.
+
+pub mod multi;
+pub mod occupancy;
+pub mod single;
+
+pub use multi::{choose as choose_stride_fixed, StrideFixedChoice};
+pub use occupancy::{paper_launch, strategy_for, LaunchGeometry, Strategy};
+pub use single::{choose as choose_single, SingleChoice, SingleMethod};

@@ -1,0 +1,105 @@
+//! §2.2 — the two latency-hiding strategies and the decision rule
+//! between them, plus the launch geometry the paper fixes in §4
+//! (2 blocks/SM x 512 threads, <=128 registers/thread).
+
+use crate::gpusim::GpuSpec;
+
+/// Which §2.2 strategy a kernel uses to survive the global-memory latency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// approach 1: >= N_FMA operations per round, latency hidden by
+    /// double-buffered prefetch
+    Prefetch,
+    /// approach 2: transfer >= V_s bytes continuously to keep the bus busy
+    Volume,
+}
+
+/// §2.2 decision: prefetch if the per-round FMA count covers N_FMA.
+pub fn strategy_for(spec: &GpuSpec, fma_per_round: u64) -> Strategy {
+    if fma_per_round >= spec.n_fma() {
+        Strategy::Prefetch
+    } else {
+        Strategy::Volume
+    }
+}
+
+/// The paper's §4 launch geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaunchGeometry {
+    pub blocks: u32,
+    pub threads_per_block: u32,
+    pub max_registers_per_thread: u32,
+}
+
+/// §4: "N_block = 2 x N_SM blocks are used. Two blocks are assigned to
+/// each SM, and 512 threads are assigned to each block. Thus, the maximum
+/// number of registers for each thread is constrained to 128."
+/// (The paper divides the 64K-register file by the 512 threads of one
+/// block — 128/thread — relying on the two blocks time-sharing the file;
+/// we reproduce their arithmetic.)
+pub fn paper_launch(spec: &GpuSpec) -> LaunchGeometry {
+    let blocks = 2 * spec.sm_count;
+    let threads_per_block = 512;
+    let max_regs = spec.registers_per_sm / threads_per_block;
+    LaunchGeometry { blocks, threads_per_block, max_registers_per_thread: max_regs }
+}
+
+impl LaunchGeometry {
+    pub fn threads_per_sm(&self, spec: &GpuSpec) -> u32 {
+        (self.blocks / spec.sm_count) * self.threads_per_block
+    }
+}
+
+/// Is a transfer volume large enough for the Volume strategy? (>= V_s)
+pub fn volume_sufficient(spec: &GpuSpec, total_bytes: u64) -> bool {
+    total_bytes >= spec.v_s()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{gtx_1080ti, titan_x_maxwell};
+
+    #[test]
+    fn threshold_exactly_n_fma() {
+        let g = gtx_1080ti();
+        assert_eq!(strategy_for(&g, g.n_fma()), Strategy::Prefetch);
+        assert_eq!(strategy_for(&g, g.n_fma() - 1), Strategy::Volume);
+    }
+
+    #[test]
+    fn paper_launch_numbers() {
+        // §4: 2x28 blocks, 512 threads/block, 128 regs/thread on 1080Ti
+        let g = gtx_1080ti();
+        let l = paper_launch(&g);
+        assert_eq!(l.blocks, 56);
+        assert_eq!(l.threads_per_block, 512);
+        assert_eq!(l.max_registers_per_thread, 128); // 64K regs / 512 threads
+        assert_eq!(l.threads_per_sm(&g), 1024);
+    }
+
+    #[test]
+    fn launch_covers_thread_requirement() {
+        // 1024 resident threads/SM > the 768 Table-1 requirement: the
+        // paper's geometry can keep the bus busy.
+        let g = gtx_1080ti();
+        let l = paper_launch(&g);
+        assert!(l.threads_per_sm(&g) as u64 >= g.threads_required_per_sm());
+    }
+
+    #[test]
+    fn volume_threshold_is_v_s() {
+        let g = gtx_1080ti();
+        assert!(volume_sufficient(&g, g.v_s()));
+        assert!(!volume_sufficient(&g, g.v_s() - 1));
+    }
+
+    #[test]
+    fn maxwell_needs_more_fma_per_round() {
+        let (g, t) = (gtx_1080ti(), titan_x_maxwell());
+        // a round that hides latency on Pascal may not on Maxwell
+        let mid = (g.n_fma() + t.n_fma()) / 2;
+        assert_eq!(strategy_for(&g, mid), Strategy::Prefetch);
+        assert_eq!(strategy_for(&t, mid), Strategy::Volume);
+    }
+}

@@ -1,0 +1,251 @@
+//! §3.1 — the single-channel P/Q selection procedure, implemented
+//! equation-by-equation.
+//!
+//! Method 1 divides the *filters* along `m` across SMs and streams the
+//! feature map in `P` pieces along `y` (eqs. 4–6).  Method 2 divides the
+//! *feature map* along `y` across SMs and streams the filters in `Q`
+//! pieces (eqs. 7–9).  P and Q are bounded above by the `Th >= N_FMA`
+//! latency-hiding requirement and below by the on-chip capacity
+//! (`D <= S_shared`, plus the register-file bound the paper mentions),
+//! and the method with the smaller resident working set wins (§3.1
+//! step 4).  When no feasible P/Q exists the kernel falls back to the
+//! §2.2 "volume" strategy (transfer > V_s continuously, P = Q = 1).
+
+use crate::conv::{ConvProblem, BYTES_F32};
+use crate::gpusim::GpuSpec;
+
+/// Which §3.1 division was selected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SingleMethod {
+    /// method 1: filters split across SMs, map streamed in P pieces
+    FilterSplit,
+    /// method 2: map split across SMs, filters streamed in Q pieces
+    MapSplit,
+}
+
+/// Outcome of the §3.1 procedure for one problem on one GPU.
+#[derive(Clone, Debug)]
+pub struct SingleChoice {
+    pub method: SingleMethod,
+    pub p: usize,
+    pub q: usize,
+    /// eq. (5) resident bytes for the chosen P
+    pub d1_bytes: usize,
+    /// eq. (8) resident bytes for the chosen Q
+    pub d2_bytes: usize,
+    /// eq. (6) FMA ops per round for the chosen P
+    pub th1: u64,
+    /// eq. (9) FMA ops per round for the chosen Q
+    pub th2: u64,
+    /// whether the chosen division satisfies Th >= N_FMA (prefetch mode);
+    /// false = the V_s volume strategy (§2.2 approach 2)
+    pub uses_prefetch: bool,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// eq. (5): resident bytes per SM under method 1 with P map pieces.
+pub fn d1_bytes(p: &ConvProblem, spec: &GpuSpec, pp: usize) -> usize {
+    let m_per_sm = ceil_div(p.m, spec.sm_count as usize);
+    (p.k * p.k * m_per_sm + (ceil_div(p.wy, pp) + p.k - 1) * p.wx) * BYTES_F32
+}
+
+/// eq. (6): FMA ops executable per round under method 1.
+pub fn th1(p: &ConvProblem, spec: &GpuSpec, pp: usize) -> u64 {
+    let m_per_sm = ceil_div(p.m, spec.sm_count as usize);
+    (p.k * p.k * m_per_sm * ceil_div(p.wy, pp) * p.wx) as u64
+}
+
+/// eq. (8): resident bytes per SM under method 2 with Q filter pieces.
+pub fn d2_bytes(p: &ConvProblem, spec: &GpuSpec, q: usize) -> usize {
+    let wy_per_sm = ceil_div(p.wy, spec.sm_count as usize);
+    (p.k * p.k * ceil_div(p.m, q) + (wy_per_sm + p.k - 1) * p.wx) * BYTES_F32
+}
+
+/// eq. (9): FMA ops executable per round under method 2.
+pub fn th2(p: &ConvProblem, spec: &GpuSpec, q: usize) -> u64 {
+    let wy_per_sm = ceil_div(p.wy, spec.sm_count as usize);
+    (p.k * p.k * ceil_div(p.m, q) * wy_per_sm * p.wx) as u64
+}
+
+/// The register-file bound the paper folds into the lower bound of P/Q:
+/// §4 fixes 2 blocks x 512 threads per SM, max 128 registers per thread;
+/// per-thread working data must also fit, which caps the usable on-chip
+/// bytes at S_shared plus the register file backing the accumulators.
+/// We conservatively require D <= S_shared (the paper's stated bound).
+fn onchip_budget(spec: &GpuSpec) -> usize {
+    spec.shared_mem_bytes as usize
+}
+
+/// §3.1 steps 1–4: choose P, Q and the method.
+pub fn choose(p: &ConvProblem, spec: &GpuSpec) -> SingleChoice {
+    assert!(p.is_single_channel(), "single-channel problem expected");
+    assert!(p.valid(), "invalid problem");
+    let n_fma = spec.n_fma();
+    let budget = onchip_budget(spec);
+
+    // Step 1 upper bounds (Th >= N_FMA):
+    //   P <= K*K*ceil(M/N_sm)*Wy*Wx / N_FMA  and  P <= Wy
+    let m_per_sm = ceil_div(p.m, spec.sm_count as usize);
+    let p_hi = (((p.k * p.k * m_per_sm * p.wy * p.wx) as u64 / n_fma) as usize).min(p.wy);
+    let wy_per_sm = ceil_div(p.wy, spec.sm_count as usize);
+    let q_hi = (((p.k * p.k * p.m * wy_per_sm * p.wx) as u64 / n_fma) as usize).min(p.m);
+
+    // Step 2 lower bounds (D <= S_shared): smallest integer P/Q that fits.
+    let p_lo = (1..=p.wy).find(|&pp| d1_bytes(p, spec, pp) <= budget);
+    let q_lo = (1..=p.m).find(|&q| d2_bytes(p, spec, q) <= budget);
+
+    // Step 3: the minimum feasible value in [lo, hi], if any.
+    let p_pick = p_lo.filter(|&lo| lo <= p_hi);
+    let q_pick = q_lo.filter(|&lo| lo <= q_hi);
+
+    let (pp, q, uses_prefetch) = match (p_pick, q_pick) {
+        (None, None) => (1, 1, false), // §3.1 step 3: no feasible value -> P=Q=1
+        (Some(pp), None) => (pp, 1, true),
+        (None, Some(q)) => (1, q, true),
+        (Some(pp), Some(q)) => (pp, q, true),
+    };
+
+    // Step 4: compare the working sets and keep the smaller (more on-chip
+    // slack); reset the loser's divisor to 1.
+    let d1 = d1_bytes(p, spec, pp);
+    let d2 = d2_bytes(p, spec, q);
+    let method = if !uses_prefetch {
+        // volume fallback: method 1 shape (filters per SM, map streamed)
+        SingleMethod::FilterSplit
+    } else if p_pick.is_some() && (q_pick.is_none() || d1 <= d2) {
+        SingleMethod::FilterSplit
+    } else {
+        SingleMethod::MapSplit
+    };
+
+    let (pp, q) = match method {
+        SingleMethod::FilterSplit => (pp, 1),
+        SingleMethod::MapSplit => (1, q),
+    };
+
+    SingleChoice {
+        method,
+        p: pp,
+        q,
+        d1_bytes: d1_bytes(p, spec, pp),
+        d2_bytes: d2_bytes(p, spec, q),
+        th1: th1(p, spec, pp),
+        th2: th2(p, spec, q),
+        uses_prefetch,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::suites::fig4_suite;
+    use crate::gpusim::gtx_1080ti;
+
+    #[test]
+    fn chosen_division_fits_shared_memory() {
+        let g = gtx_1080ti();
+        for p in fig4_suite() {
+            let c = choose(&p, &g);
+            let d = match c.method {
+                SingleMethod::FilterSplit => c.d1_bytes,
+                SingleMethod::MapSplit => c.d2_bytes,
+            };
+            if c.uses_prefetch {
+                assert!(d <= g.shared_mem_bytes as usize, "{}: D={} over budget", p.label(), d);
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_divisions_hide_latency() {
+        let g = gtx_1080ti();
+        for p in fig4_suite() {
+            let c = choose(&p, &g);
+            if c.uses_prefetch {
+                let th = match c.method {
+                    SingleMethod::FilterSplit => c.th1,
+                    SingleMethod::MapSplit => c.th2,
+                };
+                assert!(th >= g.n_fma(), "{}: Th={} < N_FMA", p.label(), th);
+            }
+        }
+    }
+
+    #[test]
+    fn divisors_in_valid_ranges() {
+        let g = gtx_1080ti();
+        for p in fig4_suite() {
+            let c = choose(&p, &g);
+            assert!(c.p >= 1 && c.p <= p.wy);
+            assert!(c.q >= 1 && c.q <= p.m);
+            // step 4 resets the losing divisor to 1
+            assert!(c.p == 1 || c.q == 1);
+        }
+    }
+
+    #[test]
+    fn large_map_forces_division() {
+        // 1024x1024 map (4 MB) cannot be resident: P (or Q with the map
+        // split across SMs) must engage.
+        let g = gtx_1080ti();
+        let p = ConvProblem::single(1024, 32, 3);
+        let c = choose(&p, &g);
+        assert!(c.uses_prefetch);
+        match c.method {
+            SingleMethod::FilterSplit => assert!(c.p > 1, "P={} for 4MB map", c.p),
+            SingleMethod::MapSplit => {
+                // map split over 28 SMs: 37 lines/SM is resident-able; fine
+            }
+        }
+    }
+
+    #[test]
+    fn small_map_small_m_lacks_prefetch_work() {
+        // 28x28 with few small filters: even undivided, Th < N_FMA ->
+        // the paper's volume strategy engages (the regime where [1] loses).
+        let g = gtx_1080ti();
+        let p = ConvProblem::single(28, 32, 1);
+        let c = choose(&p, &g);
+        // Th1 at P=1: 1*1*ceil(32/28)*28*28 = 1568 << 66048
+        assert!(!c.uses_prefetch);
+        assert_eq!((c.p, c.q), (1, 1));
+    }
+
+    #[test]
+    fn eq5_and_eq8_formulas() {
+        // hand-check eq.(5)/(8) on a crafted case
+        let g = gtx_1080ti();
+        let p = ConvProblem::single(56, 56, 3); // m=56 -> 2 filters/SM
+        assert_eq!(d1_bytes(&p, &g, 2), (9 * 2 + (28 + 2) * 56) * 4);
+        assert_eq!(th1(&p, &g, 2), (9 * 2 * 28 * 56) as u64);
+        assert_eq!(d2_bytes(&p, &g, 4), (9 * 14 + (2 + 2) * 56) * 4);
+        assert_eq!(th2(&p, &g, 4), (9 * 14 * 2 * 56) as u64);
+    }
+
+    #[test]
+    fn th_monotone_decreasing_in_divisor() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::single(224, 64, 3);
+        let mut last = u64::MAX;
+        for pp in [1, 2, 4, 8, 16] {
+            let t = th1(&p, &g, pp);
+            assert!(t <= last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn d_monotone_decreasing_in_divisor() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::single(224, 64, 3);
+        let mut last = usize::MAX;
+        for pp in [1, 2, 4, 8, 16] {
+            let d = d1_bytes(&p, &g, pp);
+            assert!(d <= last);
+            last = d;
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! cuDNN proxy — the Implicit-GEMM algorithm [12] as an execution plan.
+//!
+//! The comparison target of Figs. 4/5.  Implicit GEMM treats the
+//! convolution as  C[M, Oy*Ox] = A[M, C*K*K] x B[C*K*K, Oy*Ox]  where B
+//! (the im2col matrix) is never materialized in global memory: each
+//! threadblock gathers its B-tile into shared memory on the fly.
+//!
+//! The model captures the three structural costs the paper's kernels
+//! avoid — each is an explicitly documented property of tiled GEMM, not
+//! a tuning fudge:
+//!
+//! * **k-padding**: the k-loop advances in TK-element steps; a GEMM
+//!   depth of C*K*K that is not a multiple of TK burns whole steps on
+//!   padding (for single-channel K=1 the depth is 1 -> 8x waste at
+//!   TK=8 — the paper's biggest wins are exactly there);
+//! * **tile quantization**: ceil(M/TM) x ceil(Oy*Ox/TN) blocks compute
+//!   full tiles regardless of the useful fraction (25-px outputs of the
+//!   7x7 maps of Fig. 5 waste most of a 128-wide tile);
+//! * **im2col gather**: B-tile rows are output-row segments of length
+//!   Ox, so the fetch segment is min(Ox, TN) pixels — short and
+//!   misaligned for small maps, full 128-B only for large ones.
+//!
+//! Like cudnnFindBestAlgorithm, the proxy tries several tile shapes and
+//! keeps the fastest.
+
+use crate::conv::{ConvProblem, BYTES_F32};
+use crate::gpusim::memory::segment_efficiency;
+use crate::gpusim::pipeline::combined_efficiency;
+use crate::gpusim::{simulate, GpuSpec, KernelPlan, Round};
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Implicit-GEMM plan for a fixed (TM, TN, TK) tile shape.
+pub fn plan_with_tiles(
+    p: &ConvProblem,
+    spec: &GpuSpec,
+    tm: usize,
+    tn: usize,
+    tk: usize,
+) -> KernelPlan {
+    assert!(p.valid());
+    let m_g = p.m; // GEMM M
+    let n_g = p.oy() * p.ox(); // GEMM N
+    let k_g = p.c * p.k * p.k; // GEMM K (depth)
+
+    let m_tiles = ceil_div(m_g, tm);
+    let n_tiles = ceil_div(n_g, tn);
+    let k_steps = ceil_div(k_g, tk);
+    // v7.1's implicit GEMM runs one block per output tile — it has no
+    // split-K reduction (that arrived in later cuDNN releases), so small
+    // outputs cannot fill the chip: a third documented small-map weakness
+    let blocks = m_tiles * n_tiles;
+
+    // per k-step loads for one block, with L2 reuse: co-resident blocks in
+    // the same GEMM row (column) re-read the same A (B) tile — it leaves
+    // DRAM once per wave
+    let wave = blocks.min(2 * spec.sm_count as usize).max(1);
+    let a_readers = (wave as f64 / m_tiles as f64).clamp(1.0, n_tiles as f64);
+    let b_readers = (wave as f64 / n_tiles as f64).clamp(1.0, m_tiles as f64);
+    let a_bytes = (tm * tk * BYTES_F32) as f64 / a_readers; // filters (Fig. 1(b) layout)
+    let b_bytes = (tk * tn * BYTES_F32) as f64 / b_readers; // im2col gather
+    // B-tile gather segment: one output-row piece = min(Ox, TN) pixels,
+    // starts misaligned for K>1 (window offsets j=1..K-1 shift the base)
+    let b_seg_px = p.ox().min(tn);
+    let mut b_eff = segment_efficiency(b_seg_px * BYTES_F32);
+    if p.k > 1 {
+        b_eff *= 0.85; // misaligned window starts within rows
+    }
+    let a_eff = segment_efficiency((tk * BYTES_F32).min(128));
+    let eff = combined_efficiency(&[(a_bytes, a_eff), (b_bytes, b_eff)]);
+
+    // every k-step computes the full tile, padded or not
+    let fma_per_step = (tm * tn * tk) as f64;
+
+    let sms_active = blocks.min(spec.sm_count as usize) as u32;
+    let rounds_per_sm = ceil_div(blocks * k_steps, sms_active as usize);
+    let rounds: Vec<Round> = (0..rounds_per_sm)
+        .map(|_| Round::with_efficiency(a_bytes + b_bytes, eff, fma_per_step))
+        .collect();
+
+    // double-buffered A+B tiles in shared memory
+    let smem = 2 * ((tm * tk + tk * tn) * BYTES_F32);
+
+    KernelPlan {
+        name: format!("cudnn-igemm[{}x{}x{}]", tm, tn, tk),
+        rounds,
+        sms_active,
+        threads_per_sm: 1024,
+        // the B-tile gather spends issue slots on im2col index arithmetic
+        // (div/mod per element) that the direct kernels do not pay — the
+        // paper's §3 point about "clock cycles spent issuing these read
+        // instructions"
+        compute_efficiency: 0.82,
+        output_bytes: (p.out_elems() * BYTES_F32) as f64,
+        smem_bytes_per_sm: smem as u32,
+        total_fma: p.fma_ops() as f64, // useful work only; padding burns cycles, not FLOPs
+        // cuDNN API path: descriptor checks, heuristic dispatch and (for
+        // the GEMM-family algorithms) staging kernels — ~8 µs vs the
+        // ~2.7 µs bare kernel launch of the direct kernels
+        launch_overhead_cycles: 12_000.0,
+    }
+}
+
+/// Tile shapes the proxy searches — the igemm variants cuDNN v7 ships.
+pub const TILE_SHAPES: [(usize, usize, usize); 4] =
+    [(128, 128, 8), (64, 128, 8), (64, 64, 8), (32, 64, 8)];
+
+/// cudnnFindBestAlgorithm stand-in: fastest tile shape under the simulator.
+pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
+    TILE_SHAPES
+        .iter()
+        .map(|&(tm, tn, tk)| plan_with_tiles(p, spec, tm, tn, tk))
+        .min_by(|a, b| {
+            simulate(spec, a).seconds.partial_cmp(&simulate(spec, b).seconds).unwrap()
+        })
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::suites::{fig4_suite, fig5_suite};
+    use crate::gpusim::gtx_1080ti;
+
+    #[test]
+    fn simulates_on_both_figure_suites() {
+        let g = gtx_1080ti();
+        for p in fig4_suite().into_iter().chain(fig5_suite()) {
+            let r = simulate(&g, &plan(&p, &g));
+            assert!(r.seconds > 0.0 && r.seconds.is_finite(), "{}", p.label());
+        }
+    }
+
+    #[test]
+    fn k_padding_hurts_single_channel() {
+        // C=1, K=1: GEMM depth 1 vs TK=8 — the padded schedule burns ~8x
+        // the cycles of the useful work; efficiency collapses.
+        let g = gtx_1080ti();
+        let shallow = ConvProblem::single(224, 64, 1);
+        let deep = ConvProblem::multi(512, 14, 64, 3); // depth 4608
+        let r_shallow = simulate(&g, &plan(&shallow, &g));
+        let r_deep = simulate(&g, &plan(&deep, &g));
+        assert!(
+            r_deep.efficiency > 3.0 * r_shallow.efficiency,
+            "deep {} shallow {}",
+            r_deep.efficiency,
+            r_shallow.efficiency
+        );
+    }
+
+    #[test]
+    fn tile_quantization_hurts_small_maps() {
+        // same depth & filters, 7x7 vs 56x56 maps: the small map wastes
+        // most of each N-tile -> much lower efficiency
+        let g = gtx_1080ti();
+        let small = ConvProblem::multi(256, 7, 128, 3);
+        let large = ConvProblem::multi(256, 56, 128, 3);
+        let e_small = simulate(&g, &plan(&small, &g)).efficiency;
+        let e_large = simulate(&g, &plan(&large, &g)).efficiency;
+        assert!(e_large > 1.5 * e_small, "large {} small {}", e_large, e_small);
+    }
+
+    #[test]
+    fn best_tile_beats_or_ties_all_fixed_tiles() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(128, 28, 128, 3);
+        let best = simulate(&g, &plan(&p, &g)).seconds;
+        for &(tm, tn, tk) in &TILE_SHAPES {
+            let t = simulate(&g, &plan_with_tiles(&p, &g, tm, tn, tk)).seconds;
+            assert!(best <= t * 1.0001);
+        }
+    }
+
+    #[test]
+    fn small_map_picks_smaller_tiles() {
+        // the proxy's algorithm search should behave like cudnn's: tiny
+        // outputs favour 32/64-wide tiles
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(512, 7, 512, 3); // N_g = 25
+        let chosen = plan(&p, &g);
+        assert!(
+            chosen.name.contains("32x") || chosen.name.contains("64x64") || chosen.name.contains("[64x"),
+            "{}",
+            chosen.name
+        );
+    }
+
+    #[test]
+    fn scheduled_fma_covers_padded_gemm() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::single(28, 512, 1); // heavy padding case
+        let pl = plan_with_tiles(&p, &g, 128, 128, 8);
+        let scheduled: f64 =
+            pl.rounds.iter().map(|r| r.fma_ops).sum::<f64>() * pl.sms_active as f64;
+        // padded schedule >= 8x the useful work (depth 1 padded to 8)
+        assert!(scheduled >= 7.0 * p.fma_ops() as f64, "{scheduled}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Baseline [1] — Chen et al., "Optimizing Memory Efficiency for
+//! Convolution Kernels on Kepler GPUs" (DAC 2017), as an execution plan.
+//!
+//! The paper builds on [1]'s computation method but fixes two documented
+//! weaknesses, which this plan reproduces:
+//!
+//! * **fixed per-SM assignment**: "[1] fixes the amount of the data
+//!   assigned to each SM, which sometimes is not suitable to the small
+//!   feature map.  ... the performances are negatively affected when
+//!   the feature map size is smaller than 32."  The plan assigns a fixed
+//!   FIXED_STRIP_ROWS-row strip per block; maps smaller than
+//!   strips x SMs leave SMs idle.
+//! * **natural filter segments**: "[1], the filter size is chosen as S
+//!   (S = K x K x 4 bytes)" — 36 B for K=3, 4 B for K=1: non-coalesced
+//!   global accesses (§3.2), unlike our 32/64-B stride-fixed segments.
+
+use crate::conv::{ConvProblem, BYTES_F32};
+use crate::gpusim::memory::segment_efficiency;
+use crate::gpusim::pipeline::combined_efficiency;
+use crate::gpusim::{GpuSpec, KernelPlan, Round};
+
+/// The fixed feature-map strip height [1] assigns per block regardless of
+/// the input size (their tuning for >= 32-px maps).
+pub const FIXED_STRIP_ROWS: usize = 32;
+
+/// Filters applied in parallel — [1] prioritizes parallelism ("higher
+/// parallelism comes first").
+pub const DAC17_M_PRIME: usize = 64;
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Build [1]'s plan for a (single- or multi-channel) problem.
+pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
+    assert!(p.valid());
+    // fixed 32x32 output-tile assignment (y-strips x x-strips), fixed M'
+    // — tuned for >= 32-px maps; everything smaller starves the chip
+    let y_strips = ceil_div(p.wy, FIXED_STRIP_ROWS);
+    let x_strips = ceil_div(p.wx, FIXED_STRIP_ROWS);
+    let m_prime = DAC17_M_PRIME.min(p.m);
+    let groups = ceil_div(p.m, m_prime);
+    let blocks = y_strips * x_strips * groups;
+    // the under-utilization the paper exploits: blocks < SMs on small maps
+    let sms_active = blocks.min(spec.sm_count as usize) as u32;
+
+    // segment = one whole filter: K*K*4 bytes (odd, non-coalesced)
+    let s_bytes = p.k * p.k * BYTES_F32;
+    let segs = p.c; // walk the channel dimension one filter at a time
+    let filter_bytes = (s_bytes * m_prime) as f64;
+    let strip_rows = FIXED_STRIP_ROWS.min(p.wy);
+    let strip_cols = FIXED_STRIP_ROWS.min(p.wx);
+    let map_bytes_per_seg =
+        ((strip_rows + p.k - 1) * (strip_cols + p.k - 1) * BYTES_F32) as f64;
+    let eff = combined_efficiency(&[
+        (filter_bytes, segment_efficiency(s_bytes)),
+        (map_bytes_per_seg, segment_efficiency((strip_cols * BYTES_F32).min(128))),
+    ]);
+    let fma_per_round =
+        (m_prime * p.k * p.k * strip_rows * strip_cols.min(p.ox())) as f64;
+
+    let rounds_per_sm = ceil_div(blocks * segs, sms_active as usize);
+    let rounds: Vec<Round> = (0..rounds_per_sm)
+        .map(|_| Round::with_efficiency(filter_bytes + map_bytes_per_seg, eff, fma_per_round))
+        .collect();
+
+    let smem = 2 * (s_bytes * m_prime
+        + (strip_rows + p.k - 1) * (strip_cols + p.k - 1) * BYTES_F32);
+
+    KernelPlan {
+        name: format!("dac17[strip={} M'={}]", FIXED_STRIP_ROWS, m_prime),
+        rounds,
+        sms_active,
+        threads_per_sm: 1024,
+        compute_efficiency: 0.9,
+        output_bytes: (p.out_elems() * BYTES_F32) as f64,
+        smem_bytes_per_sm: (smem as u32).min(spec.shared_mem_bytes),
+        total_fma: p.fma_ops() as f64,
+        launch_overhead_cycles: 4_000.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{gtx_1080ti, simulate};
+
+    #[test]
+    fn small_maps_underutilize_sms() {
+        // the paper's critique: W < 32 -> one strip; with M = 64 only one
+        // block exists -> 1 of 28 SMs busy
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(256, 14, 64, 3);
+        let pl = plan(&p, &g);
+        assert_eq!(pl.sms_active, 1, "{}", pl.name);
+        let big = ConvProblem::multi(256, 224, 64, 3);
+        assert!(plan(&big, &g).sms_active >= 7);
+    }
+
+    #[test]
+    fn filter_segments_non_coalesced() {
+        // K=3: 36-B segments -> combined efficiency well below ours
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(256, 56, 256, 3);
+        let pl = plan(&p, &g);
+        let eff = pl.rounds[0].eff_override.unwrap();
+        assert!(eff < 0.95, "eff={eff}");
+    }
+
+    #[test]
+    fn simulates_across_map_sizes() {
+        let g = gtx_1080ti();
+        for w in [7, 14, 28, 56, 112, 224] {
+            let p = ConvProblem::multi(128, w, 128, 3);
+            let r = simulate(&g, &plan(&p, &g));
+            assert!(r.seconds.is_finite() && r.seconds > 0.0, "W={w}");
+        }
+    }
+
+    #[test]
+    fn efficiency_collapses_below_32px() {
+        // the Fig.-4/5 motivation: [1]'s efficiency on 14px maps is far
+        // below its 224px efficiency
+        let g = gtx_1080ti();
+        let small = simulate(&g, &plan(&ConvProblem::multi(256, 14, 64, 3), &g));
+        let large = simulate(&g, &plan(&ConvProblem::multi(256, 224, 64, 3), &g));
+        assert!(
+            large.efficiency > 4.0 * small.efficiency,
+            "large={} small={}",
+            large.efficiency,
+            small.efficiency
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! Baseline — FFT convolution [13], the paper's §1 category 2, as an
+//! execution plan (numerics: python/compile/kernels/fft_conv.py).
+//!
+//! Cost model: 2-D real FFTs of every map channel and every filter
+//! channel (zero-padded to the map size — the classic inefficiency for
+//! small K), a complex pointwise multiply-accumulate over channels in
+//! the frequency domain, and inverse FFTs per output map.  FLOP counts
+//! use the standard 2.5 N log2 N per real 1-D FFT of length N.
+//!
+//! For K in {1,3,5} the padded filter transforms dominate — which is
+//! exactly why neither the paper nor cuDNN's heuristics pick FFT in this
+//! regime; the taxonomy bench makes that visible.
+
+use crate::conv::{ConvProblem, BYTES_F32};
+use crate::gpusim::{GpuSpec, KernelPlan, Round};
+
+/// FLOPs of a 2-D real FFT over an H x W grid (row+column passes).
+fn fft2_flops(h: usize, w: usize) -> f64 {
+    let row = 2.5 * w as f64 * (w as f64).log2();
+    let col = 2.5 * h as f64 * (h as f64).log2();
+    h as f64 * row + w as f64 * col
+}
+
+/// Build the FFT-convolution plan.
+pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
+    assert!(p.valid());
+    let (h, w) = (p.wy, p.wx);
+    let spec_elems = h * (w / 2 + 1); // rfft2 output size
+
+    // total work (in FMA-equivalents = FLOPs/2)
+    let fwd_maps = p.c as f64 * fft2_flops(h, w);
+    let fwd_filters = (p.m * p.c) as f64 * fft2_flops(h, w); // zero-padded!
+    let pointwise = (p.m * p.c * spec_elems) as f64 * 8.0; // complex MAC
+    let inverse = p.m as f64 * fft2_flops(h, w);
+    let total_flops = fwd_maps + fwd_filters + pointwise + inverse;
+    let total_fma_cost = total_flops / 2.0;
+
+    // traffic: maps + filters in; spectra spill to HBM between stages
+    // (FFT stages are bandwidth-heavy; assume one spill round-trip)
+    let bytes_in = (p.map_elems() + p.filter_elems()) * BYTES_F32;
+    let spectra = (p.c + p.m * p.c + p.m) * spec_elems * 2 * BYTES_F32;
+    let total_bytes = (bytes_in + 2 * spectra) as f64;
+
+    // express as uniform rounds across all SMs (FFT kernels saturate the
+    // chip; butterflies are strided but libraries pad to avoid the worst)
+    let sms = spec.sm_count as usize;
+    let rounds_n = 64usize;
+    let per_round_bytes = total_bytes / (sms * rounds_n) as f64;
+    let per_round_fma = total_fma_cost / (sms * rounds_n) as f64;
+    let rounds: Vec<Round> =
+        (0..rounds_n).map(|_| Round::with_efficiency(per_round_bytes, 0.85, per_round_fma)).collect();
+
+    KernelPlan {
+        name: "fft-conv".into(),
+        rounds,
+        sms_active: spec.sm_count,
+        threads_per_sm: 1024,
+        compute_efficiency: 0.8, // butterfly shuffles + twiddle loads
+        output_bytes: (p.out_elems() * BYTES_F32) as f64,
+        smem_bytes_per_sm: 32 * 1024,
+        total_fma: p.fma_ops() as f64, // report against direct-conv work
+        launch_overhead_cycles: 12_000.0, // multi-kernel plan (fwd/mul/inv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{gtx_1080ti, simulate};
+    use crate::plans::plan_for;
+
+    #[test]
+    fn simulates_cleanly() {
+        let g = gtx_1080ti();
+        for (c, w, m, k) in [(64, 56, 64, 3), (256, 14, 256, 1), (16, 112, 16, 5)] {
+            let p = ConvProblem::multi(c, w, m, k);
+            let r = simulate(&g, &plan(&p, &g));
+            assert!(r.seconds.is_finite() && r.seconds > 0.0, "{}", p.label());
+        }
+    }
+
+    #[test]
+    fn loses_badly_for_small_k() {
+        // the padded filter transforms make FFT hopeless at K=3 on CNN
+        // layers — the reason the paper's taxonomy dismisses category 2
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(128, 28, 128, 3);
+        let t_fft = simulate(&g, &plan(&p, &g)).seconds;
+        let t_ours = simulate(&g, &plan_for(&p, &g)).seconds;
+        assert!(t_fft > 3.0 * t_ours, "fft {} vs ours {}", t_fft, t_ours);
+    }
+
+    #[test]
+    fn gap_narrows_with_larger_k() {
+        // FFT cost is K-independent; direct cost grows with K^2 — the
+        // ratio must move toward FFT as K grows
+        let g = gtx_1080ti();
+        let gap = |k: usize| {
+            let p = ConvProblem::multi(64, 56, 64, k);
+            simulate(&g, &plan(&p, &g)).seconds / simulate(&g, &plan_for(&p, &g)).seconds
+        };
+        assert!(gap(5) < gap(3), "K=5 gap {} vs K=3 gap {}", gap(5), gap(3));
+    }
+}

@@ -1,0 +1,17 @@
+//! Comparison baselines, each as a `KernelPlan` under the same simulator
+//! as our kernels (like-for-like, the paper's own framing):
+//!
+//! * `cudnn_proxy` — Implicit GEMM [12], the Figs. 4/5 comparison target;
+//! * `dac17` — Chen et al. [1]: fixed per-SM assignment + natural filter
+//!   segments (the §4 "4x at K=3" comparison);
+//! * `tan128` — Tan et al. [16]: 128-B segments, small M' (the §3.2
+//!   trade-off discussion);
+//! * `winograd` — F(2x2,3x3) [8] and `fft_conv` — FFT [13]: the §1
+//!   taxonomy's categories 3 and 2, so all four convolution families are
+//!   executable (numerics in python/compile/kernels/, timing here).
+
+pub mod cudnn_proxy;
+pub mod dac17;
+pub mod fft_conv;
+pub mod tan128;
+pub mod winograd;

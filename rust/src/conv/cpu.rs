@@ -1,0 +1,127 @@
+//! Direct CPU convolution — the rust-side numeric oracle.
+//!
+//! Used by integration tests and examples to cross-check what comes back
+//! from the PJRT executables (whose numerics were produced by the Pallas
+//! kernels).  Plain nested loops, f32 accumulation in f64 for stability.
+//!
+//! Layouts match the artifacts: image row-major (C, Wy, Wx), filters
+//! (M, C, K, K), output (M, Oy, Ox).
+
+use super::problem::ConvProblem;
+
+/// Multi-channel direct convolution (eq. 1). `image.len() == C*Wy*Wx`,
+/// `filters.len() == M*C*K*K`; returns `M*Oy*Ox` values.
+pub fn conv2d_multi_cpu(p: &ConvProblem, image: &[f32], filters: &[f32]) -> Vec<f32> {
+    assert_eq!(image.len(), p.map_elems(), "image size");
+    assert_eq!(filters.len(), p.filter_elems(), "filter size");
+    let (c, wy, wx, m, k) = (p.c, p.wy, p.wx, p.m, p.k);
+    let (oy, ox) = (p.oy(), p.ox());
+    let mut out = vec![0f32; m * oy * ox];
+    for fm in 0..m {
+        for y in 0..oy {
+            for x in 0..ox {
+                let mut acc = 0f64;
+                for ch in 0..c {
+                    for i in 0..k {
+                        let img_row = &image[ch * wy * wx + (y + i) * wx + x..];
+                        let flt_row = &filters[fm * c * k * k + ch * k * k + i * k..];
+                        for j in 0..k {
+                            acc += img_row[j] as f64 * flt_row[j] as f64;
+                        }
+                    }
+                }
+                out[fm * oy * ox + y * ox + x] = acc as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Single-channel direct convolution (eq. 2): image (Wy, Wx), filters (M, K, K).
+pub fn conv2d_single_cpu(p: &ConvProblem, image: &[f32], filters: &[f32]) -> Vec<f32> {
+    assert_eq!(p.c, 1, "single-channel problem expected");
+    conv2d_multi_cpu(p, image, filters)
+}
+
+/// Max |a-b| over two equal-length slices — the allclose helper the
+/// integration tests use against PJRT outputs.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_filter_single() {
+        // K=1, single filter of value 1.0 => output == image
+        let p = ConvProblem::single(4, 1, 1);
+        let image: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let out = conv2d_single_cpu(&p, &image, &[1.0]);
+        assert_eq!(out, image);
+    }
+
+    #[test]
+    fn corner_tap_orientation() {
+        // Tap at (0,0) selects the top-left window (cross-correlation, no
+        // filter flip) — pins the same orientation the python oracle tests.
+        let p = ConvProblem::single(3, 1, 2);
+        let image: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let filt = [1.0, 0.0, 0.0, 0.0];
+        let out = conv2d_single_cpu(&p, &image, &filt);
+        assert_eq!(out, vec![0.0, 1.0, 3.0, 4.0]);
+        let filt2 = [0.0, 0.0, 0.0, 1.0]; // tap at (1,1)
+        let out2 = conv2d_single_cpu(&p, &image, &filt2);
+        assert_eq!(out2, vec![4.0, 5.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn channel_summation() {
+        // C channels of constant 2.0 with all-ones 1x1 filters => 2*C
+        let c = 5;
+        let p = ConvProblem::multi(c, 3, 1, 1);
+        let image = vec![2.0f32; c * 9];
+        let filters = vec![1.0f32; c];
+        let out = conv2d_multi_cpu(&p, &image, &filters);
+        assert!(out.iter().all(|&v| v == 2.0 * c as f32));
+    }
+
+    #[test]
+    fn box_filter_known_sum() {
+        let p = ConvProblem::single(3, 1, 3);
+        let image: Vec<f32> = (1..=9).map(|i| i as f32).collect();
+        let filters = vec![1.0f32; 9];
+        let out = conv2d_single_cpu(&p, &image, &filters);
+        assert_eq!(out, vec![45.0]);
+    }
+
+    #[test]
+    fn linearity_under_scaling() {
+        let p = ConvProblem::multi(3, 8, 4, 3);
+        let mut rng = Rng::new(5);
+        let image = rng.normal_vec(p.map_elems());
+        let filters = rng.normal_vec(p.filter_elems());
+        let out1 = conv2d_multi_cpu(&p, &image, &filters);
+        let scaled: Vec<f32> = image.iter().map(|x| 2.0 * x).collect();
+        let out2 = conv2d_multi_cpu(&p, &scaled, &filters);
+        for (a, b) in out1.iter().zip(&out2) {
+            assert!((2.0 * a - b).abs() < 1e-4, "{a} {b}");
+        }
+    }
+
+    #[test]
+    fn max_abs_diff_basics() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "image size")]
+    fn wrong_image_size_panics() {
+        let p = ConvProblem::single(4, 1, 1);
+        conv2d_single_cpu(&p, &[0.0; 3], &[1.0]);
+    }
+}

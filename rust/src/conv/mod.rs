@@ -1,0 +1,10 @@
+//! Convolution problem domain: shapes (`problem`), the paper's workload
+//! suites (`suites`), and a direct CPU implementation used as the
+//! rust-side numeric oracle (`cpu`).
+
+pub mod cpu;
+pub mod problem;
+pub mod suites;
+
+pub use cpu::{conv2d_multi_cpu, conv2d_single_cpu, max_abs_diff};
+pub use problem::{ConvProblem, BYTES_F32};

@@ -1,0 +1,153 @@
+//! Convolution problem definition — the paper's eq. (1)/(2) operands.
+//!
+//! All sizes follow the paper's notation: feature map `Wy x Wx` with `C`
+//! channels, `M` filters of size `K x K x C`, valid cross-correlation,
+//! stride 1, f32 (the paper's "single precision data").
+
+/// One convolution layer instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ConvProblem {
+    /// input channels (C = 1 means single-channel, eq. (2))
+    pub c: usize,
+    /// feature-map height W_y
+    pub wy: usize,
+    /// feature-map width W_x
+    pub wx: usize,
+    /// number of filters M
+    pub m: usize,
+    /// filter size K (square filters, as in the paper)
+    pub k: usize,
+}
+
+pub const BYTES_F32: usize = 4;
+
+impl ConvProblem {
+    pub fn single(w: usize, m: usize, k: usize) -> ConvProblem {
+        ConvProblem { c: 1, wy: w, wx: w, m, k }
+    }
+
+    pub fn multi(c: usize, w: usize, m: usize, k: usize) -> ConvProblem {
+        ConvProblem { c, wy: w, wx: w, m, k }
+    }
+
+    pub fn is_single_channel(&self) -> bool {
+        self.c == 1
+    }
+
+    /// Output height Oy = Wy - K + 1.
+    pub fn oy(&self) -> usize {
+        self.wy - self.k + 1
+    }
+
+    /// Output width Ox = Wx - K + 1.
+    pub fn ox(&self) -> usize {
+        self.wx - self.k + 1
+    }
+
+    pub fn valid(&self) -> bool {
+        self.c >= 1 && self.m >= 1 && self.k >= 1 && self.k <= self.wy && self.k <= self.wx
+    }
+
+    /// Elements in the input feature map set.
+    pub fn map_elems(&self) -> usize {
+        self.c * self.wy * self.wx
+    }
+
+    /// Elements in the filter set.
+    pub fn filter_elems(&self) -> usize {
+        self.m * self.c * self.k * self.k
+    }
+
+    /// Elements in the output feature map set.
+    pub fn out_elems(&self) -> usize {
+        self.m * self.oy() * self.ox()
+    }
+
+    /// D_input of eq. (3): bytes of map + filters.
+    pub fn input_bytes(&self) -> usize {
+        (self.map_elems() + self.filter_elems()) * BYTES_F32
+    }
+
+    /// FMA operations to compute the full output (one FMA = one
+    /// multiply-accumulate): M * Oy * Ox * C * K * K.
+    pub fn fma_ops(&self) -> u64 {
+        self.out_elems() as u64 * (self.c * self.k * self.k) as u64
+    }
+
+    /// FLOPs (2 per FMA) — for GFLOP/s reporting.
+    pub fn flops(&self) -> u64 {
+        2 * self.fma_ops()
+    }
+
+    /// Arithmetic intensity: FMAs per byte that *must* move from DRAM
+    /// (compulsory traffic: inputs once + output once).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let bytes = (self.map_elems() + self.filter_elems() + self.out_elems()) * BYTES_F32;
+        self.fma_ops() as f64 / bytes as f64
+    }
+
+    pub fn label(&self) -> String {
+        if self.is_single_channel() {
+            format!("single W={} M={} K={}", self.wy, self.m, self.k)
+        } else {
+            format!("multi C={} W={} M={} K={}", self.c, self.wy, self.m, self.k)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_shape_valid_conv() {
+        let p = ConvProblem::single(28, 64, 5);
+        assert_eq!(p.oy(), 24);
+        assert_eq!(p.ox(), 24);
+        assert_eq!(p.out_elems(), 64 * 24 * 24);
+    }
+
+    #[test]
+    fn k1_preserves_map_size() {
+        let p = ConvProblem::multi(64, 14, 128, 1);
+        assert_eq!(p.oy(), 14);
+        assert_eq!(p.ox(), 14);
+    }
+
+    #[test]
+    fn fma_count_matches_paper_formula() {
+        // eq.(1): every output element needs C*K*K FMAs
+        let p = ConvProblem::multi(4, 10, 8, 3);
+        assert_eq!(p.fma_ops(), (8 * 8 * 8) as u64 * (4 * 3 * 3) as u64);
+        assert_eq!(p.flops(), 2 * p.fma_ops());
+    }
+
+    #[test]
+    fn input_bytes_eq3() {
+        // eq.(3): (K*K*M + Wx*Wy) * 4 for single channel
+        let p = ConvProblem::single(32, 16, 3);
+        assert_eq!(p.input_bytes(), (3 * 3 * 16 + 32 * 32) * 4);
+    }
+
+    #[test]
+    fn validity() {
+        assert!(ConvProblem::single(8, 1, 8).valid());
+        assert!(!ConvProblem::single(8, 1, 9).valid());
+        assert!(!ConvProblem { c: 0, wy: 8, wx: 8, m: 1, k: 1 }.valid());
+    }
+
+    #[test]
+    fn multi_channel_intensity_higher_than_single() {
+        // the paper's premise: multi-channel has enough work to prefetch-hide,
+        // single-channel on small maps does not.
+        let s = ConvProblem::single(28, 64, 3);
+        let m = ConvProblem::multi(256, 28, 64, 3);
+        assert!(m.arithmetic_intensity() > s.arithmetic_intensity());
+    }
+
+    #[test]
+    fn labels_distinguish_kinds() {
+        assert!(ConvProblem::single(28, 4, 3).label().starts_with("single"));
+        assert!(ConvProblem::multi(8, 28, 4, 3).label().starts_with("multi"));
+    }
+}

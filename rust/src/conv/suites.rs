@@ -1,0 +1,184 @@
+//! Workload suites — the convolutions the paper evaluates.
+//!
+//! §4: "performances were evaluated using many convolutions which are
+//! commonly used in popular CNN models [AlexNet][ResNet][VGG][GoogLeNet]".
+//! Fig. 4 sweeps single-channel maps 28 -> 1K with M 512 -> 32 and
+//! K in {1,3,5}; Fig. 5 sweeps multi-channel maps 7 -> 512 with C
+//! 64 -> 512.  The CNN-model suites give the realistic layer mixes the
+//! examples and the e2e bench serve.
+
+use super::problem::ConvProblem;
+
+/// The paper's filter sizes: "The filter size is 1, 3 or 5".
+pub const PAPER_KS: [usize; 3] = [1, 3, 5];
+
+/// Fig. 4 sweep points: (map size, M), channels C = 1.
+/// "we changed the sample size of the feature maps from 28 to 1K and the
+/// size of the corresponding channels from 512 to 32" — inverse pairing,
+/// as in CNN first layers.
+pub const FIG4_POINTS: [(usize, usize); 6] =
+    [(28, 512), (56, 256), (112, 128), (224, 64), (512, 32), (1024, 32)];
+
+/// Fig. 5 sweep points: (map size, C). M = C (the square layers CNN
+/// bodies use). "sample size ... from 7 to 512, channels from 64 to 512".
+pub const FIG5_POINTS: [(usize, usize); 7] =
+    [(7, 512), (14, 256), (28, 128), (56, 128), (112, 64), (224, 64), (512, 64)];
+
+/// Every (map, M, K) case of Fig. 4.
+pub fn fig4_suite() -> Vec<ConvProblem> {
+    let mut out = vec![];
+    for &k in &PAPER_KS {
+        for &(w, m) in &FIG4_POINTS {
+            out.push(ConvProblem::single(w, m, k));
+        }
+    }
+    out
+}
+
+/// Every (map, C, K) case of Fig. 5.
+pub fn fig5_suite() -> Vec<ConvProblem> {
+    let mut out = vec![];
+    for &k in &PAPER_KS {
+        for &(w, c) in &FIG5_POINTS {
+            out.push(ConvProblem::multi(c, w, c, k));
+        }
+    }
+    out
+}
+
+/// AlexNet [15] stride-1 conv layers (conv2 uses K=5 on 27x27 after pool;
+/// conv3-5 are K=3 on 13x13 maps — the "smaller than 32" regime).
+pub fn alexnet() -> Vec<ConvProblem> {
+    vec![
+        ConvProblem::multi(96, 27, 256, 5),
+        ConvProblem::multi(256, 13, 384, 3),
+        ConvProblem::multi(384, 13, 384, 3),
+        ConvProblem::multi(384, 13, 256, 3),
+    ]
+}
+
+/// VGG-16 [6] conv layers (all K=3, maps 224 -> 14).
+pub fn vgg16() -> Vec<ConvProblem> {
+    vec![
+        ConvProblem::multi(3, 224, 64, 3),
+        ConvProblem::multi(64, 224, 64, 3),
+        ConvProblem::multi(64, 112, 128, 3),
+        ConvProblem::multi(128, 112, 128, 3),
+        ConvProblem::multi(128, 56, 256, 3),
+        ConvProblem::multi(256, 56, 256, 3),
+        ConvProblem::multi(256, 28, 512, 3),
+        ConvProblem::multi(512, 28, 512, 3),
+        ConvProblem::multi(512, 14, 512, 3),
+    ]
+}
+
+/// ResNet-18 [9] body layers (K=3 blocks + K=1 projections, maps 56 -> 7).
+pub fn resnet18() -> Vec<ConvProblem> {
+    vec![
+        ConvProblem::multi(64, 56, 64, 3),
+        ConvProblem::multi(64, 28, 128, 3),
+        ConvProblem::multi(64, 28, 128, 1),
+        ConvProblem::multi(128, 28, 128, 3),
+        ConvProblem::multi(128, 14, 256, 3),
+        ConvProblem::multi(128, 14, 256, 1),
+        ConvProblem::multi(256, 14, 256, 3),
+        ConvProblem::multi(256, 7, 512, 3),
+        ConvProblem::multi(256, 7, 512, 1),
+        ConvProblem::multi(512, 7, 512, 3),
+    ]
+}
+
+/// GoogLeNet [11] inception(3a) branches on the 28x28 map (K in {1,3,5}).
+pub fn googlenet_inception3a() -> Vec<ConvProblem> {
+    vec![
+        ConvProblem::multi(192, 28, 64, 1),
+        ConvProblem::multi(192, 28, 96, 1),
+        ConvProblem::multi(96, 28, 128, 3),
+        ConvProblem::multi(192, 28, 16, 1),
+        ConvProblem::multi(16, 28, 32, 5),
+        ConvProblem::multi(192, 28, 32, 1),
+    ]
+}
+
+/// All CNN-model layers, deduplicated — "many convolutions commonly used
+/// in popular CNN models".
+pub fn all_cnn_layers() -> Vec<ConvProblem> {
+    let mut out: Vec<ConvProblem> = vec![];
+    for p in alexnet().into_iter().chain(vgg16()).chain(resnet18()).chain(googlenet_inception3a()) {
+        if !out.contains(&p) {
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// The fraction of layers on maps < 32 — the paper's §1 claim that "more
+/// than half of the convolution layers are used for the calculation of
+/// the images smaller than 32 (such as 28, 14, 7)".
+pub fn small_map_fraction(layers: &[ConvProblem]) -> f64 {
+    let small = layers.iter().filter(|p| p.wy < 32).count();
+    small as f64 / layers.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_covers_paper_ranges() {
+        let suite = fig4_suite();
+        assert_eq!(suite.len(), 18);
+        assert!(suite.iter().all(|p| p.is_single_channel() && p.valid()));
+        assert!(suite.iter().any(|p| p.wy == 28 && p.m == 512));
+        assert!(suite.iter().any(|p| p.wy == 1024));
+        let ks: std::collections::HashSet<usize> = suite.iter().map(|p| p.k).collect();
+        assert_eq!(ks, [1usize, 3, 5].into_iter().collect());
+    }
+
+    #[test]
+    fn fig5_covers_paper_ranges() {
+        let suite = fig5_suite();
+        assert_eq!(suite.len(), 21);
+        assert!(suite.iter().all(|p| !p.is_single_channel() && p.valid()));
+        assert!(suite.iter().any(|p| p.wy == 7 && p.c == 512));
+        assert!(suite.iter().any(|p| p.wy == 512));
+    }
+
+    #[test]
+    fn cnn_suites_valid() {
+        for suite in [alexnet(), vgg16(), resnet18(), googlenet_inception3a()] {
+            assert!(!suite.is_empty());
+            assert!(suite.iter().all(|p| p.valid()), "invalid problem in suite");
+        }
+    }
+
+    #[test]
+    fn paper_small_map_claim_holds_for_modern_models() {
+        // §1: "more than half of the convolution layers are used for the
+        // calculation of the images smaller than 32" — true for the
+        // AlexNet/ResNet mixes that motivate the paper.
+        assert!(small_map_fraction(&alexnet()) > 0.5);
+        assert!(small_map_fraction(&resnet18()) > 0.5);
+    }
+
+    #[test]
+    fn all_cnn_layers_dedups() {
+        let all = all_cnn_layers();
+        let total =
+            alexnet().len() + vgg16().len() + resnet18().len() + googlenet_inception3a().len();
+        assert!(all.len() <= total);
+        for (i, a) in all.iter().enumerate() {
+            for b in &all[i + 1..] {
+                assert_ne!(a, b, "duplicate problem survived dedup");
+            }
+        }
+    }
+
+    #[test]
+    fn fig5_k5_cases_remain_valid_on_smallest_map() {
+        // the 7x7 map with K=5 still yields a 3x3 output
+        let p = ConvProblem::multi(512, 7, 512, 5);
+        assert!(p.valid());
+        assert_eq!(p.oy(), 3);
+    }
+}

@@ -1,0 +1,153 @@
+//! Dynamic batcher — vLLM-style request grouping for the CNN serve path.
+//!
+//! CNN requests are held briefly and grouped so one PJRT execution serves
+//! up to `max_batch` of them (the papernet_b8 artifact); a batch closes
+//! when full or when its oldest request has waited `max_wait`.  Conv
+//! requests are never batched (each problem shape is its own artifact) —
+//! they bypass the batcher.
+//!
+//! The core is a pure state machine (`push`/`poll`) so the policy is unit
+//! testable without threads; `server.rs` drives it from the queue thread.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulates items of type T into batches.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatchConfig,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatchConfig) -> Batcher<T> {
+        Batcher { cfg, pending: Vec::new(), oldest: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Add an item; returns a full batch if this item closed it.
+    pub fn push(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.cfg.max_batch {
+            return self.take();
+        }
+        None
+    }
+
+    /// Check the deadline; returns the batch if the oldest item expired.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<T>> {
+        match self.oldest {
+            Some(t0) if now.duration_since(t0) >= self.cfg.max_wait && !self.pending.is_empty() => {
+                self.take()
+            }
+            _ => None,
+        }
+    }
+
+    /// Time until the current batch's deadline (drives recv_timeout).
+    pub fn deadline_in(&self, now: Instant) -> Option<Duration> {
+        self.oldest.map(|t0| {
+            let elapsed = now.duration_since(t0);
+            self.cfg.max_wait.saturating_sub(elapsed)
+        })
+    }
+
+    /// Flush whatever is pending (shutdown path).
+    pub fn take(&mut self) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.oldest = None;
+            return None;
+        }
+        self.oldest = None;
+        Some(std::mem::take(&mut self.pending))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, wait_ms: u64) -> BatchConfig {
+        BatchConfig { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut b = Batcher::new(cfg(3, 1000));
+        let t = Instant::now();
+        assert!(b.push(1, t).is_none());
+        assert!(b.push(2, t).is_none());
+        let batch = b.push(3, t).expect("batch closed at max");
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let mut b = Batcher::new(cfg(8, 5));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        b.push(2, t0);
+        assert!(b.poll(t0).is_none(), "deadline not reached");
+        let later = t0 + Duration::from_millis(6);
+        assert_eq!(b.poll(later).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn deadline_counts_from_oldest_item() {
+        let mut b = Batcher::new(cfg(8, 10));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        b.push(2, t0 + Duration::from_millis(8)); // newer item must not reset
+        assert!(b.poll(t0 + Duration::from_millis(10)).is_some());
+    }
+
+    #[test]
+    fn deadline_in_shrinks() {
+        let mut b = Batcher::new(cfg(8, 10));
+        let t0 = Instant::now();
+        assert!(b.deadline_in(t0).is_none());
+        b.push(1, t0);
+        let d = b.deadline_in(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn take_flushes_and_resets() {
+        let mut b = Batcher::new(cfg(8, 10));
+        assert!(b.take().is_none());
+        b.push(7, Instant::now());
+        assert_eq!(b.take().unwrap(), vec![7]);
+        assert!(b.take().is_none());
+        assert!(b.deadline_in(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn empty_poll_never_fires() {
+        let mut b: Batcher<i32> = Batcher::new(cfg(2, 0));
+        assert!(b.poll(Instant::now() + Duration::from_secs(1)).is_none());
+    }
+}

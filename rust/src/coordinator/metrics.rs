@@ -1,0 +1,178 @@
+//! Serving metrics: counters + a log-bucketed latency histogram,
+//! exportable as JSON (util::json — serde is not vendored).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Log-scale histogram for latencies in seconds (1 µs .. ~67 s).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// bucket i counts samples in [1µs * 2^i, 1µs * 2^(i+1))
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+const BASE: f64 = 1e-6;
+const NBUCKETS: usize = 26;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: vec![0; NBUCKETS], count: 0, sum: 0.0, max: 0.0 }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, secs: f64) {
+        let idx = if secs <= BASE {
+            0
+        } else {
+            ((secs / BASE).log2() as usize).min(NBUCKETS - 1)
+        };
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += secs;
+        self.max = self.max.max(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Upper edge of the bucket containing the q-quantile (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return BASE * 2f64.powi(i as i32 + 1);
+            }
+        }
+        self.max
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("count", (self.count as usize).into())
+            .set("mean_s", self.mean().into())
+            .set("p50_s", self.quantile(0.5).into())
+            .set("p99_s", self.quantile(0.99).into())
+            .set("max_s", self.max.into())
+    }
+}
+
+/// All coordinator metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub batches_executed: u64,
+    pub batched_requests: u64,
+    pub latency: Histogram,
+    pub per_artifact: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn record_response(&mut self, artifact: &str, latency_secs: f64) {
+        self.responses += 1;
+        self.latency.record(latency_secs);
+        *self.per_artifact.entry(artifact.to_string()).or_insert(0) += 1;
+    }
+
+    /// Mean requests per executed batch — the batching win.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches_executed == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches_executed as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut per = Json::obj();
+        for (k, v) in &self.per_artifact {
+            per = per.set(k, (*v as usize).into());
+        }
+        Json::obj()
+            .set("requests", (self.requests as usize).into())
+            .set("responses", (self.responses as usize).into())
+            .set("errors", (self.errors as usize).into())
+            .set("batches", (self.batches_executed as usize).into())
+            .set("mean_batch_size", self.mean_batch_size().into())
+            .set("latency", self.latency.to_json())
+            .set("per_artifact", per)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_counts() {
+        let mut h = Histogram::default();
+        for _ in 0..10 {
+            h.record(1e-3);
+        }
+        assert_eq!(h.count(), 10);
+        assert!((h.mean() - 1e-3).abs() < 1e-9);
+        assert_eq!(h.max(), 1e-3);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5);
+        }
+        let (p50, p99) = (h.quantile(0.5), h.quantile(0.99));
+        assert!(p50 <= p99);
+        assert!(p50 >= 4e-3 && p50 <= 1.3e-2, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_extremes_clamp() {
+        let mut h = Histogram::default();
+        h.record(0.0); // below base
+        h.record(1e9); // above top bucket
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn metrics_batch_accounting() {
+        let mut m = Metrics::default();
+        m.batches_executed = 4;
+        m.batched_requests = 14;
+        assert!((m.mean_batch_size() - 3.5).abs() < 1e-12);
+        m.record_response("papernet_b8", 2e-3);
+        assert_eq!(m.per_artifact["papernet_b8"], 1);
+        let json = m.to_json().render();
+        assert!(json.contains("\"mean_batch_size\":3.5"), "{json}");
+    }
+
+    #[test]
+    fn empty_metrics_render() {
+        let m = Metrics::default();
+        assert!((m.mean_batch_size() - 0.0).abs() < 1e-12);
+        assert!(m.to_json().render().contains("\"requests\":0"));
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 coordinator — the serving layer: `request` types, `router`
+//! (manifest -> artifact dispatch + §3 plan advice), `batcher` (dynamic
+//! batching policy), `server` (queue + executor threads over the PJRT
+//! runtime), `metrics`.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod workload;
+
+pub use batcher::{BatchConfig, Batcher};
+pub use metrics::Metrics;
+pub use request::{Payload, Request, Response};
+pub use router::{plan_advice, Router};
+pub use server::Coordinator;
+pub use workload::{Arrivals, Mix, Workload};

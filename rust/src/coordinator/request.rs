@@ -1,0 +1,62 @@
+//! Request/response types of the serving API.
+
+use std::time::Instant;
+
+use crate::conv::ConvProblem;
+use crate::runtime::Tensor;
+
+/// What a client asks for.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// one convolution: routed to the conv artifact matching `problem`
+    Conv { problem: ConvProblem, image: Tensor, filters: Tensor },
+    /// one PaperNet inference: image (1, 28, 28); dynamically batched
+    Cnn { image: Tensor },
+}
+
+impl Payload {
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            Payload::Conv { .. } => "conv",
+            Payload::Cnn { .. } => "cnn",
+        }
+    }
+}
+
+/// An in-flight request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub payload: Payload,
+    pub submitted: Instant,
+}
+
+/// The serve-path answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub output: Tensor,
+    /// end-to-end latency (submit -> response), seconds
+    pub latency_secs: f64,
+    /// artifact that served this request
+    pub artifact: String,
+    /// how many requests shared the executed batch
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_kinds() {
+        let conv = Payload::Conv {
+            problem: ConvProblem::single(8, 1, 1),
+            image: Tensor::zeros(vec![8, 8]),
+            filters: Tensor::zeros(vec![1, 1, 1]),
+        };
+        assert_eq!(conv.kind_str(), "conv");
+        let cnn = Payload::Cnn { image: Tensor::zeros(vec![1, 28, 28]) };
+        assert_eq!(cnn.kind_str(), "cnn");
+    }
+}

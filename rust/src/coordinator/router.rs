@@ -1,0 +1,151 @@
+//! Routing: map a request to the artifact that serves it, and attach the
+//! paper's plan advice (which kernel/division the analytic model picks —
+//! the same decision §3 makes per problem).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::analytic;
+use crate::conv::ConvProblem;
+use crate::gpusim::GpuSpec;
+use crate::runtime::{Artifact, ArtifactKind};
+
+/// Static routing table built from the manifest at startup.
+#[derive(Debug, Default)]
+pub struct Router {
+    conv_by_problem: HashMap<ConvProblem, String>,
+    cnn_by_batch: Vec<(usize, String)>, // sorted by batch ascending
+}
+
+impl Router {
+    pub fn from_artifacts(artifacts: &[Artifact]) -> Router {
+        let mut r = Router::default();
+        for a in artifacts {
+            match a.kind {
+                ArtifactKind::ConvSingle | ArtifactKind::ConvMulti => {
+                    if let Ok(p) = a.problem() {
+                        r.conv_by_problem.insert(p, a.name.clone());
+                    }
+                }
+                // baseline-numerics artifacts are reachable by name, not routed
+                ArtifactKind::ConvIm2col
+                | ArtifactKind::ConvWinograd
+                | ArtifactKind::ConvFft => {}
+                ArtifactKind::Cnn => {
+                    if let Ok(b) = a.batch() {
+                        r.cnn_by_batch.push((b, a.name.clone()));
+                    }
+                }
+            }
+        }
+        r.cnn_by_batch.sort();
+        r
+    }
+
+    /// The artifact serving a conv problem (exact shape match).
+    pub fn route_conv(&self, p: &ConvProblem) -> Result<&str> {
+        self.conv_by_problem
+            .get(p)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("no artifact for problem {}", p.label()))
+    }
+
+    /// Smallest CNN artifact batch >= n (or the largest available).
+    pub fn route_cnn(&self, n: usize) -> Result<(usize, &str)> {
+        if self.cnn_by_batch.is_empty() {
+            return Err(anyhow!("no CNN artifacts in manifest"));
+        }
+        for (b, name) in &self.cnn_by_batch {
+            if *b >= n {
+                return Ok((*b, name));
+            }
+        }
+        let (b, name) = self.cnn_by_batch.last().unwrap();
+        Ok((*b, name))
+    }
+
+    /// Largest CNN batch available (the batcher's target).
+    pub fn max_cnn_batch(&self) -> usize {
+        self.cnn_by_batch.last().map(|(b, _)| *b).unwrap_or(1)
+    }
+
+    pub fn conv_problems(&self) -> Vec<ConvProblem> {
+        let mut v: Vec<ConvProblem> = self.conv_by_problem.keys().cloned().collect();
+        v.sort_by_key(|p| (p.c, p.wy, p.wx, p.m, p.k));
+        v
+    }
+}
+
+/// The §3 dispatch note attached to responses/logs: which of the paper's
+/// kernels would run this problem on the real GPU, with its parameters.
+pub fn plan_advice(p: &ConvProblem, spec: &GpuSpec) -> String {
+    if p.is_single_channel() {
+        let c = analytic::choose_single(p, spec);
+        format!(
+            "single-channel {:?} P={} Q={} ({})",
+            c.method,
+            c.p,
+            c.q,
+            if c.uses_prefetch { "prefetch" } else { "V_s volume" }
+        )
+    } else {
+        let c = analytic::choose_stride_fixed(p, spec, 32);
+        format!("stride-fixed S={} M'={} W'x={}", c.s_bytes, c.m_prime, c.wx_prime)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::gtx_1080ti;
+    use crate::runtime::manifest::parse_line;
+    use std::path::Path;
+
+    fn router() -> Router {
+        let dir = Path::new("/tmp");
+        let lines = [
+            "name=s1 file=a.hlo.txt kind=conv_single wy=32 wx=32 m=16 k=3",
+            "name=m1 file=b.hlo.txt kind=conv_multi c=8 wy=14 wx=14 m=16 k=3",
+            "name=i1 file=c.hlo.txt kind=conv_im2col c=8 wy=14 wx=14 m=16 k=3",
+            "name=p1 file=d.hlo.txt kind=cnn batch=1",
+            "name=p8 file=e.hlo.txt kind=cnn batch=8",
+        ];
+        Router::from_artifacts(
+            &lines.iter().map(|l| parse_line(dir, l).unwrap()).collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn conv_routing_exact_match() {
+        let r = router();
+        assert_eq!(r.route_conv(&ConvProblem::single(32, 16, 3)).unwrap(), "s1");
+        assert_eq!(r.route_conv(&ConvProblem::multi(8, 14, 16, 3)).unwrap(), "m1");
+        assert!(r.route_conv(&ConvProblem::single(64, 16, 3)).is_err());
+    }
+
+    #[test]
+    fn im2col_not_routed() {
+        // baselines are reachable by explicit name only
+        let r = router();
+        // the multi artifact wins the shared shape
+        assert_eq!(r.route_conv(&ConvProblem::multi(8, 14, 16, 3)).unwrap(), "m1");
+    }
+
+    #[test]
+    fn cnn_routing_picks_smallest_covering_batch() {
+        let r = router();
+        assert_eq!(r.route_cnn(1).unwrap(), (1, "p1"));
+        assert_eq!(r.route_cnn(2).unwrap(), (8, "p8"));
+        assert_eq!(r.route_cnn(8).unwrap(), (8, "p8"));
+        assert_eq!(r.route_cnn(20).unwrap(), (8, "p8")); // clamp to largest
+        assert_eq!(r.max_cnn_batch(), 8);
+    }
+
+    #[test]
+    fn plan_advice_mentions_the_right_kernel() {
+        let g = gtx_1080ti();
+        assert!(plan_advice(&ConvProblem::single(224, 64, 3), &g).contains("single-channel"));
+        assert!(plan_advice(&ConvProblem::multi(64, 56, 64, 3), &g).contains("stride-fixed"));
+    }
+}

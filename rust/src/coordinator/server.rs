@@ -1,0 +1,327 @@
+//! The serving coordinator: queue thread (routing + dynamic batching) +
+//! executor thread (owns the PJRT runtime).  Python never runs here.
+//!
+//!   client -> submit() -> [queue thread] -> Work -> [executor thread]
+//!                               |                        |
+//!                          Batcher<CnnItem>         Runtime (PJRT)
+//!
+//! tokio is not in the offline vendor set; std::thread + mpsc channels
+//! carry the same structure (one queue task, one executor task, oneshot
+//! response channels).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{BatchConfig, Batcher};
+use super::metrics::Metrics;
+use super::request::{Payload, Request, Response};
+use super::router::Router;
+use crate::runtime::{Runtime, Tensor};
+
+type Respond = Sender<Result<Response, String>>;
+
+struct CnnItem {
+    req: Request,
+    respond: Respond,
+}
+
+enum Work {
+    Single(Request, Respond),
+    CnnBatch(Vec<CnnItem>),
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: Option<Sender<(Request, Respond)>>,
+    queue_thread: Option<JoinHandle<()>>,
+    exec_thread: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+impl Coordinator {
+    /// Start the queue + executor threads over an artifact directory.
+    pub fn start(artifact_dir: &Path, batch_cfg: BatchConfig) -> Result<Coordinator> {
+        // the manifest parses without a PJRT client; the client itself is
+        // !Send (Rc internals), so the Runtime is constructed *inside*
+        // the executor thread and signals readiness back
+        let artifacts = crate::runtime::manifest::load_manifest(artifact_dir)?;
+        let router = Router::from_artifacts(&artifacts);
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+
+        let (tx, rx) = channel::<(Request, Respond)>();
+        let (work_tx, work_rx) = channel::<Work>();
+
+        let queue_metrics = metrics.clone();
+        let queue_router = router;
+        let queue_thread = std::thread::Builder::new()
+            .name("pasconv-queue".into())
+            .spawn(move || queue_loop(rx, work_tx, queue_router, batch_cfg, queue_metrics))
+            .expect("spawn queue thread");
+
+        let exec_metrics = metrics.clone();
+        let exec_dir = artifact_dir.to_path_buf();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let exec_thread = std::thread::Builder::new()
+            .name("pasconv-exec".into())
+            .spawn(move || {
+                let mut runtime = match Runtime::new(&exec_dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                // warm the CNN executables so the first batch isn't a compile
+                let router = Router::from_artifacts(
+                    &runtime
+                        .names()
+                        .iter()
+                        .map(|n| runtime.artifact(n).unwrap().clone())
+                        .collect::<Vec<_>>(),
+                );
+                for b in [1usize, router.max_cnn_batch()] {
+                    if let Ok((_, name)) = router.route_cnn(b) {
+                        let _ = runtime.ensure_compiled(&name.to_string());
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+                exec_loop(work_rx, runtime, exec_metrics)
+            })
+            .expect("spawn exec thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))?
+            .map_err(|e| anyhow!(e))?;
+
+        Ok(Coordinator {
+            tx: Some(tx),
+            queue_thread: Some(queue_thread),
+            exec_thread: Some(exec_thread),
+            next_id: AtomicU64::new(1),
+            metrics,
+        })
+    }
+
+    /// Submit a request; returns the response channel.
+    pub fn submit(&self, payload: Payload) -> Receiver<Result<Response, String>> {
+        let (resp_tx, resp_rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.lock().unwrap().requests += 1;
+        let req = Request { id, payload, submitted: Instant::now() };
+        if let Some(tx) = &self.tx {
+            if tx.send((req, resp_tx.clone())).is_err() {
+                let _ = resp_tx.send(Err("coordinator stopped".into()));
+            }
+        }
+        resp_rx
+    }
+
+    /// Submit and block for the response.
+    pub fn submit_wait(&self, payload: Payload) -> Result<Response> {
+        self.submit(payload)
+            .recv()
+            .map_err(|_| anyhow!("coordinator dropped the request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Drain and stop both threads.
+    pub fn shutdown(&mut self) {
+        self.tx.take(); // close the queue
+        if let Some(t) = self.queue_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.exec_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn queue_loop(
+    rx: Receiver<(Request, Respond)>,
+    work_tx: Sender<Work>,
+    router: Router,
+    cfg: BatchConfig,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    let cfg = BatchConfig { max_batch: cfg.max_batch.min(router.max_cnn_batch()), ..cfg };
+    let mut batcher: Batcher<CnnItem> = Batcher::new(cfg);
+    loop {
+        // wait for the next request or the batch deadline, whichever first
+        let item = match batcher.deadline_in(Instant::now()) {
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(x) => Some(x),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            },
+            None => match rx.recv() {
+                Ok(x) => Some(x),
+                Err(_) => break,
+            },
+        };
+        let now = Instant::now();
+        if let Some((req, respond)) = item {
+            match &req.payload {
+                Payload::Conv { problem, .. } => {
+                    // conv problems route 1:1 to artifacts — no batching
+                    if let Err(e) = router.route_conv(problem) {
+                        metrics.lock().unwrap().errors += 1;
+                        let _ = respond.send(Err(e.to_string()));
+                    } else if work_tx.send(Work::Single(req, respond)).is_err() {
+                        break;
+                    }
+                }
+                Payload::Cnn { .. } => {
+                    if let Some(batch) = batcher.push(CnnItem { req, respond }, now) {
+                        if work_tx.send(Work::CnnBatch(batch)).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(batch) = batcher.poll(Instant::now()) {
+            if work_tx.send(Work::CnnBatch(batch)).is_err() {
+                break;
+            }
+        }
+    }
+    // shutdown: flush the tail batch
+    if let Some(batch) = batcher.take() {
+        let _ = work_tx.send(Work::CnnBatch(batch));
+    }
+}
+
+fn exec_loop(work_rx: Receiver<Work>, mut runtime: Runtime, metrics: Arc<Mutex<Metrics>>) {
+    let router = Router::from_artifacts(
+        &runtime.names().iter().map(|n| runtime.artifact(n).unwrap().clone()).collect::<Vec<_>>(),
+    );
+    while let Ok(work) = work_rx.recv() {
+        match work {
+            Work::Single(req, respond) => {
+                let Payload::Conv { problem, image, filters } = &req.payload else {
+                    let _ = respond.send(Err("internal: non-conv single work".into()));
+                    continue;
+                };
+                let name = match router.route_conv(problem) {
+                    Ok(n) => n.to_string(),
+                    Err(e) => {
+                        metrics.lock().unwrap().errors += 1;
+                        let _ = respond.send(Err(e.to_string()));
+                        continue;
+                    }
+                };
+                match runtime.execute_conv(&name, image, filters) {
+                    Ok(output) => {
+                        let latency = req.submitted.elapsed().as_secs_f64();
+                        metrics.lock().unwrap().record_response(&name, latency);
+                        let _ = respond.send(Ok(Response {
+                            id: req.id,
+                            output,
+                            latency_secs: latency,
+                            artifact: name,
+                            batch_size: 1,
+                        }));
+                    }
+                    Err(e) => {
+                        metrics.lock().unwrap().errors += 1;
+                        let _ = respond.send(Err(e.to_string()));
+                    }
+                }
+            }
+            Work::CnnBatch(items) => {
+                let n = items.len();
+                let (cap, name) = match router.route_cnn(n) {
+                    Ok((b, n)) => (b, n.to_string()),
+                    Err(e) => {
+                        let mut m = metrics.lock().unwrap();
+                        for it in &items {
+                            let _ = it.respond.send(Err(e.to_string()));
+                            m.errors += 1;
+                        }
+                        continue;
+                    }
+                };
+                // build the padded batch buffer directly from the request
+                // tensors (single copy — no intermediate clone + stack)
+                let mut images: Vec<&Tensor> = Vec::with_capacity(items.len());
+                for it in &items {
+                    if let Payload::Cnn { image } = &it.req.payload {
+                        images.push(image);
+                    }
+                }
+                if images.len() != items.len()
+                    || images.iter().any(|t| t.shape != images[0].shape)
+                {
+                    let mut m = metrics.lock().unwrap();
+                    for it in &items {
+                        let _ = it.respond.send(Err("malformed CNN batch".into()));
+                        m.errors += 1;
+                    }
+                    continue;
+                }
+                let row = images[0].len();
+                let mut data = Vec::with_capacity(cap * row);
+                for im in &images {
+                    data.extend_from_slice(&im.data);
+                }
+                data.resize(cap * row, 0.0); // zero-pad the tail slots
+                let mut shape = vec![cap];
+                shape.extend_from_slice(&images[0].shape);
+                let batch = Tensor::new(shape, data).expect("batch shape");
+                match runtime.execute_refs(&name, &[&batch]) {
+                    Ok(out) => {
+                        // account under ONE lock, then send: clients that
+                        // have their response must also see it in the
+                        // metrics (tests rely on that happens-before)
+                        let latencies: Vec<f64> = items
+                            .iter()
+                            .map(|it| it.req.submitted.elapsed().as_secs_f64())
+                            .collect();
+                        {
+                            let mut m = metrics.lock().unwrap();
+                            m.batches_executed += 1;
+                            m.batched_requests += n as u64;
+                            for &l in &latencies {
+                                m.record_response(&name, l);
+                            }
+                        }
+                        for (i, it) in items.into_iter().enumerate() {
+                            let row = out.slice_axis0(i, i + 1).unwrap();
+                            let _ = it.respond.send(Ok(Response {
+                                id: it.req.id,
+                                output: row,
+                                latency_secs: latencies[i],
+                                artifact: name.clone(),
+                                batch_size: n,
+                            }));
+                        }
+                    }
+                    Err(e) => {
+                        let mut m = metrics.lock().unwrap();
+                        for it in &items {
+                            let _ = it.respond.send(Err(e.to_string()));
+                            m.errors += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Workload generation for the serving benches: Poisson arrivals and
+//! mixed request streams — the traffic model behind the e2e experiments
+//! (EXPERIMENTS.md) and `examples/batch_serving.rs`.
+
+use std::time::Duration;
+
+use crate::conv::ConvProblem;
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+use super::request::Payload;
+
+/// Arrival process for synthetic load.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// all requests at t = 0 (closed-loop burst)
+    Burst,
+    /// Poisson with the given mean rate (req/s)
+    Poisson { rate: f64 },
+    /// fixed inter-arrival gap
+    Uniform { gap: Duration },
+}
+
+impl Arrivals {
+    /// Inter-arrival delay before the next request.
+    pub fn next_gap(&self, rng: &mut Rng) -> Duration {
+        match *self {
+            Arrivals::Burst => Duration::ZERO,
+            Arrivals::Poisson { rate } => {
+                // exponential inter-arrival: -ln(U)/rate
+                let u = rng.next_f64().max(f64::MIN_POSITIVE);
+                Duration::from_secs_f64((-u.ln() / rate).min(1.0))
+            }
+            Arrivals::Uniform { gap } => gap,
+        }
+    }
+}
+
+/// What fraction of the stream is raw conv traffic (vs CNN inference).
+#[derive(Clone, Copy, Debug)]
+pub struct Mix {
+    pub conv_fraction: f64,
+}
+
+impl Default for Mix {
+    fn default() -> Self {
+        Mix { conv_fraction: 0.25 }
+    }
+}
+
+/// Generates a request stream over a set of conv problem templates.
+pub struct Workload {
+    pub arrivals: Arrivals,
+    pub mix: Mix,
+    pub conv_templates: Vec<ConvProblem>,
+    rng: Rng,
+}
+
+impl Workload {
+    pub fn new(arrivals: Arrivals, mix: Mix, conv_templates: Vec<ConvProblem>, seed: u64) -> Self {
+        Workload { arrivals, mix, conv_templates, rng: Rng::new(seed) }
+    }
+
+    /// Next request payload + the delay to wait before submitting it.
+    pub fn next(&mut self) -> (Payload, Duration) {
+        let gap = self.arrivals.next_gap(&mut self.rng);
+        let payload = if !self.conv_templates.is_empty()
+            && self.rng.next_f64() < self.mix.conv_fraction
+        {
+            let p = *self.rng.choose(&self.conv_templates);
+            let image = if p.is_single_channel() {
+                Tensor::randn(vec![p.wy, p.wx], &mut self.rng)
+            } else {
+                Tensor::randn(vec![p.c, p.wy, p.wx], &mut self.rng)
+            };
+            let filters = if p.is_single_channel() {
+                Tensor::randn(vec![p.m, p.k, p.k], &mut self.rng)
+            } else {
+                Tensor::randn(vec![p.m, p.c, p.k, p.k], &mut self.rng)
+            };
+            Payload::Conv { problem: p, image, filters }
+        } else {
+            Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut self.rng) }
+        };
+        (payload, gap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_has_zero_gaps() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(Arrivals::Burst.next_gap(&mut rng), Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn poisson_mean_matches_rate() {
+        let mut rng = Rng::new(2);
+        let a = Arrivals::Poisson { rate: 1000.0 };
+        let mean: f64 =
+            (0..20_000).map(|_| a.next_gap(&mut rng).as_secs_f64()).sum::<f64>() / 20_000.0;
+        assert!((mean - 1e-3).abs() < 1e-4, "mean gap {mean}");
+    }
+
+    #[test]
+    fn uniform_gap_constant() {
+        let mut rng = Rng::new(3);
+        let a = Arrivals::Uniform { gap: Duration::from_millis(5) };
+        assert_eq!(a.next_gap(&mut rng), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn mix_fraction_respected() {
+        let mut w = Workload::new(
+            Arrivals::Burst,
+            Mix { conv_fraction: 0.5 },
+            vec![ConvProblem::multi(4, 8, 4, 3)],
+            7,
+        );
+        let n = 2000;
+        let convs = (0..n)
+            .filter(|_| matches!(w.next().0, Payload::Conv { .. }))
+            .count();
+        let frac = convs as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "conv fraction {frac}");
+    }
+
+    #[test]
+    fn conv_payloads_have_template_shapes() {
+        let p = ConvProblem::multi(4, 8, 6, 3);
+        let mut w = Workload::new(Arrivals::Burst, Mix { conv_fraction: 1.0 }, vec![p], 9);
+        for _ in 0..10 {
+            let (payload, _) = w.next();
+            let Payload::Conv { problem, image, filters } = payload else {
+                panic!("expected conv")
+            };
+            assert_eq!(problem, p);
+            assert_eq!(image.shape, vec![4, 8, 8]);
+            assert_eq!(filters.shape, vec![6, 4, 3, 3]);
+        }
+    }
+
+    #[test]
+    fn no_templates_means_all_cnn() {
+        let mut w = Workload::new(Arrivals::Burst, Mix { conv_fraction: 1.0 }, vec![], 11);
+        for _ in 0..10 {
+            assert!(matches!(w.next().0, Payload::Cnn { .. }));
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Global-memory access model: coalescing efficiency and transfer timing.
+//!
+//! §2.2 of the paper: "for accessing global memory, it is necessary to
+//! confirm that the starting address and the size of the sequential
+//! accessing segment is a multiple of 32-byte.  In Pascal GPU, a multiple
+//! of 128-byte shows better performance than that of 32-byte and 64-byte,
+//! but the performance for 32-byte and 64-byte is acceptable."
+//!
+//! The model has two parts:
+//!  * **useful fraction** — DRAM moves whole 32-B sectors; a segment that
+//!    is not a multiple of 32 B drags dead bytes (the paper's
+//!    "non-coalescing memory access", e.g. the K*K*4 = 36-B filters of
+//!    [1], or 4-B accesses when K = 1);
+//!  * **segment-length factor** — short (but aligned) segments issue more
+//!    transactions per byte and reach slightly lower bus utilization:
+//!    1.0 at >=128 B, 0.95 at 64 B, 0.90 at 32 B (the paper's "a bit
+//!    worse ... but acceptable").
+
+use super::spec::GpuSpec;
+
+/// DRAM sector granularity on Pascal/Maxwell.
+pub const SECTOR_BYTES: usize = 32;
+
+/// Fraction of fetched bytes that are useful for a contiguous segment of
+/// `segment_bytes` starting sector-aligned.
+pub fn useful_fraction(segment_bytes: usize) -> f64 {
+    assert!(segment_bytes > 0, "zero-length segment");
+    let sectors = (segment_bytes + SECTOR_BYTES - 1) / SECTOR_BYTES;
+    segment_bytes as f64 / (sectors * SECTOR_BYTES) as f64
+}
+
+/// Bus-utilization factor for aligned segments of a given length.
+pub fn length_factor(segment_bytes: usize) -> f64 {
+    if segment_bytes >= 128 {
+        1.0
+    } else if segment_bytes >= 64 {
+        0.95
+    } else if segment_bytes >= 32 {
+        0.90
+    } else {
+        // sub-sector requests: each still occupies a full transaction slot
+        0.90 * segment_bytes as f64 / SECTOR_BYTES as f64
+    }
+}
+
+/// Combined efficiency in (0, 1]: the fraction of peak DRAM bandwidth a
+/// stream of `segment_bytes`-sized contiguous segments achieves.
+pub fn segment_efficiency(segment_bytes: usize) -> f64 {
+    (useful_fraction(segment_bytes) * length_factor(segment_bytes)).min(1.0)
+}
+
+/// How the SMs' concurrent loads share the bus, and how much of the
+/// latency each round still exposes.
+#[derive(Clone, Copy, Debug)]
+pub struct AccessConfig {
+    /// contiguous segment size of the access stream, bytes
+    pub segment_bytes: usize,
+    /// SMs loading concurrently (they share DRAM bandwidth)
+    pub sms_active: u32,
+    /// resident threads per SM issuing loads — fewer threads than the
+    /// spec's requirement cannot keep enough transactions in flight
+    /// (Table 1's "Thread Requirement/SM")
+    pub threads_per_sm: u32,
+}
+
+/// Cycles for one SM to receive `bytes` from global memory under `cfg`.
+///
+/// latency term: one exposed latency per round (the steady-state pipe
+/// refill); throughput term: bytes over this SM's share of effective
+/// bandwidth, inflated if the SM has too few threads in flight.
+pub fn transfer_cycles(spec: &GpuSpec, cfg: &AccessConfig, bytes: f64) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    let eff = segment_efficiency(cfg.segment_bytes);
+    let per_sm_bw = spec.bytes_per_cycle() * eff / cfg.sms_active.max(1) as f64;
+    let occupancy =
+        (cfg.threads_per_sm as f64 / spec.threads_required_per_sm() as f64).min(1.0);
+    spec.mem_latency_cycles as f64 + bytes / (per_sm_bw * occupancy.max(1e-9))
+}
+
+/// Fraction of the memory latency a prefetch round still exposes.
+///
+/// Table 1's requirement rows: an SM needs ~768 threads each with a 4-B
+/// load in flight (3,072 B per round) before successive fetches pipeline
+/// and the 258-cycle latency amortizes away.  A round smaller than the
+/// per-SM data requirement, or an SM with fewer resident threads, cannot
+/// fill the pipe and pays the remainder of the latency per round.
+pub fn latency_exposure(spec: &GpuSpec, threads_per_sm: u32, round_bytes: f64) -> f64 {
+    let thread_fill = (threads_per_sm as f64 / spec.threads_required_per_sm() as f64).min(1.0);
+    let volume_fill = (round_bytes / spec.data_requirement_per_sm() as f64).min(1.0);
+    (1.0 - thread_fill * volume_fill).max(0.0)
+}
+
+/// Cycles for the *chip* to stream `bytes` split evenly over all SMs —
+/// used for the V_s "keep the bus busy" strategy (§2.2 method 2).
+pub fn stream_cycles_chip(spec: &GpuSpec, segment_bytes: usize, total_bytes: f64) -> f64 {
+    let eff = segment_efficiency(segment_bytes);
+    spec.mem_latency_cycles as f64 + total_bytes / (spec.bytes_per_cycle() * eff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::spec::gtx_1080ti;
+
+    #[test]
+    fn useful_fraction_aligned_sizes() {
+        assert_eq!(useful_fraction(32), 1.0);
+        assert_eq!(useful_fraction(64), 1.0);
+        assert_eq!(useful_fraction(128), 1.0);
+    }
+
+    #[test]
+    fn useful_fraction_odd_filter_segments() {
+        // K=3 filters: 36 B -> 2 sectors fetched for 36 useful bytes
+        assert!((useful_fraction(36) - 36.0 / 64.0).abs() < 1e-12);
+        // K=1 filters: 4 B -> 1/8 useful — the paper's "serious
+        // performance reduction" case
+        assert!((useful_fraction(4) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_segment_preference_ordering() {
+        // §2.2/§3.2: 128 > 64 > 32 >> non-multiples
+        assert!(segment_efficiency(128) > segment_efficiency(64));
+        assert!(segment_efficiency(64) > segment_efficiency(32));
+        assert!(segment_efficiency(32) > segment_efficiency(36));
+        assert!(segment_efficiency(36) > segment_efficiency(4));
+        // but 32/64 stay "acceptable": within 10% of peak
+        assert!(segment_efficiency(32) >= 0.9);
+    }
+
+    #[test]
+    fn efficiency_bounded() {
+        for s in [1, 4, 13, 32, 36, 64, 100, 128, 129, 4096] {
+            let e = segment_efficiency(s);
+            assert!(e > 0.0 && e <= 1.0, "s={s} e={e}");
+        }
+    }
+
+    #[test]
+    fn transfer_latency_floor() {
+        // tiny transfers still pay the full memory latency
+        let g = gtx_1080ti();
+        let cfg = AccessConfig { segment_bytes: 128, sms_active: 1, threads_per_sm: 1024 };
+        let c = transfer_cycles(&g, &cfg, 4.0);
+        assert!(c >= g.mem_latency_cycles as f64);
+        assert!(c < g.mem_latency_cycles as f64 + 1.0);
+    }
+
+    #[test]
+    fn transfer_monotone_in_bytes() {
+        let g = gtx_1080ti();
+        let cfg = AccessConfig { segment_bytes: 128, sms_active: 28, threads_per_sm: 768 };
+        let mut last = 0.0;
+        for kb in [1, 2, 4, 8, 64, 1024] {
+            let c = transfer_cycles(&g, &cfg, (kb * 1024) as f64);
+            assert!(c > last);
+            last = c;
+        }
+    }
+
+    #[test]
+    fn more_sms_sharing_is_slower_per_sm() {
+        let g = gtx_1080ti();
+        let a = AccessConfig { segment_bytes: 128, sms_active: 1, threads_per_sm: 768 };
+        let b = AccessConfig { segment_bytes: 128, sms_active: 28, threads_per_sm: 768 };
+        assert!(transfer_cycles(&g, &a, 1e6) < transfer_cycles(&g, &b, 1e6));
+    }
+
+    #[test]
+    fn under_threaded_sm_cannot_reach_bandwidth() {
+        // Table 1: 768 threads/SM are needed to keep the bus busy — an SM
+        // with 96 threads gets ~1/8 of its share.
+        let g = gtx_1080ti();
+        let full = AccessConfig { segment_bytes: 128, sms_active: 28, threads_per_sm: 768 };
+        let starved = AccessConfig { segment_bytes: 128, sms_active: 28, threads_per_sm: 96 };
+        let ratio = transfer_cycles(&g, &starved, 1e7) / transfer_cycles(&g, &full, 1e7);
+        assert!(ratio > 6.0 && ratio < 9.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn chip_stream_rate_matches_table1() {
+        // streaming V_s bytes at 128-B segments takes ~latency + V_s/327
+        let g = gtx_1080ti();
+        let c = stream_cycles_chip(&g, 128, g.v_s() as f64);
+        let expect = 258.0 + 86_016.0 / g.bytes_per_cycle();
+        assert!((c - expect).abs() < 1.0, "c={c} expect={expect}");
+    }
+}

@@ -1,0 +1,23 @@
+//! GPU timing simulator — the hardware substrate (the paper's testbed is
+//! a GTX 1080Ti we don't have; see DESIGN.md §3 Substitutions).
+//!
+//! The model is analytic and cycle-approximate, built from exactly the
+//! quantities the paper's own performance argument uses: global-memory
+//! latency and bandwidth (Table 1), 32/64/128-B coalescing classes
+//! (§2.2), per-SM FMA throughput, shared-memory capacity, and the
+//! double-buffered prefetch pipeline (§2.2 method 1 / §3.2(4)).
+//!
+//! `spec` — hardware parameters + Table-1 derivations (N_FMA, V_s);
+//! `memory` — coalescing + transfer timing; `pipeline` — prefetch round
+//! pipeline; `sim` — `KernelPlan` -> `SimResult`.
+
+pub mod memory;
+pub mod occupancy;
+pub mod pipeline;
+pub mod sim;
+pub mod spec;
+
+pub use occupancy::{occupancy, BlockResources, Limiter, Occupancy};
+pub use pipeline::{ExecConfig, Round};
+pub use sim::{simulate, speedup, KernelPlan, SimResult};
+pub use spec::{gtx_1080ti, tesla_k40, titan_x_maxwell, GpuSpec};

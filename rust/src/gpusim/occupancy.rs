@@ -1,0 +1,172 @@
+//! Theoretical occupancy calculator — the CUDA occupancy arithmetic the
+//! paper's §4 launch geometry (2 blocks x 512 threads, 128 regs/thread)
+//! implicitly performs.  Given a block's resource footprint it reports
+//! how many blocks fit per SM and which resource limits residency;
+//! plans use it to sanity-check their threads_per_sm assumptions.
+
+use super::spec::GpuSpec;
+
+/// Per-block resource footprint of a kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockResources {
+    pub threads: u32,
+    pub registers_per_thread: u32,
+    pub shared_mem_bytes: u32,
+}
+
+/// What capped the residency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Limiter {
+    Threads,
+    Registers,
+    SharedMemory,
+    BlockSlots,
+}
+
+/// Result of the occupancy computation.
+#[derive(Clone, Copy, Debug)]
+pub struct Occupancy {
+    pub blocks_per_sm: u32,
+    pub threads_per_sm: u32,
+    /// resident warps / max warps
+    pub fraction: f64,
+    pub limiter: Limiter,
+}
+
+/// Hardware block-slot limit per SM (32 on Kepler..Pascal).
+pub const MAX_BLOCKS_PER_SM: u32 = 32;
+
+/// Compute theoretical occupancy of a block shape on a GPU.
+pub fn occupancy(spec: &GpuSpec, b: &BlockResources) -> Occupancy {
+    assert!(b.threads > 0, "empty block");
+    let by_threads = spec.max_threads_per_sm / b.threads;
+    let regs_per_block = b.registers_per_thread.max(1) * b.threads;
+    let by_regs = spec.registers_per_sm / regs_per_block;
+    let by_smem = if b.shared_mem_bytes == 0 {
+        u32::MAX
+    } else {
+        spec.shared_mem_bytes / b.shared_mem_bytes
+    };
+    let candidates = [
+        (by_threads, Limiter::Threads),
+        (by_regs, Limiter::Registers),
+        (by_smem, Limiter::SharedMemory),
+        (MAX_BLOCKS_PER_SM, Limiter::BlockSlots),
+    ];
+    let (blocks, limiter) =
+        candidates.iter().min_by_key(|(n, _)| *n).copied().unwrap_or((0, Limiter::Threads));
+    let threads = blocks * b.threads;
+    let max_warps = spec.max_threads_per_sm / spec.warp_size;
+    Occupancy {
+        blocks_per_sm: blocks,
+        threads_per_sm: threads,
+        fraction: (threads / spec.warp_size) as f64 / max_warps as f64,
+        limiter,
+    }
+}
+
+/// Can the paper's launch geometry (2 blocks x 512 threads) reside with
+/// a given register/shared-memory budget?
+pub fn paper_geometry_fits(spec: &GpuSpec, regs_per_thread: u32, smem_per_block: u32) -> bool {
+    let occ = occupancy(
+        spec,
+        &BlockResources {
+            threads: 512,
+            registers_per_thread: regs_per_thread,
+            shared_mem_bytes: smem_per_block,
+        },
+    );
+    occ.blocks_per_sm >= 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::spec::{gtx_1080ti, tesla_k40};
+
+    #[test]
+    fn paper_launch_two_blocks_fit_with_64_regs() {
+        // 2 x 512 threads at 64 regs/thread: 65,536 regs exactly — the
+        // physical ceiling behind the paper's geometry
+        let g = gtx_1080ti();
+        assert!(paper_geometry_fits(&g, 64, 32 * 1024));
+        // at the paper's quoted 128 regs/thread only ONE block fits —
+        // the register file is the true limiter of their own claim
+        assert!(!paper_geometry_fits(&g, 128, 32 * 1024));
+    }
+
+    #[test]
+    fn register_limiter_detected() {
+        let g = gtx_1080ti();
+        let occ = occupancy(
+            &g,
+            &BlockResources { threads: 512, registers_per_thread: 128, shared_mem_bytes: 1024 },
+        );
+        assert_eq!(occ.blocks_per_sm, 1);
+        assert_eq!(occ.limiter, Limiter::Registers);
+    }
+
+    #[test]
+    fn shared_memory_limiter_detected() {
+        let g = gtx_1080ti();
+        let occ = occupancy(
+            &g,
+            &BlockResources {
+                threads: 128,
+                registers_per_thread: 32,
+                shared_mem_bytes: 48 * 1024, // half of S_shared each
+            },
+        );
+        assert_eq!(occ.blocks_per_sm, 2);
+        assert_eq!(occ.limiter, Limiter::SharedMemory);
+    }
+
+    #[test]
+    fn thread_limiter_detected() {
+        let g = gtx_1080ti();
+        let occ = occupancy(
+            &g,
+            &BlockResources { threads: 1024, registers_per_thread: 16, shared_mem_bytes: 1024 },
+        );
+        assert_eq!(occ.blocks_per_sm, 2); // 2048 / 1024
+        assert_eq!(occ.limiter, Limiter::Threads);
+        assert!((occ.fraction - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_slot_limiter_for_tiny_blocks() {
+        let g = gtx_1080ti();
+        let occ = occupancy(
+            &g,
+            &BlockResources { threads: 32, registers_per_thread: 8, shared_mem_bytes: 0 },
+        );
+        assert_eq!(occ.blocks_per_sm, MAX_BLOCKS_PER_SM);
+        assert_eq!(occ.limiter, Limiter::BlockSlots);
+        // 32 blocks x 1 warp each = half the 64-warp ceiling
+        assert!((occ.fraction - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stride_fixed_working_set_keeps_two_blocks_resident() {
+        // §3.2(4)'s "<= S_shared/2" exists precisely so two blocks
+        // double-buffer per SM — verify through the occupancy calculator
+        let g = gtx_1080ti();
+        let occ = occupancy(
+            &g,
+            &BlockResources {
+                threads: 512,
+                registers_per_thread: 64,
+                shared_mem_bytes: g.shared_mem_bytes / 2,
+            },
+        );
+        assert!(occ.blocks_per_sm >= 2, "{occ:?}");
+    }
+
+    #[test]
+    fn kepler_tighter_than_pascal() {
+        // K40's 48 KB shared memory halves smem-bound residency
+        let (g, k) = (gtx_1080ti(), tesla_k40());
+        let b = BlockResources { threads: 256, registers_per_thread: 32, shared_mem_bytes: 24 * 1024 };
+        assert!(occupancy(&g, &b).blocks_per_sm > occupancy(&k, &b).blocks_per_sm);
+    }
+}

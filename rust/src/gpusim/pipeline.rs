@@ -1,0 +1,281 @@
+//! Double-buffered prefetch pipeline — §2.2 method 1 / §3.2(4).
+//!
+//! A kernel is modelled as a sequence of *rounds* per SM.  Round r loads
+//! its data set from global memory while round r-1's FMAs execute on the
+//! cores (the paper's data prefetching; on the TPU mapping this is the
+//! Pallas grid pipeline).  Total time is therefore
+//!
+//!   load(0) + sum_{r=1..n-1} max(load(r), compute(r-1)) + compute(n-1)
+//!
+//! plus a fixed kernel-launch overhead.  When compute(r) >= load(r+1)
+//! for every r the memory latency is fully hidden — this is exactly the
+//! paper's `Th >= N_FMA` condition, and `integration_simulation.rs`
+//! asserts the equivalence on the paper's own workloads.
+
+use super::memory::latency_exposure;
+use super::spec::GpuSpec;
+
+/// One prefetch round on one SM.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Round {
+    /// bytes this SM fetches from global memory this round
+    pub load_bytes: f64,
+    /// contiguous-segment size of those fetches
+    pub segment_bytes: usize,
+    /// FMA operations this SM executes on the fetched data
+    pub fma_ops: f64,
+    /// when a round mixes streams with different coalescing (filter
+    /// segments + map strips), plans pre-combine their efficiencies and
+    /// set this instead of `segment_bytes`
+    pub eff_override: Option<f64>,
+}
+
+impl Round {
+    pub fn new(load_bytes: f64, segment_bytes: usize, fma_ops: f64) -> Round {
+        Round { load_bytes, segment_bytes, fma_ops, eff_override: None }
+    }
+
+    /// Round whose access efficiency was combined from several streams.
+    pub fn with_efficiency(load_bytes: f64, eff: f64, fma_ops: f64) -> Round {
+        assert!(eff > 0.0 && eff <= 1.0);
+        Round { load_bytes, segment_bytes: 128, fma_ops, eff_override: Some(eff) }
+    }
+}
+
+/// Issue-efficiency of the compute stream: fraction of the SM's peak FMA
+/// rate the inner loop actually sustains (ILP, bank conflicts, tail
+/// effects). Plans set this; 1.0 = perfect.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecConfig {
+    pub sms_active: u32,
+    pub threads_per_sm: u32,
+    pub compute_efficiency: f64,
+    /// fixed launch + drain overhead in cycles (grid launch, tail wave)
+    pub launch_overhead_cycles: f64,
+}
+
+impl ExecConfig {
+    pub fn new(spec: &GpuSpec, threads_per_sm: u32) -> ExecConfig {
+        ExecConfig {
+            sms_active: spec.sm_count,
+            threads_per_sm,
+            compute_efficiency: 0.9,
+            launch_overhead_cycles: 4_000.0, // ~2.7 µs at 1.48 GHz
+        }
+    }
+}
+
+/// Cycles to execute `fma_ops` on one SM.
+pub fn compute_cycles(spec: &GpuSpec, cfg: &ExecConfig, fma_ops: f64) -> f64 {
+    if fma_ops <= 0.0 {
+        return 0.0;
+    }
+    // an SM with fewer threads than (cores x ILP-depth) cannot fill the
+    // FMA pipes; 4 warps per SM quadrant is the floor for full issue
+    let min_threads = 4 * spec.warp_size * (spec.cores_per_sm / spec.warp_size);
+    let thread_fill = (cfg.threads_per_sm as f64 / min_threads as f64).min(1.0);
+    fma_ops / (spec.fma_per_sm_cycle() as f64 * cfg.compute_efficiency * thread_fill)
+}
+
+/// Cycles to load one round on one SM inside the steady-state pipeline.
+///
+/// Unlike a cold `memory::transfer_cycles`, a pipelined round only pays
+/// the share of the memory latency its in-flight volume cannot amortize
+/// (`memory::latency_exposure` — Table 1's 768-thread / 3,072-B rows);
+/// the full latency is charged once as the pipeline prologue in
+/// `simulate_pipeline`.
+pub fn load_cycles(spec: &GpuSpec, cfg: &ExecConfig, round: &Round) -> f64 {
+    if round.load_bytes <= 0.0 {
+        return 0.0;
+    }
+    let eff = round
+        .eff_override
+        .unwrap_or_else(|| crate::gpusim::memory::segment_efficiency(round.segment_bytes));
+    let per_sm_bw = spec.bytes_per_cycle() * eff / cfg.sms_active.max(1) as f64;
+    let occ = (cfg.threads_per_sm as f64 / spec.threads_required_per_sm() as f64).min(1.0);
+    let stream = round.load_bytes / (per_sm_bw * occ.max(1e-9));
+    let exposed = spec.mem_latency_cycles as f64
+        * latency_exposure(spec, cfg.threads_per_sm, round.load_bytes);
+    exposed + stream
+}
+
+/// Combine the coalescing efficiencies of several concurrent streams
+/// (bytes_i at efficiency e_i) into one effective efficiency: total bytes
+/// over total bus time.
+pub fn combined_efficiency(streams: &[(f64, f64)]) -> f64 {
+    let total: f64 = streams.iter().map(|(b, _)| b).sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let bus_time: f64 = streams.iter().map(|(b, e)| b / e.max(1e-9)).sum();
+    total / bus_time
+}
+
+/// Outcome of a pipeline simulation.
+#[derive(Clone, Debug)]
+pub struct PipelineResult {
+    pub total_cycles: f64,
+    pub load_cycles_sum: f64,
+    pub compute_cycles_sum: f64,
+    /// cycles in which compute stalled waiting for a fetch
+    pub stall_cycles: f64,
+    /// true if every round's fetch was fully hidden behind compute
+    pub latency_hidden: bool,
+}
+
+impl PipelineResult {
+    /// Which resource bounds this kernel.
+    pub fn bottleneck(&self) -> &'static str {
+        if self.stall_cycles > 0.05 * self.total_cycles {
+            "memory"
+        } else {
+            "compute"
+        }
+    }
+}
+
+/// Simulate the double-buffered round pipeline on one SM.
+pub fn simulate_pipeline(spec: &GpuSpec, cfg: &ExecConfig, rounds: &[Round]) -> PipelineResult {
+    assert!(!rounds.is_empty(), "no rounds");
+    let loads: Vec<f64> = rounds.iter().map(|r| load_cycles(spec, cfg, r)).collect();
+    let computes: Vec<f64> = rounds.iter().map(|r| compute_cycles(spec, cfg, r.fma_ops)).collect();
+
+    // pipeline prologue: the very first fetch is cold — full latency
+    let mut total = cfg.launch_overhead_cycles + spec.mem_latency_cycles as f64 + loads[0];
+    let mut stall = 0.0;
+    let mut hidden = true;
+    for r in 1..rounds.len() {
+        // round r's load overlaps round r-1's compute
+        let overlap = loads[r].max(computes[r - 1]);
+        if loads[r] > computes[r - 1] {
+            stall += loads[r] - computes[r - 1];
+            hidden = false;
+        }
+        total += overlap;
+    }
+    total += computes[rounds.len() - 1];
+
+    PipelineResult {
+        total_cycles: total,
+        load_cycles_sum: loads.iter().sum(),
+        compute_cycles_sum: computes.iter().sum(),
+        stall_cycles: stall,
+        latency_hidden: hidden,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::spec::gtx_1080ti;
+
+    fn cfg() -> (GpuSpec, ExecConfig) {
+        let g = gtx_1080ti();
+        let c = ExecConfig::new(&g, 1024);
+        (g, c)
+    }
+
+    fn round(bytes: f64, fma: f64) -> Round {
+        Round::new(bytes, 128, fma)
+    }
+
+    #[test]
+    fn single_round_is_load_plus_compute() {
+        let (g, c) = cfg();
+        let r = round(1e5, 1e6);
+        let res = simulate_pipeline(&g, &c, &[r]);
+        let expect = c.launch_overhead_cycles
+            + g.mem_latency_cycles as f64 // cold-fetch prologue
+            + load_cycles(&g, &c, &r)
+            + compute_cycles(&g, &c, 1e6);
+        assert!((res.total_cycles - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pipeline_bounds() {
+        // max(sum loads, sum computes) <= total <= sum loads + sum computes (+overhead)
+        let (g, c) = cfg();
+        let rounds: Vec<Round> = (1..=10).map(|i| round(1e4 * i as f64, 5e5)).collect();
+        let res = simulate_pipeline(&g, &c, &rounds);
+        let lo = res.load_cycles_sum.max(res.compute_cycles_sum);
+        let hi = res.load_cycles_sum
+            + res.compute_cycles_sum
+            + c.launch_overhead_cycles
+            + g.mem_latency_cycles as f64;
+        assert!(res.total_cycles >= lo * 0.99);
+        assert!(res.total_cycles <= hi + 1.0);
+    }
+
+    #[test]
+    fn compute_bound_rounds_hide_latency() {
+        // Th >= N_FMA with matching load volume: fetches hide behind compute.
+        let (g, c) = cfg();
+        let n_fma = g.n_fma() as f64;
+        // compute per round: n_fma ops ~ 258 cycles at 0.9 eff -> ~287 cycles;
+        // load per round small enough to fit under it
+        let small_load = 100.0 * 4.0; // 400 B: latency-dominated, ~259 cycles
+        let rounds: Vec<Round> = (0..20).map(|_| round(small_load, 1.2 * n_fma)).collect();
+        let res = simulate_pipeline(&g, &c, &rounds);
+        assert!(res.latency_hidden, "stall={}", res.stall_cycles);
+        assert_eq!(res.bottleneck(), "compute");
+    }
+
+    #[test]
+    fn starved_rounds_expose_latency() {
+        // Th << N_FMA: every round stalls on memory.
+        let (g, c) = cfg();
+        let rounds: Vec<Round> = (0..20).map(|_| round(1e5, 1e3)).collect();
+        let res = simulate_pipeline(&g, &c, &rounds);
+        assert!(!res.latency_hidden);
+        assert_eq!(res.bottleneck(), "memory");
+        assert!(res.stall_cycles > 0.0);
+    }
+
+    #[test]
+    fn n_fma_is_the_hiding_threshold() {
+        // The paper's claim, §2.2: a round of N_FMA ops takes exactly the
+        // memory latency to execute at peak; rounds with Th >= N_FMA can
+        // hide a latency-dominated fetch, rounds below cannot.
+        let g = gtx_1080ti();
+        let mut c = ExecConfig::new(&g, 1024);
+        c.compute_efficiency = 1.0; // the paper's idealized cores
+        let tiny_fetch = round(4.0, 0.0).load_bytes; // latency-dominated
+        let hide = simulate_pipeline(
+            &g,
+            &c,
+            &[round(tiny_fetch, g.n_fma() as f64), round(tiny_fetch, g.n_fma() as f64)],
+        );
+        assert!(hide.stall_cycles < 2.0, "stall={}", hide.stall_cycles);
+        let starve = simulate_pipeline(
+            &g,
+            &c,
+            &[round(tiny_fetch, 0.5 * g.n_fma() as f64), round(tiny_fetch, 0.5 * g.n_fma() as f64)],
+        );
+        assert!(starve.stall_cycles > 100.0, "stall={}", starve.stall_cycles);
+    }
+
+    #[test]
+    fn monotone_in_fma_ops() {
+        let (g, c) = cfg();
+        let mut last = 0.0;
+        for scale in [1.0, 2.0, 4.0, 8.0] {
+            let rounds: Vec<Round> = (0..5).map(|_| round(1e4, scale * 1e6)).collect();
+            let t = simulate_pipeline(&g, &c, &rounds).total_cycles;
+            assert!(t > last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn coalesced_beats_non_coalesced() {
+        let (g, c) = cfg();
+        let mk = |seg: usize| -> f64 {
+            let rounds: Vec<Round> =
+                (0..8).map(|_| Round::new(1e6, seg, 1e4)).collect();
+            simulate_pipeline(&g, &c, &rounds).total_cycles
+        };
+        assert!(mk(128) < mk(32));
+        assert!(mk(32) < mk(36)); // aligned-32 beats the odd 36-B filters of [1]
+        assert!(mk(36) < mk(4));
+    }
+}

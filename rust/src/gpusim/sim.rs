@@ -1,0 +1,207 @@
+//! Kernel-level simulation: a `KernelPlan` (the per-SM round schedule a
+//! convolution algorithm produces) runs through the prefetch pipeline and
+//! yields a `SimResult` with time, throughput and efficiency numbers —
+//! the quantities Figs. 4/5 plot.
+
+use super::pipeline::{simulate_pipeline, ExecConfig, PipelineResult, Round};
+use super::spec::GpuSpec;
+
+/// The execution schedule of one kernel on one GPU — what a CUDA kernel's
+/// blocks would do, expressed as per-SM prefetch rounds.  Produced by
+/// `plans::*` (ours) and `baselines::*` (cuDNN proxy, [1], [16]).
+#[derive(Clone, Debug)]
+pub struct KernelPlan {
+    pub name: String,
+    /// per-SM prefetch rounds (all SMs assumed symmetric; asymmetry is
+    /// expressed through `sms_active` + the tail in the round list)
+    pub rounds: Vec<Round>,
+    /// SMs with work (< sm_count models under-utilization, e.g. [1] on
+    /// small maps)
+    pub sms_active: u32,
+    /// resident threads per SM
+    pub threads_per_sm: u32,
+    /// fraction of peak FMA issue the inner loop sustains
+    pub compute_efficiency: f64,
+    /// bytes of output this kernel writes back to global memory (chip-wide)
+    pub output_bytes: f64,
+    /// shared memory per SM the plan requires — must respect S_shared
+    pub smem_bytes_per_sm: u32,
+    /// total FMA ops the kernel performs (chip-wide), for GFLOPS
+    pub total_fma: f64,
+    /// launch + API overhead in cycles (bare kernel ~4000; library paths
+    /// like cuDNN pay more — see baselines::cudnn_proxy)
+    pub launch_overhead_cycles: f64,
+}
+
+impl KernelPlan {
+    /// Total bytes the plan moves from global memory (chip-wide, loads).
+    pub fn dram_load_bytes(&self) -> f64 {
+        self.rounds.iter().map(|r| r.load_bytes).sum::<f64>() * self.sms_active as f64
+    }
+
+    /// FMA operations per loaded byte — the paper's figure of merit
+    /// ("high ratio of floating point FMA operations per fetched data").
+    pub fn fma_per_byte(&self) -> f64 {
+        self.total_fma / self.dram_load_bytes().max(1.0)
+    }
+}
+
+/// Simulation outcome for one kernel on one GPU.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub name: String,
+    pub cycles: f64,
+    pub seconds: f64,
+    /// achieved FLOP/s (2 FLOPs per FMA, paper convention)
+    pub gflops: f64,
+    /// achieved fraction of peak FLOP/s
+    pub efficiency: f64,
+    /// fraction of SMs with work
+    pub sm_utilization: f64,
+    pub latency_hidden: bool,
+    pub bottleneck: &'static str,
+    pub stall_fraction: f64,
+    pub dram_load_bytes: f64,
+    pub fma_per_byte: f64,
+}
+
+/// Run `plan` on `spec`.
+pub fn simulate(spec: &GpuSpec, plan: &KernelPlan) -> SimResult {
+    assert!(
+        plan.smem_bytes_per_sm <= spec.shared_mem_bytes,
+        "{}: plan wants {} B shared memory, SM has {}",
+        plan.name,
+        plan.smem_bytes_per_sm,
+        spec.shared_mem_bytes
+    );
+    assert!(plan.sms_active >= 1 && plan.sms_active <= spec.sm_count);
+
+    let cfg = ExecConfig {
+        sms_active: plan.sms_active,
+        threads_per_sm: plan.threads_per_sm,
+        compute_efficiency: plan.compute_efficiency,
+        launch_overhead_cycles: plan.launch_overhead_cycles,
+    };
+    let pipe: PipelineResult = simulate_pipeline(spec, &cfg, &plan.rounds);
+
+    // Output writeback streams at full segment width, overlapped with
+    // compute except for its tail — charge the non-overlappable share.
+    let wb_cycles = 0.15 * plan.output_bytes / spec.bytes_per_cycle();
+    let cycles = pipe.total_cycles + wb_cycles;
+
+    let seconds = spec.cycles_to_secs(cycles);
+    let flops = 2.0 * plan.total_fma;
+    let gflops = flops / seconds / 1e9;
+    SimResult {
+        name: plan.name.clone(),
+        cycles,
+        seconds,
+        gflops,
+        efficiency: flops / seconds / spec.peak_flops(),
+        sm_utilization: plan.sms_active as f64 / spec.sm_count as f64,
+        latency_hidden: pipe.latency_hidden,
+        bottleneck: pipe.bottleneck(),
+        stall_fraction: pipe.stall_cycles / pipe.total_cycles,
+        dram_load_bytes: plan.dram_load_bytes(),
+        fma_per_byte: plan.fma_per_byte(),
+    }
+}
+
+/// Speedup of `ours` over `baseline` on the same spec (the Figs. 4/5 y-axis).
+pub fn speedup(spec: &GpuSpec, ours: &KernelPlan, baseline: &KernelPlan) -> f64 {
+    simulate(spec, baseline).seconds / simulate(spec, ours).seconds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::spec::gtx_1080ti;
+
+    fn plan(rounds: usize, bytes: f64, fma: f64) -> KernelPlan {
+        let g = gtx_1080ti();
+        KernelPlan {
+            name: "test".into(),
+            rounds: (0..rounds)
+                .map(|_| Round::new(bytes, 128, fma))
+                .collect(),
+            sms_active: g.sm_count,
+            threads_per_sm: 1024,
+            compute_efficiency: 0.9,
+            output_bytes: 0.0,
+            smem_bytes_per_sm: 48 * 1024,
+            total_fma: fma * rounds as f64 * g.sm_count as f64,
+            launch_overhead_cycles: 4_000.0,
+        }
+    }
+
+    #[test]
+    fn gflops_consistent_with_time() {
+        let g = gtx_1080ti();
+        let p = plan(16, 1e4, 1e6);
+        let r = simulate(&g, &p);
+        let expect = 2.0 * p.total_fma / r.seconds / 1e9;
+        assert!((r.gflops - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_below_one() {
+        let g = gtx_1080ti();
+        for (bytes, fma) in [(1e3, 1e7), (1e6, 1e4), (1e5, 1e6)] {
+            let r = simulate(&g, &plan(8, bytes, fma));
+            assert!(r.efficiency > 0.0 && r.efficiency < 1.0, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn compute_rich_plan_approaches_compute_efficiency() {
+        // lots of FMAs per byte: the only loss is compute_efficiency + overheads
+        let g = gtx_1080ti();
+        let r = simulate(&g, &plan(64, 1e3, 5e7));
+        assert!(r.efficiency > 0.8, "efficiency={}", r.efficiency);
+        assert_eq!(r.bottleneck, "compute");
+    }
+
+    #[test]
+    fn smem_overflow_panics() {
+        let g = gtx_1080ti();
+        let mut p = plan(2, 1e4, 1e5);
+        p.smem_bytes_per_sm = g.shared_mem_bytes + 1;
+        assert!(std::panic::catch_unwind(|| simulate(&g, &p)).is_err());
+    }
+
+    #[test]
+    fn fewer_active_sms_is_slower() {
+        let g = gtx_1080ti();
+        let full = plan(16, 1e4, 1e6);
+        let mut half = plan(32, 1e4, 1e6); // same total work on half the SMs
+        half.sms_active = g.sm_count / 2;
+        half.total_fma = full.total_fma;
+        let t_full = simulate(&g, &full).seconds;
+        let t_half = simulate(&g, &half).seconds;
+        assert!(t_half > 1.5 * t_full, "full={t_full} half={t_half}");
+    }
+
+    #[test]
+    fn speedup_identity() {
+        let g = gtx_1080ti();
+        let p = plan(8, 1e4, 1e6);
+        assert!((speedup(&g, &p, &p) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fma_per_byte_definition() {
+        let g = gtx_1080ti();
+        let p = plan(10, 1e4, 1e6);
+        let expect = p.total_fma / (1e4 * 10.0 * g.sm_count as f64);
+        assert!((p.fma_per_byte() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn writeback_costs_time() {
+        let g = gtx_1080ti();
+        let a = plan(8, 1e4, 1e6);
+        let mut b = plan(8, 1e4, 1e6);
+        b.output_bytes = 1e8;
+        assert!(simulate(&g, &b).seconds > simulate(&g, &a).seconds);
+    }
+}

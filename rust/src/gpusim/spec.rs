@@ -1,0 +1,244 @@
+//! GPU hardware specifications — Table 1 of the paper, plus derived
+//! quantities (N_FMA, V_s, thread/warp requirements).
+//!
+//! The paper's whole argument is parameterized by these numbers; the
+//! simulator and the analytic model both read them from here, and the
+//! Table-1 unit tests pin every derived value to the paper's.
+
+/// Static hardware parameters of one GPU (Table 1 rows).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub architecture: &'static str,
+    /// global memory latency for single-precision loads, clock cycles
+    /// (measured by the microbenchmarks of Mei & Chu [5])
+    pub mem_latency_cycles: u32,
+    /// peak DRAM bandwidth, GB/s
+    pub bandwidth_gb_s: f64,
+    /// base clock, MHz
+    pub clock_mhz: f64,
+    /// number of streaming multiprocessors
+    pub sm_count: u32,
+    /// CUDA cores per SM
+    pub cores_per_sm: u32,
+    /// FMA operations per core per clock ("Flops/clock cycle/core" = 2)
+    pub fma_per_core_cycle: u32,
+    /// shared memory per SM, bytes (S_shared)
+    pub shared_mem_bytes: u32,
+    /// 32-bit registers per SM
+    pub registers_per_sm: u32,
+    /// max resident threads per SM
+    pub max_threads_per_sm: u32,
+    pub warp_size: u32,
+}
+
+/// GeForce GTX 1080Ti — the paper's primary testbed (Table 1).
+pub fn gtx_1080ti() -> GpuSpec {
+    GpuSpec {
+        name: "GTX 1080Ti",
+        architecture: "Pascal",
+        mem_latency_cycles: 258,
+        bandwidth_gb_s: 484.0,
+        clock_mhz: 1480.0,
+        sm_count: 28,
+        cores_per_sm: 128,
+        fma_per_core_cycle: 2,
+        shared_mem_bytes: 96 * 1024,
+        registers_per_sm: 64 * 1024,
+        max_threads_per_sm: 2048,
+        warp_size: 32,
+    }
+}
+
+/// GTX Titan X (Maxwell) — the paper's §4 portability check.
+/// Latency from the Mei & Chu [5] Maxwell measurements.
+pub fn titan_x_maxwell() -> GpuSpec {
+    GpuSpec {
+        name: "GTX Titan X",
+        architecture: "Maxwell",
+        mem_latency_cycles: 368,
+        bandwidth_gb_s: 336.5,
+        clock_mhz: 1000.0,
+        sm_count: 24,
+        cores_per_sm: 128,
+        fma_per_core_cycle: 2,
+        shared_mem_bytes: 96 * 1024,
+        registers_per_sm: 64 * 1024,
+        max_threads_per_sm: 2048,
+        warp_size: 32,
+    }
+}
+
+/// Tesla K40 (Kepler) — the GPU class used by [1] (DAC'17); needed for
+/// the paper's "our GPU's peak is 2.4x theirs" normalization in §4.
+pub fn tesla_k40() -> GpuSpec {
+    GpuSpec {
+        name: "Tesla K40",
+        architecture: "Kepler",
+        mem_latency_cycles: 230,
+        bandwidth_gb_s: 288.0,
+        clock_mhz: 745.0,
+        sm_count: 15,
+        cores_per_sm: 192,
+        fma_per_core_cycle: 2,
+        shared_mem_bytes: 48 * 1024,
+        registers_per_sm: 64 * 1024,
+        max_threads_per_sm: 2048,
+        warp_size: 32,
+    }
+}
+
+impl GpuSpec {
+    pub fn clock_hz(&self) -> f64 {
+        self.clock_mhz * 1e6
+    }
+
+    /// DRAM transmission rate in bytes per clock cycle (exact).
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.bandwidth_gb_s * 1e9 / self.clock_hz()
+    }
+
+    /// Table 1's "Transmission Rate (Byte/clock cycle)" — the paper
+    /// truncates (484e9 / 1.48e9 = 327.02... -> 327).
+    pub fn bytes_per_cycle_int(&self) -> u64 {
+        self.bytes_per_cycle() as u64
+    }
+
+    /// FMA operations per SM per clock: cores x 2 (= 256 on both testbeds).
+    pub fn fma_per_sm_cycle(&self) -> u64 {
+        (self.cores_per_sm * self.fma_per_core_cycle) as u64
+    }
+
+    /// Peak FMA throughput of the whole chip, ops/s.
+    pub fn peak_fma_per_s(&self) -> f64 {
+        self.fma_per_sm_cycle() as f64 * self.sm_count as f64 * self.clock_hz()
+    }
+
+    /// Peak single-precision FLOP/s under the paper's own convention
+    /// (2 FMA/core/cycle — Table 1's "Flops/clock cycle/core = 2", the
+    /// reading the paper's N_FMA = 66,048 derivation uses; it doubles the
+    /// datasheet number uniformly, so all ratios are unaffected).
+    pub fn peak_flops(&self) -> f64 {
+        2.0 * self.peak_fma_per_s()
+    }
+
+    /// N_FMA — §2.2: FMA ops per SM needed to cover the memory latency
+    /// with compute: latency x cores x 2 (= 66,048 on the 1080Ti).
+    pub fn n_fma(&self) -> u64 {
+        self.mem_latency_cycles as u64 * self.fma_per_sm_cycle()
+    }
+
+    /// Table 1's "Data Requirement (bytes)": the volume that must be in
+    /// flight to cover the latency, = transmission-rate x latency
+    /// (327 x 258 = 84,366 on the 1080Ti).
+    pub fn data_requirement_bytes(&self) -> u64 {
+        self.bytes_per_cycle_int() * self.mem_latency_cycles as u64
+    }
+
+    /// Threads needed chip-wide to issue that volume at 4 B per thread.
+    pub fn threads_required_total(&self) -> u64 {
+        (self.data_requirement_bytes() + 3) / 4
+    }
+
+    /// Table 1's "Thread Requirement/SM": per-SM share rounded up to a
+    /// whole number of warps (768 = 24 warps on the 1080Ti).
+    pub fn threads_required_per_sm(&self) -> u64 {
+        let per_sm = (self.threads_required_total() + self.sm_count as u64 - 1) / self.sm_count as u64;
+        let w = self.warp_size as u64;
+        (per_sm + w - 1) / w * w
+    }
+
+    /// Table 1's "Warp Requirement/SM" (24 on the 1080Ti).
+    pub fn warps_required_per_sm(&self) -> u64 {
+        self.threads_required_per_sm() / self.warp_size as u64
+    }
+
+    /// Table 1's "Data Requirement/SM (bytes)" (3,072 on the 1080Ti).
+    pub fn data_requirement_per_sm(&self) -> u64 {
+        self.threads_required_per_sm() * 4
+    }
+
+    /// V_s — §2.2: the minimum volume for the "large continuous transfer"
+    /// strategy: per-SM thread requirement x 4 B x SM count
+    /// (768 x 4 x 28 = 86,016 on the 1080Ti; >= data_requirement_bytes).
+    pub fn v_s(&self) -> u64 {
+        self.data_requirement_per_sm() * self.sm_count as u64
+    }
+
+    /// Convert cycles to seconds at base clock.
+    pub fn cycles_to_secs(&self, cycles: f64) -> f64 {
+        cycles / self.clock_hz()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pin every derived value to Table 1 of the paper.
+    #[test]
+    fn table1_gtx_1080ti() {
+        let g = gtx_1080ti();
+        assert_eq!(g.mem_latency_cycles, 258);
+        assert_eq!(g.sm_count, 28);
+        assert_eq!(g.bytes_per_cycle_int(), 327, "Transmission Rate");
+        assert_eq!(g.data_requirement_bytes(), 84_366, "Data Requirement");
+        assert_eq!(g.threads_required_per_sm(), 768, "Thread Requirement/SM");
+        assert_eq!(g.warps_required_per_sm(), 24, "Warp Requirement/SM");
+        assert_eq!(g.data_requirement_per_sm(), 3_072, "Data Requirement/SM");
+        assert_eq!(g.fma_per_core_cycle, 2, "Flops/clock cycle/core");
+    }
+
+    #[test]
+    fn n_fma_is_66048() {
+        // §2.2: "N_FMA = 66,048 FMA operations (66,048 = 258 x N_cores x 2)"
+        assert_eq!(gtx_1080ti().n_fma(), 66_048);
+    }
+
+    #[test]
+    fn v_s_is_86016() {
+        // §2.2: "768 x 4 x 28 = 86,016 > 84,366"
+        let g = gtx_1080ti();
+        assert_eq!(g.v_s(), 86_016);
+        assert!(g.v_s() > g.data_requirement_bytes());
+    }
+
+    #[test]
+    fn peak_flops_1080ti() {
+        // 28 SM x 128 cores x 2 FMA x 2 FLOP x 1.48 GHz ≈ 21.2 TFLOP/s
+        let g = gtx_1080ti();
+        let tflops = g.peak_flops() / 1e12;
+        assert!((tflops - 21.2).abs() < 0.5, "tflops={tflops}");
+    }
+
+    #[test]
+    fn titan_x_reasonable() {
+        let t = titan_x_maxwell();
+        // Under the paper's 2-FMA/core convention: 24 SM x 256 FMA x 2 FLOP
+        // x 1.0 GHz ≈ 12.3 TFLOP/s (datasheet: 6.1 — uniform 2x, see
+        // peak_flops doc).
+        let tflops = t.peak_flops() / 1e12;
+        assert!((tflops - 12.3).abs() < 0.5, "tflops={tflops}");
+    }
+
+    #[test]
+    fn k40_peak_ratio_matches_paper_normalization() {
+        // §4: "on GPU the peak performance of which is 2.4X faster than
+        // that used in [1]" — [1] targeted Kepler (K40-class).
+        let ratio = gtx_1080ti().peak_flops() / tesla_k40().peak_flops();
+        assert!((ratio - 2.4).abs() < 0.2, "ratio={ratio}");
+    }
+
+    #[test]
+    fn maxwell_n_fma_differs() {
+        // Maxwell's longer latency demands more in-flight FMAs per SM.
+        assert!(titan_x_maxwell().n_fma() > gtx_1080ti().n_fma());
+    }
+
+    #[test]
+    fn cycles_to_secs_roundtrip() {
+        let g = gtx_1080ti();
+        let s = g.cycles_to_secs(1.48e9);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

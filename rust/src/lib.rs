@@ -1,0 +1,24 @@
+//! # pasconv
+//!
+//! Reproduction of "Fast Convolution Kernels on Pascal GPU with High
+//! Memory Efficiency" (Chang, Onishi, Maruyama, 2022) as a three-layer
+//! Rust + JAX + Pallas system.  See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * `conv`      — problem domain + CPU oracle + the paper's workload suites
+//! * `gpusim`    — Pascal/Maxwell timing simulator (hardware substrate)
+//! * `analytic`  — the paper's closed-form model (N_FMA, V_s, P/Q, stride-fixed)
+//! * `plans`     — per-SM execution schedules for the paper's two kernels
+//! * `baselines` — cuDNN proxy (implicit GEMM), DAC'17 [1], Tan [16]
+//! * `runtime`   — PJRT client: load + execute the AOT'd HLO artifacts
+//! * `coordinator` — request router, dynamic batcher, worker pool, metrics
+//! * `util`      — offline stand-ins (rng/stats/bench/cli/prop/json)
+pub mod analytic;
+pub mod baselines;
+pub mod conv;
+pub mod coordinator;
+pub mod gpusim;
+pub mod plans;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,173 @@
+//! pasconv — CLI for the paper-reproduction stack.
+//!
+//! Subcommands:
+//!   list                          show the artifact registry
+//!   simulate --c --w --m --k      run one problem through the analytic
+//!                                 model + simulator vs all baselines
+//!   serve [--requests N]          demo serve loop: synthetic CNN traffic
+//!                                 through the coordinator, metrics out
+//!   sweep [--suite fig4|fig5]     print the paper's figure sweeps
+
+use std::time::Duration;
+
+use pasconv::baselines::{cudnn_proxy, dac17, tan128};
+use pasconv::conv::suites::{fig4_suite, fig5_suite};
+use pasconv::conv::ConvProblem;
+use pasconv::coordinator::{plan_advice, BatchConfig, Coordinator, Payload};
+use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell, GpuSpec};
+use pasconv::plans::plan_for;
+use pasconv::runtime::{default_artifact_dir, Runtime, Tensor};
+use pasconv::util::bench::Table;
+use pasconv::util::cli::Args;
+use pasconv::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let rc = match cmd {
+        "list" => cmd_list(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "sweep" => cmd_sweep(&args),
+        _ => {
+            eprintln!(
+                "usage: pasconv <list|simulate|serve|sweep> [flags]\n\
+                 \n  list                              artifact registry\
+                 \n  simulate --c C --w W --m M --k K  one problem, all kernels, simulated\
+                 \n  serve [--requests N]              demo serving loop with batching\
+                 \n  sweep [--suite fig4|fig5] [--gpu 1080ti|titanx]\n"
+            );
+            if cmd == "help" { 0 } else { 2 }
+        }
+    };
+    std::process::exit(rc);
+}
+
+fn cmd_list(_args: &Args) -> i32 {
+    let dir = default_artifact_dir();
+    let rt = match Runtime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("error: {e:#} — run `make artifacts`");
+            return 1;
+        }
+    };
+    println!("platform: {}", rt.platform());
+    println!("artifacts in {}:", dir.display());
+    let mut t = Table::new(&["name", "kind", "problem"]);
+    for name in rt.names() {
+        let a = rt.artifact(&name).unwrap();
+        let desc = a
+            .problem()
+            .map(|p| p.label())
+            .unwrap_or_else(|_| format!("PaperNet batch={}", a.batch().unwrap_or(0)));
+        t.row(&[name.clone(), format!("{:?}", a.kind), desc]);
+    }
+    t.print();
+    0
+}
+
+fn gpu_from(args: &Args) -> GpuSpec {
+    match args.get_or("gpu", "1080ti") {
+        "titanx" => titan_x_maxwell(),
+        _ => gtx_1080ti(),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let p = ConvProblem {
+        c: args.get_usize("c", 1),
+        wy: args.get_usize("w", 56),
+        wx: args.get_usize("w", 56),
+        m: args.get_usize("m", 64),
+        k: args.get_usize("k", 3),
+    };
+    if !p.valid() {
+        eprintln!("invalid problem {p:?}");
+        return 2;
+    }
+    let g = gpu_from(args);
+    println!("problem: {}   GPU: {}", p.label(), g.name);
+    println!("plan advice: {}", plan_advice(&p, &g));
+    let plans =
+        vec![plan_for(&p, &g), cudnn_proxy::plan(&p, &g), dac17::plan(&p, &g), tan128::plan(&p, &g)];
+    let ours = simulate(&g, &plans[0]).seconds;
+    let mut t =
+        Table::new(&["kernel", "time", "GFLOP/s", "eff", "SMs", "bottleneck", "FMA/B", "vs ours"]);
+    for plan in &plans {
+        let r = simulate(&g, plan);
+        t.row(&[
+            r.name.clone(),
+            format!("{:.1}µs", r.seconds * 1e6),
+            format!("{:.0}", r.gflops),
+            format!("{:.1}%", 100.0 * r.efficiency),
+            format!("{:.0}", r.sm_utilization * g.sm_count as f64),
+            r.bottleneck.to_string(),
+            format!("{:.1}", r.fma_per_byte),
+            format!("{:.2}x", r.seconds / ours),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let n = args.get_usize("requests", 256);
+    let dir = default_artifact_dir();
+    let mut c = match Coordinator::start(
+        &dir,
+        BatchConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#} — run `make artifacts`");
+            return 1;
+        }
+    };
+    println!("serving {n} synthetic PaperNet requests...");
+    let mut rng = Rng::new(0xFEED);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| c.submit(Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut rng) }))
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = c.metrics();
+    println!("served {ok}/{n} in {:.2}s  ({:.0} req/s)", dt, ok as f64 / dt);
+    println!("metrics: {}", m.to_json().render());
+    c.shutdown();
+    0
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let g = gpu_from(args);
+    let suite = match args.get_or("suite", "fig4") {
+        "fig5" => fig5_suite(),
+        _ => fig4_suite(),
+    };
+    let mut t = Table::new(&["problem", "ours", "cudnn-proxy", "speedup"]);
+    let mut speedups = vec![];
+    for p in suite {
+        let ours = simulate(&g, &plan_for(&p, &g)).seconds;
+        let base = simulate(&g, &cudnn_proxy::plan(&p, &g)).seconds;
+        speedups.push(base / ours);
+        t.row(&[
+            p.label(),
+            format!("{:.1}µs", ours * 1e6),
+            format!("{:.1}µs", base * 1e6),
+            format!("{:.2}x", base / ours),
+        ]);
+    }
+    t.print();
+    println!(
+        "average speedup on {}: {:.2}x",
+        g.name,
+        speedups.iter().sum::<f64>() / speedups.len() as f64
+    );
+    0
+}

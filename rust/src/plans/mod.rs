@@ -1,0 +1,34 @@
+//! Per-SM execution schedules for the paper's two kernels, consumed by
+//! `gpusim::simulate`.  `plan_for` is the router the coordinator and the
+//! benches use: single-channel problems go through the §3.1 P/Q
+//! procedure, multi-channel through the §3.2 stride-fixed block method.
+
+pub mod single_channel;
+pub mod stride_fixed;
+
+use crate::conv::ConvProblem;
+use crate::gpusim::{GpuSpec, KernelPlan};
+
+/// The paper's kernel for a problem (dispatch on C, as in §3).
+pub fn plan_for(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
+    if p.is_single_channel() {
+        single_channel::plan(p, spec)
+    } else {
+        stride_fixed::plan(p, spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::gtx_1080ti;
+
+    #[test]
+    fn dispatch_on_channel_count() {
+        let g = gtx_1080ti();
+        let s = plan_for(&ConvProblem::single(56, 64, 3), &g);
+        assert!(s.name.contains("single"), "{}", s.name);
+        let m = plan_for(&ConvProblem::multi(64, 56, 64, 3), &g);
+        assert!(m.name.contains("multi"), "{}", m.name);
+    }
+}

@@ -1,0 +1,190 @@
+//! §3.1 single-channel kernel -> per-SM round schedule.
+//!
+//! Builds a `KernelPlan` from the analytic `SingleChoice`:
+//!
+//! * **FilterSplit (method 1)**: each SM keeps its ceil(M/N_sm) filters
+//!   resident and streams the feature map in `P` pieces along y; round r
+//!   loads one map piece (contiguous rows -> Wx*4-byte segments) and
+//!   executes Th1 FMAs. Round 0 additionally loads the filter block
+//!   (contiguous in memory, Fig. 1(a)).
+//! * **MapSplit (method 2)**: each SM keeps its y-strip resident and
+//!   streams the filters in `Q` pieces; round r loads ceil(M/Q)*K*K*4
+//!   contiguous filter bytes and executes Th2 FMAs. Round 0 additionally
+//!   loads the map strip.
+//! * **Volume fallback**: everything in one round; the launch geometry's
+//!   1024 threads/SM stream > V_s bytes to keep the bus busy (§2.2
+//!   approach 2).
+
+use crate::analytic::occupancy::paper_launch;
+use crate::analytic::single::{choose, SingleChoice, SingleMethod};
+use crate::conv::{ConvProblem, BYTES_F32};
+use crate::gpusim::pipeline::combined_efficiency;
+use crate::gpusim::memory::segment_efficiency;
+use crate::gpusim::{GpuSpec, KernelPlan, Round};
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Build the paper's single-channel plan (choice made internally).
+pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
+    let choice = choose(p, spec);
+    plan_with_choice(p, spec, &choice)
+}
+
+/// Build the plan for an explicit `SingleChoice` (ablations force P/Q).
+pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> KernelPlan {
+    assert!(p.is_single_channel());
+    let launch = paper_launch(spec);
+    let threads = launch.threads_per_sm(spec);
+    let row_seg = (p.wx * BYTES_F32).min(128); // one map row is the fetch unit
+
+    let (rounds, sms_active, smem) = match c.method {
+        SingleMethod::FilterSplit => {
+            let m_per_sm = ceil_div(p.m, spec.sm_count as usize);
+            let sms = ceil_div(p.m, m_per_sm).min(spec.sm_count as usize) as u32;
+            let filter_bytes = (m_per_sm * p.k * p.k * BYTES_F32) as f64;
+            let piece_rows = ceil_div(p.wy, c.p);
+            // every SM streams the same map piece against its own filters:
+            // the piece leaves DRAM once and is broadcast through L2, so
+            // the per-SM DRAM share divides by the SMs reading it
+            let piece_bytes = (piece_rows * p.wx * BYTES_F32) as f64 / sms as f64;
+            let halo_bytes = ((p.k - 1) * p.wx * BYTES_F32) as f64 / sms as f64;
+            let fma = c.th1 as f64;
+            let filter_seg = (m_per_sm * p.k * p.k * BYTES_F32).min(128);
+            let mut rounds = Vec::with_capacity(c.p);
+            for r in 0..c.p {
+                if r == 0 {
+                    let eff = combined_efficiency(&[
+                        (filter_bytes, segment_efficiency(filter_seg)),
+                        (piece_bytes + halo_bytes, segment_efficiency(row_seg)),
+                    ]);
+                    rounds.push(Round::with_efficiency(
+                        filter_bytes + piece_bytes + halo_bytes,
+                        eff,
+                        fma,
+                    ));
+                } else {
+                    // subsequent pieces reuse the K-1 halo rows kept on chip
+                    rounds.push(Round::new(piece_bytes, row_seg, fma));
+                }
+            }
+            (rounds, sms, c.d1_bytes)
+        }
+        SingleMethod::MapSplit => {
+            let wy_per_sm = ceil_div(p.wy, spec.sm_count as usize);
+            let sms = ceil_div(p.wy, wy_per_sm).min(spec.sm_count as usize) as u32;
+            let strip_bytes = ((wy_per_sm + p.k - 1) * p.wx * BYTES_F32) as f64;
+            let m_per_round = ceil_div(p.m, c.q);
+            // every SM streams the same filter piece against its own map
+            // strip: DRAM once, L2 broadcast (mirror of method 1's map)
+            let piece_bytes = (m_per_round * p.k * p.k * BYTES_F32) as f64 / sms as f64;
+            let filter_seg = (m_per_round * p.k * p.k * BYTES_F32).min(128);
+            let fma = c.th2 as f64;
+            let mut rounds = Vec::with_capacity(c.q);
+            for r in 0..c.q {
+                if r == 0 {
+                    let eff = combined_efficiency(&[
+                        (piece_bytes, segment_efficiency(filter_seg)),
+                        (strip_bytes, segment_efficiency(row_seg)),
+                    ]);
+                    rounds.push(Round::with_efficiency(strip_bytes + piece_bytes, eff, fma));
+                } else {
+                    rounds.push(Round::new(piece_bytes, filter_seg, fma));
+                }
+            }
+            (rounds, sms, c.d2_bytes)
+        }
+    };
+
+    KernelPlan {
+        name: format!(
+            "ours-single[{:?} P={} Q={}{}]",
+            c.method,
+            c.p,
+            c.q,
+            if c.uses_prefetch { "" } else { " volume" }
+        ),
+        rounds,
+        sms_active,
+        threads_per_sm: threads,
+        compute_efficiency: 0.9,
+        output_bytes: (p.out_elems() * BYTES_F32) as f64,
+        smem_bytes_per_sm: smem.min(spec.shared_mem_bytes as usize) as u32,
+        total_fma: p.fma_ops() as f64,
+        launch_overhead_cycles: 4_000.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::suites::fig4_suite;
+    use crate::gpusim::{gtx_1080ti, simulate};
+
+    #[test]
+    fn plans_simulate_for_all_fig4_cases() {
+        let g = gtx_1080ti();
+        for p in fig4_suite() {
+            let plan = plan(&p, &g);
+            let r = simulate(&g, &plan);
+            assert!(r.seconds > 0.0 && r.seconds.is_finite(), "{}: {:?}", p.label(), r);
+            assert!(r.efficiency <= 1.0, "{}: eff {}", p.label(), r.efficiency);
+        }
+    }
+
+    #[test]
+    fn round_count_matches_division() {
+        let g = gtx_1080ti();
+        for p in fig4_suite() {
+            let c = choose(&p, &g);
+            let plan = plan_with_choice(&p, &g, &c);
+            let expect = match c.method {
+                SingleMethod::FilterSplit => c.p,
+                SingleMethod::MapSplit => c.q,
+            };
+            assert_eq!(plan.rounds.len(), expect, "{}", p.label());
+        }
+    }
+
+    #[test]
+    fn dram_traffic_at_least_compulsory() {
+        // the plan must load at least the whole input once
+        let g = gtx_1080ti();
+        for p in fig4_suite() {
+            let pl = plan(&p, &g);
+            // filters are replicated across SMs under MapSplit (and the map
+            // under FilterSplit) so per-problem traffic >= one full input
+            assert!(
+                pl.dram_load_bytes() >= 0.99 * (p.map_elems() * BYTES_F32) as f64,
+                "{}: {} < map bytes",
+                p.label(),
+                pl.dram_load_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn total_fma_is_problem_fma() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::single(224, 64, 3);
+        assert_eq!(plan(&p, &g).total_fma, p.fma_ops() as f64);
+    }
+
+    #[test]
+    fn prefetch_cases_mostly_hide_latency() {
+        // the point of the P/Q procedure: Fig.4 cases that picked prefetch
+        // should simulate with latency hidden in the steady state
+        let g = gtx_1080ti();
+        let mut checked = 0;
+        for p in fig4_suite() {
+            let c = choose(&p, &g);
+            if c.uses_prefetch && (c.p > 2 || c.q > 2) {
+                let r = simulate(&g, &plan_with_choice(&p, &g, &c));
+                assert!(r.stall_fraction < 0.4, "{}: stall {}", p.label(), r.stall_fraction);
+                checked += 1;
+            }
+        }
+        assert!(checked > 0, "no prefetch cases exercised");
+    }
+}

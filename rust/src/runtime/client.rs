@@ -1,0 +1,180 @@
+//! PJRT runtime — loads the AOT'd HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin):
+//!   PjRtClient::cpu() -> HloModuleProto::from_text_file ->
+//!   XlaComputation::from_proto -> client.compile -> execute.
+//!
+//! Compiled executables are cached by artifact name — compilation happens
+//! once per artifact per process, never on the serve path.  All HLO was
+//! lowered with `return_tuple=True`, so every result is a 1-tuple and is
+//! unwrapped with `to_tuple1()` (see python/compile/aot.py and
+//! /opt/xla-example/README.md for why text, not serialized protos).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{load_manifest, Artifact, ArtifactKind};
+use super::tensor::Tensor;
+
+/// Stats the runtime keeps per artifact (the coordinator exports these).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// The PJRT runtime: client + artifact registry + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: HashMap<String, ExecStats>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Open the artifact directory (expects `manifest.txt`; run
+    /// `make artifacts` to produce it).
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let artifacts = load_manifest(artifact_dir)?
+            .into_iter()
+            .map(|a| (a.name.clone(), a))
+            .collect();
+        Ok(Runtime {
+            client,
+            artifacts,
+            cache: HashMap::new(),
+            stats: HashMap::new(),
+            dir: artifact_dir.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// All artifacts of one kind, sorted by name.
+    pub fn artifacts_of_kind(&self, kind: ArtifactKind) -> Vec<&Artifact> {
+        let mut v: Vec<&Artifact> =
+            self.artifacts.values().filter(|a| a.kind == kind).collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Compile (or fetch the cached executable for) an artifact.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let art = self.artifact(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            art.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", art.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.cache.insert(name.to_string(), exe);
+        self.stats.entry(name.to_string()).or_default().compile_secs += dt;
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 tensors; returns the (single) output.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        self.execute_refs(name, &inputs.iter().collect::<Vec<_>>())
+    }
+
+    /// Execute without cloning the input tensors (hot-path variant: the
+    /// serve loop holds the request's tensors and must not copy them
+    /// again just to build the literals).
+    pub fn execute_refs(&mut self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.ensure_compiled(name)?;
+        let exe = self.cache.get(name).unwrap();
+
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            literals.push(
+                xla::Literal::vec1(&t.data)
+                    .reshape(&t.dims_i64())
+                    .with_context(|| format!("reshaping input to {:?}", t.shape))?,
+            );
+        }
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let shape = out.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<f32>().context("reading f32 output")?;
+
+        let s = self.stats.entry(name.to_string()).or_default();
+        s.executions += 1;
+        s.total_secs += dt;
+
+        Tensor::new(dims, data)
+    }
+
+    /// Execute a conv artifact, checking operand shapes against its manifest.
+    pub fn execute_conv(&mut self, name: &str, image: &Tensor, filters: &Tensor) -> Result<Tensor> {
+        let art = self.artifact(name)?;
+        let p = art.problem()?;
+        let want_img: Vec<usize> = match art.kind {
+            ArtifactKind::ConvSingle => vec![p.wy, p.wx],
+            _ => vec![p.c, p.wy, p.wx],
+        };
+        let want_flt: Vec<usize> = match art.kind {
+            ArtifactKind::ConvSingle => vec![p.m, p.k, p.k],
+            _ => vec![p.m, p.c, p.k, p.k],
+        };
+        if image.shape != want_img {
+            bail!("{name}: image shape {:?}, artifact wants {:?}", image.shape, want_img);
+        }
+        if filters.shape != want_flt {
+            bail!("{name}: filter shape {:?}, artifact wants {:?}", filters.shape, want_flt);
+        }
+        self.execute_refs(name, &[image, filters])
+    }
+
+    pub fn stats(&self, name: &str) -> Option<&ExecStats> {
+        self.stats.get(name)
+    }
+
+    pub fn all_stats(&self) -> &HashMap<String, ExecStats> {
+        &self.stats
+    }
+}
+
+/// Default artifact directory: `$PASCONV_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("PASCONV_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,209 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the rust runtime.
+//!
+//! One artifact per line, whitespace-separated `key=value` fields:
+//!
+//!   name=multi_c32_w14_m32_k3 file=multi_c32_w14_m32_k3.hlo.txt \
+//!       kind=conv_multi c=32 wy=14 wx=14 m=32 k=3 dtype=f32
+//!
+//! `#`-prefixed lines and blank lines are comments.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::conv::ConvProblem;
+
+/// What a compiled artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// (image (Wy,Wx), filters (M,K,K)) -> (out (M,Oy,Ox),)
+    ConvSingle,
+    /// (image (C,Wy,Wx), filters (M,C,K,K)) -> (out (M,Oy,Ox),)
+    ConvMulti,
+    /// same signature as ConvMulti, Implicit-GEMM numerics (baseline)
+    ConvIm2col,
+    /// same signature as ConvMulti, Winograd F(2x2,3x3) numerics (K=3)
+    ConvWinograd,
+    /// same signature as ConvMulti, FFT numerics (§1 category 2)
+    ConvFft,
+    /// (images (B,1,28,28)) -> (logits (B,10),) — PaperNet, weights baked
+    Cnn,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Result<ArtifactKind> {
+        Ok(match s {
+            "conv_single" => ArtifactKind::ConvSingle,
+            "conv_multi" => ArtifactKind::ConvMulti,
+            "conv_im2col" => ArtifactKind::ConvIm2col,
+            "conv_winograd" => ArtifactKind::ConvWinograd,
+            "conv_fft" => ArtifactKind::ConvFft,
+            "cnn" => ArtifactKind::Cnn,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub path: PathBuf,
+    fields: HashMap<String, String>,
+}
+
+impl Artifact {
+    pub fn field(&self, key: &str) -> Option<&str> {
+        self.fields.get(key).map(|s| s.as_str())
+    }
+
+    pub fn field_usize(&self, key: &str) -> Result<usize> {
+        self.field(key)
+            .ok_or_else(|| anyhow!("artifact {}: missing field {key}", self.name))?
+            .parse()
+            .with_context(|| format!("artifact {}: field {key} not an integer", self.name))
+    }
+
+    /// The conv problem a conv-kind artifact solves.
+    pub fn problem(&self) -> Result<ConvProblem> {
+        match self.kind {
+            ArtifactKind::ConvSingle => Ok(ConvProblem {
+                c: 1,
+                wy: self.field_usize("wy")?,
+                wx: self.field_usize("wx")?,
+                m: self.field_usize("m")?,
+                k: self.field_usize("k")?,
+            }),
+            ArtifactKind::ConvMulti
+            | ArtifactKind::ConvIm2col
+            | ArtifactKind::ConvWinograd
+            | ArtifactKind::ConvFft => Ok(ConvProblem {
+                c: self.field_usize("c")?,
+                wy: self.field_usize("wy")?,
+                wx: self.field_usize("wx")?,
+                m: self.field_usize("m")?,
+                k: self.field_usize("k")?,
+            }),
+            ArtifactKind::Cnn => bail!("artifact {} is a CNN, not a conv", self.name),
+        }
+    }
+
+    /// Batch size of a CNN artifact.
+    pub fn batch(&self) -> Result<usize> {
+        self.field_usize("batch")
+    }
+}
+
+/// Parse a manifest line into an Artifact (paths relative to `dir`).
+pub fn parse_line(dir: &Path, line: &str) -> Result<Artifact> {
+    let mut fields = HashMap::new();
+    for tok in line.split_whitespace() {
+        let (k, v) =
+            tok.split_once('=').ok_or_else(|| anyhow!("malformed manifest token {tok:?}"))?;
+        fields.insert(k.to_string(), v.to_string());
+    }
+    let name =
+        fields.get("name").ok_or_else(|| anyhow!("manifest line missing name: {line:?}"))?.clone();
+    let kind = ArtifactKind::parse(
+        fields.get("kind").ok_or_else(|| anyhow!("artifact {name}: missing kind"))?,
+    )?;
+    let file = fields.get("file").ok_or_else(|| anyhow!("artifact {name}: missing file"))?;
+    Ok(Artifact { name, kind, path: dir.join(file), fields })
+}
+
+/// Load `manifest.txt` from an artifact directory.
+pub fn load_manifest(dir: &Path) -> Result<Vec<Artifact>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+    let mut out = vec![];
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        out.push(parse_line(dir, line)?);
+    }
+    if out.is_empty() {
+        bail!("manifest {} has no artifacts", path.display());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> PathBuf {
+        PathBuf::from("/tmp")
+    }
+
+    #[test]
+    fn parses_conv_line() {
+        let a = parse_line(
+            &dir(),
+            "name=multi_c32 file=multi_c32.hlo.txt kind=conv_multi c=32 wy=14 wx=14 m=32 k=3 dtype=f32",
+        )
+        .unwrap();
+        assert_eq!(a.name, "multi_c32");
+        assert_eq!(a.kind, ArtifactKind::ConvMulti);
+        assert_eq!(a.path, PathBuf::from("/tmp/multi_c32.hlo.txt"));
+        let p = a.problem().unwrap();
+        assert_eq!((p.c, p.wy, p.wx, p.m, p.k), (32, 14, 14, 32, 3));
+    }
+
+    #[test]
+    fn parses_cnn_line() {
+        let a = parse_line(
+            &dir(),
+            "name=papernet_b8 file=p.hlo.txt kind=cnn batch=8 classes=10 in_c=1 in_h=28 in_w=28 dtype=f32",
+        )
+        .unwrap();
+        assert_eq!(a.kind, ArtifactKind::Cnn);
+        assert_eq!(a.batch().unwrap(), 8);
+        assert!(a.problem().is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_line(&dir(), "name=x file=y.hlo.txt").is_err()); // no kind
+        assert!(parse_line(&dir(), "kind=conv_multi file=y.hlo.txt").is_err()); // no name
+        assert!(parse_line(&dir(), "name=x kind=wat file=y.hlo.txt").is_err()); // bad kind
+        assert!(parse_line(&dir(), "name=x kind=conv_multi file=y.hlo.txt junk").is_err());
+    }
+
+    #[test]
+    fn missing_fields_reported_with_artifact_name() {
+        let a = parse_line(&dir(), "name=x file=y.hlo.txt kind=conv_multi").unwrap();
+        let err = a.problem().unwrap_err().to_string();
+        assert!(err.contains('x'), "{err}");
+    }
+
+    #[test]
+    fn single_channel_problem_has_c1() {
+        let a = parse_line(
+            &dir(),
+            "name=s file=s.hlo.txt kind=conv_single wy=32 wx=32 m=16 k=3",
+        )
+        .unwrap();
+        assert!(a.problem().unwrap().is_single_channel());
+    }
+
+    #[test]
+    fn load_manifest_real_artifacts_if_built() {
+        // integration-flavoured: only runs when `make artifacts` has run
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            return;
+        }
+        let arts = load_manifest(&dir).unwrap();
+        assert!(arts.len() >= 10);
+        assert!(arts.iter().any(|a| a.kind == ArtifactKind::Cnn));
+        for a in &arts {
+            assert!(a.path.exists(), "{} missing", a.path.display());
+        }
+    }
+}

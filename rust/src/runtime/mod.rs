@@ -1,0 +1,12 @@
+//! PJRT runtime: the bridge between the rust serve path and the AOT'd
+//! JAX/Pallas artifacts.  `manifest` is the aot.py contract, `tensor` the
+//! wire type, `client` the PJRT wrapper with an executable cache.
+//! Python never runs here — artifacts are plain HLO text on disk.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{default_artifact_dir, ExecStats, Runtime};
+pub use manifest::{Artifact, ArtifactKind};
+pub use tensor::Tensor;

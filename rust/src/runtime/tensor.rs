@@ -1,0 +1,131 @@
+//! Minimal dense f32 tensor — the runtime's wire type between the
+//! coordinator and the PJRT executables.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Standard-normal random tensor (synthetic workloads).
+    pub fn randn(shape: Vec<usize>, rng: &mut Rng) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: rng.normal_vec(n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Shape as the i64 dims PJRT literals want.
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+
+    /// Slice the leading axis: rows [lo, hi) of axis 0.
+    pub fn slice_axis0(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        if self.shape.is_empty() || hi > self.shape[0] || lo > hi {
+            bail!("slice [{lo},{hi}) out of bounds for shape {:?}", self.shape);
+        }
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Ok(Tensor { shape, data: self.data[lo * row..hi * row].to_vec() })
+    }
+
+    /// Stack tensors along a new leading axis (all shapes must match).
+    pub fn stack(parts: &[Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("stack of zero tensors");
+        }
+        let inner = &parts[0].shape;
+        let mut data = Vec::with_capacity(parts.len() * parts[0].len());
+        for p in parts {
+            if &p.shape != inner {
+                bail!("stack shape mismatch: {:?} vs {:?}", p.shape, inner);
+            }
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(inner);
+        Ok(Tensor { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_dims() {
+        let t = Tensor::zeros(vec![2, 4]);
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.dims_i64(), vec![2, 4]);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        assert_eq!(Tensor::randn(vec![4], &mut r1), Tensor::randn(vec![4], &mut r2));
+    }
+
+    #[test]
+    fn slice_axis0_rows() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let s = t.slice_axis0(1, 3).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![3., 4., 5., 6.]);
+        assert!(t.slice_axis0(2, 4).is_err());
+    }
+
+    #[test]
+    fn stack_roundtrips_slice() {
+        let a = Tensor::new(vec![2], vec![1., 2.]).unwrap();
+        let b = Tensor::new(vec![2], vec![3., 4.]).unwrap();
+        let s = Tensor::stack(&[a.clone(), b]).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.slice_axis0(0, 1).unwrap().data, a.data);
+    }
+
+    #[test]
+    fn stack_rejects_mismatched_shapes() {
+        let a = Tensor::zeros(vec![2]);
+        let b = Tensor::zeros(vec![3]);
+        assert!(Tensor::stack(&[a, b]).is_err());
+    }
+}

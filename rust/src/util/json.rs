@@ -1,0 +1,137 @@
+//! Minimal JSON writer (serde is not in the offline vendor set).
+//!
+//! Benches and the coordinator's metrics endpoint emit machine-readable
+//! results with this; only writing is needed (nothing in the repo parses
+//! JSON back — the manifest uses a simpler key=value format).
+
+use std::collections::BTreeMap;
+
+/// A JSON value. BTreeMap keeps object key order deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+
+    pub fn set(mut self, key: &str, val: Json) -> Json {
+        if let Json::Obj(ref mut m) = self {
+            m.insert(key.to_string(), val);
+        } else {
+            panic!("set on non-object");
+        }
+        self
+    }
+
+    pub fn render(&self) -> String {
+        match self {
+            Json::Null => "null".into(),
+            Json::Bool(b) => b.to_string(),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    // integers render without trailing .0
+                    if x.fract() == 0.0 && x.abs() < 1e15 {
+                        format!("{}", *x as i64)
+                    } else {
+                        format!("{x}")
+                    }
+                } else {
+                    "null".into() // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => escape(s),
+            Json::Arr(xs) => {
+                let inner: Vec<String> = xs.iter().map(|x| x.render()).collect();
+                format!("[{}]", inner.join(","))
+            }
+            Json::Obj(m) => {
+                let inner: Vec<String> =
+                    m.iter().map(|(k, v)| format!("{}:{}", escape(k), v.render())).collect();
+                format!("{{{}}}", inner.join(","))
+            }
+        }
+    }
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::from(true).render(), "true");
+        assert_eq!(Json::from(3.0).render(), "3");
+        assert_eq!(Json::from(3.5).render(), "3.5");
+        assert_eq!(Json::from("hi").render(), "\"hi\"");
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn object_deterministic_order() {
+        let j = Json::obj().set("b", 1.0.into()).set("a", 2.0.into());
+        assert_eq!(j.render(), "{\"a\":2,\"b\":1}");
+    }
+
+    #[test]
+    fn array_and_nesting() {
+        let j = Json::Arr(vec![Json::from(1.0), Json::obj().set("k", "v".into())]);
+        assert_eq!(j.render(), "[1,{\"k\":\"v\"}]");
+    }
+
+    #[test]
+    fn string_escaping() {
+        assert_eq!(Json::from("a\"b\\c\nd").render(), "\"a\\\"b\\\\c\\nd\"");
+    }
+}

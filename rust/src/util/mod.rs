@@ -1,0 +1,11 @@
+//! Offline stand-ins for crates missing from the vendored registry:
+//! `rng` (rand), `stats`+`bench` (criterion), `cli` (clap), `prop`
+//! (proptest), `json` (serde_json). Each is the minimal surface the rest
+//! of the repo needs, fully unit-tested.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,152 @@
+//! In-repo property-test harness (proptest is not in the offline vendor
+//! set).  Deterministic seeded case generation + a simple halving shrinker
+//! for integer tuples; used by rust/tests/proptests.rs on the simulator
+//! and analytic-model invariants.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+/// Outcome of a single case check.
+pub type CheckResult = Result<(), String>;
+
+/// Run `prop` against `cases` generated inputs; on failure, attempt to
+/// shrink via `shrink` (returns candidate smaller inputs) and panic with
+/// the smallest failing case found.
+pub fn check<T, G, P, S>(cfg: &Config, mut gen: G, mut prop: P, shrink: S)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> CheckResult,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first shrink candidate
+            // that still fails, up to a bounded number of rounds.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            'shrinking: for _ in 0..64 {
+                for cand in shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'shrinking;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case_idx}, seed {seed}): {best_msg}\n  minimal input: {best:?}",
+                seed = cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: property over inputs with no shrinking.
+pub fn check_no_shrink<T, G, P>(cfg: &Config, gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> CheckResult,
+{
+    check(cfg, gen, prop, |_| vec![]);
+}
+
+/// Halving shrinker for a usize with a lower bound.
+pub fn shrink_usize(x: usize, lo: usize) -> Vec<usize> {
+    let mut out = vec![];
+    if x > lo {
+        out.push(lo);
+        let mid = lo + (x - lo) / 2;
+        if mid != lo && mid != x {
+            out.push(mid);
+        }
+        if x - 1 != lo {
+            out.push(x - 1);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check_no_shrink(
+            &Config { cases: 64, seed: 1 },
+            |r| r.range_usize(0, 100),
+            |&x| if x <= 100 { Ok(()) } else { Err("out of range".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check_no_shrink(
+            &Config { cases: 64, seed: 2 },
+            |r| r.range_usize(0, 100),
+            |&x| if x < 40 { Ok(()) } else { Err(format!("{x} >= 40")) },
+        );
+    }
+
+    #[test]
+    fn shrinker_reduces_failure() {
+        // Property "x < 40" fails for x >= 40; the minimal failing input
+        // reachable through shrink_usize(_, 0) should be well below the
+        // first random failure.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                &Config { cases: 64, seed: 3 },
+                |r| r.range_usize(0, 1000),
+                |&x| if x < 40 { Ok(()) } else { Err(format!("{x}")) },
+                |&x| shrink_usize(x, 0),
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // shrank to exactly the boundary
+        assert!(msg.contains("minimal input: 40"), "msg: {msg}");
+    }
+
+    #[test]
+    fn shrink_usize_candidates() {
+        assert!(shrink_usize(10, 0).contains(&0));
+        assert!(shrink_usize(10, 0).contains(&5));
+        assert!(shrink_usize(10, 0).contains(&9));
+        assert!(shrink_usize(0, 0).is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let mut v = vec![];
+            check_no_shrink(
+                &Config { cases: 16, seed },
+                |r| r.range_usize(0, 1_000_000),
+                |&x| {
+                    v.push(x);
+                    Ok(())
+                },
+            );
+            v
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+}

@@ -1,0 +1,209 @@
+//! Integration: the full L3 serve path — submit -> queue -> dynamic
+//! batcher -> executor (PJRT) -> response — against real artifacts.
+//! Skips when `make artifacts` hasn't run.
+
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+use pasconv::conv::{conv2d_multi_cpu, max_abs_diff, ConvProblem};
+use pasconv::coordinator::{BatchConfig, Coordinator, Payload, Response};
+use pasconv::runtime::{default_artifact_dir, Runtime, Tensor};
+use pasconv::util::rng::Rng;
+
+fn coordinator_or_skip(cfg: BatchConfig) -> Option<Coordinator> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Coordinator::start(&dir, cfg).expect("coordinator"))
+}
+
+fn recv(rx: Receiver<Result<Response, String>>) -> Response {
+    rx.recv_timeout(Duration::from_secs(60)).expect("response within 60s").expect("ok response")
+}
+
+#[test]
+fn conv_request_round_trips_and_matches_oracle() {
+    let Some(mut c) = coordinator_or_skip(BatchConfig::default()) else { return };
+    let mut rng = Rng::new(11);
+    let p = ConvProblem::multi(32, 14, 32, 3);
+    let image = Tensor::randn(vec![32, 14, 14], &mut rng);
+    let filters = Tensor::randn(vec![32, 32, 3, 3], &mut rng);
+    let resp = c
+        .submit_wait(Payload::Conv { problem: p, image: image.clone(), filters: filters.clone() })
+        .unwrap();
+    assert_eq!(resp.artifact, "multi_c32_w14_m32_k3");
+    assert_eq!(resp.batch_size, 1);
+    let want = conv2d_multi_cpu(&p, &image.data, &filters.data);
+    assert!(max_abs_diff(&resp.output.data, &want) < 0.1, "numeric mismatch");
+    assert!(resp.latency_secs > 0.0);
+    c.shutdown();
+}
+
+#[test]
+fn single_channel_conv_routes() {
+    let Some(mut c) = coordinator_or_skip(BatchConfig::default()) else { return };
+    let mut rng = Rng::new(12);
+    let p = ConvProblem::single(32, 32, 3);
+    let image = Tensor::randn(vec![32, 32], &mut rng);
+    let filters = Tensor::randn(vec![32, 3, 3], &mut rng);
+    let resp = c.submit_wait(Payload::Conv { problem: p, image, filters }).unwrap();
+    assert_eq!(resp.artifact, "single_w32_m32_k3");
+    c.shutdown();
+}
+
+#[test]
+fn unknown_conv_shape_is_a_clean_error() {
+    let Some(mut c) = coordinator_or_skip(BatchConfig::default()) else { return };
+    let p = ConvProblem::single(17, 3, 3);
+    let err = c
+        .submit_wait(Payload::Conv {
+            problem: p,
+            image: Tensor::zeros(vec![17, 17]),
+            filters: Tensor::zeros(vec![3, 3, 3]),
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("no artifact"), "{err}");
+    assert_eq!(c.metrics().errors, 1);
+    c.shutdown();
+}
+
+#[test]
+fn cnn_requests_get_batched() {
+    // 8 concurrent requests with a generous window must share one batch
+    let Some(mut c) = coordinator_or_skip(BatchConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(50),
+    }) else {
+        return;
+    };
+    let mut rng = Rng::new(13);
+    let rxs: Vec<_> = (0..8)
+        .map(|_| c.submit(Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut rng) }))
+        .collect();
+    let responses: Vec<Response> = rxs.into_iter().map(recv).collect();
+    assert!(responses.iter().all(|r| r.output.shape == vec![1, 10]));
+    // the full batch closed by count, not deadline
+    assert!(responses.iter().any(|r| r.batch_size == 8), "batch sizes: {:?}",
+        responses.iter().map(|r| r.batch_size).collect::<Vec<_>>());
+    let m = c.metrics();
+    assert!(m.batches_executed < 8, "no batching happened");
+    assert!(m.mean_batch_size() > 1.0);
+    c.shutdown();
+}
+
+#[test]
+fn partial_batch_flushes_on_deadline() {
+    let Some(mut c) = coordinator_or_skip(BatchConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(5),
+    }) else {
+        return;
+    };
+    let mut rng = Rng::new(14);
+    let rx = c.submit(Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut rng) });
+    let resp = recv(rx);
+    assert_eq!(resp.batch_size, 1, "single request served without waiting forever");
+    assert_eq!(resp.output.shape, vec![1, 10]);
+    c.shutdown();
+}
+
+#[test]
+fn batched_results_match_unbatched_runtime() {
+    // padding + slicing in the batcher must not corrupt per-request rows
+    let Some(mut c) = coordinator_or_skip(BatchConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(20),
+    }) else {
+        return;
+    };
+    let mut rng = Rng::new(15);
+    let images: Vec<Tensor> = (0..3).map(|_| Tensor::randn(vec![1, 28, 28], &mut rng)).collect();
+    let rxs: Vec<_> =
+        images.iter().map(|im| c.submit(Payload::Cnn { image: im.clone() })).collect();
+    let responses: Vec<Response> = rxs.into_iter().map(recv).collect();
+
+    let mut rt = Runtime::new(&default_artifact_dir()).unwrap();
+    for (im, resp) in images.iter().zip(&responses) {
+        let mut batched = im.clone();
+        batched.shape.insert(0, 1); // (1,1,28,28)
+        let want = rt.execute("papernet_b1", &[batched]).unwrap();
+        let diff = max_abs_diff(&resp.output.data, &want.data);
+        assert!(diff < 1e-3, "batched row differs from direct execution: {diff}");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn sustained_load_all_served() {
+    let Some(mut c) = coordinator_or_skip(BatchConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+    }) else {
+        return;
+    };
+    let mut rng = Rng::new(16);
+    let n = 64;
+    let rxs: Vec<_> = (0..n)
+        .map(|_| c.submit(Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut rng) }))
+        .collect();
+    let responses: Vec<Response> = rxs.into_iter().map(recv).collect();
+    assert_eq!(responses.len(), n);
+    let m = c.metrics();
+    assert_eq!(m.responses, n as u64);
+    assert_eq!(m.errors, 0);
+    assert!(m.latency.quantile(0.5) > 0.0);
+    // ids are unique
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), n);
+    c.shutdown();
+}
+
+#[test]
+fn shutdown_flushes_pending_work() {
+    let Some(mut c) = coordinator_or_skip(BatchConfig {
+        max_batch: 8,
+        max_wait: Duration::from_secs(10), // long window: shutdown must flush
+    }) else {
+        return;
+    };
+    let mut rng = Rng::new(17);
+    let rx = c.submit(Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut rng) });
+    std::thread::sleep(Duration::from_millis(20));
+    c.shutdown();
+    let resp = rx.recv_timeout(Duration::from_secs(5)).expect("flushed at shutdown").unwrap();
+    assert_eq!(resp.output.shape, vec![1, 10]);
+}
+
+#[test]
+fn mixed_conv_and_cnn_traffic() {
+    let Some(mut c) = coordinator_or_skip(BatchConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+    }) else {
+        return;
+    };
+    let mut rng = Rng::new(18);
+    let p = ConvProblem::multi(64, 7, 64, 3);
+    let mut rxs = vec![];
+    for i in 0..12 {
+        if i % 3 == 0 {
+            rxs.push(c.submit(Payload::Conv {
+                problem: p,
+                image: Tensor::randn(vec![64, 7, 7], &mut rng),
+                filters: Tensor::randn(vec![64, 64, 3, 3], &mut rng),
+            }));
+        } else {
+            rxs.push(c.submit(Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut rng) }));
+        }
+    }
+    let responses: Vec<Response> = rxs.into_iter().map(recv).collect();
+    assert_eq!(responses.len(), 12);
+    let kinds: Vec<&str> = responses.iter().map(|r| r.artifact.as_str()).collect();
+    assert!(kinds.iter().any(|k| k.starts_with("multi_")));
+    assert!(kinds.iter().any(|k| k.starts_with("papernet")));
+    c.shutdown();
+}

@@ -1,0 +1,171 @@
+//! Integration: PJRT runtime vs the rust CPU oracle, over the real AOT'd
+//! artifacts.  This is the cross-language numeric gate: the Pallas
+//! kernels (checked against the jnp oracle by pytest) round-trip through
+//! HLO text -> PJRT and must agree with an independent rust
+//! implementation of eq. (1)/(2).
+//!
+//! Requires `make artifacts`; every test skips (prints a notice) if the
+//! artifact directory is absent so `cargo test` stays green pre-build.
+
+use pasconv::conv::{conv2d_multi_cpu, max_abs_diff};
+use pasconv::runtime::{default_artifact_dir, ArtifactKind, Runtime, Tensor};
+use pasconv::util::rng::Rng;
+
+const TOL: f32 = 2e-4;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built ({})", dir.display());
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+#[test]
+fn platform_is_cpu_pjrt() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let platform = rt.platform().to_lowercase();
+    assert!(platform.contains("cpu") || platform.contains("host"), "{platform}");
+}
+
+#[test]
+fn manifest_covers_all_kinds() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for kind in [
+        ArtifactKind::ConvSingle,
+        ArtifactKind::ConvMulti,
+        ArtifactKind::ConvIm2col,
+        ArtifactKind::Cnn,
+    ] {
+        assert!(!rt.artifacts_of_kind(kind).is_empty(), "no artifact of kind {kind:?}");
+    }
+}
+
+#[test]
+fn every_conv_artifact_matches_cpu_oracle() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(0xA11CE);
+    let mut checked = 0;
+    for kind in [ArtifactKind::ConvSingle, ArtifactKind::ConvMulti, ArtifactKind::ConvIm2col] {
+        let names: Vec<String> =
+            rt.artifacts_of_kind(kind).iter().map(|a| a.name.clone()).collect();
+        for name in names {
+            let p = rt.artifact(&name).unwrap().problem().unwrap();
+            let (img_shape, flt_shape) = if kind == ArtifactKind::ConvSingle {
+                (vec![p.wy, p.wx], vec![p.m, p.k, p.k])
+            } else {
+                (vec![p.c, p.wy, p.wx], vec![p.m, p.c, p.k, p.k])
+            };
+            let image = Tensor::randn(img_shape, &mut rng);
+            let filters = Tensor::randn(flt_shape, &mut rng);
+            let got = rt.execute_conv(&name, &image, &filters).expect(&name);
+            assert_eq!(got.shape, vec![p.m, p.oy(), p.ox()], "{name} shape");
+            let want = conv2d_multi_cpu(&p, &image.data, &filters.data);
+            let diff = max_abs_diff(&got.data, &want);
+            // tolerance scales with the contraction depth
+            let tol = TOL * (p.c * p.k * p.k) as f32;
+            assert!(diff < tol, "{name}: max|diff| = {diff} (tol {tol})");
+            checked += 1;
+        }
+    }
+    assert!(checked >= 9, "only {checked} conv artifacts checked");
+}
+
+#[test]
+fn stride_fixed_and_im2col_artifacts_agree() {
+    // the same operands through the §3.2 kernel and the Implicit-GEMM
+    // baseline kernel must produce identical numerics (different
+    // schedules, same math) — end-to-end through PJRT
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(7);
+    let p = rt.artifact("multi_c32_w14_m32_k3").unwrap().problem().unwrap();
+    let image = Tensor::randn(vec![p.c, p.wy, p.wx], &mut rng);
+    let filters = Tensor::randn(vec![p.m, p.c, p.k, p.k], &mut rng);
+    let a = rt.execute_conv("multi_c32_w14_m32_k3", &image, &filters).unwrap();
+    let b = rt.execute_conv("im2col_c32_w14_m32_k3", &image, &filters).unwrap();
+    let diff = max_abs_diff(&a.data, &b.data);
+    assert!(diff < 1e-3, "kernel disagreement: {diff}");
+}
+
+#[test]
+fn execute_conv_rejects_wrong_shapes() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(9);
+    let image = Tensor::randn(vec![3, 3], &mut rng);
+    let filters = Tensor::randn(vec![1, 1, 1], &mut rng);
+    assert!(rt.execute_conv("multi_c32_w14_m32_k3", &image, &filters).is_err());
+}
+
+#[test]
+fn papernet_executes_and_is_input_sensitive() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(1);
+    let b1 = Tensor::randn(vec![1, 1, 28, 28], &mut rng);
+    let out = rt.execute("papernet_b1", &[b1.clone()]).unwrap();
+    assert_eq!(out.shape, vec![1, 10]);
+    assert!(out.data.iter().all(|x| x.is_finite()));
+    let b1b = Tensor::randn(vec![1, 1, 28, 28], &mut rng);
+    let out2 = rt.execute("papernet_b1", &[b1b]).unwrap();
+    assert!(max_abs_diff(&out.data, &out2.data) > 1e-6, "logits insensitive to input");
+}
+
+#[test]
+fn papernet_batch8_consistent_with_batch1() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(2);
+    let batch = Tensor::randn(vec![8, 1, 28, 28], &mut rng);
+    let out8 = rt.execute("papernet_b8", &[batch.clone()]).unwrap();
+    assert_eq!(out8.shape, vec![8, 10]);
+    for i in 0..8 {
+        let single = batch.slice_axis0(i, i + 1).unwrap();
+        let out1 = rt.execute("papernet_b1", &[single]).unwrap();
+        let got = out8.slice_axis0(i, i + 1).unwrap();
+        let diff = max_abs_diff(&got.data, &out1.data);
+        assert!(diff < 1e-3, "row {i}: {diff}");
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(3);
+    let p = rt.artifact("single_w32_m32_k3").unwrap().problem().unwrap();
+    let image = Tensor::randn(vec![p.wy, p.wx], &mut rng);
+    let filters = Tensor::randn(vec![p.m, p.k, p.k], &mut rng);
+    for _ in 0..3 {
+        rt.execute_conv("single_w32_m32_k3", &image, &filters).unwrap();
+    }
+    let stats = rt.stats("single_w32_m32_k3").unwrap();
+    assert_eq!(stats.executions, 3);
+    assert!(stats.compile_secs > 0.0);
+    // compile happened exactly once: re-running didn't add compile time
+    let before = stats.compile_secs;
+    rt.execute_conv("single_w32_m32_k3", &image, &filters).unwrap();
+    let after = rt.stats("single_w32_m32_k3").unwrap().compile_secs;
+    assert_eq!(after, before);
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    assert!(rt.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn all_four_algorithm_families_agree_through_pjrt() {
+    // direct (stride-fixed), GEMM (im2col), Winograd and FFT artifacts of
+    // the same shape must produce the same numbers end-to-end — the §1
+    // taxonomy is executable, not just documented
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(0x7A11);
+    let p = rt.artifact("multi_c32_w14_m32_k3").unwrap().problem().unwrap();
+    let image = Tensor::randn(vec![p.c, p.wy, p.wx], &mut rng);
+    let filters = Tensor::randn(vec![p.m, p.c, p.k, p.k], &mut rng);
+    let direct = rt.execute_conv("multi_c32_w14_m32_k3", &image, &filters).unwrap();
+    for name in ["im2col_c32_w14_m32_k3", "winograd_c32_w14_m32_k3", "fft_c32_w14_m32_k3"] {
+        let other = rt.execute_conv(name, &image, &filters).unwrap();
+        let diff = max_abs_diff(&direct.data, &other.data);
+        assert!(diff < 5e-3, "{name} disagrees with direct: {diff}");
+    }
+}

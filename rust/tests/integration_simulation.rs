@@ -1,0 +1,169 @@
+//! Integration over the simulation stack: the paper's headline claims,
+//! checked end-to-end (analytic model -> plans -> baselines -> gpusim).
+//! These are the pass criteria of DESIGN.md §5 — shape, not absolutes.
+
+use pasconv::baselines::{cudnn_proxy, dac17, tan128};
+use pasconv::conv::suites::{fig4_suite, fig5_suite, FIG4_POINTS, FIG5_POINTS};
+use pasconv::conv::ConvProblem;
+use pasconv::gpusim::{gtx_1080ti, simulate, speedup, titan_x_maxwell};
+use pasconv::plans::plan_for;
+use pasconv::util::stats::geomean;
+
+/// Fig. 4 claim: "Our method is faster than Cudnn v7.1 in all tested
+/// cases. The performance gain is 1.5X to 5.6X, and its average is 2.6X."
+#[test]
+fn fig4_ours_beats_cudnn_everywhere() {
+    let g = gtx_1080ti();
+    let mut speedups = vec![];
+    for p in fig4_suite() {
+        let s = speedup(&g, &plan_for(&p, &g), &cudnn_proxy::plan(&p, &g));
+        assert!(s > 1.0, "{}: {s:.2}x — cudnn proxy wins", p.label());
+        speedups.push(s);
+    }
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    assert!(avg > 1.5 && avg < 4.0, "average {avg:.2} far from the paper's 2.6x");
+}
+
+/// Fig. 5 claim: "our method is faster than Cudnn in all tested cases,
+/// and the throughput has been increased by 1.05X to 2X, with an average
+/// increase of 1.39X."
+#[test]
+fn fig5_ours_beats_cudnn_everywhere() {
+    let g = gtx_1080ti();
+    let mut speedups = vec![];
+    for p in fig5_suite() {
+        let s = speedup(&g, &plan_for(&p, &g), &cudnn_proxy::plan(&p, &g));
+        assert!(s > 1.0, "{}: {s:.2}x — cudnn proxy wins", p.label());
+        speedups.push(s);
+    }
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    assert!(avg > 1.1 && avg < 2.2, "average {avg:.2} far from the paper's 1.39x");
+    // multi-channel gains are smaller than single-channel gains (paper:
+    // 2.6x vs 1.39x)
+    let g4: Vec<f64> = fig4_suite()
+        .iter()
+        .map(|p| speedup(&g, &plan_for(p, &g), &cudnn_proxy::plan(p, &g)))
+        .collect();
+    assert!(geomean(&g4) > geomean(&speedups), "single-channel advantage missing");
+}
+
+/// §1 claim: the gains against tile-based baselines concentrate on small
+/// maps — "[1] cannot handle the modern CNN models efficiently" (maps
+/// < 32).
+#[test]
+fn small_map_gains_exceed_large_map_gains() {
+    let g = gtx_1080ti();
+    let small = ConvProblem::multi(256, 14, 256, 3);
+    let large = ConvProblem::multi(64, 224, 64, 3);
+    let s_small = speedup(&g, &plan_for(&small, &g), &cudnn_proxy::plan(&small, &g));
+    let s_large = speedup(&g, &plan_for(&large, &g), &cudnn_proxy::plan(&large, &g));
+    assert!(
+        s_small > s_large,
+        "small-map gain {s_small:.2} <= large-map gain {s_large:.2}"
+    );
+}
+
+/// §4 claim vs [1]: "when K=3, our performance is 4X faster than [1]"
+/// (after normalizing their 2.4x-slower GPU; here both run on the same
+/// simulated 1080Ti, so the expected margin is ~4/2.4 ≈ 1.7x on the
+/// small-map suite where [1] degrades, and >= 1x everywhere).
+#[test]
+fn dac17_comparison_at_k3() {
+    let g = gtx_1080ti();
+    let mut speedups = vec![];
+    for &(w, c) in &FIG5_POINTS {
+        let p = ConvProblem::multi(c, w, c, 3);
+        let s = speedup(&g, &plan_for(&p, &g), &dac17::plan(&p, &g));
+        assert!(s > 0.95, "{}: dac17 wins ({s:.2})", p.label());
+        speedups.push(s);
+    }
+    let avg = geomean(&speedups);
+    assert!(avg > 1.3, "geomean vs dac17 = {avg:.2}, paper implies ~1.7");
+    // and the degradation is concentrated below 32 px (their documented flaw)
+    let small = ConvProblem::multi(256, 14, 256, 3);
+    let s_small = speedup(&g, &plan_for(&small, &g), &dac17::plan(&small, &g));
+    assert!(s_small > 2.0, "small-map margin vs [1] only {s_small:.2}x");
+}
+
+/// §3.2 trade-off vs [16]: ahead overall and clearly ahead where DRAM
+/// bandwidth binds (small M' multiplies [16]'s map traffic).  Model
+/// finding recorded in EXPERIMENTS.md: on a few small-map compute-bound
+/// shapes S=128's chunkier rounds win locally — the paper's S ∈ {32,64}
+/// restriction is not uniformly optimal under the latency-exposure
+/// model, but the aggregate claim holds.
+#[test]
+fn tan128_never_faster_overall() {
+    let g = gtx_1080ti();
+    let mut speedups = vec![];
+    for p in fig5_suite() {
+        let s = speedup(&g, &plan_for(&p, &g), &tan128::plan(&p, &g));
+        assert!(s > 0.6, "{}: tan128 wins by >40% ({s:.2})", p.label());
+        speedups.push(s);
+    }
+    assert!(geomean(&speedups) >= 1.0, "geomean {:.3}", geomean(&speedups));
+    // where bandwidth binds, the win is decisive
+    let p = ConvProblem::multi(128, 112, 128, 1);
+    let s = speedup(&g, &plan_for(&p, &g), &tan128::plan(&p, &g));
+    assert!(s > 1.3, "bandwidth-bound case only {s:.2}x");
+}
+
+/// §4 Maxwell claim: "our performance is faster than Cudnn on the same
+/// GPU [Titan X] by 1.3X to 3.7X in the single-channel ... and 1.08X to
+/// 1.8X in the multi-channel" — the approach transfers across
+/// architectures.
+#[test]
+fn maxwell_portability() {
+    let t = titan_x_maxwell();
+    for p in fig4_suite() {
+        let s = speedup(&t, &plan_for(&p, &t), &cudnn_proxy::plan(&p, &t));
+        assert!(s > 1.0, "single-channel {} on Titan X: {s:.2}", p.label());
+    }
+    let mut multi = vec![];
+    for p in fig5_suite() {
+        let s = speedup(&t, &plan_for(&p, &t), &cudnn_proxy::plan(&p, &t));
+        assert!(s > 0.95, "multi-channel {} on Titan X: {s:.2}", p.label());
+        multi.push(s);
+    }
+    assert!(geomean(&multi) > 1.05);
+}
+
+/// Fig. 4 regime check: the P/Q procedure switches to the V_s volume
+/// strategy exactly where the paper says prefetching starves (small
+/// single-channel maps), and to prefetch where work is plentiful.
+#[test]
+fn strategy_switches_with_problem_size() {
+    use pasconv::analytic::choose_single;
+    let g = gtx_1080ti();
+    let starved = choose_single(&ConvProblem::single(28, 32, 1), &g);
+    assert!(!starved.uses_prefetch, "28x28/M=32/K=1 should fall back to V_s");
+    let rich = choose_single(&ConvProblem::single(512, 512, 5), &g);
+    assert!(rich.uses_prefetch, "512x512/M=512/K=5 should prefetch");
+}
+
+/// Sanity on the figure suites themselves: reported times grow with work.
+#[test]
+fn simulated_time_grows_with_map_size_at_fixed_m() {
+    let g = gtx_1080ti();
+    let mut last = 0.0;
+    for w in [64, 128, 256, 512, 1024] {
+        let p = ConvProblem::single(w, 32, 3);
+        let t = simulate(&g, &plan_for(&p, &g)).seconds;
+        assert!(t > last, "W={w}: {t} <= {last}");
+        last = t;
+    }
+}
+
+/// The Fig. 4 suite spans both strategies — otherwise the figure would
+/// not exercise the paper's contribution.
+#[test]
+fn fig4_contains_both_strategies() {
+    use pasconv::analytic::choose_single;
+    let g = gtx_1080ti();
+    let choices: Vec<bool> =
+        fig4_suite().iter().map(|p| choose_single(p, &g).uses_prefetch).collect();
+    assert!(choices.iter().any(|&x| x));
+    assert!(choices.iter().any(|&x| !x));
+    // the sweep endpoints of the paper exist in the suite
+    assert!(FIG4_POINTS.contains(&(28, 512)));
+    assert!(FIG4_POINTS.contains(&(1024, 32)));
+}

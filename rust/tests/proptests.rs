@@ -1,0 +1,350 @@
+//! Property-based tests (in-repo harness, util::prop — proptest is not
+//! in the offline vendor set) over the simulator, the analytic model and
+//! the coordinator's batching policy.
+
+use std::time::{Duration, Instant};
+
+use pasconv::analytic::multi::{choose as choose_sf, working_set_bytes};
+use pasconv::analytic::single::{choose as choose_single, d1_bytes, d2_bytes, th1, th2};
+use pasconv::conv::{conv2d_multi_cpu, ConvProblem};
+use pasconv::coordinator::{BatchConfig, Batcher};
+use pasconv::gpusim::memory::{latency_exposure, segment_efficiency, transfer_cycles, AccessConfig};
+use pasconv::gpusim::pipeline::{combined_efficiency, simulate_pipeline, ExecConfig, Round};
+use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell};
+use pasconv::plans::plan_for;
+use pasconv::util::prop::{check_no_shrink, Config};
+use pasconv::util::rng::Rng;
+
+fn any_problem(r: &mut Rng) -> ConvProblem {
+    let k = *r.choose(&[1usize, 3, 5]);
+    let w = *r.choose(&[7usize, 14, 28, 56, 112, 224, 512]);
+    let c = *r.choose(&[1usize, 16, 64, 128, 256, 512]);
+    let m = *r.choose(&[16usize, 32, 64, 128, 256, 512]);
+    ConvProblem { c, wy: w.max(k), wx: w.max(k), m, k }
+}
+
+// ---------------------------------------------------------------------------
+// simulator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_segment_efficiency_bounded_and_unimodal_at_multiples() {
+    check_no_shrink(
+        &Config { cases: 512, seed: 1 },
+        |r| r.range_usize(1, 4096),
+        |&s| {
+            let e = segment_efficiency(s);
+            if !(e > 0.0 && e <= 1.0) {
+                return Err(format!("eff({s}) = {e} out of (0,1]"));
+            }
+            // a multiple of 32 never loses to any smaller segment
+            let m32 = s / 32 * 32;
+            if m32 >= 32 && segment_efficiency(m32) + 1e-12 < e {
+                return Err(format!("eff({m32}) < eff({s})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_transfer_cycles_monotone_in_bytes() {
+    let g = gtx_1080ti();
+    check_no_shrink(
+        &Config { cases: 256, seed: 2 },
+        |r| (r.range_usize(32, 4096), r.range_u64(1, 1_000_000) as f64),
+        |&(seg, bytes)| {
+            let cfg = AccessConfig { segment_bytes: seg, sms_active: 28, threads_per_sm: 1024 };
+            let a = transfer_cycles(&g, &cfg, bytes);
+            let b = transfer_cycles(&g, &cfg, bytes * 2.0);
+            if b <= a {
+                return Err(format!("2x bytes not slower: {a} vs {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_latency_exposure_in_unit_interval_and_monotone() {
+    let g = gtx_1080ti();
+    check_no_shrink(
+        &Config { cases: 256, seed: 3 },
+        |r| (r.range_u64(1, 4096) as u32, r.range_u64(1, 100_000) as f64),
+        |&(threads, bytes)| {
+            let e = latency_exposure(&g, threads, bytes);
+            if !(0.0..=1.0).contains(&e) {
+                return Err(format!("exposure {e}"));
+            }
+            // more bytes in flight can only reduce exposure
+            let e2 = latency_exposure(&g, threads, bytes * 2.0);
+            if e2 > e + 1e-12 {
+                return Err(format!("exposure rose with volume: {e} -> {e2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pipeline_total_bounded() {
+    // max(sum loads, sum computes) <= total <= prologue + sum both
+    let g = gtx_1080ti();
+    check_no_shrink(
+        &Config { cases: 128, seed: 4 },
+        |r| {
+            let n = r.range_usize(1, 24);
+            (0..n)
+                .map(|_| {
+                    Round::new(
+                        r.range_u64(0, 200_000) as f64,
+                        *r.choose(&[32usize, 64, 128]),
+                        r.range_u64(0, 2_000_000) as f64,
+                    )
+                })
+                .collect::<Vec<Round>>()
+        },
+        |rounds| {
+            let cfg = ExecConfig::new(&g, 1024);
+            let res = simulate_pipeline(&g, &cfg, rounds);
+            let lo = res.load_cycles_sum.max(res.compute_cycles_sum);
+            let hi = res.load_cycles_sum
+                + res.compute_cycles_sum
+                + cfg.launch_overhead_cycles
+                + g.mem_latency_cycles as f64;
+            if res.total_cycles + 1e-6 < lo {
+                return Err(format!("total {} < lower bound {lo}", res.total_cycles));
+            }
+            if res.total_cycles > hi + 1e-6 {
+                return Err(format!("total {} > upper bound {hi}", res.total_cycles));
+            }
+            if res.stall_cycles < 0.0 {
+                return Err("negative stall".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_combined_efficiency_between_min_and_max() {
+    check_no_shrink(
+        &Config { cases: 256, seed: 5 },
+        |r| {
+            let n = r.range_usize(1, 5);
+            (0..n)
+                .map(|_| (r.range_u64(1, 100_000) as f64, 0.05 + 0.95 * r.next_f64()))
+                .collect::<Vec<(f64, f64)>>()
+        },
+        |streams| {
+            let e = combined_efficiency(streams);
+            let lo = streams.iter().map(|&(_, x)| x).fold(f64::INFINITY, f64::min);
+            let hi = streams.iter().map(|&(_, x)| x).fold(0.0, f64::max);
+            if e < lo - 1e-9 || e > hi + 1e-9 {
+                return Err(format!("combined {e} outside [{lo}, {hi}]"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulated_plans_sane_on_random_problems() {
+    // any valid problem simulates to a finite positive time with
+    // efficiency in (0, 1] on both GPUs
+    for spec in [gtx_1080ti(), titan_x_maxwell()] {
+        check_no_shrink(
+            &Config { cases: 48, seed: 6 },
+            any_problem,
+            |p| {
+                let r = simulate(&spec, &plan_for(p, &spec));
+                if !(r.seconds.is_finite() && r.seconds > 0.0) {
+                    return Err(format!("{}: bad time {}", p.label(), r.seconds));
+                }
+                if !(r.efficiency > 0.0 && r.efficiency <= 1.0) {
+                    return Err(format!("{}: bad efficiency {}", p.label(), r.efficiency));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// analytic-model invariants (§3.1, §3.2)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_single_choice_respects_paper_bounds() {
+    let g = gtx_1080ti();
+    check_no_shrink(
+        &Config { cases: 96, seed: 7 },
+        |r| {
+            let mut p = any_problem(r);
+            p.c = 1;
+            p
+        },
+        |p| {
+            let c = choose_single(p, &g);
+            if c.p < 1 || c.p > p.wy || c.q < 1 || c.q > p.m {
+                return Err(format!("{}: divisors out of range P={} Q={}", p.label(), c.p, c.q));
+            }
+            if c.p != 1 && c.q != 1 {
+                return Err("step 4 must reset the losing divisor to 1".into());
+            }
+            if c.uses_prefetch {
+                let (d, th) = match c.method {
+                    pasconv::analytic::SingleMethod::FilterSplit => (c.d1_bytes, c.th1),
+                    pasconv::analytic::SingleMethod::MapSplit => (c.d2_bytes, c.th2),
+                };
+                if d > g.shared_mem_bytes as usize {
+                    return Err(format!("{}: D={} > S_shared", p.label(), d));
+                }
+                if th < g.n_fma() {
+                    return Err(format!("{}: Th={} < N_FMA", p.label(), th));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_single_formulas_monotone_in_divisor() {
+    let g = gtx_1080ti();
+    check_no_shrink(
+        &Config { cases: 96, seed: 8 },
+        |r| {
+            let mut p = any_problem(r);
+            p.c = 1;
+            (p, r.range_usize(1, 16))
+        },
+        |&(p, d)| {
+            if d + 1 > p.wy.min(p.m) {
+                return Ok(());
+            }
+            if d1_bytes(&p, &g, d + 1) > d1_bytes(&p, &g, d)
+                || d2_bytes(&p, &g, d + 1) > d2_bytes(&p, &g, d)
+            {
+                return Err(format!("{}: D grew with divisor {d}", p.label()));
+            }
+            if th1(&p, &g, d + 1) > th1(&p, &g, d) || th2(&p, &g, d + 1) > th2(&p, &g, d) {
+                return Err(format!("{}: Th grew with divisor {d}", p.label()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stride_fixed_choice_fits_half_smem() {
+    let g = gtx_1080ti();
+    check_no_shrink(
+        &Config { cases: 96, seed: 9 },
+        |r| {
+            let mut p = any_problem(r);
+            if p.c == 1 {
+                p.c = 64;
+            }
+            (p, *r.choose(&[32usize, 64]))
+        },
+        |&(p, s)| {
+            let c = choose_sf(&p, &g, s);
+            if c.smem_bytes > g.shared_mem_bytes as usize / 2 {
+                return Err(format!("{} S={s}: working set {}", p.label(), c.smem_bytes));
+            }
+            if c.smem_bytes != working_set_bytes(s, c.wx_prime, c.m_prime, p.k) {
+                return Err("working-set accounting inconsistent".into());
+            }
+            if c.wx_prime % 32 != 0 {
+                return Err(format!("W'x={} not a 128-B multiple", c.wx_prime));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CPU conv oracle + batcher properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cpu_conv_linear_in_image() {
+    check_no_shrink(
+        &Config { cases: 24, seed: 10 },
+        |r| {
+            let k = *r.choose(&[1usize, 2, 3]);
+            let w = r.range_usize(k, 10);
+            let c = r.range_usize(1, 4);
+            let m = r.range_usize(1, 4);
+            let p = ConvProblem { c, wy: w, wx: w, m, k };
+            let img = r.normal_vec(p.map_elems());
+            let flt = r.normal_vec(p.filter_elems());
+            (p, img, flt)
+        },
+        |(p, img, flt)| {
+            let out = conv2d_multi_cpu(p, img, flt);
+            let img2: Vec<f32> = img.iter().map(|x| 3.0 * x).collect();
+            let out2 = conv2d_multi_cpu(p, &img2, flt);
+            for (a, b) in out.iter().zip(&out2) {
+                if (3.0 * a - b).abs() > 1e-3 * (1.0 + a.abs() * 3.0) {
+                    return Err(format!("linearity broken: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_never_exceeds_max_and_never_drops() {
+    check_no_shrink(
+        &Config { cases: 128, seed: 11 },
+        |r| {
+            let max_batch = r.range_usize(1, 10);
+            let n = r.range_usize(1, 50);
+            // event stream: (item id, ms offset)
+            let events: Vec<(usize, u64)> =
+                (0..n).map(|i| (i, r.range_u64(0, 30))).collect();
+            (max_batch, events)
+        },
+        |(max_batch, events)| {
+            let t0 = Instant::now();
+            let mut b = Batcher::new(BatchConfig {
+                max_batch: *max_batch,
+                max_wait: Duration::from_millis(10),
+            });
+            let mut seen = vec![];
+            let mut sorted = events.clone();
+            sorted.sort_by_key(|&(_, t)| t);
+            for &(id, ms) in &sorted {
+                let now = t0 + Duration::from_millis(ms);
+                if let Some(batch) = b.poll(now) {
+                    if batch.len() > *max_batch {
+                        return Err("poll batch too big".into());
+                    }
+                    seen.extend(batch);
+                }
+                if let Some(batch) = b.push(id, now) {
+                    if batch.len() != *max_batch {
+                        return Err(format!("push closed a batch of {}", batch.len()));
+                    }
+                    seen.extend(batch);
+                }
+            }
+            if let Some(batch) = b.take() {
+                seen.extend(batch);
+            }
+            if seen.len() != events.len() {
+                return Err(format!("dropped items: {} of {}", seen.len(), events.len()));
+            }
+            seen.sort();
+            for (i, &id) in seen.iter().enumerate() {
+                if i != id {
+                    return Err("duplicate or missing id".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
