@@ -13,7 +13,7 @@ use pasconv::baselines::cudnn_proxy;
 use pasconv::conv::{conv2d_multi_cpu, max_abs_diff, ConvProblem};
 use pasconv::coordinator::plan_advice;
 use pasconv::gpusim::{gtx_1080ti, simulate};
-use pasconv::plans::plan_for;
+use pasconv::plans::paper_plan_for;
 use pasconv::runtime::{default_artifact_dir, Runtime, Tensor};
 use pasconv::util::rng::Rng;
 
@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     let g = gtx_1080ti();
     println!("\non the paper's {}:", g.name);
     println!("  plan: {}", plan_advice(&p, &g));
-    let ours = simulate(&g, &plan_for(&p, &g));
+    let ours = simulate(&g, &paper_plan_for(&p, &g));
     let base = simulate(&g, &cudnn_proxy::plan(&p, &g));
     println!(
         "  simulated: ours {:.1} µs vs cuDNN-proxy {:.1} µs  ->  {:.2}x",

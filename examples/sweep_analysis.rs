@@ -12,7 +12,7 @@ use pasconv::analytic::{choose_single, choose_stride_fixed, SingleMethod};
 use pasconv::baselines::{cudnn_proxy, dac17, tan128};
 use pasconv::conv::suites::{fig4_suite, fig5_suite};
 use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell};
-use pasconv::plans::plan_for;
+use pasconv::plans::paper_plan_for;
 use pasconv::util::bench::Table;
 use pasconv::util::cli::Args;
 
@@ -72,7 +72,7 @@ fn main() {
         let us = |s: f64| format!("{:.1}µs", s * 1e6);
         t.row(&[
             p.label(),
-            us(simulate(&g, &plan_for(&p, &g)).seconds),
+            us(simulate(&g, &paper_plan_for(&p, &g)).seconds),
             us(simulate(&g, &cudnn_proxy::plan(&p, &g)).seconds),
             us(simulate(&g, &dac17::plan(&p, &g)).seconds),
             us(simulate(&g, &tan128::plan(&p, &g)).seconds),

@@ -1,0 +1,45 @@
+//! Ablation: **tuned plans vs the paper's closed-form plans** over every
+//! suite workload (Fig. 4, Fig. 5, and the CNN-model layer mix).
+//!
+//! The paper's §3 procedures pick exactly one P/Q division
+//! (single-channel) and one stride-fixed block shape (multi-channel) per
+//! problem.  `tuner` instead searches the full legal plan space
+//! (enumerate → closed-form score → top-K simulate) with the paper's
+//! pick as a floor.  This bench reports where the search wins, by how
+//! much, and what it picked — the "tuned vs paper-fixed" section of
+//! EXPERIMENTS.md is regenerated from this output.  The never-lose
+//! invariant is asserted inside `tuner::suite_report` (shared with the
+//! `tune` CLI subcommand, so both always report the same numbers).
+//!
+//! Run: `cargo bench --bench ablation_tuned_vs_paper`
+
+use pasconv::conv::suites::{all_cnn_layers, fig4_suite, fig5_suite};
+use pasconv::conv::ConvProblem;
+use pasconv::gpusim::{gtx_1080ti, titan_x_maxwell, GpuSpec};
+use pasconv::tuner;
+
+fn run_suite(name: &str, suite: &[ConvProblem], g: &GpuSpec) -> usize {
+    println!("-- {name} on {} ({} workloads) --", g.name, suite.len());
+    let r = tuner::suite_report(suite, g);
+    r.table.print();
+    println!(
+        "   improved {}/{}  geomean {:.3}x  max {:.2}x\n",
+        r.improved, r.total, r.geomean_speedup, r.max_speedup
+    );
+    r.improved
+}
+
+fn main() {
+    println!("== ablation: plan-space tuning vs the paper's fixed §3 picks ==\n");
+    let g = gtx_1080ti();
+    let t = titan_x_maxwell();
+
+    let mut total_improved = 0;
+    total_improved += run_suite("Fig. 4 suite (single-channel)", &fig4_suite(), &g);
+    total_improved += run_suite("Fig. 5 suite (multi-channel)", &fig5_suite(), &g);
+    total_improved += run_suite("CNN model layers", &all_cnn_layers(), &g);
+    total_improved += run_suite("Fig. 5 suite (portability)", &fig5_suite(), &t);
+
+    assert!(total_improved > 0, "tuning never improved anything — search broken?");
+    println!("ablation_tuned_vs_paper OK ({total_improved} workloads improved)");
+}

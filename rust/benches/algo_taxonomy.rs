@@ -15,7 +15,7 @@
 use pasconv::baselines::{cudnn_proxy, dac17, fft_conv, winograd};
 use pasconv::conv::ConvProblem;
 use pasconv::gpusim::{gtx_1080ti, simulate};
-use pasconv::plans::plan_for;
+use pasconv::plans::paper_plan_for;
 use pasconv::util::bench::Table;
 
 fn main() {
@@ -32,7 +32,7 @@ fn main() {
     let mut t = Table::new(&["layer", "ours", "gemm (cudnn)", "winograd", "fft", "direct [1]"]);
     for p in &layers {
         let us = |s: f64| format!("{:.1}", s * 1e6);
-        let t_ours = simulate(&g, &plan_for(p, &g)).seconds;
+        let t_ours = simulate(&g, &paper_plan_for(p, &g)).seconds;
         let t_gemm = simulate(&g, &cudnn_proxy::plan(p, &g)).seconds;
         let t_wino = if p.k == 3 {
             Some(simulate(&g, &winograd::plan(p, &g)).seconds)
@@ -60,7 +60,7 @@ fn main() {
     // winograd is the credible rival on big K=3 layers
     let big = ConvProblem::multi(256, 56, 256, 3);
     let r = simulate(&g, &winograd::plan(&big, &g)).seconds
-        / simulate(&g, &plan_for(&big, &g)).seconds;
+        / simulate(&g, &paper_plan_for(&big, &g)).seconds;
     println!(
         "\nwinograd / ours on {}: {:.2} (close contest on large K=3 layers, as [8] predicts)",
         big.label(),

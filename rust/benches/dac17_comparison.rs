@@ -16,7 +16,7 @@ use pasconv::baselines::dac17;
 use pasconv::conv::suites::FIG5_POINTS;
 use pasconv::conv::ConvProblem;
 use pasconv::gpusim::{gtx_1080ti, simulate, tesla_k40};
-use pasconv::plans::plan_for;
+use pasconv::plans::paper_plan_for;
 use pasconv::util::bench::Table;
 use pasconv::util::stats::geomean;
 
@@ -42,7 +42,7 @@ fn main() {
     let norm = g.peak_flops() / k40.peak_flops();
     for &(w, c) in &FIG5_POINTS {
         let p = ConvProblem::multi(c, w, c, 3);
-        let ours = simulate(&g, &plan_for(&p, &g)).seconds;
+        let ours = simulate(&g, &paper_plan_for(&p, &g)).seconds;
         let dac = simulate(&g, &dac17::plan(&p, &g));
         let s = dac.seconds / ours;
         all.push(s);

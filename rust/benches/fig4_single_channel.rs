@@ -10,7 +10,7 @@ use pasconv::baselines::cudnn_proxy;
 use pasconv::conv::suites::{FIG4_POINTS, PAPER_KS};
 use pasconv::conv::ConvProblem;
 use pasconv::gpusim::{gtx_1080ti, simulate};
-use pasconv::plans::plan_for;
+use pasconv::plans::paper_plan_for;
 use pasconv::util::bench::Table;
 use pasconv::util::stats::geomean;
 
@@ -24,7 +24,7 @@ fn main() {
             Table::new(&["map", "M", "ours (µs)", "cudnn (µs)", "ours GFLOP/s", "speedup"]);
         for &(w, m) in &FIG4_POINTS {
             let p = ConvProblem::single(w, m, k);
-            let ours = simulate(&g, &plan_for(&p, &g));
+            let ours = simulate(&g, &paper_plan_for(&p, &g));
             let base = simulate(&g, &cudnn_proxy::plan(&p, &g));
             let s = base.seconds / ours.seconds;
             all.push(s);

@@ -11,7 +11,7 @@ use pasconv::baselines::cudnn_proxy;
 use pasconv::conv::suites::{FIG5_POINTS, PAPER_KS};
 use pasconv::conv::ConvProblem;
 use pasconv::gpusim::{gtx_1080ti, simulate};
-use pasconv::plans::plan_for;
+use pasconv::plans::paper_plan_for;
 use pasconv::util::bench::Table;
 use pasconv::util::stats::geomean;
 
@@ -32,7 +32,7 @@ fn main() {
         ]);
         for &(w, c) in &FIG5_POINTS {
             let p = ConvProblem::multi(c, w, c, k);
-            let plan = plan_for(&p, &g);
+            let plan = paper_plan_for(&p, &g);
             let ours = simulate(&g, &plan);
             let base = simulate(&g, &cudnn_proxy::plan(&p, &g));
             let s = base.seconds / ours.seconds;

@@ -11,7 +11,7 @@
 use pasconv::baselines::cudnn_proxy;
 use pasconv::conv::suites::{fig4_suite, fig5_suite};
 use pasconv::gpusim::{simulate, titan_x_maxwell};
-use pasconv::plans::plan_for;
+use pasconv::plans::paper_plan_for;
 use pasconv::util::bench::Table;
 use pasconv::util::stats::geomean;
 
@@ -27,7 +27,7 @@ fn main() {
         let mut table = Table::new(&["problem", "ours (µs)", "cudnn (µs)", "speedup"]);
         let mut speedups = vec![];
         for p in suite {
-            let ours = simulate(&t, &plan_for(&p, &t)).seconds;
+            let ours = simulate(&t, &paper_plan_for(&p, &t)).seconds;
             let base = simulate(&t, &cudnn_proxy::plan(&p, &t)).seconds;
             speedups.push(base / ours);
             table.row(&[

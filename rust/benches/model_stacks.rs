@@ -10,14 +10,14 @@ use pasconv::baselines::cudnn_proxy;
 use pasconv::conv::suites::{alexnet, googlenet_inception3a, resnet18, small_map_fraction, vgg16};
 use pasconv::conv::ConvProblem;
 use pasconv::gpusim::{gtx_1080ti, simulate};
-use pasconv::plans::plan_for;
+use pasconv::plans::paper_plan_for;
 use pasconv::util::bench::Table;
 
 fn stack_time(g: &pasconv::gpusim::GpuSpec, layers: &[ConvProblem], ours: bool) -> f64 {
     layers
         .iter()
         .map(|p| {
-            let plan = if ours { plan_for(p, g) } else { cudnn_proxy::plan(p, g) };
+            let plan = if ours { paper_plan_for(p, g) } else { cudnn_proxy::plan(p, g) };
             simulate(g, &plan).seconds
         })
         .sum()

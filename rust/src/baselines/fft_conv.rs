@@ -67,7 +67,7 @@ pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
 mod tests {
     use super::*;
     use crate::gpusim::{gtx_1080ti, simulate};
-    use crate::plans::plan_for;
+    use crate::plans::paper_plan_for;
 
     #[test]
     fn simulates_cleanly() {
@@ -86,7 +86,7 @@ mod tests {
         let g = gtx_1080ti();
         let p = ConvProblem::multi(128, 28, 128, 3);
         let t_fft = simulate(&g, &plan(&p, &g)).seconds;
-        let t_ours = simulate(&g, &plan_for(&p, &g)).seconds;
+        let t_ours = simulate(&g, &paper_plan_for(&p, &g)).seconds;
         assert!(t_fft > 3.0 * t_ours, "fft {} vs ours {}", t_fft, t_ours);
     }
 
@@ -97,7 +97,7 @@ mod tests {
         let g = gtx_1080ti();
         let gap = |k: usize| {
             let p = ConvProblem::multi(64, 56, 64, k);
-            simulate(&g, &plan(&p, &g)).seconds / simulate(&g, &plan_for(&p, &g)).seconds
+            simulate(&g, &plan(&p, &g)).seconds / simulate(&g, &paper_plan_for(&p, &g)).seconds
         };
         assert!(gap(5) < gap(3), "K=5 gap {} vs K=3 gap {}", gap(5), gap(3));
     }

@@ -87,6 +87,8 @@ pub struct Metrics {
     pub errors: u64,
     pub batches_executed: u64,
     pub batched_requests: u64,
+    /// conv problems pre-tuned at startup (Router::warm_plans)
+    pub plans_tuned: u64,
     pub latency: Histogram,
     pub per_artifact: BTreeMap<String, u64>,
 }
@@ -118,6 +120,7 @@ impl Metrics {
             .set("errors", (self.errors as usize).into())
             .set("batches", (self.batches_executed as usize).into())
             .set("mean_batch_size", self.mean_batch_size().into())
+            .set("plans_tuned", (self.plans_tuned as usize).into())
             .set("latency", self.latency.to_json())
             .set("per_artifact", per)
     }

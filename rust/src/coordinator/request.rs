@@ -42,6 +42,9 @@ pub struct Response {
     pub artifact: String,
     /// how many requests shared the executed batch
     pub batch_size: usize,
+    /// tuned-plan advice the router attached at routing time (conv
+    /// requests, when the table was warmed; None for CNN traffic)
+    pub plan: Option<String>,
 }
 
 #[cfg(test)]

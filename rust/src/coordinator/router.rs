@@ -1,6 +1,7 @@
 //! Routing: map a request to the artifact that serves it, and attach the
-//! paper's plan advice (which kernel/division the analytic model picks —
-//! the same decision §3 makes per problem).
+//! plan advice — the tuner's memoized pick when the table was warmed
+//! (`warm_plans`, run once at coordinator startup so serving pays zero
+//! per-request search), or the paper's §3 closed-form note.
 
 use std::collections::HashMap;
 
@@ -10,12 +11,15 @@ use crate::analytic;
 use crate::conv::ConvProblem;
 use crate::gpusim::GpuSpec;
 use crate::runtime::{Artifact, ArtifactKind};
+use crate::tuner;
 
 /// Static routing table built from the manifest at startup.
 #[derive(Debug, Default)]
 pub struct Router {
     conv_by_problem: HashMap<ConvProblem, String>,
     cnn_by_batch: Vec<(usize, String)>, // sorted by batch ascending
+    /// tuned-plan advice per routed problem, filled by `warm_plans`
+    tuned_advice: HashMap<ConvProblem, String>,
 }
 
 impl Router {
@@ -74,6 +78,24 @@ impl Router {
         let mut v: Vec<ConvProblem> = self.conv_by_problem.keys().cloned().collect();
         v.sort_by_key(|p| (p.c, p.wy, p.wx, p.m, p.k));
         v
+    }
+
+    /// Tune every routed conv problem up front (fills the process-wide
+    /// `tuner` cache) and keep the advice strings; returns how many
+    /// problems were tuned.  After this, serving never searches: the
+    /// per-request cost of `tuner::tuned_plan` is one cache lookup.
+    pub fn warm_plans(&mut self, spec: &GpuSpec) -> usize {
+        let problems = self.conv_problems();
+        for p in &problems {
+            let advice = tuner::advice(p, spec);
+            self.tuned_advice.insert(*p, advice);
+        }
+        problems.len()
+    }
+
+    /// Tuned-plan advice for a routed problem (None before `warm_plans`).
+    pub fn tuned_advice(&self, p: &ConvProblem) -> Option<&str> {
+        self.tuned_advice.get(p).map(|s| s.as_str())
     }
 }
 
@@ -147,5 +169,19 @@ mod tests {
         let g = gtx_1080ti();
         assert!(plan_advice(&ConvProblem::single(224, 64, 3), &g).contains("single-channel"));
         assert!(plan_advice(&ConvProblem::multi(64, 56, 64, 3), &g).contains("stride-fixed"));
+    }
+
+    #[test]
+    fn warm_plans_caches_advice_for_every_routed_problem() {
+        let g = gtx_1080ti();
+        let mut r = router();
+        assert!(r.tuned_advice(&ConvProblem::single(32, 16, 3)).is_none());
+        let n = r.warm_plans(&g);
+        assert_eq!(n, 2); // the two conv artifacts (s1, m1)
+        let advice = r.tuned_advice(&ConvProblem::single(32, 16, 3)).unwrap();
+        assert!(advice.contains("tuned"), "{advice}");
+        assert!(r.tuned_advice(&ConvProblem::multi(8, 14, 16, 3)).is_some());
+        // unrouted problems stay unadvised
+        assert!(r.tuned_advice(&ConvProblem::single(64, 16, 3)).is_none());
     }
 }

@@ -32,7 +32,8 @@ struct CnnItem {
 }
 
 enum Work {
-    Single(Request, Respond),
+    /// a conv request plus the tuned-plan advice the router attached
+    Single(Request, Respond, Option<String>),
     CnnBatch(Vec<CnnItem>),
 }
 
@@ -46,14 +47,30 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the queue + executor threads over an artifact directory.
+    /// Start the queue + executor threads over an artifact directory,
+    /// attaching plan advice tuned for the paper's testbed (GTX 1080Ti).
     pub fn start(artifact_dir: &Path, batch_cfg: BatchConfig) -> Result<Coordinator> {
+        Coordinator::start_with_gpu(artifact_dir, batch_cfg, &crate::gpusim::gtx_1080ti())
+    }
+
+    /// `start`, with an explicit GPU spec for the plan tuning (the
+    /// advice attached to conv responses is spec-dependent).
+    pub fn start_with_gpu(
+        artifact_dir: &Path,
+        batch_cfg: BatchConfig,
+        gpu: &crate::gpusim::GpuSpec,
+    ) -> Result<Coordinator> {
         // the manifest parses without a PJRT client; the client itself is
         // !Send (Rc internals), so the Runtime is constructed *inside*
         // the executor thread and signals readiness back
         let artifacts = crate::runtime::manifest::load_manifest(artifact_dir)?;
-        let router = Router::from_artifacts(&artifacts);
+        let mut router = Router::from_artifacts(&artifacts);
         let metrics = Arc::new(Mutex::new(Metrics::default()));
+
+        // tune every routed conv problem once, before traffic: the queue
+        // thread then serves tuned plans with zero per-request search
+        let tuned = router.warm_plans(gpu);
+        metrics.lock().unwrap().plans_tuned = tuned as u64;
 
         let (tx, rx) = channel::<(Request, Respond)>();
         let (work_tx, work_rx) = channel::<Work>();
@@ -179,11 +196,13 @@ fn queue_loop(
         if let Some((req, respond)) = item {
             match &req.payload {
                 Payload::Conv { problem, .. } => {
-                    // conv problems route 1:1 to artifacts — no batching
+                    // conv problems route 1:1 to artifacts — no batching;
+                    // the advice comes from the warmed table (zero search)
+                    let advice = router.tuned_advice(problem).map(|s| s.to_string());
                     if let Err(e) = router.route_conv(problem) {
                         metrics.lock().unwrap().errors += 1;
                         let _ = respond.send(Err(e.to_string()));
-                    } else if work_tx.send(Work::Single(req, respond)).is_err() {
+                    } else if work_tx.send(Work::Single(req, respond, advice)).is_err() {
                         break;
                     }
                 }
@@ -214,7 +233,7 @@ fn exec_loop(work_rx: Receiver<Work>, mut runtime: Runtime, metrics: Arc<Mutex<M
     );
     while let Ok(work) = work_rx.recv() {
         match work {
-            Work::Single(req, respond) => {
+            Work::Single(req, respond, plan_advice) => {
                 let Payload::Conv { problem, image, filters } = &req.payload else {
                     let _ = respond.send(Err("internal: non-conv single work".into()));
                     continue;
@@ -237,6 +256,7 @@ fn exec_loop(work_rx: Receiver<Work>, mut runtime: Runtime, metrics: Arc<Mutex<M
                             latency_secs: latency,
                             artifact: name,
                             batch_size: 1,
+                            plan: plan_advice,
                         }));
                     }
                     Err(e) => {
@@ -310,6 +330,7 @@ fn exec_loop(work_rx: Receiver<Work>, mut runtime: Runtime, metrics: Arc<Mutex<M
                                 latency_secs: latencies[i],
                                 artifact: name.clone(),
                                 batch_size: n,
+                                plan: None,
                             }));
                         }
                     }

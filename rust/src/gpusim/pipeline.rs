@@ -137,28 +137,61 @@ impl PipelineResult {
 /// Simulate the double-buffered round pipeline on one SM.
 pub fn simulate_pipeline(spec: &GpuSpec, cfg: &ExecConfig, rounds: &[Round]) -> PipelineResult {
     assert!(!rounds.is_empty(), "no rounds");
-    let loads: Vec<f64> = rounds.iter().map(|r| load_cycles(spec, cfg, r)).collect();
-    let computes: Vec<f64> = rounds.iter().map(|r| compute_cycles(spec, cfg, r.fma_ops)).collect();
+    let runs: Vec<(Round, usize)> = rounds.iter().map(|&r| (r, 1)).collect();
+    simulate_pipeline_runs(spec, cfg, &runs)
+}
+
+/// `simulate_pipeline` over a run-length round list: `(round, count)`
+/// expands to `count` identical rounds.  Both our kernels produce
+/// run-length-structured schedules (a cold first round, then identical
+/// steady-state rounds), so a run of `count` rounds contributes its
+/// prologue transition plus `(count-1) · max(load, compute)` — exactly
+/// the expanded recurrence, in O(runs) instead of O(rounds).  The plan
+/// builders' divisor sweeps and the tuner's scorer both use this; only
+/// winning plans are ever materialized.
+pub fn simulate_pipeline_runs(
+    spec: &GpuSpec,
+    cfg: &ExecConfig,
+    runs: &[(Round, usize)],
+) -> PipelineResult {
+    assert!(!runs.is_empty() && runs.iter().all(|&(_, n)| n > 0), "no rounds");
+    let loads: Vec<f64> = runs.iter().map(|(r, _)| load_cycles(spec, cfg, r)).collect();
+    let computes: Vec<f64> =
+        runs.iter().map(|(r, _)| compute_cycles(spec, cfg, r.fma_ops)).collect();
 
     // pipeline prologue: the very first fetch is cold — full latency
     let mut total = cfg.launch_overhead_cycles + spec.mem_latency_cycles as f64 + loads[0];
     let mut stall = 0.0;
     let mut hidden = true;
-    for r in 1..rounds.len() {
-        // round r's load overlaps round r-1's compute
-        let overlap = loads[r].max(computes[r - 1]);
-        if loads[r] > computes[r - 1] {
-            stall += loads[r] - computes[r - 1];
-            hidden = false;
+    for (k, &(_, count)) in runs.iter().enumerate() {
+        // within a run, round r's load overlaps the identical round
+        // r-1's compute: (count - 1) steady-state transitions
+        if count > 1 {
+            total += (count - 1) as f64 * loads[k].max(computes[k]);
+            if loads[k] > computes[k] {
+                stall += (count - 1) as f64 * (loads[k] - computes[k]);
+                hidden = false;
+            }
         }
-        total += overlap;
+        // transition into the next run: its first load overlaps this
+        // run's last compute
+        if k + 1 < runs.len() {
+            total += loads[k + 1].max(computes[k]);
+            if loads[k + 1] > computes[k] {
+                stall += loads[k + 1] - computes[k];
+                hidden = false;
+            }
+        }
     }
-    total += computes[rounds.len() - 1];
+    total += computes[runs.len() - 1];
 
+    let weights = |xs: &[f64]| -> f64 {
+        xs.iter().zip(runs).map(|(x, &(_, n))| x * n as f64).sum()
+    };
     PipelineResult {
         total_cycles: total,
-        load_cycles_sum: loads.iter().sum(),
-        compute_cycles_sum: computes.iter().sum(),
+        load_cycles_sum: weights(&loads),
+        compute_cycles_sum: weights(&computes),
         stall_cycles: stall,
         latency_hidden: hidden,
     }
@@ -252,6 +285,27 @@ mod tests {
             &[round(tiny_fetch, 0.5 * g.n_fma() as f64), round(tiny_fetch, 0.5 * g.n_fma() as f64)],
         );
         assert!(starve.stall_cycles > 100.0, "stall={}", starve.stall_cycles);
+    }
+
+    #[test]
+    fn runs_form_equals_expanded_form() {
+        let (g, c) = cfg();
+        // mixed schedule: cold round + two distinct steady-state runs
+        let r0 = Round::with_efficiency(5e4, 0.8, 2e5);
+        let ra = round(1e4, 8e5);
+        let rb = round(3e4, 2e5);
+        let mut expanded = vec![r0];
+        expanded.extend(std::iter::repeat(ra).take(7));
+        expanded.extend(std::iter::repeat(rb).take(5));
+        let a = simulate_pipeline(&g, &c, &expanded);
+        let b = simulate_pipeline_runs(&g, &c, &[(r0, 1), (ra, 7), (rb, 5)]);
+        assert!((a.total_cycles - b.total_cycles).abs() < 1e-9 * a.total_cycles);
+        assert!((a.stall_cycles - b.stall_cycles).abs() < 1e-9 * (1.0 + a.stall_cycles));
+        assert!((a.load_cycles_sum - b.load_cycles_sum).abs() < 1e-9 * a.load_cycles_sum);
+        assert!(
+            (a.compute_cycles_sum - b.compute_cycles_sum).abs() < 1e-9 * a.compute_cycles_sum
+        );
+        assert_eq!(a.latency_hidden, b.latency_hidden);
     }
 
     #[test]

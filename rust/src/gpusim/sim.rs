@@ -6,6 +6,11 @@
 use super::pipeline::{simulate_pipeline, ExecConfig, PipelineResult, Round};
 use super::spec::GpuSpec;
 
+/// Share of output writeback that cannot overlap compute (the tail).
+/// Shared with the tuner's scorer, which must charge exactly what
+/// `simulate` charges.
+pub const WRITEBACK_TAIL_FRACTION: f64 = 0.15;
+
 /// The execution schedule of one kernel on one GPU — what a CUDA kernel's
 /// blocks would do, expressed as per-SM prefetch rounds.  Produced by
 /// `plans::*` (ours) and `baselines::*` (cuDNN proxy, [1], [16]).
@@ -86,7 +91,7 @@ pub fn simulate(spec: &GpuSpec, plan: &KernelPlan) -> SimResult {
 
     // Output writeback streams at full segment width, overlapped with
     // compute except for its tail — charge the non-overlappable share.
-    let wb_cycles = 0.15 * plan.output_bytes / spec.bytes_per_cycle();
+    let wb_cycles = WRITEBACK_TAIL_FRACTION * plan.output_bytes / spec.bytes_per_cycle();
     let cycles = pipe.total_cycles + wb_cycles;
 
     let seconds = spec.cycles_to_secs(cycles);

@@ -10,6 +10,7 @@
 //! * `gpusim`    — Pascal/Maxwell timing simulator (hardware substrate)
 //! * `analytic`  — the paper's closed-form model (N_FMA, V_s, P/Q, stride-fixed)
 //! * `plans`     — per-SM execution schedules for the paper's two kernels
+//! * `tuner`     — plan-space search: enumerate → score → simulate → cache
 //! * `baselines` — cuDNN proxy (implicit GEMM), DAC'17 [1], Tan [16]
 //! * `runtime`   — PJRT client: load + execute the AOT'd HLO artifacts
 //! * `coordinator` — request router, dynamic batcher, worker pool, metrics
@@ -21,4 +22,5 @@ pub mod coordinator;
 pub mod gpusim;
 pub mod plans;
 pub mod runtime;
+pub mod tuner;
 pub mod util;

@@ -7,16 +7,23 @@
 //!   serve [--requests N]          demo serve loop: synthetic CNN traffic
 //!                                 through the coordinator, metrics out
 //!   sweep [--suite fig4|fig5]     print the paper's figure sweeps
+//!   tune [--suite ...]            search the plan space per workload and
+//!                                 report tuned vs paper-fixed plans
+//!
+//! `--no-tune` pins simulate/sweep to the paper's closed-form §3 picks.
 
+use std::path::Path;
 use std::time::Duration;
 
 use pasconv::baselines::{cudnn_proxy, dac17, tan128};
-use pasconv::conv::suites::{fig4_suite, fig5_suite};
+use pasconv::conv::suites::{all_cnn_layers, fig4_suite, fig5_suite};
 use pasconv::conv::ConvProblem;
 use pasconv::coordinator::{plan_advice, BatchConfig, Coordinator, Payload};
-use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell, GpuSpec};
-use pasconv::plans::plan_for;
+use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell, GpuSpec, KernelPlan};
+use pasconv::plans::{paper_plan_for, plan_for};
 use pasconv::runtime::{default_artifact_dir, Runtime, Tensor};
+use pasconv::tuner;
+use pasconv::tuner::PlanCache;
 use pasconv::util::bench::Table;
 use pasconv::util::cli::Args;
 use pasconv::util::rng::Rng;
@@ -29,18 +36,31 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "sweep" => cmd_sweep(&args),
+        "tune" => cmd_tune(&args),
         _ => {
             eprintln!(
-                "usage: pasconv <list|simulate|serve|sweep> [flags]\n\
+                "usage: pasconv <list|simulate|serve|sweep|tune> [flags]\n\
                  \n  list                              artifact registry\
                  \n  simulate --c C --w W --m M --k K  one problem, all kernels, simulated\
                  \n  serve [--requests N]              demo serving loop with batching\
-                 \n  sweep [--suite fig4|fig5] [--gpu 1080ti|titanx]\n"
+                 \n  sweep [--suite fig4|fig5] [--gpu 1080ti|titanx] [--no-tune]\
+                 \n  tune [--suite fig4|fig5|cnn|all] [--gpu 1080ti|titanx]\
+                 \n       [--save FILE] [--load FILE]  plan-space search vs paper picks\n"
             );
             if cmd == "help" { 0 } else { 2 }
         }
     };
     std::process::exit(rc);
+}
+
+/// The planner the figure commands use: tuned by default, the paper's
+/// closed-form pick under `--no-tune`.
+fn planner(args: &Args) -> fn(&ConvProblem, &GpuSpec) -> KernelPlan {
+    if args.has("no-tune") {
+        paper_plan_for
+    } else {
+        plan_for
+    }
 }
 
 fn cmd_list(_args: &Args) -> i32 {
@@ -87,10 +107,14 @@ fn cmd_simulate(args: &Args) -> i32 {
         return 2;
     }
     let g = gpu_from(args);
+    let plan_fn = planner(args);
     println!("problem: {}   GPU: {}", p.label(), g.name);
-    println!("plan advice: {}", plan_advice(&p, &g));
+    println!("paper advice: {}", plan_advice(&p, &g));
+    if !args.has("no-tune") {
+        println!("tuner advice: {}", tuner::advice(&p, &g));
+    }
     let plans =
-        vec![plan_for(&p, &g), cudnn_proxy::plan(&p, &g), dac17::plan(&p, &g), tan128::plan(&p, &g)];
+        vec![plan_fn(&p, &g), cudnn_proxy::plan(&p, &g), dac17::plan(&p, &g), tan128::plan(&p, &g)];
     let ours = simulate(&g, &plans[0]).seconds;
     let mut t =
         Table::new(&["kernel", "time", "GFLOP/s", "eff", "SMs", "bottleneck", "FMA/B", "vs ours"]);
@@ -114,9 +138,10 @@ fn cmd_simulate(args: &Args) -> i32 {
 fn cmd_serve(args: &Args) -> i32 {
     let n = args.get_usize("requests", 256);
     let dir = default_artifact_dir();
-    let mut c = match Coordinator::start(
+    let mut c = match Coordinator::start_with_gpu(
         &dir,
         BatchConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+        &gpu_from(args),
     ) {
         Ok(c) => c,
         Err(e) => {
@@ -146,6 +171,7 @@ fn cmd_serve(args: &Args) -> i32 {
 
 fn cmd_sweep(args: &Args) -> i32 {
     let g = gpu_from(args);
+    let plan_fn = planner(args);
     let suite = match args.get_or("suite", "fig4") {
         "fig5" => fig5_suite(),
         _ => fig4_suite(),
@@ -153,7 +179,7 @@ fn cmd_sweep(args: &Args) -> i32 {
     let mut t = Table::new(&["problem", "ours", "cudnn-proxy", "speedup"]);
     let mut speedups = vec![];
     for p in suite {
-        let ours = simulate(&g, &plan_for(&p, &g)).seconds;
+        let ours = simulate(&g, &plan_fn(&p, &g)).seconds;
         let base = simulate(&g, &cudnn_proxy::plan(&p, &g)).seconds;
         speedups.push(base / ours);
         t.row(&[
@@ -169,5 +195,54 @@ fn cmd_sweep(args: &Args) -> i32 {
         g.name,
         speedups.iter().sum::<f64>() / speedups.len() as f64
     );
+    0
+}
+
+fn cmd_tune(args: &Args) -> i32 {
+    let g = gpu_from(args);
+    if let Some(path) = args.get("load") {
+        match PlanCache::load(Path::new(path)) {
+            Ok(cache) => {
+                let n = tuner::preload(cache);
+                println!("preloaded {n} cached plans from {path}");
+            }
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 1;
+            }
+        }
+    }
+    let mut suite = match args.get_or("suite", "all") {
+        "fig4" => fig4_suite(),
+        "fig5" => fig5_suite(),
+        "cnn" => all_cnn_layers(),
+        _ => {
+            let mut v = fig4_suite();
+            v.extend(fig5_suite());
+            for p in all_cnn_layers() {
+                if !v.contains(&p) {
+                    v.push(p);
+                }
+            }
+            v
+        }
+    };
+    suite.retain(|p| p.valid());
+
+    println!("== plan-space tuning on {} ({} workloads) ==\n", g.name, suite.len());
+    let report = tuner::suite_report(&suite, &g);
+    report.table.print();
+    println!(
+        "\nimproved on {}/{} workloads; geomean speedup {:.3}x, max {:.2}x",
+        report.improved, report.total, report.geomean_speedup, report.max_speedup
+    );
+    if let Some(path) = args.get("save") {
+        let snap = tuner::snapshot();
+        if let Err(e) = snap.save(Path::new(path)) {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+        println!("saved {} cache entries to {path}", snap.len());
+    }
     0
 }

@@ -1,7 +1,10 @@
 //! Per-SM execution schedules for the paper's two kernels, consumed by
 //! `gpusim::simulate`.  `plan_for` is the router the coordinator and the
-//! benches use: single-channel problems go through the §3.1 P/Q
-//! procedure, multi-channel through the §3.2 stride-fixed block method.
+//! benches use: it serves the *tuned* plan (`tuner::tuned_plan`, memoized
+//! per process).  `paper_plan_for` is the paper's verbatim §3 pick —
+//! single-channel through the §3.1 P/Q procedure, multi-channel through
+//! the §3.2 stride-fixed block method — kept as the `--no-tune` path and
+//! as the regression baseline the tuner never loses to.
 
 pub mod single_channel;
 pub mod stride_fixed;
@@ -9,8 +12,23 @@ pub mod stride_fixed;
 use crate::conv::ConvProblem;
 use crate::gpusim::{GpuSpec, KernelPlan};
 
-/// The paper's kernel for a problem (dispatch on C, as in §3).
+/// Launch + drain overhead our kernels pay (~2.7 µs at 1.48 GHz).  One
+/// definition shared by both plan builders and the tuner's scorer — the
+/// "score is exact under the simulator" premise depends on it.
+pub const LAUNCH_OVERHEAD_CYCLES: f64 = 4_000.0;
+
+/// Fraction of peak FMA issue our kernels' inner loops sustain.
+pub const COMPUTE_EFFICIENCY: f64 = 0.9;
+
+/// The serving plan for a problem: the tuner's pick (>= the paper's plan
+/// under the simulator, memoized so repeated calls are cache hits).
 pub fn plan_for(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
+    crate::tuner::tuned_plan(p, spec)
+}
+
+/// The paper's kernel for a problem (dispatch on C, as in §3) — no
+/// search, exactly the closed-form procedures.
+pub fn paper_plan_for(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
     if p.is_single_channel() {
         single_channel::plan(p, spec)
     } else {
@@ -21,7 +39,7 @@ pub fn plan_for(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gpusim::gtx_1080ti;
+    use crate::gpusim::{gtx_1080ti, simulate};
 
     #[test]
     fn dispatch_on_channel_count() {
@@ -30,5 +48,24 @@ mod tests {
         assert!(s.name.contains("single"), "{}", s.name);
         let m = plan_for(&ConvProblem::multi(64, 56, 64, 3), &g);
         assert!(m.name.contains("multi"), "{}", m.name);
+    }
+
+    #[test]
+    fn paper_plan_dispatches_too() {
+        let g = gtx_1080ti();
+        let s = paper_plan_for(&ConvProblem::single(56, 64, 3), &g);
+        assert!(s.name.contains("single"), "{}", s.name);
+        let m = paper_plan_for(&ConvProblem::multi(64, 56, 64, 3), &g);
+        assert!(m.name.contains("multi"), "{}", m.name);
+    }
+
+    #[test]
+    fn tuned_plan_at_least_as_fast_as_paper() {
+        let g = gtx_1080ti();
+        for p in [ConvProblem::single(1024, 32, 1), ConvProblem::multi(256, 14, 256, 3)] {
+            let tuned = simulate(&g, &plan_for(&p, &g)).seconds;
+            let paper = simulate(&g, &paper_plan_for(&p, &g)).seconds;
+            assert!(tuned <= paper * (1.0 + 1e-9), "{}: {tuned} > {paper}", p.label());
+        }
     }
 }

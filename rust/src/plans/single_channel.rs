@@ -32,14 +32,28 @@ pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
     plan_with_choice(p, spec, &choice)
 }
 
-/// Build the plan for an explicit `SingleChoice` (ablations force P/Q).
-pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> KernelPlan {
+/// The round structure of a single-channel plan without the rounds
+/// materialized: the cold first round plus an optional run of identical
+/// steady-state rounds.  `plan_with_choice` expands it; the tuner scores
+/// it in closed form (same arithmetic, no allocation).
+#[derive(Clone, Copy, Debug)]
+pub struct SingleRecipe {
+    pub first: Round,
+    /// (steady-state round, repetitions) — absent when P = Q = 1
+    pub tail: Option<(Round, usize)>,
+    pub sms_active: u32,
+    pub threads_per_sm: u32,
+    pub smem_bytes: usize,
+}
+
+/// Per-SM round recipe for an explicit `SingleChoice`.
+pub fn recipe(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> SingleRecipe {
     assert!(p.is_single_channel());
     let launch = paper_launch(spec);
     let threads = launch.threads_per_sm(spec);
     let row_seg = (p.wx * BYTES_F32).min(128); // one map row is the fetch unit
 
-    let (rounds, sms_active, smem) = match c.method {
+    match c.method {
         SingleMethod::FilterSplit => {
             let m_per_sm = ceil_div(p.m, spec.sm_count as usize);
             let sms = ceil_div(p.m, m_per_sm).min(spec.sm_count as usize) as u32;
@@ -52,24 +66,21 @@ pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> Ke
             let halo_bytes = ((p.k - 1) * p.wx * BYTES_F32) as f64 / sms as f64;
             let fma = c.th1 as f64;
             let filter_seg = (m_per_sm * p.k * p.k * BYTES_F32).min(128);
-            let mut rounds = Vec::with_capacity(c.p);
-            for r in 0..c.p {
-                if r == 0 {
-                    let eff = combined_efficiency(&[
-                        (filter_bytes, segment_efficiency(filter_seg)),
-                        (piece_bytes + halo_bytes, segment_efficiency(row_seg)),
-                    ]);
-                    rounds.push(Round::with_efficiency(
-                        filter_bytes + piece_bytes + halo_bytes,
-                        eff,
-                        fma,
-                    ));
-                } else {
-                    // subsequent pieces reuse the K-1 halo rows kept on chip
-                    rounds.push(Round::new(piece_bytes, row_seg, fma));
-                }
+            let eff = combined_efficiency(&[
+                (filter_bytes, segment_efficiency(filter_seg)),
+                (piece_bytes + halo_bytes, segment_efficiency(row_seg)),
+            ]);
+            let first = Round::with_efficiency(filter_bytes + piece_bytes + halo_bytes, eff, fma);
+            // subsequent pieces reuse the K-1 halo rows kept on chip
+            let tail =
+                (c.p > 1).then(|| (Round::new(piece_bytes, row_seg, fma), c.p - 1));
+            SingleRecipe {
+                first,
+                tail,
+                sms_active: sms,
+                threads_per_sm: threads,
+                smem_bytes: c.d1_bytes,
             }
-            (rounds, sms, c.d1_bytes)
         }
         SingleMethod::MapSplit => {
             let wy_per_sm = ceil_div(p.wy, spec.sm_count as usize);
@@ -81,21 +92,32 @@ pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> Ke
             let piece_bytes = (m_per_round * p.k * p.k * BYTES_F32) as f64 / sms as f64;
             let filter_seg = (m_per_round * p.k * p.k * BYTES_F32).min(128);
             let fma = c.th2 as f64;
-            let mut rounds = Vec::with_capacity(c.q);
-            for r in 0..c.q {
-                if r == 0 {
-                    let eff = combined_efficiency(&[
-                        (piece_bytes, segment_efficiency(filter_seg)),
-                        (strip_bytes, segment_efficiency(row_seg)),
-                    ]);
-                    rounds.push(Round::with_efficiency(strip_bytes + piece_bytes, eff, fma));
-                } else {
-                    rounds.push(Round::new(piece_bytes, filter_seg, fma));
-                }
+            let eff = combined_efficiency(&[
+                (piece_bytes, segment_efficiency(filter_seg)),
+                (strip_bytes, segment_efficiency(row_seg)),
+            ]);
+            let first = Round::with_efficiency(strip_bytes + piece_bytes, eff, fma);
+            let tail =
+                (c.q > 1).then(|| (Round::new(piece_bytes, filter_seg, fma), c.q - 1));
+            SingleRecipe {
+                first,
+                tail,
+                sms_active: sms,
+                threads_per_sm: threads,
+                smem_bytes: c.d2_bytes,
             }
-            (rounds, sms, c.d2_bytes)
         }
-    };
+    }
+}
+
+/// Build the plan for an explicit `SingleChoice` (ablations force P/Q).
+pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> KernelPlan {
+    let r = recipe(p, spec, c);
+    let mut rounds = Vec::with_capacity(1 + r.tail.map_or(0, |(_, n)| n));
+    rounds.push(r.first);
+    if let Some((tail, n)) = r.tail {
+        rounds.extend(std::iter::repeat(tail).take(n));
+    }
 
     KernelPlan {
         name: format!(
@@ -106,13 +128,13 @@ pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> Ke
             if c.uses_prefetch { "" } else { " volume" }
         ),
         rounds,
-        sms_active,
-        threads_per_sm: threads,
-        compute_efficiency: 0.9,
+        sms_active: r.sms_active,
+        threads_per_sm: r.threads_per_sm,
+        compute_efficiency: super::COMPUTE_EFFICIENCY,
         output_bytes: (p.out_elems() * BYTES_F32) as f64,
-        smem_bytes_per_sm: smem.min(spec.shared_mem_bytes as usize) as u32,
+        smem_bytes_per_sm: r.smem_bytes.min(spec.shared_mem_bytes as usize) as u32,
         total_fma: p.fma_ops() as f64,
-        launch_overhead_cycles: 4_000.0,
+        launch_overhead_cycles: super::LAUNCH_OVERHEAD_CYCLES,
     }
 }
 

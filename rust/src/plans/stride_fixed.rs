@@ -21,8 +21,8 @@ use crate::analytic::multi::{choose, StrideFixedChoice};
 use crate::analytic::occupancy::paper_launch;
 use crate::conv::{ConvProblem, BYTES_F32};
 use crate::gpusim::memory::segment_efficiency;
-use crate::gpusim::pipeline::combined_efficiency;
-use crate::gpusim::{simulate, GpuSpec, KernelPlan, Round};
+use crate::gpusim::pipeline::{combined_efficiency, simulate_pipeline_runs};
+use crate::gpusim::{simulate, ExecConfig, GpuSpec, KernelPlan, Round};
 
 fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
@@ -30,34 +30,57 @@ fn ceil_div(a: usize, b: usize) -> usize {
 
 /// The paper's multi-channel plan: best of S in {32, 64} (§3.2 step 1).
 pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
+    plan_and_choice(p, spec).0
+}
+
+/// `plan`, also returning the winning (S, W'x, M') — the tuner caches it.
+pub fn plan_and_choice(p: &ConvProblem, spec: &GpuSpec) -> (KernelPlan, StrideFixedChoice) {
     [32, 64]
         .iter()
-        .map(|&s| plan_with_segment(p, spec, s))
+        .map(|&s| plan_with_segment_choice(p, spec, s))
         .min_by(|a, b| {
-            simulate(spec, a).seconds.partial_cmp(&simulate(spec, b).seconds).unwrap()
+            simulate(spec, &a.0).seconds.partial_cmp(&simulate(spec, &b.0).seconds).unwrap()
         })
         .unwrap()
 }
 
 /// Build the plan for an explicit segment size (the S ablation).
+pub fn plan_with_segment(p: &ConvProblem, spec: &GpuSpec, s_bytes: usize) -> KernelPlan {
+    plan_with_segment_choice(p, spec, s_bytes).0
+}
+
+/// `plan_with_segment`, also returning the winning choice.
 ///
 /// M' is picked the way the paper's §4 did ("according to our
 /// preliminary evaluation"): candidate divisors of M that satisfy the
 /// §3.2(4) working-set bound are evaluated under the performance model
 /// and the fastest kept.  The §3.2 closed-form `choose` seeds the
 /// candidate set (it is always included).
-pub fn plan_with_segment(p: &ConvProblem, spec: &GpuSpec, s_bytes: usize) -> KernelPlan {
+pub fn plan_with_segment_choice(
+    p: &ConvProblem,
+    spec: &GpuSpec,
+    s_bytes: usize,
+) -> (KernelPlan, StrideFixedChoice) {
     let seed = choose(p, spec, s_bytes);
     let half = spec.shared_mem_bytes as usize / 2;
-    let mut best: Option<(f64, KernelPlan)> = None;
+    // candidates are compared on their round *recipes* (run-length
+    // pipeline, identical cycles to `simulate` up to the constant
+    // writeback term); only the winner is materialized
+    let mut best: Option<(f64, StrideFixedChoice)> = None;
     let mut consider = |c: &crate::analytic::StrideFixedChoice| {
         if c.smem_bytes > half {
             return;
         }
-        let pl = plan_with_choice(p, spec, c);
-        let t = simulate(spec, &pl).seconds;
+        let r = recipe(p, spec, c);
+        let cfg = ExecConfig {
+            sms_active: r.sms_active,
+            threads_per_sm: r.threads_per_sm,
+            compute_efficiency: super::COMPUTE_EFFICIENCY,
+            launch_overhead_cycles: super::LAUNCH_OVERHEAD_CYCLES,
+        };
+        let t = simulate_pipeline_runs(spec, &cfg, &[(r.round, r.count)]).total_cycles;
         if best.as_ref().map_or(true, |(bt, _)| t < *bt) {
-            best = Some((t, pl));
+            best = Some((t, *c));
         }
     };
     consider(&seed);
@@ -77,11 +100,23 @@ pub fn plan_with_segment(p: &ConvProblem, spec: &GpuSpec, s_bytes: usize) -> Ker
         };
         consider(&c);
     }
-    best.unwrap().1
+    let (_, c) = best.unwrap();
+    (plan_with_choice(p, spec, &c), c)
 }
 
-/// Build the plan for an explicit (S, W'x, M') choice (the M'/W'x ablation).
-pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &StrideFixedChoice) -> KernelPlan {
+/// The round structure of a stride-fixed plan without the rounds
+/// materialized: one identical round repeated `count` times per SM.
+/// `plan_with_choice` expands it; the tuner scores it in closed form.
+#[derive(Clone, Copy, Debug)]
+pub struct StrideRecipe {
+    pub round: Round,
+    pub count: usize,
+    pub sms_active: u32,
+    pub threads_per_sm: u32,
+}
+
+/// Per-SM round recipe for an explicit (S, W'x, M') choice.
+pub fn recipe(p: &ConvProblem, spec: &GpuSpec, c: &StrideFixedChoice) -> StrideRecipe {
     assert!(p.valid());
     let launch = paper_launch(spec);
 
@@ -106,21 +141,27 @@ pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &StrideFixedChoice) 
         (map_bytes, segment_efficiency(128)),
     ]);
 
-    let rounds_per_sm = ceil_div(blocks * segs, sms_active as usize);
-    let rounds: Vec<Round> = (0..rounds_per_sm)
-        .map(|_| Round::with_efficiency(filter_bytes + map_bytes, eff, fma_per_round))
-        .collect();
-
-    KernelPlan {
-        name: format!("ours-multi[S={} M'={} W'x={}]", c.s_bytes, c.m_prime, c.wx_prime),
-        rounds,
+    StrideRecipe {
+        round: Round::with_efficiency(filter_bytes + map_bytes, eff, fma_per_round),
+        count: ceil_div(blocks * segs, sms_active as usize),
         sms_active,
         threads_per_sm: launch.threads_per_sm(spec),
-        compute_efficiency: 0.9,
+    }
+}
+
+/// Build the plan for an explicit (S, W'x, M') choice (the M'/W'x ablation).
+pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &StrideFixedChoice) -> KernelPlan {
+    let r = recipe(p, spec, c);
+    KernelPlan {
+        name: format!("ours-multi[S={} M'={} W'x={}]", c.s_bytes, c.m_prime, c.wx_prime),
+        rounds: vec![r.round; r.count],
+        sms_active: r.sms_active,
+        threads_per_sm: r.threads_per_sm,
+        compute_efficiency: super::COMPUTE_EFFICIENCY,
         output_bytes: (p.out_elems() * BYTES_F32) as f64,
         smem_bytes_per_sm: c.smem_bytes as u32,
         total_fma: p.fma_ops() as f64,
-        launch_overhead_cycles: 4_000.0,
+        launch_overhead_cycles: super::LAUNCH_OVERHEAD_CYCLES,
     }
 }
 

@@ -1,0 +1,410 @@
+//! Memoized tuning results: `(problem, GPU) -> winning PlanParams`, with
+//! a line-based serialization (same `key=value` grammar as the artifact
+//! manifest — this repo's vendor set has no serde).  The coordinator
+//! loads a cache at startup so serving pays zero per-request search.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::analytic::SingleMethod;
+use crate::conv::ConvProblem;
+use crate::gpusim::{gtx_1080ti, tesla_k40, titan_x_maxwell, GpuSpec};
+
+use super::enumerate::PlanParams;
+
+/// One memoized tuning outcome.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Tuned {
+    pub params: PlanParams,
+    /// simulated cycles of the tuned plan
+    pub tuned_cycles: f64,
+    /// simulated cycles of the paper's closed-form plan (the baseline the
+    /// tuner never loses to: tuned_cycles <= paper_cycles always)
+    pub paper_cycles: f64,
+}
+
+impl Tuned {
+    /// Paper cycles over tuned cycles (>= 1 by construction).
+    pub fn speedup(&self) -> f64 {
+        self.paper_cycles / self.tuned_cycles
+    }
+}
+
+/// GPU names contain spaces ("GTX 1080Ti"); the line grammar is
+/// whitespace-separated, so spaces round-trip as underscores.
+fn encode_gpu(name: &str) -> String {
+    name.replace(' ', "_")
+}
+
+fn decode_gpu(name: &str) -> String {
+    name.replace('_', " ")
+}
+
+fn field<'a>(fields: &HashMap<&str, &'a str>, idx: usize, key: &str) -> Result<&'a str> {
+    fields
+        .get(key)
+        .copied()
+        .ok_or_else(|| anyhow!("line {}: missing field {key}", idx + 1))
+}
+
+fn usize_field(fields: &HashMap<&str, &str>, idx: usize, key: &str) -> Result<usize> {
+    field(fields, idx, key)?
+        .parse()
+        .with_context(|| format!("line {}: field {key} not an integer", idx + 1))
+}
+
+fn f64_field(fields: &HashMap<&str, &str>, idx: usize, key: &str) -> Result<f64> {
+    field(fields, idx, key)?
+        .parse()
+        .with_context(|| format!("line {}: field {key} not a float", idx + 1))
+}
+
+/// Cache files are inputs (hand-editable, possibly stale): reject
+/// entries that would panic downstream — invalid problems, divisors
+/// out of range, non-coalesced segment sizes, working sets that cannot
+/// fit the named GPU, or a "tuned" plan slower than the paper baseline
+/// (which would trip the never-lose asserts that guard the *search*).
+fn validate_entry(idx: usize, p: &ConvProblem, gpu: &str, t: &Tuned) -> Result<()> {
+    let line = idx + 1;
+    if !p.valid() {
+        bail!("line {line}: invalid problem {p:?}");
+    }
+    if !(t.tuned_cycles.is_finite() && t.tuned_cycles > 0.0 && t.paper_cycles.is_finite()) {
+        bail!("line {line}: non-finite cycle counts");
+    }
+    if t.tuned_cycles > t.paper_cycles * (1.0 + 1e-9) {
+        bail!("line {line}: tuned_cycles exceed paper_cycles — stale or edited entry");
+    }
+    // known GPUs let us check resource bounds; unknown names are served
+    // never (lookups key on the built-in specs) but must still parse
+    let spec = [gtx_1080ti(), titan_x_maxwell(), tesla_k40()]
+        .into_iter()
+        .find(|s| s.name == gpu);
+    match t.params {
+        PlanParams::Single { p: pp, q, .. } => {
+            if !p.is_single_channel() {
+                bail!("line {line}: kind=single for a C={} problem", p.c);
+            }
+            if pp < 1 || pp > p.wy || q < 1 || q > p.m || (pp != 1 && q != 1) {
+                bail!("line {line}: P/Q out of range (P={pp}, Q={q})");
+            }
+        }
+        PlanParams::Multi { s_bytes, wx_prime, m_prime } => {
+            if p.is_single_channel() {
+                bail!("line {line}: kind=multi for a single-channel problem");
+            }
+            if s_bytes == 0 || s_bytes % 32 != 0 || wx_prime == 0 || wx_prime % 32 != 0 {
+                bail!("line {line}: S/W'x must be non-zero multiples of 32");
+            }
+            if m_prime < 1 || m_prime > p.m {
+                bail!("line {line}: M'={m_prime} out of range");
+            }
+            if let Some(spec) = spec {
+                let ws = crate::analytic::multi::working_set_bytes(
+                    s_bytes, wx_prime, m_prime, p.k,
+                );
+                if ws > spec.shared_mem_bytes as usize / 2 {
+                    bail!(
+                        "line {line}: working set {ws} B exceeds {}'s double-buffer budget",
+                        spec.name
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Serializable map of tuning outcomes keyed by `(problem, GPU name)`.
+#[derive(Clone, Debug, Default)]
+pub struct PlanCache {
+    entries: HashMap<(ConvProblem, String), Tuned>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, p: &ConvProblem, spec: &GpuSpec) -> Option<Tuned> {
+        self.entries.get(&(*p, spec.name.to_string())).copied()
+    }
+
+    pub fn insert(&mut self, p: ConvProblem, spec: &GpuSpec, t: Tuned) {
+        self.entries.insert((p, spec.name.to_string()), t);
+    }
+
+    /// Absorb every entry of `other` (overwriting duplicates), whatever
+    /// GPU name it carries; returns how many entries were absorbed.
+    pub fn merge(&mut self, other: PlanCache) -> usize {
+        let n = other.entries.len();
+        self.entries.extend(other.entries);
+        n
+    }
+
+    /// One line per entry, deterministically ordered (diff-stable files).
+    pub fn to_lines(&self) -> String {
+        let mut keys: Vec<&(ConvProblem, String)> = self.entries.keys().collect();
+        keys.sort_by_key(|(p, g)| (g.clone(), p.c, p.wy, p.wx, p.m, p.k));
+        let mut out = String::from("# pasconv plan cache: problem + gpu -> tuned plan params\n");
+        for key in keys {
+            let (p, gpu) = key;
+            let t = &self.entries[key];
+            let params = match t.params {
+                PlanParams::Single { method, p: pp, q } => {
+                    let m = match method {
+                        SingleMethod::FilterSplit => "filter_split",
+                        SingleMethod::MapSplit => "map_split",
+                    };
+                    format!("kind=single method={m} p={pp} q={q}")
+                }
+                PlanParams::Multi { s_bytes, wx_prime, m_prime } => {
+                    format!("kind=multi s={s_bytes} wxp={wx_prime} mp={m_prime}")
+                }
+            };
+            out.push_str(&format!(
+                "gpu={} c={} wy={} wx={} m={} k={} {params} tuned_cycles={} paper_cycles={}\n",
+                encode_gpu(gpu),
+                p.c,
+                p.wy,
+                p.wx,
+                p.m,
+                p.k,
+                t.tuned_cycles,
+                t.paper_cycles
+            ));
+        }
+        out
+    }
+
+    /// Parse the `to_lines` format (round-trip exact, floats included).
+    pub fn from_lines(text: &str) -> Result<PlanCache> {
+        let mut cache = PlanCache::new();
+        for (idx, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields: HashMap<&str, &str> = HashMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("line {}: malformed token {tok:?}", idx + 1))?;
+                fields.insert(k, v);
+            }
+            let problem = ConvProblem {
+                c: usize_field(&fields, idx, "c")?,
+                wy: usize_field(&fields, idx, "wy")?,
+                wx: usize_field(&fields, idx, "wx")?,
+                m: usize_field(&fields, idx, "m")?,
+                k: usize_field(&fields, idx, "k")?,
+            };
+            let params = match field(&fields, idx, "kind")? {
+                "single" => PlanParams::Single {
+                    method: match field(&fields, idx, "method")? {
+                        "filter_split" => SingleMethod::FilterSplit,
+                        "map_split" => SingleMethod::MapSplit,
+                        other => bail!("line {}: unknown method {other:?}", idx + 1),
+                    },
+                    p: usize_field(&fields, idx, "p")?,
+                    q: usize_field(&fields, idx, "q")?,
+                },
+                "multi" => PlanParams::Multi {
+                    s_bytes: usize_field(&fields, idx, "s")?,
+                    wx_prime: usize_field(&fields, idx, "wxp")?,
+                    m_prime: usize_field(&fields, idx, "mp")?,
+                },
+                other => bail!("line {}: unknown kind {other:?}", idx + 1),
+            };
+            let tuned = Tuned {
+                params,
+                tuned_cycles: f64_field(&fields, idx, "tuned_cycles")?,
+                paper_cycles: f64_field(&fields, idx, "paper_cycles")?,
+            };
+            let gpu = decode_gpu(field(&fields, idx, "gpu")?);
+            validate_entry(idx, &problem, &gpu, &tuned)?;
+            cache.entries.insert((problem, gpu), tuned);
+        }
+        Ok(cache)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_lines())
+            .with_context(|| format!("writing plan cache {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<PlanCache> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan cache {}", path.display()))?;
+        PlanCache::from_lines(&text)
+    }
+
+    /// All entries for one GPU, in the deterministic file order.
+    pub fn entries_for(&self, spec: &GpuSpec) -> Vec<(ConvProblem, Tuned)> {
+        let mut out: Vec<(ConvProblem, Tuned)> = self
+            .entries
+            .iter()
+            .filter(|((_, g), _)| g == spec.name)
+            .map(|((p, _), t)| (*p, *t))
+            .collect();
+        out.sort_by_key(|(p, _)| (p.c, p.wy, p.wx, p.m, p.k));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{gtx_1080ti, titan_x_maxwell};
+
+    fn sample() -> PlanCache {
+        let g = gtx_1080ti();
+        let t = titan_x_maxwell();
+        let mut cache = PlanCache::new();
+        cache.insert(
+            ConvProblem::single(224, 64, 3),
+            &g,
+            Tuned {
+                params: PlanParams::Single {
+                    method: SingleMethod::FilterSplit,
+                    p: 3,
+                    q: 1,
+                },
+                tuned_cycles: 10_234.5625,
+                paper_cycles: 11_000.125,
+            },
+        );
+        cache.insert(
+            ConvProblem::multi(256, 14, 256, 3),
+            &g,
+            Tuned {
+                params: PlanParams::Multi { s_bytes: 128, wx_prime: 32, m_prime: 64 },
+                tuned_cycles: 25_000.0,
+                paper_cycles: 30_303.030_303_030_303,
+            },
+        );
+        cache.insert(
+            ConvProblem::multi(64, 28, 128, 1),
+            &t,
+            Tuned {
+                params: PlanParams::Multi { s_bytes: 64, wx_prime: 32, m_prime: 128 },
+                tuned_cycles: 5_813.77,
+                paper_cycles: 6_900.01,
+            },
+        );
+        cache
+    }
+
+    #[test]
+    fn round_trip_is_exact() {
+        let cache = sample();
+        let text = cache.to_lines();
+        let back = PlanCache::from_lines(&text).unwrap();
+        assert_eq!(back.len(), cache.len());
+        let g = gtx_1080ti();
+        let t = titan_x_maxwell();
+        for spec in [&g, &t] {
+            for (p, tuned) in cache.entries_for(spec) {
+                let got = back.get(&p, spec).unwrap();
+                assert_eq!(got, tuned, "{} on {}", p.label(), spec.name);
+            }
+        }
+        // and the serialized form itself is a fixed point
+        assert_eq!(back.to_lines(), text);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let cache = sample();
+        let dir = std::env::temp_dir().join("pasconv_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan_cache.txt");
+        cache.save(&path).unwrap();
+        let back = PlanCache::load(&path).unwrap();
+        assert_eq!(back.len(), cache.len());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn gpu_names_with_spaces_round_trip() {
+        let cache = sample();
+        let text = cache.to_lines();
+        assert!(text.contains("gpu=GTX_1080Ti"), "{text}");
+        let back = PlanCache::from_lines(&text).unwrap();
+        assert!(back.get(&ConvProblem::single(224, 64, 3), &gtx_1080ti()).is_some());
+    }
+
+    #[test]
+    fn malformed_lines_are_errors() {
+        assert!(PlanCache::from_lines("gpu=x c=1").is_err()); // missing fields
+        assert!(PlanCache::from_lines(
+            "gpu=G c=1 wy=8 wx=8 m=1 k=1 kind=wat tuned_cycles=1 paper_cycles=1"
+        )
+        .is_err());
+        assert!(PlanCache::from_lines(
+            "gpu=G c=1 wy=8 wx=8 m=1 k=1 kind=single method=nope p=1 q=1 tuned_cycles=1 paper_cycles=1"
+        )
+        .is_err());
+        // comments and blanks are fine
+        assert!(PlanCache::from_lines("# header\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn stale_or_edited_entries_are_rejected_not_trusted() {
+        // tuned slower than paper: would trip the never-lose asserts
+        assert!(PlanCache::from_lines(
+            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 tuned_cycles=2 paper_cycles=1"
+        )
+        .is_err());
+        // invalid problem (K > W)
+        assert!(PlanCache::from_lines(
+            "gpu=G c=1 wy=2 wx=2 m=4 k=3 kind=single method=filter_split p=1 q=1 tuned_cycles=1 paper_cycles=1"
+        )
+        .is_err());
+        // P out of range
+        assert!(PlanCache::from_lines(
+            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=99 q=1 tuned_cycles=1 paper_cycles=1"
+        )
+        .is_err());
+        // non-coalesced segment size
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=8 wx=8 m=4 k=3 kind=multi s=36 wxp=32 mp=4 tuned_cycles=1 paper_cycles=1"
+        )
+        .is_err());
+        // working set beyond the named GPU's double-buffer budget
+        assert!(PlanCache::from_lines(
+            "gpu=GTX_1080Ti c=8 wy=64 wx=64 m=512 k=3 kind=multi s=128 wxp=256 mp=512 tuned_cycles=1 paper_cycles=1"
+        )
+        .is_err());
+        // kind must match the problem's channel count (a single-channel
+        // plan for C>1 would panic the builder on lookup)
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=single method=filter_split p=1 q=1 tuned_cycles=1 paper_cycles=2"
+        )
+        .is_err());
+        assert!(PlanCache::from_lines(
+            "gpu=G c=1 wy=14 wx=14 m=16 k=3 kind=multi s=32 wxp=32 mp=16 tuned_cycles=1 paper_cycles=2"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn speedup_definition() {
+        let t = Tuned {
+            params: PlanParams::Multi { s_bytes: 32, wx_prime: 32, m_prime: 1 },
+            tuned_cycles: 50.0,
+            paper_cycles: 100.0,
+        };
+        assert!((t.speedup() - 2.0).abs() < 1e-12);
+    }
+}

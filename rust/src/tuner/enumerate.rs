@@ -1,0 +1,269 @@
+//! Plan-space enumeration: every legal `KernelPlan` parameterization for
+//! a problem, as compact `PlanParams` (the search key the cache stores).
+//!
+//! Single-channel: the paper's §3.1 procedure picks the *minimum*
+//! feasible P (or Q); the tuner instead enumerates every division with a
+//! distinct piece shape — `ceil(Wy/P)` (resp. `ceil(M/Q)`) values dedupe
+//! the range to ~2·sqrt(n) candidates — and keeps any whose resident set
+//! fits shared memory.
+//!
+//! Multi-channel: the paper fixes S ∈ {32, 64}, W'x = 128 and one M'
+//! per problem; the tuner sweeps S over all coalescing-legal multiples
+//! of 32 up to 128, W'x over 32-pixel multiples up to the output size
+//! (capped at 256 px as in §3.2), and M' over the divisors of M, keeping
+//! every triple whose §3.2(4) double-buffer fits half the shared memory.
+
+use crate::analytic::multi::{working_set_bytes, wy_prime};
+use crate::analytic::single::{d1_bytes, d2_bytes, th1, th2};
+use crate::analytic::{SingleChoice, SingleMethod, StrideFixedChoice};
+use crate::conv::{ConvProblem, BYTES_F32};
+use crate::gpusim::GpuSpec;
+
+/// A point in the plan space — enough to rebuild the full `KernelPlan`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanParams {
+    /// §3.1 shape: one divisor active, the other reset to 1 (paper step 4)
+    Single { method: SingleMethod, p: usize, q: usize },
+    /// §3.2 shape: segment bytes, strip pixels, filters per block
+    Multi { s_bytes: usize, wx_prime: usize, m_prime: usize },
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Segment sizes the multi-channel sweep tries (multiples of 32 B, the
+/// §2.2 coalescing constraint; 128 B is tan128's operating point).
+pub const SEGMENT_SWEEP: [usize; 4] = [32, 64, 96, 128];
+
+/// Strip widths in pixels (multiples of 32 px = 128 B, capped at 256 px).
+pub const WX_SWEEP: [usize; 8] = [32, 64, 96, 128, 160, 192, 224, 256];
+
+/// Divisors `d` of `1..=n` giving distinct `ceil(n/d)`, ascending.
+pub fn distinct_divisions(n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut d = 1;
+    while d <= n {
+        let q = ceil_div(n, d);
+        out.push(d);
+        // largest d' with ceil(n/d') == q is (n-1)/(q-1) for q > 1
+        d = if q > 1 { (d + 1).max((n - 1) / (q - 1) + 1) } else { n + 1 };
+    }
+    out
+}
+
+/// All divisors of `n`, ascending.
+pub fn divisors(n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            out.push(d);
+            if d != n / d {
+                out.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Rebuild the full `SingleChoice` (eq. 5/6/8/9 terms) from parameters.
+pub fn single_choice(
+    p: &ConvProblem,
+    spec: &GpuSpec,
+    method: SingleMethod,
+    pp: usize,
+    q: usize,
+) -> SingleChoice {
+    let (d1, d2) = (d1_bytes(p, spec, pp), d2_bytes(p, spec, q));
+    let (t1, t2) = (th1(p, spec, pp), th2(p, spec, q));
+    let (d, th) = match method {
+        SingleMethod::FilterSplit => (d1, t1),
+        SingleMethod::MapSplit => (d2, t2),
+    };
+    SingleChoice {
+        method,
+        p: pp,
+        q,
+        d1_bytes: d1,
+        d2_bytes: d2,
+        th1: t1,
+        th2: t2,
+        uses_prefetch: th >= spec.n_fma() && d <= spec.shared_mem_bytes as usize,
+    }
+}
+
+/// Rebuild the full `StrideFixedChoice` (§3.2 terms) from parameters.
+pub fn multi_choice(
+    p: &ConvProblem,
+    spec: &GpuSpec,
+    s_bytes: usize,
+    wx_prime: usize,
+    m_prime: usize,
+) -> StrideFixedChoice {
+    StrideFixedChoice {
+        s_bytes,
+        wx_prime,
+        m_prime,
+        wy_prime: wy_prime(s_bytes, p.k),
+        smem_bytes: working_set_bytes(s_bytes, wx_prime, m_prime, p.k),
+        hides_latency: (m_prime * (s_bytes / BYTES_F32) * wx_prime) as f64
+            >= 0.95 * spec.n_fma() as f64,
+    }
+}
+
+/// Every candidate parameterization for `p` on `spec`.
+pub fn enumerate(p: &ConvProblem, spec: &GpuSpec) -> Vec<PlanParams> {
+    assert!(p.valid(), "invalid problem");
+    if p.is_single_channel() {
+        enumerate_single(p, spec)
+    } else {
+        enumerate_multi(p, spec)
+    }
+}
+
+fn enumerate_single(p: &ConvProblem, spec: &GpuSpec) -> Vec<PlanParams> {
+    let budget = spec.shared_mem_bytes as usize;
+    let mut out = Vec::new();
+    for pp in distinct_divisions(p.wy) {
+        if d1_bytes(p, spec, pp) <= budget {
+            out.push(PlanParams::Single { method: SingleMethod::FilterSplit, p: pp, q: 1 });
+        }
+    }
+    for q in distinct_divisions(p.m) {
+        if d2_bytes(p, spec, q) <= budget {
+            out.push(PlanParams::Single { method: SingleMethod::MapSplit, p: 1, q });
+        }
+    }
+    // the §2.2 volume fallback (undivided, smem clamped by the builder)
+    // must stay reachable even when nothing fits the budget
+    let fallback = PlanParams::Single { method: SingleMethod::FilterSplit, p: 1, q: 1 };
+    if !out.contains(&fallback) {
+        out.push(fallback);
+    }
+    out
+}
+
+fn enumerate_multi(p: &ConvProblem, spec: &GpuSpec) -> Vec<PlanParams> {
+    let half = spec.shared_mem_bytes as usize / 2;
+    let out_px = p.oy() * p.ox();
+    // strips wider than the (32-px-rounded) output waste fetches; the
+    // whole-output strip itself is a multiple of 32 so it is always in
+    // the sweep when it is <= 256 px
+    let map_px = ceil_div(out_px, 32) * 32;
+    let wx_opts: Vec<usize> =
+        WX_SWEEP.iter().copied().filter(|&w| w <= map_px.max(32)).collect();
+    let m_opts = divisors(p.m);
+    let mut out = Vec::new();
+    for &s in &SEGMENT_SWEEP {
+        for &wx in &wx_opts {
+            for &mp in &m_opts {
+                if working_set_bytes(s, wx, mp, p.k) <= half {
+                    out.push(PlanParams::Multi { s_bytes: s, wx_prime: wx, m_prime: mp });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::gtx_1080ti;
+
+    #[test]
+    fn distinct_divisions_cover_all_quotients() {
+        for n in [1usize, 2, 3, 7, 28, 56, 100, 1024] {
+            let ds = distinct_divisions(n);
+            let qs: Vec<usize> = ds.iter().map(|&d| ceil_div(n, d)).collect();
+            // strictly decreasing quotients == no duplicates, none missed
+            for w in qs.windows(2) {
+                assert!(w[0] > w[1], "n={n}: {qs:?}");
+            }
+            let all: std::collections::HashSet<usize> =
+                (1..=n).map(|d| ceil_div(n, d)).collect();
+            assert_eq!(all, qs.iter().copied().collect(), "n={n}");
+            assert!(ds.len() <= 2 * (n as f64).sqrt() as usize + 2, "n={n}: {}", ds.len());
+        }
+    }
+
+    #[test]
+    fn divisors_exact() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(64), vec![1, 2, 4, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn single_candidates_fit_budget_and_include_fallback() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::single(1024, 32, 3);
+        let cands = enumerate(&p, &g);
+        assert!(cands.len() > 8, "{}", cands.len());
+        let mut has_fallback = false;
+        for c in &cands {
+            match *c {
+                PlanParams::Single { method, p: pp, q } => {
+                    assert!(pp == 1 || q == 1);
+                    if (pp, q) == (1, 1) && method == SingleMethod::FilterSplit {
+                        has_fallback = true;
+                    }
+                    if pp > 1 {
+                        assert!(d1_bytes(&p, &g, pp) <= g.shared_mem_bytes as usize);
+                    }
+                    if q > 1 {
+                        assert!(d2_bytes(&p, &g, q) <= g.shared_mem_bytes as usize);
+                    }
+                }
+                PlanParams::Multi { .. } => panic!("multi candidate for single problem"),
+            }
+        }
+        assert!(has_fallback);
+    }
+
+    #[test]
+    fn multi_candidates_fit_half_smem() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(256, 14, 256, 3);
+        let cands = enumerate(&p, &g);
+        assert!(!cands.is_empty());
+        for c in &cands {
+            let PlanParams::Multi { s_bytes, wx_prime, m_prime } = *c else {
+                panic!("single candidate for multi problem");
+            };
+            assert_eq!(s_bytes % 32, 0);
+            assert_eq!(wx_prime % 32, 0);
+            assert_eq!(p.m % m_prime, 0);
+            assert!(
+                working_set_bytes(s_bytes, wx_prime, m_prime, p.k)
+                    <= g.shared_mem_bytes as usize / 2
+            );
+        }
+    }
+
+    #[test]
+    fn small_map_strips_clamped_to_output() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(512, 7, 512, 3); // 25 output px -> 32-px strip
+        for c in enumerate(&p, &g) {
+            let PlanParams::Multi { wx_prime, .. } = c else { unreachable!() };
+            assert_eq!(wx_prime, 32);
+        }
+    }
+
+    #[test]
+    fn rebuilt_choices_match_formulas() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::single(224, 64, 3);
+        let c = single_choice(&p, &g, SingleMethod::FilterSplit, 4, 1);
+        assert_eq!(c.d1_bytes, d1_bytes(&p, &g, 4));
+        assert_eq!(c.th1, th1(&p, &g, 4));
+        let pm = ConvProblem::multi(128, 28, 128, 3);
+        let mc = multi_choice(&pm, &g, 32, 128, 64);
+        assert_eq!(mc.smem_bytes, working_set_bytes(32, 128, 64, 3));
+        assert_eq!(mc.wy_prime, wy_prime(32, 3));
+    }
+}

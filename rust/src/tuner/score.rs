@@ -1,0 +1,131 @@
+//! Candidate scoring: the exact simulated cycle count of a candidate,
+//! computed in closed form from the plan builders' *round recipes* —
+//! no `Vec<Round>` is materialized, so scoring the whole plan space is
+//! O(candidates), not O(candidates × rounds).
+//!
+//! The round lists both kernels produce are run-length structured (a
+//! cold first round, then identical steady-state rounds), so the
+//! pipeline recurrence
+//!
+//!   launch + latency + load(0) + Σ max(load(r), compute(r-1)) + compute(n-1)
+//!
+//! collapses: each identical run contributes `(count-1)·max(load, comp)`
+//! plus one cross-run transition.  `gpusim::simulate` on the
+//! materialized plan produces the same number (the tuner tests pin the
+//! equivalence), which is what lets the search trust the score and only
+//! simulate the winners.
+
+use super::enumerate::{multi_choice, single_choice, PlanParams};
+use crate::conv::{ConvProblem, BYTES_F32};
+use crate::gpusim::pipeline::simulate_pipeline_runs;
+use crate::gpusim::sim::WRITEBACK_TAIL_FRACTION;
+use crate::gpusim::{ExecConfig, GpuSpec, Round};
+use crate::plans::{single_channel, stride_fixed, COMPUTE_EFFICIENCY, LAUNCH_OVERHEAD_CYCLES};
+
+/// Candidates whose schedule exceeds this many rounds per SM are skipped
+/// before materialization (they are never competitive — each round does
+/// almost no work — and expanding them would dominate memory).
+pub const MAX_ROUNDS: usize = 4_000_000;
+
+fn exec_config(sms_active: u32, threads_per_sm: u32) -> ExecConfig {
+    ExecConfig {
+        sms_active,
+        threads_per_sm,
+        compute_efficiency: COMPUTE_EFFICIENCY,
+        launch_overhead_cycles: LAUNCH_OVERHEAD_CYCLES,
+    }
+}
+
+/// Exact pipeline cycles for a run-length round list.
+fn runs_cycles(spec: &GpuSpec, cfg: &ExecConfig, runs: &[(Round, usize)]) -> f64 {
+    simulate_pipeline_runs(spec, cfg, runs).total_cycles
+}
+
+/// Writeback tail charge, as in `gpusim::simulate`.
+fn writeback_cycles(spec: &GpuSpec, p: &ConvProblem) -> f64 {
+    WRITEBACK_TAIL_FRACTION * (p.out_elems() * BYTES_F32) as f64 / spec.bytes_per_cycle()
+}
+
+/// Exact simulated cycles of a candidate, or `None` when the candidate's
+/// schedule is too long to ever win (`MAX_ROUNDS`).
+pub fn score(p: &ConvProblem, spec: &GpuSpec, params: &PlanParams) -> Option<f64> {
+    match *params {
+        PlanParams::Single { method, p: pp, q } => {
+            let c = single_choice(p, spec, method, pp, q);
+            let r = single_channel::recipe(p, spec, &c);
+            let cfg = exec_config(r.sms_active, r.threads_per_sm);
+            let mut runs = vec![(r.first, 1usize)];
+            if let Some((tail, n)) = r.tail {
+                if n > MAX_ROUNDS {
+                    return None;
+                }
+                runs.push((tail, n));
+            }
+            Some(runs_cycles(spec, &cfg, &runs) + writeback_cycles(spec, p))
+        }
+        PlanParams::Multi { s_bytes, wx_prime, m_prime } => {
+            let c = multi_choice(p, spec, s_bytes, wx_prime, m_prime);
+            let r = stride_fixed::recipe(p, spec, &c);
+            if r.count > MAX_ROUNDS {
+                return None;
+            }
+            let cfg = exec_config(r.sms_active, r.threads_per_sm);
+            Some(runs_cycles(spec, &cfg, &[(r.round, r.count)]) + writeback_cycles(spec, p))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::SingleMethod;
+    use crate::gpusim::{gtx_1080ti, simulate};
+    use crate::plans::{single_channel, stride_fixed};
+
+    #[test]
+    fn single_score_equals_simulate() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::single(224, 64, 3);
+        for (method, pp, q) in [
+            (SingleMethod::FilterSplit, 1, 1),
+            (SingleMethod::FilterSplit, 4, 1),
+            (SingleMethod::MapSplit, 1, 8),
+        ] {
+            let params = PlanParams::Single { method, p: pp, q };
+            let s = score(&p, &g, &params).unwrap();
+            let c = single_choice(&p, &g, method, pp, q);
+            let r = simulate(&g, &single_channel::plan_with_choice(&p, &g, &c));
+            assert!(
+                (s - r.cycles).abs() < 1e-6 * r.cycles,
+                "{method:?} P={pp} Q={q}: score {s} vs simulate {}",
+                r.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn multi_score_equals_simulate() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(128, 28, 128, 3);
+        for (s_bytes, wx, mp) in [(32, 128, 64), (64, 32, 128), (128, 64, 16)] {
+            let params = PlanParams::Multi { s_bytes, wx_prime: wx, m_prime: mp };
+            let s = score(&p, &g, &params).unwrap();
+            let c = multi_choice(&p, &g, s_bytes, wx, mp);
+            let r = simulate(&g, &stride_fixed::plan_with_choice(&p, &g, &c));
+            assert!(
+                (s - r.cycles).abs() < 1e-6 * r.cycles,
+                "S={s_bytes} W'x={wx} M'={mp}: score {s} vs simulate {}",
+                r.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_schedules_are_rejected() {
+        let g = gtx_1080ti();
+        // C=512, W=512, M'=1, W'x=32: millions of near-empty rounds
+        let p = ConvProblem::multi(512, 512, 512, 5);
+        let params = PlanParams::Multi { s_bytes: 32, wx_prime: 32, m_prime: 1 };
+        assert!(score(&p, &g, &params).is_none());
+    }
+}

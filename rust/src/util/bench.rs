@@ -44,7 +44,14 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
-    pub fn to_string(&self) -> String {
+    pub fn print(&self) {
+        print!("{self}");
+    }
+}
+
+/// Render the aligned table ( `.to_string()` comes via `ToString`).
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
             for (i, c) in row.iter().enumerate() {
@@ -59,20 +66,12 @@ impl Table {
                 .collect::<Vec<_>>()
                 .join("  ")
         };
-        let mut out = String::new();
-        out.push_str(&fmt_row(&self.headers));
-        out.push('\n');
-        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
-        out.push('\n');
+        writeln!(f, "{}", fmt_row(&self.headers))?;
+        writeln!(f, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)))?;
         for row in &self.rows {
-            out.push_str(&fmt_row(row));
-            out.push('\n');
+            writeln!(f, "{}", fmt_row(row))?;
         }
-        out
-    }
-
-    pub fn print(&self) {
-        print!("{}", self.to_string());
+        Ok(())
     }
 }
 

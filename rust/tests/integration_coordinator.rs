@@ -38,6 +38,10 @@ fn conv_request_round_trips_and_matches_oracle() {
     let want = conv2d_multi_cpu(&p, &image.data, &filters.data);
     assert!(max_abs_diff(&resp.output.data, &want) < 0.1, "numeric mismatch");
     assert!(resp.latency_secs > 0.0);
+    // the router warmed the plan table at startup: conv responses carry
+    // the tuned-plan advice with zero per-request search
+    let advice = resp.plan.as_deref().unwrap_or_default();
+    assert!(advice.contains("tuned"), "missing tuned plan advice: {advice:?}");
     c.shutdown();
 }
 

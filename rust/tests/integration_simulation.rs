@@ -1,12 +1,17 @@
 //! Integration over the simulation stack: the paper's headline claims,
 //! checked end-to-end (analytic model -> plans -> baselines -> gpusim).
 //! These are the pass criteria of DESIGN.md §5 — shape, not absolutes.
+//!
+//! The paper-claim tests pin `paper_plan_for` (the verbatim §3 picks):
+//! they document the *reproduction*, which must not drift as the tuner
+//! improves the serving path.  The tuner's own gate — tuned plans never
+//! lose to the paper's, and beat them somewhere — is the last test.
 
 use pasconv::baselines::{cudnn_proxy, dac17, tan128};
 use pasconv::conv::suites::{fig4_suite, fig5_suite, FIG4_POINTS, FIG5_POINTS};
 use pasconv::conv::ConvProblem;
 use pasconv::gpusim::{gtx_1080ti, simulate, speedup, titan_x_maxwell};
-use pasconv::plans::plan_for;
+use pasconv::plans::{paper_plan_for, plan_for};
 use pasconv::util::stats::geomean;
 
 /// Fig. 4 claim: "Our method is faster than Cudnn v7.1 in all tested
@@ -16,7 +21,7 @@ fn fig4_ours_beats_cudnn_everywhere() {
     let g = gtx_1080ti();
     let mut speedups = vec![];
     for p in fig4_suite() {
-        let s = speedup(&g, &plan_for(&p, &g), &cudnn_proxy::plan(&p, &g));
+        let s = speedup(&g, &paper_plan_for(&p, &g), &cudnn_proxy::plan(&p, &g));
         assert!(s > 1.0, "{}: {s:.2}x — cudnn proxy wins", p.label());
         speedups.push(s);
     }
@@ -32,7 +37,7 @@ fn fig5_ours_beats_cudnn_everywhere() {
     let g = gtx_1080ti();
     let mut speedups = vec![];
     for p in fig5_suite() {
-        let s = speedup(&g, &plan_for(&p, &g), &cudnn_proxy::plan(&p, &g));
+        let s = speedup(&g, &paper_plan_for(&p, &g), &cudnn_proxy::plan(&p, &g));
         assert!(s > 1.0, "{}: {s:.2}x — cudnn proxy wins", p.label());
         speedups.push(s);
     }
@@ -42,7 +47,7 @@ fn fig5_ours_beats_cudnn_everywhere() {
     // 2.6x vs 1.39x)
     let g4: Vec<f64> = fig4_suite()
         .iter()
-        .map(|p| speedup(&g, &plan_for(p, &g), &cudnn_proxy::plan(p, &g)))
+        .map(|p| speedup(&g, &paper_plan_for(p, &g), &cudnn_proxy::plan(p, &g)))
         .collect();
     assert!(geomean(&g4) > geomean(&speedups), "single-channel advantage missing");
 }
@@ -55,8 +60,8 @@ fn small_map_gains_exceed_large_map_gains() {
     let g = gtx_1080ti();
     let small = ConvProblem::multi(256, 14, 256, 3);
     let large = ConvProblem::multi(64, 224, 64, 3);
-    let s_small = speedup(&g, &plan_for(&small, &g), &cudnn_proxy::plan(&small, &g));
-    let s_large = speedup(&g, &plan_for(&large, &g), &cudnn_proxy::plan(&large, &g));
+    let s_small = speedup(&g, &paper_plan_for(&small, &g), &cudnn_proxy::plan(&small, &g));
+    let s_large = speedup(&g, &paper_plan_for(&large, &g), &cudnn_proxy::plan(&large, &g));
     assert!(
         s_small > s_large,
         "small-map gain {s_small:.2} <= large-map gain {s_large:.2}"
@@ -73,7 +78,7 @@ fn dac17_comparison_at_k3() {
     let mut speedups = vec![];
     for &(w, c) in &FIG5_POINTS {
         let p = ConvProblem::multi(c, w, c, 3);
-        let s = speedup(&g, &plan_for(&p, &g), &dac17::plan(&p, &g));
+        let s = speedup(&g, &paper_plan_for(&p, &g), &dac17::plan(&p, &g));
         assert!(s > 0.95, "{}: dac17 wins ({s:.2})", p.label());
         speedups.push(s);
     }
@@ -81,7 +86,7 @@ fn dac17_comparison_at_k3() {
     assert!(avg > 1.3, "geomean vs dac17 = {avg:.2}, paper implies ~1.7");
     // and the degradation is concentrated below 32 px (their documented flaw)
     let small = ConvProblem::multi(256, 14, 256, 3);
-    let s_small = speedup(&g, &plan_for(&small, &g), &dac17::plan(&small, &g));
+    let s_small = speedup(&g, &paper_plan_for(&small, &g), &dac17::plan(&small, &g));
     assert!(s_small > 2.0, "small-map margin vs [1] only {s_small:.2}x");
 }
 
@@ -96,14 +101,14 @@ fn tan128_never_faster_overall() {
     let g = gtx_1080ti();
     let mut speedups = vec![];
     for p in fig5_suite() {
-        let s = speedup(&g, &plan_for(&p, &g), &tan128::plan(&p, &g));
+        let s = speedup(&g, &paper_plan_for(&p, &g), &tan128::plan(&p, &g));
         assert!(s > 0.6, "{}: tan128 wins by >40% ({s:.2})", p.label());
         speedups.push(s);
     }
     assert!(geomean(&speedups) >= 1.0, "geomean {:.3}", geomean(&speedups));
     // where bandwidth binds, the win is decisive
     let p = ConvProblem::multi(128, 112, 128, 1);
-    let s = speedup(&g, &plan_for(&p, &g), &tan128::plan(&p, &g));
+    let s = speedup(&g, &paper_plan_for(&p, &g), &tan128::plan(&p, &g));
     assert!(s > 1.3, "bandwidth-bound case only {s:.2}x");
 }
 
@@ -115,12 +120,12 @@ fn tan128_never_faster_overall() {
 fn maxwell_portability() {
     let t = titan_x_maxwell();
     for p in fig4_suite() {
-        let s = speedup(&t, &plan_for(&p, &t), &cudnn_proxy::plan(&p, &t));
+        let s = speedup(&t, &paper_plan_for(&p, &t), &cudnn_proxy::plan(&p, &t));
         assert!(s > 1.0, "single-channel {} on Titan X: {s:.2}", p.label());
     }
     let mut multi = vec![];
     for p in fig5_suite() {
-        let s = speedup(&t, &plan_for(&p, &t), &cudnn_proxy::plan(&p, &t));
+        let s = speedup(&t, &paper_plan_for(&p, &t), &cudnn_proxy::plan(&p, &t));
         assert!(s > 0.95, "multi-channel {} on Titan X: {s:.2}", p.label());
         multi.push(s);
     }
@@ -147,7 +152,7 @@ fn simulated_time_grows_with_map_size_at_fixed_m() {
     let mut last = 0.0;
     for w in [64, 128, 256, 512, 1024] {
         let p = ConvProblem::single(w, 32, 3);
-        let t = simulate(&g, &plan_for(&p, &g)).seconds;
+        let t = simulate(&g, &paper_plan_for(&p, &g)).seconds;
         assert!(t > last, "W={w}: {t} <= {last}");
         last = t;
     }
@@ -166,4 +171,29 @@ fn fig4_contains_both_strategies() {
     // the sweep endpoints of the paper exist in the suite
     assert!(FIG4_POINTS.contains(&(28, 512)));
     assert!(FIG4_POINTS.contains(&(1024, 32)));
+}
+
+/// The tuner's acceptance gate: the serving path (`plan_for`, tuned) is
+/// never slower than the paper's closed-form pick on any suite workload,
+/// and strictly faster on at least one per suite — otherwise searching
+/// the plan space bought nothing.
+#[test]
+fn tuned_serving_plans_dominate_paper_plans() {
+    let g = gtx_1080ti();
+    for (name, suite) in [("fig4", fig4_suite()), ("fig5", fig5_suite())] {
+        let mut strictly_better = 0;
+        for p in suite {
+            let tuned = simulate(&g, &plan_for(&p, &g)).seconds;
+            let paper = simulate(&g, &paper_plan_for(&p, &g)).seconds;
+            assert!(
+                tuned <= paper * (1.0 + 1e-9),
+                "{}: tuned {tuned} slower than paper {paper}",
+                p.label()
+            );
+            if tuned < paper * 0.999 {
+                strictly_better += 1;
+            }
+        }
+        assert!(strictly_better >= 1, "{name}: tuner never beat the paper's plans");
+    }
 }

@@ -1,0 +1,128 @@
+//! Property-based tests over the plan-space tuner (in-repo harness,
+//! util::prop): every tuned plan is legal under `gpusim::occupancy`,
+//! never scores worse than the paper's closed-form pick, and the
+//! `PlanCache` serialization round-trips whatever the search produces.
+
+use pasconv::conv::ConvProblem;
+use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell};
+use pasconv::plans::paper_plan_for;
+use pasconv::tuner::{self, PlanCache};
+use pasconv::util::prop::{check_no_shrink, Config};
+use pasconv::util::rng::Rng;
+
+fn any_problem(r: &mut Rng) -> ConvProblem {
+    let k = *r.choose(&[1usize, 3, 5]);
+    let w = *r.choose(&[7usize, 14, 28, 56, 112, 224, 512]);
+    let c = *r.choose(&[1usize, 16, 64, 128, 256, 512]);
+    let m = *r.choose(&[16usize, 32, 64, 128, 256, 512]);
+    ConvProblem { c, wy: w.max(k), wx: w.max(k), m, k }
+}
+
+#[test]
+fn prop_tuned_plans_always_legal_per_occupancy() {
+    for spec in [gtx_1080ti(), titan_x_maxwell()] {
+        check_no_shrink(
+            &Config { cases: 32, seed: 21 },
+            any_problem,
+            |p| {
+                let plan = tuner::tuned_plan(p, &spec);
+                if !tuner::is_legal(&spec, &plan) {
+                    return Err(format!(
+                        "{} on {}: illegal plan {}",
+                        p.label(),
+                        spec.name,
+                        plan.name
+                    ));
+                }
+                if plan.smem_bytes_per_sm > spec.shared_mem_bytes {
+                    return Err(format!("{}: smem {}", p.label(), plan.smem_bytes_per_sm));
+                }
+                if plan.sms_active < 1 || plan.sms_active > spec.sm_count {
+                    return Err(format!("{}: sms {}", p.label(), plan.sms_active));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_tuned_never_worse_than_paper_closed_form() {
+    for spec in [gtx_1080ti(), titan_x_maxwell()] {
+        check_no_shrink(
+            &Config { cases: 32, seed: 22 },
+            any_problem,
+            |p| {
+                let tuned = simulate(&spec, &tuner::tuned_plan(p, &spec));
+                let paper = simulate(&spec, &paper_plan_for(p, &spec));
+                if tuned.seconds > paper.seconds * (1.0 + 1e-9) {
+                    return Err(format!(
+                        "{} on {}: tuned {} > paper {}",
+                        p.label(),
+                        spec.name,
+                        tuned.seconds,
+                        paper.seconds
+                    ));
+                }
+                if !(tuned.seconds.is_finite() && tuned.seconds > 0.0) {
+                    return Err(format!("{}: bad time {}", p.label(), tuned.seconds));
+                }
+                if !(tuned.efficiency > 0.0 && tuned.efficiency <= 1.0) {
+                    return Err(format!("{}: bad efficiency {}", p.label(), tuned.efficiency));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_tune_outcome_consistent_with_its_own_report() {
+    // Tuned.tuned_cycles must be the simulated cycles of the plan its
+    // params rebuild, and the never-lose invariant must hold in the
+    // report itself.
+    let g = gtx_1080ti();
+    check_no_shrink(
+        &Config { cases: 24, seed: 23 },
+        any_problem,
+        |p| {
+            let t = tuner::tune(p, &g);
+            if t.tuned_cycles > t.paper_cycles * (1.0 + 1e-9) {
+                return Err(format!("{}: report says tuned loses", p.label()));
+            }
+            let rebuilt = simulate(&g, &tuner::build_plan(p, &g, &t.params));
+            if (rebuilt.cycles - t.tuned_cycles).abs() > 1e-6 * t.tuned_cycles {
+                return Err(format!(
+                    "{}: rebuilt {} != reported {}",
+                    p.label(),
+                    rebuilt.cycles,
+                    t.tuned_cycles
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_plan_cache_round_trips_search_results() {
+    let g = gtx_1080ti();
+    let mut rng = Rng::new(24);
+    let mut cache = PlanCache::new();
+    let mut problems = vec![];
+    for _ in 0..12 {
+        let p = any_problem(&mut rng);
+        cache.insert(p, &g, tuner::tune(&p, &g));
+        problems.push(p);
+    }
+    let text = cache.to_lines();
+    let back = PlanCache::from_lines(&text).expect("parse own serialization");
+    assert_eq!(back.len(), cache.len());
+    for p in &problems {
+        let a = cache.get(p, &g).unwrap();
+        let b = back.get(p, &g).unwrap();
+        assert_eq!(a, b, "{}", p.label());
+    }
+    // serialization is a fixed point (deterministic ordering)
+    assert_eq!(back.to_lines(), text);
+}

@@ -1,0 +1,167 @@
+//! Offline stand-in for the `anyhow` crate (the vendor registry of this
+//! repo has no network access — see rust/vendor/README.md).
+//!
+//! Implements exactly the surface pasconv uses: `Error` (a message plus
+//! an optional source chain), `Result<T>`, the `anyhow!` / `bail!`
+//! macros, and the `Context` extension trait on `Result` and `Option`.
+//! `{}` prints the outermost message, `{:#}` the whole chain, matching
+//! the real crate's formatting contract.
+
+use std::fmt;
+
+/// Error: an owned message with an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// Wrap `self` under a new context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = &e.source;
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // mirrors anyhow's Debug: message plus a caused-by list
+        write!(f, "{}", self.msg)?;
+        let chain = self.chain();
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Blanket conversion from any standard error, so `?` lifts library
+/// errors into `anyhow::Error` (the real crate's behaviour). `Error`
+/// itself deliberately does not implement `std::error::Error`, which is
+/// what keeps this impl coherent with `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!(...)`: build an `Error` from a format string or a value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `bail!(...)`: early-return `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = fails().unwrap_err().context("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), String> = Err("boom".into());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(format!("{e:#}"), "ctx: boom");
+        let o: Option<u32> = None;
+        assert_eq!(o.with_context(|| "absent").unwrap_err().to_string(), "absent");
+    }
+
+    #[test]
+    fn question_mark_lifts_std_errors() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        let name = "x";
+        assert_eq!(anyhow!("inline {name}").to_string(), "inline x");
+        assert_eq!(anyhow!("args {}", 3).to_string(), "args 3");
+        assert_eq!(anyhow!(String::from("owned")).to_string(), "owned");
+    }
+}
