@@ -1,26 +1,26 @@
 //! Whole-model conv-stack comparison — §4's "convolutions which are
 //! commonly used in popular CNN models [AlexNet][GoogLeNet][VGG][ResNet]"
 //! aggregated per model: the end-to-end conv time of each network under
-//! our kernels vs the cuDNN proxy, plus the small-map share that drives
-//! the difference (the paper's §1 motivation).
+//! the paper's plans *and* the tuner's (PR 1) vs the cuDNN proxy, plus
+//! the small-map share that drives the difference (the paper's §1
+//! motivation).  Layer times are summed flat — the graph-level view
+//! (pools, pads, skips, memory plan) is the `e2e_models` bench.
 //!
 //! Run: `cargo bench --bench model_stacks`
 
 use pasconv::baselines::cudnn_proxy;
 use pasconv::conv::suites::{alexnet, googlenet_inception3a, resnet18, small_map_fraction, vgg16};
 use pasconv::conv::ConvProblem;
-use pasconv::gpusim::{gtx_1080ti, simulate};
-use pasconv::plans::paper_plan_for;
+use pasconv::gpusim::{gtx_1080ti, simulate, GpuSpec, KernelPlan};
+use pasconv::plans::{paper_plan_for, plan_for};
 use pasconv::util::bench::Table;
 
-fn stack_time(g: &pasconv::gpusim::GpuSpec, layers: &[ConvProblem], ours: bool) -> f64 {
-    layers
-        .iter()
-        .map(|p| {
-            let plan = if ours { paper_plan_for(p, g) } else { cudnn_proxy::plan(p, g) };
-            simulate(g, &plan).seconds
-        })
-        .sum()
+fn stack_time(
+    g: &GpuSpec,
+    layers: &[ConvProblem],
+    plan_fn: fn(&ConvProblem, &GpuSpec) -> KernelPlan,
+) -> f64 {
+    layers.iter().map(|p| simulate(g, &plan_fn(p, g)).seconds).sum()
 }
 
 fn main() {
@@ -36,37 +36,55 @@ fn main() {
         "model",
         "layers",
         "maps<32",
-        "ours (ms)",
+        "paper (ms)",
+        "tuned (ms)",
         "cudnn (ms)",
-        "model speedup",
+        "paper speedup",
+        "tuned speedup",
     ]);
     let mut speedups = vec![];
     for (name, layers) in &models {
-        let ours = stack_time(&g, layers, true);
-        let base = stack_time(&g, layers, false);
-        speedups.push((name, base / ours, small_map_fraction(layers)));
+        let paper = stack_time(&g, layers, paper_plan_for);
+        let tuned = stack_time(&g, layers, plan_for);
+        let base = stack_time(&g, layers, cudnn_proxy::plan);
+        assert!(
+            tuned <= paper * (1.0 + 1e-9),
+            "{name}: tuned stack {tuned} slower than paper {paper}"
+        );
+        speedups.push((name, base / paper, base / tuned, small_map_fraction(layers)));
         t.row(&[
             name.to_string(),
             layers.len().to_string(),
             format!("{:.0}%", 100.0 * small_map_fraction(layers)),
-            format!("{:.3}", ours * 1e3),
+            format!("{:.3}", paper * 1e3),
+            format!("{:.3}", tuned * 1e3),
             format!("{:.3}", base * 1e3),
-            format!("{:.2}x", base / ours),
+            format!("{:.2}x", base / paper),
+            format!("{:.2}x", base / tuned),
         ]);
     }
     t.print();
 
     // the paper's §1 motivation: models dominated by small maps benefit
     // the most — speedup should correlate with the small-map share
-    let alex = speedups.iter().find(|(n, _, _)| n.starts_with("AlexNet")).unwrap();
-    let vgg = speedups.iter().find(|(n, _, _)| n.starts_with("VGG")).unwrap();
+    let alex = speedups.iter().find(|(n, ..)| n.starts_with("AlexNet")).unwrap();
+    let vgg = speedups.iter().find(|(n, ..)| n.starts_with("VGG")).unwrap();
     println!(
-        "\nsmall-map-heavy AlexNet ({:.0}% < 32px): {:.2}x   vs map-heavy VGG-16 ({:.0}%): {:.2}x",
-        100.0 * alex.2,
+        "\nsmall-map-heavy AlexNet ({:.0}% < 32px): {:.2}x paper / {:.2}x tuned   \
+         vs map-heavy VGG-16 ({:.0}%): {:.2}x paper / {:.2}x tuned",
+        100.0 * alex.3,
         alex.1,
-        100.0 * vgg.2,
-        vgg.1
+        alex.2,
+        100.0 * vgg.3,
+        vgg.1,
+        vgg.2
     );
-    assert!(speedups.iter().all(|(_, s, _)| *s > 1.0), "a model stack regressed");
+    assert!(speedups.iter().all(|(_, s, ..)| *s > 1.0), "a model stack regressed");
+    // PR-1's tuner must show up at the model level too: every stack at
+    // least as fast as paper, and visibly faster somewhere
+    assert!(
+        speedups.iter().any(|(_, paper_s, tuned_s, _)| *tuned_s > *paper_s * 1.01),
+        "tuning invisible at model level"
+    );
     println!("model_stacks OK");
 }

@@ -88,16 +88,30 @@ pub fn resnet18() -> Vec<ConvProblem> {
     ]
 }
 
-/// GoogLeNet [11] inception(3a) branches on the 28x28 map (K in {1,3,5}).
-pub fn googlenet_inception3a() -> Vec<ConvProblem> {
+/// GoogLeNet [11] inception(3a) as its real multi-path structure: four
+/// parallel branches over the 192-channel 28x28 input, concatenated to
+/// 256 channels.  Each inner `Vec` is one branch in execution order
+/// (the reduce conv feeds the following conv); the fourth branch's 1x1
+/// projection follows the cell's 3x3 max pool.  `graph::inception3a_graph`
+/// builds the DAG from this.
+pub fn googlenet_inception3a_branches() -> Vec<Vec<ConvProblem>> {
     vec![
-        ConvProblem::multi(192, 28, 64, 1),
-        ConvProblem::multi(192, 28, 96, 1),
-        ConvProblem::multi(96, 28, 128, 3),
-        ConvProblem::multi(192, 28, 16, 1),
-        ConvProblem::multi(16, 28, 32, 5),
-        ConvProblem::multi(192, 28, 32, 1),
+        // 1x1 branch
+        vec![ConvProblem::multi(192, 28, 64, 1)],
+        // 1x1 reduce -> 3x3 branch
+        vec![ConvProblem::multi(192, 28, 96, 1), ConvProblem::multi(96, 28, 128, 3)],
+        // 1x1 reduce -> 5x5 branch
+        vec![ConvProblem::multi(192, 28, 16, 1), ConvProblem::multi(16, 28, 32, 5)],
+        // 3x3 maxpool -> 1x1 projection branch
+        vec![ConvProblem::multi(192, 28, 32, 1)],
     ]
+}
+
+/// GoogLeNet [11] inception(3a) branches on the 28x28 map (K in {1,3,5})
+/// — the flat layer list the per-layer sweeps use (the branch order of
+/// `googlenet_inception3a_branches`, flattened).
+pub fn googlenet_inception3a() -> Vec<ConvProblem> {
+    googlenet_inception3a_branches().into_iter().flatten().collect()
 }
 
 /// All CNN-model layers, deduplicated — "many convolutions commonly used
@@ -172,6 +186,35 @@ mod tests {
                 assert_ne!(a, b, "duplicate problem survived dedup");
             }
         }
+    }
+
+    #[test]
+    fn inception_branches_chain_and_flatten() {
+        let branches = googlenet_inception3a_branches();
+        assert_eq!(branches.len(), 4);
+        // within a branch, each conv's filters become the next conv's
+        // channels (the structural fact the flat list cannot express)
+        for branch in &branches {
+            for pair in branch.windows(2) {
+                assert_eq!(pair[0].m, pair[1].c, "branch does not chain");
+                assert_eq!(pair[0].wy, pair[1].wy, "branch changes maps");
+            }
+        }
+        // all branches start from the cell's 192-channel input (the pool
+        // branch too — 3x3/s1 pooling keeps channels) and share the map
+        for branch in &branches {
+            assert_eq!(branch[0].c, 192);
+            assert!(branch.iter().all(|p| p.wy == 28));
+        }
+        // concat channel count is the GoogLeNet table's 256
+        let out_channels: usize = branches.iter().map(|b| b.last().unwrap().m).sum();
+        assert_eq!(out_channels, 256);
+        // flattening preserves the historical flat list
+        let flat = googlenet_inception3a();
+        assert_eq!(flat.len(), 6);
+        assert_eq!(flat[0], ConvProblem::multi(192, 28, 64, 1));
+        assert_eq!(flat[2], ConvProblem::multi(96, 28, 128, 3));
+        assert_eq!(flat[5], ConvProblem::multi(192, 28, 32, 1));
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod workload;
 
 pub use batcher::{BatchConfig, Batcher};
 pub use metrics::Metrics;
-pub use request::{Payload, Request, Response};
+pub use request::{ModelSummary, Payload, Request, Response};
 pub use router::{plan_advice, Router};
 pub use server::Coordinator;
 pub use workload::{Arrivals, Mix, Workload};

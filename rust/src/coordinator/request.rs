@@ -12,6 +12,10 @@ pub enum Payload {
     Conv { problem: ConvProblem, image: Tensor, filters: Tensor },
     /// one PaperNet inference: image (1, 28, 28); dynamically batched
     Cnn { image: Tensor },
+    /// whole-model inference plan for a registered model: the graph
+    /// executor's end-to-end latency + memory report under the tuned
+    /// plans the router warmed at startup (L1 — no tensors move)
+    Model { model: String },
 }
 
 impl Payload {
@@ -19,8 +23,27 @@ impl Payload {
         match self {
             Payload::Conv { .. } => "conv",
             Payload::Cnn { .. } => "cnn",
+            Payload::Model { .. } => "model",
         }
     }
+}
+
+/// Headline numbers of a `Payload::Model` execution (the full per-node
+/// breakdown stays server-side; clients wanting it use `graph::execute`
+/// directly).
+#[derive(Clone, Debug)]
+pub struct ModelSummary {
+    pub model: String,
+    /// graph nodes executed
+    pub nodes: usize,
+    /// conv layer instances among them
+    pub conv_layers: usize,
+    /// simulated end-to-end model latency, seconds
+    pub model_latency_secs: f64,
+    /// planned peak device arena, bytes
+    pub arena_peak_bytes: usize,
+    /// naive keep-everything-resident footprint, bytes
+    pub naive_bytes: usize,
 }
 
 /// An in-flight request.
@@ -42,9 +65,13 @@ pub struct Response {
     pub artifact: String,
     /// how many requests shared the executed batch
     pub batch_size: usize,
-    /// tuned-plan advice the router attached at routing time (conv
-    /// requests, when the table was warmed; None for CNN traffic)
+    /// human-readable planning note: for conv requests, the tuned-plan
+    /// advice the router attached at routing time (when the table was
+    /// warmed); for model requests, the `ModelReport::summary` line
+    /// (structured numbers live in `model`); None for CNN traffic
     pub plan: Option<String>,
+    /// model execution summary (`Payload::Model` requests only)
+    pub model: Option<ModelSummary>,
 }
 
 #[cfg(test)]
@@ -61,5 +88,7 @@ mod tests {
         assert_eq!(conv.kind_str(), "conv");
         let cnn = Payload::Cnn { image: Tensor::zeros(vec![1, 28, 28]) };
         assert_eq!(cnn.kind_str(), "cnn");
+        let model = Payload::Model { model: "resnet18".into() };
+        assert_eq!(model.kind_str(), "model");
     }
 }

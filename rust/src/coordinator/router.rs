@@ -1,15 +1,20 @@
 //! Routing: map a request to the artifact that serves it, and attach the
 //! plan advice — the tuner's memoized pick when the table was warmed
 //! (`warm_plans`, run once at coordinator startup so serving pays zero
-//! per-request search), or the paper's §3 closed-form note.
+//! per-request search), or the paper's §3 closed-form note.  Registered
+//! model graphs route the same way: `warm_plans` pre-tunes every conv
+//! layer of every registered model, so `Payload::Model` requests execute
+//! entirely from the plan cache.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::analytic;
 use crate::conv::ConvProblem;
 use crate::gpusim::GpuSpec;
+use crate::graph;
 use crate::runtime::{Artifact, ArtifactKind};
 use crate::tuner;
 
@@ -18,6 +23,10 @@ use crate::tuner;
 pub struct Router {
     conv_by_problem: HashMap<ConvProblem, String>,
     cnn_by_batch: Vec<(usize, String)>, // sorted by batch ascending
+    /// registered models, built once at registration: (canonical name,
+    /// shared graph), in registration order — routing a model is an
+    /// Arc bump, never a rebuild or deep clone
+    models: Vec<(String, Arc<graph::Graph>)>,
     /// tuned-plan advice per routed problem, filled by `warm_plans`
     tuned_advice: HashMap<ConvProblem, String>,
 }
@@ -80,12 +89,59 @@ impl Router {
         v
     }
 
-    /// Tune every routed conv problem up front (fills the process-wide
+    /// Register a model for `Payload::Model` traffic.  The graph is
+    /// built, validated, and stored once here (keyed by its canonical
+    /// `Graph::name`); `warm_plans` then pre-tunes every conv layer and
+    /// `route_model` is a pure lookup.  Duplicate registration is a
+    /// no-op.
+    pub fn register_model(&mut self, name: &str) -> Result<()> {
+        let g = graph::model_graph(name)?;
+        if !self.models.iter().any(|(m, _)| *m == g.name) {
+            self.models.push((g.name.clone(), Arc::new(g)));
+        }
+        Ok(())
+    }
+
+    /// Registered model names, in registration order.
+    pub fn models(&self) -> Vec<&str> {
+        self.models.iter().map(|(m, _)| m.as_str()).collect()
+    }
+
+    /// The pre-built graph serving a registered model name.
+    pub fn route_model(&self, name: &str) -> Result<Arc<graph::Graph>> {
+        self.models.iter().find(|(m, _)| m == name).map(|(_, g)| g.clone()).ok_or_else(|| {
+            anyhow!(
+                "model '{name}' not registered (registered: {})",
+                if self.models.is_empty() {
+                    "none".to_string()
+                } else {
+                    self.models().join(", ")
+                }
+            )
+        })
+    }
+
+    /// Every distinct conv problem this router can be asked to plan:
+    /// the routed artifacts plus every layer of every registered model.
+    pub fn plannable_problems(&self) -> Vec<ConvProblem> {
+        let mut v = self.conv_problems();
+        for (_, g) in &self.models {
+            for p in g.conv_problems() {
+                if !v.contains(&p) {
+                    v.push(p);
+                }
+            }
+        }
+        v
+    }
+
+    /// Tune every plannable conv problem up front (fills the process-wide
     /// `tuner` cache) and keep the advice strings; returns how many
-    /// problems were tuned.  After this, serving never searches: the
-    /// per-request cost of `tuner::tuned_plan` is one cache lookup.
+    /// problems were tuned.  After this, serving never searches: a conv
+    /// request's advice and every layer of a model execution are cache
+    /// lookups.
     pub fn warm_plans(&mut self, spec: &GpuSpec) -> usize {
-        let problems = self.conv_problems();
+        let problems = self.plannable_problems();
         for p in &problems {
             let advice = tuner::advice(p, spec);
             self.tuned_advice.insert(*p, advice);
@@ -169,6 +225,33 @@ mod tests {
         let g = gtx_1080ti();
         assert!(plan_advice(&ConvProblem::single(224, 64, 3), &g).contains("single-channel"));
         assert!(plan_advice(&ConvProblem::multi(64, 56, 64, 3), &g).contains("stride-fixed"));
+    }
+
+    #[test]
+    fn model_registry_validates_and_routes() {
+        let mut r = router();
+        assert!(r.models().is_empty());
+        assert!(r.route_model("resnet18").is_err(), "unregistered must not route");
+        r.register_model("resnet18").unwrap();
+        r.register_model("resnet18").unwrap(); // idempotent
+        assert_eq!(r.models(), vec!["resnet18"]);
+        let g = r.route_model("resnet18").unwrap();
+        assert_eq!(g.name, "resnet18");
+        assert!(r.register_model("papernet-9000").is_err(), "unknown model accepted");
+    }
+
+    #[test]
+    fn warm_plans_covers_registered_model_layers() {
+        let g = gtx_1080ti();
+        let mut r = router();
+        r.register_model("inception3a").unwrap();
+        let n = r.warm_plans(&g);
+        // 2 routed conv artifacts + 6 distinct inception layers
+        assert_eq!(n, 2 + 6);
+        for p in crate::conv::suites::googlenet_inception3a() {
+            let advice = r.tuned_advice(&p).expect("model layer warmed");
+            assert!(advice.contains("tuned"), "{advice}");
+        }
     }
 
     #[test]

@@ -20,8 +20,9 @@ use anyhow::{anyhow, Result};
 
 use super::batcher::{BatchConfig, Batcher};
 use super::metrics::Metrics;
-use super::request::{Payload, Request, Response};
+use super::request::{ModelSummary, Payload, Request, Response};
 use super::router::Router;
+use crate::gpusim::GpuSpec;
 use crate::runtime::{Runtime, Tensor};
 
 type Respond = Sender<Result<Response, String>>;
@@ -35,6 +36,9 @@ enum Work {
     /// a conv request plus the tuned-plan advice the router attached
     Single(Request, Respond, Option<String>),
     CnnBatch(Vec<CnnItem>),
+    /// a whole-model plan request, carrying the registry's pre-built
+    /// shared graph — neither thread rebuilds or deep-clones it
+    Model(Request, Respond, std::sync::Arc<crate::graph::Graph>),
 }
 
 /// Handle to a running coordinator.
@@ -67,8 +71,14 @@ impl Coordinator {
         let mut router = Router::from_artifacts(&artifacts);
         let metrics = Arc::new(Mutex::new(Metrics::default()));
 
-        // tune every routed conv problem once, before traffic: the queue
-        // thread then serves tuned plans with zero per-request search
+        // the §4 model graphs are always servable (they are L1-only)
+        for name in crate::graph::MODEL_NAMES {
+            router.register_model(name).expect("built-in model");
+        }
+
+        // tune every routed conv problem and every registered model
+        // layer once, before traffic: the queue thread then serves tuned
+        // plans — and model executions — with zero per-request search
         let tuned = router.warm_plans(gpu);
         metrics.lock().unwrap().plans_tuned = tuned as u64;
 
@@ -84,6 +94,7 @@ impl Coordinator {
 
         let exec_metrics = metrics.clone();
         let exec_dir = artifact_dir.to_path_buf();
+        let exec_gpu = gpu.clone();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let exec_thread = std::thread::Builder::new()
             .name("pasconv-exec".into())
@@ -109,7 +120,7 @@ impl Coordinator {
                     }
                 }
                 let _ = ready_tx.send(Ok(()));
-                exec_loop(work_rx, runtime, exec_metrics)
+                exec_loop(work_rx, runtime, exec_gpu, exec_metrics)
             })
             .expect("spawn exec thread");
         ready_rx
@@ -213,6 +224,21 @@ fn queue_loop(
                         }
                     }
                 }
+                Payload::Model { model } => {
+                    // the registry holds the graph built at registration;
+                    // unknown names fail here with the registered list
+                    match router.route_model(model) {
+                        Ok(graph) => {
+                            if work_tx.send(Work::Model(req, respond, graph)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            metrics.lock().unwrap().errors += 1;
+                            let _ = respond.send(Err(e.to_string()));
+                        }
+                    }
+                }
             }
         }
         if let Some(batch) = batcher.poll(Instant::now()) {
@@ -227,7 +253,12 @@ fn queue_loop(
     }
 }
 
-fn exec_loop(work_rx: Receiver<Work>, mut runtime: Runtime, metrics: Arc<Mutex<Metrics>>) {
+fn exec_loop(
+    work_rx: Receiver<Work>,
+    mut runtime: Runtime,
+    gpu: GpuSpec,
+    metrics: Arc<Mutex<Metrics>>,
+) {
     let router = Router::from_artifacts(
         &runtime.names().iter().map(|n| runtime.artifact(n).unwrap().clone()).collect::<Vec<_>>(),
     );
@@ -257,6 +288,7 @@ fn exec_loop(work_rx: Receiver<Work>, mut runtime: Runtime, metrics: Arc<Mutex<M
                             artifact: name,
                             batch_size: 1,
                             plan: plan_advice,
+                            model: None,
                         }));
                     }
                     Err(e) => {
@@ -264,6 +296,35 @@ fn exec_loop(work_rx: Receiver<Work>, mut runtime: Runtime, metrics: Arc<Mutex<M
                         let _ = respond.send(Err(e.to_string()));
                     }
                 }
+            }
+            Work::Model(req, respond, graph) => {
+                // every layer was pre-tuned by warm_plans, so this is a
+                // pure walk over the plan cache + simulator
+                let report = crate::graph::execute(&graph, &gpu, crate::plans::plan_for);
+                let artifact = format!("model:{}", graph.name);
+                let latency = req.submitted.elapsed().as_secs_f64();
+                metrics.lock().unwrap().record_response(&artifact, latency);
+                // the output tensor carries the honest simulation data:
+                // per-node seconds in schedule order
+                let per_node: Vec<f32> =
+                    report.nodes.iter().map(|n| n.seconds as f32).collect();
+                let output = Tensor::new(vec![per_node.len()], per_node).expect("report tensor");
+                let _ = respond.send(Ok(Response {
+                    id: req.id,
+                    output,
+                    latency_secs: latency,
+                    artifact,
+                    batch_size: 1,
+                    plan: Some(report.summary()),
+                    model: Some(ModelSummary {
+                        model: report.model.clone(),
+                        nodes: report.nodes.len(),
+                        conv_layers: report.conv_layers,
+                        model_latency_secs: report.total_seconds,
+                        arena_peak_bytes: report.arena.peak_bytes,
+                        naive_bytes: report.arena.naive_bytes,
+                    }),
+                }));
             }
             Work::CnnBatch(items) => {
                 let n = items.len();
@@ -331,6 +392,7 @@ fn exec_loop(work_rx: Receiver<Work>, mut runtime: Runtime, metrics: Arc<Mutex<M
                                 artifact: name.clone(),
                                 batch_size: n,
                                 plan: None,
+                                model: None,
                             }));
                         }
                     }

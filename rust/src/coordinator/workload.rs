@@ -15,8 +15,17 @@ use super::request::Payload;
 pub enum Arrivals {
     /// all requests at t = 0 (closed-loop burst)
     Burst,
-    /// Poisson with the given mean rate (req/s)
+    /// Poisson with the given mean rate (req/s) — exact exponential
+    /// gaps, valid at any rate (a 0.1 req/s stream really does idle ~10 s
+    /// between requests)
     Poisson { rate: f64 },
+    /// Poisson with gaps clamped to `cap` — the seed's implicit 1 s
+    /// clamp made explicit and configurable, for load generators that
+    /// must bound worst-case idle time.  The clamp truncates the
+    /// exponential tail, so the realized rate exceeds `rate` once
+    /// 1/rate approaches `cap`; use plain `Poisson` when the rate
+    /// itself is under test.
+    PoissonCapped { rate: f64, cap: Duration },
     /// fixed inter-arrival gap
     Uniform { gap: Duration },
 }
@@ -26,14 +35,20 @@ impl Arrivals {
     pub fn next_gap(&self, rng: &mut Rng) -> Duration {
         match *self {
             Arrivals::Burst => Duration::ZERO,
-            Arrivals::Poisson { rate } => {
-                // exponential inter-arrival: -ln(U)/rate
-                let u = rng.next_f64().max(f64::MIN_POSITIVE);
-                Duration::from_secs_f64((-u.ln() / rate).min(1.0))
+            Arrivals::Poisson { rate } => Duration::from_secs_f64(exp_gap(rng, rate)),
+            Arrivals::PoissonCapped { rate, cap } => {
+                Duration::from_secs_f64(exp_gap(rng, rate).min(cap.as_secs_f64()))
             }
             Arrivals::Uniform { gap } => gap,
         }
     }
+}
+
+/// Exponential inter-arrival sample: -ln(U)/rate.
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    assert!(rate > 0.0, "non-positive Poisson rate");
+    let u = rng.next_f64().max(f64::MIN_POSITIVE);
+    -u.ln() / rate
 }
 
 /// What fraction of the stream is raw conv traffic (vs CNN inference).
@@ -105,6 +120,33 @@ mod tests {
         let mean: f64 =
             (0..20_000).map(|_| a.next_gap(&mut rng).as_secs_f64()).sum::<f64>() / 20_000.0;
         assert!((mean - 1e-3).abs() < 1e-4, "mean gap {mean}");
+    }
+
+    #[test]
+    fn low_rate_poisson_mean_is_unclamped() {
+        // the seed's .min(1.0) clamp pinned every sub-1-req/s stream to a
+        // ~1 s mean; the exact sampler must recover 1/rate = 4 s
+        let mut rng = Rng::new(21);
+        let a = Arrivals::Poisson { rate: 0.25 };
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| a.next_gap(&mut rng).as_secs_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 4.0).abs() < 0.2, "mean gap {mean}");
+    }
+
+    #[test]
+    fn capped_poisson_clamps_and_distorts() {
+        let mut rng = Rng::new(22);
+        let cap = Duration::from_secs(1);
+        let a = Arrivals::PoissonCapped { rate: 0.25, cap };
+        let mut mean = 0.0;
+        for _ in 0..5_000 {
+            let g = a.next_gap(&mut rng);
+            assert!(g <= cap);
+            mean += g.as_secs_f64() / 5_000.0;
+        }
+        // truncated at the cap: the mean collapses toward it
+        assert!(mean < 1.0, "mean gap {mean}");
     }
 
     #[test]

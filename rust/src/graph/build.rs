@@ -1,0 +1,505 @@
+//! Graph construction: a validating builder with shape inference, and
+//! the four CNN models of §4 (AlexNet, VGG-16, ResNet-18, GoogLeNet
+//! inception(3a)) assembled from the *same* `ConvProblem`s the
+//! `conv::suites` lists evaluate — the graph layer adds the inter-layer
+//! structure (pools, pads, skips, branches) those flat lists drop.
+//!
+//! Convention: the paper's kernels compute *valid* convolutions, so each
+//! model applies its 'same' padding as an explicit graph-level `Pad`
+//! node after the conv (`conv_same`) — the conv problems stay verbatim
+//! the suite entries, and shape inference stays exact.
+
+use anyhow::{anyhow, Result};
+
+use crate::conv::{suites, ConvProblem};
+
+use super::node::{Node, NodeId, Op, Shape};
+
+/// A validated DAG of layers.  Nodes are stored in insertion order and
+/// every edge points from a lower to a higher id, so insertion order is
+/// one topological order (the scheduler still derives its own).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// consumers[id] = ids of nodes reading `id` (one entry per edge).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![vec![]; self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                out[i].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// Nodes no other node consumes — the network outputs.
+    pub fn outputs(&self) -> Vec<NodeId> {
+        self.consumers()
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.is_empty())
+            .map(|(id, _)| id)
+            .collect()
+    }
+
+    /// Distinct conv problems in node order — what the router pre-tunes
+    /// for a registered model.
+    pub fn conv_problems(&self) -> Vec<ConvProblem> {
+        let mut out: Vec<ConvProblem> = vec![];
+        for n in &self.nodes {
+            if let Op::Conv { problem } = n.op {
+                if !out.contains(&problem) {
+                    out.push(problem);
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of conv nodes (layer instances, not distinct problems).
+    pub fn conv_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.op.is_conv()).count()
+    }
+
+    /// Re-check every structural invariant the builder enforced — used
+    /// by the property tests on generated graphs.
+    pub fn validate(&self) -> Result<()> {
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                if i >= n.id {
+                    return Err(anyhow!("{}: edge {} -> {} not forward", n.name, i, n.id));
+                }
+            }
+            let ins: Vec<Shape> = n.inputs.iter().map(|&i| self.nodes[i].shape).collect();
+            let got = infer_shape(&n.op, &ins)
+                .map_err(|e| e.context(format!("node {}", n.name)))?;
+            if got != n.shape {
+                return Err(anyhow!(
+                    "{}: stored shape {} != inferred {}",
+                    n.name,
+                    n.shape.label(),
+                    got.label()
+                ));
+            }
+        }
+        if self.nodes.is_empty() {
+            return Err(anyhow!("empty graph"));
+        }
+        Ok(())
+    }
+}
+
+/// Shape rule of each operator over its input shapes.
+pub fn infer_shape(op: &Op, inputs: &[Shape]) -> Result<Shape> {
+    let arity = |n: usize| -> Result<()> {
+        if inputs.len() == n {
+            Ok(())
+        } else {
+            Err(anyhow!("{} wants {} inputs, got {}", op.kind(), n, inputs.len()))
+        }
+    };
+    match *op {
+        Op::Input { shape } => {
+            arity(0)?;
+            if shape.elems() == 0 {
+                return Err(anyhow!("input with empty shape"));
+            }
+            Ok(shape)
+        }
+        Op::Conv { problem: p } => {
+            arity(1)?;
+            if !p.valid() {
+                return Err(anyhow!("invalid conv problem {}", p.label()));
+            }
+            let want = Shape::new(p.c, p.wy, p.wx);
+            if inputs[0] != want {
+                return Err(anyhow!(
+                    "conv {} wants input {}, got {}",
+                    p.label(),
+                    want.label(),
+                    inputs[0].label()
+                ));
+            }
+            Ok(Shape::new(p.m, p.oy(), p.ox()))
+        }
+        Op::Pad { h, w } => {
+            arity(1)?;
+            let s = inputs[0];
+            if h < s.h || w < s.w {
+                return Err(anyhow!("pad to {h}x{w} shrinks {}", s.label()));
+            }
+            Ok(Shape::new(s.c, h, w))
+        }
+        Op::Pool { k, stride } => {
+            arity(1)?;
+            let s = inputs[0];
+            if k < 1 || stride < 1 || k > s.h || k > s.w {
+                return Err(anyhow!("pool k={k} s={stride} does not fit {}", s.label()));
+            }
+            Ok(Shape::new(s.c, (s.h - k) / stride + 1, (s.w - k) / stride + 1))
+        }
+        Op::Add => {
+            arity(2)?;
+            if inputs[0] != inputs[1] {
+                return Err(anyhow!(
+                    "add of mismatched shapes {} vs {}",
+                    inputs[0].label(),
+                    inputs[1].label()
+                ));
+            }
+            Ok(inputs[0])
+        }
+        Op::Concat => {
+            if inputs.len() < 2 {
+                return Err(anyhow!("concat wants >= 2 inputs, got {}", inputs.len()));
+            }
+            let (h, w) = (inputs[0].h, inputs[0].w);
+            if inputs.iter().any(|s| s.h != h || s.w != w) {
+                return Err(anyhow!("concat of mismatched maps"));
+            }
+            Ok(Shape::new(inputs.iter().map(|s| s.c).sum(), h, w))
+        }
+    }
+}
+
+/// Incremental graph builder.  Every `add` validates arity, edge
+/// direction (inputs must already exist) and the operator's shape rule,
+/// so a finished graph is structurally sound by construction.
+#[derive(Clone, Debug)]
+pub struct GraphBuilder {
+    name: String,
+    nodes: Vec<Node>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> GraphBuilder {
+        GraphBuilder { name: name.to_string(), nodes: vec![] }
+    }
+
+    /// Generic validated insertion; the typed helpers below all land here.
+    pub fn add(&mut self, name: &str, op: Op, inputs: &[NodeId]) -> Result<NodeId> {
+        let mut shapes = Vec::with_capacity(inputs.len());
+        for &i in inputs {
+            let n = self
+                .nodes
+                .get(i)
+                .ok_or_else(|| anyhow!("{name}: input node {i} does not exist"))?;
+            shapes.push(n.shape);
+        }
+        let shape =
+            infer_shape(&op, &shapes).map_err(|e| e.context(format!("node {name}")))?;
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, name: name.to_string(), op, inputs: inputs.to_vec(), shape });
+        Ok(id)
+    }
+
+    pub fn input(&mut self, name: &str, shape: Shape) -> NodeId {
+        self.add(name, Op::Input { shape }, &[]).expect("input nodes cannot fail")
+    }
+
+    /// Output shape of an already-added node (graph generators and the
+    /// model builders peek at intermediate shapes).
+    pub fn node_shape(&self, id: NodeId) -> Shape {
+        self.nodes[id].shape
+    }
+
+    /// Nodes added so far.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn conv(&mut self, name: &str, input: NodeId, problem: ConvProblem) -> Result<NodeId> {
+        self.add(name, Op::Conv { problem }, &[input])
+    }
+
+    /// Conv followed by a pad back to the problem's nominal map — the
+    /// models' 'same' padding.  K=1 convs need no pad and get none.
+    pub fn conv_same(&mut self, name: &str, input: NodeId, problem: ConvProblem) -> Result<NodeId> {
+        let c = self.conv(name, input, problem)?;
+        if problem.k == 1 {
+            return Ok(c);
+        }
+        self.pad(&format!("{name}.pad"), c, problem.wy, problem.wx)
+    }
+
+    pub fn pad(&mut self, name: &str, input: NodeId, h: usize, w: usize) -> Result<NodeId> {
+        self.add(name, Op::Pad { h, w }, &[input])
+    }
+
+    pub fn pool(&mut self, name: &str, input: NodeId, k: usize, stride: usize) -> Result<NodeId> {
+        self.add(name, Op::Pool { k, stride }, &[input])
+    }
+
+    pub fn add_skip(&mut self, name: &str, a: NodeId, b: NodeId) -> Result<NodeId> {
+        self.add(name, Op::Add, &[a, b])
+    }
+
+    pub fn concat(&mut self, name: &str, inputs: &[NodeId]) -> Result<NodeId> {
+        self.add(name, Op::Concat, inputs)
+    }
+
+    pub fn finish(self) -> Result<Graph> {
+        if self.nodes.is_empty() {
+            return Err(anyhow!("{}: empty graph", self.name));
+        }
+        Ok(Graph { name: self.name, nodes: self.nodes })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the §4 models as graphs
+// ---------------------------------------------------------------------------
+
+/// Model names `model_graph` accepts (what the router registers and the
+/// CLI's `--model` takes).
+pub const MODEL_NAMES: [&str; 4] = ["alexnet", "vgg16", "resnet18", "inception3a"];
+
+/// Build a named model graph.  Names are canonical (`MODEL_NAMES`):
+/// every `Graph::name` equals the name that built it, so registries can
+/// key on either interchangeably.
+pub fn model_graph(name: &str) -> Result<Graph> {
+    match name {
+        "alexnet" => Ok(alexnet_graph()),
+        "vgg16" => Ok(vgg16_graph()),
+        "resnet18" => Ok(resnet18_graph()),
+        "inception3a" => Ok(inception3a_graph()),
+        _ => Err(anyhow!(
+            "unknown model '{name}' (available: {})",
+            MODEL_NAMES.join(", ")
+        )),
+    }
+}
+
+/// AlexNet's stride-1 conv body (conv2..conv5, the `suites::alexnet`
+/// problems) with its inter-stage 3x3/s2 max pools.
+pub fn alexnet_graph() -> Graph {
+    let l = suites::alexnet();
+    let mut b = GraphBuilder::new("alexnet");
+    let x = b.input("in", Shape::new(96, 27, 27));
+    let x = b.conv_same("conv2", x, l[0]).expect("alexnet conv2");
+    let x = b.pool("pool2", x, 3, 2).expect("alexnet pool2");
+    let x = b.conv_same("conv3", x, l[1]).expect("alexnet conv3");
+    let x = b.conv_same("conv4", x, l[2]).expect("alexnet conv4");
+    let x = b.conv_same("conv5", x, l[3]).expect("alexnet conv5");
+    b.pool("pool5", x, 3, 2).expect("alexnet pool5");
+    b.finish().expect("alexnet graph")
+}
+
+/// VGG-16's 13-conv body: five blocks of 'same' 3x3 convs, each closed
+/// by a 2x2/s2 max pool.  Repeated layers reuse the same `ConvProblem`,
+/// so the distinct problems are exactly `suites::vgg16`.
+pub fn vgg16_graph() -> Graph {
+    let mut b = GraphBuilder::new("vgg16");
+    let mut x = b.input("in", Shape::new(3, 224, 224));
+    // (C_in, map, C_out, convs in block)
+    let blocks: [(usize, usize, usize, usize); 5] = [
+        (3, 224, 64, 2),
+        (64, 112, 128, 2),
+        (128, 56, 256, 3),
+        (256, 28, 512, 3),
+        (512, 14, 512, 3),
+    ];
+    for (bi, &(c_in, w, c_out, n)) in blocks.iter().enumerate() {
+        for i in 0..n {
+            let c = if i == 0 { c_in } else { c_out };
+            let p = ConvProblem::multi(c, w, c_out, 3);
+            x = b
+                .conv_same(&format!("conv{}_{}", bi + 1, i + 1), x, p)
+                .expect("vgg16 conv");
+        }
+        x = b.pool(&format!("pool{}", bi + 1), x, 2, 2).expect("vgg16 pool");
+    }
+    b.finish().expect("vgg16 graph")
+}
+
+/// ResNet-18's body: four stages of two basic blocks on 56/28/14/7 maps.
+/// Stage transitions pool 2x2/s2 and project the skip with the suite's
+/// K=1 convs; every residual `Add` keeps its block input live across the
+/// block — the lifetimes the arena planner exists for.
+pub fn resnet18_graph() -> Graph {
+    let mut b = GraphBuilder::new("resnet18");
+    let mut x = b.input("in", Shape::new(64, 56, 56));
+    // (C_in, C_out, map) per stage
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 64, 56), (64, 128, 28), (128, 256, 14), (256, 512, 7)];
+    for (si, &(c_in, c_out, w)) in stages.iter().enumerate() {
+        let s = si + 1;
+        if si > 0 {
+            x = b.pool(&format!("down{s}"), x, 2, 2).expect("resnet18 pool");
+        }
+        for blk in 1..=2usize {
+            let first = blk == 1 && c_in != c_out;
+            let ca = if first {
+                ConvProblem::multi(c_in, w, c_out, 3)
+            } else {
+                ConvProblem::multi(c_out, w, c_out, 3)
+            };
+            let cb = ConvProblem::multi(c_out, w, c_out, 3);
+            let a = b.conv_same(&format!("s{s}b{blk}c1"), x, ca).expect("resnet18 conv");
+            let c2 = b.conv_same(&format!("s{s}b{blk}c2"), a, cb).expect("resnet18 conv");
+            let skip = if first {
+                b.conv(&format!("s{s}proj"), x, ConvProblem::multi(c_in, w, c_out, 1))
+                    .expect("resnet18 proj")
+            } else {
+                x
+            };
+            x = b.add_skip(&format!("s{s}b{blk}add"), c2, skip).expect("resnet18 add");
+        }
+    }
+    b.finish().expect("resnet18 graph")
+}
+
+/// GoogLeNet inception(3a): four parallel branches over the 192x28x28
+/// input (1x1 / 1x1+3x3 / 1x1+5x5 / 3x3-pool+1x1) concatenated to
+/// 256x28x28 — built from `suites::googlenet_inception3a_branches`.
+pub fn inception3a_graph() -> Graph {
+    let br = suites::googlenet_inception3a_branches();
+    assert_eq!(br.len(), 4, "inception(3a) has four branches");
+    let mut b = GraphBuilder::new("inception3a");
+    let x = b.input("in", Shape::new(192, 28, 28));
+    let b1 = b.conv("b1.1x1", x, br[0][0]).expect("inception b1");
+    let t = b.conv("b2.reduce", x, br[1][0]).expect("inception b2r");
+    let b2 = b.conv_same("b2.3x3", t, br[1][1]).expect("inception b2");
+    let t = b.conv("b3.reduce", x, br[2][0]).expect("inception b3r");
+    let b3 = b.conv_same("b3.5x5", t, br[2][1]).expect("inception b3");
+    let t = b.pool("b4.pool", x, 3, 1).expect("inception pool");
+    let t = b.pad("b4.pool.pad", t, 28, 28).expect("inception pad");
+    let b4 = b.conv("b4.proj", t, br[3][0]).expect("inception b4");
+    b.concat("concat", &[b1, b2, b3, b4]).expect("inception concat");
+    b.finish().expect("inception3a graph")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_build_and_validate() {
+        // (graph-problems == suite-problems is the ISSUE-2 acceptance
+        // gate, asserted once in rust/tests/integration_graph.rs)
+        for name in MODEL_NAMES {
+            let g = model_graph(name).unwrap();
+            assert!(g.validate().is_ok(), "{name}");
+            assert!(g.len() > 5, "{name}: only {} nodes", g.len());
+        }
+        assert!(model_graph("lenet").is_err());
+    }
+
+    #[test]
+    fn vgg16_has_the_full_13_conv_body() {
+        let g = vgg16_graph();
+        assert_eq!(g.conv_nodes(), 13);
+        // output after five 2x2 pools: 512 x 7 x 7
+        let out = g.outputs();
+        assert_eq!(out.len(), 1);
+        assert_eq!(g.node(out[0]).shape, Shape::new(512, 7, 7));
+    }
+
+    #[test]
+    fn alexnet_output_shape() {
+        let g = alexnet_graph();
+        let out = g.outputs();
+        assert_eq!(out.len(), 1);
+        assert_eq!(g.node(out[0]).shape, Shape::new(256, 6, 6));
+        assert_eq!(g.conv_nodes(), 4);
+    }
+
+    #[test]
+    fn resnet18_skips_are_real_branches() {
+        let g = resnet18_graph();
+        assert_eq!(g.conv_nodes(), 16 + 3); // 8 blocks x 2 convs + 3 projections
+        // every add has two distinct inputs (main path + skip)
+        let adds: Vec<&Node> =
+            g.nodes().iter().filter(|n| matches!(n.op, Op::Add)).collect();
+        assert_eq!(adds.len(), 8);
+        for a in adds {
+            assert_ne!(a.inputs[0], a.inputs[1], "{}", a.name);
+        }
+        let out = g.outputs();
+        assert_eq!(out.len(), 1);
+        assert_eq!(g.node(out[0]).shape, Shape::new(512, 7, 7));
+    }
+
+    #[test]
+    fn inception_concat_is_256_channels() {
+        let g = inception3a_graph();
+        let out = g.outputs();
+        assert_eq!(out.len(), 1);
+        let o = g.node(out[0]);
+        assert!(matches!(o.op, Op::Concat));
+        assert_eq!(o.shape, Shape::new(256, 28, 28));
+        assert_eq!(o.inputs.len(), 4);
+        // the input feeds all four branches
+        let consumers = g.consumers();
+        assert!(consumers[0].len() >= 4, "input fan-out {}", consumers[0].len());
+    }
+
+    #[test]
+    fn builder_rejects_shape_mismatches() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input("in", Shape::new(8, 14, 14));
+        // conv expecting 16 channels on an 8-channel tensor
+        assert!(b.conv("c", x, ConvProblem::multi(16, 14, 8, 3)).is_err());
+        // pad cannot shrink
+        assert!(b.pad("p", x, 7, 7).is_err());
+        // pool window larger than the map
+        assert!(b.pool("q", x, 15, 1).is_err());
+        // add of mismatched shapes
+        let y = b.pool("half", x, 2, 2).unwrap();
+        assert!(b.add_skip("a", x, y).is_err());
+        // concat needs >= 2 inputs
+        assert!(b.concat("cat", &[x]).is_err());
+        // unknown input id
+        assert!(b.conv("dangling", 99, ConvProblem::multi(8, 14, 8, 3)).is_err());
+    }
+
+    #[test]
+    fn conv_same_restores_the_nominal_map() {
+        let mut b = GraphBuilder::new("same");
+        let x = b.input("in", Shape::new(16, 28, 28));
+        let y = b.conv_same("c3", x, ConvProblem::multi(16, 28, 32, 3)).unwrap();
+        assert_eq!(b.nodes[y].shape, Shape::new(32, 28, 28));
+        // K=1 inserts no pad node
+        let z = b.conv_same("c1", y, ConvProblem::multi(32, 28, 32, 1)).unwrap();
+        assert_eq!(b.nodes[z].shape, Shape::new(32, 28, 28));
+        assert!(matches!(b.nodes[z].op, Op::Conv { .. }));
+        let g = b.finish().unwrap();
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn insertion_order_is_topological() {
+        for name in MODEL_NAMES {
+            let g = model_graph(name).unwrap();
+            for n in g.nodes() {
+                for &i in &n.inputs {
+                    assert!(i < n.id, "{name}/{}: backward edge", n.name);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! Whole-graph execution: a topological scheduler that resolves conv
+//! nodes through the plan layer (`plans::plan_for` = tuned,
+//! `plans::paper_plan_for` = the §3 closed forms), times every node
+//! under `gpusim`, and reports end-to-end model latency next to the
+//! arena memory plan.
+//!
+//! Glue operators (pool / pad / add / concat) have no FMA story — they
+//! are DRAM-bound streams, charged launch overhead + one cold latency +
+//! bytes over a derated bandwidth, the same accounting `gpusim` applies
+//! to kernel loads.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::conv::{ConvProblem, BYTES_F32};
+use crate::gpusim::{simulate, GpuSpec, KernelPlan};
+use crate::plans;
+use crate::util::bench::Table;
+
+use super::build::Graph;
+use super::memory::{plan_arena, ArenaPlan};
+use super::node::{NodeId, Op, Shape};
+
+/// How a conv node resolves to a kernel plan.
+pub type Planner = fn(&ConvProblem, &GpuSpec) -> KernelPlan;
+
+/// Fraction of peak DRAM bandwidth the memory-bound glue kernels
+/// sustain (simple streaming kernels: no coalescing hazards, but no
+/// perfect bus residency either).
+pub const GLUE_BW_EFFICIENCY: f64 = 0.8;
+
+/// Kahn topological order, smallest ready id first — deterministic, and
+/// equal to insertion order on builder-produced graphs.  Panics on a
+/// cycle (unreachable for builder graphs, which only have forward
+/// edges).
+pub fn topo_order(g: &Graph) -> Vec<NodeId> {
+    let consumers = g.consumers();
+    let mut indeg: Vec<usize> = g.nodes().iter().map(|n| n.inputs.len()).collect();
+    let mut ready: BinaryHeap<Reverse<NodeId>> = indeg
+        .iter()
+        .enumerate()
+        .filter(|(_, &d)| d == 0)
+        .map(|(id, _)| Reverse(id))
+        .collect();
+    let mut order = Vec::with_capacity(g.len());
+    while let Some(Reverse(id)) = ready.pop() {
+        order.push(id);
+        for &c in &consumers[id] {
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                ready.push(Reverse(c));
+            }
+        }
+    }
+    assert_eq!(order.len(), g.len(), "graph has a cycle");
+    order
+}
+
+/// DRAM bytes a glue node moves (reads + writes).  Pool reads every
+/// window element (overlapping windows re-fetch), pad re-writes the
+/// framed tensor, add reads both operands, concat copies its inputs.
+fn glue_bytes(g: &Graph, id: NodeId) -> f64 {
+    let n = g.node(id);
+    let out = n.shape.bytes() as f64;
+    let ins: f64 = n.inputs.iter().map(|&i| g.node(i).shape.bytes() as f64).sum();
+    match n.op {
+        Op::Input { .. } | Op::Conv { .. } => 0.0,
+        Op::Pool { k, .. } => (n.shape.elems() * k * k * BYTES_F32) as f64 + out,
+        Op::Pad { .. } | Op::Add | Op::Concat => ins + out,
+    }
+}
+
+/// Cycles for a memory-bound glue op moving `bytes` through DRAM.
+fn glue_cycles(spec: &GpuSpec, bytes: f64) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    plans::LAUNCH_OVERHEAD_CYCLES
+        + spec.mem_latency_cycles as f64
+        + bytes / (spec.bytes_per_cycle() * GLUE_BW_EFFICIENCY)
+}
+
+/// One scheduled node's timing.
+#[derive(Clone, Debug)]
+pub struct NodeReport {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: &'static str,
+    /// kernel-plan name for convs, op summary otherwise
+    pub detail: String,
+    pub shape: Shape,
+    pub seconds: f64,
+}
+
+/// End-to-end execution report for one model on one GPU.
+#[derive(Clone, Debug)]
+pub struct ModelReport {
+    pub model: String,
+    pub gpu: &'static str,
+    /// per-node breakdown, in schedule order (`nodes[i].id` is the
+    /// node executed at step i)
+    pub nodes: Vec<NodeReport>,
+    pub total_seconds: f64,
+    pub conv_seconds: f64,
+    pub glue_seconds: f64,
+    /// conv node count (layer instances)
+    pub conv_layers: usize,
+    pub arena: ArenaPlan,
+}
+
+impl ModelReport {
+    /// Per-node breakdown table (the `--report` view).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&["step", "node", "kind", "out", "time (µs)", "plan / op"]);
+        for (i, n) in self.nodes.iter().enumerate() {
+            t.row(&[
+                i.to_string(),
+                n.name.clone(),
+                n.kind.to_string(),
+                n.shape.label(),
+                format!("{:.1}", n.seconds * 1e6),
+                n.detail.clone(),
+            ]);
+        }
+        t
+    }
+
+    /// One-line summary (CLI, bench, coordinator logs).
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} nodes ({} convs) in {:.3} ms ({:.0}% conv) on {}; arena {} MiB vs naive {} MiB ({:.0}% saved)",
+            self.model,
+            self.nodes.len(),
+            self.conv_layers,
+            self.total_seconds * 1e3,
+            100.0 * self.conv_seconds / self.total_seconds.max(1e-30),
+            self.gpu,
+            crate::util::bench::fmt_mib(self.arena.peak_bytes),
+            crate::util::bench::fmt_mib(self.arena.naive_bytes),
+            100.0 * self.arena.saved_fraction(),
+        )
+    }
+}
+
+/// Execute `g` on `spec`: schedule topologically, plan the arena, time
+/// every node (convs through `planner` + `gpusim::simulate`, glue
+/// through the DRAM stream model) and aggregate.
+pub fn execute(g: &Graph, spec: &GpuSpec, planner: Planner) -> ModelReport {
+    let order = topo_order(g);
+    let arena = plan_arena(g, &order);
+    let mut nodes = Vec::with_capacity(order.len());
+    let (mut conv_s, mut glue_s, mut convs) = (0.0f64, 0.0f64, 0usize);
+    for &id in &order {
+        let n = g.node(id);
+        let (seconds, detail) = match &n.op {
+            Op::Input { .. } => (0.0, "network input".to_string()),
+            Op::Conv { problem } => {
+                let plan = planner(problem, spec);
+                let r = simulate(spec, &plan);
+                convs += 1;
+                conv_s += r.seconds;
+                (r.seconds, r.name)
+            }
+            op => {
+                let s = spec.cycles_to_secs(glue_cycles(spec, glue_bytes(g, id)));
+                glue_s += s;
+                let d = match *op {
+                    Op::Pad { h, w } => format!("pad to {h}x{w}"),
+                    Op::Pool { k, stride } => format!("maxpool {k}x{k}/s{stride}"),
+                    Op::Add => "residual add".to_string(),
+                    Op::Concat => format!("concat {} inputs", n.inputs.len()),
+                    _ => unreachable!(),
+                };
+                (s, d)
+            }
+        };
+        nodes.push(NodeReport {
+            id,
+            name: n.name.clone(),
+            kind: n.op.kind(),
+            detail,
+            shape: n.shape,
+            seconds,
+        });
+    }
+    ModelReport {
+        model: g.name.clone(),
+        gpu: spec.name,
+        nodes,
+        total_seconds: conv_s + glue_s,
+        conv_seconds: conv_s,
+        glue_seconds: glue_s,
+        conv_layers: convs,
+        arena,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build::{model_graph, GraphBuilder, MODEL_NAMES};
+    use crate::gpusim::gtx_1080ti;
+
+    #[test]
+    fn topo_order_respects_edges_on_all_models() {
+        for name in MODEL_NAMES {
+            let g = model_graph(name).unwrap();
+            let order = topo_order(&g);
+            let mut pos = vec![0usize; g.len()];
+            for (i, &id) in order.iter().enumerate() {
+                pos[id] = i;
+            }
+            for n in g.nodes() {
+                for &i in &n.inputs {
+                    assert!(pos[i] < pos[n.id], "{name}: {} before its input", n.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn builder_graphs_schedule_in_insertion_order() {
+        let g = model_graph("resnet18").unwrap();
+        let order = topo_order(&g);
+        assert_eq!(order, (0..g.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn execute_produces_positive_breakdown() {
+        let g = model_graph("alexnet").unwrap();
+        let spec = gtx_1080ti();
+        let r = execute(&g, &spec, plans::paper_plan_for);
+        assert_eq!(r.nodes.len(), g.len());
+        assert!(r.total_seconds > 0.0 && r.total_seconds.is_finite());
+        assert!((r.conv_seconds + r.glue_seconds - r.total_seconds).abs() < 1e-12);
+        assert_eq!(r.conv_layers, 4);
+        // convs dominate glue on every §4 model
+        assert!(r.conv_seconds > r.glue_seconds, "{}", r.summary());
+        // per-node times sum to the total
+        let sum: f64 = r.nodes.iter().map(|n| n.seconds).sum();
+        assert!((sum - r.total_seconds).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conv_nodes_report_their_plan_names() {
+        let g = model_graph("inception3a").unwrap();
+        let spec = gtx_1080ti();
+        let r = execute(&g, &spec, plans::paper_plan_for);
+        for n in &r.nodes {
+            if n.kind == "conv" {
+                assert!(n.detail.contains("ours-"), "{}: {}", n.name, n.detail);
+            }
+        }
+    }
+
+    #[test]
+    fn glue_costs_scale_with_bytes() {
+        let spec = gtx_1080ti();
+        let mut b = GraphBuilder::new("glue");
+        let x = b.input("in", crate::graph::Shape::new(64, 56, 56));
+        let small = b.pool("p", x, 2, 2).unwrap();
+        let _ = b.pad("q", small, 32, 32).unwrap();
+        let g = b.finish().unwrap();
+        let pool = glue_bytes(&g, 1);
+        let pad = glue_bytes(&g, 2);
+        assert!(pool > 0.0 && pad > 0.0);
+        // the 2x2 pool re-reads the full 56x56 map; the pad only moves
+        // the quarter map plus its 32x32 frame
+        assert!(pool > pad, "pool {pool} <= pad {pad}");
+        assert!(glue_cycles(&spec, pool) > glue_cycles(&spec, pad));
+        assert_eq!(glue_cycles(&spec, 0.0), 0.0);
+    }
+
+    #[test]
+    fn report_table_and_summary_render() {
+        let g = model_graph("vgg16").unwrap();
+        let spec = gtx_1080ti();
+        let r = execute(&g, &spec, plans::paper_plan_for);
+        let t = r.table().to_string();
+        assert!(t.contains("conv1_1") && t.contains("pool5"));
+        let s = r.summary();
+        assert!(s.contains("vgg16") && s.contains("MiB"), "{s}");
+    }
+
+    #[test]
+    fn diamond_graph_schedules_once_each() {
+        // input feeding two branches joined by add — the smallest DAG
+        // that is not a chain
+        let mut b = GraphBuilder::new("diamond");
+        let x = b.input("in", crate::graph::Shape::new(8, 14, 14));
+        let l = b.conv_same("l", x, crate::conv::ConvProblem::multi(8, 14, 8, 3)).unwrap();
+        let r = b.conv_same("r", x, crate::conv::ConvProblem::multi(8, 14, 8, 3)).unwrap();
+        let _ = b.add_skip("join", l, r).unwrap();
+        let g = b.finish().unwrap();
+        let order = topo_order(&g);
+        assert_eq!(order.len(), g.len());
+        let mut seen = order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..g.len()).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,267 @@
+//! Inter-layer memory planning: tensor liveness over a schedule, and a
+//! greedy offset-assignment arena allocator.
+//!
+//! The pre-graph model (`model_stacks` summation) implicitly holds every
+//! layer's tensor for the whole network — the "naive sum of tensors".
+//! Li et al. ("Optimizing Memory Efficiency for Deep Convolutional
+//! Neural Networks on GPUs") show the real bound is the peak of
+//! *simultaneously live* tensors; this module computes that peak and an
+//! offset plan achieving it (best-fit-by-size, the TFLite/TVM shared
+//! arena approach), so the reports can state bytes saved exactly.
+
+use super::build::Graph;
+use super::node::NodeId;
+
+/// Device allocation granularity: every tensor is rounded up to this
+/// before planning, so offsets are always usable as real sub-allocations.
+pub const ARENA_ALIGN: usize = 256;
+
+fn align(bytes: usize) -> usize {
+    (bytes + ARENA_ALIGN - 1) / ARENA_ALIGN * ARENA_ALIGN
+}
+
+/// One tensor's lifetime under a schedule: produced at step `def_step`,
+/// last read at step `last_use_step` (inclusive; schedule positions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TensorLife {
+    /// producing node
+    pub id: NodeId,
+    /// aligned device bytes
+    pub bytes: usize,
+    pub def_step: usize,
+    pub last_use_step: usize,
+}
+
+impl TensorLife {
+    /// Do two lifetimes share any schedule step?
+    pub fn overlaps(&self, other: &TensorLife) -> bool {
+        self.def_step <= other.last_use_step && other.def_step <= self.last_use_step
+    }
+}
+
+/// Tensor lifetimes for `g` executed in `order` (`order[i]` runs at step
+/// i; must be a permutation of the nodes in topological order).  Every
+/// node produces one tensor; graph outputs stay live through the final
+/// step.
+pub fn liveness(g: &Graph, order: &[NodeId]) -> Vec<TensorLife> {
+    assert_eq!(order.len(), g.len(), "order must schedule every node exactly once");
+    let mut pos = vec![usize::MAX; g.len()];
+    for (i, &id) in order.iter().enumerate() {
+        assert_eq!(pos[id], usize::MAX, "node {id} scheduled twice");
+        pos[id] = i;
+    }
+    let consumers = g.consumers();
+    order
+        .iter()
+        .map(|&id| {
+            let def = pos[id];
+            let last = consumers[id]
+                .iter()
+                .map(|&c| pos[c])
+                .max()
+                .unwrap_or(order.len() - 1); // outputs: live to the end
+            assert!(last >= def, "node {id}: consumer scheduled before producer");
+            TensorLife {
+                id,
+                bytes: align(g.node(id).shape.bytes()),
+                def_step: def,
+                last_use_step: last,
+            }
+        })
+        .collect()
+}
+
+/// One tensor's placement in the arena.
+#[derive(Clone, Copy, Debug)]
+pub struct Placement {
+    pub life: TensorLife,
+    /// byte offset within the arena
+    pub offset: usize,
+}
+
+/// Offset plan for a whole schedule, plus the headline numbers.
+#[derive(Clone, Debug)]
+pub struct ArenaPlan {
+    /// placements in schedule (def_step) order
+    pub placements: Vec<Placement>,
+    /// arena bytes required: max over tensors of offset + size
+    pub peak_bytes: usize,
+    /// sum of all tensor bytes — what keeping every tensor resident for
+    /// the whole network (the flat per-layer model) would hold
+    pub naive_bytes: usize,
+}
+
+impl ArenaPlan {
+    pub fn saved_bytes(&self) -> usize {
+        self.naive_bytes.saturating_sub(self.peak_bytes)
+    }
+
+    pub fn saved_fraction(&self) -> f64 {
+        if self.naive_bytes == 0 {
+            0.0
+        } else {
+            self.saved_bytes() as f64 / self.naive_bytes as f64
+        }
+    }
+
+    /// Max bytes simultaneously live at any step — the information-
+    /// theoretic floor no allocator can beat.  peak_bytes >= this; the
+    /// gap is fragmentation.
+    pub fn live_peak_bytes(&self) -> usize {
+        let last = self.placements.iter().map(|p| p.life.last_use_step).max().unwrap_or(0);
+        (0..=last)
+            .map(|step| {
+                self.placements
+                    .iter()
+                    .filter(|p| p.life.def_step <= step && step <= p.life.last_use_step)
+                    .map(|p| p.life.bytes)
+                    .sum()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Plan the arena for `g` under `order`: liveness, then greedy best-fit
+/// offset assignment — tensors in size-descending order, each placed at
+/// the lowest aligned offset free of every already-placed tensor whose
+/// lifetime overlaps.  Never exceeds the naive sum (placing at the end
+/// of everything placed so far is always available), and typically sits
+/// near `live_peak_bytes`.
+pub fn plan_arena(g: &Graph, order: &[NodeId]) -> ArenaPlan {
+    let lives = liveness(g, order);
+    let naive: usize = lives.iter().map(|l| l.bytes).sum();
+
+    let mut by_size: Vec<usize> = (0..lives.len()).collect();
+    by_size.sort_by(|&a, &b| {
+        lives[b].bytes.cmp(&lives[a].bytes).then(lives[a].id.cmp(&lives[b].id))
+    });
+
+    let mut placements: Vec<Placement> = Vec::with_capacity(lives.len());
+    for &i in &by_size {
+        let life = lives[i];
+        // already-placed lifetime-overlapping tensors, by offset
+        let mut busy: Vec<(usize, usize)> = placements
+            .iter()
+            .filter(|p| p.life.overlaps(&life))
+            .map(|p| (p.offset, p.offset + p.life.bytes))
+            .collect();
+        busy.sort_unstable();
+        // first-fit scan over the gaps
+        let mut offset = 0usize;
+        for (lo, hi) in busy {
+            if offset + life.bytes <= lo {
+                break;
+            }
+            offset = offset.max(hi);
+        }
+        placements.push(Placement { life, offset });
+    }
+
+    placements.sort_by_key(|p| p.life.def_step);
+    let peak = placements.iter().map(|p| p.offset + p.life.bytes).max().unwrap_or(0);
+    ArenaPlan { placements, peak_bytes: peak, naive_bytes: naive }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvProblem;
+    use crate::graph::build::{model_graph, GraphBuilder, MODEL_NAMES};
+    use crate::graph::exec::topo_order;
+    use crate::graph::node::Shape;
+
+    fn chain(n: usize) -> Graph {
+        // in -> conv -> conv -> ... (all same shape via conv_same)
+        let mut b = GraphBuilder::new("chain");
+        let mut x = b.input("in", Shape::new(8, 14, 14));
+        for i in 0..n {
+            x = b.conv_same(&format!("c{i}"), x, ConvProblem::multi(8, 14, 8, 3)).unwrap();
+        }
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn alignment_rounds_up() {
+        assert_eq!(align(1), 256);
+        assert_eq!(align(256), 256);
+        assert_eq!(align(257), 512);
+    }
+
+    #[test]
+    fn chain_liveness_is_tight() {
+        let g = chain(4);
+        let order = topo_order(&g);
+        let lives = liveness(&g, &order);
+        // every non-output tensor dies at its single consumer's step
+        let consumers = g.consumers();
+        for l in &lives {
+            if let Some(&c) = consumers[l.id].first() {
+                assert_eq!(l.last_use_step, order.iter().position(|&x| x == c).unwrap());
+            } else {
+                assert_eq!(l.last_use_step, order.len() - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_arena_is_two_buffers_deep() {
+        // a pure chain only ever has producer + consumer live: the arena
+        // peak is about two adjacent tensors, far below the naive sum
+        let g = chain(8);
+        let plan = plan_arena(&g, &topo_order(&g));
+        assert!(plan.peak_bytes < plan.naive_bytes / 3, "peak {} naive {}", plan.peak_bytes, plan.naive_bytes);
+        assert_eq!(plan.peak_bytes, plan.live_peak_bytes(), "chain should not fragment");
+    }
+
+    #[test]
+    fn no_two_live_tensors_overlap_in_the_arena() {
+        for name in MODEL_NAMES {
+            let g = model_graph(name).unwrap();
+            let plan = plan_arena(&g, &topo_order(&g));
+            for (i, a) in plan.placements.iter().enumerate() {
+                for b in &plan.placements[i + 1..] {
+                    if a.life.overlaps(&b.life) {
+                        let disjoint = a.offset + a.life.bytes <= b.offset
+                            || b.offset + b.life.bytes <= a.offset;
+                        assert!(
+                            disjoint,
+                            "{name}: nodes {} and {} overlap in space and time",
+                            a.life.id, b.life.id
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn peak_bounded_by_floor_and_naive() {
+        for name in MODEL_NAMES {
+            let g = model_graph(name).unwrap();
+            let plan = plan_arena(&g, &topo_order(&g));
+            assert!(plan.peak_bytes >= plan.live_peak_bytes(), "{name}");
+            assert!(plan.peak_bytes <= plan.naive_bytes, "{name}");
+            // the whole point: real models reuse memory
+            assert!(plan.saved_bytes() > 0, "{name}: nothing saved");
+        }
+    }
+
+    #[test]
+    fn offsets_are_aligned() {
+        let g = model_graph("resnet18").unwrap();
+        let plan = plan_arena(&g, &topo_order(&g));
+        for p in &plan.placements {
+            assert_eq!(p.offset % ARENA_ALIGN, 0);
+            assert_eq!(p.life.bytes % ARENA_ALIGN, 0);
+        }
+    }
+
+    #[test]
+    fn overlap_predicate() {
+        let mk = |d, l| TensorLife { id: 0, bytes: 256, def_step: d, last_use_step: l };
+        assert!(mk(0, 2).overlaps(&mk(2, 4)));
+        assert!(mk(2, 4).overlaps(&mk(0, 2)));
+        assert!(!mk(0, 1).overlaps(&mk(2, 3)));
+    }
+}

@@ -1,0 +1,28 @@
+//! Graph executor — whole-network CNN inference over the L1 model.
+//!
+//! The paper evaluates convolutions drawn from AlexNet/VGG/ResNet/
+//! GoogLeNet but treats each in isolation; this layer restores the
+//! network structure around them.  A model is a DAG of nodes (`node`:
+//! conv / pad / pool / add / concat) built and shape-checked by
+//! `build`, memory-planned by `memory` (liveness + greedy arena
+//! offsets, the Li-et-al. inter-layer optimization), and executed by
+//! `exec` (topological schedule; conv nodes resolve through
+//! `plans::plan_for`, i.e. the tuner, and run under `gpusim`).
+//!
+//! Consumers: the `model` CLI subcommand and `e2e_models` bench report
+//! end-to-end latency + peak arena memory per model; the coordinator
+//! registers models with its `Router` so every layer is pre-tuned at
+//! startup and `Payload::Model` requests serve the cached plans.
+
+pub mod build;
+pub mod exec;
+pub mod memory;
+pub mod node;
+
+pub use build::{
+    alexnet_graph, inception3a_graph, model_graph, resnet18_graph, vgg16_graph, Graph,
+    GraphBuilder, MODEL_NAMES,
+};
+pub use exec::{execute, topo_order, ModelReport, NodeReport, Planner};
+pub use memory::{liveness, plan_arena, ArenaPlan, Placement, TensorLife, ARENA_ALIGN};
+pub use node::{Node, NodeId, Op, Shape};

@@ -1,0 +1,112 @@
+//! Graph node types: activation shapes and the operator set the paper's
+//! evaluation models need — conv (carrying a `ConvProblem`), pad (the
+//! models' 'same' padding, applied graph-side because the paper's
+//! kernels compute valid convolutions), pool, elementwise add (ResNet
+//! skip connections) and channel concat (Inception cells).
+
+use crate::conv::{ConvProblem, BYTES_F32};
+
+/// Shape of one activation tensor: `c` channels of `h` x `w`, f32.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Shape {
+    pub fn new(c: usize, h: usize, w: usize) -> Shape {
+        Shape { c, h, w }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Device bytes of the tensor (f32, unaligned — the arena planner
+    /// applies its allocation granularity on top).
+    pub fn bytes(&self) -> usize {
+        self.elems() * BYTES_F32
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{}x{}", self.c, self.h, self.w)
+    }
+}
+
+/// Index of a node within its graph (assigned by the builder).
+pub type NodeId = usize;
+
+/// One operator in the layer DAG.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// network input with a declared shape
+    Input { shape: Shape },
+    /// stride-1 valid convolution — the paper's workload unit; resolved
+    /// to a `KernelPlan` through `plans`/`tuner` at execution time
+    Conv { problem: ConvProblem },
+    /// zero-pad height/width up to `h` x `w` (channels unchanged)
+    Pad { h: usize, w: usize },
+    /// max pool with a `k` x `k` window and the given stride
+    Pool { k: usize, stride: usize },
+    /// elementwise residual add of two same-shape tensors
+    Add,
+    /// channel concatenation of same-map tensors
+    Concat,
+}
+
+impl Op {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "input",
+            Op::Conv { .. } => "conv",
+            Op::Pad { .. } => "pad",
+            Op::Pool { .. } => "pool",
+            Op::Add => "add",
+            Op::Concat => "concat",
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self, Op::Conv { .. })
+    }
+}
+
+/// One node of a built graph: operator + input edges + inferred output
+/// shape.  Nodes are created through `GraphBuilder`, which guarantees
+/// `inputs` only reference earlier nodes and that `shape` is consistent
+/// with the operator's shape rule.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    /// output shape, inferred at build time
+    pub shape: Shape,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let s = Shape::new(64, 56, 56);
+        assert_eq!(s.elems(), 64 * 56 * 56);
+        assert_eq!(s.bytes(), 64 * 56 * 56 * 4);
+        assert_eq!(s.label(), "64x56x56");
+    }
+
+    #[test]
+    fn op_kinds() {
+        assert_eq!(Op::Input { shape: Shape::new(1, 1, 1) }.kind(), "input");
+        assert_eq!(Op::Conv { problem: ConvProblem::single(8, 1, 1) }.kind(), "conv");
+        assert_eq!(Op::Pad { h: 4, w: 4 }.kind(), "pad");
+        assert_eq!(Op::Pool { k: 2, stride: 2 }.kind(), "pool");
+        assert_eq!(Op::Add.kind(), "add");
+        assert_eq!(Op::Concat.kind(), "concat");
+        assert!(Op::Conv { problem: ConvProblem::single(8, 1, 1) }.is_conv());
+        assert!(!Op::Add.is_conv());
+    }
+}

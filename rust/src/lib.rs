@@ -12,6 +12,9 @@
 //! * `plans`     — per-SM execution schedules for the paper's two kernels
 //! * `tuner`     — plan-space search: enumerate → score → simulate → cache
 //! * `baselines` — cuDNN proxy (implicit GEMM), DAC'17 [1], Tan [16]
+//! * `graph`     — whole-network DAG executor: builder + shape inference,
+//!   liveness-based arena memory planning, topological scheduling
+//!   through `plans`/`tuner` and `gpusim`
 //! * `runtime`   — PJRT client: load + execute the AOT'd HLO artifacts
 //! * `coordinator` — request router, dynamic batcher, worker pool, metrics
 //! * `util`      — offline stand-ins (rng/stats/bench/cli/prop/json)
@@ -20,6 +23,7 @@ pub mod baselines;
 pub mod conv;
 pub mod coordinator;
 pub mod gpusim;
+pub mod graph;
 pub mod plans;
 pub mod runtime;
 pub mod tuner;

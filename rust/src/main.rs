@@ -9,8 +9,12 @@
 //!   sweep [--suite fig4|fig5]     print the paper's figure sweeps
 //!   tune [--suite ...]            search the plan space per workload and
 //!                                 report tuned vs paper-fixed plans
+//!   model [--model vgg16]         execute a whole model graph: end-to-end
+//!                                 latency + arena memory plan
+//!                                 (--report adds the per-node breakdown)
 //!
-//! `--no-tune` pins simulate/sweep to the paper's closed-form §3 picks.
+//! `--no-tune` pins simulate/sweep/model to the paper's closed-form §3
+//! picks.
 
 use std::path::Path;
 use std::time::Duration;
@@ -37,15 +41,19 @@ fn main() {
         "serve" => cmd_serve(&args),
         "sweep" => cmd_sweep(&args),
         "tune" => cmd_tune(&args),
+        "model" => cmd_model(&args),
         _ => {
             eprintln!(
-                "usage: pasconv <list|simulate|serve|sweep|tune> [flags]\n\
+                "usage: pasconv <list|simulate|serve|sweep|tune|model> [flags]\n\
                  \n  list                              artifact registry\
                  \n  simulate --c C --w W --m M --k K  one problem, all kernels, simulated\
                  \n  serve [--requests N]              demo serving loop with batching\
                  \n  sweep [--suite fig4|fig5] [--gpu 1080ti|titanx] [--no-tune]\
                  \n  tune [--suite fig4|fig5|cnn|all] [--gpu 1080ti|titanx]\
-                 \n       [--save FILE] [--load FILE]  plan-space search vs paper picks\n"
+                 \n       [--save FILE] [--load FILE]  plan-space search vs paper picks\
+                 \n  model [--model NAME|all] [--gpu ...] [--no-tune] [--report]\
+                 \n                                    whole-model graph execution:\
+                 \n                                    latency + arena memory plan\n"
             );
             if cmd == "help" { 0 } else { 2 }
         }
@@ -195,6 +203,54 @@ fn cmd_sweep(args: &Args) -> i32 {
         g.name,
         speedups.iter().sum::<f64>() / speedups.len() as f64
     );
+    0
+}
+
+fn cmd_model(args: &Args) -> i32 {
+    let g = gpu_from(args);
+    let plan_fn = planner(args);
+    let which = args.get_or("model", "all");
+    let names: Vec<&str> = if which == "all" {
+        pasconv::graph::MODEL_NAMES.to_vec()
+    } else {
+        vec![which]
+    };
+    let mut t = Table::new(&[
+        "model",
+        "nodes",
+        "convs",
+        "latency (ms)",
+        "conv share",
+        "arena (MiB)",
+        "naive (MiB)",
+        "saved",
+    ]);
+    for name in names {
+        let graph = match pasconv::graph::model_graph(name) {
+            Ok(gr) => gr,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        };
+        let r = pasconv::graph::execute(&graph, &g, plan_fn);
+        if args.has("report") {
+            println!("== {} on {} ==", r.model, r.gpu);
+            r.table().print();
+            println!("{}\n", r.summary());
+        }
+        t.row(&[
+            r.model.clone(),
+            r.nodes.len().to_string(),
+            r.conv_layers.to_string(),
+            format!("{:.3}", r.total_seconds * 1e3),
+            format!("{:.0}%", 100.0 * r.conv_seconds / r.total_seconds),
+            pasconv::util::bench::fmt_mib(r.arena.peak_bytes),
+            pasconv::util::bench::fmt_mib(r.arena.naive_bytes),
+            format!("{:.0}%", 100.0 * r.arena.saved_fraction()),
+        ]);
+    }
+    t.print();
     0
 }
 

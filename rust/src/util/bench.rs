@@ -75,6 +75,11 @@ impl std::fmt::Display for Table {
     }
 }
 
+/// Format a byte count as MiB with two decimals (memory-plan tables).
+pub fn fmt_mib(bytes: usize) -> String {
+    format!("{:.2}", bytes as f64 / (1 << 20) as f64)
+}
+
 /// Format seconds human-readably (ns/µs/ms/s).
 pub fn fmt_time(secs: f64) -> String {
     if secs < 1e-6 {
@@ -126,6 +131,13 @@ mod tests {
     fn table_rejects_wrong_arity() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn fmt_mib_two_decimals() {
+        assert_eq!(fmt_mib(1 << 20), "1.00");
+        assert_eq!(fmt_mib(3 * (1 << 19)), "1.50");
+        assert_eq!(fmt_mib(0), "0.00");
     }
 
     #[test]

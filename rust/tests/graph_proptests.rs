@@ -1,0 +1,201 @@
+//! Property-based tests (util::prop harness) over the graph subsystem:
+//! random valid DAGs built through `GraphBuilder`, checked against the
+//! ISSUE-2 invariants — topological order respects edges, shape
+//! inference matches `ConvProblem` output dims, the arena plan never
+//! overlaps two simultaneously-live tensors, and the planned peak never
+//! exceeds the naive sum of tensors.
+
+use pasconv::conv::ConvProblem;
+use pasconv::graph::{
+    model_graph, plan_arena, topo_order, Graph, GraphBuilder, NodeId, Op, Shape, ARENA_ALIGN,
+    MODEL_NAMES,
+};
+use pasconv::util::prop::{check_no_shrink, Config};
+use pasconv::util::rng::Rng;
+
+/// Random valid DAG: square maps throughout, every op drawn so its
+/// shape rule holds by construction (the builder re-validates).
+fn random_graph(r: &mut Rng) -> Graph {
+    let mut b = GraphBuilder::new("prop");
+    let c0 = *r.choose(&[1usize, 4, 8, 16]);
+    let w0 = *r.choose(&[14usize, 28, 32, 56]);
+    let mut ids: Vec<NodeId> = vec![b.input("in", Shape::new(c0, w0, w0))];
+    let ops = r.range_usize(1, 14);
+    for i in 0..ops {
+        let src = *r.choose(&ids);
+        let s = b.node_shape(src);
+        let id = match r.range_usize(0, 4) {
+            0 => {
+                // conv on the source's exact shape
+                let ks: Vec<usize> =
+                    [1usize, 3, 5].into_iter().filter(|&k| k <= s.h.min(s.w)).collect();
+                let k = *r.choose(&ks);
+                let m = *r.choose(&[4usize, 8, 16, 32]);
+                let p = ConvProblem { c: s.c, wy: s.h, wx: s.w, m, k };
+                if r.next_f64() < 0.5 {
+                    b.conv(&format!("conv{i}"), src, p).unwrap()
+                } else {
+                    b.conv_same(&format!("conv{i}"), src, p).unwrap()
+                }
+            }
+            1 => {
+                let grow = *r.choose(&[0usize, 1, 2, 4]);
+                b.pad(&format!("pad{i}"), src, s.h + grow, s.w + grow).unwrap()
+            }
+            2 => {
+                if s.h >= 3 && s.w >= 3 {
+                    let k = *r.choose(&[2usize, 3]);
+                    let stride = *r.choose(&[1usize, 2]);
+                    b.pool(&format!("pool{i}"), src, k, stride).unwrap()
+                } else {
+                    b.pad(&format!("pad{i}"), src, s.h, s.w).unwrap()
+                }
+            }
+            3 => {
+                // a same-shape sibling via identity pad, then a skip add
+                let twin = b.pad(&format!("twin{i}"), src, s.h, s.w).unwrap();
+                b.add_skip(&format!("add{i}"), src, twin).unwrap()
+            }
+            _ => {
+                // concat every earlier node sharing this map size (>= 2)
+                let peers: Vec<NodeId> = ids
+                    .iter()
+                    .copied()
+                    .filter(|&p| {
+                        let ps = b.node_shape(p);
+                        ps.h == s.h && ps.w == s.w
+                    })
+                    .take(3)
+                    .collect();
+                if peers.len() >= 2 {
+                    b.concat(&format!("cat{i}"), &peers).unwrap()
+                } else {
+                    b.pad(&format!("pad{i}"), src, s.h, s.w).unwrap()
+                }
+            }
+        };
+        ids.push(id);
+    }
+    b.finish().unwrap()
+}
+
+#[test]
+fn prop_random_graphs_validate() {
+    check_no_shrink(&Config { cases: 96, seed: 31 }, random_graph, |g| {
+        g.validate().map_err(|e| format!("{e:#}"))
+    });
+}
+
+#[test]
+fn prop_topo_order_respects_edges() {
+    check_no_shrink(&Config { cases: 96, seed: 32 }, random_graph, |g| {
+        let order = topo_order(g);
+        if order.len() != g.len() {
+            return Err(format!("order has {} of {} nodes", order.len(), g.len()));
+        }
+        let mut pos = vec![usize::MAX; g.len()];
+        for (i, &id) in order.iter().enumerate() {
+            if pos[id] != usize::MAX {
+                return Err(format!("node {id} scheduled twice"));
+            }
+            pos[id] = i;
+        }
+        for n in g.nodes() {
+            for &i in &n.inputs {
+                if pos[i] >= pos[n.id] {
+                    return Err(format!("{}: input {} not scheduled before it", n.name, i));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shape_inference_matches_conv_problem_dims() {
+    check_no_shrink(&Config { cases: 96, seed: 33 }, random_graph, |g| {
+        for n in g.nodes() {
+            if let Op::Conv { problem } = &n.op {
+                let want = Shape::new(problem.m, problem.oy(), problem.ox());
+                if n.shape != want {
+                    return Err(format!(
+                        "{}: conv shape {} != problem output {}",
+                        n.name,
+                        n.shape.label(),
+                        want.label()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arena_never_overlaps_live_tensors() {
+    check_no_shrink(&Config { cases: 96, seed: 34 }, random_graph, |g| {
+        let plan = plan_arena(g, &topo_order(g));
+        for (i, a) in plan.placements.iter().enumerate() {
+            if a.offset % ARENA_ALIGN != 0 {
+                return Err(format!("node {}: unaligned offset {}", a.life.id, a.offset));
+            }
+            for b in &plan.placements[i + 1..] {
+                if a.life.overlaps(&b.life) {
+                    let disjoint = a.offset + a.life.bytes <= b.offset
+                        || b.offset + b.life.bytes <= a.offset;
+                    if !disjoint {
+                        return Err(format!(
+                            "nodes {} and {} share arena bytes while both live",
+                            a.life.id, b.life.id
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arena_peak_bounded() {
+    check_no_shrink(&Config { cases: 96, seed: 35 }, random_graph, |g| {
+        let plan = plan_arena(g, &topo_order(g));
+        if plan.peak_bytes > plan.naive_bytes {
+            return Err(format!(
+                "peak {} exceeds naive sum {}",
+                plan.peak_bytes, plan.naive_bytes
+            ));
+        }
+        let floor = plan.live_peak_bytes();
+        if plan.peak_bytes < floor {
+            return Err(format!("peak {} below live floor {floor}", plan.peak_bytes));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn model_graphs_satisfy_every_property() {
+    // the four §4 models are the graphs that matter: run the same
+    // invariants on them directly
+    for name in MODEL_NAMES {
+        let g = model_graph(name).unwrap();
+        g.validate().unwrap();
+        let order = topo_order(&g);
+        let mut pos = vec![usize::MAX; g.len()];
+        for (i, &id) in order.iter().enumerate() {
+            pos[id] = i;
+        }
+        for n in g.nodes() {
+            for &i in &n.inputs {
+                assert!(pos[i] < pos[n.id], "{name}/{}", n.name);
+            }
+            if let Op::Conv { problem } = &n.op {
+                assert_eq!(n.shape, Shape::new(problem.m, problem.oy(), problem.ox()));
+            }
+        }
+        let plan = plan_arena(&g, &order);
+        assert!(plan.peak_bytes <= plan.naive_bytes, "{name}");
+        assert!(plan.peak_bytes >= plan.live_peak_bytes(), "{name}");
+    }
+}

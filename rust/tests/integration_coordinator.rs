@@ -183,6 +183,26 @@ fn shutdown_flushes_pending_work() {
 }
 
 #[test]
+fn model_request_serves_graph_report() {
+    let Some(mut c) = coordinator_or_skip(BatchConfig::default()) else { return };
+    let resp = c.submit_wait(Payload::Model { model: "resnet18".to_string() }).unwrap();
+    assert_eq!(resp.artifact, "model:resnet18");
+    let m = resp.model.expect("model summary attached");
+    assert_eq!(m.model, "resnet18");
+    assert!(m.conv_layers >= 10, "conv layers {}", m.conv_layers);
+    assert!(m.model_latency_secs > 0.0);
+    assert!(m.arena_peak_bytes < m.naive_bytes, "no memory planned");
+    // output tensor is the per-node latency breakdown
+    assert_eq!(resp.output.shape, vec![m.nodes]);
+    let sum: f32 = resp.output.data.iter().sum();
+    assert!((sum as f64 - m.model_latency_secs).abs() < 1e-3 * m.model_latency_secs);
+    // unknown models answer with the registered list, not a hang
+    let err = c.submit_wait(Payload::Model { model: "papernet-9000".to_string() }).unwrap_err();
+    assert!(err.to_string().contains("not registered"), "{err}");
+    c.shutdown();
+}
+
+#[test]
 fn mixed_conv_and_cnn_traffic() {
     let Some(mut c) = coordinator_or_skip(BatchConfig {
         max_batch: 8,
