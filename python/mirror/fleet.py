@@ -1,0 +1,165 @@
+"""Mirror of rust/src/fleet: virtual-time multi-GPU scheduler."""
+
+from collections import deque
+from dataclasses import dataclass
+
+import tuner
+
+ROUND_ROBIN = "round-robin"
+LEAST_LOADED = "least-loaded"
+MODEL_AFFINITY = "model-affinity"
+
+
+@dataclass
+class Completion:
+    job: int
+    device: int
+    model: object
+    arrival: float
+    start: float
+    finish: float
+
+    def latency(self):
+        return self.finish - self.arrival
+
+
+class Device:
+    def __init__(self, did, spec):
+        self.id = did
+        self.spec = spec
+        self.queue = deque()  # (job id, finish, service)
+        self.tail_finish = 0.0
+        self.completed = 0
+        self.busy_secs = 0.0
+
+    def queue_len(self):
+        return len(self.queue)
+
+    def ready_at(self, now):
+        return max(self.tail_finish, now)
+
+    def head_finish(self):
+        return self.queue[0][1] if self.queue else None
+
+
+class Fleet:
+    def __init__(self, specs, policy, queue_bound):
+        assert specs and queue_bound >= 1
+        self.devices = [Device(i, s) for i, s in enumerate(specs)]
+        self.policy = policy
+        self.queue_bound = queue_bound
+        self.now = 0.0
+        self.rr_cursor = 0
+        self.affinity = {}
+        self.next_job = 1
+        self.cost_cache = {}
+        self.submitted = 0
+        self.accepted = 0
+        self.rejected = 0
+        self.completed = 0
+        self.batched_images = 0
+        self.affinity_spills = 0
+
+    def advance_to(self, t):
+        self.now = max(self.now, t)
+
+    def in_flight(self):
+        return sum(d.queue_len() for d in self.devices)
+
+    def predicted_service(self, problem, n, device):
+        spec = self.devices[device].spec
+        key = (problem, n, spec.name)
+        if key not in self.cost_cache:
+            self.cost_cache[key] = tuner.batched_seconds(problem, n, spec)
+        return self.cost_cache[key]
+
+    def _least_loaded(self, cands):
+        free = [c for c in cands if not c[1]]
+        if not free:
+            return None
+        return min(free, key=lambda c: (c[2] + c[3], c[0]))[0]
+
+    def submit(self, problem, n, model=None):
+        self.submitted += 1
+        cands = []
+        for i, d in enumerate(self.devices):
+            cands.append((
+                i,
+                d.queue_len() >= self.queue_bound,  # full
+                d.ready_at(self.now),
+                self.predicted_service(problem, n, i),
+            ))
+
+        if self.policy == ROUND_ROBIN:
+            ndev = len(self.devices)
+            pick = next((
+                cands[(self.rr_cursor + i) % ndev][0]
+                for i in range(ndev)
+                if not cands[(self.rr_cursor + i) % ndev][1]), None)
+            if pick is not None:
+                self.rr_cursor = (pick + 1) % ndev
+        elif self.policy == LEAST_LOADED:
+            pick = self._least_loaded(cands)
+        else:  # model affinity; pin recorded on ACCEPTED placement only
+            shard = self.affinity.get(model) if model is not None else None
+            if shard is None:
+                pick = self._least_loaded(cands)
+            elif not cands[shard][1]:
+                pick = shard
+            else:
+                pick = self._least_loaded(cands)
+                if pick is not None:
+                    self.affinity_spills += 1
+
+        if pick is None:
+            self.rejected += 1
+            return None
+        if self.policy == MODEL_AFFINITY and model is not None \
+                and model not in self.affinity:
+            self.affinity[model] = pick
+        jid = self.next_job
+        self.next_job += 1
+        self.accepted += 1
+        self.batched_images += n
+        d = self.devices[pick]
+        service = cands[pick][3]
+        start = d.ready_at(self.now)
+        finish = start + service
+        d.tail_finish = finish
+        d.queue.append((jid, finish, service, self.now, start, model))
+        return (jid, pick, start, finish)
+
+    def next_completion(self):
+        cand = None
+        for d in self.devices:
+            f = d.head_finish()
+            if f is not None and (cand is None or f < cand[1]):
+                cand = (d.id, f)
+        if cand is None:
+            return None
+        d = self.devices[cand[0]]
+        jid, finish, service, arrival, start, model = d.queue.popleft()
+        d.completed += 1
+        d.busy_secs += service
+        self.now = max(self.now, finish)
+        self.completed += 1
+        return Completion(jid, d.id, model, arrival, start, finish)
+
+    def complete_until(self, t):
+        out = []
+        while True:
+            finishes = [d.head_finish() for d in self.devices
+                        if d.head_finish() is not None]
+            if not finishes or min(finishes) > t:
+                break
+            out.append(self.next_completion())
+        self.advance_to(t)
+        return out
+
+    def drain(self):
+        out = []
+        while True:
+            c = self.next_completion()
+            if c is None:
+                return out
+            out.append(c)

@@ -1,0 +1,226 @@
+"""Mirror of rust/src/gpusim: spec + memory + pipeline + sim + occupancy.
+
+Every function mirrors its Rust namesake's arithmetic exactly (same
+operation order, same integer divisions); plans are kept in run-length
+form ([(round, count), ...]) which rust pins equivalent to the expanded
+form (pipeline.rs::runs_form_equals_expanded_form).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class GpuSpec:
+    name: str
+    mem_latency_cycles: int
+    bandwidth_gb_s: float
+    clock_mhz: float
+    sm_count: int
+    cores_per_sm: int
+    fma_per_core_cycle: int
+    shared_mem_bytes: int
+    registers_per_sm: int
+    max_threads_per_sm: int
+    warp_size: int
+
+    def clock_hz(self):
+        return self.clock_mhz * 1e6
+
+    def bytes_per_cycle(self):
+        return self.bandwidth_gb_s * 1e9 / self.clock_hz()
+
+    def bytes_per_cycle_int(self):
+        return int(self.bytes_per_cycle())
+
+    def fma_per_sm_cycle(self):
+        return self.cores_per_sm * self.fma_per_core_cycle
+
+    def peak_flops(self):
+        return 2.0 * self.fma_per_sm_cycle() * self.sm_count * self.clock_hz()
+
+    def n_fma(self):
+        return self.mem_latency_cycles * self.fma_per_sm_cycle()
+
+    def data_requirement_bytes(self):
+        return self.bytes_per_cycle_int() * self.mem_latency_cycles
+
+    def threads_required_total(self):
+        return (self.data_requirement_bytes() + 3) // 4
+
+    def threads_required_per_sm(self):
+        per_sm = (self.threads_required_total() + self.sm_count - 1) // self.sm_count
+        w = self.warp_size
+        return (per_sm + w - 1) // w * w
+
+    def data_requirement_per_sm(self):
+        return self.threads_required_per_sm() * 4
+
+    def cycles_to_secs(self, cycles):
+        return cycles / self.clock_hz()
+
+
+def gtx_1080ti():
+    return GpuSpec("GTX 1080Ti", 258, 484.0, 1480.0, 28, 128, 2, 96 * 1024,
+                   64 * 1024, 2048, 32)
+
+
+def titan_x_maxwell():
+    return GpuSpec("GTX Titan X", 368, 336.5, 1000.0, 24, 128, 2, 96 * 1024,
+                   64 * 1024, 2048, 32)
+
+
+# ---- memory ----
+
+SECTOR_BYTES = 32
+
+
+def useful_fraction(segment_bytes):
+    assert segment_bytes > 0
+    sectors = (segment_bytes + SECTOR_BYTES - 1) // SECTOR_BYTES
+    return segment_bytes / (sectors * SECTOR_BYTES)
+
+
+def length_factor(segment_bytes):
+    if segment_bytes >= 128:
+        return 1.0
+    if segment_bytes >= 64:
+        return 0.95
+    if segment_bytes >= 32:
+        return 0.90
+    return 0.90 * segment_bytes / SECTOR_BYTES
+
+
+def segment_efficiency(segment_bytes):
+    return min(useful_fraction(segment_bytes) * length_factor(segment_bytes), 1.0)
+
+
+def latency_exposure(spec, threads_per_sm, round_bytes):
+    thread_fill = min(threads_per_sm / spec.threads_required_per_sm(), 1.0)
+    volume_fill = min(round_bytes / spec.data_requirement_per_sm(), 1.0)
+    return max(1.0 - thread_fill * volume_fill, 0.0)
+
+
+# ---- pipeline ----
+
+@dataclass(frozen=True)
+class Round:
+    load_bytes: float
+    segment_bytes: int
+    fma_ops: float
+    eff_override: Optional[float] = None
+
+
+@dataclass
+class ExecConfig:
+    sms_active: int
+    threads_per_sm: int
+    compute_efficiency: float
+    launch_overhead_cycles: float
+
+
+def compute_cycles(spec, cfg, fma_ops):
+    if fma_ops <= 0.0:
+        return 0.0
+    min_threads = 4 * spec.warp_size * (spec.cores_per_sm // spec.warp_size)
+    thread_fill = min(cfg.threads_per_sm / min_threads, 1.0)
+    return fma_ops / (spec.fma_per_sm_cycle() * cfg.compute_efficiency * thread_fill)
+
+
+def load_cycles(spec, cfg, rnd):
+    if rnd.load_bytes <= 0.0:
+        return 0.0
+    eff = rnd.eff_override if rnd.eff_override is not None else segment_efficiency(
+        rnd.segment_bytes)
+    per_sm_bw = spec.bytes_per_cycle() * eff / max(cfg.sms_active, 1)
+    occ = min(cfg.threads_per_sm / spec.threads_required_per_sm(), 1.0)
+    stream = rnd.load_bytes / (per_sm_bw * max(occ, 1e-9))
+    exposed = spec.mem_latency_cycles * latency_exposure(
+        spec, cfg.threads_per_sm, rnd.load_bytes)
+    return exposed + stream
+
+
+def combined_efficiency(streams):
+    total = sum(b for b, _ in streams)
+    if total <= 0.0:
+        return 1.0
+    bus_time = sum(b / max(e, 1e-9) for b, e in streams)
+    return total / bus_time
+
+
+def simulate_pipeline_runs(spec, cfg, runs):
+    assert runs and all(n > 0 for _, n in runs)
+    loads = [load_cycles(spec, cfg, r) for r, _ in runs]
+    computes = [compute_cycles(spec, cfg, r.fma_ops) for r, _ in runs]
+    total = cfg.launch_overhead_cycles + spec.mem_latency_cycles + loads[0]
+    stall = 0.0
+    for k, (_, count) in enumerate(runs):
+        if count > 1:
+            total += (count - 1) * max(loads[k], computes[k])
+            if loads[k] > computes[k]:
+                stall += (count - 1) * (loads[k] - computes[k])
+        if k + 1 < len(runs):
+            total += max(loads[k + 1], computes[k])
+            if loads[k + 1] > computes[k]:
+                stall += loads[k + 1] - computes[k]
+    total += computes[-1]
+    return total, stall
+
+
+# ---- sim ----
+
+WRITEBACK_TAIL_FRACTION = 0.15
+
+
+@dataclass
+class KernelPlan:
+    """Run-length plan: runs = [(Round, count), ...]."""
+    name: str
+    runs: List[Tuple[Round, int]]
+    sms_active: int
+    threads_per_sm: int
+    compute_efficiency: float
+    output_bytes: float
+    smem_bytes_per_sm: int
+    total_fma: float
+    launch_overhead_cycles: float
+
+    def batched(self, n):
+        assert n >= 1
+        if n == 1:
+            return self
+        return KernelPlan(
+            name=f"{self.name} xb{n}",
+            runs=list(self.runs) * n,
+            sms_active=self.sms_active,
+            threads_per_sm=self.threads_per_sm,
+            compute_efficiency=self.compute_efficiency,
+            output_bytes=self.output_bytes * n,
+            smem_bytes_per_sm=self.smem_bytes_per_sm,
+            total_fma=self.total_fma * n,
+            launch_overhead_cycles=self.launch_overhead_cycles,
+        )
+
+
+def simulate_cycles(spec, plan):
+    assert plan.smem_bytes_per_sm <= spec.shared_mem_bytes, plan.name
+    assert 1 <= plan.sms_active <= spec.sm_count
+    cfg = ExecConfig(plan.sms_active, plan.threads_per_sm,
+                     plan.compute_efficiency, plan.launch_overhead_cycles)
+    total, _ = simulate_pipeline_runs(spec, cfg, plan.runs)
+    wb = WRITEBACK_TAIL_FRACTION * plan.output_bytes / spec.bytes_per_cycle()
+    return total + wb
+
+
+# ---- occupancy (gpusim/occupancy.rs) ----
+
+MAX_BLOCKS_PER_SM = 32
+
+
+def occupancy_blocks(spec, threads, regs_per_thread, smem_bytes):
+    assert threads > 0
+    by_threads = spec.max_threads_per_sm // threads
+    regs_per_block = max(regs_per_thread, 1) * threads
+    by_regs = spec.registers_per_sm // regs_per_block
+    by_smem = (spec.shared_mem_bytes // smem_bytes) if smem_bytes else 2**32
+    return min(by_threads, by_regs, by_smem, MAX_BLOCKS_PER_SM)

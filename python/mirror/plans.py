@@ -1,0 +1,356 @@
+"""Mirror of rust/src/analytic + rust/src/plans: the §3.1/§3.2 closed
+forms and the per-SM round recipes (run-length form)."""
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from gpusim import (ExecConfig, KernelPlan, Round, combined_efficiency,
+                    segment_efficiency, simulate_cycles,
+                    simulate_pipeline_runs)
+
+BYTES_F32 = 4
+LAUNCH_OVERHEAD_CYCLES = 4_000.0
+COMPUTE_EFFICIENCY = 0.9
+
+
+@dataclass(frozen=True)
+class ConvProblem:
+    c: int
+    wy: int
+    wx: int
+    m: int
+    k: int
+
+    @staticmethod
+    def single(w, m, k):
+        return ConvProblem(1, w, w, m, k)
+
+    @staticmethod
+    def multi(c, w, m, k):
+        return ConvProblem(c, w, w, m, k)
+
+    def is_single_channel(self):
+        return self.c == 1
+
+    def oy(self):
+        return self.wy - self.k + 1
+
+    def ox(self):
+        return self.wx - self.k + 1
+
+    def valid(self):
+        return (self.c >= 1 and self.m >= 1 and self.k >= 1
+                and self.k <= self.wy and self.k <= self.wx)
+
+    def map_elems(self):
+        return self.c * self.wy * self.wx
+
+    def filter_elems(self):
+        return self.m * self.c * self.k * self.k
+
+    def out_elems(self):
+        return self.m * self.oy() * self.ox()
+
+    def fma_ops(self):
+        return self.out_elems() * self.c * self.k * self.k
+
+    def label(self):
+        if self.is_single_channel():
+            return f"single W={self.wy} M={self.m} K={self.k}"
+        return f"multi C={self.c} W={self.wy} M={self.m} K={self.k}"
+
+
+def ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+# ---- analytic/occupancy.rs: paper launch geometry ----
+
+def paper_threads_per_sm(spec):
+    blocks = 2 * spec.sm_count
+    return (blocks // spec.sm_count) * 512
+
+
+# ---- analytic/single.rs ----
+
+def d1_bytes(p, spec, pp):
+    m_per_sm = ceil_div(p.m, spec.sm_count)
+    return (p.k * p.k * m_per_sm + (ceil_div(p.wy, pp) + p.k - 1) * p.wx) * BYTES_F32
+
+
+def th1(p, spec, pp):
+    m_per_sm = ceil_div(p.m, spec.sm_count)
+    return p.k * p.k * m_per_sm * ceil_div(p.wy, pp) * p.wx
+
+
+def d2_bytes(p, spec, q):
+    wy_per_sm = ceil_div(p.wy, spec.sm_count)
+    return (p.k * p.k * ceil_div(p.m, q) + (wy_per_sm + p.k - 1) * p.wx) * BYTES_F32
+
+
+def th2(p, spec, q):
+    wy_per_sm = ceil_div(p.wy, spec.sm_count)
+    return p.k * p.k * ceil_div(p.m, q) * wy_per_sm * p.wx
+
+
+FILTER_SPLIT = "FilterSplit"
+MAP_SPLIT = "MapSplit"
+
+
+@dataclass(frozen=True)
+class SingleChoice:
+    method: str
+    p: int
+    q: int
+    d1_bytes: int
+    d2_bytes: int
+    th1: int
+    th2: int
+    uses_prefetch: bool
+
+
+def choose_single(p, spec):
+    assert p.is_single_channel() and p.valid()
+    n_fma = spec.n_fma()
+    budget = spec.shared_mem_bytes
+
+    m_per_sm = ceil_div(p.m, spec.sm_count)
+    p_hi = min((p.k * p.k * m_per_sm * p.wy * p.wx) // n_fma, p.wy)
+    wy_per_sm = ceil_div(p.wy, spec.sm_count)
+    q_hi = min((p.k * p.k * p.m * wy_per_sm * p.wx) // n_fma, p.m)
+
+    p_lo = next((pp for pp in range(1, p.wy + 1) if d1_bytes(p, spec, pp) <= budget), None)
+    q_lo = next((q for q in range(1, p.m + 1) if d2_bytes(p, spec, q) <= budget), None)
+
+    p_pick = p_lo if (p_lo is not None and p_lo <= p_hi) else None
+    q_pick = q_lo if (q_lo is not None and q_lo <= q_hi) else None
+
+    if p_pick is None and q_pick is None:
+        pp, q, uses_prefetch = 1, 1, False
+    elif q_pick is None:
+        pp, q, uses_prefetch = p_pick, 1, True
+    elif p_pick is None:
+        pp, q, uses_prefetch = 1, q_pick, True
+    else:
+        pp, q, uses_prefetch = p_pick, q_pick, True
+
+    d1 = d1_bytes(p, spec, pp)
+    d2 = d2_bytes(p, spec, q)
+    if not uses_prefetch:
+        method = FILTER_SPLIT
+    elif p_pick is not None and (q_pick is None or d1 <= d2):
+        method = FILTER_SPLIT
+    else:
+        method = MAP_SPLIT
+
+    if method == FILTER_SPLIT:
+        q = 1
+    else:
+        pp = 1
+    return SingleChoice(method, pp, q, d1_bytes(p, spec, pp), d2_bytes(p, spec, q),
+                        th1(p, spec, pp), th2(p, spec, q), uses_prefetch)
+
+
+def single_choice(p, spec, method, pp, q):
+    d1, d2 = d1_bytes(p, spec, pp), d2_bytes(p, spec, q)
+    t1, t2 = th1(p, spec, pp), th2(p, spec, q)
+    d, th = (d1, t1) if method == FILTER_SPLIT else (d2, t2)
+    return SingleChoice(method, pp, q, d1, d2, t1, t2,
+                        th >= spec.n_fma() and d <= spec.shared_mem_bytes)
+
+
+# ---- plans/single_channel.rs ----
+
+def single_recipe(p, spec, c):
+    assert p.is_single_channel()
+    threads = paper_threads_per_sm(spec)
+    row_seg = min(p.wx * BYTES_F32, 128)
+
+    if c.method == FILTER_SPLIT:
+        m_per_sm = ceil_div(p.m, spec.sm_count)
+        sms = min(ceil_div(p.m, m_per_sm), spec.sm_count)
+        filter_bytes = float(m_per_sm * p.k * p.k * BYTES_F32)
+        piece_rows = ceil_div(p.wy, c.p)
+        piece_bytes = (piece_rows * p.wx * BYTES_F32) / sms
+        halo_bytes = ((p.k - 1) * p.wx * BYTES_F32) / sms
+        fma = float(c.th1)
+        filter_seg = min(m_per_sm * p.k * p.k * BYTES_F32, 128)
+        eff = combined_efficiency([
+            (filter_bytes, segment_efficiency(filter_seg)),
+            (piece_bytes + halo_bytes, segment_efficiency(row_seg)),
+        ])
+        first = Round(filter_bytes + piece_bytes + halo_bytes, 128, fma, eff)
+        tail = (Round(piece_bytes, row_seg, fma), c.p - 1) if c.p > 1 else None
+        return first, tail, sms, threads, c.d1_bytes
+    else:
+        wy_per_sm = ceil_div(p.wy, spec.sm_count)
+        sms = min(ceil_div(p.wy, wy_per_sm), spec.sm_count)
+        strip_bytes = float((wy_per_sm + p.k - 1) * p.wx * BYTES_F32)
+        m_per_round = ceil_div(p.m, c.q)
+        piece_bytes = (m_per_round * p.k * p.k * BYTES_F32) / sms
+        filter_seg = min(m_per_round * p.k * p.k * BYTES_F32, 128)
+        fma = float(c.th2)
+        eff = combined_efficiency([
+            (piece_bytes, segment_efficiency(filter_seg)),
+            (strip_bytes, segment_efficiency(row_seg)),
+        ])
+        first = Round(strip_bytes + piece_bytes, 128, fma, eff)
+        tail = (Round(piece_bytes, filter_seg, fma), c.q - 1) if c.q > 1 else None
+        return first, tail, sms, threads, c.d2_bytes
+
+
+def single_plan_with_choice(p, spec, c):
+    first, tail, sms, threads, smem = single_recipe(p, spec, c)
+    runs = [(first, 1)]
+    if tail is not None:
+        runs.append(tail)
+    suffix = "" if c.uses_prefetch else " volume"
+    return KernelPlan(
+        name=f"ours-single[{c.method} P={c.p} Q={c.q}{suffix}]",
+        runs=runs,
+        sms_active=sms,
+        threads_per_sm=threads,
+        compute_efficiency=COMPUTE_EFFICIENCY,
+        output_bytes=float(p.out_elems() * BYTES_F32),
+        smem_bytes_per_sm=min(smem, spec.shared_mem_bytes),
+        total_fma=float(p.fma_ops()),
+        launch_overhead_cycles=LAUNCH_OVERHEAD_CYCLES,
+    )
+
+
+# ---- analytic/multi.rs ----
+
+def wy_prime(s_bytes, k):
+    return ceil_div(s_bytes, k * BYTES_F32)
+
+
+def m_prime_min(spec, s_bytes, wx_prime):
+    return ceil_div(spec.n_fma() * BYTES_F32, s_bytes * wx_prime)
+
+
+def working_set_bytes(s_bytes, wx_prime, m_prime, k):
+    return 2 * (s_bytes * m_prime + wy_prime(s_bytes, k) * wx_prime * BYTES_F32)
+
+
+@dataclass(frozen=True)
+class StrideFixedChoice:
+    s_bytes: int
+    wx_prime: int
+    m_prime: int
+    wy_prime: int
+    smem_bytes: int
+    hides_latency: bool
+
+
+def choose_multi(p, spec, s_bytes):
+    assert p.valid() and s_bytes % 32 == 0
+    out_px = p.oy() * p.ox()
+    map_px = ceil_div(out_px, 32) * 32
+    wx_pr = map_px if map_px <= 256 else 128
+
+    m_prime = max(m_prime_min(spec, s_bytes, wx_pr), 1)
+    if m_prime <= p.m:
+        while p.m % m_prime != 0:
+            m_prime += 1
+    else:
+        m_prime = p.m
+
+    half = spec.shared_mem_bytes // 2
+    wx_eff = wx_pr
+    while working_set_bytes(s_bytes, wx_eff, m_prime, p.k) > half and m_prime > 1:
+        m_prime = next((d for d in range(m_prime - 1, 0, -1) if p.m % d == 0), 1)
+    while working_set_bytes(s_bytes, wx_eff, m_prime, p.k) > half and wx_eff > 32:
+        wx_eff -= 32
+
+    strips = max(ceil_div(out_px, wx_eff), 1)
+    while m_prime > 1 and ceil_div(p.m, m_prime) * strips < spec.sm_count:
+        nxt = next((d for d in range(m_prime - 1, 0, -1) if p.m % d == 0), 1)
+        if nxt == m_prime:
+            break
+        m_prime = nxt
+
+    round_fma = float(m_prime * (s_bytes // BYTES_F32) * wx_eff)
+    hides = round_fma >= 0.95 * spec.n_fma()
+    return StrideFixedChoice(s_bytes, wx_eff, m_prime, wy_prime(s_bytes, p.k),
+                             working_set_bytes(s_bytes, wx_eff, m_prime, p.k), hides)
+
+
+def multi_choice(p, spec, s_bytes, wx_pr, m_prime):
+    return StrideFixedChoice(
+        s_bytes, wx_pr, m_prime, wy_prime(s_bytes, p.k),
+        working_set_bytes(s_bytes, wx_pr, m_prime, p.k),
+        m_prime * (s_bytes // BYTES_F32) * wx_pr >= 0.95 * spec.n_fma())
+
+
+# ---- plans/stride_fixed.rs ----
+
+def stride_recipe(p, spec, c):
+    assert p.valid()
+    groups = ceil_div(p.m, c.m_prime)
+    strips = max(ceil_div(p.oy() * p.ox(), c.wx_prime), 1)
+    segs = max(ceil_div(p.c * p.k * p.k * BYTES_F32, c.s_bytes), 1)
+    blocks = groups * strips
+    sms_active = min(blocks, spec.sm_count)
+
+    map_bytes = (c.wy_prime * c.wx_prime * BYTES_F32) / p.k
+    filter_bytes = (c.s_bytes * c.m_prime) / min(strips, spec.sm_count)
+    fma_per_round = float(c.m_prime * (c.s_bytes // BYTES_F32) * c.wx_prime)
+
+    eff = combined_efficiency([
+        (filter_bytes, segment_efficiency(c.s_bytes)),
+        (map_bytes, segment_efficiency(128)),
+    ])
+    rnd = Round(filter_bytes + map_bytes, 128, fma_per_round, eff)
+    count = ceil_div(blocks * segs, sms_active)
+    return rnd, count, sms_active, paper_threads_per_sm(spec)
+
+
+def stride_plan_with_choice(p, spec, c):
+    rnd, count, sms, threads = stride_recipe(p, spec, c)
+    return KernelPlan(
+        name=f"ours-multi[S={c.s_bytes} M'={c.m_prime} W'x={c.wx_prime}]",
+        runs=[(rnd, count)],
+        sms_active=sms,
+        threads_per_sm=threads,
+        compute_efficiency=COMPUTE_EFFICIENCY,
+        output_bytes=float(p.out_elems() * BYTES_F32),
+        smem_bytes_per_sm=c.smem_bytes,
+        total_fma=float(p.fma_ops()),
+        launch_overhead_cycles=LAUNCH_OVERHEAD_CYCLES,
+    )
+
+
+def stride_plan_with_segment_choice(p, spec, s_bytes):
+    seed = choose_multi(p, spec, s_bytes)
+    half = spec.shared_mem_bytes // 2
+    best = None  # (cycles, choice)
+
+    def consider(c):
+        nonlocal best
+        if c.smem_bytes > half:
+            return
+        rnd, count, sms, threads = stride_recipe(p, spec, c)
+        cfg = ExecConfig(sms, threads, COMPUTE_EFFICIENCY, LAUNCH_OVERHEAD_CYCLES)
+        t, _ = simulate_pipeline_runs(spec, cfg, [(rnd, count)])
+        if best is None or t < best[0]:
+            best = (t, c)
+
+    consider(seed)
+    for d in range(1, p.m + 1):
+        if p.m % d == 0:
+            consider(StrideFixedChoice(
+                s_bytes, seed.wx_prime, d, wy_prime(s_bytes, p.k),
+                working_set_bytes(s_bytes, seed.wx_prime, d, p.k), False))
+    c = best[1]
+    return stride_plan_with_choice(p, spec, c), c
+
+
+def stride_plan_and_choice(p, spec):
+    cands = [stride_plan_with_segment_choice(p, spec, s) for s in (32, 64)]
+    return min(cands, key=lambda pc: simulate_cycles(spec, pc[0]))
+
+
+def paper_plan_for(p, spec):
+    if p.is_single_channel():
+        return single_plan_with_choice(p, spec, choose_single(p, spec))
+    return stride_plan_and_choice(p, spec)[0]

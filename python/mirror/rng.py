@@ -1,0 +1,46 @@
+"""Mirror of rust/src/util/rng.rs: SplitMix64 + xoshiro256** with exact
+u64 wrapping semantics, so workload streams match the Rust benches
+draw-for-draw."""
+
+MASK = (1 << 64) - 1
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    def __init__(self, seed):
+        s = seed & MASK
+        self.s = []
+        for _ in range(4):
+            s = (s + 0x9E3779B97F4A7C15) & MASK
+            z = s
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            self.s.append(z ^ (z >> 31))
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def range_u64(self, lo, hi):
+        assert lo <= hi
+        return lo + self.next_u64() % (hi - lo + 1)
+
+    def range_usize(self, lo, hi):
+        return self.range_u64(lo, hi)
+
+    def choose(self, xs):
+        return xs[self.range_usize(0, len(xs) - 1)]

@@ -1,0 +1,177 @@
+"""Mirror of rust/src/tuner: enumerate -> score -> top-K simulate ->
+memoized plan_for, plus the batched cost helpers from plans/mod.rs."""
+
+from gpusim import (ExecConfig, WRITEBACK_TAIL_FRACTION, occupancy_blocks,
+                    simulate_cycles, simulate_pipeline_runs)
+from plans import (BYTES_F32, COMPUTE_EFFICIENCY, FILTER_SPLIT,
+                   LAUNCH_OVERHEAD_CYCLES, MAP_SPLIT, ceil_div, choose_single,
+                   d1_bytes, d2_bytes, multi_choice, paper_plan_for,
+                   single_choice, single_plan_with_choice, single_recipe,
+                   stride_plan_and_choice, stride_plan_with_choice,
+                   stride_recipe, working_set_bytes)
+
+TOP_K = 8
+MAX_ROUNDS = 4_000_000
+SEGMENT_SWEEP = [32, 64, 96, 128]
+WX_SWEEP = [32, 64, 96, 128, 160, 192, 224, 256]
+
+
+def distinct_divisions(n):
+    out = []
+    d = 1
+    while d <= n:
+        q = ceil_div(n, d)
+        out.append(d)
+        d = max(d + 1, (n - 1) // (q - 1) + 1) if q > 1 else n + 1
+    return out
+
+
+def divisors(n):
+    out = []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            out.append(d)
+            if d != n // d:
+                out.append(n // d)
+        d += 1
+    return sorted(out)
+
+
+# PlanParams: ("single", method, p, q) | ("multi", s, wx, mp)
+
+def enumerate_params(p, spec):
+    assert p.valid()
+    if p.is_single_channel():
+        budget = spec.shared_mem_bytes
+        out = []
+        for pp in distinct_divisions(p.wy):
+            if d1_bytes(p, spec, pp) <= budget:
+                out.append(("single", FILTER_SPLIT, pp, 1))
+        for q in distinct_divisions(p.m):
+            if d2_bytes(p, spec, q) <= budget:
+                out.append(("single", MAP_SPLIT, 1, q))
+        fallback = ("single", FILTER_SPLIT, 1, 1)
+        if fallback not in out:
+            out.append(fallback)
+        return out
+    half = spec.shared_mem_bytes // 2
+    out_px = p.oy() * p.ox()
+    map_px = ceil_div(out_px, 32) * 32
+    wx_opts = [w for w in WX_SWEEP if w <= max(map_px, 32)]
+    m_opts = divisors(p.m)
+    out = []
+    for s in SEGMENT_SWEEP:
+        for wx in wx_opts:
+            for mp in m_opts:
+                if working_set_bytes(s, wx, mp, p.k) <= half:
+                    out.append(("multi", s, wx, mp))
+    return out
+
+
+def _exec_config(sms, threads):
+    return ExecConfig(sms, threads, COMPUTE_EFFICIENCY, LAUNCH_OVERHEAD_CYCLES)
+
+
+def _writeback(spec, p):
+    return WRITEBACK_TAIL_FRACTION * (p.out_elems() * BYTES_F32) / spec.bytes_per_cycle()
+
+
+def score(p, spec, params):
+    if params[0] == "single":
+        _, method, pp, q = params
+        c = single_choice(p, spec, method, pp, q)
+        first, tail, sms, threads, _ = single_recipe(p, spec, c)
+        runs = [(first, 1)]
+        if tail is not None:
+            if tail[1] > MAX_ROUNDS:
+                return None
+            runs.append(tail)
+        t, _ = simulate_pipeline_runs(spec, _exec_config(sms, threads), runs)
+        return t + _writeback(spec, p)
+    _, s, wx, mp = params
+    c = multi_choice(p, spec, s, wx, mp)
+    rnd, count, sms, threads = stride_recipe(p, spec, c)
+    if count > MAX_ROUNDS:
+        return None
+    t, _ = simulate_pipeline_runs(spec, _exec_config(sms, threads), [(rnd, count)])
+    return t + _writeback(spec, p)
+
+
+def build_plan(p, spec, params):
+    if params[0] == "single":
+        _, method, pp, q = params
+        return single_plan_with_choice(p, spec, single_choice(p, spec, method, pp, q))
+    _, s, wx, mp = params
+    return stride_plan_with_choice(p, spec, multi_choice(p, spec, s, wx, mp))
+
+
+def is_legal(spec, plan):
+    if plan.smem_bytes_per_sm > spec.shared_mem_bytes:
+        return False
+    if plan.sms_active < 1 or plan.sms_active > spec.sm_count:
+        return False
+    blocks_needed = max(ceil_div(plan.threads_per_sm, 512), 1)
+    blocks = occupancy_blocks(spec, 512, 64, plan.smem_bytes_per_sm // blocks_needed)
+    return blocks >= blocks_needed
+
+
+def paper_params(p, spec):
+    if p.is_single_channel():
+        c = choose_single(p, spec)
+        return single_plan_with_choice(p, spec, c), ("single", c.method, c.p, c.q)
+    plan, c = stride_plan_and_choice(p, spec)
+    return plan, ("multi", c.s_bytes, c.wx_prime, c.m_prime)
+
+
+def tune(p, spec):
+    paper_plan, paper = paper_params(p, spec)
+    paper_cycles = simulate_cycles(spec, paper_plan)
+    scored = []
+    for cand in enumerate_params(p, spec):
+        s = score(p, spec, cand)
+        if s is not None:
+            scored.append((s, cand))
+    scored.sort(key=lambda x: x[0])
+
+    best = (paper_cycles, paper)
+    checked = 0
+    for _, params in scored:
+        if checked == TOP_K:
+            break
+        plan = build_plan(p, spec, params)
+        if not is_legal(spec, plan):
+            continue
+        checked += 1
+        cycles = simulate_cycles(spec, plan)
+        if cycles < best[0]:
+            best = (cycles, params)
+    return best  # (tuned_cycles, params), paper_cycles available via paper_plan
+
+
+_CACHE = {}
+
+
+def tuned_plan(p, spec):
+    key = (p, spec.name)
+    if key not in _CACHE:
+        _CACHE[key] = tune(p, spec)[1]
+    return build_plan(p, spec, _CACHE[key])
+
+
+def plan_for(p, spec):
+    return tuned_plan(p, spec)
+
+
+# ---- plans/mod.rs batched helpers ----
+
+def batched_plan_for(problem, n, spec):
+    return plan_for(problem, spec).batched(n)
+
+
+def batched_cycles(problem, n, spec):
+    return simulate_cycles(spec, batched_plan_for(problem, n, spec))
+
+
+def batched_seconds(problem, n, spec):
+    return spec.cycles_to_secs(batched_cycles(problem, n, spec))

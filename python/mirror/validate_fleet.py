@@ -1,0 +1,196 @@
+"""Validate the fleet layer's numbers and invariants, and generate the
+EXPERIMENTS.md §8 table, by replaying rust/benches/e2e_fleet.rs exactly
+(same xoshiro stream, same cost model, same scheduler arithmetic).
+
+Run: python3 python/mirror/validate_fleet.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent))
+
+import tuner
+from fleet import Fleet, LEAST_LOADED, MODEL_AFFINITY, ROUND_ROBIN
+from gpusim import gtx_1080ti, titan_x_maxwell
+from plans import ConvProblem
+from rng import Rng
+
+F64_MIN_POSITIVE = 2.2250738585072014e-308  # rust f64::MIN_POSITIVE
+
+
+def alexnet():
+    return [ConvProblem.multi(96, 27, 256, 5), ConvProblem.multi(256, 13, 384, 3),
+            ConvProblem.multi(384, 13, 384, 3), ConvProblem.multi(384, 13, 256, 3)]
+
+
+def resnet18():
+    return [ConvProblem.multi(64, 56, 64, 3), ConvProblem.multi(64, 28, 128, 3),
+            ConvProblem.multi(64, 28, 128, 1), ConvProblem.multi(128, 28, 128, 3),
+            ConvProblem.multi(128, 14, 256, 3), ConvProblem.multi(128, 14, 256, 1),
+            ConvProblem.multi(256, 14, 256, 3), ConvProblem.multi(256, 7, 512, 3),
+            ConvProblem.multi(256, 7, 512, 1), ConvProblem.multi(512, 7, 512, 3)]
+
+
+def vgg16():
+    return [ConvProblem.multi(3, 224, 64, 3), ConvProblem.multi(64, 224, 64, 3),
+            ConvProblem.multi(64, 112, 128, 3), ConvProblem.multi(128, 112, 128, 3),
+            ConvProblem.multi(128, 56, 256, 3), ConvProblem.multi(256, 56, 256, 3),
+            ConvProblem.multi(256, 28, 512, 3), ConvProblem.multi(512, 28, 512, 3),
+            ConvProblem.multi(512, 14, 512, 3)]
+
+
+def model_layers():
+    return [("alexnet", alexnet()), ("resnet18", resnet18()), ("vgg16", vgg16())]
+
+
+def offered_load(n, rate, seed, batch=None):
+    # mirror of rust/src/fleet/traffic.rs::offered_load (batch=None draws
+    # {1,2,4,8} per request; a fixed batch skips that draw)
+    import math
+    models = model_layers()
+    rng = Rng(seed)
+    t = 0.0
+    out = []
+    for _ in range(n):
+        u = max(rng.next_f64(), F64_MIN_POSITIVE)
+        t += -math.log(u) / rate
+        model, layers = models[rng.range_usize(0, len(models) - 1)]
+        problem = rng.choose(layers)
+        b = batch if batch is not None else [1, 2, 4, 8][rng.range_usize(0, 3)]
+        out.append((t, problem, b, model))
+    return out
+
+
+def run(specs, policy, queue_bound, load):
+    f = Fleet(specs, policy, queue_bound)
+    completions = []
+    for (t, problem, batch, model) in load:
+        completions.extend(f.complete_until(t))
+        f.submit(problem, batch, model)
+    completions.extend(f.drain())
+    ids = {c.job for c in completions}
+    assert len(ids) == len(completions), "duplicate completion"
+    assert len(completions) == f.accepted, "lost job"
+    makespan = max((c.finish for c in completions), default=0.0)
+    lats = sorted(c.latency() for c in completions)
+
+    def pct(q):
+        # mirror util::stats::percentile_sorted: nearest-rank, p in [0,100]
+        if not lats:
+            return 0.0
+        rank = int(round(q / 100.0 * (len(lats) - 1.0)))
+        return lats[min(rank, len(lats) - 1)]
+
+    utils = [d.busy_secs / makespan for d in f.devices] if makespan else [0.0]
+    return {
+        "accepted": f.accepted, "rejected": f.rejected,
+        "completed": len(completions),
+        "throughput": len(completions) / makespan if makespan else 0.0,
+        "makespan": makespan, "p50": pct(50.0), "p99": pct(99.0),
+        "spills": f.affinity_spills,
+        "umin": min(utils), "umax": max(utils),
+    }
+
+
+def check(cond, msg):
+    if not cond:
+        print(f"FAIL: {msg}")
+        sys.exit(1)
+    print(f"ok: {msg}")
+
+
+def main():
+    g = gtx_1080ti()
+    tx = titan_x_maxwell()
+
+    # ---- invariants: batched cost model ----
+    templates = [ConvProblem.multi(8, 14, 16, 3), ConvProblem.single(32, 16, 3),
+                 ConvProblem.multi(16, 7, 32, 3)]
+    for p in templates:
+        single = tuner.batched_cycles(p, 1, g)
+        last = 0.0
+        for n in range(1, 9):
+            c = tuner.batched_cycles(p, n, g)
+            check(c > last, f"{p.label()}: cycles monotone at n={n}")
+            check(c <= n * single * (1 + 1e-9), f"{p.label()}: amortizes at n={n}")
+            last = c
+    # fleet makespan floor/ceiling on identical jobs
+    for d in (1, 2, 4, 8):
+        f = Fleet([g] * d, LEAST_LOADED, 64)
+        single = f.predicted_service(templates[0], 1, 0)
+        for _ in range(24):
+            assert f.submit(templates[0], 1) is not None
+        makespan = max(c.finish for c in f.drain())
+        floor = 24 / d * single
+        import math
+        ceiling = math.ceil(24 / d) * single
+        check(floor * (1 - 1e-9) <= makespan <= ceiling * (1 + 1e-9),
+              f"{d} devices: makespan {makespan:.6f} within [n/D floor, ceil]")
+
+    # ---- e2e_fleet replay ----
+    n = 512
+    probe = offered_load(256, 1.0, 0xF1EE7)
+    mean_service = sum(tuner.batched_seconds(p, b, g) for (_, p, b, _) in probe) / len(probe)
+    rate = 6.0 / mean_service
+    load = offered_load(n, rate, 0xF1EE7)
+    print(f"\noffered rate {rate:.0f} req/s (6x one 1080Ti), {n} requests")
+
+    rows = []
+    r1 = run([g], LEAST_LOADED, n, load)
+    base = r1["throughput"]
+    rows.append(("1", "1080Ti", "least-loaded", r1))
+    results = [(1, r1)]
+    for d in (2, 4, 8):
+        r = run([g] * d, LEAST_LOADED, n, load)
+        rows.append((str(d), "1080Ti", "least-loaded", r))
+        results.append((d, r))
+    rr4 = run([g] * 4, ROUND_ROBIN, n, load)
+    rows.append(("4", "1080Ti", "round-robin", rr4))
+    af4 = run([g] * 4, MODEL_AFFINITY, n, load)
+    rows.append(("4", "1080Ti", "model-affinity", af4))
+    af4b = run([g] * 4, MODEL_AFFINITY, 8, load)
+    rows.append(("4 (bound 8)", "1080Ti", "model-affinity", af4b))
+    het_ll = run([g, g, tx, tx], LEAST_LOADED, n, load)
+    rows.append(("4", "2xPascal+2xMaxwell", "least-loaded", het_ll))
+    het_rr = run([g, g, tx, tx], ROUND_ROBIN, n, load)
+    rows.append(("4", "2xPascal+2xMaxwell", "round-robin", het_rr))
+
+    print("\n| devices | fleet | policy | req/s | p50 lat | p99 lat | util | speedup |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (d, fl, pol, r) in rows:
+        print(f"| {d} | {fl} | {pol} | {r['throughput']:.0f} "
+              f"| {r['p50']*1e3:.2f} ms | {r['p99']*1e3:.2f} ms "
+              f"| {r['umin']*100:.0f}-{r['umax']*100:.0f}% "
+              f"| {r['throughput']/base:.2f}x |")
+
+    bounded = run([g] * 2, LEAST_LOADED, 8, load)
+    print(f"\nadmission (2 devices, bound 8): accepted {bounded['accepted']} "
+          f"rejected {bounded['rejected']} "
+          f"({100*bounded['rejected']/n:.0f}% shed), p99 {bounded['p99']*1e3:.2f} ms")
+
+    # ---- the e2e_fleet gates ----
+    speedup4 = results[2][1]["throughput"] / base
+    check(speedup4 >= 3.0, f"4 devices >= 3x (got {speedup4:.2f}x)")
+    for d, r in results:
+        check(r["completed"] == n and r["rejected"] == 0,
+              f"{d} devices: all {n} complete, none shed")
+        check(r["p99"] >= r["p50"] > 0.0, f"{d} devices: sane latency quantiles")
+    for (d0, r0), (d1, r1b) in zip(results, results[1:]):
+        check(r1b["throughput"] >= r0["throughput"] * 0.999,
+              f"throughput monotone {d0}->{d1} devices")
+    check(het_ll["makespan"] <= het_rr["makespan"] * 1.001,
+          f"hetero least-loaded ({het_ll['makespan']:.4f}s) <= "
+          f"round-robin ({het_rr['makespan']:.4f}s)")
+    check(bounded["rejected"] > 0, "bounded fleet sheds under 6x overload")
+    check(bounded["accepted"] + bounded["rejected"] == n, "admission accounting")
+    check(af4["completed"] == n, "affinity run completes everything")
+    check(af4["spills"] == 0, "unbounded affinity never spills")
+    check(af4b["spills"] > 0, "bounded affinity spills under overload")
+    check(af4b["throughput"] > af4["throughput"],
+          "pressure spilling beats strict pinning")
+    print(f"\nALL CHECKS PASSED (speedup at 4 devices: {speedup4:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+//! Fleet scaling bench: throughput and latency of the multi-GPU
+//! scheduler under one fixed offered load, across 1/2/4/8 homogeneous
+//! devices, a heterogeneous fleet, and the three placement policies —
+//! the EXPERIMENTS.md §8 table.
+//!
+//! The fleet runs in virtual time (service seconds from the
+//! `plans`/`gpusim` batched cost model), so every number here is exact
+//! and deterministic: no wall clock, no artifacts, no flakiness.
+//!
+//! Run: `cargo bench --bench e2e_fleet`
+//! CI check mode (asserts only, summary table): append `-- --check`.
+
+use std::collections::HashSet;
+
+use pasconv::fleet::{mean_service_secs, offered_load, Arrival, Fleet, FleetConfig, Policy};
+use pasconv::gpusim::{gtx_1080ti, titan_x_maxwell, GpuSpec};
+use pasconv::util::bench::Table;
+use pasconv::util::cli::Args;
+use pasconv::util::stats::Summary;
+
+struct RunResult {
+    accepted: u64,
+    rejected: u64,
+    completed: usize,
+    /// requests per virtual second (completed / makespan)
+    throughput: f64,
+    makespan: f64,
+    lat: Summary,
+    affinity_spills: u64,
+    /// per-device utilization (busy / makespan), min..max
+    util_min: f64,
+    util_max: f64,
+}
+
+fn run(specs: Vec<GpuSpec>, policy: Policy, queue_bound: usize, load: &[Arrival]) -> RunResult {
+    let mut fleet = Fleet::new(specs, FleetConfig { policy, queue_bound });
+    let mut completions = Vec::with_capacity(load.len());
+    for a in load {
+        // reactive serving: jobs finishing before this arrival free
+        // their queue slots first
+        completions.extend(fleet.complete_until(a.t));
+        fleet.submit(a.conv, Some(a.model));
+    }
+    completions.extend(fleet.drain());
+    // every accepted job completes exactly once — the bench re-checks the
+    // proptest invariant on the real load
+    let ids: HashSet<u64> = completions.iter().map(|c| c.job).collect();
+    assert_eq!(ids.len(), completions.len(), "duplicate completion");
+    assert_eq!(completions.len() as u64, fleet.stats.accepted, "lost job");
+    let makespan = completions.iter().map(|c| c.finish).fold(0.0f64, f64::max);
+    let lats: Vec<f64> = completions.iter().map(|c| c.latency()).collect();
+    let (mut umin, mut umax) = (f64::INFINITY, 0.0f64);
+    for d in fleet.devices() {
+        let u = d.busy_secs / makespan.max(1e-30);
+        umin = umin.min(u);
+        umax = umax.max(u);
+    }
+    RunResult {
+        accepted: fleet.stats.accepted,
+        rejected: fleet.stats.rejected,
+        completed: completions.len(),
+        throughput: completions.len() as f64 / makespan.max(1e-30),
+        makespan,
+        lat: Summary::of(&lats),
+        affinity_spills: fleet.stats.affinity_spills,
+        util_min: umin,
+        util_max: umax,
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let check_only = args.has("check");
+    let n = args.get_usize("requests", 512);
+    let g = gtx_1080ti();
+
+    // offered rate: ~6x one device's capacity on the mean request, so
+    // 1/2/4 devices saturate (work-limited) and 8 approaches the
+    // arrival-limited ceiling — equal offered load for every row
+    let probe = offered_load(256, 1.0, 0xF1EE7, None);
+    let mean_service = mean_service_secs(&probe, &g);
+    let rate = 6.0 / mean_service;
+    let load = offered_load(n, rate, 0xF1EE7, None);
+    println!(
+        "== e2e fleet: {n} requests at {:.0} req/s offered ({:.1}x one {}'s capacity) ==\n",
+        rate,
+        6.0,
+        g.name
+    );
+
+    let mut t = Table::new(&[
+        "devices", "fleet", "policy", "req/s", "p50 lat", "p99 lat", "util", "speedup",
+    ]);
+    let mut row = |devices: String, fleet_name: &str, policy: Policy, r: &RunResult, base: f64| {
+        t.row(&[
+            devices,
+            fleet_name.to_string(),
+            policy.label().to_string(),
+            format!("{:.0}", r.throughput),
+            format!("{:.2}ms", r.lat.p50 * 1e3),
+            format!("{:.2}ms", r.lat.p99 * 1e3),
+            format!("{:.0}-{:.0}%", 100.0 * r.util_min, 100.0 * r.util_max),
+            format!("{:.2}x", r.throughput / base),
+        ]);
+    };
+
+    // ---- homogeneous scaling, least-loaded ----
+    let unbounded = n; // accept everything: equal *served* load per row
+    let r1 = run(vec![g.clone()], Policy::LeastLoaded, unbounded, &load);
+    let base = r1.throughput;
+    row("1".into(), "1080Ti", Policy::LeastLoaded, &r1, base);
+    let mut speedup4 = 0.0;
+    let mut results = vec![(1usize, r1)];
+    for d in [2usize, 4, 8] {
+        let r = run(vec![g.clone(); d], Policy::LeastLoaded, unbounded, &load);
+        row(d.to_string(), "1080Ti", Policy::LeastLoaded, &r, base);
+        if d == 4 {
+            speedup4 = r.throughput / base;
+        }
+        results.push((d, r));
+    }
+
+    // ---- policies at 4 homogeneous devices ----
+    let rr4 = run(vec![g.clone(); 4], Policy::RoundRobin, unbounded, &load);
+    row("4".into(), "1080Ti", Policy::RoundRobin, &rr4, base);
+    // strict pinning (queues never fill): the warmth/balance trade-off
+    let af4 = run(vec![g.clone(); 4], Policy::ModelAffinity, unbounded, &load);
+    row("4".into(), "1080Ti", Policy::ModelAffinity, &af4, base);
+    // bounded queues: pressure spills off the hot shard and recovers
+    // most of the balance while keeping models pinned when possible
+    let af4b = run(vec![g.clone(); 4], Policy::ModelAffinity, 8, &load);
+    row("4 (bound 8)".into(), "1080Ti", Policy::ModelAffinity, &af4b, base);
+
+    // ---- heterogeneous fleet: 2x Pascal + 2x Maxwell ----
+    let hetero = || vec![g.clone(), g.clone(), titan_x_maxwell(), titan_x_maxwell()];
+    let het_ll = run(hetero(), Policy::LeastLoaded, unbounded, &load);
+    row("4".into(), "2xPascal+2xMaxwell", Policy::LeastLoaded, &het_ll, base);
+    let het_rr = run(hetero(), Policy::RoundRobin, unbounded, &load);
+    row("4".into(), "2xPascal+2xMaxwell", Policy::RoundRobin, &het_rr, base);
+    t.print();
+
+    // ---- bounded admission under the same overload ----
+    let bounded = run(vec![g.clone(); 2], Policy::LeastLoaded, 8, &load);
+    println!(
+        "\nadmission (2 devices, queue bound 8): accepted {} rejected {} ({:.0}% shed), p99 {:.2}ms",
+        bounded.accepted,
+        bounded.rejected,
+        100.0 * bounded.rejected as f64 / n as f64,
+        bounded.lat.p99 * 1e3,
+    );
+
+    // ---- the gates CI runs this bench for ----
+    assert!(
+        speedup4 >= 3.0,
+        "4 homogeneous devices must give >= 3x the 1-device throughput (got {speedup4:.2}x)"
+    );
+    for (d, r) in &results {
+        assert_eq!(r.completed, n, "{d} devices: every accepted job completes");
+        assert_eq!(r.rejected, 0, "{d} devices: unbounded run must not shed");
+        assert!(r.lat.p99 >= r.lat.p50 && r.lat.p50 > 0.0);
+        assert!(r.makespan > 0.0);
+    }
+    // more devices never hurt throughput at equal offered load
+    for w in results.windows(2) {
+        assert!(
+            w[1].1.throughput >= w[0].1.throughput * 0.999,
+            "throughput regressed from {} to {} devices",
+            w[0].0,
+            w[1].0
+        );
+    }
+    // on the heterogeneous fleet, cost-aware placement beats blind RR
+    assert!(
+        het_ll.makespan <= het_rr.makespan * 1.001,
+        "least-loaded lost to round-robin on a heterogeneous fleet: {} vs {}",
+        het_ll.makespan,
+        het_rr.makespan
+    );
+    // affinity kept every model pinned (spills only under pressure):
+    // unbounded = zero spills, bounded = spills engage and rebalance
+    assert!(af4.completed == n);
+    assert_eq!(af4.affinity_spills, 0, "unbounded affinity must never spill");
+    assert!(af4b.affinity_spills > 0, "bounded affinity must spill under overload");
+    assert!(
+        af4b.throughput > af4.throughput,
+        "pressure spilling must beat strict pinning under overload"
+    );
+    // bounded admission sheds under overload instead of queueing forever
+    assert!(bounded.rejected > 0, "2 bounded devices must shed at 6x overload");
+    assert_eq!(bounded.accepted + bounded.rejected, n as u64);
+
+    if !check_only {
+        println!("\nhomogeneous scaling (least-loaded): ");
+        for (d, r) in &results {
+            println!(
+                "  {d} device(s): {:.0} req/s, makespan {:.3}s, util {:.0}-{:.0}%",
+                r.throughput, r.makespan, 100.0 * r.util_min, 100.0 * r.util_max
+            );
+        }
+        println!(
+            "affinity at 4 devices: {} spills / {} requests",
+            af4.affinity_spills, n
+        );
+    }
+    println!("\ne2e_fleet OK ({speedup4:.2}x at 4 devices)");
+}

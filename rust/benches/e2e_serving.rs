@@ -1,13 +1,16 @@
 //! End-to-end serving bench: coordinator throughput and latency under
 //! synthetic PaperNet load, across batch windows — the L3 §Perf
-//! experiment of EXPERIMENTS.md (batching policy / queueing).
+//! experiment of EXPERIMENTS.md (batching policy / queueing) — plus a
+//! mixed-traffic section where `Mix::conv_burst` emits identical
+//! back-to-back conv templates so the queue thread's same-problem
+//! coalescer actually gets compatible neighbors to merge.
 //!
 //! Run: `cargo bench --bench e2e_serving`
 
 use std::time::{Duration, Instant};
 
-use pasconv::coordinator::{BatchConfig, Coordinator, Payload};
-use pasconv::runtime::{default_artifact_dir, Tensor};
+use pasconv::coordinator::{Arrivals, BatchConfig, Coordinator, Mix, Payload, Workload};
+use pasconv::runtime::{default_artifact_dir, ArtifactKind, Runtime, Tensor};
 use pasconv::util::bench::Table;
 use pasconv::util::rng::Rng;
 use pasconv::util::stats::Summary;
@@ -27,6 +30,44 @@ fn run(n: usize, cfg: BatchConfig) -> (f64, Summary, f64) {
     let mbs = coord.metrics().mean_batch_size();
     coord.shutdown();
     (n as f64 / wall, Summary::of(&lats), mbs)
+}
+
+/// Mixed conv+CNN traffic through `Workload` with a conv burst length;
+/// returns (mean conv micro-batch size, conv batches executed).  Note
+/// the rows differ in realized conv share, not just clustering: bursts
+/// multiply each conv trigger (see `Mix::conv_fraction` docs), which is
+/// fine here — the section reports coalescing behavior, not a
+/// fixed-mix throughput comparison.
+fn run_mixed(n: usize, conv_burst: usize, cfg: BatchConfig) -> (f64, u64) {
+    let dir = default_artifact_dir();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut templates = vec![];
+    for kind in [ArtifactKind::ConvSingle, ArtifactKind::ConvMulti] {
+        for a in rt.artifacts_of_kind(kind) {
+            templates.push(a.problem().unwrap());
+        }
+    }
+    drop(rt);
+    let mut coord = Coordinator::start(&dir, cfg).unwrap();
+    let mut w = Workload::new(
+        Arrivals::Burst,
+        Mix { conv_fraction: 0.5, conv_burst },
+        templates,
+        0xC0A1,
+    );
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let (payload, gap) = w.next();
+            std::thread::sleep(gap); // Burst: zero
+            coord.submit(payload)
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = coord.metrics();
+    coord.shutdown();
+    (m.mean_conv_batch_size(), m.conv_batches_executed)
 }
 
 fn main() {
@@ -66,5 +107,23 @@ fn main() {
         best_batched_tput > unbatched_tput,
         "dynamic batching must improve throughput"
     );
-    println!("e2e_serving OK");
+
+    // ---- conv micro-batch coalescing under correlated traffic ----
+    println!("\n== conv coalescing: 256 mixed requests, window 2ms ==\n");
+    let cfg = BatchConfig { max_batch: 8, max_wait: Duration::from_millis(2) };
+    let mut ct = Table::new(&["conv_burst", "conv batches", "mean conv batch"]);
+    let mut coalesced_mean = 0.0;
+    for burst in [1usize, 4] {
+        let (mean, batches) = run_mixed(256, burst, cfg);
+        if burst > 1 {
+            coalesced_mean = mean;
+        }
+        ct.row(&[burst.to_string(), batches.to_string(), format!("{mean:.2}")]);
+    }
+    ct.print();
+    assert!(
+        coalesced_mean > 1.0,
+        "bursty compatible traffic must coalesce (mean conv batch {coalesced_mean:.2})"
+    );
+    println!("\ne2e_serving OK");
 }

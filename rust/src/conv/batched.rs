@@ -1,0 +1,146 @@
+//! Batched convolution — the serving-regime payload: one problem shape,
+//! `n` independent images pushed through the same filter set (the
+//! batch > 1 regime cuConv (arXiv 2103.16234) serves and maxDNN
+//! (arXiv 1501.06633) benchmarks).
+//!
+//! Semantics are strictly "n independent single-image convolutions":
+//! the batched CPU reference is definitionally a loop over
+//! `conv2d_multi_cpu`, and `rust/tests/fleet_proptests.rs` pins the
+//! bit-identity.  The *performance* story differs — a batched kernel
+//! launches once and keeps the prefetch pipeline warm across images —
+//! and lives in `gpusim::KernelPlan::batched` / `plans::batched_cycles`.
+
+use super::cpu::conv2d_multi_cpu;
+use super::problem::{ConvProblem, BYTES_F32};
+
+/// A batch of `n` images convolved against one filter set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BatchedConv {
+    pub problem: ConvProblem,
+    /// images in the batch (n >= 1; n = 1 is exactly the single path)
+    pub n: usize,
+}
+
+impl BatchedConv {
+    pub fn new(problem: ConvProblem, n: usize) -> BatchedConv {
+        BatchedConv { problem, n }
+    }
+
+    pub fn single(problem: ConvProblem) -> BatchedConv {
+        BatchedConv { problem, n: 1 }
+    }
+
+    pub fn valid(&self) -> bool {
+        self.n >= 1 && self.problem.valid()
+    }
+
+    /// Elements across all images of the batch.
+    pub fn map_elems(&self) -> usize {
+        self.n * self.problem.map_elems()
+    }
+
+    /// Filter elements (shared across the batch — loaded per image by
+    /// the schedule, but one set exists).
+    pub fn filter_elems(&self) -> usize {
+        self.problem.filter_elems()
+    }
+
+    /// Output elements across all images.
+    pub fn out_elems(&self) -> usize {
+        self.n * self.problem.out_elems()
+    }
+
+    /// FMA operations for the whole batch.
+    pub fn fma_ops(&self) -> u64 {
+        self.n as u64 * self.problem.fma_ops()
+    }
+
+    /// Compulsory DRAM bytes: every image + output once, filters once.
+    pub fn compulsory_bytes(&self) -> usize {
+        (self.map_elems() + self.filter_elems() + self.out_elems()) * BYTES_F32
+    }
+
+    pub fn label(&self) -> String {
+        format!("{} xb{}", self.problem.label(), self.n)
+    }
+}
+
+/// Batched CPU reference: `images` is `n` concatenated image buffers
+/// (row-major, `n * C*Wy*Wx` values); returns `n` concatenated outputs.
+/// Definitionally `n` independent `conv2d_multi_cpu` runs — the
+/// differential tests require bit-identity with that loop.
+pub fn conv2d_batched_cpu(b: &BatchedConv, images: &[f32], filters: &[f32]) -> Vec<f32> {
+    assert!(b.valid(), "invalid batched problem");
+    assert_eq!(images.len(), b.map_elems(), "batched image size");
+    let per_in = b.problem.map_elems();
+    let per_out = b.problem.out_elems();
+    let mut out = Vec::with_capacity(b.n * per_out);
+    for i in 0..b.n {
+        out.extend(conv2d_multi_cpu(&b.problem, &images[i * per_in..(i + 1) * per_in], filters));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn accounting_scales_with_n() {
+        let p = ConvProblem::multi(4, 8, 6, 3);
+        let b = BatchedConv::new(p, 5);
+        assert!(b.valid());
+        assert_eq!(b.map_elems(), 5 * p.map_elems());
+        assert_eq!(b.filter_elems(), p.filter_elems());
+        assert_eq!(b.out_elems(), 5 * p.out_elems());
+        assert_eq!(b.fma_ops(), 5 * p.fma_ops());
+        assert_eq!(
+            b.compulsory_bytes(),
+            (5 * p.map_elems() + p.filter_elems() + 5 * p.out_elems()) * BYTES_F32
+        );
+    }
+
+    #[test]
+    fn n1_is_the_single_problem() {
+        let p = ConvProblem::single(16, 4, 3);
+        let b = BatchedConv::single(p);
+        assert_eq!(b.n, 1);
+        assert_eq!(b.fma_ops(), p.fma_ops());
+        assert!(b.label().contains("xb1"));
+    }
+
+    #[test]
+    fn zero_batch_is_invalid() {
+        assert!(!BatchedConv::new(ConvProblem::single(8, 2, 3), 0).valid());
+    }
+
+    #[test]
+    fn batched_cpu_equals_single_loop_bitwise() {
+        let p = ConvProblem::multi(3, 10, 4, 3);
+        let b = BatchedConv::new(p, 4);
+        let mut rng = Rng::new(77);
+        let images = rng.normal_vec(b.map_elems());
+        let filters = rng.normal_vec(p.filter_elems());
+        let batched = conv2d_batched_cpu(&b, &images, &filters);
+        for i in 0..b.n {
+            let single = conv2d_multi_cpu(
+                &p,
+                &images[i * p.map_elems()..(i + 1) * p.map_elems()],
+                &filters,
+            );
+            assert_eq!(
+                &batched[i * p.out_elems()..(i + 1) * p.out_elems()],
+                &single[..],
+                "image {i} differs"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "batched image size")]
+    fn wrong_batched_image_size_panics() {
+        let b = BatchedConv::new(ConvProblem::single(4, 1, 1), 2);
+        conv2d_batched_cpu(&b, &[0.0; 16], &[1.0]);
+    }
+}

@@ -1,10 +1,13 @@
-//! Convolution problem domain: shapes (`problem`), the paper's workload
-//! suites (`suites`), and a direct CPU implementation used as the
-//! rust-side numeric oracle (`cpu`).
+//! Convolution problem domain: shapes (`problem`), batched serving
+//! payloads (`batched`), the paper's workload suites (`suites`), and a
+//! direct CPU implementation used as the rust-side numeric oracle
+//! (`cpu`).
 
+pub mod batched;
 pub mod cpu;
 pub mod problem;
 pub mod suites;
 
+pub use batched::{conv2d_batched_cpu, BatchedConv};
 pub use cpu::{conv2d_multi_cpu, conv2d_single_cpu, max_abs_diff};
 pub use problem::{ConvProblem, BYTES_F32};

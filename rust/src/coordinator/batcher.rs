@@ -1,15 +1,20 @@
-//! Dynamic batcher — vLLM-style request grouping for the CNN serve path.
+//! Dynamic batcher — vLLM-style request grouping for the serve path.
 //!
 //! CNN requests are held briefly and grouped so one PJRT execution serves
 //! up to `max_batch` of them (the papernet_b8 artifact); a batch closes
 //! when full or when its oldest request has waited `max_wait`.  Conv
-//! requests are never batched (each problem shape is its own artifact) —
-//! they bypass the batcher.
+//! requests coalesce per problem shape through `ConvCoalescer` — a keyed
+//! family of `Batcher`s, one per distinct `ConvProblem`, under the same
+//! latency budget (requests for *different* shapes never batch: each
+//! shape is its own artifact).
 //!
 //! The core is a pure state machine (`push`/`poll`) so the policy is unit
 //! testable without threads; `server.rs` drives it from the queue thread.
 
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
+
+use crate::conv::ConvProblem;
 
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -86,6 +91,72 @@ impl<T> Batcher<T> {
     }
 }
 
+/// Coalesces *compatible* conv requests — same `ConvProblem` — into
+/// micro-batches under one latency budget: a keyed family of `Batcher`s
+/// sharing one `BatchConfig`.  Incompatible shapes ride in separate
+/// lanes and never delay each other.
+#[derive(Debug)]
+pub struct ConvCoalescer<T> {
+    cfg: BatchConfig,
+    lanes: HashMap<ConvProblem, Batcher<T>>,
+}
+
+impl<T> ConvCoalescer<T> {
+    pub fn new(cfg: BatchConfig) -> ConvCoalescer<T> {
+        ConvCoalescer { cfg, lanes: HashMap::new() }
+    }
+
+    /// Pending requests across all lanes.
+    pub fn len(&self) -> usize {
+        self.lanes.values().map(|b| b.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.values().all(|b| b.is_empty())
+    }
+
+    /// Add a request to its problem's lane; returns that lane's batch if
+    /// this request closed it (size `max_batch` reached).
+    pub fn push(
+        &mut self,
+        problem: ConvProblem,
+        item: T,
+        now: Instant,
+    ) -> Option<(ConvProblem, Vec<T>)> {
+        let cfg = self.cfg;
+        let lane = self.lanes.entry(problem).or_insert_with(|| Batcher::new(cfg));
+        lane.push(item, now).map(|batch| (problem, batch))
+    }
+
+    /// Flush every lane whose oldest request has exceeded the budget.
+    pub fn poll(&mut self, now: Instant) -> Vec<(ConvProblem, Vec<T>)> {
+        let mut out = Vec::new();
+        for (p, lane) in self.lanes.iter_mut() {
+            if let Some(batch) = lane.poll(now) {
+                out.push((*p, batch));
+            }
+        }
+        out
+    }
+
+    /// Earliest deadline across lanes (drives the queue thread's
+    /// recv_timeout, alongside the CNN batcher's own deadline).
+    pub fn deadline_in(&self, now: Instant) -> Option<Duration> {
+        self.lanes.values().filter_map(|b| b.deadline_in(now)).min()
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn take_all(&mut self) -> Vec<(ConvProblem, Vec<T>)> {
+        let mut out = Vec::new();
+        for (p, lane) in self.lanes.iter_mut() {
+            if let Some(batch) = lane.take() {
+                out.push((*p, batch));
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +220,66 @@ mod tests {
     fn empty_poll_never_fires() {
         let mut b: Batcher<i32> = Batcher::new(cfg(2, 0));
         assert!(b.poll(Instant::now() + Duration::from_secs(1)).is_none());
+    }
+
+    fn p1() -> ConvProblem {
+        ConvProblem::multi(8, 14, 16, 3)
+    }
+
+    fn p2() -> ConvProblem {
+        ConvProblem::single(32, 16, 3)
+    }
+
+    #[test]
+    fn coalescer_groups_by_problem_only() {
+        let mut c: ConvCoalescer<i32> = ConvCoalescer::new(cfg(2, 1000));
+        let t = Instant::now();
+        assert!(c.push(p1(), 1, t).is_none());
+        assert!(c.push(p2(), 2, t).is_none(), "different shape: separate lane");
+        assert_eq!(c.len(), 2);
+        let (p, batch) = c.push(p1(), 3, t).expect("p1 lane closed at max");
+        assert_eq!(p, p1());
+        assert_eq!(batch, vec![1, 3]);
+        assert_eq!(c.len(), 1, "p2 still pending");
+    }
+
+    #[test]
+    fn coalescer_poll_flushes_expired_lanes() {
+        let mut c: ConvCoalescer<i32> = ConvCoalescer::new(cfg(8, 5));
+        let t0 = Instant::now();
+        c.push(p1(), 1, t0);
+        c.push(p2(), 2, t0 + Duration::from_millis(4));
+        assert!(c.poll(t0).is_empty());
+        let fired = c.poll(t0 + Duration::from_millis(6));
+        assert_eq!(fired.len(), 1, "only p1's lane expired");
+        assert_eq!(fired[0], (p1(), vec![1]));
+        let late = c.poll(t0 + Duration::from_millis(10));
+        assert_eq!(late, vec![(p2(), vec![2])]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn coalescer_deadline_is_earliest_lane() {
+        let mut c: ConvCoalescer<i32> = ConvCoalescer::new(cfg(8, 10));
+        let t0 = Instant::now();
+        assert!(c.deadline_in(t0).is_none());
+        c.push(p1(), 1, t0);
+        c.push(p2(), 2, t0 + Duration::from_millis(6));
+        let d = c.deadline_in(t0 + Duration::from_millis(8)).unwrap();
+        assert!(d <= Duration::from_millis(2), "p1's lane expires first: {d:?}");
+    }
+
+    #[test]
+    fn coalescer_take_all_flushes_every_lane() {
+        let mut c: ConvCoalescer<i32> = ConvCoalescer::new(cfg(8, 1000));
+        let t = Instant::now();
+        c.push(p1(), 1, t);
+        c.push(p1(), 2, t);
+        c.push(p2(), 3, t);
+        let mut all = c.take_all();
+        all.sort_by_key(|(_, b)| b.len());
+        assert_eq!(all, vec![(p2(), vec![3]), (p1(), vec![1, 2])]);
+        assert!(c.is_empty());
+        assert!(c.take_all().is_empty());
     }
 }

@@ -87,6 +87,10 @@ pub struct Metrics {
     pub errors: u64,
     pub batches_executed: u64,
     pub batched_requests: u64,
+    /// coalesced conv micro-batches dispatched (including size-1 flushes)
+    pub conv_batches_executed: u64,
+    /// conv requests that rode those micro-batches
+    pub coalesced_convs: u64,
     /// conv problems pre-tuned at startup (Router::warm_plans)
     pub plans_tuned: u64,
     pub latency: Histogram,
@@ -109,6 +113,16 @@ impl Metrics {
         }
     }
 
+    /// Mean conv requests per coalesced micro-batch (1.0 = nothing
+    /// coalesced; > 1.0 = compatible neighbors shared a dispatch).
+    pub fn mean_conv_batch_size(&self) -> f64 {
+        if self.conv_batches_executed == 0 {
+            0.0
+        } else {
+            self.coalesced_convs as f64 / self.conv_batches_executed as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut per = Json::obj();
         for (k, v) in &self.per_artifact {
@@ -120,6 +134,8 @@ impl Metrics {
             .set("errors", (self.errors as usize).into())
             .set("batches", (self.batches_executed as usize).into())
             .set("mean_batch_size", self.mean_batch_size().into())
+            .set("conv_batches", (self.conv_batches_executed as usize).into())
+            .set("mean_conv_batch_size", self.mean_conv_batch_size().into())
             .set("plans_tuned", (self.plans_tuned as usize).into())
             .set("latency", self.latency.to_json())
             .set("per_artifact", per)
@@ -176,6 +192,18 @@ mod tests {
     fn empty_metrics_render() {
         let m = Metrics::default();
         assert!((m.mean_batch_size() - 0.0).abs() < 1e-12);
+        assert!((m.mean_conv_batch_size() - 0.0).abs() < 1e-12);
         assert!(m.to_json().render().contains("\"requests\":0"));
+    }
+
+    #[test]
+    fn conv_coalescing_accounting() {
+        let mut m = Metrics::default();
+        m.conv_batches_executed = 3;
+        m.coalesced_convs = 9;
+        assert!((m.mean_conv_batch_size() - 3.0).abs() < 1e-12);
+        let json = m.to_json().render();
+        assert!(json.contains("\"conv_batches\":3"), "{json}");
+        assert!(json.contains("\"mean_conv_batch_size\":3"), "{json}");
     }
 }

@@ -1,7 +1,7 @@
 //! L3 coordinator — the serving layer: `request` types, `router`
 //! (manifest -> artifact dispatch + §3 plan advice), `batcher` (dynamic
-//! batching policy), `server` (queue + executor threads over the PJRT
-//! runtime), `metrics`.
+//! CNN batching + conv micro-batch coalescing), `server` (queue +
+//! executor threads over the PJRT runtime), `metrics`.
 
 pub mod batcher;
 pub mod metrics;
@@ -10,7 +10,7 @@ pub mod router;
 pub mod server;
 pub mod workload;
 
-pub use batcher::{BatchConfig, Batcher};
+pub use batcher::{BatchConfig, Batcher, ConvCoalescer};
 pub use metrics::Metrics;
 pub use request::{ModelSummary, Payload, Request, Response};
 pub use router::{plan_advice, Router};

@@ -2,14 +2,20 @@
 
 use std::time::Instant;
 
-use crate::conv::ConvProblem;
+use crate::conv::{BatchedConv, ConvProblem};
 use crate::runtime::Tensor;
 
 /// What a client asks for.
 #[derive(Clone, Debug)]
 pub enum Payload {
-    /// one convolution: routed to the conv artifact matching `problem`
+    /// one convolution: routed to the conv artifact matching `problem`;
+    /// the queue thread coalesces compatible (same-problem) pending conv
+    /// requests into a micro-batch under the `BatchConfig` latency budget
     Conv { problem: ConvProblem, image: Tensor, filters: Tensor },
+    /// an explicit client-side batch: `batch.n` images (stacked on axis
+    /// 0) through one filter set — served in one dispatch against the
+    /// `batch.problem` artifact
+    BatchedConv { batch: BatchedConv, images: Tensor, filters: Tensor },
     /// one PaperNet inference: image (1, 28, 28); dynamically batched
     Cnn { image: Tensor },
     /// whole-model inference plan for a registered model: the graph
@@ -22,6 +28,7 @@ impl Payload {
     pub fn kind_str(&self) -> &'static str {
         match self {
             Payload::Conv { .. } => "conv",
+            Payload::BatchedConv { .. } => "batched-conv",
             Payload::Cnn { .. } => "cnn",
             Payload::Model { .. } => "model",
         }
@@ -63,8 +70,15 @@ pub struct Response {
     pub latency_secs: f64,
     /// artifact that served this request
     pub artifact: String,
-    /// how many requests shared the executed batch
+    /// how many requests (or images, for an explicit `BatchedConv`)
+    /// shared the executed batch
     pub batch_size: usize,
+    /// id of the executed batch this response came from — identical
+    /// across every response of one coalesced conv micro-batch or one
+    /// dynamic CNN batch, and present on explicit `BatchedConv`
+    /// executions; None only for work that runs outside any batch
+    /// (models)
+    pub batch_id: Option<u64>,
     /// human-readable planning note: for conv requests, the tuned-plan
     /// advice the router attached at routing time (when the table was
     /// warmed); for model requests, the `ModelReport::summary` line
@@ -86,6 +100,12 @@ mod tests {
             filters: Tensor::zeros(vec![1, 1, 1]),
         };
         assert_eq!(conv.kind_str(), "conv");
+        let batched = Payload::BatchedConv {
+            batch: BatchedConv::new(ConvProblem::single(8, 1, 1), 2),
+            images: Tensor::zeros(vec![2, 8, 8]),
+            filters: Tensor::zeros(vec![1, 1, 1]),
+        };
+        assert_eq!(batched.kind_str(), "batched-conv");
         let cnn = Payload::Cnn { image: Tensor::zeros(vec![1, 28, 28]) };
         assert_eq!(cnn.kind_str(), "cnn");
         let model = Payload::Model { model: "resnet18".into() };

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::analytic;
-use crate::conv::ConvProblem;
+use crate::conv::{BatchedConv, ConvProblem};
 use crate::gpusim::GpuSpec;
 use crate::graph;
 use crate::runtime::{Artifact, ArtifactKind};
@@ -62,6 +62,16 @@ impl Router {
             .get(p)
             .map(|s| s.as_str())
             .ok_or_else(|| anyhow!("no artifact for problem {}", p.label()))
+    }
+
+    /// The artifact serving an explicit batched conv: the batch routes
+    /// to its problem's artifact (served image-by-image against the
+    /// warm executable) after validating the batch itself.
+    pub fn route_batched(&self, b: &BatchedConv) -> Result<&str> {
+        if !b.valid() {
+            return Err(anyhow!("invalid batch: {} images of {}", b.n, b.problem.label()));
+        }
+        self.route_conv(&b.problem)
     }
 
     /// Smallest CNN artifact batch >= n (or the largest available).
@@ -208,6 +218,17 @@ mod tests {
         let r = router();
         // the multi artifact wins the shared shape
         assert_eq!(r.route_conv(&ConvProblem::multi(8, 14, 16, 3)).unwrap(), "m1");
+    }
+
+    #[test]
+    fn batched_conv_routes_to_problem_artifact() {
+        let r = router();
+        let ok = BatchedConv::new(ConvProblem::multi(8, 14, 16, 3), 4);
+        assert_eq!(r.route_batched(&ok).unwrap(), "m1");
+        let zero = BatchedConv::new(ConvProblem::multi(8, 14, 16, 3), 0);
+        assert!(r.route_batched(&zero).unwrap_err().to_string().contains("invalid batch"));
+        let unknown = BatchedConv::new(ConvProblem::single(64, 16, 3), 2);
+        assert!(r.route_batched(&unknown).is_err());
     }
 
     #[test]

@@ -1,13 +1,19 @@
-//! The serving coordinator: queue thread (routing + dynamic batching) +
-//! executor thread (owns the PJRT runtime).  Python never runs here.
+//! The serving coordinator: queue thread (routing + dynamic batching +
+//! conv micro-batch coalescing) + executor thread (owns the PJRT
+//! runtime).  Python never runs here.
 //!
 //!   client -> submit() -> [queue thread] -> Work -> [executor thread]
 //!                               |                        |
-//!                          Batcher<CnnItem>         Runtime (PJRT)
+//!                    Batcher<CnnItem> +              Runtime (PJRT)
+//!                    ConvCoalescer<ConvItem>
 //!
-//! tokio is not in the offline vendor set; std::thread + mpsc channels
-//! carry the same structure (one queue task, one executor task, oneshot
-//! response channels).
+//! The queue thread holds compatible (same-problem) pending conv
+//! requests for up to the `BatchConfig` latency budget and dispatches
+//! them as ONE micro-batch: every response of the batch carries the
+//! same `batch_id` and the same tuned-plan advice.  tokio is not in the
+//! offline vendor set; std::thread + mpsc channels carry the same
+//! structure (one queue task, one executor task, oneshot response
+//! channels).
 
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -18,10 +24,11 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use super::batcher::{BatchConfig, Batcher};
+use super::batcher::{BatchConfig, Batcher, ConvCoalescer};
 use super::metrics::Metrics;
 use super::request::{ModelSummary, Payload, Request, Response};
 use super::router::Router;
+use crate::conv::ConvProblem;
 use crate::gpusim::GpuSpec;
 use crate::runtime::{Runtime, Tensor};
 
@@ -32,10 +39,24 @@ struct CnnItem {
     respond: Respond,
 }
 
+struct ConvItem {
+    req: Request,
+    respond: Respond,
+}
+
 enum Work {
-    /// a conv request plus the tuned-plan advice the router attached
-    Single(Request, Respond, Option<String>),
-    CnnBatch(Vec<CnnItem>),
+    /// a coalesced conv micro-batch: same problem, one artifact, shared
+    /// batch id + tuned-plan advice across every member
+    ConvBatch {
+        batch_id: u64,
+        problem: ConvProblem,
+        items: Vec<ConvItem>,
+        advice: Option<String>,
+    },
+    /// an explicit client-side `Payload::BatchedConv` request (the
+    /// client did the grouping; the id still identifies the dispatch)
+    Batched { batch_id: u64, req: Request, respond: Respond, advice: Option<String> },
+    CnnBatch { batch_id: u64, items: Vec<CnnItem> },
     /// a whole-model plan request, carrying the registry's pre-built
     /// shared graph — neither thread rebuilds or deep-clones it
     Model(Request, Respond, std::sync::Arc<crate::graph::Graph>),
@@ -188,11 +209,26 @@ fn queue_loop(
     cfg: BatchConfig,
     metrics: Arc<Mutex<Metrics>>,
 ) {
-    let cfg = BatchConfig { max_batch: cfg.max_batch.min(router.max_cnn_batch()), ..cfg };
-    let mut batcher: Batcher<CnnItem> = Batcher::new(cfg);
+    let cnn_cfg = BatchConfig { max_batch: cfg.max_batch.min(router.max_cnn_batch()), ..cfg };
+    let mut batcher: Batcher<CnnItem> = Batcher::new(cnn_cfg);
+    // conv lanes use the raw config (conv batches run image-by-image on
+    // the artifact, so no manifest batch cap applies)
+    let mut coalescer: ConvCoalescer<ConvItem> = ConvCoalescer::new(cfg);
+    let mut next_batch_id: u64 = 1;
+    let mut alloc_id = || {
+        let id = next_batch_id;
+        next_batch_id += 1;
+        id
+    };
     loop {
-        // wait for the next request or the batch deadline, whichever first
-        let item = match batcher.deadline_in(Instant::now()) {
+        // wait for the next request or the earliest batch deadline
+        // (CNN batcher or any conv lane), whichever comes first
+        let now = Instant::now();
+        let deadline = match (batcher.deadline_in(now), coalescer.deadline_in(now)) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        let item = match deadline {
             Some(d) => match rx.recv_timeout(d) {
                 Ok(x) => Some(x),
                 Err(RecvTimeoutError::Timeout) => None,
@@ -207,19 +243,43 @@ fn queue_loop(
         if let Some((req, respond)) = item {
             match &req.payload {
                 Payload::Conv { problem, .. } => {
-                    // conv problems route 1:1 to artifacts — no batching;
-                    // the advice comes from the warmed table (zero search)
-                    let advice = router.tuned_advice(problem).map(|s| s.to_string());
+                    // coalesce compatible conv requests into a micro-batch
+                    // under the latency budget; the advice comes from the
+                    // warmed table (zero search) and is shared batch-wide
                     if let Err(e) = router.route_conv(problem) {
                         metrics.lock().unwrap().errors += 1;
                         let _ = respond.send(Err(e.to_string()));
-                    } else if work_tx.send(Work::Single(req, respond, advice)).is_err() {
-                        break;
+                    } else {
+                        let p = *problem;
+                        if let Some((p, items)) =
+                            coalescer.push(p, ConvItem { req, respond }, now)
+                        {
+                            let advice = router.tuned_advice(&p).map(|s| s.to_string());
+                            let w =
+                                Work::ConvBatch { batch_id: alloc_id(), problem: p, items, advice };
+                            if work_tx.send(w).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+                Payload::BatchedConv { batch, .. } => {
+                    // explicit batches bypass coalescing: the client
+                    // already did the grouping
+                    let advice = router.tuned_advice(&batch.problem).map(|s| s.to_string());
+                    if let Err(e) = router.route_batched(batch) {
+                        metrics.lock().unwrap().errors += 1;
+                        let _ = respond.send(Err(e.to_string()));
+                    } else {
+                        let w = Work::Batched { batch_id: alloc_id(), req, respond, advice };
+                        if work_tx.send(w).is_err() {
+                            break;
+                        }
                     }
                 }
                 Payload::Cnn { .. } => {
-                    if let Some(batch) = batcher.push(CnnItem { req, respond }, now) {
-                        if work_tx.send(Work::CnnBatch(batch)).is_err() {
+                    if let Some(items) = batcher.push(CnnItem { req, respond }, now) {
+                        if work_tx.send(Work::CnnBatch { batch_id: alloc_id(), items }).is_err() {
                             break;
                         }
                     }
@@ -241,16 +301,61 @@ fn queue_loop(
                 }
             }
         }
-        if let Some(batch) = batcher.poll(Instant::now()) {
-            if work_tx.send(Work::CnnBatch(batch)).is_err() {
-                break;
-            }
+        let now = Instant::now();
+        let mut disconnected = false;
+        if let Some(items) = batcher.poll(now) {
+            disconnected |= work_tx.send(Work::CnnBatch { batch_id: alloc_id(), items }).is_err();
+        }
+        for (p, items) in coalescer.poll(now) {
+            let advice = router.tuned_advice(&p).map(|s| s.to_string());
+            let w = Work::ConvBatch { batch_id: alloc_id(), problem: p, items, advice };
+            disconnected |= work_tx.send(w).is_err();
+        }
+        if disconnected {
+            break;
         }
     }
-    // shutdown: flush the tail batch
-    if let Some(batch) = batcher.take() {
-        let _ = work_tx.send(Work::CnnBatch(batch));
+    // shutdown: flush every pending lane and the CNN tail batch
+    for (p, items) in coalescer.take_all() {
+        let advice = router.tuned_advice(&p).map(|s| s.to_string());
+        let _ = work_tx.send(Work::ConvBatch { batch_id: alloc_id(), problem: p, items, advice });
     }
+    if let Some(items) = batcher.take() {
+        let _ = work_tx.send(Work::CnnBatch { batch_id: alloc_id(), items });
+    }
+}
+
+/// Serve an explicit `BatchedConv`: validate the stacked image tensor,
+/// run each image against the problem's (warm) artifact, and stack the
+/// outputs on a new leading axis.
+fn execute_batched_conv(
+    runtime: &mut Runtime,
+    router: &Router,
+    batch: &crate::conv::BatchedConv,
+    images: &Tensor,
+    filters: &Tensor,
+) -> Result<(Tensor, String)> {
+    let name = router.route_batched(batch)?.to_string();
+    let p = &batch.problem;
+    let per_image: Vec<usize> =
+        if p.is_single_channel() { vec![p.wy, p.wx] } else { vec![p.c, p.wy, p.wx] };
+    let mut want = vec![batch.n];
+    want.extend_from_slice(&per_image);
+    if images.shape != want {
+        return Err(anyhow!(
+            "batched image shape {:?}, batch of {} wants {:?}",
+            images.shape,
+            batch.n,
+            want
+        ));
+    }
+    let mut outputs = Vec::with_capacity(batch.n);
+    for i in 0..batch.n {
+        let mut image = images.slice_axis0(i, i + 1)?;
+        image.shape.remove(0); // (1, ...) -> per-image dims
+        outputs.push(runtime.execute_conv(&name, &image, filters)?);
+    }
+    Ok((Tensor::stack(&outputs)?, name))
 }
 
 fn exec_loop(
@@ -264,21 +369,67 @@ fn exec_loop(
     );
     while let Ok(work) = work_rx.recv() {
         match work {
-            Work::Single(req, respond, plan_advice) => {
-                let Payload::Conv { problem, image, filters } = &req.payload else {
-                    let _ = respond.send(Err("internal: non-conv single work".into()));
-                    continue;
-                };
-                let name = match router.route_conv(problem) {
-                    Ok(n) => n.to_string(),
+            Work::ConvBatch { batch_id, problem, items, advice } => {
+                let n = items.len();
+                let name = match router.route_conv(&problem) {
+                    Ok(nm) => nm.to_string(),
                     Err(e) => {
-                        metrics.lock().unwrap().errors += 1;
-                        let _ = respond.send(Err(e.to_string()));
+                        let mut m = metrics.lock().unwrap();
+                        for it in &items {
+                            let _ = it.respond.send(Err(e.to_string()));
+                            m.errors += 1;
+                        }
                         continue;
                     }
                 };
-                match runtime.execute_conv(&name, image, filters) {
-                    Ok(output) => {
+                // one dispatch for the whole micro-batch: the executable
+                // is compiled/warm after the first member, and every
+                // response shares the batch id and the plan advice
+                let mut outcomes = Vec::with_capacity(n);
+                for it in &items {
+                    let Payload::Conv { image, filters, .. } = &it.req.payload else {
+                        outcomes.push(Err("internal: non-conv in conv batch".to_string()));
+                        continue;
+                    };
+                    outcomes.push(
+                        runtime.execute_conv(&name, image, filters).map_err(|e| e.to_string()),
+                    );
+                }
+                // account under ONE lock, then send (same happens-before
+                // contract as the CNN batch path)
+                let latencies: Vec<f64> =
+                    items.iter().map(|it| it.req.submitted.elapsed().as_secs_f64()).collect();
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.conv_batches_executed += 1;
+                    m.coalesced_convs += n as u64;
+                    for (out, &l) in outcomes.iter().zip(&latencies) {
+                        match out {
+                            Ok(_) => m.record_response(&name, l),
+                            Err(_) => m.errors += 1,
+                        }
+                    }
+                }
+                for ((it, out), &latency) in items.iter().zip(outcomes).zip(&latencies) {
+                    let _ = it.respond.send(out.map(|output| Response {
+                        id: it.req.id,
+                        output,
+                        latency_secs: latency,
+                        artifact: name.clone(),
+                        batch_size: n,
+                        batch_id: Some(batch_id),
+                        plan: advice.clone(),
+                        model: None,
+                    }));
+                }
+            }
+            Work::Batched { batch_id, req, respond, advice } => {
+                let Payload::BatchedConv { batch, images, filters } = &req.payload else {
+                    let _ = respond.send(Err("internal: non-batched work".into()));
+                    continue;
+                };
+                match execute_batched_conv(&mut runtime, &router, batch, images, filters) {
+                    Ok((output, name)) => {
                         let latency = req.submitted.elapsed().as_secs_f64();
                         metrics.lock().unwrap().record_response(&name, latency);
                         let _ = respond.send(Ok(Response {
@@ -286,8 +437,9 @@ fn exec_loop(
                             output,
                             latency_secs: latency,
                             artifact: name,
-                            batch_size: 1,
-                            plan: plan_advice,
+                            batch_size: batch.n,
+                            batch_id: Some(batch_id),
+                            plan: advice,
                             model: None,
                         }));
                     }
@@ -315,6 +467,7 @@ fn exec_loop(
                     latency_secs: latency,
                     artifact,
                     batch_size: 1,
+                    batch_id: None,
                     plan: Some(report.summary()),
                     model: Some(ModelSummary {
                         model: report.model.clone(),
@@ -326,7 +479,7 @@ fn exec_loop(
                     }),
                 }));
             }
-            Work::CnnBatch(items) => {
+            Work::CnnBatch { batch_id, items } => {
                 let n = items.len();
                 let (cap, name) = match router.route_cnn(n) {
                     Ok((b, n)) => (b, n.to_string()),
@@ -391,6 +544,7 @@ fn exec_loop(
                                 latency_secs: latencies[i],
                                 artifact: name.clone(),
                                 batch_size: n,
+                                batch_id: Some(batch_id),
                                 plan: None,
                                 model: None,
                             }));

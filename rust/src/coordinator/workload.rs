@@ -51,15 +51,29 @@ fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
     -u.ln() / rate
 }
 
-/// What fraction of the stream is raw conv traffic (vs CNN inference).
+/// How much of the stream is raw conv traffic (vs CNN inference), and
+/// how that traffic clusters.
 #[derive(Clone, Copy, Debug)]
 pub struct Mix {
+    /// per-DECISION conv trigger rate: each non-burst request rolls
+    /// conv with this probability.  With `conv_burst` = 1 this is also
+    /// the stream share; with bursts, every trigger emits `conv_burst`
+    /// convs, so the realized conv share of the stream rises to
+    /// `b·f / (b·f + (1-f))` (e.g. f = 0.5, b = 4 → 80% conv).
     pub conv_fraction: f64,
+    /// identical back-to-back conv repeats: when a conv template fires,
+    /// the next `conv_burst - 1` requests reuse the SAME problem (fresh
+    /// random tensors), modeling the correlated traffic real serving
+    /// sees (one client, one layer shape).  The seed's generator drew
+    /// every request independently, so the coordinator's same-problem
+    /// coalescer had almost nothing to merge; `conv_burst > 1` is what
+    /// makes `e2e_serving`'s coalescing rows exercise it.  1 = off.
+    pub conv_burst: usize,
 }
 
 impl Default for Mix {
     fn default() -> Self {
-        Mix { conv_fraction: 0.25 }
+        Mix { conv_fraction: 0.25, conv_burst: 1 }
     }
 }
 
@@ -69,31 +83,55 @@ pub struct Workload {
     pub mix: Mix,
     pub conv_templates: Vec<ConvProblem>,
     rng: Rng,
+    /// remaining repeats of the current conv burst
+    burst_left: usize,
+    burst_problem: Option<ConvProblem>,
 }
 
 impl Workload {
     pub fn new(arrivals: Arrivals, mix: Mix, conv_templates: Vec<ConvProblem>, seed: u64) -> Self {
-        Workload { arrivals, mix, conv_templates, rng: Rng::new(seed) }
+        assert!(mix.conv_burst >= 1, "conv_burst must be >= 1");
+        Workload {
+            arrivals,
+            mix,
+            conv_templates,
+            rng: Rng::new(seed),
+            burst_left: 0,
+            burst_problem: None,
+        }
+    }
+
+    fn conv_payload(&mut self, p: ConvProblem) -> Payload {
+        let image = if p.is_single_channel() {
+            Tensor::randn(vec![p.wy, p.wx], &mut self.rng)
+        } else {
+            Tensor::randn(vec![p.c, p.wy, p.wx], &mut self.rng)
+        };
+        let filters = if p.is_single_channel() {
+            Tensor::randn(vec![p.m, p.k, p.k], &mut self.rng)
+        } else {
+            Tensor::randn(vec![p.m, p.c, p.k, p.k], &mut self.rng)
+        };
+        Payload::Conv { problem: p, image, filters }
     }
 
     /// Next request payload + the delay to wait before submitting it.
     pub fn next(&mut self) -> (Payload, Duration) {
         let gap = self.arrivals.next_gap(&mut self.rng);
+        if self.burst_left > 0 {
+            self.burst_left -= 1;
+            let p = self.burst_problem.expect("burst in progress");
+            return (self.conv_payload(p), gap);
+        }
         let payload = if !self.conv_templates.is_empty()
             && self.rng.next_f64() < self.mix.conv_fraction
         {
             let p = *self.rng.choose(&self.conv_templates);
-            let image = if p.is_single_channel() {
-                Tensor::randn(vec![p.wy, p.wx], &mut self.rng)
-            } else {
-                Tensor::randn(vec![p.c, p.wy, p.wx], &mut self.rng)
-            };
-            let filters = if p.is_single_channel() {
-                Tensor::randn(vec![p.m, p.k, p.k], &mut self.rng)
-            } else {
-                Tensor::randn(vec![p.m, p.c, p.k, p.k], &mut self.rng)
-            };
-            Payload::Conv { problem: p, image, filters }
+            if self.mix.conv_burst > 1 {
+                self.burst_left = self.mix.conv_burst - 1;
+                self.burst_problem = Some(p);
+            }
+            self.conv_payload(p)
         } else {
             Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut self.rng) }
         };
@@ -160,7 +198,7 @@ mod tests {
     fn mix_fraction_respected() {
         let mut w = Workload::new(
             Arrivals::Burst,
-            Mix { conv_fraction: 0.5 },
+            Mix { conv_fraction: 0.5, conv_burst: 1 },
             vec![ConvProblem::multi(4, 8, 4, 3)],
             7,
         );
@@ -175,7 +213,8 @@ mod tests {
     #[test]
     fn conv_payloads_have_template_shapes() {
         let p = ConvProblem::multi(4, 8, 6, 3);
-        let mut w = Workload::new(Arrivals::Burst, Mix { conv_fraction: 1.0 }, vec![p], 9);
+        let mut w =
+            Workload::new(Arrivals::Burst, Mix { conv_fraction: 1.0, conv_burst: 1 }, vec![p], 9);
         for _ in 0..10 {
             let (payload, _) = w.next();
             let Payload::Conv { problem, image, filters } = payload else {
@@ -189,9 +228,84 @@ mod tests {
 
     #[test]
     fn no_templates_means_all_cnn() {
-        let mut w = Workload::new(Arrivals::Burst, Mix { conv_fraction: 1.0 }, vec![], 11);
+        let mut w =
+            Workload::new(Arrivals::Burst, Mix { conv_fraction: 1.0, conv_burst: 1 }, vec![], 11);
         for _ in 0..10 {
             assert!(matches!(w.next().0, Payload::Cnn { .. }));
         }
+    }
+
+    #[test]
+    fn conv_burst_emits_identical_back_to_back_templates() {
+        // conv_burst = 4: every conv run is 4 consecutive requests with
+        // the SAME problem — what the coordinator's coalescer needs to
+        // actually merge anything
+        let templates =
+            vec![ConvProblem::multi(4, 8, 4, 3), ConvProblem::single(16, 4, 3)];
+        let mut w = Workload::new(
+            Arrivals::Burst,
+            Mix { conv_fraction: 0.5, conv_burst: 4 },
+            templates,
+            13,
+        );
+        let mut run_problem: Option<ConvProblem> = None;
+        let mut run_len = 0usize;
+        let mut runs = vec![];
+        for _ in 0..2000 {
+            match w.next().0 {
+                Payload::Conv { problem, .. } => {
+                    if run_problem == Some(problem) {
+                        run_len += 1;
+                    } else {
+                        if run_len > 0 {
+                            runs.push(run_len);
+                        }
+                        run_problem = Some(problem);
+                        run_len = 1;
+                    }
+                }
+                _ => {
+                    if run_len > 0 {
+                        runs.push(run_len);
+                    }
+                    run_problem = None;
+                    run_len = 0;
+                }
+            }
+        }
+        assert!(!runs.is_empty());
+        // every completed run is a multiple of the burst length (two
+        // back-to-back bursts of the same template concatenate)
+        assert!(
+            runs.iter().all(|&r| r % 4 == 0),
+            "non-multiple-of-burst runs: {runs:?}"
+        );
+    }
+
+    #[test]
+    fn burst_of_one_is_the_seed_behavior() {
+        let p = ConvProblem::multi(4, 8, 4, 3);
+        let mut a = Workload::new(
+            Arrivals::Burst,
+            Mix { conv_fraction: 0.5, conv_burst: 1 },
+            vec![p],
+            21,
+        );
+        let mut b = Workload::new(Arrivals::Burst, Mix::default(), vec![p], 21);
+        b.mix.conv_fraction = 0.5;
+        for _ in 0..200 {
+            assert_eq!(a.next().0.kind_str(), b.next().0.kind_str());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "conv_burst")]
+    fn zero_burst_rejected() {
+        let _ = Workload::new(
+            Arrivals::Burst,
+            Mix { conv_fraction: 0.5, conv_burst: 0 },
+            vec![],
+            1,
+        );
     }
 }

@@ -1,0 +1,170 @@
+//! One simulated GPU shard: a `GpuSpec`, a bounded FIFO work queue, and
+//! the virtual-time bookkeeping (when the tail of the queue drains).
+//!
+//! Timing is deterministic: a job's start/finish are fixed at placement
+//! (FIFO, no preemption), so the whole fleet is an event-driven
+//! simulation the stateful proptests can mirror exactly.
+
+use std::collections::VecDeque;
+
+use crate::conv::BatchedConv;
+use crate::gpusim::GpuSpec;
+
+/// One queued (or running) batched-conv job.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u64,
+    pub conv: BatchedConv,
+    /// model-affinity tag the submitter attached (None = untagged)
+    pub model: Option<String>,
+    /// virtual time the job entered the fleet, seconds
+    pub arrival: f64,
+    /// predicted execution seconds on the device it was placed on
+    pub service: f64,
+    /// virtual time execution starts (the queue ahead has drained)
+    pub start: f64,
+    /// `start + service`
+    pub finish: f64,
+}
+
+/// A completed job, as reported by `Fleet::next_completion`.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub job: u64,
+    pub device: usize,
+    pub conv: BatchedConv,
+    /// the affinity tag the job was submitted with — lets consumers
+    /// attribute completions (and shard hotspots) per model
+    pub model: Option<String>,
+    pub arrival: f64,
+    pub start: f64,
+    pub finish: f64,
+}
+
+impl Completion {
+    /// Queueing + service latency in virtual seconds.
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+}
+
+/// One simulated device of the fleet.
+#[derive(Debug)]
+pub struct Device {
+    pub id: usize,
+    pub spec: GpuSpec,
+    queue: VecDeque<Job>,
+    /// virtual time the last queued job finishes (monotone)
+    tail_finish: f64,
+    /// jobs completed on this device
+    pub completed: u64,
+    /// service seconds of completed jobs (utilization numerator)
+    pub busy_secs: f64,
+}
+
+impl Device {
+    pub fn new(id: usize, spec: GpuSpec) -> Device {
+        Device { id, spec, queue: VecDeque::new(), tail_finish: 0.0, completed: 0, busy_secs: 0.0 }
+    }
+
+    /// Jobs resident (running + waiting).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Virtual time this device could start a new job submitted at `now`.
+    pub fn ready_at(&self, now: f64) -> f64 {
+        self.tail_finish.max(now)
+    }
+
+    /// Seconds of queued work still ahead of a job arriving at `now`.
+    pub fn backlog_secs(&self, now: f64) -> f64 {
+        (self.tail_finish - now).max(0.0)
+    }
+
+    /// Finish time of the job at the head of the queue, if any —
+    /// the device's next completion event.
+    pub fn head_finish(&self) -> Option<f64> {
+        self.queue.front().map(|j| j.finish)
+    }
+
+    /// Append a job: start when the tail drains (or immediately), fixed
+    /// FIFO timing.  The caller enforces the queue bound.
+    pub(crate) fn place(&mut self, id: u64, conv: BatchedConv, model: Option<String>,
+        now: f64, service: f64) -> &Job {
+        let start = self.ready_at(now);
+        let finish = start + service;
+        self.tail_finish = finish;
+        self.queue.push_back(Job { id, conv, model, arrival: now, service, start, finish });
+        self.queue.back().expect("just pushed")
+    }
+
+    /// Pop the head job as a completion event.
+    pub(crate) fn complete_head(&mut self) -> Option<Completion> {
+        let j = self.queue.pop_front()?;
+        self.completed += 1;
+        self.busy_secs += j.service;
+        Some(Completion {
+            job: j.id,
+            device: self.id,
+            conv: j.conv,
+            model: j.model,
+            arrival: j.arrival,
+            start: j.start,
+            finish: j.finish,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvProblem;
+    use crate::gpusim::gtx_1080ti;
+
+    fn job() -> BatchedConv {
+        BatchedConv::new(ConvProblem::multi(8, 14, 16, 3), 2)
+    }
+
+    #[test]
+    fn fifo_timing_is_cumulative() {
+        let mut d = Device::new(0, gtx_1080ti());
+        assert_eq!(d.queue_len(), 0);
+        assert_eq!(d.backlog_secs(5.0), 0.0);
+        let (s1, f1) = {
+            let j = d.place(1, job(), None, 10.0, 2.0);
+            (j.start, j.finish)
+        };
+        assert_eq!((s1, f1), (10.0, 12.0));
+        let f2 = d.place(2, job(), None, 10.5, 3.0).finish;
+        assert_eq!(f2, 15.0); // queued behind job 1
+        assert_eq!(d.queue_len(), 2);
+        assert!((d.backlog_secs(10.5) - 4.5).abs() < 1e-12);
+        assert_eq!(d.head_finish(), Some(12.0));
+    }
+
+    #[test]
+    fn idle_device_starts_at_submission_time() {
+        let mut d = Device::new(3, gtx_1080ti());
+        d.place(1, job(), None, 0.0, 1.0);
+        d.complete_head().unwrap();
+        // queue drained at t=1; a job arriving at t=7 starts at 7
+        let j = d.place(2, job(), None, 7.0, 1.0);
+        assert_eq!(j.start, 7.0);
+        assert_eq!(j.finish, 8.0);
+    }
+
+    #[test]
+    fn completion_carries_job_identity_and_latency() {
+        let mut d = Device::new(1, gtx_1080ti());
+        d.place(9, job(), Some("vgg16".into()), 2.0, 4.0);
+        let c = d.complete_head().unwrap();
+        assert_eq!((c.job, c.device), (9, 1));
+        assert_eq!(c.model.as_deref(), Some("vgg16"));
+        assert_eq!(c.arrival, 2.0);
+        assert!((c.latency() - 4.0).abs() < 1e-12);
+        assert_eq!(d.completed, 1);
+        assert!((d.busy_secs - 4.0).abs() < 1e-12);
+        assert!(d.complete_head().is_none());
+    }
+}

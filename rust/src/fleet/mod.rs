@@ -1,0 +1,27 @@
+//! L4 fleet — multi-GPU serving: N simulated devices (heterogeneous
+//! `GpuSpec`s allowed), bounded per-device work queues, a batch-aware
+//! admission path, and pluggable placement (`policy`): round-robin,
+//! least-loaded-by-predicted-completion (costed through `plans`/`gpusim`
+//! per device spec), and model-affinity (a graph's pre-tuned plans stay
+//! warm on their shard).
+//!
+//! The fleet runs in *virtual time*: job service times come from the
+//! batched cost model (`plans::batched_seconds`), placements fix
+//! start/finish deterministically (FIFO, no preemption), and
+//! `next_completion`/`drain` advance an event-driven clock.  That keeps
+//! the `e2e_fleet` scaling bench and the stateful proptests
+//! (`rust/tests/fleet_proptests.rs`) exact and flake-free — no wall
+//! clock anywhere.
+//!
+//! Layer map: `device` (shard + job timing), `policy` (placement
+//! arithmetic), `scheduler` (admission, clock, completions, stats).
+
+pub mod device;
+pub mod policy;
+pub mod scheduler;
+pub mod traffic;
+
+pub use device::{Completion, Device, Job};
+pub use policy::{least_loaded_pick, round_robin_pick, PlacementCandidate, Policy};
+pub use scheduler::{Fleet, FleetConfig, FleetStats, Placement};
+pub use traffic::{mean_service_secs, model_layers, offered_load, Arrival};

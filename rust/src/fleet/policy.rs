@@ -1,0 +1,139 @@
+//! Placement policies: which shard gets the next job.
+//!
+//! `RoundRobin` ignores cost; `LeastLoaded` minimizes the job's
+//! *predicted completion time* across devices using the `plans`/`gpusim`
+//! cost model (which is what "least loaded" must mean on a heterogeneous
+//! fleet — a faster device with a deeper queue can still win);
+//! `ModelAffinity` pins a model's traffic to one shard so its pre-tuned
+//! plans stay warm, spilling to least-loaded only when the shard's
+//! queue is full.
+//!
+//! The pure selection arithmetic lives here (unit-testable without a
+//! fleet); `scheduler.rs` owns the state (round-robin cursor, sticky
+//! affinity map).
+
+/// Pluggable placement policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// cycle device ids, skipping full queues
+    RoundRobin,
+    /// minimize predicted completion (backlog + this job's cost there)
+    LeastLoaded,
+    /// sticky model -> shard mapping, least-loaded for untagged traffic
+    ModelAffinity,
+}
+
+impl Policy {
+    /// CLI spelling(s) -> policy.
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "rr" | "round-robin" => Some(Policy::RoundRobin),
+            "least" | "least-loaded" => Some(Policy::LeastLoaded),
+            "affinity" | "model-affinity" => Some(Policy::ModelAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastLoaded => "least-loaded",
+            Policy::ModelAffinity => "model-affinity",
+        }
+    }
+}
+
+/// One device's admission snapshot for a specific job, at submission
+/// time — everything a policy may look at.
+#[derive(Clone, Copy, Debug)]
+pub struct PlacementCandidate {
+    pub device: usize,
+    pub queue_len: usize,
+    pub queue_bound: usize,
+    /// virtual time the device could start this job (max(tail, now))
+    pub ready_at: f64,
+    /// predicted service seconds of THIS job on THIS device
+    /// (`plans::batched_seconds` under the device's spec)
+    pub service: f64,
+}
+
+impl PlacementCandidate {
+    pub fn full(&self) -> bool {
+        self.queue_len >= self.queue_bound
+    }
+
+    /// Predicted completion if the job were placed here.
+    pub fn completion(&self) -> f64 {
+        self.ready_at + self.service
+    }
+}
+
+/// The least-loaded pick: the non-full device with the earliest
+/// predicted completion, lowest id on ties.  None when every queue is
+/// full (the admission path rejects).
+pub fn least_loaded_pick(cands: &[PlacementCandidate]) -> Option<usize> {
+    cands
+        .iter()
+        .filter(|c| !c.full())
+        .min_by(|a, b| {
+            a.completion()
+                .partial_cmp(&b.completion())
+                .unwrap()
+                .then(a.device.cmp(&b.device))
+        })
+        .map(|c| c.device)
+}
+
+/// The round-robin pick: first non-full device at or after `cursor`
+/// (cyclic).  None when every queue is full.
+pub fn round_robin_pick(cands: &[PlacementCandidate], cursor: usize) -> Option<usize> {
+    let n = cands.len();
+    (0..n).map(|i| (cursor + i) % n).find(|&i| !cands[i].full()).map(|i| cands[i].device)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(device: usize, queue_len: usize, ready_at: f64, service: f64) -> PlacementCandidate {
+        PlacementCandidate { device, queue_len, queue_bound: 4, ready_at, service }
+    }
+
+    #[test]
+    fn parse_spellings() {
+        assert_eq!(Policy::parse("rr"), Some(Policy::RoundRobin));
+        assert_eq!(Policy::parse("round-robin"), Some(Policy::RoundRobin));
+        assert_eq!(Policy::parse("least"), Some(Policy::LeastLoaded));
+        assert_eq!(Policy::parse("model-affinity"), Some(Policy::ModelAffinity));
+        assert_eq!(Policy::parse("bogus"), None);
+        assert_eq!(Policy::LeastLoaded.label(), "least-loaded");
+    }
+
+    #[test]
+    fn least_loaded_minimizes_completion_not_queue_depth() {
+        // device 0: short queue but slow for this job; device 1 finishes
+        // earlier despite the deeper queue — the heterogeneous case
+        let cands = [cand(0, 1, 0.0, 10.0), cand(1, 3, 2.0, 3.0)];
+        assert_eq!(least_loaded_pick(&cands), Some(1));
+    }
+
+    #[test]
+    fn least_loaded_skips_full_and_breaks_ties_low_id() {
+        let mut cands = vec![cand(0, 4, 0.0, 1.0), cand(1, 0, 5.0, 1.0), cand(2, 0, 5.0, 1.0)];
+        assert_eq!(least_loaded_pick(&cands), Some(1), "tie -> lowest id");
+        cands[1].queue_len = 4;
+        cands[2].queue_len = 4;
+        assert_eq!(least_loaded_pick(&cands), None, "all full -> reject");
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_full() {
+        let cands = [cand(0, 0, 0.0, 1.0), cand(1, 4, 0.0, 1.0), cand(2, 0, 0.0, 1.0)];
+        assert_eq!(round_robin_pick(&cands, 0), Some(0));
+        assert_eq!(round_robin_pick(&cands, 1), Some(2), "skips the full device 1");
+        assert_eq!(round_robin_pick(&cands, 2), Some(2));
+        assert_eq!(round_robin_pick(&cands, 3), Some(0), "wraps");
+        let full = [cand(0, 4, 0.0, 1.0)];
+        assert_eq!(round_robin_pick(&full, 0), None);
+    }
+}

@@ -1,0 +1,411 @@
+//! The fleet scheduler: N simulated devices behind one batch-aware
+//! admission path, driven in virtual time.
+//!
+//! `submit` prices the job on every shard (`plans::batched_seconds`
+//! under each device's spec — heterogeneous fleets price differently
+//! per shard), asks the placement policy for a device, and either
+//! enqueues (fixing the job's start/finish deterministically, FIFO) or
+//! rejects when the policy finds every bounded queue full.
+//! `next_completion` pops the globally earliest finishing job and
+//! advances the virtual clock; `drain` runs the fleet dry.
+//!
+//! Everything is deterministic given the submission sequence — the
+//! stateful proptests in `rust/tests/fleet_proptests.rs` replay an
+//! independent reference model against every transition.
+
+use std::collections::HashMap;
+
+use crate::conv::{BatchedConv, ConvProblem};
+use crate::gpusim::GpuSpec;
+use crate::plans;
+
+use super::device::{Completion, Device};
+use super::policy::{least_loaded_pick, round_robin_pick, PlacementCandidate, Policy};
+
+/// Fleet-wide knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    pub policy: Policy,
+    /// max jobs resident per device (running + waiting); admission
+    /// rejects once the policy finds every candidate at the bound.  A
+    /// coalesced batch occupies ONE slot whatever its `n` — batching
+    /// buys admission capacity as well as launch amortization.
+    pub queue_bound: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { policy: Policy::LeastLoaded, queue_bound: 32 }
+    }
+}
+
+/// Admission outcome for an accepted job.
+#[derive(Clone, Copy, Debug)]
+pub struct Placement {
+    pub job: u64,
+    pub device: usize,
+    /// predicted start/finish in virtual seconds (exact under FIFO)
+    pub start: f64,
+    pub finish: f64,
+}
+
+/// Fleet counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetStats {
+    pub submitted: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    /// total images across accepted jobs (sum of batch `n`)
+    pub batched_images: u64,
+    /// affinity jobs that spilled off their sticky shard (queue full)
+    pub affinity_spills: u64,
+}
+
+/// A multi-GPU fleet in virtual time.
+pub struct Fleet {
+    devices: Vec<Device>,
+    cfg: FleetConfig,
+    now: f64,
+    rr_cursor: usize,
+    /// sticky model -> device assignments (ModelAffinity policy)
+    affinity: HashMap<String, usize>,
+    next_job: u64,
+    /// memoized predicted seconds per (problem, batch, device spec)
+    cost_cache: HashMap<(ConvProblem, usize, &'static str), f64>,
+    pub stats: FleetStats,
+}
+
+impl Fleet {
+    pub fn new(specs: Vec<GpuSpec>, cfg: FleetConfig) -> Fleet {
+        assert!(!specs.is_empty(), "fleet needs at least one device");
+        assert!(cfg.queue_bound >= 1, "queue bound must be >= 1");
+        Fleet {
+            devices: specs.into_iter().enumerate().map(|(i, s)| Device::new(i, s)).collect(),
+            cfg,
+            now: 0.0,
+            rr_cursor: 0,
+            affinity: HashMap::new(),
+            next_job: 1,
+            cost_cache: HashMap::new(),
+            stats: FleetStats::default(),
+        }
+    }
+
+    /// `n` identical devices.
+    pub fn homogeneous(n: usize, spec: &GpuSpec, cfg: FleetConfig) -> Fleet {
+        Fleet::new(vec![spec.clone(); n], cfg)
+    }
+
+    pub fn config(&self) -> FleetConfig {
+        self.cfg
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// The virtual clock, seconds.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Move the virtual clock forward (arrival processes drive this);
+    /// moving backward is a no-op — time is monotone.
+    pub fn advance_to(&mut self, t: f64) {
+        self.now = self.now.max(t);
+    }
+
+    /// Jobs accepted but not yet completed, fleet-wide.
+    pub fn in_flight(&self) -> usize {
+        self.devices.iter().map(|d| d.queue_len()).sum()
+    }
+
+    /// Predicted service seconds of a batch on device `device` —
+    /// `plans::batched_seconds` under that device's spec, memoized per
+    /// (problem, n, spec).
+    pub fn predicted_service(&mut self, conv: &BatchedConv, device: usize) -> f64 {
+        service_for(&mut self.cost_cache, &self.devices[device].spec, conv)
+    }
+
+    /// The sticky shard a model is pinned to, if assigned yet.
+    pub fn affinity_shard(&self, model: &str) -> Option<usize> {
+        self.affinity.get(model).copied()
+    }
+
+    /// Admission: price the job on every shard, place per policy.
+    /// `None` = rejected (every candidate queue at its bound).
+    pub fn submit(&mut self, conv: BatchedConv, model: Option<&str>) -> Option<Placement> {
+        assert!(conv.valid(), "invalid batched problem");
+        self.stats.submitted += 1;
+        let cands: Vec<PlacementCandidate> = (0..self.devices.len())
+            .map(|i| PlacementCandidate {
+                device: i,
+                queue_len: self.devices[i].queue_len(),
+                queue_bound: self.cfg.queue_bound,
+                ready_at: self.devices[i].ready_at(self.now),
+                service: service_for(&mut self.cost_cache, &self.devices[i].spec, &conv),
+            })
+            .collect();
+
+        let pick = match self.cfg.policy {
+            Policy::RoundRobin => {
+                let p = round_robin_pick(&cands, self.rr_cursor);
+                if let Some(d) = p {
+                    self.rr_cursor = (d + 1) % self.devices.len();
+                }
+                p
+            }
+            Policy::LeastLoaded => least_loaded_pick(&cands),
+            Policy::ModelAffinity => match model.and_then(|m| self.affinity.get(m).copied()) {
+                // untagged, or first sight of this model: least-loaded;
+                // the pin is recorded below ONLY if the job is accepted
+                // (a rejected first submission must not pin anything)
+                None => least_loaded_pick(&cands),
+                Some(shard) if !cands[shard].full() => Some(shard),
+                Some(_) => {
+                    // sticky shard saturated: spill, keep the pin
+                    let spill = least_loaded_pick(&cands);
+                    if spill.is_some() {
+                        self.stats.affinity_spills += 1;
+                    }
+                    spill
+                }
+            },
+        };
+
+        let Some(d) = pick else {
+            self.stats.rejected += 1;
+            return None;
+        };
+        if self.cfg.policy == Policy::ModelAffinity {
+            if let Some(m) = model {
+                self.affinity.entry(m.to_string()).or_insert(d);
+            }
+        }
+        let id = self.next_job;
+        self.next_job += 1;
+        self.stats.accepted += 1;
+        self.stats.batched_images += conv.n as u64;
+        let service = cands[d].service;
+        let job = self.devices[d].place(id, conv, model.map(str::to_string), self.now, service);
+        Some(Placement { job: id, device: d, start: job.start, finish: job.finish })
+    }
+
+    /// Pop the globally earliest finishing job (lowest device id on
+    /// ties) and advance the clock to its finish time.
+    pub fn next_completion(&mut self) -> Option<Completion> {
+        let d = self
+            .devices
+            .iter()
+            .filter_map(|d| d.head_finish().map(|f| (d.id, f)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)))?
+            .0;
+        let c = self.devices[d].complete_head().expect("head exists");
+        self.now = self.now.max(c.finish);
+        self.stats.completed += 1;
+        Some(c)
+    }
+
+    /// Pop every job that finishes at or before `t` (event order) and
+    /// advance the clock to `t`.  Arrival-driven callers pump this
+    /// before each submission so queues drain as virtual time passes —
+    /// otherwise a bounded fleet looks permanently full the moment its
+    /// slots fill once.
+    pub fn complete_until(&mut self, t: f64) -> Vec<Completion> {
+        let mut out = Vec::new();
+        loop {
+            let next_finish = self
+                .devices
+                .iter()
+                .filter_map(|d| d.head_finish())
+                .fold(f64::INFINITY, f64::min);
+            if next_finish > t {
+                break;
+            }
+            out.push(self.next_completion().expect("head exists"));
+        }
+        self.advance_to(t);
+        out
+    }
+
+    /// Run the fleet dry, returning completions in event order.
+    pub fn drain(&mut self) -> Vec<Completion> {
+        let mut out = Vec::with_capacity(self.in_flight());
+        while let Some(c) = self.next_completion() {
+            out.push(c);
+        }
+        out
+    }
+}
+
+/// Predicted seconds for `conv` on `spec`, through the memo table.
+fn service_for(
+    cache: &mut HashMap<(ConvProblem, usize, &'static str), f64>,
+    spec: &GpuSpec,
+    conv: &BatchedConv,
+) -> f64 {
+    *cache
+        .entry((conv.problem, conv.n, spec.name))
+        .or_insert_with(|| plans::batched_seconds(conv, spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvProblem;
+    use crate::gpusim::{gtx_1080ti, titan_x_maxwell};
+
+    fn conv(n: usize) -> BatchedConv {
+        BatchedConv::new(ConvProblem::multi(8, 14, 16, 3), n)
+    }
+
+    fn fleet(n: usize, policy: Policy, bound: usize) -> Fleet {
+        Fleet::homogeneous(n, &gtx_1080ti(), FleetConfig { policy, queue_bound: bound })
+    }
+
+    #[test]
+    fn burst_balances_across_homogeneous_least_loaded() {
+        let mut f = fleet(4, Policy::LeastLoaded, 8);
+        for _ in 0..8 {
+            assert!(f.submit(conv(1), None).is_some());
+        }
+        for d in f.devices() {
+            assert_eq!(d.queue_len(), 2, "identical jobs spread evenly");
+        }
+        let done = f.drain();
+        assert_eq!(done.len(), 8);
+        assert_eq!(f.stats.completed, 8);
+        assert_eq!(f.in_flight(), 0);
+    }
+
+    #[test]
+    fn queue_bound_rejects_when_saturated() {
+        let mut f = fleet(2, Policy::LeastLoaded, 2);
+        for i in 0..4 {
+            assert!(f.submit(conv(1), None).is_some(), "job {i} fits");
+        }
+        assert!(f.submit(conv(1), None).is_none(), "fleet saturated");
+        assert_eq!(f.stats.rejected, 1);
+        assert_eq!(f.stats.accepted, 4);
+        // draining one slot readmits
+        f.next_completion().unwrap();
+        assert!(f.submit(conv(1), None).is_some());
+    }
+
+    #[test]
+    fn completions_pop_in_finish_order_and_advance_time() {
+        let mut f = fleet(2, Policy::RoundRobin, 8);
+        for _ in 0..6 {
+            f.submit(conv(1), None).unwrap();
+        }
+        let mut last = 0.0;
+        let done = f.drain();
+        assert_eq!(done.len(), 6);
+        for c in &done {
+            assert!(c.finish >= last, "event order");
+            last = c.finish;
+        }
+        assert!((f.now() - last).abs() < 1e-15, "clock at last finish");
+    }
+
+    #[test]
+    fn round_robin_cycles_devices() {
+        let mut f = fleet(3, Policy::RoundRobin, 8);
+        let devs: Vec<usize> =
+            (0..6).map(|_| f.submit(conv(1), None).unwrap().device).collect();
+        assert_eq!(devs, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_faster_device_on_hetero_fleet() {
+        // 1080Ti + Titan X: the Pascal card serves the same job faster,
+        // so an empty fleet's first placement lands there
+        let mut f = Fleet::new(
+            vec![titan_x_maxwell(), gtx_1080ti()],
+            FleetConfig { policy: Policy::LeastLoaded, queue_bound: 8 },
+        );
+        let c = conv(4);
+        let t_maxwell = f.predicted_service(&c, 0);
+        let t_pascal = f.predicted_service(&c, 1);
+        assert!(t_pascal < t_maxwell, "pascal {t_pascal} vs maxwell {t_maxwell}");
+        assert_eq!(f.submit(c, None).unwrap().device, 1);
+    }
+
+    #[test]
+    fn affinity_sticks_and_spills() {
+        let mut f = fleet(3, Policy::ModelAffinity, 2);
+        let d0 = f.submit(conv(1), Some("vgg16")).unwrap().device;
+        assert_eq!(f.affinity_shard("vgg16"), Some(d0));
+        assert_eq!(f.submit(conv(1), Some("vgg16")).unwrap().device, d0, "sticky");
+        // shard full -> spill elsewhere, pin unchanged
+        let spilled = f.submit(conv(1), Some("vgg16")).unwrap().device;
+        assert_ne!(spilled, d0);
+        assert_eq!(f.stats.affinity_spills, 1);
+        assert_eq!(f.affinity_shard("vgg16"), Some(d0));
+        // a different model lands on a different shard (d0 is busiest)
+        let other = f.submit(conv(1), Some("resnet18")).unwrap().device;
+        assert_ne!(other, d0);
+    }
+
+    #[test]
+    fn rejected_first_submission_does_not_pin() {
+        // a model first seen while the fleet is saturated must not be
+        // pinned to an arbitrary shard; the pin forms on first ACCEPTED
+        // placement
+        let mut f = fleet(2, Policy::ModelAffinity, 1);
+        f.submit(conv(1), Some("alexnet")).unwrap();
+        f.submit(conv(1), Some("alexnet")).unwrap(); // spills to device 1
+        assert!(f.submit(conv(1), Some("vgg16")).is_none(), "fleet saturated");
+        assert_eq!(f.affinity_shard("vgg16"), None, "rejection pinned a shard");
+        // capacity frees on device 0 first; vgg16 pins where it lands
+        f.next_completion().unwrap();
+        let d = f.submit(conv(1), Some("vgg16")).unwrap().device;
+        assert_eq!(f.affinity_shard("vgg16"), Some(d));
+    }
+
+    #[test]
+    fn batch_occupies_one_slot_and_amortizes() {
+        let mut f = fleet(1, Policy::LeastLoaded, 1);
+        let single = f.predicted_service(&conv(1), 0);
+        let batched = f.predicted_service(&conv(8), 0);
+        assert!(batched < 8.0 * single, "batching must amortize");
+        assert!(batched > single);
+        // the 8-image batch takes the single queue slot
+        assert!(f.submit(conv(8), None).is_some());
+        assert!(f.submit(conv(1), None).is_none(), "slot taken");
+        assert_eq!(f.stats.batched_images, 8);
+    }
+
+    #[test]
+    fn complete_until_frees_bounded_slots_as_time_passes() {
+        let mut f = fleet(1, Policy::LeastLoaded, 2);
+        let s = f.predicted_service(&conv(1), 0);
+        assert!(f.submit(conv(1), None).is_some());
+        assert!(f.submit(conv(1), None).is_some());
+        assert!(f.submit(conv(1), None).is_none(), "bound hit");
+        // nothing finishes before s
+        assert!(f.complete_until(0.5 * s).is_empty());
+        assert_eq!(f.now(), 0.5 * s);
+        // by 2.5 s both queued jobs have drained; slots reopen
+        let done = f.complete_until(2.5 * s);
+        assert_eq!(done.len(), 2);
+        assert_eq!(f.now(), 2.5 * s, "clock lands on the target time");
+        assert!(f.submit(conv(1), None).is_some());
+    }
+
+    #[test]
+    fn virtual_clock_monotone_under_advance() {
+        let mut f = fleet(1, Policy::LeastLoaded, 4);
+        f.advance_to(5.0);
+        assert_eq!(f.now(), 5.0);
+        f.advance_to(2.0);
+        assert_eq!(f.now(), 5.0, "time never rewinds");
+        let p = f.submit(conv(1), None).unwrap();
+        assert_eq!(p.start, 5.0, "idle device starts at arrival");
+    }
+}

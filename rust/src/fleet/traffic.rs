@@ -1,0 +1,107 @@
+//! Synthetic fleet traffic: model-tagged batched-conv request streams.
+//! ONE definition shared by the `fleet` CLI subcommand and the
+//! `e2e_fleet` bench (and mirrored line-for-line by
+//! `python/mirror/validate_fleet.py`), so the three can never drift.
+
+use crate::conv::{suites, BatchedConv, ConvProblem};
+use crate::gpusim::GpuSpec;
+use crate::plans;
+use crate::util::rng::Rng;
+
+/// One offered request: arrival time, batch, model tag (affinity key).
+pub struct Arrival {
+    pub t: f64,
+    pub conv: BatchedConv,
+    pub model: &'static str,
+}
+
+/// Conv layers per model tag — what the affinity policy pins to shards.
+pub fn model_layers() -> Vec<(&'static str, Vec<ConvProblem>)> {
+    vec![
+        ("alexnet", suites::alexnet()),
+        ("resnet18", suites::resnet18()),
+        ("vgg16", suites::vgg16()),
+    ]
+}
+
+/// A fixed Poisson request stream at `rate` req/s: replaying the same
+/// (n, rate, seed, batch) always yields the same sequence, which is how
+/// every fleet configuration sees equal offered load.  `batch` None
+/// draws n ∈ {1, 2, 4, 8} per request; `Some(b)` fixes it (the CLI's
+/// `--batch` knob) without consuming an RNG draw.
+pub fn offered_load(n: usize, rate: f64, seed: u64, batch: Option<usize>) -> Vec<Arrival> {
+    let models = model_layers();
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let u = rng.next_f64().max(f64::MIN_POSITIVE);
+        t += -u.ln() / rate;
+        let (model, layers) = &models[rng.range_usize(0, models.len() - 1)];
+        let problem = *rng.choose(layers);
+        let b = batch.unwrap_or_else(|| [1usize, 2, 4, 8][rng.range_usize(0, 3)]);
+        out.push(Arrival { t, conv: BatchedConv::new(problem, b), model: *model });
+    }
+    out
+}
+
+/// Mean predicted service seconds of `load` on one `spec` — the
+/// capacity yardstick offered rates are calibrated against
+/// (`rate = overload / mean_service_secs(probe, spec)`).
+pub fn mean_service_secs(load: &[Arrival], spec: &GpuSpec) -> f64 {
+    assert!(!load.is_empty(), "empty probe");
+    load.iter().map(|a| plans::batched_seconds(&a.conv, spec)).sum::<f64>() / load.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::gtx_1080ti;
+
+    #[test]
+    fn stream_is_deterministic_and_monotone() {
+        let a = offered_load(64, 100.0, 7, None);
+        let b = offered_load(64, 100.0, 7, None);
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.t, x.conv, x.model), (y.t, y.conv, y.model));
+        }
+        for w in a.windows(2) {
+            assert!(w[1].t > w[0].t, "arrival times must increase");
+        }
+    }
+
+    #[test]
+    fn fixed_batch_skips_the_batch_draw_only() {
+        let free = offered_load(32, 100.0, 9, None);
+        let fixed = offered_load(32, 100.0, 9, Some(4));
+        assert!(fixed.iter().all(|a| a.conv.n == 4));
+        assert!(free.iter().any(|a| a.conv.n != 4));
+        // same gaps and problems up to the first post-draw divergence:
+        // the first request's t and problem must match exactly
+        assert_eq!(free[0].t, fixed[0].t);
+        assert_eq!(free[0].conv.problem, fixed[0].conv.problem);
+    }
+
+    #[test]
+    fn models_come_from_the_registry() {
+        let tags: Vec<&str> = model_layers().iter().map(|(m, _)| *m).collect();
+        for a in offered_load(64, 100.0, 11, None) {
+            assert!(tags.contains(&a.model), "{}", a.model);
+            let (_, layers) = model_layers().swap_remove(
+                tags.iter().position(|t| *t == a.model).unwrap(),
+            );
+            assert!(layers.contains(&a.conv.problem));
+        }
+    }
+
+    #[test]
+    fn mean_service_positive_and_batch_monotone() {
+        let g = gtx_1080ti();
+        let s1 = mean_service_secs(&offered_load(16, 1.0, 3, Some(1)), &g);
+        let s8 = mean_service_secs(&offered_load(16, 1.0, 3, Some(8)), &g);
+        assert!(s1 > 0.0);
+        assert!(s8 > s1, "bigger batches cost more in total");
+        assert!(s8 < 8.0 * s1, "but amortize vs 8 launches");
+    }
+}

@@ -135,9 +135,22 @@ impl PipelineResult {
 }
 
 /// Simulate the double-buffered round pipeline on one SM.
+///
+/// Consecutive identical rounds are run-length compressed first, so the
+/// cost is O(distinct runs) not O(rounds) — batched plans
+/// (`KernelPlan::batched`) repeat the per-image schedule n times and
+/// collapse right back here, and the result is the exact runs-form
+/// arithmetic the tuner's scorer uses (score ≡ simulate by shared code,
+/// not by tolerance).
 pub fn simulate_pipeline(spec: &GpuSpec, cfg: &ExecConfig, rounds: &[Round]) -> PipelineResult {
     assert!(!rounds.is_empty(), "no rounds");
-    let runs: Vec<(Round, usize)> = rounds.iter().map(|&r| (r, 1)).collect();
+    let mut runs: Vec<(Round, usize)> = Vec::new();
+    for &r in rounds {
+        match runs.last_mut() {
+            Some((prev, n)) if *prev == r => *n += 1,
+            _ => runs.push((r, 1)),
+        }
+    }
     simulate_pipeline_runs(spec, cfg, &runs)
 }
 

@@ -49,6 +49,35 @@ impl KernelPlan {
     pub fn fma_per_byte(&self) -> f64 {
         self.total_fma / self.dram_load_bytes().max(1.0)
     }
+
+    /// The batch-`n` schedule: the per-image round list repeated `n`
+    /// times back to back.  One launch, one cold-fetch prologue — the
+    /// pipeline stays warm across images, which is the batching win the
+    /// serving path banks on; FMA work, DRAM traffic and output
+    /// writeback all scale exactly by `n` (each image re-streams its
+    /// inputs — a conservative model that never credits cross-image
+    /// filter residency).
+    pub fn batched(&self, n: usize) -> KernelPlan {
+        assert!(n >= 1, "batch must be >= 1");
+        if n == 1 {
+            return self.clone();
+        }
+        let mut rounds = Vec::with_capacity(self.rounds.len() * n);
+        for _ in 0..n {
+            rounds.extend_from_slice(&self.rounds);
+        }
+        KernelPlan {
+            name: format!("{} xb{n}", self.name),
+            rounds,
+            sms_active: self.sms_active,
+            threads_per_sm: self.threads_per_sm,
+            compute_efficiency: self.compute_efficiency,
+            output_bytes: self.output_bytes * n as f64,
+            smem_bytes_per_sm: self.smem_bytes_per_sm,
+            total_fma: self.total_fma * n as f64,
+            launch_overhead_cycles: self.launch_overhead_cycles,
+        }
+    }
 }
 
 /// Simulation outcome for one kernel on one GPU.
@@ -199,6 +228,51 @@ mod tests {
         let p = plan(10, 1e4, 1e6);
         let expect = p.total_fma / (1e4 * 10.0 * g.sm_count as f64);
         assert!((p.fma_per_byte() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batched_plan_scales_work_and_traffic_exactly() {
+        let p = plan(8, 1e4, 1e6);
+        let b = p.batched(4);
+        assert_eq!(b.rounds.len(), 4 * p.rounds.len());
+        assert!((b.total_fma - 4.0 * p.total_fma).abs() < 1e-9);
+        assert!((b.dram_load_bytes() - 4.0 * p.dram_load_bytes()).abs() < 1e-6);
+        assert!((b.output_bytes - 4.0 * p.output_bytes).abs() < 1e-9);
+        // one launch: overhead is NOT scaled
+        assert_eq!(b.launch_overhead_cycles, p.launch_overhead_cycles);
+        assert!(b.name.contains("xb4"));
+    }
+
+    #[test]
+    fn batch_of_one_is_identity() {
+        let g = gtx_1080ti();
+        let p = plan(8, 1e4, 1e6);
+        let b = p.batched(1);
+        assert_eq!(b.name, p.name);
+        let (a, c) = (simulate(&g, &p).cycles, simulate(&g, &b).cycles);
+        assert!((a - c).abs() < 1e-12 * a);
+    }
+
+    #[test]
+    fn batched_cycles_monotone_and_amortized() {
+        // cycles grow with n but stay under n independent launches: the
+        // warm pipeline + single launch is the whole point of batching
+        let g = gtx_1080ti();
+        let p = plan(8, 1e4, 1e6);
+        let single = simulate(&g, &p).cycles;
+        let mut last = 0.0;
+        for n in [1usize, 2, 4, 8] {
+            let c = simulate(&g, &p.batched(n)).cycles;
+            assert!(c > last, "n={n}: {c} <= {last}");
+            assert!(c < n as f64 * single + 1e-9, "n={n}: no amortization");
+            last = c;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "batch must be >= 1")]
+    fn zero_batch_panics() {
+        plan(2, 1e3, 1e4).batched(0);
     }
 
     #[test]

@@ -97,14 +97,18 @@ pub struct NodeReport {
 pub struct ModelReport {
     pub model: String,
     pub gpu: &'static str,
+    /// images pushed through the graph together (1 = single inference)
+    pub batch: usize,
     /// per-node breakdown, in schedule order (`nodes[i].id` is the
-    /// node executed at step i)
+    /// node executed at step i); node times cover the whole batch
     pub nodes: Vec<NodeReport>,
     pub total_seconds: f64,
     pub conv_seconds: f64,
     pub glue_seconds: f64,
     /// conv node count (layer instances)
     pub conv_layers: usize,
+    /// arena plan scaled per image: every activation holds `batch`
+    /// images, so peak/naive bytes are the per-image plan times `batch`
     pub arena: ArenaPlan,
 }
 
@@ -128,8 +132,9 @@ impl ModelReport {
     /// One-line summary (CLI, bench, coordinator logs).
     pub fn summary(&self) -> String {
         format!(
-            "{}: {} nodes ({} convs) in {:.3} ms ({:.0}% conv) on {}; arena {} MiB vs naive {} MiB ({:.0}% saved)",
+            "{}{}: {} nodes ({} convs) in {:.3} ms ({:.0}% conv) on {}; arena {} MiB vs naive {} MiB ({:.0}% saved)",
             self.model,
+            if self.batch > 1 { format!(" xb{}", self.batch) } else { String::new() },
             self.nodes.len(),
             self.conv_layers,
             self.total_seconds * 1e3,
@@ -146,8 +151,26 @@ impl ModelReport {
 /// every node (convs through `planner` + `gpusim::simulate`, glue
 /// through the DRAM stream model) and aggregate.
 pub fn execute(g: &Graph, spec: &GpuSpec, planner: Planner) -> ModelReport {
+    execute_batched(g, spec, planner, 1)
+}
+
+/// `execute` for a batch of `batch` images moving through the graph
+/// together: conv nodes run their plan's batched schedule (one launch,
+/// warm pipeline — `KernelPlan::batched`), glue nodes stream `batch`
+/// times the bytes under one launch, and the arena holds `batch` images
+/// per activation (per-image plan scaled by `batch`).
+pub fn execute_batched(g: &Graph, spec: &GpuSpec, planner: Planner, batch: usize) -> ModelReport {
+    assert!(batch >= 1, "batch must be >= 1");
     let order = topo_order(g);
-    let arena = plan_arena(g, &order);
+    let mut arena = plan_arena(g, &order);
+    // every activation carries `batch` images: offsets and sizes scale
+    // uniformly, so the per-image plan times `batch` IS the batched plan
+    arena.peak_bytes *= batch;
+    arena.naive_bytes *= batch;
+    for pl in &mut arena.placements {
+        pl.offset *= batch;
+        pl.life.bytes *= batch;
+    }
     let mut nodes = Vec::with_capacity(order.len());
     let (mut conv_s, mut glue_s, mut convs) = (0.0f64, 0.0f64, 0usize);
     for &id in &order {
@@ -155,14 +178,15 @@ pub fn execute(g: &Graph, spec: &GpuSpec, planner: Planner) -> ModelReport {
         let (seconds, detail) = match &n.op {
             Op::Input { .. } => (0.0, "network input".to_string()),
             Op::Conv { problem } => {
-                let plan = planner(problem, spec);
+                let plan = planner(problem, spec).batched(batch);
                 let r = simulate(spec, &plan);
                 convs += 1;
                 conv_s += r.seconds;
                 (r.seconds, r.name)
             }
             op => {
-                let s = spec.cycles_to_secs(glue_cycles(spec, glue_bytes(g, id)));
+                let s = spec
+                    .cycles_to_secs(glue_cycles(spec, glue_bytes(g, id) * batch as f64));
                 glue_s += s;
                 let d = match *op {
                     Op::Pad { h, w } => format!("pad to {h}x{w}"),
@@ -186,6 +210,7 @@ pub fn execute(g: &Graph, spec: &GpuSpec, planner: Planner) -> ModelReport {
     ModelReport {
         model: g.name.clone(),
         gpu: spec.name,
+        batch,
         nodes,
         total_seconds: conv_s + glue_s,
         conv_seconds: conv_s,
@@ -269,6 +294,29 @@ mod tests {
         assert!(pool > pad, "pool {pool} <= pad {pad}");
         assert!(glue_cycles(&spec, pool) > glue_cycles(&spec, pad));
         assert_eq!(glue_cycles(&spec, 0.0), 0.0);
+    }
+
+    #[test]
+    fn batched_execution_amortizes_and_scales_arena() {
+        let g = model_graph("alexnet").unwrap();
+        let spec = gtx_1080ti();
+        let one = execute_batched(&g, &spec, plans::paper_plan_for, 1);
+        let four = execute_batched(&g, &spec, plans::paper_plan_for, 4);
+        // batch=1 is exactly execute()
+        let plain = execute(&g, &spec, plans::paper_plan_for);
+        assert_eq!(plain.batch, 1);
+        assert!((one.total_seconds - plain.total_seconds).abs() < 1e-15);
+        // more work than one image, less than four independent runs
+        assert!(four.total_seconds > one.total_seconds);
+        assert!(four.total_seconds < 4.0 * one.total_seconds, "no amortization");
+        // arena scaled per image
+        assert_eq!(four.arena.peak_bytes, 4 * one.arena.peak_bytes);
+        assert_eq!(four.arena.naive_bytes, 4 * one.arena.naive_bytes);
+        assert!((four.arena.saved_fraction() - one.arena.saved_fraction()).abs() < 1e-12);
+        assert!(four.summary().contains("xb4"), "{}", four.summary());
+        // per-node times still sum to the total
+        let sum: f64 = four.nodes.iter().map(|n| n.seconds).sum();
+        assert!((sum - four.total_seconds).abs() < 1e-12);
     }
 
     #[test]

@@ -23,6 +23,6 @@ pub use build::{
     alexnet_graph, inception3a_graph, model_graph, resnet18_graph, vgg16_graph, Graph,
     GraphBuilder, MODEL_NAMES,
 };
-pub use exec::{execute, topo_order, ModelReport, NodeReport, Planner};
+pub use exec::{execute, execute_batched, topo_order, ModelReport, NodeReport, Planner};
 pub use memory::{liveness, plan_arena, ArenaPlan, Placement, TensorLife, ARENA_ALIGN};
 pub use node::{Node, NodeId, Op, Shape};

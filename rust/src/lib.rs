@@ -16,12 +16,16 @@
 //!   liveness-based arena memory planning, topological scheduling
 //!   through `plans`/`tuner` and `gpusim`
 //! * `runtime`   — PJRT client: load + execute the AOT'd HLO artifacts
-//! * `coordinator` — request router, dynamic batcher, worker pool, metrics
+//! * `coordinator` — request router, dynamic batcher + conv micro-batch
+//!   coalescer, worker pool, metrics
+//! * `fleet`     — multi-GPU scheduler: simulated device shards, bounded
+//!   queues, batch-aware admission, pluggable placement policies
 //! * `util`      — offline stand-ins (rng/stats/bench/cli/prop/json)
 pub mod analytic;
 pub mod baselines;
 pub mod conv;
 pub mod coordinator;
+pub mod fleet;
 pub mod gpusim;
 pub mod graph;
 pub mod plans;

@@ -12,6 +12,10 @@
 //!   model [--model vgg16]         execute a whole model graph: end-to-end
 //!                                 latency + arena memory plan
 //!                                 (--report adds the per-node breakdown)
+//!   fleet [--devices N]           multi-GPU fleet simulation: batched
+//!                                 conv traffic across N device shards
+//!                                 under a placement policy, virtual-time
+//!                                 throughput/latency/utilization out
 //!
 //! `--no-tune` pins simulate/sweep/model to the paper's closed-form §3
 //! picks.
@@ -42,9 +46,10 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "tune" => cmd_tune(&args),
         "model" => cmd_model(&args),
+        "fleet" => cmd_fleet(&args),
         _ => {
             eprintln!(
-                "usage: pasconv <list|simulate|serve|sweep|tune|model> [flags]\n\
+                "usage: pasconv <list|simulate|serve|sweep|tune|model|fleet> [flags]\n\
                  \n  list                              artifact registry\
                  \n  simulate --c C --w W --m M --k K  one problem, all kernels, simulated\
                  \n  serve [--requests N]              demo serving loop with batching\
@@ -53,7 +58,10 @@ fn main() {
                  \n       [--save FILE] [--load FILE]  plan-space search vs paper picks\
                  \n  model [--model NAME|all] [--gpu ...] [--no-tune] [--report]\
                  \n                                    whole-model graph execution:\
-                 \n                                    latency + arena memory plan\n"
+                 \n                                    latency + arena memory plan\
+                 \n  fleet [--devices N] [--policy rr|least|affinity] [--requests N]\
+                 \n        [--batch B] [--queue-bound Q] [--overload X] [--hetero]\
+                 \n                                    virtual-time multi-GPU fleet run\n"
             );
             if cmd == "help" { 0 } else { 2 }
         }
@@ -251,6 +259,78 @@ fn cmd_model(args: &Args) -> i32 {
         ]);
     }
     t.print();
+    0
+}
+
+fn cmd_fleet(args: &Args) -> i32 {
+    use pasconv::fleet::{mean_service_secs, offered_load, Fleet, FleetConfig, Policy};
+
+    let devices = args.get_usize("devices", 4);
+    let n = args.get_usize("requests", 256);
+    let batch = args.get_usize("batch", 4);
+    let queue_bound = args.get_usize("queue-bound", 32);
+    let overload = args.get_f64("overload", 4.0);
+    let Some(policy) = Policy::parse(args.get_or("policy", "least")) else {
+        eprintln!("unknown policy (want rr|least|affinity)");
+        return 2;
+    };
+    let g = gpu_from(args);
+    let specs: Vec<GpuSpec> = if args.has("hetero") {
+        // alternate the two paper testbeds across the shards
+        (0..devices)
+            .map(|i| if i % 2 == 0 { gtx_1080ti() } else { titan_x_maxwell() })
+            .collect()
+    } else {
+        vec![g.clone(); devices]
+    };
+    let names: Vec<&str> = specs.iter().map(|s| s.name).collect();
+    println!(
+        "fleet: {} devices [{}], policy {}, queue bound {queue_bound}, batch {batch}",
+        devices,
+        names.join(", "),
+        policy.label()
+    );
+
+    // model-tagged batched conv traffic over the §4 model layers
+    // (fleet::traffic — the same generator the e2e_fleet bench replays);
+    // offered rate: `overload` x one reference device's capacity
+    let mut fleet = Fleet::new(specs, FleetConfig { policy, queue_bound });
+    let probe = offered_load(64, 1.0, 0xF1EE7, Some(batch));
+    let rate = overload / mean_service_secs(&probe, &g);
+    let mut completions = Vec::with_capacity(n);
+    for a in offered_load(n, rate, 0xF1EE7, Some(batch)) {
+        completions.extend(fleet.complete_until(a.t));
+        fleet.submit(a.conv, Some(a.model));
+    }
+    completions.extend(fleet.drain());
+    let makespan = completions.iter().map(|c| c.finish).fold(0.0f64, f64::max);
+    let lats: Vec<f64> = completions.iter().map(|c| c.latency()).collect();
+    let s = pasconv::util::stats::Summary::of(&lats);
+
+    let mut table = Table::new(&["device", "spec", "jobs", "busy (s)", "util"]);
+    for d in fleet.devices() {
+        table.row(&[
+            d.id.to_string(),
+            d.spec.name.to_string(),
+            d.completed.to_string(),
+            format!("{:.3}", d.busy_secs),
+            format!("{:.0}%", 100.0 * d.busy_secs / makespan.max(1e-30)),
+        ]);
+    }
+    table.print();
+    let st = fleet.stats;
+    println!(
+        "\noffered {:.0} req/s ({overload:.1}x capacity); accepted {}/{} ({} shed), {} images",
+        rate, st.accepted, st.submitted, st.rejected, st.batched_images
+    );
+    println!(
+        "virtual makespan {:.3}s -> {:.0} req/s served; p50 {:.2}ms p99 {:.2}ms; {} affinity spills",
+        makespan,
+        completions.len() as f64 / makespan.max(1e-30),
+        s.p50 * 1e3,
+        s.p99 * 1e3,
+        st.affinity_spills
+    );
     0
 }
 

@@ -9,8 +9,8 @@
 pub mod single_channel;
 pub mod stride_fixed;
 
-use crate::conv::ConvProblem;
-use crate::gpusim::{GpuSpec, KernelPlan};
+use crate::conv::{BatchedConv, ConvProblem};
+use crate::gpusim::{simulate, GpuSpec, KernelPlan};
 
 /// Launch + drain overhead our kernels pay (~2.7 µs at 1.48 GHz).  One
 /// definition shared by both plan builders and the tuner's scorer — the
@@ -36,6 +36,32 @@ pub fn paper_plan_for(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
     }
 }
 
+/// The serving plan for a batch: the tuned per-image plan repeated over
+/// the batch (`KernelPlan::batched`) — one launch, warm pipeline.
+pub fn batched_plan_for(b: &BatchedConv, spec: &GpuSpec) -> KernelPlan {
+    assert!(b.valid(), "invalid batched problem");
+    plan_for(&b.problem, spec).batched(b.n)
+}
+
+/// `batched_plan_for` with the paper's closed-form §3 pick (`--no-tune`).
+pub fn batched_paper_plan_for(b: &BatchedConv, spec: &GpuSpec) -> KernelPlan {
+    assert!(b.valid(), "invalid batched problem");
+    paper_plan_for(&b.problem, spec).batched(b.n)
+}
+
+/// Predicted execution cycles of a batch under the tuned plan — the
+/// cost estimate the fleet's least-loaded placement and admission use.
+/// Memoized upstream (`tuner`), so steady-state serving pays one
+/// simulate per distinct `(problem, n, spec)`.
+pub fn batched_cycles(b: &BatchedConv, spec: &GpuSpec) -> f64 {
+    simulate(spec, &batched_plan_for(b, spec)).cycles
+}
+
+/// `batched_cycles` in seconds on `spec` — what fleet queues accumulate.
+pub fn batched_seconds(b: &BatchedConv, spec: &GpuSpec) -> f64 {
+    spec.cycles_to_secs(batched_cycles(b, spec))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -57,6 +83,35 @@ mod tests {
         assert!(s.name.contains("single"), "{}", s.name);
         let m = paper_plan_for(&ConvProblem::multi(64, 56, 64, 3), &g);
         assert!(m.name.contains("multi"), "{}", m.name);
+    }
+
+    #[test]
+    fn batched_dispatch_and_identity_at_n1() {
+        let g = gtx_1080ti();
+        for p in [ConvProblem::single(56, 64, 3), ConvProblem::multi(64, 56, 64, 3)] {
+            let single = simulate(&g, &plan_for(&p, &g)).cycles;
+            let b1 = simulate(&g, &batched_plan_for(&BatchedConv::single(p), &g)).cycles;
+            assert!((single - b1).abs() < 1e-12 * single, "{}", p.label());
+            assert!((batched_cycles(&BatchedConv::single(p), &g) - single).abs()
+                < 1e-12 * single);
+        }
+    }
+
+    #[test]
+    fn batched_cost_monotone_and_bounded_by_independent_launches() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(64, 14, 64, 3);
+        let single = batched_seconds(&BatchedConv::single(p), &g);
+        let mut last = 0.0;
+        for n in [1usize, 2, 4, 8] {
+            let t = batched_seconds(&BatchedConv::new(p, n), &g);
+            assert!(t > last, "n={n}");
+            assert!(t <= n as f64 * single * (1.0 + 1e-9), "n={n}: slower than n launches");
+            // the per-image marginal cost stays positive: at least the
+            // image's own steady-state stream
+            assert!(t >= single, "n={n}");
+            last = t;
+        }
     }
 
     #[test]

@@ -1,0 +1,476 @@
+//! Stateful property tests for the fleet scheduler, modeled on
+//! proptest-stateful's plan/check loop: random submit / complete /
+//! drain / advance command sequences run against the real `Fleet` while
+//! an in-test reference model replays every transition independently.
+//!
+//! Pinned invariants:
+//!  * every accepted request completes exactly once (never lost, never
+//!    duplicated), across completes, drains and interleaved submits;
+//!  * no device ever exceeds its queue bound, and admission rejects
+//!    exactly when every candidate queue is at the bound;
+//!  * least-loaded never picks a strictly worse device: the chosen
+//!    shard's predicted completion is minimal among non-full shards;
+//!  * round-robin visits devices cyclically (skipping full queues) and
+//!    model-affinity stays pinned, spilling only under pressure;
+//!  * placements and completions match the reference model exactly
+//!    (same start/finish arithmetic, same event order, same clock).
+//!
+//! Plus the differential batching properties the batch-aware serving
+//! path rests on: the batched CPU reference is bit-identical to `n`
+//! independent single-image runs, and batched predicted cycles are
+//! monotone in `n`, amortizing (<= n independent launches) and bounded
+//! below by the n/devices-scaled single-image cost at the fleet level.
+//!
+//! Seed and case count are fixed (CI runs this file directly) so the
+//! runtime stays bounded and failures replay deterministically.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use pasconv::conv::{conv2d_batched_cpu, conv2d_multi_cpu, BatchedConv, ConvProblem};
+use pasconv::fleet::{Fleet, FleetConfig, Policy};
+use pasconv::gpusim::{gtx_1080ti, titan_x_maxwell, GpuSpec};
+use pasconv::plans;
+use pasconv::util::prop::{check, Config};
+use pasconv::util::rng::Rng;
+
+/// Fixed seed + case count: bounded runtime, deterministic replays.
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0xF1EE7D }
+}
+
+/// Small problems (fast to tune once per process) that still cover both
+/// kernels.
+fn templates() -> Vec<ConvProblem> {
+    vec![
+        ConvProblem::multi(8, 14, 16, 3),
+        ConvProblem::single(32, 16, 3),
+        ConvProblem::multi(16, 7, 32, 3),
+    ]
+}
+
+const MODELS: [&str; 3] = ["alexnet", "resnet18", "vgg16"];
+
+#[derive(Clone, Debug)]
+enum Cmd {
+    Submit { template: usize, n: usize, model: Option<usize> },
+    Complete,
+    Drain,
+    Advance { dt_ms: u64 },
+}
+
+#[derive(Clone, Debug)]
+struct Case {
+    policy: Policy,
+    devices: usize,
+    hetero: bool,
+    queue_bound: usize,
+    cmds: Vec<Cmd>,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let policy = *rng.choose(&[Policy::RoundRobin, Policy::LeastLoaded, Policy::ModelAffinity]);
+    let devices = rng.range_usize(1, 4);
+    let hetero = rng.range_usize(0, 1) == 1;
+    let queue_bound = rng.range_usize(1, 4);
+    let n_cmds = rng.range_usize(10, 40);
+    let cmds = (0..n_cmds)
+        .map(|_| match rng.range_usize(0, 9) {
+            0..=5 => Cmd::Submit {
+                template: rng.range_usize(0, templates().len() - 1),
+                n: [1, 2, 4, 8][rng.range_usize(0, 3)],
+                model: match rng.range_usize(0, 3) {
+                    0 => None,
+                    i => Some(i - 1),
+                },
+            },
+            6 | 7 => Cmd::Complete,
+            8 => Cmd::Advance { dt_ms: rng.range_u64(1, 50) },
+            _ => Cmd::Drain,
+        })
+        .collect();
+    Case { policy, devices, hetero, queue_bound, cmds }
+}
+
+/// Shrink a failing case by truncating the command tail.
+fn shrink_case(c: &Case) -> Vec<Case> {
+    let mut out = vec![];
+    if c.cmds.len() > 1 {
+        out.push(Case { cmds: c.cmds[..c.cmds.len() / 2].to_vec(), ..c.clone() });
+        out.push(Case { cmds: c.cmds[..c.cmds.len() - 1].to_vec(), ..c.clone() });
+    }
+    out
+}
+
+fn specs_for(c: &Case) -> Vec<GpuSpec> {
+    (0..c.devices)
+        .map(|i| if c.hetero && i % 2 == 1 { titan_x_maxwell() } else { gtx_1080ti() })
+        .collect()
+}
+
+/// The reference model: an independent replay of the fleet's contract.
+struct RefModel {
+    now: f64,
+    tails: Vec<f64>,
+    queues: Vec<VecDeque<(u64, f64)>>, // (job id, finish)
+    bound: usize,
+    rr_cursor: usize,
+    pins: HashMap<usize, usize>, // model idx -> device
+    accepted: HashSet<u64>,
+    completed: HashSet<u64>,
+    next_job: u64,
+}
+
+impl RefModel {
+    fn new(devices: usize, bound: usize) -> RefModel {
+        RefModel {
+            now: 0.0,
+            tails: vec![0.0; devices],
+            queues: vec![VecDeque::new(); devices],
+            bound,
+            rr_cursor: 0,
+            pins: HashMap::new(),
+            accepted: HashSet::new(),
+            completed: HashSet::new(),
+            next_job: 1,
+        }
+    }
+
+    fn full(&self, d: usize) -> bool {
+        self.queues[d].len() >= self.bound
+    }
+
+    fn completion_if_placed(&self, d: usize, service: &[f64]) -> f64 {
+        self.tails[d].max(self.now) + service[d]
+    }
+
+    fn least_loaded(&self, service: &[f64]) -> Option<usize> {
+        (0..self.queues.len())
+            .filter(|&d| !self.full(d))
+            .min_by(|&a, &b| {
+                self.completion_if_placed(a, service)
+                    .partial_cmp(&self.completion_if_placed(b, service))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            })
+    }
+
+    /// The device the policy must choose, mirroring the scheduler.
+    /// Affinity pins are recorded by the caller on ACCEPTED placements
+    /// only — a rejected first sight must not pin.
+    fn expected_pick(&mut self, policy: Policy, model: Option<usize>, service: &[f64])
+        -> Option<usize> {
+        match policy {
+            Policy::RoundRobin => {
+                let n = self.queues.len();
+                let pick = (0..n).map(|i| (self.rr_cursor + i) % n).find(|&d| !self.full(d));
+                if let Some(d) = pick {
+                    self.rr_cursor = (d + 1) % n;
+                }
+                pick
+            }
+            Policy::LeastLoaded => self.least_loaded(service),
+            Policy::ModelAffinity => match model.and_then(|m| self.pins.get(&m).copied()) {
+                None => self.least_loaded(service),
+                Some(pin) if !self.full(pin) => Some(pin),
+                Some(_) => self.least_loaded(service),
+            },
+        }
+    }
+
+    /// Earliest head-of-queue finish (tie -> lowest device).
+    fn expected_completion(&self) -> Option<(usize, u64, f64)> {
+        (0..self.queues.len())
+            .filter_map(|d| self.queues[d].front().map(|&(id, f)| (d, id, f)))
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap().then(a.0.cmp(&b.0)))
+    }
+}
+
+/// Run one generated case: real fleet vs reference model, invariant
+/// checks after every command.
+fn run_case(case: &Case) -> Result<(), String> {
+    let specs = specs_for(case);
+    let mut fleet = Fleet::new(
+        specs.clone(),
+        FleetConfig { policy: case.policy, queue_bound: case.queue_bound },
+    );
+    let mut model = RefModel::new(case.devices, case.queue_bound);
+    let temps = templates();
+
+    let check_completion = |fleet: &mut Fleet, model: &mut RefModel| -> Result<(), String> {
+        let expect = model.expected_completion();
+        let got = fleet.next_completion();
+        match (expect, got) {
+            (None, None) => Ok(()),
+            (Some((d, id, f)), Some(c)) => {
+                if c.device != d || c.job != id || (c.finish - f).abs() > 0.0 {
+                    return Err(format!(
+                        "completion mismatch: got job {} dev {} finish {}, want {id}/{d}/{f}",
+                        c.job, c.device, c.finish
+                    ));
+                }
+                if !model.completed.insert(id) {
+                    return Err(format!("job {id} completed twice"));
+                }
+                if !model.accepted.contains(&id) {
+                    return Err(format!("job {id} completed but never accepted"));
+                }
+                model.queues[d].pop_front();
+                model.now = model.now.max(f);
+                Ok(())
+            }
+            (e, g) => Err(format!("completion disagreement: want {e:?}, fleet {:?}",
+                g.map(|c| (c.device, c.job, c.finish)))),
+        }
+    };
+
+    for (step, cmd) in case.cmds.iter().enumerate() {
+        match *cmd {
+            Cmd::Submit { template, n, model: m } => {
+                let conv = BatchedConv::new(temps[template], n);
+                let service: Vec<f64> =
+                    (0..case.devices).map(|d| fleet.predicted_service(&conv, d)).collect();
+                let tag = m.map(|i| MODELS[i]);
+                let expect = model.expected_pick(case.policy, m, &service);
+                let got = fleet.submit(conv, tag);
+                match (expect, got) {
+                    (None, None) => {
+                        if !(0..case.devices).all(|d| model.full(d)) {
+                            return Err(format!("step {step}: rejected with free capacity"));
+                        }
+                    }
+                    (Some(d), Some(p)) => {
+                        if p.device != d {
+                            return Err(format!(
+                                "step {step}: placed on {} but policy {:?} demands {d}",
+                                p.device, case.policy
+                            ));
+                        }
+                        // least-loaded minimality: no non-full shard was
+                        // strictly better than the chosen one
+                        if case.policy == Policy::LeastLoaded {
+                            let chosen = model.completion_if_placed(d, &service);
+                            for e in 0..case.devices {
+                                if !model.full(e)
+                                    && model.completion_if_placed(e, &service) < chosen - 1e-12
+                                {
+                                    return Err(format!(
+                                        "step {step}: least-loaded picked {d} over busier-free {e}"
+                                    ));
+                                }
+                            }
+                        }
+                        let start = model.tails[d].max(model.now);
+                        let finish = start + service[d];
+                        if (p.start - start).abs() > 0.0 || (p.finish - finish).abs() > 0.0 {
+                            return Err(format!(
+                                "step {step}: timing mismatch ({},{}) vs ({start},{finish})",
+                                p.start, p.finish
+                            ));
+                        }
+                        if p.job != model.next_job {
+                            return Err(format!("step {step}: job id {} != {}", p.job,
+                                model.next_job));
+                        }
+                        if case.policy == Policy::ModelAffinity {
+                            if let Some(mi) = m {
+                                model.pins.entry(mi).or_insert(d);
+                            }
+                        }
+                        model.next_job += 1;
+                        model.accepted.insert(p.job);
+                        model.tails[d] = finish;
+                        model.queues[d].push_back((p.job, finish));
+                    }
+                    (e, g) => {
+                        return Err(format!(
+                            "step {step}: admission disagreement: want {e:?}, fleet {:?}",
+                            g.map(|p| p.device)
+                        ))
+                    }
+                }
+            }
+            Cmd::Complete => check_completion(&mut fleet, &mut model)?,
+            Cmd::Drain => {
+                while model.expected_completion().is_some() {
+                    check_completion(&mut fleet, &mut model)?;
+                }
+                if fleet.next_completion().is_some() {
+                    return Err(format!("step {step}: fleet had work after drain"));
+                }
+                if fleet.in_flight() != 0 {
+                    return Err(format!("step {step}: in_flight != 0 after drain"));
+                }
+            }
+            Cmd::Advance { dt_ms } => {
+                let t = model.now + dt_ms as f64 / 1e3;
+                fleet.advance_to(t);
+                model.now = t;
+            }
+        }
+        // global invariants after every command
+        if (fleet.now() - model.now).abs() > 0.0 {
+            return Err(format!("step {step}: clock skew {} vs {}", fleet.now(), model.now));
+        }
+        for (d, dev) in fleet.devices().iter().enumerate() {
+            if dev.queue_len() > case.queue_bound {
+                return Err(format!("step {step}: device {d} over its queue bound"));
+            }
+            if dev.queue_len() != model.queues[d].len() {
+                return Err(format!(
+                    "step {step}: device {d} queue {} vs model {}",
+                    dev.queue_len(),
+                    model.queues[d].len()
+                ));
+            }
+        }
+    }
+
+    // epilogue: drain everything — every accepted job completes exactly once
+    while model.expected_completion().is_some() {
+        check_completion(&mut fleet, &mut model)?;
+    }
+    if fleet.in_flight() != 0 {
+        return Err("undrained work at end".into());
+    }
+    if model.completed != model.accepted {
+        return Err(format!(
+            "accepted {} != completed {}",
+            model.accepted.len(),
+            model.completed.len()
+        ));
+    }
+    let st = fleet.stats;
+    if st.accepted != model.accepted.len() as u64 || st.completed != model.completed.len() as u64 {
+        return Err(format!("stats disagree: {st:?}"));
+    }
+    if st.accepted + st.rejected != st.submitted {
+        return Err(format!("admission accounting broken: {st:?}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn stateful_fleet_matches_reference_model() {
+    check(&cfg(48), gen_case, |c| run_case(c), shrink_case);
+}
+
+// ---- differential batching properties ----
+
+#[test]
+fn batched_cpu_reference_bit_identical_to_single_runs() {
+    // bit-identity, not allclose: the batched reference IS n independent
+    // single-image convolutions
+    check(
+        &cfg(32),
+        |rng| {
+            let c = rng.range_usize(1, 6);
+            let w = rng.range_usize(4, 12);
+            let k = rng.range_usize(1, 3.min(w));
+            let m = rng.range_usize(1, 6);
+            let n = rng.range_usize(1, 6);
+            (ConvProblem { c, wy: w, wx: w, m, k }, n, rng.next_u64())
+        },
+        |&(p, n, seed)| {
+            let b = BatchedConv::new(p, n);
+            let mut rng = Rng::new(seed);
+            let images = rng.normal_vec(b.map_elems());
+            let filters = rng.normal_vec(p.filter_elems());
+            let batched = conv2d_batched_cpu(&b, &images, &filters);
+            if batched.len() != n * p.out_elems() {
+                return Err("wrong batched output size".into());
+            }
+            for i in 0..n {
+                let single = conv2d_multi_cpu(
+                    &p,
+                    &images[i * p.map_elems()..(i + 1) * p.map_elems()],
+                    &filters,
+                );
+                // f32 bit equality
+                let same = batched[i * p.out_elems()..(i + 1) * p.out_elems()]
+                    .iter()
+                    .zip(&single)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                if !same {
+                    return Err(format!("image {i} of {} differs from single run", b.label()));
+                }
+            }
+            Ok(())
+        },
+        |_| vec![],
+    );
+}
+
+#[test]
+fn batched_predicted_cycles_monotone_and_amortizing() {
+    let g = gtx_1080ti();
+    for p in templates() {
+        let single = plans::batched_cycles(&BatchedConv::single(p), &g);
+        let mut last = 0.0;
+        for n in 1..=8usize {
+            let c = plans::batched_cycles(&BatchedConv::new(p, n), &g);
+            assert!(c > last, "{}: cycles not monotone at n={n}", p.label());
+            assert!(
+                c <= n as f64 * single * (1.0 + 1e-9),
+                "{}: batch of {n} slower than {n} launches",
+                p.label()
+            );
+            last = c;
+        }
+    }
+}
+
+#[test]
+fn fleet_makespan_at_least_batch_over_devices_scaled_cost() {
+    // n identical single-image jobs over D homogeneous devices cannot
+    // drain faster than the n/D-scaled single-image cost
+    let g = gtx_1080ti();
+    let p = templates()[0];
+    for d in [1usize, 2, 4, 8] {
+        let mut fleet = Fleet::homogeneous(
+            d,
+            &g,
+            FleetConfig { policy: Policy::LeastLoaded, queue_bound: 64 },
+        );
+        let single = fleet.predicted_service(&BatchedConv::single(p), 0);
+        let n = 24;
+        for _ in 0..n {
+            assert!(fleet.submit(BatchedConv::single(p), None).is_some());
+        }
+        let makespan = fleet
+            .drain()
+            .iter()
+            .map(|c| c.finish)
+            .fold(0.0f64, f64::max);
+        let floor = (n as f64 / d as f64) * single;
+        assert!(
+            makespan >= floor * (1.0 - 1e-9),
+            "{d} devices: makespan {makespan} below the n/devices floor {floor}"
+        );
+        // and with perfect balance on identical jobs it IS the ceiling
+        let ceiling = (n as f64 / d as f64).ceil() * single;
+        assert!(makespan <= ceiling * (1.0 + 1e-9), "{d} devices: {makespan} > {ceiling}");
+    }
+}
+
+#[test]
+fn batched_jobs_beat_singles_end_to_end() {
+    // serving n images as one batch drains faster than n single jobs —
+    // the admission path's reason to coalesce
+    let g = gtx_1080ti();
+    let p = templates()[0];
+    let cfg = FleetConfig { policy: Policy::LeastLoaded, queue_bound: 64 };
+    let n = 8;
+    let mut singles = Fleet::homogeneous(2, &g, cfg);
+    for _ in 0..n {
+        singles.submit(BatchedConv::single(p), None).unwrap();
+    }
+    let t_singles = singles.drain().iter().map(|c| c.finish).fold(0.0f64, f64::max);
+    let mut batched = Fleet::homogeneous(2, &g, cfg);
+    batched.submit(BatchedConv::new(p, n / 2), None).unwrap();
+    batched.submit(BatchedConv::new(p, n / 2), None).unwrap();
+    let t_batched = batched.drain().iter().map(|c| c.finish).fold(0.0f64, f64::max);
+    assert!(
+        t_batched < t_singles,
+        "batched {t_batched} not faster than singles {t_singles}"
+    );
+}

@@ -5,7 +5,9 @@
 use std::sync::mpsc::Receiver;
 use std::time::Duration;
 
-use pasconv::conv::{conv2d_multi_cpu, max_abs_diff, ConvProblem};
+use pasconv::conv::{
+    conv2d_batched_cpu, conv2d_multi_cpu, max_abs_diff, BatchedConv, ConvProblem,
+};
 use pasconv::coordinator::{BatchConfig, Coordinator, Payload, Response};
 use pasconv::runtime::{default_artifact_dir, Runtime, Tensor};
 use pasconv::util::rng::Rng;
@@ -200,6 +202,146 @@ fn model_request_serves_graph_report() {
     let err = c.submit_wait(Payload::Model { model: "papernet-9000".to_string() }).unwrap_err();
     assert!(err.to_string().contains("not registered"), "{err}");
     c.shutdown();
+}
+
+#[test]
+fn compatible_convs_coalesce_into_one_micro_batch() {
+    // a burst of identical-problem conv requests inside a generous
+    // window must share ONE dispatch: same batch id, same plan advice
+    let Some(mut c) = coordinator_or_skip(BatchConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(50),
+    }) else {
+        return;
+    };
+    let mut rng = Rng::new(31);
+    let p = ConvProblem::multi(32, 14, 32, 3);
+    let rxs: Vec<_> = (0..4)
+        .map(|_| {
+            c.submit(Payload::Conv {
+                problem: p,
+                image: Tensor::randn(vec![32, 14, 14], &mut rng),
+                filters: Tensor::randn(vec![32, 32, 3, 3], &mut rng),
+            })
+        })
+        .collect();
+    let responses: Vec<Response> = rxs.into_iter().map(recv).collect();
+    assert!(responses.iter().all(|r| r.batch_size == 4), "batch sizes: {:?}",
+        responses.iter().map(|r| r.batch_size).collect::<Vec<_>>());
+    let id = responses[0].batch_id.expect("coalesced batch id");
+    assert!(responses.iter().all(|r| r.batch_id == Some(id)), "batch ids differ");
+    let advice = responses[0].plan.clone().expect("tuned advice");
+    assert!(advice.contains("tuned"), "{advice}");
+    assert!(
+        responses.iter().all(|r| r.plan.as_deref() == Some(advice.as_str())),
+        "plan advice differs within the batch"
+    );
+    let m = c.metrics();
+    assert_eq!(m.conv_batches_executed, 1, "one micro-batch dispatch");
+    assert!((m.mean_conv_batch_size() - 4.0).abs() < 1e-12);
+    c.shutdown();
+}
+
+#[test]
+fn incompatible_convs_do_not_share_a_batch() {
+    let Some(mut c) = coordinator_or_skip(BatchConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(5),
+    }) else {
+        return;
+    };
+    let mut rng = Rng::new(32);
+    let pa = ConvProblem::multi(32, 14, 32, 3);
+    let pb = ConvProblem::single(32, 32, 3);
+    let ra = c.submit(Payload::Conv {
+        problem: pa,
+        image: Tensor::randn(vec![32, 14, 14], &mut rng),
+        filters: Tensor::randn(vec![32, 32, 3, 3], &mut rng),
+    });
+    let rb = c.submit(Payload::Conv {
+        problem: pb,
+        image: Tensor::randn(vec![32, 32], &mut rng),
+        filters: Tensor::randn(vec![32, 3, 3], &mut rng),
+    });
+    let (ra, rb) = (recv(ra), recv(rb));
+    assert_eq!(ra.batch_size, 1);
+    assert_eq!(rb.batch_size, 1);
+    assert_ne!(ra.batch_id, rb.batch_id, "different shapes must not share a batch");
+    assert_ne!(ra.artifact, rb.artifact);
+    c.shutdown();
+}
+
+#[test]
+fn batched_conv_payload_matches_cpu_oracle() {
+    let Some(mut c) = coordinator_or_skip(BatchConfig::default()) else { return };
+    let mut rng = Rng::new(33);
+    let p = ConvProblem::multi(32, 14, 32, 3);
+    let b = BatchedConv::new(p, 3);
+    let images = Tensor::randn(vec![3, 32, 14, 14], &mut rng);
+    let filters = Tensor::randn(vec![32, 32, 3, 3], &mut rng);
+    let resp = c
+        .submit_wait(Payload::BatchedConv {
+            batch: b,
+            images: images.clone(),
+            filters: filters.clone(),
+        })
+        .unwrap();
+    assert_eq!(resp.artifact, "multi_c32_w14_m32_k3");
+    assert_eq!(resp.batch_size, 3, "explicit batch reports its image count");
+    assert!(resp.batch_id.is_some(), "explicit batches identify their dispatch");
+    assert_eq!(resp.output.shape, vec![3, 32, 12, 12]);
+    let want = conv2d_batched_cpu(&b, &images.data, &filters.data);
+    assert!(max_abs_diff(&resp.output.data, &want) < 0.1, "numeric mismatch");
+    // malformed batches answer with an error, not a hang
+    let err = c
+        .submit_wait(Payload::BatchedConv {
+            batch: BatchedConv::new(p, 2),
+            images: Tensor::zeros(vec![3, 32, 14, 14]), // n mismatch
+            filters,
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("batched image shape"), "{err}");
+    c.shutdown();
+}
+
+#[test]
+fn shutdown_under_load_resolves_every_receiver() {
+    // a mixed burst followed by immediate shutdown: every receiver must
+    // resolve (response or clean error) — nothing hangs, nothing leaks
+    let Some(mut c) = coordinator_or_skip(BatchConfig {
+        max_batch: 8,
+        max_wait: Duration::from_secs(5), // long window: shutdown must flush
+    }) else {
+        return;
+    };
+    let mut rng = Rng::new(34);
+    let p = ConvProblem::multi(64, 7, 64, 3);
+    let mut rxs = vec![];
+    for i in 0..24 {
+        rxs.push(match i % 3 {
+            0 => c.submit(Payload::Conv {
+                problem: p,
+                image: Tensor::randn(vec![64, 7, 7], &mut rng),
+                filters: Tensor::randn(vec![64, 64, 3, 3], &mut rng),
+            }),
+            1 => c.submit(Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut rng) }),
+            _ => c.submit(Payload::Model { model: "alexnet".to_string() }),
+        });
+    }
+    c.shutdown();
+    let mut ok = 0;
+    for rx in rxs {
+        // after shutdown every channel has a terminal answer already
+        match rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(_)) => {} // a clean error is an acceptable resolution
+            Err(e) => panic!("receiver unresolved after shutdown: {e}"),
+        }
+    }
+    assert_eq!(ok, 24, "pending work flushed, not dropped");
+    let m = c.metrics();
+    assert_eq!(m.responses, 24);
+    assert_eq!(m.errors, 0);
 }
 
 #[test]
