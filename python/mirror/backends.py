@@ -1,0 +1,339 @@
+"""Mirror of rust/src/backend (+ rust/src/baselines): the ConvBackend
+registry and the cross-backend dispatcher — cudnn proxy (implicit
+GEMM), DAC'17, tan128, Winograd, FFT and the CPU host model as plans
+under the shared simulator, ranked per problem with the paper-tuned
+plan as the floor the dispatcher never loses to."""
+
+import math
+
+import tuner
+from gpusim import (KernelPlan, Round, combined_efficiency,
+                    segment_efficiency, simulate_cycles)
+from plans import (BYTES_F32, ceil_div, stride_plan_with_choice,
+                   StrideFixedChoice, working_set_bytes, wy_prime)
+
+PAPER_TUNED = "paper-tuned"
+
+
+# ---- baselines/cudnn_proxy.rs ----
+
+TILE_SHAPES = [(128, 128, 8), (64, 128, 8), (64, 64, 8), (32, 64, 8)]
+
+
+def cudnn_plan_with_tiles(p, spec, tm, tn, tk):
+    assert p.valid()
+    m_g = p.m
+    n_g = p.oy() * p.ox()
+    k_g = p.c * p.k * p.k
+
+    m_tiles = ceil_div(m_g, tm)
+    n_tiles = ceil_div(n_g, tn)
+    k_steps = ceil_div(k_g, tk)
+    blocks = m_tiles * n_tiles
+
+    wave = max(min(blocks, 2 * spec.sm_count), 1)
+    a_readers = min(max(wave / m_tiles, 1.0), float(n_tiles))
+    b_readers = min(max(wave / n_tiles, 1.0), float(m_tiles))
+    a_bytes = (tm * tk * BYTES_F32) / a_readers
+    b_bytes = (tk * tn * BYTES_F32) / b_readers
+    b_seg_px = min(p.ox(), tn)
+    b_eff = segment_efficiency(b_seg_px * BYTES_F32)
+    if p.k > 1:
+        b_eff *= 0.85
+    a_eff = segment_efficiency(min(tk * BYTES_F32, 128))
+    eff = combined_efficiency([(a_bytes, a_eff), (b_bytes, b_eff)])
+
+    fma_per_step = float(tm * tn * tk)
+    sms_active = min(blocks, spec.sm_count)
+    rounds_per_sm = ceil_div(blocks * k_steps, sms_active)
+    smem = 2 * ((tm * tk + tk * tn) * BYTES_F32)
+
+    return KernelPlan(
+        name=f"cudnn-igemm[{tm}x{tn}x{tk}]",
+        runs=[(Round(a_bytes + b_bytes, 128, fma_per_step, eff), rounds_per_sm)],
+        sms_active=sms_active,
+        threads_per_sm=1024,
+        compute_efficiency=0.82,
+        output_bytes=float(p.out_elems() * BYTES_F32),
+        smem_bytes_per_sm=smem,
+        total_fma=float(p.fma_ops()),
+        launch_overhead_cycles=12_000.0,
+    )
+
+
+def cudnn_plan(p, spec):
+    return min((cudnn_plan_with_tiles(p, spec, tm, tn, tk)
+                for (tm, tn, tk) in TILE_SHAPES),
+               key=lambda plan: simulate_cycles(spec, plan))
+
+
+# ---- baselines/dac17.rs ----
+
+FIXED_STRIP_ROWS = 32
+DAC17_M_PRIME = 64
+
+
+def dac17_plan(p, spec):
+    assert p.valid()
+    y_strips = ceil_div(p.wy, FIXED_STRIP_ROWS)
+    x_strips = ceil_div(p.wx, FIXED_STRIP_ROWS)
+    m_prime = min(DAC17_M_PRIME, p.m)
+    groups = ceil_div(p.m, m_prime)
+    blocks = y_strips * x_strips * groups
+    sms_active = min(blocks, spec.sm_count)
+
+    s_bytes = p.k * p.k * BYTES_F32
+    segs = p.c
+    filter_bytes = float(s_bytes * m_prime)
+    strip_rows = min(FIXED_STRIP_ROWS, p.wy)
+    strip_cols = min(FIXED_STRIP_ROWS, p.wx)
+    map_bytes_per_seg = float(
+        (strip_rows + p.k - 1) * (strip_cols + p.k - 1) * BYTES_F32)
+    eff = combined_efficiency([
+        (filter_bytes, segment_efficiency(s_bytes)),
+        (map_bytes_per_seg, segment_efficiency(min(strip_cols * BYTES_F32, 128))),
+    ])
+    fma_per_round = float(m_prime * p.k * p.k * strip_rows * min(strip_cols, p.ox()))
+
+    rounds_per_sm = ceil_div(blocks * segs, sms_active)
+    smem = 2 * (s_bytes * m_prime
+                + (strip_rows + p.k - 1) * (strip_cols + p.k - 1) * BYTES_F32)
+
+    return KernelPlan(
+        name=f"dac17[strip={FIXED_STRIP_ROWS} M'={m_prime}]",
+        runs=[(Round(filter_bytes + map_bytes_per_seg, 128, fma_per_round, eff),
+               rounds_per_sm)],
+        sms_active=sms_active,
+        threads_per_sm=1024,
+        compute_efficiency=0.9,
+        output_bytes=float(p.out_elems() * BYTES_F32),
+        smem_bytes_per_sm=min(smem, spec.shared_mem_bytes),
+        total_fma=float(p.fma_ops()),
+        launch_overhead_cycles=4_000.0,
+    )
+
+
+# ---- baselines/tan128.rs ----
+
+TAN_S_BYTES = 128
+
+
+def tan128_plan(p, spec):
+    assert p.valid() and not p.is_single_channel()
+    out_px = p.oy() * p.ox()
+    map_px = ceil_div(out_px, 32) * 32
+    wx_prime = map_px if map_px <= 256 else 128
+    half = spec.shared_mem_bytes // 2
+
+    m_prime = min(p.m, 16)
+    while m_prime > 1 and working_set_bytes(TAN_S_BYTES, wx_prime, m_prime, p.k) > half:
+        m_prime //= 2
+
+    c = StrideFixedChoice(
+        TAN_S_BYTES, wx_prime, m_prime, wy_prime(TAN_S_BYTES, p.k),
+        working_set_bytes(TAN_S_BYTES, wx_prime, m_prime, p.k), False)
+    plan = stride_plan_with_choice(p, spec, c)
+    plan.name = f"tan128[M'={m_prime}]"
+    return plan
+
+
+# ---- baselines/winograd.rs ----
+
+WINO_M_PRIME = 32
+WINO_C_SEG = 8
+
+
+def winograd_plan(p, spec):
+    assert p.valid() and p.k == 3
+    tiles_y = ceil_div(p.oy(), 2)
+    tiles_x = ceil_div(p.ox(), 2)
+    tiles = tiles_y * tiles_x
+
+    m_prime = min(WINO_M_PRIME, p.m)
+    c_seg = min(WINO_C_SEG, p.c)
+    groups = ceil_div(p.m, m_prime)
+    tile_patch = 16 * 16
+    patches = ceil_div(tiles, tile_patch)
+    blocks = groups * patches
+    sms_active = min(blocks, spec.sm_count)
+    segs = ceil_div(p.c, c_seg)
+
+    tiles_per_block = min(tiles, tile_patch)
+    map_bytes = float(tiles_per_block * 5 * c_seg * BYTES_F32)
+    filter_bytes = (m_prime * c_seg * 16 * BYTES_F32) / min(patches, 16)
+    eff = combined_efficiency([
+        (map_bytes, segment_efficiency(128)),
+        (filter_bytes, segment_efficiency(64)),
+    ])
+
+    mults = float(tiles_per_block * m_prime * c_seg * 16)
+    in_transform = float(tiles_per_block * c_seg * 32)
+    out_transform = float(tiles_per_block * m_prime * 24) / segs
+    fma_per_round = mults + in_transform + out_transform
+
+    rounds_per_sm = ceil_div(blocks * segs, sms_active)
+    smem = 2 * ((min(tiles_per_block, 64) * 16 * c_seg + m_prime * c_seg * 16) * BYTES_F32)
+
+    return KernelPlan(
+        name=f"winograd[F(2x2,3x3) M'={m_prime}]",
+        runs=[(Round(map_bytes + filter_bytes, 128, fma_per_round, eff), rounds_per_sm)],
+        sms_active=sms_active,
+        threads_per_sm=1024,
+        compute_efficiency=0.85,
+        output_bytes=float(p.out_elems() * BYTES_F32),
+        smem_bytes_per_sm=min(smem, spec.shared_mem_bytes // 2),
+        total_fma=float(p.fma_ops()),
+        launch_overhead_cycles=4_000.0,
+    )
+
+
+# ---- baselines/fft_conv.rs ----
+
+def _fft2_flops(h, w):
+    row = 2.5 * w * math.log2(w)
+    col = 2.5 * h * math.log2(h)
+    return h * row + w * col
+
+
+def fft_plan(p, spec):
+    assert p.valid()
+    h, w = p.wy, p.wx
+    spec_elems = h * (w // 2 + 1)
+
+    fwd_maps = p.c * _fft2_flops(h, w)
+    fwd_filters = (p.m * p.c) * _fft2_flops(h, w)
+    pointwise = (p.m * p.c * spec_elems) * 8.0
+    inverse = p.m * _fft2_flops(h, w)
+    total_fma_cost = (fwd_maps + fwd_filters + pointwise + inverse) / 2.0
+
+    bytes_in = (p.map_elems() + p.filter_elems()) * BYTES_F32
+    spectra = (p.c + p.m * p.c + p.m) * spec_elems * 2 * BYTES_F32
+    total_bytes = float(bytes_in + 2 * spectra)
+
+    sms = spec.sm_count
+    rounds_n = 64
+    per_round_bytes = total_bytes / (sms * rounds_n)
+    per_round_fma = total_fma_cost / (sms * rounds_n)
+
+    return KernelPlan(
+        name="fft-conv",
+        runs=[(Round(per_round_bytes, 128, per_round_fma, 0.85), rounds_n)],
+        sms_active=spec.sm_count,
+        threads_per_sm=1024,
+        compute_efficiency=0.8,
+        output_bytes=float(p.out_elems() * BYTES_F32),
+        smem_bytes_per_sm=32 * 1024,
+        total_fma=float(p.fma_ops()),
+        launch_overhead_cycles=12_000.0,
+    )
+
+
+# ---- backend/impls.rs: cpu-reference host model ----
+
+HOST_FMA_FRACTION = 0.0625
+
+
+def cpu_plan(p, spec):
+    assert p.valid()
+    load_bytes = float((p.map_elems() + p.filter_elems()) * BYTES_F32)
+    return KernelPlan(
+        name="cpu-reference[host]",
+        runs=[(Round(load_bytes, 128, float(p.fma_ops())), 1)],
+        sms_active=1,
+        threads_per_sm=512,
+        compute_efficiency=HOST_FMA_FRACTION,
+        output_bytes=float(p.out_elems() * BYTES_F32),
+        smem_bytes_per_sm=0,
+        total_fma=float(p.fma_ops()),
+        launch_overhead_cycles=0.0,
+    )
+
+
+# ---- backend/dispatch.rs ----
+
+def _supports_valid(p):
+    return p.valid()
+
+
+def _supports_multi(p):
+    return p.valid() and not p.is_single_channel()
+
+
+def _supports_k3(p):
+    return p.valid() and p.k == 3
+
+
+def paper_plan(p, spec):
+    from plans import paper_plan_for
+    return paper_plan_for(p, spec)
+
+
+# (name, supports, plan) — same registry order as BACKEND_NAMES, the
+# paper-tuned floor handled separately in decide()
+NON_TUNED_BACKENDS = [
+    ("paper", _supports_valid, paper_plan),
+    ("cudnn-proxy", _supports_valid, cudnn_plan),
+    ("dac17", _supports_valid, dac17_plan),
+    ("tan128", _supports_multi, tan128_plan),
+    ("winograd", _supports_k3, winograd_plan),
+    ("fft", _supports_valid, fft_plan),
+    ("cpu-reference", _supports_valid, cpu_plan),
+]
+
+
+def backend_plan(name, p, spec):
+    if name == PAPER_TUNED:
+        return tuner.tuned_plan(p, spec)
+    for (n, _, planfn) in NON_TUNED_BACKENDS:
+        if n == name:
+            return planfn(p, spec)
+    raise KeyError(name)
+
+
+def _decide_n(p, n, spec):
+    """The one ranking routine (mirrors Dispatcher::decide_n): rank on
+    batch-n schedules; batched(1) is the identity, so n=1 IS the
+    single-image ranking."""
+    tuned_cycles = simulate_cycles(spec, tuner.tuned_plan(p, spec).batched(n))
+    best = (PAPER_TUNED, tuned_cycles)
+    for (name, supports, planfn) in NON_TUNED_BACKENDS:
+        if not supports(p):
+            continue
+        plan = planfn(p, spec)
+        if not tuner.is_legal(spec, plan):
+            continue
+        cycles = simulate_cycles(spec, plan.batched(n))
+        if cycles < best[1]:
+            best = (name, cycles)
+    return (best[0], best[1], tuned_cycles)
+
+
+_DECIDE_CACHE = {}
+
+
+def decide(p, spec):
+    """(backend, cycles, tuned_cycles): fastest legal backend, with the
+    paper-tuned floor it never loses to (mirrors Dispatcher::decide)."""
+    key = (p, spec.name)
+    if key not in _DECIDE_CACHE:
+        _DECIDE_CACHE[key] = _decide_n(p, 1, spec)
+    return _DECIDE_CACHE[key]
+
+
+_BATCHED_CACHE = {}
+
+
+def decide_batched(p, n, spec):
+    """Mirrors Dispatcher::decide_batched."""
+    if n == 1:
+        return decide(p, spec)
+    key = (p, n, spec.name)
+    if key not in _BATCHED_CACHE:
+        _BATCHED_CACHE[key] = _decide_n(p, n, spec)
+    return _BATCHED_CACHE[key]
+
+
+def dispatched_batched_seconds(p, n, spec):
+    """Mirror of backend::batched_dispatch_seconds — the fleet's
+    per-shard job pricing."""
+    return spec.cycles_to_secs(decide_batched(p, n, spec)[1])

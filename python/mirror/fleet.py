@@ -1,9 +1,11 @@
-"""Mirror of rust/src/fleet: virtual-time multi-GPU scheduler."""
+"""Mirror of rust/src/fleet: virtual-time multi-GPU scheduler.  Job
+pricing mirrors backend::batched_dispatch_seconds — each shard's spec
+dispatches across backends for itself."""
 
 from collections import deque
 from dataclasses import dataclass
 
-import tuner
+import backends
 
 ROUND_ROBIN = "round-robin"
 LEAST_LOADED = "least-loaded"
@@ -70,7 +72,8 @@ class Fleet:
         spec = self.devices[device].spec
         key = (problem, n, spec.name)
         if key not in self.cost_cache:
-            self.cost_cache[key] = tuner.batched_seconds(problem, n, spec)
+            self.cost_cache[key] = backends.dispatched_batched_seconds(
+                problem, n, spec)
         return self.cost_cache[key]
 
     def _least_loaded(self, cands):

@@ -1,0 +1,53 @@
+"""Mirror of rust/src/conv/suites.rs: the paper's workload suites."""
+
+from plans import ConvProblem
+
+PAPER_KS = [1, 3, 5]
+
+FIG4_POINTS = [(28, 512), (56, 256), (112, 128), (224, 64), (512, 32), (1024, 32)]
+
+FIG5_POINTS = [(7, 512), (14, 256), (28, 128), (56, 128), (112, 64), (224, 64), (512, 64)]
+
+
+def fig4_suite():
+    return [ConvProblem.single(w, m, k) for k in PAPER_KS for (w, m) in FIG4_POINTS]
+
+
+def fig5_suite():
+    return [ConvProblem.multi(c, w, c, k) for k in PAPER_KS for (w, c) in FIG5_POINTS]
+
+
+def alexnet():
+    return [ConvProblem.multi(96, 27, 256, 5), ConvProblem.multi(256, 13, 384, 3),
+            ConvProblem.multi(384, 13, 384, 3), ConvProblem.multi(384, 13, 256, 3)]
+
+
+def vgg16():
+    return [ConvProblem.multi(3, 224, 64, 3), ConvProblem.multi(64, 224, 64, 3),
+            ConvProblem.multi(64, 112, 128, 3), ConvProblem.multi(128, 112, 128, 3),
+            ConvProblem.multi(128, 56, 256, 3), ConvProblem.multi(256, 56, 256, 3),
+            ConvProblem.multi(256, 28, 512, 3), ConvProblem.multi(512, 28, 512, 3),
+            ConvProblem.multi(512, 14, 512, 3)]
+
+
+def resnet18():
+    return [ConvProblem.multi(64, 56, 64, 3), ConvProblem.multi(64, 28, 128, 3),
+            ConvProblem.multi(64, 28, 128, 1), ConvProblem.multi(128, 28, 128, 3),
+            ConvProblem.multi(128, 14, 256, 3), ConvProblem.multi(128, 14, 256, 1),
+            ConvProblem.multi(256, 14, 256, 3), ConvProblem.multi(256, 7, 512, 3),
+            ConvProblem.multi(256, 7, 512, 1), ConvProblem.multi(512, 7, 512, 3)]
+
+
+def googlenet_inception3a():
+    return [ConvProblem.multi(192, 28, 64, 1),
+            ConvProblem.multi(192, 28, 96, 1), ConvProblem.multi(96, 28, 128, 3),
+            ConvProblem.multi(192, 28, 16, 1), ConvProblem.multi(16, 28, 32, 5),
+            ConvProblem.multi(192, 28, 32, 1)]
+
+
+def all_cnn_layers():
+    out = []
+    for p in alexnet() + vgg16() + resnet18() + googlenet_inception3a():
+        if p not in out:
+            out.append(p)
+    return out

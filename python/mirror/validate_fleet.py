@@ -10,6 +10,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent))
 
+import backends
 import tuner
 from fleet import Fleet, LEAST_LOADED, MODEL_AFFINITY, ROUND_ROBIN
 from gpusim import gtx_1080ti, titan_x_maxwell
@@ -129,9 +130,11 @@ def main():
               f"{d} devices: makespan {makespan:.6f} within [n/D floor, ceil]")
 
     # ---- e2e_fleet replay ----
+    # capacity probe priced like the fleet prices: dispatched per spec
     n = 512
     probe = offered_load(256, 1.0, 0xF1EE7)
-    mean_service = sum(tuner.batched_seconds(p, b, g) for (_, p, b, _) in probe) / len(probe)
+    mean_service = sum(backends.dispatched_batched_seconds(p, b, g)
+                       for (_, p, b, _) in probe) / len(probe)
     rate = 6.0 / mean_service
     load = offered_load(n, rate, 0xF1EE7)
     print(f"\noffered rate {rate:.0f} req/s (6x one 1080Ti), {n} requests")

@@ -4,8 +4,10 @@
 //! the EXPERIMENTS.md §8 table.
 //!
 //! The fleet runs in virtual time (service seconds from the
-//! `plans`/`gpusim` batched cost model), so every number here is exact
-//! and deterministic: no wall clock, no artifacts, no flakiness.
+//! cross-backend dispatched cost model,
+//! `backend::batched_dispatch_seconds`, per device spec), so every
+//! number here is exact and deterministic: no wall clock, no
+//! artifacts, no flakiness.
 //!
 //! Run: `cargo bench --bench e2e_fleet`
 //! CI check mode (asserts only, summary table): append `-- --check`.

@@ -1,0 +1,179 @@
+//! Unified backend layer: every way this stack can execute a
+//! convolution — the paper's kernels (tuned and §3 closed-form), the
+//! CPU reference, and all four comparison baselines — behind ONE
+//! `ConvBackend` trait, plus the `dispatch` module that picks the
+//! fastest legal backend per problem.
+//!
+//! Motivation (cuConv, arXiv 2103.16234; kubecl's runtime-per-backend
+//! split): no single convolution algorithm dominates across CNN layer
+//! shapes.  Implicit GEMM wins some large-map layers, Winograd wins
+//! big K=3 layers, the paper's direct kernels win small maps and K=1 —
+//! cuDNN's own advantage is *per-problem algorithm choice*.  Before
+//! this layer, the baselines in `rust/src/baselines/` were bench-only
+//! dead ends that could never be selected; now each is a first-class
+//! backend with an honest `supports()` envelope, and the dispatcher
+//! (`backend::dispatch`) can route any suite problem to whichever
+//! algorithm the simulator prices fastest, never losing to the
+//! paper-kernel-only path (the paper-tuned backend is always in the
+//! candidate set).
+//!
+//! Each backend answers four questions:
+//!  * `supports` — can this algorithm run this problem at all?  (e.g.
+//!    Winograd F(2x2,3x3) is K=3-only, [16]'s 128-B fetch discipline is
+//!    only defined for the multi-channel stride-fixed schedule);
+//!  * `plan` — the `KernelPlan` (per-SM round schedule) it would
+//!    execute, timed like every other plan by `gpusim::simulate`;
+//!  * `cycles`/`seconds` + batched variants — its simulated cost, the
+//!    quantity the dispatcher, graph executor and fleet pricing use;
+//!  * `execute_reference` — eq.(1) computed in the backend's own
+//!    traversal order (im2col gather, strip-mined, 2x2-tiled, ...),
+//!    bit-identical to `conv::cpu::conv2d_multi_cpu` by construction:
+//!    every output element accumulates its terms in the same
+//!    (c asc, i asc, j asc) order into one f64.  The differential
+//!    tests (`rust/tests/backend_difftests.rs`) pin that identity, so
+//!    a backend's index arithmetic (halos, tiles, segments) is checked
+//!    against the oracle even though its *timing* model is analytic.
+//!    (Transform-domain numerics — Winograd/FFT — live in
+//!    `python/compile/kernels/`; the Rust side's contract is the
+//!    direct-conv semantics every algorithm must reproduce.)
+
+pub mod dispatch;
+mod impls;
+pub mod reference;
+
+pub use dispatch::{
+    batched_dispatch_seconds, dispatch_advice, dispatch_batched_plan, dispatch_plan, dispatched,
+    Decision, Dispatcher,
+};
+pub use impls::{
+    CpuReference, CudnnProxy, Dac17, FftConv, PaperClosedForm, PaperTuned, Tan128, Winograd,
+    BACKEND_NAMES,
+};
+
+use crate::conv::{BatchedConv, ConvProblem};
+use crate::gpusim::{simulate, GpuSpec, KernelPlan};
+
+/// One convolution algorithm as an executable backend.  Object-safe:
+/// the dispatcher holds `Box<dyn ConvBackend>` and iterates the
+/// registry per problem.
+pub trait ConvBackend: Send + Sync {
+    /// Stable identifier — the tag `PlanCache` dispatch entries and
+    /// `Response.plan` advice carry (must be one of `BACKEND_NAMES`).
+    fn name(&self) -> &'static str;
+
+    /// Honest support envelope: `plan` may be called only on problems
+    /// this returns `true` for (`plan` panics otherwise, like the
+    /// underlying builders always have).
+    fn supports(&self, p: &ConvProblem) -> bool;
+
+    /// The per-SM execution schedule this backend would run.
+    fn plan(&self, p: &ConvProblem, spec: &GpuSpec) -> KernelPlan;
+
+    /// The batch-`n` schedule: one launch, warm pipeline
+    /// (`KernelPlan::batched` — same contract for every backend).
+    fn batched_plan(&self, b: &BatchedConv, spec: &GpuSpec) -> KernelPlan {
+        assert!(b.valid(), "invalid batched problem");
+        self.plan(&b.problem, spec).batched(b.n)
+    }
+
+    /// Simulated execution cycles on `spec` — the dispatcher's ranking
+    /// quantity.
+    fn cycles(&self, p: &ConvProblem, spec: &GpuSpec) -> f64 {
+        simulate(spec, &self.plan(p, spec)).cycles
+    }
+
+    /// `cycles` in seconds.
+    fn seconds(&self, p: &ConvProblem, spec: &GpuSpec) -> f64 {
+        spec.cycles_to_secs(self.cycles(p, spec))
+    }
+
+    /// Simulated cycles of the batch-`n` schedule.
+    fn batched_cycles(&self, b: &BatchedConv, spec: &GpuSpec) -> f64 {
+        simulate(spec, &self.batched_plan(b, spec)).cycles
+    }
+
+    /// `batched_cycles` in seconds — what fleet queues accumulate.
+    fn batched_seconds(&self, b: &BatchedConv, spec: &GpuSpec) -> f64 {
+        spec.cycles_to_secs(self.batched_cycles(b, spec))
+    }
+
+    /// eq.(1) in this backend's traversal order — bit-identical to
+    /// `conv::cpu::conv2d_multi_cpu` on every supported problem (the
+    /// differential-test contract; see the module docs).
+    fn execute_reference(&self, p: &ConvProblem, image: &[f32], filters: &[f32]) -> Vec<f32>;
+
+    /// Batched reference semantics: definitionally `n` independent
+    /// single-image runs (the same contract as `conv2d_batched_cpu`).
+    fn execute_reference_batched(
+        &self,
+        b: &BatchedConv,
+        images: &[f32],
+        filters: &[f32],
+    ) -> Vec<f32> {
+        assert!(b.valid(), "invalid batched problem");
+        assert_eq!(images.len(), b.map_elems(), "batched image size");
+        let per_in = b.problem.map_elems();
+        let per_out = b.problem.out_elems();
+        let mut out = Vec::with_capacity(b.n * per_out);
+        for i in 0..b.n {
+            out.extend(self.execute_reference(
+                &b.problem,
+                &images[i * per_in..(i + 1) * per_in],
+                filters,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::gtx_1080ti;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn default_batched_plan_matches_kernel_plan_batched() {
+        let g = gtx_1080ti();
+        let b = BatchedConv::new(ConvProblem::multi(16, 14, 16, 3), 4);
+        let backend = PaperClosedForm;
+        let via_trait = backend.batched_plan(&b, &g);
+        let direct = backend.plan(&b.problem, &g).batched(4);
+        assert_eq!(via_trait.name, direct.name);
+        assert_eq!(via_trait.rounds.len(), direct.rounds.len());
+        let diff = (backend.batched_cycles(&b, &g) - simulate(&g, &direct).cycles).abs();
+        assert!(diff < 1e-9);
+    }
+
+    #[test]
+    fn default_batched_reference_loops_single_images() {
+        let p = ConvProblem::multi(3, 8, 4, 3);
+        let b = BatchedConv::new(p, 3);
+        let mut rng = Rng::new(11);
+        let images = rng.normal_vec(b.map_elems());
+        let filters = rng.normal_vec(p.filter_elems());
+        let backend = CpuReference;
+        let batched = backend.execute_reference_batched(&b, &images, &filters);
+        for i in 0..b.n {
+            let single = backend.execute_reference(
+                &p,
+                &images[i * p.map_elems()..(i + 1) * p.map_elems()],
+                &filters,
+            );
+            assert_eq!(
+                &batched[i * p.out_elems()..(i + 1) * p.out_elems()],
+                &single[..],
+                "image {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn seconds_are_cycles_over_clock() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(8, 14, 16, 3);
+        let backend = PaperClosedForm;
+        let c = backend.cycles(&p, &g);
+        assert!((backend.seconds(&p, &g) - g.cycles_to_secs(c)).abs() < 1e-18);
+    }
+}

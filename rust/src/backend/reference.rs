@@ -1,0 +1,368 @@
+//! Reference semantics in each backend's own traversal order.
+//!
+//! Every function computes eq.(1) — valid cross-correlation, stride 1 —
+//! over the same layouts as `conv::cpu::conv2d_multi_cpu` (image
+//! (C, Wy, Wx), filters (M, C, K, K), output (M, Oy, Ox)), and is
+//! **bit-identical** to it by construction: each output element owns
+//! one f64 accumulator that receives its C*K*K products one term at a
+//! time in ascending (c, i, j) order, cast to f32 exactly once at the
+//! end.  Summation order within an element is the only thing f64
+//! rounding is sensitive to here, so the *outer* traversal (output
+//! tiles, filter groups, im2col gathers, channel planes) is free to
+//! follow the backend's real data movement — which is exactly what the
+//! differential tests want exercised: the halo / tile / segment index
+//! arithmetic of each algorithm against the plain-loop oracle.
+
+use crate::conv::ConvProblem;
+
+/// Ceiling division (shared helper, local to keep the module lean).
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+fn check_sizes(p: &ConvProblem, image: &[f32], filters: &[f32]) {
+    assert!(p.valid(), "invalid problem");
+    assert_eq!(image.len(), p.map_elems(), "image size");
+    assert_eq!(filters.len(), p.filter_elems(), "filter size");
+}
+
+/// Implicit-GEMM traversal (the cuDNN proxy): C[M, Oy*Ox] =
+/// A[M, C*K*K] x B[C*K*K, Oy*Ox] over (TM, TN, TK) tiles, the B tile
+/// gathered im2col-style on the fly.  The k index enumerates (c, i, j)
+/// in ascending flattened order, so each output element's accumulation
+/// chain matches the direct loop exactly.
+pub fn im2col_gemm(
+    p: &ConvProblem,
+    image: &[f32],
+    filters: &[f32],
+    tm: usize,
+    tn: usize,
+    tk: usize,
+) -> Vec<f32> {
+    check_sizes(p, image, filters);
+    assert!(tm >= 1 && tn >= 1 && tk >= 1);
+    let (oy, ox, k, kk) = (p.oy(), p.ox(), p.k, p.k * p.k);
+    let (n_g, k_g) = (oy * ox, p.c * kk);
+    let mut out = vec![0f32; p.m * n_g];
+    for m0 in (0..p.m).step_by(tm) {
+        let m1 = (m0 + tm).min(p.m);
+        for n0 in (0..n_g).step_by(tn) {
+            let n1 = (n0 + tn).min(n_g);
+            let mut acc = vec![0f64; (m1 - m0) * (n1 - n0)];
+            for k0 in (0..k_g).step_by(tk) {
+                let k1 = (k0 + tk).min(k_g);
+                // one k-step: gather the B tile element-wise and rank-1
+                // update the accumulator tile
+                for kg in k0..k1 {
+                    let (ch, r) = (kg / kk, kg % kk);
+                    let (i, j) = (r / k, r % k);
+                    for n in n0..n1 {
+                        let (y, x) = (n / ox, n % ox);
+                        let b = image[ch * p.wy * p.wx + (y + i) * p.wx + (x + j)] as f64;
+                        for fm in m0..m1 {
+                            acc[(fm - m0) * (n1 - n0) + (n - n0)] +=
+                                filters[fm * k_g + kg] as f64 * b;
+                        }
+                    }
+                }
+            }
+            for fm in m0..m1 {
+                for n in n0..n1 {
+                    out[fm * n_g + n] = acc[(fm - m0) * (n1 - n0) + (n - n0)] as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Stride-fixed traversal (the paper's multi-channel kernel, and [16]):
+/// filters in groups of `m_prime`, output pixels in linear strips of
+/// `wx_prime`, the flattened (c, i, j) filter walked in segments of
+/// `seg_elems` elements (= S bytes / 4).  Segments partition the
+/// ascending filter index, so per-element chains stay in oracle order.
+pub fn strip_mined(
+    p: &ConvProblem,
+    image: &[f32],
+    filters: &[f32],
+    wx_prime: usize,
+    m_prime: usize,
+    seg_elems: usize,
+) -> Vec<f32> {
+    check_sizes(p, image, filters);
+    assert!(wx_prime >= 1 && m_prime >= 1 && seg_elems >= 1);
+    let (oy, ox, k, kk) = (p.oy(), p.ox(), p.k, p.k * p.k);
+    let (n_g, k_g) = (oy * ox, p.c * kk);
+    let mut out = vec![0f32; p.m * n_g];
+    for g0 in (0..p.m).step_by(m_prime) {
+        let g1 = (g0 + m_prime).min(p.m);
+        for s0 in (0..n_g).step_by(wx_prime) {
+            let s1 = (s0 + wx_prime).min(n_g);
+            let mut acc = vec![0f64; (g1 - g0) * (s1 - s0)];
+            for seg0 in (0..k_g).step_by(seg_elems) {
+                let seg1 = (seg0 + seg_elems).min(k_g);
+                for fm in g0..g1 {
+                    for px in s0..s1 {
+                        let (y, x) = (px / ox, px % ox);
+                        let a = &mut acc[(fm - g0) * (s1 - s0) + (px - s0)];
+                        for t in seg0..seg1 {
+                            let (ch, r) = (t / kk, t % kk);
+                            let (i, j) = (r / k, r % k);
+                            *a += image[ch * p.wy * p.wx + (y + i) * p.wx + (x + j)] as f64
+                                * filters[fm * k_g + t] as f64;
+                        }
+                    }
+                }
+            }
+            for fm in g0..g1 {
+                for px in s0..s1 {
+                    out[fm * n_g + px] = acc[(fm - g0) * (s1 - s0) + (px - s0)] as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Fixed 2-D output strips, one channel at a time ([1]'s fixed per-SM
+/// assignment with natural whole-filter segments: the channel loop is
+/// outermost, each channel applying its full K x K filter).
+pub fn strip_tiled_2d(
+    p: &ConvProblem,
+    image: &[f32],
+    filters: &[f32],
+    strip_rows: usize,
+    strip_cols: usize,
+    m_prime: usize,
+) -> Vec<f32> {
+    check_sizes(p, image, filters);
+    assert!(strip_rows >= 1 && strip_cols >= 1 && m_prime >= 1);
+    let (oy, ox, k, kk) = (p.oy(), p.ox(), p.k, p.k * p.k);
+    let k_g = p.c * kk;
+    let mut out = vec![0f32; p.m * oy * ox];
+    for g0 in (0..p.m).step_by(m_prime) {
+        let g1 = (g0 + m_prime).min(p.m);
+        for ty in (0..oy).step_by(strip_rows) {
+            let ty1 = (ty + strip_rows).min(oy);
+            for tx in (0..ox).step_by(strip_cols) {
+                let tx1 = (tx + strip_cols).min(ox);
+                let cols = tx1 - tx;
+                let mut acc = vec![0f64; (g1 - g0) * (ty1 - ty) * cols];
+                for ch in 0..p.c {
+                    let ibase = ch * p.wy * p.wx;
+                    for fm in g0..g1 {
+                        let fbase = fm * k_g + ch * kk;
+                        for y in ty..ty1 {
+                            for x in tx..tx1 {
+                                let ai = ((fm - g0) * (ty1 - ty) + (y - ty)) * cols + (x - tx);
+                                let a = &mut acc[ai];
+                                for i in 0..k {
+                                    for j in 0..k {
+                                        *a += image[ibase + (y + i) * p.wx + (x + j)] as f64
+                                            * filters[fbase + i * k + j] as f64;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                for fm in g0..g1 {
+                    for y in ty..ty1 {
+                        for x in tx..tx1 {
+                            let ai = ((fm - g0) * (ty1 - ty) + (y - ty)) * cols + (x - tx);
+                            out[fm * oy * ox + y * ox + x] = acc[ai] as f32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Output tiled `tile x tile` with the halo'd input patch gathered into
+/// a local buffer first (the Winograd F(2x2,3x3) data movement: every
+/// 2x2 output tile reads its overlapping (tile+K-1)^2 input patch).
+/// The arithmetic stays direct — the transform-domain numerics live in
+/// `python/compile/kernels/winograd.py` — so the patch-gather indexing
+/// is exercised while the semantics stay bit-exact.
+pub fn output_tiled(p: &ConvProblem, image: &[f32], filters: &[f32], tile: usize) -> Vec<f32> {
+    check_sizes(p, image, filters);
+    assert!(tile >= 1);
+    let (oy, ox, k, kk) = (p.oy(), p.ox(), p.k, p.k * p.k);
+    let k_g = p.c * kk;
+    let mut out = vec![0f32; p.m * oy * ox];
+    let patch_dim = tile + k - 1;
+    let mut patch = vec![0f32; p.c * patch_dim * patch_dim];
+    for ty in (0..oy).step_by(tile) {
+        let th = tile.min(oy - ty);
+        for tx in (0..ox).step_by(tile) {
+            let tw = tile.min(ox - tx);
+            // gather the (th+K-1) x (tw+K-1) patch for every channel
+            let (ph, pw) = (th + k - 1, tw + k - 1);
+            for ch in 0..p.c {
+                for py in 0..ph {
+                    for px in 0..pw {
+                        patch[ch * patch_dim * patch_dim + py * patch_dim + px] =
+                            image[ch * p.wy * p.wx + (ty + py) * p.wx + (tx + px)];
+                    }
+                }
+            }
+            for fm in 0..p.m {
+                for y in 0..th {
+                    for x in 0..tw {
+                        let mut acc = 0f64;
+                        for ch in 0..p.c {
+                            let pbase = ch * patch_dim * patch_dim;
+                            let fbase = fm * k_g + ch * kk;
+                            for i in 0..k {
+                                for j in 0..k {
+                                    acc += patch[pbase + (y + i) * patch_dim + (x + j)] as f64
+                                        * filters[fbase + i * k + j] as f64;
+                                }
+                            }
+                        }
+                        out[fm * oy * ox + (ty + y) * ox + (tx + x)] = acc as f32;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Channel-plane accumulation (the FFT schedule: one frequency-domain
+/// multiply-accumulate per channel, summed across channels into the
+/// output spectrum).  Here: per-channel spatial correlations accumulated
+/// plane by plane into per-output f64 accumulators.
+pub fn channel_planes(p: &ConvProblem, image: &[f32], filters: &[f32]) -> Vec<f32> {
+    check_sizes(p, image, filters);
+    let (oy, ox, k, kk) = (p.oy(), p.ox(), p.k, p.k * p.k);
+    let k_g = p.c * kk;
+    let mut acc = vec![0f64; p.m * oy * ox];
+    for ch in 0..p.c {
+        for fm in 0..p.m {
+            for y in 0..oy {
+                for x in 0..ox {
+                    let a = &mut acc[fm * oy * ox + y * ox + x];
+                    for i in 0..k {
+                        for j in 0..k {
+                            *a += image[ch * p.wy * p.wx + (y + i) * p.wx + (x + j)] as f64
+                                * filters[fm * k_g + ch * kk + i * k + j] as f64;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    acc.into_iter().map(|v| v as f32).collect()
+}
+
+/// Row-piece traversal (the paper's single-channel §3.1 kernels, and
+/// the generic piece-wise prefetch shape): output rows in `pieces`
+/// equal chunks (the P division), filters in chunks of `m_chunk` (the
+/// Q division / per-SM filter assignment).  Works for any C — the
+/// per-element accumulation is always full-depth (c, i, j).
+pub fn row_pieces(
+    p: &ConvProblem,
+    image: &[f32],
+    filters: &[f32],
+    pieces: usize,
+    m_chunk: usize,
+) -> Vec<f32> {
+    check_sizes(p, image, filters);
+    assert!(pieces >= 1 && m_chunk >= 1);
+    let (oy, ox, k, kk) = (p.oy(), p.ox(), p.k, p.k * p.k);
+    let k_g = p.c * kk;
+    let piece_rows = ceil_div(oy, pieces).max(1);
+    let mut out = vec![0f32; p.m * oy * ox];
+    for r0 in (0..oy).step_by(piece_rows) {
+        let r1 = (r0 + piece_rows).min(oy);
+        for g0 in (0..p.m).step_by(m_chunk) {
+            let g1 = (g0 + m_chunk).min(p.m);
+            for fm in g0..g1 {
+                for y in r0..r1 {
+                    for x in 0..ox {
+                        let mut acc = 0f64;
+                        for ch in 0..p.c {
+                            let ibase = ch * p.wy * p.wx;
+                            let fbase = fm * k_g + ch * kk;
+                            for i in 0..k {
+                                for j in 0..k {
+                                    acc += image[ibase + (y + i) * p.wx + (x + j)] as f64
+                                        * filters[fbase + i * k + j] as f64;
+                                }
+                            }
+                        }
+                        out[fm * oy * ox + y * ox + x] = acc as f32;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv2d_multi_cpu;
+    use crate::util::rng::Rng;
+
+    fn bit_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn cases() -> Vec<ConvProblem> {
+        vec![
+            ConvProblem::single(9, 3, 3),
+            ConvProblem::single(16, 5, 1),
+            ConvProblem::multi(3, 11, 4, 3),
+            ConvProblem::multi(5, 7, 6, 5),
+            ConvProblem::multi(4, 8, 3, 1),
+        ]
+    }
+
+    #[test]
+    fn every_traversal_bit_identical_to_oracle() {
+        let mut rng = Rng::new(0xBAC0);
+        for p in cases() {
+            let image = rng.normal_vec(p.map_elems());
+            let filters = rng.normal_vec(p.filter_elems());
+            let want = conv2d_multi_cpu(&p, &image, &filters);
+            // odd tile/strip/segment sizes on purpose: partial tiles and
+            // ragged segments are where indexing bugs live
+            for (name, got) in [
+                ("im2col", im2col_gemm(&p, &image, &filters, 3, 5, 4)),
+                ("strip_mined", strip_mined(&p, &image, &filters, 7, 2, 5)),
+                ("strip_2d", strip_tiled_2d(&p, &image, &filters, 3, 4, 2)),
+                ("tiled", output_tiled(&p, &image, &filters, 2)),
+                ("planes", channel_planes(&p, &image, &filters)),
+                ("rows", row_pieces(&p, &image, &filters, 3, 2)),
+            ] {
+                assert!(bit_eq(&got, &want), "{name} differs on {}", p.label());
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_block_sizes_cover_whole_problem() {
+        let p = ConvProblem::multi(2, 6, 3, 3);
+        let mut rng = Rng::new(7);
+        let image = rng.normal_vec(p.map_elems());
+        let filters = rng.normal_vec(p.filter_elems());
+        let want = conv2d_multi_cpu(&p, &image, &filters);
+        // blocks larger than the problem degrade to one full pass
+        assert!(bit_eq(&im2col_gemm(&p, &image, &filters, 999, 999, 999), &want));
+        assert!(bit_eq(&strip_mined(&p, &image, &filters, 999, 999, 999), &want));
+        assert!(bit_eq(&output_tiled(&p, &image, &filters, 64), &want));
+        assert!(bit_eq(&row_pieces(&p, &image, &filters, 1, 999), &want));
+    }
+
+    #[test]
+    #[should_panic(expected = "image size")]
+    fn size_mismatch_panics() {
+        let p = ConvProblem::single(4, 1, 1);
+        im2col_gemm(&p, &[0.0; 3], &[1.0], 8, 8, 8);
+    }
+}

@@ -1,10 +1,12 @@
 //! Routing: map a request to the artifact that serves it, and attach the
-//! plan advice — the tuner's memoized pick when the table was warmed
-//! (`warm_plans`, run once at coordinator startup so serving pays zero
-//! per-request search), or the paper's §3 closed-form note.  Registered
-//! model graphs route the same way: `warm_plans` pre-tunes every conv
-//! layer of every registered model, so `Payload::Model` requests execute
-//! entirely from the plan cache.
+//! plan advice — the backend dispatcher's memoized pick when the table
+//! was warmed (`warm_plans`, run once at coordinator startup so serving
+//! pays zero per-request search), or the paper's §3 closed-form note.
+//! Registered model graphs route the same way: `warm_plans`
+//! pre-dispatches every conv layer of every registered model (which
+//! tunes the paper floor as a side effect), so `Payload::Model`
+//! requests execute entirely from the decision cache, and the chosen
+//! backend returns on the wire in `Response.plan`.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -16,7 +18,6 @@ use crate::conv::{BatchedConv, ConvProblem};
 use crate::gpusim::GpuSpec;
 use crate::graph;
 use crate::runtime::{Artifact, ArtifactKind};
-use crate::tuner;
 
 /// Static routing table built from the manifest at startup.
 #[derive(Debug, Default)]
@@ -145,21 +146,23 @@ impl Router {
         v
     }
 
-    /// Tune every plannable conv problem up front (fills the process-wide
-    /// `tuner` cache) and keep the advice strings; returns how many
-    /// problems were tuned.  After this, serving never searches: a conv
+    /// Pre-dispatch every plannable conv problem up front — each
+    /// problem is ranked across all legal backends (which tunes the
+    /// paper-kernel floor as a side effect, filling both process-wide
+    /// caches) — and keep the advice strings; returns how many problems
+    /// were warmed.  After this, serving never searches: a conv
     /// request's advice and every layer of a model execution are cache
-    /// lookups.
+    /// lookups, and the advice names the backend the dispatcher chose.
     pub fn warm_plans(&mut self, spec: &GpuSpec) -> usize {
         let problems = self.plannable_problems();
         for p in &problems {
-            let advice = tuner::advice(p, spec);
+            let advice = crate::backend::dispatch_advice(p, spec);
             self.tuned_advice.insert(*p, advice);
         }
         problems.len()
     }
 
-    /// Tuned-plan advice for a routed problem (None before `warm_plans`).
+    /// Dispatch advice for a routed problem (None before `warm_plans`).
     pub fn tuned_advice(&self, p: &ConvProblem) -> Option<&str> {
         self.tuned_advice.get(p).map(|s| s.as_str())
     }

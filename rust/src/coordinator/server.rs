@@ -97,9 +97,10 @@ impl Coordinator {
             router.register_model(name).expect("built-in model");
         }
 
-        // tune every routed conv problem and every registered model
-        // layer once, before traffic: the queue thread then serves tuned
-        // plans — and model executions — with zero per-request search
+        // dispatch every routed conv problem and every registered model
+        // layer across all backends once, before traffic: the queue
+        // thread then serves decided plans — and model executions —
+        // with zero per-request search
         let tuned = router.warm_plans(gpu);
         metrics.lock().unwrap().plans_tuned = tuned as u64;
 
@@ -450,9 +451,10 @@ fn exec_loop(
                 }
             }
             Work::Model(req, respond, graph) => {
-                // every layer was pre-tuned by warm_plans, so this is a
-                // pure walk over the plan cache + simulator
-                let report = crate::graph::execute(&graph, &gpu, crate::plans::plan_for);
+                // every layer was pre-dispatched by warm_plans, so this
+                // is a pure walk over the decision cache + simulator —
+                // each layer runs whatever backend won its dispatch
+                let report = crate::graph::execute(&graph, &gpu, crate::backend::dispatch_plan);
                 let artifact = format!("model:{}", graph.name);
                 let latency = req.submitted.elapsed().as_secs_f64();
                 metrics.lock().unwrap().record_response(&artifact, latency);

@@ -1,12 +1,15 @@
 //! L4 fleet — multi-GPU serving: N simulated devices (heterogeneous
 //! `GpuSpec`s allowed), bounded per-device work queues, a batch-aware
 //! admission path, and pluggable placement (`policy`): round-robin,
-//! least-loaded-by-predicted-completion (costed through `plans`/`gpusim`
-//! per device spec), and model-affinity (a graph's pre-tuned plans stay
-//! warm on their shard).
+//! least-loaded-by-predicted-completion (costed through each shard's
+//! own backend dispatcher per device spec — a Pascal and a Maxwell
+//! shard can pick different algorithms for the same job), and
+//! model-affinity (a graph's pre-dispatched decisions stay warm on
+//! their shard).
 //!
 //! The fleet runs in *virtual time*: job service times come from the
-//! batched cost model (`plans::batched_seconds`), placements fix
+//! dispatched batched cost model
+//! (`backend::batched_dispatch_seconds`), placements fix
 //! start/finish deterministically (FIFO, no preemption), and
 //! `next_completion`/`drain` advance an event-driven clock.  That keeps
 //! the `e2e_fleet` scaling bench and the stateful proptests

@@ -1,11 +1,13 @@
 //! The fleet scheduler: N simulated devices behind one batch-aware
 //! admission path, driven in virtual time.
 //!
-//! `submit` prices the job on every shard (`plans::batched_seconds`
-//! under each device's spec — heterogeneous fleets price differently
-//! per shard), asks the placement policy for a device, and either
-//! enqueues (fixing the job's start/finish deterministically, FIFO) or
-//! rejects when the policy finds every bounded queue full.
+//! `submit` prices the job on every shard through that shard's own
+//! dispatcher (`backend::batched_dispatch_seconds` under each device's
+//! spec — heterogeneous fleets price differently per shard AND can
+//! pick different algorithms per GPU generation for the same job),
+//! asks the placement policy for a device, and either enqueues (fixing
+//! the job's start/finish deterministically, FIFO) or rejects when the
+//! policy finds every bounded queue full.
 //! `next_completion` pops the globally earliest finishing job and
 //! advances the virtual clock; `drain` runs the fleet dry.
 //!
@@ -15,9 +17,9 @@
 
 use std::collections::HashMap;
 
+use crate::backend;
 use crate::conv::{BatchedConv, ConvProblem};
 use crate::gpusim::GpuSpec;
-use crate::plans;
 
 use super::device::{Completion, Device};
 use super::policy::{least_loaded_pick, round_robin_pick, PlacementCandidate, Policy};
@@ -125,9 +127,9 @@ impl Fleet {
         self.devices.iter().map(|d| d.queue_len()).sum()
     }
 
-    /// Predicted service seconds of a batch on device `device` —
-    /// `plans::batched_seconds` under that device's spec, memoized per
-    /// (problem, n, spec).
+    /// Predicted service seconds of a batch on device `device` — the
+    /// cross-backend dispatched cost (`backend::batched_dispatch_seconds`)
+    /// under that device's spec, memoized per (problem, n, spec).
     pub fn predicted_service(&mut self, conv: &BatchedConv, device: usize) -> f64 {
         service_for(&mut self.cost_cache, &self.devices[device].spec, conv)
     }
@@ -243,7 +245,9 @@ impl Fleet {
     }
 }
 
-/// Predicted seconds for `conv` on `spec`, through the memo table.
+/// Predicted seconds for `conv` on `spec`, through the memo table:
+/// each spec dispatches for itself, so a Pascal and a Maxwell shard can
+/// run different algorithms for the same job.
 fn service_for(
     cache: &mut HashMap<(ConvProblem, usize, &'static str), f64>,
     spec: &GpuSpec,
@@ -251,7 +255,7 @@ fn service_for(
 ) -> f64 {
     *cache
         .entry((conv.problem, conv.n, spec.name))
-        .or_insert_with(|| plans::batched_seconds(conv, spec))
+        .or_insert_with(|| backend::batched_dispatch_seconds(conv, spec))
 }
 
 #[cfg(test)]

@@ -3,9 +3,9 @@
 //! `e2e_fleet` bench (and mirrored line-for-line by
 //! `python/mirror/validate_fleet.py`), so the three can never drift.
 
+use crate::backend;
 use crate::conv::{suites, BatchedConv, ConvProblem};
 use crate::gpusim::GpuSpec;
-use crate::plans;
 use crate::util::rng::Rng;
 
 /// One offered request: arrival time, batch, model tag (affinity key).
@@ -47,10 +47,14 @@ pub fn offered_load(n: usize, rate: f64, seed: u64, batch: Option<usize>) -> Vec
 
 /// Mean predicted service seconds of `load` on one `spec` — the
 /// capacity yardstick offered rates are calibrated against
-/// (`rate = overload / mean_service_secs(probe, spec)`).
+/// (`rate = overload / mean_service_secs(probe, spec)`).  Priced like
+/// the fleet prices: through the cross-backend dispatcher.
 pub fn mean_service_secs(load: &[Arrival], spec: &GpuSpec) -> f64 {
     assert!(!load.is_empty(), "empty probe");
-    load.iter().map(|a| plans::batched_seconds(&a.conv, spec)).sum::<f64>() / load.len() as f64
+    load.iter()
+        .map(|a| backend::batched_dispatch_seconds(&a.conv, spec))
+        .sum::<f64>()
+        / load.len() as f64
 }
 
 #[cfg(test)]

@@ -1,8 +1,12 @@
 //! Whole-graph execution: a topological scheduler that resolves conv
-//! nodes through the plan layer (`plans::plan_for` = tuned,
-//! `plans::paper_plan_for` = the §3 closed forms), times every node
+//! nodes through an injected `Planner` — `backend::dispatch_plan` for
+//! per-layer cross-backend algorithm choice (the serving default: one
+//! model can run Winograd on its big K=3 layers and the paper kernels
+//! on its small maps), `plans::plan_for` for the tuned-paper-only path,
+//! `plans::paper_plan_for` for the §3 closed forms — times every node
 //! under `gpusim`, and reports end-to-end model latency next to the
-//! arena memory plan.
+//! arena memory plan.  Conv `NodeReport.detail` carries the chosen
+//! plan's name, so `model --report` shows the per-layer backend picks.
 //!
 //! Glue operators (pool / pad / add / concat) have no FMA story — they
 //! are DRAM-bound streams, charged launch overhead + one cold latency +
@@ -21,7 +25,9 @@ use super::build::Graph;
 use super::memory::{plan_arena, ArenaPlan};
 use super::node::{NodeId, Op, Shape};
 
-/// How a conv node resolves to a kernel plan.
+/// How a conv node resolves to a kernel plan.  `backend::dispatch_plan`
+/// (cross-backend), `plans::plan_for` (tuned paper kernel) and
+/// `plans::paper_plan_for` (§3 closed forms) all fit.
 pub type Planner = fn(&ConvProblem, &GpuSpec) -> KernelPlan;
 
 /// Fraction of peak DRAM bandwidth the memory-bound glue kernels
@@ -328,6 +334,29 @@ mod tests {
         assert!(t.contains("conv1_1") && t.contains("pool5"));
         let s = r.summary();
         assert!(s.contains("vgg16") && s.contains("MiB"), "{s}");
+    }
+
+    #[test]
+    fn dispatched_graph_never_loses_and_names_backends() {
+        // the dispatcher as a Planner: per-layer algorithm choice
+        // inside one model, gated to never lose to tuned-paper-only
+        let g = model_graph("vgg16").unwrap();
+        let spec = gtx_1080ti();
+        let tuned = execute(&g, &spec, plans::plan_for);
+        let dispatched = execute(&g, &spec, crate::backend::dispatch_plan);
+        assert!(
+            dispatched.total_seconds <= tuned.total_seconds * (1.0 + 1e-9),
+            "dispatch lost: {} > {}",
+            dispatched.total_seconds,
+            tuned.total_seconds
+        );
+        assert!((dispatched.glue_seconds - tuned.glue_seconds).abs() < 1e-12);
+        // the VGG body's big K=3 layers leave the paper kernels — the
+        // per-layer backend choice is visible in the report details
+        assert!(
+            dispatched.nodes.iter().any(|n| n.kind == "conv" && !n.detail.starts_with("ours-")),
+            "no per-layer backend choice visible"
+        );
     }
 
     #[test]

@@ -6,13 +6,15 @@
 //! conv / pad / pool / add / concat) built and shape-checked by
 //! `build`, memory-planned by `memory` (liveness + greedy arena
 //! offsets, the Li-et-al. inter-layer optimization), and executed by
-//! `exec` (topological schedule; conv nodes resolve through
-//! `plans::plan_for`, i.e. the tuner, and run under `gpusim`).
+//! `exec` (topological schedule; conv nodes resolve through an
+//! injected `Planner` — `backend::dispatch_plan` for per-layer
+//! cross-backend algorithm choice, `plans::plan_for`/`paper_plan_for`
+//! for the paper-kernel-only paths — and run under `gpusim`).
 //!
 //! Consumers: the `model` CLI subcommand and `e2e_models` bench report
 //! end-to-end latency + peak arena memory per model; the coordinator
-//! registers models with its `Router` so every layer is pre-tuned at
-//! startup and `Payload::Model` requests serve the cached plans.
+//! registers models with its `Router` so every layer is pre-dispatched
+//! at startup and `Payload::Model` requests serve the cached decisions.
 
 pub mod build;
 pub mod exec;

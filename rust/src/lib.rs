@@ -11,7 +11,11 @@
 //! * `analytic`  — the paper's closed-form model (N_FMA, V_s, P/Q, stride-fixed)
 //! * `plans`     — per-SM execution schedules for the paper's two kernels
 //! * `tuner`     — plan-space search: enumerate → score → simulate → cache
-//! * `baselines` — cuDNN proxy (implicit GEMM), DAC'17 [1], Tan [16]
+//! * `baselines` — cuDNN proxy (implicit GEMM), DAC'17 [1], Tan [16],
+//!   Winograd [8], FFT [13] — the comparison plans
+//! * `backend`   — ONE `ConvBackend` trait over the paper kernels, the
+//!   CPU reference and every baseline, plus cross-backend autodispatch
+//!   (fastest legal algorithm per problem, never losing to paper-tuned)
 //! * `graph`     — whole-network DAG executor: builder + shape inference,
 //!   liveness-based arena memory planning, topological scheduling
 //!   through `plans`/`tuner` and `gpusim`
@@ -22,6 +26,7 @@
 //!   queues, batch-aware admission, pluggable placement policies
 //! * `util`      — offline stand-ins (rng/stats/bench/cli/prop/json)
 pub mod analytic;
+pub mod backend;
 pub mod baselines;
 pub mod conv;
 pub mod coordinator;

@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   list                          show the artifact registry
 //!   simulate --c --w --m --k      run one problem through the analytic
-//!                                 model + simulator vs all baselines
+//!                                 model + simulator vs all baselines,
+//!                                 with the dispatcher's pick called out
 //!   serve [--requests N]          demo serve loop: synthetic CNN traffic
 //!                                 through the coordinator, metrics out
 //!   sweep [--suite fig4|fig5]     print the paper's figure sweeps
@@ -17,8 +18,12 @@
 //!                                 under a placement policy, virtual-time
 //!                                 throughput/latency/utilization out
 //!
-//! `--no-tune` pins simulate/sweep/model to the paper's closed-form §3
-//! picks.
+//! `simulate` and `model` route through the cross-backend dispatcher by
+//! default (per-problem / per-layer algorithm choice, never losing to
+//! the tuned paper kernels); `--no-dispatch` pins them to the tuned
+//! paper kernels only, `--no-tune` to the paper's closed-form §3 picks.
+//! `sweep` always uses the paper kernels — it regenerates the paper's
+//! figures, where "ours" must mean the paper's algorithm.
 
 use std::path::Path;
 use std::time::Duration;
@@ -52,13 +57,15 @@ fn main() {
                 "usage: pasconv <list|simulate|serve|sweep|tune|model|fleet> [flags]\n\
                  \n  list                              artifact registry\
                  \n  simulate --c C --w W --m M --k K  one problem, all kernels, simulated\
+                 \n           [--no-dispatch|--no-tune] (default: cross-backend dispatch)\
                  \n  serve [--requests N]              demo serving loop with batching\
                  \n  sweep [--suite fig4|fig5] [--gpu 1080ti|titanx] [--no-tune]\
                  \n  tune [--suite fig4|fig5|cnn|all] [--gpu 1080ti|titanx]\
                  \n       [--save FILE] [--load FILE]  plan-space search vs paper picks\
-                 \n  model [--model NAME|all] [--gpu ...] [--no-tune] [--report]\
+                 \n  model [--model NAME|all] [--gpu ...] [--no-dispatch|--no-tune] [--report]\
                  \n                                    whole-model graph execution:\
-                 \n                                    latency + arena memory plan\
+                 \n                                    latency + arena memory plan +\
+                 \n                                    per-layer backend choices\
                  \n  fleet [--devices N] [--policy rr|least|affinity] [--requests N]\
                  \n        [--batch B] [--queue-bound Q] [--overload X] [--hetero]\
                  \n                                    virtual-time multi-GPU fleet run\n"
@@ -69,9 +76,23 @@ fn main() {
     std::process::exit(rc);
 }
 
-/// The planner the figure commands use: tuned by default, the paper's
+/// The planner `simulate`/`model` use: the cross-backend dispatcher by
+/// default, the tuned paper kernel under `--no-dispatch`, the paper's
 /// closed-form pick under `--no-tune`.
 fn planner(args: &Args) -> fn(&ConvProblem, &GpuSpec) -> KernelPlan {
+    if args.has("no-tune") {
+        paper_plan_for
+    } else if args.has("no-dispatch") {
+        plan_for
+    } else {
+        pasconv::backend::dispatch_plan
+    }
+}
+
+/// The planner the figure sweeps use: paper kernels only ("ours" in a
+/// figure regeneration must mean the paper's algorithm, not whichever
+/// baseline the dispatcher picked).
+fn paper_only_planner(args: &Args) -> fn(&ConvProblem, &GpuSpec) -> KernelPlan {
     if args.has("no-tune") {
         paper_plan_for
     } else {
@@ -128,6 +149,9 @@ fn cmd_simulate(args: &Args) -> i32 {
     println!("paper advice: {}", plan_advice(&p, &g));
     if !args.has("no-tune") {
         println!("tuner advice: {}", tuner::advice(&p, &g));
+        if !args.has("no-dispatch") {
+            println!("dispatch:     {}", pasconv::backend::dispatch_advice(&p, &g));
+        }
     }
     let plans =
         vec![plan_fn(&p, &g), cudnn_proxy::plan(&p, &g), dac17::plan(&p, &g), tan128::plan(&p, &g)];
@@ -187,7 +211,7 @@ fn cmd_serve(args: &Args) -> i32 {
 
 fn cmd_sweep(args: &Args) -> i32 {
     let g = gpu_from(args);
-    let plan_fn = planner(args);
+    let plan_fn = paper_only_planner(args);
     let suite = match args.get_or("suite", "fig4") {
         "fig5" => fig5_suite(),
         _ => fig4_suite(),
@@ -232,6 +256,7 @@ fn cmd_model(args: &Args) -> i32 {
         "arena (MiB)",
         "naive (MiB)",
         "saved",
+        "backends",
     ]);
     for name in names {
         let graph = match pasconv::graph::model_graph(name) {
@@ -247,6 +272,17 @@ fn cmd_model(args: &Args) -> i32 {
             r.table().print();
             println!("{}\n", r.summary());
         }
+        // the distinct kernel families the planner chose (with the
+        // dispatcher this is the per-layer backend mix, e.g.
+        // "ours-multi+winograd"; paper-only planners show one family)
+        let mut families: Vec<String> = r
+            .nodes
+            .iter()
+            .filter(|n| n.kind == "conv")
+            .map(|n| n.detail.split([' ', '[']).next().unwrap_or(&n.detail).to_string())
+            .collect();
+        families.sort();
+        families.dedup();
         t.row(&[
             r.model.clone(),
             r.nodes.len().to_string(),
@@ -256,6 +292,7 @@ fn cmd_model(args: &Args) -> i32 {
             pasconv::util::bench::fmt_mib(r.arena.peak_bytes),
             pasconv::util::bench::fmt_mib(r.arena.naive_bytes),
             format!("{:.0}%", 100.0 * r.arena.saved_fraction()),
+            families.join("+"),
         ]);
     }
     t.print();
@@ -340,7 +377,7 @@ fn cmd_tune(args: &Args) -> i32 {
         match PlanCache::load(Path::new(path)) {
             Ok(cache) => {
                 let n = tuner::preload(cache);
-                println!("preloaded {n} cached plans from {path}");
+                println!("preloaded {n} cache entries (plans + dispatch) from {path}");
             }
             Err(e) => {
                 eprintln!("error: {e:#}");
@@ -372,13 +409,25 @@ fn cmd_tune(args: &Args) -> i32 {
         "\nimproved on {}/{} workloads; geomean speedup {:.3}x, max {:.2}x",
         report.improved, report.total, report.geomean_speedup, report.max_speedup
     );
+    // cross-backend dispatch over the same suite, so `--save` persists
+    // a complete v2 cache (plan + dispatch entries) and a coordinator
+    // loading it starts with zero search of either kind
+    let non_paper = suite
+        .iter()
+        .filter(|p| pasconv::backend::dispatched(p, &g).backend != "paper-tuned")
+        .count();
+    println!("dispatch: {non_paper}/{} workloads leave the paper kernels", suite.len());
     if let Some(path) = args.get("save") {
         let snap = tuner::snapshot();
         if let Err(e) = snap.save(Path::new(path)) {
             eprintln!("error: {e:#}");
             return 1;
         }
-        println!("saved {} cache entries to {path}", snap.len());
+        println!(
+            "saved {} plan + {} dispatch entries to {path}",
+            snap.len(),
+            snap.dispatch_len()
+        );
     }
     0
 }

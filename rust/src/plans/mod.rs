@@ -1,16 +1,23 @@
 //! Per-SM execution schedules for the paper's two kernels, consumed by
-//! `gpusim::simulate`.  `plan_for` is the router the coordinator and the
-//! benches use: it serves the *tuned* plan (`tuner::tuned_plan`, memoized
-//! per process).  `paper_plan_for` is the paper's verbatim §3 pick —
-//! single-channel through the §3.1 P/Q procedure, multi-channel through
-//! the §3.2 stride-fixed block method — kept as the `--no-tune` path and
-//! as the regression baseline the tuner never loses to.
+//! `gpusim::simulate`.
+//!
+//! The six historical entry points (`plan_for`, `paper_plan_for`, and
+//! the batched variants) are kept for back-compat but are now thin
+//! shims over the backend layer: `plan_for` is the paper-tuned backend
+//! (`tuner::tuned_plan`, memoized per process), `paper_plan_for` the
+//! verbatim §3 closed-form backend — single-channel through the §3.1
+//! P/Q procedure, multi-channel through the §3.2 stride-fixed block
+//! method — kept as the `--no-tune` path and as the regression baseline
+//! the tuner never loses to.  Cross-backend selection lives one layer
+//! up in `backend::dispatch`; nothing here ever picks a non-paper
+//! algorithm.
 
 pub mod single_channel;
 pub mod stride_fixed;
 
+use crate::backend::{ConvBackend, PaperClosedForm, PaperTuned};
 use crate::conv::{BatchedConv, ConvProblem};
-use crate::gpusim::{simulate, GpuSpec, KernelPlan};
+use crate::gpusim::{GpuSpec, KernelPlan};
 
 /// Launch + drain overhead our kernels pay (~2.7 µs at 1.48 GHz).  One
 /// definition shared by both plan builders and the tuner's scorer — the
@@ -20,46 +27,39 @@ pub const LAUNCH_OVERHEAD_CYCLES: f64 = 4_000.0;
 /// Fraction of peak FMA issue our kernels' inner loops sustain.
 pub const COMPUTE_EFFICIENCY: f64 = 0.9;
 
-/// The serving plan for a problem: the tuner's pick (>= the paper's plan
-/// under the simulator, memoized so repeated calls are cache hits).
+/// The paper kernel's serving plan: the tuner's pick (>= the paper's
+/// plan under the simulator, memoized so repeated calls are cache hits).
 pub fn plan_for(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
-    crate::tuner::tuned_plan(p, spec)
+    PaperTuned.plan(p, spec)
 }
 
 /// The paper's kernel for a problem (dispatch on C, as in §3) — no
 /// search, exactly the closed-form procedures.
 pub fn paper_plan_for(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
-    if p.is_single_channel() {
-        single_channel::plan(p, spec)
-    } else {
-        stride_fixed::plan(p, spec)
-    }
+    PaperClosedForm.plan(p, spec)
 }
 
 /// The serving plan for a batch: the tuned per-image plan repeated over
 /// the batch (`KernelPlan::batched`) — one launch, warm pipeline.
 pub fn batched_plan_for(b: &BatchedConv, spec: &GpuSpec) -> KernelPlan {
-    assert!(b.valid(), "invalid batched problem");
-    plan_for(&b.problem, spec).batched(b.n)
+    PaperTuned.batched_plan(b, spec)
 }
 
 /// `batched_plan_for` with the paper's closed-form §3 pick (`--no-tune`).
 pub fn batched_paper_plan_for(b: &BatchedConv, spec: &GpuSpec) -> KernelPlan {
-    assert!(b.valid(), "invalid batched problem");
-    paper_plan_for(&b.problem, spec).batched(b.n)
+    PaperClosedForm.batched_plan(b, spec)
 }
 
-/// Predicted execution cycles of a batch under the tuned plan — the
-/// cost estimate the fleet's least-loaded placement and admission use.
-/// Memoized upstream (`tuner`), so steady-state serving pays one
-/// simulate per distinct `(problem, n, spec)`.
+/// Predicted execution cycles of a batch under the tuned paper plan —
+/// the paper-kernel-only cost floor (fleet pricing now goes through
+/// `backend::batched_dispatch_seconds`, which never exceeds this).
 pub fn batched_cycles(b: &BatchedConv, spec: &GpuSpec) -> f64 {
-    simulate(spec, &batched_plan_for(b, spec)).cycles
+    PaperTuned.batched_cycles(b, spec)
 }
 
-/// `batched_cycles` in seconds on `spec` — what fleet queues accumulate.
+/// `batched_cycles` in seconds on `spec`.
 pub fn batched_seconds(b: &BatchedConv, spec: &GpuSpec) -> f64 {
-    spec.cycles_to_secs(batched_cycles(b, spec))
+    PaperTuned.batched_seconds(b, spec)
 }
 
 #[cfg(test)]

@@ -2,6 +2,12 @@
 //! a line-based serialization (same `key=value` grammar as the artifact
 //! manifest — this repo's vendor set has no serde).  The coordinator
 //! loads a cache at startup so serving pays zero per-request search.
+//!
+//! Format v2 adds `kind=dispatch` entries — the backend layer's
+//! cross-backend decisions (`backend=<tag> cycles=... tuned_cycles=...`)
+//! ride in the same file, keyed the same way.  Parsing is versioned by
+//! the `kind` field, so every v1 file (plan entries only) parses
+//! unchanged.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -9,6 +15,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::analytic::SingleMethod;
+use crate::backend::{self, Decision, BACKEND_NAMES};
 use crate::conv::ConvProblem;
 use crate::gpusim::{gtx_1080ti, tesla_k40, titan_x_maxwell, GpuSpec};
 
@@ -117,10 +124,39 @@ fn validate_entry(idx: usize, p: &ConvProblem, gpu: &str, t: &Tuned) -> Result<(
     Ok(())
 }
 
-/// Serializable map of tuning outcomes keyed by `(problem, GPU name)`.
+/// Validation for v2 `kind=dispatch` entries: the named backend must
+/// exist, support the problem, and not claim to beat its own floor's
+/// definition (cycles <= tuned_cycles — the dispatcher's never-lose
+/// invariant; an edited or stale entry violating it would silently
+/// serve a losing backend).
+fn validate_dispatch(idx: usize, p: &ConvProblem, d: &Decision) -> Result<()> {
+    let line = idx + 1;
+    if !p.valid() {
+        bail!("line {line}: invalid problem {p:?}");
+    }
+    if !BACKEND_NAMES.contains(&d.backend.as_str()) {
+        bail!("line {line}: unknown backend {:?}", d.backend);
+    }
+    let registry = backend::dispatch::registry();
+    let b = registry.backend(&d.backend).expect("name checked against BACKEND_NAMES");
+    if !b.supports(p) {
+        bail!("line {line}: backend {} does not support {}", d.backend, p.label());
+    }
+    if !(d.cycles.is_finite() && d.cycles > 0.0 && d.tuned_cycles.is_finite()) {
+        bail!("line {line}: non-finite dispatch cycle counts");
+    }
+    if d.cycles > d.tuned_cycles * (1.0 + 1e-9) {
+        bail!("line {line}: dispatched cycles exceed the paper-tuned floor — stale entry");
+    }
+    Ok(())
+}
+
+/// Serializable map of tuning outcomes keyed by `(problem, GPU name)`,
+/// plus (v2) the backend layer's dispatch decisions under the same key.
 #[derive(Clone, Debug, Default)]
 pub struct PlanCache {
     entries: HashMap<(ConvProblem, String), Tuned>,
+    dispatch: HashMap<(ConvProblem, String), Decision>,
 }
 
 impl PlanCache {
@@ -128,12 +164,19 @@ impl PlanCache {
         PlanCache::default()
     }
 
+    /// Plan (tuning) entries only — dispatch entries are counted by
+    /// `dispatch_len` (callers that report "N cached plans" keep their
+    /// historical meaning).
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    pub fn dispatch_len(&self) -> usize {
+        self.dispatch.len()
+    }
+
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.entries.is_empty() && self.dispatch.is_empty()
     }
 
     pub fn get(&self, p: &ConvProblem, spec: &GpuSpec) -> Option<Tuned> {
@@ -144,19 +187,32 @@ impl PlanCache {
         self.entries.insert((p, spec.name.to_string()), t);
     }
 
+    pub fn get_dispatch(&self, p: &ConvProblem, spec: &GpuSpec) -> Option<Decision> {
+        self.dispatch.get(&(*p, spec.name.to_string())).cloned()
+    }
+
+    pub fn insert_dispatch(&mut self, p: ConvProblem, spec: &GpuSpec, d: Decision) {
+        self.dispatch.insert((p, spec.name.to_string()), d);
+    }
+
     /// Absorb every entry of `other` (overwriting duplicates), whatever
-    /// GPU name it carries; returns how many entries were absorbed.
+    /// GPU name it carries; returns how many entries were absorbed
+    /// (plan + dispatch).
     pub fn merge(&mut self, other: PlanCache) -> usize {
-        let n = other.entries.len();
+        let n = other.entries.len() + other.dispatch.len();
         self.entries.extend(other.entries);
+        self.dispatch.extend(other.dispatch);
         n
     }
 
-    /// One line per entry, deterministically ordered (diff-stable files).
+    /// One line per entry, deterministically ordered (diff-stable
+    /// files): plan entries first, then dispatch entries.
     pub fn to_lines(&self) -> String {
         let mut keys: Vec<&(ConvProblem, String)> = self.entries.keys().collect();
         keys.sort_by_key(|(p, g)| (g.clone(), p.c, p.wy, p.wx, p.m, p.k));
-        let mut out = String::from("# pasconv plan cache: problem + gpu -> tuned plan params\n");
+        let mut out = String::from(
+            "# pasconv plan cache v2: problem + gpu -> tuned plan params / dispatch decisions\n",
+        );
         for key in keys {
             let (p, gpu) = key;
             let t = &self.entries[key];
@@ -182,6 +238,24 @@ impl PlanCache {
                 p.k,
                 t.tuned_cycles,
                 t.paper_cycles
+            ));
+        }
+        let mut dkeys: Vec<&(ConvProblem, String)> = self.dispatch.keys().collect();
+        dkeys.sort_by_key(|(p, g)| (g.clone(), p.c, p.wy, p.wx, p.m, p.k));
+        for key in dkeys {
+            let (p, gpu) = key;
+            let d = &self.dispatch[key];
+            out.push_str(&format!(
+                "gpu={} c={} wy={} wx={} m={} k={} kind=dispatch backend={} cycles={} tuned_cycles={}\n",
+                encode_gpu(gpu),
+                p.c,
+                p.wy,
+                p.wx,
+                p.m,
+                p.k,
+                d.backend,
+                d.cycles,
+                d.tuned_cycles
             ));
         }
         out
@@ -210,6 +284,18 @@ impl PlanCache {
                 k: usize_field(&fields, idx, "k")?,
             };
             let params = match field(&fields, idx, "kind")? {
+                // v2 dispatch entry: backend tag + cycle pair, no params
+                "dispatch" => {
+                    let d = Decision {
+                        backend: field(&fields, idx, "backend")?.to_string(),
+                        cycles: f64_field(&fields, idx, "cycles")?,
+                        tuned_cycles: f64_field(&fields, idx, "tuned_cycles")?,
+                    };
+                    validate_dispatch(idx, &problem, &d)?;
+                    let gpu = decode_gpu(field(&fields, idx, "gpu")?);
+                    cache.dispatch.insert((problem, gpu), d);
+                    continue;
+                }
                 "single" => PlanParams::Single {
                     method: match field(&fields, idx, "method")? {
                         "filter_split" => SingleMethod::FilterSplit,
@@ -396,6 +482,91 @@ mod tests {
             "gpu=G c=1 wy=14 wx=14 m=16 k=3 kind=multi s=32 wxp=32 mp=16 tuned_cycles=1 paper_cycles=2"
         )
         .is_err());
+    }
+
+    #[test]
+    fn dispatch_entries_round_trip_and_v1_files_parse() {
+        let g = gtx_1080ti();
+        let mut cache = sample();
+        cache.insert_dispatch(
+            ConvProblem::multi(256, 56, 256, 3),
+            &g,
+            Decision { backend: "winograd".into(), cycles: 9_000.0, tuned_cycles: 12_000.5 },
+        );
+        cache.insert_dispatch(
+            ConvProblem::multi(256, 14, 256, 1),
+            &g,
+            Decision { backend: "paper-tuned".into(), cycles: 5_000.0, tuned_cycles: 5_000.0 },
+        );
+        let text = cache.to_lines();
+        assert!(text.contains("kind=dispatch backend=winograd"), "{text}");
+        let back = PlanCache::from_lines(&text).unwrap();
+        assert_eq!(back.dispatch_len(), 2);
+        assert_eq!(back.len(), cache.len(), "plan entries survive alongside");
+        let d = back.get_dispatch(&ConvProblem::multi(256, 56, 256, 3), &g).unwrap();
+        assert_eq!(d.backend, "winograd");
+        assert!((d.tuned_cycles - 12_000.5).abs() == 0.0, "float round-trip exact");
+        // the serialized form is a fixed point
+        assert_eq!(back.to_lines(), text);
+    }
+
+    #[test]
+    fn v1_files_without_dispatch_entries_parse_unchanged() {
+        // exactly what a pre-v2 `tune --save` produced: old header
+        // comment, plan lines only
+        let v1 = "# pasconv plan cache: problem + gpu -> tuned plan params\n\
+            gpu=GTX_1080Ti c=1 wy=224 wx=224 m=64 k=3 kind=single method=filter_split \
+            p=3 q=1 tuned_cycles=10234.5625 paper_cycles=11000.125\n";
+        let cache = PlanCache::from_lines(v1).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.dispatch_len(), 0);
+        assert!(cache.get(&ConvProblem::single(224, 64, 3), &gtx_1080ti()).is_some());
+    }
+
+    #[test]
+    fn bad_dispatch_entries_are_rejected() {
+        // unknown backend tag
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=dispatch backend=magic cycles=1 tuned_cycles=2"
+        )
+        .is_err());
+        // backend outside its supports() envelope (winograd is K=3-only)
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=5 kind=dispatch backend=winograd cycles=1 tuned_cycles=2"
+        )
+        .is_err());
+        // dispatched slower than the paper-tuned floor: stale or edited
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=dispatch backend=winograd cycles=3 tuned_cycles=2"
+        )
+        .is_err());
+        // missing cycle fields
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=dispatch backend=winograd"
+        )
+        .is_err());
+        // a well-formed entry parses
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=dispatch backend=winograd cycles=1 tuned_cycles=2"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn merge_absorbs_both_entry_kinds() {
+        let g = gtx_1080ti();
+        let mut a = PlanCache::new();
+        let mut b = sample();
+        b.insert_dispatch(
+            ConvProblem::multi(64, 56, 64, 3),
+            &g,
+            Decision { backend: "paper-tuned".into(), cycles: 10.0, tuned_cycles: 10.0 },
+        );
+        let absorbed = a.merge(b.clone());
+        assert_eq!(absorbed, b.len() + b.dispatch_len());
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.dispatch_len(), 1);
+        assert!(!a.is_empty());
     }
 
     #[test]

@@ -155,8 +155,8 @@ pub fn advice(p: &ConvProblem, spec: &GpuSpec) -> String {
 }
 
 /// Preload memoized entries (e.g. a `pasconv tune --save` file) so
-/// serving never searches.  Returns how many entries were loaded —
-/// every entry is kept, whatever GPU name it carries.
+/// serving never searches.  Returns how many entries were loaded (plan
+/// + dispatch) — every entry is kept, whatever GPU name it carries.
 pub fn preload(cache: PlanCache) -> usize {
     global().lock().unwrap().merge(cache)
 }
@@ -164,6 +164,20 @@ pub fn preload(cache: PlanCache) -> usize {
 /// Snapshot of the process-wide cache (what `pasconv tune --save` writes).
 pub fn snapshot() -> PlanCache {
     global().lock().unwrap().clone()
+}
+
+/// Memoized cross-backend dispatch decision, if one exists.  The
+/// backend layer's dispatcher rides in the same process-wide cache as
+/// tuning results, so `tune --save/--load` persists both and the
+/// coordinator's warm-up fills both with one pass.
+pub fn cached_dispatch(p: &ConvProblem, spec: &GpuSpec) -> Option<crate::backend::Decision> {
+    global().lock().unwrap().get_dispatch(p, spec)
+}
+
+/// Record a dispatch decision (called by `backend::dispatch` after a
+/// full ranking; decisions are computed outside the lock).
+pub fn store_dispatch(p: &ConvProblem, spec: &GpuSpec, d: crate::backend::Decision) {
+    global().lock().unwrap().insert_dispatch(*p, spec, d);
 }
 
 /// Tuned-vs-paper summary over one suite — shared by the `tune` CLI

@@ -1,0 +1,197 @@
+//! Differential tests for the backend layer: every backend's
+//! `execute_reference` must be **bit-identical** (f32 bit patterns, not
+//! allclose) to the CPU oracle `conv::cpu::conv2d_multi_cpu` on every
+//! problem it `supports()`, and the `supports()` envelopes must reject
+//! what they claim to reject — with the dispatcher honoring both.
+//!
+//! The problem set mirrors the §4 suites structurally — every (kind, K)
+//! regime of Fig. 4 / Fig. 5 / the CNN-layer mix, including odd map
+//! sizes that force ragged tiles and partial segments — at sizes the
+//! plain-loop oracle can run in debug-mode CI (the full-size suite
+//! problems exercise the same index arithmetic, just more of it).
+//! Timing-side behavior on the *real* suites (legality, never-lose) is
+//! simulation-only and runs here at full size.
+
+use pasconv::backend::{self, Dispatcher};
+use pasconv::conv::suites::{all_cnn_layers, fig4_suite, fig5_suite};
+use pasconv::conv::{conv2d_batched_cpu, conv2d_multi_cpu, BatchedConv, ConvProblem};
+use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell};
+use pasconv::tuner;
+use pasconv::util::rng::Rng;
+
+/// Suite-shaped problems small enough for the f64 oracle in debug mode:
+/// both kernels (C = 1 and C > 1), all three paper K's, maps from 7 to
+/// 56 px, non-divisible shapes (13, 27) for ragged tiles/strips.
+fn difftest_problems() -> Vec<ConvProblem> {
+    vec![
+        // Fig. 4 regime: single-channel, inverse (W, M) pairing
+        ConvProblem::single(28, 8, 1),
+        ConvProblem::single(28, 8, 3),
+        ConvProblem::single(28, 4, 5),
+        ConvProblem::single(64, 4, 3),
+        // Fig. 5 regime: square multi-channel layers, 7..56 px
+        ConvProblem::multi(32, 7, 32, 3),
+        ConvProblem::multi(8, 14, 16, 1),
+        ConvProblem::multi(8, 14, 16, 3),
+        ConvProblem::multi(8, 14, 8, 5),
+        ConvProblem::multi(16, 28, 16, 3),
+        ConvProblem::multi(4, 56, 8, 3),
+        // CNN-layer shapes: AlexNet's odd 27/13-px maps, ResNet's K=1
+        // projections
+        ConvProblem::multi(6, 27, 8, 5),
+        ConvProblem::multi(8, 13, 8, 3),
+        ConvProblem::multi(8, 28, 16, 1),
+    ]
+}
+
+fn bit_identical(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn every_backend_bit_identical_to_cpu_oracle_where_supported() {
+    let registry = Dispatcher::full();
+    let mut rng = Rng::new(0xD1FF);
+    for p in difftest_problems() {
+        let image = rng.normal_vec(p.map_elems());
+        let filters = rng.normal_vec(p.filter_elems());
+        let oracle = conv2d_multi_cpu(&p, &image, &filters);
+        let mut covered = 0;
+        for b in registry.backends() {
+            if !b.supports(&p) {
+                continue;
+            }
+            covered += 1;
+            let got = b.execute_reference(&p, &image, &filters);
+            assert!(
+                bit_identical(&got, &oracle),
+                "{} diverges from the CPU oracle on {}",
+                b.name(),
+                p.label()
+            );
+        }
+        // every problem here is valid, so at minimum the paper kernels,
+        // the cuDNN proxy, dac17, fft and the CPU anchor must cover it
+        assert!(covered >= 6, "{}: only {covered} backends supported it", p.label());
+    }
+}
+
+#[test]
+fn batched_references_are_n_independent_single_runs() {
+    let registry = Dispatcher::full();
+    let p = ConvProblem::multi(8, 14, 16, 3);
+    let b = BatchedConv::new(p, 3);
+    let mut rng = Rng::new(0xBA7C);
+    let images = rng.normal_vec(b.map_elems());
+    let filters = rng.normal_vec(p.filter_elems());
+    let oracle = conv2d_batched_cpu(&b, &images, &filters);
+    for backend in registry.backends() {
+        assert!(backend.supports(&p), "{}", backend.name());
+        let got = backend.execute_reference_batched(&b, &images, &filters);
+        assert!(
+            bit_identical(&got, &oracle),
+            "{} batched reference diverges",
+            backend.name()
+        );
+    }
+}
+
+#[test]
+fn supports_rejections_are_exercised() {
+    let registry = Dispatcher::full();
+    let k1 = ConvProblem::multi(16, 14, 16, 1);
+    let k5 = ConvProblem::multi(16, 14, 16, 5);
+    let single = ConvProblem::single(28, 16, 3);
+    let invalid = ConvProblem { c: 1, wy: 2, wx: 2, m: 4, k: 3 };
+
+    // winograd F(2x2,3x3): K=3 only
+    let wino = registry.backend("winograd").unwrap();
+    assert!(!wino.supports(&k1) && !wino.supports(&k5));
+    assert!(wino.supports(&ConvProblem::multi(16, 14, 16, 3)));
+    // tan128: multi-channel stride-fixed only
+    let tan = registry.backend("tan128").unwrap();
+    assert!(!tan.supports(&single));
+    assert!(tan.supports(&k5));
+    // nobody accepts an invalid problem
+    for b in registry.backends() {
+        assert!(!b.supports(&invalid), "{} accepted K > W", b.name());
+    }
+
+    // the candidate sets respect the envelopes...
+    let k1_names: Vec<&str> = registry.candidates(&k1).iter().map(|b| b.name()).collect();
+    assert!(!k1_names.contains(&"winograd"));
+    let single_names: Vec<&str> = registry.candidates(&single).iter().map(|b| b.name()).collect();
+    assert!(!single_names.contains(&"tan128"));
+    assert!(single_names.contains(&"paper-tuned"));
+
+    // ...and so do actual decisions, everywhere on the real suites
+    let g = gtx_1080ti();
+    for p in fig4_suite().into_iter().step_by(4).chain(fig5_suite().into_iter().step_by(4)) {
+        let d = registry.decide(&p, &g);
+        let winner = registry.backend(&d.backend).expect("registered winner");
+        assert!(winner.supports(&p), "{} dispatched outside its envelope", d.backend);
+    }
+}
+
+#[test]
+fn dispatch_never_loses_on_the_full_suites() {
+    // full-size suites, simulation only — the acceptance gate's test
+    // half (the bench `ablation_dispatch` is the reporting half)
+    let registry = Dispatcher::full();
+    for spec in [gtx_1080ti(), titan_x_maxwell()] {
+        for p in fig4_suite().into_iter().chain(fig5_suite()).chain(all_cnn_layers()) {
+            let d = registry.decide(&p, &spec);
+            assert!(
+                d.cycles <= d.tuned_cycles * (1.0 + 1e-9),
+                "{} on {}: dispatch lost ({} > {})",
+                p.label(),
+                spec.name,
+                d.cycles,
+                d.tuned_cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn dispatched_plans_are_legal_and_simulate() {
+    let registry = Dispatcher::full();
+    let g = gtx_1080ti();
+    for p in fig5_suite().into_iter().step_by(3).chain(all_cnn_layers().into_iter().step_by(5)) {
+        let d = registry.decide(&p, &g);
+        let plan = registry.backend(&d.backend).unwrap().plan(&p, &g);
+        assert!(tuner::is_legal(&g, &plan), "{}: illegal winner {}", p.label(), plan.name);
+        let r = simulate(&g, &plan);
+        assert!(r.seconds > 0.0 && r.seconds.is_finite());
+        assert!((r.cycles - d.cycles).abs() < 1e-9 * d.cycles, "{}", p.label());
+    }
+}
+
+#[test]
+fn decision_cache_round_trips_through_plan_cache_files() {
+    // dispatch decisions survive save/load exactly (the coordinator's
+    // zero-search startup path for v2 cache files)
+    let g = gtx_1080ti();
+    let registry = Dispatcher::full();
+    let mut cache = tuner::PlanCache::new();
+    for p in [ConvProblem::multi(256, 56, 256, 3), ConvProblem::multi(256, 14, 256, 1)] {
+        cache.insert_dispatch(p, &g, registry.decide(&p, &g));
+    }
+    let text = cache.to_lines();
+    let back = tuner::PlanCache::from_lines(&text).unwrap();
+    assert_eq!(back.dispatch_len(), 2);
+    for p in [ConvProblem::multi(256, 56, 256, 3), ConvProblem::multi(256, 14, 256, 1)] {
+        assert_eq!(back.get_dispatch(&p, &g), cache.get_dispatch(&p, &g), "{}", p.label());
+    }
+}
+
+#[test]
+fn global_dispatch_entry_points_agree_with_registry() {
+    let g = gtx_1080ti();
+    let p = ConvProblem::multi(64, 28, 64, 3);
+    let via_global = backend::dispatched(&p, &g);
+    let fresh = Dispatcher::full().decide(&p, &g);
+    assert_eq!(via_global, fresh);
+    let plan = backend::dispatch_plan(&p, &g);
+    assert_eq!(plan.name, Dispatcher::full().backend(&fresh.backend).unwrap().plan(&p, &g).name);
+}
