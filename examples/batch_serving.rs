@@ -62,7 +62,11 @@ fn main() -> anyhow::Result<()> {
                     } else {
                         Tensor::randn(vec![p.m, p.c, p.k, p.k], &mut rng)
                     };
-                    coord.submit(Payload::Conv { problem: p, image, filters })
+                    coord.submit(Payload::Conv {
+                        op: pasconv::conv::ConvOp::dense(p),
+                        image,
+                        filters,
+                    })
                 } else {
                     coord.submit(Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut rng) })
                 }

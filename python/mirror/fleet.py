@@ -5,7 +5,7 @@ dispatches across backends for itself."""
 from collections import deque
 from dataclasses import dataclass
 
-import backends
+import ops as opsmod
 
 ROUND_ROBIN = "round-robin"
 LEAST_LOADED = "least-loaded"
@@ -68,12 +68,13 @@ class Fleet:
     def in_flight(self):
         return sum(d.queue_len() for d in self.devices)
 
-    def predicted_service(self, problem, n, device):
+    def predicted_service(self, op, n, device):
+        # mirror of backend::batched_op_dispatch_seconds per shard;
+        # dense problems arrive as dense ops, real ops as themselves
         spec = self.devices[device].spec
-        key = (problem, n, spec.name)
+        key = (op, n, spec.name)
         if key not in self.cost_cache:
-            self.cost_cache[key] = backends.dispatched_batched_seconds(
-                problem, n, spec)
+            self.cost_cache[key] = opsmod.batched_op_dispatch_seconds(op, n, spec)
         return self.cost_cache[key]
 
     def _least_loaded(self, cands):
@@ -82,7 +83,7 @@ class Fleet:
             return None
         return min(free, key=lambda c: (c[2] + c[3], c[0]))[0]
 
-    def submit(self, problem, n, model=None):
+    def submit(self, op, n, model=None):
         self.submitted += 1
         cands = []
         for i, d in enumerate(self.devices):
@@ -90,7 +91,7 @@ class Fleet:
                 i,
                 d.queue_len() >= self.queue_bound,  # full
                 d.ready_at(self.now),
-                self.predicted_service(problem, n, i),
+                self.predicted_service(op, n, i),
             ))
 
         if self.policy == ROUND_ROBIN:

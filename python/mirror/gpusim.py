@@ -201,6 +201,47 @@ class KernelPlan:
             launch_overhead_cycles=self.launch_overhead_cycles,
         )
 
+    def decimated(self, keep):
+        """Mirror of KernelPlan::decimated: stride handled natively by
+        shrinking the output strip schedule — per-round FMAs and the
+        writeback scale by `keep`, loads stay."""
+        assert 0.0 < keep <= 1.0
+        if keep == 1.0:
+            return self
+        runs = [(Round(r.load_bytes, r.segment_bytes, r.fma_ops * keep,
+                       r.eff_override), n) for (r, n) in self.runs]
+        return KernelPlan(
+            name=self.name,
+            runs=runs,
+            sms_active=self.sms_active,
+            threads_per_sm=self.threads_per_sm,
+            compute_efficiency=self.compute_efficiency,
+            output_bytes=self.output_bytes * keep,
+            smem_bytes_per_sm=self.smem_bytes_per_sm,
+            total_fma=self.total_fma * keep,
+            launch_overhead_cycles=self.launch_overhead_cycles,
+        )
+
+    def grouped(self, groups, max_sms):
+        """Mirror of KernelPlan::grouped: `par` groups side by side on
+        idle SMs, the rest as sequential waves under one launch."""
+        assert groups >= 1
+        if groups == 1:
+            return self
+        par = min(max(max_sms // self.sms_active, 1), groups)
+        waves = (groups + par - 1) // par
+        return KernelPlan(
+            name=f"{self.name} g{groups}",
+            runs=list(self.runs) * waves,
+            sms_active=self.sms_active * par,
+            threads_per_sm=self.threads_per_sm,
+            compute_efficiency=self.compute_efficiency,
+            output_bytes=self.output_bytes * groups,
+            smem_bytes_per_sm=self.smem_bytes_per_sm,
+            total_fma=self.total_fma * groups,
+            launch_overhead_cycles=self.launch_overhead_cycles,
+        )
+
 
 def simulate_cycles(spec, plan):
     assert plan.smem_bytes_per_sm <= spec.shared_mem_bytes, plan.name

@@ -1,0 +1,252 @@
+"""Mirror of rust/src/graph: the five model graphs (op-level conv
+nodes), the glue-op DRAM stream costing, the liveness + greedy best-fit
+arena planner, and whole-graph execution — used to generate and gate the
+EXPERIMENTS.md §7 and §10 tables without a rust toolchain."""
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import ops as opsmod
+import suites
+from gpusim import simulate_cycles
+from ops import ConvOp
+from plans import BYTES_F32, LAUNCH_OVERHEAD_CYCLES, ConvProblem
+
+GLUE_BW_EFFICIENCY = 0.8
+ARENA_ALIGN = 256
+
+
+@dataclass
+class Node:
+    id: int
+    name: str
+    kind: str  # input | conv | pad | pool | add | concat
+    shape: Tuple[int, int, int]  # (c, h, w)
+    inputs: List[int]
+    conv: Optional[ConvOp] = None
+    pool: Optional[Tuple[int, int]] = None  # (k, stride)
+
+
+class Builder:
+    def __init__(self, name):
+        self.name = name
+        self.nodes = []
+
+    def _add(self, name, kind, shape, inputs, **kw):
+        n = Node(len(self.nodes), name, kind, shape, inputs, **kw)
+        self.nodes.append(n)
+        return n.id
+
+    def input(self, name, shape):
+        return self._add(name, "input", shape, [])
+
+    def conv(self, name, src, op):
+        assert op.valid(), name
+        (c, h, w) = self.nodes[src].shape
+        assert (c, h, w) == (op.core.c, op.core.wy, op.core.wx), \
+            f"{name}: input {(c, h, w)} vs op {op.label()}"
+        return self._add(name, "conv", (op.core.m, op.oy(), op.ox()), [src], conv=op)
+
+    def conv_same(self, name, src, p):
+        op = ConvOp.dense(p) if p.k == 1 else ConvOp.same(p)
+        return self.conv(name, src, op)
+
+    def pool(self, name, src, k, stride):
+        (c, h, w) = self.nodes[src].shape
+        return self._add(name, "pool",
+                         (c, (h - k) // stride + 1, (w - k) // stride + 1), [src],
+                         pool=(k, stride))
+
+    def pad(self, name, src, h, w):
+        c = self.nodes[src].shape[0]
+        return self._add(name, "pad", (c, h, w), [src])
+
+    def add_skip(self, name, a, b):
+        assert self.nodes[a].shape == self.nodes[b].shape
+        return self._add(name, "add", self.nodes[a].shape, [a, b])
+
+    def concat(self, name, srcs):
+        shapes = [self.nodes[s].shape for s in srcs]
+        return self._add(name, "concat",
+                         (sum(s[0] for s in shapes), shapes[0][1], shapes[0][2]), srcs)
+
+
+def alexnet_graph():
+    l = suites.alexnet()
+    b = Builder("alexnet")
+    x = b.input("in", (96, 27, 27))
+    x = b.conv("conv2", x, l[0])
+    x = b.pool("pool2", x, 3, 2)
+    x = b.conv("conv3", x, l[1])
+    x = b.conv("conv4", x, l[2])
+    x = b.conv("conv5", x, l[3])
+    b.pool("pool5", x, 3, 2)
+    return b
+
+
+def vgg16_graph():
+    b = Builder("vgg16")
+    x = b.input("in", (3, 224, 224))
+    blocks = [(3, 224, 64, 2), (64, 112, 128, 2), (128, 56, 256, 3),
+              (256, 28, 512, 3), (512, 14, 512, 3)]
+    for bi, (c_in, w, c_out, n) in enumerate(blocks):
+        for i in range(n):
+            c = c_in if i == 0 else c_out
+            x = b.conv_same(f"conv{bi+1}_{i+1}", x, ConvProblem.multi(c, w, c_out, 3))
+        x = b.pool(f"pool{bi+1}", x, 2, 2)
+    return b
+
+
+def resnet18_graph():
+    b = Builder("resnet18")
+    x = b.input("in", (64, 56, 56))
+    stages = [(64, 64, 56, 1), (64, 128, 56, 2), (128, 256, 28, 2), (256, 512, 14, 2)]
+    for si, (c_in, c_out, w_in, stride) in enumerate(stages):
+        s = si + 1
+        w_out = (w_in - 1) // stride + 1
+        for blk in (1, 2):
+            transition = blk == 1 and (stride > 1 or c_in != c_out)
+            if transition:
+                ca = ConvOp.strided(ConvProblem.multi(c_in, w_in, c_out, 3), stride, 1)
+                proj = ConvOp.strided(ConvProblem.multi(c_in, w_in, c_out, 1), stride, 0)
+            else:
+                ca = ConvOp.same(ConvProblem.multi(c_out, w_out, c_out, 3))
+                proj = None
+            cb = ConvOp.same(ConvProblem.multi(c_out, w_out, c_out, 3))
+            a = b.conv(f"s{s}b{blk}c1", x, ca)
+            c2 = b.conv(f"s{s}b{blk}c2", a, cb)
+            skip = b.conv(f"s{s}proj", x, proj) if proj is not None else x
+            x = b.add_skip(f"s{s}b{blk}add", c2, skip)
+    return b
+
+
+def inception3a_graph():
+    br = [suites.googlenet_inception3a()[i] for i in range(6)]
+    b = Builder("inception3a")
+    x = b.input("in", (192, 28, 28))
+    b1 = b.conv("b1.1x1", x, br[0])
+    t = b.conv("b2.reduce", x, br[1])
+    b2 = b.conv("b2.3x3", t, br[2])
+    t = b.conv("b3.reduce", x, br[3])
+    b3 = b.conv("b3.5x5", t, br[4])
+    t = b.pool("b4.pool", x, 3, 1)
+    t = b.pad("b4.pool.pad", t, 28, 28)
+    b4 = b.conv("b4.proj", t, br[5])
+    b.concat("concat", [b1, b2, b3, b4])
+    return b
+
+
+def mobilenet_v1_graph():
+    ops = suites.mobilenet_v1()
+    b = Builder("mobilenet_v1")
+    x = b.input("in", (3, 224, 224))
+    x = b.conv("conv1", x, ops[0])
+    for i in range(1, len(ops), 2):
+        blk = (i + 1) // 2
+        x = b.conv(f"b{blk}.dw", x, ops[i])
+        x = b.conv(f"b{blk}.pw", x, ops[i + 1])
+    b.pool("avgpool", x, 7, 1)
+    return b
+
+
+MODEL_GRAPHS = [("alexnet", alexnet_graph), ("vgg16", vgg16_graph),
+                ("resnet18", resnet18_graph), ("inception3a", inception3a_graph),
+                ("mobilenet_v1", mobilenet_v1_graph)]
+
+
+# ---- glue costing (mirror of graph/exec.rs) ----
+
+def elems(shape):
+    return shape[0] * shape[1] * shape[2]
+
+
+def glue_bytes(g, node):
+    out = elems(node.shape) * BYTES_F32
+    ins = sum(elems(g.nodes[i].shape) * BYTES_F32 for i in node.inputs)
+    if node.kind in ("input", "conv"):
+        return 0.0
+    if node.kind == "pool":
+        k = node.pool[0]
+        return float(elems(node.shape) * k * k * BYTES_F32 + out)
+    return float(ins + out)
+
+
+def glue_cycles(spec, nbytes):
+    if nbytes <= 0.0:
+        return 0.0
+    return (LAUNCH_OVERHEAD_CYCLES + spec.mem_latency_cycles
+            + nbytes / (spec.bytes_per_cycle() * GLUE_BW_EFFICIENCY))
+
+
+# ---- arena planner (mirror of graph/memory.rs) ----
+
+def _align(b):
+    return (b + ARENA_ALIGN - 1) // ARENA_ALIGN * ARENA_ALIGN
+
+
+def plan_arena(g):
+    order = list(range(len(g.nodes)))  # insertion order is topological
+    consumers = [[] for _ in g.nodes]
+    for n in g.nodes:
+        for i in n.inputs:
+            consumers[i].append(n.id)
+    lives = []
+    for nid in order:
+        last = max((c for c in consumers[nid]), default=len(order) - 1)
+        lives.append((nid, _align(elems(g.nodes[nid].shape) * BYTES_F32), nid, last))
+    naive = sum(l[1] for l in lives)
+    by_size = sorted(range(len(lives)), key=lambda i: (-lives[i][1], lives[i][0]))
+    placements = []  # (id, bytes, def, last, offset)
+    for i in by_size:
+        (nid, nbytes, d, last) = lives[i]
+        busy = sorted((p[4], p[4] + p[1]) for p in placements
+                      if p[2] <= last and d <= p[3])
+        offset = 0
+        for (lo, hi) in busy:
+            if offset + nbytes <= lo:
+                break
+            offset = max(offset, hi)
+        placements.append((nid, nbytes, d, last, offset))
+    peak = max((p[4] + p[1] for p in placements), default=0)
+    live_floor = 0
+    for step in range(len(order)):
+        live = sum(p[1] for p in placements if p[2] <= step <= p[3])
+        live_floor = max(live_floor, live)
+    return peak, naive, live_floor
+
+
+# ---- execution (mirror of graph/exec.rs::execute) ----
+
+def execute(g, spec, planner, batch=1):
+    """Returns (total_s, conv_s, glue_s, per_conv_details) — planner is
+    a fn(op, spec) -> KernelPlan."""
+    conv_s = 0.0
+    glue_s = 0.0
+    details = []
+    for n in g.nodes:
+        if n.kind == "conv":
+            plan = planner(n.conv, spec).batched(batch)
+            s = spec.cycles_to_secs(simulate_cycles(spec, plan))
+            conv_s += s
+            details.append((n.name, n.conv, plan.name, s))
+        elif n.kind != "input":
+            s = spec.cycles_to_secs(glue_cycles(spec, glue_bytes(g, n) * batch))
+            glue_s += s
+    return conv_s + glue_s, conv_s, glue_s, details
+
+
+def model_report(name, spec, planner, batch=1):
+    g = dict(MODEL_GRAPHS)[name]()
+    total, conv_s, glue_s, details = execute(g, spec, planner, batch)
+    peak, naive, floor = plan_arena(g)
+    return {
+        "name": name, "nodes": len(g.nodes),
+        "convs": sum(1 for n in g.nodes if n.kind == "conv"),
+        "total": total, "conv": conv_s, "glue": glue_s,
+        "peak": peak, "naive": naive, "floor": floor,
+        "details": details,
+    }
+
+
+def dispatch_planner(op, spec):
+    return opsmod.dispatch_op_plan(op, spec)

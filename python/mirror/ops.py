@@ -1,0 +1,225 @@
+"""Mirror of rust/src/conv/op.rs + the backend op layer
+(rust/src/backend/{mod,impls,dispatch}.rs): ConvOp with its exact
+lowering onto the stride-1/valid/dense regime, the paper backends'
+native op schedules (decimated strips for stride, side-by-side groups),
+the generic lowered route every other backend serves, and the op
+dispatcher with its naive-lowered paper-tuned floor."""
+
+from dataclasses import dataclass
+
+import backends
+import tuner
+from gpusim import simulate_cycles
+from plans import ConvProblem
+
+
+@dataclass(frozen=True)
+class ConvOp:
+    core: ConvProblem
+    stride: int = 1
+    pad: int = 0
+    groups: int = 1
+
+    @staticmethod
+    def dense(core):
+        return ConvOp(core, 1, 0, 1)
+
+    @staticmethod
+    def same(core):
+        assert core.k % 2 == 1
+        return ConvOp(core, 1, (core.k - 1) // 2, 1)
+
+    @staticmethod
+    def strided(core, stride, pad):
+        return ConvOp(core, stride, pad, 1)
+
+    @staticmethod
+    def depthwise(c, w, k, stride):
+        assert k % 2 == 1
+        return ConvOp(ConvProblem.multi(c, w, c, k), stride, (k - 1) // 2, c)
+
+    @staticmethod
+    def pointwise(c, w, m):
+        return ConvOp.dense(ConvProblem.multi(c, w, m, 1))
+
+    def is_dense(self):
+        return self.stride == 1 and self.pad == 0 and self.groups == 1
+
+    def is_depthwise(self):
+        return (self.groups > 1 and self.groups == self.core.c
+                and self.groups == self.core.m)
+
+    def padded_wy(self):
+        return self.core.wy + 2 * self.pad
+
+    def padded_wx(self):
+        return self.core.wx + 2 * self.pad
+
+    def oy(self):
+        return (self.padded_wy() - self.core.k) // self.stride + 1
+
+    def ox(self):
+        return (self.padded_wx() - self.core.k) // self.stride + 1
+
+    def valid(self):
+        p = self.core
+        return (p.c >= 1 and p.m >= 1 and p.k >= 1 and p.wy >= 1 and p.wx >= 1
+                and self.stride >= 1 and self.groups >= 1
+                and p.c % self.groups == 0 and p.m % self.groups == 0
+                and self.pad < p.k
+                and self.padded_wy() >= p.k and self.padded_wx() >= p.k)
+
+    def unit(self):
+        """The lowered per-group stride-1 valid dense problem."""
+        return ConvProblem(self.core.c // self.groups, self.padded_wy(),
+                           self.padded_wx(), self.core.m // self.groups,
+                           self.core.k)
+
+    def output_keep_fraction(self):
+        u = self.unit()
+        return (self.oy() * self.ox()) / (u.oy() * u.ox())
+
+    def label(self):
+        if self.is_dense():
+            return self.core.label()
+        s = self.core.label()
+        if self.stride > 1:
+            s += f" s{self.stride}"
+        if self.pad > 0:
+            s += f" p{self.pad}"
+        if self.groups > 1:
+            s += " dw" if self.is_depthwise() else f" g{self.groups}"
+        return s
+
+
+# ---- op plans (mirror of ConvBackend::op_plan + impls::paper_op_plan) ----
+
+def op_plan_name(unit_name, op, native):
+    s = unit_name
+    if op.groups > 1:
+        s += f" g{op.groups}"
+    if op.stride > 1:
+        s += f" s{op.stride}"
+    if not native and not op.is_dense():
+        s += " lowered"
+    return s
+
+
+def _rename(plan, name):
+    plan2 = type(plan)(**{**plan.__dict__, "name": name})
+    return plan2
+
+
+def lowered_plan(unit_plan_fn, op, spec):
+    """The naive lowered schedule: unit plan batched over the groups,
+    full stride-1 output.  Dense ops are just the unit plan."""
+    if op.is_dense():
+        return unit_plan_fn(op.core, spec)
+    unit = unit_plan_fn(op.unit(), spec)
+    return _rename(unit.batched(op.groups), op_plan_name(unit.name, op, False))
+
+
+def paper_op_plan(unit_plan_fn, op, spec):
+    """Mirror of impls::paper_op_plan: min(native, lowered) under the
+    simulator — the native route decimates the strip schedule and runs
+    groups side by side on idle SMs."""
+    if op.is_dense():
+        return unit_plan_fn(op.core, spec)
+    unit = unit_plan_fn(op.unit(), spec)
+    native = _rename(
+        unit.decimated(op.output_keep_fraction()).grouped(op.groups, spec.sm_count),
+        op_plan_name(unit.name, op, True))
+    lowered = _rename(unit.batched(op.groups), op_plan_name(unit.name, op, False))
+    if simulate_cycles(spec, native) <= simulate_cycles(spec, lowered):
+        return native
+    return lowered
+
+
+def op_coverage(name, supports, op):
+    """Mirror of the trait's op_coverage: paper backends are native on
+    every valid op; others are native on dense / lowered via the unit."""
+    if not op.valid():
+        return None
+    if name in ("paper-tuned", "paper"):
+        return "native"
+    if op.is_dense():
+        return "native" if supports(op.core) else None
+    return "lowered" if supports(op.unit()) else None
+
+
+def backend_op_plan(name, op, spec):
+    if name == "paper-tuned":
+        return paper_op_plan(tuner.tuned_plan, op, spec)
+    if name == "paper":
+        from plans import paper_plan_for
+        return paper_op_plan(paper_plan_for, op, spec)
+    for (n, _, planfn) in backends.NON_TUNED_BACKENDS:
+        if n == name:
+            return lowered_plan(planfn, op, spec)
+    raise KeyError(name)
+
+
+def _decide_op_n(op, n, spec):
+    """Mirror of Dispatcher::decide_op_n: floor = the paper-tuned NAIVE
+    lowering; paper-tuned serves min(native, lowered); every covering
+    backend's op plan ranked on its batch-n schedule behind the
+    legality gate."""
+    assert op.valid()
+    floor = lowered_plan(tuner.tuned_plan, op, spec)
+    tuned_cycles = simulate_cycles(spec, floor.batched(n))
+    best = (backends.PAPER_TUNED,
+            simulate_cycles(spec, backend_op_plan("paper-tuned", op, spec).batched(n)))
+    for (name, supports, planfn) in backends.NON_TUNED_BACKENDS:
+        if op_coverage(name, supports, op) is None:
+            continue
+        plan = lowered_plan(planfn, op, spec) if name != "paper" \
+            else backend_op_plan("paper", op, spec)
+        if not tuner.is_legal(spec, plan):
+            continue
+        cycles = simulate_cycles(spec, plan.batched(n))
+        if cycles < best[1]:
+            best = (name, cycles)
+    return (best[0], best[1], tuned_cycles)
+
+
+_OP_CACHE = {}
+
+
+def decide_op(op, spec):
+    key = (op, spec.name)
+    if key not in _OP_CACHE:
+        _OP_CACHE[key] = _decide_op_n(op, 1, spec)
+    return _OP_CACHE[key]
+
+
+_OP_BATCHED_CACHE = {}
+
+
+def decide_batched_op(op, n, spec):
+    if n == 1:
+        return decide_op(op, spec)
+    key = (op, n, spec.name)
+    if key not in _OP_BATCHED_CACHE:
+        _OP_BATCHED_CACHE[key] = _decide_op_n(op, n, spec)
+    return _OP_BATCHED_CACHE[key]
+
+
+def batched_op_dispatch_seconds(op, n, spec):
+    """Mirror of backend::batched_op_dispatch_seconds — the fleet's
+    per-shard job pricing."""
+    return spec.cycles_to_secs(decide_batched_op(op, n, spec)[1])
+
+
+def dispatch_op_plan(op, spec):
+    name, _, _ = decide_op(op, spec)
+    return backend_op_plan(name, op, spec)
+
+
+def op_plan_for(op, spec):
+    """Mirror of plans::op_plan_for (the tuned paper op path)."""
+    return backend_op_plan("paper-tuned", op, spec)
+
+
+def paper_op_plan_for(op, spec):
+    """Mirror of plans::paper_op_plan_for (§3 closed forms)."""
+    return backend_op_plan("paper", op, spec)

@@ -1,5 +1,9 @@
-"""Mirror of rust/src/conv/suites.rs: the paper's workload suites."""
+"""Mirror of rust/src/conv/suites.rs: the paper's figure suites
+(ConvProblem) and the op-level model suites (ConvOp) — real 'same'
+padding, ResNet-18's native stride-2 downsampling, MobileNetV1's
+depthwise-separable stack."""
 
+from ops import ConvOp
 from plans import ConvProblem
 
 PAPER_KS = [1, 3, 5]
@@ -18,36 +22,83 @@ def fig5_suite():
 
 
 def alexnet():
-    return [ConvProblem.multi(96, 27, 256, 5), ConvProblem.multi(256, 13, 384, 3),
-            ConvProblem.multi(384, 13, 384, 3), ConvProblem.multi(384, 13, 256, 3)]
+    return [ConvOp.same(ConvProblem.multi(96, 27, 256, 5)),
+            ConvOp.same(ConvProblem.multi(256, 13, 384, 3)),
+            ConvOp.same(ConvProblem.multi(384, 13, 384, 3)),
+            ConvOp.same(ConvProblem.multi(384, 13, 256, 3))]
 
 
 def vgg16():
-    return [ConvProblem.multi(3, 224, 64, 3), ConvProblem.multi(64, 224, 64, 3),
-            ConvProblem.multi(64, 112, 128, 3), ConvProblem.multi(128, 112, 128, 3),
-            ConvProblem.multi(128, 56, 256, 3), ConvProblem.multi(256, 56, 256, 3),
-            ConvProblem.multi(256, 28, 512, 3), ConvProblem.multi(512, 28, 512, 3),
-            ConvProblem.multi(512, 14, 512, 3)]
+    return [ConvOp.same(ConvProblem.multi(3, 224, 64, 3)),
+            ConvOp.same(ConvProblem.multi(64, 224, 64, 3)),
+            ConvOp.same(ConvProblem.multi(64, 112, 128, 3)),
+            ConvOp.same(ConvProblem.multi(128, 112, 128, 3)),
+            ConvOp.same(ConvProblem.multi(128, 56, 256, 3)),
+            ConvOp.same(ConvProblem.multi(256, 56, 256, 3)),
+            ConvOp.same(ConvProblem.multi(256, 28, 512, 3)),
+            ConvOp.same(ConvProblem.multi(512, 28, 512, 3)),
+            ConvOp.same(ConvProblem.multi(512, 14, 512, 3))]
 
 
 def resnet18():
-    return [ConvProblem.multi(64, 56, 64, 3), ConvProblem.multi(64, 28, 128, 3),
-            ConvProblem.multi(64, 28, 128, 1), ConvProblem.multi(128, 28, 128, 3),
-            ConvProblem.multi(128, 14, 256, 3), ConvProblem.multi(128, 14, 256, 1),
-            ConvProblem.multi(256, 14, 256, 3), ConvProblem.multi(256, 7, 512, 3),
-            ConvProblem.multi(256, 7, 512, 1), ConvProblem.multi(512, 7, 512, 3)]
+    return [ConvOp.same(ConvProblem.multi(64, 56, 64, 3)),
+            ConvOp.strided(ConvProblem.multi(64, 56, 128, 3), 2, 1),
+            ConvOp.strided(ConvProblem.multi(64, 56, 128, 1), 2, 0),
+            ConvOp.same(ConvProblem.multi(128, 28, 128, 3)),
+            ConvOp.strided(ConvProblem.multi(128, 28, 256, 3), 2, 1),
+            ConvOp.strided(ConvProblem.multi(128, 28, 256, 1), 2, 0),
+            ConvOp.same(ConvProblem.multi(256, 14, 256, 3)),
+            ConvOp.strided(ConvProblem.multi(256, 14, 512, 3), 2, 1),
+            ConvOp.strided(ConvProblem.multi(256, 14, 512, 1), 2, 0),
+            ConvOp.same(ConvProblem.multi(512, 7, 512, 3))]
 
 
 def googlenet_inception3a():
-    return [ConvProblem.multi(192, 28, 64, 1),
-            ConvProblem.multi(192, 28, 96, 1), ConvProblem.multi(96, 28, 128, 3),
-            ConvProblem.multi(192, 28, 16, 1), ConvProblem.multi(16, 28, 32, 5),
-            ConvProblem.multi(192, 28, 32, 1)]
+    return [ConvOp.dense(ConvProblem.multi(192, 28, 64, 1)),
+            ConvOp.dense(ConvProblem.multi(192, 28, 96, 1)),
+            ConvOp.same(ConvProblem.multi(96, 28, 128, 3)),
+            ConvOp.dense(ConvProblem.multi(192, 28, 16, 1)),
+            ConvOp.same(ConvProblem.multi(16, 28, 32, 5)),
+            ConvOp.dense(ConvProblem.multi(192, 28, 32, 1))]
+
+
+MOBILENET_BLOCKS = [(32, 1, 64), (64, 2, 128), (128, 1, 128), (128, 2, 256),
+                    (256, 1, 256), (256, 2, 512), (512, 1, 512), (512, 1, 512),
+                    (512, 1, 512), (512, 1, 512), (512, 1, 512), (512, 2, 1024),
+                    (1024, 1, 1024)]
+
+
+def mobilenet_v1():
+    out = [ConvOp.strided(ConvProblem.multi(3, 224, 32, 3), 2, 1)]
+    w = 112
+    for (c_in, stride, c_out) in MOBILENET_BLOCKS:
+        out.append(ConvOp.depthwise(c_in, w, 3, stride))
+        w //= stride
+        out.append(ConvOp.pointwise(c_in, w, c_out))
+    return out
+
+
+def model_ops():
+    return [("alexnet", alexnet()), ("vgg16", vgg16()), ("resnet18", resnet18()),
+            ("inception3a", googlenet_inception3a()),
+            ("mobilenet_v1", mobilenet_v1())]
+
+
+def all_cnn_ops():
+    out = []
+    for (_, ops) in model_ops():
+        for op in ops:
+            if op not in out:
+                out.append(op)
+    return out
 
 
 def all_cnn_layers():
+    """Deduped lowered units of the four paper-era models (mirror of
+    suites::all_cnn_layers)."""
     out = []
-    for p in alexnet() + vgg16() + resnet18() + googlenet_inception3a():
-        if p not in out:
-            out.append(p)
+    for op in alexnet() + vgg16() + resnet18() + googlenet_inception3a():
+        u = op.unit()
+        if u not in out:
+            out.append(u)
     return out

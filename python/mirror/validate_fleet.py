@@ -10,39 +10,23 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent))
 
-import backends
+import ops
+import suites
 import tuner
 from fleet import Fleet, LEAST_LOADED, MODEL_AFFINITY, ROUND_ROBIN
 from gpusim import gtx_1080ti, titan_x_maxwell
+from ops import ConvOp
 from plans import ConvProblem
 from rng import Rng
 
 F64_MIN_POSITIVE = 2.2250738585072014e-308  # rust f64::MIN_POSITIVE
 
 
-def alexnet():
-    return [ConvProblem.multi(96, 27, 256, 5), ConvProblem.multi(256, 13, 384, 3),
-            ConvProblem.multi(384, 13, 384, 3), ConvProblem.multi(384, 13, 256, 3)]
-
-
-def resnet18():
-    return [ConvProblem.multi(64, 56, 64, 3), ConvProblem.multi(64, 28, 128, 3),
-            ConvProblem.multi(64, 28, 128, 1), ConvProblem.multi(128, 28, 128, 3),
-            ConvProblem.multi(128, 14, 256, 3), ConvProblem.multi(128, 14, 256, 1),
-            ConvProblem.multi(256, 14, 256, 3), ConvProblem.multi(256, 7, 512, 3),
-            ConvProblem.multi(256, 7, 512, 1), ConvProblem.multi(512, 7, 512, 3)]
-
-
-def vgg16():
-    return [ConvProblem.multi(3, 224, 64, 3), ConvProblem.multi(64, 224, 64, 3),
-            ConvProblem.multi(64, 112, 128, 3), ConvProblem.multi(128, 112, 128, 3),
-            ConvProblem.multi(128, 56, 256, 3), ConvProblem.multi(256, 56, 256, 3),
-            ConvProblem.multi(256, 28, 512, 3), ConvProblem.multi(512, 28, 512, 3),
-            ConvProblem.multi(512, 14, 512, 3)]
-
-
 def model_layers():
-    return [("alexnet", alexnet()), ("resnet18", resnet18()), ("vgg16", vgg16())]
+    # mirror of fleet/traffic.rs::model_layers — real op geometry,
+    # MobileNetV1 included
+    return [("alexnet", suites.alexnet()), ("resnet18", suites.resnet18()),
+            ("vgg16", suites.vgg16()), ("mobilenet_v1", suites.mobilenet_v1())]
 
 
 def offered_load(n, rate, seed, batch=None):
@@ -57,9 +41,9 @@ def offered_load(n, rate, seed, batch=None):
         u = max(rng.next_f64(), F64_MIN_POSITIVE)
         t += -math.log(u) / rate
         model, layers = models[rng.range_usize(0, len(models) - 1)]
-        problem = rng.choose(layers)
+        op = rng.choose(layers)
         b = batch if batch is not None else [1, 2, 4, 8][rng.range_usize(0, 3)]
-        out.append((t, problem, b, model))
+        out.append((t, op, b, model))
     return out
 
 
@@ -117,11 +101,22 @@ def main():
             check(c <= n * single * (1 + 1e-9), f"{p.label()}: amortizes at n={n}")
             last = c
     # fleet makespan floor/ceiling on identical jobs
+    op_templates = [ConvOp.dense(p) for p in templates]
+    op_templates.append(ConvOp.strided(ConvProblem.multi(8, 28, 16, 3), 2, 1))
+    op_templates.append(ConvOp.depthwise(16, 14, 3, 1))
+    for t in op_templates:
+        single = ops.batched_op_dispatch_seconds(t, 1, g)
+        last = 0.0
+        for n in range(1, 9):
+            c = ops.batched_op_dispatch_seconds(t, n, g)
+            check(last < c <= n * single * (1 + 1e-9),
+                  f"{t.label()}: op dispatch monotone+amortizing at n={n}")
+            last = c
     for d in (1, 2, 4, 8):
         f = Fleet([g] * d, LEAST_LOADED, 64)
-        single = f.predicted_service(templates[0], 1, 0)
+        single = f.predicted_service(op_templates[0], 1, 0)
         for _ in range(24):
-            assert f.submit(templates[0], 1) is not None
+            assert f.submit(op_templates[0], 1) is not None
         makespan = max(c.finish for c in f.drain())
         floor = 24 / d * single
         import math
@@ -133,8 +128,8 @@ def main():
     # capacity probe priced like the fleet prices: dispatched per spec
     n = 512
     probe = offered_load(256, 1.0, 0xF1EE7)
-    mean_service = sum(backends.dispatched_batched_seconds(p, b, g)
-                       for (_, p, b, _) in probe) / len(probe)
+    mean_service = sum(ops.batched_op_dispatch_seconds(o, b, g)
+                       for (_, o, b, _) in probe) / len(probe)
     rate = 6.0 / mean_service
     load = offered_load(n, rate, 0xF1EE7)
     print(f"\noffered rate {rate:.0f} req/s (6x one 1080Ti), {n} requests")

@@ -17,8 +17,8 @@
 use std::collections::BTreeMap;
 
 use pasconv::backend::Dispatcher;
-use pasconv::conv::suites::{all_cnn_layers, fig4_suite, fig5_suite};
-use pasconv::conv::ConvProblem;
+use pasconv::conv::suites::{all_cnn_layers, all_cnn_ops, fig4_suite, fig5_suite, mobilenet_v1};
+use pasconv::conv::{ConvOp, ConvProblem};
 use pasconv::gpusim::{gtx_1080ti, titan_x_maxwell, GpuSpec};
 use pasconv::util::bench::Table;
 use pasconv::util::cli::Args;
@@ -85,6 +85,62 @@ fn run_suite(
     r
 }
 
+/// The op-level half of the ablation: every model op (stride / pad /
+/// groups included) ranked against the naive lowered paper-tuned floor.
+fn run_op_suite(
+    registry: &Dispatcher,
+    name: &str,
+    suite: &[ConvOp],
+    g: &GpuSpec,
+    check_only: bool,
+) -> SuiteResult {
+    let mut table =
+        Table::new(&["op", "lowered floor (µs)", "dispatched (µs)", "speedup", "backend"]);
+    let mut speedups = Vec::with_capacity(suite.len());
+    let mut wins: BTreeMap<String, usize> = BTreeMap::new();
+    for op in suite {
+        let d = registry.decide_op(op, g);
+        // the ISSUE-5 acceptance gate: never lose to the lowered floor
+        assert!(
+            d.cycles <= d.tuned_cycles * (1.0 + 1e-9),
+            "{}: op dispatcher lost ({} > {})",
+            op.label(),
+            d.cycles,
+            d.tuned_cycles
+        );
+        if d.backend != "paper-tuned" {
+            *wins.entry(d.backend.clone()).or_insert(0) += 1;
+        }
+        speedups.push(d.speedup());
+        table.row(&[
+            op.label(),
+            format!("{:.1}", g.cycles_to_secs(d.tuned_cycles) * 1e6),
+            format!("{:.1}", g.cycles_to_secs(d.cycles) * 1e6),
+            format!("{:.2}x", d.speedup()),
+            d.backend.clone(),
+        ]);
+    }
+    let r = SuiteResult {
+        geomean: geomean(&speedups),
+        max: speedups.iter().cloned().fold(1.0, f64::max),
+        wins,
+    };
+    println!("-- {name} on {} ({} ops) --", g.name, suite.len());
+    if !check_only {
+        table.print();
+    }
+    let non_paper: usize = r.wins.values().sum();
+    println!(
+        "   geomean {:.3}x  max {:.2}x  non-paper wins {}/{} {:?}\n",
+        r.geomean,
+        r.max,
+        non_paper,
+        suite.len(),
+        r.wins
+    );
+    r
+}
+
 fn main() {
     let args = Args::parse();
     let check_only = args.has("check");
@@ -99,6 +155,20 @@ fn main() {
         run_suite(&registry, "CNN model layers", &all_cnn_layers(), &g, check_only),
         run_suite(&registry, "Fig. 5 suite (portability)", &fig5_suite(), &t, check_only),
     ];
+
+    // ---- the op layer: model ops vs the naive lowered floor ----
+    let op_results = [
+        run_op_suite(&registry, "All model ops (5 models)", &all_cnn_ops(), &g, check_only),
+        run_op_suite(&registry, "MobileNetV1 ops", &mobilenet_v1(), &g, check_only),
+        run_op_suite(&registry, "MobileNetV1 ops (portability)", &mobilenet_v1(), &t, check_only),
+    ];
+    for r in &op_results {
+        assert!(r.geomean >= 1.0 - 1e-9, "op suite geomean below 1.0: {}", r.geomean);
+    }
+    // native stride/group schedules must genuinely beat the naive
+    // lowering somewhere (the strided ResNet/MobileNet regime)
+    let best_op = op_results.iter().map(|r| r.max).fold(0.0, f64::max);
+    assert!(best_op > 1.05, "no op ever beat its naive lowering ({best_op})");
 
     // ---- the gates CI runs this bench for ----
     // geomean >= 1.0 everywhere (never-lose, aggregated)...

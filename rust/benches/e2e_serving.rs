@@ -44,7 +44,7 @@ fn run_mixed(n: usize, conv_burst: usize, cfg: BatchConfig) -> (f64, u64) {
     let mut templates = vec![];
     for kind in [ArtifactKind::ConvSingle, ArtifactKind::ConvMulti] {
         for a in rt.artifacts_of_kind(kind) {
-            templates.push(a.problem().unwrap());
+            templates.push(pasconv::conv::ConvOp::dense(a.problem().unwrap()));
         }
     }
     drop(rt);

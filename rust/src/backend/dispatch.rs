@@ -1,27 +1,35 @@
-//! Cross-backend autodispatch: price every legal backend for a problem
+//! Cross-backend autodispatch: price every legal backend for a conv op
 //! under the simulator and serve the fastest — cuDNN's own per-problem
-//! algorithm-choice advantage, reproduced on top of our backends.
+//! algorithm-choice advantage, reproduced on top of our backends and
+//! extended to the op layer (stride / padding / groups).
 //!
-//! The never-lose invariant is structural: the paper-tuned backend
-//! supports every valid problem, its plans are legality-gated by the
-//! tuner already, and it seeds the ranking — so the dispatcher's pick
-//! is at most `tuned_cycles`, exactly like the tuner never loses to the
-//! paper's closed forms one layer down.  Decisions are memoized in the
-//! same process-wide `PlanCache` as tuning results (extended with
-//! `kind=dispatch` entries, `pasconv tune --save/--load` persists
-//! both), so steady-state serving pays one hash lookup per problem.
+//! The never-lose invariant is structural at every level: the
+//! paper-tuned backend covers every valid op (natively — decimated
+//! strip schedule for stride, side-by-side groups on idle SMs — or
+//! through the exact lowering, whichever simulates faster), and the
+//! ranking's floor is the paper-tuned **naive lowered** schedule (full
+//! stride-1 output, sequential groups under one launch).  The floor is
+//! in the candidate set by construction, so `Decision::cycles <=
+//! Decision::tuned_cycles` always — for dense ops this degenerates to
+//! exactly the pre-op-layer problem ranking.
+//!
+//! Decisions are memoized in the same process-wide `PlanCache` as
+//! tuning results (v3 `kind=dispatch` entries carry stride/pad/groups;
+//! `pasconv tune --save/--load` persists both), so steady-state serving
+//! pays one hash lookup per op.
 //!
 //! Consumers: `graph::execute` (per-layer algorithm choice inside one
-//! model — `dispatch_plan` is a `graph::Planner`), the coordinator's
-//! `Router::warm_plans` (pre-dispatches every routed problem; the pick
-//! returns on the wire in `Response.plan`), and the fleet's per-shard
-//! job pricing (`batched_dispatch_seconds` — heterogeneous fleets can
-//! pick different algorithms per GPU generation).
+//! model — `dispatch_op_plan` is a `graph::Planner`), the
+//! coordinator's `Router::warm_plans` (pre-dispatches every routed op;
+//! the pick returns on the wire in `Response.plan`), and the fleet's
+//! per-shard job pricing (`batched_op_dispatch_seconds` —
+//! heterogeneous fleets can pick different algorithms per GPU
+//! generation).
 
 use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
 
-use crate::conv::{BatchedConv, ConvProblem};
+use crate::conv::{BatchedConv, BatchedConvOp, ConvOp, ConvProblem};
 use crate::gpusim::{simulate, GpuSpec, KernelPlan};
 use crate::tuner;
 
@@ -39,18 +47,32 @@ pub const PAPER_TUNED: &str = "paper-tuned";
 pub struct Decision {
     /// winning backend tag (one of `BACKEND_NAMES`)
     pub backend: String,
-    /// simulated cycles of the winner's plan
+    /// simulated cycles of the winner's op plan
     pub cycles: f64,
-    /// simulated cycles of the paper-tuned plan (the floor:
-    /// `cycles <= tuned_cycles` always)
+    /// simulated cycles of the paper-tuned naive lowered plan (the
+    /// floor: `cycles <= tuned_cycles` always; for dense ops this IS
+    /// the tuned paper plan)
     pub tuned_cycles: f64,
 }
 
 impl Decision {
-    /// Paper-tuned cycles over dispatched cycles (>= 1 by construction).
+    /// Paper-tuned-lowered cycles over dispatched cycles (>= 1 by
+    /// construction).
     pub fn speedup(&self) -> f64 {
         self.tuned_cycles / self.cycles
     }
+}
+
+/// The naive lowered schedule of `op` on `b`: the per-group unit plan
+/// repeated under one launch, full stride-1 output.  For dense ops this
+/// is just `b.plan(core)`.  The paper-tuned instance of this is the
+/// dispatcher's never-lose floor.
+fn lowered_plan(b: &dyn ConvBackend, op: &ConvOp, spec: &GpuSpec) -> KernelPlan {
+    if op.is_dense() {
+        return b.plan(&op.core, spec);
+    }
+    let l = op.lower();
+    b.plan(&l.unit, spec).batched(l.groups)
 }
 
 /// A backend registry + the ranking logic.  `Dispatcher::full()` is the
@@ -92,37 +114,60 @@ impl Dispatcher {
         self.backends.iter().filter(|b| b.supports(p)).map(|b| b.as_ref()).collect()
     }
 
-    /// Full ranking for one problem: simulate every supporting backend
-    /// whose plan is launchable on `spec` (`tuner::is_legal` — same
-    /// occupancy gate the tuner applies to its own candidates), keep
-    /// the fastest.  Ties stay with the earlier registry entry, so the
-    /// paper-tuned floor wins exact ties deterministically.
-    pub fn decide(&self, p: &ConvProblem, spec: &GpuSpec) -> Decision {
-        self.decide_n(p, 1, spec)
+    /// Backends whose op coverage (native or lowered) includes `op`.
+    pub fn op_candidates(&self, op: &ConvOp) -> Vec<&dyn ConvBackend> {
+        self.backends
+            .iter()
+            .filter(|b| b.op_coverage(op).supported())
+            .map(|b| b.as_ref())
+            .collect()
     }
 
-    /// `decide` for a batch: backends are ranked on their batch-`n`
-    /// schedules directly (launch overhead amortizes differently per
-    /// backend — the ranking can legitimately flip with `n`).
+    /// Full ranking for one dense problem (the historical entry point;
+    /// identical to `decide_op` on the dense-wrapped op).
+    pub fn decide(&self, p: &ConvProblem, spec: &GpuSpec) -> Decision {
+        self.decide_op_n(&ConvOp::dense(*p), 1, spec)
+    }
+
+    /// `decide` for a dense batch.
     pub fn decide_batched(&self, b: &BatchedConv, spec: &GpuSpec) -> Decision {
         assert!(b.valid(), "invalid batched problem");
-        self.decide_n(&b.problem, b.n, spec)
+        self.decide_op_n(&ConvOp::dense(b.problem), b.n, spec)
     }
 
-    /// The one ranking routine both entry points share
+    /// Full ranking for one op.
+    pub fn decide_op(&self, op: &ConvOp, spec: &GpuSpec) -> Decision {
+        self.decide_op_n(op, 1, spec)
+    }
+
+    /// `decide_op` for a batch: backends are ranked on their batch-`n`
+    /// op schedules directly.
+    pub fn decide_batched_op(&self, b: &BatchedConvOp, spec: &GpuSpec) -> Decision {
+        assert!(b.valid(), "invalid batched op");
+        self.decide_op_n(&b.op, b.n, spec)
+    }
+
+    /// The one ranking routine every entry point shares
     /// (`KernelPlan::batched(1)` is the identity, so n = 1 IS the
-    /// single-image ranking) — the legality gate and tie-breaking live
-    /// only here, mirrored once by `python/mirror/backends.py`.
-    fn decide_n(&self, p: &ConvProblem, n: usize, spec: &GpuSpec) -> Decision {
+    /// single-image ranking) — the floor, the legality gate and
+    /// tie-breaking live only here, mirrored once by
+    /// `python/mirror/backends.py`.  Ties stay with the earlier
+    /// registry entry, so the paper-tuned floor wins exact ties
+    /// deterministically.
+    fn decide_op_n(&self, op: &ConvOp, n: usize, spec: &GpuSpec) -> Decision {
+        assert!(op.valid(), "invalid op {op:?}");
         let tuned = self.backend(PAPER_TUNED).expect("paper-tuned backend in every registry");
-        assert!(tuned.supports(p), "invalid problem {p:?}");
-        let tuned_cycles = simulate(spec, &tuned.plan(p, spec).batched(n)).cycles;
-        let mut best = (PAPER_TUNED, tuned_cycles);
+        // the never-lose floor: the paper-tuned naive lowering
+        let tuned_cycles = simulate(spec, &lowered_plan(tuned, op, spec).batched(n)).cycles;
+        // paper-tuned serves min(native, lowered), so its entry never
+        // prices above its own floor
+        let mut best =
+            (PAPER_TUNED, simulate(spec, &tuned.op_plan(op, spec).batched(n)).cycles);
         for b in &self.backends {
-            if b.name() == PAPER_TUNED || !b.supports(p) {
+            if b.name() == PAPER_TUNED || !b.op_coverage(op).supported() {
                 continue;
             }
-            let plan = b.plan(p, spec);
+            let plan = b.op_plan(op, spec);
             if !tuner::is_legal(spec, &plan) {
                 continue;
             }
@@ -141,72 +186,95 @@ pub fn registry() -> &'static Dispatcher {
     REGISTRY.get_or_init(Dispatcher::full)
 }
 
-/// Memoized dispatch decision for `(p, spec)` — one full ranking per
+/// Memoized dispatch decision for `(op, spec)` — one full ranking per
 /// process (or zero, when preloaded via `tuner::preload`).
-pub fn dispatched(p: &ConvProblem, spec: &GpuSpec) -> Decision {
-    if let Some(d) = tuner::cached_dispatch(p, spec) {
+pub fn op_dispatched(op: &ConvOp, spec: &GpuSpec) -> Decision {
+    if let Some(d) = tuner::cached_dispatch(op, spec) {
         return d;
     }
     // rank outside the cache lock: deciding tunes the paper floor,
     // which takes the same lock
-    let d = registry().decide(p, spec);
-    tuner::store_dispatch(p, spec, d.clone());
+    let d = registry().decide_op(op, spec);
+    tuner::store_dispatch(op, spec, d.clone());
     d
 }
 
-/// The dispatched `KernelPlan` for a problem — a `graph::Planner`, so
-/// `graph::execute(&g, &spec, backend::dispatch_plan)` gives every
+/// Memoized dispatch decision for a dense problem.
+pub fn dispatched(p: &ConvProblem, spec: &GpuSpec) -> Decision {
+    op_dispatched(&ConvOp::dense(*p), spec)
+}
+
+/// The dispatched `KernelPlan` for an op — a `graph::Planner`, so
+/// `graph::execute(&g, &spec, backend::dispatch_op_plan)` gives every
 /// layer of a model its own algorithm.
-pub fn dispatch_plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
-    let d = dispatched(p, spec);
+pub fn dispatch_op_plan(op: &ConvOp, spec: &GpuSpec) -> KernelPlan {
+    let d = op_dispatched(op, spec);
     registry()
         .backend(&d.backend)
         .expect("cached decision names a registered backend")
-        .plan(p, spec)
+        .op_plan(op, spec)
 }
 
-/// Memo key for batched decisions: (problem, batch n, spec name).
-type BatchedKey = (ConvProblem, usize, &'static str);
+/// The dispatched plan for a dense problem.
+pub fn dispatch_plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
+    dispatch_op_plan(&ConvOp::dense(*p), spec)
+}
+
+/// Memo key for batched decisions: (op, batch n, spec name).
+type BatchedKey = (ConvOp, usize, &'static str);
 
 fn batched_memo() -> &'static Mutex<HashMap<BatchedKey, Decision>> {
     static MEMO: OnceLock<Mutex<HashMap<BatchedKey, Decision>>> = OnceLock::new();
     MEMO.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
-/// Memoized batched dispatch decision (in-process only — batch sizes
-/// are a serving-time axis, not a tuning artifact worth persisting).
-pub fn batched_dispatched(b: &BatchedConv, spec: &GpuSpec) -> Decision {
+/// Memoized batched op dispatch decision (in-process only — batch
+/// sizes are a serving-time axis, not a tuning artifact worth
+/// persisting).
+pub fn batched_op_dispatched(b: &BatchedConvOp, spec: &GpuSpec) -> Decision {
     if b.n == 1 {
-        return dispatched(&b.problem, spec);
+        return op_dispatched(&b.op, spec);
     }
-    let key = (b.problem, b.n, spec.name);
+    let key = (b.op, b.n, spec.name);
     if let Some(d) = batched_memo().lock().unwrap().get(&key) {
         return d.clone();
     }
-    let d = registry().decide_batched(b, spec);
+    let d = registry().decide_batched_op(b, spec);
     batched_memo().lock().unwrap().insert(key, d.clone());
     d
 }
 
-/// The dispatched batch-`n` schedule.
+/// Memoized batched dispatch decision for a dense batch.
+pub fn batched_dispatched(b: &BatchedConv, spec: &GpuSpec) -> Decision {
+    batched_op_dispatched(&BatchedConvOp::dense(b), spec)
+}
+
+/// The dispatched batch-`n` schedule for a dense batch.
 pub fn dispatch_batched_plan(b: &BatchedConv, spec: &GpuSpec) -> KernelPlan {
-    let d = batched_dispatched(b, spec);
+    let bo = BatchedConvOp::dense(b);
+    let d = batched_op_dispatched(&bo, spec);
     registry()
         .backend(&d.backend)
         .expect("cached decision names a registered backend")
-        .batched_plan(b, spec)
+        .batched_op_plan(&bo, spec)
 }
 
-/// Predicted seconds of a batch under cross-backend dispatch — what
-/// fleet shards price jobs with (per-shard: a heterogeneous fleet's
-/// Pascal and Maxwell devices can pick different algorithms for the
-/// same job).
+/// Predicted seconds of a batched op under cross-backend dispatch —
+/// what fleet shards price jobs with (per-shard: a heterogeneous
+/// fleet's Pascal and Maxwell devices can pick different algorithms
+/// for the same job).
+pub fn batched_op_dispatch_seconds(b: &BatchedConvOp, spec: &GpuSpec) -> f64 {
+    spec.cycles_to_secs(batched_op_dispatched(b, spec).cycles)
+}
+
+/// `batched_op_dispatch_seconds` for a dense batch.
 pub fn batched_dispatch_seconds(b: &BatchedConv, spec: &GpuSpec) -> f64 {
-    spec.cycles_to_secs(batched_dispatched(b, spec).cycles)
+    batched_op_dispatch_seconds(&BatchedConvOp::dense(b), spec)
 }
 
-/// Human-readable dispatch advice (router / CLI / `Response.plan`):
-/// names the chosen backend and its margin over the paper-tuned floor.
+/// Human-readable dispatch advice for a dense problem (router / CLI /
+/// `Response.plan`): names the chosen backend and its margin over the
+/// paper-tuned floor.
 pub fn dispatch_advice(p: &ConvProblem, spec: &GpuSpec) -> String {
     let d = dispatched(p, spec);
     let plan = registry()
@@ -221,10 +289,30 @@ pub fn dispatch_advice(p: &ConvProblem, spec: &GpuSpec) -> String {
     }
 }
 
+/// Dispatch advice for an op: dense ops get the historical problem
+/// advice; lowered/native ops name the backend and the margin over the
+/// naive lowered paper-tuned floor.
+pub fn op_dispatch_advice(op: &ConvOp, spec: &GpuSpec) -> String {
+    if op.is_dense() {
+        return dispatch_advice(&op.core, spec);
+    }
+    let d = op_dispatched(op, spec);
+    let plan = registry()
+        .backend(&d.backend)
+        .expect("cached decision names a registered backend")
+        .op_plan(op, spec);
+    format!(
+        "{} (dispatch: {}, {:.2}x vs lowered paper-tuned)",
+        plan.name,
+        d.backend,
+        d.speedup()
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::conv::suites::{fig4_suite, fig5_suite};
+    use crate::conv::suites::{all_cnn_ops, fig4_suite, fig5_suite};
     use crate::gpusim::{gtx_1080ti, titan_x_maxwell};
     use crate::plans;
 
@@ -242,6 +330,23 @@ mod tests {
                 dec.tuned_cycles
             );
             assert!(dec.speedup() >= 1.0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn op_dispatch_never_loses_to_the_lowered_floor() {
+        // the op layer's acceptance gate, sampled (the full sweep runs
+        // in backend_difftests + ablation_dispatch --check)
+        let g = gtx_1080ti();
+        for op in all_cnn_ops().into_iter().step_by(4) {
+            let dec = registry().decide_op(&op, &g);
+            assert!(
+                dec.cycles <= dec.tuned_cycles * (1.0 + 1e-9),
+                "{}: op dispatch lost ({} > {})",
+                op.label(),
+                dec.cycles,
+                dec.tuned_cycles
+            );
         }
     }
 
@@ -289,6 +394,31 @@ mod tests {
     }
 
     #[test]
+    fn memoized_op_decision_matches_fresh_ranking() {
+        let g = gtx_1080ti();
+        let op = ConvOp::strided(ConvProblem::multi(64, 56, 128, 3), 2, 1);
+        let fresh = registry().decide_op(&op, &g);
+        let a = op_dispatched(&op, &g);
+        assert_eq!(a, op_dispatched(&op, &g));
+        assert_eq!(a, fresh);
+        let plan = dispatch_op_plan(&op, &g);
+        let direct = registry().backend(&a.backend).unwrap().op_plan(&op, &g);
+        assert_eq!(plan.name, direct.name);
+    }
+
+    #[test]
+    fn dense_op_decisions_equal_problem_decisions() {
+        // the degenerate case must be EXACT: the op layer changes
+        // nothing for the paper's own stride-1/valid/dense workloads
+        let g = gtx_1080ti();
+        for p in fig5_suite().into_iter().step_by(5) {
+            let via_problem = registry().decide(&p, &g);
+            let via_op = registry().decide_op(&ConvOp::dense(p), &g);
+            assert_eq!(via_problem, via_op, "{}", p.label());
+        }
+    }
+
+    #[test]
     fn batched_dispatch_bounded_by_tuned_batched_path() {
         let g = gtx_1080ti();
         let p = ConvProblem::multi(64, 56, 64, 3);
@@ -302,13 +432,13 @@ mod tests {
     }
 
     #[test]
-    fn batched_dispatch_monotone_and_amortizing() {
+    fn batched_op_dispatch_monotone_and_amortizing() {
         let g = gtx_1080ti();
-        let p = ConvProblem::multi(16, 7, 32, 3);
-        let single = batched_dispatch_seconds(&BatchedConv::single(p), &g);
+        let op = ConvOp::depthwise(64, 28, 3, 1);
+        let single = batched_op_dispatch_seconds(&BatchedConvOp::single(op), &g);
         let mut last = 0.0;
         for n in [1usize, 2, 4, 8] {
-            let t = batched_dispatch_seconds(&BatchedConv::new(p, n), &g);
+            let t = batched_op_dispatch_seconds(&BatchedConvOp::new(op, n), &g);
             assert!(t > last, "n={n}");
             assert!(t <= n as f64 * single * (1.0 + 1e-9), "n={n}: no amortization");
             last = t;
@@ -336,5 +466,7 @@ mod tests {
         assert!(wino.contains("winograd") && wino.contains("tuned"), "{wino}");
         let ours = dispatch_advice(&ConvProblem::multi(256, 14, 256, 1), &g);
         assert!(ours.contains("paper-tuned") && ours.contains("tuned"), "{ours}");
+        let dw = op_dispatch_advice(&ConvOp::depthwise(512, 14, 3, 1), &g);
+        assert!(dw.contains("lowered paper-tuned"), "{dw}");
     }
 }

@@ -8,14 +8,62 @@
 //! reference semantics in each algorithm's own traversal order
 //! (`backend::reference`).
 
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
 use crate::baselines::{cudnn_proxy, dac17, fft_conv, tan128, winograd};
-use crate::conv::{conv2d_multi_cpu, ConvProblem, BYTES_F32};
-use crate::gpusim::{GpuSpec, KernelPlan, Round};
+use crate::conv::{conv2d_multi_cpu, ConvOp, ConvProblem, BYTES_F32};
+use crate::gpusim::{simulate, GpuSpec, KernelPlan, Round};
 use crate::plans::{single_channel, stride_fixed};
 use crate::tuner;
 
 use super::reference;
-use super::ConvBackend;
+use super::{op_plan_name, ConvBackend, OpCoverage};
+
+/// The paper kernels' native op schedule: stride shrinks the output
+/// strip schedule (`KernelPlan::decimated` — only the kept rows'
+/// FMAs/writeback are charged), groups run side by side on idle SMs
+/// (`KernelPlan::grouped`), padding is already folded into the unit's
+/// enlarged map.  The naive lowered schedule (full stride-1 output,
+/// sequential groups) is priced too and the faster of the two served —
+/// the same never-lose structure as the tuner one layer down, so the
+/// paper backends' op route can never price above their own lowering.
+/// The native-vs-lowered outcome is memoized per (op, spec, unit
+/// source): the serving path materializes dispatched plans per request,
+/// and re-simulating both routes every time would make "serving never
+/// searches" a lie on non-dense ops.
+fn paper_op_plan(unit: KernelPlan, op: &ConvOp, spec: &GpuSpec, tuned_unit: bool) -> KernelPlan {
+    static CHOICE: OnceLock<Mutex<HashMap<(ConvOp, &'static str, bool), bool>>> =
+        OnceLock::new();
+    let memo = CHOICE.get_or_init(|| Mutex::new(HashMap::new()));
+    let l = op.lower();
+    let build_native = |unit: &KernelPlan| {
+        let mut p = unit.decimated(op.output_keep_fraction()).grouped(l.groups, spec.sm_count);
+        p.name = op_plan_name(&unit.name, op, true);
+        p
+    };
+    let build_lowered = |unit: &KernelPlan| {
+        let mut p = unit.batched(l.groups);
+        p.name = op_plan_name(&unit.name, op, false);
+        p
+    };
+    let key = (*op, spec.name, tuned_unit);
+    let cached = memo.lock().unwrap().get(&key).copied();
+    let native_wins = match cached {
+        Some(w) => w,
+        None => {
+            let w = simulate(spec, &build_native(&unit)).cycles
+                <= simulate(spec, &build_lowered(&unit)).cycles;
+            memo.lock().unwrap().insert(key, w);
+            w
+        }
+    };
+    if native_wins {
+        build_native(&unit)
+    } else {
+        build_lowered(&unit)
+    }
+}
 
 /// Every registered backend tag, in dispatcher registry order.  Cache
 /// entries (`kind=dispatch backend=...`) must carry one of these.
@@ -47,6 +95,22 @@ impl ConvBackend for PaperTuned {
         tuner::tuned_plan(p, spec)
     }
 
+    fn op_coverage(&self, op: &ConvOp) -> OpCoverage {
+        if op.valid() {
+            OpCoverage::Native
+        } else {
+            OpCoverage::Unsupported
+        }
+    }
+
+    fn op_plan(&self, op: &ConvOp, spec: &GpuSpec) -> KernelPlan {
+        assert!(op.valid(), "invalid op {op:?}");
+        if op.is_dense() {
+            return self.plan(&op.core, spec);
+        }
+        paper_op_plan(self.plan(&op.lower().unit, spec), op, spec, true)
+    }
+
     fn execute_reference(&self, p: &ConvProblem, image: &[f32], filters: &[f32]) -> Vec<f32> {
         paper_reference(p, image, filters)
     }
@@ -72,6 +136,22 @@ impl ConvBackend for PaperClosedForm {
         } else {
             stride_fixed::plan(p, spec)
         }
+    }
+
+    fn op_coverage(&self, op: &ConvOp) -> OpCoverage {
+        if op.valid() {
+            OpCoverage::Native
+        } else {
+            OpCoverage::Unsupported
+        }
+    }
+
+    fn op_plan(&self, op: &ConvOp, spec: &GpuSpec) -> KernelPlan {
+        assert!(op.valid(), "invalid op {op:?}");
+        if op.is_dense() {
+            return self.plan(&op.core, spec);
+        }
+        paper_op_plan(self.plan(&op.lower().unit, spec), op, spec, false)
     }
 
     fn execute_reference(&self, p: &ConvProblem, image: &[f32], filters: &[f32]) -> Vec<f32> {
@@ -325,6 +405,34 @@ mod tests {
             let r = simulate(&g, &b.plan(&p, &g));
             assert!(r.seconds > 0.0 && r.seconds.is_finite(), "{}", b.name());
         }
+    }
+
+    #[test]
+    fn paper_native_op_route_never_loses_to_its_own_lowering() {
+        let g = gtx_1080ti();
+        for op in [
+            ConvOp::strided(ConvProblem::multi(64, 56, 128, 3), 2, 1),
+            ConvOp::strided(ConvProblem::multi(64, 56, 128, 1), 2, 0),
+            ConvOp::depthwise(32, 112, 3, 2),
+            ConvOp::same(ConvProblem::multi(128, 28, 128, 3)),
+        ] {
+            assert_eq!(PaperTuned.op_coverage(&op), OpCoverage::Native, "{}", op.label());
+            let l = op.lower();
+            let lowered = PaperTuned.plan(&l.unit, &g).batched(l.groups);
+            let native = PaperTuned.op_plan(&op, &g);
+            assert!(
+                simulate(&g, &native).cycles
+                    <= simulate(&g, &lowered).cycles * (1.0 + 1e-9),
+                "{}: native op route lost to its own lowering",
+                op.label()
+            );
+        }
+        // strided decimation is a genuine win, not just a tie
+        let s2 = ConvOp::strided(ConvProblem::multi(64, 56, 128, 3), 2, 1);
+        let l = s2.lower();
+        let lowered = simulate(&g, &PaperTuned.plan(&l.unit, &g).batched(l.groups)).cycles;
+        let native = simulate(&g, &PaperTuned.op_plan(&s2, &g)).cycles;
+        assert!(native < lowered * 0.95, "stride-2 native {native} vs lowered {lowered}");
     }
 
     #[test]

@@ -42,16 +42,40 @@ mod impls;
 pub mod reference;
 
 pub use dispatch::{
-    batched_dispatch_seconds, dispatch_advice, dispatch_batched_plan, dispatch_plan, dispatched,
-    Decision, Dispatcher,
+    batched_dispatch_seconds, batched_op_dispatch_seconds, batched_op_dispatched,
+    dispatch_advice, dispatch_batched_plan, dispatch_op_plan, dispatch_plan, dispatched,
+    op_dispatch_advice, op_dispatched, Decision, Dispatcher,
 };
 pub use impls::{
     CpuReference, CudnnProxy, Dac17, FftConv, PaperClosedForm, PaperTuned, Tan128, Winograd,
     BACKEND_NAMES,
 };
 
-use crate::conv::{BatchedConv, ConvProblem};
+use crate::conv::{op as convop, BatchedConv, BatchedConvOp, ConvOp, ConvProblem};
 use crate::gpusim::{simulate, GpuSpec, KernelPlan};
+
+/// How a backend covers a `ConvOp` (the op layer's honest analogue of
+/// `supports()`): natively — its own schedule handles the op's
+/// stride/pad/groups — or through the exact lowering (pad folded into
+/// the map, groups batched under one launch, stride-1 output computed
+/// in full and decimated).  The dispatcher prices native routes
+/// against the paper-tuned LOWERED floor, which it structurally never
+/// loses to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpCoverage {
+    /// the backend's own schedule expresses the op (no wasted work)
+    Native,
+    /// served through the exact lowering onto stride-1/valid/dense
+    Lowered,
+    /// neither the op nor its lowered unit is in the support envelope
+    Unsupported,
+}
+
+impl OpCoverage {
+    pub fn supported(&self) -> bool {
+        !matches!(self, OpCoverage::Unsupported)
+    }
+}
 
 /// One convolution algorithm as an executable backend.  Object-safe:
 /// the dispatcher holds `Box<dyn ConvBackend>` and iterates the
@@ -102,6 +126,118 @@ pub trait ConvBackend: Send + Sync {
     /// differential-test contract; see the module docs).
     fn execute_reference(&self, p: &ConvProblem, image: &[f32], filters: &[f32]) -> Vec<f32>;
 
+    // ---- the op layer: stride / padding / groups ----
+
+    /// Op coverage.  Default: dense ops inherit `supports()` natively;
+    /// everything else is served through the exact lowering whenever
+    /// the lowered unit is in the envelope.  The paper backends
+    /// override this — their strip schedules handle stride natively
+    /// (decimated output schedule) and groups natively (side-by-side
+    /// groups on idle SMs).
+    fn op_coverage(&self, op: &ConvOp) -> OpCoverage {
+        if !op.valid() {
+            return OpCoverage::Unsupported;
+        }
+        if op.is_dense() {
+            return if self.supports(&op.core) {
+                OpCoverage::Native
+            } else {
+                OpCoverage::Unsupported
+            };
+        }
+        if self.supports(&op.lower().unit) {
+            OpCoverage::Lowered
+        } else {
+            OpCoverage::Unsupported
+        }
+    }
+
+    /// The schedule this backend would run for an op.  Default: the
+    /// naive lowered schedule — the per-group unit plan repeated under
+    /// ONE launch (`KernelPlan::batched`), computing the full stride-1
+    /// output.  May only be called where `op_coverage` is supported.
+    fn op_plan(&self, op: &ConvOp, spec: &GpuSpec) -> KernelPlan {
+        assert!(
+            self.op_coverage(op).supported(),
+            "{} cannot run {}",
+            self.name(),
+            op.label()
+        );
+        if op.is_dense() {
+            return self.plan(&op.core, spec);
+        }
+        let l = op.lower();
+        let unit = self.plan(&l.unit, spec);
+        let mut plan = unit.batched(l.groups);
+        plan.name = op_plan_name(&unit.name, op, false);
+        plan
+    }
+
+    /// The batch-`n` op schedule (one launch, warm pipeline).
+    fn batched_op_plan(&self, b: &BatchedConvOp, spec: &GpuSpec) -> KernelPlan {
+        assert!(b.valid(), "invalid batched op");
+        self.op_plan(&b.op, spec).batched(b.n)
+    }
+
+    /// Simulated cycles of the op schedule on `spec`.
+    fn op_cycles(&self, op: &ConvOp, spec: &GpuSpec) -> f64 {
+        simulate(spec, &self.op_plan(op, spec)).cycles
+    }
+
+    /// `op_cycles` in seconds.
+    fn op_seconds(&self, op: &ConvOp, spec: &GpuSpec) -> f64 {
+        spec.cycles_to_secs(self.op_cycles(op, spec))
+    }
+
+    /// Simulated cycles of the batch-`n` op schedule.
+    fn batched_op_cycles(&self, b: &BatchedConvOp, spec: &GpuSpec) -> f64 {
+        simulate(spec, &self.batched_op_plan(b, spec)).cycles
+    }
+
+    /// `batched_op_cycles` in seconds — what fleet shards accumulate.
+    fn batched_op_seconds(&self, b: &BatchedConvOp, spec: &GpuSpec) -> f64 {
+        spec.cycles_to_secs(self.batched_op_cycles(b, spec))
+    }
+
+    /// Op semantics through this backend's own unit traversal: the
+    /// exact lowering (zero-embed per group -> `execute_reference` on
+    /// the unit -> decimate -> concatenate).  Bit-identical to
+    /// `conv::conv2d_op_cpu` on every supported op, because
+    /// `execute_reference` is bit-identical to the oracle on the unit
+    /// and the lowering identities are exact (see `conv::op`).
+    fn execute_op_reference(&self, op: &ConvOp, image: &[f32], filters: &[f32]) -> Vec<f32> {
+        assert!(
+            self.op_coverage(op).supported(),
+            "{} cannot run {}",
+            self.name(),
+            op.label()
+        );
+        convop::conv2d_op_lowered_with(op, image, filters, &|p, img, flt| {
+            self.execute_reference(p, img, flt)
+        })
+    }
+
+    /// Batched op reference: `n` independent single-image op runs.
+    fn execute_op_reference_batched(
+        &self,
+        b: &BatchedConvOp,
+        images: &[f32],
+        filters: &[f32],
+    ) -> Vec<f32> {
+        assert!(b.valid(), "invalid batched op");
+        assert_eq!(images.len(), b.map_elems(), "batched op image size");
+        let per_in = b.op.map_elems();
+        let mut out = Vec::with_capacity(b.out_elems());
+        for i in 0..b.n {
+            out.extend(self.execute_op_reference(
+                &b.op,
+                &images[i * per_in..(i + 1) * per_in],
+                filters,
+            ));
+        }
+        out
+    }
+
     /// Batched reference semantics: definitionally `n` independent
     /// single-image runs (the same contract as `conv2d_batched_cpu`).
     fn execute_reference_batched(
@@ -124,6 +260,24 @@ pub trait ConvBackend: Send + Sync {
         }
         out
     }
+}
+
+/// The op-plan display name: the unit plan's name plus the op's
+/// schedule tags (" gG" for groups, " sS" for stride), with " lowered"
+/// appended when the stride-1 output is computed in full and decimated
+/// afterwards (the naive route) rather than natively shrunk.
+pub(crate) fn op_plan_name(unit_name: &str, op: &ConvOp, native: bool) -> String {
+    let mut s = unit_name.to_string();
+    if op.groups > 1 {
+        s.push_str(&format!(" g{}", op.groups));
+    }
+    if op.stride > 1 {
+        s.push_str(&format!(" s{}", op.stride));
+    }
+    if !native && !op.is_dense() {
+        s.push_str(" lowered");
+    }
+    s
 }
 
 #[cfg(test)]
@@ -175,5 +329,82 @@ mod tests {
         let backend = PaperClosedForm;
         let c = backend.cycles(&p, &g);
         assert!((backend.seconds(&p, &g) - g.cycles_to_secs(c)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn dense_op_coverage_and_plan_match_the_problem_path() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(16, 14, 16, 3);
+        let op = ConvOp::dense(p);
+        for b in [&PaperTuned as &dyn ConvBackend, &PaperClosedForm, &CudnnProxy] {
+            assert_eq!(b.op_coverage(&op), OpCoverage::Native, "{}", b.name());
+            assert_eq!(b.op_plan(&op, &g).name, b.plan(&p, &g).name, "{}", b.name());
+            assert!((b.op_cycles(&op, &g) - b.cycles(&p, &g)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn default_lowered_op_plan_batches_the_unit() {
+        let g = gtx_1080ti();
+        let op = ConvOp { core: ConvProblem::multi(8, 14, 8, 3), stride: 1, pad: 1, groups: 2 };
+        let b = CudnnProxy;
+        assert_eq!(b.op_coverage(&op), OpCoverage::Lowered);
+        let plan = b.op_plan(&op, &g);
+        assert!(plan.name.contains("g2") && plan.name.contains("lowered"), "{}", plan.name);
+        let unit = b.plan(&op.lower().unit, &g);
+        assert_eq!(plan.rounds.len(), 2 * unit.rounds.len());
+    }
+
+    #[test]
+    fn op_coverage_respects_unit_envelopes() {
+        // winograd's K=3 envelope applies to the lowered unit; a K=5
+        // depthwise op is out, a K=3 depthwise op is in (single-channel
+        // unit); tan128 rejects depthwise entirely (single-channel unit)
+        let dw3 = ConvOp::depthwise(8, 14, 3, 1);
+        let dw5 = ConvOp::depthwise(8, 14, 5, 1);
+        assert!(Winograd.op_coverage(&dw3).supported());
+        assert!(!Winograd.op_coverage(&dw5).supported());
+        assert!(!Tan128.op_coverage(&dw3).supported());
+        let invalid = ConvOp { core: ConvProblem::multi(3, 8, 4, 3), stride: 1, pad: 0, groups: 2 };
+        assert_eq!(PaperTuned.op_coverage(&invalid), OpCoverage::Unsupported);
+    }
+
+    #[test]
+    fn op_reference_bit_identical_to_generalized_oracle() {
+        let mut rng = Rng::new(0x0A11);
+        let ops = [
+            ConvOp::same(ConvProblem::multi(4, 9, 6, 3)),
+            ConvOp::strided(ConvProblem::multi(3, 11, 4, 3), 2, 1),
+            ConvOp::depthwise(6, 10, 3, 2),
+        ];
+        for op in ops {
+            let image = rng.normal_vec(op.map_elems());
+            let filters = rng.normal_vec(op.filter_elems());
+            let oracle = crate::conv::conv2d_op_cpu(&op, &image, &filters);
+            for b in [&PaperTuned as &dyn ConvBackend, &CpuReference, &CudnnProxy] {
+                let got = b.execute_op_reference(&op, &image, &filters);
+                assert!(
+                    got.len() == oracle.len()
+                        && got.iter().zip(&oracle).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} diverges on {}",
+                    b.name(),
+                    op.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_op_cycles_monotone_and_amortizing() {
+        let g = gtx_1080ti();
+        let op = ConvOp::strided(ConvProblem::multi(16, 28, 32, 3), 2, 1);
+        let single = PaperTuned.batched_op_cycles(&BatchedConvOp::single(op), &g);
+        let mut last = 0.0;
+        for n in [1usize, 2, 4, 8] {
+            let c = PaperTuned.batched_op_cycles(&BatchedConvOp::new(op, n), &g);
+            assert!(c > last, "n={n}");
+            assert!(c <= n as f64 * single * (1.0 + 1e-9), "n={n}: no amortization");
+            last = c;
+        }
     }
 }

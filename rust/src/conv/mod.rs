@@ -1,13 +1,19 @@
-//! Convolution problem domain: shapes (`problem`), batched serving
-//! payloads (`batched`), the paper's workload suites (`suites`), and a
-//! direct CPU implementation used as the rust-side numeric oracle
-//! (`cpu`).
+//! Convolution problem domain: shapes (`problem`), the first-class op
+//! layer with stride/padding/groups and its exact lowering (`op`),
+//! batched serving payloads (`batched`), the workload suites
+//! (`suites`), and a direct CPU implementation used as the rust-side
+//! numeric oracle (`cpu`).
 
 pub mod batched;
 pub mod cpu;
+pub mod op;
 pub mod problem;
 pub mod suites;
 
 pub use batched::{conv2d_batched_cpu, BatchedConv};
 pub use cpu::{conv2d_multi_cpu, conv2d_single_cpu, max_abs_diff};
+pub use op::{
+    conv2d_batched_op_cpu, conv2d_op_cpu, conv2d_op_lowered_cpu, conv2d_op_lowered_with,
+    decimate, zero_embed, BatchedConvOp, ConvOp, Lowering,
+};
 pub use problem::{ConvProblem, BYTES_F32};

@@ -1,0 +1,560 @@
+//! First-class convolution op: stride / padding / grouped (incl.
+//! depthwise) convolution over a `ConvProblem` core, with an **exact
+//! lowering** onto the paper-supported stride-1 / valid / dense regime.
+//!
+//! The paper's kernels (§3) compute stride-1 valid dense convolutions.
+//! Real networks also need 'same' padding (VGG/ResNet bodies), stride-2
+//! downsampling (ResNet stage transitions, MobileNet), and grouped /
+//! depthwise convolution (the whole MobileNet family).  `ConvOp` makes
+//! those parameters first-class and `lower()` maps any op onto the
+//! paper regime exactly:
+//!
+//!  * **padding** folds into an enlarged map — a valid conv over the
+//!    zero-embedded `(Wy+2p) x (Wx+2p)` map IS the padded conv
+//!    (bit-identically: the extra terms are `0 * w`, which never change
+//!    an f64 accumulator);
+//!  * **groups** split into `G` per-group sub-problems of `C/G`
+//!    channels and `M/G` filters, batched under one launch
+//!    (`KernelPlan::batched`/`grouped` on the timing side, a
+//!    concatenation of per-group convs on the numeric side);
+//!  * **stride** is handled by output decimation in the reference
+//!    (compute the stride-1 output, keep every `stride`-th row/column)
+//!    and natively in the cost model by shrinking the output strip
+//!    schedule (`KernelPlan::decimated` — only the kept outputs'
+//!    FMAs/writeback are charged; the backend layer prices that
+//!    against the naive compute-everything floor).
+//!
+//! The generalized CPU reference (`conv2d_op_cpu`) and the lowered
+//! path (`conv2d_op_lowered_cpu`) are **bit-identical** by
+//! construction; `rust/tests/op_proptests.rs` pins the zero-embed,
+//! decimation and per-group-concatenation identities.
+
+use super::cpu::conv2d_multi_cpu;
+use super::problem::{ConvProblem, BYTES_F32};
+
+/// One convolution op instance: the paper's problem core plus the
+/// parameters real networks need.  `core` describes the *unpadded*
+/// input geometry — `c` total input channels on a `wy x wx` map, `m`
+/// total filters of size `k x k x (c/groups)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ConvOp {
+    pub core: ConvProblem,
+    /// output sampling stride (1 = the paper's dense output)
+    pub stride: usize,
+    /// symmetric zero padding on each map edge (0 = valid)
+    pub pad: usize,
+    /// filter groups: channels and filters split into `groups` equal
+    /// parts, group g's filters reading only group g's channels
+    /// (groups == c == m is depthwise)
+    pub groups: usize,
+}
+
+impl ConvOp {
+    /// The paper's regime: stride 1, valid, dense.
+    pub fn dense(core: ConvProblem) -> ConvOp {
+        ConvOp { core, stride: 1, pad: 0, groups: 1 }
+    }
+
+    /// 'same' convolution (odd K): stride 1, pad (K-1)/2 — output map
+    /// equals the input map.
+    pub fn same(core: ConvProblem) -> ConvOp {
+        assert!(core.k % 2 == 1, "'same' padding needs odd K");
+        ConvOp { core, stride: 1, pad: (core.k - 1) / 2, groups: 1 }
+    }
+
+    /// Strided dense convolution with explicit padding.
+    pub fn strided(core: ConvProblem, stride: usize, pad: usize) -> ConvOp {
+        ConvOp { core, stride, pad, groups: 1 }
+    }
+
+    /// Depthwise KxK ('same'-padded): one filter per channel.
+    pub fn depthwise(c: usize, w: usize, k: usize, stride: usize) -> ConvOp {
+        assert!(k % 2 == 1, "depthwise 'same' needs odd K");
+        ConvOp { core: ConvProblem::multi(c, w, c, k), stride, pad: (k - 1) / 2, groups: c }
+    }
+
+    /// Pointwise 1x1 dense convolution.
+    pub fn pointwise(c: usize, w: usize, m: usize) -> ConvOp {
+        ConvOp::dense(ConvProblem::multi(c, w, m, 1))
+    }
+
+    /// Is this op already in the paper regime (no lowering needed)?
+    pub fn is_dense(&self) -> bool {
+        self.stride == 1 && self.pad == 0 && self.groups == 1
+    }
+
+    pub fn is_depthwise(&self) -> bool {
+        self.groups > 1 && self.groups == self.core.c && self.groups == self.core.m
+    }
+
+    /// Padded map height/width.
+    pub fn padded_wy(&self) -> usize {
+        self.core.wy + 2 * self.pad
+    }
+
+    pub fn padded_wx(&self) -> usize {
+        self.core.wx + 2 * self.pad
+    }
+
+    /// Output height: floor((Wy + 2p - K) / stride) + 1.
+    pub fn oy(&self) -> usize {
+        (self.padded_wy() - self.core.k) / self.stride + 1
+    }
+
+    pub fn ox(&self) -> usize {
+        (self.padded_wx() - self.core.k) / self.stride + 1
+    }
+
+    pub fn valid(&self) -> bool {
+        let p = &self.core;
+        p.c >= 1
+            && p.m >= 1
+            && p.k >= 1
+            && p.wy >= 1
+            && p.wx >= 1
+            && self.stride >= 1
+            && self.groups >= 1
+            && p.c % self.groups == 0
+            && p.m % self.groups == 0
+            // the kernel must always overlap at least one real input
+            // element: pad < K, and the padded map must fit the kernel
+            && self.pad < p.k
+            && self.padded_wy() >= p.k
+            && self.padded_wx() >= p.k
+    }
+
+    /// Input elements (unpadded, as stored): C * Wy * Wx.
+    pub fn map_elems(&self) -> usize {
+        self.core.map_elems()
+    }
+
+    /// Filter elements: M * (C/G) * K * K — grouped filters only read
+    /// their group's channels.
+    pub fn filter_elems(&self) -> usize {
+        self.core.m * (self.core.c / self.groups) * self.core.k * self.core.k
+    }
+
+    /// Output elements: M * Oy * Ox.
+    pub fn out_elems(&self) -> usize {
+        self.core.m * self.oy() * self.ox()
+    }
+
+    /// FMAs to compute the op's own output (not the lowered
+    /// super-set): out_elems * (C/G) * K * K.
+    pub fn fma_ops(&self) -> u64 {
+        self.out_elems() as u64
+            * ((self.core.c / self.groups) * self.core.k * self.core.k) as u64
+    }
+
+    /// Compulsory DRAM bytes: inputs once + filters once + outputs once.
+    pub fn compulsory_bytes(&self) -> usize {
+        (self.map_elems() + self.filter_elems() + self.out_elems()) * BYTES_F32
+    }
+
+    /// Exact lowering onto the paper regime.
+    pub fn lower(&self) -> Lowering {
+        assert!(self.valid(), "invalid op {self:?}");
+        let unit = ConvProblem {
+            c: self.core.c / self.groups,
+            wy: self.padded_wy(),
+            wx: self.padded_wx(),
+            m: self.core.m / self.groups,
+            k: self.core.k,
+        };
+        Lowering { unit, groups: self.groups, stride: self.stride }
+    }
+
+    /// Fraction of the lowered unit's stride-1 output this op keeps
+    /// (1.0 for stride 1; the cost model's decimation factor).
+    pub fn output_keep_fraction(&self) -> f64 {
+        let l = self.lower();
+        (self.oy() * self.ox()) as f64 / (l.unit.oy() * l.unit.ox()) as f64
+    }
+
+    pub fn label(&self) -> String {
+        if self.is_dense() {
+            return self.core.label();
+        }
+        let mut s = self.core.label();
+        if self.stride > 1 {
+            s.push_str(&format!(" s{}", self.stride));
+        }
+        if self.pad > 0 {
+            s.push_str(&format!(" p{}", self.pad));
+        }
+        if self.groups > 1 {
+            if self.is_depthwise() {
+                s.push_str(" dw");
+            } else {
+                s.push_str(&format!(" g{}", self.groups));
+            }
+        }
+        s
+    }
+}
+
+/// An op lowered onto the paper regime: `groups` independent copies of
+/// the stride-1 valid dense `unit` (on the zero-embedded map), whose
+/// outputs are decimated by `stride`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Lowering {
+    /// the per-group stride-1 valid dense problem (padded map folded in)
+    pub unit: ConvProblem,
+    pub groups: usize,
+    pub stride: usize,
+}
+
+/// Zero-embed a `c x wy x wx` tensor into its `(wy+2p) x (wx+2p)` frame.
+pub fn zero_embed(image: &[f32], c: usize, wy: usize, wx: usize, pad: usize) -> Vec<f32> {
+    assert_eq!(image.len(), c * wy * wx, "embed input size");
+    if pad == 0 {
+        return image.to_vec();
+    }
+    let (py, px) = (wy + 2 * pad, wx + 2 * pad);
+    let mut out = vec![0f32; c * py * px];
+    for ch in 0..c {
+        for y in 0..wy {
+            let src = ch * wy * wx + y * wx;
+            let dst = ch * py * px + (y + pad) * px + pad;
+            out[dst..dst + wx].copy_from_slice(&image[src..src + wx]);
+        }
+    }
+    out
+}
+
+/// Keep every `stride`-th row and column of an `m x oy x ox` stride-1
+/// output (the lowering's output decimation).
+pub fn decimate(full: &[f32], m: usize, oy: usize, ox: usize, stride: usize) -> Vec<f32> {
+    assert_eq!(full.len(), m * oy * ox, "decimate input size");
+    if stride == 1 {
+        return full.to_vec();
+    }
+    let (dy, dx) = ((oy - 1) / stride + 1, (ox - 1) / stride + 1);
+    let mut out = Vec::with_capacity(m * dy * dx);
+    for fm in 0..m {
+        for y in (0..oy).step_by(stride) {
+            for x in (0..ox).step_by(stride) {
+                out.push(full[fm * oy * ox + y * ox + x]);
+            }
+        }
+    }
+    out
+}
+
+/// Generalized direct CPU reference: eq.(1) with stride / padding /
+/// groups.  Layouts: image `(C, Wy, Wx)`, filters `(M, C/G, K, K)`,
+/// output `(M, Oy, Ox)`.  Each output element accumulates its real
+/// terms in ascending (group-local channel, i, j) order into one f64 —
+/// the same chain the lowered path produces, so the two are
+/// bit-identical.
+pub fn conv2d_op_cpu(op: &ConvOp, image: &[f32], filters: &[f32]) -> Vec<f32> {
+    assert!(op.valid(), "invalid op {op:?}");
+    assert_eq!(image.len(), op.map_elems(), "op image size");
+    assert_eq!(filters.len(), op.filter_elems(), "op filter size");
+    let (wy, wx, k) = (op.core.wy, op.core.wx, op.core.k);
+    let (c_g, m_g) = (op.core.c / op.groups, op.core.m / op.groups);
+    let (oy, ox) = (op.oy(), op.ox());
+    let (stride, pad) = (op.stride, op.pad);
+    let mut out = vec![0f32; op.out_elems()];
+    for g in 0..op.groups {
+        for fl in 0..m_g {
+            let fm = g * m_g + fl;
+            let fbase = fm * c_g * k * k;
+            for y in 0..oy {
+                for x in 0..ox {
+                    let mut acc = 0f64;
+                    for cl in 0..c_g {
+                        let ch = g * c_g + cl;
+                        for i in 0..k {
+                            let iy = (y * stride + i) as isize - pad as isize;
+                            if iy < 0 || iy >= wy as isize {
+                                continue;
+                            }
+                            for j in 0..k {
+                                let ix = (x * stride + j) as isize - pad as isize;
+                                if ix < 0 || ix >= wx as isize {
+                                    continue;
+                                }
+                                acc += image[ch * wy * wx + iy as usize * wx + ix as usize]
+                                    as f64
+                                    * filters[fbase + cl * k * k + i * k + j] as f64;
+                            }
+                        }
+                    }
+                    out[fm * oy * ox + y * ox + x] = acc as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The exact lowered execution with a pluggable stride-1 unit kernel:
+/// zero-embed each group's channels, run `unit_conv` (any routine
+/// bit-identical to `conv2d_multi_cpu` on the unit problem), decimate,
+/// concatenate per-group outputs.  Bit-identical to `conv2d_op_cpu`
+/// whenever `unit_conv` is bit-identical to the oracle — padding terms
+/// are `0 * w` (never change an f64 accumulator) and decimation picks
+/// finished elements.
+pub fn conv2d_op_lowered_with(
+    op: &ConvOp,
+    image: &[f32],
+    filters: &[f32],
+    unit_conv: &dyn Fn(&ConvProblem, &[f32], &[f32]) -> Vec<f32>,
+) -> Vec<f32> {
+    assert!(op.valid(), "invalid op {op:?}");
+    assert_eq!(image.len(), op.map_elems(), "op image size");
+    assert_eq!(filters.len(), op.filter_elems(), "op filter size");
+    let l = op.lower();
+    let (wy, wx) = (op.core.wy, op.core.wx);
+    let (c_g, m_g) = (l.unit.c, l.unit.m);
+    let group_filters = m_g * c_g * op.core.k * op.core.k;
+    let mut out = Vec::with_capacity(op.out_elems());
+    for g in 0..l.groups {
+        let embedded =
+            zero_embed(&image[g * c_g * wy * wx..(g + 1) * c_g * wy * wx], c_g, wy, wx, op.pad);
+        let full = unit_conv(
+            &l.unit,
+            &embedded,
+            &filters[g * group_filters..(g + 1) * group_filters],
+        );
+        out.extend(decimate(&full, m_g, l.unit.oy(), l.unit.ox(), l.stride));
+    }
+    out
+}
+
+/// `conv2d_op_lowered_with` over the plain-loop oracle — the default
+/// lowered executor (what the serving path's CPU fallback runs).
+pub fn conv2d_op_lowered_cpu(op: &ConvOp, image: &[f32], filters: &[f32]) -> Vec<f32> {
+    conv2d_op_lowered_with(op, image, filters, &|p, img, flt| conv2d_multi_cpu(p, img, flt))
+}
+
+/// A batch of `n` images through one op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BatchedConvOp {
+    pub op: ConvOp,
+    pub n: usize,
+}
+
+impl BatchedConvOp {
+    pub fn new(op: ConvOp, n: usize) -> BatchedConvOp {
+        BatchedConvOp { op, n }
+    }
+
+    pub fn single(op: ConvOp) -> BatchedConvOp {
+        BatchedConvOp { op, n: 1 }
+    }
+
+    /// A dense batched op from the historical batched problem.
+    pub fn dense(b: &super::batched::BatchedConv) -> BatchedConvOp {
+        BatchedConvOp { op: ConvOp::dense(b.problem), n: b.n }
+    }
+
+    pub fn valid(&self) -> bool {
+        self.n >= 1 && self.op.valid()
+    }
+
+    pub fn map_elems(&self) -> usize {
+        self.n * self.op.map_elems()
+    }
+
+    pub fn filter_elems(&self) -> usize {
+        self.op.filter_elems()
+    }
+
+    pub fn out_elems(&self) -> usize {
+        self.n * self.op.out_elems()
+    }
+
+    pub fn label(&self) -> String {
+        format!("{} xb{}", self.op.label(), self.n)
+    }
+}
+
+/// Batched generalized reference: definitionally `n` independent
+/// single-image `conv2d_op_cpu` runs.
+pub fn conv2d_batched_op_cpu(b: &BatchedConvOp, images: &[f32], filters: &[f32]) -> Vec<f32> {
+    assert!(b.valid(), "invalid batched op");
+    assert_eq!(images.len(), b.map_elems(), "batched op image size");
+    let per_in = b.op.map_elems();
+    let mut out = Vec::with_capacity(b.out_elems());
+    for i in 0..b.n {
+        out.extend(conv2d_op_cpu(&b.op, &images[i * per_in..(i + 1) * per_in], filters));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn bit_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn dense_op_is_the_plain_problem() {
+        let p = ConvProblem::multi(4, 10, 6, 3);
+        let op = ConvOp::dense(p);
+        assert!(op.is_dense() && op.valid());
+        assert_eq!((op.oy(), op.ox()), (p.oy(), p.ox()));
+        assert_eq!(op.filter_elems(), p.filter_elems());
+        assert_eq!(op.fma_ops(), p.fma_ops());
+        assert_eq!(op.label(), p.label());
+        assert_eq!(op.lower().unit, p);
+        let mut rng = Rng::new(3);
+        let image = rng.normal_vec(p.map_elems());
+        let filters = rng.normal_vec(p.filter_elems());
+        let direct = conv2d_op_cpu(&op, &image, &filters);
+        assert!(bit_eq(&direct, &crate::conv::conv2d_multi_cpu(&p, &image, &filters)));
+    }
+
+    #[test]
+    fn same_padding_shapes() {
+        let op = ConvOp::same(ConvProblem::multi(8, 14, 16, 3));
+        assert_eq!(op.pad, 1);
+        assert_eq!((op.oy(), op.ox()), (14, 14));
+        let op5 = ConvOp::same(ConvProblem::multi(8, 28, 16, 5));
+        assert_eq!(op5.pad, 2);
+        assert_eq!(op5.oy(), 28);
+    }
+
+    #[test]
+    fn strided_shapes_match_the_conv_formula() {
+        // ResNet stage transition: 3x3/s2 'same' on 56 -> 28
+        let op = ConvOp::strided(ConvProblem::multi(64, 56, 128, 3), 2, 1);
+        assert_eq!((op.oy(), op.ox()), (28, 28));
+        // 1x1/s2 projection: 56 -> 28
+        let proj = ConvOp::strided(ConvProblem::multi(64, 56, 128, 1), 2, 0);
+        assert_eq!(proj.oy(), 28);
+        // MobileNet conv1: 3x3/s2 p1 on 224 -> 112
+        let c1 = ConvOp::strided(ConvProblem::multi(3, 224, 32, 3), 2, 1);
+        assert_eq!(c1.oy(), 112);
+    }
+
+    #[test]
+    fn depthwise_accounting() {
+        let dw = ConvOp::depthwise(32, 112, 3, 1);
+        assert!(dw.valid() && dw.is_depthwise());
+        assert_eq!(dw.filter_elems(), 32 * 9, "one KxK filter per channel");
+        assert_eq!(dw.out_elems(), 32 * 112 * 112);
+        assert_eq!(dw.fma_ops(), (32 * 112 * 112 * 9) as u64);
+        let l = dw.lower();
+        assert_eq!(l.groups, 32);
+        assert_eq!(l.unit, ConvProblem { c: 1, wy: 114, wx: 114, m: 1, k: 3 });
+    }
+
+    #[test]
+    fn validity_rules() {
+        let p = ConvProblem::multi(6, 8, 9, 3);
+        assert!(!ConvOp { core: p, stride: 0, pad: 0, groups: 1 }.valid());
+        assert!(!ConvOp { core: p, stride: 1, pad: 3, groups: 1 }.valid(), "pad >= K");
+        assert!(!ConvOp { core: p, stride: 1, pad: 0, groups: 4 }.valid(), "C % G != 0");
+        assert!(!ConvOp { core: p, stride: 1, pad: 0, groups: 2 }.valid(), "M % G != 0");
+        assert!(ConvOp { core: p, stride: 2, pad: 1, groups: 3 }.valid());
+        // padding can make an otherwise-too-small map legal
+        let tiny = ConvProblem::multi(2, 2, 2, 3);
+        assert!(!ConvOp::dense(tiny).valid());
+        assert!(ConvOp { core: tiny, stride: 1, pad: 1, groups: 1 }.valid());
+    }
+
+    #[test]
+    fn zero_embed_frames_exactly() {
+        let image: Vec<f32> = (1..=8).map(|i| i as f32).collect(); // 2ch 2x2
+        let out = zero_embed(&image, 2, 2, 2, 1);
+        assert_eq!(out.len(), 2 * 16);
+        // channel 0 centre
+        assert_eq!(out[5], 1.0);
+        assert_eq!(out[6], 2.0);
+        assert_eq!(out[9], 3.0);
+        assert_eq!(out[10], 4.0);
+        // frame is zero
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[15], 0.0);
+        assert!(bit_eq(&zero_embed(&image, 2, 2, 2, 0), &image));
+    }
+
+    #[test]
+    fn decimate_picks_the_grid() {
+        let full: Vec<f32> = (0..16).map(|i| i as f32).collect(); // 1 x 4x4
+        assert_eq!(decimate(&full, 1, 4, 4, 2), vec![0.0, 2.0, 8.0, 10.0]);
+        assert_eq!(decimate(&full, 1, 4, 4, 3), vec![0.0, 3.0, 12.0, 15.0]);
+        assert!(bit_eq(&decimate(&full, 1, 4, 4, 1), &full));
+    }
+
+    #[test]
+    fn lowered_identities_bit_exact() {
+        let mut rng = Rng::new(0x0505);
+        let cases = [
+            ConvOp::same(ConvProblem::multi(4, 9, 6, 3)),
+            ConvOp::strided(ConvProblem::multi(3, 11, 4, 3), 2, 1),
+            ConvOp::strided(ConvProblem::multi(2, 12, 4, 3), 3, 0),
+            ConvOp { core: ConvProblem::multi(6, 8, 9, 3), stride: 2, pad: 1, groups: 3 },
+            ConvOp::depthwise(5, 10, 3, 2),
+            ConvOp::pointwise(7, 6, 4),
+        ];
+        for op in cases {
+            let image = rng.normal_vec(op.map_elems());
+            let filters = rng.normal_vec(op.filter_elems());
+            let direct = conv2d_op_cpu(&op, &image, &filters);
+            let lowered = conv2d_op_lowered_cpu(&op, &image, &filters);
+            assert!(bit_eq(&direct, &lowered), "{} diverges", op.label());
+            assert_eq!(direct.len(), op.out_elems());
+        }
+    }
+
+    #[test]
+    fn grouped_equals_concatenated_per_group_convs() {
+        let op = ConvOp { core: ConvProblem::multi(6, 8, 4, 3), stride: 1, pad: 0, groups: 2 };
+        let mut rng = Rng::new(0x6666);
+        let image = rng.normal_vec(op.map_elems());
+        let filters = rng.normal_vec(op.filter_elems());
+        let got = conv2d_op_cpu(&op, &image, &filters);
+        let unit = op.lower().unit; // C=3, M=2
+        let mut want = vec![];
+        for g in 0..2 {
+            want.extend(crate::conv::conv2d_multi_cpu(
+                &unit,
+                &image[g * unit.map_elems()..(g + 1) * unit.map_elems()],
+                &filters[g * unit.filter_elems()..(g + 1) * unit.filter_elems()],
+            ));
+        }
+        assert!(bit_eq(&got, &want));
+    }
+
+    #[test]
+    fn keep_fraction_and_labels() {
+        let op = ConvOp::strided(ConvProblem::multi(64, 56, 128, 3), 2, 1);
+        let l = op.lower();
+        assert_eq!(l.unit.oy(), 56);
+        let keep = op.output_keep_fraction();
+        assert!((keep - (28.0 * 28.0) / (56.0 * 56.0)).abs() < 1e-12);
+        assert!(op.label().contains("s2") && op.label().contains("p1"), "{}", op.label());
+        assert!(ConvOp::depthwise(8, 14, 3, 1).label().contains("dw"));
+    }
+
+    #[test]
+    fn batched_op_loops_single_images_bitwise() {
+        let op = ConvOp::strided(ConvProblem::multi(3, 10, 4, 3), 2, 1);
+        let b = BatchedConvOp::new(op, 3);
+        assert!(b.valid());
+        let mut rng = Rng::new(0xB0B);
+        let images = rng.normal_vec(b.map_elems());
+        let filters = rng.normal_vec(b.filter_elems());
+        let batched = conv2d_batched_op_cpu(&b, &images, &filters);
+        for i in 0..b.n {
+            let single = conv2d_op_cpu(
+                &op,
+                &images[i * op.map_elems()..(i + 1) * op.map_elems()],
+                &filters,
+            );
+            assert!(bit_eq(
+                &batched[i * op.out_elems()..(i + 1) * op.out_elems()],
+                &single
+            ));
+        }
+        assert!(b.label().contains("xb3"));
+        assert!(!BatchedConvOp::new(op, 0).valid());
+    }
+}

@@ -1,12 +1,23 @@
-//! Workload suites — the convolutions the paper evaluates.
+//! Workload suites — the convolutions the paper evaluates, and the
+//! op-level model suites the graph/fleet layers serve.
 //!
 //! §4: "performances were evaluated using many convolutions which are
 //! commonly used in popular CNN models [AlexNet][ResNet][VGG][GoogLeNet]".
 //! Fig. 4 sweeps single-channel maps 28 -> 1K with M 512 -> 32 and
 //! K in {1,3,5}; Fig. 5 sweeps multi-channel maps 7 -> 512 with C
-//! 64 -> 512.  The CNN-model suites give the realistic layer mixes the
-//! examples and the e2e bench serve.
+//! 64 -> 512.  Those figure suites stay `ConvProblem` lists — they are
+//! the paper's own stride-1/valid/dense evaluation points.
+//!
+//! The CNN-model suites are `ConvOp` lists with the networks' real
+//! geometry: 'same' padding everywhere the models use it, ResNet-18's
+//! true stride-2 downsampling convs and stride-2 1x1 projections (the
+//! old stride-1-at-pooled-size approximation is gone), and the
+//! MobileNetV1 depthwise-separable stack the op layer exists for.
+//! `all_cnn_layers` exposes the deduplicated *lowered units* — the
+//! stride-1 kernels the models actually execute — for the tuner and
+//! dispatcher sweeps.
 
+use super::op::ConvOp;
 use super::problem::ConvProblem;
 
 /// The paper's filter sizes: "The filter size is 1, 3 or 5".
@@ -46,45 +57,49 @@ pub fn fig5_suite() -> Vec<ConvProblem> {
     out
 }
 
-/// AlexNet [15] stride-1 conv layers (conv2 uses K=5 on 27x27 after pool;
-/// conv3-5 are K=3 on 13x13 maps — the "smaller than 32" regime).
-pub fn alexnet() -> Vec<ConvProblem> {
+/// AlexNet [15] conv body (conv2 on the 27x27 post-pool map, conv3-5 on
+/// 13x13 — the "smaller than 32" regime), with its real 'same' padding.
+pub fn alexnet() -> Vec<ConvOp> {
     vec![
-        ConvProblem::multi(96, 27, 256, 5),
-        ConvProblem::multi(256, 13, 384, 3),
-        ConvProblem::multi(384, 13, 384, 3),
-        ConvProblem::multi(384, 13, 256, 3),
+        ConvOp::same(ConvProblem::multi(96, 27, 256, 5)),
+        ConvOp::same(ConvProblem::multi(256, 13, 384, 3)),
+        ConvOp::same(ConvProblem::multi(384, 13, 384, 3)),
+        ConvOp::same(ConvProblem::multi(384, 13, 256, 3)),
     ]
 }
 
-/// VGG-16 [6] conv layers (all K=3, maps 224 -> 14).
-pub fn vgg16() -> Vec<ConvProblem> {
+/// VGG-16 [6] conv layers (all 'same' 3x3, maps 224 -> 14).
+pub fn vgg16() -> Vec<ConvOp> {
     vec![
-        ConvProblem::multi(3, 224, 64, 3),
-        ConvProblem::multi(64, 224, 64, 3),
-        ConvProblem::multi(64, 112, 128, 3),
-        ConvProblem::multi(128, 112, 128, 3),
-        ConvProblem::multi(128, 56, 256, 3),
-        ConvProblem::multi(256, 56, 256, 3),
-        ConvProblem::multi(256, 28, 512, 3),
-        ConvProblem::multi(512, 28, 512, 3),
-        ConvProblem::multi(512, 14, 512, 3),
+        ConvOp::same(ConvProblem::multi(3, 224, 64, 3)),
+        ConvOp::same(ConvProblem::multi(64, 224, 64, 3)),
+        ConvOp::same(ConvProblem::multi(64, 112, 128, 3)),
+        ConvOp::same(ConvProblem::multi(128, 112, 128, 3)),
+        ConvOp::same(ConvProblem::multi(128, 56, 256, 3)),
+        ConvOp::same(ConvProblem::multi(256, 56, 256, 3)),
+        ConvOp::same(ConvProblem::multi(256, 28, 512, 3)),
+        ConvOp::same(ConvProblem::multi(512, 28, 512, 3)),
+        ConvOp::same(ConvProblem::multi(512, 14, 512, 3)),
     ]
 }
 
-/// ResNet-18 [9] body layers (K=3 blocks + K=1 projections, maps 56 -> 7).
-pub fn resnet18() -> Vec<ConvProblem> {
+/// ResNet-18 [9] body layers with their REAL geometry: 'same' 3x3
+/// blocks on 56/28/14/7 maps, and native stride-2 downsampling at
+/// every stage transition — the 3x3/s2 first conv and the 1x1/s2
+/// projection both run on the PREVIOUS stage's map (the seed's
+/// stride-1-at-pooled-size approximation is deleted).
+pub fn resnet18() -> Vec<ConvOp> {
     vec![
-        ConvProblem::multi(64, 56, 64, 3),
-        ConvProblem::multi(64, 28, 128, 3),
-        ConvProblem::multi(64, 28, 128, 1),
-        ConvProblem::multi(128, 28, 128, 3),
-        ConvProblem::multi(128, 14, 256, 3),
-        ConvProblem::multi(128, 14, 256, 1),
-        ConvProblem::multi(256, 14, 256, 3),
-        ConvProblem::multi(256, 7, 512, 3),
-        ConvProblem::multi(256, 7, 512, 1),
-        ConvProblem::multi(512, 7, 512, 3),
+        ConvOp::same(ConvProblem::multi(64, 56, 64, 3)),
+        ConvOp::strided(ConvProblem::multi(64, 56, 128, 3), 2, 1),
+        ConvOp::strided(ConvProblem::multi(64, 56, 128, 1), 2, 0),
+        ConvOp::same(ConvProblem::multi(128, 28, 128, 3)),
+        ConvOp::strided(ConvProblem::multi(128, 28, 256, 3), 2, 1),
+        ConvOp::strided(ConvProblem::multi(128, 28, 256, 1), 2, 0),
+        ConvOp::same(ConvProblem::multi(256, 14, 256, 3)),
+        ConvOp::strided(ConvProblem::multi(256, 14, 512, 3), 2, 1),
+        ConvOp::strided(ConvProblem::multi(256, 14, 512, 1), 2, 0),
+        ConvOp::same(ConvProblem::multi(512, 7, 512, 3)),
     ]
 }
 
@@ -92,46 +107,117 @@ pub fn resnet18() -> Vec<ConvProblem> {
 /// parallel branches over the 192-channel 28x28 input, concatenated to
 /// 256 channels.  Each inner `Vec` is one branch in execution order
 /// (the reduce conv feeds the following conv); the fourth branch's 1x1
-/// projection follows the cell's 3x3 max pool.  `graph::inception3a_graph`
-/// builds the DAG from this.
-pub fn googlenet_inception3a_branches() -> Vec<Vec<ConvProblem>> {
+/// projection follows the cell's 3x3 max pool.  The 3x3/5x5 convs use
+/// their real 'same' padding.  `graph::inception3a_graph` builds the
+/// DAG from this.
+pub fn googlenet_inception3a_branches() -> Vec<Vec<ConvOp>> {
     vec![
         // 1x1 branch
-        vec![ConvProblem::multi(192, 28, 64, 1)],
+        vec![ConvOp::dense(ConvProblem::multi(192, 28, 64, 1))],
         // 1x1 reduce -> 3x3 branch
-        vec![ConvProblem::multi(192, 28, 96, 1), ConvProblem::multi(96, 28, 128, 3)],
+        vec![
+            ConvOp::dense(ConvProblem::multi(192, 28, 96, 1)),
+            ConvOp::same(ConvProblem::multi(96, 28, 128, 3)),
+        ],
         // 1x1 reduce -> 5x5 branch
-        vec![ConvProblem::multi(192, 28, 16, 1), ConvProblem::multi(16, 28, 32, 5)],
+        vec![
+            ConvOp::dense(ConvProblem::multi(192, 28, 16, 1)),
+            ConvOp::same(ConvProblem::multi(16, 28, 32, 5)),
+        ],
         // 3x3 maxpool -> 1x1 projection branch
-        vec![ConvProblem::multi(192, 28, 32, 1)],
+        vec![ConvOp::dense(ConvProblem::multi(192, 28, 32, 1))],
     ]
 }
 
 /// GoogLeNet [11] inception(3a) branches on the 28x28 map (K in {1,3,5})
 /// — the flat layer list the per-layer sweeps use (the branch order of
 /// `googlenet_inception3a_branches`, flattened).
-pub fn googlenet_inception3a() -> Vec<ConvProblem> {
+pub fn googlenet_inception3a() -> Vec<ConvOp> {
     googlenet_inception3a_branches().into_iter().flatten().collect()
 }
 
-/// All CNN-model layers, deduplicated — "many convolutions commonly used
-/// in popular CNN models".
-pub fn all_cnn_layers() -> Vec<ConvProblem> {
-    let mut out: Vec<ConvProblem> = vec![];
-    for p in alexnet().into_iter().chain(vgg16()).chain(resnet18()).chain(googlenet_inception3a()) {
-        if !out.contains(&p) {
-            out.push(p);
+/// MobileNetV1 [Howard et al.] at width 1.0 on 224x224 input: the
+/// strided first conv, then 13 depthwise-separable blocks (depthwise
+/// 3x3 s1/s2 + pointwise 1x1) — 27 conv ops, none of which the
+/// pre-op-layer stack could even represent.
+pub fn mobilenet_v1() -> Vec<ConvOp> {
+    let mut out = vec![ConvOp::strided(ConvProblem::multi(3, 224, 32, 3), 2, 1)];
+    // (channels in, dw stride, channels out) per separable block
+    let blocks: [(usize, usize, usize); 13] = [
+        (32, 1, 64),
+        (64, 2, 128),
+        (128, 1, 128),
+        (128, 2, 256),
+        (256, 1, 256),
+        (256, 2, 512),
+        (512, 1, 512),
+        (512, 1, 512),
+        (512, 1, 512),
+        (512, 1, 512),
+        (512, 1, 512),
+        (512, 2, 1024),
+        (1024, 1, 1024),
+    ];
+    let mut w = 112;
+    for &(c_in, stride, c_out) in &blocks {
+        out.push(ConvOp::depthwise(c_in, w, 3, stride));
+        w /= stride;
+        out.push(ConvOp::pointwise(c_in, w, c_out));
+    }
+    out
+}
+
+/// Every model suite by canonical name, in `graph::MODEL_NAMES` order.
+pub fn model_ops() -> Vec<(&'static str, Vec<ConvOp>)> {
+    vec![
+        ("alexnet", alexnet()),
+        ("vgg16", vgg16()),
+        ("resnet18", resnet18()),
+        ("inception3a", googlenet_inception3a()),
+        ("mobilenet_v1", mobilenet_v1()),
+    ]
+}
+
+/// All model ops (all five models), deduplicated, in model order.
+pub fn all_cnn_ops() -> Vec<ConvOp> {
+    let mut out: Vec<ConvOp> = vec![];
+    for (_, ops) in model_ops() {
+        for op in ops {
+            if !out.contains(&op) {
+                out.push(op);
+            }
         }
     }
     out
 }
 
-/// The fraction of layers on maps < 32 — the paper's §1 claim that "more
+/// The deduplicated **lowered units** of the four §4 models — the
+/// stride-1 valid dense problems their ops actually execute on the
+/// paper kernels ("many convolutions commonly used in popular CNN
+/// models").  This is what the tuner and the dispatcher ablations
+/// sweep; MobileNet's units join through `all_cnn_ops` at the op level.
+pub fn all_cnn_layers() -> Vec<ConvProblem> {
+    let mut out: Vec<ConvProblem> = vec![];
+    for op in alexnet()
+        .into_iter()
+        .chain(vgg16())
+        .chain(resnet18())
+        .chain(googlenet_inception3a())
+    {
+        let unit = op.lower().unit;
+        if !out.contains(&unit) {
+            out.push(unit);
+        }
+    }
+    out
+}
+
+/// The fraction of ops on maps < 32 — the paper's §1 claim that "more
 /// than half of the convolution layers are used for the calculation of
 /// the images smaller than 32 (such as 28, 14, 7)".
-pub fn small_map_fraction(layers: &[ConvProblem]) -> f64 {
-    let small = layers.iter().filter(|p| p.wy < 32).count();
-    small as f64 / layers.len() as f64
+pub fn small_map_fraction(ops: &[ConvOp]) -> f64 {
+    let small = ops.iter().filter(|o| o.core.wy < 32).count();
+    small as f64 / ops.len() as f64
 }
 
 #[cfg(test)]
@@ -160,10 +246,53 @@ mod tests {
 
     #[test]
     fn cnn_suites_valid() {
-        for suite in [alexnet(), vgg16(), resnet18(), googlenet_inception3a()] {
-            assert!(!suite.is_empty());
-            assert!(suite.iter().all(|p| p.valid()), "invalid problem in suite");
+        for (name, suite) in model_ops() {
+            assert!(!suite.is_empty(), "{name}");
+            assert!(suite.iter().all(|o| o.valid()), "invalid op in {name}");
         }
+    }
+
+    #[test]
+    fn resnet18_has_native_downsampling() {
+        let ops = resnet18();
+        assert_eq!(ops.len(), 10);
+        let strided: Vec<&ConvOp> = ops.iter().filter(|o| o.stride == 2).collect();
+        assert_eq!(strided.len(), 6, "three stage transitions, conv + projection each");
+        for o in &strided {
+            // stride-2 ops run on the PREVIOUS stage's map and halve it
+            assert_eq!(o.oy() * 2, o.core.wy);
+            if o.core.k == 1 {
+                assert_eq!(o.pad, 0);
+            } else {
+                assert_eq!(o.pad, 1);
+            }
+        }
+        // no stride-1-at-pooled-size approximations survive: every
+        // 3x3 body conv keeps its map via 'same' padding
+        for o in &ops {
+            if o.stride == 1 {
+                assert_eq!(o.oy(), o.core.wy, "{}", o.label());
+            }
+        }
+    }
+
+    #[test]
+    fn mobilenet_v1_is_a_separable_stack() {
+        let ops = mobilenet_v1();
+        assert_eq!(ops.len(), 27, "conv1 + 13 x (dw + pw)");
+        assert_eq!(ops[0].stride, 2);
+        let dw: Vec<&ConvOp> = ops.iter().filter(|o| o.is_depthwise()).collect();
+        assert_eq!(dw.len(), 13);
+        assert_eq!(dw.iter().filter(|o| o.stride == 2).count(), 4);
+        // blocks chain: dw keeps channels, pw expands them; final 1024x7x7
+        let last = ops.last().unwrap();
+        assert_eq!((last.core.m, last.oy()), (1024, 7));
+        for pair in ops.windows(2) {
+            assert_eq!(pair[0].core.m, pair[1].core.c, "stack does not chain");
+            assert_eq!(pair[0].oy(), pair[1].core.wy, "stack maps do not chain");
+        }
+        // depthwise ops were unrepresentable pre-op-layer
+        assert!(dw.iter().all(|o| o.groups == o.core.c && o.filter_elems() == o.core.c * 9));
     }
 
     #[test]
@@ -176,16 +305,33 @@ mod tests {
     }
 
     #[test]
-    fn all_cnn_layers_dedups() {
+    fn all_cnn_layers_are_deduped_lowered_units() {
         let all = all_cnn_layers();
-        let total =
-            alexnet().len() + vgg16().len() + resnet18().len() + googlenet_inception3a().len();
-        assert!(all.len() <= total);
+        assert!(all.iter().all(|p| p.valid()));
         for (i, a) in all.iter().enumerate() {
             for b in &all[i + 1..] {
-                assert_ne!(a, b, "duplicate problem survived dedup");
+                assert_ne!(a, b, "duplicate unit survived dedup");
             }
         }
+        // 'same' ops surface padded-map units
+        assert!(all.contains(&ConvProblem::multi(64, 58, 64, 3)), "resnet 56+2 unit");
+        assert!(all.contains(&ConvProblem::multi(3, 226, 64, 3)), "vgg 224+2 unit");
+        // valid 1x1 projections stay unpadded
+        assert!(all.contains(&ConvProblem::multi(64, 56, 128, 1)));
+        // ops and units agree in count for the §4 models (no collisions)
+        assert_eq!(all.len(), 29);
+    }
+
+    #[test]
+    fn all_cnn_ops_cover_every_model() {
+        let ops = all_cnn_ops();
+        for (name, suite) in model_ops() {
+            for op in suite {
+                assert!(ops.contains(&op), "{name}: {} missing", op.label());
+            }
+        }
+        assert!(ops.iter().any(|o| o.is_depthwise()));
+        assert!(ops.iter().any(|o| o.stride == 2));
     }
 
     #[test]
@@ -193,28 +339,26 @@ mod tests {
         let branches = googlenet_inception3a_branches();
         assert_eq!(branches.len(), 4);
         // within a branch, each conv's filters become the next conv's
-        // channels (the structural fact the flat list cannot express)
+        // channels, and 'same' padding keeps the map at 28 throughout
         for branch in &branches {
             for pair in branch.windows(2) {
-                assert_eq!(pair[0].m, pair[1].c, "branch does not chain");
-                assert_eq!(pair[0].wy, pair[1].wy, "branch changes maps");
+                assert_eq!(pair[0].core.m, pair[1].core.c, "branch does not chain");
+                assert_eq!(pair[0].oy(), pair[1].core.wy, "branch changes maps");
             }
         }
-        // all branches start from the cell's 192-channel input (the pool
-        // branch too — 3x3/s1 pooling keeps channels) and share the map
         for branch in &branches {
-            assert_eq!(branch[0].c, 192);
-            assert!(branch.iter().all(|p| p.wy == 28));
+            assert_eq!(branch[0].core.c, 192);
+            assert!(branch.iter().all(|o| o.core.wy == 28 && o.oy() == 28));
         }
         // concat channel count is the GoogLeNet table's 256
-        let out_channels: usize = branches.iter().map(|b| b.last().unwrap().m).sum();
+        let out_channels: usize = branches.iter().map(|b| b.last().unwrap().core.m).sum();
         assert_eq!(out_channels, 256);
         // flattening preserves the historical flat list
         let flat = googlenet_inception3a();
         assert_eq!(flat.len(), 6);
-        assert_eq!(flat[0], ConvProblem::multi(192, 28, 64, 1));
-        assert_eq!(flat[2], ConvProblem::multi(96, 28, 128, 3));
-        assert_eq!(flat[5], ConvProblem::multi(192, 28, 32, 1));
+        assert_eq!(flat[0], ConvOp::dense(ConvProblem::multi(192, 28, 64, 1)));
+        assert_eq!(flat[2], ConvOp::same(ConvProblem::multi(96, 28, 128, 3)));
+        assert_eq!(flat[5], ConvOp::dense(ConvProblem::multi(192, 28, 32, 1)));
     }
 
     #[test]

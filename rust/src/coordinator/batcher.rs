@@ -14,7 +14,7 @@
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use crate::conv::ConvProblem;
+use crate::conv::ConvOp;
 
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -91,14 +91,14 @@ impl<T> Batcher<T> {
     }
 }
 
-/// Coalesces *compatible* conv requests — same `ConvProblem` — into
-/// micro-batches under one latency budget: a keyed family of `Batcher`s
-/// sharing one `BatchConfig`.  Incompatible shapes ride in separate
-/// lanes and never delay each other.
+/// Coalesces *compatible* conv requests — same `ConvOp` (shape AND
+/// stride/pad/groups) — into micro-batches under one latency budget: a
+/// keyed family of `Batcher`s sharing one `BatchConfig`.  Incompatible
+/// ops ride in separate lanes and never delay each other.
 #[derive(Debug)]
 pub struct ConvCoalescer<T> {
     cfg: BatchConfig,
-    lanes: HashMap<ConvProblem, Batcher<T>>,
+    lanes: HashMap<ConvOp, Batcher<T>>,
 }
 
 impl<T> ConvCoalescer<T> {
@@ -115,21 +115,16 @@ impl<T> ConvCoalescer<T> {
         self.lanes.values().all(|b| b.is_empty())
     }
 
-    /// Add a request to its problem's lane; returns that lane's batch if
+    /// Add a request to its op's lane; returns that lane's batch if
     /// this request closed it (size `max_batch` reached).
-    pub fn push(
-        &mut self,
-        problem: ConvProblem,
-        item: T,
-        now: Instant,
-    ) -> Option<(ConvProblem, Vec<T>)> {
+    pub fn push(&mut self, op: ConvOp, item: T, now: Instant) -> Option<(ConvOp, Vec<T>)> {
         let cfg = self.cfg;
-        let lane = self.lanes.entry(problem).or_insert_with(|| Batcher::new(cfg));
-        lane.push(item, now).map(|batch| (problem, batch))
+        let lane = self.lanes.entry(op).or_insert_with(|| Batcher::new(cfg));
+        lane.push(item, now).map(|batch| (op, batch))
     }
 
     /// Flush every lane whose oldest request has exceeded the budget.
-    pub fn poll(&mut self, now: Instant) -> Vec<(ConvProblem, Vec<T>)> {
+    pub fn poll(&mut self, now: Instant) -> Vec<(ConvOp, Vec<T>)> {
         let mut out = Vec::new();
         for (p, lane) in self.lanes.iter_mut() {
             if let Some(batch) = lane.poll(now) {
@@ -146,7 +141,7 @@ impl<T> ConvCoalescer<T> {
     }
 
     /// Flush everything (shutdown path).
-    pub fn take_all(&mut self) -> Vec<(ConvProblem, Vec<T>)> {
+    pub fn take_all(&mut self) -> Vec<(ConvOp, Vec<T>)> {
         let mut out = Vec::new();
         for (p, lane) in self.lanes.iter_mut() {
             if let Some(batch) = lane.take() {
@@ -222,12 +217,15 @@ mod tests {
         assert!(b.poll(Instant::now() + Duration::from_secs(1)).is_none());
     }
 
-    fn p1() -> ConvProblem {
-        ConvProblem::multi(8, 14, 16, 3)
+    use crate::conv::ConvProblem;
+
+    fn p1() -> ConvOp {
+        ConvOp::dense(ConvProblem::multi(8, 14, 16, 3))
     }
 
-    fn p2() -> ConvProblem {
-        ConvProblem::single(32, 16, 3)
+    fn p2() -> ConvOp {
+        // a non-dense op coalesces in its own lane, keyed by the FULL op
+        ConvOp::strided(ConvProblem::multi(8, 14, 16, 3), 2, 1)
     }
 
     #[test]
@@ -235,7 +233,7 @@ mod tests {
         let mut c: ConvCoalescer<i32> = ConvCoalescer::new(cfg(2, 1000));
         let t = Instant::now();
         assert!(c.push(p1(), 1, t).is_none());
-        assert!(c.push(p2(), 2, t).is_none(), "different shape: separate lane");
+        assert!(c.push(p2(), 2, t).is_none(), "different op params: separate lane");
         assert_eq!(c.len(), 2);
         let (p, batch) = c.push(p1(), 3, t).expect("p1 lane closed at max");
         assert_eq!(p, p1());

@@ -13,6 +13,6 @@ pub mod workload;
 pub use batcher::{BatchConfig, Batcher, ConvCoalescer};
 pub use metrics::Metrics;
 pub use request::{ModelSummary, Payload, Request, Response};
-pub use router::{plan_advice, Router};
+pub use router::{plan_advice, Router, CPU_LOWERED};
 pub use server::Coordinator;
 pub use workload::{Arrivals, Mix, Workload};

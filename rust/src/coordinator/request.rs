@@ -2,20 +2,22 @@
 
 use std::time::Instant;
 
-use crate::conv::{BatchedConv, ConvProblem};
+use crate::conv::{BatchedConvOp, ConvOp};
 use crate::runtime::Tensor;
 
 /// What a client asks for.
 #[derive(Clone, Debug)]
 pub enum Payload {
-    /// one convolution: routed to the conv artifact matching `problem`;
-    /// the queue thread coalesces compatible (same-problem) pending conv
-    /// requests into a micro-batch under the `BatchConfig` latency budget
-    Conv { problem: ConvProblem, image: Tensor, filters: Tensor },
+    /// one convolution op: dense ops route to the artifact matching
+    /// their core problem; strided/padded/grouped ops serve through the
+    /// exact CPU lowering.  The queue thread coalesces compatible
+    /// (same-op) pending conv requests into a micro-batch under the
+    /// `BatchConfig` latency budget
+    Conv { op: ConvOp, image: Tensor, filters: Tensor },
     /// an explicit client-side batch: `batch.n` images (stacked on axis
     /// 0) through one filter set — served in one dispatch against the
-    /// `batch.problem` artifact
-    BatchedConv { batch: BatchedConv, images: Tensor, filters: Tensor },
+    /// batch op's route
+    BatchedConv { batch: BatchedConvOp, images: Tensor, filters: Tensor },
     /// one PaperNet inference: image (1, 28, 28); dynamically batched
     Cnn { image: Tensor },
     /// whole-model inference plan for a registered model: the graph
@@ -94,14 +96,15 @@ mod tests {
 
     #[test]
     fn payload_kinds() {
+        use crate::conv::ConvProblem;
         let conv = Payload::Conv {
-            problem: ConvProblem::single(8, 1, 1),
+            op: ConvOp::dense(ConvProblem::single(8, 1, 1)),
             image: Tensor::zeros(vec![8, 8]),
             filters: Tensor::zeros(vec![1, 1, 1]),
         };
         assert_eq!(conv.kind_str(), "conv");
         let batched = Payload::BatchedConv {
-            batch: BatchedConv::new(ConvProblem::single(8, 1, 1), 2),
+            batch: BatchedConvOp::new(ConvOp::dense(ConvProblem::single(8, 1, 1)), 2),
             images: Tensor::zeros(vec![2, 8, 8]),
             filters: Tensor::zeros(vec![1, 1, 1]),
         };

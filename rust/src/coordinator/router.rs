@@ -14,7 +14,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::analytic;
-use crate::conv::{BatchedConv, ConvProblem};
+use crate::conv::{BatchedConvOp, ConvOp, ConvProblem};
 use crate::gpusim::GpuSpec;
 use crate::graph;
 use crate::runtime::{Artifact, ArtifactKind};
@@ -28,9 +28,14 @@ pub struct Router {
     /// shared graph), in registration order — routing a model is an
     /// Arc bump, never a rebuild or deep clone
     models: Vec<(String, Arc<graph::Graph>)>,
-    /// tuned-plan advice per routed problem, filled by `warm_plans`
-    tuned_advice: HashMap<ConvProblem, String>,
+    /// dispatch advice per routed op, filled by `warm_plans`
+    tuned_advice: HashMap<ConvOp, String>,
 }
+
+/// The synthetic route name for ops no PJRT artifact can serve (strided
+/// / padded / grouped): the executor runs the exact CPU lowering
+/// (`conv::conv2d_op_cpu`) instead of a compiled artifact.
+pub const CPU_LOWERED: &str = "cpu-lowered";
 
 impl Router {
     pub fn from_artifacts(artifacts: &[Artifact]) -> Router {
@@ -57,7 +62,7 @@ impl Router {
         r
     }
 
-    /// The artifact serving a conv problem (exact shape match).
+    /// The artifact serving a dense conv problem (exact shape match).
     pub fn route_conv(&self, p: &ConvProblem) -> Result<&str> {
         self.conv_by_problem
             .get(p)
@@ -65,14 +70,27 @@ impl Router {
             .ok_or_else(|| anyhow!("no artifact for problem {}", p.label()))
     }
 
-    /// The artifact serving an explicit batched conv: the batch routes
-    /// to its problem's artifact (served image-by-image against the
-    /// warm executable) after validating the batch itself.
-    pub fn route_batched(&self, b: &BatchedConv) -> Result<&str> {
-        if !b.valid() {
-            return Err(anyhow!("invalid batch: {} images of {}", b.n, b.problem.label()));
+    /// The route serving a conv op: dense ops need an artifact matching
+    /// their core problem; strided/padded/grouped ops serve through the
+    /// exact CPU lowering (`CPU_LOWERED`).
+    pub fn route_op(&self, op: &ConvOp) -> Result<&str> {
+        if !op.valid() {
+            return Err(anyhow!("invalid conv op {}", op.label()));
         }
-        self.route_conv(&b.problem)
+        if op.is_dense() {
+            return self.route_conv(&op.core);
+        }
+        Ok(CPU_LOWERED)
+    }
+
+    /// The route serving an explicit batched op (served image-by-image
+    /// against the warm executable or the CPU lowering) after
+    /// validating the batch itself.
+    pub fn route_batched(&self, b: &BatchedConvOp) -> Result<&str> {
+        if !b.valid() {
+            return Err(anyhow!("invalid batch: {} images of {}", b.n, b.op.label()));
+        }
+        self.route_op(&b.op)
     }
 
     /// Smallest CNN artifact batch >= n (or the largest available).
@@ -132,39 +150,40 @@ impl Router {
         })
     }
 
-    /// Every distinct conv problem this router can be asked to plan:
-    /// the routed artifacts plus every layer of every registered model.
-    pub fn plannable_problems(&self) -> Vec<ConvProblem> {
-        let mut v = self.conv_problems();
+    /// Every distinct conv op this router can be asked to plan: the
+    /// routed artifacts (dense ops) plus every layer of every
+    /// registered model (strided / padded / grouped ops included).
+    pub fn plannable_ops(&self) -> Vec<ConvOp> {
+        let mut v: Vec<ConvOp> = self.conv_problems().into_iter().map(ConvOp::dense).collect();
         for (_, g) in &self.models {
-            for p in g.conv_problems() {
-                if !v.contains(&p) {
-                    v.push(p);
+            for op in g.conv_ops() {
+                if !v.contains(&op) {
+                    v.push(op);
                 }
             }
         }
         v
     }
 
-    /// Pre-dispatch every plannable conv problem up front — each
-    /// problem is ranked across all legal backends (which tunes the
+    /// Pre-dispatch every plannable conv op up front — each op is
+    /// ranked across all covering backends (which tunes the
     /// paper-kernel floor as a side effect, filling both process-wide
-    /// caches) — and keep the advice strings; returns how many problems
-    /// were warmed.  After this, serving never searches: a conv
-    /// request's advice and every layer of a model execution are cache
-    /// lookups, and the advice names the backend the dispatcher chose.
+    /// caches) — and keep the advice strings; returns how many ops were
+    /// warmed.  After this, serving never searches: a conv request's
+    /// advice and every layer of a model execution are cache lookups,
+    /// and the advice names the backend the dispatcher chose.
     pub fn warm_plans(&mut self, spec: &GpuSpec) -> usize {
-        let problems = self.plannable_problems();
-        for p in &problems {
-            let advice = crate::backend::dispatch_advice(p, spec);
-            self.tuned_advice.insert(*p, advice);
+        let ops = self.plannable_ops();
+        for op in &ops {
+            let advice = crate::backend::op_dispatch_advice(op, spec);
+            self.tuned_advice.insert(*op, advice);
         }
-        problems.len()
+        ops.len()
     }
 
-    /// Dispatch advice for a routed problem (None before `warm_plans`).
-    pub fn tuned_advice(&self, p: &ConvProblem) -> Option<&str> {
-        self.tuned_advice.get(p).map(|s| s.as_str())
+    /// Dispatch advice for a routed op (None before `warm_plans`).
+    pub fn tuned_advice(&self, op: &ConvOp) -> Option<&str> {
+        self.tuned_advice.get(op).map(|s| s.as_str())
     }
 }
 
@@ -226,12 +245,27 @@ mod tests {
     #[test]
     fn batched_conv_routes_to_problem_artifact() {
         let r = router();
-        let ok = BatchedConv::new(ConvProblem::multi(8, 14, 16, 3), 4);
+        let dense = ConvOp::dense(ConvProblem::multi(8, 14, 16, 3));
+        let ok = BatchedConvOp::new(dense, 4);
         assert_eq!(r.route_batched(&ok).unwrap(), "m1");
-        let zero = BatchedConv::new(ConvProblem::multi(8, 14, 16, 3), 0);
+        let zero = BatchedConvOp::new(dense, 0);
         assert!(r.route_batched(&zero).unwrap_err().to_string().contains("invalid batch"));
-        let unknown = BatchedConv::new(ConvProblem::single(64, 16, 3), 2);
+        let unknown = BatchedConvOp::new(ConvOp::dense(ConvProblem::single(64, 16, 3)), 2);
         assert!(r.route_batched(&unknown).is_err());
+    }
+
+    #[test]
+    fn non_dense_ops_route_to_the_cpu_lowering() {
+        let r = router();
+        let s2 = ConvOp::strided(ConvProblem::multi(8, 14, 16, 3), 2, 1);
+        assert_eq!(r.route_op(&s2).unwrap(), CPU_LOWERED);
+        let dw = ConvOp::depthwise(8, 14, 3, 1);
+        assert_eq!(r.route_batched(&BatchedConvOp::new(dw, 2)).unwrap(), CPU_LOWERED);
+        // dense ops still demand an artifact
+        assert!(r.route_op(&ConvOp::dense(ConvProblem::single(64, 16, 3))).is_err());
+        // invalid ops fail loudly
+        let bad = ConvOp { core: ConvProblem::multi(8, 14, 15, 3), stride: 1, pad: 0, groups: 2 };
+        assert!(r.route_op(&bad).is_err());
     }
 
     #[test]
@@ -270,10 +304,10 @@ mod tests {
         let mut r = router();
         r.register_model("inception3a").unwrap();
         let n = r.warm_plans(&g);
-        // 2 routed conv artifacts + 6 distinct inception layers
+        // 2 routed conv artifacts + 6 distinct inception ops
         assert_eq!(n, 2 + 6);
-        for p in crate::conv::suites::googlenet_inception3a() {
-            let advice = r.tuned_advice(&p).expect("model layer warmed");
+        for op in crate::conv::suites::googlenet_inception3a() {
+            let advice = r.tuned_advice(&op).expect("model layer warmed");
             assert!(advice.contains("tuned"), "{advice}");
         }
     }
@@ -282,13 +316,14 @@ mod tests {
     fn warm_plans_caches_advice_for_every_routed_problem() {
         let g = gtx_1080ti();
         let mut r = router();
-        assert!(r.tuned_advice(&ConvProblem::single(32, 16, 3)).is_none());
+        let s1 = ConvOp::dense(ConvProblem::single(32, 16, 3));
+        assert!(r.tuned_advice(&s1).is_none());
         let n = r.warm_plans(&g);
         assert_eq!(n, 2); // the two conv artifacts (s1, m1)
-        let advice = r.tuned_advice(&ConvProblem::single(32, 16, 3)).unwrap();
+        let advice = r.tuned_advice(&s1).unwrap();
         assert!(advice.contains("tuned"), "{advice}");
-        assert!(r.tuned_advice(&ConvProblem::multi(8, 14, 16, 3)).is_some());
-        // unrouted problems stay unadvised
-        assert!(r.tuned_advice(&ConvProblem::single(64, 16, 3)).is_none());
+        assert!(r.tuned_advice(&ConvOp::dense(ConvProblem::multi(8, 14, 16, 3))).is_some());
+        // unrouted ops stay unadvised
+        assert!(r.tuned_advice(&ConvOp::dense(ConvProblem::single(64, 16, 3))).is_none());
     }
 }

@@ -27,8 +27,8 @@ use anyhow::{anyhow, Result};
 use super::batcher::{BatchConfig, Batcher, ConvCoalescer};
 use super::metrics::Metrics;
 use super::request::{ModelSummary, Payload, Request, Response};
-use super::router::Router;
-use crate::conv::ConvProblem;
+use super::router::{Router, CPU_LOWERED};
+use crate::conv::{conv2d_op_cpu, ConvOp};
 use crate::gpusim::GpuSpec;
 use crate::runtime::{Runtime, Tensor};
 
@@ -45,11 +45,12 @@ struct ConvItem {
 }
 
 enum Work {
-    /// a coalesced conv micro-batch: same problem, one artifact, shared
-    /// batch id + tuned-plan advice across every member
+    /// a coalesced conv micro-batch: same op, one route (artifact or
+    /// the CPU lowering), shared batch id + dispatch advice across
+    /// every member
     ConvBatch {
         batch_id: u64,
-        problem: ConvProblem,
+        op: ConvOp,
         items: Vec<ConvItem>,
         advice: Option<String>,
     },
@@ -243,21 +244,21 @@ fn queue_loop(
         let now = Instant::now();
         if let Some((req, respond)) = item {
             match &req.payload {
-                Payload::Conv { problem, .. } => {
+                Payload::Conv { op, .. } => {
                     // coalesce compatible conv requests into a micro-batch
                     // under the latency budget; the advice comes from the
                     // warmed table (zero search) and is shared batch-wide
-                    if let Err(e) = router.route_conv(problem) {
+                    if let Err(e) = router.route_op(op) {
                         metrics.lock().unwrap().errors += 1;
                         let _ = respond.send(Err(e.to_string()));
                     } else {
-                        let p = *problem;
-                        if let Some((p, items)) =
-                            coalescer.push(p, ConvItem { req, respond }, now)
+                        let o = *op;
+                        if let Some((o, items)) =
+                            coalescer.push(o, ConvItem { req, respond }, now)
                         {
-                            let advice = router.tuned_advice(&p).map(|s| s.to_string());
+                            let advice = router.tuned_advice(&o).map(|s| s.to_string());
                             let w =
-                                Work::ConvBatch { batch_id: alloc_id(), problem: p, items, advice };
+                                Work::ConvBatch { batch_id: alloc_id(), op: o, items, advice };
                             if work_tx.send(w).is_err() {
                                 break;
                             }
@@ -267,7 +268,7 @@ fn queue_loop(
                 Payload::BatchedConv { batch, .. } => {
                     // explicit batches bypass coalescing: the client
                     // already did the grouping
-                    let advice = router.tuned_advice(&batch.problem).map(|s| s.to_string());
+                    let advice = router.tuned_advice(&batch.op).map(|s| s.to_string());
                     if let Err(e) = router.route_batched(batch) {
                         metrics.lock().unwrap().errors += 1;
                         let _ = respond.send(Err(e.to_string()));
@@ -307,9 +308,9 @@ fn queue_loop(
         if let Some(items) = batcher.poll(now) {
             disconnected |= work_tx.send(Work::CnnBatch { batch_id: alloc_id(), items }).is_err();
         }
-        for (p, items) in coalescer.poll(now) {
-            let advice = router.tuned_advice(&p).map(|s| s.to_string());
-            let w = Work::ConvBatch { batch_id: alloc_id(), problem: p, items, advice };
+        for (o, items) in coalescer.poll(now) {
+            let advice = router.tuned_advice(&o).map(|s| s.to_string());
+            let w = Work::ConvBatch { batch_id: alloc_id(), op: o, items, advice };
             disconnected |= work_tx.send(w).is_err();
         }
         if disconnected {
@@ -317,29 +318,72 @@ fn queue_loop(
         }
     }
     // shutdown: flush every pending lane and the CNN tail batch
-    for (p, items) in coalescer.take_all() {
-        let advice = router.tuned_advice(&p).map(|s| s.to_string());
-        let _ = work_tx.send(Work::ConvBatch { batch_id: alloc_id(), problem: p, items, advice });
+    for (o, items) in coalescer.take_all() {
+        let advice = router.tuned_advice(&o).map(|s| s.to_string());
+        let _ = work_tx.send(Work::ConvBatch { batch_id: alloc_id(), op: o, items, advice });
     }
     if let Some(items) = batcher.take() {
         let _ = work_tx.send(Work::CnnBatch { batch_id: alloc_id(), items });
     }
 }
 
-/// Serve an explicit `BatchedConv`: validate the stacked image tensor,
-/// run each image against the problem's (warm) artifact, and stack the
-/// outputs on a new leading axis.
+/// The exact CPU lowering as an executor: validate tensor sizes
+/// against the op's own accounting (grouped filters are
+/// `M x C/G x K x K`) and run `conv::conv2d_op_cpu`.
+fn execute_op_lowered(op: &ConvOp, image: &Tensor, filters: &Tensor) -> Result<Tensor> {
+    if image.len() != op.core.map_elems() {
+        return Err(anyhow!(
+            "op image has {} elements, {} wants {}",
+            image.len(),
+            op.label(),
+            op.core.map_elems()
+        ));
+    }
+    if filters.len() != op.filter_elems() {
+        return Err(anyhow!(
+            "op filters have {} elements, {} wants {}",
+            filters.len(),
+            op.label(),
+            op.filter_elems()
+        ));
+    }
+    let out = conv2d_op_cpu(op, &image.data, &filters.data);
+    Tensor::new(vec![op.core.m, op.oy(), op.ox()], out)
+}
+
+/// Run one conv op request body: dense ops against the (warm) PJRT
+/// artifact, non-dense ops through the exact CPU lowering.
+fn execute_conv_op(
+    runtime: &mut Runtime,
+    name: &str,
+    op: &ConvOp,
+    image: &Tensor,
+    filters: &Tensor,
+) -> Result<Tensor> {
+    if name == CPU_LOWERED {
+        execute_op_lowered(op, image, filters)
+    } else {
+        runtime.execute_conv(name, image, filters)
+    }
+}
+
+/// Serve an explicit batched op: validate the stacked image tensor,
+/// run each image against the route (artifact or CPU lowering), and
+/// stack the outputs on a new leading axis.
 fn execute_batched_conv(
     runtime: &mut Runtime,
     router: &Router,
-    batch: &crate::conv::BatchedConv,
+    batch: &crate::conv::BatchedConvOp,
     images: &Tensor,
     filters: &Tensor,
 ) -> Result<(Tensor, String)> {
     let name = router.route_batched(batch)?.to_string();
-    let p = &batch.problem;
-    let per_image: Vec<usize> =
-        if p.is_single_channel() { vec![p.wy, p.wx] } else { vec![p.c, p.wy, p.wx] };
+    let p = &batch.op.core;
+    let per_image: Vec<usize> = if p.is_single_channel() && batch.op.groups == 1 {
+        vec![p.wy, p.wx]
+    } else {
+        vec![p.c, p.wy, p.wx]
+    };
     let mut want = vec![batch.n];
     want.extend_from_slice(&per_image);
     if images.shape != want {
@@ -354,7 +398,7 @@ fn execute_batched_conv(
     for i in 0..batch.n {
         let mut image = images.slice_axis0(i, i + 1)?;
         image.shape.remove(0); // (1, ...) -> per-image dims
-        outputs.push(runtime.execute_conv(&name, &image, filters)?);
+        outputs.push(execute_conv_op(runtime, &name, &batch.op, &image, filters)?);
     }
     Ok((Tensor::stack(&outputs)?, name))
 }
@@ -370,9 +414,9 @@ fn exec_loop(
     );
     while let Ok(work) = work_rx.recv() {
         match work {
-            Work::ConvBatch { batch_id, problem, items, advice } => {
+            Work::ConvBatch { batch_id, op, items, advice } => {
                 let n = items.len();
-                let name = match router.route_conv(&problem) {
+                let name = match router.route_op(&op) {
                     Ok(nm) => nm.to_string(),
                     Err(e) => {
                         let mut m = metrics.lock().unwrap();
@@ -393,7 +437,8 @@ fn exec_loop(
                         continue;
                     };
                     outcomes.push(
-                        runtime.execute_conv(&name, image, filters).map_err(|e| e.to_string()),
+                        execute_conv_op(&mut runtime, &name, &op, image, filters)
+                            .map_err(|e| e.to_string()),
                     );
                 }
                 // account under ONE lock, then send (same happens-before
@@ -454,7 +499,8 @@ fn exec_loop(
                 // every layer was pre-dispatched by warm_plans, so this
                 // is a pure walk over the decision cache + simulator —
                 // each layer runs whatever backend won its dispatch
-                let report = crate::graph::execute(&graph, &gpu, crate::backend::dispatch_plan);
+                let report =
+                    crate::graph::execute(&graph, &gpu, crate::backend::dispatch_op_plan);
                 let artifact = format!("model:{}", graph.name);
                 let latency = req.submitted.elapsed().as_secs_f64();
                 metrics.lock().unwrap().record_response(&artifact, latency);

@@ -4,7 +4,7 @@
 
 use std::time::Duration;
 
-use crate::conv::ConvProblem;
+use crate::conv::ConvOp;
 use crate::runtime::Tensor;
 use crate::util::rng::Rng;
 
@@ -81,15 +81,15 @@ impl Default for Mix {
 pub struct Workload {
     pub arrivals: Arrivals,
     pub mix: Mix,
-    pub conv_templates: Vec<ConvProblem>,
+    pub conv_templates: Vec<ConvOp>,
     rng: Rng,
     /// remaining repeats of the current conv burst
     burst_left: usize,
-    burst_problem: Option<ConvProblem>,
+    burst_op: Option<ConvOp>,
 }
 
 impl Workload {
-    pub fn new(arrivals: Arrivals, mix: Mix, conv_templates: Vec<ConvProblem>, seed: u64) -> Self {
+    pub fn new(arrivals: Arrivals, mix: Mix, conv_templates: Vec<ConvOp>, seed: u64) -> Self {
         assert!(mix.conv_burst >= 1, "conv_burst must be >= 1");
         Workload {
             arrivals,
@@ -97,22 +97,24 @@ impl Workload {
             conv_templates,
             rng: Rng::new(seed),
             burst_left: 0,
-            burst_problem: None,
+            burst_op: None,
         }
     }
 
-    fn conv_payload(&mut self, p: ConvProblem) -> Payload {
-        let image = if p.is_single_channel() {
+    fn conv_payload(&mut self, op: ConvOp) -> Payload {
+        let p = op.core;
+        let image = if p.is_single_channel() && op.groups == 1 {
             Tensor::randn(vec![p.wy, p.wx], &mut self.rng)
         } else {
             Tensor::randn(vec![p.c, p.wy, p.wx], &mut self.rng)
         };
-        let filters = if p.is_single_channel() {
+        let filters = if p.is_single_channel() && op.groups == 1 {
             Tensor::randn(vec![p.m, p.k, p.k], &mut self.rng)
         } else {
-            Tensor::randn(vec![p.m, p.c, p.k, p.k], &mut self.rng)
+            // grouped filters only read their group's channels
+            Tensor::randn(vec![p.m, p.c / op.groups, p.k, p.k], &mut self.rng)
         };
-        Payload::Conv { problem: p, image, filters }
+        Payload::Conv { op, image, filters }
     }
 
     /// Next request payload + the delay to wait before submitting it.
@@ -120,18 +122,18 @@ impl Workload {
         let gap = self.arrivals.next_gap(&mut self.rng);
         if self.burst_left > 0 {
             self.burst_left -= 1;
-            let p = self.burst_problem.expect("burst in progress");
-            return (self.conv_payload(p), gap);
+            let op = self.burst_op.expect("burst in progress");
+            return (self.conv_payload(op), gap);
         }
         let payload = if !self.conv_templates.is_empty()
             && self.rng.next_f64() < self.mix.conv_fraction
         {
-            let p = *self.rng.choose(&self.conv_templates);
+            let op = *self.rng.choose(&self.conv_templates);
             if self.mix.conv_burst > 1 {
                 self.burst_left = self.mix.conv_burst - 1;
-                self.burst_problem = Some(p);
+                self.burst_op = Some(op);
             }
-            self.conv_payload(p)
+            self.conv_payload(op)
         } else {
             Payload::Cnn { image: Tensor::randn(vec![1, 28, 28], &mut self.rng) }
         };
@@ -142,6 +144,7 @@ impl Workload {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::conv::ConvProblem;
 
     #[test]
     fn burst_has_zero_gaps() {
@@ -199,7 +202,7 @@ mod tests {
         let mut w = Workload::new(
             Arrivals::Burst,
             Mix { conv_fraction: 0.5, conv_burst: 1 },
-            vec![ConvProblem::multi(4, 8, 4, 3)],
+            vec![ConvOp::dense(ConvProblem::multi(4, 8, 4, 3))],
             7,
         );
         let n = 2000;
@@ -212,18 +215,30 @@ mod tests {
 
     #[test]
     fn conv_payloads_have_template_shapes() {
-        let p = ConvProblem::multi(4, 8, 6, 3);
+        let t = ConvOp::dense(ConvProblem::multi(4, 8, 6, 3));
         let mut w =
-            Workload::new(Arrivals::Burst, Mix { conv_fraction: 1.0, conv_burst: 1 }, vec![p], 9);
+            Workload::new(Arrivals::Burst, Mix { conv_fraction: 1.0, conv_burst: 1 }, vec![t], 9);
         for _ in 0..10 {
             let (payload, _) = w.next();
-            let Payload::Conv { problem, image, filters } = payload else {
+            let Payload::Conv { op, image, filters } = payload else {
                 panic!("expected conv")
             };
-            assert_eq!(problem, p);
+            assert_eq!(op, t);
             assert_eq!(image.shape, vec![4, 8, 8]);
             assert_eq!(filters.shape, vec![6, 4, 3, 3]);
         }
+    }
+
+    #[test]
+    fn depthwise_templates_carry_grouped_filter_shapes() {
+        let t = ConvOp::depthwise(6, 8, 3, 1);
+        let mut w =
+            Workload::new(Arrivals::Burst, Mix { conv_fraction: 1.0, conv_burst: 1 }, vec![t], 15);
+        let (payload, _) = w.next();
+        let Payload::Conv { op, image, filters } = payload else { panic!("expected conv") };
+        assert_eq!(op, t);
+        assert_eq!(image.shape, vec![6, 8, 8]);
+        assert_eq!(filters.shape, vec![6, 1, 3, 3], "M x C/G x K x K");
     }
 
     #[test]
@@ -240,27 +255,29 @@ mod tests {
         // conv_burst = 4: every conv run is 4 consecutive requests with
         // the SAME problem — what the coordinator's coalescer needs to
         // actually merge anything
-        let templates =
-            vec![ConvProblem::multi(4, 8, 4, 3), ConvProblem::single(16, 4, 3)];
+        let templates = vec![
+            ConvOp::dense(ConvProblem::multi(4, 8, 4, 3)),
+            ConvOp::strided(ConvProblem::multi(4, 16, 4, 3), 2, 1),
+        ];
         let mut w = Workload::new(
             Arrivals::Burst,
             Mix { conv_fraction: 0.5, conv_burst: 4 },
             templates,
             13,
         );
-        let mut run_problem: Option<ConvProblem> = None;
+        let mut run_op: Option<ConvOp> = None;
         let mut run_len = 0usize;
         let mut runs = vec![];
         for _ in 0..2000 {
             match w.next().0 {
-                Payload::Conv { problem, .. } => {
-                    if run_problem == Some(problem) {
+                Payload::Conv { op, .. } => {
+                    if run_op == Some(op) {
                         run_len += 1;
                     } else {
                         if run_len > 0 {
                             runs.push(run_len);
                         }
-                        run_problem = Some(problem);
+                        run_op = Some(op);
                         run_len = 1;
                     }
                 }
@@ -268,7 +285,7 @@ mod tests {
                     if run_len > 0 {
                         runs.push(run_len);
                     }
-                    run_problem = None;
+                    run_op = None;
                     run_len = 0;
                 }
             }
@@ -284,7 +301,7 @@ mod tests {
 
     #[test]
     fn burst_of_one_is_the_seed_behavior() {
-        let p = ConvProblem::multi(4, 8, 4, 3);
+        let p = ConvOp::dense(ConvProblem::multi(4, 8, 4, 3));
         let mut a = Workload::new(
             Arrivals::Burst,
             Mix { conv_fraction: 0.5, conv_burst: 1 },

@@ -7,14 +7,14 @@
 
 use std::collections::VecDeque;
 
-use crate::conv::BatchedConv;
+use crate::conv::BatchedConvOp;
 use crate::gpusim::GpuSpec;
 
 /// One queued (or running) batched-conv job.
 #[derive(Clone, Debug)]
 pub struct Job {
     pub id: u64,
-    pub conv: BatchedConv,
+    pub conv: BatchedConvOp,
     /// model-affinity tag the submitter attached (None = untagged)
     pub model: Option<String>,
     /// virtual time the job entered the fleet, seconds
@@ -32,7 +32,7 @@ pub struct Job {
 pub struct Completion {
     pub job: u64,
     pub device: usize,
-    pub conv: BatchedConv,
+    pub conv: BatchedConvOp,
     /// the affinity tag the job was submitted with — lets consumers
     /// attribute completions (and shard hotspots) per model
     pub model: Option<String>,
@@ -90,7 +90,7 @@ impl Device {
 
     /// Append a job: start when the tail drains (or immediately), fixed
     /// FIFO timing.  The caller enforces the queue bound.
-    pub(crate) fn place(&mut self, id: u64, conv: BatchedConv, model: Option<String>,
+    pub(crate) fn place(&mut self, id: u64, conv: BatchedConvOp, model: Option<String>,
         now: f64, service: f64) -> &Job {
         let start = self.ready_at(now);
         let finish = start + service;
@@ -122,8 +122,8 @@ mod tests {
     use crate::conv::ConvProblem;
     use crate::gpusim::gtx_1080ti;
 
-    fn job() -> BatchedConv {
-        BatchedConv::new(ConvProblem::multi(8, 14, 16, 3), 2)
+    fn job() -> BatchedConvOp {
+        BatchedConvOp::new(crate::conv::ConvOp::dense(ConvProblem::multi(8, 14, 16, 3)), 2)
     }
 
     #[test]

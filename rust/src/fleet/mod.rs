@@ -9,7 +9,7 @@
 //!
 //! The fleet runs in *virtual time*: job service times come from the
 //! dispatched batched cost model
-//! (`backend::batched_dispatch_seconds`), placements fix
+//! (`backend::batched_op_dispatch_seconds`), placements fix
 //! start/finish deterministically (FIFO, no preemption), and
 //! `next_completion`/`drain` advance an event-driven clock.  That keeps
 //! the `e2e_fleet` scaling bench and the stateful proptests

@@ -53,7 +53,7 @@ pub struct PlacementCandidate {
     /// virtual time the device could start this job (max(tail, now))
     pub ready_at: f64,
     /// predicted service seconds of THIS job on THIS device
-    /// (`backend::batched_dispatch_seconds` under the device's spec)
+    /// (`backend::batched_op_dispatch_seconds` under the device's spec)
     pub service: f64,
 }
 

@@ -2,7 +2,7 @@
 //! admission path, driven in virtual time.
 //!
 //! `submit` prices the job on every shard through that shard's own
-//! dispatcher (`backend::batched_dispatch_seconds` under each device's
+//! dispatcher (`backend::batched_op_dispatch_seconds` under each device's
 //! spec — heterogeneous fleets price differently per shard AND can
 //! pick different algorithms per GPU generation for the same job),
 //! asks the placement policy for a device, and either enqueues (fixing
@@ -18,7 +18,7 @@
 use std::collections::HashMap;
 
 use crate::backend;
-use crate::conv::{BatchedConv, ConvProblem};
+use crate::conv::{BatchedConvOp, ConvOp};
 use crate::gpusim::GpuSpec;
 
 use super::device::{Completion, Device};
@@ -73,8 +73,8 @@ pub struct Fleet {
     /// sticky model -> device assignments (ModelAffinity policy)
     affinity: HashMap<String, usize>,
     next_job: u64,
-    /// memoized predicted seconds per (problem, batch, device spec)
-    cost_cache: HashMap<(ConvProblem, usize, &'static str), f64>,
+    /// memoized predicted seconds per (op, batch, device spec)
+    cost_cache: HashMap<(ConvOp, usize, &'static str), f64>,
     pub stats: FleetStats,
 }
 
@@ -128,9 +128,9 @@ impl Fleet {
     }
 
     /// Predicted service seconds of a batch on device `device` — the
-    /// cross-backend dispatched cost (`backend::batched_dispatch_seconds`)
+    /// cross-backend dispatched cost (`backend::batched_op_dispatch_seconds`)
     /// under that device's spec, memoized per (problem, n, spec).
-    pub fn predicted_service(&mut self, conv: &BatchedConv, device: usize) -> f64 {
+    pub fn predicted_service(&mut self, conv: &BatchedConvOp, device: usize) -> f64 {
         service_for(&mut self.cost_cache, &self.devices[device].spec, conv)
     }
 
@@ -141,8 +141,8 @@ impl Fleet {
 
     /// Admission: price the job on every shard, place per policy.
     /// `None` = rejected (every candidate queue at its bound).
-    pub fn submit(&mut self, conv: BatchedConv, model: Option<&str>) -> Option<Placement> {
-        assert!(conv.valid(), "invalid batched problem");
+    pub fn submit(&mut self, conv: BatchedConvOp, model: Option<&str>) -> Option<Placement> {
+        assert!(conv.valid(), "invalid batched op");
         self.stats.submitted += 1;
         let cands: Vec<PlacementCandidate> = (0..self.devices.len())
             .map(|i| PlacementCandidate {
@@ -249,13 +249,13 @@ impl Fleet {
 /// each spec dispatches for itself, so a Pascal and a Maxwell shard can
 /// run different algorithms for the same job.
 fn service_for(
-    cache: &mut HashMap<(ConvProblem, usize, &'static str), f64>,
+    cache: &mut HashMap<(ConvOp, usize, &'static str), f64>,
     spec: &GpuSpec,
-    conv: &BatchedConv,
+    conv: &BatchedConvOp,
 ) -> f64 {
     *cache
-        .entry((conv.problem, conv.n, spec.name))
-        .or_insert_with(|| backend::batched_dispatch_seconds(conv, spec))
+        .entry((conv.op, conv.n, spec.name))
+        .or_insert_with(|| backend::batched_op_dispatch_seconds(conv, spec))
 }
 
 #[cfg(test)]
@@ -264,8 +264,8 @@ mod tests {
     use crate::conv::ConvProblem;
     use crate::gpusim::{gtx_1080ti, titan_x_maxwell};
 
-    fn conv(n: usize) -> BatchedConv {
-        BatchedConv::new(ConvProblem::multi(8, 14, 16, 3), n)
+    fn conv(n: usize) -> BatchedConvOp {
+        BatchedConvOp::new(crate::conv::ConvOp::dense(ConvProblem::multi(8, 14, 16, 3)), n)
     }
 
     fn fleet(n: usize, policy: Policy, bound: usize) -> Fleet {

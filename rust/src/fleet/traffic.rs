@@ -4,23 +4,28 @@
 //! `python/mirror/validate_fleet.py`), so the three can never drift.
 
 use crate::backend;
-use crate::conv::{suites, BatchedConv, ConvProblem};
+use crate::conv::{suites, BatchedConvOp, ConvOp};
 use crate::gpusim::GpuSpec;
 use crate::util::rng::Rng;
 
-/// One offered request: arrival time, batch, model tag (affinity key).
+/// One offered request: arrival time, batched op, model tag (affinity
+/// key).
 pub struct Arrival {
     pub t: f64,
-    pub conv: BatchedConv,
+    pub conv: BatchedConvOp,
     pub model: &'static str,
 }
 
-/// Conv layers per model tag — what the affinity policy pins to shards.
-pub fn model_layers() -> Vec<(&'static str, Vec<ConvProblem>)> {
+/// Conv ops per model tag — what the affinity policy pins to shards.
+/// Real op geometry throughout: ResNet-18's stride-2 transitions and
+/// MobileNetV1's depthwise/pointwise stack ride the same stream as the
+/// 'same'-padded AlexNet/VGG bodies.
+pub fn model_layers() -> Vec<(&'static str, Vec<ConvOp>)> {
     vec![
         ("alexnet", suites::alexnet()),
         ("resnet18", suites::resnet18()),
         ("vgg16", suites::vgg16()),
+        ("mobilenet_v1", suites::mobilenet_v1()),
     ]
 }
 
@@ -38,9 +43,9 @@ pub fn offered_load(n: usize, rate: f64, seed: u64, batch: Option<usize>) -> Vec
         let u = rng.next_f64().max(f64::MIN_POSITIVE);
         t += -u.ln() / rate;
         let (model, layers) = &models[rng.range_usize(0, models.len() - 1)];
-        let problem = *rng.choose(layers);
+        let op = *rng.choose(layers);
         let b = batch.unwrap_or_else(|| [1usize, 2, 4, 8][rng.range_usize(0, 3)]);
-        out.push(Arrival { t, conv: BatchedConv::new(problem, b), model: *model });
+        out.push(Arrival { t, conv: BatchedConvOp::new(op, b), model: *model });
     }
     out
 }
@@ -52,7 +57,7 @@ pub fn offered_load(n: usize, rate: f64, seed: u64, batch: Option<usize>) -> Vec
 pub fn mean_service_secs(load: &[Arrival], spec: &GpuSpec) -> f64 {
     assert!(!load.is_empty(), "empty probe");
     load.iter()
-        .map(|a| backend::batched_dispatch_seconds(&a.conv, spec))
+        .map(|a| backend::batched_op_dispatch_seconds(&a.conv, spec))
         .sum::<f64>()
         / load.len() as f64
 }
@@ -84,7 +89,7 @@ mod tests {
         // same gaps and problems up to the first post-draw divergence:
         // the first request's t and problem must match exactly
         assert_eq!(free[0].t, fixed[0].t);
-        assert_eq!(free[0].conv.problem, fixed[0].conv.problem);
+        assert_eq!(free[0].conv.op, fixed[0].conv.op);
     }
 
     #[test]
@@ -95,7 +100,7 @@ mod tests {
             let (_, layers) = model_layers().swap_remove(
                 tags.iter().position(|t| *t == a.model).unwrap(),
             );
-            assert!(layers.contains(&a.conv.problem));
+            assert!(layers.contains(&a.conv.op));
         }
     }
 

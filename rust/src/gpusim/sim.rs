@@ -50,6 +50,70 @@ impl KernelPlan {
         self.total_fma / self.dram_load_bytes().max(1.0)
     }
 
+    /// The decimated-output schedule — how the op layer prices stride
+    /// natively: only `keep` of the stride-1 output strip schedule's
+    /// FMAs and writeback are charged (the kept rows/columns), while
+    /// every load stays (the full map is still fetched — true whenever
+    /// K >= stride, and conservative below).  Strictly no slower than
+    /// the undecimated plan under `simulate` (per-round compute and the
+    /// writeback tail only shrink), which is what makes the paper
+    /// backends' native strided route never lose to the naive
+    /// compute-everything lowering.
+    pub fn decimated(&self, keep: f64) -> KernelPlan {
+        assert!(keep > 0.0 && keep <= 1.0, "keep fraction out of (0, 1]");
+        if keep == 1.0 {
+            return self.clone();
+        }
+        let rounds = self
+            .rounds
+            .iter()
+            .map(|r| Round { fma_ops: r.fma_ops * keep, ..*r })
+            .collect();
+        KernelPlan {
+            name: self.name.clone(),
+            rounds,
+            sms_active: self.sms_active,
+            threads_per_sm: self.threads_per_sm,
+            compute_efficiency: self.compute_efficiency,
+            output_bytes: self.output_bytes * keep,
+            smem_bytes_per_sm: self.smem_bytes_per_sm,
+            total_fma: self.total_fma * keep,
+            launch_overhead_cycles: self.launch_overhead_cycles,
+        }
+    }
+
+    /// The grouped schedule — how the op layer prices `groups`
+    /// per-group sub-problems natively: side-by-side groups fill idle
+    /// SMs (`par` groups in flight, bounded by `max_sms`), remaining
+    /// groups run as sequential waves under the SAME launch.  Per-SM
+    /// rounds are unchanged (each SM-group streams its own data); the
+    /// shared bus contention of the wider `sms_active` is charged by
+    /// the pipeline's per-SM bandwidth split.  Work and writeback scale
+    /// by the true group count.
+    pub fn grouped(&self, groups: usize, max_sms: u32) -> KernelPlan {
+        assert!(groups >= 1, "groups must be >= 1");
+        if groups == 1 {
+            return self.clone();
+        }
+        let par = ((max_sms / self.sms_active).max(1) as usize).min(groups);
+        let waves = (groups + par - 1) / par;
+        let mut rounds = Vec::with_capacity(self.rounds.len() * waves);
+        for _ in 0..waves {
+            rounds.extend_from_slice(&self.rounds);
+        }
+        KernelPlan {
+            name: format!("{} g{groups}", self.name),
+            rounds,
+            sms_active: self.sms_active * par as u32,
+            threads_per_sm: self.threads_per_sm,
+            compute_efficiency: self.compute_efficiency,
+            output_bytes: self.output_bytes * groups as f64,
+            smem_bytes_per_sm: self.smem_bytes_per_sm,
+            total_fma: self.total_fma * groups as f64,
+            launch_overhead_cycles: self.launch_overhead_cycles,
+        }
+    }
+
     /// The batch-`n` schedule: the per-image round list repeated `n`
     /// times back to back.  One launch, one cold-fetch prologue — the
     /// pipeline stays warm across images, which is the batching win the
@@ -273,6 +337,41 @@ mod tests {
     #[should_panic(expected = "batch must be >= 1")]
     fn zero_batch_panics() {
         plan(2, 1e3, 1e4).batched(0);
+    }
+
+    #[test]
+    fn decimated_never_slower_and_scales_work() {
+        let g = gtx_1080ti();
+        let p = plan(8, 1e4, 1e6);
+        for keep in [1.0, 0.5, 0.25] {
+            let d = p.decimated(keep);
+            assert!((d.total_fma - keep * p.total_fma).abs() < 1e-9);
+            assert!((d.output_bytes - keep * p.output_bytes).abs() < 1e-9);
+            assert!((d.dram_load_bytes() - p.dram_load_bytes()).abs() < 1e-6, "loads stay");
+            assert!(
+                simulate(&g, &d).cycles <= simulate(&g, &p).cycles * (1.0 + 1e-12),
+                "decimation slowed the plan at keep={keep}"
+            );
+        }
+        assert!(std::panic::catch_unwind(|| p.decimated(0.0)).is_err());
+    }
+
+    #[test]
+    fn grouped_fills_idle_sms_and_beats_sequential_batching() {
+        let g = gtx_1080ti();
+        // a one-SM unit plan (the depthwise regime): grouping must go
+        // wide across idle SMs instead of serializing every group
+        let mut unit = plan(4, 1e4, 1e5);
+        unit.sms_active = 1;
+        unit.total_fma = 1e5 * 4.0;
+        let grouped = unit.grouped(56, g.sm_count);
+        assert_eq!(grouped.sms_active, g.sm_count);
+        assert!((grouped.total_fma - 56.0 * unit.total_fma).abs() < 1e-6);
+        let t_grouped = simulate(&g, &grouped).cycles;
+        let t_seq = simulate(&g, &unit.batched(56)).cycles;
+        assert!(t_grouped < t_seq, "grouped {t_grouped} not below sequential {t_seq}");
+        // identity at one group
+        assert_eq!(unit.grouped(1, g.sm_count).name, unit.name);
     }
 
     #[test]

@@ -1,17 +1,20 @@
 //! Graph construction: a validating builder with shape inference, and
-//! the four CNN models of §4 (AlexNet, VGG-16, ResNet-18, GoogLeNet
-//! inception(3a)) assembled from the *same* `ConvProblem`s the
-//! `conv::suites` lists evaluate — the graph layer adds the inter-layer
-//! structure (pools, pads, skips, branches) those flat lists drop.
+//! the evaluation models (AlexNet, VGG-16, ResNet-18, GoogLeNet
+//! inception(3a), MobileNetV1) assembled from the *same* `ConvOp`s the
+//! `conv::suites` lists evaluate — the graph layer adds the
+//! inter-layer structure (pools, skips, branches) those flat lists
+//! drop.
 //!
-//! Convention: the paper's kernels compute *valid* convolutions, so each
-//! model applies its 'same' padding as an explicit graph-level `Pad`
-//! node after the conv (`conv_same`) — the conv problems stay verbatim
-//! the suite entries, and shape inference stays exact.
+//! Convention: convolution padding and stride are **op-level**
+//! (`ConvOp`), so 'same' models carry their padding inside the conv
+//! node and downsampling models stride natively — ResNet-18's stage
+//! transitions are real 3x3/s2 convs with 1x1/s2 projections, not
+//! pool + stride-1 approximations, and graph-side `Op::Pad` survives
+//! only for pool framing (inception's 'same' pool).
 
 use anyhow::{anyhow, Result};
 
-use crate::conv::{suites, ConvProblem};
+use crate::conv::{suites, ConvOp, ConvProblem};
 
 use super::node::{Node, NodeId, Op, Shape};
 
@@ -62,21 +65,21 @@ impl Graph {
             .collect()
     }
 
-    /// Distinct conv problems in node order — what the router pre-tunes
+    /// Distinct conv ops in node order — what the router pre-dispatches
     /// for a registered model.
-    pub fn conv_problems(&self) -> Vec<ConvProblem> {
-        let mut out: Vec<ConvProblem> = vec![];
+    pub fn conv_ops(&self) -> Vec<ConvOp> {
+        let mut out: Vec<ConvOp> = vec![];
         for n in &self.nodes {
-            if let Op::Conv { problem } = n.op {
-                if !out.contains(&problem) {
-                    out.push(problem);
+            if let Op::Conv { conv } = n.op {
+                if !out.contains(&conv) {
+                    out.push(conv);
                 }
             }
         }
         out
     }
 
-    /// Number of conv nodes (layer instances, not distinct problems).
+    /// Number of conv nodes (layer instances, not distinct ops).
     pub fn conv_nodes(&self) -> usize {
         self.nodes.iter().filter(|n| n.op.is_conv()).count()
     }
@@ -126,21 +129,21 @@ pub fn infer_shape(op: &Op, inputs: &[Shape]) -> Result<Shape> {
             }
             Ok(shape)
         }
-        Op::Conv { problem: p } => {
+        Op::Conv { conv } => {
             arity(1)?;
-            if !p.valid() {
-                return Err(anyhow!("invalid conv problem {}", p.label()));
+            if !conv.valid() {
+                return Err(anyhow!("invalid conv op {}", conv.label()));
             }
-            let want = Shape::new(p.c, p.wy, p.wx);
+            let want = Shape::new(conv.core.c, conv.core.wy, conv.core.wx);
             if inputs[0] != want {
                 return Err(anyhow!(
                     "conv {} wants input {}, got {}",
-                    p.label(),
+                    conv.label(),
                     want.label(),
                     inputs[0].label()
                 ));
             }
-            Ok(Shape::new(p.m, p.oy(), p.ox()))
+            Ok(Shape::new(conv.core.m, conv.oy(), conv.ox()))
         }
         Op::Pad { h, w } => {
             arity(1)?;
@@ -232,18 +235,22 @@ impl GraphBuilder {
         self.nodes.is_empty()
     }
 
-    pub fn conv(&mut self, name: &str, input: NodeId, problem: ConvProblem) -> Result<NodeId> {
-        self.add(name, Op::Conv { problem }, &[input])
+    /// A conv node carrying a full op.
+    pub fn conv_op(&mut self, name: &str, input: NodeId, conv: ConvOp) -> Result<NodeId> {
+        self.add(name, Op::Conv { conv }, &[input])
     }
 
-    /// Conv followed by a pad back to the problem's nominal map — the
-    /// models' 'same' padding.  K=1 convs need no pad and get none.
+    /// A dense (stride-1, valid) conv — the historical builder entry.
+    pub fn conv(&mut self, name: &str, input: NodeId, problem: ConvProblem) -> Result<NodeId> {
+        self.conv_op(name, input, ConvOp::dense(problem))
+    }
+
+    /// 'same' convolution: op-level padding keeps the nominal map (odd
+    /// K; K=1 needs no pad and gets none).  One node — no graph-side
+    /// `Pad` follows.
     pub fn conv_same(&mut self, name: &str, input: NodeId, problem: ConvProblem) -> Result<NodeId> {
-        let c = self.conv(name, input, problem)?;
-        if problem.k == 1 {
-            return Ok(c);
-        }
-        self.pad(&format!("{name}.pad"), c, problem.wy, problem.wx)
+        let conv = if problem.k == 1 { ConvOp::dense(problem) } else { ConvOp::same(problem) };
+        self.conv_op(name, input, conv)
     }
 
     pub fn pad(&mut self, name: &str, input: NodeId, h: usize, w: usize) -> Result<NodeId> {
@@ -271,12 +278,13 @@ impl GraphBuilder {
 }
 
 // ---------------------------------------------------------------------------
-// the §4 models as graphs
+// the evaluation models as graphs
 // ---------------------------------------------------------------------------
 
 /// Model names `model_graph` accepts (what the router registers and the
 /// CLI's `--model` takes).
-pub const MODEL_NAMES: [&str; 4] = ["alexnet", "vgg16", "resnet18", "inception3a"];
+pub const MODEL_NAMES: [&str; 5] =
+    ["alexnet", "vgg16", "resnet18", "inception3a", "mobilenet_v1"];
 
 /// Build a named model graph.  Names are canonical (`MODEL_NAMES`):
 /// every `Graph::name` equals the name that built it, so registries can
@@ -287,6 +295,7 @@ pub fn model_graph(name: &str) -> Result<Graph> {
         "vgg16" => Ok(vgg16_graph()),
         "resnet18" => Ok(resnet18_graph()),
         "inception3a" => Ok(inception3a_graph()),
+        "mobilenet_v1" => Ok(mobilenet_v1_graph()),
         _ => Err(anyhow!(
             "unknown model '{name}' (available: {})",
             MODEL_NAMES.join(", ")
@@ -294,24 +303,24 @@ pub fn model_graph(name: &str) -> Result<Graph> {
     }
 }
 
-/// AlexNet's stride-1 conv body (conv2..conv5, the `suites::alexnet`
-/// problems) with its inter-stage 3x3/s2 max pools.
+/// AlexNet's conv body (conv2..conv5, the `suites::alexnet` ops) with
+/// its inter-stage 3x3/s2 max pools.
 pub fn alexnet_graph() -> Graph {
     let l = suites::alexnet();
     let mut b = GraphBuilder::new("alexnet");
     let x = b.input("in", Shape::new(96, 27, 27));
-    let x = b.conv_same("conv2", x, l[0]).expect("alexnet conv2");
+    let x = b.conv_op("conv2", x, l[0]).expect("alexnet conv2");
     let x = b.pool("pool2", x, 3, 2).expect("alexnet pool2");
-    let x = b.conv_same("conv3", x, l[1]).expect("alexnet conv3");
-    let x = b.conv_same("conv4", x, l[2]).expect("alexnet conv4");
-    let x = b.conv_same("conv5", x, l[3]).expect("alexnet conv5");
+    let x = b.conv_op("conv3", x, l[1]).expect("alexnet conv3");
+    let x = b.conv_op("conv4", x, l[2]).expect("alexnet conv4");
+    let x = b.conv_op("conv5", x, l[3]).expect("alexnet conv5");
     b.pool("pool5", x, 3, 2).expect("alexnet pool5");
     b.finish().expect("alexnet graph")
 }
 
 /// VGG-16's 13-conv body: five blocks of 'same' 3x3 convs, each closed
-/// by a 2x2/s2 max pool.  Repeated layers reuse the same `ConvProblem`,
-/// so the distinct problems are exactly `suites::vgg16`.
+/// by a 2x2/s2 max pool.  Repeated layers reuse the same `ConvOp`, so
+/// the distinct ops are exactly `suites::vgg16`.
 pub fn vgg16_graph() -> Graph {
     let mut b = GraphBuilder::new("vgg16");
     let mut x = b.input("in", Shape::new(3, 224, 224));
@@ -336,36 +345,37 @@ pub fn vgg16_graph() -> Graph {
     b.finish().expect("vgg16 graph")
 }
 
-/// ResNet-18's body: four stages of two basic blocks on 56/28/14/7 maps.
-/// Stage transitions pool 2x2/s2 and project the skip with the suite's
-/// K=1 convs; every residual `Add` keeps its block input live across the
-/// block — the lifetimes the arena planner exists for.
+/// ResNet-18's body with its TRUE geometry: four stages of two basic
+/// blocks on 56/28/14/7 maps; every stage transition downsamples with
+/// a native 3x3/s2 conv and a 1x1/s2 projection on the skip — both on
+/// the previous stage's map (the seed's pool + stride-1 approximation
+/// is gone).  Every residual `Add` keeps its block input live across
+/// the block — the lifetimes the arena planner exists for.
 pub fn resnet18_graph() -> Graph {
     let mut b = GraphBuilder::new("resnet18");
     let mut x = b.input("in", Shape::new(64, 56, 56));
-    // (C_in, C_out, map) per stage
-    let stages: [(usize, usize, usize); 4] =
-        [(64, 64, 56), (64, 128, 28), (128, 256, 14), (256, 512, 7)];
-    for (si, &(c_in, c_out, w)) in stages.iter().enumerate() {
+    // (C_in, C_out, input map, first-block stride) per stage
+    let stages: [(usize, usize, usize, usize); 4] =
+        [(64, 64, 56, 1), (64, 128, 56, 2), (128, 256, 28, 2), (256, 512, 14, 2)];
+    for (si, &(c_in, c_out, w_in, stride)) in stages.iter().enumerate() {
         let s = si + 1;
-        if si > 0 {
-            x = b.pool(&format!("down{s}"), x, 2, 2).expect("resnet18 pool");
-        }
+        let w_out = (w_in - 1) / stride + 1;
         for blk in 1..=2usize {
-            let first = blk == 1 && c_in != c_out;
-            let ca = if first {
-                ConvProblem::multi(c_in, w, c_out, 3)
+            let transition = blk == 1 && (stride > 1 || c_in != c_out);
+            let (ca, proj) = if transition {
+                (
+                    ConvOp::strided(ConvProblem::multi(c_in, w_in, c_out, 3), stride, 1),
+                    Some(ConvOp::strided(ConvProblem::multi(c_in, w_in, c_out, 1), stride, 0)),
+                )
             } else {
-                ConvProblem::multi(c_out, w, c_out, 3)
+                (ConvOp::same(ConvProblem::multi(c_out, w_out, c_out, 3)), None)
             };
-            let cb = ConvProblem::multi(c_out, w, c_out, 3);
-            let a = b.conv_same(&format!("s{s}b{blk}c1"), x, ca).expect("resnet18 conv");
-            let c2 = b.conv_same(&format!("s{s}b{blk}c2"), a, cb).expect("resnet18 conv");
-            let skip = if first {
-                b.conv(&format!("s{s}proj"), x, ConvProblem::multi(c_in, w, c_out, 1))
-                    .expect("resnet18 proj")
-            } else {
-                x
+            let cb = ConvOp::same(ConvProblem::multi(c_out, w_out, c_out, 3));
+            let a = b.conv_op(&format!("s{s}b{blk}c1"), x, ca).expect("resnet18 conv");
+            let c2 = b.conv_op(&format!("s{s}b{blk}c2"), a, cb).expect("resnet18 conv");
+            let skip = match proj {
+                Some(p) => b.conv_op(&format!("s{s}proj"), x, p).expect("resnet18 proj"),
+                None => x,
             };
             x = b.add_skip(&format!("s{s}b{blk}add"), c2, skip).expect("resnet18 add");
         }
@@ -376,21 +386,41 @@ pub fn resnet18_graph() -> Graph {
 /// GoogLeNet inception(3a): four parallel branches over the 192x28x28
 /// input (1x1 / 1x1+3x3 / 1x1+5x5 / 3x3-pool+1x1) concatenated to
 /// 256x28x28 — built from `suites::googlenet_inception3a_branches`.
+/// The conv padding is op-level; the pool branch keeps a graph-side
+/// pad (pool framing, not a conv input transform).
 pub fn inception3a_graph() -> Graph {
     let br = suites::googlenet_inception3a_branches();
     assert_eq!(br.len(), 4, "inception(3a) has four branches");
     let mut b = GraphBuilder::new("inception3a");
     let x = b.input("in", Shape::new(192, 28, 28));
-    let b1 = b.conv("b1.1x1", x, br[0][0]).expect("inception b1");
-    let t = b.conv("b2.reduce", x, br[1][0]).expect("inception b2r");
-    let b2 = b.conv_same("b2.3x3", t, br[1][1]).expect("inception b2");
-    let t = b.conv("b3.reduce", x, br[2][0]).expect("inception b3r");
-    let b3 = b.conv_same("b3.5x5", t, br[2][1]).expect("inception b3");
+    let b1 = b.conv_op("b1.1x1", x, br[0][0]).expect("inception b1");
+    let t = b.conv_op("b2.reduce", x, br[1][0]).expect("inception b2r");
+    let b2 = b.conv_op("b2.3x3", t, br[1][1]).expect("inception b2");
+    let t = b.conv_op("b3.reduce", x, br[2][0]).expect("inception b3r");
+    let b3 = b.conv_op("b3.5x5", t, br[2][1]).expect("inception b3");
     let t = b.pool("b4.pool", x, 3, 1).expect("inception pool");
     let t = b.pad("b4.pool.pad", t, 28, 28).expect("inception pad");
-    let b4 = b.conv("b4.proj", t, br[3][0]).expect("inception b4");
+    let b4 = b.conv_op("b4.proj", t, br[3][0]).expect("inception b4");
     b.concat("concat", &[b1, b2, b3, b4]).expect("inception concat");
     b.finish().expect("inception3a graph")
+}
+
+/// MobileNetV1 (width 1.0, 224x224): the strided first conv, 13
+/// depthwise-separable blocks (`suites::mobilenet_v1` in order), and
+/// the global 7x7 pool — a model family the pre-op-layer graph could
+/// not express at all.
+pub fn mobilenet_v1_graph() -> Graph {
+    let ops = suites::mobilenet_v1();
+    let mut b = GraphBuilder::new("mobilenet_v1");
+    let mut x = b.input("in", Shape::new(3, 224, 224));
+    x = b.conv_op("conv1", x, ops[0]).expect("mobilenet conv1");
+    for (i, pair) in ops[1..].chunks(2).enumerate() {
+        let blk = i + 1;
+        x = b.conv_op(&format!("b{blk}.dw"), x, pair[0]).expect("mobilenet dw");
+        x = b.conv_op(&format!("b{blk}.pw"), x, pair[1]).expect("mobilenet pw");
+    }
+    b.pool("avgpool", x, 7, 1).expect("mobilenet pool");
+    b.finish().expect("mobilenet_v1 graph")
 }
 
 #[cfg(test)]
@@ -399,8 +429,8 @@ mod tests {
 
     #[test]
     fn all_models_build_and_validate() {
-        // (graph-problems == suite-problems is the ISSUE-2 acceptance
-        // gate, asserted once in rust/tests/integration_graph.rs)
+        // (graph-ops == suite-ops is an acceptance gate, asserted in
+        // rust/tests/integration_graph.rs)
         for name in MODEL_NAMES {
             let g = model_graph(name).unwrap();
             assert!(g.validate().is_ok(), "{name}");
@@ -413,6 +443,8 @@ mod tests {
     fn vgg16_has_the_full_13_conv_body() {
         let g = vgg16_graph();
         assert_eq!(g.conv_nodes(), 13);
+        // op-level 'same' padding: 13 convs + 5 pools + input, no pads
+        assert_eq!(g.len(), 19);
         // output after five 2x2 pools: 512 x 7 x 7
         let out = g.outputs();
         assert_eq!(out.len(), 1);
@@ -429,9 +461,20 @@ mod tests {
     }
 
     #[test]
-    fn resnet18_skips_are_real_branches() {
+    fn resnet18_downsamples_with_native_stride() {
         let g = resnet18_graph();
         assert_eq!(g.conv_nodes(), 16 + 3); // 8 blocks x 2 convs + 3 projections
+        // no pools survive: downsampling is conv-native now
+        assert!(
+            !g.nodes().iter().any(|n| matches!(n.op, Op::Pool { .. })),
+            "pool-based downsampling approximation survived"
+        );
+        let strided: Vec<&Node> = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv { conv } if conv.stride == 2))
+            .collect();
+        assert_eq!(strided.len(), 6, "3 transitions x (conv + projection)");
         // every add has two distinct inputs (main path + skip)
         let adds: Vec<&Node> =
             g.nodes().iter().filter(|n| matches!(n.op, Op::Add)).collect();
@@ -442,6 +485,27 @@ mod tests {
         let out = g.outputs();
         assert_eq!(out.len(), 1);
         assert_eq!(g.node(out[0]).shape, Shape::new(512, 7, 7));
+        // graph ops == the rebuilt suite
+        let got = g.conv_ops();
+        for op in crate::conv::suites::resnet18() {
+            assert!(got.contains(&op), "missing {}", op.label());
+        }
+    }
+
+    #[test]
+    fn mobilenet_v1_builds_the_separable_stack() {
+        let g = mobilenet_v1_graph();
+        assert_eq!(g.conv_nodes(), 27);
+        let out = g.outputs();
+        assert_eq!(out.len(), 1);
+        assert_eq!(g.node(out[0]).shape, Shape::new(1024, 1, 1));
+        // depthwise nodes carry real grouped ops
+        let dw = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv { conv } if conv.is_depthwise()))
+            .count();
+        assert_eq!(dw, 13);
     }
 
     #[test]
@@ -464,6 +528,14 @@ mod tests {
         let x = b.input("in", Shape::new(8, 14, 14));
         // conv expecting 16 channels on an 8-channel tensor
         assert!(b.conv("c", x, ConvProblem::multi(16, 14, 8, 3)).is_err());
+        // invalid op (bad group split)
+        assert!(b
+            .conv_op(
+                "g",
+                x,
+                ConvOp { core: ConvProblem::multi(8, 14, 9, 3), stride: 1, pad: 0, groups: 2 }
+            )
+            .is_err());
         // pad cannot shrink
         assert!(b.pad("p", x, 7, 7).is_err());
         // pool window larger than the map
@@ -478,15 +550,21 @@ mod tests {
     }
 
     #[test]
-    fn conv_same_restores_the_nominal_map() {
+    fn conv_same_is_one_padded_node() {
         let mut b = GraphBuilder::new("same");
         let x = b.input("in", Shape::new(16, 28, 28));
         let y = b.conv_same("c3", x, ConvProblem::multi(16, 28, 32, 3)).unwrap();
         assert_eq!(b.nodes[y].shape, Shape::new(32, 28, 28));
-        // K=1 inserts no pad node
+        assert!(matches!(b.nodes[y].op, Op::Conv { conv } if conv.pad == 1));
+        // K=1 needs no padding
         let z = b.conv_same("c1", y, ConvProblem::multi(32, 28, 32, 1)).unwrap();
         assert_eq!(b.nodes[z].shape, Shape::new(32, 28, 28));
-        assert!(matches!(b.nodes[z].op, Op::Conv { .. }));
+        assert!(matches!(b.nodes[z].op, Op::Conv { conv } if conv.is_dense()));
+        // a strided conv node downsamples in one hop
+        let s = b
+            .conv_op("down", z, ConvOp::strided(ConvProblem::multi(32, 28, 64, 3), 2, 1))
+            .unwrap();
+        assert_eq!(b.nodes[s].shape, Shape::new(64, 14, 14));
         let g = b.finish().unwrap();
         assert!(g.validate().is_ok());
     }

@@ -1,12 +1,14 @@
 //! Whole-graph execution: a topological scheduler that resolves conv
-//! nodes through an injected `Planner` — `backend::dispatch_plan` for
-//! per-layer cross-backend algorithm choice (the serving default: one
-//! model can run Winograd on its big K=3 layers and the paper kernels
-//! on its small maps), `plans::plan_for` for the tuned-paper-only path,
-//! `plans::paper_plan_for` for the §3 closed forms — times every node
-//! under `gpusim`, and reports end-to-end model latency next to the
-//! arena memory plan.  Conv `NodeReport.detail` carries the chosen
-//! plan's name, so `model --report` shows the per-layer backend picks.
+//! nodes through an injected `Planner` — `backend::dispatch_op_plan`
+//! for per-layer cross-backend algorithm choice (the serving default:
+//! one model can run Winograd on its big K=3 layers and the paper
+//! kernels on its small maps), `plans::op_plan_for` for the
+//! tuned-paper-only path, `plans::paper_op_plan_for` for the §3 closed
+//! forms — times every node under `gpusim`, and reports end-to-end
+//! model latency next to the arena memory plan.  Conv
+//! `NodeReport.detail` carries the chosen plan's name (with its
+//! stride/group tags), so `model --report` shows the per-layer backend
+//! picks.
 //!
 //! Glue operators (pool / pad / add / concat) have no FMA story — they
 //! are DRAM-bound streams, charged launch overhead + one cold latency +
@@ -16,7 +18,7 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::conv::{ConvProblem, BYTES_F32};
+use crate::conv::{ConvOp, BYTES_F32};
 use crate::gpusim::{simulate, GpuSpec, KernelPlan};
 use crate::plans;
 use crate::util::bench::Table;
@@ -25,10 +27,12 @@ use super::build::Graph;
 use super::memory::{plan_arena, ArenaPlan};
 use super::node::{NodeId, Op, Shape};
 
-/// How a conv node resolves to a kernel plan.  `backend::dispatch_plan`
-/// (cross-backend), `plans::plan_for` (tuned paper kernel) and
-/// `plans::paper_plan_for` (§3 closed forms) all fit.
-pub type Planner = fn(&ConvProblem, &GpuSpec) -> KernelPlan;
+/// How a conv node resolves to a kernel plan.
+/// `backend::dispatch_op_plan` (cross-backend), `plans::op_plan_for`
+/// (tuned paper kernel) and `plans::paper_op_plan_for` (§3 closed
+/// forms) all fit — each handles stride/pad/groups through the op
+/// layer's native schedules or the exact lowering.
+pub type Planner = fn(&ConvOp, &GpuSpec) -> KernelPlan;
 
 /// Fraction of peak DRAM bandwidth the memory-bound glue kernels
 /// sustain (simple streaming kernels: no coalescing hazards, but no
@@ -183,8 +187,8 @@ pub fn execute_batched(g: &Graph, spec: &GpuSpec, planner: Planner, batch: usize
         let n = g.node(id);
         let (seconds, detail) = match &n.op {
             Op::Input { .. } => (0.0, "network input".to_string()),
-            Op::Conv { problem } => {
-                let plan = planner(problem, spec).batched(batch);
+            Op::Conv { conv } => {
+                let plan = planner(conv, spec).batched(batch);
                 let r = simulate(spec, &plan);
                 convs += 1;
                 conv_s += r.seconds;
@@ -260,7 +264,7 @@ mod tests {
     fn execute_produces_positive_breakdown() {
         let g = model_graph("alexnet").unwrap();
         let spec = gtx_1080ti();
-        let r = execute(&g, &spec, plans::paper_plan_for);
+        let r = execute(&g, &spec, plans::paper_op_plan_for);
         assert_eq!(r.nodes.len(), g.len());
         assert!(r.total_seconds > 0.0 && r.total_seconds.is_finite());
         assert!((r.conv_seconds + r.glue_seconds - r.total_seconds).abs() < 1e-12);
@@ -276,7 +280,7 @@ mod tests {
     fn conv_nodes_report_their_plan_names() {
         let g = model_graph("inception3a").unwrap();
         let spec = gtx_1080ti();
-        let r = execute(&g, &spec, plans::paper_plan_for);
+        let r = execute(&g, &spec, plans::paper_op_plan_for);
         for n in &r.nodes {
             if n.kind == "conv" {
                 assert!(n.detail.contains("ours-"), "{}: {}", n.name, n.detail);
@@ -306,10 +310,10 @@ mod tests {
     fn batched_execution_amortizes_and_scales_arena() {
         let g = model_graph("alexnet").unwrap();
         let spec = gtx_1080ti();
-        let one = execute_batched(&g, &spec, plans::paper_plan_for, 1);
-        let four = execute_batched(&g, &spec, plans::paper_plan_for, 4);
+        let one = execute_batched(&g, &spec, plans::paper_op_plan_for, 1);
+        let four = execute_batched(&g, &spec, plans::paper_op_plan_for, 4);
         // batch=1 is exactly execute()
-        let plain = execute(&g, &spec, plans::paper_plan_for);
+        let plain = execute(&g, &spec, plans::paper_op_plan_for);
         assert_eq!(plain.batch, 1);
         assert!((one.total_seconds - plain.total_seconds).abs() < 1e-15);
         // more work than one image, less than four independent runs
@@ -329,7 +333,7 @@ mod tests {
     fn report_table_and_summary_render() {
         let g = model_graph("vgg16").unwrap();
         let spec = gtx_1080ti();
-        let r = execute(&g, &spec, plans::paper_plan_for);
+        let r = execute(&g, &spec, plans::paper_op_plan_for);
         let t = r.table().to_string();
         assert!(t.contains("conv1_1") && t.contains("pool5"));
         let s = r.summary();
@@ -342,8 +346,8 @@ mod tests {
         // inside one model, gated to never lose to tuned-paper-only
         let g = model_graph("vgg16").unwrap();
         let spec = gtx_1080ti();
-        let tuned = execute(&g, &spec, plans::plan_for);
-        let dispatched = execute(&g, &spec, crate::backend::dispatch_plan);
+        let tuned = execute(&g, &spec, plans::op_plan_for);
+        let dispatched = execute(&g, &spec, crate::backend::dispatch_op_plan);
         assert!(
             dispatched.total_seconds <= tuned.total_seconds * (1.0 + 1e-9),
             "dispatch lost: {} > {}",

@@ -7,9 +7,13 @@
 //! `build`, memory-planned by `memory` (liveness + greedy arena
 //! offsets, the Li-et-al. inter-layer optimization), and executed by
 //! `exec` (topological schedule; conv nodes resolve through an
-//! injected `Planner` — `backend::dispatch_plan` for per-layer
-//! cross-backend algorithm choice, `plans::plan_for`/`paper_plan_for`
-//! for the paper-kernel-only paths — and run under `gpusim`).
+//! injected `Planner` — `backend::dispatch_op_plan` for per-layer
+//! cross-backend algorithm choice,
+//! `plans::op_plan_for`/`paper_op_plan_for` for the paper-kernel-only
+//! paths — and run under `gpusim`).  Conv nodes carry full `ConvOp`s:
+//! stride-2 downsampling, op-level 'same' padding and depthwise groups
+//! are first-class (ResNet-18 runs its true geometry; MobileNetV1 is a
+//! registered model).
 //!
 //! Consumers: the `model` CLI subcommand and `e2e_models` bench report
 //! end-to-end latency + peak arena memory per model; the coordinator
@@ -22,8 +26,8 @@ pub mod memory;
 pub mod node;
 
 pub use build::{
-    alexnet_graph, inception3a_graph, model_graph, resnet18_graph, vgg16_graph, Graph,
-    GraphBuilder, MODEL_NAMES,
+    alexnet_graph, inception3a_graph, mobilenet_v1_graph, model_graph, resnet18_graph,
+    vgg16_graph, Graph, GraphBuilder, MODEL_NAMES,
 };
 pub use exec::{execute, execute_batched, topo_order, ModelReport, NodeReport, Planner};
 pub use memory::{liveness, plan_arena, ArenaPlan, Placement, TensorLife, ARENA_ALIGN};

@@ -1,10 +1,12 @@
-//! Graph node types: activation shapes and the operator set the paper's
-//! evaluation models need — conv (carrying a `ConvProblem`), pad (the
-//! models' 'same' padding, applied graph-side because the paper's
-//! kernels compute valid convolutions), pool, elementwise add (ResNet
-//! skip connections) and channel concat (Inception cells).
+//! Graph node types: activation shapes and the operator set the
+//! evaluation models need — conv (carrying a full `ConvOp`: stride,
+//! padding and groups are op-level, so 'same' models pad inside the
+//! conv and downsampling models stride natively), pad (pool framing
+//! only — conv inputs no longer need graph-side pads), pool,
+//! elementwise add (ResNet skip connections) and channel concat
+//! (Inception cells).
 
-use crate::conv::{ConvProblem, BYTES_F32};
+use crate::conv::{ConvOp, BYTES_F32};
 
 /// Shape of one activation tensor: `c` channels of `h` x `w`, f32.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -42,10 +44,13 @@ pub type NodeId = usize;
 pub enum Op {
     /// network input with a declared shape
     Input { shape: Shape },
-    /// stride-1 valid convolution — the paper's workload unit; resolved
-    /// to a `KernelPlan` through `plans`/`tuner` at execution time
-    Conv { problem: ConvProblem },
-    /// zero-pad height/width up to `h` x `w` (channels unchanged)
+    /// a convolution op (stride / padding / groups first-class) —
+    /// resolved to a `KernelPlan` through the injected `Planner`
+    /// (backend dispatch or the paper plans) at execution time
+    Conv { conv: ConvOp },
+    /// zero-pad height/width up to `h` x `w` (channels unchanged) —
+    /// retained for pool framing (e.g. inception's 'same' pool); conv
+    /// padding is op-level now
     Pad { h: usize, w: usize },
     /// max pool with a `k` x `k` window and the given stride
     Pool { k: usize, stride: usize },
@@ -100,13 +105,15 @@ mod tests {
 
     #[test]
     fn op_kinds() {
+        use crate::conv::ConvProblem;
+        let c = ConvOp::dense(ConvProblem::single(8, 1, 1));
         assert_eq!(Op::Input { shape: Shape::new(1, 1, 1) }.kind(), "input");
-        assert_eq!(Op::Conv { problem: ConvProblem::single(8, 1, 1) }.kind(), "conv");
+        assert_eq!(Op::Conv { conv: c }.kind(), "conv");
         assert_eq!(Op::Pad { h: 4, w: 4 }.kind(), "pad");
         assert_eq!(Op::Pool { k: 2, stride: 2 }.kind(), "pool");
         assert_eq!(Op::Add.kind(), "add");
         assert_eq!(Op::Concat.kind(), "concat");
-        assert!(Op::Conv { problem: ConvProblem::single(8, 1, 1) }.is_conv());
+        assert!(Op::Conv { conv: c }.is_conv());
         assert!(!Op::Add.is_conv());
     }
 }

@@ -5,6 +5,8 @@
 //!   simulate --c --w --m --k      run one problem through the analytic
 //!                                 model + simulator vs all baselines,
 //!                                 with the dispatcher's pick called out
+//!                                 (--stride/--pad/--groups lift it to a
+//!                                 ConvOp priced through the op layer)
 //!   serve [--requests N]          demo serve loop: synthetic CNN traffic
 //!                                 through the coordinator, metrics out
 //!   sweep [--suite fig4|fig5]     print the paper's figure sweeps
@@ -30,10 +32,10 @@ use std::time::Duration;
 
 use pasconv::baselines::{cudnn_proxy, dac17, tan128};
 use pasconv::conv::suites::{all_cnn_layers, fig4_suite, fig5_suite};
-use pasconv::conv::ConvProblem;
+use pasconv::conv::{ConvOp, ConvProblem};
 use pasconv::coordinator::{plan_advice, BatchConfig, Coordinator, Payload};
 use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell, GpuSpec, KernelPlan};
-use pasconv::plans::{paper_plan_for, plan_for};
+use pasconv::plans::{op_plan_for, paper_op_plan_for, paper_plan_for, plan_for};
 use pasconv::runtime::{default_artifact_dir, Runtime, Tensor};
 use pasconv::tuner;
 use pasconv::tuner::PlanCache;
@@ -57,6 +59,7 @@ fn main() {
                 "usage: pasconv <list|simulate|serve|sweep|tune|model|fleet> [flags]\n\
                  \n  list                              artifact registry\
                  \n  simulate --c C --w W --m M --k K  one problem, all kernels, simulated\
+                 \n           [--stride S --pad P --groups G] op-level pricing\
                  \n           [--no-dispatch|--no-tune] (default: cross-backend dispatch)\
                  \n  serve [--requests N]              demo serving loop with batching\
                  \n  sweep [--suite fig4|fig5] [--gpu 1080ti|titanx] [--no-tune]\
@@ -76,9 +79,9 @@ fn main() {
     std::process::exit(rc);
 }
 
-/// The planner `simulate`/`model` use: the cross-backend dispatcher by
-/// default, the tuned paper kernel under `--no-dispatch`, the paper's
-/// closed-form pick under `--no-tune`.
+/// The problem planner `simulate` uses: the cross-backend dispatcher
+/// by default, the tuned paper kernel under `--no-dispatch`, the
+/// paper's closed-form pick under `--no-tune`.
 fn planner(args: &Args) -> fn(&ConvProblem, &GpuSpec) -> KernelPlan {
     if args.has("no-tune") {
         paper_plan_for
@@ -86,6 +89,18 @@ fn planner(args: &Args) -> fn(&ConvProblem, &GpuSpec) -> KernelPlan {
         plan_for
     } else {
         pasconv::backend::dispatch_plan
+    }
+}
+
+/// The op planner `model` uses (a `graph::Planner`): same three modes,
+/// lifted to the op layer — every mode handles stride/pad/groups.
+fn op_planner(args: &Args) -> fn(&ConvOp, &GpuSpec) -> KernelPlan {
+    if args.has("no-tune") {
+        paper_op_plan_for
+    } else if args.has("no-dispatch") {
+        op_plan_for
+    } else {
+        pasconv::backend::dispatch_op_plan
     }
 }
 
@@ -139,11 +154,53 @@ fn cmd_simulate(args: &Args) -> i32 {
         m: args.get_usize("m", 64),
         k: args.get_usize("k", 3),
     };
-    if !p.valid() {
-        eprintln!("invalid problem {p:?}");
+    let op = ConvOp {
+        core: p,
+        stride: args.get_usize("stride", 1),
+        pad: args.get_usize("pad", 0),
+        groups: args.get_usize("groups", 1),
+    };
+    if !op.valid() {
+        eprintln!("invalid op {op:?}");
         return 2;
     }
     let g = gpu_from(args);
+    if !op.is_dense() {
+        // op-level pricing: native/lowered routes vs the lowered floor,
+        // honoring the same mode flags as the dense path
+        println!("op: {}   GPU: {}", op.label(), g.name);
+        println!("lowered unit: {}", op.lower().unit.label());
+        let mode: &str = if args.has("no-tune") {
+            "paper §3 (op)"
+        } else if args.has("no-dispatch") {
+            "paper-tuned (op)"
+        } else {
+            println!("dispatch: {}", pasconv::backend::op_dispatch_advice(&op, &g));
+            "dispatched"
+        };
+        let mut rows: Vec<(&str, KernelPlan)> = vec![(mode, op_planner(args)(&op, &g))];
+        if mode != "paper-tuned (op)" {
+            rows.push(("paper-tuned (op)", op_plan_for(&op, &g)));
+        }
+        if mode != "paper §3 (op)" {
+            rows.push(("paper §3 (op)", paper_op_plan_for(&op, &g)));
+        }
+        let ours = simulate(&g, &rows[0].1).seconds;
+        let mut t = Table::new(&["route", "plan", "time", "GFLOP/s", "bottleneck", "vs pick"]);
+        for (route, plan) in &rows {
+            let r = simulate(&g, plan);
+            t.row(&[
+                route.to_string(),
+                r.name.clone(),
+                format!("{:.1}µs", r.seconds * 1e6),
+                format!("{:.0}", r.gflops),
+                r.bottleneck.to_string(),
+                format!("{:.2}x", r.seconds / ours),
+            ]);
+        }
+        t.print();
+        return 0;
+    }
     let plan_fn = planner(args);
     println!("problem: {}   GPU: {}", p.label(), g.name);
     println!("paper advice: {}", plan_advice(&p, &g));
@@ -240,7 +297,7 @@ fn cmd_sweep(args: &Args) -> i32 {
 
 fn cmd_model(args: &Args) -> i32 {
     let g = gpu_from(args);
-    let plan_fn = planner(args);
+    let plan_fn = op_planner(args);
     let which = args.get_or("model", "all");
     let names: Vec<&str> = if which == "all" {
         pasconv::graph::MODEL_NAMES.to_vec()

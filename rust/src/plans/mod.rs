@@ -16,7 +16,7 @@ pub mod single_channel;
 pub mod stride_fixed;
 
 use crate::backend::{ConvBackend, PaperClosedForm, PaperTuned};
-use crate::conv::{BatchedConv, ConvProblem};
+use crate::conv::{BatchedConv, BatchedConvOp, ConvOp, ConvProblem};
 use crate::gpusim::{GpuSpec, KernelPlan};
 
 /// Launch + drain overhead our kernels pay (~2.7 µs at 1.48 GHz).  One
@@ -60,6 +60,32 @@ pub fn batched_cycles(b: &BatchedConv, spec: &GpuSpec) -> f64 {
 /// `batched_cycles` in seconds on `spec`.
 pub fn batched_seconds(b: &BatchedConv, spec: &GpuSpec) -> f64 {
     PaperTuned.batched_seconds(b, spec)
+}
+
+// ---- the op layer (stride / padding / groups) ----
+
+/// The paper kernel's serving plan for a conv op: the tuned unit plan
+/// under the paper backends' native op schedule (decimated strips for
+/// stride, side-by-side groups — never pricing above its own naive
+/// lowering).  A `graph::Planner`.
+pub fn op_plan_for(op: &ConvOp, spec: &GpuSpec) -> KernelPlan {
+    PaperTuned.op_plan(op, spec)
+}
+
+/// `op_plan_for` with the paper's closed-form §3 unit picks
+/// (`--no-tune`).
+pub fn paper_op_plan_for(op: &ConvOp, spec: &GpuSpec) -> KernelPlan {
+    PaperClosedForm.op_plan(op, spec)
+}
+
+/// Predicted cycles of a batched op under the tuned paper path.
+pub fn batched_op_cycles(b: &BatchedConvOp, spec: &GpuSpec) -> f64 {
+    PaperTuned.batched_op_cycles(b, spec)
+}
+
+/// `batched_op_cycles` in seconds.
+pub fn batched_op_seconds(b: &BatchedConvOp, spec: &GpuSpec) -> f64 {
+    PaperTuned.batched_op_seconds(b, spec)
 }
 
 #[cfg(test)]
@@ -112,6 +138,26 @@ mod tests {
             assert!(t >= single, "n={n}");
             last = t;
         }
+    }
+
+    #[test]
+    fn op_plans_dispatch_and_degenerate_to_dense() {
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(64, 56, 64, 3);
+        assert_eq!(op_plan_for(&ConvOp::dense(p), &g).name, plan_for(&p, &g).name);
+        assert_eq!(
+            paper_op_plan_for(&ConvOp::dense(p), &g).name,
+            paper_plan_for(&p, &g).name
+        );
+        // a strided op plan exists, simulates, and carries its tag
+        let s2 = ConvOp::strided(ConvProblem::multi(64, 56, 128, 3), 2, 1);
+        let plan = op_plan_for(&s2, &g);
+        assert!(plan.name.contains("s2"), "{}", plan.name);
+        assert!(simulate(&g, &plan).seconds > 0.0);
+        // batched op helpers agree at n = 1
+        let b1 = batched_op_cycles(&BatchedConvOp::single(s2), &g);
+        assert!((b1 - simulate(&g, &plan).cycles).abs() < 1e-9 * b1);
+        assert!(batched_op_seconds(&BatchedConvOp::new(s2, 4), &g) > 0.0);
     }
 
     #[test]

@@ -5,9 +5,10 @@
 //!
 //! Format v2 adds `kind=dispatch` entries — the backend layer's
 //! cross-backend decisions (`backend=<tag> cycles=... tuned_cycles=...`)
-//! ride in the same file, keyed the same way.  Parsing is versioned by
-//! the `kind` field, so every v1 file (plan entries only) parses
-//! unchanged.
+//! ride in the same file, keyed the same way.  Format v3 keys dispatch
+//! entries by the full `ConvOp` — `stride=`/`pad=`/`groups=` fields
+//! carry the op parameters, and are OPTIONAL on parse (defaulting to
+//! the dense 1/0/1), so every v1 and v2 file parses unchanged.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -16,7 +17,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::analytic::SingleMethod;
 use crate::backend::{self, Decision, BACKEND_NAMES};
-use crate::conv::ConvProblem;
+use crate::conv::{ConvOp, ConvProblem};
 use crate::gpusim::{gtx_1080ti, tesla_k40, titan_x_maxwell, GpuSpec};
 
 use super::enumerate::PlanParams;
@@ -60,6 +61,22 @@ fn usize_field(fields: &HashMap<&str, &str>, idx: usize, key: &str) -> Result<us
     field(fields, idx, key)?
         .parse()
         .with_context(|| format!("line {}: field {key} not an integer", idx + 1))
+}
+
+/// Optional integer field with a default — how v3 op parameters stay
+/// backward compatible with v1/v2 lines that never carried them.
+fn usize_field_or(
+    fields: &HashMap<&str, &str>,
+    idx: usize,
+    key: &str,
+    default: usize,
+) -> Result<usize> {
+    match fields.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .with_context(|| format!("line {}: field {key} not an integer", idx + 1)),
+    }
 }
 
 fn f64_field(fields: &HashMap<&str, &str>, idx: usize, key: &str) -> Result<f64> {
@@ -124,23 +141,23 @@ fn validate_entry(idx: usize, p: &ConvProblem, gpu: &str, t: &Tuned) -> Result<(
     Ok(())
 }
 
-/// Validation for v2 `kind=dispatch` entries: the named backend must
-/// exist, support the problem, and not claim to beat its own floor's
-/// definition (cycles <= tuned_cycles — the dispatcher's never-lose
-/// invariant; an edited or stale entry violating it would silently
-/// serve a losing backend).
-fn validate_dispatch(idx: usize, p: &ConvProblem, d: &Decision) -> Result<()> {
+/// Validation for `kind=dispatch` entries: the named backend must
+/// exist, cover the op (natively or through the lowering), and not
+/// claim to beat its own floor's definition (cycles <= tuned_cycles —
+/// the dispatcher's never-lose invariant; an edited or stale entry
+/// violating it would silently serve a losing backend).
+fn validate_dispatch(idx: usize, op: &ConvOp, d: &Decision) -> Result<()> {
     let line = idx + 1;
-    if !p.valid() {
-        bail!("line {line}: invalid problem {p:?}");
+    if !op.valid() {
+        bail!("line {line}: invalid op {op:?}");
     }
     if !BACKEND_NAMES.contains(&d.backend.as_str()) {
         bail!("line {line}: unknown backend {:?}", d.backend);
     }
     let registry = backend::dispatch::registry();
     let b = registry.backend(&d.backend).expect("name checked against BACKEND_NAMES");
-    if !b.supports(p) {
-        bail!("line {line}: backend {} does not support {}", d.backend, p.label());
+    if !b.op_coverage(op).supported() {
+        bail!("line {line}: backend {} does not cover {}", d.backend, op.label());
     }
     if !(d.cycles.is_finite() && d.cycles > 0.0 && d.tuned_cycles.is_finite()) {
         bail!("line {line}: non-finite dispatch cycle counts");
@@ -152,11 +169,14 @@ fn validate_dispatch(idx: usize, p: &ConvProblem, d: &Decision) -> Result<()> {
 }
 
 /// Serializable map of tuning outcomes keyed by `(problem, GPU name)`,
-/// plus (v2) the backend layer's dispatch decisions under the same key.
+/// plus the backend layer's dispatch decisions keyed by the full
+/// `(ConvOp, GPU name)` — v3 keys carry stride/pad/groups, with dense
+/// ops serializing exactly like the historical v2 problem keys plus
+/// explicit dense fields.
 #[derive(Clone, Debug, Default)]
 pub struct PlanCache {
     entries: HashMap<(ConvProblem, String), Tuned>,
-    dispatch: HashMap<(ConvProblem, String), Decision>,
+    dispatch: HashMap<(ConvOp, String), Decision>,
 }
 
 impl PlanCache {
@@ -187,12 +207,12 @@ impl PlanCache {
         self.entries.insert((p, spec.name.to_string()), t);
     }
 
-    pub fn get_dispatch(&self, p: &ConvProblem, spec: &GpuSpec) -> Option<Decision> {
-        self.dispatch.get(&(*p, spec.name.to_string())).cloned()
+    pub fn get_dispatch(&self, op: &ConvOp, spec: &GpuSpec) -> Option<Decision> {
+        self.dispatch.get(&(*op, spec.name.to_string())).cloned()
     }
 
-    pub fn insert_dispatch(&mut self, p: ConvProblem, spec: &GpuSpec, d: Decision) {
-        self.dispatch.insert((p, spec.name.to_string()), d);
+    pub fn insert_dispatch(&mut self, op: ConvOp, spec: &GpuSpec, d: Decision) {
+        self.dispatch.insert((op, spec.name.to_string()), d);
     }
 
     /// Absorb every entry of `other` (overwriting duplicates), whatever
@@ -211,7 +231,7 @@ impl PlanCache {
         let mut keys: Vec<&(ConvProblem, String)> = self.entries.keys().collect();
         keys.sort_by_key(|(p, g)| (g.clone(), p.c, p.wy, p.wx, p.m, p.k));
         let mut out = String::from(
-            "# pasconv plan cache v2: problem + gpu -> tuned plan params / dispatch decisions\n",
+            "# pasconv plan cache v3: problem + gpu -> tuned plan params / op dispatch decisions\n",
         );
         for key in keys {
             let (p, gpu) = key;
@@ -240,19 +260,26 @@ impl PlanCache {
                 t.paper_cycles
             ));
         }
-        let mut dkeys: Vec<&(ConvProblem, String)> = self.dispatch.keys().collect();
-        dkeys.sort_by_key(|(p, g)| (g.clone(), p.c, p.wy, p.wx, p.m, p.k));
+        let mut dkeys: Vec<&(ConvOp, String)> = self.dispatch.keys().collect();
+        dkeys.sort_by_key(|(o, g)| {
+            let p = o.core;
+            (g.clone(), p.c, p.wy, p.wx, p.m, p.k, o.stride, o.pad, o.groups)
+        });
         for key in dkeys {
-            let (p, gpu) = key;
+            let (o, gpu) = key;
+            let p = o.core;
             let d = &self.dispatch[key];
             out.push_str(&format!(
-                "gpu={} c={} wy={} wx={} m={} k={} kind=dispatch backend={} cycles={} tuned_cycles={}\n",
+                "gpu={} c={} wy={} wx={} m={} k={} stride={} pad={} groups={} kind=dispatch backend={} cycles={} tuned_cycles={}\n",
                 encode_gpu(gpu),
                 p.c,
                 p.wy,
                 p.wx,
                 p.m,
                 p.k,
+                o.stride,
+                o.pad,
+                o.groups,
                 d.backend,
                 d.cycles,
                 d.tuned_cycles
@@ -284,16 +311,23 @@ impl PlanCache {
                 k: usize_field(&fields, idx, "k")?,
             };
             let params = match field(&fields, idx, "kind")? {
-                // v2 dispatch entry: backend tag + cycle pair, no params
+                // dispatch entry: backend tag + cycle pair; op fields
+                // optional (v1/v2 lines are dense)
                 "dispatch" => {
+                    let op = ConvOp {
+                        core: problem,
+                        stride: usize_field_or(&fields, idx, "stride", 1)?,
+                        pad: usize_field_or(&fields, idx, "pad", 0)?,
+                        groups: usize_field_or(&fields, idx, "groups", 1)?,
+                    };
                     let d = Decision {
                         backend: field(&fields, idx, "backend")?.to_string(),
                         cycles: f64_field(&fields, idx, "cycles")?,
                         tuned_cycles: f64_field(&fields, idx, "tuned_cycles")?,
                     };
-                    validate_dispatch(idx, &problem, &d)?;
+                    validate_dispatch(idx, &op, &d)?;
                     let gpu = decode_gpu(field(&fields, idx, "gpu")?);
-                    cache.dispatch.insert((problem, gpu), d);
+                    cache.dispatch.insert((op, gpu), d);
                     continue;
                 }
                 "single" => PlanParams::Single {
@@ -489,25 +523,49 @@ mod tests {
         let g = gtx_1080ti();
         let mut cache = sample();
         cache.insert_dispatch(
-            ConvProblem::multi(256, 56, 256, 3),
+            ConvOp::dense(ConvProblem::multi(256, 56, 256, 3)),
             &g,
             Decision { backend: "winograd".into(), cycles: 9_000.0, tuned_cycles: 12_000.5 },
         );
         cache.insert_dispatch(
-            ConvProblem::multi(256, 14, 256, 1),
+            ConvOp::dense(ConvProblem::multi(256, 14, 256, 1)),
             &g,
             Decision { backend: "paper-tuned".into(), cycles: 5_000.0, tuned_cycles: 5_000.0 },
         );
+        // a real op key: ResNet-18's stride-2 downsampling conv
+        cache.insert_dispatch(
+            ConvOp::strided(ConvProblem::multi(64, 56, 128, 3), 2, 1),
+            &g,
+            Decision { backend: "paper-tuned".into(), cycles: 7_000.25, tuned_cycles: 9_100.0 },
+        );
         let text = cache.to_lines();
         assert!(text.contains("kind=dispatch backend=winograd"), "{text}");
+        assert!(text.contains("stride=2 pad=1 groups=1"), "{text}");
         let back = PlanCache::from_lines(&text).unwrap();
-        assert_eq!(back.dispatch_len(), 2);
+        assert_eq!(back.dispatch_len(), 3);
         assert_eq!(back.len(), cache.len(), "plan entries survive alongside");
-        let d = back.get_dispatch(&ConvProblem::multi(256, 56, 256, 3), &g).unwrap();
+        let d = back
+            .get_dispatch(&ConvOp::dense(ConvProblem::multi(256, 56, 256, 3)), &g)
+            .unwrap();
         assert_eq!(d.backend, "winograd");
         assert!((d.tuned_cycles - 12_000.5).abs() == 0.0, "float round-trip exact");
+        let s2 = back
+            .get_dispatch(&ConvOp::strided(ConvProblem::multi(64, 56, 128, 3), 2, 1), &g)
+            .unwrap();
+        assert!((s2.cycles - 7_000.25).abs() == 0.0);
         // the serialized form is a fixed point
         assert_eq!(back.to_lines(), text);
+    }
+
+    #[test]
+    fn v2_dispatch_lines_without_op_fields_parse_as_dense() {
+        // exactly what a v2 `tune --save` produced: no stride/pad/groups
+        let v2 = "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=dispatch backend=winograd \
+                  cycles=1 tuned_cycles=2\n";
+        let cache = PlanCache::from_lines(v2).unwrap();
+        assert_eq!(cache.dispatch_len(), 1);
+        let op = ConvOp::dense(ConvProblem::multi(8, 14, 16, 3));
+        assert!(cache.get_dispatch(&op, &GpuSpec { name: "G", ..gtx_1080ti() }).is_some());
     }
 
     #[test]
@@ -550,6 +608,24 @@ mod tests {
             "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=dispatch backend=winograd cycles=1 tuned_cycles=2"
         )
         .is_ok());
+        // op-parameter validation: a depthwise K=5 op is outside
+        // winograd's unit envelope, and invalid group splits fail
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=8 k=5 stride=1 pad=2 groups=8 kind=dispatch \
+             backend=winograd cycles=1 tuned_cycles=2"
+        )
+        .is_err());
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=15 k=3 stride=1 pad=0 groups=2 kind=dispatch \
+             backend=paper-tuned cycles=1 tuned_cycles=2"
+        )
+        .is_err());
+        // a depthwise K=3 op through the paper backend parses
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=8 k=3 stride=2 pad=1 groups=8 kind=dispatch \
+             backend=paper-tuned cycles=1 tuned_cycles=2"
+        )
+        .is_ok());
     }
 
     #[test]
@@ -558,7 +634,7 @@ mod tests {
         let mut a = PlanCache::new();
         let mut b = sample();
         b.insert_dispatch(
-            ConvProblem::multi(64, 56, 64, 3),
+            ConvOp::dense(ConvProblem::multi(64, 56, 64, 3)),
             &g,
             Decision { backend: "paper-tuned".into(), cycles: 10.0, tuned_cycles: 10.0 },
         );

@@ -166,18 +166,19 @@ pub fn snapshot() -> PlanCache {
     global().lock().unwrap().clone()
 }
 
-/// Memoized cross-backend dispatch decision, if one exists.  The
-/// backend layer's dispatcher rides in the same process-wide cache as
-/// tuning results, so `tune --save/--load` persists both and the
-/// coordinator's warm-up fills both with one pass.
-pub fn cached_dispatch(p: &ConvProblem, spec: &GpuSpec) -> Option<crate::backend::Decision> {
-    global().lock().unwrap().get_dispatch(p, spec)
+/// Memoized cross-backend dispatch decision for an op, if one exists.
+/// The backend layer's dispatcher rides in the same process-wide cache
+/// as tuning results, so `tune --save/--load` persists both and the
+/// coordinator's warm-up fills both with one pass.  (v3 keys carry
+/// stride/pad/groups; dense ops are the historical problem keys.)
+pub fn cached_dispatch(op: &crate::conv::ConvOp, spec: &GpuSpec) -> Option<crate::backend::Decision> {
+    global().lock().unwrap().get_dispatch(op, spec)
 }
 
 /// Record a dispatch decision (called by `backend::dispatch` after a
 /// full ranking; decisions are computed outside the lock).
-pub fn store_dispatch(p: &ConvProblem, spec: &GpuSpec, d: crate::backend::Decision) {
-    global().lock().unwrap().insert_dispatch(*p, spec, d);
+pub fn store_dispatch(op: &crate::conv::ConvOp, spec: &GpuSpec, d: crate::backend::Decision) {
+    global().lock().unwrap().insert_dispatch(*op, spec, d);
 }
 
 /// Tuned-vs-paper summary over one suite — shared by the `tune` CLI

@@ -1,5 +1,15 @@
 //! Summary statistics for the in-repo bench harness (criterion is not in
 //! the offline vendor set).
+//!
+//! Hardened edge behavior (these feed CLI/bench reporting paths that
+//! must never panic on a degenerate run):
+//!  * sorting is NaN-safe (`f64::total_cmp` — NaNs order last instead
+//!    of panicking the comparator);
+//!  * `Summary::of(&[])` is the all-zero summary with `n = 0`;
+//!  * `geomean(&[])` is 1.0 (the empty product's identity);
+//!  * `mean(&[])` is 0.0;
+//!  * `percentile_sorted(&[], _)` is 0.0, and `p` is clamped to
+//!    [0, 100].
 
 /// Summary of a sample of measurements (times in seconds, or any unit).
 #[derive(Clone, Debug, PartialEq)]
@@ -15,10 +25,17 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// The defined empty-sample summary (`n = 0`, all stats zero).
+    pub fn empty() -> Summary {
+        Summary { n: 0, mean: 0.0, std_dev: 0.0, min: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 }
+    }
+
     pub fn of(samples: &[f64]) -> Summary {
-        assert!(!samples.is_empty(), "empty sample");
+        if samples.is_empty() {
+            return Summary::empty();
+        }
         let mut xs: Vec<f64> = samples.to_vec();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(|a, b| a.total_cmp(b));
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
@@ -39,22 +56,32 @@ impl Summary {
     }
 }
 
-/// Nearest-rank percentile on a pre-sorted slice, p in [0, 100].
+/// Nearest-rank percentile on a pre-sorted slice.  `p` is clamped to
+/// [0, 100]; the empty slice yields 0.0 instead of panicking.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty());
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let p = p.clamp(0.0, 100.0);
     let rank = (p / 100.0 * (sorted.len() as f64 - 1.0)).round() as usize;
     sorted[rank.min(sorted.len() - 1)]
 }
 
 /// Geometric mean — how the paper aggregates speedups ("average 2.6X").
+/// The empty slice yields 1.0: the multiplicative identity, so folding
+/// suite reports over zero workloads is a no-op instead of a panic.
 pub fn geomean(xs: &[f64]) -> f64 {
-    assert!(!xs.is_empty());
+    if xs.is_empty() {
+        return 1.0;
+    }
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
-/// Arithmetic mean.
+/// Arithmetic mean (0.0 on the empty slice).
 pub fn mean(xs: &[f64]) -> f64 {
-    assert!(!xs.is_empty());
+    if xs.is_empty() {
+        return 0.0;
+    }
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
@@ -102,8 +129,29 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn empty_sample_panics() {
-        let _ = Summary::of(&[]);
+    fn empty_inputs_are_defined_not_panics() {
+        assert_eq!(Summary::of(&[]), Summary::empty());
+        assert_eq!(Summary::of(&[]).n, 0);
+        assert_eq!(geomean(&[]), 1.0);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_sort_instead_of_panicking() {
+        // total_cmp orders NaN greatest: min/median stay meaningful,
+        // max reflects the poisoned tail, and nothing unwinds
+        let s = Summary::of(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 2.0);
+        assert!(s.max.is_nan());
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_p() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile_sorted(&xs, -5.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 250.0), 3.0);
     }
 }

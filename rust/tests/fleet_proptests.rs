@@ -26,7 +26,9 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 
-use pasconv::conv::{conv2d_batched_cpu, conv2d_multi_cpu, BatchedConv, ConvProblem};
+use pasconv::conv::{
+    conv2d_batched_cpu, conv2d_multi_cpu, BatchedConv, BatchedConvOp, ConvOp, ConvProblem,
+};
 use pasconv::fleet::{Fleet, FleetConfig, Policy};
 use pasconv::gpusim::{gtx_1080ti, titan_x_maxwell, GpuSpec};
 use pasconv::plans;
@@ -46,6 +48,16 @@ fn templates() -> Vec<ConvProblem> {
         ConvProblem::single(32, 16, 3),
         ConvProblem::multi(16, 7, 32, 3),
     ]
+}
+
+/// Fleet job templates: the dense problems plus real op-layer jobs
+/// (a stride-2 downsampler and a depthwise 3x3) — the scheduler prices
+/// all of them through the same per-shard op dispatcher.
+fn op_templates() -> Vec<ConvOp> {
+    let mut out: Vec<ConvOp> = templates().into_iter().map(ConvOp::dense).collect();
+    out.push(ConvOp::strided(ConvProblem::multi(8, 28, 16, 3), 2, 1));
+    out.push(ConvOp::depthwise(16, 14, 3, 1));
+    out
 }
 
 const MODELS: [&str; 3] = ["alexnet", "resnet18", "vgg16"];
@@ -76,7 +88,7 @@ fn gen_case(rng: &mut Rng) -> Case {
     let cmds = (0..n_cmds)
         .map(|_| match rng.range_usize(0, 9) {
             0..=5 => Cmd::Submit {
-                template: rng.range_usize(0, templates().len() - 1),
+                template: rng.range_usize(0, op_templates().len() - 1),
                 n: [1, 2, 4, 8][rng.range_usize(0, 3)],
                 model: match rng.range_usize(0, 3) {
                     0 => None,
@@ -194,7 +206,7 @@ fn run_case(case: &Case) -> Result<(), String> {
         FleetConfig { policy: case.policy, queue_bound: case.queue_bound },
     );
     let mut model = RefModel::new(case.devices, case.queue_bound);
-    let temps = templates();
+    let temps = op_templates();
 
     let check_completion = |fleet: &mut Fleet, model: &mut RefModel| -> Result<(), String> {
         let expect = model.expected_completion();
@@ -226,7 +238,7 @@ fn run_case(case: &Case) -> Result<(), String> {
     for (step, cmd) in case.cmds.iter().enumerate() {
         match *cmd {
             Cmd::Submit { template, n, model: m } => {
-                let conv = BatchedConv::new(temps[template], n);
+                let conv = BatchedConvOp::new(temps[template], n);
                 let service: Vec<f64> =
                     (0..case.devices).map(|d| fleet.predicted_service(&conv, d)).collect();
                 let tag = m.map(|i| MODELS[i]);
@@ -417,6 +429,21 @@ fn batched_predicted_cycles_monotone_and_amortizing() {
             last = c;
         }
     }
+    // and the same holds for real op jobs through the op path
+    for op in op_templates() {
+        let single = plans::batched_op_cycles(&BatchedConvOp::single(op), &g);
+        let mut last = 0.0;
+        for n in 1..=8usize {
+            let c = plans::batched_op_cycles(&BatchedConvOp::new(op, n), &g);
+            assert!(c > last, "{}: op cycles not monotone at n={n}", op.label());
+            assert!(
+                c <= n as f64 * single * (1.0 + 1e-9),
+                "{}: op batch of {n} slower than {n} launches",
+                op.label()
+            );
+            last = c;
+        }
+    }
 }
 
 #[test]
@@ -424,17 +451,17 @@ fn fleet_makespan_at_least_batch_over_devices_scaled_cost() {
     // n identical single-image jobs over D homogeneous devices cannot
     // drain faster than the n/D-scaled single-image cost
     let g = gtx_1080ti();
-    let p = templates()[0];
+    let p = op_templates()[0];
     for d in [1usize, 2, 4, 8] {
         let mut fleet = Fleet::homogeneous(
             d,
             &g,
             FleetConfig { policy: Policy::LeastLoaded, queue_bound: 64 },
         );
-        let single = fleet.predicted_service(&BatchedConv::single(p), 0);
+        let single = fleet.predicted_service(&BatchedConvOp::single(p), 0);
         let n = 24;
         for _ in 0..n {
-            assert!(fleet.submit(BatchedConv::single(p), None).is_some());
+            assert!(fleet.submit(BatchedConvOp::single(p), None).is_some());
         }
         let makespan = fleet
             .drain()
@@ -457,17 +484,17 @@ fn batched_jobs_beat_singles_end_to_end() {
     // serving n images as one batch drains faster than n single jobs —
     // the admission path's reason to coalesce
     let g = gtx_1080ti();
-    let p = templates()[0];
+    let p = op_templates()[0];
     let cfg = FleetConfig { policy: Policy::LeastLoaded, queue_bound: 64 };
     let n = 8;
     let mut singles = Fleet::homogeneous(2, &g, cfg);
     for _ in 0..n {
-        singles.submit(BatchedConv::single(p), None).unwrap();
+        singles.submit(BatchedConvOp::single(p), None).unwrap();
     }
     let t_singles = singles.drain().iter().map(|c| c.finish).fold(0.0f64, f64::max);
     let mut batched = Fleet::homogeneous(2, &g, cfg);
-    batched.submit(BatchedConv::new(p, n / 2), None).unwrap();
-    batched.submit(BatchedConv::new(p, n / 2), None).unwrap();
+    batched.submit(BatchedConvOp::new(p, n / 2), None).unwrap();
+    batched.submit(BatchedConvOp::new(p, n / 2), None).unwrap();
     let t_batched = batched.drain().iter().map(|c| c.finish).fold(0.0f64, f64::max);
     assert!(
         t_batched < t_singles,

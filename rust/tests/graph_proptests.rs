@@ -1,11 +1,12 @@
 //! Property-based tests (util::prop harness) over the graph subsystem:
-//! random valid DAGs built through `GraphBuilder`, checked against the
-//! ISSUE-2 invariants — topological order respects edges, shape
-//! inference matches `ConvProblem` output dims, the arena plan never
+//! random valid DAGs built through `GraphBuilder` (dense, 'same',
+//! strided and grouped conv ops mixed in), checked against the
+//! invariants — topological order respects edges, shape inference
+//! matches `ConvOp` output dims, the arena plan never
 //! overlaps two simultaneously-live tensors, and the planned peak never
 //! exceeds the naive sum of tensors.
 
-use pasconv::conv::ConvProblem;
+use pasconv::conv::{ConvOp, ConvProblem};
 use pasconv::graph::{
     model_graph, plan_arena, topo_order, Graph, GraphBuilder, NodeId, Op, Shape, ARENA_ALIGN,
     MODEL_NAMES,
@@ -32,10 +33,20 @@ fn random_graph(r: &mut Rng) -> Graph {
                 let k = *r.choose(&ks);
                 let m = *r.choose(&[4usize, 8, 16, 32]);
                 let p = ConvProblem { c: s.c, wy: s.h, wx: s.w, m, k };
-                if r.next_f64() < 0.5 {
-                    b.conv(&format!("conv{i}"), src, p).unwrap()
-                } else {
-                    b.conv_same(&format!("conv{i}"), src, p).unwrap()
+                match r.range_usize(0, 3) {
+                    0 => b.conv(&format!("conv{i}"), src, p).unwrap(),
+                    1 => b.conv_same(&format!("conv{i}"), src, p).unwrap(),
+                    2 if k % 2 == 1 && s.h >= 2 && s.w >= 2 => {
+                        // native stride-2 downsampling op
+                        let op = ConvOp::strided(p, 2, (k - 1) / 2);
+                        b.conv_op(&format!("conv{i}"), src, op).unwrap()
+                    }
+                    _ if s.c % 4 == 0 && m % 4 == 0 => {
+                        // grouped op (4 groups)
+                        let op = ConvOp { core: p, stride: 1, pad: 0, groups: 4 };
+                        b.conv_op(&format!("conv{i}"), src, op).unwrap()
+                    }
+                    _ => b.conv(&format!("conv{i}"), src, p).unwrap(),
                 }
             }
             1 => {
@@ -115,8 +126,8 @@ fn prop_topo_order_respects_edges() {
 fn prop_shape_inference_matches_conv_problem_dims() {
     check_no_shrink(&Config { cases: 96, seed: 33 }, random_graph, |g| {
         for n in g.nodes() {
-            if let Op::Conv { problem } = &n.op {
-                let want = Shape::new(problem.m, problem.oy(), problem.ox());
+            if let Op::Conv { conv } = &n.op {
+                let want = Shape::new(conv.core.m, conv.oy(), conv.ox());
                 if n.shape != want {
                     return Err(format!(
                         "{}: conv shape {} != problem output {}",
@@ -176,8 +187,8 @@ fn prop_arena_peak_bounded() {
 
 #[test]
 fn model_graphs_satisfy_every_property() {
-    // the four §4 models are the graphs that matter: run the same
-    // invariants on them directly
+    // the five registered models are the graphs that matter: run the
+    // same invariants on them directly
     for name in MODEL_NAMES {
         let g = model_graph(name).unwrap();
         g.validate().unwrap();
@@ -190,8 +201,8 @@ fn model_graphs_satisfy_every_property() {
             for &i in &n.inputs {
                 assert!(pos[i] < pos[n.id], "{name}/{}", n.name);
             }
-            if let Op::Conv { problem } = &n.op {
-                assert_eq!(n.shape, Shape::new(problem.m, problem.oy(), problem.ox()));
+            if let Op::Conv { conv } = &n.op {
+                assert_eq!(n.shape, Shape::new(conv.core.m, conv.oy(), conv.ox()));
             }
         }
         let plan = plan_arena(&g, &order);

@@ -6,9 +6,10 @@ use std::sync::mpsc::Receiver;
 use std::time::Duration;
 
 use pasconv::conv::{
-    conv2d_batched_cpu, conv2d_multi_cpu, max_abs_diff, BatchedConv, ConvProblem,
+    conv2d_batched_op_cpu, conv2d_multi_cpu, conv2d_op_cpu, max_abs_diff, BatchedConvOp,
+    ConvOp, ConvProblem,
 };
-use pasconv::coordinator::{BatchConfig, Coordinator, Payload, Response};
+use pasconv::coordinator::{BatchConfig, Coordinator, Payload, Response, CPU_LOWERED};
 use pasconv::runtime::{default_artifact_dir, Runtime, Tensor};
 use pasconv::util::rng::Rng;
 
@@ -33,7 +34,11 @@ fn conv_request_round_trips_and_matches_oracle() {
     let image = Tensor::randn(vec![32, 14, 14], &mut rng);
     let filters = Tensor::randn(vec![32, 32, 3, 3], &mut rng);
     let resp = c
-        .submit_wait(Payload::Conv { problem: p, image: image.clone(), filters: filters.clone() })
+        .submit_wait(Payload::Conv {
+            op: ConvOp::dense(p),
+            image: image.clone(),
+            filters: filters.clone(),
+        })
         .unwrap();
     assert_eq!(resp.artifact, "multi_c32_w14_m32_k3");
     assert_eq!(resp.batch_size, 1);
@@ -54,7 +59,7 @@ fn single_channel_conv_routes() {
     let p = ConvProblem::single(32, 32, 3);
     let image = Tensor::randn(vec![32, 32], &mut rng);
     let filters = Tensor::randn(vec![32, 3, 3], &mut rng);
-    let resp = c.submit_wait(Payload::Conv { problem: p, image, filters }).unwrap();
+    let resp = c.submit_wait(Payload::Conv { op: ConvOp::dense(p), image, filters }).unwrap();
     assert_eq!(resp.artifact, "single_w32_m32_k3");
     c.shutdown();
 }
@@ -65,7 +70,7 @@ fn unknown_conv_shape_is_a_clean_error() {
     let p = ConvProblem::single(17, 3, 3);
     let err = c
         .submit_wait(Payload::Conv {
-            problem: p,
+            op: ConvOp::dense(p),
             image: Tensor::zeros(vec![17, 17]),
             filters: Tensor::zeros(vec![3, 3, 3]),
         })
@@ -219,7 +224,7 @@ fn compatible_convs_coalesce_into_one_micro_batch() {
     let rxs: Vec<_> = (0..4)
         .map(|_| {
             c.submit(Payload::Conv {
-                problem: p,
+                op: ConvOp::dense(p),
                 image: Tensor::randn(vec![32, 14, 14], &mut rng),
                 filters: Tensor::randn(vec![32, 32, 3, 3], &mut rng),
             })
@@ -254,12 +259,12 @@ fn incompatible_convs_do_not_share_a_batch() {
     let pa = ConvProblem::multi(32, 14, 32, 3);
     let pb = ConvProblem::single(32, 32, 3);
     let ra = c.submit(Payload::Conv {
-        problem: pa,
+        op: ConvOp::dense(pa),
         image: Tensor::randn(vec![32, 14, 14], &mut rng),
         filters: Tensor::randn(vec![32, 32, 3, 3], &mut rng),
     });
     let rb = c.submit(Payload::Conv {
-        problem: pb,
+        op: ConvOp::dense(pb),
         image: Tensor::randn(vec![32, 32], &mut rng),
         filters: Tensor::randn(vec![32, 3, 3], &mut rng),
     });
@@ -276,7 +281,7 @@ fn batched_conv_payload_matches_cpu_oracle() {
     let Some(mut c) = coordinator_or_skip(BatchConfig::default()) else { return };
     let mut rng = Rng::new(33);
     let p = ConvProblem::multi(32, 14, 32, 3);
-    let b = BatchedConv::new(p, 3);
+    let b = BatchedConvOp::new(ConvOp::dense(p), 3);
     let images = Tensor::randn(vec![3, 32, 14, 14], &mut rng);
     let filters = Tensor::randn(vec![32, 32, 3, 3], &mut rng);
     let resp = c
@@ -290,17 +295,52 @@ fn batched_conv_payload_matches_cpu_oracle() {
     assert_eq!(resp.batch_size, 3, "explicit batch reports its image count");
     assert!(resp.batch_id.is_some(), "explicit batches identify their dispatch");
     assert_eq!(resp.output.shape, vec![3, 32, 12, 12]);
-    let want = conv2d_batched_cpu(&b, &images.data, &filters.data);
+    let want = conv2d_batched_op_cpu(&b, &images.data, &filters.data);
     assert!(max_abs_diff(&resp.output.data, &want) < 0.1, "numeric mismatch");
     // malformed batches answer with an error, not a hang
     let err = c
         .submit_wait(Payload::BatchedConv {
-            batch: BatchedConv::new(p, 2),
+            batch: BatchedConvOp::new(ConvOp::dense(p), 2),
             images: Tensor::zeros(vec![3, 32, 14, 14]), // n mismatch
             filters,
         })
         .unwrap_err();
     assert!(err.to_string().contains("batched image shape"), "{err}");
+    c.shutdown();
+}
+
+#[test]
+fn non_dense_op_serves_through_the_cpu_lowering() {
+    // a stride-2 'same' op has no PJRT artifact; the coordinator serves
+    // it through the exact CPU lowering and says so in the artifact tag
+    let Some(mut c) = coordinator_or_skip(BatchConfig::default()) else { return };
+    let mut rng = Rng::new(41);
+    let op = ConvOp::strided(ConvProblem::multi(8, 14, 16, 3), 2, 1);
+    let image = Tensor::randn(vec![8, 14, 14], &mut rng);
+    let filters = Tensor::randn(vec![16, 8, 3, 3], &mut rng);
+    let resp = c
+        .submit_wait(Payload::Conv { op, image: image.clone(), filters: filters.clone() })
+        .unwrap();
+    assert_eq!(resp.artifact, CPU_LOWERED);
+    assert_eq!(resp.output.shape, vec![16, 7, 7]);
+    let want = conv2d_op_cpu(&op, &image.data, &filters.data);
+    assert_eq!(resp.output.data, want, "CPU lowering must be bit-exact");
+    // depthwise batched op too
+    let dw = ConvOp::depthwise(8, 14, 3, 1);
+    let b = BatchedConvOp::new(dw, 2);
+    let images = Tensor::randn(vec![2, 8, 14, 14], &mut rng);
+    let dwf = Tensor::randn(vec![8, 1, 3, 3], &mut rng);
+    let resp = c
+        .submit_wait(Payload::BatchedConv {
+            batch: b,
+            images: images.clone(),
+            filters: dwf.clone(),
+        })
+        .unwrap();
+    assert_eq!(resp.artifact, CPU_LOWERED);
+    assert_eq!(resp.output.shape, vec![2, 8, 14, 14]);
+    let want = conv2d_batched_op_cpu(&b, &images.data, &dwf.data);
+    assert_eq!(resp.output.data, want);
     c.shutdown();
 }
 
@@ -320,7 +360,7 @@ fn shutdown_under_load_resolves_every_receiver() {
     for i in 0..24 {
         rxs.push(match i % 3 {
             0 => c.submit(Payload::Conv {
-                problem: p,
+                op: ConvOp::dense(p),
                 image: Tensor::randn(vec![64, 7, 7], &mut rng),
                 filters: Tensor::randn(vec![64, 64, 3, 3], &mut rng),
             }),
@@ -358,7 +398,7 @@ fn mixed_conv_and_cnn_traffic() {
     for i in 0..12 {
         if i % 3 == 0 {
             rxs.push(c.submit(Payload::Conv {
-                problem: p,
+                op: ConvOp::dense(p),
                 image: Tensor::randn(vec![64, 7, 7], &mut rng),
                 filters: Tensor::randn(vec![64, 64, 3, 3], &mut rng),
             }));

@@ -5,18 +5,18 @@
 use std::collections::HashSet;
 
 use pasconv::conv::suites;
-use pasconv::conv::ConvProblem;
+use pasconv::conv::ConvOp;
 use pasconv::gpusim::{gtx_1080ti, simulate};
 use pasconv::graph::{execute, model_graph, plan_arena, topo_order, Op, MODEL_NAMES};
-use pasconv::plans::{paper_plan_for, plan_for};
+use pasconv::plans::{op_plan_for, paper_op_plan_for};
 
 #[test]
-fn all_four_models_execute_end_to_end() {
+fn all_models_execute_end_to_end() {
     let g = gtx_1080ti();
     for name in MODEL_NAMES {
         let graph = model_graph(name).unwrap();
-        let paper = execute(&graph, &g, paper_plan_for);
-        let tuned = execute(&graph, &g, plan_for);
+        let paper = execute(&graph, &g, paper_op_plan_for);
+        let tuned = execute(&graph, &g, op_plan_for);
         assert!(paper.total_seconds > 0.0 && paper.total_seconds.is_finite(), "{name}");
         assert!(tuned.total_seconds > 0.0 && tuned.total_seconds.is_finite(), "{name}");
         // glue costs are planner-independent, conv costs are where the
@@ -71,15 +71,15 @@ fn arena_peak_strictly_below_naive_sum() {
 
 #[test]
 fn graph_conv_plans_identical_to_standalone() {
-    // acceptance: per-node conv plans == plans::plan_for standalone
+    // acceptance: per-node conv plans == plans::op_plan_for standalone
     let g = gtx_1080ti();
     for name in MODEL_NAMES {
         let graph = model_graph(name).unwrap();
-        let report = execute(&graph, &g, plan_for);
+        let report = execute(&graph, &g, op_plan_for);
         for nr in &report.nodes {
             let node = graph.node(nr.id);
-            if let Op::Conv { problem } = &node.op {
-                let standalone = plan_for(problem, &g);
+            if let Op::Conv { conv } = &node.op {
+                let standalone = op_plan_for(conv, &g);
                 assert_eq!(nr.detail, standalone.name, "{name}/{}", node.name);
                 let t = simulate(&g, &standalone).seconds;
                 assert!(
@@ -96,26 +96,51 @@ fn graph_conv_plans_identical_to_standalone() {
 
 #[test]
 fn model_layers_match_their_suites() {
-    let cases: [(&str, Vec<ConvProblem>); 4] = [
+    let cases: [(&str, Vec<ConvOp>); 5] = [
         ("alexnet", suites::alexnet()),
         ("vgg16", suites::vgg16()),
         ("resnet18", suites::resnet18()),
         ("inception3a", suites::googlenet_inception3a()),
+        ("mobilenet_v1", suites::mobilenet_v1()),
     ];
     for (name, suite) in cases {
         let graph = model_graph(name).unwrap();
-        let got: HashSet<ConvProblem> = graph.conv_problems().into_iter().collect();
-        let want: HashSet<ConvProblem> = suite.into_iter().collect();
+        let got: HashSet<ConvOp> = graph.conv_ops().into_iter().collect();
+        let want: HashSet<ConvOp> = suite.into_iter().collect();
         assert_eq!(got, want, "{name}");
     }
+}
+
+#[test]
+fn mobilenet_executes_through_backend_dispatch() {
+    // the ISSUE-5 acceptance criterion: MobileNetV1 runs end-to-end
+    // through backend::dispatch_op_plan, and the dispatched graph never
+    // loses to the tuned-paper-only op path
+    let g = gtx_1080ti();
+    let graph = model_graph("mobilenet_v1").unwrap();
+    let tuned = execute(&graph, &g, op_plan_for);
+    let dispatched = execute(&graph, &g, pasconv::backend::dispatch_op_plan);
+    assert!(dispatched.total_seconds > 0.0 && dispatched.total_seconds.is_finite());
+    assert!(
+        dispatched.total_seconds <= tuned.total_seconds * (1.0 + 1e-9),
+        "dispatch lost: {} > {}",
+        dispatched.total_seconds,
+        tuned.total_seconds
+    );
+    assert_eq!(dispatched.conv_layers, 27);
+    // depthwise/strided layers carry their op tags in the report
+    assert!(
+        dispatched.nodes.iter().any(|n| n.kind == "conv" && n.detail.contains(" g")),
+        "no grouped plan visible in the report"
+    );
 }
 
 #[test]
 fn execution_is_deterministic() {
     let g = gtx_1080ti();
     let graph = model_graph("inception3a").unwrap();
-    let a = execute(&graph, &g, plan_for);
-    let b = execute(&graph, &g, plan_for);
+    let a = execute(&graph, &g, op_plan_for);
+    let b = execute(&graph, &g, op_plan_for);
     let schedule = |r: &pasconv::graph::ModelReport| -> Vec<usize> {
         r.nodes.iter().map(|n| n.id).collect()
     };

@@ -1,0 +1,184 @@
+//! Property tests for the op layer's exact lowering (the ISSUE-5
+//! acceptance identities), all **bit-identity** (f32 bit patterns, not
+//! allclose):
+//!
+//!  * padded conv == valid conv on the zero-embedded map;
+//!  * strided conv == decimated stride-1 output;
+//!  * grouped conv == concatenation of per-group CPU convs;
+//!  * the composed lowering (`conv2d_op_lowered_cpu`) == the
+//!    generalized direct reference (`conv2d_op_cpu`) on random ops
+//!    mixing all three parameters;
+//!  * every backend's `execute_op_reference` == the generalized
+//!    reference wherever its coverage allows.
+//!
+//! Fixed seed + case counts: bounded debug-mode CI runtime,
+//! deterministic replays.
+
+use pasconv::backend::Dispatcher;
+use pasconv::conv::{
+    conv2d_multi_cpu, conv2d_op_cpu, conv2d_op_lowered_cpu, decimate, zero_embed, ConvOp,
+    ConvProblem,
+};
+use pasconv::util::prop::{check_no_shrink, Config};
+use pasconv::util::rng::Rng;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0x0D1CE }
+}
+
+fn bit_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// A random valid op: C/M split into 1..3 groups, maps 4..12 px, K in
+/// {1,3,5} (clamped), stride 1..3, pad 0..K-1.
+fn gen_op(rng: &mut Rng) -> (ConvOp, u64) {
+    let groups = rng.range_usize(1, 3);
+    let c = groups * rng.range_usize(1, 3);
+    let m = groups * rng.range_usize(1, 3);
+    let w = rng.range_usize(4, 12);
+    let k = [1usize, 3, 5][rng.range_usize(0, 2)].min(w);
+    let pad = rng.range_usize(0, k - 1);
+    let stride = rng.range_usize(1, 3);
+    let op = ConvOp { core: ConvProblem { c, wy: w, wx: w, m, k }, stride, pad, groups };
+    (op, rng.next_u64())
+}
+
+#[test]
+fn padded_conv_is_valid_conv_on_the_zero_embedded_map() {
+    check_no_shrink(
+        &cfg(48),
+        |rng| {
+            let c = rng.range_usize(1, 4);
+            let m = rng.range_usize(1, 4);
+            let w = rng.range_usize(3, 10);
+            let k = [3usize, 5][rng.range_usize(0, 1)].min(w);
+            let pad = rng.range_usize(1, k - 1);
+            (ConvOp { core: ConvProblem { c, wy: w, wx: w, m, k }, stride: 1, pad, groups: 1 },
+             rng.next_u64())
+        },
+        |&(op, seed)| {
+            let mut rng = Rng::new(seed);
+            let image = rng.normal_vec(op.map_elems());
+            let filters = rng.normal_vec(op.filter_elems());
+            let padded = conv2d_op_cpu(&op, &image, &filters);
+            let embedded = zero_embed(&image, op.core.c, op.core.wy, op.core.wx, op.pad);
+            let unit = op.lower().unit;
+            let valid = conv2d_multi_cpu(&unit, &embedded, &filters);
+            if !bit_eq(&padded, &valid) {
+                return Err(format!("{}: padded != zero-embedded valid", op.label()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn strided_conv_is_the_decimated_stride1_output() {
+    check_no_shrink(
+        &cfg(48),
+        |rng| {
+            let c = rng.range_usize(1, 4);
+            let m = rng.range_usize(1, 4);
+            let w = rng.range_usize(5, 12);
+            let k = [1usize, 3][rng.range_usize(0, 1)];
+            let stride = rng.range_usize(2, 3);
+            (ConvOp { core: ConvProblem { c, wy: w, wx: w, m, k }, stride, pad: 0, groups: 1 },
+             rng.next_u64())
+        },
+        |&(op, seed)| {
+            let mut rng = Rng::new(seed);
+            let image = rng.normal_vec(op.map_elems());
+            let filters = rng.normal_vec(op.filter_elems());
+            let strided = conv2d_op_cpu(&op, &image, &filters);
+            let s1 = conv2d_multi_cpu(&op.core, &image, &filters);
+            let dec = decimate(&s1, op.core.m, op.core.oy(), op.core.ox(), op.stride);
+            if !bit_eq(&strided, &dec) {
+                return Err(format!("{}: strided != decimated stride-1", op.label()));
+            }
+            if strided.len() != op.out_elems() {
+                return Err(format!("{}: wrong output size", op.label()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn grouped_conv_is_the_concatenation_of_per_group_convs() {
+    check_no_shrink(
+        &cfg(48),
+        |rng| {
+            let groups = rng.range_usize(2, 4);
+            let c = groups * rng.range_usize(1, 3);
+            let m = groups * rng.range_usize(1, 3);
+            let w = rng.range_usize(3, 10);
+            let k = [1usize, 3][rng.range_usize(0, 1)].min(w);
+            (ConvOp { core: ConvProblem { c, wy: w, wx: w, m, k }, stride: 1, pad: 0, groups },
+             rng.next_u64())
+        },
+        |&(op, seed)| {
+            let mut rng = Rng::new(seed);
+            let image = rng.normal_vec(op.map_elems());
+            let filters = rng.normal_vec(op.filter_elems());
+            let grouped = conv2d_op_cpu(&op, &image, &filters);
+            let unit = op.lower().unit;
+            let mut concat = Vec::with_capacity(op.out_elems());
+            for g in 0..op.groups {
+                concat.extend(conv2d_multi_cpu(
+                    &unit,
+                    &image[g * unit.map_elems()..(g + 1) * unit.map_elems()],
+                    &filters[g * unit.filter_elems()..(g + 1) * unit.filter_elems()],
+                ));
+            }
+            if !bit_eq(&grouped, &concat) {
+                return Err(format!("{}: grouped != per-group concat", op.label()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn composed_lowering_matches_direct_reference_on_mixed_ops() {
+    check_no_shrink(&cfg(64), gen_op, |&(op, seed)| {
+        if !op.valid() {
+            return Err(format!("generator produced invalid op {op:?}"));
+        }
+        let mut rng = Rng::new(seed);
+        let image = rng.normal_vec(op.map_elems());
+        let filters = rng.normal_vec(op.filter_elems());
+        let direct = conv2d_op_cpu(&op, &image, &filters);
+        let lowered = conv2d_op_lowered_cpu(&op, &image, &filters);
+        if !bit_eq(&direct, &lowered) {
+            return Err(format!("{}: lowered execution diverges", op.label()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_backend_op_reference_matches_the_generalized_oracle() {
+    let registry = Dispatcher::full();
+    check_no_shrink(&cfg(24), gen_op, |&(op, seed)| {
+        let mut rng = Rng::new(seed);
+        let image = rng.normal_vec(op.map_elems());
+        let filters = rng.normal_vec(op.filter_elems());
+        let oracle = conv2d_op_cpu(&op, &image, &filters);
+        let mut covered = 0;
+        for b in registry.backends() {
+            if !b.op_coverage(&op).supported() {
+                continue;
+            }
+            covered += 1;
+            let got = b.execute_op_reference(&op, &image, &filters);
+            if !bit_eq(&got, &oracle) {
+                return Err(format!("{}: {} diverges", op.label(), b.name()));
+            }
+        }
+        if covered < 2 {
+            return Err(format!("{}: only {covered} backends covered it", op.label()));
+        }
+        Ok(())
+    });
+}
