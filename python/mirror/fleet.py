@@ -1,14 +1,20 @@
 """Mirror of rust/src/fleet: virtual-time multi-GPU scheduler.  Job
 pricing mirrors backend::batched_dispatch_seconds — each shard's spec
-dispatches across backends for itself."""
+dispatches across backends for itself.  Every shard carries a
+`DevicePool` (pool.py): a job's planned footprint is reserved at
+placement and released at completion, the pool cap is a HARD admission
+constraint for every policy, and `least-loaded-bytes` weighs predicted
+completion by the pool pressure the placement would create."""
 
 from collections import deque
 from dataclasses import dataclass
 
 import ops as opsmod
+from pool import DevicePool
 
 ROUND_ROBIN = "round-robin"
 LEAST_LOADED = "least-loaded"
+LEAST_LOADED_BYTES = "least-loaded-bytes"
 MODEL_AFFINITY = "model-affinity"
 
 
@@ -26,13 +32,16 @@ class Completion:
 
 
 class Device:
-    def __init__(self, did, spec):
+    def __init__(self, did, spec, capacity=None):
         self.id = did
         self.spec = spec
-        self.queue = deque()  # (job id, finish, service)
+        self.queue = deque()  # (job id, finish, service, arrival, start, model, alloc)
         self.tail_finish = 0.0
         self.completed = 0
         self.busy_secs = 0.0
+        # None caps at the card's DRAM — effectively unbounded for conv
+        # traffic, preserving the pre-pool behavior exactly
+        self.pool = DevicePool(capacity if capacity is not None else spec.dram_bytes)
 
     def queue_len(self):
         return len(self.queue)
@@ -45,9 +54,9 @@ class Device:
 
 
 class Fleet:
-    def __init__(self, specs, policy, queue_bound):
+    def __init__(self, specs, policy, queue_bound, capacity_bytes=None):
         assert specs and queue_bound >= 1
-        self.devices = [Device(i, s) for i, s in enumerate(specs)]
+        self.devices = [Device(i, s, capacity_bytes) for i, s in enumerate(specs)]
         self.policy = policy
         self.queue_bound = queue_bound
         self.now = 0.0
@@ -61,6 +70,7 @@ class Fleet:
         self.completed = 0
         self.batched_images = 0
         self.affinity_spills = 0
+        self.mem_rejected = 0
 
     def advance_to(self, t):
         self.now = max(self.now, t)
@@ -77,14 +87,28 @@ class Fleet:
             self.cost_cache[key] = opsmod.batched_op_dispatch_seconds(op, n, spec)
         return self.cost_cache[key]
 
+    @staticmethod
+    def _admissible(c):
+        # queue has a slot AND the pool fits the planned footprint — the
+        # pool cap is hard for every policy
+        return not c[1] and c[4]
+
     def _least_loaded(self, cands):
-        free = [c for c in cands if not c[1]]
+        free = [c for c in cands if self._admissible(c)]
         if not free:
             return None
         return min(free, key=lambda c: (c[2] + c[3], c[0]))[0]
 
+    def _least_loaded_bytes(self, cands):
+        # minimize completion x (1 + occupancy-after-placement)
+        free = [c for c in cands if self._admissible(c)]
+        if not free:
+            return None
+        return min(free, key=lambda c: ((c[2] + c[3]) * (1.0 + c[5]), c[0]))[0]
+
     def submit(self, op, n, model=None):
         self.submitted += 1
+        nbytes = opsmod.footprint_bytes(op, n)
         cands = []
         for i, d in enumerate(self.devices):
             cands.append((
@@ -92,6 +116,8 @@ class Fleet:
                 d.queue_len() >= self.queue_bound,  # full
                 d.ready_at(self.now),
                 self.predicted_service(op, n, i),
+                d.pool.can_fit(nbytes),             # fits
+                d.pool.occupancy_with(nbytes),      # occupancy_after
             ))
 
         if self.policy == ROUND_ROBIN:
@@ -99,16 +125,18 @@ class Fleet:
             pick = next((
                 cands[(self.rr_cursor + i) % ndev][0]
                 for i in range(ndev)
-                if not cands[(self.rr_cursor + i) % ndev][1]), None)
+                if self._admissible(cands[(self.rr_cursor + i) % ndev])), None)
             if pick is not None:
                 self.rr_cursor = (pick + 1) % ndev
         elif self.policy == LEAST_LOADED:
             pick = self._least_loaded(cands)
+        elif self.policy == LEAST_LOADED_BYTES:
+            pick = self._least_loaded_bytes(cands)
         else:  # model affinity; pin recorded on ACCEPTED placement only
             shard = self.affinity.get(model) if model is not None else None
             if shard is None:
                 pick = self._least_loaded(cands)
-            elif not cands[shard][1]:
+            elif self._admissible(cands[shard]):
                 pick = shard
             else:
                 pick = self._least_loaded(cands)
@@ -117,6 +145,9 @@ class Fleet:
 
         if pick is None:
             self.rejected += 1
+            if any(not c[1] for c in cands):
+                # a queue slot existed somewhere — memory blocked this one
+                self.mem_rejected += 1
             return None
         if self.policy == MODEL_AFFINITY and model is not None \
                 and model not in self.affinity:
@@ -126,11 +157,12 @@ class Fleet:
         self.accepted += 1
         self.batched_images += n
         d = self.devices[pick]
+        alloc = d.pool.alloc(nbytes)
         service = cands[pick][3]
         start = d.ready_at(self.now)
         finish = start + service
         d.tail_finish = finish
-        d.queue.append((jid, finish, service, self.now, start, model))
+        d.queue.append((jid, finish, service, self.now, start, model, alloc))
         return (jid, pick, start, finish)
 
     def next_completion(self):
@@ -142,9 +174,10 @@ class Fleet:
         if cand is None:
             return None
         d = self.devices[cand[0]]
-        jid, finish, service, arrival, start, model = d.queue.popleft()
+        jid, finish, service, arrival, start, model, alloc = d.queue.popleft()
         d.completed += 1
         d.busy_secs += service
+        d.pool.free(alloc)
         self.now = max(self.now, finish)
         self.completed += 1
         return Completion(jid, d.id, model, arrival, start, finish)

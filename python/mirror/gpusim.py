@@ -23,6 +23,7 @@ class GpuSpec:
     registers_per_sm: int
     max_threads_per_sm: int
     warp_size: int
+    dram_bytes: int = 0
 
     def clock_hz(self):
         return self.clock_mhz * 1e6
@@ -62,12 +63,12 @@ class GpuSpec:
 
 def gtx_1080ti():
     return GpuSpec("GTX 1080Ti", 258, 484.0, 1480.0, 28, 128, 2, 96 * 1024,
-                   64 * 1024, 2048, 32)
+                   64 * 1024, 2048, 32, 11 * 1024 * 1024 * 1024)
 
 
 def titan_x_maxwell():
     return GpuSpec("GTX Titan X", 368, 336.5, 1000.0, 24, 128, 2, 96 * 1024,
-                   64 * 1024, 2048, 32)
+                   64 * 1024, 2048, 32, 12 * 1024 * 1024 * 1024)
 
 
 # ---- memory ----

@@ -184,7 +184,9 @@ def _align(b):
     return (b + ARENA_ALIGN - 1) // ARENA_ALIGN * ARENA_ALIGN
 
 
-def plan_arena(g):
+def liveness(g):
+    """Mirror of graph/memory.rs::liveness under the insertion-order
+    schedule: [(node id, aligned bytes, def step, last use step)]."""
     order = list(range(len(g.nodes)))  # insertion order is topological
     consumers = [[] for _ in g.nodes]
     for n in g.nodes:
@@ -194,6 +196,12 @@ def plan_arena(g):
     for nid in order:
         last = max((c for c in consumers[nid]), default=len(order) - 1)
         lives.append((nid, _align(elems(g.nodes[nid].shape) * BYTES_F32), nid, last))
+    return lives
+
+
+def plan_arena(g):
+    order = list(range(len(g.nodes)))
+    lives = liveness(g)
     naive = sum(l[1] for l in lives)
     by_size = sorted(range(len(lives)), key=lambda i: (-lives[i][1], lives[i][0]))
     placements = []  # (id, bytes, def, last, offset)
@@ -213,6 +221,43 @@ def plan_arena(g):
         live = sum(p[1] for p in placements if p[2] <= step <= p[3])
         live_floor = max(live_floor, live)
     return peak, naive, live_floor
+
+
+# ---- pooled execution schedule (mirror of graph/memory.rs::plan_pooled) ----
+
+def plan_pooled(g, pool, batch=1):
+    """Walk the schedule allocating each tensor (scaled by batch) from a
+    shared DevicePool at its definition step and freeing it right after
+    its last use.  Returns {peak, naive, allocs, reuse, evictions}; on
+    exhaustion every allocation this call made is released and the
+    PoolExhausted propagates (parked-slab evictions persist)."""
+    import pool as poolmod
+    lives = liveness(g)
+    naive = sum(l[1] * batch for l in lives)
+    reuse0, evict0 = pool.reuse_hits, pool.evictions
+    ids = [None] * len(lives)
+    live_now = peak = 0
+    for step in range(len(lives)):
+        nbytes = lives[step][1] * batch
+        try:
+            ids[step] = pool.alloc(nbytes)
+        except poolmod.PoolExhausted:
+            for j, aid in enumerate(ids):
+                if aid is not None:
+                    pool.free(aid)
+                    ids[j] = None
+            raise
+        live_now += nbytes
+        peak = max(peak, live_now)
+        for j in range(step + 1):
+            if lives[j][3] == step and ids[j] is not None:
+                pool.free(ids[j])
+                ids[j] = None
+                live_now -= lives[j][1] * batch
+    assert all(aid is None for aid in ids), "every tensor freed"
+    return {"peak": peak, "naive": naive, "allocs": len(lives),
+            "reuse": pool.reuse_hits - reuse0,
+            "evictions": pool.evictions - evict0}
 
 
 # ---- execution (mirror of graph/exec.rs::execute) ----

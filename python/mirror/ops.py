@@ -69,6 +69,15 @@ class ConvOp:
                 and self.pad < p.k
                 and self.padded_wy() >= p.k and self.padded_wx() >= p.k)
 
+    def map_elems(self):
+        return self.core.map_elems()
+
+    def filter_elems(self):
+        return self.core.m * (self.core.c // self.groups) * self.core.k * self.core.k
+
+    def out_elems(self):
+        return self.core.m * self.oy() * self.ox()
+
     def unit(self):
         """The lowered per-group stride-1 valid dense problem."""
         return ConvProblem(self.core.c // self.groups, self.padded_wy(),
@@ -208,6 +217,15 @@ def batched_op_dispatch_seconds(op, n, spec):
     """Mirror of backend::batched_op_dispatch_seconds — the fleet's
     per-shard job pricing."""
     return spec.cycles_to_secs(decide_batched_op(op, n, spec)[1])
+
+
+def footprint_bytes(op, n):
+    """Mirror of BatchedConvOp::footprint_bytes: the device bytes an
+    n-image batch pins while resident on a shard — batched inputs +
+    filters + batched outputs at f32, rounded up to the pool's 256 B
+    class lattice."""
+    nbytes = (n * op.map_elems() + op.filter_elems() + n * op.out_elems()) * 4
+    return (nbytes + 255) // 256 * 256
 
 
 def dispatch_op_plan(op, spec):

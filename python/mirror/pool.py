@@ -1,0 +1,150 @@
+"""Mirror of rust/src/fleet/pool.rs: the per-device size-classed
+exclusive memory pool.
+
+Every transition mirrors the Rust allocator exactly — same size-class
+lattice (ARENA_ALIGN = 256), exact-class LIFO reuse, carve under a hard
+byte cap with largest-class-first eviction of parked slabs, exactly-once
+free, and the same monotone counters — so `validate_fleet.py` can replay
+the capped-fleet bench and pin its numbers without a rust toolchain.
+"""
+
+ARENA_ALIGN = 256
+
+
+def size_class(nbytes):
+    """Round a request up to its slab class (zero still occupies one
+    minimal slab)."""
+    b = max(nbytes, 1)
+    return (b + ARENA_ALIGN - 1) // ARENA_ALIGN * ARENA_ALIGN
+
+
+class PoolExhausted(Exception):
+    def __init__(self, requested, cls, capacity, in_use_slab):
+        super().__init__(
+            f"pool exhausted: request {requested} B (class {cls}) vs "
+            f"capacity {capacity} B with {in_use_slab} B in use")
+        self.requested = requested
+        self.cls = cls
+        self.capacity = capacity
+        self.in_use_slab = in_use_slab
+
+
+class UnknownAlloc(Exception):
+    def __init__(self, alloc_id):
+        super().__init__(f"free of unknown allocation {alloc_id}")
+        self.alloc_id = alloc_id
+
+
+class DevicePool:
+    def __init__(self, capacity):
+        assert capacity >= ARENA_ALIGN, "pool capacity below one slab class"
+        self.capacity = capacity
+        self.slab_class = {}       # slab id -> class
+        self.free_by_class = {}    # class -> [slab ids], LIFO within class
+        self.live = {}             # alloc id -> (slab id, requested)
+        self.next_slab = 1
+        self.next_alloc = 1
+        self.slab_total = 0        # carved bytes, free + in use (<= capacity)
+        self.in_use_slab = 0
+        self.in_use_requested = 0
+        # PoolStats mirror
+        self.allocs = 0
+        self.frees = 0
+        self.reuse_hits = 0
+        self.carved = 0
+        self.evictions = 0
+        self.failed_allocs = 0
+        self.peak_in_use_slab = 0
+        self.peak_in_use_requested = 0
+
+    def slab_bytes(self):
+        return self.slab_total
+
+    def in_use_slab_bytes(self):
+        return self.in_use_slab
+
+    def free_slab_bytes(self):
+        return self.slab_total - self.in_use_slab
+
+    def fragmentation_bytes(self):
+        return self.in_use_slab - self.in_use_requested
+
+    def occupancy(self):
+        return self.in_use_slab / self.capacity
+
+    def occupancy_with(self, nbytes):
+        return (self.in_use_slab + size_class(nbytes)) / self.capacity
+
+    def live_allocs(self):
+        return len(self.live)
+
+    def can_fit(self, nbytes):
+        cls = size_class(nbytes)
+        return bool(self.free_by_class.get(cls)) \
+            or self.in_use_slab + cls <= self.capacity
+
+    def alloc(self, nbytes):
+        cls = size_class(nbytes)
+        slab = self._take_free(cls)
+        if slab is not None:
+            self.reuse_hits += 1
+        else:
+            while self.slab_total + cls > self.capacity and self._evict_one():
+                pass
+            if self.slab_total + cls > self.capacity:
+                self.failed_allocs += 1
+                raise PoolExhausted(nbytes, cls, self.capacity, self.in_use_slab)
+            slab = self.next_slab
+            self.next_slab += 1
+            self.slab_class[slab] = cls
+            self.slab_total += cls
+            self.carved += 1
+        aid = self.next_alloc
+        self.next_alloc += 1
+        self.live[aid] = (slab, nbytes)
+        self.in_use_slab += cls
+        self.in_use_requested += nbytes
+        self.allocs += 1
+        self.peak_in_use_slab = max(self.peak_in_use_slab, self.in_use_slab)
+        self.peak_in_use_requested = max(self.peak_in_use_requested,
+                                         self.in_use_requested)
+        return aid
+
+    def free(self, aid):
+        if aid not in self.live:
+            raise UnknownAlloc(aid)
+        slab, requested = self.live.pop(aid)
+        cls = self.slab_class[slab]
+        self.in_use_slab -= cls
+        self.in_use_requested -= requested
+        self.free_by_class.setdefault(cls, []).append(slab)
+        self.frees += 1
+
+    def evict_free(self):
+        before = self.slab_total
+        while self._evict_one():
+            pass
+        return before - self.slab_total
+
+    def _take_free(self, cls):
+        lst = self.free_by_class.get(cls)
+        if not lst:
+            return None
+        slab = lst.pop()
+        if not lst:
+            del self.free_by_class[cls]
+        return slab
+
+    def _evict_one(self):
+        # largest class first, most recently parked within the class
+        if not self.free_by_class:
+            return False
+        cls = max(self.free_by_class)
+        lst = self.free_by_class[cls]
+        slab = lst.pop()
+        if not lst:
+            del self.free_by_class[cls]
+        del self.slab_class[slab]
+        self.slab_total -= cls
+        self.evictions += 1
+        return True

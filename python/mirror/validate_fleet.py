@@ -1,6 +1,7 @@
 """Validate the fleet layer's numbers and invariants, and generate the
-EXPERIMENTS.md §8 table, by replaying rust/benches/e2e_fleet.rs exactly
-(same xoshiro stream, same cost model, same scheduler arithmetic).
+EXPERIMENTS.md §8 and §11 tables, by replaying rust/benches/e2e_fleet.rs
+exactly (same xoshiro stream, same cost model, same scheduler and pool
+arithmetic).
 
 Run: python3 python/mirror/validate_fleet.py
 """
@@ -10,13 +11,16 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent))
 
+import graph as graphmod
 import ops
 import suites
 import tuner
-from fleet import Fleet, LEAST_LOADED, MODEL_AFFINITY, ROUND_ROBIN
+from fleet import Fleet, LEAST_LOADED, LEAST_LOADED_BYTES, MODEL_AFFINITY, \
+    ROUND_ROBIN
 from gpusim import gtx_1080ti, titan_x_maxwell
 from ops import ConvOp
 from plans import ConvProblem
+from pool import DevicePool, PoolExhausted
 from rng import Rng
 
 F64_MIN_POSITIVE = 2.2250738585072014e-308  # rust f64::MIN_POSITIVE
@@ -47,8 +51,8 @@ def offered_load(n, rate, seed, batch=None):
     return out
 
 
-def run(specs, policy, queue_bound, load):
-    f = Fleet(specs, policy, queue_bound)
+def run(specs, policy, queue_bound, load, capacity_bytes=None):
+    f = Fleet(specs, policy, queue_bound, capacity_bytes)
     completions = []
     for (t, problem, batch, model) in load:
         completions.extend(f.complete_until(t))
@@ -68,6 +72,15 @@ def run(specs, policy, queue_bound, load):
         return lats[min(rank, len(lats) - 1)]
 
     utils = [d.busy_secs / makespan for d in f.devices] if makespan else [0.0]
+    pool_peak = 0
+    for d in f.devices:
+        # the invariants every run re-checks on the real load: the cap
+        # held at the high-water mark and the drain released everything
+        assert d.pool.peak_in_use_slab <= d.pool.capacity, \
+            f"pool cap burst on device {d.id}"
+        assert d.pool.in_use_slab_bytes() == 0, \
+            f"drain left bytes resident on device {d.id}"
+        pool_peak = max(pool_peak, d.pool.peak_in_use_slab)
     return {
         "accepted": f.accepted, "rejected": f.rejected,
         "completed": len(completions),
@@ -75,6 +88,7 @@ def run(specs, policy, queue_bound, load):
         "makespan": makespan, "p50": pct(50.0), "p99": pct(99.0),
         "spills": f.affinity_spills,
         "umin": min(utils), "umax": max(utils),
+        "mem_rejected": f.mem_rejected, "pool_peak": pool_peak,
     }
 
 
@@ -167,6 +181,68 @@ def main():
           f"rejected {bounded['rejected']} "
           f"({100*bounded['rejected']/n:.0f}% shed), p99 {bounded['p99']*1e3:.2f} ms")
 
+    # ---- invariants: pooled execution vs the arena planner ----
+    # mirror of rust/tests/pool_difftests.rs: per-tensor pooling sits
+    # exactly on the liveness floor, never above the arena peak, on all
+    # five registered models sharing ONE pool sized for the worst arena
+    worst_arena = 0
+    per_model = []
+    for (mname, build) in graphmod.MODEL_GRAPHS:
+        peak, naive, floor = graphmod.plan_arena(build())
+        per_model.append((mname, peak, naive, floor))
+        worst_arena = max(worst_arena, peak)
+    shared = DevicePool(worst_arena)
+    for (mname, arena_peak, naive, floor) in per_model:
+        p = graphmod.plan_pooled(dict(graphmod.MODEL_GRAPHS)[mname](), shared)
+        check(p["peak"] == floor and p["peak"] <= arena_peak,
+              f"{mname}: pooled peak {p['peak']} == floor, <= arena {arena_peak}")
+        check(p["naive"] == naive and shared.in_use_slab_bytes() == 0,
+              f"{mname}: naive bytes agree, pool drained")
+    check(shared.evict_free() > 0 and shared.slab_bytes() == 0,
+          "trim reclaims every parked byte of the shared pool")
+    tiny = DevicePool(1 << 20)
+    try:
+        graphmod.plan_pooled(dict(graphmod.MODEL_GRAPHS)["vgg16"](), tiny)
+        check(False, "vgg16 must exhaust a 1 MiB pool")
+    except PoolExhausted:
+        check(tiny.live_allocs() == 0 and tiny.in_use_slab_bytes() == 0,
+              "exhaustion rolls back cleanly (no poisoned pool)")
+
+    # ---- multi-tenant capped pools (EXPERIMENTS §11) ----
+    # mirror of the e2e_fleet bench's capped runs: same offered load,
+    # 4 devices, pools capped in units of the largest job footprint.
+    # Queue bound 64 so memory — not queue slots — is the binding
+    # constraint: every rejection here is a memory rejection.
+    max_fp = max(ops.footprint_bytes(o, b) for (_, o, b, _) in load)
+    tight = run([g] * 4, LEAST_LOADED, 64, load, 2 * max_fp)
+    roomy = run([g] * 4, LEAST_LOADED, 64, load, 5 * max_fp)
+    tight_bytes = run([g] * 4, LEAST_LOADED_BYTES, 64, load, 2 * max_fp)
+    print(f"\nmulti-tenant pools (4 devices, queue bound 64, "
+          f"job footprint {max_fp} B):")
+    print("| cap | policy | accepted | shed (mem) | pool peak | p99 lat |")
+    print("|---|---|---|---|---|---|")
+    for (mult, pol, r) in [(2, LEAST_LOADED, tight),
+                           (2, LEAST_LOADED_BYTES, tight_bytes),
+                           (5, LEAST_LOADED, roomy)]:
+        print(f"| {mult}x job | {pol} | {r['accepted']} "
+              f"| {r['rejected']} ({r['mem_rejected']}) "
+              f"| {100*r['pool_peak']/(mult*max_fp):.0f}% "
+              f"| {r['p99']*1e3:.2f} ms |")
+
+    # the pinned §11 table (EXPERIMENTS.md) — drift fails CI
+    check(max_fp == 205668352, f"largest job footprint pinned (got {max_fp})")
+    pinned = [
+        ("tight", tight, 492, 20, 20, 411283456, 5.248160e-3),
+        ("tight_bytes", tight_bytes, 502, 10, 10, 411076864, 5.812061e-3),
+        ("roomy", roomy, 512, 0, 0, 702075392, 6.608624e-3),
+    ]
+    for (label, r, acc, rej, mem, peak, p99) in pinned:
+        check(r["accepted"] == acc and r["rejected"] == rej
+              and r["mem_rejected"] == mem and r["pool_peak"] == peak,
+              f"§11 {label}: accepted {acc}, shed {rej} ({mem} mem), "
+              f"pool peak {peak} B")
+        check(abs(r["p99"] - p99) < 1e-6 * p99, f"§11 {label}: p99 pinned")
+
     # ---- the e2e_fleet gates ----
     speedup4 = results[2][1]["throughput"] / base
     check(speedup4 >= 3.0, f"4 devices >= 3x (got {speedup4:.2f}x)")
@@ -187,6 +263,19 @@ def main():
     check(af4b["spills"] > 0, "bounded affinity spills under overload")
     check(af4b["throughput"] > af4["throughput"],
           "pressure spilling beats strict pinning")
+
+    # ---- the §11 capped-pool gates (mirror of e2e_fleet's) ----
+    for (d, r) in results:
+        check(r["mem_rejected"] == 0, f"{d} devices uncapped: no memory shed")
+    check(tight["mem_rejected"] > 0, "2x-job caps shed on memory at 6x overload")
+    check(tight["pool_peak"] <= 2 * max_fp, "tight pool peak under its cap")
+    check(roomy["pool_peak"] > max_fp,
+          "roomy caps co-locate >= 2 jobs on one shard")
+    check(roomy["mem_rejected"] <= tight["mem_rejected"],
+          "more headroom cannot shed more")
+    check(roomy["accepted"] >= tight["accepted"], "more headroom cannot admit less")
+    check(tight_bytes["accepted"] >= tight["accepted"],
+          "bytes-aware placement admits at least as much under a tight cap")
     print(f"\nALL CHECKS PASSED (speedup at 4 devices: {speedup4:.2f}x)")
 
 

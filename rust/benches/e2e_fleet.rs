@@ -1,7 +1,8 @@
 //! Fleet scaling bench: throughput and latency of the multi-GPU
 //! scheduler under one fixed offered load, across 1/2/4/8 homogeneous
-//! devices, a heterogeneous fleet, and the three placement policies —
-//! the EXPERIMENTS.md §8 table.
+//! devices, a heterogeneous fleet, and the four placement policies —
+//! the EXPERIMENTS.md §8 table — plus the capped per-device memory
+//! pools of the §11 multi-tenant table.
 //!
 //! The fleet runs in virtual time (service seconds from the
 //! cross-backend dispatched cost model,
@@ -32,10 +33,20 @@ struct RunResult {
     /// per-device utilization (busy / makespan), min..max
     util_min: f64,
     util_max: f64,
+    /// rejections attributable to pool pressure (queue slots existed)
+    mem_rejected: u64,
+    /// worst per-device pool high-water mark, bytes
+    pool_peak: usize,
 }
 
-fn run(specs: Vec<GpuSpec>, policy: Policy, queue_bound: usize, load: &[Arrival]) -> RunResult {
-    let mut fleet = Fleet::new(specs, FleetConfig { policy, queue_bound });
+fn run(
+    specs: Vec<GpuSpec>,
+    policy: Policy,
+    queue_bound: usize,
+    capacity_bytes: Option<usize>,
+    load: &[Arrival],
+) -> RunResult {
+    let mut fleet = Fleet::new(specs, FleetConfig { policy, queue_bound, capacity_bytes });
     let mut completions = Vec::with_capacity(load.len());
     for a in load {
         // reactive serving: jobs finishing before this arrival free
@@ -52,10 +63,18 @@ fn run(specs: Vec<GpuSpec>, policy: Policy, queue_bound: usize, load: &[Arrival]
     let makespan = completions.iter().map(|c| c.finish).fold(0.0f64, f64::max);
     let lats: Vec<f64> = completions.iter().map(|c| c.latency()).collect();
     let (mut umin, mut umax) = (f64::INFINITY, 0.0f64);
+    let mut pool_peak = 0usize;
     for d in fleet.devices() {
         let u = d.busy_secs / makespan.max(1e-30);
         umin = umin.min(u);
         umax = umax.max(u);
+        // the hard invariants every run re-checks on the real load: the
+        // pool cap held at the high-water mark and the drain released
+        // every reservation
+        let p = d.pool();
+        assert!(p.stats.peak_in_use_slab <= p.capacity(), "pool cap burst on device {}", d.id);
+        assert_eq!(p.in_use_slab_bytes(), 0, "drain left bytes resident on device {}", d.id);
+        pool_peak = pool_peak.max(p.stats.peak_in_use_slab);
     }
     RunResult {
         accepted: fleet.stats.accepted,
@@ -67,6 +86,8 @@ fn run(specs: Vec<GpuSpec>, policy: Policy, queue_bound: usize, load: &[Arrival]
         affinity_spills: fleet.stats.affinity_spills,
         util_min: umin,
         util_max: umax,
+        mem_rejected: fleet.stats.mem_rejected,
+        pool_peak,
     }
 }
 
@@ -108,13 +129,13 @@ fn main() {
 
     // ---- homogeneous scaling, least-loaded ----
     let unbounded = n; // accept everything: equal *served* load per row
-    let r1 = run(vec![g.clone()], Policy::LeastLoaded, unbounded, &load);
+    let r1 = run(vec![g.clone()], Policy::LeastLoaded, unbounded, None, &load);
     let base = r1.throughput;
     row("1".into(), "1080Ti", Policy::LeastLoaded, &r1, base);
     let mut speedup4 = 0.0;
     let mut results = vec![(1usize, r1)];
     for d in [2usize, 4, 8] {
-        let r = run(vec![g.clone(); d], Policy::LeastLoaded, unbounded, &load);
+        let r = run(vec![g.clone(); d], Policy::LeastLoaded, unbounded, None, &load);
         row(d.to_string(), "1080Ti", Policy::LeastLoaded, &r, base);
         if d == 4 {
             speedup4 = r.throughput / base;
@@ -123,26 +144,26 @@ fn main() {
     }
 
     // ---- policies at 4 homogeneous devices ----
-    let rr4 = run(vec![g.clone(); 4], Policy::RoundRobin, unbounded, &load);
+    let rr4 = run(vec![g.clone(); 4], Policy::RoundRobin, unbounded, None, &load);
     row("4".into(), "1080Ti", Policy::RoundRobin, &rr4, base);
     // strict pinning (queues never fill): the warmth/balance trade-off
-    let af4 = run(vec![g.clone(); 4], Policy::ModelAffinity, unbounded, &load);
+    let af4 = run(vec![g.clone(); 4], Policy::ModelAffinity, unbounded, None, &load);
     row("4".into(), "1080Ti", Policy::ModelAffinity, &af4, base);
     // bounded queues: pressure spills off the hot shard and recovers
     // most of the balance while keeping models pinned when possible
-    let af4b = run(vec![g.clone(); 4], Policy::ModelAffinity, 8, &load);
+    let af4b = run(vec![g.clone(); 4], Policy::ModelAffinity, 8, None, &load);
     row("4 (bound 8)".into(), "1080Ti", Policy::ModelAffinity, &af4b, base);
 
     // ---- heterogeneous fleet: 2x Pascal + 2x Maxwell ----
     let hetero = || vec![g.clone(), g.clone(), titan_x_maxwell(), titan_x_maxwell()];
-    let het_ll = run(hetero(), Policy::LeastLoaded, unbounded, &load);
+    let het_ll = run(hetero(), Policy::LeastLoaded, unbounded, None, &load);
     row("4".into(), "2xPascal+2xMaxwell", Policy::LeastLoaded, &het_ll, base);
-    let het_rr = run(hetero(), Policy::RoundRobin, unbounded, &load);
+    let het_rr = run(hetero(), Policy::RoundRobin, unbounded, None, &load);
     row("4".into(), "2xPascal+2xMaxwell", Policy::RoundRobin, &het_rr, base);
     t.print();
 
     // ---- bounded admission under the same overload ----
-    let bounded = run(vec![g.clone(); 2], Policy::LeastLoaded, 8, &load);
+    let bounded = run(vec![g.clone(); 2], Policy::LeastLoaded, 8, None, &load);
     println!(
         "\nadmission (2 devices, queue bound 8): accepted {} rejected {} ({:.0}% shed), p99 {:.2}ms",
         bounded.accepted,
@@ -150,6 +171,57 @@ fn main() {
         100.0 * bounded.rejected as f64 / n as f64,
         bounded.lat.p99 * 1e3,
     );
+
+    // ---- multi-tenant capped pools (EXPERIMENTS §11) ----
+    // same offered load, 4 devices, pools capped in units of the
+    // largest job footprint: tight caps shed on memory, roomy caps
+    // co-locate tenants, bytes-aware placement spreads residency.
+    // Queue bound 64 so memory — not queue slots — is the binding
+    // constraint (at bound 8 the queues fill long before a 2x-job pool
+    // does and nothing ever sheds on memory; the mirror pins this)
+    let max_fp = load.iter().map(|a| a.conv.footprint_bytes()).max().unwrap();
+    let tight = run(vec![g.clone(); 4], Policy::LeastLoaded, 64, Some(2 * max_fp), &load);
+    let roomy = run(vec![g.clone(); 4], Policy::LeastLoaded, 64, Some(5 * max_fp), &load);
+    let tight_bytes =
+        run(vec![g.clone(); 4], Policy::LeastLoadedBytes, 64, Some(2 * max_fp), &load);
+    let mut pt = Table::new(&[
+        "cap", "policy", "accepted", "shed (mem)", "pool peak", "p99 lat",
+    ]);
+    let mut prow = |cap_mult: usize, policy: Policy, r: &RunResult| {
+        pt.row(&[
+            format!("{cap_mult}x job"),
+            policy.label().to_string(),
+            format!("{}", r.accepted),
+            format!("{} ({})", r.rejected, r.mem_rejected),
+            format!("{:.0}%", 100.0 * r.pool_peak as f64 / (cap_mult * max_fp) as f64),
+            format!("{:.2}ms", r.lat.p99 * 1e3),
+        ]);
+    };
+    println!("\nmulti-tenant pools (4 devices, queue bound 64, job footprint {max_fp} B):");
+    prow(2, Policy::LeastLoaded, &tight);
+    prow(2, Policy::LeastLoadedBytes, &tight_bytes);
+    prow(5, Policy::LeastLoaded, &roomy);
+    pt.print();
+
+    // capped-pool gates: the cap held everywhere (asserted inside run),
+    // tight caps shed on memory while roomy ones keep multiple tenants
+    // resident, and uncapped runs never count memory rejections
+    assert!(tight.mem_rejected > 0, "2x-job caps must shed on memory under 6x overload");
+    assert!(tight.pool_peak <= 2 * max_fp);
+    assert!(
+        roomy.pool_peak > max_fp,
+        "roomy caps must co-locate >= 2 jobs on one shard (peak {} vs job {max_fp})",
+        roomy.pool_peak
+    );
+    assert!(roomy.mem_rejected <= tight.mem_rejected, "more headroom cannot shed more");
+    assert!(roomy.accepted >= tight.accepted, "more headroom cannot admit less");
+    assert!(
+        tight_bytes.accepted >= tight.accepted,
+        "bytes-aware placement must admit at least as much under a tight cap"
+    );
+    for (_, r) in &results {
+        assert_eq!(r.mem_rejected, 0, "uncapped runs never reject on memory");
+    }
 
     // ---- the gates CI runs this bench for ----
     assert!(

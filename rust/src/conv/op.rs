@@ -369,6 +369,17 @@ impl BatchedConvOp {
     pub fn label(&self) -> String {
         format!("{} xb{}", self.op.label(), self.n)
     }
+
+    /// Device bytes this job pins while resident on a shard: batched
+    /// inputs + filters + batched outputs at f32, rounded up to the
+    /// pool's 256 B class lattice (`graph::ARENA_ALIGN`).  This is the
+    /// planned footprint the fleet's pool-pressure admission reserves
+    /// at placement and releases at completion.
+    pub fn footprint_bytes(&self) -> usize {
+        const ALIGN: usize = 256; // = graph::ARENA_ALIGN (conv is below graph)
+        let bytes = (self.map_elems() + self.filter_elems() + self.out_elems()) * BYTES_F32;
+        (bytes + ALIGN - 1) / ALIGN * ALIGN
+    }
 }
 
 /// Batched generalized reference: definitionally `n` independent
@@ -391,6 +402,21 @@ mod tests {
 
     fn bit_eq(a: &[f32], b: &[f32]) -> bool {
         a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn footprint_is_aligned_and_scales_with_batch() {
+        let op = ConvOp::dense(ConvProblem::multi(8, 14, 16, 3));
+        let one = BatchedConvOp::single(op);
+        let eight = BatchedConvOp::new(op, 8);
+        assert_eq!(one.footprint_bytes() % 256, 0);
+        let raw =
+            |b: &BatchedConvOp| (b.map_elems() + b.filter_elems() + b.out_elems()) * BYTES_F32;
+        assert!(one.footprint_bytes() >= raw(&one));
+        assert!(one.footprint_bytes() - raw(&one) < 256);
+        // maps and outputs scale with n, filters don't
+        assert!(eight.footprint_bytes() > 4 * one.footprint_bytes());
+        assert!(eight.footprint_bytes() < 8 * one.footprint_bytes());
     }
 
     #[test]

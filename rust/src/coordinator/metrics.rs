@@ -93,6 +93,17 @@ pub struct Metrics {
     pub coalesced_convs: u64,
     /// conv problems pre-tuned at startup (Router::warm_plans)
     pub plans_tuned: u64,
+    /// model executions served through the executor's device pool
+    pub pooled_models: u64,
+    /// executor pool cap, bytes (the device's DRAM)
+    pub pool_capacity_bytes: u64,
+    /// executor pool gauges, sampled after the latest pooled execution
+    pub pool_in_use_bytes: u64,
+    pub pool_fragmentation_bytes: u64,
+    /// executor pool counters (monotone)
+    pub pool_peak_bytes: u64,
+    pub pool_evictions: u64,
+    pub pool_reuse_hits: u64,
     pub latency: Histogram,
     pub per_artifact: BTreeMap<String, u64>,
 }
@@ -123,11 +134,30 @@ impl Metrics {
         }
     }
 
+    /// Sample the executor pool's occupancy/fragmentation/eviction state
+    /// into the gauges (called by the executor after pooled work).
+    pub fn observe_pool(&mut self, pool: &crate::fleet::DevicePool) {
+        self.pool_capacity_bytes = pool.capacity() as u64;
+        self.pool_in_use_bytes = pool.in_use_slab_bytes() as u64;
+        self.pool_fragmentation_bytes = pool.fragmentation_bytes() as u64;
+        self.pool_peak_bytes = pool.stats.peak_in_use_slab as u64;
+        self.pool_evictions = pool.stats.evictions;
+        self.pool_reuse_hits = pool.stats.reuse_hits;
+    }
+
     pub fn to_json(&self) -> Json {
         let mut per = Json::obj();
         for (k, v) in &self.per_artifact {
             per = per.set(k, (*v as usize).into());
         }
+        let pool = Json::obj()
+            .set("capacity_bytes", (self.pool_capacity_bytes as usize).into())
+            .set("in_use_bytes", (self.pool_in_use_bytes as usize).into())
+            .set("fragmentation_bytes", (self.pool_fragmentation_bytes as usize).into())
+            .set("peak_bytes", (self.pool_peak_bytes as usize).into())
+            .set("evictions", (self.pool_evictions as usize).into())
+            .set("reuse_hits", (self.pool_reuse_hits as usize).into())
+            .set("pooled_models", (self.pooled_models as usize).into());
         Json::obj()
             .set("requests", (self.requests as usize).into())
             .set("responses", (self.responses as usize).into())
@@ -137,6 +167,7 @@ impl Metrics {
             .set("conv_batches", (self.conv_batches_executed as usize).into())
             .set("mean_conv_batch_size", self.mean_conv_batch_size().into())
             .set("plans_tuned", (self.plans_tuned as usize).into())
+            .set("pool", pool)
             .set("latency", self.latency.to_json())
             .set("per_artifact", per)
     }
@@ -194,6 +225,25 @@ mod tests {
         assert!((m.mean_batch_size() - 0.0).abs() < 1e-12);
         assert!((m.mean_conv_batch_size() - 0.0).abs() < 1e-12);
         assert!(m.to_json().render().contains("\"requests\":0"));
+    }
+
+    #[test]
+    fn pool_gauges_sample_and_render() {
+        let mut m = Metrics::default();
+        let mut pool = crate::fleet::DevicePool::new(4096);
+        let a = pool.alloc(300).unwrap();
+        let _b = pool.alloc(512).unwrap();
+        pool.free(a).unwrap();
+        m.pooled_models = 2;
+        m.observe_pool(&pool);
+        assert_eq!(m.pool_capacity_bytes, 4096);
+        assert_eq!(m.pool_in_use_bytes, 512);
+        assert_eq!(m.pool_peak_bytes, 1024);
+        assert_eq!(m.pool_fragmentation_bytes, 0);
+        let json = m.to_json().render();
+        assert!(json.contains("\"pool\":{"), "{json}");
+        assert!(json.contains("\"peak_bytes\":1024"), "{json}");
+        assert!(json.contains("\"pooled_models\":2"), "{json}");
     }
 
     #[test]

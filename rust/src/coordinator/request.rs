@@ -51,6 +51,9 @@ pub struct ModelSummary {
     pub model_latency_secs: f64,
     /// planned peak device arena, bytes
     pub arena_peak_bytes: usize,
+    /// peak bytes the execution held in the executor's shared device
+    /// pool (per-tensor granularity — never worse than the arena peak)
+    pub pooled_peak_bytes: usize,
     /// naive keep-everything-resident footprint, bytes
     pub naive_bytes: usize,
 }

@@ -412,6 +412,10 @@ fn exec_loop(
     let router = Router::from_artifacts(
         &runtime.names().iter().map(|n| runtime.artifact(n).unwrap().clone()).collect::<Vec<_>>(),
     );
+    // the executor's device memory pool, persistent across requests:
+    // model executions allocate per-tensor from it (capped at the
+    // simulated card's DRAM), so repeat traffic reuses parked slabs
+    let mut pool = crate::fleet::DevicePool::new(gpu.dram_bytes as usize);
     while let Ok(work) = work_rx.recv() {
         match work {
             Work::ConvBatch { batch_id, op, items, advice } => {
@@ -498,12 +502,33 @@ fn exec_loop(
             Work::Model(req, respond, graph) => {
                 // every layer was pre-dispatched by warm_plans, so this
                 // is a pure walk over the decision cache + simulator —
-                // each layer runs whatever backend won its dispatch
-                let report =
-                    crate::graph::execute(&graph, &gpu, crate::backend::dispatch_op_plan);
+                // each layer runs whatever backend won its dispatch.
+                // Memory comes from the executor's persistent device
+                // pool (per-tensor alloc/free over the schedule) —
+                // repeat models reuse parked slabs instead of planning
+                // a fresh arena; timing is bit-identical either way.
+                let (report, pooled) = match crate::graph::execute_pooled(
+                    &graph,
+                    &gpu,
+                    crate::backend::dispatch_op_plan,
+                    1,
+                    &mut pool,
+                ) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        metrics.lock().unwrap().errors += 1;
+                        let _ = respond.send(Err(format!("model {}: {e}", graph.name)));
+                        continue;
+                    }
+                };
                 let artifact = format!("model:{}", graph.name);
                 let latency = req.submitted.elapsed().as_secs_f64();
-                metrics.lock().unwrap().record_response(&artifact, latency);
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.record_response(&artifact, latency);
+                    m.pooled_models += 1;
+                    m.observe_pool(&pool);
+                }
                 // the output tensor carries the honest simulation data:
                 // per-node seconds in schedule order
                 let per_node: Vec<f32> =
@@ -523,6 +548,7 @@ fn exec_loop(
                         conv_layers: report.conv_layers,
                         model_latency_secs: report.total_seconds,
                         arena_peak_bytes: report.arena.peak_bytes,
+                        pooled_peak_bytes: pooled.peak_bytes,
                         naive_bytes: report.arena.naive_bytes,
                     }),
                 }));

@@ -10,6 +10,8 @@ use std::collections::VecDeque;
 use crate::conv::BatchedConvOp;
 use crate::gpusim::GpuSpec;
 
+use super::pool::DevicePool;
+
 /// One queued (or running) batched-conv job.
 #[derive(Clone, Debug)]
 pub struct Job {
@@ -25,6 +27,11 @@ pub struct Job {
     pub start: f64,
     /// `start + service`
     pub finish: f64,
+    /// planned device footprint reserved in the shard's pool while the
+    /// job is resident (`BatchedConvOp::footprint_bytes`)
+    pub bytes: usize,
+    /// the pool allocation backing that reservation
+    pub alloc: u64,
 }
 
 /// A completed job, as reported by `Fleet::next_completion`.
@@ -60,11 +67,32 @@ pub struct Device {
     pub completed: u64,
     /// service seconds of completed jobs (utilization numerator)
     pub busy_secs: f64,
+    /// the shard's memory pool: every resident job holds a reservation
+    /// from placement until completion, under the pool's hard cap
+    pool: DevicePool,
 }
 
 impl Device {
-    pub fn new(id: usize, spec: GpuSpec) -> Device {
-        Device { id, spec, queue: VecDeque::new(), tail_finish: 0.0, completed: 0, busy_secs: 0.0 }
+    /// `capacity` overrides the pool cap; None caps at the card's DRAM
+    /// (`spec.dram_bytes` — effectively unbounded for conv jobs, so
+    /// capacity-unaware callers keep their exact pre-pool behavior).
+    pub fn new(id: usize, spec: GpuSpec, capacity: Option<usize>) -> Device {
+        let cap = capacity.unwrap_or(spec.dram_bytes as usize);
+        Device {
+            id,
+            spec,
+            queue: VecDeque::new(),
+            tail_finish: 0.0,
+            completed: 0,
+            busy_secs: 0.0,
+            pool: DevicePool::new(cap),
+        }
+    }
+
+    /// The shard's memory pool (read-only — placement/completion own
+    /// the mutations).
+    pub fn pool(&self) -> &DevicePool {
+        &self.pool
     }
 
     /// Jobs resident (running + waiting).
@@ -89,21 +117,30 @@ impl Device {
     }
 
     /// Append a job: start when the tail drains (or immediately), fixed
-    /// FIFO timing.  The caller enforces the queue bound.
+    /// FIFO timing, and reserve its planned footprint in the pool for
+    /// its whole residency.  The caller enforces the queue bound AND
+    /// checks `pool().can_fit(bytes)` first — placement on a shard
+    /// whose pool cannot fit the job panics rather than deadlocks.
     pub(crate) fn place(&mut self, id: u64, conv: BatchedConvOp, model: Option<String>,
-        now: f64, service: f64) -> &Job {
+        now: f64, service: f64, bytes: usize) -> &Job {
+        let alloc = self
+            .pool
+            .alloc(bytes)
+            .unwrap_or_else(|e| panic!("device {}: admission let through {e}", self.id));
         let start = self.ready_at(now);
         let finish = start + service;
         self.tail_finish = finish;
-        self.queue.push_back(Job { id, conv, model, arrival: now, service, start, finish });
+        self.queue.push_back(Job { id, conv, model, arrival: now, service, start, finish, bytes, alloc });
         self.queue.back().expect("just pushed")
     }
 
-    /// Pop the head job as a completion event.
+    /// Pop the head job as a completion event, releasing its pool
+    /// reservation.
     pub(crate) fn complete_head(&mut self) -> Option<Completion> {
         let j = self.queue.pop_front()?;
         self.completed += 1;
         self.busy_secs += j.service;
+        self.pool.free(j.alloc).expect("resident job holds a live reservation");
         Some(Completion {
             job: j.id,
             device: self.id,
@@ -128,15 +165,15 @@ mod tests {
 
     #[test]
     fn fifo_timing_is_cumulative() {
-        let mut d = Device::new(0, gtx_1080ti());
+        let mut d = Device::new(0, gtx_1080ti(), None);
         assert_eq!(d.queue_len(), 0);
         assert_eq!(d.backlog_secs(5.0), 0.0);
         let (s1, f1) = {
-            let j = d.place(1, job(), None, 10.0, 2.0);
+            let j = d.place(1, job(), None, 10.0, 2.0, job().footprint_bytes());
             (j.start, j.finish)
         };
         assert_eq!((s1, f1), (10.0, 12.0));
-        let f2 = d.place(2, job(), None, 10.5, 3.0).finish;
+        let f2 = d.place(2, job(), None, 10.5, 3.0, job().footprint_bytes()).finish;
         assert_eq!(f2, 15.0); // queued behind job 1
         assert_eq!(d.queue_len(), 2);
         assert!((d.backlog_secs(10.5) - 4.5).abs() < 1e-12);
@@ -145,19 +182,19 @@ mod tests {
 
     #[test]
     fn idle_device_starts_at_submission_time() {
-        let mut d = Device::new(3, gtx_1080ti());
-        d.place(1, job(), None, 0.0, 1.0);
+        let mut d = Device::new(3, gtx_1080ti(), None);
+        d.place(1, job(), None, 0.0, 1.0, 1024);
         d.complete_head().unwrap();
         // queue drained at t=1; a job arriving at t=7 starts at 7
-        let j = d.place(2, job(), None, 7.0, 1.0);
+        let j = d.place(2, job(), None, 7.0, 1.0, 1024);
         assert_eq!(j.start, 7.0);
         assert_eq!(j.finish, 8.0);
     }
 
     #[test]
     fn completion_carries_job_identity_and_latency() {
-        let mut d = Device::new(1, gtx_1080ti());
-        d.place(9, job(), Some("vgg16".into()), 2.0, 4.0);
+        let mut d = Device::new(1, gtx_1080ti(), None);
+        d.place(9, job(), Some("vgg16".into()), 2.0, 4.0, 1024);
         let c = d.complete_head().unwrap();
         assert_eq!((c.job, c.device), (9, 1));
         assert_eq!(c.model.as_deref(), Some("vgg16"));
@@ -166,5 +203,18 @@ mod tests {
         assert_eq!(d.completed, 1);
         assert!((d.busy_secs - 4.0).abs() < 1e-12);
         assert!(d.complete_head().is_none());
+    }
+
+    #[test]
+    fn residency_holds_and_releases_the_pool_reservation() {
+        let b = job().footprint_bytes();
+        let mut d = Device::new(0, gtx_1080ti(), Some(2 * b));
+        d.place(1, job(), None, 0.0, 1.0, b);
+        d.place(2, job(), None, 0.0, 1.0, b);
+        assert_eq!(d.pool().in_use_requested_bytes(), 2 * b);
+        assert!(!d.pool().can_fit(b), "cap reached with two residents");
+        d.complete_head().unwrap();
+        assert_eq!(d.pool().in_use_requested_bytes(), b);
+        assert!(d.pool().can_fit(b), "completion frees the reservation");
     }
 }

@@ -16,15 +16,29 @@
 //! (`rust/tests/fleet_proptests.rs`) exact and flake-free — no wall
 //! clock anywhere.
 //!
-//! Layer map: `device` (shard + job timing), `policy` (placement
-//! arithmetic), `scheduler` (admission, clock, completions, stats).
+//! Shards are *multi-tenant*: every device owns a size-classed
+//! exclusive memory `pool` under a hard byte cap, a job's planned
+//! footprint (`BatchedConvOp::footprint_bytes`) is reserved at
+//! placement and released at completion, and admission is
+//! pool-pressure-aware — a job no shard can fit is rejected
+//! immediately (never queued against memory, so never deadlocked).
+//! The `LeastLoadedBytes` policy weighs predicted completion by the
+//! occupancy a placement would create (cycles AND bytes).
+//!
+//! Layer map: `pool` (per-device memory pool), `device` (shard + job
+//! timing + pool residency), `policy` (placement arithmetic),
+//! `scheduler` (admission, clock, completions, stats).
 
 pub mod device;
 pub mod policy;
+pub mod pool;
 pub mod scheduler;
 pub mod traffic;
 
 pub use device::{Completion, Device, Job};
-pub use policy::{least_loaded_pick, round_robin_pick, PlacementCandidate, Policy};
+pub use policy::{
+    least_loaded_bytes_pick, least_loaded_pick, round_robin_pick, PlacementCandidate, Policy,
+};
+pub use pool::{size_class, DevicePool, PoolError, PoolStats};
 pub use scheduler::{Fleet, FleetConfig, FleetStats, Placement};
 pub use traffic::{mean_service_secs, model_layers, offered_load, Arrival};

@@ -4,13 +4,22 @@
 //! *predicted completion time* across devices using the `plans`/`gpusim`
 //! cost model (which is what "least loaded" must mean on a heterogeneous
 //! fleet — a faster device with a deeper queue can still win);
+//! `LeastLoadedBytes` weighs that completion by memory-pool pressure
+//! (least-loaded-by-cycles-AND-bytes: among shards the job fits on,
+//! minimize `completion x (1 + occupancy-after-placement)` — a shard
+//! finishing marginally earlier but nearly full loses to a cooler one);
 //! `ModelAffinity` pins a model's traffic to one shard so its pre-tuned
 //! plans stay warm, spilling to least-loaded only when the shard's
 //! queue is full.
 //!
+//! Every policy treats the pool cap as HARD: a shard whose pool cannot
+//! fit the job's planned footprint (`fits == false`) is never picked,
+//! whatever its queue looks like — admission rejects rather than
+//! deadlocks when no shard fits.
+//!
 //! The pure selection arithmetic lives here (unit-testable without a
 //! fleet); `scheduler.rs` owns the state (round-robin cursor, sticky
-//! affinity map).
+//! affinity map) and the per-device pools.
 
 /// Pluggable placement policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -19,6 +28,8 @@ pub enum Policy {
     RoundRobin,
     /// minimize predicted completion (backlog + this job's cost there)
     LeastLoaded,
+    /// minimize predicted completion weighted by pool pressure
+    LeastLoadedBytes,
     /// sticky model -> shard mapping, least-loaded for untagged traffic
     ModelAffinity,
 }
@@ -29,6 +40,7 @@ impl Policy {
         match s {
             "rr" | "round-robin" => Some(Policy::RoundRobin),
             "least" | "least-loaded" => Some(Policy::LeastLoaded),
+            "bytes" | "least-bytes" | "least-loaded-bytes" => Some(Policy::LeastLoadedBytes),
             "affinity" | "model-affinity" => Some(Policy::ModelAffinity),
             _ => None,
         }
@@ -38,6 +50,7 @@ impl Policy {
         match self {
             Policy::RoundRobin => "round-robin",
             Policy::LeastLoaded => "least-loaded",
+            Policy::LeastLoadedBytes => "least-loaded-bytes",
             Policy::ModelAffinity => "model-affinity",
         }
     }
@@ -55,6 +68,12 @@ pub struct PlacementCandidate {
     /// predicted service seconds of THIS job on THIS device
     /// (`backend::batched_op_dispatch_seconds` under the device's spec)
     pub service: f64,
+    /// would the job's planned footprint fit the shard's pool right now
+    /// (`DevicePool::can_fit`)?  A hard constraint for every policy.
+    pub fits: bool,
+    /// pool occupancy if the job were admitted here
+    /// (`DevicePool::occupancy_with` — may exceed 1.0 when it doesn't fit)
+    pub occupancy_after: f64,
 }
 
 impl PlacementCandidate {
@@ -62,19 +81,31 @@ impl PlacementCandidate {
         self.queue_len >= self.queue_bound
     }
 
+    /// Placeable: queue has a slot AND the pool fits the footprint.
+    pub fn admissible(&self) -> bool {
+        !self.full() && self.fits
+    }
+
     /// Predicted completion if the job were placed here.
     pub fn completion(&self) -> f64 {
         self.ready_at + self.service
     }
+
+    /// The cycles-AND-bytes score: completion inflated by the pool
+    /// pressure the placement would create.  An empty pool scores the
+    /// plain completion; a nearly-full one doubles it.
+    pub fn weighted_completion(&self) -> f64 {
+        self.completion() * (1.0 + self.occupancy_after)
+    }
 }
 
-/// The least-loaded pick: the non-full device with the earliest
-/// predicted completion, lowest id on ties.  None when every queue is
-/// full (the admission path rejects).
+/// The least-loaded pick: the admissible device with the earliest
+/// predicted completion, lowest id on ties.  None when every shard is
+/// queue-full or pool-full (the admission path rejects).
 pub fn least_loaded_pick(cands: &[PlacementCandidate]) -> Option<usize> {
     cands
         .iter()
-        .filter(|c| !c.full())
+        .filter(|c| c.admissible())
         .min_by(|a, b| {
             a.completion()
                 .partial_cmp(&b.completion())
@@ -84,11 +115,26 @@ pub fn least_loaded_pick(cands: &[PlacementCandidate]) -> Option<usize> {
         .map(|c| c.device)
 }
 
-/// The round-robin pick: first non-full device at or after `cursor`
-/// (cyclic).  None when every queue is full.
+/// The cycles-AND-bytes pick: minimize `weighted_completion` over
+/// admissible shards, lowest id on ties.
+pub fn least_loaded_bytes_pick(cands: &[PlacementCandidate]) -> Option<usize> {
+    cands
+        .iter()
+        .filter(|c| c.admissible())
+        .min_by(|a, b| {
+            a.weighted_completion()
+                .partial_cmp(&b.weighted_completion())
+                .unwrap()
+                .then(a.device.cmp(&b.device))
+        })
+        .map(|c| c.device)
+}
+
+/// The round-robin pick: first admissible device at or after `cursor`
+/// (cyclic).  None when every device is queue- or pool-full.
 pub fn round_robin_pick(cands: &[PlacementCandidate], cursor: usize) -> Option<usize> {
     let n = cands.len();
-    (0..n).map(|i| (cursor + i) % n).find(|&i| !cands[i].full()).map(|i| cands[i].device)
+    (0..n).map(|i| (cursor + i) % n).find(|&i| cands[i].admissible()).map(|i| cands[i].device)
 }
 
 #[cfg(test)]
@@ -96,7 +142,15 @@ mod tests {
     use super::*;
 
     fn cand(device: usize, queue_len: usize, ready_at: f64, service: f64) -> PlacementCandidate {
-        PlacementCandidate { device, queue_len, queue_bound: 4, ready_at, service }
+        PlacementCandidate {
+            device,
+            queue_len,
+            queue_bound: 4,
+            ready_at,
+            service,
+            fits: true,
+            occupancy_after: 0.0,
+        }
     }
 
     #[test]
@@ -104,9 +158,12 @@ mod tests {
         assert_eq!(Policy::parse("rr"), Some(Policy::RoundRobin));
         assert_eq!(Policy::parse("round-robin"), Some(Policy::RoundRobin));
         assert_eq!(Policy::parse("least"), Some(Policy::LeastLoaded));
+        assert_eq!(Policy::parse("bytes"), Some(Policy::LeastLoadedBytes));
+        assert_eq!(Policy::parse("least-loaded-bytes"), Some(Policy::LeastLoadedBytes));
         assert_eq!(Policy::parse("model-affinity"), Some(Policy::ModelAffinity));
         assert_eq!(Policy::parse("bogus"), None);
         assert_eq!(Policy::LeastLoaded.label(), "least-loaded");
+        assert_eq!(Policy::LeastLoadedBytes.label(), "least-loaded-bytes");
     }
 
     #[test]
@@ -124,6 +181,34 @@ mod tests {
         cands[1].queue_len = 4;
         cands[2].queue_len = 4;
         assert_eq!(least_loaded_pick(&cands), None, "all full -> reject");
+    }
+
+    #[test]
+    fn pool_cap_is_hard_for_every_policy() {
+        let mut cands = vec![cand(0, 0, 0.0, 1.0), cand(1, 0, 5.0, 1.0)];
+        cands[0].fits = false;
+        assert_eq!(least_loaded_pick(&cands), Some(1), "earlier shard has no memory");
+        assert_eq!(least_loaded_bytes_pick(&cands), Some(1));
+        assert_eq!(round_robin_pick(&cands, 0), Some(1));
+        cands[1].fits = false;
+        assert_eq!(least_loaded_pick(&cands), None, "nowhere fits -> reject");
+        assert_eq!(least_loaded_bytes_pick(&cands), None);
+        assert_eq!(round_robin_pick(&cands, 0), None);
+    }
+
+    #[test]
+    fn bytes_pick_trades_completion_for_headroom() {
+        // shard 0 finishes a touch earlier but its pool would be 90%
+        // full; shard 1 is a bit slower with a cold pool — bytes-aware
+        // placement prefers the headroom, plain least-loaded does not
+        let mut cands = vec![cand(0, 0, 0.0, 1.0), cand(1, 0, 0.0, 1.2)];
+        cands[0].occupancy_after = 0.9;
+        cands[1].occupancy_after = 0.1;
+        assert_eq!(least_loaded_pick(&cands), Some(0));
+        assert_eq!(least_loaded_bytes_pick(&cands), Some(1));
+        // equal pressure: falls back to completion order, low id ties
+        cands[0].occupancy_after = 0.1;
+        assert_eq!(least_loaded_bytes_pick(&cands), Some(0));
     }
 
     #[test]

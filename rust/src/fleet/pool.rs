@@ -1,0 +1,424 @@
+//! Per-device size-classed exclusive memory pool — the multi-tenant
+//! shard allocator.
+//!
+//! PR 2's arena plans one execution at a time; a shard serving many
+//! concurrent graph executions needs their footprints to share the
+//! device under a hard byte cap.  This pool slices device memory into
+//! *slabs*: each slab belongs to exactly one size class (the request
+//! rounded up to the `ARENA_ALIGN` = 256 B lattice — the same
+//! granularity the arena planner uses, so pooled accounting composes
+//! exactly with `ArenaPlan` bytes) and hosts at most one live
+//! allocation at a time (exclusive — overlap is impossible by
+//! construction; the stateful proptests check the accounting that
+//! encodes it).  A freed slab parks on its class's free list and is
+//! reused best-fit-within-class (exact class match, LIFO — the warmest
+//! slab first); carving a new slab is only allowed while total carved
+//! bytes stay under the cap, and when carving would overflow, *free*
+//! slabs are evicted (largest class first, then most recently carved)
+//! until the request fits or nothing free remains.  In-use slabs are
+//! never evicted: an allocation failure is an explicit `PoolError` the
+//! admission path turns into a rejection — never a deadlock.
+//!
+//! Fragmentation here is the slab-vs-request gap, bounded per live
+//! allocation by `ARENA_ALIGN - 1` bytes (class = request rounded up to
+//! 256); the aggregate bound is proptest-gated.  Because `can_fit` and
+//! `alloc` share one decision procedure (exact class reuse, else carve
+//! budget after evicting everything free), admission checks are exact:
+//! `can_fit(b)` true implies the very next `alloc(b)` succeeds.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::graph::ARENA_ALIGN;
+
+/// Round a request up to its size class: the `ARENA_ALIGN` lattice.
+/// Zero-byte requests still occupy one minimal slab (an allocation is
+/// an identity, not just bytes).
+pub fn size_class(bytes: usize) -> usize {
+    let b = bytes.max(1);
+    (b + ARENA_ALIGN - 1) / ARENA_ALIGN * ARENA_ALIGN
+}
+
+/// Why an allocation or free failed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PoolError {
+    /// the request's class cannot fit even after evicting every free
+    /// slab — the caller must reject or queue, not wait
+    Exhausted { requested: usize, class: usize, capacity: usize, in_use_slab: usize },
+    /// free of an id that is not live (never allocated, or already
+    /// freed) — the exactly-once-free contract
+    UnknownAlloc(u64),
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::Exhausted { requested, class, capacity, in_use_slab } => write!(
+                f,
+                "pool exhausted: request {requested} B (class {class}) vs capacity {capacity} B with {in_use_slab} B in use"
+            ),
+            PoolError::UnknownAlloc(id) => write!(f, "free of unknown allocation {id}"),
+        }
+    }
+}
+
+/// Monotone counters over the pool's lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// successful allocations
+    pub allocs: u64,
+    /// successful frees
+    pub frees: u64,
+    /// allocations served by reusing a parked slab of the exact class
+    pub reuse_hits: u64,
+    /// slabs carved fresh from capacity
+    pub carved: u64,
+    /// free slabs evicted to make room for a carve
+    pub evictions: u64,
+    /// allocations refused (pool exhausted)
+    pub failed_allocs: u64,
+    /// high-water mark of in-use slab bytes
+    pub peak_in_use_slab: usize,
+    /// high-water mark of in-use requested bytes
+    pub peak_in_use_requested: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Slab {
+    class: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Allocation {
+    slab: u64,
+    requested: usize,
+}
+
+/// One device's exclusive memory pool under a hard byte cap.
+#[derive(Clone, Debug)]
+pub struct DevicePool {
+    capacity: usize,
+    slabs: HashMap<u64, Slab>,
+    /// parked (free) slabs by class; within a class the last-freed slab
+    /// is reused first (LIFO — warmest)
+    free_by_class: BTreeMap<usize, Vec<u64>>,
+    live: HashMap<u64, Allocation>,
+    next_slab: u64,
+    next_alloc: u64,
+    /// sum of classes of every slab, free + in use — the quantity the
+    /// cap bounds
+    slab_total: usize,
+    /// sum of classes of in-use slabs
+    in_use_slab: usize,
+    /// sum of raw requested bytes of live allocations
+    in_use_requested: usize,
+    pub stats: PoolStats,
+}
+
+impl DevicePool {
+    pub fn new(capacity: usize) -> DevicePool {
+        assert!(capacity >= ARENA_ALIGN, "pool capacity below one slab class");
+        DevicePool {
+            capacity,
+            slabs: HashMap::new(),
+            free_by_class: BTreeMap::new(),
+            live: HashMap::new(),
+            next_slab: 1,
+            next_alloc: 1,
+            slab_total: 0,
+            in_use_slab: 0,
+            in_use_requested: 0,
+            stats: PoolStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Bytes of carved slabs (free + in use); never exceeds capacity.
+    pub fn slab_bytes(&self) -> usize {
+        self.slab_total
+    }
+
+    /// Bytes of slabs currently hosting a live allocation.
+    pub fn in_use_slab_bytes(&self) -> usize {
+        self.in_use_slab
+    }
+
+    /// Raw requested bytes of live allocations.
+    pub fn in_use_requested_bytes(&self) -> usize {
+        self.in_use_requested
+    }
+
+    /// Bytes parked on free lists, reusable without carving.
+    pub fn free_slab_bytes(&self) -> usize {
+        self.slab_total - self.in_use_slab
+    }
+
+    /// Slab-vs-request overhead across live allocations — bounded by
+    /// `ARENA_ALIGN - 1` per allocation (class rounding only).
+    pub fn fragmentation_bytes(&self) -> usize {
+        self.in_use_slab - self.in_use_requested
+    }
+
+    /// In-use slab bytes as a fraction of capacity.
+    pub fn occupancy(&self) -> f64 {
+        self.in_use_slab as f64 / self.capacity as f64
+    }
+
+    /// Occupancy if a request of `bytes` were admitted on top of the
+    /// current residents — the placement policy's pressure signal.
+    pub fn occupancy_with(&self, bytes: usize) -> f64 {
+        (self.in_use_slab + size_class(bytes)) as f64 / self.capacity as f64
+    }
+
+    pub fn live_allocs(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Exact admission check: would `alloc(bytes)` succeed right now?
+    /// True iff a parked slab of the class exists, or the class fits in
+    /// capacity once everything free is evicted.
+    pub fn can_fit(&self, bytes: usize) -> bool {
+        let class = size_class(bytes);
+        self.free_by_class.get(&class).map_or(false, |v| !v.is_empty())
+            || self.in_use_slab + class <= self.capacity
+    }
+
+    /// Allocate `bytes`: exact-class reuse, else carve (evicting free
+    /// slabs largest-class-first if the cap is hit).  Returns the
+    /// allocation id to pass to `free`.
+    pub fn alloc(&mut self, bytes: usize) -> Result<u64, PoolError> {
+        let class = size_class(bytes);
+        let slab = if let Some(id) = self.take_free(class) {
+            self.stats.reuse_hits += 1;
+            id
+        } else {
+            // evict free slabs until the carve fits (largest class
+            // first, most recently carved within a class — deterministic)
+            while self.slab_total + class > self.capacity && self.evict_one() {}
+            if self.slab_total + class > self.capacity {
+                self.stats.failed_allocs += 1;
+                return Err(PoolError::Exhausted {
+                    requested: bytes,
+                    class,
+                    capacity: self.capacity,
+                    in_use_slab: self.in_use_slab,
+                });
+            }
+            let id = self.next_slab;
+            self.next_slab += 1;
+            self.slabs.insert(id, Slab { class });
+            self.slab_total += class;
+            self.stats.carved += 1;
+            id
+        };
+        let id = self.next_alloc;
+        self.next_alloc += 1;
+        self.live.insert(id, Allocation { slab, requested: bytes });
+        self.in_use_slab += class;
+        self.in_use_requested += bytes;
+        self.stats.allocs += 1;
+        self.stats.peak_in_use_slab = self.stats.peak_in_use_slab.max(self.in_use_slab);
+        self.stats.peak_in_use_requested =
+            self.stats.peak_in_use_requested.max(self.in_use_requested);
+        Ok(id)
+    }
+
+    /// Release allocation `id`; its slab parks on the class free list.
+    /// Freeing an unknown (or already freed) id is an error and leaves
+    /// the pool untouched — exactly-once semantics.
+    pub fn free(&mut self, id: u64) -> Result<(), PoolError> {
+        let a = self.live.remove(&id).ok_or(PoolError::UnknownAlloc(id))?;
+        let class = self.slabs[&a.slab].class;
+        self.in_use_slab -= class;
+        self.in_use_requested -= a.requested;
+        self.free_by_class.entry(class).or_default().push(a.slab);
+        self.stats.frees += 1;
+        Ok(())
+    }
+
+    /// Evict every parked slab, returning the bytes reclaimed — the
+    /// explicit trim the CLI / coordinator can trigger.
+    pub fn evict_free(&mut self) -> usize {
+        let before = self.slab_total;
+        while self.evict_one() {}
+        before - self.slab_total
+    }
+
+    /// Pop the warmest parked slab of exactly `class`.
+    fn take_free(&mut self, class: usize) -> Option<u64> {
+        let list = self.free_by_class.get_mut(&class)?;
+        let id = list.pop()?;
+        if list.is_empty() {
+            self.free_by_class.remove(&class);
+        }
+        Some(id)
+    }
+
+    /// Evict one free slab — largest class first, highest (most recent)
+    /// slab id within the class.  False when nothing is parked.
+    fn evict_one(&mut self) -> bool {
+        let Some((&class, _)) = self.free_by_class.iter().next_back() else {
+            return false;
+        };
+        let list = self.free_by_class.get_mut(&class).expect("class present");
+        let id = list.pop().expect("free list non-empty");
+        if list.is_empty() {
+            self.free_by_class.remove(&class);
+        }
+        self.slabs.remove(&id);
+        self.slab_total -= class;
+        self.stats.evictions += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_class_is_the_arena_lattice() {
+        assert_eq!(size_class(0), 256);
+        assert_eq!(size_class(1), 256);
+        assert_eq!(size_class(256), 256);
+        assert_eq!(size_class(257), 512);
+        assert_eq!(size_class(1024), 1024);
+    }
+
+    #[test]
+    fn alloc_free_roundtrip_accounts_exactly() {
+        let mut p = DevicePool::new(4096);
+        let a = p.alloc(300).unwrap();
+        assert_eq!(p.in_use_slab_bytes(), 512);
+        assert_eq!(p.in_use_requested_bytes(), 300);
+        assert_eq!(p.fragmentation_bytes(), 212);
+        assert_eq!(p.slab_bytes(), 512);
+        p.free(a).unwrap();
+        assert_eq!(p.in_use_slab_bytes(), 0);
+        assert_eq!(p.slab_bytes(), 512, "freed slab stays carved, parked");
+        assert_eq!(p.live_allocs(), 0);
+    }
+
+    #[test]
+    fn exact_class_reuse_is_lifo() {
+        let mut p = DevicePool::new(4096);
+        let a = p.alloc(512).unwrap();
+        let b = p.alloc(512).unwrap();
+        p.free(a).unwrap();
+        p.free(b).unwrap();
+        assert_eq!(p.stats.carved, 2);
+        let _c = p.alloc(512).unwrap();
+        assert_eq!(p.stats.reuse_hits, 1);
+        assert_eq!(p.stats.carved, 2, "no new carve");
+        assert_eq!(p.slab_bytes(), 1024);
+    }
+
+    #[test]
+    fn cap_is_hard_and_eviction_reclaims_free_slabs() {
+        let mut p = DevicePool::new(1024);
+        let a = p.alloc(512).unwrap();
+        let b = p.alloc(512).unwrap();
+        assert!(!p.can_fit(256), "cap full with live allocs");
+        assert_eq!(p.alloc(256).unwrap_err(), PoolError::Exhausted {
+            requested: 256,
+            class: 256,
+            capacity: 1024,
+            in_use_slab: 1024,
+        });
+        assert_eq!(p.stats.failed_allocs, 1);
+        p.free(b).unwrap();
+        // a 256 B request can't reuse the 512 B slab (class mismatch)
+        // but carving 256 evicts the parked 512 to fit under the cap
+        assert!(p.can_fit(256));
+        let _c = p.alloc(256).unwrap();
+        assert_eq!(p.stats.evictions, 1);
+        assert!(p.slab_bytes() <= p.capacity());
+        p.free(a).unwrap();
+    }
+
+    #[test]
+    fn can_fit_agrees_with_alloc() {
+        let mut p = DevicePool::new(2048);
+        let mut ids = vec![];
+        for bytes in [100, 600, 256, 900, 512, 64] {
+            let fits = p.can_fit(bytes);
+            match p.alloc(bytes) {
+                Ok(id) => {
+                    assert!(fits, "alloc({bytes}) succeeded but can_fit said no");
+                    ids.push(id);
+                }
+                Err(_) => assert!(!fits, "can_fit({bytes}) true but alloc failed"),
+            }
+        }
+        for id in ids {
+            p.free(id).unwrap();
+        }
+    }
+
+    #[test]
+    fn double_free_and_unknown_free_are_errors() {
+        let mut p = DevicePool::new(1024);
+        let a = p.alloc(100).unwrap();
+        p.free(a).unwrap();
+        assert_eq!(p.free(a).unwrap_err(), PoolError::UnknownAlloc(a));
+        assert_eq!(p.free(999).unwrap_err(), PoolError::UnknownAlloc(999));
+        assert_eq!(p.stats.frees, 1, "failed frees don't count");
+    }
+
+    #[test]
+    fn eviction_prefers_largest_class() {
+        let mut p = DevicePool::new(2048);
+        let a = p.alloc(256).unwrap();
+        let b = p.alloc(1024).unwrap();
+        p.free(a).unwrap();
+        p.free(b).unwrap();
+        // carving 768 needs 768 over a 2048 cap with 1280 parked:
+        // fits without eviction (1280 + 768 <= 2048)
+        let c = p.alloc(768).unwrap();
+        assert_eq!(p.stats.evictions, 0);
+        // now carving another 768 (total would be 2816) evicts the
+        // 1024 first — one eviction suffices
+        let d = p.alloc(768).unwrap();
+        assert_eq!(p.stats.evictions, 1);
+        assert!(p.slab_bytes() <= 2048);
+        p.free(c).unwrap();
+        p.free(d).unwrap();
+    }
+
+    #[test]
+    fn evict_free_trims_everything_parked() {
+        let mut p = DevicePool::new(4096);
+        let ids: Vec<u64> = (0..4).map(|_| p.alloc(512).unwrap()).collect();
+        for id in ids {
+            p.free(id).unwrap();
+        }
+        assert_eq!(p.free_slab_bytes(), 2048);
+        assert_eq!(p.evict_free(), 2048);
+        assert_eq!(p.slab_bytes(), 0);
+        assert_eq!(p.stats.evictions, 4);
+    }
+
+    #[test]
+    fn occupancy_and_pressure_signal() {
+        let mut p = DevicePool::new(1024);
+        assert_eq!(p.occupancy(), 0.0);
+        let _a = p.alloc(512).unwrap();
+        assert!((p.occupancy() - 0.5).abs() < 1e-12);
+        assert!((p.occupancy_with(512) - 1.0).abs() < 1e-12);
+        assert!(p.occupancy_with(1024) > 1.0, "over-cap pressure visible");
+    }
+
+    #[test]
+    fn peaks_are_high_water_marks() {
+        let mut p = DevicePool::new(4096);
+        let a = p.alloc(1000).unwrap();
+        let b = p.alloc(1000).unwrap();
+        p.free(a).unwrap();
+        p.free(b).unwrap();
+        let _c = p.alloc(100).unwrap();
+        assert_eq!(p.stats.peak_in_use_requested, 2000);
+        assert_eq!(p.stats.peak_in_use_slab, 2048);
+    }
+}

@@ -22,7 +22,9 @@ use crate::conv::{BatchedConvOp, ConvOp};
 use crate::gpusim::GpuSpec;
 
 use super::device::{Completion, Device};
-use super::policy::{least_loaded_pick, round_robin_pick, PlacementCandidate, Policy};
+use super::policy::{
+    least_loaded_bytes_pick, least_loaded_pick, round_robin_pick, PlacementCandidate, Policy,
+};
 
 /// Fleet-wide knobs.
 #[derive(Clone, Copy, Debug)]
@@ -33,11 +35,15 @@ pub struct FleetConfig {
     /// coalesced batch occupies ONE slot whatever its `n` — batching
     /// buys admission capacity as well as launch amortization.
     pub queue_bound: usize,
+    /// per-device pool cap, bytes; None = the card's own DRAM
+    /// (`spec.dram_bytes` — effectively unbounded for conv traffic, so
+    /// pre-pool behavior is preserved exactly)
+    pub capacity_bytes: Option<usize>,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
-        FleetConfig { policy: Policy::LeastLoaded, queue_bound: 32 }
+        FleetConfig { policy: Policy::LeastLoaded, queue_bound: 32, capacity_bytes: None }
     }
 }
 
@@ -62,6 +68,9 @@ pub struct FleetStats {
     pub batched_images: u64,
     /// affinity jobs that spilled off their sticky shard (queue full)
     pub affinity_spills: u64,
+    /// rejections attributable to memory: some shard had a queue slot
+    /// free, but no shard's pool fit the job's planned footprint
+    pub mem_rejected: u64,
 }
 
 /// A multi-GPU fleet in virtual time.
@@ -82,8 +91,15 @@ impl Fleet {
     pub fn new(specs: Vec<GpuSpec>, cfg: FleetConfig) -> Fleet {
         assert!(!specs.is_empty(), "fleet needs at least one device");
         assert!(cfg.queue_bound >= 1, "queue bound must be >= 1");
+        if let Some(cap) = cfg.capacity_bytes {
+            assert!(cap >= crate::graph::ARENA_ALIGN, "pool capacity below one slab class");
+        }
         Fleet {
-            devices: specs.into_iter().enumerate().map(|(i, s)| Device::new(i, s)).collect(),
+            devices: specs
+                .into_iter()
+                .enumerate()
+                .map(|(i, s)| Device::new(i, s, cfg.capacity_bytes))
+                .collect(),
             cfg,
             now: 0.0,
             rr_cursor: 0,
@@ -139,11 +155,16 @@ impl Fleet {
         self.affinity.get(model).copied()
     }
 
-    /// Admission: price the job on every shard, place per policy.
-    /// `None` = rejected (every candidate queue at its bound).
+    /// Admission: price the job on every shard, check each shard's pool
+    /// for the job's planned footprint, place per policy.  `None` =
+    /// rejected: every candidate queue at its bound, or — on capped
+    /// pools — no shard's pool fits the footprint (`mem_rejected`).
+    /// Rejection is immediate; a job never waits on memory (no
+    /// deadlock), the caller re-submits later if it wants queueing.
     pub fn submit(&mut self, conv: BatchedConvOp, model: Option<&str>) -> Option<Placement> {
         assert!(conv.valid(), "invalid batched op");
         self.stats.submitted += 1;
+        let bytes = conv.footprint_bytes();
         let cands: Vec<PlacementCandidate> = (0..self.devices.len())
             .map(|i| PlacementCandidate {
                 device: i,
@@ -151,6 +172,8 @@ impl Fleet {
                 queue_bound: self.cfg.queue_bound,
                 ready_at: self.devices[i].ready_at(self.now),
                 service: service_for(&mut self.cost_cache, &self.devices[i].spec, &conv),
+                fits: self.devices[i].pool().can_fit(bytes),
+                occupancy_after: self.devices[i].pool().occupancy_with(bytes),
             })
             .collect();
 
@@ -163,14 +186,16 @@ impl Fleet {
                 p
             }
             Policy::LeastLoaded => least_loaded_pick(&cands),
+            Policy::LeastLoadedBytes => least_loaded_bytes_pick(&cands),
             Policy::ModelAffinity => match model.and_then(|m| self.affinity.get(m).copied()) {
                 // untagged, or first sight of this model: least-loaded;
                 // the pin is recorded below ONLY if the job is accepted
                 // (a rejected first submission must not pin anything)
                 None => least_loaded_pick(&cands),
-                Some(shard) if !cands[shard].full() => Some(shard),
+                Some(shard) if cands[shard].admissible() => Some(shard),
                 Some(_) => {
-                    // sticky shard saturated: spill, keep the pin
+                    // sticky shard saturated (queue or pool): spill,
+                    // keep the pin
                     let spill = least_loaded_pick(&cands);
                     if spill.is_some() {
                         self.stats.affinity_spills += 1;
@@ -182,6 +207,10 @@ impl Fleet {
 
         let Some(d) = pick else {
             self.stats.rejected += 1;
+            if cands.iter().any(|c| !c.full()) {
+                // a queue slot existed somewhere — memory blocked this one
+                self.stats.mem_rejected += 1;
+            }
             return None;
         };
         if self.cfg.policy == Policy::ModelAffinity {
@@ -194,7 +223,8 @@ impl Fleet {
         self.stats.accepted += 1;
         self.stats.batched_images += conv.n as u64;
         let service = cands[d].service;
-        let job = self.devices[d].place(id, conv, model.map(str::to_string), self.now, service);
+        let job =
+            self.devices[d].place(id, conv, model.map(str::to_string), self.now, service, bytes);
         Some(Placement { job: id, device: d, start: job.start, finish: job.finish })
     }
 
@@ -269,7 +299,11 @@ mod tests {
     }
 
     fn fleet(n: usize, policy: Policy, bound: usize) -> Fleet {
-        Fleet::homogeneous(n, &gtx_1080ti(), FleetConfig { policy, queue_bound: bound })
+        Fleet::homogeneous(
+            n,
+            &gtx_1080ti(),
+            FleetConfig { policy, queue_bound: bound, capacity_bytes: None },
+        )
     }
 
     #[test]
@@ -331,7 +365,7 @@ mod tests {
         // so an empty fleet's first placement lands there
         let mut f = Fleet::new(
             vec![titan_x_maxwell(), gtx_1080ti()],
-            FleetConfig { policy: Policy::LeastLoaded, queue_bound: 8 },
+            FleetConfig { policy: Policy::LeastLoaded, queue_bound: 8, capacity_bytes: None },
         );
         let c = conv(4);
         let t_maxwell = f.predicted_service(&c, 0);
@@ -400,6 +434,76 @@ mod tests {
         assert_eq!(done.len(), 2);
         assert_eq!(f.now(), 2.5 * s, "clock lands on the target time");
         assert!(f.submit(conv(1), None).is_some());
+    }
+
+    fn capped_fleet(n: usize, policy: Policy, bound: usize, cap: usize) -> Fleet {
+        Fleet::homogeneous(
+            n,
+            &gtx_1080ti(),
+            FleetConfig { policy, queue_bound: bound, capacity_bytes: Some(cap) },
+        )
+    }
+
+    #[test]
+    fn pool_cap_rejects_and_counts_mem_rejections() {
+        let b = conv(1).footprint_bytes();
+        // one device, room for exactly two resident jobs, deep queue
+        let mut f = capped_fleet(1, Policy::LeastLoaded, 8, 2 * b);
+        assert!(f.submit(conv(1), None).is_some());
+        assert!(f.submit(conv(1), None).is_some());
+        assert!(f.submit(conv(1), None).is_none(), "pool full");
+        assert_eq!(f.stats.rejected, 1);
+        assert_eq!(f.stats.mem_rejected, 1, "queue had slots: memory-caused");
+        assert!(f.devices()[0].pool().in_use_requested_bytes() <= 2 * b);
+        // completion releases the reservation and readmits
+        f.next_completion().unwrap();
+        assert!(f.submit(conv(1), None).is_some());
+        assert_eq!(f.stats.mem_rejected, 1);
+    }
+
+    #[test]
+    fn queue_rejections_are_not_mem_rejections() {
+        let mut f = fleet(1, Policy::LeastLoaded, 1);
+        assert!(f.submit(conv(1), None).is_some());
+        assert!(f.submit(conv(1), None).is_none(), "queue bound hit");
+        assert_eq!(f.stats.rejected, 1);
+        assert_eq!(f.stats.mem_rejected, 0, "every queue was full: not memory");
+    }
+
+    #[test]
+    fn bytes_policy_spreads_residency_under_pressure() {
+        let b = conv(1).footprint_bytes();
+        // two shards, each fits 3 residents; plain least-loaded packs by
+        // completion, bytes-aware placement keeps occupancy balanced
+        let mut f = capped_fleet(2, Policy::LeastLoadedBytes, 8, 3 * b);
+        for _ in 0..6 {
+            assert!(f.submit(conv(1), None).is_some());
+        }
+        let occ: Vec<usize> =
+            f.devices().iter().map(|d| d.pool().in_use_requested_bytes()).collect();
+        assert_eq!(occ, vec![3 * b, 3 * b], "residency balanced");
+        assert!(f.submit(conv(1), None).is_none(), "both pools full");
+        assert_eq!(f.stats.mem_rejected, 1);
+        let done = f.drain();
+        assert_eq!(done.len(), 6);
+        for d in f.devices() {
+            assert_eq!(d.pool().in_use_requested_bytes(), 0, "drained pools empty");
+        }
+    }
+
+    #[test]
+    fn uncapped_fleet_behaves_exactly_as_before() {
+        // default capacity (the card's DRAM) never blocks conv traffic:
+        // stats and placements match the queue-only regime
+        let mut f = fleet(2, Policy::LeastLoaded, 2);
+        for i in 0..4 {
+            assert!(f.submit(conv(1), None).is_some(), "job {i}");
+        }
+        assert!(f.submit(conv(1), None).is_none());
+        assert_eq!(f.stats.mem_rejected, 0);
+        for d in f.devices() {
+            assert_eq!(d.pool().capacity(), d.spec.dram_bytes as usize);
+        }
     }
 
     #[test]

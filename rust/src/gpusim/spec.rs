@@ -30,6 +30,8 @@ pub struct GpuSpec {
     /// max resident threads per SM
     pub max_threads_per_sm: u32,
     pub warp_size: u32,
+    /// device (DRAM) memory, bytes — the fleet pool's default hard cap
+    pub dram_bytes: u64,
 }
 
 /// GeForce GTX 1080Ti — the paper's primary testbed (Table 1).
@@ -47,6 +49,7 @@ pub fn gtx_1080ti() -> GpuSpec {
         registers_per_sm: 64 * 1024,
         max_threads_per_sm: 2048,
         warp_size: 32,
+        dram_bytes: 11 * 1024 * 1024 * 1024,
     }
 }
 
@@ -66,6 +69,7 @@ pub fn titan_x_maxwell() -> GpuSpec {
         registers_per_sm: 64 * 1024,
         max_threads_per_sm: 2048,
         warp_size: 32,
+        dram_bytes: 12 * 1024 * 1024 * 1024,
     }
 }
 
@@ -85,6 +89,7 @@ pub fn tesla_k40() -> GpuSpec {
         registers_per_sm: 64 * 1024,
         max_threads_per_sm: 2048,
         warp_size: 32,
+        dram_bytes: 12 * 1024 * 1024 * 1024,
     }
 }
 
@@ -233,6 +238,13 @@ mod tests {
     fn maxwell_n_fma_differs() {
         // Maxwell's longer latency demands more in-flight FMAs per SM.
         assert!(titan_x_maxwell().n_fma() > gtx_1080ti().n_fma());
+    }
+
+    #[test]
+    fn dram_sizes_match_the_cards() {
+        assert_eq!(gtx_1080ti().dram_bytes, 11 << 30);
+        assert_eq!(titan_x_maxwell().dram_bytes, 12 << 30);
+        assert_eq!(tesla_k40().dram_bytes, 12 << 30);
     }
 
     #[test]

@@ -23,8 +23,10 @@ use crate::gpusim::{simulate, GpuSpec, KernelPlan};
 use crate::plans;
 use crate::util::bench::Table;
 
+use crate::fleet::pool::{DevicePool, PoolError};
+
 use super::build::Graph;
-use super::memory::{plan_arena, ArenaPlan};
+use super::memory::{plan_arena, plan_pooled, ArenaPlan, PooledPlan};
 use super::node::{NodeId, Op, Shape};
 
 /// How a conv node resolves to a kernel plan.
@@ -230,6 +232,25 @@ pub fn execute_batched(g: &Graph, spec: &GpuSpec, planner: Planner, batch: usize
     }
 }
 
+/// `execute_batched` against a shared device pool: the timing walk is
+/// the exact same arithmetic (the returned `ModelReport` is
+/// bit-identical to the unpooled path — pool state never influences
+/// node timing), while the memory schedule allocates per-tensor from
+/// `pool` instead of reserving a private arena (`plan_pooled`).  Errors
+/// out — with the pool rolled back — when the execution cannot fit
+/// under the pool's cap alongside its current residents.
+pub fn execute_pooled(
+    g: &Graph,
+    spec: &GpuSpec,
+    planner: Planner,
+    batch: usize,
+    pool: &mut DevicePool,
+) -> Result<(ModelReport, PooledPlan), PoolError> {
+    let order = topo_order(g);
+    let pooled = plan_pooled(g, &order, batch, pool)?;
+    Ok((execute_batched(g, spec, planner, batch), pooled))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -361,6 +382,22 @@ mod tests {
             dispatched.nodes.iter().any(|n| n.kind == "conv" && !n.detail.starts_with("ours-")),
             "no per-layer backend choice visible"
         );
+    }
+
+    #[test]
+    fn pooled_execution_timing_is_bit_identical() {
+        let g = model_graph("resnet18").unwrap();
+        let spec = gtx_1080ti();
+        let plain = execute_batched(&g, &spec, crate::backend::dispatch_op_plan, 2);
+        let mut pool = DevicePool::new(spec.dram_bytes as usize);
+        let (pooled, plan) =
+            execute_pooled(&g, &spec, crate::backend::dispatch_op_plan, 2, &mut pool).unwrap();
+        assert_eq!(pooled.total_seconds.to_bits(), plain.total_seconds.to_bits());
+        for (a, b) in pooled.nodes.iter().zip(&plain.nodes) {
+            assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "node {}", a.name);
+        }
+        assert!(plan.peak_bytes <= plain.arena.peak_bytes);
+        assert_eq!(pool.live_allocs(), 0);
     }
 
     #[test]

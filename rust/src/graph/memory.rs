@@ -9,6 +9,8 @@
 //! offset plan achieving it (best-fit-by-size, the TFLite/TVM shared
 //! arena approach), so the reports can state bytes saved exactly.
 
+use crate::fleet::pool::{DevicePool, PoolError};
+
 use super::build::Graph;
 use super::node::NodeId;
 
@@ -163,6 +165,78 @@ pub fn plan_arena(g: &Graph, order: &[NodeId]) -> ArenaPlan {
     ArenaPlan { placements, peak_bytes: peak, naive_bytes: naive }
 }
 
+/// What one pooled execution did to its device pool — the multi-tenant
+/// counterpart of `ArenaPlan`'s headline numbers.
+#[derive(Clone, Copy, Debug)]
+pub struct PooledPlan {
+    /// high-water mark of THIS execution's live bytes in the pool —
+    /// the per-tensor live floor, never worse than the arena peak
+    /// (tensors are freed at last use instead of holding a whole-arena
+    /// reservation, so a fragmented `ArenaPlan` is strictly beaten)
+    pub peak_bytes: usize,
+    /// sum of all tensor bytes (the naive keep-everything footprint)
+    pub naive_bytes: usize,
+    /// pool allocations this execution made (= graph nodes)
+    pub allocs: u64,
+    /// how many of them reused a parked slab instead of carving
+    pub reuse_hits: u64,
+    /// free slabs the pool evicted to make room during this execution
+    pub evictions: u64,
+}
+
+/// Execute `g`'s memory schedule against a shared device pool: walk
+/// `order`, allocating each node's tensor (scaled by `batch`) at its
+/// definition step and freeing every tensor right after its last use —
+/// per-tensor granularity, so many executions interleave on one pool
+/// under its hard cap.  On exhaustion, every allocation this call made
+/// is released and the error is returned (the pool is left consistent;
+/// evictions of parked slabs along the way persist — they were free).
+pub fn plan_pooled(
+    g: &Graph,
+    order: &[NodeId],
+    batch: usize,
+    pool: &mut DevicePool,
+) -> Result<PooledPlan, PoolError> {
+    assert!(batch >= 1, "batch must be >= 1");
+    let lives = liveness(g, order);
+    let naive: usize = lives.iter().map(|l| l.bytes * batch).sum();
+    let (reuse0, evict0) = (pool.stats.reuse_hits, pool.stats.evictions);
+    let mut ids: Vec<Option<u64>> = vec![None; lives.len()];
+    let (mut live_now, mut peak) = (0usize, 0usize);
+    for step in 0..lives.len() {
+        let bytes = lives[step].bytes * batch;
+        match pool.alloc(bytes) {
+            Ok(id) => ids[step] = Some(id),
+            Err(e) => {
+                for id in ids.iter_mut().filter_map(Option::take) {
+                    pool.free(id).expect("own allocation");
+                }
+                return Err(e);
+            }
+        }
+        live_now += bytes;
+        peak = peak.max(live_now);
+        // inputs whose last read is this step die now (they overlap the
+        // step itself: read while the output is written, then released)
+        for (j, l) in lives.iter().enumerate().take(step + 1) {
+            if l.last_use_step == step {
+                if let Some(id) = ids[j].take() {
+                    pool.free(id).expect("own allocation");
+                    live_now -= l.bytes * batch;
+                }
+            }
+        }
+    }
+    debug_assert!(ids.iter().all(Option::is_none), "every tensor freed");
+    Ok(PooledPlan {
+        peak_bytes: peak,
+        naive_bytes: naive,
+        allocs: lives.len() as u64,
+        reuse_hits: pool.stats.reuse_hits - reuse0,
+        evictions: pool.stats.evictions - evict0,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,6 +329,53 @@ mod tests {
             assert_eq!(p.offset % ARENA_ALIGN, 0);
             assert_eq!(p.life.bytes % ARENA_ALIGN, 0);
         }
+    }
+
+    #[test]
+    fn pooled_plan_never_beats_the_floor_nor_loses_to_the_arena() {
+        for name in MODEL_NAMES {
+            let g = model_graph(name).unwrap();
+            let order = topo_order(&g);
+            let arena = plan_arena(&g, &order);
+            let mut pool = DevicePool::new(1 << 30);
+            let pooled = plan_pooled(&g, &order, 1, &mut pool).unwrap();
+            assert_eq!(pooled.peak_bytes, arena.live_peak_bytes(), "{name}: pooled = floor");
+            assert!(pooled.peak_bytes <= arena.peak_bytes, "{name}");
+            assert_eq!(pooled.naive_bytes, arena.naive_bytes, "{name}");
+            assert_eq!(pool.live_allocs(), 0, "{name}: everything freed");
+            assert_eq!(pooled.allocs, g.len() as u64);
+        }
+    }
+
+    #[test]
+    fn pooled_plan_scales_with_batch_and_reuses_slabs() {
+        let g = chain(6);
+        let order = topo_order(&g);
+        let mut pool = DevicePool::new(1 << 30);
+        let one = plan_pooled(&g, &order, 1, &mut pool).unwrap();
+        // same-shaped chain tensors: the second execution reuses the
+        // first's parked slabs instead of carving
+        let again = plan_pooled(&g, &order, 1, &mut pool).unwrap();
+        assert_eq!(again.peak_bytes, one.peak_bytes);
+        assert_eq!(again.reuse_hits, again.allocs, "all reused on the warm pool");
+        let mut fresh = DevicePool::new(1 << 30);
+        let four = plan_pooled(&g, &order, 4, &mut fresh).unwrap();
+        assert_eq!(four.peak_bytes, 4 * one.peak_bytes);
+        assert_eq!(four.naive_bytes, 4 * one.naive_bytes);
+    }
+
+    #[test]
+    fn pooled_plan_exhaustion_rolls_back_cleanly() {
+        let g = model_graph("vgg16").unwrap();
+        let order = topo_order(&g);
+        let mut pool = DevicePool::new(1 << 20); // 1 MiB: far below VGG's peak
+        let before = pool.stats;
+        let err = plan_pooled(&g, &order, 1, &mut pool).unwrap_err();
+        assert!(matches!(err, PoolError::Exhausted { .. }), "{err}");
+        assert_eq!(pool.live_allocs(), 0, "rollback freed everything");
+        assert_eq!(pool.in_use_requested_bytes(), 0);
+        assert_eq!(pool.stats.failed_allocs, before.failed_allocs + 1);
+        assert!(pool.slab_bytes() <= pool.capacity());
     }
 
     #[test]

@@ -29,6 +29,8 @@ pub use build::{
     alexnet_graph, inception3a_graph, mobilenet_v1_graph, model_graph, resnet18_graph,
     vgg16_graph, Graph, GraphBuilder, MODEL_NAMES,
 };
-pub use exec::{execute, execute_batched, topo_order, ModelReport, NodeReport, Planner};
-pub use memory::{liveness, plan_arena, ArenaPlan, Placement, TensorLife, ARENA_ALIGN};
+pub use exec::{execute, execute_batched, execute_pooled, topo_order, ModelReport, NodeReport, Planner};
+pub use memory::{
+    liveness, plan_arena, plan_pooled, ArenaPlan, Placement, PooledPlan, TensorLife, ARENA_ALIGN,
+};
 pub use node::{Node, NodeId, Op, Shape};

@@ -19,6 +19,9 @@
 //!                                 conv traffic across N device shards
 //!                                 under a placement policy, virtual-time
 //!                                 throughput/latency/utilization out
+//!                                 (--capacity-mib caps each shard's
+//!                                 memory pool: multi-tenant admission
+//!                                 with pool-pressure shedding)
 //!
 //! `simulate` and `model` route through the cross-backend dispatcher by
 //! default (per-problem / per-layer algorithm choice, never losing to
@@ -69,9 +72,11 @@ fn main() {
                  \n                                    whole-model graph execution:\
                  \n                                    latency + arena memory plan +\
                  \n                                    per-layer backend choices\
-                 \n  fleet [--devices N] [--policy rr|least|affinity] [--requests N]\
+                 \n  fleet [--devices N] [--policy rr|least|bytes|affinity] [--requests N]\
                  \n        [--batch B] [--queue-bound Q] [--overload X] [--hetero]\
-                 \n                                    virtual-time multi-GPU fleet run\n"
+                 \n        [--capacity-mib M]           virtual-time multi-GPU fleet run\
+                 \n                                    (M > 0 caps each shard's memory\
+                 \n                                    pool; admission sheds on memory)\n"
             );
             if cmd == "help" { 0 } else { 2 }
         }
@@ -364,8 +369,11 @@ fn cmd_fleet(args: &Args) -> i32 {
     let batch = args.get_usize("batch", 4);
     let queue_bound = args.get_usize("queue-bound", 32);
     let overload = args.get_f64("overload", 4.0);
+    // per-shard pool cap; 0 (the default) = the card's own DRAM
+    let capacity_mib = args.get_usize("capacity-mib", 0);
+    let capacity_bytes = (capacity_mib > 0).then(|| capacity_mib * 1024 * 1024);
     let Some(policy) = Policy::parse(args.get_or("policy", "least")) else {
-        eprintln!("unknown policy (want rr|least|affinity)");
+        eprintln!("unknown policy (want rr|least|bytes|affinity)");
         return 2;
     };
     let g = gpu_from(args);
@@ -379,16 +387,17 @@ fn cmd_fleet(args: &Args) -> i32 {
     };
     let names: Vec<&str> = specs.iter().map(|s| s.name).collect();
     println!(
-        "fleet: {} devices [{}], policy {}, queue bound {queue_bound}, batch {batch}",
+        "fleet: {} devices [{}], policy {}, queue bound {queue_bound}, batch {batch}, pool cap {}",
         devices,
         names.join(", "),
-        policy.label()
+        policy.label(),
+        if capacity_mib > 0 { format!("{capacity_mib} MiB") } else { "device DRAM".to_string() },
     );
 
     // model-tagged batched conv traffic over the §4 model layers
     // (fleet::traffic — the same generator the e2e_fleet bench replays);
     // offered rate: `overload` x one reference device's capacity
-    let mut fleet = Fleet::new(specs, FleetConfig { policy, queue_bound });
+    let mut fleet = Fleet::new(specs, FleetConfig { policy, queue_bound, capacity_bytes });
     let probe = offered_load(64, 1.0, 0xF1EE7, Some(batch));
     let rate = overload / mean_service_secs(&probe, &g);
     let mut completions = Vec::with_capacity(n);
@@ -401,29 +410,41 @@ fn cmd_fleet(args: &Args) -> i32 {
     let lats: Vec<f64> = completions.iter().map(|c| c.latency()).collect();
     let s = pasconv::util::stats::Summary::of(&lats);
 
-    let mut table = Table::new(&["device", "spec", "jobs", "busy (s)", "util"]);
+    let mut table = Table::new(&[
+        "device", "spec", "jobs", "busy (s)", "util", "pool peak", "evict", "reuse",
+    ]);
     for d in fleet.devices() {
+        let p = d.pool();
         table.row(&[
             d.id.to_string(),
             d.spec.name.to_string(),
             d.completed.to_string(),
             format!("{:.3}", d.busy_secs),
             format!("{:.0}%", 100.0 * d.busy_secs / makespan.max(1e-30)),
+            format!(
+                "{} ({:.0}%)",
+                pasconv::util::bench::fmt_mib(p.stats.peak_in_use_slab),
+                100.0 * p.stats.peak_in_use_slab as f64 / p.capacity() as f64
+            ),
+            p.stats.evictions.to_string(),
+            p.stats.reuse_hits.to_string(),
         ]);
     }
     table.print();
     let st = fleet.stats;
     println!(
-        "\noffered {:.0} req/s ({overload:.1}x capacity); accepted {}/{} ({} shed), {} images",
-        rate, st.accepted, st.submitted, st.rejected, st.batched_images
+        "\noffered {:.0} req/s ({overload:.1}x capacity); accepted {}/{} ({} shed, {} on memory), {} images",
+        rate, st.accepted, st.submitted, st.rejected, st.mem_rejected, st.batched_images
     );
+    let frag: usize = fleet.devices().iter().map(|d| d.pool().fragmentation_bytes()).sum();
     println!(
-        "virtual makespan {:.3}s -> {:.0} req/s served; p50 {:.2}ms p99 {:.2}ms; {} affinity spills",
+        "virtual makespan {:.3}s -> {:.0} req/s served; p50 {:.2}ms p99 {:.2}ms; {} affinity spills; residual pool fragmentation {} B",
         makespan,
         completions.len() as f64 / makespan.max(1e-30),
         s.p50 * 1e3,
         s.p99 * 1e3,
-        st.affinity_spills
+        st.affinity_spills,
+        frag
     );
     0
 }

@@ -7,13 +7,24 @@
 //!  * every accepted request completes exactly once (never lost, never
 //!    duplicated), across completes, drains and interleaved submits;
 //!  * no device ever exceeds its queue bound, and admission rejects
-//!    exactly when every candidate queue is at the bound;
+//!    exactly when every candidate is queue-full or pool-full;
+//!  * no device's memory pool ever exceeds its byte cap — including
+//!    while two or more different models are concurrently resident on
+//!    one shard (the multi-tenant regime this PR adds);
 //!  * least-loaded never picks a strictly worse device: the chosen
-//!    shard's predicted completion is minimal among non-full shards;
+//!    shard's predicted completion is minimal among admissible shards;
 //!  * round-robin visits devices cyclically (skipping full queues) and
 //!    model-affinity stays pinned, spilling only under pressure;
 //!  * placements and completions match the reference model exactly
-//!    (same start/finish arithmetic, same event order, same clock).
+//!    (same start/finish arithmetic, same event order, same clock,
+//!    same pool occupancy / carve / reuse accounting).
+//!
+//! A second stateful harness drives the `DevicePool` itself through
+//! alloc / free / double-free / execute-under-cap / trim transitions
+//! against an independent reference allocator: slabs are exclusive (no
+//! overlap by accounting), the cap is never exceeded, frees are
+//! exactly-once, and fragmentation stays under the size-class bound
+//! (`ARENA_ALIGN - 1` per live allocation).
 //!
 //! Plus the differential batching properties the batch-aware serving
 //! path rests on: the batched CPU reference is bit-identical to `n`
@@ -24,13 +35,16 @@
 //! Seed and case count are fixed (CI runs this file directly) so the
 //! runtime stays bounded and failures replay deterministically.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 
 use pasconv::conv::{
     conv2d_batched_cpu, conv2d_multi_cpu, BatchedConv, BatchedConvOp, ConvOp, ConvProblem,
 };
-use pasconv::fleet::{Fleet, FleetConfig, Policy};
+use pasconv::fleet::{size_class, DevicePool, Fleet, FleetConfig, PoolError, Policy};
 use pasconv::gpusim::{gtx_1080ti, titan_x_maxwell, GpuSpec};
+use pasconv::graph::{
+    liveness, plan_pooled, topo_order, Graph, GraphBuilder, Shape, TensorLife, ARENA_ALIGN,
+};
 use pasconv::plans;
 use pasconv::util::prop::{check, Config};
 use pasconv::util::rng::Rng;
@@ -62,6 +76,13 @@ fn op_templates() -> Vec<ConvOp> {
 
 const MODELS: [&str; 3] = ["alexnet", "resnet18", "vgg16"];
 
+/// Largest footprint the generator can produce (biggest template at
+/// n = 8) — capped cases size their pools in units of this so the cap
+/// actually bites.
+fn max_footprint() -> usize {
+    op_templates().iter().map(|&op| BatchedConvOp::new(op, 8).footprint_bytes()).max().unwrap()
+}
+
 #[derive(Clone, Debug)]
 enum Cmd {
     Submit { template: usize, n: usize, model: Option<usize> },
@@ -76,14 +97,32 @@ struct Case {
     devices: usize,
     hetero: bool,
     queue_bound: usize,
+    /// 0 = uncapped (DRAM-sized pools, fits always), 1 = tight
+    /// (2x the largest job), 2 = roomy (5x) — tight caps force memory
+    /// rejections and evictions, roomy ones force multi-tenancy
+    cap_class: usize,
     cmds: Vec<Cmd>,
 }
 
+fn capacity_for(c: &Case) -> Option<usize> {
+    match c.cap_class {
+        0 => None,
+        1 => Some(2 * max_footprint()),
+        _ => Some(5 * max_footprint()),
+    }
+}
+
 fn gen_case(rng: &mut Rng) -> Case {
-    let policy = *rng.choose(&[Policy::RoundRobin, Policy::LeastLoaded, Policy::ModelAffinity]);
+    let policy = *rng.choose(&[
+        Policy::RoundRobin,
+        Policy::LeastLoaded,
+        Policy::LeastLoadedBytes,
+        Policy::ModelAffinity,
+    ]);
     let devices = rng.range_usize(1, 4);
     let hetero = rng.range_usize(0, 1) == 1;
     let queue_bound = rng.range_usize(1, 4);
+    let cap_class = rng.range_usize(0, 2);
     let n_cmds = rng.range_usize(10, 40);
     let cmds = (0..n_cmds)
         .map(|_| match rng.range_usize(0, 9) {
@@ -100,7 +139,7 @@ fn gen_case(rng: &mut Rng) -> Case {
             _ => Cmd::Drain,
         })
         .collect();
-    Case { policy, devices, hetero, queue_bound, cmds }
+    Case { policy, devices, hetero, queue_bound, cap_class, cmds }
 }
 
 /// Shrink a failing case by truncating the command tail.
@@ -119,31 +158,110 @@ fn specs_for(c: &Case) -> Vec<GpuSpec> {
         .collect()
 }
 
+/// Byte-level mirror of one shard's `DevicePool`.  Job footprints are
+/// already `ARENA_ALIGN`-aligned, so class == bytes here; only counts
+/// per class are tracked (which slab id a class reuses never changes
+/// the byte accounting).
+#[derive(Clone)]
+struct RefPool {
+    cap: usize,
+    /// total carved slab bytes (parked + in use) — must never top `cap`
+    carved: usize,
+    in_use: usize,
+    free: BTreeMap<usize, usize>, // class -> parked slab count
+}
+
+impl RefPool {
+    fn new(cap: usize) -> RefPool {
+        RefPool { cap, carved: 0, in_use: 0, free: BTreeMap::new() }
+    }
+
+    fn can_fit(&self, class: usize) -> bool {
+        self.free.get(&class).copied().unwrap_or(0) > 0 || self.in_use + class <= self.cap
+    }
+
+    fn occupancy_after(&self, class: usize) -> f64 {
+        (self.in_use + class) as f64 / self.cap as f64
+    }
+
+    /// Evict one parked slab, largest class first (mirrors
+    /// `DevicePool::evict_one`).  False when nothing is parked.
+    fn evict_largest(&mut self) -> bool {
+        let Some((&big, _)) = self.free.iter().next_back() else {
+            return false;
+        };
+        let n = self.free.get_mut(&big).unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.free.remove(&big);
+        }
+        self.carved -= big;
+        true
+    }
+
+    /// Mirror of `DevicePool::alloc` for an admission-checked class:
+    /// exact-class reuse, else carve (evicting parked slabs until the
+    /// carve fits — admission guaranteed it will).
+    fn alloc(&mut self, class: usize) {
+        if let Some(n) = self.free.get_mut(&class) {
+            *n -= 1;
+            if *n == 0 {
+                self.free.remove(&class);
+            }
+        } else {
+            while self.carved + class > self.cap && self.evict_largest() {}
+            assert!(self.carved + class <= self.cap, "ref model admitted an unfittable job");
+            self.carved += class;
+        }
+        self.in_use += class;
+    }
+
+    fn release(&mut self, class: usize) {
+        self.in_use -= class;
+        *self.free.entry(class).or_insert(0) += 1;
+    }
+}
+
+/// One resident job in the reference model.
+#[derive(Clone, Copy)]
+struct RefJob {
+    id: u64,
+    finish: f64,
+    /// pool footprint held from placement to completion
+    class: usize,
+    model: Option<usize>,
+}
+
 /// The reference model: an independent replay of the fleet's contract.
 struct RefModel {
     now: f64,
     tails: Vec<f64>,
-    queues: Vec<VecDeque<(u64, f64)>>, // (job id, finish)
+    queues: Vec<VecDeque<RefJob>>,
+    pools: Vec<RefPool>,
     bound: usize,
     rr_cursor: usize,
     pins: HashMap<usize, usize>, // model idx -> device
     accepted: HashSet<u64>,
     completed: HashSet<u64>,
     next_job: u64,
+    mem_rejected: u64,
 }
 
 impl RefModel {
-    fn new(devices: usize, bound: usize) -> RefModel {
+    fn new(caps: Vec<usize>, bound: usize) -> RefModel {
+        let devices = caps.len();
         RefModel {
             now: 0.0,
             tails: vec![0.0; devices],
             queues: vec![VecDeque::new(); devices],
+            pools: caps.into_iter().map(RefPool::new).collect(),
             bound,
             rr_cursor: 0,
             pins: HashMap::new(),
             accepted: HashSet::new(),
             completed: HashSet::new(),
             next_job: 1,
+            mem_rejected: 0,
         }
     }
 
@@ -151,13 +269,18 @@ impl RefModel {
         self.queues[d].len() >= self.bound
     }
 
+    /// Queue slot AND pool room — mirror of `PlacementCandidate::admissible`.
+    fn admissible(&self, d: usize, class: usize) -> bool {
+        !self.full(d) && self.pools[d].can_fit(class)
+    }
+
     fn completion_if_placed(&self, d: usize, service: &[f64]) -> f64 {
         self.tails[d].max(self.now) + service[d]
     }
 
-    fn least_loaded(&self, service: &[f64]) -> Option<usize> {
+    fn least_loaded(&self, service: &[f64], class: usize) -> Option<usize> {
         (0..self.queues.len())
-            .filter(|&d| !self.full(d))
+            .filter(|&d| self.admissible(d, class))
             .min_by(|&a, &b| {
                 self.completion_if_placed(a, service)
                     .partial_cmp(&self.completion_if_placed(b, service))
@@ -166,25 +289,47 @@ impl RefModel {
             })
     }
 
+    /// Completion weighted by pool pressure — mirror of
+    /// `PlacementCandidate::weighted_completion`.
+    fn least_loaded_bytes(&self, service: &[f64], class: usize) -> Option<usize> {
+        (0..self.queues.len())
+            .filter(|&d| self.admissible(d, class))
+            .min_by(|&a, &b| {
+                let wa = self.completion_if_placed(a, service)
+                    * (1.0 + self.pools[a].occupancy_after(class));
+                let wb = self.completion_if_placed(b, service)
+                    * (1.0 + self.pools[b].occupancy_after(class));
+                wa.partial_cmp(&wb).unwrap().then(a.cmp(&b))
+            })
+    }
+
     /// The device the policy must choose, mirroring the scheduler.
     /// Affinity pins are recorded by the caller on ACCEPTED placements
     /// only — a rejected first sight must not pin.
-    fn expected_pick(&mut self, policy: Policy, model: Option<usize>, service: &[f64])
-        -> Option<usize> {
+    fn expected_pick(
+        &mut self,
+        policy: Policy,
+        model: Option<usize>,
+        service: &[f64],
+        class: usize,
+    ) -> Option<usize> {
         match policy {
             Policy::RoundRobin => {
                 let n = self.queues.len();
-                let pick = (0..n).map(|i| (self.rr_cursor + i) % n).find(|&d| !self.full(d));
+                let pick = (0..n)
+                    .map(|i| (self.rr_cursor + i) % n)
+                    .find(|&d| self.admissible(d, class));
                 if let Some(d) = pick {
                     self.rr_cursor = (d + 1) % n;
                 }
                 pick
             }
-            Policy::LeastLoaded => self.least_loaded(service),
+            Policy::LeastLoaded => self.least_loaded(service, class),
+            Policy::LeastLoadedBytes => self.least_loaded_bytes(service, class),
             Policy::ModelAffinity => match model.and_then(|m| self.pins.get(&m).copied()) {
-                None => self.least_loaded(service),
-                Some(pin) if !self.full(pin) => Some(pin),
-                Some(_) => self.least_loaded(service),
+                None => self.least_loaded(service, class),
+                Some(pin) if self.admissible(pin, class) => Some(pin),
+                Some(_) => self.least_loaded(service, class),
             },
         }
     }
@@ -192,7 +337,7 @@ impl RefModel {
     /// Earliest head-of-queue finish (tie -> lowest device).
     fn expected_completion(&self) -> Option<(usize, u64, f64)> {
         (0..self.queues.len())
-            .filter_map(|d| self.queues[d].front().map(|&(id, f)| (d, id, f)))
+            .filter_map(|d| self.queues[d].front().map(|j| (d, j.id, j.finish)))
             .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap().then(a.0.cmp(&b.0)))
     }
 }
@@ -201,11 +346,18 @@ impl RefModel {
 /// checks after every command.
 fn run_case(case: &Case) -> Result<(), String> {
     let specs = specs_for(case);
+    let capacity = capacity_for(case);
     let mut fleet = Fleet::new(
         specs.clone(),
-        FleetConfig { policy: case.policy, queue_bound: case.queue_bound },
+        FleetConfig {
+            policy: case.policy,
+            queue_bound: case.queue_bound,
+            capacity_bytes: capacity,
+        },
     );
-    let mut model = RefModel::new(case.devices, case.queue_bound);
+    let caps: Vec<usize> =
+        specs.iter().map(|s| capacity.unwrap_or(s.dram_bytes as usize)).collect();
+    let mut model = RefModel::new(caps, case.queue_bound);
     let temps = op_templates();
 
     let check_completion = |fleet: &mut Fleet, model: &mut RefModel| -> Result<(), String> {
@@ -226,7 +378,8 @@ fn run_case(case: &Case) -> Result<(), String> {
                 if !model.accepted.contains(&id) {
                     return Err(format!("job {id} completed but never accepted"));
                 }
-                model.queues[d].pop_front();
+                let j = model.queues[d].pop_front().expect("head exists");
+                model.pools[d].release(j.class);
                 model.now = model.now.max(f);
                 Ok(())
             }
@@ -239,15 +392,21 @@ fn run_case(case: &Case) -> Result<(), String> {
         match *cmd {
             Cmd::Submit { template, n, model: m } => {
                 let conv = BatchedConvOp::new(temps[template], n);
+                let class = conv.footprint_bytes();
                 let service: Vec<f64> =
                     (0..case.devices).map(|d| fleet.predicted_service(&conv, d)).collect();
                 let tag = m.map(|i| MODELS[i]);
-                let expect = model.expected_pick(case.policy, m, &service);
+                let expect = model.expected_pick(case.policy, m, &service, class);
                 let got = fleet.submit(conv, tag);
                 match (expect, got) {
                     (None, None) => {
-                        if !(0..case.devices).all(|d| model.full(d)) {
-                            return Err(format!("step {step}: rejected with free capacity"));
+                        if (0..case.devices).any(|d| model.admissible(d, class)) {
+                            return Err(format!("step {step}: rejected with an admissible shard"));
+                        }
+                        if (0..case.devices).any(|d| !model.full(d)) {
+                            // a queue slot existed: this rejection was
+                            // memory's fault and must be counted as such
+                            model.mem_rejected += 1;
                         }
                     }
                     (Some(d), Some(p)) => {
@@ -257,12 +416,12 @@ fn run_case(case: &Case) -> Result<(), String> {
                                 p.device, case.policy
                             ));
                         }
-                        // least-loaded minimality: no non-full shard was
-                        // strictly better than the chosen one
+                        // least-loaded minimality: no admissible shard
+                        // was strictly better than the chosen one
                         if case.policy == Policy::LeastLoaded {
                             let chosen = model.completion_if_placed(d, &service);
                             for e in 0..case.devices {
-                                if !model.full(e)
+                                if model.admissible(e, class)
                                     && model.completion_if_placed(e, &service) < chosen - 1e-12
                                 {
                                     return Err(format!(
@@ -291,7 +450,25 @@ fn run_case(case: &Case) -> Result<(), String> {
                         model.next_job += 1;
                         model.accepted.insert(p.job);
                         model.tails[d] = finish;
-                        model.queues[d].push_back((p.job, finish));
+                        model.pools[d].alloc(class);
+                        model.queues[d].push_back(RefJob { id: p.job, finish, class, model: m });
+                        // the acceptance criterion this PR pins: with two
+                        // or more DIFFERENT models resident on one shard,
+                        // the shard's pool still respects its byte cap
+                        let tags: HashSet<usize> =
+                            model.queues[d].iter().filter_map(|j| j.model).collect();
+                        if tags.len() >= 2 {
+                            let pool = fleet.devices()[d].pool();
+                            if pool.in_use_slab_bytes() > pool.capacity() {
+                                return Err(format!(
+                                    "step {step}: {} models resident on shard {d} and its pool \
+                                     burst the cap ({} > {})",
+                                    tags.len(),
+                                    pool.in_use_slab_bytes(),
+                                    pool.capacity()
+                                ));
+                            }
+                        }
                     }
                     (e, g) => {
                         return Err(format!(
@@ -334,6 +511,35 @@ fn run_case(case: &Case) -> Result<(), String> {
                     model.queues[d].len()
                 ));
             }
+            let pool = dev.pool();
+            if pool.slab_bytes() > pool.capacity() {
+                return Err(format!(
+                    "step {step}: device {d} pool carved past its cap ({} > {})",
+                    pool.slab_bytes(),
+                    pool.capacity()
+                ));
+            }
+            if pool.in_use_slab_bytes() != model.pools[d].in_use {
+                return Err(format!(
+                    "step {step}: device {d} pool in-use {} vs model {}",
+                    pool.in_use_slab_bytes(),
+                    model.pools[d].in_use
+                ));
+            }
+            if pool.slab_bytes() != model.pools[d].carved {
+                return Err(format!(
+                    "step {step}: device {d} pool carved {} vs model {}",
+                    pool.slab_bytes(),
+                    model.pools[d].carved
+                ));
+            }
+            if pool.live_allocs() != model.queues[d].len() {
+                return Err(format!(
+                    "step {step}: device {d} holds {} pool allocations for {} resident jobs",
+                    pool.live_allocs(),
+                    model.queues[d].len()
+                ));
+            }
         }
     }
 
@@ -351,12 +557,26 @@ fn run_case(case: &Case) -> Result<(), String> {
             model.completed.len()
         ));
     }
+    for (d, dev) in fleet.devices().iter().enumerate() {
+        if dev.pool().in_use_slab_bytes() != 0 {
+            return Err(format!("device {d} pool still holds bytes after the drain"));
+        }
+    }
     let st = fleet.stats;
     if st.accepted != model.accepted.len() as u64 || st.completed != model.completed.len() as u64 {
         return Err(format!("stats disagree: {st:?}"));
     }
     if st.accepted + st.rejected != st.submitted {
         return Err(format!("admission accounting broken: {st:?}"));
+    }
+    if st.mem_rejected != model.mem_rejected {
+        return Err(format!(
+            "memory rejections {} vs model {}",
+            st.mem_rejected, model.mem_rejected
+        ));
+    }
+    if st.mem_rejected > st.rejected {
+        return Err(format!("mem_rejected outnumbers rejected: {st:?}"));
     }
     Ok(())
 }
@@ -456,7 +676,7 @@ fn fleet_makespan_at_least_batch_over_devices_scaled_cost() {
         let mut fleet = Fleet::homogeneous(
             d,
             &g,
-            FleetConfig { policy: Policy::LeastLoaded, queue_bound: 64 },
+            FleetConfig { policy: Policy::LeastLoaded, queue_bound: 64, capacity_bytes: None },
         );
         let single = fleet.predicted_service(&BatchedConvOp::single(p), 0);
         let n = 24;
@@ -485,7 +705,7 @@ fn batched_jobs_beat_singles_end_to_end() {
     // the admission path's reason to coalesce
     let g = gtx_1080ti();
     let p = op_templates()[0];
-    let cfg = FleetConfig { policy: Policy::LeastLoaded, queue_bound: 64 };
+    let cfg = FleetConfig { policy: Policy::LeastLoaded, queue_bound: 64, capacity_bytes: None };
     let n = 8;
     let mut singles = Fleet::homogeneous(2, &g, cfg);
     for _ in 0..n {
@@ -500,4 +720,392 @@ fn batched_jobs_beat_singles_end_to_end() {
         t_batched < t_singles,
         "batched {t_batched} not faster than singles {t_singles}"
     );
+}
+
+// ---- stateful pool-transition harness ----
+//
+// Drives a `DevicePool` directly (the fleet harness above only sees it
+// through admission) with random alloc / free / double-free /
+// execute-under-cap / trim sequences, replaying every transition on an
+// independent reference allocator that tracks classes as counted
+// multisets.  "No overlap" is exclusive slab ownership: one live
+// allocation per slab, so the byte accounting (carved = parked +
+// in-use, in-use = sum of live classes) must reconcile exactly.
+
+/// Independent size-class arithmetic (must agree with `size_class`).
+fn class_of(bytes: usize) -> usize {
+    (bytes.max(1) + ARENA_ALIGN - 1) / ARENA_ALIGN * ARENA_ALIGN
+}
+
+/// Small graphs for execute-under-cap: tensors are 6.25 KiB classes, so
+/// pools in the tens of KiB hit the success, eviction AND
+/// exhaustion-rollback paths.
+fn pool_graph(which: usize) -> Graph {
+    let p = ConvProblem::multi(8, 14, 8, 3);
+    let mut b = GraphBuilder::new(if which % 2 == 0 { "chain" } else { "diamond" });
+    let x = b.input("in", Shape::new(8, 14, 14));
+    if which % 2 == 0 {
+        let mut t = x;
+        for i in 0..4 {
+            t = b.conv_same(&format!("c{i}"), t, p).unwrap();
+        }
+    } else {
+        let l = b.conv_same("l", x, p).unwrap();
+        let r = b.conv_same("r", x, p).unwrap();
+        b.add_skip("join", l, r).unwrap();
+    }
+    b.finish().unwrap()
+}
+
+/// The reference allocator: counted class multisets + full stat mirror.
+struct RefAlloc {
+    cap: usize,
+    carved: usize,
+    in_use_class: usize,
+    in_use_req: usize,
+    free: BTreeMap<usize, usize>, // class -> parked count
+    live: HashMap<u64, (usize, usize)>, // real alloc id -> (class, requested)
+    allocs: u64,
+    frees: u64,
+    reuse: u64,
+    evictions: u64,
+    failed: u64,
+    peak_class: usize,
+    peak_req: usize,
+}
+
+impl RefAlloc {
+    fn new(cap: usize) -> RefAlloc {
+        RefAlloc {
+            cap,
+            carved: 0,
+            in_use_class: 0,
+            in_use_req: 0,
+            free: BTreeMap::new(),
+            live: HashMap::new(),
+            allocs: 0,
+            frees: 0,
+            reuse: 0,
+            evictions: 0,
+            failed: 0,
+            peak_class: 0,
+            peak_req: 0,
+        }
+    }
+
+    fn can_fit(&self, bytes: usize) -> bool {
+        let class = class_of(bytes);
+        self.free.get(&class).copied().unwrap_or(0) > 0 || self.in_use_class + class <= self.cap
+    }
+
+    fn evict_largest(&mut self) -> bool {
+        let Some((&big, _)) = self.free.iter().next_back() else {
+            return false;
+        };
+        let n = self.free.get_mut(&big).unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.free.remove(&big);
+        }
+        self.carved -= big;
+        self.evictions += 1;
+        true
+    }
+
+    /// The transition `DevicePool::alloc` must make — including the
+    /// side effects of a FAILED attempt (parked slabs evicted trying to
+    /// make room, failed counter bumped).  True on success.
+    fn try_alloc(&mut self, bytes: usize) -> bool {
+        let class = class_of(bytes);
+        if let Some(n) = self.free.get_mut(&class) {
+            *n -= 1;
+            if *n == 0 {
+                self.free.remove(&class);
+            }
+            self.reuse += 1;
+        } else {
+            while self.carved + class > self.cap && self.evict_largest() {}
+            if self.carved + class > self.cap {
+                self.failed += 1;
+                return false;
+            }
+            self.carved += class;
+        }
+        self.in_use_class += class;
+        self.in_use_req += bytes;
+        self.allocs += 1;
+        self.peak_class = self.peak_class.max(self.in_use_class);
+        self.peak_req = self.peak_req.max(self.in_use_req);
+        true
+    }
+
+    fn free_anon(&mut self, class: usize, req: usize) {
+        self.in_use_class -= class;
+        self.in_use_req -= req;
+        *self.free.entry(class).or_insert(0) += 1;
+        self.frees += 1;
+    }
+
+    fn free_id(&mut self, id: u64) -> Result<(), String> {
+        let (class, req) = self.live.remove(&id).ok_or(format!("ref lost alloc {id}"))?;
+        self.free_anon(class, req);
+        Ok(())
+    }
+
+    fn trim(&mut self) -> usize {
+        let before = self.carved;
+        while self.evict_largest() {}
+        before - self.carved
+    }
+
+    /// Replay `plan_pooled`'s alloc/free trace: alloc at def step, free
+    /// right after last use.  Some(peak live bytes) on success; None
+    /// when the pool must exhaust (own allocations rolled back, any
+    /// evictions along the way kept — they were parked).
+    fn replay_execution(&mut self, lives: &[TensorLife], batch: usize) -> Option<usize> {
+        let mut held: HashMap<usize, (usize, usize)> = HashMap::new();
+        let (mut live_now, mut peak) = (0usize, 0usize);
+        for step in 0..lives.len() {
+            let bytes = lives[step].bytes * batch;
+            if !self.try_alloc(bytes) {
+                for (_, (class, req)) in held.drain() {
+                    self.free_anon(class, req);
+                }
+                return None;
+            }
+            held.insert(step, (class_of(bytes), bytes));
+            live_now += bytes;
+            peak = peak.max(live_now);
+            for (j, l) in lives.iter().enumerate().take(step + 1) {
+                if l.last_use_step == step {
+                    if let Some((class, req)) = held.remove(&j) {
+                        self.free_anon(class, req);
+                        live_now -= l.bytes * batch;
+                    }
+                }
+            }
+        }
+        assert!(held.is_empty(), "ref replay leaked a tensor");
+        Some(peak)
+    }
+
+    /// Reconcile every observable of the real pool with the reference.
+    fn check(&self, pool: &DevicePool) -> Result<(), String> {
+        if pool.slab_bytes() > pool.capacity() {
+            return Err(format!(
+                "cap exceeded: carved {} of {}",
+                pool.slab_bytes(),
+                pool.capacity()
+            ));
+        }
+        let pairs = [
+            ("carved", pool.slab_bytes(), self.carved),
+            ("in-use", pool.in_use_slab_bytes(), self.in_use_class),
+            ("requested", pool.in_use_requested_bytes(), self.in_use_req),
+            ("parked", pool.free_slab_bytes(), self.carved - self.in_use_class),
+            ("live", pool.live_allocs(), self.live.len()),
+            ("frag", pool.fragmentation_bytes(), self.in_use_class - self.in_use_req),
+        ];
+        for (what, got, want) in pairs {
+            if got != want {
+                return Err(format!("{what}: pool {got} vs ref {want}"));
+            }
+        }
+        if pool.fragmentation_bytes() > self.live.len() * (ARENA_ALIGN - 1) {
+            return Err(format!(
+                "fragmentation {} above the size-class bound for {} live allocs",
+                pool.fragmentation_bytes(),
+                self.live.len()
+            ));
+        }
+        let st = [
+            ("allocs", pool.stats.allocs, self.allocs),
+            ("frees", pool.stats.frees, self.frees),
+            ("reuse", pool.stats.reuse_hits, self.reuse),
+            ("evictions", pool.stats.evictions, self.evictions),
+            ("failed", pool.stats.failed_allocs, self.failed),
+            ("peak", pool.stats.peak_in_use_slab as u64, self.peak_class as u64),
+            ("peak-req", pool.stats.peak_in_use_requested as u64, self.peak_req as u64),
+        ];
+        for (what, got, want) in st {
+            if got != want {
+                return Err(format!("stat {what}: pool {got} vs ref {want}"));
+            }
+        }
+        for probe in [1usize, 200, 6_272, 12_544, 25_088, 64 * 1024] {
+            if pool.can_fit(probe) != self.can_fit(probe) {
+                return Err(format!("can_fit({probe}) disagrees"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[derive(Clone, Debug)]
+enum PoolCmd {
+    Alloc { bytes: usize },
+    FreeLive { idx: usize },
+    /// free an id that never existed — must error, pool untouched
+    FreeForeign,
+    /// free the most recently freed id again — exactly-once semantics
+    FreeAgain,
+    Execute { which: usize, batch: usize },
+    Trim,
+}
+
+#[derive(Clone, Debug)]
+struct PoolCase {
+    capacity: usize,
+    cmds: Vec<PoolCmd>,
+}
+
+fn gen_pool_case(rng: &mut Rng) -> PoolCase {
+    // 8..48 KiB around 6.25-12.8 KiB tensor classes: plenty of cases on
+    // both sides of fitting
+    let capacity = rng.range_usize(8, 48) * 1024;
+    let n_cmds = rng.range_usize(15, 50);
+    let cmds = (0..n_cmds)
+        .map(|_| match rng.range_usize(0, 11) {
+            0..=3 => PoolCmd::Alloc { bytes: rng.range_usize(1, 20) * 800 },
+            4..=6 => PoolCmd::FreeLive { idx: rng.range_usize(0, 7) },
+            7 | 8 => PoolCmd::Execute {
+                which: rng.range_usize(0, 1),
+                batch: rng.range_usize(1, 2),
+            },
+            9 => PoolCmd::FreeForeign,
+            10 => PoolCmd::FreeAgain,
+            _ => PoolCmd::Trim,
+        })
+        .collect();
+    PoolCase { capacity, cmds }
+}
+
+fn shrink_pool_case(c: &PoolCase) -> Vec<PoolCase> {
+    let mut out = vec![];
+    if c.cmds.len() > 1 {
+        out.push(PoolCase { cmds: c.cmds[..c.cmds.len() / 2].to_vec(), ..c.clone() });
+        out.push(PoolCase { cmds: c.cmds[..c.cmds.len() - 1].to_vec(), ..c.clone() });
+    }
+    out
+}
+
+fn run_pool_case(case: &PoolCase) -> Result<(), String> {
+    let mut pool = DevicePool::new(case.capacity);
+    let mut r = RefAlloc::new(case.capacity);
+    let mut live_ids: Vec<u64> = vec![];
+    let mut last_freed: Option<u64> = None;
+    let graphs = [pool_graph(0), pool_graph(1)];
+    for (step, cmd) in case.cmds.iter().enumerate() {
+        match *cmd {
+            PoolCmd::Alloc { bytes } => {
+                if class_of(bytes) != size_class(bytes) {
+                    return Err(format!("step {step}: size_class({bytes}) disagrees"));
+                }
+                let fit = r.can_fit(bytes);
+                if pool.can_fit(bytes) != fit {
+                    return Err(format!("step {step}: can_fit({bytes}) disagrees pre-alloc"));
+                }
+                match pool.alloc(bytes) {
+                    Ok(id) => {
+                        if !r.try_alloc(bytes) {
+                            return Err(format!(
+                                "step {step}: pool admitted {bytes} B the ref calls exhausted"
+                            ));
+                        }
+                        if !fit {
+                            return Err(format!("step {step}: can_fit said no, alloc said yes"));
+                        }
+                        r.live.insert(id, (class_of(bytes), bytes));
+                        live_ids.push(id);
+                    }
+                    Err(PoolError::Exhausted { .. }) => {
+                        if fit {
+                            return Err(format!("step {step}: can_fit said yes, alloc said no"));
+                        }
+                        if r.try_alloc(bytes) {
+                            return Err(format!(
+                                "step {step}: pool failed {bytes} B the ref would serve"
+                            ));
+                        }
+                    }
+                    Err(e) => return Err(format!("step {step}: unexpected error {e}")),
+                }
+            }
+            PoolCmd::FreeLive { idx } => {
+                if !live_ids.is_empty() {
+                    let id = live_ids.remove(idx % live_ids.len());
+                    pool.free(id).map_err(|e| format!("step {step}: live free failed: {e}"))?;
+                    r.free_id(id).map_err(|e| format!("step {step}: {e}"))?;
+                    last_freed = Some(id);
+                }
+            }
+            PoolCmd::FreeForeign => match pool.free(u64::MAX) {
+                Err(PoolError::UnknownAlloc(_)) => {}
+                other => {
+                    return Err(format!("step {step}: foreign free returned {other:?}"))
+                }
+            },
+            PoolCmd::FreeAgain => {
+                if let Some(id) = last_freed {
+                    match pool.free(id) {
+                        Err(PoolError::UnknownAlloc(got)) if got == id => {}
+                        other => {
+                            return Err(format!("step {step}: double free returned {other:?}"))
+                        }
+                    }
+                }
+            }
+            PoolCmd::Execute { which, batch } => {
+                let g = &graphs[which % 2];
+                let order = topo_order(g);
+                let expect = r.replay_execution(&liveness(g, &order), batch);
+                match (plan_pooled(g, &order, batch, &mut pool), expect) {
+                    (Ok(plan), Some(peak)) => {
+                        if plan.peak_bytes != peak {
+                            return Err(format!(
+                                "step {step}: execution peak {} vs ref {peak}",
+                                plan.peak_bytes
+                            ));
+                        }
+                        if plan.allocs != g.len() as u64 {
+                            return Err(format!("step {step}: {} allocs for {} nodes",
+                                plan.allocs, g.len()));
+                        }
+                    }
+                    (Err(PoolError::Exhausted { .. }), None) => {}
+                    (got, want) => {
+                        return Err(format!(
+                            "step {step}: execution disagreement: pool {:?}, ref fits={}",
+                            got.map(|p| p.peak_bytes),
+                            want.is_some()
+                        ))
+                    }
+                }
+            }
+            PoolCmd::Trim => {
+                let freed = pool.evict_free();
+                let want = r.trim();
+                if freed != want {
+                    return Err(format!("step {step}: trim reclaimed {freed} vs ref {want}"));
+                }
+            }
+        }
+        r.check(&pool).map_err(|e| format!("step {step}: {e}"))?;
+    }
+    // epilogue: free every live allocation, then the pool must reconcile
+    // to an all-parked state with zero fragmentation
+    for id in live_ids.drain(..) {
+        pool.free(id).map_err(|e| format!("epilogue free: {e}"))?;
+        r.free_id(id)?;
+    }
+    r.check(&pool)?;
+    if pool.in_use_slab_bytes() != 0 || pool.fragmentation_bytes() != 0 {
+        return Err("pool not empty after freeing everything".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn stateful_pool_matches_reference_allocator() {
+    check(&cfg(64), gen_pool_case, |c| run_pool_case(c), shrink_pool_case);
 }

@@ -1,6 +1,10 @@
 //! Integration: the full L3 serve path — submit -> queue -> dynamic
 //! batcher -> executor (PJRT) -> response — against real artifacts.
 //! Skips when `make artifacts` hasn't run.
+//!
+//! The multi-tenant pool tests at the bottom run unconditionally: they
+//! drive the fleet admission path and the graph executor against capped
+//! `DevicePool`s directly (pure simulation, no artifacts needed).
 
 use std::sync::mpsc::Receiver;
 use std::time::Duration;
@@ -199,6 +203,20 @@ fn model_request_serves_graph_report() {
     assert!(m.conv_layers >= 10, "conv layers {}", m.conv_layers);
     assert!(m.model_latency_secs > 0.0);
     assert!(m.arena_peak_bytes < m.naive_bytes, "no memory planned");
+    // served through the executor's shared device pool: per-tensor
+    // granularity never does worse than the whole-arena reservation
+    assert!(m.pooled_peak_bytes > 0, "model did not run pooled");
+    assert!(
+        m.pooled_peak_bytes <= m.arena_peak_bytes,
+        "pooled peak {} above arena peak {}",
+        m.pooled_peak_bytes,
+        m.arena_peak_bytes
+    );
+    let met = c.metrics();
+    assert!(met.pooled_models >= 1, "pool gauges never sampled");
+    assert!(met.pool_capacity_bytes > 0);
+    assert!(met.pool_peak_bytes as usize >= m.pooled_peak_bytes);
+    assert_eq!(met.pool_in_use_bytes, 0, "model execution left bytes resident");
     // output tensor is the per-node latency breakdown
     assert_eq!(resp.output.shape, vec![m.nodes]);
     let sum: f32 = resp.output.data.iter().sum();
@@ -412,4 +430,82 @@ fn mixed_conv_and_cnn_traffic() {
     assert!(kinds.iter().any(|k| k.starts_with("multi_")));
     assert!(kinds.iter().any(|k| k.starts_with("papernet")));
     c.shutdown();
+}
+
+// ---- multi-tenant pool behavior (artifact-independent) ----
+
+#[test]
+fn two_models_stay_resident_on_one_capped_shard() {
+    use pasconv::fleet::{Fleet, FleetConfig, Policy};
+
+    let conv = || BatchedConvOp::new(ConvOp::dense(ConvProblem::multi(8, 14, 16, 3)), 4);
+    let bytes = conv().footprint_bytes();
+    // room for exactly two resident jobs on the single shard
+    let mut fleet = Fleet::homogeneous(
+        1,
+        &pasconv::gpusim::gtx_1080ti(),
+        FleetConfig {
+            policy: Policy::LeastLoaded,
+            queue_bound: 8,
+            capacity_bytes: Some(2 * bytes),
+        },
+    );
+    let a = fleet.submit(conv(), Some("alexnet")).expect("first model admitted");
+    let b = fleet.submit(conv(), Some("vgg16")).expect("second model admitted");
+    assert_eq!((a.device, b.device), (0, 0), "both resident on the one shard");
+    let pool = fleet.devices()[0].pool();
+    assert_eq!(pool.in_use_slab_bytes(), 2 * bytes, "both footprints held");
+    assert!(pool.in_use_slab_bytes() <= pool.capacity(), "cap respected with 2 tenants");
+
+    // a third tenant does not fit: rejected immediately — never queued
+    // against memory, never deadlocked
+    assert!(fleet.submit(conv(), Some("resnet18")).is_none());
+    assert_eq!(fleet.stats.rejected, 1);
+    assert_eq!(fleet.stats.mem_rejected, 1, "rejection attributed to memory, not queues");
+
+    // one completion releases its reservation; the shard admits again,
+    // reusing the parked slab rather than carving
+    fleet.next_completion().expect("head job completes");
+    assert_eq!(fleet.devices()[0].pool().in_use_slab_bytes(), bytes);
+    assert!(fleet.submit(conv(), Some("resnet18")).is_some(), "freed capacity readmits");
+    assert!(fleet.devices()[0].pool().stats.reuse_hits >= 1, "slab reuse after release");
+    fleet.drain();
+    assert_eq!(fleet.devices()[0].pool().in_use_slab_bytes(), 0, "drain releases everything");
+}
+
+#[test]
+fn model_execution_shares_a_pool_with_a_resident_tenant_under_cap() {
+    use pasconv::backend::dispatch_op_plan;
+    use pasconv::fleet::DevicePool;
+    use pasconv::graph::{execute_pooled, model_graph, plan_arena, topo_order};
+
+    let spec = pasconv::gpusim::gtx_1080ti();
+    let g = model_graph("alexnet").unwrap();
+    let floor = plan_arena(&g, &topo_order(&g)).live_peak_bytes();
+    let resident_bytes = 8 * 1024 * 1024;
+    // cap sized for the model's floor plus one co-resident tenant
+    let mut pool = DevicePool::new(floor + resident_bytes);
+    let resident = pool.alloc(resident_bytes).expect("tenant takes up residence");
+
+    // the model executes to completion around the resident tenant and
+    // the two together never burst the cap
+    let (report, plan) = execute_pooled(&g, &spec, dispatch_op_plan, 1, &mut pool)
+        .expect("model must fit beside the tenant");
+    assert!(report.total_seconds > 0.0);
+    assert!(plan.peak_bytes + resident_bytes <= pool.capacity());
+    assert!(pool.stats.peak_in_use_slab <= pool.capacity(), "cap held at the high-water mark");
+    assert_eq!(pool.in_use_slab_bytes(), resident_bytes, "only the tenant remains");
+
+    // an execution that cannot fit beside the tenant errors out cleanly
+    // (its partial allocations rolled back) instead of deadlocking
+    let too_big = pool.capacity() / plan.peak_bytes + 2;
+    let err = execute_pooled(&g, &spec, dispatch_op_plan, too_big, &mut pool)
+        .expect_err("oversized batch must exhaust the pool");
+    assert!(err.to_string().contains("exhausted"), "{err}");
+    assert_eq!(pool.in_use_slab_bytes(), resident_bytes, "failed run rolled back");
+
+    // and the original workload still runs afterwards — no poisoning
+    execute_pooled(&g, &spec, dispatch_op_plan, 1, &mut pool).expect("pool still serves");
+    pool.free(resident).unwrap();
+    assert_eq!(pool.in_use_slab_bytes(), 0);
 }

@@ -1,0 +1,142 @@
+//! Differential tests: pooled execution vs the PR-2 arena planner and
+//! the unpooled executor, across every registered model.
+//!
+//! The contract this file pins:
+//!  * memory — the pooled peak (per-tensor alloc-at-def / free-at-last-
+//!    use against a shared `DevicePool`) never exceeds the arena plan's
+//!    peak, and exactly equals the liveness floor (a pure chain of
+//!    exclusive slabs cannot fragment across tensors of one execution);
+//!  * time — pooling is a memory-management change ONLY: every node's
+//!    simulated seconds and the end-to-end total are bit-identical
+//!    (f64::to_bits) to the unpooled `execute_batched` run, warm or
+//!    cold pool, any batch;
+//!  * isolation — five models sharing one pool sized for the worst
+//!    single arena all run, the pool drains to zero, and exhaustion on
+//!    an undersized pool is a clean error that poisons nothing.
+
+use pasconv::backend::dispatch_op_plan;
+use pasconv::fleet::{DevicePool, PoolError};
+use pasconv::gpusim::gtx_1080ti;
+use pasconv::graph::{
+    execute_batched, execute_pooled, model_graph, plan_arena, topo_order, MODEL_NAMES,
+};
+
+#[test]
+fn pooled_peak_never_exceeds_arena_peak_on_any_model() {
+    let spec = gtx_1080ti();
+    for name in MODEL_NAMES {
+        let g = model_graph(name).unwrap();
+        let arena = plan_arena(&g, &topo_order(&g));
+        let mut pool = DevicePool::new(spec.dram_bytes as usize);
+        let (_, plan) = execute_pooled(&g, &spec, dispatch_op_plan, 1, &mut pool).unwrap();
+        assert!(
+            plan.peak_bytes <= arena.peak_bytes,
+            "{name}: pooled peak {} above arena peak {}",
+            plan.peak_bytes,
+            arena.peak_bytes
+        );
+        // per-tensor granularity sits exactly on the liveness floor —
+        // the arena's fragmentation gap is what pooling reclaims
+        assert_eq!(plan.peak_bytes, arena.live_peak_bytes(), "{name}: not on the floor");
+        assert_eq!(plan.naive_bytes, arena.naive_bytes, "{name}");
+        assert_eq!(pool.live_allocs(), 0, "{name}: execution leaked allocations");
+        assert_eq!(pool.in_use_slab_bytes(), 0, "{name}");
+    }
+}
+
+#[test]
+fn pooled_timings_bit_identical_on_any_model_and_batch() {
+    let spec = gtx_1080ti();
+    for name in MODEL_NAMES {
+        let g = model_graph(name).unwrap();
+        for batch in [1usize, 4] {
+            let plain = execute_batched(&g, &spec, dispatch_op_plan, batch);
+            let mut pool = DevicePool::new(spec.dram_bytes as usize);
+            let (pooled, _) =
+                execute_pooled(&g, &spec, dispatch_op_plan, batch, &mut pool).unwrap();
+            assert_eq!(
+                pooled.total_seconds.to_bits(),
+                plain.total_seconds.to_bits(),
+                "{name} b{batch}: total drifted"
+            );
+            assert_eq!(pooled.nodes.len(), plain.nodes.len(), "{name} b{batch}");
+            for (a, b) in pooled.nodes.iter().zip(&plain.nodes) {
+                assert_eq!(a.id, b.id, "{name} b{batch}: schedule changed");
+                assert_eq!(
+                    a.seconds.to_bits(),
+                    b.seconds.to_bits(),
+                    "{name} b{batch}: node {} drifted",
+                    a.name
+                );
+            }
+            assert_eq!(
+                pooled.conv_seconds.to_bits(),
+                plain.conv_seconds.to_bits(),
+                "{name} b{batch}"
+            );
+        }
+    }
+}
+
+#[test]
+fn warm_pool_reexecution_is_all_reuse_and_still_bit_identical() {
+    let spec = gtx_1080ti();
+    let g = model_graph("resnet18").unwrap();
+    let mut pool = DevicePool::new(spec.dram_bytes as usize);
+    let (cold_report, cold) = execute_pooled(&g, &spec, dispatch_op_plan, 1, &mut pool).unwrap();
+    let (warm_report, warm) = execute_pooled(&g, &spec, dispatch_op_plan, 1, &mut pool).unwrap();
+    assert_eq!(warm.peak_bytes, cold.peak_bytes);
+    assert_eq!(warm.allocs, cold.allocs);
+    // every tensor shape was parked by run one: run two carves nothing
+    assert_eq!(warm.reuse_hits, warm.allocs, "warm pool should serve entirely from reuse");
+    assert_eq!(warm_report.total_seconds.to_bits(), cold_report.total_seconds.to_bits());
+    assert_eq!(pool.stats.frees, pool.stats.allocs, "both executions fully released");
+}
+
+#[test]
+fn five_models_share_one_pool_sized_for_the_worst_arena() {
+    let spec = gtx_1080ti();
+    // the cap a single-arena deployment would have provisioned anyway
+    let worst_arena = MODEL_NAMES
+        .iter()
+        .map(|name| {
+            let g = model_graph(name).unwrap();
+            plan_arena(&g, &topo_order(&g)).peak_bytes
+        })
+        .max()
+        .unwrap();
+    let mut pool = DevicePool::new(worst_arena);
+    for name in MODEL_NAMES {
+        let g = model_graph(name).unwrap();
+        let (_, plan) = execute_pooled(&g, &spec, dispatch_op_plan, 1, &mut pool)
+            .unwrap_or_else(|e| panic!("{name} must fit a worst-arena pool: {e}"));
+        assert!(plan.peak_bytes <= worst_arena, "{name}");
+        assert!(pool.slab_bytes() <= pool.capacity(), "{name}: cap burst");
+        assert_eq!(pool.in_use_slab_bytes(), 0, "{name}: residue left behind");
+    }
+    // parked slabs are reclaimable in full
+    let parked = pool.slab_bytes();
+    let reclaimed = pool.evict_free();
+    assert_eq!(reclaimed, parked, "trim must reclaim every parked byte");
+    assert_eq!(pool.slab_bytes(), 0, "trim must empty an idle pool");
+}
+
+#[test]
+fn exhaustion_is_a_clean_error_not_a_poisoned_pool() {
+    let spec = gtx_1080ti();
+    let vgg = model_graph("vgg16").unwrap();
+    let mut pool = DevicePool::new(1 << 20); // 1 MiB: far below vgg16's floor
+    match execute_pooled(&vgg, &spec, dispatch_op_plan, 1, &mut pool) {
+        Err(PoolError::Exhausted { capacity, .. }) => assert_eq!(capacity, 1 << 20),
+        other => panic!("undersized pool must exhaust, got {other:?}"),
+    }
+    assert_eq!(pool.live_allocs(), 0, "failed execution rolled back");
+    assert_eq!(pool.in_use_slab_bytes(), 0);
+    // the same pool still serves work that fits — no deadlock, no poison
+    let mut b = pasconv::graph::GraphBuilder::new("tiny");
+    let x = b.input("in", pasconv::graph::Shape::new(8, 14, 14));
+    b.conv_same("c0", x, pasconv::conv::ConvProblem::multi(8, 14, 8, 3)).unwrap();
+    let tiny = b.finish().unwrap();
+    let (_, plan) = execute_pooled(&tiny, &spec, dispatch_op_plan, 1, &mut pool).unwrap();
+    assert!(plan.peak_bytes <= pool.capacity());
+}
