@@ -1,0 +1,186 @@
+"""Mirror of rust/src/trace: the roofline report (report.rs — §12 rows
+for the Fig.4/Fig.5 suites and the five models) and the span-tree
+validator (span.rs::validate at the Chrome-trace JSON level), so CI can
+gate both the pinned numbers and any exported trace file without a rust
+toolchain."""
+
+import json
+
+import backends
+import graph as graphmod
+import ops as opsmod
+import suites
+from gpusim import ExecConfig, simulate_pipeline_runs
+
+EPS = 1e-9  # span.rs::EPS
+WRITEBACK_TAIL_FRACTION = 0.15
+
+
+# ---- roofline counters (mirror of trace/roofline.rs, headline set) ----
+
+def dram_load_bytes(plan):
+    """Mirror of KernelPlan::dram_load_bytes on the run-length form."""
+    return sum(r.load_bytes * n for (r, n) in plan.runs) * plan.sms_active
+
+
+def simulate_result(spec, plan):
+    """Mirror of gpusim::simulate_detailed's headline fields: the
+    bottleneck rule reads the PRE-writeback pipeline total, exactly as
+    PipelineResult::bottleneck does."""
+    assert plan.smem_bytes_per_sm <= spec.shared_mem_bytes, plan.name
+    cfg = ExecConfig(plan.sms_active, plan.threads_per_sm,
+                     plan.compute_efficiency, plan.launch_overhead_cycles)
+    pipe_total, stall = simulate_pipeline_runs(spec, cfg, plan.runs)
+    wb = WRITEBACK_TAIL_FRACTION * plan.output_bytes / spec.bytes_per_cycle()
+    cycles = pipe_total + wb
+    seconds = spec.cycles_to_secs(cycles)
+    flops = 2.0 * plan.total_fma
+    loads = dram_load_bytes(plan)
+    return {
+        "cycles": cycles,
+        "seconds": seconds,
+        "gflops": flops / seconds / 1e9,
+        "efficiency": flops / seconds / spec.peak_flops(),
+        "dram_load_bytes": loads,
+        "fma_per_byte": plan.total_fma / max(loads, 1.0),
+        "bw_gb_s": (loads + plan.output_bytes) / seconds / 1e9,
+        "bottleneck": "memory" if stall > 0.05 * pipe_total else "compute",
+    }
+
+
+# ---- §12 report rows (mirror of trace/report.rs) ----
+
+def problem_row(p, spec):
+    name = backends.decide(p, spec)[0]
+    plan = backends.backend_plan(name, p, spec)
+    r = simulate_result(spec, plan)
+    return {
+        "label": p.label(),
+        "backend": name,
+        "fma_per_byte": r["fma_per_byte"],
+        "gflops": r["gflops"],
+        "flops_pct": 100.0 * r["efficiency"],
+        "bw_pct": 100.0 * r["bw_gb_s"] / spec.bandwidth_gb_s,
+        "bottleneck": r["bottleneck"],
+    }
+
+
+def fig4_rows(spec):
+    return [problem_row(p, spec) for p in suites.fig4_suite()]
+
+
+def fig5_rows(spec):
+    return [problem_row(p, spec) for p in suites.fig5_suite()]
+
+
+def model_rows(spec):
+    rows = []
+    for (name, build) in graphmod.MODEL_GRAPHS:
+        g = build()
+        fma = conv_loads = conv_stores = glue = 0.0
+        for n in g.nodes:
+            if n.kind == "conv":
+                plan = opsmod.dispatch_op_plan(n.conv, spec)
+                fma += plan.total_fma
+                conv_loads += dram_load_bytes(plan)
+                conv_stores += plan.output_bytes
+            else:
+                glue += graphmod.glue_bytes(g, n)
+        secs = graphmod.execute(g, spec, opsmod.dispatch_op_plan)[0]
+        flops_frac = 2.0 * fma / secs / spec.peak_flops()
+        bw_frac = (conv_loads + conv_stores + glue) / secs / 1e9 / spec.bandwidth_gb_s
+        rows.append({
+            "label": name,
+            "backend": "dispatched",
+            "fma_per_byte": fma / max(conv_loads, 1.0),
+            "gflops": 2.0 * fma / secs / 1e9,
+            "flops_pct": 100.0 * flops_frac,
+            "bw_pct": 100.0 * bw_frac,
+            "bottleneck": "memory" if bw_frac >= flops_frac else "compute",
+        })
+    return rows
+
+
+# ---- Chrome-trace span-tree validation (mirror of span.rs::validate) ----
+
+def validate_chrome(doc):
+    """Validate a parsed Chrome-trace document (the `--trace-out`
+    format): well-nested per lane, parent containment by span_id, per-
+    (lane, name) monotone virtual time, named lanes, causes on rejects.
+    Raises AssertionError with a message on the first violation."""
+    events = doc["traceEvents"]
+    lanes = {}
+    for ev in events:
+        if ev.get("ph") == "M":
+            assert ev["name"] == "thread_name", ev
+            lanes[ev["tid"]] = ev["args"]["name"]
+
+    spans = [e for e in events if e.get("ph") == "X"]
+    instants = [e for e in events if e.get("ph") == "i"]
+    for ev in spans + instants:
+        assert ev["tid"] in lanes, f"event on unnamed lane: {ev}"
+        assert ev["ts"] >= -EPS, f"negative virtual time: {ev}"
+    for ev in spans:
+        assert ev["dur"] >= -EPS, f"negative duration: {ev}"
+
+    # unique ids + parent containment (span.rs pass 1–2)
+    by_id = {}
+    for ev in spans:
+        sid = ev["args"]["span_id"]
+        assert sid not in by_id, f"duplicate span id {sid}"
+        by_id[sid] = ev
+    for ev in spans:
+        pid = ev["args"].get("parent_id")
+        if pid is None:
+            continue
+        parent = by_id.get(pid)
+        assert parent is not None, f"dangling parent {pid}"
+        assert parent["tid"] == ev["tid"], f"cross-lane parent: {ev}"
+        assert parent["ts"] - EPS <= ev["ts"], f"child starts before parent: {ev}"
+        assert (ev["ts"] + ev["dur"]
+                <= parent["ts"] + parent["dur"] + EPS), f"child outlives parent: {ev}"
+
+    # per-lane nested-or-disjoint (span.rs pass 3): sweep with a stack
+    per_lane = {}
+    for ev in spans:
+        per_lane.setdefault(ev["tid"], []).append((ev["ts"], ev["ts"] + ev["dur"]))
+    for tid, iv in per_lane.items():
+        iv.sort(key=lambda ab: (ab[0], -ab[1]))
+        stack = []
+        for (a, b) in iv:
+            while stack and stack[-1] <= a + EPS:
+                stack.pop()
+            assert not stack or b <= stack[-1] + EPS, \
+                f"lane {lanes[tid]}: [{a}, {b}] straddles [.., {stack[-1]}]"
+            stack.append(b)
+
+    # per-(lane, name) monotone emission (span.rs pass 4), spans and
+    # instants as separate streams — relies on `traceEvents` preserving
+    # emission order, which the exporter guarantees
+    last = {}
+    for ev in spans:
+        key = ("X", ev["tid"], ev["name"])
+        assert last.get(key, -1.0) <= ev["ts"] + EPS, f"non-monotone span: {ev}"
+        last[key] = ev["ts"]
+    for ev in instants:
+        key = ("i", ev["tid"], ev["name"])
+        assert last.get(key, -1.0) <= ev["ts"] + EPS, f"non-monotone instant: {ev}"
+        last[key] = ev["ts"]
+
+    # fleet semantics: rejects carry a cause, requests carry an execute
+    for ev in instants:
+        if ev["name"] == "reject":
+            assert ev["args"].get("cause") in ("memory", "queue_full"), ev
+    lane_names = {tid: nm for tid, nm in lanes.items()}
+    executes = {ev["tid"] for ev in spans if ev["name"] == "execute"}
+    for ev in spans:
+        if ev["name"] == "request":
+            assert lane_names[ev["tid"]].startswith("req:"), ev
+            assert ev["tid"] in executes, \
+                f"request on {lane_names[ev['tid']]} has no execute child"
+    return len(spans), len(instants)
+
+
+def validate_chrome_file(path):
+    with open(path) as f:
+        return validate_chrome(json.load(f))

@@ -53,6 +53,21 @@ impl Histogram {
         self.max
     }
 
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// (upper edge in seconds, count) per bucket — the Prometheus
+    /// exposition (`trace::prometheus`) turns these into cumulative
+    /// `le` buckets.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (BASE * 2f64.powi(i as i32 + 1), c))
+            .collect()
+    }
+
     /// Upper edge of the bucket containing the q-quantile (q in [0,1]).
     pub fn quantile(&self, q: f64) -> f64 {
         if self.count == 0 {
@@ -105,6 +120,9 @@ pub struct Metrics {
     pub pool_evictions: u64,
     pub pool_reuse_hits: u64,
     pub latency: Histogram,
+    /// per request-class latency histograms (class = artifact label),
+    /// so p50/p99-per-class never needs sample retention
+    pub latency_by_class: BTreeMap<String, Histogram>,
     pub per_artifact: BTreeMap<String, u64>,
 }
 
@@ -112,6 +130,7 @@ impl Metrics {
     pub fn record_response(&mut self, artifact: &str, latency_secs: f64) {
         self.responses += 1;
         self.latency.record(latency_secs);
+        self.latency_by_class.entry(artifact.to_string()).or_default().record(latency_secs);
         *self.per_artifact.entry(artifact.to_string()).or_insert(0) += 1;
     }
 
@@ -169,6 +188,13 @@ impl Metrics {
             .set("plans_tuned", (self.plans_tuned as usize).into())
             .set("pool", pool)
             .set("latency", self.latency.to_json())
+            .set("latency_by_class", {
+                let mut by = Json::obj();
+                for (k, h) in &self.latency_by_class {
+                    by = by.set(k, h.to_json());
+                }
+                by
+            })
             .set("per_artifact", per)
     }
 }
@@ -244,6 +270,23 @@ mod tests {
         assert!(json.contains("\"pool\":{"), "{json}");
         assert!(json.contains("\"peak_bytes\":1024"), "{json}");
         assert!(json.contains("\"pooled_models\":2"), "{json}");
+    }
+
+    #[test]
+    fn buckets_are_cumulative_consistent_and_classes_tracked() {
+        let mut m = Metrics::default();
+        m.record_response("vgg16_b4", 1e-3);
+        m.record_response("vgg16_b4", 2e-3);
+        m.record_response("alexnet_b1", 5e-4);
+        let total: u64 = m.latency.buckets().iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 3, "every sample lands in a bucket");
+        for w in m.latency.buckets().windows(2) {
+            assert!(w[1].0 > w[0].0, "edges strictly increase");
+        }
+        assert!((m.latency.sum() - 3.5e-3).abs() < 1e-12);
+        assert_eq!(m.latency_by_class["vgg16_b4"].count(), 2);
+        assert_eq!(m.latency_by_class["alexnet_b1"].count(), 1);
+        assert!(m.to_json().render().contains("\"latency_by_class\""));
     }
 
     #[test]

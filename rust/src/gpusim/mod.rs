@@ -19,5 +19,5 @@ pub mod spec;
 
 pub use occupancy::{occupancy, BlockResources, Limiter, Occupancy};
 pub use pipeline::{ExecConfig, Round};
-pub use sim::{simulate, speedup, KernelPlan, SimResult};
+pub use sim::{simulate, simulate_detailed, speedup, KernelPlan, SimBreakdown, SimResult};
 pub use spec::{gtx_1080ti, tesla_k40, titan_x_maxwell, GpuSpec};

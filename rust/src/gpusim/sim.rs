@@ -163,8 +163,34 @@ pub struct SimResult {
     pub fma_per_byte: f64,
 }
 
+/// `SimResult` plus the cycle decomposition the observability layer
+/// (`trace::Roofline`) reports: where the critical path went, split into
+/// load / compute / stall / writeback / launch shares.  `simulate` is
+/// `simulate_detailed(..).result` — one arithmetic path, so tracing can
+/// never drift from the pinned timings.
+#[derive(Clone, Debug)]
+pub struct SimBreakdown {
+    pub result: SimResult,
+    /// sum of per-round load cycles on the critical SM (bandwidth share)
+    pub load_cycles: f64,
+    /// sum of per-round compute cycles on the critical SM
+    pub compute_cycles: f64,
+    /// cycles the pipeline stalled waiting on memory
+    pub stall_cycles: f64,
+    /// non-overlappable output writeback tail
+    pub writeback_cycles: f64,
+    /// launch + API overhead charged once per kernel
+    pub launch_overhead_cycles: f64,
+}
+
 /// Run `plan` on `spec`.
 pub fn simulate(spec: &GpuSpec, plan: &KernelPlan) -> SimResult {
+    simulate_detailed(spec, plan).result
+}
+
+/// Run `plan` on `spec`, keeping the pipeline's cycle split alongside the
+/// headline result (for roofline reporting).
+pub fn simulate_detailed(spec: &GpuSpec, plan: &KernelPlan) -> SimBreakdown {
     assert!(
         plan.smem_bytes_per_sm <= spec.shared_mem_bytes,
         "{}: plan wants {} B shared memory, SM has {}",
@@ -190,7 +216,7 @@ pub fn simulate(spec: &GpuSpec, plan: &KernelPlan) -> SimResult {
     let seconds = spec.cycles_to_secs(cycles);
     let flops = 2.0 * plan.total_fma;
     let gflops = flops / seconds / 1e9;
-    SimResult {
+    let result = SimResult {
         name: plan.name.clone(),
         cycles,
         seconds,
@@ -202,6 +228,14 @@ pub fn simulate(spec: &GpuSpec, plan: &KernelPlan) -> SimResult {
         stall_fraction: pipe.stall_cycles / pipe.total_cycles,
         dram_load_bytes: plan.dram_load_bytes(),
         fma_per_byte: plan.fma_per_byte(),
+    };
+    SimBreakdown {
+        result,
+        load_cycles: pipe.load_cycles_sum,
+        compute_cycles: pipe.compute_cycles_sum,
+        stall_cycles: pipe.stall_cycles,
+        writeback_cycles: wb_cycles,
+        launch_overhead_cycles: plan.launch_overhead_cycles,
     }
 }
 
@@ -372,6 +406,22 @@ mod tests {
         assert!(t_grouped < t_seq, "grouped {t_grouped} not below sequential {t_seq}");
         // identity at one group
         assert_eq!(unit.grouped(1, g.sm_count).name, unit.name);
+    }
+
+    #[test]
+    fn detailed_breakdown_is_bit_identical_and_accounted() {
+        let g = gtx_1080ti();
+        for p in [plan(8, 1e4, 1e6), plan(8, 1e4, 1e6).batched(4), plan(8, 1e4, 1e6).decimated(0.5)]
+        {
+            let b = simulate_detailed(&g, &p);
+            let r = simulate(&g, &p);
+            assert_eq!(r.cycles.to_bits(), b.result.cycles.to_bits());
+            assert_eq!(r.seconds.to_bits(), b.result.seconds.to_bits());
+            assert!(b.load_cycles >= 0.0 && b.compute_cycles > 0.0 && b.stall_cycles >= 0.0);
+            let wb = WRITEBACK_TAIL_FRACTION * p.output_bytes / g.bytes_per_cycle();
+            assert_eq!(b.writeback_cycles.to_bits(), wb.to_bits());
+            assert_eq!(b.launch_overhead_cycles, p.launch_overhead_cycles);
+        }
     }
 
     #[test]

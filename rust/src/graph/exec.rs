@@ -82,6 +82,12 @@ fn glue_bytes(g: &Graph, id: NodeId) -> f64 {
     }
 }
 
+/// Public read-only view of `glue_bytes` — the observability layer
+/// (`trace::report`) aggregates model-level DRAM traffic from it.
+pub fn node_glue_bytes(g: &Graph, id: NodeId) -> f64 {
+    glue_bytes(g, id)
+}
+
 /// Cycles for a memory-bound glue op moving `bytes` through DRAM.
 fn glue_cycles(spec: &GpuSpec, bytes: f64) -> f64 {
     if bytes <= 0.0 {
@@ -230,6 +236,58 @@ pub fn execute_batched(g: &Graph, spec: &GpuSpec, planner: Planner, batch: usize
         conv_layers: convs,
         arena,
     }
+}
+
+/// `execute_batched`, additionally emitting a span tree through `sink`
+/// when it is enabled: one root span `model:{name}` starting at
+/// virtual time `t0` on `track`, one child span per scheduled node
+/// laid end-to-end at its cumulative offset, conv children carrying
+/// their plan's roofline counters.  The returned report IS
+/// `execute_batched`'s — tracing observes it, never changes it (the
+/// difftests pin bit-identity under both sinks).
+pub fn execute_batched_traced(
+    g: &Graph,
+    spec: &GpuSpec,
+    planner: Planner,
+    batch: usize,
+    sink: &mut dyn crate::trace::TraceSink,
+    t0: f64,
+    track: &str,
+) -> ModelReport {
+    let report = execute_batched(g, spec, planner, batch);
+    if !sink.enabled() {
+        return report;
+    }
+    let root_id = sink.next_span_id();
+    let mut children = Vec::with_capacity(report.nodes.len());
+    let mut t = t0;
+    for n in &report.nodes {
+        let id = sink.next_span_id();
+        let mut sp = crate::trace::Span::new(id, Some(root_id), track, &n.name, t, t + n.seconds)
+            .attr("kind", n.kind.into())
+            .attr("detail", n.detail.as_str().into())
+            .attr("seconds", n.seconds.into());
+        if let Op::Conv { conv } = &g.node(n.id).op {
+            let plan = planner(conv, spec).batched(batch);
+            for (k, v) in crate::trace::Roofline::measure(spec, &plan).attrs() {
+                sp = sp.attr(&k, v);
+            }
+        }
+        t += n.seconds;
+        children.push(sp);
+    }
+    let root =
+        crate::trace::Span::new(root_id, None, track, &format!("model:{}", report.model), t0, t)
+            .attr("gpu", report.gpu.into())
+            .attr("batch", report.batch.into())
+            .attr("total_seconds", report.total_seconds.into())
+            .attr("conv_seconds", report.conv_seconds.into())
+            .attr("glue_seconds", report.glue_seconds.into());
+    sink.record(crate::trace::Event::Span(root));
+    for c in children {
+        sink.record(crate::trace::Event::Span(c));
+    }
+    report
 }
 
 /// `execute_batched` against a shared device pool: the timing walk is

@@ -29,7 +29,10 @@ pub use build::{
     alexnet_graph, inception3a_graph, mobilenet_v1_graph, model_graph, resnet18_graph,
     vgg16_graph, Graph, GraphBuilder, MODEL_NAMES,
 };
-pub use exec::{execute, execute_batched, execute_pooled, topo_order, ModelReport, NodeReport, Planner};
+pub use exec::{
+    execute, execute_batched, execute_batched_traced, execute_pooled, node_glue_bytes, topo_order,
+    ModelReport, NodeReport, Planner,
+};
 pub use memory::{
     liveness, plan_arena, plan_pooled, ArenaPlan, Placement, PooledPlan, TensorLife, ARENA_ALIGN,
 };

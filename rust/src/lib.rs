@@ -24,6 +24,9 @@
 //!   coalescer, worker pool, metrics
 //! * `fleet`     — multi-GPU scheduler: simulated device shards, bounded
 //!   queues, batch-aware admission, pluggable placement policies
+//! * `trace`     — observability: roofline counters, virtual-time span
+//!   tracing (zero-cost when disabled), Chrome-trace/Perfetto and
+//!   Prometheus exports
 //! * `util`      — offline stand-ins (rng/stats/bench/cli/prop/json)
 pub mod analytic;
 pub mod backend;
@@ -35,5 +38,6 @@ pub mod gpusim;
 pub mod graph;
 pub mod plans;
 pub mod runtime;
+pub mod trace;
 pub mod tuner;
 pub mod util;

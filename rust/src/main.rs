@@ -22,6 +22,16 @@
 //!                                 (--capacity-mib caps each shard's
 //!                                 memory pool: multi-tenant admission
 //!                                 with pool-pressure shedding)
+//!   trace [--suite ...]           the roofline report (EXPERIMENTS §12):
+//!                                 FMA-per-byte + achieved-vs-peak for the
+//!                                 Fig.4/Fig.5 workloads and the five
+//!                                 models; --trace-out writes a Perfetto
+//!                                 trace of the model graphs
+//!
+//! `simulate`, `model` and `fleet` take `--json` (machine-readable
+//! output via util::json) and `--trace-out FILE` (Chrome-trace/Perfetto
+//! JSON of the run, virtual time); `serve` takes `--prometheus` (text
+//! exposition of the coordinator metrics).
 //!
 //! `simulate` and `model` route through the cross-backend dispatcher by
 //! default (per-problem / per-layer algorithm choice, never losing to
@@ -44,6 +54,7 @@ use pasconv::tuner;
 use pasconv::tuner::PlanCache;
 use pasconv::util::bench::Table;
 use pasconv::util::cli::Args;
+use pasconv::util::json::Json;
 use pasconv::util::rng::Rng;
 
 fn main() {
@@ -57,9 +68,10 @@ fn main() {
         "tune" => cmd_tune(&args),
         "model" => cmd_model(&args),
         "fleet" => cmd_fleet(&args),
+        "trace" => cmd_trace(&args),
         _ => {
             eprintln!(
-                "usage: pasconv <list|simulate|serve|sweep|tune|model|fleet> [flags]\n\
+                "usage: pasconv <list|simulate|serve|sweep|tune|model|fleet|trace> [flags]\n\
                  \n  list                              artifact registry\
                  \n  simulate --c C --w W --m M --k K  one problem, all kernels, simulated\
                  \n           [--stride S --pad P --groups G] op-level pricing\
@@ -76,7 +88,14 @@ fn main() {
                  \n        [--batch B] [--queue-bound Q] [--overload X] [--hetero]\
                  \n        [--capacity-mib M]           virtual-time multi-GPU fleet run\
                  \n                                    (M > 0 caps each shard's memory\
-                 \n                                    pool; admission sheds on memory)\n"
+                 \n                                    pool; admission sheds on memory)\
+                 \n  trace [--suite fig4|fig5|models|all] [--gpu ...]\
+                 \n                                    roofline report: FMA/byte +\
+                 \n                                    achieved-vs-peak per workload\
+                 \n\
+                 \n  simulate/model/fleet also take:   --json (machine-readable output)\
+                 \n                                    --trace-out FILE (Perfetto trace)\
+                 \n  serve also takes:                 --prometheus (metrics exposition)\n"
             );
             if cmd == "help" { 0 } else { 2 }
         }
@@ -170,70 +189,145 @@ fn cmd_simulate(args: &Args) -> i32 {
         return 2;
     }
     let g = gpu_from(args);
-    if !op.is_dense() {
+    let json = args.has("json");
+    let rows: Vec<(String, KernelPlan)> = if !op.is_dense() {
         // op-level pricing: native/lowered routes vs the lowered floor,
         // honoring the same mode flags as the dense path
-        println!("op: {}   GPU: {}", op.label(), g.name);
-        println!("lowered unit: {}", op.lower().unit.label());
+        if !json {
+            println!("op: {}   GPU: {}", op.label(), g.name);
+            println!("lowered unit: {}", op.lower().unit.label());
+        }
         let mode: &str = if args.has("no-tune") {
             "paper §3 (op)"
         } else if args.has("no-dispatch") {
             "paper-tuned (op)"
         } else {
-            println!("dispatch: {}", pasconv::backend::op_dispatch_advice(&op, &g));
+            if !json {
+                println!("dispatch: {}", pasconv::backend::op_dispatch_advice(&op, &g));
+            }
             "dispatched"
         };
-        let mut rows: Vec<(&str, KernelPlan)> = vec![(mode, op_planner(args)(&op, &g))];
+        let mut rows: Vec<(String, KernelPlan)> =
+            vec![(mode.to_string(), op_planner(args)(&op, &g))];
         if mode != "paper-tuned (op)" {
-            rows.push(("paper-tuned (op)", op_plan_for(&op, &g)));
+            rows.push(("paper-tuned (op)".to_string(), op_plan_for(&op, &g)));
         }
         if mode != "paper §3 (op)" {
-            rows.push(("paper §3 (op)", paper_op_plan_for(&op, &g)));
+            rows.push(("paper §3 (op)".to_string(), paper_op_plan_for(&op, &g)));
         }
-        let ours = simulate(&g, &rows[0].1).seconds;
-        let mut t = Table::new(&["route", "plan", "time", "GFLOP/s", "bottleneck", "vs pick"]);
-        for (route, plan) in &rows {
-            let r = simulate(&g, plan);
-            t.row(&[
-                route.to_string(),
-                r.name.clone(),
-                format!("{:.1}µs", r.seconds * 1e6),
-                format!("{:.0}", r.gflops),
-                r.bottleneck.to_string(),
-                format!("{:.2}x", r.seconds / ours),
+        if !json {
+            let ours = simulate(&g, &rows[0].1).seconds;
+            let mut t = Table::new(&["route", "plan", "time", "GFLOP/s", "bottleneck", "vs pick"]);
+            for (route, plan) in &rows {
+                let r = simulate(&g, plan);
+                t.row(&[
+                    route.clone(),
+                    r.name.clone(),
+                    format!("{:.1}µs", r.seconds * 1e6),
+                    format!("{:.0}", r.gflops),
+                    r.bottleneck.to_string(),
+                    format!("{:.2}x", r.seconds / ours),
+                ]);
+            }
+            t.print();
+        }
+        rows
+    } else {
+        let plan_fn = planner(args);
+        if !json {
+            println!("problem: {}   GPU: {}", p.label(), g.name);
+            println!("paper advice: {}", plan_advice(&p, &g));
+            if !args.has("no-tune") {
+                println!("tuner advice: {}", tuner::advice(&p, &g));
+                if !args.has("no-dispatch") {
+                    println!("dispatch:     {}", pasconv::backend::dispatch_advice(&p, &g));
+                }
+            }
+        }
+        let plans = vec![
+            plan_fn(&p, &g),
+            cudnn_proxy::plan(&p, &g),
+            dac17::plan(&p, &g),
+            tan128::plan(&p, &g),
+        ];
+        if !json {
+            let ours = simulate(&g, &plans[0]).seconds;
+            let mut t = Table::new(&[
+                "kernel", "time", "GFLOP/s", "eff", "SMs", "bottleneck", "FMA/B", "vs ours",
             ]);
+            for plan in &plans {
+                let r = simulate(&g, plan);
+                t.row(&[
+                    r.name.clone(),
+                    format!("{:.1}µs", r.seconds * 1e6),
+                    format!("{:.0}", r.gflops),
+                    format!("{:.1}%", 100.0 * r.efficiency),
+                    format!("{:.0}", r.sm_utilization * g.sm_count as f64),
+                    r.bottleneck.to_string(),
+                    format!("{:.1}", r.fma_per_byte),
+                    format!("{:.2}x", r.seconds / ours),
+                ]);
+            }
+            t.print();
         }
-        t.print();
-        return 0;
+        plans.into_iter().map(|plan| (plan.name.clone(), plan)).collect()
+    };
+    simulate_exports(args, &g, &op.label(), &rows)
+}
+
+/// Shared `--json` / `--trace-out` tail for `simulate`: the JSON view
+/// carries every row's full roofline counters; the trace lays the
+/// simulated kernels end-to-end on one virtual-time track.
+fn simulate_exports(args: &Args, g: &GpuSpec, workload: &str, rows: &[(String, KernelPlan)]) -> i32 {
+    use pasconv::trace::{Event, Recorder, Roofline, Span, TraceSink};
+    if args.has("json") {
+        let arr = Json::Arr(
+            rows.iter()
+                .map(|(label, plan)| {
+                    Json::obj()
+                        .set("route", label.as_str().into())
+                        .set("roofline", Roofline::measure(g, plan).to_json())
+                })
+                .collect(),
+        );
+        println!(
+            "{}",
+            Json::obj()
+                .set("workload", workload.into())
+                .set("gpu", g.name.into())
+                .set("rows", arr)
+                .render()
+        );
     }
-    let plan_fn = planner(args);
-    println!("problem: {}   GPU: {}", p.label(), g.name);
-    println!("paper advice: {}", plan_advice(&p, &g));
-    if !args.has("no-tune") {
-        println!("tuner advice: {}", tuner::advice(&p, &g));
-        if !args.has("no-dispatch") {
-            println!("dispatch:     {}", pasconv::backend::dispatch_advice(&p, &g));
+    if let Some(path) = args.get("trace-out") {
+        let mut rec = Recorder::new();
+        let mut t = 0.0;
+        for (label, plan) in rows {
+            let roof = Roofline::measure(g, plan);
+            let id = rec.next_span_id();
+            let mut sp = Span::new(id, None, workload, label, t, t + roof.seconds);
+            for (k, v) in roof.attrs() {
+                sp = sp.attr(&k, v);
+            }
+            rec.record(Event::Span(sp));
+            t += roof.seconds;
         }
+        return write_trace(path, &rec);
     }
-    let plans =
-        vec![plan_fn(&p, &g), cudnn_proxy::plan(&p, &g), dac17::plan(&p, &g), tan128::plan(&p, &g)];
-    let ours = simulate(&g, &plans[0]).seconds;
-    let mut t =
-        Table::new(&["kernel", "time", "GFLOP/s", "eff", "SMs", "bottleneck", "FMA/B", "vs ours"]);
-    for plan in &plans {
-        let r = simulate(&g, plan);
-        t.row(&[
-            r.name.clone(),
-            format!("{:.1}µs", r.seconds * 1e6),
-            format!("{:.0}", r.gflops),
-            format!("{:.1}%", 100.0 * r.efficiency),
-            format!("{:.0}", r.sm_utilization * g.sm_count as f64),
-            r.bottleneck.to_string(),
-            format!("{:.1}", r.fma_per_byte),
-            format!("{:.2}x", r.seconds / ours),
-        ]);
+    0
+}
+
+/// Validate + write a recorded trace as Chrome-trace/Perfetto JSON.
+fn write_trace(path: &str, rec: &pasconv::trace::Recorder) -> i32 {
+    if let Err(e) = rec.validate() {
+        eprintln!("internal error: trace failed validation: {e}");
+        return 1;
     }
-    t.print();
+    if let Err(e) = std::fs::write(path, rec.chrome_json()) {
+        eprintln!("error writing {path}: {e}");
+        return 1;
+    }
+    println!("trace written to {path} ({} events)", rec.len());
     0
 }
 
@@ -267,6 +361,9 @@ fn cmd_serve(args: &Args) -> i32 {
     let m = c.metrics();
     println!("served {ok}/{n} in {:.2}s  ({:.0} req/s)", dt, ok as f64 / dt);
     println!("metrics: {}", m.to_json().render());
+    if args.has("prometheus") {
+        println!("\n{}", pasconv::trace::exposition(&m));
+    }
     c.shutdown();
     0
 }
@@ -301,14 +398,20 @@ fn cmd_sweep(args: &Args) -> i32 {
 }
 
 fn cmd_model(args: &Args) -> i32 {
+    use pasconv::trace::{NoopSink, Recorder, TraceSink};
+
     let g = gpu_from(args);
     let plan_fn = op_planner(args);
     let which = args.get_or("model", "all");
+    let json = args.has("json");
     let names: Vec<&str> = if which == "all" {
         pasconv::graph::MODEL_NAMES.to_vec()
     } else {
         vec![which]
     };
+    let mut rec = Recorder::new();
+    let mut noop = NoopSink;
+    let trace_path = args.get("trace-out");
     let mut t = Table::new(&[
         "model",
         "nodes",
@@ -320,6 +423,7 @@ fn cmd_model(args: &Args) -> i32 {
         "saved",
         "backends",
     ]);
+    let mut json_rows: Vec<Json> = Vec::new();
     for name in names {
         let graph = match pasconv::graph::model_graph(name) {
             Ok(gr) => gr,
@@ -328,8 +432,11 @@ fn cmd_model(args: &Args) -> i32 {
                 return 2;
             }
         };
-        let r = pasconv::graph::execute(&graph, &g, plan_fn);
-        if args.has("report") {
+        // each model gets its own virtual-time track starting at 0
+        let sink: &mut dyn TraceSink =
+            if trace_path.is_some() { &mut rec } else { &mut noop };
+        let r = pasconv::graph::execute_batched_traced(&graph, &g, plan_fn, 1, sink, 0.0, name);
+        if args.has("report") && !json {
             println!("== {} on {} ==", r.model, r.gpu);
             r.table().print();
             println!("{}\n", r.summary());
@@ -345,24 +452,49 @@ fn cmd_model(args: &Args) -> i32 {
             .collect();
         families.sort();
         families.dedup();
-        t.row(&[
-            r.model.clone(),
-            r.nodes.len().to_string(),
-            r.conv_layers.to_string(),
-            format!("{:.3}", r.total_seconds * 1e3),
-            format!("{:.0}%", 100.0 * r.conv_seconds / r.total_seconds),
-            pasconv::util::bench::fmt_mib(r.arena.peak_bytes),
-            pasconv::util::bench::fmt_mib(r.arena.naive_bytes),
-            format!("{:.0}%", 100.0 * r.arena.saved_fraction()),
-            families.join("+"),
-        ]);
+        if json {
+            json_rows.push(
+                Json::obj()
+                    .set("model", r.model.as_str().into())
+                    .set("gpu", r.gpu.into())
+                    .set("nodes", r.nodes.len().into())
+                    .set("conv_layers", r.conv_layers.into())
+                    .set("latency_ms", (r.total_seconds * 1e3).into())
+                    .set("conv_seconds", r.conv_seconds.into())
+                    .set("glue_seconds", r.glue_seconds.into())
+                    .set("arena_bytes", r.arena.peak_bytes.into())
+                    .set("naive_bytes", r.arena.naive_bytes.into())
+                    .set("saved_fraction", r.arena.saved_fraction().into())
+                    .set("backends", families.join("+").as_str().into()),
+            );
+        } else {
+            t.row(&[
+                r.model.clone(),
+                r.nodes.len().to_string(),
+                r.conv_layers.to_string(),
+                format!("{:.3}", r.total_seconds * 1e3),
+                format!("{:.0}%", 100.0 * r.conv_seconds / r.total_seconds),
+                pasconv::util::bench::fmt_mib(r.arena.peak_bytes),
+                pasconv::util::bench::fmt_mib(r.arena.naive_bytes),
+                format!("{:.0}%", 100.0 * r.arena.saved_fraction()),
+                families.join("+"),
+            ]);
+        }
     }
-    t.print();
+    if json {
+        println!("{}", Json::Arr(json_rows).render());
+    } else {
+        t.print();
+    }
+    if let Some(path) = trace_path {
+        return write_trace(path, &rec);
+    }
     0
 }
 
 fn cmd_fleet(args: &Args) -> i32 {
     use pasconv::fleet::{mean_service_secs, offered_load, Fleet, FleetConfig, Policy};
+    use pasconv::trace::{run_traced, NoopSink, Recorder, TraceSink};
 
     let devices = args.get_usize("devices", 4);
     let n = args.get_usize("requests", 256);
@@ -385,67 +517,207 @@ fn cmd_fleet(args: &Args) -> i32 {
     } else {
         vec![g.clone(); devices]
     };
+    let json = args.has("json");
     let names: Vec<&str> = specs.iter().map(|s| s.name).collect();
-    println!(
-        "fleet: {} devices [{}], policy {}, queue bound {queue_bound}, batch {batch}, pool cap {}",
-        devices,
-        names.join(", "),
-        policy.label(),
-        if capacity_mib > 0 { format!("{capacity_mib} MiB") } else { "device DRAM".to_string() },
-    );
+    if !json {
+        println!(
+            "fleet: {} devices [{}], policy {}, queue bound {queue_bound}, batch {batch}, pool cap {}",
+            devices,
+            names.join(", "),
+            policy.label(),
+            if capacity_mib > 0 { format!("{capacity_mib} MiB") } else { "device DRAM".to_string() },
+        );
+    }
 
     // model-tagged batched conv traffic over the §4 model layers
     // (fleet::traffic — the same generator the e2e_fleet bench replays);
-    // offered rate: `overload` x one reference device's capacity
+    // offered rate: `overload` x one reference device's capacity.
+    // The pump is trace::run_traced: with the no-op sink it is EXACTLY
+    // the plain complete_until/submit/drain loop (difftest-gated).
     let mut fleet = Fleet::new(specs, FleetConfig { policy, queue_bound, capacity_bytes });
     let probe = offered_load(64, 1.0, 0xF1EE7, Some(batch));
     let rate = overload / mean_service_secs(&probe, &g);
-    let mut completions = Vec::with_capacity(n);
-    for a in offered_load(n, rate, 0xF1EE7, Some(batch)) {
-        completions.extend(fleet.complete_until(a.t));
-        fleet.submit(a.conv, Some(a.model));
-    }
-    completions.extend(fleet.drain());
+    let load = offered_load(n, rate, 0xF1EE7, Some(batch));
+    let mut rec = Recorder::new();
+    let mut noop = NoopSink;
+    let trace_path = args.get("trace-out");
+    let sink: &mut dyn TraceSink = if trace_path.is_some() { &mut rec } else { &mut noop };
+    let completions = run_traced(&mut fleet, &load, sink);
     let makespan = completions.iter().map(|c| c.finish).fold(0.0f64, f64::max);
     let lats: Vec<f64> = completions.iter().map(|c| c.latency()).collect();
     let s = pasconv::util::stats::Summary::of(&lats);
+    let st = fleet.stats;
+    let frag: usize = fleet.devices().iter().map(|d| d.pool().fragmentation_bytes()).sum();
+    let peak_total: usize =
+        fleet.devices().iter().map(|d| d.pool().stats.peak_in_use_slab).sum();
+    let cap_total: usize = fleet.devices().iter().map(|d| d.pool().capacity()).sum();
+    let evict_total: u64 = fleet.devices().iter().map(|d| d.pool().stats.evictions).sum();
+    let reuse_total: u64 = fleet.devices().iter().map(|d| d.pool().stats.reuse_hits).sum();
 
-    let mut table = Table::new(&[
-        "device", "spec", "jobs", "busy (s)", "util", "pool peak", "evict", "reuse",
-    ]);
-    for d in fleet.devices() {
-        let p = d.pool();
+    if json {
+        let per_device = Json::Arr(
+            fleet
+                .devices()
+                .iter()
+                .map(|d| {
+                    let p = d.pool();
+                    Json::obj()
+                        .set("device", d.id.into())
+                        .set("spec", d.spec.name.into())
+                        .set("jobs", (d.completed as usize).into())
+                        .set("busy_s", d.busy_secs.into())
+                        .set("util", (d.busy_secs / makespan.max(1e-30)).into())
+                        .set("pool_peak_bytes", p.stats.peak_in_use_slab.into())
+                        .set("pool_capacity_bytes", p.capacity().into())
+                        .set("evictions", (p.stats.evictions as usize).into())
+                        .set("reuse_hits", (p.stats.reuse_hits as usize).into())
+                })
+                .collect(),
+        );
+        println!(
+            "{}",
+            Json::obj()
+                .set("devices", devices.into())
+                .set("policy", policy.label().into())
+                .set("batch", batch.into())
+                .set("queue_bound", queue_bound.into())
+                .set("offered_rate_rps", rate.into())
+                .set("overload", overload.into())
+                .set("submitted", (st.submitted as usize).into())
+                .set("accepted", (st.accepted as usize).into())
+                .set("rejected", (st.rejected as usize).into())
+                .set("mem_rejected", (st.mem_rejected as usize).into())
+                .set("images", (st.batched_images as usize).into())
+                .set("affinity_spills", (st.affinity_spills as usize).into())
+                .set("makespan_s", makespan.into())
+                .set("throughput_rps", (completions.len() as f64 / makespan.max(1e-30)).into())
+                .set("p50_ms", (s.p50 * 1e3).into())
+                .set("p99_ms", (s.p99 * 1e3).into())
+                .set("pool_peak_bytes", peak_total.into())
+                .set("pool_evictions", (evict_total as usize).into())
+                .set("pool_reuse_hits", (reuse_total as usize).into())
+                .set("pool_fragmentation_bytes", frag.into())
+                .set("per_device", per_device)
+                .render()
+        );
+    } else {
+        let mut table = Table::new(&[
+            "device", "spec", "jobs", "busy (s)", "util", "pool peak", "evict", "reuse",
+        ]);
+        for d in fleet.devices() {
+            let p = d.pool();
+            table.row(&[
+                d.id.to_string(),
+                d.spec.name.to_string(),
+                d.completed.to_string(),
+                format!("{:.3}", d.busy_secs),
+                format!("{:.0}%", 100.0 * d.busy_secs / makespan.max(1e-30)),
+                format!(
+                    "{} ({:.0}%)",
+                    pasconv::util::bench::fmt_mib(p.stats.peak_in_use_slab),
+                    100.0 * p.stats.peak_in_use_slab as f64 / p.capacity() as f64
+                ),
+                p.stats.evictions.to_string(),
+                p.stats.reuse_hits.to_string(),
+            ]);
+        }
+        let busy_total: f64 = fleet.devices().iter().map(|d| d.busy_secs).sum();
+        let jobs_total: u64 = fleet.devices().iter().map(|d| d.completed).sum();
         table.row(&[
-            d.id.to_string(),
-            d.spec.name.to_string(),
-            d.completed.to_string(),
-            format!("{:.3}", d.busy_secs),
-            format!("{:.0}%", 100.0 * d.busy_secs / makespan.max(1e-30)),
+            "TOTAL".to_string(),
+            "-".to_string(),
+            jobs_total.to_string(),
+            format!("{:.3}", busy_total),
+            format!(
+                "{:.0}%",
+                100.0 * busy_total / (makespan.max(1e-30) * fleet.device_count() as f64)
+            ),
             format!(
                 "{} ({:.0}%)",
-                pasconv::util::bench::fmt_mib(p.stats.peak_in_use_slab),
-                100.0 * p.stats.peak_in_use_slab as f64 / p.capacity() as f64
+                pasconv::util::bench::fmt_mib(peak_total),
+                100.0 * peak_total as f64 / cap_total.max(1) as f64
             ),
-            p.stats.evictions.to_string(),
-            p.stats.reuse_hits.to_string(),
+            evict_total.to_string(),
+            reuse_total.to_string(),
         ]);
+        table.print();
+        println!(
+            "\noffered {:.0} req/s ({overload:.1}x capacity); accepted {}/{} ({} shed, {} on memory), {} images",
+            rate, st.accepted, st.submitted, st.rejected, st.mem_rejected, st.batched_images
+        );
+        println!(
+            "virtual makespan {:.3}s -> {:.0} req/s served; p50 {:.2}ms p99 {:.2}ms; {} affinity spills; residual pool fragmentation {} B",
+            makespan,
+            completions.len() as f64 / makespan.max(1e-30),
+            s.p50 * 1e3,
+            s.p99 * 1e3,
+            st.affinity_spills,
+            frag
+        );
+        println!(
+            "pool totals: peak {} MiB, {} evictions, {} reuse hits",
+            pasconv::util::bench::fmt_mib(peak_total),
+            evict_total,
+            reuse_total
+        );
     }
-    table.print();
-    let st = fleet.stats;
-    println!(
-        "\noffered {:.0} req/s ({overload:.1}x capacity); accepted {}/{} ({} shed, {} on memory), {} images",
-        rate, st.accepted, st.submitted, st.rejected, st.mem_rejected, st.batched_images
-    );
-    let frag: usize = fleet.devices().iter().map(|d| d.pool().fragmentation_bytes()).sum();
-    println!(
-        "virtual makespan {:.3}s -> {:.0} req/s served; p50 {:.2}ms p99 {:.2}ms; {} affinity spills; residual pool fragmentation {} B",
-        makespan,
-        completions.len() as f64 / makespan.max(1e-30),
-        s.p50 * 1e3,
-        s.p99 * 1e3,
-        st.affinity_spills,
-        frag
-    );
+    if let Some(path) = trace_path {
+        return write_trace(path, &rec);
+    }
+    0
+}
+
+fn cmd_trace(args: &Args) -> i32 {
+    use pasconv::trace::{fig4_rows, fig5_rows, model_rows, roofline_table, rows_json, Recorder};
+
+    let g = gpu_from(args);
+    let json = args.has("json");
+    let suite = args.get_or("suite", "all");
+    let mut sections: Vec<(&str, Vec<pasconv::trace::RooflineRow>)> = Vec::new();
+    if suite == "fig4" || suite == "all" {
+        sections.push(("fig4", fig4_rows(&g)));
+    }
+    if suite == "fig5" || suite == "all" {
+        sections.push(("fig5", fig5_rows(&g)));
+    }
+    if suite == "models" || suite == "all" {
+        sections.push(("models", model_rows(&g)));
+    }
+    if sections.is_empty() {
+        eprintln!("unknown suite {suite} (want fig4|fig5|models|all)");
+        return 2;
+    }
+    if json {
+        let mut out = Json::obj().set("gpu", g.name.into());
+        for (name, rows) in &sections {
+            out = out.set(name, rows_json(rows));
+        }
+        println!("{}", out.render());
+    } else {
+        for (name, rows) in &sections {
+            println!("== roofline: {} on {} ==", name, g.name);
+            roofline_table(rows).print();
+            println!();
+        }
+    }
+    if let Some(path) = args.get("trace-out") {
+        // a Perfetto view of the five model graphs: one track per
+        // model, per-node child spans with roofline counters
+        let mut rec = Recorder::new();
+        for name in pasconv::graph::MODEL_NAMES {
+            let graph = pasconv::graph::model_graph(name).expect("canonical model name");
+            pasconv::graph::execute_batched_traced(
+                &graph,
+                &g,
+                pasconv::backend::dispatch_op_plan,
+                1,
+                &mut rec,
+                0.0,
+                name,
+            );
+        }
+        return write_trace(path, &rec);
+    }
     0
 }
 

@@ -1,0 +1,132 @@
+//! Chrome-trace ("Trace Event Format") JSON writer — the output loads
+//! directly into Perfetto (ui.perfetto.dev) or `chrome://tracing`.
+//!
+//! Mapping: one process (pid 1) per trace; each span track becomes a
+//! thread (tid assigned in first-appearance order, named via `ph:"M"`
+//! thread_name metadata); spans are complete events (`ph:"X"`) with
+//! `ts`/`dur` in *microseconds of virtual time* (virtual seconds ×
+//! 1e6); instants are `ph:"i"` with thread scope.  Structured span
+//! attributes land in `args`, alongside `span_id`/`parent_id` so the
+//! tree survives the export.
+
+use std::collections::HashMap;
+
+use crate::util::json::Json;
+
+use super::span::Event;
+
+const US_PER_SEC: f64 = 1e6;
+
+fn args_obj(attrs: &[(String, Json)]) -> Json {
+    let mut o = Json::obj();
+    for (k, v) in attrs {
+        o = o.set(k, v.clone());
+    }
+    o
+}
+
+/// Render an emission-ordered event stream as Chrome-trace JSON.
+pub fn chrome_json(events: &[Event]) -> String {
+    // tids in first-appearance order so Perfetto's lane order follows
+    // the trace's own narrative (coordinator first, then requests…)
+    let mut order: Vec<&str> = Vec::new();
+    let mut tid_of: HashMap<&str, usize> = HashMap::new();
+    for ev in events {
+        let track = ev.track();
+        if !tid_of.contains_key(track) {
+            tid_of.insert(track, order.len() + 1);
+            order.push(track);
+        }
+    }
+
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + order.len());
+    for track in &order {
+        out.push(
+            Json::obj()
+                .set("ph", "M".into())
+                .set("pid", 1usize.into())
+                .set("tid", tid_of[track].into())
+                .set("name", "thread_name".into())
+                .set("args", Json::obj().set("name", (*track).into())),
+        );
+    }
+    for ev in events {
+        let tid = tid_of[ev.track()];
+        match ev {
+            Event::Span(s) => {
+                let mut args = args_obj(&s.attrs).set("span_id", s.id.to_string().as_str().into());
+                if let Some(p) = s.parent {
+                    args = args.set("parent_id", p.to_string().as_str().into());
+                }
+                out.push(
+                    Json::obj()
+                        .set("ph", "X".into())
+                        .set("pid", 1usize.into())
+                        .set("tid", tid.into())
+                        .set("name", s.name.as_str().into())
+                        .set("cat", "pasconv".into())
+                        .set("ts", (s.t0 * US_PER_SEC).into())
+                        .set("dur", (s.duration() * US_PER_SEC).into())
+                        .set("args", args),
+                );
+            }
+            Event::Instant(i) => {
+                out.push(
+                    Json::obj()
+                        .set("ph", "i".into())
+                        .set("s", "t".into())
+                        .set("pid", 1usize.into())
+                        .set("tid", tid.into())
+                        .set("name", i.name.as_str().into())
+                        .set("cat", "pasconv".into())
+                        .set("ts", (i.t * US_PER_SEC).into())
+                        .set("args", args_obj(&i.attrs)),
+                );
+            }
+        }
+    }
+
+    Json::obj()
+        .set("displayTimeUnit", "ms".into())
+        .set("traceEvents", Json::Arr(out))
+        .render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::{Instant, Span};
+    use super::*;
+
+    #[test]
+    fn spans_and_instants_export_with_virtual_microseconds() {
+        let evs = vec![
+            Event::Span(
+                Span::new(1, None, "req:1", "request", 0.5, 1.5).attr("model", "vgg16".into()),
+            ),
+            Event::Span(Span::new(2, Some(1), "req:1", "execute", 1.0, 1.5)),
+            Event::Instant(Instant::new("pool:dev0", "alloc", 0.5).attr("bytes", 1024usize.into())),
+        ];
+        let s = chrome_json(&evs);
+        assert!(s.contains("\"displayTimeUnit\":\"ms\""));
+        assert!(s.contains("\"thread_name\""));
+        assert!(s.contains("\"name\":\"req:1\""), "track metadata names the lane");
+        assert!(s.contains("\"ts\":500000"), "0.5 virtual seconds -> 5e5 us");
+        assert!(s.contains("\"dur\":1000000"));
+        assert!(s.contains("\"parent_id\":\"1\""));
+        assert!(s.contains("\"ph\":\"i\""));
+        assert!(s.contains("\"model\":\"vgg16\""));
+    }
+
+    #[test]
+    fn tids_follow_first_appearance() {
+        let evs = vec![
+            Event::Instant(Instant::new("coordinator", "arrival", 0.0)),
+            Event::Instant(Instant::new("dev:0", "x", 1.0)),
+            Event::Instant(Instant::new("coordinator", "arrival", 2.0)),
+        ];
+        let s = chrome_json(&evs);
+        let coord = s.find("\"name\":\"coordinator\"").unwrap();
+        let dev = s.find("\"name\":\"dev:0\"").unwrap();
+        assert!(coord < dev, "coordinator appeared first, lane order keeps it first");
+    }
+}

@@ -1,0 +1,273 @@
+//! Traced fleet driving: the one arrival→completion pump shared by the
+//! `fleet` CLI and the trace difftests/proptests.
+//!
+//! `run_traced(fleet, arrivals, sink)` performs EXACTLY the untraced
+//! sequence — `complete_until(a.t)` before each `submit`, `drain` at
+//! the end — and, only when `sink.enabled()`, additionally emits the
+//! full request lifecycle:
+//!
+//! * `coordinator` track — `arrival` instants for every offered
+//!   request, `reject` instants for every refusal with a `cause`
+//!   attribute (`"memory"` vs `"queue_full"`, from the `mem_rejected`
+//!   delta);
+//! * `req:{job}` track — a `request` root span (arrival → finish) with
+//!   child spans `coalesce` (lane tag), `admit` (device + pool
+//!   reservation), `queue` (arrival → start), `execute` (start →
+//!   finish, with the dispatched backend and its roofline counters);
+//! * `dev:{d}` track — one `run` span per job (FIFO ⇒ strictly
+//!   disjoint, checked by `validate_disjoint`);
+//! * `pool:dev{d}` track — `alloc`/`free`/`evict` instants mirroring
+//!   the reservation lifecycle.
+//!
+//! All emission reads state the scheduler already computed; nothing
+//! here feeds back into placement or timing, so the no-op sink is
+//! bit-identical to the plain loop (gated by
+//! `rust/tests/trace_difftests.rs`).
+
+use std::collections::HashMap;
+
+use crate::backend;
+use crate::conv::ConvOp;
+use crate::fleet::{Arrival, Completion, Fleet};
+use crate::util::json::Json;
+
+use super::roofline::Roofline;
+use super::sink::TraceSink;
+use super::span::{Event, Instant, Span};
+
+/// Dispatched backend name + roofline attrs for one (op, batch, spec),
+/// memoized — fleets repeat the same few dozen shapes thousands of
+/// times.
+type RoofCache = HashMap<(ConvOp, usize, &'static str), (String, Vec<(String, Json)>)>;
+
+fn roofline_for(
+    cache: &mut RoofCache,
+    conv: &crate::conv::BatchedConvOp,
+    spec: &crate::gpusim::GpuSpec,
+) -> (String, Vec<(String, Json)>) {
+    cache
+        .entry((conv.op, conv.n, spec.name))
+        .or_insert_with(|| {
+            let d = backend::batched_op_dispatched(conv, spec);
+            let plan = backend::registry()
+                .backend(&d.backend)
+                .expect("dispatcher returned a registered backend")
+                .op_plan(&conv.op, spec)
+                .batched(conv.n);
+            (d.backend, Roofline::measure(spec, &plan).attrs())
+        })
+        .clone()
+}
+
+fn emit_frees(sink: &mut dyn TraceSink, done: &[Completion]) {
+    for c in done {
+        sink.record(Event::Instant(
+            Instant::new(&format!("pool:dev{}", c.device), "free", c.finish)
+                .attr("job", c.job.to_string().as_str().into())
+                .attr("bytes", c.conv.footprint_bytes().into()),
+        ));
+    }
+}
+
+/// Drive `fleet` through `arrivals` (then drain), tracing through
+/// `sink`.  Returns every completion in event order — exactly what the
+/// untraced pump returns.
+pub fn run_traced(
+    fleet: &mut Fleet,
+    arrivals: &[Arrival],
+    sink: &mut dyn TraceSink,
+) -> Vec<Completion> {
+    let mut completions: Vec<Completion> = Vec::with_capacity(arrivals.len());
+    let mut roof_cache: RoofCache = HashMap::new();
+    let mut emitted = 0usize;
+
+    for a in arrivals {
+        completions.extend(fleet.complete_until(a.t));
+        if sink.enabled() {
+            emit_frees(sink, &completions[emitted..]);
+            emitted = completions.len();
+            sink.record(Event::Instant(
+                Instant::new("coordinator", "arrival", a.t)
+                    .attr("model", a.model.into())
+                    .attr("op", a.conv.op.label().as_str().into())
+                    .attr("batch", a.conv.n.into()),
+            ));
+        }
+
+        let mem_before = fleet.stats.mem_rejected;
+        let evict_before: Vec<u64> = if sink.enabled() {
+            fleet.devices().iter().map(|d| d.pool().stats.evictions).collect()
+        } else {
+            Vec::new()
+        };
+
+        let placed = fleet.submit(a.conv, Some(a.model));
+        if !sink.enabled() {
+            continue;
+        }
+
+        match placed {
+            Some(pl) => {
+                let (backend_name, roof_attrs) =
+                    roofline_for(&mut roof_cache, &a.conv, &fleet.devices()[pl.device].spec);
+                let dev = &fleet.devices()[pl.device];
+                let track = format!("req:{}", pl.job);
+                let footprint = a.conv.footprint_bytes();
+
+                let rid = sink.next_span_id();
+                let root = Span::new(rid, None, &track, "request", a.t, pl.finish)
+                    .attr("job", pl.job.to_string().as_str().into())
+                    .attr("model", a.model.into())
+                    .attr("op", a.conv.op.label().as_str().into())
+                    .attr("batch", a.conv.n.into())
+                    .attr("device", pl.device.into())
+                    .attr("queue_wait_s", (pl.start - a.t).into())
+                    .attr("service_s", (pl.finish - pl.start).into());
+                sink.record(Event::Span(root));
+
+                let cid = sink.next_span_id();
+                sink.record(Event::Span(
+                    Span::new(cid, Some(rid), &track, "coalesce", a.t, a.t)
+                        .attr("lane", a.conv.op.label().as_str().into())
+                        .attr("images", a.conv.n.into()),
+                ));
+                let aid = sink.next_span_id();
+                sink.record(Event::Span(
+                    Span::new(aid, Some(rid), &track, "admit", a.t, a.t)
+                        .attr("device", pl.device.into())
+                        .attr("footprint_bytes", footprint.into())
+                        .attr("pool_in_use_bytes", dev.pool().in_use_slab_bytes().into()),
+                ));
+                let qid = sink.next_span_id();
+                sink.record(Event::Span(
+                    Span::new(qid, Some(rid), &track, "queue", a.t, pl.start)
+                        .attr("jobs_ahead", (dev.queue_len() - 1).into()),
+                ));
+                let xid = sink.next_span_id();
+                let mut exec = Span::new(xid, Some(rid), &track, "execute", pl.start, pl.finish)
+                    .attr("backend", backend_name.as_str().into());
+                for (k, v) in &roof_attrs {
+                    exec = exec.attr(k, v.clone());
+                }
+                sink.record(Event::Span(exec));
+
+                let did = sink.next_span_id();
+                sink.record(Event::Span(
+                    Span::new(did, None, &format!("dev:{}", pl.device), "run", pl.start, pl.finish)
+                        .attr("job", pl.job.to_string().as_str().into())
+                        .attr("model", a.model.into())
+                        .attr("op", a.conv.op.label().as_str().into()),
+                ));
+
+                sink.record(Event::Instant(
+                    Instant::new(&format!("pool:dev{}", pl.device), "alloc", a.t)
+                        .attr("job", pl.job.to_string().as_str().into())
+                        .attr("bytes", footprint.into())
+                        .attr("in_use_bytes", dev.pool().in_use_slab_bytes().into()),
+                ));
+                for (i, d) in fleet.devices().iter().enumerate() {
+                    let delta = d.pool().stats.evictions - evict_before[i];
+                    for _ in 0..delta {
+                        sink.record(Event::Instant(
+                            Instant::new(&format!("pool:dev{i}"), "evict", a.t)
+                                .attr("trigger_job", pl.job.to_string().as_str().into()),
+                        ));
+                    }
+                }
+            }
+            None => {
+                let cause = if fleet.stats.mem_rejected > mem_before { "memory" } else { "queue_full" };
+                sink.record(Event::Instant(
+                    Instant::new("coordinator", "reject", a.t)
+                        .attr("cause", cause.into())
+                        .attr("model", a.model.into())
+                        .attr("op", a.conv.op.label().as_str().into())
+                        .attr("batch", a.conv.n.into())
+                        .attr("footprint_bytes", a.conv.footprint_bytes().into()),
+                ));
+            }
+        }
+    }
+
+    let drained = fleet.drain();
+    completions.extend(drained);
+    if sink.enabled() {
+        emit_frees(sink, &completions[emitted..]);
+    }
+    completions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sink::{NoopSink, Recorder};
+    use super::super::span::{validate_disjoint, Event};
+    use super::*;
+    use crate::fleet::{offered_load, FleetConfig, Policy};
+    use crate::gpusim::gtx_1080ti;
+
+    fn small_fleet(cap: Option<usize>) -> Fleet {
+        Fleet::homogeneous(
+            2,
+            &gtx_1080ti(),
+            FleetConfig { policy: Policy::LeastLoaded, queue_bound: 4, capacity_bytes: cap },
+        )
+    }
+
+    #[test]
+    fn traced_run_validates_and_matches_untraced_completions() {
+        let load = offered_load(48, 2000.0, 0xF1EE7, None);
+        let mut plain = small_fleet(None);
+        let mut noop = NoopSink;
+        let base = run_traced(&mut plain, &load, &mut noop);
+
+        let mut traced = small_fleet(None);
+        let mut rec = Recorder::new();
+        let got = run_traced(&mut traced, &load, &mut rec);
+
+        assert_eq!(base.len(), got.len());
+        for (x, y) in base.iter().zip(&got) {
+            assert_eq!(x.job, y.job);
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits(), "tracing shifted timing");
+        }
+        rec.validate().unwrap();
+        validate_disjoint(rec.events(), "dev:").unwrap();
+        // every accepted request has a root span and an execute child
+        let requests = rec
+            .events()
+            .iter()
+            .filter(|e| matches!(e, Event::Span(s) if s.name == "request"))
+            .count();
+        let executes = rec
+            .events()
+            .iter()
+            .filter(|e| matches!(e, Event::Span(s) if s.name == "execute"))
+            .count();
+        assert_eq!(requests as u64, traced.stats.accepted);
+        assert_eq!(executes, requests);
+    }
+
+    #[test]
+    fn mem_rejections_carry_the_memory_cause() {
+        let load = offered_load(64, 5000.0, 0xF1EE7, Some(8));
+        let cap = load[0].conv.footprint_bytes() * 2;
+        let mut f = small_fleet(Some(cap));
+        let mut rec = Recorder::new();
+        run_traced(&mut f, &load, &mut rec);
+        assert!(f.stats.mem_rejected > 0, "tiny pool must shed on memory");
+        let mem_causes = rec
+            .events()
+            .iter()
+            .filter(|e| match e {
+                Event::Instant(i) => {
+                    i.name == "reject"
+                        && i.attrs.iter().any(|(k, v)| {
+                            k == "cause" && v.render() == "\"memory\""
+                        })
+                }
+                _ => false,
+            })
+            .count();
+        assert_eq!(mem_causes as u64, f.stats.mem_rejected);
+        rec.validate().unwrap();
+    }
+}

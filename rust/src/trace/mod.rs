@@ -1,0 +1,45 @@
+//! L5 observability — roofline counters, virtual-time span tracing,
+//! and exports, threaded through every layer without touching any
+//! timed arithmetic.
+//!
+//! The paper's whole argument is a memory-efficiency ratio (FMAs per
+//! byte fetched from global memory, §1); this layer makes that ratio —
+//! and everything around it — observable end to end:
+//!
+//! * `roofline` — per-kernel counters projected from
+//!   `gpusim::simulate_detailed` (DRAM loads/stores, FMA count,
+//!   FMA/byte, achieved vs peak FLOP/s and bandwidth, occupancy, cycle
+//!   split), valid for plain, `batched`, `decimated` and `grouped`
+//!   plans alike;
+//! * `span` / `sink` — the virtual-time span model, its structural
+//!   validator, and the `TraceSink` trait with `NoopSink` (the
+//!   default) and `Recorder`;
+//! * `fleet_trace` — the arrival→completion pump that traces the full
+//!   request lifecycle (arrival, coalescer lane, admission + pool
+//!   reservation, queue wait, batched execution with roofline attrs,
+//!   completion, rejections with causes, pool alloc/free/evict);
+//! * `report` — the EXPERIMENTS §12 roofline tables (Fig.4 / Fig.5 /
+//!   five models), mirrored by `python/mirror/validate_trace.py`;
+//! * `chrome` — Chrome-trace/Perfetto JSON export;
+//! * `prometheus` — text exposition of `coordinator::Metrics`.
+//!
+//! Zero-cost contract: every emission site observes results the timed
+//! path already computed and is guarded by `sink.enabled()`; with
+//! `NoopSink` all pinned tables stay bit-identical
+//! (`rust/tests/trace_difftests.rs` gates this).
+
+pub mod chrome;
+pub mod fleet_trace;
+pub mod prometheus;
+pub mod report;
+pub mod roofline;
+pub mod sink;
+pub mod span;
+
+pub use chrome::chrome_json;
+pub use fleet_trace::run_traced;
+pub use prometheus::exposition;
+pub use report::{fig4_rows, fig5_rows, model_rows, problem_row, roofline_table, rows_json, RooflineRow};
+pub use roofline::Roofline;
+pub use sink::{NoopSink, Recorder, TraceSink};
+pub use span::{validate, validate_disjoint, Event, Instant, Span, SpanId, EPS};

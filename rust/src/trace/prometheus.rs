@@ -1,0 +1,104 @@
+//! Prometheus text exposition (version 0.0.4) of `coordinator::Metrics`
+//! — counters, pool gauges, the cumulative latency histogram, and
+//! per-class p50/p99 summaries from the log-bucketed histograms (no
+//! sample retention anywhere).
+
+use std::fmt::Write;
+
+use crate::coordinator::Metrics;
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Render `m` in Prometheus text format.
+pub fn exposition(m: &Metrics) -> String {
+    let mut out = String::new();
+    counter(&mut out, "pasconv_requests_total", "requests received", m.requests);
+    counter(&mut out, "pasconv_responses_total", "responses served", m.responses);
+    counter(&mut out, "pasconv_errors_total", "request errors", m.errors);
+    counter(&mut out, "pasconv_batches_total", "batches executed", m.batches_executed);
+    counter(&mut out, "pasconv_batched_requests_total", "requests served via batches", m.batched_requests);
+    counter(&mut out, "pasconv_conv_batches_total", "coalesced conv micro-batches", m.conv_batches_executed);
+    counter(&mut out, "pasconv_coalesced_convs_total", "conv requests coalesced", m.coalesced_convs);
+    counter(&mut out, "pasconv_plans_tuned_total", "conv plans pre-tuned", m.plans_tuned);
+    counter(&mut out, "pasconv_pooled_models_total", "pooled model executions", m.pooled_models);
+    counter(&mut out, "pasconv_pool_evictions_total", "pool slab evictions", m.pool_evictions);
+    counter(&mut out, "pasconv_pool_reuse_hits_total", "pool slab reuse hits", m.pool_reuse_hits);
+    gauge(&mut out, "pasconv_pool_capacity_bytes", "executor pool cap", m.pool_capacity_bytes);
+    gauge(&mut out, "pasconv_pool_in_use_bytes", "executor pool occupancy", m.pool_in_use_bytes);
+    gauge(&mut out, "pasconv_pool_fragmentation_bytes", "slab minus requested bytes", m.pool_fragmentation_bytes);
+    gauge(&mut out, "pasconv_pool_peak_bytes", "peak pool occupancy", m.pool_peak_bytes);
+
+    // the latency histogram, cumulative le-buckets per the exposition
+    // format (all times are VIRTUAL seconds)
+    let name = "pasconv_latency_virtual_seconds";
+    let _ = writeln!(out, "# HELP {name} request latency in virtual seconds");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (le, c) in m.latency.buckets() {
+        cum += c;
+        let _ = writeln!(out, "{name}_bucket{{le=\"{le:e}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", m.latency.count());
+    let _ = writeln!(out, "{name}_sum {}", m.latency.sum());
+    let _ = writeln!(out, "{name}_count {}", m.latency.count());
+
+    // per-class quantile summaries from the per-class histograms
+    let cname = "pasconv_class_latency_virtual_seconds";
+    if !m.latency_by_class.is_empty() {
+        let _ = writeln!(out, "# HELP {cname} per-class latency quantiles (virtual seconds)");
+        let _ = writeln!(out, "# TYPE {cname} summary");
+        for (class, h) in &m.latency_by_class {
+            for q in [0.5, 0.9, 0.99] {
+                let _ = writeln!(
+                    out,
+                    "{cname}{{class=\"{class}\",quantile=\"{q}\"}} {}",
+                    h.quantile(q)
+                );
+            }
+            let _ = writeln!(out, "{cname}_sum{{class=\"{class}\"}} {}", h.sum());
+            let _ = writeln!(out, "{cname}_count{{class=\"{class}\"}} {}", h.count());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exposition_renders_counters_buckets_and_classes() {
+        let mut m = Metrics::default();
+        m.requests = 7;
+        m.record_response("vgg16_b4", 1e-3);
+        m.record_response("vgg16_b4", 4e-3);
+        m.record_response("alexnet_b1", 2e-4);
+        let s = exposition(&m);
+        assert!(s.contains("pasconv_requests_total 7"));
+        assert!(s.contains("# TYPE pasconv_latency_virtual_seconds histogram"));
+        assert!(s.contains("le=\"+Inf\"} 3"));
+        assert!(s.contains("pasconv_latency_virtual_seconds_count 3"));
+        assert!(s.contains("class=\"vgg16_b4\",quantile=\"0.99\""));
+        assert!(s.contains("pasconv_class_latency_virtual_seconds_count{class=\"alexnet_b1\"} 1"));
+        // cumulative buckets are monotone
+        let mut last = 0u64;
+        for line in s.lines().filter(|l| l.starts_with("pasconv_latency_virtual_seconds_bucket{le=\"")) {
+            if line.contains("+Inf") {
+                continue;
+            }
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "{line}");
+            last = v;
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! The sink trait every traced code path writes through, and its two
+//! implementations: `NoopSink` (the default — zero allocation, zero
+//! branching beyond one `enabled()` check at each emission site) and
+//! `Recorder` (an in-memory buffer that validates and exports).
+//!
+//! The zero-cost contract: traced variants *observe* results that were
+//! already computed — they never add arithmetic to the timed path — and
+//! every emission site is guarded by `sink.enabled()`.  With `NoopSink`
+//! the guarded blocks are dead, so all pinned timings stay
+//! bit-identical (gated by `rust/tests/trace_difftests.rs`).
+
+use super::chrome::chrome_json;
+use super::span::{validate, Event, SpanId};
+
+/// Where trace events go.
+pub trait TraceSink {
+    /// Emitters must guard every event-construction block with this —
+    /// it is the whole zero-cost-when-disabled mechanism.
+    fn enabled(&self) -> bool;
+    /// Record one event.  May be a no-op.
+    fn record(&mut self, ev: Event);
+    /// Allocate a fresh span id (0 when disabled; real ids start at 1).
+    fn next_span_id(&mut self) -> SpanId;
+}
+
+/// The disabled sink: answers `false`, drops everything, hands out 0.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn record(&mut self, _ev: Event) {}
+    fn next_span_id(&mut self) -> SpanId {
+        0
+    }
+}
+
+/// An in-memory recorder: keeps events in emission order, validates
+/// them, and renders Chrome-trace JSON.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    events: Vec<Event>,
+    next_id: SpanId,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder { events: Vec::new(), next_id: 0 }
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Run the structural validator over everything recorded so far.
+    pub fn validate(&self) -> Result<(), String> {
+        validate(&self.events)
+    }
+
+    /// Render everything recorded so far as Chrome-trace JSON
+    /// (loadable by Perfetto / `chrome://tracing`).
+    pub fn chrome_json(&self) -> String {
+        chrome_json(&self.events)
+    }
+}
+
+impl TraceSink for Recorder {
+    fn enabled(&self) -> bool {
+        true
+    }
+    fn record(&mut self, ev: Event) {
+        self.events.push(ev);
+    }
+    fn next_span_id(&mut self) -> SpanId {
+        self.next_id += 1;
+        self.next_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::{Instant, Span};
+    use super::*;
+
+    #[test]
+    fn noop_sink_is_disabled_and_ids_are_zero() {
+        let mut s = NoopSink;
+        assert!(!s.enabled());
+        assert_eq!(s.next_span_id(), 0);
+        s.record(Event::Instant(Instant::new("a", "x", 0.0))); // dropped
+    }
+
+    #[test]
+    fn recorder_keeps_order_and_mints_fresh_ids() {
+        let mut r = Recorder::new();
+        assert!(r.enabled());
+        let a = r.next_span_id();
+        let b = r.next_span_id();
+        assert_eq!((a, b), (1, 2));
+        r.record(Event::Span(Span::new(a, None, "t", "outer", 0.0, 2.0)));
+        r.record(Event::Span(Span::new(b, Some(a), "t", "inner", 0.0, 1.0)));
+        assert_eq!(r.len(), 2);
+        r.validate().unwrap();
+        assert!(r.chrome_json().contains("traceEvents"));
+    }
+}

@@ -1,0 +1,313 @@
+//! Virtual-time span model and its structural validator.
+//!
+//! A `Span` is a half-open interval `[t0, t1]` of *virtual* seconds on
+//! a named track (one track per timeline lane: `coordinator`,
+//! `req:{job}`, `dev:{d}`, `pool:dev{d}`, `model:{name}` …), optionally
+//! parented to another span by id.  An `Instant` is a point event on a
+//! track.  Both carry structured attributes (`util::json::Json`
+//! values), so exports never re-derive anything.
+//!
+//! `validate` enforces the invariants every emitter in this crate must
+//! keep (and which `rust/tests/trace_proptests.rs` and the Python
+//! mirror check on real fleet traces):
+//!
+//! 1. every timestamp is finite and `t1 >= t0`;
+//! 2. span ids are unique;
+//! 3. a child lies inside its parent's interval (well-nested by id);
+//! 4. on any one track, spans are nested-or-disjoint — no partial
+//!    overlap (well-nested by time);
+//! 5. per (track, name) stream, emission order is monotone in virtual
+//!    time (spans by `t0`, instants by `t`).
+//!
+//! All comparisons use an absolute `EPS` so exactly-touching intervals
+//! (a queue span ending where the execute span starts) are legal.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::json::Json;
+
+/// Absolute tolerance for interval comparisons, seconds.  Virtual
+/// timestamps are exact f64 arithmetic, but derived endpoints (t0 +
+/// cumulative sums) can differ from a parent's endpoint by rounding.
+pub const EPS: f64 = 1e-9;
+
+/// Span identifier; 0 is reserved (the no-op sink's answer).
+pub type SpanId = u64;
+
+/// A closed interval of virtual time on a track.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub id: SpanId,
+    pub parent: Option<SpanId>,
+    pub track: String,
+    pub name: String,
+    /// virtual seconds
+    pub t0: f64,
+    pub t1: f64,
+    pub attrs: Vec<(String, Json)>,
+}
+
+impl Span {
+    pub fn new(id: SpanId, parent: Option<SpanId>, track: &str, name: &str, t0: f64, t1: f64) -> Span {
+        Span { id, parent, track: track.to_string(), name: name.to_string(), t0, t1, attrs: Vec::new() }
+    }
+
+    /// Attach a structured attribute (builder style).
+    pub fn attr(mut self, key: &str, value: Json) -> Span {
+        self.attrs.push((key.to_string(), value));
+        self
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+/// A point event on a track (pool alloc/free/evict, arrivals, rejects).
+#[derive(Clone, Debug)]
+pub struct Instant {
+    pub track: String,
+    pub name: String,
+    /// virtual seconds
+    pub t: f64,
+    pub attrs: Vec<(String, Json)>,
+}
+
+impl Instant {
+    pub fn new(track: &str, name: &str, t: f64) -> Instant {
+        Instant { track: track.to_string(), name: name.to_string(), t, attrs: Vec::new() }
+    }
+
+    pub fn attr(mut self, key: &str, value: Json) -> Instant {
+        self.attrs.push((key.to_string(), value));
+        self
+    }
+}
+
+/// What a `TraceSink` records.
+#[derive(Clone, Debug)]
+pub enum Event {
+    Span(Span),
+    Instant(Instant),
+}
+
+impl Event {
+    pub fn track(&self) -> &str {
+        match self {
+            Event::Span(s) => &s.track,
+            Event::Instant(i) => &i.track,
+        }
+    }
+}
+
+/// Check the five structural invariants over an emission-ordered event
+/// stream.  `Err` carries a human-readable description of the first
+/// violation found.
+pub fn validate(events: &[Event]) -> Result<(), String> {
+    let mut ids: BTreeSet<SpanId> = BTreeSet::new();
+    let mut by_id: BTreeMap<SpanId, (f64, f64)> = BTreeMap::new();
+
+    // pass 1: field sanity, id uniqueness, interval table
+    for ev in events {
+        match ev {
+            Event::Span(s) => {
+                if !s.t0.is_finite() || !s.t1.is_finite() {
+                    return Err(format!("span {} '{}': non-finite time", s.id, s.name));
+                }
+                if s.t1 < s.t0 {
+                    return Err(format!("span {} '{}': t1 {} < t0 {}", s.id, s.name, s.t1, s.t0));
+                }
+                if !ids.insert(s.id) {
+                    return Err(format!("duplicate span id {}", s.id));
+                }
+                by_id.insert(s.id, (s.t0, s.t1));
+            }
+            Event::Instant(i) => {
+                if !i.t.is_finite() {
+                    return Err(format!("instant '{}': non-finite time", i.name));
+                }
+            }
+        }
+    }
+
+    // pass 2: parent containment (well-nested by id)
+    for ev in events {
+        if let Event::Span(s) = ev {
+            if let Some(pid) = s.parent {
+                let Some(&(pt0, pt1)) = by_id.get(&pid) else {
+                    return Err(format!("span {} '{}': unknown parent {}", s.id, s.name, pid));
+                };
+                if s.t0 < pt0 - EPS || s.t1 > pt1 + EPS {
+                    return Err(format!(
+                        "span {} '{}' [{}, {}] escapes parent {} [{}, {}]",
+                        s.id, s.name, s.t0, s.t1, pid, pt0, pt1
+                    ));
+                }
+            }
+        }
+    }
+
+    // pass 3: per-track nested-or-disjoint (well-nested by time).
+    // Sort each track's spans by (t0 asc, t1 desc) and sweep a stack:
+    // a span must either start after the enclosing span ends, or end
+    // inside it.  Partial overlap is the only failure.
+    let mut per_track: BTreeMap<&str, Vec<&Span>> = BTreeMap::new();
+    for ev in events {
+        if let Event::Span(s) = ev {
+            per_track.entry(s.track.as_str()).or_default().push(s);
+        }
+    }
+    for (track, spans) in per_track.iter_mut() {
+        spans.sort_by(|a, b| a.t0.total_cmp(&b.t0).then(b.t1.total_cmp(&a.t1)));
+        let mut stack: Vec<&Span> = Vec::new();
+        for s in spans.iter() {
+            while let Some(top) = stack.last() {
+                if top.t1 <= s.t0 + EPS {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(top) = stack.last() {
+                if s.t1 > top.t1 + EPS {
+                    return Err(format!(
+                        "track '{}': span {} '{}' [{}, {}] partially overlaps {} '{}' [{}, {}]",
+                        track, s.id, s.name, s.t0, s.t1, top.id, top.name, top.t0, top.t1
+                    ));
+                }
+            }
+            stack.push(s);
+        }
+    }
+
+    // pass 4: per-(track, name) monotone emission timestamps
+    let mut last_span: BTreeMap<(&str, &str), f64> = BTreeMap::new();
+    let mut last_instant: BTreeMap<(&str, &str), f64> = BTreeMap::new();
+    for ev in events {
+        match ev {
+            Event::Span(s) => {
+                let key = (s.track.as_str(), s.name.as_str());
+                if let Some(&prev) = last_span.get(&key) {
+                    if s.t0 + EPS < prev {
+                        return Err(format!(
+                            "track '{}': span stream '{}' not monotone ({} after {})",
+                            s.track, s.name, s.t0, prev
+                        ));
+                    }
+                }
+                last_span.insert(key, s.t0);
+            }
+            Event::Instant(i) => {
+                let key = (i.track.as_str(), i.name.as_str());
+                if let Some(&prev) = last_instant.get(&key) {
+                    if i.t + EPS < prev {
+                        return Err(format!(
+                            "track '{}': instant stream '{}' not monotone ({} after {})",
+                            i.track, i.name, i.t, prev
+                        ));
+                    }
+                }
+                last_instant.insert(key, i.t);
+            }
+        }
+    }
+
+    Ok(())
+}
+
+/// Additionally require that spans on every track whose name starts
+/// with `prefix` are *strictly disjoint* (a device runs one job at a
+/// time — nesting is not enough there).
+pub fn validate_disjoint(events: &[Event], prefix: &str) -> Result<(), String> {
+    let mut per_track: BTreeMap<&str, Vec<&Span>> = BTreeMap::new();
+    for ev in events {
+        if let Event::Span(s) = ev {
+            if s.track.starts_with(prefix) {
+                per_track.entry(s.track.as_str()).or_default().push(s);
+            }
+        }
+    }
+    for (track, spans) in per_track.iter_mut() {
+        spans.sort_by(|a, b| a.t0.total_cmp(&b.t0));
+        for w in spans.windows(2) {
+            if w[1].t0 + EPS < w[0].t1 {
+                return Err(format!(
+                    "track '{}': spans {} and {} overlap ([{}, {}] vs [{}, {}])",
+                    track, w[0].id, w[1].id, w[0].t0, w[0].t1, w[1].t0, w[1].t1
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: SpanId, parent: Option<SpanId>, track: &str, name: &str, t0: f64, t1: f64) -> Event {
+        Event::Span(Span::new(id, parent, track, name, t0, t1))
+    }
+
+    #[test]
+    fn nested_and_sequential_spans_validate() {
+        let evs = vec![
+            span(1, None, "req:1", "request", 0.0, 10.0),
+            span(2, Some(1), "req:1", "queue", 0.0, 4.0),
+            span(3, Some(1), "req:1", "execute", 4.0, 10.0),
+            span(4, None, "req:2", "request", 5.0, 12.0),
+            Event::Instant(Instant::new("pool:dev0", "alloc", 0.0)),
+            Event::Instant(Instant::new("pool:dev0", "alloc", 5.0)),
+        ];
+        validate(&evs).unwrap();
+    }
+
+    #[test]
+    fn partial_overlap_on_a_track_is_rejected() {
+        let evs = vec![
+            span(1, None, "dev:0", "run", 0.0, 5.0),
+            span(2, None, "dev:0", "run", 3.0, 8.0),
+        ];
+        assert!(validate(&evs).unwrap_err().contains("partially overlaps"));
+    }
+
+    #[test]
+    fn child_escaping_parent_is_rejected() {
+        let evs = vec![
+            span(1, None, "req:1", "request", 0.0, 5.0),
+            span(2, Some(1), "req:1", "execute", 4.0, 7.0),
+        ];
+        assert!(validate(&evs).unwrap_err().contains("escapes parent"));
+    }
+
+    #[test]
+    fn duplicate_ids_and_unknown_parents_are_rejected() {
+        let dup = vec![
+            span(1, None, "a", "x", 0.0, 1.0),
+            span(1, None, "b", "y", 0.0, 1.0),
+        ];
+        assert!(validate(&dup).unwrap_err().contains("duplicate"));
+        let orphan = vec![span(2, Some(9), "a", "x", 0.0, 1.0)];
+        assert!(validate(&orphan).unwrap_err().contains("unknown parent"));
+    }
+
+    #[test]
+    fn non_monotone_stream_is_rejected() {
+        let evs = vec![
+            span(1, None, "dev:0", "run", 5.0, 6.0),
+            span(2, None, "dev:0", "run", 0.0, 1.0),
+        ];
+        assert!(validate(&evs).unwrap_err().contains("not monotone"));
+    }
+
+    #[test]
+    fn disjointness_check_catches_nested_device_spans() {
+        let evs = vec![
+            span(1, None, "dev:0", "run", 0.0, 10.0),
+            span(2, None, "dev:0", "warm", 2.0, 4.0),
+        ];
+        validate(&evs).unwrap(); // nested is fine in general...
+        assert!(validate_disjoint(&evs, "dev:").is_err()); // ...not on a device
+        validate_disjoint(&evs, "pool:").unwrap(); // other prefixes untouched
+    }
+}

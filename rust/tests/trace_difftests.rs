@@ -1,0 +1,194 @@
+//! Difftests gating the observability layer's zero-cost contract:
+//!
+//! 1. `simulate` IS `simulate_detailed(..).result` — bitwise, across
+//!    every dispatched plan of the pinned suites and the
+//!    batched/decimated/grouped variants, on both testbed GPUs.  The
+//!    pinned EXPERIMENTS tables (§3–§11) are all produced through
+//!    `simulate`, so this is the bit-identity gate for the whole stack.
+//! 2. `execute_batched_traced` returns `execute_batched`'s report
+//!    bitwise under BOTH sinks (tracing observes, never changes).
+//! 3. `trace::run_traced` with the no-op sink replays the plain
+//!    complete_until/submit/drain pump bitwise (completions and stats),
+//!    and with a recorder produces a validating, well-formed trace
+//!    whose export round-trips the basic Chrome-trace structure.
+
+use pasconv::backend;
+use pasconv::conv::suites::{fig4_suite, fig5_suite, model_ops};
+use pasconv::fleet::{offered_load, Completion, Fleet, FleetConfig, Policy};
+use pasconv::gpusim::{gtx_1080ti, simulate, simulate_detailed, titan_x_maxwell, GpuSpec};
+use pasconv::graph::{execute_batched, execute_batched_traced, model_graph, MODEL_NAMES};
+use pasconv::trace::{run_traced, Event, NoopSink, Recorder};
+
+fn assert_result_bits(ctx: &str, g: &GpuSpec, plan: &pasconv::gpusim::KernelPlan) {
+    let r = simulate(g, plan);
+    let b = simulate_detailed(g, plan);
+    assert_eq!(r.cycles.to_bits(), b.result.cycles.to_bits(), "{ctx}: cycles");
+    assert_eq!(r.seconds.to_bits(), b.result.seconds.to_bits(), "{ctx}: seconds");
+    assert_eq!(r.gflops.to_bits(), b.result.gflops.to_bits(), "{ctx}: gflops");
+    assert_eq!(
+        r.stall_fraction.to_bits(),
+        b.result.stall_fraction.to_bits(),
+        "{ctx}: stall_fraction"
+    );
+    assert_eq!(r.bottleneck, b.result.bottleneck, "{ctx}: bottleneck");
+}
+
+#[test]
+fn simulate_is_detailed_result_bitwise_across_pinned_suites_and_variants() {
+    for g in [gtx_1080ti(), titan_x_maxwell()] {
+        for p in fig4_suite().into_iter().chain(fig5_suite()) {
+            let plan = backend::dispatch_plan(&p, &g);
+            assert_result_bits(&format!("{} plain", p.label()), &g, &plan);
+            assert_result_bits(&format!("{} xb4", p.label()), &g, &plan.batched(4));
+            assert_result_bits(&format!("{} dec", p.label()), &g, &plan.decimated(0.5));
+        }
+    }
+}
+
+#[test]
+fn simulate_is_detailed_result_bitwise_across_model_op_plans() {
+    // the op-dispatched plans cover strided (decimated), padded and
+    // grouped schedules with real model geometry
+    let g = gtx_1080ti();
+    for (model, ops) in model_ops() {
+        for op in ops {
+            let plan = backend::dispatch_op_plan(&op, &g);
+            assert_result_bits(&format!("{model} {}", op.label()), &g, &plan);
+            assert_result_bits(&format!("{model} {} xb8", op.label()), &g, &plan.batched(8));
+        }
+    }
+}
+
+#[test]
+fn traced_graph_execution_is_bitwise_identical_under_both_sinks() {
+    let g = gtx_1080ti();
+    for name in MODEL_NAMES {
+        for batch in [1usize, 4] {
+            let graph = model_graph(name).unwrap();
+            let base = execute_batched(&graph, &g, backend::dispatch_op_plan, batch);
+            let mut noop = NoopSink;
+            let with_noop = execute_batched_traced(
+                &graph,
+                &g,
+                backend::dispatch_op_plan,
+                batch,
+                &mut noop,
+                0.0,
+                name,
+            );
+            let mut rec = Recorder::new();
+            let with_rec = execute_batched_traced(
+                &graph,
+                &g,
+                backend::dispatch_op_plan,
+                batch,
+                &mut rec,
+                0.0,
+                name,
+            );
+            for r in [&with_noop, &with_rec] {
+                assert_eq!(
+                    base.total_seconds.to_bits(),
+                    r.total_seconds.to_bits(),
+                    "{name} xb{batch}: total"
+                );
+                assert_eq!(base.conv_seconds.to_bits(), r.conv_seconds.to_bits());
+                assert_eq!(base.glue_seconds.to_bits(), r.glue_seconds.to_bits());
+                assert_eq!(base.nodes.len(), r.nodes.len());
+                for (x, y) in base.nodes.iter().zip(&r.nodes) {
+                    assert_eq!(x.seconds.to_bits(), y.seconds.to_bits(), "{name}: {}", x.name);
+                }
+            }
+            // the recorder saw one root + one child per node, well-formed
+            assert_eq!(rec.events().len(), 1 + base.nodes.len(), "{name} xb{batch}");
+            rec.validate().unwrap();
+        }
+    }
+}
+
+fn fleet_for(cap_mib: Option<usize>) -> Fleet {
+    Fleet::homogeneous(
+        4,
+        &gtx_1080ti(),
+        FleetConfig {
+            policy: Policy::LeastLoadedBytes,
+            queue_bound: 8,
+            capacity_bytes: cap_mib.map(|m| m * 1024 * 1024),
+        },
+    )
+}
+
+fn plain_pump(fleet: &mut Fleet, load: &[pasconv::fleet::Arrival]) -> Vec<Completion> {
+    // the exact pre-trace CLI loop
+    let mut completions = Vec::with_capacity(load.len());
+    for a in load {
+        completions.extend(fleet.complete_until(a.t));
+        fleet.submit(a.conv, Some(a.model));
+    }
+    completions.extend(fleet.drain());
+    completions
+}
+
+#[test]
+fn run_traced_with_noop_sink_replays_the_plain_pump_bitwise() {
+    for cap in [None, Some(16)] {
+        let load = offered_load(192, 3000.0, 0xF1EE7, None);
+        let mut f1 = fleet_for(cap);
+        let base = plain_pump(&mut f1, &load);
+        let mut f2 = fleet_for(cap);
+        let mut noop = NoopSink;
+        let got = run_traced(&mut f2, &load, &mut noop);
+        assert_eq!(base.len(), got.len(), "cap {cap:?}");
+        for (x, y) in base.iter().zip(&got) {
+            assert_eq!(x.job, y.job);
+            assert_eq!(x.device, y.device);
+            assert_eq!(x.start.to_bits(), y.start.to_bits());
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
+        assert_eq!(f1.stats.accepted, f2.stats.accepted);
+        assert_eq!(f1.stats.rejected, f2.stats.rejected);
+        assert_eq!(f1.stats.mem_rejected, f2.stats.mem_rejected);
+        assert_eq!(f1.now().to_bits(), f2.now().to_bits());
+    }
+}
+
+#[test]
+fn recorded_fleet_trace_validates_and_exports_chrome_json() {
+    let load = offered_load(96, 3000.0, 0xF1EE7, None);
+    let mut f = fleet_for(Some(24));
+    let mut rec = Recorder::new();
+    let completions = run_traced(&mut f, &load, &mut rec);
+    rec.validate().unwrap();
+    pasconv::trace::validate_disjoint(rec.events(), "dev:").unwrap();
+    // every completion's request span exists with matching timestamps
+    for c in &completions {
+        let span = rec
+            .events()
+            .iter()
+            .find_map(|e| match e {
+                Event::Span(s) if s.track == format!("req:{}", c.job) && s.name == "request" => {
+                    Some(s)
+                }
+                _ => None,
+            })
+            .unwrap_or_else(|| panic!("job {} has no request span", c.job));
+        assert_eq!(span.t1.to_bits(), c.finish.to_bits());
+    }
+    let json = rec.chrome_json();
+    assert!(json.starts_with('{') && json.ends_with('}'));
+    assert!(json.contains("\"traceEvents\""));
+    assert!(json.contains("\"thread_name\""));
+    assert!(json.contains("\"request\""));
+}
+
+#[test]
+fn prometheus_exposition_matches_metric_counts() {
+    let mut m = pasconv::coordinator::Metrics::default();
+    m.requests = 42;
+    m.record_response("vgg16_b4", 1.5e-3);
+    m.record_response("vgg16_b4", 3.0e-3);
+    let s = pasconv::trace::exposition(&m);
+    assert!(s.contains("pasconv_requests_total 42"));
+    assert!(s.contains("pasconv_latency_virtual_seconds_count 2"));
+    assert!(s.contains("class=\"vgg16_b4\",quantile=\"0.5\""));
+}
