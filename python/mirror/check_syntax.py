@@ -1,0 +1,155 @@
+r"""Delimiter-balance scan for the rust/ tree: catches the class of
+errors a toolchain-free edit can introduce (unbalanced braces/brackets/
+parens, unterminated strings or comments) without rustc.  This is NOT a
+parser — it tokenizes just enough of Rust's lexical grammar to know
+which bytes are code:
+
+* line comments (//...) and nested block comments (/* /* */ */)
+* string literals with escapes, byte strings (b"..")
+* raw strings r"..", r#".."#, br#".."# with any hash depth
+* char literals ('x', '\n', '\u{1F600}') vs lifetimes (&'a, <'de>)
+
+Run as `python3 check_syntax.py [root]` (default: the repo's rust/
+directory); exits non-zero listing every unbalanced file.  CI runs it
+alongside the mirror validators so a syntax-broken .rs file fails fast
+even in jobs that never invoke cargo.
+"""
+
+import sys
+from pathlib import Path
+
+OPEN = {"(": ")", "[": "]", "{": "}"}
+CLOSE = {")": "(", "]": "[", "}": "{"}
+
+
+def strip_code(text):
+    """Yield (line_number, char) for every char that is real code —
+    comments, strings and char literals are skipped entirely."""
+    i, n, line = 0, len(text), 1
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if c == "\n":
+            line += 1
+            i += 1
+        elif c == "/" and nxt == "/":
+            while i < n and text[i] != "\n":
+                i += 1
+        elif c == "/" and nxt == "*":
+            depth, i = 1, i + 2
+            while i < n and depth:
+                if text[i] == "\n":
+                    line += 1
+                if text[i : i + 2] == "/*":
+                    depth, i = depth + 1, i + 2
+                elif text[i : i + 2] == "*/":
+                    depth, i = depth - 1, i + 2
+                else:
+                    i += 1
+            if depth:
+                raise SyntaxError(f"line {line}: unterminated block comment")
+        elif c in "rb" and _raw_start(text, i):
+            j = i
+            while text[j] in "rb":
+                j += 1
+            hashes = 0
+            while text[j] == "#":
+                hashes, j = hashes + 1, j + 1
+            close = '"' + "#" * hashes
+            end = text.find(close, j + 1)
+            if end < 0:
+                raise SyntaxError(f"line {line}: unterminated raw string")
+            line += text.count("\n", i, end)
+            i = end + len(close)
+        elif c == '"' or (c == "b" and nxt == '"'):
+            i += 2 if c == "b" else 1
+            while i < n:
+                if text[i] == "\\":
+                    i += 2
+                elif text[i] == '"':
+                    i += 1
+                    break
+                else:
+                    if text[i] == "\n":
+                        line += 1
+                    i += 1
+            else:
+                raise SyntaxError(f"line {line}: unterminated string")
+        elif c == "'":
+            # lifetime ('a, 'static) or char literal?  A char literal
+            # always has a closing quote within a few chars; a lifetime
+            # never does.  Escapes and \u{..} make "a few" up to 10.
+            j = i + 1
+            if j < n and text[j] == "\\":
+                k = text.find("'", j + 1)
+                if k < 0:
+                    raise SyntaxError(f"line {line}: unterminated char literal")
+                i = k + 1
+            elif j + 1 < n and text[j + 1] == "'":
+                i = j + 2  # plain 'x'
+            else:
+                yield line, c  # lifetime tick: harmless, not a delimiter
+                i += 1
+        else:
+            yield line, c
+            i += 1
+
+
+def _raw_start(text, i):
+    """True when text[i:] starts a raw/byte-raw string literal (r", r#",
+    br", rb#"...), not an identifier like `radius`."""
+    j = i
+    seen = set()
+    while j < len(text) and text[j] in "rb" and text[j] not in seen:
+        seen.add(text[j])
+        j += 1
+    if "r" not in seen:
+        return False
+    while j < len(text) and text[j] == "#":
+        j += 1
+    return j < len(text) and text[j] == '"'
+
+
+def check_file(path):
+    """Return a list of error strings (empty = balanced)."""
+    text = path.read_text()
+    stack = []  # (line, open_char)
+    errors = []
+    try:
+        for line, c in strip_code(text):
+            if c in OPEN:
+                stack.append((line, c))
+            elif c in CLOSE:
+                if not stack:
+                    errors.append(f"line {line}: unmatched {c!r}")
+                    break
+                oline, o = stack.pop()
+                if OPEN[o] != c:
+                    errors.append(f"line {line}: {c!r} closes {o!r} from line {oline}")
+                    break
+    except SyntaxError as e:
+        errors.append(str(e))
+    if not errors:
+        for oline, o in stack:
+            errors.append(f"line {oline}: unclosed {o!r}")
+    return errors
+
+
+def main(argv):
+    root = Path(argv[1]) if len(argv) > 1 else Path(__file__).resolve().parents[2] / "rust"
+    files = sorted(root.rglob("*.rs")) if root.is_dir() else [root]
+    if not files:
+        print(f"check_syntax: no .rs files under {root}", file=sys.stderr)
+        return 2
+    bad = 0
+    for f in files:
+        errors = check_file(f)
+        for e in errors:
+            print(f"{f}: {e}", file=sys.stderr)
+        bad += bool(errors)
+    print(f"check_syntax: {len(files)} files, {bad} unbalanced")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

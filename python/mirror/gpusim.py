@@ -104,6 +104,36 @@ def latency_exposure(spec, threads_per_sm, round_bytes):
 
 # ---- pipeline ----
 
+# Loading strategies (pipeline.rs::Loading): how one pipeline stage's
+# global->shared transfer is organised across the block's warps.
+CYCLIC = "cyclic"      # default round-robin; the paper's depth-2 schedule
+TILEWISE = "tilewise"  # warp owns a contiguous tile: merges segments, but
+                       # serializes per warp so extra stages hide nothing
+ORDERED = "ordered"    # issue-ordered merge: segment gain AND stage
+                       # amortization, at a per-round ordering-sync cost
+LOADING_NAMES = (CYCLIC, TILEWISE, ORDERED)
+LOADING_TAGS = {CYCLIC: "cyc", TILEWISE: "tile", ORDERED: "ord"}
+
+MIN_STAGES = 2
+MAX_STAGES = 4
+# tilewise/ordered merge up to this many adjacent segments per issue
+TILE_MERGE_SEGMENTS = 4
+# per-round cost of the ordered strategy's issue-order synchronisation
+ORDERED_SYNC_CYCLES = 32.0
+
+
+def loading_efficiency(segment_bytes, base_eff, loading):
+    """Segment-coalescing profile of a loading strategy: tilewise and
+    ordered merge up to TILE_MERGE_SEGMENTS adjacent segments (capped at
+    the 128-byte transaction), scaling the stream efficiency by the
+    merged-over-base segment-efficiency ratio."""
+    if loading == CYCLIC:
+        return base_eff
+    merged = max(min(TILE_MERGE_SEGMENTS * segment_bytes, 128), segment_bytes)
+    gain = segment_efficiency(merged) / segment_efficiency(segment_bytes)
+    return min(base_eff * gain, 1.0)
+
+
 @dataclass(frozen=True)
 class Round:
     load_bytes: float
@@ -112,12 +142,27 @@ class Round:
     eff_override: Optional[float] = None
 
 
+def mixed_round(streams, fma_ops):
+    """Mirror of Round::mixed: a round fetching several constituent
+    streams [(bytes, segment_bytes), ...].  Efficiency is the bus-time
+    combination; the effective segment is total bytes over total segment
+    issues (a bus-weighted harmonic mean) — NOT a hardcoded 128."""
+    total = sum(b for b, _ in streams)
+    eff = combined_efficiency(
+        [(b, segment_efficiency(s)) for b, s in streams])
+    issues = sum(b / s for b, s in streams if s > 0)
+    seg = max(int(round(total / issues)), 1) if issues > 0 else 128
+    return Round(total, seg, fma_ops, eff)
+
+
 @dataclass
 class ExecConfig:
     sms_active: int
     threads_per_sm: int
     compute_efficiency: float
     launch_overhead_cycles: float
+    stages: int = 2
+    loading: str = CYCLIC
 
 
 def compute_cycles(spec, cfg, fma_ops):
@@ -129,16 +174,24 @@ def compute_cycles(spec, cfg, fma_ops):
 
 
 def load_cycles(spec, cfg, rnd):
+    """Per-round load cost under an s-stage software pipeline: with s-1
+    prefetches in flight the exposed latency is amortized by (s-1) for
+    cyclic/ordered loading (tilewise serializes per warp, so depth buys
+    nothing there); §3.2's hiding condition generalizes to
+    Th >= N_FMA / (s-1)."""
     if rnd.load_bytes <= 0.0:
         return 0.0
-    eff = rnd.eff_override if rnd.eff_override is not None else segment_efficiency(
+    base = rnd.eff_override if rnd.eff_override is not None else segment_efficiency(
         rnd.segment_bytes)
+    eff = loading_efficiency(rnd.segment_bytes, base, cfg.loading)
     per_sm_bw = spec.bytes_per_cycle() * eff / max(cfg.sms_active, 1)
     occ = min(cfg.threads_per_sm / spec.threads_required_per_sm(), 1.0)
     stream = rnd.load_bytes / (per_sm_bw * max(occ, 1e-9))
+    depth = 1.0 if cfg.loading == TILEWISE else float(cfg.stages - 1)
     exposed = spec.mem_latency_cycles * latency_exposure(
-        spec, cfg.threads_per_sm, rnd.load_bytes)
-    return exposed + stream
+        spec, cfg.threads_per_sm, rnd.load_bytes) / depth
+    sync = ORDERED_SYNC_CYCLES if cfg.loading == ORDERED else 0.0
+    return exposed + stream + sync
 
 
 def combined_efficiency(streams):
@@ -173,6 +226,15 @@ def simulate_pipeline_runs(spec, cfg, runs):
 WRITEBACK_TAIL_FRACTION = 0.15
 
 
+def writeback_tail_cycles(spec, output_bytes, stages):
+    """Un-overlapped final store burst: the ping-pong staging is
+    symmetric (outputs flush through the same s smem buffers), so the
+    tail is the last stage's share — 15% of the output at the baseline
+    depth 2, scaled by 2/s at deeper pipelines."""
+    frac = WRITEBACK_TAIL_FRACTION * 2.0 / stages
+    return frac * output_bytes / spec.bytes_per_cycle()
+
+
 @dataclass
 class KernelPlan:
     """Run-length plan: runs = [(Round, count), ...]."""
@@ -185,6 +247,35 @@ class KernelPlan:
     smem_bytes_per_sm: int
     total_fma: float
     launch_overhead_cycles: float
+    stages: int = 2
+    loading: str = CYCLIC
+    stage_bytes: int = 0
+
+    def staged(self, stages, loading=CYCLIC):
+        """Mirror of KernelPlan::staged: deepen the ping-pong pipeline to
+        `stages` buffers under `loading`; each stage past the baseline
+        two costs one more stage_bytes of shared memory."""
+        assert MIN_STAGES <= stages <= MAX_STAGES, self.name
+        assert loading in LOADING_NAMES, loading
+        assert self.stages == 2 and self.loading == CYCLIC, self.name
+        if stages == 2 and loading == CYCLIC:
+            return self
+        tag = f" s{stages}/{LOADING_TAGS[loading]}"
+        return KernelPlan(
+            name=self.name + tag,
+            runs=list(self.runs),
+            sms_active=self.sms_active,
+            threads_per_sm=self.threads_per_sm,
+            compute_efficiency=self.compute_efficiency,
+            output_bytes=self.output_bytes,
+            smem_bytes_per_sm=self.smem_bytes_per_sm
+            + (stages - 2) * self.stage_bytes,
+            total_fma=self.total_fma,
+            launch_overhead_cycles=self.launch_overhead_cycles,
+            stages=stages,
+            loading=loading,
+            stage_bytes=self.stage_bytes,
+        )
 
     def batched(self, n):
         assert n >= 1
@@ -200,6 +291,9 @@ class KernelPlan:
             smem_bytes_per_sm=self.smem_bytes_per_sm,
             total_fma=self.total_fma * n,
             launch_overhead_cycles=self.launch_overhead_cycles,
+            stages=self.stages,
+            loading=self.loading,
+            stage_bytes=self.stage_bytes,
         )
 
     def decimated(self, keep):
@@ -221,6 +315,9 @@ class KernelPlan:
             smem_bytes_per_sm=self.smem_bytes_per_sm,
             total_fma=self.total_fma * keep,
             launch_overhead_cycles=self.launch_overhead_cycles,
+            stages=self.stages,
+            loading=self.loading,
+            stage_bytes=self.stage_bytes,
         )
 
     def grouped(self, groups, max_sms):
@@ -241,17 +338,43 @@ class KernelPlan:
             smem_bytes_per_sm=self.smem_bytes_per_sm,
             total_fma=self.total_fma * groups,
             launch_overhead_cycles=self.launch_overhead_cycles,
+            stages=self.stages,
+            loading=self.loading,
+            stage_bytes=self.stage_bytes,
         )
 
 
-def simulate_cycles(spec, plan):
-    assert plan.smem_bytes_per_sm <= spec.shared_mem_bytes, plan.name
+def plan_dram_load_bytes(plan):
+    """Mirror of KernelPlan::dram_load_bytes on the run-length form."""
+    return sum(r.load_bytes * n for (r, n) in plan.runs) * plan.sms_active
+
+
+def simulate_parts(spec, plan):
+    """Mirror of simulate_detailed's cycle accounting: the pipeline
+    total, its stall cycles, and the charged writeback.  The writeback
+    charge is max(15% tail, DRAM bus floor excess): total time can never
+    undercut moving ALL traffic (loads + stores) at peak bandwidth, so
+    both roofline bandwidth fractions stay <= 1.0 (the PR-7 store-
+    accounting bug this fixes)."""
+    assert MIN_STAGES <= plan.stages <= MAX_STAGES, plan.name
+    assert plan.loading in LOADING_NAMES, plan.name
+    assert plan.smem_bytes_per_sm <= spec.shared_mem_bytes, \
+        f"{plan.name}: stage smem overflow ({plan.smem_bytes_per_sm} B " \
+        f"at {plan.stages} stages > {spec.shared_mem_bytes} B)"
     assert 1 <= plan.sms_active <= spec.sm_count
     cfg = ExecConfig(plan.sms_active, plan.threads_per_sm,
-                     plan.compute_efficiency, plan.launch_overhead_cycles)
-    total, _ = simulate_pipeline_runs(spec, cfg, plan.runs)
-    wb = WRITEBACK_TAIL_FRACTION * plan.output_bytes / spec.bytes_per_cycle()
-    return total + wb
+                     plan.compute_efficiency, plan.launch_overhead_cycles,
+                     plan.stages, plan.loading)
+    pipe_total, stall = simulate_pipeline_runs(spec, cfg, plan.runs)
+    tail = writeback_tail_cycles(spec, plan.output_bytes, plan.stages)
+    floor = (plan_dram_load_bytes(plan) + plan.output_bytes) / spec.bytes_per_cycle()
+    wb = max(tail, floor - pipe_total)
+    return pipe_total, stall, tail, wb
+
+
+def simulate_cycles(spec, plan):
+    pipe_total, _, _, wb = simulate_parts(spec, plan)
+    return pipe_total + wb
 
 
 # ---- occupancy (gpusim/occupancy.rs) ----

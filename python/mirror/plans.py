@@ -4,9 +4,8 @@ forms and the per-SM round recipes (run-length form)."""
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
-from gpusim import (ExecConfig, KernelPlan, Round, combined_efficiency,
-                    segment_efficiency, simulate_cycles,
-                    simulate_pipeline_runs)
+from gpusim import (ExecConfig, KernelPlan, Round, mixed_round,
+                    simulate_cycles, simulate_pipeline_runs)
 
 BYTES_F32 = 4
 LAUNCH_OVERHEAD_CYCLES = 4_000.0
@@ -161,6 +160,16 @@ def single_choice(p, spec, method, pp, q):
 
 # ---- plans/single_channel.rs ----
 
+def single_stage_bytes(p, spec, method, pp, q):
+    """One pipeline-stage buffer for the single-channel schedules: the
+    streamed map piece (+ halo) for FilterSplit, the streamed filter
+    piece for MapSplit.  Deepening the pipeline past 2 stages costs one
+    more of these per extra stage."""
+    if method == FILTER_SPLIT:
+        return (ceil_div(p.wy, pp) + p.k - 1) * p.wx * BYTES_F32
+    return ceil_div(p.m, q) * p.k * p.k * BYTES_F32
+
+
 def single_recipe(p, spec, c):
     assert p.is_single_channel()
     threads = paper_threads_per_sm(spec)
@@ -175,13 +184,13 @@ def single_recipe(p, spec, c):
         halo_bytes = ((p.k - 1) * p.wx * BYTES_F32) / sms
         fma = float(c.th1)
         filter_seg = min(m_per_sm * p.k * p.k * BYTES_F32, 128)
-        eff = combined_efficiency([
-            (filter_bytes, segment_efficiency(filter_seg)),
-            (piece_bytes + halo_bytes, segment_efficiency(row_seg)),
-        ])
-        first = Round(filter_bytes + piece_bytes + halo_bytes, 128, fma, eff)
+        first = mixed_round([
+            (filter_bytes, filter_seg),
+            (piece_bytes + halo_bytes, row_seg),
+        ], fma)
         tail = (Round(piece_bytes, row_seg, fma), c.p - 1) if c.p > 1 else None
-        return first, tail, sms, threads, c.d1_bytes
+        return first, tail, sms, threads, c.d1_bytes, \
+            single_stage_bytes(p, spec, c.method, c.p, c.q)
     else:
         wy_per_sm = ceil_div(p.wy, spec.sm_count)
         sms = min(ceil_div(p.wy, wy_per_sm), spec.sm_count)
@@ -190,17 +199,17 @@ def single_recipe(p, spec, c):
         piece_bytes = (m_per_round * p.k * p.k * BYTES_F32) / sms
         filter_seg = min(m_per_round * p.k * p.k * BYTES_F32, 128)
         fma = float(c.th2)
-        eff = combined_efficiency([
-            (piece_bytes, segment_efficiency(filter_seg)),
-            (strip_bytes, segment_efficiency(row_seg)),
-        ])
-        first = Round(strip_bytes + piece_bytes, 128, fma, eff)
+        first = mixed_round([
+            (piece_bytes, filter_seg),
+            (strip_bytes, row_seg),
+        ], fma)
         tail = (Round(piece_bytes, filter_seg, fma), c.q - 1) if c.q > 1 else None
-        return first, tail, sms, threads, c.d2_bytes
+        return first, tail, sms, threads, c.d2_bytes, \
+            single_stage_bytes(p, spec, c.method, c.p, c.q)
 
 
 def single_plan_with_choice(p, spec, c):
-    first, tail, sms, threads, smem = single_recipe(p, spec, c)
+    first, tail, sms, threads, smem, stage = single_recipe(p, spec, c)
     runs = [(first, 1)]
     if tail is not None:
         runs.append(tail)
@@ -215,6 +224,7 @@ def single_plan_with_choice(p, spec, c):
         smem_bytes_per_sm=min(smem, spec.shared_mem_bytes),
         total_fma=float(p.fma_ops()),
         launch_overhead_cycles=LAUNCH_OVERHEAD_CYCLES,
+        stage_bytes=stage,
     )
 
 
@@ -228,8 +238,26 @@ def m_prime_min(spec, s_bytes, wx_prime):
     return ceil_div(spec.n_fma() * BYTES_F32, s_bytes * wx_prime)
 
 
+def n_fma_required(spec, stages):
+    """Generalized §3.2(3): with s-1 prefetches in flight each round
+    need only cover 1/(s-1) of the memory latency, so the hiding
+    condition relaxes to Th >= N_FMA / (s - 1)."""
+    return spec.n_fma() / max(stages - 1, 1)
+
+
+def stage_bytes_multi(s_bytes, wx_prime, m_prime, k):
+    """One ping-pong stage of the multi-channel working set."""
+    return s_bytes * m_prime + wy_prime(s_bytes, k) * wx_prime * BYTES_F32
+
+
 def working_set_bytes(s_bytes, wx_prime, m_prime, k):
-    return 2 * (s_bytes * m_prime + wy_prime(s_bytes, k) * wx_prime * BYTES_F32)
+    return 2 * stage_bytes_multi(s_bytes, wx_prime, m_prime, k)
+
+
+def staged_working_set_bytes(s_bytes, wx_prime, m_prime, k, stages):
+    """Per-stage smem capacity: an s-stage pipeline holds s stage
+    buffers resident."""
+    return stages * stage_bytes_multi(s_bytes, wx_prime, m_prime, k)
 
 
 @dataclass(frozen=True)
@@ -296,11 +324,10 @@ def stride_recipe(p, spec, c):
     filter_bytes = (c.s_bytes * c.m_prime) / min(strips, spec.sm_count)
     fma_per_round = float(c.m_prime * (c.s_bytes // BYTES_F32) * c.wx_prime)
 
-    eff = combined_efficiency([
-        (filter_bytes, segment_efficiency(c.s_bytes)),
-        (map_bytes, segment_efficiency(128)),
-    ])
-    rnd = Round(filter_bytes + map_bytes, 128, fma_per_round, eff)
+    rnd = mixed_round([
+        (filter_bytes, c.s_bytes),
+        (map_bytes, 128),
+    ], fma_per_round)
     count = ceil_div(blocks * segs, sms_active)
     return rnd, count, sms_active, paper_threads_per_sm(spec)
 
@@ -317,6 +344,7 @@ def stride_plan_with_choice(p, spec, c):
         smem_bytes_per_sm=c.smem_bytes,
         total_fma=float(p.fma_ops()),
         launch_overhead_cycles=LAUNCH_OVERHEAD_CYCLES,
+        stage_bytes=stage_bytes_multi(c.s_bytes, c.wx_prime, c.m_prime, p.k),
     )
 
 

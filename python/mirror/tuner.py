@@ -1,12 +1,14 @@
 """Mirror of rust/src/tuner: enumerate -> score -> top-K simulate ->
 memoized plan_for, plus the batched cost helpers from plans/mod.rs."""
 
-from gpusim import (ExecConfig, WRITEBACK_TAIL_FRACTION, occupancy_blocks,
-                    simulate_cycles, simulate_pipeline_runs)
+from gpusim import (CYCLIC, ExecConfig, ORDERED, TILEWISE, occupancy_blocks,
+                    simulate_cycles, simulate_pipeline_runs,
+                    writeback_tail_cycles)
 from plans import (BYTES_F32, COMPUTE_EFFICIENCY, FILTER_SPLIT,
                    LAUNCH_OVERHEAD_CYCLES, MAP_SPLIT, ceil_div, choose_single,
                    d1_bytes, d2_bytes, multi_choice, paper_plan_for,
                    single_choice, single_plan_with_choice, single_recipe,
+                   single_stage_bytes, staged_working_set_bytes,
                    stride_plan_and_choice, stride_plan_with_choice,
                    stride_recipe, working_set_bytes)
 
@@ -14,6 +16,13 @@ TOP_K = 8
 MAX_ROUNDS = 4_000_000
 SEGMENT_SWEEP = [32, 64, 96, 128]
 WX_SWEEP = [32, 64, 96, 128, 160, 192, 224, 256]
+
+# (stages, loading) variants the tuner crosses with every geometry.
+# Tilewise serializes its loads per warp, so stages > 2 only spend smem
+# without amortizing latency — the sweep skips those dominated points.
+STAGED_VARIANTS = [(2, CYCLIC), (3, CYCLIC), (4, CYCLIC),
+                   (2, TILEWISE),
+                   (2, ORDERED), (3, ORDERED), (4, ORDERED)]
 
 
 def distinct_divisions(n):
@@ -38,22 +47,29 @@ def divisors(n):
     return sorted(out)
 
 
-# PlanParams: ("single", method, p, q) | ("multi", s, wx, mp)
+# PlanParams: ("single", method, p, q, stages, loading)
+#           | ("multi", s, wx, mp, stages, loading)
 
 def enumerate_params(p, spec):
     assert p.valid()
     if p.is_single_channel():
         budget = spec.shared_mem_bytes
-        out = []
+        bases = []
         for pp in distinct_divisions(p.wy):
             if d1_bytes(p, spec, pp) <= budget:
-                out.append(("single", FILTER_SPLIT, pp, 1))
+                bases.append((FILTER_SPLIT, pp, 1, d1_bytes(p, spec, pp)))
         for q in distinct_divisions(p.m):
             if d2_bytes(p, spec, q) <= budget:
-                out.append(("single", MAP_SPLIT, 1, q))
-        fallback = ("single", FILTER_SPLIT, 1, 1)
-        if fallback not in out:
-            out.append(fallback)
+                bases.append((MAP_SPLIT, 1, q, d2_bytes(p, spec, q)))
+        if not any(m == FILTER_SPLIT and pp == 1 and q == 1
+                   for (m, pp, q, _) in bases):
+            bases.append((FILTER_SPLIT, 1, 1, d1_bytes(p, spec, 1)))
+        out = []
+        for (method, pp, q, d) in bases:
+            stage = single_stage_bytes(p, spec, method, pp, q)
+            for (st, ld) in STAGED_VARIANTS:
+                if d + (st - 2) * stage <= budget:
+                    out.append(("single", method, pp, q, st, ld))
         return out
     half = spec.shared_mem_bytes // 2
     out_px = p.oy() * p.ox()
@@ -64,46 +80,58 @@ def enumerate_params(p, spec):
     for s in SEGMENT_SWEEP:
         for wx in wx_opts:
             for mp in m_opts:
-                if working_set_bytes(s, wx, mp, p.k) <= half:
-                    out.append(("multi", s, wx, mp))
+                for (st, ld) in STAGED_VARIANTS:
+                    if staged_working_set_bytes(s, wx, mp, p.k, st) <= half:
+                        out.append(("multi", s, wx, mp, st, ld))
     return out
 
 
-def _exec_config(sms, threads):
-    return ExecConfig(sms, threads, COMPUTE_EFFICIENCY, LAUNCH_OVERHEAD_CYCLES)
+def _exec_config(sms, threads, stages, loading):
+    return ExecConfig(sms, threads, COMPUTE_EFFICIENCY, LAUNCH_OVERHEAD_CYCLES,
+                      stages, loading)
 
 
-def _writeback(spec, p):
-    return WRITEBACK_TAIL_FRACTION * (p.out_elems() * BYTES_F32) / spec.bytes_per_cycle()
+def _writeback(spec, p, pipe_total, loads, stages):
+    """Charged writeback, matching simulate_parts: max(staged tail,
+    DRAM bus-floor excess) so score stays bit-identical to simulate."""
+    out = p.out_elems() * BYTES_F32
+    tail = writeback_tail_cycles(spec, out, stages)
+    floor = (loads + out) / spec.bytes_per_cycle()
+    return max(tail, floor - pipe_total)
 
 
 def score(p, spec, params):
     if params[0] == "single":
-        _, method, pp, q = params
+        _, method, pp, q, st, ld = params
         c = single_choice(p, spec, method, pp, q)
-        first, tail, sms, threads, _ = single_recipe(p, spec, c)
+        first, tail, sms, threads, _, _ = single_recipe(p, spec, c)
         runs = [(first, 1)]
         if tail is not None:
             if tail[1] > MAX_ROUNDS:
                 return None
             runs.append(tail)
-        t, _ = simulate_pipeline_runs(spec, _exec_config(sms, threads), runs)
-        return t + _writeback(spec, p)
-    _, s, wx, mp = params
+        t, _ = simulate_pipeline_runs(spec, _exec_config(sms, threads, st, ld), runs)
+        loads = sum(r.load_bytes * n for (r, n) in runs) * sms
+        return t + _writeback(spec, p, t, loads, st)
+    _, s, wx, mp, st, ld = params
     c = multi_choice(p, spec, s, wx, mp)
     rnd, count, sms, threads = stride_recipe(p, spec, c)
     if count > MAX_ROUNDS:
         return None
-    t, _ = simulate_pipeline_runs(spec, _exec_config(sms, threads), [(rnd, count)])
-    return t + _writeback(spec, p)
+    t, _ = simulate_pipeline_runs(spec, _exec_config(sms, threads, st, ld),
+                                  [(rnd, count)])
+    loads = rnd.load_bytes * count * sms
+    return t + _writeback(spec, p, t, loads, st)
 
 
 def build_plan(p, spec, params):
     if params[0] == "single":
-        _, method, pp, q = params
-        return single_plan_with_choice(p, spec, single_choice(p, spec, method, pp, q))
-    _, s, wx, mp = params
-    return stride_plan_with_choice(p, spec, multi_choice(p, spec, s, wx, mp))
+        _, method, pp, q, st, ld = params
+        base = single_plan_with_choice(p, spec, single_choice(p, spec, method, pp, q))
+        return base.staged(st, ld)
+    _, s, wx, mp, st, ld = params
+    base = stride_plan_with_choice(p, spec, multi_choice(p, spec, s, wx, mp))
+    return base.staged(st, ld)
 
 
 def is_legal(spec, plan):
@@ -119,16 +147,22 @@ def is_legal(spec, plan):
 def paper_params(p, spec):
     if p.is_single_channel():
         c = choose_single(p, spec)
-        return single_plan_with_choice(p, spec, c), ("single", c.method, c.p, c.q)
+        return single_plan_with_choice(p, spec, c), \
+            ("single", c.method, c.p, c.q, 2, CYCLIC)
     plan, c = stride_plan_and_choice(p, spec)
-    return plan, ("multi", c.s_bytes, c.wx_prime, c.m_prime)
+    return plan, ("multi", c.s_bytes, c.wx_prime, c.m_prime, 2, CYCLIC)
 
 
-def tune(p, spec):
+def tune(p, spec, staged=True):
+    """Tune over the full (geometry x stages x loading) space; with
+    staged=False restrict to the depth-2 cyclic subspace (the pre-
+    multi-stage plan space, used as the ablation floor)."""
     paper_plan, paper = paper_params(p, spec)
     paper_cycles = simulate_cycles(spec, paper_plan)
     scored = []
     for cand in enumerate_params(p, spec):
+        if not staged and (cand[4] != 2 or cand[5] != CYCLIC):
+            continue
         s = score(p, spec, cand)
         if s is not None:
             scored.append((s, cand))
@@ -156,6 +190,15 @@ def tuned_plan(p, spec):
     key = (p, spec.name)
     if key not in _CACHE:
         _CACHE[key] = tune(p, spec)[1]
+    return build_plan(p, spec, _CACHE[key])
+
+
+def depth2_tuned_plan(p, spec):
+    """Best plan of the pre-multi-stage (depth-2, cyclic) space — the
+    floor the multi-stage gate compares against."""
+    key = (p, spec.name, "depth2")
+    if key not in _CACHE:
+        _CACHE[key] = tune(p, spec, staged=False)[1]
     return build_plan(p, spec, _CACHE[key])
 
 

@@ -22,7 +22,8 @@ import backends
 import graph
 import ops
 import tuner
-from gpusim import gtx_1080ti, simulate_cycles, titan_x_maxwell
+from gpusim import (TILEWISE, gtx_1080ti, latency_exposure, simulate_cycles,
+                    simulate_parts, titan_x_maxwell)
 from plans import ConvProblem, paper_plan_for
 from suites import (all_cnn_layers, all_cnn_ops, fig4_suite, fig5_suite,
                     mobilenet_v1, model_ops, vgg16)
@@ -43,32 +44,59 @@ def approx(got, want, tol, msg):
     check(abs(got - want) <= tol, f"{msg}: got {got:.4f}, pinned {want:.4f}")
 
 
+def bus_floor_bound(spec, plan):
+    """True when the DRAM bus floor (not the staged store tail) sets the
+    writeback charge: the row's time is pinned to moving its total
+    traffic at peak bandwidth, so no schedule can beat it."""
+    _, _, tail, wb = simulate_parts(spec, plan)
+    return wb > tail * (1.0 + 1e-9)
+
+
+def exposure_share(spec, plan):
+    """Fraction of the plan's cycles that are un-hidden memory latency at
+    its pipeline depth — the share deeper staging can amortize."""
+    depth = 1.0 if plan.loading == TILEWISE else float(plan.stages - 1)
+    exposed = sum(n * spec.mem_latency_cycles
+                  * latency_exposure(spec, plan.threads_per_sm, r.load_bytes)
+                  / depth
+                  for (r, n) in plan.runs)
+    return exposed / simulate_cycles(spec, plan)
+
+
 # ---- pinned EXPERIMENTS.md values (update together with the doc) ----
 
 PINNED = {
-    # §3 / §4: paper plans vs the cuDNN proxy (means over all cases)
-    "fig4_vs_cudnn_mean": 2.19,
-    "fig5_vs_cudnn_mean": 1.64,
+    # §3 / §4: paper plans vs the cuDNN proxy (means over all cases).
+    # Both means dropped sharply when the DRAM bus floor entered the
+    # timing (store traffic is now charged): the old 2.19x / 1.64x were
+    # partly an artifact of uncharged stores on the K=1 rows.
+    "fig4_vs_cudnn_mean": 1.618,
+    "fig5_vs_cudnn_mean": 1.619,
     # §5: tuned vs paper-fixed geomeans (CNN suite = the 29 lowered
-    # units of the op-level model suites since ISSUE-5)
-    "tuned_fig4": 1.013,
-    "tuned_fig5": 1.137,
-    "tuned_cnn": 1.158,
-    "tuned_fig5_titanx": 1.190,
-    # §9: dispatch vs tuned-paper-only geomeans
-    "dispatch_fig4": 1.042,
-    "dispatch_fig5": 1.081,
-    "dispatch_cnn": 1.105,
-    "dispatch_fig5_titanx": 1.093,
+    # units of the op-level model suites since ISSUE-5); the tuner now
+    # also sweeps the (stages, loading) axes
+    "tuned_fig4": 1.019,
+    "tuned_fig5": 1.179,
+    "tuned_cnn": 1.182,
+    "tuned_fig5_titanx": 1.258,
+    # §5a: full (stages x loading) tune vs the depth-2 cyclic floor
+    "staged_fig5": 1.037,
+    "staged_cnn_titanx": 1.068,
+    # §9: dispatch vs tuned-paper-only geomeans (Fig.4 hit 1.000: with
+    # stores charged, every baseline win there was a bus-floor tie)
+    "dispatch_fig4": 1.000,
+    "dispatch_fig5": 1.079,
+    "dispatch_cnn": 1.097,
+    "dispatch_fig5_titanx": 1.086,
     # §10: op dispatch vs the naive lowered paper-tuned floor
-    "op_all_models": 1.331,
-    "op_mobilenet": 2.011,
-    "op_mobilenet_titanx": 2.319,
+    "op_all_models": 1.300,
+    "op_mobilenet": 1.738,
+    "op_mobilenet_titanx": 1.891,
     # §7 / §10 model graphs (tuned op plans, 1080Ti, milliseconds)
-    "graph_vgg16_tuned_ms": 1.790,
-    "graph_vgg16_dispatched_ms": 1.343,
-    "graph_resnet18_tuned_ms": 0.390,
-    "graph_mobilenet_tuned_ms": 0.224,
+    "graph_vgg16_tuned_ms": 1.793,
+    "graph_vgg16_dispatched_ms": 1.356,
+    "graph_resnet18_tuned_ms": 0.378,
+    "graph_mobilenet_tuned_ms": 0.222,
 }
 
 
@@ -131,14 +159,30 @@ def main():
     tx = titan_x_maxwell()
 
     # ---- §3 / §4 replay: paper plans vs the cuDNN proxy ----
+    # Since the store-accounting fix, a row where BOTH plans sit on the
+    # DRAM bus floor is a physics tie: neither schedule can beat moving
+    # the total traffic at peak bandwidth, and ours may carry slightly
+    # more filter re-stream traffic.  Those documented rows may tie
+    # within 1%; everywhere else ours must strictly win.
     for (name, suite, pin) in [("fig4", fig4_suite(), "fig4_vs_cudnn_mean"),
                                ("fig5", fig5_suite(), "fig5_vs_cudnn_mean")]:
         speedups = []
+        losses = []
+        floor_ties = 0
         for p in suite:
-            ours = simulate_cycles(g, paper_plan_for(p, g))
-            base = simulate_cycles(g, backends.cudnn_plan(p, g))
-            speedups.append(base / ours)
-        check(all(s > 1.0 for s in speedups), f"{name}: ours wins every case")
+            ours_plan = paper_plan_for(p, g)
+            base_plan = backends.cudnn_plan(p, g)
+            s = simulate_cycles(g, base_plan) / simulate_cycles(g, ours_plan)
+            speedups.append(s)
+            if s <= 1.0:
+                if (s > 0.99 and bus_floor_bound(g, ours_plan)
+                        and bus_floor_bound(g, base_plan)):
+                    floor_ties += 1
+                else:
+                    losses.append(p.label())
+        check(not losses,
+              f"{name}: ours wins or floor-ties every case "
+              f"({floor_ties} floor ties; losses: {losses})")
         approx(sum(speedups) / len(speedups), PINNED[pin], 0.02,
                f"{name} mean vs cudnn proxy")
 
@@ -151,6 +195,53 @@ def main():
            PINNED["tuned_cnn"], 0.005, "§5 CNN-unit tuned geomean")
     approx(geomean(suite_speedups_tuned_vs_paper(fig5_suite(), tx)),
            PINNED["tuned_fig5_titanx"], 0.005, "§5 Fig.5 Titan X tuned geomean")
+
+    # ---- §5a: the multi-stage pipeline axis (tentpole gate) ----
+    # Never-lose: the full (geometry x stages x loading) tune includes
+    # the depth-2 cyclic subspace, so it can never lose to that floor.
+    staged_vs_d2 = {}
+    for (spec, sname) in ((g, "1080ti"), (tx, "titanx")):
+        for (sn, suite) in (("fig4", fig4_suite()), ("fig5", fig5_suite()),
+                            ("cnn", all_cnn_layers())):
+            ratios = []
+            for p in suite:
+                d2 = simulate_cycles(spec, tuner.depth2_tuned_plan(p, spec))
+                full = simulate_cycles(spec, tuner.tuned_plan(p, spec))
+                if full > d2 * (1 + 1e-9):
+                    print(f"FAIL: multi-stage lost to depth-2 on "
+                          f"{p.label()} ({spec.name})")
+                    sys.exit(1)
+                ratios.append(d2 / full)
+            staged_vs_d2[(sname, sn)] = geomean(ratios)
+    print("ok: full (stages x loading) tune never loses to the depth-2 "
+          "floor (both specs, all suites)")
+    approx(staged_vs_d2[("1080ti", "fig5")], PINNED["staged_fig5"],
+           0.005, "§5a Fig.5 staged-vs-depth2 geomean")
+    approx(staged_vs_d2[("titanx", "cnn")], PINNED["staged_cnn_titanx"],
+           0.005, "§5a CNN Titan X staged-vs-depth2 geomean")
+
+    # The acceptance gate: on the latency-exposed Fig.4 rows (depth-2
+    # exposure share above 3% and not pinned to the DRAM bus floor),
+    # deeper pipelines must buy a >= 1.05x geomean.
+    exposed = []
+    for p in fig4_suite():
+        d2p = tuner.depth2_tuned_plan(p, g)
+        if exposure_share(g, d2p) > 0.03 and not bus_floor_bound(g, d2p):
+            exposed.append(simulate_cycles(g, d2p)
+                           / simulate_cycles(g, tuner.tuned_plan(p, g)))
+    check(len(exposed) >= 3,
+          f"enough latency-exposed Fig.4 rows to gate on ({len(exposed)})")
+    gate = geomean(exposed)
+    check(gate >= 1.05,
+          f"multi-stage gate: >=1.05x geomean on the {len(exposed)} "
+          f"latency-exposed Fig.4 rows (got {gate:.4f}x)")
+    picks = {}
+    for p in list(fig4_suite()) + list(fig5_suite()):
+        plan = tuner.tuned_plan(p, g)
+        key = f"{plan.stages}/{plan.loading}"
+        picks[key] = picks.get(key, 0) + 1
+    check(any(k.split("/")[0] != "2" for k in picks),
+          f"tuner picks deeper pipelines somewhere: {picks}")
 
     # ---- §9: the dispatcher ----
     print("\n| suite | non-paper wins | geomean | max | winners |")
@@ -179,11 +270,17 @@ def main():
             sys.exit(1)
     print("ok: cpu-reference never dispatched")
     # per-layer algorithm choice at the op level: VGG-16's 'same' body
-    # goes fully Winograd (its padded units are all big K=3), while the
-    # inception cell mixes Winograd with the paper kernels
-    vgg_backends = {ops.decide_op(o, g)[0] for o in vgg16()}
-    check(vgg_backends == {"winograd"},
-          f"VGG-16 'same' body dispatches to winograd: {sorted(vgg_backends)}")
+    # (C >= 64) goes fully Winograd — its padded units are all big K=3 —
+    # while the C=3 stem layer is bus-floor-bound since the store-
+    # accounting fix, so winograd's FLOP savings buy nothing there and
+    # the paper kernel keeps it
+    vgg_body = {ops.decide_op(o, g)[0] for o in vgg16() if o.core.c >= 64}
+    check(vgg_body == {"winograd"},
+          f"VGG-16 'same' body (C>=64) dispatches to winograd: {sorted(vgg_body)}")
+    stem = [o for o in vgg16() if o.core.c < 64]
+    check(stem and all(ops.decide_op(o, g)[0] == backends.PAPER_TUNED
+                       for o in stem),
+          "VGG-16 C=3 stem stays on the paper kernel (bus-floor-bound)")
     mb_backends = {ops.decide_op(o, g)[0] for o in mobilenet_v1()}
     check(len(mb_backends) > 1 and backends.PAPER_TUNED in mb_backends,
           f"MobileNetV1 mixes backends per layer: {sorted(mb_backends)}")

@@ -232,9 +232,9 @@ def main():
     # the pinned §11 table (EXPERIMENTS.md) — drift fails CI
     check(max_fp == 205668352, f"largest job footprint pinned (got {max_fp})")
     pinned = [
-        ("tight", tight, 492, 20, 20, 411283456, 5.248160e-3),
-        ("tight_bytes", tight_bytes, 502, 10, 10, 411076864, 5.812061e-3),
-        ("roomy", roomy, 512, 0, 0, 702075392, 6.608624e-3),
+        ("tight", tight, 500, 12, 12, 411287552, 5.935771e-3),
+        ("tight_bytes", tight_bytes, 502, 10, 10, 411202816, 6.539916e-3),
+        ("roomy", roomy, 512, 0, 0, 791509504, 6.511900e-3),
     ]
     for (label, r, acc, rej, mem, peak, p99) in pinned:
         check(r["accepted"] == acc and r["rejected"] == rej

@@ -37,11 +37,37 @@ pub fn m_prime_min(spec: &GpuSpec, s_bytes: usize, wx_prime: usize) -> usize {
     ceil_div(spec.n_fma() as usize * BYTES_F32, s_bytes * wx_prime)
 }
 
+/// One pipeline-stage buffer for (S, W'x, M'): S x M' filter bytes plus
+/// W'y lines x W'x pixels of map.  The classic §3.2(4) double buffer is
+/// two of these; an s-stage pipeline keeps s resident.
+pub fn stage_bytes_multi(s_bytes: usize, wx_prime: usize, m_prime: usize, k: usize) -> usize {
+    s_bytes * m_prime + wy_prime(s_bytes, k) * wx_prime * BYTES_F32
+}
+
 /// §3.2(4): the double-buffer working set for (S, W'x, M').
 pub fn working_set_bytes(s_bytes: usize, wx_prime: usize, m_prime: usize, k: usize) -> usize {
-    // one buffer: S x M' filter bytes + W'y lines x W'x pixels of map;
     // two buffers resident (current + prefetch)
-    2 * (s_bytes * m_prime + wy_prime(s_bytes, k) * wx_prime * BYTES_F32)
+    2 * stage_bytes_multi(s_bytes, wx_prime, m_prime, k)
+}
+
+/// Working set of an s-stage pipeline (§3.2(4) generalized): s stage
+/// buffers resident at once.  `staged_working_set_bytes(.., 2)` is
+/// exactly `working_set_bytes`.
+pub fn staged_working_set_bytes(
+    s_bytes: usize,
+    wx_prime: usize,
+    m_prime: usize,
+    k: usize,
+    stages: u32,
+) -> usize {
+    stages as usize * stage_bytes_multi(s_bytes, wx_prime, m_prime, k)
+}
+
+/// Latency-hiding FMA threshold for an s-stage pipeline: with s-1 loads
+/// in flight the per-round compute only needs to cover 1/(s-1) of the
+/// memory latency, so the §3.2(3) N_FMA requirement divides by (s-1).
+pub fn n_fma_required(spec: &GpuSpec, stages: u32) -> f64 {
+    spec.n_fma() as f64 / (stages.saturating_sub(1).max(1)) as f64
 }
 
 /// Choose (S, W'x, M') for a problem following §3.2 steps 1–4.
@@ -150,6 +176,29 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn staged_working_set_generalizes_double_buffer() {
+        // stages=2 is the classic §3.2(4) working set; each extra stage
+        // adds exactly one stage buffer.
+        for (s, wx, mp, k) in [(32, 128, 64, 3), (64, 96, 32, 5), (32, 224, 16, 1)] {
+            let stage = stage_bytes_multi(s, wx, mp, k);
+            assert_eq!(staged_working_set_bytes(s, wx, mp, k, 2), working_set_bytes(s, wx, mp, k));
+            assert_eq!(staged_working_set_bytes(s, wx, mp, k, 2), 2 * stage);
+            assert_eq!(staged_working_set_bytes(s, wx, mp, k, 4), 4 * stage);
+        }
+    }
+
+    #[test]
+    fn deeper_pipelines_relax_the_fma_threshold() {
+        // Th >= N_FMA / (s-1): depth 3 halves the requirement, depth 4
+        // cuts it to a third; depth 2 is the paper's original bound.
+        let g = gtx_1080ti();
+        let n = g.n_fma() as f64;
+        assert_eq!(n_fma_required(&g, 2), n);
+        assert_eq!(n_fma_required(&g, 3), n / 2.0);
+        assert_eq!(n_fma_required(&g, 4), n / 3.0);
     }
 
     #[test]

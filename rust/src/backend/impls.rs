@@ -13,7 +13,7 @@ use std::sync::{Mutex, OnceLock};
 
 use crate::baselines::{cudnn_proxy, dac17, fft_conv, tan128, winograd};
 use crate::conv::{conv2d_multi_cpu, ConvOp, ConvProblem, BYTES_F32};
-use crate::gpusim::{simulate, GpuSpec, KernelPlan, Round};
+use crate::gpusim::{simulate, GpuSpec, KernelPlan, Loading, Round};
 use crate::plans::{single_channel, stride_fixed};
 use crate::tuner;
 
@@ -208,6 +208,9 @@ impl ConvBackend for CpuReference {
             total_fma: p.fma_ops() as f64,
             // no kernel launch on the host path
             launch_overhead_cycles: 0.0,
+            stages: 2,
+            loading: Loading::Cyclic,
+            stage_bytes: 0,
         }
     }
 

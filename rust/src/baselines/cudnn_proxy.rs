@@ -26,7 +26,7 @@
 use crate::conv::{ConvProblem, BYTES_F32};
 use crate::gpusim::memory::segment_efficiency;
 use crate::gpusim::pipeline::combined_efficiency;
-use crate::gpusim::{simulate, GpuSpec, KernelPlan, Round};
+use crate::gpusim::{simulate, GpuSpec, KernelPlan, Loading, Round};
 
 fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
@@ -77,7 +77,7 @@ pub fn plan_with_tiles(
     let sms_active = blocks.min(spec.sm_count as usize) as u32;
     let rounds_per_sm = ceil_div(blocks * k_steps, sms_active as usize);
     let rounds: Vec<Round> = (0..rounds_per_sm)
-        .map(|_| Round::with_efficiency(a_bytes + b_bytes, eff, fma_per_step))
+        .map(|_| Round::with_efficiency(a_bytes + b_bytes, 128, eff, fma_per_step))
         .collect();
 
     // double-buffered A+B tiles in shared memory
@@ -100,6 +100,9 @@ pub fn plan_with_tiles(
         // the GEMM-family algorithms) staging kernels — ~8 µs vs the
         // ~2.7 µs bare kernel launch of the direct kernels
         launch_overhead_cycles: 12_000.0,
+        stages: 2,
+        loading: Loading::Cyclic,
+        stage_bytes: 0,
     }
 }
 

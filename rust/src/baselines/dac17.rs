@@ -17,7 +17,7 @@
 use crate::conv::{ConvProblem, BYTES_F32};
 use crate::gpusim::memory::segment_efficiency;
 use crate::gpusim::pipeline::combined_efficiency;
-use crate::gpusim::{GpuSpec, KernelPlan, Round};
+use crate::gpusim::{GpuSpec, KernelPlan, Loading, Round};
 
 /// The fixed feature-map strip height [1] assigns per block regardless of
 /// the input size (their tuning for >= 32-px maps).
@@ -61,7 +61,7 @@ pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
 
     let rounds_per_sm = ceil_div(blocks * segs, sms_active as usize);
     let rounds: Vec<Round> = (0..rounds_per_sm)
-        .map(|_| Round::with_efficiency(filter_bytes + map_bytes_per_seg, eff, fma_per_round))
+        .map(|_| Round::with_efficiency(filter_bytes + map_bytes_per_seg, 128, eff, fma_per_round))
         .collect();
 
     let smem = 2 * (s_bytes * m_prime
@@ -77,6 +77,9 @@ pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
         smem_bytes_per_sm: (smem as u32).min(spec.shared_mem_bytes),
         total_fma: p.fma_ops() as f64,
         launch_overhead_cycles: 4_000.0,
+        stages: 2,
+        loading: Loading::Cyclic,
+        stage_bytes: 0,
     }
 }
 

@@ -12,7 +12,7 @@
 //! regime; the taxonomy bench makes that visible.
 
 use crate::conv::{ConvProblem, BYTES_F32};
-use crate::gpusim::{GpuSpec, KernelPlan, Round};
+use crate::gpusim::{GpuSpec, KernelPlan, Loading, Round};
 
 /// FLOPs of a 2-D real FFT over an H x W grid (row+column passes).
 fn fft2_flops(h: usize, w: usize) -> f64 {
@@ -48,7 +48,7 @@ pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
     let per_round_bytes = total_bytes / (sms * rounds_n) as f64;
     let per_round_fma = total_fma_cost / (sms * rounds_n) as f64;
     let rounds: Vec<Round> =
-        (0..rounds_n).map(|_| Round::with_efficiency(per_round_bytes, 0.85, per_round_fma)).collect();
+        (0..rounds_n).map(|_| Round::with_efficiency(per_round_bytes, 128, 0.85, per_round_fma)).collect();
 
     KernelPlan {
         name: "fft-conv".into(),
@@ -60,6 +60,9 @@ pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
         smem_bytes_per_sm: 32 * 1024,
         total_fma: p.fma_ops() as f64, // report against direct-conv work
         launch_overhead_cycles: 12_000.0, // multi-kernel plan (fwd/mul/inv)
+        stages: 2,
+        loading: Loading::Cyclic,
+        stage_bytes: 0,
     }
 }
 

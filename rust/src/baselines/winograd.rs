@@ -15,7 +15,7 @@
 use crate::conv::{ConvProblem, BYTES_F32};
 use crate::gpusim::memory::segment_efficiency;
 use crate::gpusim::pipeline::combined_efficiency;
-use crate::gpusim::{GpuSpec, KernelPlan, Round};
+use crate::gpusim::{GpuSpec, KernelPlan, Loading, Round};
 
 fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
@@ -65,7 +65,7 @@ pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
 
     let rounds_per_sm = ceil_div(blocks * segs, sms_active as usize);
     let rounds: Vec<Round> = (0..rounds_per_sm)
-        .map(|_| Round::with_efficiency(map_bytes + filter_bytes, eff, fma_per_round))
+        .map(|_| Round::with_efficiency(map_bytes + filter_bytes, 128, eff, fma_per_round))
         .collect();
 
     let smem = 2 * ((tiles_per_block.min(64) * 16 * c_seg + m_prime * c_seg * 16) * BYTES_F32);
@@ -80,6 +80,9 @@ pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
         smem_bytes_per_sm: (smem as u32).min(spec.shared_mem_bytes / 2),
         total_fma: p.fma_ops() as f64, // report against the direct-conv work
         launch_overhead_cycles: 4_000.0,
+        stages: 2,
+        loading: Loading::Cyclic,
+        stage_bytes: 0,
     }
 }
 

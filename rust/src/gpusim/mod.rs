@@ -18,6 +18,9 @@ pub mod sim;
 pub mod spec;
 
 pub use occupancy::{occupancy, BlockResources, Limiter, Occupancy};
-pub use pipeline::{ExecConfig, Round};
-pub use sim::{simulate, simulate_detailed, speedup, KernelPlan, SimBreakdown, SimResult};
+pub use pipeline::{ExecConfig, Loading, Round, MAX_STAGES, MIN_STAGES};
+pub use sim::{
+    simulate, simulate_detailed, speedup, writeback_tail_cycles, KernelPlan, SimBreakdown,
+    SimResult,
+};
 pub use spec::{gtx_1080ti, tesla_k40, titan_x_maxwell, GpuSpec};

@@ -3,13 +3,24 @@
 //! yields a `SimResult` with time, throughput and efficiency numbers —
 //! the quantities Figs. 4/5 plot.
 
-use super::pipeline::{simulate_pipeline, ExecConfig, PipelineResult, Round};
+use super::pipeline::{
+    simulate_pipeline, ExecConfig, Loading, PipelineResult, Round, MAX_STAGES, MIN_STAGES,
+};
 use super::spec::GpuSpec;
 
-/// Share of output writeback that cannot overlap compute (the tail).
-/// Shared with the tuner's scorer, which must charge exactly what
-/// `simulate` charges.
+/// Share of output writeback that cannot overlap compute (the tail) at
+/// the baseline pipeline depth of 2.  Shared with the tuner's scorer,
+/// which must charge exactly what `simulate` charges.
 pub const WRITEBACK_TAIL_FRACTION: f64 = 0.15;
+
+/// Un-overlapped final store burst: the ping-pong staging is symmetric
+/// (outputs flush through the same `s` smem buffers), so the tail is
+/// the last stage's share — 15% of the output at the baseline depth 2,
+/// scaled by 2/s at deeper pipelines.
+pub fn writeback_tail_cycles(spec: &GpuSpec, output_bytes: f64, stages: u32) -> f64 {
+    let frac = WRITEBACK_TAIL_FRACTION * 2.0 / stages as f64;
+    frac * output_bytes / spec.bytes_per_cycle()
+}
 
 /// The execution schedule of one kernel on one GPU — what a CUDA kernel's
 /// blocks would do, expressed as per-SM prefetch rounds.  Produced by
@@ -36,12 +47,47 @@ pub struct KernelPlan {
     /// launch + API overhead in cycles (bare kernel ~4000; library paths
     /// like cuDNN pay more — see baselines::cudnn_proxy)
     pub launch_overhead_cycles: f64,
+    /// software-pipeline depth: number of smem stage buffers (2 = the
+    /// paper's ping-pong; up to `MAX_STAGES`)
+    pub stages: u32,
+    /// how each stage's global->shared transfer is organised
+    pub loading: Loading,
+    /// smem bytes one extra stage buffer costs (0 if the plan cannot be
+    /// deepened); `staged` charges `(stages - 2) * stage_bytes`
+    pub stage_bytes: u32,
 }
 
 impl KernelPlan {
     /// Total bytes the plan moves from global memory (chip-wide, loads).
     pub fn dram_load_bytes(&self) -> f64 {
         self.rounds.iter().map(|r| r.load_bytes).sum::<f64>() * self.sms_active as f64
+    }
+
+    /// Deepen the ping-pong pipeline to `stages` buffers under
+    /// `loading`; each stage past the baseline two costs one more
+    /// `stage_bytes` of shared memory.  Only valid on an unstaged
+    /// (depth-2 cyclic) plan.
+    pub fn staged(&self, stages: u32, loading: Loading) -> KernelPlan {
+        assert!(
+            (MIN_STAGES..=MAX_STAGES).contains(&stages),
+            "{}: stages {stages} outside {MIN_STAGES}..={MAX_STAGES}",
+            self.name
+        );
+        assert!(
+            self.stages == 2 && self.loading == Loading::Cyclic,
+            "{}: already staged",
+            self.name
+        );
+        if stages == 2 && loading == Loading::Cyclic {
+            return self.clone();
+        }
+        KernelPlan {
+            name: format!("{} s{stages}/{}", self.name, loading.tag()),
+            smem_bytes_per_sm: self.smem_bytes_per_sm + (stages - 2) * self.stage_bytes,
+            stages,
+            loading,
+            ..self.clone()
+        }
     }
 
     /// FMA operations per loaded byte — the paper's figure of merit
@@ -70,15 +116,10 @@ impl KernelPlan {
             .map(|r| Round { fma_ops: r.fma_ops * keep, ..*r })
             .collect();
         KernelPlan {
-            name: self.name.clone(),
             rounds,
-            sms_active: self.sms_active,
-            threads_per_sm: self.threads_per_sm,
-            compute_efficiency: self.compute_efficiency,
             output_bytes: self.output_bytes * keep,
-            smem_bytes_per_sm: self.smem_bytes_per_sm,
             total_fma: self.total_fma * keep,
-            launch_overhead_cycles: self.launch_overhead_cycles,
+            ..self.clone()
         }
     }
 
@@ -105,12 +146,9 @@ impl KernelPlan {
             name: format!("{} g{groups}", self.name),
             rounds,
             sms_active: self.sms_active * par as u32,
-            threads_per_sm: self.threads_per_sm,
-            compute_efficiency: self.compute_efficiency,
             output_bytes: self.output_bytes * groups as f64,
-            smem_bytes_per_sm: self.smem_bytes_per_sm,
             total_fma: self.total_fma * groups as f64,
-            launch_overhead_cycles: self.launch_overhead_cycles,
+            ..self.clone()
         }
     }
 
@@ -133,13 +171,9 @@ impl KernelPlan {
         KernelPlan {
             name: format!("{} xb{n}", self.name),
             rounds,
-            sms_active: self.sms_active,
-            threads_per_sm: self.threads_per_sm,
-            compute_efficiency: self.compute_efficiency,
             output_bytes: self.output_bytes * n as f64,
-            smem_bytes_per_sm: self.smem_bytes_per_sm,
             total_fma: self.total_fma * n as f64,
-            launch_overhead_cycles: self.launch_overhead_cycles,
+            ..self.clone()
         }
     }
 }
@@ -192,10 +226,17 @@ pub fn simulate(spec: &GpuSpec, plan: &KernelPlan) -> SimResult {
 /// headline result (for roofline reporting).
 pub fn simulate_detailed(spec: &GpuSpec, plan: &KernelPlan) -> SimBreakdown {
     assert!(
+        (MIN_STAGES..=MAX_STAGES).contains(&plan.stages),
+        "{}: stages {} outside {MIN_STAGES}..={MAX_STAGES}",
+        plan.name,
+        plan.stages
+    );
+    assert!(
         plan.smem_bytes_per_sm <= spec.shared_mem_bytes,
-        "{}: plan wants {} B shared memory, SM has {}",
+        "{}: stage smem overflow ({} B at {} stages > {} B)",
         plan.name,
         plan.smem_bytes_per_sm,
+        plan.stages,
         spec.shared_mem_bytes
     );
     assert!(plan.sms_active >= 1 && plan.sms_active <= spec.sm_count);
@@ -205,17 +246,32 @@ pub fn simulate_detailed(spec: &GpuSpec, plan: &KernelPlan) -> SimBreakdown {
         threads_per_sm: plan.threads_per_sm,
         compute_efficiency: plan.compute_efficiency,
         launch_overhead_cycles: plan.launch_overhead_cycles,
+        stages: plan.stages,
+        loading: plan.loading,
     };
     let pipe: PipelineResult = simulate_pipeline(spec, &cfg, &plan.rounds);
 
     // Output writeback streams at full segment width, overlapped with
-    // compute except for its tail — charge the non-overlappable share.
-    let wb_cycles = WRITEBACK_TAIL_FRACTION * plan.output_bytes / spec.bytes_per_cycle();
+    // compute except for its tail.  The charge is max(staged tail, DRAM
+    // bus-floor excess): total time can never undercut moving ALL
+    // traffic (loads + stores) at peak bandwidth, so both roofline
+    // bandwidth fractions stay <= 1.0 (the PR-7 store-accounting bug
+    // this fixes).
+    let tail = writeback_tail_cycles(spec, plan.output_bytes, plan.stages);
+    let floor = (plan.dram_load_bytes() + plan.output_bytes) / spec.bytes_per_cycle();
+    let wb_cycles = tail.max(floor - pipe.total_cycles);
     let cycles = pipe.total_cycles + wb_cycles;
 
     let seconds = spec.cycles_to_secs(cycles);
     let flops = 2.0 * plan.total_fma;
     let gflops = flops / seconds / 1e9;
+    // memory-bound when the pipeline stalled on fetches OR the bus
+    // floor (not the tail) set the writeback charge
+    let bottleneck = if pipe.stall_cycles > 0.05 * pipe.total_cycles || wb_cycles > tail {
+        "memory"
+    } else {
+        "compute"
+    };
     let result = SimResult {
         name: plan.name.clone(),
         cycles,
@@ -224,7 +280,7 @@ pub fn simulate_detailed(spec: &GpuSpec, plan: &KernelPlan) -> SimBreakdown {
         efficiency: flops / seconds / spec.peak_flops(),
         sm_utilization: plan.sms_active as f64 / spec.sm_count as f64,
         latency_hidden: pipe.latency_hidden,
-        bottleneck: pipe.bottleneck(),
+        bottleneck,
         stall_fraction: pipe.stall_cycles / pipe.total_cycles,
         dram_load_bytes: plan.dram_load_bytes(),
         fma_per_byte: plan.fma_per_byte(),
@@ -263,6 +319,9 @@ mod tests {
             smem_bytes_per_sm: 48 * 1024,
             total_fma: fma * rounds as f64 * g.sm_count as f64,
             launch_overhead_cycles: 4_000.0,
+            stages: 2,
+            loading: Loading::Cyclic,
+            stage_bytes: 8 * 1024,
         }
     }
 
@@ -411,15 +470,20 @@ mod tests {
     #[test]
     fn detailed_breakdown_is_bit_identical_and_accounted() {
         let g = gtx_1080ti();
-        for p in [plan(8, 1e4, 1e6), plan(8, 1e4, 1e6).batched(4), plan(8, 1e4, 1e6).decimated(0.5)]
-        {
+        for p in [
+            plan(8, 1e4, 1e6),
+            plan(8, 1e4, 1e6).batched(4),
+            plan(8, 1e4, 1e6).decimated(0.5),
+            plan(8, 1e4, 1e6).staged(3, Loading::Ordered),
+        ] {
             let b = simulate_detailed(&g, &p);
             let r = simulate(&g, &p);
             assert_eq!(r.cycles.to_bits(), b.result.cycles.to_bits());
             assert_eq!(r.seconds.to_bits(), b.result.seconds.to_bits());
             assert!(b.load_cycles >= 0.0 && b.compute_cycles > 0.0 && b.stall_cycles >= 0.0);
-            let wb = WRITEBACK_TAIL_FRACTION * p.output_bytes / g.bytes_per_cycle();
-            assert_eq!(b.writeback_cycles.to_bits(), wb.to_bits());
+            // writeback charge: max(staged tail, bus-floor excess)
+            let tail = writeback_tail_cycles(&g, p.output_bytes, p.stages);
+            assert!(b.writeback_cycles >= tail);
             assert_eq!(b.launch_overhead_cycles, p.launch_overhead_cycles);
         }
     }
@@ -431,5 +495,66 @@ mod tests {
         let mut b = plan(8, 1e4, 1e6);
         b.output_bytes = 1e8;
         assert!(simulate(&g, &b).seconds > simulate(&g, &a).seconds);
+    }
+
+    #[test]
+    fn bus_floor_binds_store_heavy_plans() {
+        // a plan writing far more than it computes can never beat the
+        // time to move loads + stores at peak bandwidth
+        let g = gtx_1080ti();
+        let mut p = plan(2, 1e3, 1e3);
+        p.output_bytes = 1e9;
+        let r = simulate(&g, &p);
+        let floor = (p.dram_load_bytes() + p.output_bytes) / g.bytes_per_cycle();
+        assert!(r.cycles >= floor - 1e-6, "cycles {} under floor {floor}", r.cycles);
+        assert_eq!(r.bottleneck, "memory");
+        // and the total-traffic bandwidth fraction is <= 1.0
+        let bw = (p.dram_load_bytes() + p.output_bytes) / r.seconds / 1e9;
+        assert!(bw <= g.bandwidth_gb_s * (1.0 + 1e-9), "bw {bw} GB/s");
+    }
+
+    #[test]
+    fn staged_depth2_cyclic_is_identity() {
+        let g = gtx_1080ti();
+        let p = plan(8, 1e4, 1e6);
+        let s = p.staged(2, Loading::Cyclic);
+        assert_eq!(s.name, p.name);
+        assert_eq!(
+            simulate(&g, &p).cycles.to_bits(),
+            simulate(&g, &s).cycles.to_bits()
+        );
+    }
+
+    #[test]
+    fn staged_cycles_monotone_in_stages() {
+        // cyclic: exposure/(s-1) and tail*2/s both shrink with depth
+        let g = gtx_1080ti();
+        let mut p = plan(16, 2e3, 1e3); // latency-exposed rounds
+        p.output_bytes = 1e6;
+        let mut last = f64::INFINITY;
+        for s in MIN_STAGES..=MAX_STAGES {
+            let c = simulate(&g, &p.staged(s, Loading::Cyclic)).cycles;
+            assert!(c <= last * (1.0 + 1e-12), "stages={s}: {c} > {last}");
+            last = c;
+        }
+    }
+
+    #[test]
+    fn staged_charges_smem_and_overflow_panics() {
+        let g = gtx_1080ti();
+        let mut p = plan(4, 1e4, 1e5);
+        p.stage_bytes = 30 * 1024;
+        let s3 = p.staged(3, Loading::Ordered);
+        assert_eq!(s3.smem_bytes_per_sm, p.smem_bytes_per_sm + 30 * 1024);
+        // 48 KiB base + 2 * 30 KiB > 96 KiB: depth-4 must panic cleanly
+        let s4 = p.staged(4, Loading::Ordered);
+        assert!(s4.smem_bytes_per_sm > g.shared_mem_bytes);
+        assert!(std::panic::catch_unwind(|| simulate(&g, &s4)).is_err());
+    }
+
+    #[test]
+    fn restaging_a_staged_plan_panics() {
+        let p = plan(4, 1e4, 1e5).staged(3, Loading::Cyclic);
+        assert!(std::panic::catch_unwind(|| p.staged(2, Loading::Cyclic)).is_err());
     }
 }

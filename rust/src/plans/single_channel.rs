@@ -18,12 +18,20 @@
 use crate::analytic::occupancy::paper_launch;
 use crate::analytic::single::{choose, SingleChoice, SingleMethod};
 use crate::conv::{ConvProblem, BYTES_F32};
-use crate::gpusim::pipeline::combined_efficiency;
-use crate::gpusim::memory::segment_efficiency;
-use crate::gpusim::{GpuSpec, KernelPlan, Round};
+use crate::gpusim::{GpuSpec, KernelPlan, Loading, Round};
 
 fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
+}
+
+/// Smem bytes one extra pipeline stage buffer costs for a single-channel
+/// plan: FilterSplit double-buffers a map piece (+ halo), MapSplit a
+/// filter piece.  The tuner uses this to bound the staged sweep.
+pub fn stage_bytes(p: &ConvProblem, method: SingleMethod, pp: usize, q: usize) -> usize {
+    match method {
+        SingleMethod::FilterSplit => (ceil_div(p.wy, pp) + p.k - 1) * p.wx * BYTES_F32,
+        SingleMethod::MapSplit => ceil_div(p.m, q) * p.k * p.k * BYTES_F32,
+    }
 }
 
 /// Build the paper's single-channel plan (choice made internally).
@@ -44,6 +52,8 @@ pub struct SingleRecipe {
     pub sms_active: u32,
     pub threads_per_sm: u32,
     pub smem_bytes: usize,
+    /// smem cost of one extra pipeline stage buffer
+    pub stage_bytes: usize,
 }
 
 /// Per-SM round recipe for an explicit `SingleChoice`.
@@ -66,11 +76,10 @@ pub fn recipe(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> SingleRecipe
             let halo_bytes = ((p.k - 1) * p.wx * BYTES_F32) as f64 / sms as f64;
             let fma = c.th1 as f64;
             let filter_seg = (m_per_sm * p.k * p.k * BYTES_F32).min(128);
-            let eff = combined_efficiency(&[
-                (filter_bytes, segment_efficiency(filter_seg)),
-                (piece_bytes + halo_bytes, segment_efficiency(row_seg)),
-            ]);
-            let first = Round::with_efficiency(filter_bytes + piece_bytes + halo_bytes, eff, fma);
+            let first = Round::mixed(
+                &[(filter_bytes, filter_seg), (piece_bytes + halo_bytes, row_seg)],
+                fma,
+            );
             // subsequent pieces reuse the K-1 halo rows kept on chip
             let tail =
                 (c.p > 1).then(|| (Round::new(piece_bytes, row_seg, fma), c.p - 1));
@@ -80,6 +89,7 @@ pub fn recipe(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> SingleRecipe
                 sms_active: sms,
                 threads_per_sm: threads,
                 smem_bytes: c.d1_bytes,
+                stage_bytes: stage_bytes(p, c.method, c.p, c.q),
             }
         }
         SingleMethod::MapSplit => {
@@ -92,11 +102,8 @@ pub fn recipe(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> SingleRecipe
             let piece_bytes = (m_per_round * p.k * p.k * BYTES_F32) as f64 / sms as f64;
             let filter_seg = (m_per_round * p.k * p.k * BYTES_F32).min(128);
             let fma = c.th2 as f64;
-            let eff = combined_efficiency(&[
-                (piece_bytes, segment_efficiency(filter_seg)),
-                (strip_bytes, segment_efficiency(row_seg)),
-            ]);
-            let first = Round::with_efficiency(strip_bytes + piece_bytes, eff, fma);
+            let first =
+                Round::mixed(&[(piece_bytes, filter_seg), (strip_bytes, row_seg)], fma);
             let tail =
                 (c.q > 1).then(|| (Round::new(piece_bytes, filter_seg, fma), c.q - 1));
             SingleRecipe {
@@ -105,6 +112,7 @@ pub fn recipe(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> SingleRecipe
                 sms_active: sms,
                 threads_per_sm: threads,
                 smem_bytes: c.d2_bytes,
+                stage_bytes: stage_bytes(p, c.method, c.p, c.q),
             }
         }
     }
@@ -135,6 +143,9 @@ pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> Ke
         smem_bytes_per_sm: r.smem_bytes.min(spec.shared_mem_bytes as usize) as u32,
         total_fma: p.fma_ops() as f64,
         launch_overhead_cycles: super::LAUNCH_OVERHEAD_CYCLES,
+        stages: 2,
+        loading: Loading::Cyclic,
+        stage_bytes: r.stage_bytes as u32,
     }
 }
 

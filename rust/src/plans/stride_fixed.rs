@@ -17,12 +17,11 @@
 //! the paper's two S values (32, 64) and keeps the faster, exactly as
 //! §4 does per workload.
 
-use crate::analytic::multi::{choose, StrideFixedChoice};
+use crate::analytic::multi::{choose, stage_bytes_multi, StrideFixedChoice};
 use crate::analytic::occupancy::paper_launch;
 use crate::conv::{ConvProblem, BYTES_F32};
-use crate::gpusim::memory::segment_efficiency;
-use crate::gpusim::pipeline::{combined_efficiency, simulate_pipeline_runs};
-use crate::gpusim::{simulate, ExecConfig, GpuSpec, KernelPlan, Round};
+use crate::gpusim::pipeline::simulate_pipeline_runs;
+use crate::gpusim::{simulate, ExecConfig, GpuSpec, KernelPlan, Loading, Round};
 
 fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
@@ -77,6 +76,8 @@ pub fn plan_with_segment_choice(
             threads_per_sm: r.threads_per_sm,
             compute_efficiency: super::COMPUTE_EFFICIENCY,
             launch_overhead_cycles: super::LAUNCH_OVERHEAD_CYCLES,
+            stages: 2,
+            loading: Loading::Cyclic,
         };
         let t = simulate_pipeline_runs(spec, &cfg, &[(r.round, r.count)]).total_cycles;
         if best.as_ref().map_or(true, |(bt, _)| t < *bt) {
@@ -136,13 +137,8 @@ pub fn recipe(p: &ConvProblem, spec: &GpuSpec, c: &StrideFixedChoice) -> StrideR
     let filter_bytes = (c.s_bytes * c.m_prime) as f64 / strips.min(spec.sm_count as usize) as f64;
     let fma_per_round = (c.m_prime * (c.s_bytes / BYTES_F32) * c.wx_prime) as f64;
 
-    let eff = combined_efficiency(&[
-        (filter_bytes, segment_efficiency(c.s_bytes)),
-        (map_bytes, segment_efficiency(128)),
-    ]);
-
     StrideRecipe {
-        round: Round::with_efficiency(filter_bytes + map_bytes, eff, fma_per_round),
+        round: Round::mixed(&[(filter_bytes, c.s_bytes), (map_bytes, 128)], fma_per_round),
         count: ceil_div(blocks * segs, sms_active as usize),
         sms_active,
         threads_per_sm: launch.threads_per_sm(spec),
@@ -162,6 +158,9 @@ pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &StrideFixedChoice) 
         smem_bytes_per_sm: c.smem_bytes as u32,
         total_fma: p.fma_ops() as f64,
         launch_overhead_cycles: super::LAUNCH_OVERHEAD_CYCLES,
+        stages: 2,
+        loading: Loading::Cyclic,
+        stage_bytes: stage_bytes_multi(c.s_bytes, c.wx_prime, c.m_prime, p.k) as u32,
     }
 }
 

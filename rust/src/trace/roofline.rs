@@ -30,10 +30,16 @@ pub struct Roofline {
     pub flops_frac: f64,
     /// achieved DRAM bandwidth (loads + stores), GB/s
     pub bw_gb_s: f64,
-    /// achieved fraction of peak DRAM bandwidth.  Counts full store
-    /// traffic while the timing model charges only the non-overlapped
-    /// writeback tail, so store-heavy kernels can exceed 1.0.
-    pub bw_frac: f64,
+    /// bandwidth the timing model actually charged (loads + the charged
+    /// writeback cycles converted back to bytes), GB/s
+    pub bw_charged_gb_s: f64,
+    /// charged fraction of peak DRAM bandwidth — what the model billed
+    pub bw_frac_charged: f64,
+    /// ALL-traffic fraction of peak DRAM bandwidth (loads + stores).
+    /// Since the DRAM bus floor entered the timing model, charged <=
+    /// total <= 1.0 structurally: the model can no longer claim a
+    /// kernel moved more bytes per second than the bus can carry.
+    pub bw_frac_total: f64,
     /// resident threads per SM over the device maximum
     pub occupancy: f64,
     /// fraction of SMs with work
@@ -62,8 +68,11 @@ impl Roofline {
     pub fn from_breakdown(spec: &GpuSpec, plan: &KernelPlan, b: &SimBreakdown) -> Roofline {
         let r = &b.result;
         let cycles = r.cycles.max(1.0);
+        let secs = r.seconds.max(f64::MIN_POSITIVE);
         let traffic = r.dram_load_bytes + plan.output_bytes;
-        let bw_gb_s = traffic / r.seconds.max(f64::MIN_POSITIVE) / 1e9;
+        let bw_gb_s = traffic / secs / 1e9;
+        let charged = r.dram_load_bytes + b.writeback_cycles * spec.bytes_per_cycle();
+        let bw_charged_gb_s = charged / secs / 1e9;
         Roofline {
             kernel: r.name.clone(),
             gpu: spec.name,
@@ -76,7 +85,9 @@ impl Roofline {
             gflops: r.gflops,
             flops_frac: r.efficiency,
             bw_gb_s,
-            bw_frac: bw_gb_s / spec.bandwidth_gb_s,
+            bw_charged_gb_s,
+            bw_frac_charged: bw_charged_gb_s / spec.bandwidth_gb_s,
+            bw_frac_total: bw_gb_s / spec.bandwidth_gb_s,
             occupancy: plan.threads_per_sm as f64 / spec.max_threads_per_sm as f64,
             sm_frac: r.sm_utilization,
             load_frac: b.load_cycles / cycles,
@@ -97,7 +108,8 @@ impl Roofline {
             ("gflops".to_string(), self.gflops.into()),
             ("flops_frac".to_string(), self.flops_frac.into()),
             ("bw_gb_s".to_string(), self.bw_gb_s.into()),
-            ("bw_frac".to_string(), self.bw_frac.into()),
+            ("bw_frac_charged".to_string(), self.bw_frac_charged.into()),
+            ("bw_frac_total".to_string(), self.bw_frac_total.into()),
             ("dram_load_bytes".to_string(), self.dram_load_bytes.into()),
             ("dram_store_bytes".to_string(), self.dram_store_bytes.into()),
             ("occupancy".to_string(), self.occupancy.into()),
@@ -119,7 +131,9 @@ impl Roofline {
             .set("gflops", self.gflops.into())
             .set("flops_frac", self.flops_frac.into())
             .set("bw_gb_s", self.bw_gb_s.into())
-            .set("bw_frac", self.bw_frac.into())
+            .set("bw_charged_gb_s", self.bw_charged_gb_s.into())
+            .set("bw_frac_charged", self.bw_frac_charged.into())
+            .set("bw_frac_total", self.bw_frac_total.into())
             .set("occupancy", self.occupancy.into())
             .set("sm_frac", self.sm_frac.into())
             .set("load_frac", self.load_frac.into())
@@ -150,11 +164,17 @@ mod tests {
         assert!((roof.dram_load_bytes - plan.dram_load_bytes()).abs() < 1e-6);
         assert!((roof.fma_per_byte - plan.fma_per_byte()).abs() < 1e-9);
         assert!(roof.flops_frac > 0.0 && roof.flops_frac <= 1.0);
-        // bw_frac counts ALL store traffic while the timing model
-        // charges only the 15% non-overlapped writeback tail, so
-        // store-heavy kernels legitimately report > 1.0 here — the
-        // counter is honest about traffic, the model about time
-        assert!(roof.bw_frac > 0.0, "bw_frac {}", roof.bw_frac);
+        // the store-accounting fix: with the DRAM bus floor in the
+        // timing model, charged <= total <= 1.0 with no exceptions —
+        // no kernel can claim more bytes/s than the bus carries
+        assert!(roof.bw_frac_charged > 0.0);
+        assert!(
+            roof.bw_frac_charged <= roof.bw_frac_total + 1e-9,
+            "charged {} > total {}",
+            roof.bw_frac_charged,
+            roof.bw_frac_total
+        );
+        assert!(roof.bw_frac_total <= 1.0 + 1e-9, "bw_frac_total {}", roof.bw_frac_total);
         assert!(roof.occupancy > 0.0 && roof.occupancy <= 1.0);
         // achieved bandwidth equals traffic over time by construction
         let traffic = roof.dram_load_bytes + roof.dram_store_bytes;

@@ -9,6 +9,15 @@
 //! entries by the full `ConvOp` — `stride=`/`pad=`/`groups=` fields
 //! carry the op parameters, and are OPTIONAL on parse (defaulting to
 //! the dense 1/0/1), so every v1 and v2 file parses unchanged.
+//!
+//! Format v4 adds the pipeline axes to every PLAN entry: `stages=` and
+//! `loading=`.  These are NOT defaulted on parse — a pre-v4 plan entry
+//! was tuned over a smaller plan space and its cycle counts no longer
+//! match what `build_plan` produces, so serving it silently would
+//! resurrect the stale-cache bug the validators pin against.  Pre-v4
+//! plan lines are DROPPED (and counted in `stale_dropped`) so old files
+//! still load, re-tune the dropped keys, and re-save as v4.  Dispatch
+//! entries never carried plan params and parse unchanged.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -18,7 +27,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::analytic::SingleMethod;
 use crate::backend::{self, Decision, BACKEND_NAMES};
 use crate::conv::{ConvOp, ConvProblem};
-use crate::gpusim::{gtx_1080ti, tesla_k40, titan_x_maxwell, GpuSpec};
+use crate::gpusim::{
+    gtx_1080ti, tesla_k40, titan_x_maxwell, GpuSpec, Loading, MAX_STAGES, MIN_STAGES,
+};
 
 use super::enumerate::PlanParams;
 
@@ -101,6 +112,10 @@ fn validate_entry(idx: usize, p: &ConvProblem, gpu: &str, t: &Tuned) -> Result<(
     if t.tuned_cycles > t.paper_cycles * (1.0 + 1e-9) {
         bail!("line {line}: tuned_cycles exceed paper_cycles — stale or edited entry");
     }
+    let (stages, _) = t.params.staging();
+    if !(MIN_STAGES..=MAX_STAGES).contains(&stages) {
+        bail!("line {line}: stages {stages} outside {MIN_STAGES}..={MAX_STAGES}");
+    }
     // known GPUs let us check resource bounds; unknown names are served
     // never (lookups key on the built-in specs) but must still parse
     let spec = [gtx_1080ti(), titan_x_maxwell(), tesla_k40()]
@@ -115,7 +130,7 @@ fn validate_entry(idx: usize, p: &ConvProblem, gpu: &str, t: &Tuned) -> Result<(
                 bail!("line {line}: P/Q out of range (P={pp}, Q={q})");
             }
         }
-        PlanParams::Multi { s_bytes, wx_prime, m_prime } => {
+        PlanParams::Multi { s_bytes, wx_prime, m_prime, stages, .. } => {
             if p.is_single_channel() {
                 bail!("line {line}: kind=multi for a single-channel problem");
             }
@@ -126,12 +141,12 @@ fn validate_entry(idx: usize, p: &ConvProblem, gpu: &str, t: &Tuned) -> Result<(
                 bail!("line {line}: M'={m_prime} out of range");
             }
             if let Some(spec) = spec {
-                let ws = crate::analytic::multi::working_set_bytes(
-                    s_bytes, wx_prime, m_prime, p.k,
+                let ws = crate::analytic::multi::staged_working_set_bytes(
+                    s_bytes, wx_prime, m_prime, p.k, stages,
                 );
                 if ws > spec.shared_mem_bytes as usize / 2 {
                     bail!(
-                        "line {line}: working set {ws} B exceeds {}'s double-buffer budget",
+                        "line {line}: staged working set {ws} B exceeds {}'s budget",
                         spec.name
                     );
                 }
@@ -177,6 +192,10 @@ fn validate_dispatch(idx: usize, op: &ConvOp, d: &Decision) -> Result<()> {
 pub struct PlanCache {
     entries: HashMap<(ConvProblem, String), Tuned>,
     dispatch: HashMap<(ConvOp, String), Decision>,
+    /// Pre-v4 plan entries dropped on parse (missing `stages=`/
+    /// `loading=`): counted so callers can report "N stale entries
+    /// re-tuned" instead of silently serving pre-multi-stage plans.
+    stale_dropped: usize,
 }
 
 impl PlanCache {
@@ -193,6 +212,11 @@ impl PlanCache {
 
     pub fn dispatch_len(&self) -> usize {
         self.dispatch.len()
+    }
+
+    /// How many pre-v4 plan entries the last `from_lines` dropped.
+    pub fn stale_dropped(&self) -> usize {
+        self.stale_dropped
     }
 
     pub fn is_empty(&self) -> bool {
@@ -222,6 +246,7 @@ impl PlanCache {
         let n = other.entries.len() + other.dispatch.len();
         self.entries.extend(other.entries);
         self.dispatch.extend(other.dispatch);
+        self.stale_dropped += other.stale_dropped;
         n
     }
 
@@ -231,21 +256,27 @@ impl PlanCache {
         let mut keys: Vec<&(ConvProblem, String)> = self.entries.keys().collect();
         keys.sort_by_key(|(p, g)| (g.clone(), p.c, p.wy, p.wx, p.m, p.k));
         let mut out = String::from(
-            "# pasconv plan cache v3: problem + gpu -> tuned plan params / op dispatch decisions\n",
+            "# pasconv plan cache v4: problem + gpu -> tuned plan params / op dispatch decisions\n",
         );
         for key in keys {
             let (p, gpu) = key;
             let t = &self.entries[key];
             let params = match t.params {
-                PlanParams::Single { method, p: pp, q } => {
+                PlanParams::Single { method, p: pp, q, stages, loading } => {
                     let m = match method {
                         SingleMethod::FilterSplit => "filter_split",
                         SingleMethod::MapSplit => "map_split",
                     };
-                    format!("kind=single method={m} p={pp} q={q}")
+                    format!(
+                        "kind=single method={m} p={pp} q={q} stages={stages} loading={}",
+                        loading.name()
+                    )
                 }
-                PlanParams::Multi { s_bytes, wx_prime, m_prime } => {
-                    format!("kind=multi s={s_bytes} wxp={wx_prime} mp={m_prime}")
+                PlanParams::Multi { s_bytes, wx_prime, m_prime, stages, loading } => {
+                    format!(
+                        "kind=multi s={s_bytes} wxp={wx_prime} mp={m_prime} stages={stages} loading={}",
+                        loading.name()
+                    )
                 }
             };
             out.push_str(&format!(
@@ -330,20 +361,41 @@ impl PlanCache {
                     cache.dispatch.insert((op, gpu), d);
                     continue;
                 }
-                "single" => PlanParams::Single {
-                    method: match field(&fields, idx, "method")? {
-                        "filter_split" => SingleMethod::FilterSplit,
-                        "map_split" => SingleMethod::MapSplit,
-                        other => bail!("line {}: unknown method {other:?}", idx + 1),
-                    },
-                    p: usize_field(&fields, idx, "p")?,
-                    q: usize_field(&fields, idx, "q")?,
-                },
-                "multi" => PlanParams::Multi {
-                    s_bytes: usize_field(&fields, idx, "s")?,
-                    wx_prime: usize_field(&fields, idx, "wxp")?,
-                    m_prime: usize_field(&fields, idx, "mp")?,
-                },
+                kind @ ("single" | "multi") => {
+                    // v4 plan axes: REQUIRED — a pre-v4 entry was tuned
+                    // over a smaller plan space, so it is dropped (and
+                    // counted), never defaulted and served
+                    if !fields.contains_key("stages") || !fields.contains_key("loading") {
+                        cache.stale_dropped += 1;
+                        continue;
+                    }
+                    let stages = usize_field(&fields, idx, "stages")? as u32;
+                    let loading_name = field(&fields, idx, "loading")?;
+                    let loading = Loading::parse(loading_name).ok_or_else(|| {
+                        anyhow!("line {}: unknown loading {loading_name:?}", idx + 1)
+                    })?;
+                    if kind == "single" {
+                        PlanParams::Single {
+                            method: match field(&fields, idx, "method")? {
+                                "filter_split" => SingleMethod::FilterSplit,
+                                "map_split" => SingleMethod::MapSplit,
+                                other => bail!("line {}: unknown method {other:?}", idx + 1),
+                            },
+                            p: usize_field(&fields, idx, "p")?,
+                            q: usize_field(&fields, idx, "q")?,
+                            stages,
+                            loading,
+                        }
+                    } else {
+                        PlanParams::Multi {
+                            s_bytes: usize_field(&fields, idx, "s")?,
+                            wx_prime: usize_field(&fields, idx, "wxp")?,
+                            m_prime: usize_field(&fields, idx, "mp")?,
+                            stages,
+                            loading,
+                        }
+                    }
+                }
                 other => bail!("line {}: unknown kind {other:?}", idx + 1),
             };
             let tuned = Tuned {
@@ -399,6 +451,8 @@ mod tests {
                     method: SingleMethod::FilterSplit,
                     p: 3,
                     q: 1,
+                    stages: 3,
+                    loading: Loading::Cyclic,
                 },
                 tuned_cycles: 10_234.5625,
                 paper_cycles: 11_000.125,
@@ -408,7 +462,13 @@ mod tests {
             ConvProblem::multi(256, 14, 256, 3),
             &g,
             Tuned {
-                params: PlanParams::Multi { s_bytes: 128, wx_prime: 32, m_prime: 64 },
+                params: PlanParams::Multi {
+                    s_bytes: 128,
+                    wx_prime: 32,
+                    m_prime: 64,
+                    stages: 2,
+                    loading: Loading::Tilewise,
+                },
                 tuned_cycles: 25_000.0,
                 paper_cycles: 30_303.030_303_030_303,
             },
@@ -417,7 +477,13 @@ mod tests {
             ConvProblem::multi(64, 28, 128, 1),
             &t,
             Tuned {
-                params: PlanParams::Multi { s_bytes: 64, wx_prime: 32, m_prime: 128 },
+                params: PlanParams::Multi {
+                    s_bytes: 64,
+                    wx_prime: 32,
+                    m_prime: 128,
+                    stages: 4,
+                    loading: Loading::Ordered,
+                },
                 tuned_cycles: 5_813.77,
                 paper_cycles: 6_900.01,
             },
@@ -472,7 +538,16 @@ mod tests {
         )
         .is_err());
         assert!(PlanCache::from_lines(
-            "gpu=G c=1 wy=8 wx=8 m=1 k=1 kind=single method=nope p=1 q=1 tuned_cycles=1 paper_cycles=1"
+            "gpu=G c=1 wy=8 wx=8 m=1 k=1 kind=single method=nope p=1 q=1 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=1"
+        )
+        .is_err());
+        // present-but-garbage v4 axes are corruption, not staleness
+        assert!(PlanCache::from_lines(
+            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 stages=2 loading=warp_magic tuned_cycles=1 paper_cycles=2"
+        )
+        .is_err());
+        assert!(PlanCache::from_lines(
+            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 stages=9 loading=cyclic tuned_cycles=1 paper_cycles=2"
         )
         .is_err());
         // comments and blanks are fine
@@ -483,39 +558,98 @@ mod tests {
     fn stale_or_edited_entries_are_rejected_not_trusted() {
         // tuned slower than paper: would trip the never-lose asserts
         assert!(PlanCache::from_lines(
-            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 tuned_cycles=2 paper_cycles=1"
+            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 stages=2 loading=cyclic tuned_cycles=2 paper_cycles=1"
         )
         .is_err());
         // invalid problem (K > W)
         assert!(PlanCache::from_lines(
-            "gpu=G c=1 wy=2 wx=2 m=4 k=3 kind=single method=filter_split p=1 q=1 tuned_cycles=1 paper_cycles=1"
+            "gpu=G c=1 wy=2 wx=2 m=4 k=3 kind=single method=filter_split p=1 q=1 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=1"
         )
         .is_err());
         // P out of range
         assert!(PlanCache::from_lines(
-            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=99 q=1 tuned_cycles=1 paper_cycles=1"
+            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=99 q=1 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=1"
         )
         .is_err());
         // non-coalesced segment size
         assert!(PlanCache::from_lines(
-            "gpu=G c=8 wy=8 wx=8 m=4 k=3 kind=multi s=36 wxp=32 mp=4 tuned_cycles=1 paper_cycles=1"
+            "gpu=G c=8 wy=8 wx=8 m=4 k=3 kind=multi s=36 wxp=32 mp=4 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=1"
         )
         .is_err());
         // working set beyond the named GPU's double-buffer budget
         assert!(PlanCache::from_lines(
-            "gpu=GTX_1080Ti c=8 wy=64 wx=64 m=512 k=3 kind=multi s=128 wxp=256 mp=512 tuned_cycles=1 paper_cycles=1"
+            "gpu=GTX_1080Ti c=8 wy=64 wx=64 m=512 k=3 kind=multi s=128 wxp=256 mp=512 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=1"
+        )
+        .is_err());
+        // a 4-stage working set can overflow where the depth-2 one fits
+        assert!(PlanCache::from_lines(
+            "gpu=GTX_1080Ti c=8 wy=64 wx=64 m=512 k=3 kind=multi s=128 wxp=128 mp=64 stages=4 loading=cyclic tuned_cycles=1 paper_cycles=1"
         )
         .is_err());
         // kind must match the problem's channel count (a single-channel
         // plan for C>1 would panic the builder on lookup)
         assert!(PlanCache::from_lines(
-            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=single method=filter_split p=1 q=1 tuned_cycles=1 paper_cycles=2"
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=single method=filter_split p=1 q=1 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=2"
         )
         .is_err());
         assert!(PlanCache::from_lines(
-            "gpu=G c=1 wy=14 wx=14 m=16 k=3 kind=multi s=32 wxp=32 mp=16 tuned_cycles=1 paper_cycles=2"
+            "gpu=G c=1 wy=14 wx=14 m=16 k=3 kind=multi s=32 wxp=32 mp=16 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=2"
         )
         .is_err());
+    }
+
+    #[test]
+    fn pre_v4_plan_entries_are_dropped_and_counted_not_served() {
+        // exactly what a v3 `tune --save` produced: plan lines without
+        // stages=/loading=.  Serving them would resurrect pre-multi-stage
+        // plans with cycle counts the v4 builder no longer reproduces.
+        let v3 = "# pasconv plan cache v3: problem + gpu -> tuned plan params / op dispatch decisions\n\
+            gpu=GTX_1080Ti c=1 wy=224 wx=224 m=64 k=3 kind=single method=filter_split \
+            p=3 q=1 tuned_cycles=10234.5625 paper_cycles=11000.125\n\
+            gpu=GTX_1080Ti c=256 wy=14 wx=14 m=256 k=3 kind=multi s=128 wxp=32 mp=64 \
+            tuned_cycles=25000 paper_cycles=30303\n\
+            gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=dispatch backend=winograd \
+            cycles=1 tuned_cycles=2\n";
+        let cache = PlanCache::from_lines(v3).unwrap();
+        assert_eq!(cache.len(), 0, "stale plan entries must not be served");
+        assert_eq!(cache.stale_dropped(), 2);
+        // dispatch entries never carried plan params: they survive
+        assert_eq!(cache.dispatch_len(), 1);
+        assert!(cache.get(&ConvProblem::single(224, 64, 3), &gtx_1080ti()).is_none());
+    }
+
+    #[test]
+    fn v3_loads_then_a_fresh_save_round_trips_as_v4() {
+        // the upgrade path: load a v3 file (plans dropped), re-tune the
+        // dropped key, save — the new file is v4 and round-trips exactly
+        let v3 = "gpu=GTX_1080Ti c=1 wy=224 wx=224 m=64 k=3 kind=single \
+            method=filter_split p=3 q=1 tuned_cycles=10234.5625 paper_cycles=11000.125\n";
+        let mut cache = PlanCache::from_lines(v3).unwrap();
+        assert_eq!((cache.len(), cache.stale_dropped()), (0, 1));
+        let g = gtx_1080ti();
+        cache.insert(
+            ConvProblem::single(224, 64, 3),
+            &g,
+            Tuned {
+                params: PlanParams::Single {
+                    method: SingleMethod::FilterSplit,
+                    p: 3,
+                    q: 1,
+                    stages: 4,
+                    loading: Loading::Ordered,
+                },
+                tuned_cycles: 9_500.25,
+                paper_cycles: 11_000.125,
+            },
+        );
+        let text = cache.to_lines();
+        assert!(text.starts_with("# pasconv plan cache v4"), "{text}");
+        assert!(text.contains("stages=4 loading=ordered"), "{text}");
+        let back = PlanCache::from_lines(&text).unwrap();
+        assert_eq!(back.stale_dropped(), 0);
+        let t = back.get(&ConvProblem::single(224, 64, 3), &g).unwrap();
+        assert_eq!(t.params.staging(), (4, Loading::Ordered));
+        assert_eq!(back.to_lines(), text);
     }
 
     #[test]
@@ -569,16 +703,18 @@ mod tests {
     }
 
     #[test]
-    fn v1_files_without_dispatch_entries_parse_unchanged() {
+    fn v1_files_still_load_but_their_plans_are_not_served() {
         // exactly what a pre-v2 `tune --save` produced: old header
-        // comment, plan lines only
+        // comment, plan lines only — loading must not error (the
+        // coordinator keeps starting), but the pre-v4 plan is dropped
         let v1 = "# pasconv plan cache: problem + gpu -> tuned plan params\n\
             gpu=GTX_1080Ti c=1 wy=224 wx=224 m=64 k=3 kind=single method=filter_split \
             p=3 q=1 tuned_cycles=10234.5625 paper_cycles=11000.125\n";
         let cache = PlanCache::from_lines(v1).unwrap();
-        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.stale_dropped(), 1);
         assert_eq!(cache.dispatch_len(), 0);
-        assert!(cache.get(&ConvProblem::single(224, 64, 3), &gtx_1080ti()).is_some());
+        assert!(cache.get(&ConvProblem::single(224, 64, 3), &gtx_1080ti()).is_none());
     }
 
     #[test]
@@ -648,7 +784,13 @@ mod tests {
     #[test]
     fn speedup_definition() {
         let t = Tuned {
-            params: PlanParams::Multi { s_bytes: 32, wx_prime: 32, m_prime: 1 },
+            params: PlanParams::Multi {
+                s_bytes: 32,
+                wx_prime: 32,
+                m_prime: 1,
+                stages: 2,
+                loading: Loading::Cyclic,
+            },
             tuned_cycles: 50.0,
             paper_cycles: 100.0,
         };

@@ -13,20 +13,51 @@
 //! (capped at 256 px as in §3.2), and M' over the divisors of M, keeping
 //! every triple whose §3.2(4) double-buffer fits half the shared memory.
 
-use crate::analytic::multi::{working_set_bytes, wy_prime};
+use crate::analytic::multi::{staged_working_set_bytes, working_set_bytes, wy_prime};
 use crate::analytic::single::{d1_bytes, d2_bytes, th1, th2};
 use crate::analytic::{SingleChoice, SingleMethod, StrideFixedChoice};
 use crate::conv::{ConvProblem, BYTES_F32};
-use crate::gpusim::GpuSpec;
+use crate::gpusim::{GpuSpec, Loading};
+use crate::plans::single_channel;
 
 /// A point in the plan space — enough to rebuild the full `KernelPlan`.
+/// Every variant carries the two pipeline axes: `stages` (buffer depth)
+/// and `loading` (segment-coalescing strategy of the stage transfer).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlanParams {
     /// §3.1 shape: one divisor active, the other reset to 1 (paper step 4)
-    Single { method: SingleMethod, p: usize, q: usize },
+    Single { method: SingleMethod, p: usize, q: usize, stages: u32, loading: Loading },
     /// §3.2 shape: segment bytes, strip pixels, filters per block
-    Multi { s_bytes: usize, wx_prime: usize, m_prime: usize },
+    Multi { s_bytes: usize, wx_prime: usize, m_prime: usize, stages: u32, loading: Loading },
 }
+
+impl PlanParams {
+    /// The pipeline axes common to both variants.
+    pub fn staging(&self) -> (u32, Loading) {
+        match *self {
+            PlanParams::Single { stages, loading, .. }
+            | PlanParams::Multi { stages, loading, .. } => (stages, loading),
+        }
+    }
+
+    /// Is this point in the pre-multi-stage (depth-2 cyclic) subspace?
+    pub fn is_depth2_cyclic(&self) -> bool {
+        self.staging() == (2, Loading::Cyclic)
+    }
+}
+
+/// The (stages, loading) variants the tuner crosses with every geometry.
+/// Tilewise serializes its loads per warp, so stages > 2 only spend smem
+/// without amortizing latency — the sweep skips those dominated points.
+pub const STAGED_VARIANTS: [(u32, Loading); 7] = [
+    (2, Loading::Cyclic),
+    (3, Loading::Cyclic),
+    (4, Loading::Cyclic),
+    (2, Loading::Tilewise),
+    (2, Loading::Ordered),
+    (3, Loading::Ordered),
+    (4, Loading::Ordered),
+];
 
 fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
@@ -126,22 +157,33 @@ pub fn enumerate(p: &ConvProblem, spec: &GpuSpec) -> Vec<PlanParams> {
 
 fn enumerate_single(p: &ConvProblem, spec: &GpuSpec) -> Vec<PlanParams> {
     let budget = spec.shared_mem_bytes as usize;
-    let mut out = Vec::new();
+    let mut bases: Vec<(SingleMethod, usize, usize, usize)> = Vec::new();
     for pp in distinct_divisions(p.wy) {
-        if d1_bytes(p, spec, pp) <= budget {
-            out.push(PlanParams::Single { method: SingleMethod::FilterSplit, p: pp, q: 1 });
+        let d = d1_bytes(p, spec, pp);
+        if d <= budget {
+            bases.push((SingleMethod::FilterSplit, pp, 1, d));
         }
     }
     for q in distinct_divisions(p.m) {
-        if d2_bytes(p, spec, q) <= budget {
-            out.push(PlanParams::Single { method: SingleMethod::MapSplit, p: 1, q });
+        let d = d2_bytes(p, spec, q);
+        if d <= budget {
+            bases.push((SingleMethod::MapSplit, 1, q, d));
         }
     }
     // the §2.2 volume fallback (undivided, smem clamped by the builder)
     // must stay reachable even when nothing fits the budget
-    let fallback = PlanParams::Single { method: SingleMethod::FilterSplit, p: 1, q: 1 };
-    if !out.contains(&fallback) {
-        out.push(fallback);
+    if !bases.iter().any(|&(m, pp, q, _)| m == SingleMethod::FilterSplit && pp == 1 && q == 1) {
+        bases.push((SingleMethod::FilterSplit, 1, 1, d1_bytes(p, spec, 1)));
+    }
+    let mut out = Vec::new();
+    for (method, pp, q, d) in bases {
+        let stage = single_channel::stage_bytes(p, method, pp, q);
+        for (st, ld) in STAGED_VARIANTS {
+            // each stage past the baseline two buffers one more piece
+            if d + (st as usize - 2) * stage <= budget {
+                out.push(PlanParams::Single { method, p: pp, q, stages: st, loading: ld });
+            }
+        }
     }
     out
 }
@@ -160,8 +202,16 @@ fn enumerate_multi(p: &ConvProblem, spec: &GpuSpec) -> Vec<PlanParams> {
     for &s in &SEGMENT_SWEEP {
         for &wx in &wx_opts {
             for &mp in &m_opts {
-                if working_set_bytes(s, wx, mp, p.k) <= half {
-                    out.push(PlanParams::Multi { s_bytes: s, wx_prime: wx, m_prime: mp });
+                for (st, ld) in STAGED_VARIANTS {
+                    if staged_working_set_bytes(s, wx, mp, p.k, st) <= half {
+                        out.push(PlanParams::Multi {
+                            s_bytes: s,
+                            wx_prime: wx,
+                            m_prime: mp,
+                            stages: st,
+                            loading: ld,
+                        });
+                    }
                 }
             }
         }
@@ -206,17 +256,21 @@ mod tests {
         let mut has_fallback = false;
         for c in &cands {
             match *c {
-                PlanParams::Single { method, p: pp, q } => {
+                PlanParams::Single { method, p: pp, q, stages, .. } => {
                     assert!(pp == 1 || q == 1);
+                    assert!((2..=4).contains(&stages));
                     if (pp, q) == (1, 1) && method == SingleMethod::FilterSplit {
                         has_fallback = true;
                     }
-                    if pp > 1 {
-                        assert!(d1_bytes(&p, &g, pp) <= g.shared_mem_bytes as usize);
-                    }
-                    if q > 1 {
-                        assert!(d2_bytes(&p, &g, q) <= g.shared_mem_bytes as usize);
-                    }
+                    let d = match method {
+                        SingleMethod::FilterSplit => d1_bytes(&p, &g, pp),
+                        SingleMethod::MapSplit => d2_bytes(&p, &g, q),
+                    };
+                    let stage = single_channel::stage_bytes(&p, method, pp, q);
+                    assert!(
+                        d + (stages as usize - 2) * stage <= g.shared_mem_bytes as usize,
+                        "staged resident set over budget"
+                    );
                 }
                 PlanParams::Multi { .. } => panic!("multi candidate for single problem"),
             }
@@ -225,22 +279,54 @@ mod tests {
     }
 
     #[test]
-    fn multi_candidates_fit_half_smem() {
+    fn multi_candidates_fit_staged_smem() {
         let g = gtx_1080ti();
         let p = ConvProblem::multi(256, 14, 256, 3);
         let cands = enumerate(&p, &g);
         assert!(!cands.is_empty());
         for c in &cands {
-            let PlanParams::Multi { s_bytes, wx_prime, m_prime } = *c else {
+            let PlanParams::Multi { s_bytes, wx_prime, m_prime, stages, .. } = *c else {
                 panic!("single candidate for multi problem");
             };
             assert_eq!(s_bytes % 32, 0);
             assert_eq!(wx_prime % 32, 0);
             assert_eq!(p.m % m_prime, 0);
+            assert!((2..=4).contains(&stages));
             assert!(
-                working_set_bytes(s_bytes, wx_prime, m_prime, p.k)
+                staged_working_set_bytes(s_bytes, wx_prime, m_prime, p.k, stages)
                     <= g.shared_mem_bytes as usize / 2
             );
+        }
+    }
+
+    #[test]
+    fn every_geometry_carries_the_depth2_cyclic_point() {
+        // the pre-multi-stage plan space must stay a subset of the new
+        // one: for every (geometry, stages, loading) candidate the plain
+        // (geometry, 2, cyclic) point is also enumerated
+        let g = gtx_1080ti();
+        for p in [ConvProblem::multi(128, 28, 128, 3), ConvProblem::single(224, 64, 3)] {
+            let cands = enumerate(&p, &g);
+            assert!(cands.iter().any(|c| c.is_depth2_cyclic()));
+            for c in &cands {
+                let base = match *c {
+                    PlanParams::Single { method, p: pp, q, .. } => PlanParams::Single {
+                        method,
+                        p: pp,
+                        q,
+                        stages: 2,
+                        loading: Loading::Cyclic,
+                    },
+                    PlanParams::Multi { s_bytes, wx_prime, m_prime, .. } => PlanParams::Multi {
+                        s_bytes,
+                        wx_prime,
+                        m_prime,
+                        stages: 2,
+                        loading: Loading::Cyclic,
+                    },
+                };
+                assert!(cands.contains(&base), "{base:?} missing for {c:?}");
+            }
         }
     }
 

@@ -34,16 +34,17 @@ use crate::util::stats::geomean;
 /// How many top-scored candidates get the full simulate cross-check.
 pub const TOP_K: usize = 8;
 
-/// Materialize the `KernelPlan` for a parameterization.
+/// Materialize the `KernelPlan` for a parameterization: the geometry's
+/// base plan, deepened to the candidate's (stages, loading) point.
 pub fn build_plan(p: &ConvProblem, spec: &GpuSpec, params: &PlanParams) -> KernelPlan {
     match *params {
-        PlanParams::Single { method, p: pp, q } => {
+        PlanParams::Single { method, p: pp, q, stages, loading } => {
             let c = enumerate::single_choice(p, spec, method, pp, q);
-            single_channel::plan_with_choice(p, spec, &c)
+            single_channel::plan_with_choice(p, spec, &c).staged(stages, loading)
         }
-        PlanParams::Multi { s_bytes, wx_prime, m_prime } => {
+        PlanParams::Multi { s_bytes, wx_prime, m_prime, stages, loading } => {
             let c = enumerate::multi_choice(p, spec, s_bytes, wx_prime, m_prime);
-            stride_fixed::plan_with_choice(p, spec, &c)
+            stride_fixed::plan_with_choice(p, spec, &c).staged(stages, loading)
         }
     }
 }
@@ -74,23 +75,53 @@ pub fn is_legal(spec: &GpuSpec, plan: &KernelPlan) -> bool {
 /// The paper's closed-form pick as `(plan, params)` — the regression
 /// baseline every search includes.
 pub fn paper_params(p: &ConvProblem, spec: &GpuSpec) -> (KernelPlan, PlanParams) {
+    use crate::gpusim::Loading;
     if p.is_single_channel() {
         let c = analytic::choose_single(p, spec);
         let plan = single_channel::plan_with_choice(p, spec, &c);
-        (plan, PlanParams::Single { method: c.method, p: c.p, q: c.q })
+        (
+            plan,
+            PlanParams::Single {
+                method: c.method,
+                p: c.p,
+                q: c.q,
+                stages: 2,
+                loading: Loading::Cyclic,
+            },
+        )
     } else {
         let (plan, c) = stride_fixed::plan_and_choice(p, spec);
-        (plan, PlanParams::Multi { s_bytes: c.s_bytes, wx_prime: c.wx_prime, m_prime: c.m_prime })
+        (
+            plan,
+            PlanParams::Multi {
+                s_bytes: c.s_bytes,
+                wx_prime: c.wx_prime,
+                m_prime: c.m_prime,
+                stages: 2,
+                loading: Loading::Cyclic,
+            },
+        )
     }
 }
 
-/// Full search for one problem (no cache involved).
+/// Full search over the complete (geometry x stages x loading) space.
 pub fn tune(p: &ConvProblem, spec: &GpuSpec) -> Tuned {
+    tune_space(p, spec, true)
+}
+
+/// Search restricted to the pre-multi-stage (depth-2 cyclic) subspace —
+/// the ablation floor the multi-stage gate compares against.
+pub fn tune_depth2(p: &ConvProblem, spec: &GpuSpec) -> Tuned {
+    tune_space(p, spec, false)
+}
+
+fn tune_space(p: &ConvProblem, spec: &GpuSpec, staged: bool) -> Tuned {
     let (paper_plan, paper) = paper_params(p, spec);
     let paper_cycles = simulate(spec, &paper_plan).cycles;
 
     let mut scored: Vec<(f64, PlanParams)> = enumerate::enumerate(p, spec)
         .into_iter()
+        .filter(|c| staged || c.is_depth2_cyclic())
         .filter_map(|c| score::score(p, spec, &c).map(|s| (s, c)))
         .collect();
     scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
@@ -140,18 +171,40 @@ pub fn tuned_plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
     build_plan(p, spec, &tuned(p, spec).params)
 }
 
+/// Memoized best plan of the depth-2 cyclic subspace (the pre-multi-
+/// stage tuner).  Kept out of the serializable `PlanCache` — it is an
+/// ablation floor, not a serving artifact.
+pub fn depth2_tuned_plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
+    use std::collections::HashMap;
+    static DEPTH2: OnceLock<Mutex<HashMap<(ConvProblem, &'static str), Tuned>>> =
+        OnceLock::new();
+    let memo = DEPTH2.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = (*p, spec.name);
+    if let Some(t) = memo.lock().unwrap().get(&key).copied() {
+        return build_plan(p, spec, &t.params);
+    }
+    let t = tune_depth2(p, spec);
+    memo.lock().unwrap().insert(key, t);
+    build_plan(p, spec, &t.params)
+}
+
 /// Human-readable description of the tuned pick (router/CLI advice).
 pub fn advice(p: &ConvProblem, spec: &GpuSpec) -> String {
     let t = tuned(p, spec);
+    let (stages, loading) = t.params.staging();
     let params = match t.params {
-        PlanParams::Single { method, p: pp, q } => {
+        PlanParams::Single { method, p: pp, q, .. } => {
             format!("single-channel {method:?} P={pp} Q={q}")
         }
-        PlanParams::Multi { s_bytes, wx_prime, m_prime } => {
+        PlanParams::Multi { s_bytes, wx_prime, m_prime, .. } => {
             format!("stride-fixed S={s_bytes} M'={m_prime} W'x={wx_prime}")
         }
     };
-    format!("{params} (tuned, {:.2}x vs paper pick)", t.speedup())
+    format!(
+        "{params} s{stages}/{} (tuned, {:.2}x vs paper pick)",
+        loading.tag(),
+        t.speedup()
+    )
 }
 
 /// Preload memoized entries (e.g. a `pasconv tune --save` file) so
@@ -301,6 +354,35 @@ mod tests {
                 p.label()
             );
         }
+    }
+
+    #[test]
+    fn full_space_never_loses_to_the_depth2_floor_and_sometimes_wins() {
+        // the depth-2 cyclic subspace is a subset of the full space, so
+        // the full search can never be slower; on latency-exposed rows
+        // it must be strictly faster somewhere
+        let g = gtx_1080ti();
+        let mut strict = 0;
+        for p in fig4_suite().into_iter().chain(fig5_suite()) {
+            let full = simulate(&g, &build_plan(&p, &g, &tune(&p, &g).params)).cycles;
+            let floor = simulate(&g, &depth2_tuned_plan(&p, &g)).cycles;
+            assert!(full <= floor * (1.0 + 1e-9), "{}: {full} > {floor}", p.label());
+            if full < floor * 0.999 {
+                strict += 1;
+            }
+        }
+        assert!(strict >= 3, "only {strict} rows improved over the depth-2 floor");
+    }
+
+    #[test]
+    fn tuner_picks_multi_stage_plans_somewhere() {
+        let g = gtx_1080ti();
+        let deeper = fig4_suite()
+            .into_iter()
+            .chain(fig5_suite())
+            .filter(|p| !tune(p, &g).params.is_depth2_cyclic())
+            .count();
+        assert!(deeper >= 5, "only {deeper} rows picked a staged variant");
     }
 
     #[test]

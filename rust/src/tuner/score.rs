@@ -18,8 +18,7 @@
 use super::enumerate::{multi_choice, single_choice, PlanParams};
 use crate::conv::{ConvProblem, BYTES_F32};
 use crate::gpusim::pipeline::simulate_pipeline_runs;
-use crate::gpusim::sim::WRITEBACK_TAIL_FRACTION;
-use crate::gpusim::{ExecConfig, GpuSpec, Round};
+use crate::gpusim::{writeback_tail_cycles, ExecConfig, GpuSpec, Loading, Round};
 use crate::plans::{single_channel, stride_fixed, COMPUTE_EFFICIENCY, LAUNCH_OVERHEAD_CYCLES};
 
 /// Candidates whose schedule exceeds this many rounds per SM are skipped
@@ -27,12 +26,14 @@ use crate::plans::{single_channel, stride_fixed, COMPUTE_EFFICIENCY, LAUNCH_OVER
 /// almost no work — and expanding them would dominate memory).
 pub const MAX_ROUNDS: usize = 4_000_000;
 
-fn exec_config(sms_active: u32, threads_per_sm: u32) -> ExecConfig {
+fn exec_config(sms_active: u32, threads_per_sm: u32, stages: u32, loading: Loading) -> ExecConfig {
     ExecConfig {
         sms_active,
         threads_per_sm,
         compute_efficiency: COMPUTE_EFFICIENCY,
         launch_overhead_cycles: LAUNCH_OVERHEAD_CYCLES,
+        stages,
+        loading,
     }
 }
 
@@ -41,19 +42,29 @@ fn runs_cycles(spec: &GpuSpec, cfg: &ExecConfig, runs: &[(Round, usize)]) -> f64
     simulate_pipeline_runs(spec, cfg, runs).total_cycles
 }
 
-/// Writeback tail charge, as in `gpusim::simulate`.
-fn writeback_cycles(spec: &GpuSpec, p: &ConvProblem) -> f64 {
-    WRITEBACK_TAIL_FRACTION * (p.out_elems() * BYTES_F32) as f64 / spec.bytes_per_cycle()
+/// Charged writeback, matching `simulate_detailed`: max(staged tail,
+/// DRAM bus-floor excess) so the score stays bit-identical to simulate.
+fn writeback_cycles(
+    spec: &GpuSpec,
+    p: &ConvProblem,
+    pipe_total: f64,
+    load_bytes: f64,
+    stages: u32,
+) -> f64 {
+    let out = (p.out_elems() * BYTES_F32) as f64;
+    let tail = writeback_tail_cycles(spec, out, stages);
+    let floor = (load_bytes + out) / spec.bytes_per_cycle();
+    tail.max(floor - pipe_total)
 }
 
 /// Exact simulated cycles of a candidate, or `None` when the candidate's
 /// schedule is too long to ever win (`MAX_ROUNDS`).
 pub fn score(p: &ConvProblem, spec: &GpuSpec, params: &PlanParams) -> Option<f64> {
     match *params {
-        PlanParams::Single { method, p: pp, q } => {
+        PlanParams::Single { method, p: pp, q, stages, loading } => {
             let c = single_choice(p, spec, method, pp, q);
             let r = single_channel::recipe(p, spec, &c);
-            let cfg = exec_config(r.sms_active, r.threads_per_sm);
+            let cfg = exec_config(r.sms_active, r.threads_per_sm, stages, loading);
             let mut runs = vec![(r.first, 1usize)];
             if let Some((tail, n)) = r.tail {
                 if n > MAX_ROUNDS {
@@ -61,16 +72,21 @@ pub fn score(p: &ConvProblem, spec: &GpuSpec, params: &PlanParams) -> Option<f64
                 }
                 runs.push((tail, n));
             }
-            Some(runs_cycles(spec, &cfg, &runs) + writeback_cycles(spec, p))
+            let t = runs_cycles(spec, &cfg, &runs);
+            let loads: f64 = runs.iter().map(|(r, n)| r.load_bytes * *n as f64).sum::<f64>()
+                * r.sms_active as f64;
+            Some(t + writeback_cycles(spec, p, t, loads, stages))
         }
-        PlanParams::Multi { s_bytes, wx_prime, m_prime } => {
+        PlanParams::Multi { s_bytes, wx_prime, m_prime, stages, loading } => {
             let c = multi_choice(p, spec, s_bytes, wx_prime, m_prime);
             let r = stride_fixed::recipe(p, spec, &c);
             if r.count > MAX_ROUNDS {
                 return None;
             }
-            let cfg = exec_config(r.sms_active, r.threads_per_sm);
-            Some(runs_cycles(spec, &cfg, &[(r.round, r.count)]) + writeback_cycles(spec, p))
+            let cfg = exec_config(r.sms_active, r.threads_per_sm, stages, loading);
+            let t = runs_cycles(spec, &cfg, &[(r.round, r.count)]);
+            let loads = r.round.load_bytes * r.count as f64 * r.sms_active as f64;
+            Some(t + writeback_cycles(spec, p, t, loads, stages))
         }
     }
 }
@@ -91,15 +107,23 @@ mod tests {
             (SingleMethod::FilterSplit, 4, 1),
             (SingleMethod::MapSplit, 1, 8),
         ] {
-            let params = PlanParams::Single { method, p: pp, q };
-            let s = score(&p, &g, &params).unwrap();
-            let c = single_choice(&p, &g, method, pp, q);
-            let r = simulate(&g, &single_channel::plan_with_choice(&p, &g, &c));
-            assert!(
-                (s - r.cycles).abs() < 1e-6 * r.cycles,
-                "{method:?} P={pp} Q={q}: score {s} vs simulate {}",
-                r.cycles
-            );
+            for (stages, loading) in crate::tuner::enumerate::STAGED_VARIANTS {
+                let params = PlanParams::Single { method, p: pp, q, stages, loading };
+                let s = score(&p, &g, &params).unwrap();
+                let c = single_choice(&p, &g, method, pp, q);
+                let plan =
+                    single_channel::plan_with_choice(&p, &g, &c).staged(stages, loading);
+                if plan.smem_bytes_per_sm > g.shared_mem_bytes {
+                    continue; // enumerate never emits these; simulate would panic
+                }
+                let r = simulate(&g, &plan);
+                assert!(
+                    (s - r.cycles).abs() < 1e-6 * r.cycles,
+                    "{method:?} P={pp} Q={q} s{stages}/{}: score {s} vs simulate {}",
+                    loading.tag(),
+                    r.cycles
+                );
+            }
         }
     }
 
@@ -108,15 +132,20 @@ mod tests {
         let g = gtx_1080ti();
         let p = ConvProblem::multi(128, 28, 128, 3);
         for (s_bytes, wx, mp) in [(32, 128, 64), (64, 32, 128), (128, 64, 16)] {
-            let params = PlanParams::Multi { s_bytes, wx_prime: wx, m_prime: mp };
-            let s = score(&p, &g, &params).unwrap();
-            let c = multi_choice(&p, &g, s_bytes, wx, mp);
-            let r = simulate(&g, &stride_fixed::plan_with_choice(&p, &g, &c));
-            assert!(
-                (s - r.cycles).abs() < 1e-6 * r.cycles,
-                "S={s_bytes} W'x={wx} M'={mp}: score {s} vs simulate {}",
-                r.cycles
-            );
+            for (stages, loading) in crate::tuner::enumerate::STAGED_VARIANTS {
+                let params =
+                    PlanParams::Multi { s_bytes, wx_prime: wx, m_prime: mp, stages, loading };
+                let s = score(&p, &g, &params).unwrap();
+                let c = multi_choice(&p, &g, s_bytes, wx, mp);
+                let plan = stride_fixed::plan_with_choice(&p, &g, &c).staged(stages, loading);
+                let r = simulate(&g, &plan);
+                assert!(
+                    (s - r.cycles).abs() < 1e-6 * r.cycles,
+                    "S={s_bytes} W'x={wx} M'={mp} s{stages}/{}: score {s} vs simulate {}",
+                    loading.tag(),
+                    r.cycles
+                );
+            }
         }
     }
 
@@ -125,7 +154,13 @@ mod tests {
         let g = gtx_1080ti();
         // C=512, W=512, M'=1, W'x=32: millions of near-empty rounds
         let p = ConvProblem::multi(512, 512, 512, 5);
-        let params = PlanParams::Multi { s_bytes: 32, wx_prime: 32, m_prime: 1 };
+        let params = PlanParams::Multi {
+            s_bytes: 32,
+            wx_prime: 32,
+            m_prime: 1,
+            stages: 2,
+            loading: Loading::Cyclic,
+        };
         assert!(score(&p, &g, &params).is_none());
     }
 }

@@ -4,7 +4,7 @@
 //! `PlanCache` serialization round-trips whatever the search produces.
 
 use pasconv::conv::ConvProblem;
-use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell};
+use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell, Loading, MAX_STAGES, MIN_STAGES};
 use pasconv::plans::paper_plan_for;
 use pasconv::tuner::{self, PlanCache};
 use pasconv::util::prop::{check_no_shrink, Config};
@@ -98,6 +98,93 @@ fn prop_tune_outcome_consistent_with_its_own_report() {
                     rebuilt.cycles,
                     t.tuned_cycles
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_staged_depth2_cyclic_is_bit_identical() {
+    // the multi-stage generalization must be an EXACT no-op at the
+    // paper's ping-pong point: same plan, same bits out of simulate
+    for spec in [gtx_1080ti(), titan_x_maxwell()] {
+        check_no_shrink(
+            &Config { cases: 48, seed: 25 },
+            any_problem,
+            |p| {
+                for plan in [paper_plan_for(p, &spec), tuner::depth2_tuned_plan(p, &spec)] {
+                    let staged = plan.staged(2, Loading::Cyclic);
+                    if staged.name != plan.name {
+                        return Err(format!("{}: renamed to {}", plan.name, staged.name));
+                    }
+                    let a = simulate(&spec, &plan).cycles;
+                    let b = simulate(&spec, &staged).cycles;
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("{}: {a} != {b} (bitwise)", plan.name));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_staged_cycles_monotone_nonincreasing_in_depth() {
+    // under cyclic loading both staged effects help with depth: exposed
+    // latency scales 1/(s-1) and the writeback tail 2/s, so cycles can
+    // only fall (until the working set no longer fits shared memory)
+    for spec in [gtx_1080ti(), titan_x_maxwell()] {
+        check_no_shrink(
+            &Config { cases: 48, seed: 26 },
+            any_problem,
+            |p| {
+                let base = paper_plan_for(p, &spec);
+                let mut last = f64::INFINITY;
+                for s in MIN_STAGES..=MAX_STAGES {
+                    let smem = base.smem_bytes_per_sm + (s - 2) * base.stage_bytes;
+                    if smem > spec.shared_mem_bytes {
+                        break; // deeper variants are illegal, not slower
+                    }
+                    let c = simulate(&spec, &base.staged(s, Loading::Cyclic)).cycles;
+                    if c > last * (1.0 + 1e-12) {
+                        return Err(format!("{}: s={s} cycles {c} > {last}", base.name));
+                    }
+                    last = c;
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_smem_overflow_panics_cleanly_not_silently() {
+    // a staged plan that cannot fit must die with the overflow message,
+    // never simulate garbage — forced by inflating stage_bytes so every
+    // geometry overflows at depth 3
+    let g = gtx_1080ti();
+    check_no_shrink(
+        &Config { cases: 24, seed: 27 },
+        any_problem,
+        |p| {
+            let mut plan = paper_plan_for(p, &g);
+            plan.stage_bytes = g.shared_mem_bytes; // s=3 adds a full budget
+            let staged = plan.staged(3, Loading::Cyclic);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                simulate(&g, &staged)
+            }));
+            let Err(payload) = r else {
+                return Err(format!("{}: oversized plan simulated", staged.name));
+            };
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default();
+            if !msg.contains("stage smem overflow") {
+                return Err(format!("{}: wrong panic {msg:?}", staged.name));
             }
             Ok(())
         },
