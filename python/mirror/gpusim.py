@@ -225,6 +225,52 @@ def simulate_pipeline_runs(spec, cfg, runs):
 
 WRITEBACK_TAIL_FRACTION = 0.15
 
+# Fused writeback epilogues (sim.rs::Epilogue), kept in tag form — the
+# stable serialization the PlanCache v5 lines use: "none", "relu",
+# "add", "pool{k}s{stride}".
+EP_NONE = "none"
+EP_RELU = "relu"
+EP_ADD = "add"
+
+
+def ep_pool(k, stride):
+    return f"pool{k}s{stride}"
+
+
+def ep_parse(tag):
+    """Mirror of Epilogue::parse — None on anything unrecognised,
+    otherwise the canonical tag."""
+    if tag in (EP_NONE, EP_RELU, EP_ADD):
+        return tag
+    if tag.startswith("pool") and "s" in tag[4:]:
+        k, _, stride = tag[4:].partition("s")
+        try:
+            k, stride = int(k), int(stride)
+        except ValueError:
+            return None
+        if k > 0 and stride > 0:
+            return ep_pool(k, stride)
+    return None
+
+
+def ep_pool_dims(tag):
+    """(k, stride) of a pool tag, else None."""
+    if not tag.startswith("pool"):
+        return None
+    k, _, stride = tag[4:].partition("s")
+    return int(k), int(stride)
+
+
+def ep_pooled_hw(tag, oy, ox):
+    """Mirror of Epilogue::pooled_hw: valid-window pooled map."""
+    dims = ep_pool_dims(tag)
+    if dims is None:
+        return oy, ox
+    k, stride = dims
+    assert k >= 1 and stride >= 1 and oy >= k and ox >= k, \
+        f"{tag} does not fit {oy}x{ox}"
+    return (oy - k) // stride + 1, (ox - k) // stride + 1
+
 
 def writeback_tail_cycles(spec, output_bytes, stages):
     """Un-overlapped final store burst: the ping-pong staging is
@@ -250,6 +296,10 @@ class KernelPlan:
     stages: int = 2
     loading: str = CYCLIC
     stage_bytes: int = 0
+    # fused writeback epilogue (EP_NONE = the plain conv) and the bytes
+    # it streams IN through the tail (the residual operand for EP_ADD)
+    epilogue: str = EP_NONE
+    epilogue_read_bytes: float = 0.0
 
     def staged(self, stages, loading=CYCLIC):
         """Mirror of KernelPlan::staged: deepen the ping-pong pipeline to
@@ -275,6 +325,8 @@ class KernelPlan:
             stages=stages,
             loading=loading,
             stage_bytes=self.stage_bytes,
+            epilogue=self.epilogue,
+            epilogue_read_bytes=self.epilogue_read_bytes,
         )
 
     def batched(self, n):
@@ -294,6 +346,8 @@ class KernelPlan:
             stages=self.stages,
             loading=self.loading,
             stage_bytes=self.stage_bytes,
+            epilogue=self.epilogue,
+            epilogue_read_bytes=self.epilogue_read_bytes * n,
         )
 
     def decimated(self, keep):
@@ -318,6 +372,8 @@ class KernelPlan:
             stages=self.stages,
             loading=self.loading,
             stage_bytes=self.stage_bytes,
+            epilogue=self.epilogue,
+            epilogue_read_bytes=self.epilogue_read_bytes * keep,
         )
 
     def grouped(self, groups, max_sms):
@@ -341,7 +397,31 @@ class KernelPlan:
             stages=self.stages,
             loading=self.loading,
             stage_bytes=self.stage_bytes,
+            epilogue=self.epilogue,
+            epilogue_read_bytes=self.epilogue_read_bytes * groups,
         )
+
+    def fused(self, ep, out_hw):
+        """Mirror of KernelPlan::fused: the consuming glue op absorbed
+        into this plan's writeback tail.  Only valid unfused; EP_NONE is
+        the identity."""
+        assert self.epilogue == EP_NONE, f"{self.name}: already fused"
+        if ep == EP_NONE:
+            return self
+        import dataclasses
+        if ep == EP_RELU:
+            return dataclasses.replace(self, name=f"{self.name} +relu",
+                                       epilogue=ep)
+        if ep == EP_ADD:
+            return dataclasses.replace(self, name=f"{self.name} +add",
+                                       epilogue=ep,
+                                       epilogue_read_bytes=self.output_bytes)
+        oy, ox = out_hw
+        py, px = ep_pooled_hw(ep, oy, ox)
+        frac = (py * px) / (oy * ox)
+        return dataclasses.replace(self, name=f"{self.name} +{ep}",
+                                   epilogue=ep,
+                                   output_bytes=self.output_bytes * frac)
 
 
 def plan_dram_load_bytes(plan):
@@ -366,8 +446,10 @@ def simulate_parts(spec, plan):
                      plan.compute_efficiency, plan.launch_overhead_cycles,
                      plan.stages, plan.loading)
     pipe_total, stall = simulate_pipeline_runs(spec, cfg, plan.runs)
-    tail = writeback_tail_cycles(spec, plan.output_bytes, plan.stages)
-    floor = (plan_dram_load_bytes(plan) + plan.output_bytes) / spec.bytes_per_cycle()
+    tail_bytes = plan.output_bytes + plan.epilogue_read_bytes
+    tail = writeback_tail_cycles(spec, tail_bytes, plan.stages)
+    floor = (plan_dram_load_bytes(plan) + plan.output_bytes
+             + plan.epilogue_read_bytes) / spec.bytes_per_cycle()
     wb = max(tail, floor - pipe_total)
     return pipe_total, stall, tail, wb
 

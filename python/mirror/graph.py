@@ -1,14 +1,17 @@
 """Mirror of rust/src/graph: the five model graphs (op-level conv
-nodes), the glue-op DRAM stream costing, the liveness + greedy best-fit
-arena planner, and whole-graph execution — used to generate and gate the
-EXPERIMENTS.md §7 and §10 tables without a rust toolchain."""
+nodes plus their ReLU/pool/add/concat glue), the glue-op DRAM stream
+costing, the epilogue-fusion + zero-copy-concat rewrite pass, the
+liveness + greedy best-fit arena planner, and whole-graph execution —
+used to generate and gate the EXPERIMENTS.md §7, §10 and §14 tables
+without a rust toolchain."""
 
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 import ops as opsmod
 import suites
-from gpusim import simulate_cycles
+from gpusim import (EP_ADD, EP_NONE, EP_RELU, ep_pool, ep_pooled_hw,
+                    simulate_cycles)
 from ops import ConvOp
 from plans import BYTES_F32, LAUNCH_OVERHEAD_CYCLES, ConvProblem
 
@@ -20,11 +23,13 @@ ARENA_ALIGN = 256
 class Node:
     id: int
     name: str
-    kind: str  # input | conv | pad | pool | add | concat
+    kind: str  # input | conv | relu | pad | pool | add | concat
     shape: Tuple[int, int, int]  # (c, h, w)
     inputs: List[int]
     conv: Optional[ConvOp] = None
     pool: Optional[Tuple[int, int]] = None  # (k, stride)
+    epilogue: str = EP_NONE  # conv nodes only (gpusim epilogue tag)
+    zero_copy: bool = False  # concat nodes only
 
 
 class Builder:
@@ -40,16 +45,21 @@ class Builder:
     def input(self, name, shape):
         return self._add(name, "input", shape, [])
 
-    def conv(self, name, src, op):
+    def conv(self, name, src, op, epilogue=EP_NONE):
         assert op.valid(), name
         (c, h, w) = self.nodes[src].shape
         assert (c, h, w) == (op.core.c, op.core.wy, op.core.wx), \
             f"{name}: input {(c, h, w)} vs op {op.label()}"
-        return self._add(name, "conv", (op.core.m, op.oy(), op.ox()), [src], conv=op)
+        py, px = ep_pooled_hw(epilogue, op.oy(), op.ox())
+        return self._add(name, "conv", (op.core.m, py, px), [src],
+                         conv=op, epilogue=epilogue)
 
     def conv_same(self, name, src, p):
         op = ConvOp.dense(p) if p.k == 1 else ConvOp.same(p)
         return self.conv(name, src, op)
+
+    def relu(self, name, src):
+        return self._add(name, "relu", self.nodes[src].shape, [src])
 
     def pool(self, name, src, k, stride):
         (c, h, w) = self.nodes[src].shape
@@ -65,10 +75,11 @@ class Builder:
         assert self.nodes[a].shape == self.nodes[b].shape
         return self._add(name, "add", self.nodes[a].shape, [a, b])
 
-    def concat(self, name, srcs):
+    def concat(self, name, srcs, zero_copy=False):
         shapes = [self.nodes[s].shape for s in srcs]
         return self._add(name, "concat",
-                         (sum(s[0] for s in shapes), shapes[0][1], shapes[0][2]), srcs)
+                         (sum(s[0] for s in shapes), shapes[0][1], shapes[0][2]),
+                         srcs, zero_copy=zero_copy)
 
 
 def alexnet_graph():
@@ -76,10 +87,14 @@ def alexnet_graph():
     b = Builder("alexnet")
     x = b.input("in", (96, 27, 27))
     x = b.conv("conv2", x, l[0])
+    x = b.relu("relu2", x)
     x = b.pool("pool2", x, 3, 2)
     x = b.conv("conv3", x, l[1])
+    x = b.relu("relu3", x)
     x = b.conv("conv4", x, l[2])
+    x = b.relu("relu4", x)
     x = b.conv("conv5", x, l[3])
+    x = b.relu("relu5", x)
     b.pool("pool5", x, 3, 2)
     return b
 
@@ -93,6 +108,7 @@ def vgg16_graph():
         for i in range(n):
             c = c_in if i == 0 else c_out
             x = b.conv_same(f"conv{bi+1}_{i+1}", x, ConvProblem.multi(c, w, c_out, 3))
+            x = b.relu(f"relu{bi+1}_{i+1}", x)
         x = b.pool(f"pool{bi+1}", x, 2, 2)
     return b
 
@@ -114,9 +130,11 @@ def resnet18_graph():
                 proj = None
             cb = ConvOp.same(ConvProblem.multi(c_out, w_out, c_out, 3))
             a = b.conv(f"s{s}b{blk}c1", x, ca)
+            a = b.relu(f"s{s}b{blk}relu1", a)
             c2 = b.conv(f"s{s}b{blk}c2", a, cb)
             skip = b.conv(f"s{s}proj", x, proj) if proj is not None else x
             x = b.add_skip(f"s{s}b{blk}add", c2, skip)
+            x = b.relu(f"s{s}b{blk}relu2", x)
     return b
 
 
@@ -125,13 +143,19 @@ def inception3a_graph():
     b = Builder("inception3a")
     x = b.input("in", (192, 28, 28))
     b1 = b.conv("b1.1x1", x, br[0])
+    b1 = b.relu("b1.relu", b1)
     t = b.conv("b2.reduce", x, br[1])
+    t = b.relu("b2.reduce.relu", t)
     b2 = b.conv("b2.3x3", t, br[2])
+    b2 = b.relu("b2.relu", b2)
     t = b.conv("b3.reduce", x, br[3])
+    t = b.relu("b3.reduce.relu", t)
     b3 = b.conv("b3.5x5", t, br[4])
+    b3 = b.relu("b3.relu", b3)
     t = b.pool("b4.pool", x, 3, 1)
     t = b.pad("b4.pool.pad", t, 28, 28)
     b4 = b.conv("b4.proj", t, br[5])
+    b4 = b.relu("b4.relu", b4)
     b.concat("concat", [b1, b2, b3, b4])
     return b
 
@@ -141,10 +165,13 @@ def mobilenet_v1_graph():
     b = Builder("mobilenet_v1")
     x = b.input("in", (3, 224, 224))
     x = b.conv("conv1", x, ops[0])
+    x = b.relu("conv1.relu", x)
     for i in range(1, len(ops), 2):
         blk = (i + 1) // 2
         x = b.conv(f"b{blk}.dw", x, ops[i])
+        x = b.relu(f"b{blk}.dw.relu", x)
         x = b.conv(f"b{blk}.pw", x, ops[i + 1])
+        x = b.relu(f"b{blk}.pw.relu", x)
     b.pool("avgpool", x, 7, 1)
     return b
 
@@ -160,14 +187,27 @@ def elems(shape):
     return shape[0] * shape[1] * shape[2]
 
 
+def consumers(g):
+    cons = [[] for _ in g.nodes]
+    for n in g.nodes:
+        for i in n.inputs:
+            cons[i].append(n.id)
+    return cons
+
+
 def glue_bytes(g, node):
     out = elems(node.shape) * BYTES_F32
     ins = sum(elems(g.nodes[i].shape) * BYTES_F32 for i in node.inputs)
     if node.kind in ("input", "conv"):
         return 0.0
     if node.kind == "pool":
-        k = node.pool[0]
-        return float(elems(node.shape) * k * k * BYTES_F32 + out)
+        k, stride = node.pool
+        # overlap-free windows (stride >= k) touch each input pixel once
+        reads = elems(g.nodes[node.inputs[0]].shape) if stride >= k \
+            else elems(node.shape) * k * k
+        return float(reads * BYTES_F32 + out)
+    if node.kind == "concat" and node.zero_copy:
+        return 0.0
     return float(ins + out)
 
 
@@ -178,35 +218,251 @@ def glue_cycles(spec, nbytes):
             + nbytes / (spec.bytes_per_cycle() * GLUE_BW_EFFICIENCY))
 
 
+def node_glue_bytes(g, nid):
+    return glue_bytes(g, g.nodes[nid])
+
+
+def node_glue_cycles(g, spec, nid):
+    return glue_cycles(spec, glue_bytes(g, g.nodes[nid]))
+
+
+def glue_stream_cycles(spec, nbytes):
+    return glue_cycles(spec, nbytes)
+
+
+# ---- epilogue fusion + zero-copy concat (mirror of graph/fuse.rs) ----
+
+def fuse(g, spec, planner):
+    """Returns (fused graph, report dict).  Every rewrite is gated
+    never-lose with the SAME planner + simulator the executor uses;
+    planner is a fn(op, spec, ep) -> KernelPlan."""
+    cons = consumers(g)
+
+    def sole(i, c):
+        return cons[i] == [c]
+
+    def conv_of(i):
+        n = g.nodes[i]
+        return n.conv if n.kind == "conv" and n.epilogue == EP_NONE else None
+
+    def conv_cycles(i, ep):
+        return simulate_cycles(spec, planner(g.nodes[i].conv, spec, ep))
+
+    claimed = [False] * len(g.nodes)
+    rewrites = []  # see _rebuild for the three shapes
+
+    # 1) residual adds first: the add pattern needs the conv's epilogue
+    #    slot and eliminates the largest glue stream
+    for n in g.nodes:
+        if n.kind != "add":
+            continue
+        u, v = n.inputs
+        pick = next((c for c in (u, v)
+                     if conv_of(c) is not None and sole(c, n.id) and not claimed[c]),
+                    None)
+        if pick is None:
+            continue
+        residual = v if pick == u else u
+        unfused = conv_cycles(pick, EP_NONE) + node_glue_cycles(g, spec, n.id)
+        if conv_cycles(pick, EP_ADD) <= unfused * (1 + 1e-9):
+            claimed[pick] = claimed[n.id] = True
+            rewrites.append(("residual", pick, n.id, residual))
+
+    # 2) pool tails: conv -> pool and conv -> relu -> pool
+    for n in g.nodes:
+        if n.kind != "pool":
+            continue
+        k, stride = n.pool
+        ep = ep_pool(k, stride)
+        r = n.inputs[0]
+        if conv_of(r) is not None:
+            if sole(r, n.id) and not claimed[r] and not claimed[n.id]:
+                unfused = conv_cycles(r, EP_NONE) + node_glue_cycles(g, spec, n.id)
+                if conv_cycles(r, ep) <= unfused * (1 + 1e-9):
+                    claimed[r] = claimed[n.id] = True
+                    rewrites.append(("tail", r, ep, n.id))
+        elif g.nodes[r].kind == "relu" and sole(r, n.id) and not claimed[r]:
+            cid = g.nodes[r].inputs[0]
+            if conv_of(cid) is not None and sole(cid, r) \
+                    and not claimed[cid] and not claimed[n.id]:
+                # relu survives, shrunk to the pooled tensor (exact:
+                # relu(maxpool(x)) == maxpool(relu(x)) elementwise)
+                pooled_bytes = 2.0 * elems(n.shape) * BYTES_F32
+                unfused = (conv_cycles(cid, EP_NONE)
+                           + node_glue_cycles(g, spec, r)
+                           + node_glue_cycles(g, spec, n.id))
+                fused_c = conv_cycles(cid, ep) + glue_stream_cycles(spec, pooled_bytes)
+                if fused_c <= unfused * (1 + 1e-9):
+                    claimed[cid] = claimed[n.id] = True
+                    rewrites.append(("through", cid, ep, r, n.id))
+
+    # 3) plain relu tails on whatever convs are left
+    for n in g.nodes:
+        if n.kind != "relu" or claimed[n.id]:
+            continue
+        cid = n.inputs[0]
+        if conv_of(cid) is None or not sole(cid, n.id) or claimed[cid]:
+            continue
+        unfused = conv_cycles(cid, EP_NONE) + node_glue_cycles(g, spec, n.id)
+        if conv_cycles(cid, EP_RELU) <= unfused * (1 + 1e-9):
+            claimed[cid] = claimed[n.id] = True
+            rewrites.append(("tail", cid, EP_RELU, n.id))
+
+    orig_bytes, orig_cycles = _total_glue(g, spec)
+    f = _rebuild(g, rewrites)
+    _zero_copy_concats(f)
+    fused_bytes, fused_cycles = _total_glue(f, spec)
+    nodes_fused = sum(1 for n in f.nodes
+                      if (n.kind == "conv" and n.epilogue != EP_NONE)
+                      or (n.kind == "concat" and n.zero_copy))
+    return f, {"nodes_fused": nodes_fused,
+               "glue_bytes_eliminated": orig_bytes - fused_bytes,
+               "glue_cycles_eliminated": orig_cycles - fused_cycles}
+
+
+def _rebuild(g, rewrites):
+    """Walk the original nodes in id order; deleted nodes map to their
+    stand-in's new id, deferred residual convs are emitted at their
+    add's position (keeping the conv's name)."""
+    epilogue, dead, deferred = {}, {}, {}
+    for rw in rewrites:
+        if rw[0] == "tail":
+            _, conv, ep, d = rw
+            epilogue[conv] = ep
+            dead[d] = conv
+        elif rw[0] == "through":
+            _, conv, ep, relu, pool = rw
+            epilogue[conv] = ep
+            dead[pool] = relu  # pool consumers read the retained relu
+        else:
+            _, conv, add, residual = rw
+            epilogue[conv] = EP_ADD
+            deferred[add] = (conv, residual)
+    deferred_convs = {conv for (conv, _) in deferred.values()}
+
+    b = Builder(g.name)
+    remap = {}
+
+    def resolve(i):
+        while i in dead:
+            i = dead[i]
+        return remap[i]
+
+    for n in g.nodes:
+        if n.id in dead or n.id in deferred_convs:
+            continue
+        if n.id in deferred:
+            conv, residual = deferred[n.id]
+            cn = g.nodes[conv]
+            ins = [resolve(cn.inputs[0]), resolve(residual)]
+            nid = _emit_conv(b, cn, ins, EP_ADD)
+            remap[conv] = nid
+        else:
+            nid = _emit(b, n, [resolve(i) for i in n.inputs],
+                        epilogue.get(n.id, n.epilogue))
+        remap[n.id] = nid
+    return b
+
+
+def _emit_conv(b, cn, ins, ep):
+    op = cn.conv
+    py, px = ep_pooled_hw(ep, op.oy(), op.ox())
+    return b._add(cn.name, "conv", (op.core.m, py, px), ins, conv=op, epilogue=ep)
+
+
+def _emit(b, n, ins, ep):
+    if n.kind == "conv":
+        return _emit_conv(b, n, ins, ep)
+    if n.kind == "input":
+        return b.input(n.name, n.shape)
+    if n.kind == "relu":
+        return b._add(n.name, "relu", b.nodes[ins[0]].shape, ins)
+    if n.kind == "pool":
+        return b.pool(n.name, ins[0], *n.pool)
+    if n.kind == "pad":
+        return b.pad(n.name, ins[0], n.shape[1], n.shape[2])
+    if n.kind == "add":
+        return b.add_skip(n.name, ins[0], ins[1])
+    if n.kind == "concat":
+        return b.concat(n.name, ins, zero_copy=n.zero_copy)
+    raise AssertionError(n.kind)
+
+
+def _zero_copy_concats(g):
+    """Flip every eligible concat in place: all inputs convs solely
+    consumed by the concat, every channel-prefix offset ARENA_ALIGN."""
+    cons = consumers(g)
+    for n in g.nodes:
+        if n.kind != "concat" or n.zero_copy:
+            continue
+        prefix, ok = 0, True
+        for i in n.inputs:
+            if g.nodes[i].kind != "conv" or cons[i] != [n.id] \
+                    or prefix % ARENA_ALIGN != 0:
+                ok = False
+                break
+            prefix += elems(g.nodes[i].shape) * BYTES_F32
+        if ok:
+            n.zero_copy = True
+
+
+def _total_glue(g, spec):
+    bytes_ = cycles = 0.0
+    for n in g.nodes:
+        bytes_ += node_glue_bytes(g, n.id)
+        cycles += node_glue_cycles(g, spec, n.id)
+    return bytes_, cycles
+
+
 # ---- arena planner (mirror of graph/memory.rs) ----
 
 def _align(b):
     return (b + ARENA_ALIGN - 1) // ARENA_ALIGN * ARENA_ALIGN
 
 
+def zero_copy_aliases(g):
+    """producer id -> (concat id, byte prefix) for every zero-copy
+    concat input solely consumed by the concat."""
+    cons = consumers(g)
+    out = {}
+    for n in g.nodes:
+        if n.kind != "concat" or not n.zero_copy:
+            continue
+        prefix = 0
+        for i in n.inputs:
+            if cons[i] == [n.id]:
+                out[i] = (n.id, prefix)
+            prefix += elems(g.nodes[i].shape) * BYTES_F32
+    return out
+
+
 def liveness(g):
     """Mirror of graph/memory.rs::liveness under the insertion-order
-    schedule: [(node id, aligned bytes, def step, last use step)]."""
+    schedule: [(node id, aligned bytes, def step, last use step)].  A
+    zero-copy concat's tensor is live from its earliest aliased
+    producer's step."""
     order = list(range(len(g.nodes)))  # insertion order is topological
-    consumers = [[] for _ in g.nodes]
-    for n in g.nodes:
-        for i in n.inputs:
-            consumers[i].append(n.id)
+    cons = consumers(g)
+    aliases = zero_copy_aliases(g)
     lives = []
     for nid in order:
-        last = max((c for c in consumers[nid]), default=len(order) - 1)
-        lives.append((nid, _align(elems(g.nodes[nid].shape) * BYTES_F32), nid, last))
+        d = nid
+        if g.nodes[nid].kind == "concat" and g.nodes[nid].zero_copy:
+            d = min([d] + [p for p, (cid, _) in aliases.items() if cid == nid])
+        last = max((c for c in cons[nid]), default=len(order) - 1)
+        lives.append((nid, _align(elems(g.nodes[nid].shape) * BYTES_F32), d, last))
     return lives
 
 
 def plan_arena(g):
-    order = list(range(len(g.nodes)))
     lives = liveness(g)
-    naive = sum(l[1] for l in lives)
-    by_size = sorted(range(len(lives)), key=lambda i: (-lives[i][1], lives[i][0]))
+    aliases = zero_copy_aliases(g)
+    owned = [l for l in lives if l[0] not in aliases]
+    naive = sum(l[1] for l in owned)
+    by_size = sorted(range(len(owned)), key=lambda i: (-owned[i][1], owned[i][0]))
     placements = []  # (id, bytes, def, last, offset)
     for i in by_size:
-        (nid, nbytes, d, last) = lives[i]
+        (nid, nbytes, d, last) = owned[i]
         busy = sorted((p[4], p[4] + p[1]) for p in placements
                       if p[2] <= last and d <= p[3])
         offset = 0
@@ -217,7 +473,7 @@ def plan_arena(g):
         placements.append((nid, nbytes, d, last, offset))
     peak = max((p[4] + p[1] for p in placements), default=0)
     live_floor = 0
-    for step in range(len(order)):
+    for step in range(len(g.nodes)):
         live = sum(p[1] for p in placements if p[2] <= step <= p[3])
         live_floor = max(live_floor, live)
     return peak, naive, live_floor
@@ -226,36 +482,44 @@ def plan_arena(g):
 # ---- pooled execution schedule (mirror of graph/memory.rs::plan_pooled) ----
 
 def plan_pooled(g, pool, batch=1):
-    """Walk the schedule allocating each tensor (scaled by batch) from a
-    shared DevicePool at its definition step and freeing it right after
-    its last use.  Returns {peak, naive, allocs, reuse, evictions}; on
-    exhaustion every allocation this call made is released and the
-    PoolExhausted propagates (parked-slab evictions persist)."""
+    """Walk the schedule allocating each owned tensor (scaled by batch)
+    from a shared DevicePool at its definition step and freeing it right
+    after its last use.  A zero-copy concat materializes at its first
+    producer's step; aliased producers allocate nothing.  Returns {peak,
+    naive, allocs, reuse, evictions}; on exhaustion every allocation
+    this call made is released and the PoolExhausted propagates
+    (parked-slab evictions persist)."""
     import pool as poolmod
     lives = liveness(g)
-    naive = sum(l[1] * batch for l in lives)
+    aliases = zero_copy_aliases(g)
+    owned = [l for l in lives if l[0] not in aliases]
+    naive = sum(l[1] * batch for l in owned)
     reuse0, evict0 = pool.reuse_hits, pool.evictions
-    ids = [None] * len(lives)
+    alloc_at = {}
+    for j, l in enumerate(owned):
+        alloc_at.setdefault(l[2], []).append(j)
+    ids = [None] * len(owned)
     live_now = peak = 0
     for step in range(len(lives)):
-        nbytes = lives[step][1] * batch
-        try:
-            ids[step] = pool.alloc(nbytes)
-        except poolmod.PoolExhausted:
-            for j, aid in enumerate(ids):
-                if aid is not None:
-                    pool.free(aid)
-                    ids[j] = None
-            raise
-        live_now += nbytes
-        peak = max(peak, live_now)
-        for j in range(step + 1):
-            if lives[j][3] == step and ids[j] is not None:
+        for j in alloc_at.get(step, []):
+            nbytes = owned[j][1] * batch
+            try:
+                ids[j] = pool.alloc(nbytes)
+            except poolmod.PoolExhausted:
+                for jj, aid in enumerate(ids):
+                    if aid is not None:
+                        pool.free(aid)
+                        ids[jj] = None
+                raise
+            live_now += nbytes
+            peak = max(peak, live_now)
+        for j, l in enumerate(owned):
+            if l[3] == step and ids[j] is not None:
                 pool.free(ids[j])
                 ids[j] = None
-                live_now -= lives[j][1] * batch
+                live_now -= l[1] * batch
     assert all(aid is None for aid in ids), "every tensor freed"
-    return {"peak": peak, "naive": naive, "allocs": len(lives),
+    return {"peak": peak, "naive": naive, "allocs": len(owned),
             "reuse": pool.reuse_hits - reuse0,
             "evictions": pool.evictions - evict0}
 
@@ -264,13 +528,13 @@ def plan_pooled(g, pool, batch=1):
 
 def execute(g, spec, planner, batch=1):
     """Returns (total_s, conv_s, glue_s, per_conv_details) — planner is
-    a fn(op, spec) -> KernelPlan."""
+    a fn(op, spec, ep) -> KernelPlan."""
     conv_s = 0.0
     glue_s = 0.0
     details = []
     for n in g.nodes:
         if n.kind == "conv":
-            plan = planner(n.conv, spec).batched(batch)
+            plan = planner(n.conv, spec, n.epilogue).batched(batch)
             s = spec.cycles_to_secs(simulate_cycles(spec, plan))
             conv_s += s
             details.append((n.name, n.conv, plan.name, s))
@@ -280,18 +544,24 @@ def execute(g, spec, planner, batch=1):
     return conv_s + glue_s, conv_s, glue_s, details
 
 
-def model_report(name, spec, planner, batch=1):
+def model_report(name, spec, planner, batch=1, fused=False):
     g = dict(MODEL_GRAPHS)[name]()
+    fusion = None
+    if fused:
+        g, fusion = fuse(g, spec, planner)
     total, conv_s, glue_s, details = execute(g, spec, planner, batch)
     peak, naive, floor = plan_arena(g)
-    return {
+    rep = {
         "name": name, "nodes": len(g.nodes),
         "convs": sum(1 for n in g.nodes if n.kind == "conv"),
         "total": total, "conv": conv_s, "glue": glue_s,
         "peak": peak, "naive": naive, "floor": floor,
         "details": details,
     }
+    if fusion is not None:
+        rep["fusion"] = fusion
+    return rep
 
 
-def dispatch_planner(op, spec):
-    return opsmod.dispatch_op_plan(op, spec)
+def dispatch_planner(op, spec, ep=EP_NONE):
+    return opsmod.dispatch_fused_op_plan(op, ep, spec)

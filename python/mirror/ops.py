@@ -9,7 +9,7 @@ from dataclasses import dataclass
 
 import backends
 import tuner
-from gpusim import simulate_cycles
+from gpusim import EP_NONE, simulate_cycles
 from plans import ConvProblem
 
 
@@ -233,11 +233,68 @@ def dispatch_op_plan(op, spec):
     return backend_op_plan(name, op, spec)
 
 
-def op_plan_for(op, spec):
-    """Mirror of plans::op_plan_for (the tuned paper op path)."""
-    return backend_op_plan("paper-tuned", op, spec)
+# ---- fused dispatch (mirror of Dispatcher::decide_fused_op) ----
+
+def fused_backend_op_plan(name, op, ep, spec):
+    """Mirror of ConvBackend::fused_op_plan's default: the backend's op
+    plan with the epilogue folded into its writeback tail."""
+    return backend_op_plan(name, op, spec).fused(ep, (op.oy(), op.ox()))
 
 
-def paper_op_plan_for(op, spec):
+def _decide_fused_op(op, ep, spec):
+    """Mirror of Dispatcher::decide_fused_op: same ranking as decide_op
+    with every candidate's plan carrying ep, floored by the paper-tuned
+    naive lowered schedule fused the same way."""
+    assert op.valid()
+    out_hw = (op.oy(), op.ox())
+    tuned_cycles = simulate_cycles(
+        spec, lowered_plan(tuner.tuned_plan, op, spec).fused(ep, out_hw))
+    # paper-tuned's native-vs-lowered memo was decided on UNFUSED
+    # cycles; min against the fused floor keeps cycles <= tuned_cycles
+    seed = min(simulate_cycles(spec, fused_backend_op_plan("paper-tuned", op, ep, spec)),
+               tuned_cycles)
+    best = (backends.PAPER_TUNED, seed)
+    for (name, supports, _planfn) in backends.NON_TUNED_BACKENDS:
+        if op_coverage(name, supports, op) is None:
+            continue
+        plan = fused_backend_op_plan(name, op, ep, spec)
+        if not tuner.is_legal(spec, plan):
+            continue
+        cycles = simulate_cycles(spec, plan)
+        if cycles < best[1]:
+            best = (name, cycles)
+    return (best[0], best[1], tuned_cycles)
+
+
+_FUSED_OP_CACHE = {}
+
+
+def decide_fused_op(op, ep, spec):
+    if ep == EP_NONE:
+        return decide_op(op, spec)
+    key = (op, ep, spec.name)
+    if key not in _FUSED_OP_CACHE:
+        _FUSED_OP_CACHE[key] = _decide_fused_op(op, ep, spec)
+    return _FUSED_OP_CACHE[key]
+
+
+def dispatch_fused_op_plan(op, ep, spec):
+    """Mirror of backend::dispatch_fused_op_plan — what the graph
+    fusion pass serves for a conv node that absorbed its consumer."""
+    if ep == EP_NONE:
+        return dispatch_op_plan(op, spec)
+    name, _, _ = decide_fused_op(op, ep, spec)
+    return fused_backend_op_plan(name, op, ep, spec)
+
+
+def op_plan_for(op, spec, ep=EP_NONE):
+    """Mirror of plans::op_plan_for (the tuned paper op path, with the
+    epilogue folded into the writeback tail)."""
+    plan = backend_op_plan("paper-tuned", op, spec)
+    return plan if ep == EP_NONE else plan.fused(ep, (op.oy(), op.ox()))
+
+
+def paper_op_plan_for(op, spec, ep=EP_NONE):
     """Mirror of plans::paper_op_plan_for (§3 closed forms)."""
-    return backend_op_plan("paper", op, spec)
+    plan = backend_op_plan("paper", op, spec)
+    return plan if ep == EP_NONE else plan.fused(ep, (op.oy(), op.ox()))

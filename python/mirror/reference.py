@@ -1,0 +1,128 @@
+"""Mirror of rust/src/graph/reference.rs: the CPU numeric reference
+executor.  Runs a graph's actual arithmetic (CHW, f32) on deterministic
+pseudo-random tensors so validate_fusion.py can prove the mirror's
+fusion rewrite preserves the numerics, not just the cost model.
+
+Everything is keyed on node *names* (stable across the rewrite), and
+the same relu / max-pool folds serve standalone glue nodes and fused
+epilogues, so fused == unfused holds by construction wherever the
+rewrite is mathematically exact.  Accumulation order inside a conv need
+not match the rust executor bit-for-bit (numpy reduces pairwise); what
+matters is that BOTH graphs run through these same functions."""
+
+import numpy as np
+
+from gpusim import EP_ADD, EP_NONE, EP_RELU, ep_pool_dims
+
+F32 = np.float32
+
+
+def relu(x):
+    """Strict compare, canonical +0.0 for everything non-positive."""
+    return np.where(x > 0, x, F32(0.0)).astype(F32)
+
+
+def maxpool(data, shape, k, stride):
+    """k x k / stride max-pool of one flattened CHW tensor."""
+    c, h, w = shape
+    x = np.asarray(data, dtype=F32).reshape(c, h, w)
+    py, px = (h - k) // stride + 1, (w - k) // stride + 1
+    out = x[:, 0:stride * py:stride, 0:stride * px:stride].copy()
+    for ky in range(k):
+        for kx in range(k):
+            np.maximum(out, x[:, ky:ky + stride * py:stride,
+                              kx:kx + stride * px:stride], out)
+    return out.reshape(-1)
+
+
+def seeded(name, salt, length):
+    """Deterministic values in [-1, 1) from a name + salt (FNV-1a seed,
+    xorshift64* stream) — same bits as reference.rs::seeded."""
+    mask = (1 << 64) - 1
+    h = 0xcbf29ce484222325
+    for b in list(name.encode()) + [0x1F] + list(salt.encode()):
+        h = ((h ^ b) * 0x00000100000001B3) & mask
+    x = h | 1
+    out = np.empty(length, dtype=F32)
+    for i in range(length):
+        x = (x ^ (x << 13)) & mask
+        x ^= x >> 7
+        x = (x ^ (x << 17)) & mask
+        bits = ((x * 0x2545F4914F6CDD1D) & mask) >> 40
+        out[i] = F32(bits / (1 << 24) * 2.0 - 1.0)
+    return out
+
+
+def conv(input_, in_shape, op, name):
+    """Direct convolution (stride, symmetric zero padding, groups) with
+    weights drawn from `name` — f32 throughout (im2col + f32 matmul)."""
+    c, h, w = in_shape
+    m, k = op.core.m, op.core.k
+    cg = c // op.groups
+    mg = m // op.groups
+    oy, ox = op.oy(), op.ox()
+    wts = seeded(name, "w", m * cg * k * k).reshape(m, cg * k * k)
+    x = np.asarray(input_, dtype=F32).reshape(c, h, w)
+    if op.pad:
+        xp = np.zeros((c, h + 2 * op.pad, w + 2 * op.pad), dtype=F32)
+        xp[:, op.pad:op.pad + h, op.pad:op.pad + w] = x
+        x = xp
+    s = op.stride
+    out = np.empty((m, oy, ox), dtype=F32)
+    for g in range(op.groups):
+        planes = x[g * cg:(g + 1) * cg]
+        cols = np.empty((cg, k, k, oy, ox), dtype=F32)
+        for ky in range(k):
+            for kx in range(k):
+                cols[:, ky, kx] = planes[:, ky:ky + s * oy:s, kx:kx + s * ox:s]
+        out[g * mg:(g + 1) * mg] = (
+            wts[g * mg:(g + 1) * mg] @ cols.reshape(cg * k * k, oy * ox)
+        ).reshape(mg, oy, ox)
+    return out.reshape(-1)
+
+
+def _eval(g, n, vals):
+    ins = [(vals[i], g.nodes[i].shape) for i in n.inputs]
+    if n.kind == "input":
+        c, h, w = n.shape
+        return seeded(n.name, "data", c * h * w)
+    if n.kind == "conv":
+        raw = conv(ins[0][0], ins[0][1], n.conv, n.name)
+        ep = n.epilogue
+        if ep == EP_NONE:
+            return raw
+        if ep == EP_RELU:
+            return relu(raw)
+        if ep == EP_ADD:
+            return (raw + ins[1][0]).astype(F32)
+        k, stride = ep_pool_dims(ep)
+        return maxpool(raw, (n.conv.core.m, n.conv.oy(), n.conv.ox()), k, stride)
+    if n.kind == "pad":
+        (src, (c, sh, sw)) = ins[0]
+        h, w = n.shape[1], n.shape[2]
+        top, left = (h - sh) // 2, (w - sw) // 2
+        out = np.zeros((c, h, w), dtype=F32)
+        out[:, top:top + sh, left:left + sw] = \
+            np.asarray(src, dtype=F32).reshape(c, sh, sw)
+        return out.reshape(-1)
+    if n.kind == "pool":
+        return maxpool(ins[0][0], ins[0][1], *n.pool)
+    if n.kind == "relu":
+        return relu(ins[0][0])
+    if n.kind == "add":
+        return (ins[0][0] + ins[1][0]).astype(F32)
+    if n.kind == "concat":
+        return np.concatenate([np.asarray(d, dtype=F32) for (d, _) in ins])
+    raise AssertionError(n.kind)
+
+
+def reference_output(g):
+    """Execute `g` numerically; returns the last node's flattened CHW
+    tensor (np.float32)."""
+    vals = []
+    for n in g.nodes:
+        v = _eval(g, n, vals)
+        c, h, w = n.shape
+        assert v.size == c * h * w, f"{n.name}: shape mismatch"
+        vals.append(v)
+    return vals[-1]

@@ -95,7 +95,7 @@ def model_rows(spec):
                 conv_charged += dram_load_bytes(plan) + wb * spec.bytes_per_cycle()
             else:
                 glue += graphmod.glue_bytes(g, n)
-        secs = graphmod.execute(g, spec, opsmod.dispatch_op_plan)[0]
+        secs = graphmod.execute(g, spec, graphmod.dispatch_planner)[0]
         flops_frac = 2.0 * fma / secs / spec.peak_flops()
         bw_charged = (conv_charged + glue) / secs / 1e9 / spec.bandwidth_gb_s
         bw_total = (conv_loads + conv_stores + glue) / secs / 1e9 / spec.bandwidth_gb_s

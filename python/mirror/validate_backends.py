@@ -92,12 +92,17 @@ PINNED = {
     "op_all_models": 1.300,
     "op_mobilenet": 1.738,
     "op_mobilenet_titanx": 1.891,
-    # §7 / §10 model graphs (tuned op plans, 1080Ti, milliseconds)
-    "graph_vgg16_tuned_ms": 1.793,
-    "graph_vgg16_dispatched_ms": 1.356,
-    "graph_resnet18_tuned_ms": 0.378,
-    "graph_mobilenet_tuned_ms": 0.222,
+    # §7 / §10 model graphs (tuned op plans, 1080Ti, milliseconds).
+    # Re-pinned when the graphs gained their per-conv ReLU nodes
+    # (ISSUE-9): the unfused totals now charge the relu glue streams
+    # the fusion pass exists to eliminate — see §14 for the fused side.
+    "graph_vgg16_tuned_ms": 2.110,
+    "graph_vgg16_dispatched_ms": 1.673,
+    "graph_resnet18_tuned_ms": 0.455,
+    "graph_mobilenet_tuned_ms": 0.404,
 }
+# §14 (epilogue fusion + zero-copy concat) is replayed by its own
+# validator: python/mirror/validate_fusion.py
 
 
 def suite_speedups_tuned_vs_paper(suite, spec):

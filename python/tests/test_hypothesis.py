@@ -10,6 +10,8 @@ import numpy as np
 import pytest
 
 import jax.numpy as jnp
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -8,7 +8,7 @@
 //! Run: `cargo bench --bench e2e_models`
 //! CI check mode (asserts only, summary table): append `-- --check`.
 
-use pasconv::graph::{execute, model_graph, ModelReport, MODEL_NAMES};
+use pasconv::graph::{execute, fuse, model_graph, ModelReport, MODEL_NAMES};
 use pasconv::gpusim::gtx_1080ti;
 use pasconv::plans::{op_plan_for, paper_op_plan_for};
 use pasconv::util::bench::{fmt_mib, Table};
@@ -89,6 +89,31 @@ fn main() {
             tuned.arena.peak_bytes < tuned.arena.naive_bytes,
             "{name}: no arena savings"
         );
+    }
+    // epilogue fusion + zero-copy concat: never loses end to end, and
+    // the inception cell — the glue-dominated outlier above — sheds at
+    // least 2x of its glue seconds (EXPERIMENTS §14)
+    for (name, _, tuned) in &reports {
+        let graph = model_graph(name).expect("model builds");
+        let (fgraph, rep) = fuse(&graph, &g, op_plan_for);
+        let fused = execute(&fgraph, &g, op_plan_for);
+        assert!(rep.nodes_fused > 0, "{name}: nothing fused");
+        assert!(
+            fused.total_seconds <= tuned.total_seconds * (1.0 + 1e-9),
+            "{name}: fused graph slower than unfused"
+        );
+        assert!(
+            fused.glue_seconds <= tuned.glue_seconds,
+            "{name}: fusion grew the glue"
+        );
+        if *name == "inception3a" {
+            assert!(
+                tuned.glue_seconds >= 2.0 * fused.glue_seconds,
+                "{name}: glue {:.1}µs -> {:.1}µs is under the 2x §14 gate",
+                tuned.glue_seconds * 1e6,
+                fused.glue_seconds * 1e6
+            );
+        }
     }
 
     if !check_only {

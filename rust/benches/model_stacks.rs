@@ -13,7 +13,7 @@
 use pasconv::backend::{ConvBackend, CudnnProxy};
 use pasconv::conv::suites::{model_ops, small_map_fraction};
 use pasconv::conv::ConvOp;
-use pasconv::gpusim::{gtx_1080ti, simulate, GpuSpec, KernelPlan};
+use pasconv::gpusim::{gtx_1080ti, simulate, Epilogue, GpuSpec, KernelPlan};
 use pasconv::plans::{op_plan_for, paper_op_plan_for};
 use pasconv::util::bench::Table;
 
@@ -40,8 +40,8 @@ fn main() {
     ]);
     let mut speedups = vec![];
     for (name, ops) in model_ops() {
-        let paper = stack_time(&g, &ops, &|op, g| paper_op_plan_for(op, g));
-        let tuned = stack_time(&g, &ops, &|op, g| op_plan_for(op, g));
+        let paper = stack_time(&g, &ops, &|op, g| paper_op_plan_for(op, Epilogue::None, g));
+        let tuned = stack_time(&g, &ops, &|op, g| op_plan_for(op, Epilogue::None, g));
         let base = stack_time(&g, &ops, &|op, g| CudnnProxy.op_plan(op, g));
         assert!(
             tuned <= paper * (1.0 + 1e-9),

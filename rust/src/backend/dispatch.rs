@@ -19,7 +19,7 @@
 //! pays one hash lookup per op.
 //!
 //! Consumers: `graph::execute` (per-layer algorithm choice inside one
-//! model — `dispatch_op_plan` is a `graph::Planner`), the
+//! model — `dispatch_fused_op_plan` is a `graph::Planner`), the
 //! coordinator's `Router::warm_plans` (pre-dispatches every routed op;
 //! the pick returns on the wire in `Response.plan`), and the fleet's
 //! per-shard job pricing (`batched_op_dispatch_seconds` —
@@ -30,7 +30,7 @@ use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
 
 use crate::conv::{BatchedConv, BatchedConvOp, ConvOp, ConvProblem};
-use crate::gpusim::{simulate, GpuSpec, KernelPlan};
+use crate::gpusim::{simulate, Epilogue, GpuSpec, KernelPlan};
 use crate::tuner;
 
 use super::impls::{
@@ -178,6 +178,44 @@ impl Dispatcher {
         }
         Decision { backend: best.0.to_string(), cycles: best.1, tuned_cycles }
     }
+
+    /// Full ranking for one fused op: the same routine as `decide_op`,
+    /// with every candidate's plan carrying `ep` in its writeback tail
+    /// and the floor being the paper-tuned naive lowered schedule fused
+    /// the same way.  `Epilogue::None` reduces EXACTLY to `decide_op` —
+    /// the unfused path stays the structural never-lose floor of the
+    /// fused axis (the graph fusion pass separately refuses any rewrite
+    /// whose fused plan prices above unfused-conv + glue).
+    pub fn decide_fused_op(&self, op: &ConvOp, ep: Epilogue, spec: &GpuSpec) -> Decision {
+        if ep.is_none() {
+            return self.decide_op_n(op, 1, spec);
+        }
+        assert!(op.valid(), "invalid op {op:?}");
+        let out_hw = (op.oy(), op.ox());
+        let tuned = self.backend(PAPER_TUNED).expect("paper-tuned backend in every registry");
+        let tuned_cycles =
+            simulate(spec, &lowered_plan(tuned, op, spec).fused(ep, out_hw)).cycles;
+        // paper-tuned's native-vs-lowered memo was decided on UNFUSED
+        // cycles; take the explicit min against the fused floor so
+        // `cycles <= tuned_cycles` stays structural under any epilogue
+        let seed =
+            simulate(spec, &tuned.fused_op_plan(op, ep, spec)).cycles.min(tuned_cycles);
+        let mut best = (PAPER_TUNED, seed);
+        for b in &self.backends {
+            if b.name() == PAPER_TUNED || !b.op_coverage(op).supported() {
+                continue;
+            }
+            let plan = b.fused_op_plan(op, ep, spec);
+            if !tuner::is_legal(spec, &plan) {
+                continue;
+            }
+            let cycles = simulate(spec, &plan).cycles;
+            if cycles < best.1 {
+                best = (b.name(), cycles);
+            }
+        }
+        Decision { backend: best.0.to_string(), cycles: best.1, tuned_cycles }
+    }
 }
 
 /// The process-wide registry every memoized entry point shares.
@@ -204,9 +242,9 @@ pub fn dispatched(p: &ConvProblem, spec: &GpuSpec) -> Decision {
     op_dispatched(&ConvOp::dense(*p), spec)
 }
 
-/// The dispatched `KernelPlan` for an op — a `graph::Planner`, so
-/// `graph::execute(&g, &spec, backend::dispatch_op_plan)` gives every
-/// layer of a model its own algorithm.
+/// The dispatched `KernelPlan` for an unfused op — the `Epilogue::None`
+/// slice of `dispatch_fused_op_plan` (which is the `graph::Planner`
+/// that gives every layer of a model its own algorithm).
 pub fn dispatch_op_plan(op: &ConvOp, spec: &GpuSpec) -> KernelPlan {
     let d = op_dispatched(op, spec);
     registry()
@@ -218,6 +256,34 @@ pub fn dispatch_op_plan(op: &ConvOp, spec: &GpuSpec) -> KernelPlan {
 /// The dispatched plan for a dense problem.
 pub fn dispatch_plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
     dispatch_op_plan(&ConvOp::dense(*p), spec)
+}
+
+/// Memoized dispatch decision for `(op, epilogue, spec)` — persisted as
+/// PlanCache v5 `kind=dispatch epilogue=...` entries.  `Epilogue::None`
+/// IS `op_dispatched` (same cache key, same ranking).
+pub fn fused_op_dispatched(op: &ConvOp, ep: Epilogue, spec: &GpuSpec) -> Decision {
+    if ep.is_none() {
+        return op_dispatched(op, spec);
+    }
+    if let Some(d) = tuner::cached_dispatch_fused(op, ep, spec) {
+        return d;
+    }
+    let d = registry().decide_fused_op(op, ep, spec);
+    tuner::store_dispatch_fused(op, ep, spec, d.clone());
+    d
+}
+
+/// The dispatched fused `KernelPlan` for an op — what the graph fusion
+/// pass serves for a conv node that absorbed its consumer.
+pub fn dispatch_fused_op_plan(op: &ConvOp, ep: Epilogue, spec: &GpuSpec) -> KernelPlan {
+    if ep.is_none() {
+        return dispatch_op_plan(op, spec);
+    }
+    let d = fused_op_dispatched(op, ep, spec);
+    registry()
+        .backend(&d.backend)
+        .expect("cached decision names a registered backend")
+        .fused_op_plan(op, ep, spec)
 }
 
 /// Memo key for batched decisions: (op, batch n, spec name).
@@ -457,6 +523,66 @@ mod tests {
                 assert!(d.cycles <= d.tuned_cycles * (1.0 + 1e-9), "{}", spec.name);
             }
         }
+    }
+
+    #[test]
+    fn fused_none_decision_is_exactly_the_unfused_decision() {
+        let g = gtx_1080ti();
+        for op in all_cnn_ops().into_iter().step_by(6) {
+            let unfused = registry().decide_op(&op, &g);
+            let fused = registry().decide_fused_op(&op, Epilogue::None, &g);
+            assert_eq!(unfused, fused, "{}", op.label());
+        }
+    }
+
+    #[test]
+    fn fused_dispatch_never_loses_to_its_fused_lowered_floor() {
+        let g = gtx_1080ti();
+        let op = ConvOp::same(ConvProblem::multi(64, 28, 64, 3));
+        for ep in [
+            Epilogue::Relu,
+            Epilogue::AddResidual,
+            Epilogue::MaxPoolWriteback { k: 2, stride: 2 },
+        ] {
+            let d = registry().decide_fused_op(&op, ep, &g);
+            assert!(
+                d.cycles <= d.tuned_cycles * (1.0 + 1e-9),
+                "{}: fused dispatch lost ({} > {})",
+                ep.tag(),
+                d.cycles,
+                d.tuned_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn fused_pool_decision_prices_below_the_unfused_conv() {
+        // the tentpole's win in one line: a pooled writeback shrinks
+        // stores 4x, so the fused conv is never slower than unfused
+        let g = gtx_1080ti();
+        let op = ConvOp::same(ConvProblem::multi(64, 56, 64, 3));
+        let unfused = registry().decide_op(&op, &g);
+        let pooled =
+            registry().decide_fused_op(&op, Epilogue::MaxPoolWriteback { k: 2, stride: 2 }, &g);
+        assert!(pooled.cycles <= unfused.cycles * (1.0 + 1e-9));
+        // relu is free in the tail: identical cost, identical winner
+        let relu = registry().decide_fused_op(&op, Epilogue::Relu, &g);
+        assert!((relu.cycles - unfused.cycles).abs() <= 1e-9 * unfused.cycles);
+        assert_eq!(relu.backend, unfused.backend);
+    }
+
+    #[test]
+    fn memoized_fused_decision_matches_fresh_ranking() {
+        let g = gtx_1080ti();
+        let op = ConvOp::same(ConvProblem::multi(32, 28, 32, 3));
+        let ep = Epilogue::MaxPoolWriteback { k: 2, stride: 2 };
+        let fresh = registry().decide_fused_op(&op, ep, &g);
+        let a = fused_op_dispatched(&op, ep, &g);
+        assert_eq!(a, fused_op_dispatched(&op, ep, &g));
+        assert_eq!(a, fresh);
+        let plan = dispatch_fused_op_plan(&op, ep, &g);
+        assert!(plan.name.contains("+pool2s2"), "{}", plan.name);
+        assert_eq!(plan.epilogue, ep);
     }
 
     #[test]

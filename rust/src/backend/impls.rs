@@ -13,7 +13,7 @@ use std::sync::{Mutex, OnceLock};
 
 use crate::baselines::{cudnn_proxy, dac17, fft_conv, tan128, winograd};
 use crate::conv::{conv2d_multi_cpu, ConvOp, ConvProblem, BYTES_F32};
-use crate::gpusim::{simulate, GpuSpec, KernelPlan, Loading, Round};
+use crate::gpusim::{simulate, Epilogue, GpuSpec, KernelPlan, Loading, Round};
 use crate::plans::{single_channel, stride_fixed};
 use crate::tuner;
 
@@ -211,6 +211,8 @@ impl ConvBackend for CpuReference {
             stages: 2,
             loading: Loading::Cyclic,
             stage_bytes: 0,
+            epilogue: Epilogue::None,
+            epilogue_read_bytes: 0.0,
         }
     }
 

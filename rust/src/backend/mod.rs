@@ -43,8 +43,9 @@ pub mod reference;
 
 pub use dispatch::{
     batched_dispatch_seconds, batched_op_dispatch_seconds, batched_op_dispatched,
-    dispatch_advice, dispatch_batched_plan, dispatch_op_plan, dispatch_plan, dispatched,
-    op_dispatch_advice, op_dispatched, Decision, Dispatcher,
+    dispatch_advice, dispatch_batched_plan, dispatch_fused_op_plan, dispatch_op_plan,
+    dispatch_plan, dispatched, fused_op_dispatched, op_dispatch_advice, op_dispatched, Decision,
+    Dispatcher,
 };
 pub use impls::{
     CpuReference, CudnnProxy, Dac17, FftConv, PaperClosedForm, PaperTuned, Tan128, Winograd,
@@ -52,7 +53,7 @@ pub use impls::{
 };
 
 use crate::conv::{op as convop, BatchedConv, BatchedConvOp, ConvOp, ConvProblem};
-use crate::gpusim::{simulate, GpuSpec, KernelPlan};
+use crate::gpusim::{simulate, Epilogue, GpuSpec, KernelPlan};
 
 /// How a backend covers a `ConvOp` (the op layer's honest analogue of
 /// `supports()`): natively — its own schedule handles the op's
@@ -171,6 +172,19 @@ pub trait ConvBackend: Send + Sync {
         let mut plan = unit.batched(l.groups);
         plan.name = op_plan_name(&unit.name, op, false);
         plan
+    }
+
+    /// The fused-epilogue op schedule: this backend's op plan with `ep`
+    /// absorbed into the writeback tail (`KernelPlan::fused` on the
+    /// op's true output map).  `Epilogue::None` IS `op_plan` — the
+    /// unfused path stays the structural floor of the fused axis.
+    fn fused_op_plan(&self, op: &ConvOp, ep: Epilogue, spec: &GpuSpec) -> KernelPlan {
+        self.op_plan(op, spec).fused(ep, (op.oy(), op.ox()))
+    }
+
+    /// Simulated cycles of the fused op schedule on `spec`.
+    fn fused_op_cycles(&self, op: &ConvOp, ep: Epilogue, spec: &GpuSpec) -> f64 {
+        simulate(spec, &self.fused_op_plan(op, ep, spec)).cycles
     }
 
     /// The batch-`n` op schedule (one launch, warm pipeline).

@@ -26,7 +26,7 @@
 use crate::conv::{ConvProblem, BYTES_F32};
 use crate::gpusim::memory::segment_efficiency;
 use crate::gpusim::pipeline::combined_efficiency;
-use crate::gpusim::{simulate, GpuSpec, KernelPlan, Loading, Round};
+use crate::gpusim::{simulate, Epilogue, GpuSpec, KernelPlan, Loading, Round};
 
 fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
@@ -103,6 +103,8 @@ pub fn plan_with_tiles(
         stages: 2,
         loading: Loading::Cyclic,
         stage_bytes: 0,
+        epilogue: Epilogue::None,
+        epilogue_read_bytes: 0.0,
     }
 }
 

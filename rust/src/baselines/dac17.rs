@@ -17,7 +17,7 @@
 use crate::conv::{ConvProblem, BYTES_F32};
 use crate::gpusim::memory::segment_efficiency;
 use crate::gpusim::pipeline::combined_efficiency;
-use crate::gpusim::{GpuSpec, KernelPlan, Loading, Round};
+use crate::gpusim::{Epilogue, GpuSpec, KernelPlan, Loading, Round};
 
 /// The fixed feature-map strip height [1] assigns per block regardless of
 /// the input size (their tuning for >= 32-px maps).
@@ -80,6 +80,8 @@ pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
         stages: 2,
         loading: Loading::Cyclic,
         stage_bytes: 0,
+        epilogue: Epilogue::None,
+        epilogue_read_bytes: 0.0,
     }
 }
 

@@ -12,7 +12,7 @@
 //! regime; the taxonomy bench makes that visible.
 
 use crate::conv::{ConvProblem, BYTES_F32};
-use crate::gpusim::{GpuSpec, KernelPlan, Loading, Round};
+use crate::gpusim::{Epilogue, GpuSpec, KernelPlan, Loading, Round};
 
 /// FLOPs of a 2-D real FFT over an H x W grid (row+column passes).
 fn fft2_flops(h: usize, w: usize) -> f64 {
@@ -63,6 +63,8 @@ pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
         stages: 2,
         loading: Loading::Cyclic,
         stage_bytes: 0,
+        epilogue: Epilogue::None,
+        epilogue_read_bytes: 0.0,
     }
 }
 

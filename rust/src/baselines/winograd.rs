@@ -15,7 +15,7 @@
 use crate::conv::{ConvProblem, BYTES_F32};
 use crate::gpusim::memory::segment_efficiency;
 use crate::gpusim::pipeline::combined_efficiency;
-use crate::gpusim::{GpuSpec, KernelPlan, Loading, Round};
+use crate::gpusim::{Epilogue, GpuSpec, KernelPlan, Loading, Round};
 
 fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
@@ -83,6 +83,8 @@ pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
         stages: 2,
         loading: Loading::Cyclic,
         stage_bytes: 0,
+        epilogue: Epilogue::None,
+        epilogue_read_bytes: 0.0,
     }
 }
 

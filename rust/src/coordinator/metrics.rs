@@ -124,6 +124,9 @@ pub struct Metrics {
     /// so p50/p99-per-class never needs sample retention
     pub latency_by_class: BTreeMap<String, Histogram>,
     pub per_artifact: BTreeMap<String, u64>,
+    /// fusion wins per model: (nodes fused, glue bytes eliminated per
+    /// inference), recorded when a model graph is fused for serving
+    pub fusion_by_model: BTreeMap<String, (u64, f64)>,
 }
 
 impl Metrics {
@@ -151,6 +154,14 @@ impl Metrics {
         } else {
             self.coalesced_convs as f64 / self.conv_batches_executed as f64
         }
+    }
+
+    /// Record a model's fusion outcome (idempotent per model — the
+    /// rewrite is deterministic, so every serve of the same model
+    /// reports the same win).
+    pub fn record_fusion(&mut self, model: &str, nodes_fused: u64, glue_bytes_eliminated: f64) {
+        self.fusion_by_model
+            .insert(model.to_string(), (nodes_fused, glue_bytes_eliminated));
     }
 
     /// Sample the executor pool's occupancy/fragmentation/eviction state
@@ -187,6 +198,18 @@ impl Metrics {
             .set("mean_conv_batch_size", self.mean_conv_batch_size().into())
             .set("plans_tuned", (self.plans_tuned as usize).into())
             .set("pool", pool)
+            .set("fusion", {
+                let mut f = Json::obj();
+                for (m, &(n, b)) in &self.fusion_by_model {
+                    f = f.set(
+                        m,
+                        Json::obj()
+                            .set("nodes_fused", (n as usize).into())
+                            .set("glue_bytes_eliminated", b.into()),
+                    );
+                }
+                f
+            })
             .set("latency", self.latency.to_json())
             .set("latency_by_class", {
                 let mut by = Json::obj();
@@ -287,6 +310,20 @@ mod tests {
         assert_eq!(m.latency_by_class["vgg16_b4"].count(), 2);
         assert_eq!(m.latency_by_class["alexnet_b1"].count(), 1);
         assert!(m.to_json().render().contains("\"latency_by_class\""));
+    }
+
+    #[test]
+    fn fusion_wins_are_exported_per_model() {
+        let mut m = Metrics::default();
+        m.record_fusion("vgg16", 13, 1.5e8);
+        m.record_fusion("vgg16", 13, 1.5e8); // idempotent
+        m.record_fusion("resnet18", 16, 8.0e7);
+        assert_eq!(m.fusion_by_model.len(), 2);
+        assert_eq!(m.fusion_by_model["vgg16"].0, 13);
+        let json = m.to_json().render();
+        assert!(json.contains("\"fusion\":{"), "{json}");
+        assert!(json.contains("\"nodes_fused\":13"), "{json}");
+        assert!(json.contains("\"glue_bytes_eliminated\""), "{json}");
     }
 
     #[test]

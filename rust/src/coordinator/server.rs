@@ -503,14 +503,20 @@ fn exec_loop(
                 // every layer was pre-dispatched by warm_plans, so this
                 // is a pure walk over the decision cache + simulator —
                 // each layer runs whatever backend won its dispatch.
-                // Memory comes from the executor's persistent device
-                // pool (per-tensor alloc/free over the schedule) —
-                // repeat models reuse parked slabs instead of planning
-                // a fresh arena; timing is bit-identical either way.
+                // Serving fuses first: relu/add/pool tails fold into
+                // their convs and eligible concats go zero-copy (fused
+                // decisions land in the same dispatch cache, so repeat
+                // models pay the rewrite's search once).  Memory comes
+                // from the executor's persistent device pool
+                // (per-tensor alloc/free over the schedule) — repeat
+                // models reuse parked slabs instead of planning a
+                // fresh arena; timing is bit-identical either way.
+                let (graph, fusion) =
+                    crate::graph::fuse(&graph, &gpu, crate::backend::dispatch_fused_op_plan);
                 let (report, pooled) = match crate::graph::execute_pooled(
                     &graph,
                     &gpu,
-                    crate::backend::dispatch_op_plan,
+                    crate::backend::dispatch_fused_op_plan,
                     1,
                     &mut pool,
                 ) {
@@ -528,6 +534,11 @@ fn exec_loop(
                     m.record_response(&artifact, latency);
                     m.pooled_models += 1;
                     m.observe_pool(&pool);
+                    m.record_fusion(
+                        &graph.name,
+                        fusion.nodes_fused as u64,
+                        fusion.glue_bytes_eliminated,
+                    );
                 }
                 // the output tensor carries the honest simulation data:
                 // per-node seconds in schedule order

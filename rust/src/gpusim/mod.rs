@@ -20,7 +20,7 @@ pub mod spec;
 pub use occupancy::{occupancy, BlockResources, Limiter, Occupancy};
 pub use pipeline::{ExecConfig, Loading, Round, MAX_STAGES, MIN_STAGES};
 pub use sim::{
-    simulate, simulate_detailed, speedup, writeback_tail_cycles, KernelPlan, SimBreakdown,
-    SimResult,
+    simulate, simulate_detailed, speedup, writeback_tail_cycles, Epilogue, KernelPlan,
+    SimBreakdown, SimResult,
 };
 pub use spec::{gtx_1080ti, tesla_k40, titan_x_maxwell, GpuSpec};

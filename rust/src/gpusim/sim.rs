@@ -22,6 +22,65 @@ pub fn writeback_tail_cycles(spec: &GpuSpec, output_bytes: f64, stages: u32) -> 
     frac * output_bytes / spec.bytes_per_cycle()
 }
 
+/// What the kernel does to its output tile *inside the writeback tail*,
+/// instead of a separate glue stream re-reading the tensor from DRAM.
+/// `None` is the unfused plan; the other arms reprice the tail:
+/// `Relu` clamps registers in flight (no traffic change), `AddResidual`
+/// streams the residual operand through the tail (priced as
+/// `epilogue_read_bytes`), and `MaxPoolWriteback` folds each k×k window
+/// before storing, so only the decimated output reaches DRAM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Epilogue {
+    None,
+    Relu,
+    AddResidual,
+    MaxPoolWriteback { k: usize, stride: usize },
+}
+
+impl Epilogue {
+    pub fn is_none(&self) -> bool {
+        matches!(self, Epilogue::None)
+    }
+
+    /// Stable serialization tag (PlanCache v5 `epilogue=` field).
+    pub fn tag(&self) -> String {
+        match self {
+            Epilogue::None => "none".to_string(),
+            Epilogue::Relu => "relu".to_string(),
+            Epilogue::AddResidual => "add".to_string(),
+            Epilogue::MaxPoolWriteback { k, stride } => format!("pool{k}s{stride}"),
+        }
+    }
+
+    /// Inverse of `tag` — `None` on anything unrecognised.
+    pub fn parse(s: &str) -> Option<Epilogue> {
+        match s {
+            "none" => return Some(Epilogue::None),
+            "relu" => return Some(Epilogue::Relu),
+            "add" => return Some(Epilogue::AddResidual),
+            _ => {}
+        }
+        let rest = s.strip_prefix("pool")?;
+        let (k, stride) = rest.split_once('s')?;
+        let (k, stride) = (k.parse().ok()?, stride.parse().ok()?);
+        if k == 0 || stride == 0 {
+            return None;
+        }
+        Some(Epilogue::MaxPoolWriteback { k, stride })
+    }
+
+    /// Pooled output map for a `oy`×`ox` conv output (valid windows).
+    pub fn pooled_hw(&self, oy: usize, ox: usize) -> (usize, usize) {
+        match self {
+            Epilogue::MaxPoolWriteback { k, stride } => {
+                assert!(*k >= 1 && *stride >= 1 && oy >= *k && ox >= *k, "pool{k}s{stride} does not fit {oy}x{ox}");
+                ((oy - k) / stride + 1, (ox - k) / stride + 1)
+            }
+            _ => (oy, ox),
+        }
+    }
+}
+
 /// The execution schedule of one kernel on one GPU — what a CUDA kernel's
 /// blocks would do, expressed as per-SM prefetch rounds.  Produced by
 /// `plans::*` (ours) and `baselines::*` (cuDNN proxy, [1], [16]).
@@ -55,6 +114,11 @@ pub struct KernelPlan {
     /// smem bytes one extra stage buffer costs (0 if the plan cannot be
     /// deepened); `staged` charges `(stages - 2) * stage_bytes`
     pub stage_bytes: u32,
+    /// fused writeback epilogue (`Epilogue::None` = the plain conv)
+    pub epilogue: Epilogue,
+    /// bytes the epilogue streams IN through the writeback tail (the
+    /// residual operand for `AddResidual`; 0 otherwise)
+    pub epilogue_read_bytes: f64,
 }
 
 impl KernelPlan {
@@ -119,6 +183,7 @@ impl KernelPlan {
             rounds,
             output_bytes: self.output_bytes * keep,
             total_fma: self.total_fma * keep,
+            epilogue_read_bytes: self.epilogue_read_bytes * keep,
             ..self.clone()
         }
     }
@@ -148,6 +213,7 @@ impl KernelPlan {
             sms_active: self.sms_active * par as u32,
             output_bytes: self.output_bytes * groups as f64,
             total_fma: self.total_fma * groups as f64,
+            epilogue_read_bytes: self.epilogue_read_bytes * groups as f64,
             ..self.clone()
         }
     }
@@ -173,7 +239,46 @@ impl KernelPlan {
             rounds,
             output_bytes: self.output_bytes * n as f64,
             total_fma: self.total_fma * n as f64,
+            epilogue_read_bytes: self.epilogue_read_bytes * n as f64,
             ..self.clone()
+        }
+    }
+
+    /// The fused-epilogue schedule — the consuming glue op absorbed into
+    /// this plan's writeback tail.  `out_hw` is the plan's output map
+    /// (oy, ox); a `MaxPoolWriteback` folds k×k windows before storing,
+    /// so stores shrink to the pooled fraction of the map, while an
+    /// `AddResidual` streams the residual operand (same bytes as the
+    /// output) in through the tail.  In every arm the intermediate
+    /// tensor's DRAM round-trip — written by the conv, re-read by a
+    /// separate glue kernel — disappears.  Only valid on an unfused
+    /// plan; `Epilogue::None` is the identity.
+    pub fn fused(&self, ep: Epilogue, out_hw: (usize, usize)) -> KernelPlan {
+        assert!(self.epilogue.is_none(), "{}: already fused", self.name);
+        match ep {
+            Epilogue::None => self.clone(),
+            Epilogue::Relu => KernelPlan {
+                name: format!("{} +relu", self.name),
+                epilogue: ep,
+                ..self.clone()
+            },
+            Epilogue::AddResidual => KernelPlan {
+                name: format!("{} +add", self.name),
+                epilogue: ep,
+                epilogue_read_bytes: self.output_bytes,
+                ..self.clone()
+            },
+            Epilogue::MaxPoolWriteback { k, stride } => {
+                let (oy, ox) = out_hw;
+                let (py, px) = ep.pooled_hw(oy, ox);
+                let frac = (py * px) as f64 / (oy * ox) as f64;
+                KernelPlan {
+                    name: format!("{} +pool{k}s{stride}", self.name),
+                    epilogue: ep,
+                    output_bytes: self.output_bytes * frac,
+                    ..self.clone()
+                }
+            }
         }
     }
 }
@@ -254,11 +359,15 @@ pub fn simulate_detailed(spec: &GpuSpec, plan: &KernelPlan) -> SimBreakdown {
     // Output writeback streams at full segment width, overlapped with
     // compute except for its tail.  The charge is max(staged tail, DRAM
     // bus-floor excess): total time can never undercut moving ALL
-    // traffic (loads + stores) at peak bandwidth, so both roofline
-    // bandwidth fractions stay <= 1.0 (the PR-7 store-accounting bug
-    // this fixes).
-    let tail = writeback_tail_cycles(spec, plan.output_bytes, plan.stages);
-    let floor = (plan.dram_load_bytes() + plan.output_bytes) / spec.bytes_per_cycle();
+    // traffic (loads + stores + epilogue reads) at peak bandwidth, so
+    // both roofline bandwidth fractions stay <= 1.0 (the PR-7
+    // store-accounting bug this fixes).  A fused epilogue prices its
+    // residual-operand stream into the same tail: the bytes ride the
+    // store burst instead of a separate glue kernel's launch + stream.
+    let tail_bytes = plan.output_bytes + plan.epilogue_read_bytes;
+    let tail = writeback_tail_cycles(spec, tail_bytes, plan.stages);
+    let floor =
+        (plan.dram_load_bytes() + plan.output_bytes + plan.epilogue_read_bytes) / spec.bytes_per_cycle();
     let wb_cycles = tail.max(floor - pipe.total_cycles);
     let cycles = pipe.total_cycles + wb_cycles;
 
@@ -322,6 +431,8 @@ mod tests {
             stages: 2,
             loading: Loading::Cyclic,
             stage_bytes: 8 * 1024,
+            epilogue: Epilogue::None,
+            epilogue_read_bytes: 0.0,
         }
     }
 
@@ -556,5 +667,96 @@ mod tests {
     fn restaging_a_staged_plan_panics() {
         let p = plan(4, 1e4, 1e5).staged(3, Loading::Cyclic);
         assert!(std::panic::catch_unwind(|| p.staged(2, Loading::Cyclic)).is_err());
+    }
+
+    #[test]
+    fn epilogue_tags_round_trip() {
+        for ep in [
+            Epilogue::None,
+            Epilogue::Relu,
+            Epilogue::AddResidual,
+            Epilogue::MaxPoolWriteback { k: 2, stride: 2 },
+            Epilogue::MaxPoolWriteback { k: 3, stride: 1 },
+        ] {
+            assert_eq!(Epilogue::parse(&ep.tag()), Some(ep), "{}", ep.tag());
+        }
+        assert_eq!(Epilogue::parse("pool0s2"), None);
+        assert_eq!(Epilogue::parse("pool3"), None);
+        assert_eq!(Epilogue::parse("maxpool3s2"), None);
+        assert_eq!(Epilogue::parse(""), None);
+    }
+
+    #[test]
+    fn fused_none_is_bit_identical() {
+        let g = gtx_1080ti();
+        let mut p = plan(8, 1e4, 1e6);
+        p.output_bytes = 1e6;
+        let f = p.fused(Epilogue::None, (28, 28));
+        assert_eq!(f.name, p.name);
+        assert_eq!(
+            simulate(&g, &p).cycles.to_bits(),
+            simulate(&g, &f).cycles.to_bits()
+        );
+    }
+
+    #[test]
+    fn fused_relu_timing_is_free() {
+        // relu clamps registers in flight: same traffic, same cycles
+        let g = gtx_1080ti();
+        let mut p = plan(8, 1e4, 1e6);
+        p.output_bytes = 1e6;
+        let f = p.fused(Epilogue::Relu, (28, 28));
+        assert!(f.name.ends_with("+relu"));
+        assert_eq!(
+            simulate(&g, &p).cycles.to_bits(),
+            simulate(&g, &f).cycles.to_bits()
+        );
+    }
+
+    #[test]
+    fn fused_pool_shrinks_stores_by_the_pooled_fraction() {
+        let g = gtx_1080ti();
+        let mut p = plan(8, 1e4, 1e6);
+        p.output_bytes = 28.0 * 28.0 * 4.0 * 256.0;
+        let f = p.fused(Epilogue::MaxPoolWriteback { k: 2, stride: 2 }, (28, 28));
+        assert!((f.output_bytes - p.output_bytes * (14.0 * 14.0) / (28.0 * 28.0)).abs() < 1e-9);
+        assert!(simulate(&g, &f).cycles <= simulate(&g, &p).cycles);
+        // odd map, overlap-free 2x2/s2 pool: floor((27-2)/2)+1 = 13
+        let o = p.fused(Epilogue::MaxPoolWriteback { k: 2, stride: 2 }, (27, 27));
+        assert!((o.output_bytes - p.output_bytes * (13.0 * 13.0) / (27.0 * 27.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fused_add_streams_the_residual_through_the_tail() {
+        let g = gtx_1080ti();
+        let mut p = plan(8, 1e4, 1e6);
+        p.output_bytes = 1e7;
+        let f = p.fused(Epilogue::AddResidual, (28, 28));
+        assert_eq!(f.epilogue_read_bytes, p.output_bytes);
+        // the residual stream costs tail time...
+        assert!(simulate(&g, &f).cycles > simulate(&g, &p).cycles);
+        // ...but the bus floor still accounts every byte exactly once
+        let r = simulate(&g, &f);
+        let floor = (f.dram_load_bytes() + f.output_bytes + f.epilogue_read_bytes) / g.bytes_per_cycle();
+        assert!(r.cycles >= floor - 1e-6);
+    }
+
+    #[test]
+    fn fused_transforms_compose_with_batching_and_decimation() {
+        let mut p = plan(8, 1e4, 1e6);
+        p.output_bytes = 1e6;
+        let f = p.fused(Epilogue::AddResidual, (28, 28));
+        let b = f.batched(4);
+        assert!((b.epilogue_read_bytes - 4.0 * f.epilogue_read_bytes).abs() < 1e-9);
+        let d = f.decimated(0.25);
+        assert!((d.epilogue_read_bytes - 0.25 * f.epilogue_read_bytes).abs() < 1e-9);
+        let gr = f.grouped(4, 28);
+        assert!((gr.epilogue_read_bytes - 4.0 * f.epilogue_read_bytes).abs() < 1e-9);
+    }
+
+    #[test]
+    fn refusing_a_fused_plan_panics() {
+        let p = plan(4, 1e4, 1e5).fused(Epilogue::Relu, (28, 28));
+        assert!(std::panic::catch_unwind(|| p.fused(Epilogue::Relu, (28, 28))).is_err());
     }
 }

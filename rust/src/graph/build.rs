@@ -15,6 +15,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::conv::{suites, ConvOp, ConvProblem};
+use crate::gpusim::Epilogue;
 
 use super::node::{Node, NodeId, Op, Shape};
 
@@ -70,7 +71,7 @@ impl Graph {
     pub fn conv_ops(&self) -> Vec<ConvOp> {
         let mut out: Vec<ConvOp> = vec![];
         for n in &self.nodes {
-            if let Op::Conv { conv } = n.op {
+            if let Op::Conv { conv, .. } = n.op {
                 if !out.contains(&conv) {
                     out.push(conv);
                 }
@@ -129,8 +130,9 @@ pub fn infer_shape(op: &Op, inputs: &[Shape]) -> Result<Shape> {
             }
             Ok(shape)
         }
-        Op::Conv { conv } => {
-            arity(1)?;
+        Op::Conv { conv, epilogue } => {
+            // an AddResidual conv reads its residual as a second input
+            arity(if epilogue == Epilogue::AddResidual { 2 } else { 1 })?;
             if !conv.valid() {
                 return Err(anyhow!("invalid conv op {}", conv.label()));
             }
@@ -143,7 +145,30 @@ pub fn infer_shape(op: &Op, inputs: &[Shape]) -> Result<Shape> {
                     inputs[0].label()
                 ));
             }
-            Ok(Shape::new(conv.core.m, conv.oy(), conv.ox()))
+            let out = Shape::new(conv.core.m, conv.oy(), conv.ox());
+            match epilogue {
+                Epilogue::None | Epilogue::Relu => Ok(out),
+                Epilogue::AddResidual => {
+                    if inputs[1] != out {
+                        return Err(anyhow!(
+                            "fused residual {} does not match conv output {}",
+                            inputs[1].label(),
+                            out.label()
+                        ));
+                    }
+                    Ok(out)
+                }
+                Epilogue::MaxPoolWriteback { k, stride } => {
+                    if k < 1 || stride < 1 || k > out.h || k > out.w {
+                        return Err(anyhow!(
+                            "fused pool k={k} s={stride} does not fit {}",
+                            out.label()
+                        ));
+                    }
+                    let (py, px) = epilogue.pooled_hw(out.h, out.w);
+                    Ok(Shape::new(out.c, py, px))
+                }
+            }
         }
         Op::Pad { h, w } => {
             arity(1)?;
@@ -161,6 +186,10 @@ pub fn infer_shape(op: &Op, inputs: &[Shape]) -> Result<Shape> {
             }
             Ok(Shape::new(s.c, (s.h - k) / stride + 1, (s.w - k) / stride + 1))
         }
+        Op::Relu => {
+            arity(1)?;
+            Ok(inputs[0])
+        }
         Op::Add => {
             arity(2)?;
             if inputs[0] != inputs[1] {
@@ -172,7 +201,7 @@ pub fn infer_shape(op: &Op, inputs: &[Shape]) -> Result<Shape> {
             }
             Ok(inputs[0])
         }
-        Op::Concat => {
+        Op::Concat { .. } => {
             if inputs.len() < 2 {
                 return Err(anyhow!("concat wants >= 2 inputs, got {}", inputs.len()));
             }
@@ -235,9 +264,10 @@ impl GraphBuilder {
         self.nodes.is_empty()
     }
 
-    /// A conv node carrying a full op.
+    /// A conv node carrying a full op (unfused; the fusion pass
+    /// rewrites epilogues in).
     pub fn conv_op(&mut self, name: &str, input: NodeId, conv: ConvOp) -> Result<NodeId> {
-        self.add(name, Op::Conv { conv }, &[input])
+        self.add(name, Op::Conv { conv, epilogue: Epilogue::None }, &[input])
     }
 
     /// A dense (stride-1, valid) conv — the historical builder entry.
@@ -261,12 +291,16 @@ impl GraphBuilder {
         self.add(name, Op::Pool { k, stride }, &[input])
     }
 
+    pub fn relu(&mut self, name: &str, input: NodeId) -> Result<NodeId> {
+        self.add(name, Op::Relu, &[input])
+    }
+
     pub fn add_skip(&mut self, name: &str, a: NodeId, b: NodeId) -> Result<NodeId> {
         self.add(name, Op::Add, &[a, b])
     }
 
     pub fn concat(&mut self, name: &str, inputs: &[NodeId]) -> Result<NodeId> {
-        self.add(name, Op::Concat, inputs)
+        self.add(name, Op::Concat { zero_copy: false }, inputs)
     }
 
     pub fn finish(self) -> Result<Graph> {
@@ -304,23 +338,28 @@ pub fn model_graph(name: &str) -> Result<Graph> {
 }
 
 /// AlexNet's conv body (conv2..conv5, the `suites::alexnet` ops) with
-/// its inter-stage 3x3/s2 max pools.
+/// its per-conv ReLUs and inter-stage 3x3/s2 max pools.
 pub fn alexnet_graph() -> Graph {
     let l = suites::alexnet();
     let mut b = GraphBuilder::new("alexnet");
     let x = b.input("in", Shape::new(96, 27, 27));
     let x = b.conv_op("conv2", x, l[0]).expect("alexnet conv2");
+    let x = b.relu("relu2", x).expect("alexnet relu2");
     let x = b.pool("pool2", x, 3, 2).expect("alexnet pool2");
     let x = b.conv_op("conv3", x, l[1]).expect("alexnet conv3");
+    let x = b.relu("relu3", x).expect("alexnet relu3");
     let x = b.conv_op("conv4", x, l[2]).expect("alexnet conv4");
+    let x = b.relu("relu4", x).expect("alexnet relu4");
     let x = b.conv_op("conv5", x, l[3]).expect("alexnet conv5");
+    let x = b.relu("relu5", x).expect("alexnet relu5");
     b.pool("pool5", x, 3, 2).expect("alexnet pool5");
     b.finish().expect("alexnet graph")
 }
 
-/// VGG-16's 13-conv body: five blocks of 'same' 3x3 convs, each closed
-/// by a 2x2/s2 max pool.  Repeated layers reuse the same `ConvOp`, so
-/// the distinct ops are exactly `suites::vgg16`.
+/// VGG-16's 13-conv body: five blocks of 'same' 3x3 convs (each
+/// followed by its ReLU), each block closed by a 2x2/s2 max pool.
+/// Repeated layers reuse the same `ConvOp`, so the distinct ops are
+/// exactly `suites::vgg16`.
 pub fn vgg16_graph() -> Graph {
     let mut b = GraphBuilder::new("vgg16");
     let mut x = b.input("in", Shape::new(3, 224, 224));
@@ -339,6 +378,7 @@ pub fn vgg16_graph() -> Graph {
             x = b
                 .conv_same(&format!("conv{}_{}", bi + 1, i + 1), x, p)
                 .expect("vgg16 conv");
+            x = b.relu(&format!("relu{}_{}", bi + 1, i + 1), x).expect("vgg16 relu");
         }
         x = b.pool(&format!("pool{}", bi + 1), x, 2, 2).expect("vgg16 pool");
     }
@@ -372,12 +412,15 @@ pub fn resnet18_graph() -> Graph {
             };
             let cb = ConvOp::same(ConvProblem::multi(c_out, w_out, c_out, 3));
             let a = b.conv_op(&format!("s{s}b{blk}c1"), x, ca).expect("resnet18 conv");
+            let a = b.relu(&format!("s{s}b{blk}relu1"), a).expect("resnet18 relu");
             let c2 = b.conv_op(&format!("s{s}b{blk}c2"), a, cb).expect("resnet18 conv");
             let skip = match proj {
                 Some(p) => b.conv_op(&format!("s{s}proj"), x, p).expect("resnet18 proj"),
                 None => x,
             };
-            x = b.add_skip(&format!("s{s}b{blk}add"), c2, skip).expect("resnet18 add");
+            let sum =
+                b.add_skip(&format!("s{s}b{blk}add"), c2, skip).expect("resnet18 add");
+            x = b.relu(&format!("s{s}b{blk}relu2"), sum).expect("resnet18 relu");
         }
     }
     b.finish().expect("resnet18 graph")
@@ -394,13 +437,19 @@ pub fn inception3a_graph() -> Graph {
     let mut b = GraphBuilder::new("inception3a");
     let x = b.input("in", Shape::new(192, 28, 28));
     let b1 = b.conv_op("b1.1x1", x, br[0][0]).expect("inception b1");
+    let b1 = b.relu("b1.relu", b1).expect("inception relu");
     let t = b.conv_op("b2.reduce", x, br[1][0]).expect("inception b2r");
+    let t = b.relu("b2.reduce.relu", t).expect("inception relu");
     let b2 = b.conv_op("b2.3x3", t, br[1][1]).expect("inception b2");
+    let b2 = b.relu("b2.relu", b2).expect("inception relu");
     let t = b.conv_op("b3.reduce", x, br[2][0]).expect("inception b3r");
+    let t = b.relu("b3.reduce.relu", t).expect("inception relu");
     let b3 = b.conv_op("b3.5x5", t, br[2][1]).expect("inception b3");
+    let b3 = b.relu("b3.relu", b3).expect("inception relu");
     let t = b.pool("b4.pool", x, 3, 1).expect("inception pool");
     let t = b.pad("b4.pool.pad", t, 28, 28).expect("inception pad");
     let b4 = b.conv_op("b4.proj", t, br[3][0]).expect("inception b4");
+    let b4 = b.relu("b4.relu", b4).expect("inception relu");
     b.concat("concat", &[b1, b2, b3, b4]).expect("inception concat");
     b.finish().expect("inception3a graph")
 }
@@ -414,10 +463,13 @@ pub fn mobilenet_v1_graph() -> Graph {
     let mut b = GraphBuilder::new("mobilenet_v1");
     let mut x = b.input("in", Shape::new(3, 224, 224));
     x = b.conv_op("conv1", x, ops[0]).expect("mobilenet conv1");
+    x = b.relu("conv1.relu", x).expect("mobilenet relu");
     for (i, pair) in ops[1..].chunks(2).enumerate() {
         let blk = i + 1;
         x = b.conv_op(&format!("b{blk}.dw"), x, pair[0]).expect("mobilenet dw");
+        x = b.relu(&format!("b{blk}.dw.relu"), x).expect("mobilenet relu");
         x = b.conv_op(&format!("b{blk}.pw"), x, pair[1]).expect("mobilenet pw");
+        x = b.relu(&format!("b{blk}.pw.relu"), x).expect("mobilenet relu");
     }
     b.pool("avgpool", x, 7, 1).expect("mobilenet pool");
     b.finish().expect("mobilenet_v1 graph")
@@ -443,8 +495,9 @@ mod tests {
     fn vgg16_has_the_full_13_conv_body() {
         let g = vgg16_graph();
         assert_eq!(g.conv_nodes(), 13);
-        // op-level 'same' padding: 13 convs + 5 pools + input, no pads
-        assert_eq!(g.len(), 19);
+        // op-level 'same' padding: 13 convs + 13 relus + 5 pools +
+        // input, no pads
+        assert_eq!(g.len(), 32);
         // output after five 2x2 pools: 512 x 7 x 7
         let out = g.outputs();
         assert_eq!(out.len(), 1);
@@ -458,6 +511,9 @@ mod tests {
         assert_eq!(out.len(), 1);
         assert_eq!(g.node(out[0]).shape, Shape::new(256, 6, 6));
         assert_eq!(g.conv_nodes(), 4);
+        // conv2..5 each carry a ReLU; pools frame the stages
+        assert_eq!(g.nodes().iter().filter(|n| matches!(n.op, Op::Relu)).count(), 4);
+        assert_eq!(g.len(), 11);
     }
 
     #[test]
@@ -472,13 +528,15 @@ mod tests {
         let strided: Vec<&Node> = g
             .nodes()
             .iter()
-            .filter(|n| matches!(n.op, Op::Conv { conv } if conv.stride == 2))
+            .filter(|n| matches!(n.op, Op::Conv { conv, .. } if conv.stride == 2))
             .collect();
         assert_eq!(strided.len(), 6, "3 transitions x (conv + projection)");
         // every add has two distinct inputs (main path + skip)
         let adds: Vec<&Node> =
             g.nodes().iter().filter(|n| matches!(n.op, Op::Add)).collect();
         assert_eq!(adds.len(), 8);
+        // one ReLU after each block's first conv and one after each add
+        assert_eq!(g.nodes().iter().filter(|n| matches!(n.op, Op::Relu)).count(), 16);
         for a in adds {
             assert_ne!(a.inputs[0], a.inputs[1], "{}", a.name);
         }
@@ -503,7 +561,7 @@ mod tests {
         let dw = g
             .nodes()
             .iter()
-            .filter(|n| matches!(n.op, Op::Conv { conv } if conv.is_depthwise()))
+            .filter(|n| matches!(n.op, Op::Conv { conv, .. } if conv.is_depthwise()))
             .count();
         assert_eq!(dw, 13);
     }
@@ -514,7 +572,7 @@ mod tests {
         let out = g.outputs();
         assert_eq!(out.len(), 1);
         let o = g.node(out[0]);
-        assert!(matches!(o.op, Op::Concat));
+        assert!(matches!(o.op, Op::Concat { zero_copy: false }));
         assert_eq!(o.shape, Shape::new(256, 28, 28));
         assert_eq!(o.inputs.len(), 4);
         // the input feeds all four branches
@@ -545,6 +603,28 @@ mod tests {
         assert!(b.add_skip("a", x, y).is_err());
         // concat needs >= 2 inputs
         assert!(b.concat("cat", &[x]).is_err());
+        // fused pool epilogue must fit the conv's output map
+        assert!(b
+            .add(
+                "fp",
+                Op::Conv {
+                    conv: ConvOp::dense(ConvProblem::multi(8, 14, 8, 3)),
+                    epilogue: Epilogue::MaxPoolWriteback { k: 15, stride: 1 },
+                },
+                &[x]
+            )
+            .is_err());
+        // a fused residual must match the conv output shape
+        assert!(b
+            .add(
+                "fa",
+                Op::Conv {
+                    conv: ConvOp::dense(ConvProblem::multi(8, 14, 8, 3)),
+                    epilogue: Epilogue::AddResidual,
+                },
+                &[x, x]
+            )
+            .is_err());
         // unknown input id
         assert!(b.conv("dangling", 99, ConvProblem::multi(8, 14, 8, 3)).is_err());
     }
@@ -555,11 +635,11 @@ mod tests {
         let x = b.input("in", Shape::new(16, 28, 28));
         let y = b.conv_same("c3", x, ConvProblem::multi(16, 28, 32, 3)).unwrap();
         assert_eq!(b.nodes[y].shape, Shape::new(32, 28, 28));
-        assert!(matches!(b.nodes[y].op, Op::Conv { conv } if conv.pad == 1));
+        assert!(matches!(b.nodes[y].op, Op::Conv { conv, .. } if conv.pad == 1));
         // K=1 needs no padding
         let z = b.conv_same("c1", y, ConvProblem::multi(32, 28, 32, 1)).unwrap();
         assert_eq!(b.nodes[z].shape, Shape::new(32, 28, 28));
-        assert!(matches!(b.nodes[z].op, Op::Conv { conv } if conv.is_dense()));
+        assert!(matches!(b.nodes[z].op, Op::Conv { conv, .. } if conv.is_dense()));
         // a strided conv node downsamples in one hop
         let s = b
             .conv_op("down", z, ConvOp::strided(ConvProblem::multi(32, 28, 64, 3), 2, 1))

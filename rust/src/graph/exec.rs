@@ -1,6 +1,7 @@
 //! Whole-graph execution: a topological scheduler that resolves conv
-//! nodes through an injected `Planner` — `backend::dispatch_op_plan`
-//! for per-layer cross-backend algorithm choice (the serving default:
+//! nodes through an injected `Planner` —
+//! `backend::dispatch_fused_op_plan` for per-layer cross-backend
+//! algorithm choice (the serving default:
 //! one model can run Winograd on its big K=3 layers and the paper
 //! kernels on its small maps), `plans::op_plan_for` for the
 //! tuned-paper-only path, `plans::paper_op_plan_for` for the §3 closed
@@ -19,7 +20,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::conv::{ConvOp, BYTES_F32};
-use crate::gpusim::{simulate, GpuSpec, KernelPlan};
+use crate::gpusim::{simulate, Epilogue, GpuSpec, KernelPlan};
 use crate::plans;
 use crate::util::bench::Table;
 
@@ -30,11 +31,14 @@ use super::memory::{plan_arena, plan_pooled, ArenaPlan, PooledPlan};
 use super::node::{NodeId, Op, Shape};
 
 /// How a conv node resolves to a kernel plan.
-/// `backend::dispatch_op_plan` (cross-backend), `plans::op_plan_for`
-/// (tuned paper kernel) and `plans::paper_op_plan_for` (§3 closed
-/// forms) all fit — each handles stride/pad/groups through the op
-/// layer's native schedules or the exact lowering.
-pub type Planner = fn(&ConvOp, &GpuSpec) -> KernelPlan;
+/// `backend::dispatch_fused_op_plan` (cross-backend),
+/// `plans::op_plan_for` (tuned paper kernel) and
+/// `plans::paper_op_plan_for` (§3 closed forms) all fit — each handles
+/// stride/pad/groups through the op layer's native schedules or the
+/// exact lowering, then applies the node's fused epilogue to the plan
+/// (`Epilogue::None` is the unfused path, bit-identical to the old
+/// two-argument planners).
+pub type Planner = fn(&ConvOp, Epilogue, &GpuSpec) -> KernelPlan;
 
 /// Fraction of peak DRAM bandwidth the memory-bound glue kernels
 /// sustain (simple streaming kernels: no coalescing hazards, but no
@@ -68,17 +72,31 @@ pub fn topo_order(g: &Graph) -> Vec<NodeId> {
     order
 }
 
-/// DRAM bytes a glue node moves (reads + writes).  Pool reads every
-/// window element (overlapping windows re-fetch), pad re-writes the
-/// framed tensor, add reads both operands, concat copies its inputs.
+/// DRAM bytes a glue node moves (reads + writes).  Pool reads each
+/// window element — but when windows are overlap-free (stride >= k)
+/// every input pixel is touched exactly once, so the read side is the
+/// input tensor, not `windows * k * k` (which over-charged the common
+/// stride == k pools and under-charged nothing).  Pad re-writes the
+/// framed tensor, relu streams its tensor through, add reads both
+/// operands, concat copies its inputs — unless it is zero-copy, where
+/// the producers already wrote into the concat allocation and the node
+/// moves nothing.
 fn glue_bytes(g: &Graph, id: NodeId) -> f64 {
     let n = g.node(id);
     let out = n.shape.bytes() as f64;
     let ins: f64 = n.inputs.iter().map(|&i| g.node(i).shape.bytes() as f64).sum();
     match n.op {
         Op::Input { .. } | Op::Conv { .. } => 0.0,
-        Op::Pool { k, .. } => (n.shape.elems() * k * k * BYTES_F32) as f64 + out,
-        Op::Pad { .. } | Op::Add | Op::Concat => ins + out,
+        Op::Pool { k, stride } => {
+            let reads = if stride >= k {
+                g.node(n.inputs[0]).shape.elems()
+            } else {
+                n.shape.elems() * k * k
+            };
+            (reads * BYTES_F32) as f64 + out
+        }
+        Op::Concat { zero_copy: true } => 0.0,
+        Op::Pad { .. } | Op::Relu | Op::Add | Op::Concat { zero_copy: false } => ins + out,
     }
 }
 
@@ -86,6 +104,20 @@ fn glue_bytes(g: &Graph, id: NodeId) -> f64 {
 /// (`trace::report`) aggregates model-level DRAM traffic from it.
 pub fn node_glue_bytes(g: &Graph, id: NodeId) -> f64 {
     glue_bytes(g, id)
+}
+
+/// Cycles of a glue node's DRAM stream (`glue_cycles` over
+/// `node_glue_bytes`) — the fusion pass prices eliminated glue with
+/// the exact arithmetic the executor charges.
+pub fn node_glue_cycles(g: &Graph, spec: &GpuSpec, id: NodeId) -> f64 {
+    glue_cycles(spec, glue_bytes(g, id))
+}
+
+/// `glue_cycles` for a raw byte count — what a hypothetical glue node
+/// moving `bytes` would cost (the fusion pass prices retained-but-
+/// shrunk relu streams before the rewritten graph exists).
+pub fn glue_stream_cycles(spec: &GpuSpec, bytes: f64) -> f64 {
+    glue_cycles(spec, bytes)
 }
 
 /// Cycles for a memory-bound glue op moving `bytes` through DRAM.
@@ -195,8 +227,8 @@ pub fn execute_batched(g: &Graph, spec: &GpuSpec, planner: Planner, batch: usize
         let n = g.node(id);
         let (seconds, detail) = match &n.op {
             Op::Input { .. } => (0.0, "network input".to_string()),
-            Op::Conv { conv } => {
-                let plan = planner(conv, spec).batched(batch);
+            Op::Conv { conv, epilogue } => {
+                let plan = planner(conv, *epilogue, spec).batched(batch);
                 let r = simulate(spec, &plan);
                 convs += 1;
                 conv_s += r.seconds;
@@ -209,8 +241,14 @@ pub fn execute_batched(g: &Graph, spec: &GpuSpec, planner: Planner, batch: usize
                 let d = match *op {
                     Op::Pad { h, w } => format!("pad to {h}x{w}"),
                     Op::Pool { k, stride } => format!("maxpool {k}x{k}/s{stride}"),
+                    Op::Relu => "relu".to_string(),
                     Op::Add => "residual add".to_string(),
-                    Op::Concat => format!("concat {} inputs", n.inputs.len()),
+                    Op::Concat { zero_copy: true } => {
+                        format!("concat {} inputs (zero-copy)", n.inputs.len())
+                    }
+                    Op::Concat { zero_copy: false } => {
+                        format!("concat {} inputs", n.inputs.len())
+                    }
                     _ => unreachable!(),
                 };
                 (s, d)
@@ -267,8 +305,8 @@ pub fn execute_batched_traced(
             .attr("kind", n.kind.into())
             .attr("detail", n.detail.as_str().into())
             .attr("seconds", n.seconds.into());
-        if let Op::Conv { conv } = &g.node(n.id).op {
-            let plan = planner(conv, spec).batched(batch);
+        if let Op::Conv { conv, epilogue } = &g.node(n.id).op {
+            let plan = planner(conv, *epilogue, spec).batched(batch);
             for (k, v) in crate::trace::Roofline::measure(spec, &plan).attrs() {
                 sp = sp.attr(&k, v);
             }
@@ -378,11 +416,60 @@ mod tests {
         let pool = glue_bytes(&g, 1);
         let pad = glue_bytes(&g, 2);
         assert!(pool > 0.0 && pad > 0.0);
-        // the 2x2 pool re-reads the full 56x56 map; the pad only moves
-        // the quarter map plus its 32x32 frame
+        // the 2x2/s2 pool reads the full 56x56 map once; the pad only
+        // moves the quarter map plus its 32x32 frame
         assert!(pool > pad, "pool {pool} <= pad {pad}");
         assert!(glue_cycles(&spec, pool) > glue_cycles(&spec, pad));
         assert_eq!(glue_cycles(&spec, 0.0), 0.0);
+    }
+
+    #[test]
+    fn overlap_free_pool_reads_each_input_pixel_once() {
+        // stride >= k: windows tile the map without overlap, so the
+        // read side is the input tensor — per-window pricing would
+        // charge 13*13*4 = 676 elems on a 27x27 map and miss the odd
+        // rim, while the kernel really streams all 729 pixels
+        let mut b = GraphBuilder::new("pools");
+        let x = b.input("in", crate::graph::Shape::new(1, 27, 27));
+        let tiled = b.pool("tiled", x, 2, 2).unwrap();
+        let g = b.finish().unwrap();
+        let out = g.node(tiled).shape.bytes() as f64;
+        assert_eq!(glue_bytes(&g, tiled), (27 * 27 * BYTES_F32) as f64 + out);
+
+        // overlapping windows (stride < k) still pay per window
+        let mut b = GraphBuilder::new("pools2");
+        let x = b.input("in", crate::graph::Shape::new(1, 28, 28));
+        let over = b.pool("over", x, 3, 1).unwrap();
+        let g = b.finish().unwrap();
+        let o = g.node(over);
+        let out = o.shape.bytes() as f64;
+        assert_eq!(
+            glue_bytes(&g, over),
+            (o.shape.elems() * 9 * BYTES_F32) as f64 + out
+        );
+    }
+
+    #[test]
+    fn relu_nodes_stream_their_tensor_and_zero_copy_concat_is_free() {
+        let spec = gtx_1080ti();
+        let mut b = GraphBuilder::new("glue2");
+        let x = b.input("in", crate::graph::Shape::new(8, 14, 14));
+        let r = b.relu("r", x).unwrap();
+        let g = b.finish().unwrap();
+        let bytes = g.node(x).shape.bytes() as f64 + g.node(r).shape.bytes() as f64;
+        assert_eq!(glue_bytes(&g, r), bytes);
+        assert!(glue_cycles(&spec, bytes) > 0.0);
+
+        // a zero-copy concat moves nothing; the copying one moves 2x
+        let mut b = GraphBuilder::new("cat");
+        let x = b.input("in", crate::graph::Shape::new(8, 14, 14));
+        let a = b.conv_same("a", x, crate::conv::ConvProblem::multi(8, 14, 8, 3)).unwrap();
+        let c = b.conv_same("c", x, crate::conv::ConvProblem::multi(8, 14, 8, 3)).unwrap();
+        let cat = b.concat("cat", &[a, c]).unwrap();
+        let zc = b.add("cat.zc", Op::Concat { zero_copy: true }, &[a, c]).unwrap();
+        let g = b.finish().unwrap();
+        assert!(glue_bytes(&g, cat) > 0.0);
+        assert_eq!(glue_bytes(&g, zc), 0.0);
     }
 
     #[test]
@@ -426,7 +513,7 @@ mod tests {
         let g = model_graph("vgg16").unwrap();
         let spec = gtx_1080ti();
         let tuned = execute(&g, &spec, plans::op_plan_for);
-        let dispatched = execute(&g, &spec, crate::backend::dispatch_op_plan);
+        let dispatched = execute(&g, &spec, crate::backend::dispatch_fused_op_plan);
         assert!(
             dispatched.total_seconds <= tuned.total_seconds * (1.0 + 1e-9),
             "dispatch lost: {} > {}",
@@ -446,10 +533,10 @@ mod tests {
     fn pooled_execution_timing_is_bit_identical() {
         let g = model_graph("resnet18").unwrap();
         let spec = gtx_1080ti();
-        let plain = execute_batched(&g, &spec, crate::backend::dispatch_op_plan, 2);
+        let plain = execute_batched(&g, &spec, crate::backend::dispatch_fused_op_plan, 2);
         let mut pool = DevicePool::new(spec.dram_bytes as usize);
         let (pooled, plan) =
-            execute_pooled(&g, &spec, crate::backend::dispatch_op_plan, 2, &mut pool).unwrap();
+            execute_pooled(&g, &spec, crate::backend::dispatch_fused_op_plan, 2, &mut pool).unwrap();
         assert_eq!(pooled.total_seconds.to_bits(), plain.total_seconds.to_bits());
         for (a, b) in pooled.nodes.iter().zip(&plain.nodes) {
             assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "node {}", a.name);

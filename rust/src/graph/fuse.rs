@@ -1,0 +1,457 @@
+//! Epilogue fusion & zero-copy concat: the DAG rewrite that eliminates
+//! the glue-kernel streams.
+//!
+//! The unfused executor runs every ReLU, residual add and channel
+//! concat as its own DRAM-bound stream — each one a launch, a cold
+//! memory latency, and a full read-modify-write of tensors the
+//! producing conv just wrote.  This pass pattern-matches the chains
+//! the evaluation models actually contain and folds them into the
+//! producing conv's writeback tail (`gpusim::Epilogue`):
+//!
+//!   conv -> relu                 => conv(+relu)          relu is free in the tail
+//!   conv -> pool                 => conv(+pool{k}s{s})   stores shrink by the pooled fraction
+//!   conv -> relu -> pool         => conv(+pool), relu retargeted to the
+//!                                   pooled (1/(stride^2)) tensor — exact
+//!                                   because max-pool commutes with relu
+//!   add(conv, r)                 => conv(+add) reading `r` through the tail,
+//!                                   emitted at the add's schedule position
+//!   concat(conv...)              => zero-copy concat: producers write
+//!                                   disjoint channel-prefix sub-ranges of
+//!                                   the concat allocation (`memory`), the
+//!                                   copy bytes vanish
+//!
+//! Every rewrite is gated never-lose: the fused candidate is priced
+//! with the SAME planner + simulator the executor will use, and the
+//! rewrite only happens when fused cycles <= unfused cycles + the glue
+//! cycles it eliminates.  The unfused graph therefore remains the
+//! structural floor — `fuse` can only return something at least as
+//! fast under the model.
+
+use std::collections::HashMap;
+
+use crate::gpusim::{simulate, Epilogue, GpuSpec};
+
+use super::build::{Graph, GraphBuilder};
+use super::exec::{glue_stream_cycles, node_glue_bytes, node_glue_cycles, Planner};
+use super::memory::ARENA_ALIGN;
+use super::node::{NodeId, Op};
+
+/// What one `fuse` call did to a graph.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FusionReport {
+    /// fused sites in the rewritten graph: convs that gained a
+    /// non-`None` epilogue plus concats flipped to zero-copy
+    pub nodes_fused: usize,
+    /// total glue bytes of the original graph minus the rewritten one
+    /// (eliminated relu/add/pool streams + deleted concat copies,
+    /// net of retained-but-shrunk relu streams)
+    pub glue_bytes_eliminated: f64,
+    /// same accounting in simulated glue cycles on the target GPU
+    pub glue_cycles_eliminated: f64,
+}
+
+/// One planned epilogue rewrite, recorded against ORIGINAL node ids.
+#[derive(Clone, Copy, Debug)]
+enum Rewrite {
+    /// conv `conv` gains `ep`; `dead` (relu or pool) is deleted and its
+    /// consumers read the fused conv
+    Tail { conv: NodeId, ep: Epilogue, dead: NodeId },
+    /// conv -> relu -> pool: conv gains the pool epilogue, `pool` is
+    /// deleted, `relu` survives retargeted onto the pooled tensor
+    TailThroughRelu { conv: NodeId, ep: Epilogue, relu: NodeId, pool: NodeId },
+    /// add(conv, residual): the conv is deferred and re-emitted at the
+    /// add's position carrying `AddResidual` + the residual edge
+    Residual { conv: NodeId, add: NodeId, residual: NodeId },
+}
+
+/// Fuse `g` for `spec` under `planner`.  Returns the rewritten graph
+/// (same name, same conv names — weights key on node names) and the
+/// report.  Graphs with nothing to fuse come back structurally equal.
+pub fn fuse(g: &Graph, spec: &GpuSpec, planner: Planner) -> (Graph, FusionReport) {
+    let consumers = g.consumers();
+    let sole = |id: NodeId, c: NodeId| consumers[id] == [c];
+    let conv_of = |id: NodeId| match g.node(id).op {
+        Op::Conv { conv, epilogue: Epilogue::None } => Some(conv),
+        _ => None,
+    };
+    let conv_cycles = |id: NodeId, ep: Epilogue| {
+        let conv = match g.node(id).op {
+            Op::Conv { conv, .. } => conv,
+            _ => unreachable!("candidate {id} is a conv"),
+        };
+        simulate(spec, &planner(&conv, ep, spec)).cycles
+    };
+
+    let mut claimed: Vec<bool> = vec![false; g.len()];
+    let mut rewrites: Vec<Rewrite> = vec![];
+
+    // 1) residual adds first: the add pattern needs the conv's epilogue
+    //    slot, and folding the add eliminates the largest glue stream
+    //    (two full reads + a write), so it outranks a relu claim on the
+    //    same conv
+    for n in g.nodes() {
+        if !matches!(n.op, Op::Add) {
+            continue;
+        }
+        let (u, v) = (n.inputs[0], n.inputs[1]);
+        let pick = [u, v]
+            .into_iter()
+            .find(|&c| conv_of(c).is_some() && sole(c, n.id) && !claimed[c]);
+        let Some(cid) = pick else { continue };
+        let residual = if cid == u { v } else { u };
+        let unfused = conv_cycles(cid, Epilogue::None) + node_glue_cycles(g, spec, n.id);
+        let fused = conv_cycles(cid, Epilogue::AddResidual);
+        if fused <= unfused * (1.0 + 1e-9) {
+            claimed[cid] = true;
+            claimed[n.id] = true;
+            rewrites.push(Rewrite::Residual { conv: cid, add: n.id, residual });
+        }
+    }
+
+    // 2) pool tails: conv -> pool and conv -> relu -> pool
+    for n in g.nodes() {
+        let Op::Pool { k, stride } = n.op else { continue };
+        let ep = Epilogue::MaxPoolWriteback { k, stride };
+        let r = n.inputs[0];
+        if let Some(_c) = conv_of(r) {
+            if sole(r, n.id) && !claimed[r] && !claimed[n.id] {
+                let unfused = conv_cycles(r, Epilogue::None) + node_glue_cycles(g, spec, n.id);
+                let fused = conv_cycles(r, ep);
+                if fused <= unfused * (1.0 + 1e-9) {
+                    claimed[r] = true;
+                    claimed[n.id] = true;
+                    rewrites.push(Rewrite::Tail { conv: r, ep, dead: n.id });
+                }
+            }
+        } else if matches!(g.node(r).op, Op::Relu) && sole(r, n.id) && !claimed[r] {
+            let cid = g.node(r).inputs[0];
+            if conv_of(cid).is_some() && sole(cid, r) && !claimed[cid] && !claimed[n.id] {
+                // relu survives, shrunk to the pooled tensor (exact:
+                // relu(maxpool(x)) == maxpool(relu(x)) elementwise)
+                let pooled_bytes = 2.0 * n.shape.bytes() as f64;
+                let unfused = conv_cycles(cid, Epilogue::None)
+                    + node_glue_cycles(g, spec, r)
+                    + node_glue_cycles(g, spec, n.id);
+                let fused =
+                    conv_cycles(cid, ep) + glue_stream_cycles(spec, pooled_bytes);
+                if fused <= unfused * (1.0 + 1e-9) {
+                    claimed[cid] = true;
+                    claimed[n.id] = true;
+                    rewrites.push(Rewrite::TailThroughRelu {
+                        conv: cid,
+                        ep,
+                        relu: r,
+                        pool: n.id,
+                    });
+                }
+            }
+        }
+    }
+
+    // 3) plain relu tails on whatever convs are left
+    for n in g.nodes() {
+        if !matches!(n.op, Op::Relu) || claimed[n.id] {
+            continue;
+        }
+        let cid = n.inputs[0];
+        if conv_of(cid).is_none() || !sole(cid, n.id) || claimed[cid] {
+            continue;
+        }
+        let unfused = conv_cycles(cid, Epilogue::None) + node_glue_cycles(g, spec, n.id);
+        let fused = conv_cycles(cid, Epilogue::Relu);
+        if fused <= unfused * (1.0 + 1e-9) {
+            claimed[cid] = true;
+            claimed[n.id] = true;
+            rewrites.push(Rewrite::Tail { conv: cid, ep: Epilogue::Relu, dead: n.id });
+        }
+    }
+
+    // materialize the epilogue rewrites
+    let (orig_bytes, orig_cycles) = total_glue(g, spec);
+    let g = rebuild(g, &rewrites);
+
+    // 4) zero-copy concats on the REWRITTEN graph (its concat inputs
+    //    are the fused convs after the relus between them are gone)
+    let g = zero_copy_concats(&g);
+
+    let (fused_bytes, fused_cycles) = total_glue(&g, spec);
+    let report = FusionReport {
+        nodes_fused: g
+            .nodes()
+            .iter()
+            .filter(|n| {
+                !n.op.epilogue().is_none()
+                    || matches!(n.op, Op::Concat { zero_copy: true })
+            })
+            .count(),
+        glue_bytes_eliminated: orig_bytes - fused_bytes,
+        glue_cycles_eliminated: orig_cycles - fused_cycles,
+    };
+    (g, report)
+}
+
+/// Rebuild the graph applying the planned epilogue rewrites.  Walks the
+/// original nodes in id order; deleted nodes map to their replacement's
+/// new id, deferred residual convs are emitted at their add's position.
+fn rebuild(g: &Graph, rewrites: &[Rewrite]) -> Graph {
+    let mut epilogue: HashMap<NodeId, Epilogue> = HashMap::new();
+    let mut dead: HashMap<NodeId, NodeId> = HashMap::new(); // old id -> stand-in old id
+    let mut deferred: HashMap<NodeId, (NodeId, NodeId)> = HashMap::new(); // add -> (conv, residual)
+    for r in rewrites {
+        match *r {
+            Rewrite::Tail { conv, ep, dead: d } => {
+                epilogue.insert(conv, ep);
+                dead.insert(d, conv);
+            }
+            Rewrite::TailThroughRelu { conv, ep, relu, pool } => {
+                epilogue.insert(conv, ep);
+                dead.insert(pool, relu); // pool consumers read the retained relu
+            }
+            Rewrite::Residual { conv, add, residual } => {
+                epilogue.insert(conv, Epilogue::AddResidual);
+                deferred.insert(add, (conv, residual));
+            }
+        }
+    }
+    let deferred_convs: HashMap<NodeId, NodeId> =
+        deferred.iter().map(|(&add, &(conv, _))| (conv, add)).collect();
+
+    let mut b = GraphBuilder::new(&g.name);
+    let mut remap: HashMap<NodeId, NodeId> = HashMap::new();
+    let resolve = |remap: &HashMap<NodeId, NodeId>, dead: &HashMap<NodeId, NodeId>,
+                   mut id: NodeId| {
+        while let Some(&d) = dead.get(&id) {
+            id = d;
+        }
+        remap[&id]
+    };
+    for n in g.nodes() {
+        if dead.contains_key(&n.id) {
+            continue; // resolves through its stand-in
+        }
+        if deferred_convs.contains_key(&n.id) {
+            continue; // emitted at its add's position
+        }
+        let new_id = if let Some(&(conv, residual)) = deferred.get(&n.id) {
+            let cn = g.node(conv);
+            let Op::Conv { conv: op, .. } = cn.op else { unreachable!() };
+            let ins = [
+                resolve(&remap, &dead, cn.inputs[0]),
+                resolve(&remap, &dead, residual),
+            ];
+            let id = b
+                .add(&cn.name, Op::Conv { conv: op, epilogue: Epilogue::AddResidual }, &ins)
+                .expect("fused residual conv");
+            remap.insert(conv, id);
+            id
+        } else {
+            let op = match (&n.op, epilogue.get(&n.id)) {
+                (Op::Conv { conv, .. }, Some(&ep)) => Op::Conv { conv: *conv, epilogue: ep },
+                (op, _) => op.clone(),
+            };
+            let ins: Vec<NodeId> =
+                n.inputs.iter().map(|&i| resolve(&remap, &dead, i)).collect();
+            b.add(&n.name, op, &ins).expect("fused node")
+        };
+        remap.insert(n.id, new_id);
+    }
+    b.finish().expect("fused graph")
+}
+
+/// Flip every eligible concat to zero-copy: all inputs are convs whose
+/// sole consumer is the concat, and every channel-prefix byte offset is
+/// an `ARENA_ALIGN` multiple (so producers can be placed as real
+/// sub-allocations of the concat tensor).
+fn zero_copy_concats(g: &Graph) -> Graph {
+    let consumers = g.consumers();
+    let eligible = |id: NodeId| {
+        let n = g.node(id);
+        if !matches!(n.op, Op::Concat { zero_copy: false }) {
+            return false;
+        }
+        let mut prefix = 0usize;
+        for &i in &n.inputs {
+            if !g.node(i).op.is_conv() || consumers[i] != [id] || prefix % ARENA_ALIGN != 0 {
+                return false;
+            }
+            prefix += g.node(i).shape.bytes();
+        }
+        true
+    };
+    if !g.nodes().iter().any(|n| eligible(n.id)) {
+        return g.clone();
+    }
+    let mut b = GraphBuilder::new(&g.name);
+    for n in g.nodes() {
+        let op = if eligible(n.id) { Op::Concat { zero_copy: true } } else { n.op.clone() };
+        b.add(&n.name, op, &n.inputs).expect("zero-copy rewrite");
+    }
+    b.finish().expect("zero-copy graph")
+}
+
+/// Total glue bytes / cycles of a graph (every node) — the report is
+/// re-measured on both graphs, so it's exactly what the executor will
+/// charge, not a prediction.
+fn total_glue(g: &Graph, spec: &GpuSpec) -> (f64, f64) {
+    let mut bytes = 0.0;
+    let mut cycles = 0.0;
+    for n in g.nodes() {
+        bytes += node_glue_bytes(g, n.id);
+        cycles += node_glue_cycles(g, spec, n.id);
+    }
+    (bytes, cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::build::{
+        alexnet_graph, inception3a_graph, mobilenet_v1_graph, resnet18_graph, vgg16_graph,
+        GraphBuilder,
+    };
+    use super::super::exec::execute;
+    use super::super::node::Shape;
+    use super::*;
+    use crate::conv::{ConvOp, ConvProblem};
+    use crate::gpusim::gtx_1080ti;
+    use crate::plans::paper_op_plan_for;
+
+    fn run(g: &Graph) -> (Graph, FusionReport) {
+        fuse(g, &gtx_1080ti(), paper_op_plan_for)
+    }
+
+    fn ep_of(g: &Graph, name: &str) -> Epilogue {
+        g.nodes().iter().find(|n| n.name == name).unwrap_or_else(|| panic!("{name}?")).op.epilogue()
+    }
+
+    #[test]
+    fn alexnet_fuses_relus_and_both_pools() {
+        let (f, r) = run(&alexnet_graph());
+        assert_eq!(f.len(), 7, "{:?}", f.nodes().iter().map(|n| &n.name).collect::<Vec<_>>());
+        assert_eq!(r.nodes_fused, 4);
+        assert_eq!(ep_of(&f, "conv2"), Epilogue::MaxPoolWriteback { k: 3, stride: 2 });
+        assert_eq!(ep_of(&f, "conv3"), Epilogue::Relu);
+        assert_eq!(ep_of(&f, "conv4"), Epilogue::Relu);
+        assert_eq!(ep_of(&f, "conv5"), Epilogue::MaxPoolWriteback { k: 3, stride: 2 });
+        // the relus between conv and pool survive, retargeted onto the
+        // pooled (decimated) tensor
+        let relu2 = f.nodes().iter().find(|n| n.name == "relu2").unwrap();
+        assert!(matches!(relu2.op, Op::Relu));
+        assert_eq!(relu2.shape, Shape::new(256, 13, 13));
+        assert!(r.glue_bytes_eliminated > 0.0 && r.glue_cycles_eliminated > 0.0);
+    }
+
+    #[test]
+    fn vgg16_fuses_every_conv() {
+        let (f, r) = run(&vgg16_graph());
+        assert_eq!(f.len(), 19); // input + 13 fused convs + 5 retained relus
+        assert_eq!(r.nodes_fused, 13);
+        assert!(f.nodes().iter().filter(|n| n.op.is_conv()).all(|n| !n.op.epilogue().is_none()));
+        assert_eq!(
+            f.nodes()
+                .iter()
+                .filter(|n| n.op.epilogue() == Epilogue::MaxPoolWriteback { k: 2, stride: 2 })
+                .count(),
+            5
+        );
+        assert_eq!(f.nodes().iter().filter(|n| matches!(n.op, Op::Relu)).count(), 5);
+        assert!(!f.nodes().iter().any(|n| matches!(n.op, Op::Pool { .. })));
+    }
+
+    #[test]
+    fn resnet18_folds_every_residual_add_into_its_conv() {
+        let (f, r) = run(&resnet18_graph());
+        assert_eq!(f.len(), 28); // 44 - 8 relu1 - 8 add
+        assert_eq!(r.nodes_fused, 16);
+        assert!(!f.nodes().iter().any(|n| matches!(n.op, Op::Add)));
+        for s in 1..=4usize {
+            for blk in 1..=2usize {
+                assert_eq!(ep_of(&f, &format!("s{s}b{blk}c1")), Epilogue::Relu);
+                let c2 = f
+                    .nodes()
+                    .iter()
+                    .find(|n| n.name == format!("s{s}b{blk}c2"))
+                    .unwrap();
+                assert_eq!(c2.op.epilogue(), Epilogue::AddResidual);
+                assert_eq!(c2.inputs.len(), 2, "residual edge");
+                // the post-add relu stays glue (its producer is fused)
+                assert!(f.nodes().iter().any(|n| n.name == format!("s{s}b{blk}relu2")
+                    && matches!(n.op, Op::Relu)));
+            }
+        }
+        // projections feed the adds' tails; they stay unfused
+        for s in 2..=4usize {
+            assert_eq!(ep_of(&f, &format!("s{s}proj")), Epilogue::None);
+        }
+    }
+
+    #[test]
+    fn inception_concat_goes_zero_copy() {
+        let (f, r) = run(&inception3a_graph());
+        assert_eq!(f.len(), 10);
+        assert_eq!(r.nodes_fused, 7); // 6 conv+relu + the zero-copy concat
+        for c in ["b1.1x1", "b2.reduce", "b2.3x3", "b3.reduce", "b3.5x5", "b4.proj"] {
+            assert_eq!(ep_of(&f, c), Epilogue::Relu, "{c}");
+        }
+        let cat = f.nodes().iter().find(|n| n.name == "concat").unwrap();
+        assert_eq!(cat.op, Op::Concat { zero_copy: true });
+        // the pool branch's pool + pad framing survives (its input is
+        // the network input, nothing to fuse into)
+        assert!(f.nodes().iter().any(|n| matches!(n.op, Op::Pool { .. })));
+        assert!(f.nodes().iter().any(|n| matches!(n.op, Op::Pad { .. })));
+        // zero-copy concat moves no bytes
+        assert_eq!(node_glue_bytes(&f, cat.id), 0.0);
+    }
+
+    #[test]
+    fn mobilenet_fuses_the_global_pool_into_the_last_pointwise() {
+        let (f, r) = run(&mobilenet_v1_graph());
+        assert_eq!(f.len(), 29); // 56 - 26 relus - avgpool
+        assert_eq!(r.nodes_fused, 27);
+        assert_eq!(ep_of(&f, "b13.pw"), Epilogue::MaxPoolWriteback { k: 7, stride: 1 });
+        let tail = f.nodes().iter().find(|n| n.name == "b13.pw.relu").unwrap();
+        assert_eq!(tail.shape, Shape::new(1024, 1, 1));
+    }
+
+    #[test]
+    fn fusion_never_loses_end_to_end_and_is_identity_without_candidates() {
+        let spec = gtx_1080ti();
+        for g in
+            [alexnet_graph(), vgg16_graph(), resnet18_graph(), inception3a_graph()]
+        {
+            let (f, _) = run(&g);
+            assert!(f.validate().is_ok(), "{}", g.name);
+            let before = execute(&g, &spec, paper_op_plan_for).total_seconds;
+            let after = execute(&f, &spec, paper_op_plan_for).total_seconds;
+            assert!(after <= before * (1.0 + 1e-9), "{}: {after} > {before}", g.name);
+        }
+        // a conv chain with no glue: nothing to rewrite
+        let mut b = GraphBuilder::new("plain");
+        let x = b.input("in", Shape::new(8, 12, 12));
+        let c = b.conv_op("c", x, ConvOp::same(ConvProblem::multi(8, 12, 8, 3))).unwrap();
+        b.conv_op("d", c, ConvOp::same(ConvProblem::multi(8, 12, 8, 3))).unwrap();
+        let g = b.finish().unwrap();
+        let (f, r) = run(&g);
+        assert_eq!(f.len(), g.len());
+        assert_eq!(r, FusionReport::default());
+    }
+
+    #[test]
+    fn shared_consumers_block_fusion_and_zero_copy() {
+        // conv feeds BOTH a relu and a second conv: fusing the relu
+        // would orphan the other consumer, so the conv stays unfused
+        let mut b = GraphBuilder::new("shared");
+        let x = b.input("in", Shape::new(8, 12, 12));
+        let c = b.conv_op("c", x, ConvOp::same(ConvProblem::multi(8, 12, 8, 3))).unwrap();
+        let r = b.relu("r", c).unwrap();
+        let d = b.conv_op("d", c, ConvOp::same(ConvProblem::multi(8, 12, 8, 3))).unwrap();
+        b.concat("cat", &[r, d]).unwrap();
+        let g = b.finish().unwrap();
+        let (f, _) = run(&g);
+        assert_eq!(ep_of(&f, "c"), Epilogue::None);
+        assert!(f.nodes().iter().any(|n| matches!(n.op, Op::Relu)));
+        // d fused nothing either (its consumer is the concat) but the
+        // concat can't go zero-copy: `r` is not a conv
+        let cat = f.nodes().iter().find(|n| n.name == "cat").unwrap();
+        assert_eq!(cat.op, Op::Concat { zero_copy: false });
+    }
+}

@@ -9,10 +9,12 @@
 //! offset plan achieving it (best-fit-by-size, the TFLite/TVM shared
 //! arena approach), so the reports can state bytes saved exactly.
 
+use std::collections::HashMap;
+
 use crate::fleet::pool::{DevicePool, PoolError};
 
 use super::build::Graph;
-use super::node::NodeId;
+use super::node::{NodeId, Op};
 
 /// Device allocation granularity: every tensor is rounded up to this
 /// before planning, so offsets are always usable as real sub-allocations.
@@ -41,10 +43,37 @@ impl TensorLife {
     }
 }
 
+/// Producers that write straight into a zero-copy concat's output:
+/// `producer id -> (concat id, exact byte offset of the producer's
+/// channel prefix inside the concat tensor)`.  A producer only
+/// qualifies when the concat is its SOLE consumer — a tensor read by
+/// anyone else needs its own storage, so it keeps an owned placement
+/// and the planner stays conservative.
+pub fn zero_copy_aliases(g: &Graph) -> HashMap<NodeId, (NodeId, usize)> {
+    let consumers = g.consumers();
+    let mut out = HashMap::new();
+    for n in g.nodes() {
+        if !matches!(n.op, Op::Concat { zero_copy: true }) {
+            continue;
+        }
+        let mut prefix = 0usize;
+        for &i in &n.inputs {
+            let bytes = g.node(i).shape.bytes();
+            if consumers[i] == [n.id] {
+                out.insert(i, (n.id, prefix));
+            }
+            prefix += bytes;
+        }
+    }
+    out
+}
+
 /// Tensor lifetimes for `g` executed in `order` (`order[i]` runs at step
 /// i; must be a permutation of the nodes in topological order).  Every
 /// node produces one tensor; graph outputs stay live through the final
-/// step.
+/// step.  A zero-copy concat's tensor is live from its EARLIEST aliased
+/// producer's step — the producers write into it, so the allocation
+/// must exist before the concat node itself is scheduled.
 pub fn liveness(g: &Graph, order: &[NodeId]) -> Vec<TensorLife> {
     assert_eq!(order.len(), g.len(), "order must schedule every node exactly once");
     let mut pos = vec![usize::MAX; g.len()];
@@ -53,10 +82,18 @@ pub fn liveness(g: &Graph, order: &[NodeId]) -> Vec<TensorLife> {
         pos[id] = i;
     }
     let consumers = g.consumers();
+    let aliases = zero_copy_aliases(g);
     order
         .iter()
         .map(|&id| {
-            let def = pos[id];
+            let mut def = pos[id];
+            if matches!(g.node(id).op, Op::Concat { zero_copy: true }) {
+                for (&p, &(cid, _)) in &aliases {
+                    if cid == id {
+                        def = def.min(pos[p]);
+                    }
+                }
+            }
             let last = consumers[id]
                 .iter()
                 .map(|&c| pos[c])
@@ -79,6 +116,11 @@ pub struct Placement {
     pub life: TensorLife,
     /// byte offset within the arena
     pub offset: usize,
+    /// `Some(concat id)` when this tensor is a zero-copy sub-range of
+    /// a concat output: `offset` points inside the concat's allocation
+    /// (at the producer's channel prefix) and the bytes are owned by
+    /// the concat placement, not this one
+    pub alias_of: Option<NodeId>,
 }
 
 /// Offset plan for a whole schedule, plus the headline numbers.
@@ -108,13 +150,15 @@ impl ArenaPlan {
 
     /// Max bytes simultaneously live at any step — the information-
     /// theoretic floor no allocator can beat.  peak_bytes >= this; the
-    /// gap is fragmentation.
+    /// gap is fragmentation.  Alias placements own no bytes (their
+    /// storage is the concat's), so they are excluded.
     pub fn live_peak_bytes(&self) -> usize {
         let last = self.placements.iter().map(|p| p.life.last_use_step).max().unwrap_or(0);
         (0..=last)
             .map(|step| {
                 self.placements
                     .iter()
+                    .filter(|p| p.alias_of.is_none())
                     .filter(|p| p.life.def_step <= step && step <= p.life.last_use_step)
                     .map(|p| p.life.bytes)
                     .sum()
@@ -130,11 +174,19 @@ impl ArenaPlan {
 /// lifetime overlaps.  Never exceeds the naive sum (placing at the end
 /// of everything placed so far is always available), and typically sits
 /// near `live_peak_bytes`.
+///
+/// Producers of a zero-copy concat are not placed independently: each
+/// becomes an alias placement at `concat offset + channel prefix`
+/// inside the concat's allocation (which is live from the earliest
+/// producer), so the concat's copy bytes AND the producers' separate
+/// tensors both vanish from the plan.
 pub fn plan_arena(g: &Graph, order: &[NodeId]) -> ArenaPlan {
     let lives = liveness(g, order);
-    let naive: usize = lives.iter().map(|l| l.bytes).sum();
+    let aliases = zero_copy_aliases(g);
+    let owned = |l: &TensorLife| !aliases.contains_key(&l.id);
+    let naive: usize = lives.iter().filter(|l| owned(l)).map(|l| l.bytes).sum();
 
-    let mut by_size: Vec<usize> = (0..lives.len()).collect();
+    let mut by_size: Vec<usize> = (0..lives.len()).filter(|&i| owned(&lives[i])).collect();
     by_size.sort_by(|&a, &b| {
         lives[b].bytes.cmp(&lives[a].bytes).then(lives[a].id.cmp(&lives[b].id))
     });
@@ -157,11 +209,32 @@ pub fn plan_arena(g: &Graph, order: &[NodeId]) -> ArenaPlan {
             }
             offset = offset.max(hi);
         }
-        placements.push(Placement { life, offset });
+        placements.push(Placement { life, offset, alias_of: None });
+    }
+
+    let peak = placements.iter().map(|p| p.offset + p.life.bytes).max().unwrap_or(0);
+
+    // alias placements: inside the (already placed) concat allocation
+    for l in lives.iter().filter(|l| !owned(l)) {
+        let (cid, prefix) = aliases[&l.id];
+        debug_assert_eq!(
+            prefix % ARENA_ALIGN,
+            0,
+            "zero-copy sub-range offsets must be ARENA_ALIGN multiples"
+        );
+        let concat_off = placements
+            .iter()
+            .find(|p| p.life.id == cid)
+            .expect("concat placed before its aliases")
+            .offset;
+        placements.push(Placement {
+            life: *l,
+            offset: concat_off + prefix,
+            alias_of: Some(cid),
+        });
     }
 
     placements.sort_by_key(|p| p.life.def_step);
-    let peak = placements.iter().map(|p| p.offset + p.life.bytes).max().unwrap_or(0);
     ArenaPlan { placements, peak_bytes: peak, naive_bytes: naive }
 }
 
@@ -176,7 +249,9 @@ pub struct PooledPlan {
     pub peak_bytes: usize,
     /// sum of all tensor bytes (the naive keep-everything footprint)
     pub naive_bytes: usize,
-    /// pool allocations this execution made (= graph nodes)
+    /// pool allocations this execution made (= owned tensors: every
+    /// graph node except zero-copy concat producers, which write into
+    /// the concat's allocation)
     pub allocs: u64,
     /// how many of them reused a parked slab instead of carving
     pub reuse_hits: u64,
@@ -199,23 +274,42 @@ pub fn plan_pooled(
 ) -> Result<PooledPlan, PoolError> {
     assert!(batch >= 1, "batch must be >= 1");
     let lives = liveness(g, order);
-    let naive: usize = lives.iter().map(|l| l.bytes * batch).sum();
+    let aliases = zero_copy_aliases(g);
+    let owned = |id: NodeId| !aliases.contains_key(&id);
+    let naive: usize =
+        lives.iter().filter(|l| owned(l.id)).map(|l| l.bytes * batch).sum();
     let (reuse0, evict0) = (pool.stats.reuse_hits, pool.stats.evictions);
+    // which owned tensors come alive at each step — a zero-copy
+    // concat's allocation materializes at its FIRST producer's step
+    // (its widened def_step), not at its own; aliased producers
+    // allocate nothing at all
+    let mut alloc_at: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (i, l) in lives.iter().enumerate() {
+        if owned(l.id) {
+            alloc_at.entry(l.def_step).or_default().push(i);
+        }
+    }
     let mut ids: Vec<Option<u64>> = vec![None; lives.len()];
     let (mut live_now, mut peak) = (0usize, 0usize);
+    let mut allocs = 0u64;
     for step in 0..lives.len() {
-        let bytes = lives[step].bytes * batch;
-        match pool.alloc(bytes) {
-            Ok(id) => ids[step] = Some(id),
-            Err(e) => {
-                for id in ids.iter_mut().filter_map(Option::take) {
-                    pool.free(id).expect("own allocation");
+        for &i in alloc_at.get(&step).map(Vec::as_slice).unwrap_or(&[]) {
+            let bytes = lives[i].bytes * batch;
+            match pool.alloc(bytes) {
+                Ok(id) => {
+                    ids[i] = Some(id);
+                    allocs += 1;
                 }
-                return Err(e);
+                Err(e) => {
+                    for id in ids.iter_mut().filter_map(Option::take) {
+                        pool.free(id).expect("own allocation");
+                    }
+                    return Err(e);
+                }
             }
+            live_now += bytes;
+            peak = peak.max(live_now);
         }
-        live_now += bytes;
-        peak = peak.max(live_now);
         // inputs whose last read is this step die now (they overlap the
         // step itself: read while the output is written, then released)
         for (j, l) in lives.iter().enumerate().take(step + 1) {
@@ -231,7 +325,7 @@ pub fn plan_pooled(
     Ok(PooledPlan {
         peak_bytes: peak,
         naive_bytes: naive,
-        allocs: lives.len() as u64,
+        allocs,
         reuse_hits: pool.stats.reuse_hits - reuse0,
         evictions: pool.stats.evictions - evict0,
     })
@@ -376,6 +470,82 @@ mod tests {
         assert_eq!(pool.in_use_requested_bytes(), 0);
         assert_eq!(pool.stats.failed_allocs, before.failed_allocs + 1);
         assert!(pool.slab_bytes() <= pool.capacity());
+    }
+
+    #[test]
+    fn zero_copy_concat_shares_the_concat_allocation() {
+        // two convs feeding a zero-copy concat: each producer is an
+        // alias placement inside the concat tensor at its channel
+        // prefix, and the whole plan shrinks vs the copying concat
+        let build = |zero_copy: bool| {
+            let mut b = GraphBuilder::new("cat");
+            let x = b.input("in", Shape::new(8, 8, 8));
+            let a = b.conv_same("a", x, ConvProblem::multi(8, 8, 8, 3)).unwrap();
+            let c = b.conv_same("c", x, ConvProblem::multi(8, 8, 8, 3)).unwrap();
+            b.add("cat", Op::Concat { zero_copy }, &[a, c]).unwrap();
+            b.finish().unwrap()
+        };
+        let fused = build(true);
+        let plain = build(false);
+        let order = topo_order(&fused);
+
+        let aliases = zero_copy_aliases(&fused);
+        assert_eq!(aliases.len(), 2);
+        assert_eq!(aliases[&1], (3, 0));
+        assert_eq!(aliases[&2], (3, 8 * 8 * 8 * 4));
+        assert!(zero_copy_aliases(&plain).is_empty());
+
+        let plan = plan_arena(&fused, &order);
+        let cat = plan.placements.iter().find(|p| p.life.id == 3).unwrap();
+        assert!(cat.alias_of.is_none());
+        // the concat is live from its first producer's step
+        assert_eq!(cat.life.def_step, 1);
+        for (&pid, &(cid, prefix)) in &aliases {
+            let alias = plan.placements.iter().find(|p| p.life.id == pid).unwrap();
+            assert_eq!(alias.alias_of, Some(cid));
+            assert_eq!(alias.offset, cat.offset + prefix);
+            assert_eq!(alias.offset % ARENA_ALIGN, 0);
+            // the sub-range stays inside the concat allocation
+            assert!(alias.offset + fused.node(pid).shape.bytes() <= cat.offset + cat.life.bytes);
+        }
+        // the two sub-ranges are disjoint
+        let mut subs: Vec<(usize, usize)> = aliases
+            .iter()
+            .map(|(&pid, &(_, prefix))| (prefix, prefix + fused.node(pid).shape.bytes()))
+            .collect();
+        subs.sort_unstable();
+        assert!(subs[0].1 <= subs[1].0, "sub-ranges overlap: {subs:?}");
+
+        // producers own no bytes: the fused plan is strictly smaller
+        let plain_plan = plan_arena(&plain, &topo_order(&plain));
+        assert!(plan.peak_bytes < plain_plan.peak_bytes);
+        assert!(plan.naive_bytes < plain_plan.naive_bytes);
+        assert_eq!(plan.peak_bytes, plan.live_peak_bytes());
+
+        // the pooled walk agrees with the floor and skips alias allocs
+        let mut pool = DevicePool::new(1 << 30);
+        let pooled = plan_pooled(&fused, &order, 1, &mut pool).unwrap();
+        assert_eq!(pooled.peak_bytes, plan.live_peak_bytes());
+        assert_eq!(pooled.allocs, (fused.len() - 2) as u64);
+        assert_eq!(pooled.naive_bytes, plan.naive_bytes);
+        assert_eq!(pool.live_allocs(), 0);
+    }
+
+    #[test]
+    fn shared_producers_are_not_aliased_into_a_zero_copy_concat() {
+        // 'a' is read by a second consumer after the concat, so it must
+        // keep its own storage even though the concat claims zero-copy
+        let mut b = GraphBuilder::new("shared");
+        let x = b.input("in", Shape::new(8, 8, 8));
+        let a = b.conv_same("a", x, ConvProblem::multi(8, 8, 8, 3)).unwrap();
+        let c = b.conv_same("c", x, ConvProblem::multi(8, 8, 8, 3)).unwrap();
+        b.add("cat", Op::Concat { zero_copy: true }, &[a, c]).unwrap();
+        b.relu("a.again", a).unwrap();
+        let g = b.finish().unwrap();
+        let aliases = zero_copy_aliases(&g);
+        assert!(!aliases.contains_key(&a), "shared producer must own storage");
+        // 'c' still aliases at its prefix past a's channels
+        assert_eq!(aliases[&c], (3, 8 * 8 * 8 * 4));
     }
 
     #[test]

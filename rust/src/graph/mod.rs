@@ -7,8 +7,8 @@
 //! `build`, memory-planned by `memory` (liveness + greedy arena
 //! offsets, the Li-et-al. inter-layer optimization), and executed by
 //! `exec` (topological schedule; conv nodes resolve through an
-//! injected `Planner` — `backend::dispatch_op_plan` for per-layer
-//! cross-backend algorithm choice,
+//! injected `Planner` — `backend::dispatch_fused_op_plan` for
+//! per-layer cross-backend algorithm choice,
 //! `plans::op_plan_for`/`paper_op_plan_for` for the paper-kernel-only
 //! paths — and run under `gpusim`).  Conv nodes carry full `ConvOp`s:
 //! stride-2 downsampling, op-level 'same' padding and depthwise groups
@@ -19,21 +19,33 @@
 //! end-to-end latency + peak arena memory per model; the coordinator
 //! registers models with its `Router` so every layer is pre-dispatched
 //! at startup and `Payload::Model` requests serve the cached decisions.
+//!
+//! `fuse` rewrites a built graph before execution: relu / residual-add /
+//! max-pool tails fold into the producing conv's writeback epilogue and
+//! eligible concats become zero-copy placement decisions (`memory`
+//! aliases their producers into the concat allocation).  `reference` is
+//! the CPU numeric executor the difftests use to prove the rewrite is
+//! bit-identical.
 
 pub mod build;
 pub mod exec;
+pub mod fuse;
 pub mod memory;
 pub mod node;
+pub mod reference;
 
 pub use build::{
     alexnet_graph, inception3a_graph, mobilenet_v1_graph, model_graph, resnet18_graph,
     vgg16_graph, Graph, GraphBuilder, MODEL_NAMES,
 };
 pub use exec::{
-    execute, execute_batched, execute_batched_traced, execute_pooled, node_glue_bytes, topo_order,
-    ModelReport, NodeReport, Planner,
+    execute, execute_batched, execute_batched_traced, execute_pooled, glue_stream_cycles,
+    node_glue_bytes, node_glue_cycles, topo_order, ModelReport, NodeReport, Planner,
 };
+pub use fuse::{fuse, FusionReport};
 pub use memory::{
-    liveness, plan_arena, plan_pooled, ArenaPlan, Placement, PooledPlan, TensorLife, ARENA_ALIGN,
+    liveness, plan_arena, plan_pooled, zero_copy_aliases, ArenaPlan, Placement, PooledPlan,
+    TensorLife, ARENA_ALIGN,
 };
 pub use node::{Node, NodeId, Op, Shape};
+pub use reference::reference_output;

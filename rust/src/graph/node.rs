@@ -1,12 +1,15 @@
 //! Graph node types: activation shapes and the operator set the
 //! evaluation models need — conv (carrying a full `ConvOp`: stride,
 //! padding and groups are op-level, so 'same' models pad inside the
-//! conv and downsampling models stride natively), pad (pool framing
-//! only — conv inputs no longer need graph-side pads), pool,
-//! elementwise add (ResNet skip connections) and channel concat
-//! (Inception cells).
+//! conv and downsampling models stride natively, plus a fused
+//! `Epilogue` the writeback tail applies in-register), pad (pool
+//! framing only — conv inputs no longer need graph-side pads), pool,
+//! relu, elementwise add (ResNet skip connections) and channel concat
+//! (Inception cells — optionally zero-copy: producers write disjoint
+//! sub-ranges of the concat output directly).
 
 use crate::conv::{ConvOp, BYTES_F32};
+use crate::gpusim::Epilogue;
 
 /// Shape of one activation tensor: `c` channels of `h` x `w`, f32.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -46,18 +49,29 @@ pub enum Op {
     Input { shape: Shape },
     /// a convolution op (stride / padding / groups first-class) —
     /// resolved to a `KernelPlan` through the injected `Planner`
-    /// (backend dispatch or the paper plans) at execution time
-    Conv { conv: ConvOp },
+    /// (backend dispatch or the paper plans) at execution time.  A
+    /// non-`None` epilogue is applied by the kernel's writeback tail:
+    /// `Relu` clamps in-register, `AddResidual` streams a second input
+    /// (the residual) through the tail, `MaxPoolWriteback` writes the
+    /// decimated pooled output — the intermediate tensor never touches
+    /// DRAM, so the node that used to consume it is gone from the graph
+    Conv { conv: ConvOp, epilogue: Epilogue },
     /// zero-pad height/width up to `h` x `w` (channels unchanged) —
     /// retained for pool framing (e.g. inception's 'same' pool); conv
     /// padding is op-level now
     Pad { h: usize, w: usize },
     /// max pool with a `k` x `k` window and the given stride
     Pool { k: usize, stride: usize },
+    /// elementwise ReLU (the models' inter-layer activation — the
+    /// fusion pass folds it into the producing conv's epilogue)
+    Relu,
     /// elementwise residual add of two same-shape tensors
     Add,
-    /// channel concatenation of same-map tensors
-    Concat,
+    /// channel concatenation of same-map tensors.  `zero_copy` means
+    /// the arena planner places every producer inside the concat
+    /// output's allocation (channel-prefix sub-ranges), so execution
+    /// moves zero bytes for this node
+    Concat { zero_copy: bool },
 }
 
 impl Op {
@@ -67,13 +81,22 @@ impl Op {
             Op::Conv { .. } => "conv",
             Op::Pad { .. } => "pad",
             Op::Pool { .. } => "pool",
+            Op::Relu => "relu",
             Op::Add => "add",
-            Op::Concat => "concat",
+            Op::Concat { .. } => "concat",
         }
     }
 
     pub fn is_conv(&self) -> bool {
         matches!(self, Op::Conv { .. })
+    }
+
+    /// The fused epilogue of a conv node (`None` for everything else).
+    pub fn epilogue(&self) -> Epilogue {
+        match self {
+            Op::Conv { epilogue, .. } => *epilogue,
+            _ => Epilogue::None,
+        }
     }
 }
 
@@ -108,12 +131,27 @@ mod tests {
         use crate::conv::ConvProblem;
         let c = ConvOp::dense(ConvProblem::single(8, 1, 1));
         assert_eq!(Op::Input { shape: Shape::new(1, 1, 1) }.kind(), "input");
-        assert_eq!(Op::Conv { conv: c }.kind(), "conv");
+        assert_eq!(Op::Conv { conv: c, epilogue: Epilogue::None }.kind(), "conv");
         assert_eq!(Op::Pad { h: 4, w: 4 }.kind(), "pad");
         assert_eq!(Op::Pool { k: 2, stride: 2 }.kind(), "pool");
+        assert_eq!(Op::Relu.kind(), "relu");
         assert_eq!(Op::Add.kind(), "add");
-        assert_eq!(Op::Concat.kind(), "concat");
-        assert!(Op::Conv { conv: c }.is_conv());
+        assert_eq!(Op::Concat { zero_copy: false }.kind(), "concat");
+        assert_eq!(Op::Concat { zero_copy: true }.kind(), "concat");
+        assert!(Op::Conv { conv: c, epilogue: Epilogue::None }.is_conv());
         assert!(!Op::Add.is_conv());
+    }
+
+    #[test]
+    fn conv_epilogue_accessor() {
+        use crate::conv::ConvProblem;
+        let c = ConvOp::dense(ConvProblem::multi(8, 14, 8, 3));
+        assert_eq!(Op::Conv { conv: c, epilogue: Epilogue::Relu }.epilogue(), Epilogue::Relu);
+        assert_eq!(Op::Relu.epilogue(), Epilogue::None);
+        assert_eq!(
+            Op::Conv { conv: c, epilogue: Epilogue::MaxPoolWriteback { k: 2, stride: 2 } }
+                .epilogue(),
+            Epilogue::MaxPoolWriteback { k: 2, stride: 2 }
+        );
     }
 }

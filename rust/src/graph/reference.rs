@@ -1,0 +1,272 @@
+//! CPU numeric reference executor.
+//!
+//! Runs a graph's actual arithmetic on deterministic pseudo-random
+//! inputs and weights so difftests can prove the fusion rewrite is
+//! BIT-identical, not approximately equal.  Everything is keyed on node
+//! *names*: the fused conv keeps its original name, so it draws the
+//! same weights as its unfused ancestor, and the same `relu` / max-pool
+//! fold functions are used for standalone glue nodes and for fused
+//! epilogues — equality holds by construction wherever the rewrite is
+//! mathematically exact (relu commutes with max-pool under a strict `>`
+//! fold; float add is commutative).
+//!
+//! Layout is CHW, f32.  This is a correctness oracle, not a fast path:
+//! difftests run it on small graphs and on model-shaped toys, never on
+//! full 224x224 stacks.
+
+use crate::conv::ConvOp;
+use crate::gpusim::Epilogue;
+
+use super::build::Graph;
+use super::node::{Node, Op, Shape};
+
+/// ReLU exactly as the kernels' writeback tail applies it: strict
+/// compare, canonical +0.0 for everything non-positive.
+#[inline]
+pub fn relu(x: f32) -> f32 {
+    if x > 0.0 {
+        x
+    } else {
+        0.0
+    }
+}
+
+/// Max-pool one CHW tensor with a `k` x `k` window and `stride`,
+/// folding with a strict `>` (first element wins ties) — the same fold
+/// the fused `MaxPoolWriteback` tail uses.
+pub fn maxpool(data: &[f32], s: Shape, k: usize, stride: usize) -> Vec<f32> {
+    let (py, px) = ((s.h - k) / stride + 1, (s.w - k) / stride + 1);
+    let mut out = Vec::with_capacity(s.c * py * px);
+    for c in 0..s.c {
+        let plane = &data[c * s.h * s.w..(c + 1) * s.h * s.w];
+        for y in 0..py {
+            for x in 0..px {
+                let mut m = plane[y * stride * s.w + x * stride];
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let v = plane[(y * stride + ky) * s.w + (x * stride + kx)];
+                        if v > m {
+                            m = v;
+                        }
+                    }
+                }
+                out.push(m);
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic values in [-1, 1) from a name + salt (FNV-1a seed,
+/// xorshift64* stream).  Node names are stable across the fusion
+/// rewrite, so fused and unfused graphs draw identical tensors.
+pub fn seeded(name: &str, salt: &str, len: usize) -> Vec<f32> {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes().chain([0x1f]).chain(salt.bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut x = h | 1;
+    (0..len)
+        .map(|_| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let bits = (x.wrapping_mul(0x2545_f491_4f6c_dd1d)) >> 40;
+            (bits as f64 / (1u64 << 24) as f64 * 2.0 - 1.0) as f32
+        })
+        .collect()
+}
+
+/// Direct convolution of one CHW tensor under `op` (stride, symmetric
+/// zero padding, groups), with weights drawn from `name`.  Accumulates
+/// in f32 in a fixed loop order, so every executor that calls this gets
+/// the same bits.
+fn conv(input: &[f32], in_shape: Shape, op: &ConvOp, name: &str) -> Vec<f32> {
+    let (c, m, k) = (op.core.c, op.core.m, op.core.k);
+    let (oy, ox) = (op.oy(), op.ox());
+    let cg = c / op.groups; // channels read per filter
+    let w = seeded(name, "w", m * cg * k * k);
+    let mut out = Vec::with_capacity(m * oy * ox);
+    for f in 0..m {
+        let g = f / (m / op.groups);
+        let wf = &w[f * cg * k * k..(f + 1) * cg * k * k];
+        for y in 0..oy {
+            for x in 0..ox {
+                let mut acc = 0.0f32;
+                for ci in 0..cg {
+                    let plane = &input
+                        [(g * cg + ci) * in_shape.h * in_shape.w..][..in_shape.h * in_shape.w];
+                    for ky in 0..k {
+                        let iy = (y * op.stride + ky) as isize - op.pad as isize;
+                        if iy < 0 || iy >= in_shape.h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (x * op.stride + kx) as isize - op.pad as isize;
+                            if ix < 0 || ix >= in_shape.w as isize {
+                                continue;
+                            }
+                            acc += plane[iy as usize * in_shape.w + ix as usize]
+                                * wf[ci * k * k + ky * k + kx];
+                        }
+                    }
+                }
+                out.push(acc);
+            }
+        }
+    }
+    out
+}
+
+fn eval(n: &Node, inputs: &[(&[f32], Shape)]) -> Vec<f32> {
+    match &n.op {
+        Op::Input { shape } => seeded(&n.name, "data", shape.elems()),
+        Op::Conv { conv: op, epilogue } => {
+            let raw = conv(inputs[0].0, inputs[0].1, op, &n.name);
+            match *epilogue {
+                Epilogue::None => raw,
+                Epilogue::Relu => raw.into_iter().map(relu).collect(),
+                Epilogue::AddResidual => {
+                    raw.iter().zip(inputs[1].0).map(|(a, b)| a + b).collect()
+                }
+                Epilogue::MaxPoolWriteback { k, stride } => {
+                    maxpool(&raw, Shape::new(op.core.m, op.oy(), op.ox()), k, stride)
+                }
+            }
+        }
+        Op::Pad { h, w } => {
+            let (src, s) = inputs[0];
+            let (top, left) = ((h - s.h) / 2, (w - s.w) / 2);
+            let mut out = vec![0.0f32; s.c * h * w];
+            for c in 0..s.c {
+                for y in 0..s.h {
+                    let dst = (c * h + top + y) * w + left;
+                    out[dst..dst + s.w]
+                        .copy_from_slice(&src[(c * s.h + y) * s.w..][..s.w]);
+                }
+            }
+            out
+        }
+        Op::Pool { k, stride } => maxpool(inputs[0].0, inputs[0].1, *k, *stride),
+        Op::Relu => inputs[0].0.iter().copied().map(relu).collect(),
+        Op::Add => inputs[0].0.iter().zip(inputs[1].0).map(|(a, b)| a + b).collect(),
+        Op::Concat { .. } => {
+            let mut out = Vec::with_capacity(n.shape.elems());
+            for (d, _) in inputs {
+                out.extend_from_slice(d);
+            }
+            out
+        }
+    }
+}
+
+/// Execute `g` numerically; returns the last node's tensor.
+pub fn reference_output(g: &Graph) -> Vec<f32> {
+    let mut vals: Vec<Vec<f32>> = Vec::with_capacity(g.len());
+    for n in g.nodes() {
+        let ins: Vec<(&[f32], Shape)> = n
+            .inputs
+            .iter()
+            .map(|&i| (vals[i].as_slice(), g.node(i).shape))
+            .collect();
+        let v = eval(n, &ins);
+        debug_assert_eq!(v.len(), n.shape.elems(), "{}: shape mismatch", n.name);
+        vals.push(v);
+    }
+    vals.pop().expect("non-empty graph")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::build::GraphBuilder;
+    use super::*;
+    use crate::conv::ConvProblem;
+
+    fn toy() -> GraphBuilder {
+        GraphBuilder::new("toy")
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_name_keyed() {
+        let a = seeded("conv1", "w", 64);
+        assert_eq!(a, seeded("conv1", "w", 64));
+        assert_ne!(a, seeded("conv2", "w", 64));
+        assert_ne!(a, seeded("conv1", "data", 64));
+        assert!(a.iter().all(|v| (-1.0..=1.0).contains(v)));
+        // not degenerate
+        assert!(a.iter().any(|v| *v > 0.25) && a.iter().any(|v| *v < -0.25));
+    }
+
+    #[test]
+    fn relu_and_maxpool_commute_bitwise() {
+        let data = seeded("x", "data", 4 * 8 * 8);
+        let s = Shape::new(4, 8, 8);
+        let a: Vec<f32> = maxpool(&data, s, 2, 2).into_iter().map(relu).collect();
+        let pre: Vec<f32> = data.iter().copied().map(relu).collect();
+        let b = maxpool(&pre, s, 2, 2);
+        assert_eq!(a, b); // exact bits, not approx
+    }
+
+    #[test]
+    fn graph_reference_runs_every_op() {
+        let mut b = toy();
+        let i = b.input("in", Shape::new(2, 8, 8));
+        let c = b.conv_op("c", i, ConvOp::same(ConvProblem::multi(2, 8, 4, 3))).unwrap();
+        let r = b.relu("r", c).unwrap();
+        let p = b.pool("p", r, 2, 2).unwrap();
+        let d = b.pad("pd", p, 6, 6).unwrap();
+        let c2 = b.conv_op("c2", d, ConvOp::dense(ConvProblem::multi(4, 6, 4, 3))).unwrap();
+        let a = b.add("a", Op::Add, &[p, c2]).unwrap();
+        let cat = b.concat("cat", &[a, p]).unwrap();
+        let g = b.finish().unwrap();
+        let out = reference_output(&g);
+        assert_eq!(out.len(), g.node(cat).shape.elems());
+        assert!(out.iter().all(|v| v.is_finite()));
+        // deterministic end to end
+        assert_eq!(out, reference_output(&g));
+        let _ = (i, c, r, d, a);
+    }
+
+    #[test]
+    fn fused_epilogues_match_their_glue_ops_bitwise() {
+        use crate::gpusim::Epilogue;
+        // conv+relu == conv -> relu
+        let mut b = toy();
+        let i = b.input("in", Shape::new(2, 10, 10));
+        let op = ConvOp::dense(ConvProblem::multi(2, 10, 3, 3));
+        let c = b.conv_op("c", i, op).unwrap();
+        b.relu("r", c).unwrap();
+        let unfused = reference_output(&b.finish().unwrap());
+        let mut b = toy();
+        let i = b.input("in", Shape::new(2, 10, 10));
+        b.add("c", Op::Conv { conv: op, epilogue: Epilogue::Relu }, &[i]).unwrap();
+        assert_eq!(unfused, reference_output(&b.finish().unwrap()));
+
+        // conv+pool == conv -> pool
+        let mut b = toy();
+        let i = b.input("in", Shape::new(2, 10, 10));
+        let c = b.conv_op("c", i, op).unwrap();
+        b.pool("p", c, 2, 2).unwrap();
+        let unfused = reference_output(&b.finish().unwrap());
+        let mut b = toy();
+        let i = b.input("in", Shape::new(2, 10, 10));
+        let ep = Epilogue::MaxPoolWriteback { k: 2, stride: 2 };
+        b.add("c", Op::Conv { conv: op, epilogue: ep }, &[i]).unwrap();
+        assert_eq!(unfused, reference_output(&b.finish().unwrap()));
+
+        // conv+add == add(conv, residual), either operand order
+        let res_op = ConvOp::dense(ConvProblem::multi(2, 10, 3, 3));
+        let mut b = toy();
+        let i = b.input("in", Shape::new(2, 10, 10));
+        let c = b.conv_op("c", i, op).unwrap();
+        let r = b.conv_op("res", i, res_op).unwrap();
+        b.add("a", Op::Add, &[r, c]).unwrap();
+        let unfused = reference_output(&b.finish().unwrap());
+        let mut b = toy();
+        let i = b.input("in", Shape::new(2, 10, 10));
+        let r = b.conv_op("res", i, res_op).unwrap();
+        b.add("c", Op::Conv { conv: op, epilogue: Epilogue::AddResidual }, &[i, r]).unwrap();
+        assert_eq!(unfused, reference_output(&b.finish().unwrap()));
+    }
+}

@@ -13,8 +13,11 @@
 //!   tune [--suite ...]            search the plan space per workload and
 //!                                 report tuned vs paper-fixed plans
 //!   model [--model vgg16]         execute a whole model graph: end-to-end
-//!                                 latency + arena memory plan
-//!                                 (--report adds the per-node breakdown)
+//!                                 latency + arena memory plan, with
+//!                                 epilogue fusion + zero-copy concat on
+//!                                 by default (--no-fuse for the unfused
+//!                                 floor; --report adds the per-node
+//!                                 breakdown and the fusion summary)
 //!   fleet [--devices N]           multi-GPU fleet simulation: batched
 //!                                 conv traffic across N device shards
 //!                                 under a placement policy, virtual-time
@@ -47,7 +50,7 @@ use pasconv::baselines::{cudnn_proxy, dac17, tan128};
 use pasconv::conv::suites::{all_cnn_layers, fig4_suite, fig5_suite};
 use pasconv::conv::{ConvOp, ConvProblem};
 use pasconv::coordinator::{plan_advice, BatchConfig, Coordinator, Payload};
-use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell, GpuSpec, KernelPlan};
+use pasconv::gpusim::{gtx_1080ti, simulate, titan_x_maxwell, Epilogue, GpuSpec, KernelPlan};
 use pasconv::plans::{op_plan_for, paper_op_plan_for, paper_plan_for, plan_for};
 use pasconv::runtime::{default_artifact_dir, Runtime, Tensor};
 use pasconv::tuner;
@@ -80,10 +83,13 @@ fn main() {
                  \n  sweep [--suite fig4|fig5] [--gpu 1080ti|titanx] [--no-tune]\
                  \n  tune [--suite fig4|fig5|cnn|all] [--gpu 1080ti|titanx]\
                  \n       [--save FILE] [--load FILE]  plan-space search vs paper picks\
-                 \n  model [--model NAME|all] [--gpu ...] [--no-dispatch|--no-tune] [--report]\
-                 \n                                    whole-model graph execution:\
+                 \n  model [--model NAME|all] [--gpu ...] [--no-dispatch|--no-tune]\
+                 \n        [--no-fuse] [--report]      whole-model graph execution:\
                  \n                                    latency + arena memory plan +\
-                 \n                                    per-layer backend choices\
+                 \n                                    per-layer backend choices; fused\
+                 \n                                    epilogues + zero-copy concat by\
+                 \n                                    default (--no-fuse for the plain\
+                 \n                                    glue-kernel floor)\
                  \n  fleet [--devices N] [--policy rr|least|bytes|affinity] [--requests N]\
                  \n        [--batch B] [--queue-bound Q] [--overload X] [--hetero]\
                  \n        [--capacity-mib M]           virtual-time multi-GPU fleet run\
@@ -117,14 +123,15 @@ fn planner(args: &Args) -> fn(&ConvProblem, &GpuSpec) -> KernelPlan {
 }
 
 /// The op planner `model` uses (a `graph::Planner`): same three modes,
-/// lifted to the op layer — every mode handles stride/pad/groups.
-fn op_planner(args: &Args) -> fn(&ConvOp, &GpuSpec) -> KernelPlan {
+/// lifted to the op layer — every mode handles stride/pad/groups and
+/// fused writeback epilogues.
+fn op_planner(args: &Args) -> fn(&ConvOp, Epilogue, &GpuSpec) -> KernelPlan {
     if args.has("no-tune") {
         paper_op_plan_for
     } else if args.has("no-dispatch") {
         op_plan_for
     } else {
-        pasconv::backend::dispatch_op_plan
+        pasconv::backend::dispatch_fused_op_plan
     }
 }
 
@@ -208,12 +215,15 @@ fn cmd_simulate(args: &Args) -> i32 {
             "dispatched"
         };
         let mut rows: Vec<(String, KernelPlan)> =
-            vec![(mode.to_string(), op_planner(args)(&op, &g))];
+            vec![(mode.to_string(), op_planner(args)(&op, Epilogue::None, &g))];
         if mode != "paper-tuned (op)" {
-            rows.push(("paper-tuned (op)".to_string(), op_plan_for(&op, &g)));
+            rows.push(("paper-tuned (op)".to_string(), op_plan_for(&op, Epilogue::None, &g)));
         }
         if mode != "paper §3 (op)" {
-            rows.push(("paper §3 (op)".to_string(), paper_op_plan_for(&op, &g)));
+            rows.push((
+                "paper §3 (op)".to_string(),
+                paper_op_plan_for(&op, Epilogue::None, &g),
+            ));
         }
         if !json {
             let ours = simulate(&g, &rows[0].1).seconds;
@@ -416,6 +426,7 @@ fn cmd_model(args: &Args) -> i32 {
         "model",
         "nodes",
         "convs",
+        "fused",
         "latency (ms)",
         "conv share",
         "arena (MiB)",
@@ -432,6 +443,14 @@ fn cmd_model(args: &Args) -> i32 {
                 return 2;
             }
         };
+        // epilogue fusion + zero-copy concat by default: relu / add /
+        // pool tails fold into their convs (`--no-fuse` executes the
+        // plain graph, the structural never-lose floor)
+        let (graph, fusion) = if args.has("no-fuse") {
+            (graph, pasconv::graph::FusionReport::default())
+        } else {
+            pasconv::graph::fuse(&graph, &g, plan_fn)
+        };
         // each model gets its own virtual-time track starting at 0
         let sink: &mut dyn TraceSink =
             if trace_path.is_some() { &mut rec } else { &mut noop };
@@ -439,7 +458,17 @@ fn cmd_model(args: &Args) -> i32 {
         if args.has("report") && !json {
             println!("== {} on {} ==", r.model, r.gpu);
             r.table().print();
-            println!("{}\n", r.summary());
+            println!("{}", r.summary());
+            if fusion.nodes_fused > 0 {
+                println!(
+                    "fused {} nodes; glue eliminated: {} ({:.1}µs on {})",
+                    fusion.nodes_fused,
+                    pasconv::util::bench::fmt_mib(fusion.glue_bytes_eliminated as usize),
+                    g.cycles_to_secs(fusion.glue_cycles_eliminated) * 1e6,
+                    g.name
+                );
+            }
+            println!();
         }
         // the distinct kernel families the planner chose (with the
         // dispatcher this is the per-layer backend mix, e.g.
@@ -459,6 +488,12 @@ fn cmd_model(args: &Args) -> i32 {
                     .set("gpu", r.gpu.into())
                     .set("nodes", r.nodes.len().into())
                     .set("conv_layers", r.conv_layers.into())
+                    .set("nodes_fused", fusion.nodes_fused.into())
+                    .set("glue_bytes_eliminated", fusion.glue_bytes_eliminated.into())
+                    .set(
+                        "glue_seconds_eliminated",
+                        g.cycles_to_secs(fusion.glue_cycles_eliminated).into(),
+                    )
                     .set("latency_ms", (r.total_seconds * 1e3).into())
                     .set("conv_seconds", r.conv_seconds.into())
                     .set("glue_seconds", r.glue_seconds.into())
@@ -472,6 +507,7 @@ fn cmd_model(args: &Args) -> i32 {
                 r.model.clone(),
                 r.nodes.len().to_string(),
                 r.conv_layers.to_string(),
+                fusion.nodes_fused.to_string(),
                 format!("{:.3}", r.total_seconds * 1e3),
                 format!("{:.0}%", 100.0 * r.conv_seconds / r.total_seconds),
                 pasconv::util::bench::fmt_mib(r.arena.peak_bytes),
@@ -554,6 +590,28 @@ fn cmd_fleet(args: &Args) -> i32 {
     let evict_total: u64 = fleet.devices().iter().map(|d| d.pool().stats.evictions).sum();
     let reuse_total: u64 = fleet.devices().iter().map(|d| d.pool().stats.reuse_hits).sum();
 
+    // fusion wins per shard: each (device, model) pair the traffic
+    // actually landed, priced through the epilogue-fusion pass on that
+    // shard's spec — (device, model, jobs, fused nodes, glue seconds
+    // saved per inference).  Traffic tags are model_graph names.
+    let mut served: std::collections::BTreeMap<(usize, String), usize> =
+        std::collections::BTreeMap::new();
+    for c in &completions {
+        if let Some(m) = &c.model {
+            *served.entry((c.device, m.clone())).or_insert(0) += 1;
+        }
+    }
+    let fusion_rows: Vec<(usize, String, usize, usize, f64)> = served
+        .iter()
+        .map(|((dev, model), jobs)| {
+            let graph = pasconv::graph::model_graph(model).expect("traffic tags are model names");
+            let spec = &fleet.devices()[*dev].spec;
+            let (_, rep) =
+                pasconv::graph::fuse(&graph, spec, pasconv::backend::dispatch_fused_op_plan);
+            (*dev, model.clone(), *jobs, rep.nodes_fused, spec.cycles_to_secs(rep.glue_cycles_eliminated))
+        })
+        .collect();
+
     if json {
         let per_device = Json::Arr(
             fleet
@@ -571,6 +629,22 @@ fn cmd_fleet(args: &Args) -> i32 {
                         .set("pool_capacity_bytes", p.capacity().into())
                         .set("evictions", (p.stats.evictions as usize).into())
                         .set("reuse_hits", (p.stats.reuse_hits as usize).into())
+                        .set(
+                            "fusion",
+                            Json::Arr(
+                                fusion_rows
+                                    .iter()
+                                    .filter(|(dev, ..)| *dev == d.id)
+                                    .map(|(_, model, jobs, fused, saved)| {
+                                        Json::obj()
+                                            .set("model", model.as_str().into())
+                                            .set("jobs", (*jobs).into())
+                                            .set("nodes_fused", (*fused).into())
+                                            .set("glue_saved_s", (*saved).into())
+                                    })
+                                    .collect(),
+                            ),
+                        )
                 })
                 .collect(),
         );
@@ -660,6 +734,22 @@ fn cmd_fleet(args: &Args) -> i32 {
             evict_total,
             reuse_total
         );
+        if !fusion_rows.is_empty() {
+            println!("\nfusion wins per shard (epilogue fusion + zero-copy concat):");
+            let mut ft = Table::new(&[
+                "device", "model", "jobs", "fused nodes", "glue saved / inference",
+            ]);
+            for (dev, model, jobs, fused, saved) in &fusion_rows {
+                ft.row(&[
+                    dev.to_string(),
+                    model.clone(),
+                    jobs.to_string(),
+                    fused.to_string(),
+                    format!("{:.1} µs", saved * 1e6),
+                ]);
+            }
+            ft.print();
+        }
     }
     if let Some(path) = trace_path {
         return write_trace(path, &rec);
@@ -709,7 +799,7 @@ fn cmd_trace(args: &Args) -> i32 {
             pasconv::graph::execute_batched_traced(
                 &graph,
                 &g,
-                pasconv::backend::dispatch_op_plan,
+                pasconv::backend::dispatch_fused_op_plan,
                 1,
                 &mut rec,
                 0.0,

@@ -17,7 +17,7 @@ pub mod stride_fixed;
 
 use crate::backend::{ConvBackend, PaperClosedForm, PaperTuned};
 use crate::conv::{BatchedConv, BatchedConvOp, ConvOp, ConvProblem};
-use crate::gpusim::{GpuSpec, KernelPlan};
+use crate::gpusim::{Epilogue, GpuSpec, KernelPlan};
 
 /// Launch + drain overhead our kernels pay (~2.7 µs at 1.48 GHz).  One
 /// definition shared by both plan builders and the tuner's scorer — the
@@ -67,15 +67,16 @@ pub fn batched_seconds(b: &BatchedConv, spec: &GpuSpec) -> f64 {
 /// The paper kernel's serving plan for a conv op: the tuned unit plan
 /// under the paper backends' native op schedule (decimated strips for
 /// stride, side-by-side groups — never pricing above its own naive
-/// lowering).  A `graph::Planner`.
-pub fn op_plan_for(op: &ConvOp, spec: &GpuSpec) -> KernelPlan {
-    PaperTuned.op_plan(op, spec)
+/// lowering), with the requested writeback epilogue fused onto the
+/// plan's tail.  A `graph::Planner`.
+pub fn op_plan_for(op: &ConvOp, ep: Epilogue, spec: &GpuSpec) -> KernelPlan {
+    PaperTuned.op_plan(op, spec).fused(ep, (op.oy(), op.ox()))
 }
 
 /// `op_plan_for` with the paper's closed-form §3 unit picks
 /// (`--no-tune`).
-pub fn paper_op_plan_for(op: &ConvOp, spec: &GpuSpec) -> KernelPlan {
-    PaperClosedForm.op_plan(op, spec)
+pub fn paper_op_plan_for(op: &ConvOp, ep: Epilogue, spec: &GpuSpec) -> KernelPlan {
+    PaperClosedForm.op_plan(op, spec).fused(ep, (op.oy(), op.ox()))
 }
 
 /// Predicted cycles of a batched op under the tuned paper path.
@@ -144,20 +145,39 @@ mod tests {
     fn op_plans_dispatch_and_degenerate_to_dense() {
         let g = gtx_1080ti();
         let p = ConvProblem::multi(64, 56, 64, 3);
-        assert_eq!(op_plan_for(&ConvOp::dense(p), &g).name, plan_for(&p, &g).name);
+        let none = Epilogue::None;
+        assert_eq!(op_plan_for(&ConvOp::dense(p), none, &g).name, plan_for(&p, &g).name);
         assert_eq!(
-            paper_op_plan_for(&ConvOp::dense(p), &g).name,
+            paper_op_plan_for(&ConvOp::dense(p), none, &g).name,
             paper_plan_for(&p, &g).name
         );
         // a strided op plan exists, simulates, and carries its tag
         let s2 = ConvOp::strided(ConvProblem::multi(64, 56, 128, 3), 2, 1);
-        let plan = op_plan_for(&s2, &g);
+        let plan = op_plan_for(&s2, none, &g);
         assert!(plan.name.contains("s2"), "{}", plan.name);
         assert!(simulate(&g, &plan).seconds > 0.0);
         // batched op helpers agree at n = 1
         let b1 = batched_op_cycles(&BatchedConvOp::single(s2), &g);
         assert!((b1 - simulate(&g, &plan).cycles).abs() < 1e-9 * b1);
         assert!(batched_op_seconds(&BatchedConvOp::new(s2, 4), &g) > 0.0);
+    }
+
+    #[test]
+    fn fused_op_plans_reprice_the_writeback_tail() {
+        let g = gtx_1080ti();
+        let op = ConvOp::dense(ConvProblem::multi(64, 28, 64, 3));
+        let base = simulate(&g, &op_plan_for(&op, Epilogue::None, &g)).cycles;
+        // relu clamps in-register: same traffic, same cycles
+        let relu = simulate(&g, &op_plan_for(&op, Epilogue::Relu, &g)).cycles;
+        assert!((relu - base).abs() < 1e-9 * base);
+        // pooled writeback stores the decimated map: never slower
+        let ep = Epilogue::MaxPoolWriteback { k: 2, stride: 2 };
+        let pool = simulate(&g, &op_plan_for(&op, ep, &g)).cycles;
+        assert!(pool <= base, "{pool} > {base}");
+        // the residual stream costs tail reads: never faster than base
+        let add = simulate(&g, &op_plan_for(&op, Epilogue::AddResidual, &g)).cycles;
+        assert!(add >= base, "{add} < {base}");
+        assert!(op_plan_for(&op, ep, &g).name.contains("+pool2s2"));
     }
 
     #[test]

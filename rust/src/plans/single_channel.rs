@@ -18,7 +18,7 @@
 use crate::analytic::occupancy::paper_launch;
 use crate::analytic::single::{choose, SingleChoice, SingleMethod};
 use crate::conv::{ConvProblem, BYTES_F32};
-use crate::gpusim::{GpuSpec, KernelPlan, Loading, Round};
+use crate::gpusim::{Epilogue, GpuSpec, KernelPlan, Loading, Round};
 
 fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
@@ -146,6 +146,8 @@ pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> Ke
         stages: 2,
         loading: Loading::Cyclic,
         stage_bytes: r.stage_bytes as u32,
+        epilogue: Epilogue::None,
+        epilogue_read_bytes: 0.0,
     }
 }
 

@@ -21,7 +21,7 @@ use crate::analytic::multi::{choose, stage_bytes_multi, StrideFixedChoice};
 use crate::analytic::occupancy::paper_launch;
 use crate::conv::{ConvProblem, BYTES_F32};
 use crate::gpusim::pipeline::simulate_pipeline_runs;
-use crate::gpusim::{simulate, ExecConfig, GpuSpec, KernelPlan, Loading, Round};
+use crate::gpusim::{simulate, Epilogue, ExecConfig, GpuSpec, KernelPlan, Loading, Round};
 
 fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
@@ -161,6 +161,8 @@ pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &StrideFixedChoice) 
         stages: 2,
         loading: Loading::Cyclic,
         stage_bytes: stage_bytes_multi(c.s_bytes, c.wx_prime, c.m_prime, p.k) as u32,
+        epilogue: Epilogue::None,
+        epilogue_read_bytes: 0.0,
     }
 }
 

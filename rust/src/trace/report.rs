@@ -87,8 +87,8 @@ pub fn fig5_rows(spec: &GpuSpec) -> Vec<RooflineRow> {
 }
 
 /// Aggregate roofline rows for the five model graphs under op
-/// dispatch (`backend::dispatch_op_plan`), glue traffic included in
-/// the bandwidth numerator.
+/// dispatch (`backend::dispatch_fused_op_plan`), glue traffic included
+/// in the bandwidth numerator.
 pub fn model_rows(spec: &GpuSpec) -> Vec<RooflineRow> {
     MODEL_NAMES
         .iter()
@@ -101,19 +101,19 @@ pub fn model_rows(spec: &GpuSpec) -> Vec<RooflineRow> {
             let mut glue = 0.0;
             for n in g.nodes() {
                 match &n.op {
-                    Op::Conv { conv } => {
-                        let plan = backend::dispatch_op_plan(conv, spec);
+                    Op::Conv { conv, epilogue } => {
+                        let plan = backend::dispatch_fused_op_plan(conv, *epilogue, spec);
                         let b = crate::gpusim::simulate_detailed(spec, &plan);
                         fma += plan.total_fma;
                         conv_loads += plan.dram_load_bytes();
-                        conv_stores += plan.output_bytes;
+                        conv_stores += plan.output_bytes + plan.epilogue_read_bytes;
                         conv_charged += plan.dram_load_bytes()
                             + b.writeback_cycles * spec.bytes_per_cycle();
                     }
                     _ => glue += node_glue_bytes(&g, n.id),
                 }
             }
-            let report = execute(&g, spec, backend::dispatch_op_plan);
+            let report = execute(&g, spec, backend::dispatch_fused_op_plan);
             let secs = report.total_seconds.max(f64::MIN_POSITIVE);
             let gflops = 2.0 * fma / secs / 1e9;
             let flops_frac = 2.0 * fma / secs / spec.peak_flops();

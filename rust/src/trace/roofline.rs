@@ -22,6 +22,11 @@ pub struct Roofline {
     pub dram_load_bytes: f64,
     /// bytes written back to global memory (the plan's output)
     pub dram_store_bytes: f64,
+    /// fused writeback epilogue tag ("none" when unfused)
+    pub epilogue: String,
+    /// bytes the fused epilogue streams in through the writeback tail
+    /// (the residual operand of `AddResidual`; 0 otherwise)
+    pub epilogue_read_bytes: f64,
     pub total_fma: f64,
     /// the paper's figure of merit: FMAs per *fetched* byte
     pub fma_per_byte: f64,
@@ -69,7 +74,7 @@ impl Roofline {
         let r = &b.result;
         let cycles = r.cycles.max(1.0);
         let secs = r.seconds.max(f64::MIN_POSITIVE);
-        let traffic = r.dram_load_bytes + plan.output_bytes;
+        let traffic = r.dram_load_bytes + plan.output_bytes + plan.epilogue_read_bytes;
         let bw_gb_s = traffic / secs / 1e9;
         let charged = r.dram_load_bytes + b.writeback_cycles * spec.bytes_per_cycle();
         let bw_charged_gb_s = charged / secs / 1e9;
@@ -80,6 +85,8 @@ impl Roofline {
             cycles: r.cycles,
             dram_load_bytes: r.dram_load_bytes,
             dram_store_bytes: plan.output_bytes,
+            epilogue: plan.epilogue.tag(),
+            epilogue_read_bytes: plan.epilogue_read_bytes,
             total_fma: plan.total_fma,
             fma_per_byte: r.fma_per_byte,
             gflops: r.gflops,
@@ -112,6 +119,8 @@ impl Roofline {
             ("bw_frac_total".to_string(), self.bw_frac_total.into()),
             ("dram_load_bytes".to_string(), self.dram_load_bytes.into()),
             ("dram_store_bytes".to_string(), self.dram_store_bytes.into()),
+            ("epilogue".to_string(), self.epilogue.as_str().into()),
+            ("epilogue_read_bytes".to_string(), self.epilogue_read_bytes.into()),
             ("occupancy".to_string(), self.occupancy.into()),
             ("bottleneck".to_string(), self.bottleneck.into()),
         ]
@@ -126,6 +135,8 @@ impl Roofline {
             .set("cycles", self.cycles.into())
             .set("dram_load_bytes", self.dram_load_bytes.into())
             .set("dram_store_bytes", self.dram_store_bytes.into())
+            .set("epilogue", self.epilogue.as_str().into())
+            .set("epilogue_read_bytes", self.epilogue_read_bytes.into())
             .set("total_fma", self.total_fma.into())
             .set("fma_per_byte", self.fma_per_byte.into())
             .set("gflops", self.gflops.into())
@@ -177,8 +188,32 @@ mod tests {
         assert!(roof.bw_frac_total <= 1.0 + 1e-9, "bw_frac_total {}", roof.bw_frac_total);
         assert!(roof.occupancy > 0.0 && roof.occupancy <= 1.0);
         // achieved bandwidth equals traffic over time by construction
-        let traffic = roof.dram_load_bytes + roof.dram_store_bytes;
+        let traffic =
+            roof.dram_load_bytes + roof.dram_store_bytes + roof.epilogue_read_bytes;
         assert!((roof.bw_gb_s - traffic / roof.seconds / 1e9).abs() < 1e-9);
+        assert_eq!(roof.epilogue, "none");
+        assert_eq!(roof.epilogue_read_bytes, 0.0);
+    }
+
+    #[test]
+    fn fused_plans_report_their_epilogue_traffic() {
+        use crate::gpusim::Epilogue;
+        let g = gtx_1080ti();
+        let p = ConvProblem::multi(64, 28, 128, 3);
+        let plan = paper_plan_for(&p, &g);
+        let fused = plan.fused(Epilogue::AddResidual, (p.oy(), p.ox()));
+        let roof = Roofline::measure(&g, &fused);
+        assert_eq!(roof.epilogue, "add");
+        assert!((roof.epilogue_read_bytes - plan.output_bytes).abs() < 1e-6);
+        // the residual stream is real traffic: total bw fraction rises
+        let base = Roofline::measure(&g, &plan);
+        assert!(roof.bw_gb_s > 0.0 && roof.seconds >= base.seconds);
+        let pooled = plan.fused(Epilogue::MaxPoolWriteback { k: 2, stride: 2 }, (p.oy(), p.ox()));
+        let proof = Roofline::measure(&g, &pooled);
+        assert_eq!(proof.epilogue, "pool2s2");
+        assert!(proof.dram_store_bytes < base.dram_store_bytes);
+        let j = proof.to_json().render();
+        assert!(j.contains("\"epilogue\""), "{j}");
     }
 
     #[test]

@@ -16,8 +16,18 @@
 //! match what `build_plan` produces, so serving it silently would
 //! resurrect the stale-cache bug the validators pin against.  Pre-v4
 //! plan lines are DROPPED (and counted in `stale_dropped`) so old files
-//! still load, re-tune the dropped keys, and re-save as v4.  Dispatch
-//! entries never carried plan params and parse unchanged.
+//! still load, re-tune the dropped keys, and re-save as v4.
+//!
+//! Format v5 adds the fused-epilogue axis: `epilogue=` is REQUIRED on
+//! every line.  Dispatch entries are now keyed by `(ConvOp, Epilogue)`
+//! — a pre-v5 dispatch decision was ranked without the fused axis
+//! (the fused floor reprices the writeback tail), so defaulting it to
+//! `epilogue=none` and serving it is exactly the stale-cache bug the
+//! v4 policy rejects for plans; pre-v5 dispatch lines are DROPPED and
+//! counted too.  Plan entries stay epilogue-blind (the tuner searches
+//! unit plans at `none`; fusion is applied to the tuned plan), so a
+//! plan line carries `epilogue=none` always — any other value is
+//! corruption, not staleness, and errors.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -28,7 +38,7 @@ use crate::analytic::SingleMethod;
 use crate::backend::{self, Decision, BACKEND_NAMES};
 use crate::conv::{ConvOp, ConvProblem};
 use crate::gpusim::{
-    gtx_1080ti, tesla_k40, titan_x_maxwell, GpuSpec, Loading, MAX_STAGES, MIN_STAGES,
+    gtx_1080ti, tesla_k40, titan_x_maxwell, Epilogue, GpuSpec, Loading, MAX_STAGES, MIN_STAGES,
 };
 
 use super::enumerate::PlanParams;
@@ -161,10 +171,15 @@ fn validate_entry(idx: usize, p: &ConvProblem, gpu: &str, t: &Tuned) -> Result<(
 /// claim to beat its own floor's definition (cycles <= tuned_cycles —
 /// the dispatcher's never-lose invariant; an edited or stale entry
 /// violating it would silently serve a losing backend).
-fn validate_dispatch(idx: usize, op: &ConvOp, d: &Decision) -> Result<()> {
+fn validate_dispatch(idx: usize, op: &ConvOp, ep: Epilogue, d: &Decision) -> Result<()> {
     let line = idx + 1;
     if !op.valid() {
         bail!("line {line}: invalid op {op:?}");
+    }
+    if let Epilogue::MaxPoolWriteback { k, stride } = ep {
+        if k == 0 || stride == 0 || op.oy() < k || op.ox() < k {
+            bail!("line {line}: pool{k}s{stride} does not fit {}x{}", op.oy(), op.ox());
+        }
     }
     if !BACKEND_NAMES.contains(&d.backend.as_str()) {
         bail!("line {line}: unknown backend {:?}", d.backend);
@@ -191,10 +206,11 @@ fn validate_dispatch(idx: usize, op: &ConvOp, d: &Decision) -> Result<()> {
 #[derive(Clone, Debug, Default)]
 pub struct PlanCache {
     entries: HashMap<(ConvProblem, String), Tuned>,
-    dispatch: HashMap<(ConvOp, String), Decision>,
-    /// Pre-v4 plan entries dropped on parse (missing `stages=`/
-    /// `loading=`): counted so callers can report "N stale entries
-    /// re-tuned" instead of silently serving pre-multi-stage plans.
+    dispatch: HashMap<(ConvOp, Epilogue, String), Decision>,
+    /// Stale entries dropped on parse — pre-v4 plan lines (missing
+    /// `stages=`/`loading=`) and pre-v5 lines of either kind (missing
+    /// `epilogue=`): counted so callers can report "N stale entries
+    /// re-tuned" instead of silently serving pre-fusion decisions.
     stale_dropped: usize,
 }
 
@@ -214,7 +230,7 @@ impl PlanCache {
         self.dispatch.len()
     }
 
-    /// How many pre-v4 plan entries the last `from_lines` dropped.
+    /// How many pre-v5 (or pre-v4) lines the last `from_lines` dropped.
     pub fn stale_dropped(&self) -> usize {
         self.stale_dropped
     }
@@ -232,11 +248,21 @@ impl PlanCache {
     }
 
     pub fn get_dispatch(&self, op: &ConvOp, spec: &GpuSpec) -> Option<Decision> {
-        self.dispatch.get(&(*op, spec.name.to_string())).cloned()
+        self.get_dispatch_fused(op, Epilogue::None, spec)
     }
 
     pub fn insert_dispatch(&mut self, op: ConvOp, spec: &GpuSpec, d: Decision) {
-        self.dispatch.insert((op, spec.name.to_string()), d);
+        self.insert_dispatch_fused(op, Epilogue::None, spec, d);
+    }
+
+    /// Dispatch lookup on the full v5 key `(op, epilogue, gpu)` — the
+    /// unfused decisions are exactly the `Epilogue::None` slice.
+    pub fn get_dispatch_fused(&self, op: &ConvOp, ep: Epilogue, spec: &GpuSpec) -> Option<Decision> {
+        self.dispatch.get(&(*op, ep, spec.name.to_string())).cloned()
+    }
+
+    pub fn insert_dispatch_fused(&mut self, op: ConvOp, ep: Epilogue, spec: &GpuSpec, d: Decision) {
+        self.dispatch.insert((op, ep, spec.name.to_string()), d);
     }
 
     /// Absorb every entry of `other` (overwriting duplicates), whatever
@@ -256,7 +282,7 @@ impl PlanCache {
         let mut keys: Vec<&(ConvProblem, String)> = self.entries.keys().collect();
         keys.sort_by_key(|(p, g)| (g.clone(), p.c, p.wy, p.wx, p.m, p.k));
         let mut out = String::from(
-            "# pasconv plan cache v4: problem + gpu -> tuned plan params / op dispatch decisions\n",
+            "# pasconv plan cache v5: problem + gpu -> tuned plan params / fused op dispatch decisions\n",
         );
         for key in keys {
             let (p, gpu) = key;
@@ -280,7 +306,7 @@ impl PlanCache {
                 }
             };
             out.push_str(&format!(
-                "gpu={} c={} wy={} wx={} m={} k={} {params} tuned_cycles={} paper_cycles={}\n",
+                "gpu={} c={} wy={} wx={} m={} k={} {params} epilogue=none tuned_cycles={} paper_cycles={}\n",
                 encode_gpu(gpu),
                 p.c,
                 p.wy,
@@ -291,17 +317,17 @@ impl PlanCache {
                 t.paper_cycles
             ));
         }
-        let mut dkeys: Vec<&(ConvOp, String)> = self.dispatch.keys().collect();
-        dkeys.sort_by_key(|(o, g)| {
+        let mut dkeys: Vec<&(ConvOp, Epilogue, String)> = self.dispatch.keys().collect();
+        dkeys.sort_by_key(|(o, e, g)| {
             let p = o.core;
-            (g.clone(), p.c, p.wy, p.wx, p.m, p.k, o.stride, o.pad, o.groups)
+            (g.clone(), p.c, p.wy, p.wx, p.m, p.k, o.stride, o.pad, o.groups, e.tag())
         });
         for key in dkeys {
-            let (o, gpu) = key;
+            let (o, ep, gpu) = key;
             let p = o.core;
             let d = &self.dispatch[key];
             out.push_str(&format!(
-                "gpu={} c={} wy={} wx={} m={} k={} stride={} pad={} groups={} kind=dispatch backend={} cycles={} tuned_cycles={}\n",
+                "gpu={} c={} wy={} wx={} m={} k={} stride={} pad={} groups={} epilogue={} kind=dispatch backend={} cycles={} tuned_cycles={}\n",
                 encode_gpu(gpu),
                 p.c,
                 p.wy,
@@ -311,6 +337,7 @@ impl PlanCache {
                 o.stride,
                 o.pad,
                 o.groups,
+                ep.tag(),
                 d.backend,
                 d.cycles,
                 d.tuned_cycles
@@ -351,23 +378,51 @@ impl PlanCache {
                         pad: usize_field_or(&fields, idx, "pad", 0)?,
                         groups: usize_field_or(&fields, idx, "groups", 1)?,
                     };
+                    // v5 fused axis: REQUIRED — a pre-v5 decision was
+                    // ranked without the epilogue in the key, so it is
+                    // dropped (and counted), never defaulted to
+                    // `epilogue=none` and served
+                    let ep = match fields.get("epilogue") {
+                        None => {
+                            cache.stale_dropped += 1;
+                            continue;
+                        }
+                        Some(e) => Epilogue::parse(e)
+                            .ok_or_else(|| anyhow!("line {}: unknown epilogue {e:?}", idx + 1))?,
+                    };
                     let d = Decision {
                         backend: field(&fields, idx, "backend")?.to_string(),
                         cycles: f64_field(&fields, idx, "cycles")?,
                         tuned_cycles: f64_field(&fields, idx, "tuned_cycles")?,
                     };
-                    validate_dispatch(idx, &op, &d)?;
+                    validate_dispatch(idx, &op, ep, &d)?;
                     let gpu = decode_gpu(field(&fields, idx, "gpu")?);
-                    cache.dispatch.insert((op, gpu), d);
+                    cache.dispatch.insert((op, ep, gpu), d);
                     continue;
                 }
                 kind @ ("single" | "multi") => {
-                    // v4 plan axes: REQUIRED — a pre-v4 entry was tuned
-                    // over a smaller plan space, so it is dropped (and
-                    // counted), never defaulted and served
-                    if !fields.contains_key("stages") || !fields.contains_key("loading") {
+                    // v4 plan axes + the v5 epilogue marker: REQUIRED —
+                    // a pre-v4/pre-v5 entry was tuned over a different
+                    // plan space, so it is dropped (and counted), never
+                    // defaulted and served
+                    if !fields.contains_key("stages")
+                        || !fields.contains_key("loading")
+                        || !fields.contains_key("epilogue")
+                    {
                         cache.stale_dropped += 1;
                         continue;
+                    }
+                    // plan entries are epilogue-blind by design (unit
+                    // plans are tuned at `none`; fusion transforms the
+                    // tuned plan): any other value is corruption
+                    let e = fields["epilogue"];
+                    match Epilogue::parse(e) {
+                        Some(Epilogue::None) => {}
+                        Some(_) => bail!(
+                            "line {}: plan entries are tuned at epilogue=none; got {e:?}",
+                            idx + 1
+                        ),
+                        None => bail!("line {}: unknown epilogue {e:?}", idx + 1),
                     }
                     let stages = usize_field(&fields, idx, "stages")? as u32;
                     let loading_name = field(&fields, idx, "loading")?;
@@ -538,16 +593,26 @@ mod tests {
         )
         .is_err());
         assert!(PlanCache::from_lines(
-            "gpu=G c=1 wy=8 wx=8 m=1 k=1 kind=single method=nope p=1 q=1 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=1"
+            "gpu=G c=1 wy=8 wx=8 m=1 k=1 kind=single method=nope p=1 q=1 stages=2 loading=cyclic epilogue=none tuned_cycles=1 paper_cycles=1"
         )
         .is_err());
-        // present-but-garbage v4 axes are corruption, not staleness
+        // present-but-garbage v4/v5 axes are corruption, not staleness
         assert!(PlanCache::from_lines(
-            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 stages=2 loading=warp_magic tuned_cycles=1 paper_cycles=2"
+            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 stages=2 loading=warp_magic epilogue=none tuned_cycles=1 paper_cycles=2"
         )
         .is_err());
         assert!(PlanCache::from_lines(
-            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 stages=9 loading=cyclic tuned_cycles=1 paper_cycles=2"
+            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 stages=9 loading=cyclic epilogue=none tuned_cycles=1 paper_cycles=2"
+        )
+        .is_err());
+        // a plan entry claiming a fused epilogue is corruption too: the
+        // tuner searches unit plans at epilogue=none only
+        assert!(PlanCache::from_lines(
+            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 stages=2 loading=cyclic epilogue=relu tuned_cycles=1 paper_cycles=2"
+        )
+        .is_err());
+        assert!(PlanCache::from_lines(
+            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 stages=2 loading=cyclic epilogue=blur3 tuned_cycles=1 paper_cycles=2"
         )
         .is_err());
         // comments and blanks are fine
@@ -558,42 +623,42 @@ mod tests {
     fn stale_or_edited_entries_are_rejected_not_trusted() {
         // tuned slower than paper: would trip the never-lose asserts
         assert!(PlanCache::from_lines(
-            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 stages=2 loading=cyclic tuned_cycles=2 paper_cycles=1"
+            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=1 q=1 stages=2 loading=cyclic epilogue=none tuned_cycles=2 paper_cycles=1"
         )
         .is_err());
         // invalid problem (K > W)
         assert!(PlanCache::from_lines(
-            "gpu=G c=1 wy=2 wx=2 m=4 k=3 kind=single method=filter_split p=1 q=1 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=1"
+            "gpu=G c=1 wy=2 wx=2 m=4 k=3 kind=single method=filter_split p=1 q=1 stages=2 loading=cyclic epilogue=none tuned_cycles=1 paper_cycles=1"
         )
         .is_err());
         // P out of range
         assert!(PlanCache::from_lines(
-            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=99 q=1 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=1"
+            "gpu=G c=1 wy=8 wx=8 m=4 k=1 kind=single method=filter_split p=99 q=1 stages=2 loading=cyclic epilogue=none tuned_cycles=1 paper_cycles=1"
         )
         .is_err());
         // non-coalesced segment size
         assert!(PlanCache::from_lines(
-            "gpu=G c=8 wy=8 wx=8 m=4 k=3 kind=multi s=36 wxp=32 mp=4 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=1"
+            "gpu=G c=8 wy=8 wx=8 m=4 k=3 kind=multi s=36 wxp=32 mp=4 stages=2 loading=cyclic epilogue=none tuned_cycles=1 paper_cycles=1"
         )
         .is_err());
         // working set beyond the named GPU's double-buffer budget
         assert!(PlanCache::from_lines(
-            "gpu=GTX_1080Ti c=8 wy=64 wx=64 m=512 k=3 kind=multi s=128 wxp=256 mp=512 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=1"
+            "gpu=GTX_1080Ti c=8 wy=64 wx=64 m=512 k=3 kind=multi s=128 wxp=256 mp=512 stages=2 loading=cyclic epilogue=none tuned_cycles=1 paper_cycles=1"
         )
         .is_err());
         // a 4-stage working set can overflow where the depth-2 one fits
         assert!(PlanCache::from_lines(
-            "gpu=GTX_1080Ti c=8 wy=64 wx=64 m=512 k=3 kind=multi s=128 wxp=128 mp=64 stages=4 loading=cyclic tuned_cycles=1 paper_cycles=1"
+            "gpu=GTX_1080Ti c=8 wy=64 wx=64 m=512 k=3 kind=multi s=128 wxp=128 mp=64 stages=4 loading=cyclic epilogue=none tuned_cycles=1 paper_cycles=1"
         )
         .is_err());
         // kind must match the problem's channel count (a single-channel
         // plan for C>1 would panic the builder on lookup)
         assert!(PlanCache::from_lines(
-            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=single method=filter_split p=1 q=1 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=2"
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=single method=filter_split p=1 q=1 stages=2 loading=cyclic epilogue=none tuned_cycles=1 paper_cycles=2"
         )
         .is_err());
         assert!(PlanCache::from_lines(
-            "gpu=G c=1 wy=14 wx=14 m=16 k=3 kind=multi s=32 wxp=32 mp=16 stages=2 loading=cyclic tuned_cycles=1 paper_cycles=2"
+            "gpu=G c=1 wy=14 wx=14 m=16 k=3 kind=multi s=32 wxp=32 mp=16 stages=2 loading=cyclic epilogue=none tuned_cycles=1 paper_cycles=2"
         )
         .is_err());
     }
@@ -601,8 +666,9 @@ mod tests {
     #[test]
     fn pre_v4_plan_entries_are_dropped_and_counted_not_served() {
         // exactly what a v3 `tune --save` produced: plan lines without
-        // stages=/loading=.  Serving them would resurrect pre-multi-stage
-        // plans with cycle counts the v4 builder no longer reproduces.
+        // stages=/loading=, dispatch lines without epilogue=.  Serving
+        // any of them would resurrect decisions made over a smaller
+        // plan space than v5's builders and ranking reproduce.
         let v3 = "# pasconv plan cache v3: problem + gpu -> tuned plan params / op dispatch decisions\n\
             gpu=GTX_1080Ti c=1 wy=224 wx=224 m=64 k=3 kind=single method=filter_split \
             p=3 q=1 tuned_cycles=10234.5625 paper_cycles=11000.125\n\
@@ -612,16 +678,55 @@ mod tests {
             cycles=1 tuned_cycles=2\n";
         let cache = PlanCache::from_lines(v3).unwrap();
         assert_eq!(cache.len(), 0, "stale plan entries must not be served");
-        assert_eq!(cache.stale_dropped(), 2);
-        // dispatch entries never carried plan params: they survive
-        assert_eq!(cache.dispatch_len(), 1);
+        assert_eq!(cache.dispatch_len(), 0, "pre-v5 dispatch entries must not be served");
+        assert_eq!(cache.stale_dropped(), 3);
         assert!(cache.get(&ConvProblem::single(224, 64, 3), &gtx_1080ti()).is_none());
     }
 
     #[test]
-    fn v3_loads_then_a_fresh_save_round_trips_as_v4() {
+    fn v4_files_load_with_epilogue_defaulted_rejected() {
+        // the v5 migration gate: a genuine v4 file — plan lines WITH
+        // stages=/loading= but no epilogue=, dispatch lines without
+        // epilogue= — loads without error, but nothing is served with a
+        // defaulted `epilogue=none`: every pre-v5 line is dropped and
+        // counted, and a fresh save round-trips as v5.
+        let v4 = "# pasconv plan cache v4: problem + gpu -> tuned plan params / op dispatch decisions\n\
+            gpu=GTX_1080Ti c=1 wy=224 wx=224 m=64 k=3 kind=single method=filter_split \
+            p=3 q=1 stages=3 loading=cyclic tuned_cycles=10234.5625 paper_cycles=11000.125\n\
+            gpu=GTX_1080Ti c=256 wy=14 wx=14 m=256 k=3 kind=multi s=128 wxp=32 mp=64 \
+            stages=2 loading=tilewise tuned_cycles=25000 paper_cycles=30303\n\
+            gpu=G c=8 wy=14 wx=14 m=16 k=3 stride=1 pad=0 groups=1 kind=dispatch \
+            backend=winograd cycles=1 tuned_cycles=2\n";
+        let mut cache = PlanCache::from_lines(v4).unwrap();
+        assert_eq!((cache.len(), cache.dispatch_len()), (0, 0));
+        assert_eq!(cache.stale_dropped(), 3);
+        // re-decide the dropped key and save: the new file is v5
+        let g = gtx_1080ti();
+        let op = ConvOp::same(ConvProblem::multi(64, 28, 64, 3));
+        cache.insert_dispatch_fused(
+            op,
+            Epilogue::MaxPoolWriteback { k: 2, stride: 2 },
+            &g,
+            Decision { backend: "winograd".into(), cycles: 8_000.5, tuned_cycles: 9_000.0 },
+        );
+        let text = cache.to_lines();
+        assert!(text.starts_with("# pasconv plan cache v5"), "{text}");
+        assert!(text.contains("epilogue=pool2s2"), "{text}");
+        let back = PlanCache::from_lines(&text).unwrap();
+        assert_eq!(back.stale_dropped(), 0);
+        let d = back
+            .get_dispatch_fused(&op, Epilogue::MaxPoolWriteback { k: 2, stride: 2 }, &g)
+            .unwrap();
+        assert_eq!(d.backend, "winograd");
+        // the None slice stays distinct: no entry bleeds across epilogues
+        assert!(back.get_dispatch(&op, &g).is_none());
+        assert_eq!(back.to_lines(), text);
+    }
+
+    #[test]
+    fn v3_loads_then_a_fresh_save_round_trips_as_v5() {
         // the upgrade path: load a v3 file (plans dropped), re-tune the
-        // dropped key, save — the new file is v4 and round-trips exactly
+        // dropped key, save — the new file is v5 and round-trips exactly
         let v3 = "gpu=GTX_1080Ti c=1 wy=224 wx=224 m=64 k=3 kind=single \
             method=filter_split p=3 q=1 tuned_cycles=10234.5625 paper_cycles=11000.125\n";
         let mut cache = PlanCache::from_lines(v3).unwrap();
@@ -643,8 +748,8 @@ mod tests {
             },
         );
         let text = cache.to_lines();
-        assert!(text.starts_with("# pasconv plan cache v4"), "{text}");
-        assert!(text.contains("stages=4 loading=ordered"), "{text}");
+        assert!(text.starts_with("# pasconv plan cache v5"), "{text}");
+        assert!(text.contains("stages=4 loading=ordered epilogue=none"), "{text}");
         let back = PlanCache::from_lines(&text).unwrap();
         assert_eq!(back.stale_dropped(), 0);
         let t = back.get(&ConvProblem::single(224, 64, 3), &g).unwrap();
@@ -672,11 +777,20 @@ mod tests {
             &g,
             Decision { backend: "paper-tuned".into(), cycles: 7_000.25, tuned_cycles: 9_100.0 },
         );
+        // a fused decision for the SAME op as an unfused one: distinct key
+        cache.insert_dispatch_fused(
+            ConvOp::dense(ConvProblem::multi(256, 56, 256, 3)),
+            Epilogue::MaxPoolWriteback { k: 2, stride: 2 },
+            &g,
+            Decision { backend: "winograd".into(), cycles: 7_800.0, tuned_cycles: 11_500.0 },
+        );
         let text = cache.to_lines();
         assert!(text.contains("kind=dispatch backend=winograd"), "{text}");
         assert!(text.contains("stride=2 pad=1 groups=1"), "{text}");
+        assert!(text.contains("epilogue=none"), "{text}");
+        assert!(text.contains("epilogue=pool2s2"), "{text}");
         let back = PlanCache::from_lines(&text).unwrap();
-        assert_eq!(back.dispatch_len(), 3);
+        assert_eq!(back.dispatch_len(), 4);
         assert_eq!(back.len(), cache.len(), "plan entries survive alongside");
         let d = back
             .get_dispatch(&ConvOp::dense(ConvProblem::multi(256, 56, 256, 3)), &g)
@@ -687,19 +801,30 @@ mod tests {
             .get_dispatch(&ConvOp::strided(ConvProblem::multi(64, 56, 128, 3), 2, 1), &g)
             .unwrap();
         assert!((s2.cycles - 7_000.25).abs() == 0.0);
+        let fused = back
+            .get_dispatch_fused(
+                &ConvOp::dense(ConvProblem::multi(256, 56, 256, 3)),
+                Epilogue::MaxPoolWriteback { k: 2, stride: 2 },
+                &g,
+            )
+            .unwrap();
+        assert_eq!(fused.backend, "winograd");
         // the serialized form is a fixed point
         assert_eq!(back.to_lines(), text);
     }
 
     #[test]
-    fn v2_dispatch_lines_without_op_fields_parse_as_dense() {
-        // exactly what a v2 `tune --save` produced: no stride/pad/groups
+    fn pre_v5_dispatch_lines_are_dropped_not_defaulted() {
+        // exactly what a v2..v4 `tune --save` produced: no epilogue=.
+        // Defaulting to epilogue=none would serve a decision ranked
+        // without the fused axis — dropped and counted instead.
         let v2 = "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=dispatch backend=winograd \
                   cycles=1 tuned_cycles=2\n";
         let cache = PlanCache::from_lines(v2).unwrap();
-        assert_eq!(cache.dispatch_len(), 1);
+        assert_eq!(cache.dispatch_len(), 0);
+        assert_eq!(cache.stale_dropped(), 1);
         let op = ConvOp::dense(ConvProblem::multi(8, 14, 16, 3));
-        assert!(cache.get_dispatch(&op, &GpuSpec { name: "G", ..gtx_1080ti() }).is_some());
+        assert!(cache.get_dispatch(&op, &GpuSpec { name: "G", ..gtx_1080ti() }).is_none());
     }
 
     #[test]
@@ -719,49 +844,78 @@ mod tests {
 
     #[test]
     fn bad_dispatch_entries_are_rejected() {
+        // every fixture carries epilogue=none: without it the line is
+        // dropped as pre-v5 staleness and the corruption goes unnoticed
         // unknown backend tag
         assert!(PlanCache::from_lines(
-            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=dispatch backend=magic cycles=1 tuned_cycles=2"
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 epilogue=none kind=dispatch backend=magic cycles=1 tuned_cycles=2"
         )
         .is_err());
         // backend outside its supports() envelope (winograd is K=3-only)
         assert!(PlanCache::from_lines(
-            "gpu=G c=8 wy=14 wx=14 m=16 k=5 kind=dispatch backend=winograd cycles=1 tuned_cycles=2"
+            "gpu=G c=8 wy=14 wx=14 m=16 k=5 epilogue=none kind=dispatch backend=winograd cycles=1 tuned_cycles=2"
         )
         .is_err());
         // dispatched slower than the paper-tuned floor: stale or edited
         assert!(PlanCache::from_lines(
-            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=dispatch backend=winograd cycles=3 tuned_cycles=2"
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 epilogue=none kind=dispatch backend=winograd cycles=3 tuned_cycles=2"
         )
         .is_err());
         // missing cycle fields
         assert!(PlanCache::from_lines(
-            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=dispatch backend=winograd"
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 epilogue=none kind=dispatch backend=winograd"
         )
         .is_err());
-        // a well-formed entry parses
-        assert!(PlanCache::from_lines(
-            "gpu=G c=8 wy=14 wx=14 m=16 k=3 kind=dispatch backend=winograd cycles=1 tuned_cycles=2"
+        // a well-formed entry parses and is served
+        let ok = PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 epilogue=none kind=dispatch backend=winograd cycles=1 tuned_cycles=2"
         )
-        .is_ok());
+        .unwrap();
+        assert_eq!((ok.dispatch_len(), ok.stale_dropped()), (1, 0));
         // op-parameter validation: a depthwise K=5 op is outside
         // winograd's unit envelope, and invalid group splits fail
         assert!(PlanCache::from_lines(
-            "gpu=G c=8 wy=14 wx=14 m=8 k=5 stride=1 pad=2 groups=8 kind=dispatch \
+            "gpu=G c=8 wy=14 wx=14 m=8 k=5 stride=1 pad=2 groups=8 epilogue=none kind=dispatch \
              backend=winograd cycles=1 tuned_cycles=2"
         )
         .is_err());
         assert!(PlanCache::from_lines(
-            "gpu=G c=8 wy=14 wx=14 m=15 k=3 stride=1 pad=0 groups=2 kind=dispatch \
+            "gpu=G c=8 wy=14 wx=14 m=15 k=3 stride=1 pad=0 groups=2 epilogue=none kind=dispatch \
              backend=paper-tuned cycles=1 tuned_cycles=2"
         )
         .is_err());
         // a depthwise K=3 op through the paper backend parses
         assert!(PlanCache::from_lines(
-            "gpu=G c=8 wy=14 wx=14 m=8 k=3 stride=2 pad=1 groups=8 kind=dispatch \
+            "gpu=G c=8 wy=14 wx=14 m=8 k=3 stride=2 pad=1 groups=8 epilogue=none kind=dispatch \
              backend=paper-tuned cycles=1 tuned_cycles=2"
         )
         .is_ok());
+        // v5 epilogue validation: an unknown tag is corruption, not
+        // staleness — it errors rather than dropping
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 epilogue=blur3 kind=dispatch \
+             backend=winograd cycles=1 tuned_cycles=2"
+        )
+        .is_err());
+        // a pool epilogue that doesn't fit the op's output map errors
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 epilogue=pool16s16 kind=dispatch \
+             backend=winograd cycles=1 tuned_cycles=2"
+        )
+        .is_err());
+        // a well-formed fused entry parses and is served on the fused key
+        let fused = PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 epilogue=pool2s2 kind=dispatch \
+             backend=winograd cycles=1 tuned_cycles=2"
+        )
+        .unwrap();
+        assert_eq!(fused.dispatch_len(), 1);
+        let op = ConvOp::dense(ConvProblem::multi(8, 14, 16, 3));
+        let spec = GpuSpec { name: "G", ..gtx_1080ti() };
+        assert!(fused
+            .get_dispatch_fused(&op, Epilogue::MaxPoolWriteback { k: 2, stride: 2 }, &spec)
+            .is_some());
+        assert!(fused.get_dispatch(&op, &spec).is_none(), "fused key must not shadow none");
     }
 
     #[test]

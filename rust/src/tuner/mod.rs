@@ -234,6 +234,27 @@ pub fn store_dispatch(op: &crate::conv::ConvOp, spec: &GpuSpec, d: crate::backen
     global().lock().unwrap().insert_dispatch(*op, spec, d);
 }
 
+/// Memoized dispatch decision on the fused `(op, epilogue)` key — the
+/// v5 cache axis.  `Epilogue::None` is the same slice `cached_dispatch`
+/// reads, so fused and unfused lookups can never shadow each other.
+pub fn cached_dispatch_fused(
+    op: &crate::conv::ConvOp,
+    ep: crate::gpusim::Epilogue,
+    spec: &GpuSpec,
+) -> Option<crate::backend::Decision> {
+    global().lock().unwrap().get_dispatch_fused(op, ep, spec)
+}
+
+/// Record a fused dispatch decision (see `store_dispatch`).
+pub fn store_dispatch_fused(
+    op: &crate::conv::ConvOp,
+    ep: crate::gpusim::Epilogue,
+    spec: &GpuSpec,
+    d: crate::backend::Decision,
+) {
+    global().lock().unwrap().insert_dispatch_fused(*op, ep, spec, d);
+}
+
 /// Tuned-vs-paper summary over one suite — shared by the `tune` CLI
 /// subcommand and the `ablation_tuned_vs_paper` bench so they can never
 /// report different numbers for the same workloads.

@@ -7,10 +7,12 @@
 //! exceeds the naive sum of tensors.
 
 use pasconv::conv::{ConvOp, ConvProblem};
+use pasconv::gpusim::gtx_1080ti;
 use pasconv::graph::{
-    model_graph, plan_arena, topo_order, Graph, GraphBuilder, NodeId, Op, Shape, ARENA_ALIGN,
-    MODEL_NAMES,
+    execute, fuse, model_graph, plan_arena, reference_output, topo_order, zero_copy_aliases,
+    Graph, GraphBuilder, NodeId, Op, Shape, ARENA_ALIGN, MODEL_NAMES,
 };
+use pasconv::plans::paper_op_plan_for;
 use pasconv::util::prop::{check_no_shrink, Config};
 use pasconv::util::rng::Rng;
 
@@ -126,7 +128,7 @@ fn prop_topo_order_respects_edges() {
 fn prop_shape_inference_matches_conv_problem_dims() {
     check_no_shrink(&Config { cases: 96, seed: 33 }, random_graph, |g| {
         for n in g.nodes() {
-            if let Op::Conv { conv } = &n.op {
+            if let Op::Conv { conv, epilogue: _ } = &n.op {
                 let want = Shape::new(conv.core.m, conv.oy(), conv.ox());
                 if n.shape != want {
                     return Err(format!(
@@ -185,6 +187,151 @@ fn prop_arena_peak_bounded() {
     });
 }
 
+/// Small random graph biased toward the fusion pass's patterns
+/// (conv→relu, conv→relu→pool, add(·, conv), concat-of-convs), with
+/// maps tiny enough that the CPU reference executor stays cheap.  Ends
+/// in an identity pad sink: the pad is never fused, so the graph's
+/// reference output (its last node) survives rewriting and pins the
+/// value of everything upstream.
+fn small_fusable_graph(r: &mut Rng) -> Graph {
+    let mut b = GraphBuilder::new("fuseprop");
+    let c0 = *r.choose(&[1usize, 2, 4]);
+    let w0 = *r.choose(&[6usize, 8, 10]);
+    let mut last = b.input("in", Shape::new(c0, w0, w0));
+    let mut ids: Vec<NodeId> = vec![last];
+    let ops = r.range_usize(2, 6);
+    for i in 0..ops {
+        let src = *r.choose(&ids);
+        let s = b.node_shape(src);
+        let conv_p = |m: usize| ConvProblem { c: s.c, wy: s.h, wx: s.w, m, k: 3 };
+        last = match r.range_usize(0, 4) {
+            0 => {
+                // conv -> relu tail
+                let c = b.conv_same(&format!("c{i}"), src, conv_p(*r.choose(&[2usize, 4, 8]))).unwrap();
+                b.relu(&format!("c{i}.relu"), c).unwrap()
+            }
+            1 if s.h >= 2 && s.w >= 2 => {
+                // conv -> relu -> pool chain (the through-relu rewrite)
+                let c = b.conv_same(&format!("p{i}"), src, conv_p(*r.choose(&[2usize, 4]))).unwrap();
+                let rl = b.relu(&format!("p{i}.relu"), c).unwrap();
+                b.pool(&format!("p{i}.pool"), rl, 2, 2).unwrap()
+            }
+            2 => {
+                // residual: add(src, conv(src)) — conv is the second
+                // operand, exercising the commuted fold
+                let c = b.conv_same(&format!("r{i}"), src, conv_p(s.c)).unwrap();
+                b.add_skip(&format!("r{i}.add"), src, c).unwrap()
+            }
+            3 => {
+                // concat of two sibling convs — the zero-copy candidate
+                let a = b.conv_same(&format!("a{i}"), src, conv_p(*r.choose(&[2usize, 4]))).unwrap();
+                let c = b.conv_same(&format!("b{i}"), src, conv_p(*r.choose(&[2usize, 4]))).unwrap();
+                b.concat(&format!("cat{i}"), &[a, c]).unwrap()
+            }
+            _ => {
+                // plain glue that the pass must leave alone
+                b.pad(&format!("pad{i}"), src, s.h + 2, s.w + 2).unwrap()
+            }
+        };
+        ids.push(last);
+    }
+    let s = b.node_shape(last);
+    b.pad("sink", last, s.h, s.w).unwrap();
+    b.finish().unwrap()
+}
+
+#[test]
+fn prop_fusion_preserves_reference_semantics() {
+    // the tentpole's correctness bar: rewriting a graph through the
+    // fusion pass never changes the numbers — fused epilogues are
+    // bit-identical to the glue ops they replace (strict relu, strict
+    // max fold, commutative residual add, placement-only concat)
+    let spec = gtx_1080ti();
+    check_no_shrink(&Config { cases: 48, seed: 36 }, small_fusable_graph, |g| {
+        let (fg, rep) = fuse(g, &spec, paper_op_plan_for);
+        fg.validate().map_err(|e| format!("fused graph invalid: {e:#}"))?;
+        let want = reference_output(g);
+        let got = reference_output(&fg);
+        if want.len() != got.len() {
+            return Err(format!("output elems {} != {}", got.len(), want.len()));
+        }
+        for (i, (w, f)) in want.iter().zip(&got).enumerate() {
+            if w.to_bits() != f.to_bits() {
+                return Err(format!(
+                    "elem {i}: fused {f} != unfused {w} ({} nodes fused)",
+                    rep.nodes_fused
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fusion_never_loses_cycles() {
+    // the dispatcher's structural floor, as a property: the fused graph
+    // executes no slower than the unfused one, and never grows glue
+    let spec = gtx_1080ti();
+    check_no_shrink(&Config { cases: 48, seed: 37 }, random_graph, |g| {
+        let (fg, rep) = fuse(g, &spec, paper_op_plan_for);
+        let base = execute(g, &spec, paper_op_plan_for);
+        let fused = execute(&fg, &spec, paper_op_plan_for);
+        if fused.total_seconds > base.total_seconds * (1.0 + 1e-9) {
+            return Err(format!(
+                "fused {} > unfused {} ({} nodes fused)",
+                fused.total_seconds, base.total_seconds, rep.nodes_fused
+            ));
+        }
+        if fused.glue_seconds > base.glue_seconds * (1.0 + 1e-9) {
+            return Err(format!(
+                "fusion grew glue: {} > {}",
+                fused.glue_seconds, base.glue_seconds
+            ));
+        }
+        if rep.nodes_fused == 0 && fg.len() != g.len() {
+            return Err("report says nothing fused but the graph shrank".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_copy_concat_placements_are_disjoint_aligned_subranges() {
+    // every producer aliased into a zero-copy concat sits at an
+    // ARENA_ALIGN-aligned offset, inside the concat allocation, and no
+    // two producers of the same concat overlap
+    let spec = gtx_1080ti();
+    check_no_shrink(&Config { cases: 64, seed: 38 }, small_fusable_graph, |g| {
+        let (fg, _) = fuse(g, &spec, paper_op_plan_for);
+        let aliases = zero_copy_aliases(&fg);
+        let mut by_cat: std::collections::HashMap<NodeId, Vec<(usize, usize)>> =
+            std::collections::HashMap::new();
+        for (&prod, &(cat, off)) in &aliases {
+            let bytes = fg.node(prod).shape.bytes();
+            let cat_bytes = fg.node(cat).shape.bytes();
+            if off % ARENA_ALIGN != 0 {
+                return Err(format!("producer {prod}: unaligned offset {off}"));
+            }
+            if off + bytes > cat_bytes {
+                return Err(format!(
+                    "producer {prod}: [{off}, {}) outside concat's {cat_bytes} bytes",
+                    off + bytes
+                ));
+            }
+            by_cat.entry(cat).or_default().push((off, bytes));
+        }
+        for (cat, mut ranges) in by_cat {
+            ranges.sort_unstable();
+            for w in ranges.windows(2) {
+                if w[0].0 + w[0].1 > w[1].0 {
+                    return Err(format!("concat {cat}: producer sub-ranges overlap"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn model_graphs_satisfy_every_property() {
     // the five registered models are the graphs that matter: run the
@@ -201,7 +348,7 @@ fn model_graphs_satisfy_every_property() {
             for &i in &n.inputs {
                 assert!(pos[i] < pos[n.id], "{name}/{}", n.name);
             }
-            if let Op::Conv { conv } = &n.op {
+            if let Op::Conv { conv, epilogue: _ } = &n.op {
                 assert_eq!(n.shape, Shape::new(conv.core.m, conv.oy(), conv.ox()));
             }
         }

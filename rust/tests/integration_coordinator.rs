@@ -475,7 +475,7 @@ fn two_models_stay_resident_on_one_capped_shard() {
 
 #[test]
 fn model_execution_shares_a_pool_with_a_resident_tenant_under_cap() {
-    use pasconv::backend::dispatch_op_plan;
+    use pasconv::backend::dispatch_fused_op_plan;
     use pasconv::fleet::DevicePool;
     use pasconv::graph::{execute_pooled, model_graph, plan_arena, topo_order};
 
@@ -489,7 +489,7 @@ fn model_execution_shares_a_pool_with_a_resident_tenant_under_cap() {
 
     // the model executes to completion around the resident tenant and
     // the two together never burst the cap
-    let (report, plan) = execute_pooled(&g, &spec, dispatch_op_plan, 1, &mut pool)
+    let (report, plan) = execute_pooled(&g, &spec, dispatch_fused_op_plan, 1, &mut pool)
         .expect("model must fit beside the tenant");
     assert!(report.total_seconds > 0.0);
     assert!(plan.peak_bytes + resident_bytes <= pool.capacity());
@@ -499,13 +499,13 @@ fn model_execution_shares_a_pool_with_a_resident_tenant_under_cap() {
     // an execution that cannot fit beside the tenant errors out cleanly
     // (its partial allocations rolled back) instead of deadlocking
     let too_big = pool.capacity() / plan.peak_bytes + 2;
-    let err = execute_pooled(&g, &spec, dispatch_op_plan, too_big, &mut pool)
+    let err = execute_pooled(&g, &spec, dispatch_fused_op_plan, too_big, &mut pool)
         .expect_err("oversized batch must exhaust the pool");
     assert!(err.to_string().contains("exhausted"), "{err}");
     assert_eq!(pool.in_use_slab_bytes(), resident_bytes, "failed run rolled back");
 
     // and the original workload still runs afterwards — no poisoning
-    execute_pooled(&g, &spec, dispatch_op_plan, 1, &mut pool).expect("pool still serves");
+    execute_pooled(&g, &spec, dispatch_fused_op_plan, 1, &mut pool).expect("pool still serves");
     pool.free(resident).unwrap();
     assert_eq!(pool.in_use_slab_bytes(), 0);
 }

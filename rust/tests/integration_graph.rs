@@ -78,8 +78,8 @@ fn graph_conv_plans_identical_to_standalone() {
         let report = execute(&graph, &g, op_plan_for);
         for nr in &report.nodes {
             let node = graph.node(nr.id);
-            if let Op::Conv { conv } = &node.op {
-                let standalone = op_plan_for(conv, &g);
+            if let Op::Conv { conv, epilogue } = &node.op {
+                let standalone = op_plan_for(conv, *epilogue, &g);
                 assert_eq!(nr.detail, standalone.name, "{name}/{}", node.name);
                 let t = simulate(&g, &standalone).seconds;
                 assert!(
@@ -114,12 +114,12 @@ fn model_layers_match_their_suites() {
 #[test]
 fn mobilenet_executes_through_backend_dispatch() {
     // the ISSUE-5 acceptance criterion: MobileNetV1 runs end-to-end
-    // through backend::dispatch_op_plan, and the dispatched graph never
-    // loses to the tuned-paper-only op path
+    // through backend::dispatch_fused_op_plan, and the dispatched graph
+    // never loses to the tuned-paper-only op path
     let g = gtx_1080ti();
     let graph = model_graph("mobilenet_v1").unwrap();
     let tuned = execute(&graph, &g, op_plan_for);
-    let dispatched = execute(&graph, &g, pasconv::backend::dispatch_op_plan);
+    let dispatched = execute(&graph, &g, pasconv::backend::dispatch_fused_op_plan);
     assert!(dispatched.total_seconds > 0.0 && dispatched.total_seconds.is_finite());
     assert!(
         dispatched.total_seconds <= tuned.total_seconds * (1.0 + 1e-9),

@@ -14,7 +14,7 @@
 //!    single arena all run, the pool drains to zero, and exhaustion on
 //!    an undersized pool is a clean error that poisons nothing.
 
-use pasconv::backend::dispatch_op_plan;
+use pasconv::backend::dispatch_fused_op_plan;
 use pasconv::fleet::{DevicePool, PoolError};
 use pasconv::gpusim::gtx_1080ti;
 use pasconv::graph::{
@@ -28,7 +28,7 @@ fn pooled_peak_never_exceeds_arena_peak_on_any_model() {
         let g = model_graph(name).unwrap();
         let arena = plan_arena(&g, &topo_order(&g));
         let mut pool = DevicePool::new(spec.dram_bytes as usize);
-        let (_, plan) = execute_pooled(&g, &spec, dispatch_op_plan, 1, &mut pool).unwrap();
+        let (_, plan) = execute_pooled(&g, &spec, dispatch_fused_op_plan, 1, &mut pool).unwrap();
         assert!(
             plan.peak_bytes <= arena.peak_bytes,
             "{name}: pooled peak {} above arena peak {}",
@@ -50,10 +50,10 @@ fn pooled_timings_bit_identical_on_any_model_and_batch() {
     for name in MODEL_NAMES {
         let g = model_graph(name).unwrap();
         for batch in [1usize, 4] {
-            let plain = execute_batched(&g, &spec, dispatch_op_plan, batch);
+            let plain = execute_batched(&g, &spec, dispatch_fused_op_plan, batch);
             let mut pool = DevicePool::new(spec.dram_bytes as usize);
             let (pooled, _) =
-                execute_pooled(&g, &spec, dispatch_op_plan, batch, &mut pool).unwrap();
+                execute_pooled(&g, &spec, dispatch_fused_op_plan, batch, &mut pool).unwrap();
             assert_eq!(
                 pooled.total_seconds.to_bits(),
                 plain.total_seconds.to_bits(),
@@ -83,8 +83,8 @@ fn warm_pool_reexecution_is_all_reuse_and_still_bit_identical() {
     let spec = gtx_1080ti();
     let g = model_graph("resnet18").unwrap();
     let mut pool = DevicePool::new(spec.dram_bytes as usize);
-    let (cold_report, cold) = execute_pooled(&g, &spec, dispatch_op_plan, 1, &mut pool).unwrap();
-    let (warm_report, warm) = execute_pooled(&g, &spec, dispatch_op_plan, 1, &mut pool).unwrap();
+    let (cold_report, cold) = execute_pooled(&g, &spec, dispatch_fused_op_plan, 1, &mut pool).unwrap();
+    let (warm_report, warm) = execute_pooled(&g, &spec, dispatch_fused_op_plan, 1, &mut pool).unwrap();
     assert_eq!(warm.peak_bytes, cold.peak_bytes);
     assert_eq!(warm.allocs, cold.allocs);
     // every tensor shape was parked by run one: run two carves nothing
@@ -108,7 +108,7 @@ fn five_models_share_one_pool_sized_for_the_worst_arena() {
     let mut pool = DevicePool::new(worst_arena);
     for name in MODEL_NAMES {
         let g = model_graph(name).unwrap();
-        let (_, plan) = execute_pooled(&g, &spec, dispatch_op_plan, 1, &mut pool)
+        let (_, plan) = execute_pooled(&g, &spec, dispatch_fused_op_plan, 1, &mut pool)
             .unwrap_or_else(|e| panic!("{name} must fit a worst-arena pool: {e}"));
         assert!(plan.peak_bytes <= worst_arena, "{name}");
         assert!(pool.slab_bytes() <= pool.capacity(), "{name}: cap burst");
@@ -126,7 +126,7 @@ fn exhaustion_is_a_clean_error_not_a_poisoned_pool() {
     let spec = gtx_1080ti();
     let vgg = model_graph("vgg16").unwrap();
     let mut pool = DevicePool::new(1 << 20); // 1 MiB: far below vgg16's floor
-    match execute_pooled(&vgg, &spec, dispatch_op_plan, 1, &mut pool) {
+    match execute_pooled(&vgg, &spec, dispatch_fused_op_plan, 1, &mut pool) {
         Err(PoolError::Exhausted { capacity, .. }) => assert_eq!(capacity, 1 << 20),
         other => panic!("undersized pool must exhaust, got {other:?}"),
     }
@@ -137,6 +137,6 @@ fn exhaustion_is_a_clean_error_not_a_poisoned_pool() {
     let x = b.input("in", pasconv::graph::Shape::new(8, 14, 14));
     b.conv_same("c0", x, pasconv::conv::ConvProblem::multi(8, 14, 8, 3)).unwrap();
     let tiny = b.finish().unwrap();
-    let (_, plan) = execute_pooled(&tiny, &spec, dispatch_op_plan, 1, &mut pool).unwrap();
+    let (_, plan) = execute_pooled(&tiny, &spec, dispatch_fused_op_plan, 1, &mut pool).unwrap();
     assert!(plan.peak_bytes <= pool.capacity());
 }

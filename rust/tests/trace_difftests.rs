@@ -65,12 +65,12 @@ fn traced_graph_execution_is_bitwise_identical_under_both_sinks() {
     for name in MODEL_NAMES {
         for batch in [1usize, 4] {
             let graph = model_graph(name).unwrap();
-            let base = execute_batched(&graph, &g, backend::dispatch_op_plan, batch);
+            let base = execute_batched(&graph, &g, backend::dispatch_fused_op_plan, batch);
             let mut noop = NoopSink;
             let with_noop = execute_batched_traced(
                 &graph,
                 &g,
-                backend::dispatch_op_plan,
+                backend::dispatch_fused_op_plan,
                 batch,
                 &mut noop,
                 0.0,
@@ -80,7 +80,7 @@ fn traced_graph_execution_is_bitwise_identical_under_both_sinks() {
             let with_rec = execute_batched_traced(
                 &graph,
                 &g,
-                backend::dispatch_op_plan,
+                backend::dispatch_fused_op_plan,
                 batch,
                 &mut rec,
                 0.0,
