@@ -9,6 +9,10 @@ which bytes are code:
 * raw strings r"..", r#".."#, br#".."# with any hash depth
 * char literals ('x', '\n', '\u{1F600}') vs lifetimes (&'a, <'de>)
 
+It also flags comment-looking lines that start with a single `/` (a
+`//` that lost a slash parses as division and can silently change
+numerics); genuine `/ x`-style expression continuations are exempt.
+
 Run as `python3 check_syntax.py [root]` (default: the repo's rust/
 directory); exits non-zero listing every unbalanced file.  CI runs it
 alongside the mirror validators so a syntax-broken .rs file fails fast
@@ -110,6 +114,34 @@ def _raw_start(text, i):
     return j < len(text) and text[j] == '"'
 
 
+def comment_typo_lines(text):
+    """Line numbers of code lines that look like a comment that lost a
+    slash: real *code* (per the tokenizer — so `//` and `/* */` bodies
+    never trigger) starting with a single `/`, in a position where no
+    binary `/` could continue the previous expression (the previous
+    code line ended with `;`, `{` or `}`, or there is none).  Legal
+    division continuations like
+
+        let exposed = latency_exposure(...)
+            / depth;
+
+    stay unflagged because their previous code line ends mid-expression
+    (`)`, an identifier, an operator...)."""
+    code = {}
+    for line, c in strip_code(text):
+        code[line] = code.get(line, "") + c
+    flagged = []
+    prev_end = ""  # last char of the previous non-blank code line
+    for line in sorted(code):
+        s = code[line].strip()
+        if not s:
+            continue
+        if s.startswith("/") and not s.startswith("//") and prev_end in ("", ";", "{", "}"):
+            flagged.append(line)
+        prev_end = s[-1]
+    return flagged
+
+
 def check_file(path):
     """Return a list of error strings (empty = balanced)."""
     text = path.read_text()
@@ -127,6 +159,8 @@ def check_file(path):
                 if OPEN[o] != c:
                     errors.append(f"line {line}: {c!r} closes {o!r} from line {oline}")
                     break
+        for ln in comment_typo_lines(text):
+            errors.append(f"line {ln}: comment-looking line starts with a single '/'")
     except SyntaxError as e:
         errors.append(str(e))
     if not errors:

@@ -24,6 +24,7 @@ class GpuSpec:
     max_threads_per_sm: int
     warp_size: int
     dram_bytes: int = 0
+    l2_bytes: int = 0
 
     def clock_hz(self):
         return self.clock_mhz * 1e6
@@ -60,15 +61,29 @@ class GpuSpec:
     def cycles_to_secs(self, cycles):
         return cycles / self.clock_hz()
 
+    def l2_resident_budget(self):
+        """L2 capacity usable for cross-image filter residency: the
+        cache minus a reserve for the streaming working set (map strips
+        and writeback lines passing through)."""
+        return max(self.l2_bytes - L2_STREAM_RESERVE_BYTES, 0)
+
+
+# L2 lines the streaming traffic (maps in, outputs out) occupies while
+# a resident filter set is held: residency only qualifies for what is
+# left after this reserve.
+L2_STREAM_RESERVE_BYTES = 256 * 1024
+
 
 def gtx_1080ti():
     return GpuSpec("GTX 1080Ti", 258, 484.0, 1480.0, 28, 128, 2, 96 * 1024,
-                   64 * 1024, 2048, 32, 11 * 1024 * 1024 * 1024)
+                   64 * 1024, 2048, 32, 11 * 1024 * 1024 * 1024,
+                   2816 * 1024)
 
 
 def titan_x_maxwell():
     return GpuSpec("GTX Titan X", 368, 336.5, 1000.0, 24, 128, 2, 96 * 1024,
-                   64 * 1024, 2048, 32, 12 * 1024 * 1024 * 1024)
+                   64 * 1024, 2048, 32, 12 * 1024 * 1024 * 1024,
+                   3 * 1024 * 1024)
 
 
 # ---- memory ----
@@ -140,6 +155,14 @@ class Round:
     segment_bytes: int
     fma_ops: float
     eff_override: Optional[float] = None
+    # share of load_bytes that is filter traffic (and its native segment)
+    # — what cross-image residency can strip (pipeline.rs::Round)
+    filter_bytes: float = 0.0
+    filter_seg: int = 0
+    # latency-hiding floor: bytes in flight even when load_bytes shrank
+    # because part of the traffic is served by L2 instead of DRAM
+    # (0 = load_bytes is the in-flight volume)
+    inflight_bytes: float = 0.0
 
 
 def mixed_round(streams, fma_ops):
@@ -153,6 +176,49 @@ def mixed_round(streams, fma_ops):
     issues = sum(b / s for b, s in streams if s > 0)
     seg = max(int(round(total / issues)), 1) if issues > 0 else 128
     return Round(total, seg, fma_ops, eff)
+
+
+def mixed_round_with_filter(filter_stream, rest, fma_ops):
+    """Mirror of Round::mixed_with_filter: a mixed round whose first
+    stream is the filter traffic, remembered so residency can strip it."""
+    import dataclasses
+    r = mixed_round([filter_stream] + list(rest), fma_ops)
+    fb, fs = filter_stream
+    return dataclasses.replace(r, filter_bytes=fb, filter_seg=fs)
+
+
+def tagged_filter(r, filter_bytes, filter_seg):
+    """Mirror of Round::tagged_filter: mark `filter_bytes` of an
+    existing round's traffic as filter loads."""
+    import dataclasses
+    assert filter_bytes <= r.load_bytes + 1e-9, \
+        f"filter {filter_bytes} > load {r.load_bytes}"
+    return dataclasses.replace(r, filter_bytes=filter_bytes,
+                               filter_seg=filter_seg)
+
+
+def round_without_filter_loads(r):
+    """Mirror of Round::without_filter_loads: the warm-image twin of a
+    round.  Filter loads still issue (they hit the resident copy, so
+    the issue pattern and in-flight volume that hide latency are the
+    cold round's — inflight_bytes pins that floor), but they cost no
+    DRAM bus time: the round's DRAM bytes drop to the non-filter share,
+    repriced by bus-time subtraction (floored at full speed)."""
+    if r.filter_bytes <= 0.0:
+        return r
+    rem_bytes = max(r.load_bytes - r.filter_bytes, 0.0)
+    if rem_bytes <= 0.0:
+        return Round(0.0, r.segment_bytes, r.fma_ops, None, 0.0, 0,
+                     r.load_bytes)
+    eff = r.eff_override if r.eff_override is not None else \
+        segment_efficiency(r.segment_bytes)
+    filter_eff = segment_efficiency(max(r.filter_seg, 1))
+    total_bus = r.load_bytes / max(eff, 1e-9)
+    rem_bus = max(total_bus - r.filter_bytes / max(filter_eff, 1e-9),
+                  rem_bytes)
+    new_eff = min(rem_bytes / rem_bus, 1.0)
+    return Round(rem_bytes, r.segment_bytes, r.fma_ops, new_eff, 0.0, 0,
+                 r.load_bytes)
 
 
 @dataclass
@@ -189,7 +255,8 @@ def load_cycles(spec, cfg, rnd):
     stream = rnd.load_bytes / (per_sm_bw * max(occ, 1e-9))
     depth = 1.0 if cfg.loading == TILEWISE else float(cfg.stages - 1)
     exposed = spec.mem_latency_cycles * latency_exposure(
-        spec, cfg.threads_per_sm, rnd.load_bytes) / depth
+        spec, cfg.threads_per_sm,
+        max(rnd.load_bytes, rnd.inflight_bytes)) / depth
     sync = ORDERED_SYNC_CYCLES if cfg.loading == ORDERED else 0.0
     return exposed + stream + sync
 
@@ -300,6 +367,12 @@ class KernelPlan:
     # it streams IN through the tail (the residual operand for EP_ADD)
     epilogue: str = EP_NONE
     epilogue_read_bytes: float = 0.0
+    # smem cost of pinning one SM's distinct filters across batched
+    # images (0 = the plan never qualifies for smem filter residency)
+    filter_resident_smem_bytes: int = 0
+    # total filter tensor the op touches per image — what must stay in
+    # L2 for the cache-resident fallback tier (0 = never qualifies)
+    filter_l2_footprint_bytes: int = 0
 
     def staged(self, stages, loading=CYCLIC):
         """Mirror of KernelPlan::staged: deepen the ping-pong pipeline to
@@ -327,6 +400,8 @@ class KernelPlan:
             stage_bytes=self.stage_bytes,
             epilogue=self.epilogue,
             epilogue_read_bytes=self.epilogue_read_bytes,
+            filter_resident_smem_bytes=self.filter_resident_smem_bytes,
+            filter_l2_footprint_bytes=self.filter_l2_footprint_bytes,
         )
 
     def batched(self, n):
@@ -348,6 +423,71 @@ class KernelPlan:
             stage_bytes=self.stage_bytes,
             epilogue=self.epilogue,
             epilogue_read_bytes=self.epilogue_read_bytes * n,
+            filter_resident_smem_bytes=self.filter_resident_smem_bytes,
+            filter_l2_footprint_bytes=self.filter_l2_footprint_bytes,
+        )
+
+    def resident_filter_tier(self, spec):
+        """Mirror of KernelPlan::resident_filter_tier: where the filter
+        working set can stay across batched images.  "smem" — one SM's
+        distinct filters pinned in shared memory left after the staging
+        buffers (strongest tier: no cache pressure); else "l2" — the
+        op's whole filter tensor fits the L2 residency budget, so warm
+        images hit cache instead of DRAM; else None."""
+        if (self.filter_resident_smem_bytes > 0
+                and self.smem_bytes_per_sm + self.filter_resident_smem_bytes
+                <= spec.shared_mem_bytes):
+            return "smem"
+        if (self.filter_l2_footprint_bytes > 0
+                and self.filter_l2_footprint_bytes
+                <= spec.l2_resident_budget()):
+            return "l2"
+        return None
+
+    def filters_can_stay_resident(self, spec):
+        return self.resident_filter_tier(spec) is not None
+
+    def batched_resident(self, n, spec):
+        """Mirror of KernelPlan::batched_resident: batch n images with
+        the filters resident (smem-pinned or L2) — the first image pays
+        the cold rounds, the remaining n-1 run warm (filter DRAM traffic
+        stripped, issue pattern and latency hiding kept).  Falls back to
+        plain `batched` when no tier fits or any warm round would price
+        above its cold twin."""
+        assert n >= 1
+        if n == 1:
+            return self
+        tier = self.resident_filter_tier(spec)
+        if tier is None:
+            return self.batched(n)
+        smem_extra = self.filter_resident_smem_bytes if tier == "smem" else 0
+        cfg = ExecConfig(self.sms_active, self.threads_per_sm,
+                         self.compute_efficiency,
+                         self.launch_overhead_cycles,
+                         self.stages, self.loading)
+        warm = [(round_without_filter_loads(r), c) for (r, c) in self.runs]
+        wins = all(
+            load_cycles(spec, cfg, w) <= load_cycles(spec, cfg, cold) + 1e-9
+            for ((cold, _), (w, _)) in zip(self.runs, warm))
+        if not wins:
+            return self.batched(n)
+        return KernelPlan(
+            name=f"{self.name} xb{n}+fr",
+            runs=list(self.runs) + list(warm) * (n - 1),
+            sms_active=self.sms_active,
+            threads_per_sm=self.threads_per_sm,
+            compute_efficiency=self.compute_efficiency,
+            output_bytes=self.output_bytes * n,
+            smem_bytes_per_sm=self.smem_bytes_per_sm + smem_extra,
+            total_fma=self.total_fma * n,
+            launch_overhead_cycles=self.launch_overhead_cycles,
+            stages=self.stages,
+            loading=self.loading,
+            stage_bytes=self.stage_bytes,
+            epilogue=self.epilogue,
+            epilogue_read_bytes=self.epilogue_read_bytes * n,
+            filter_resident_smem_bytes=self.filter_resident_smem_bytes,
+            filter_l2_footprint_bytes=self.filter_l2_footprint_bytes,
         )
 
     def decimated(self, keep):
@@ -358,7 +498,8 @@ class KernelPlan:
         if keep == 1.0:
             return self
         runs = [(Round(r.load_bytes, r.segment_bytes, r.fma_ops * keep,
-                       r.eff_override), n) for (r, n) in self.runs]
+                       r.eff_override, r.filter_bytes, r.filter_seg), n)
+                for (r, n) in self.runs]
         return KernelPlan(
             name=self.name,
             runs=runs,
@@ -374,6 +515,8 @@ class KernelPlan:
             stage_bytes=self.stage_bytes,
             epilogue=self.epilogue,
             epilogue_read_bytes=self.epilogue_read_bytes * keep,
+            filter_resident_smem_bytes=self.filter_resident_smem_bytes,
+            filter_l2_footprint_bytes=self.filter_l2_footprint_bytes,
         )
 
     def grouped(self, groups, max_sms):
@@ -399,6 +542,10 @@ class KernelPlan:
             stage_bytes=self.stage_bytes,
             epilogue=self.epilogue,
             epilogue_read_bytes=self.epilogue_read_bytes * groups,
+            filter_resident_smem_bytes=self.filter_resident_smem_bytes
+            * waves,
+            filter_l2_footprint_bytes=self.filter_l2_footprint_bytes
+            * groups,
         )
 
     def fused(self, ep, out_hw):
@@ -427,6 +574,12 @@ class KernelPlan:
 def plan_dram_load_bytes(plan):
     """Mirror of KernelPlan::dram_load_bytes on the run-length form."""
     return sum(r.load_bytes * n for (r, n) in plan.runs) * plan.sms_active
+
+
+def plan_filter_load_bytes(plan):
+    """Mirror of KernelPlan::filter_load_bytes: the filter share of the
+    DRAM load traffic (what residency strips on warm images)."""
+    return sum(r.filter_bytes * n for (r, n) in plan.runs) * plan.sms_active
 
 
 def simulate_parts(spec, plan):

@@ -527,21 +527,32 @@ def plan_pooled(g, pool, batch=1):
 # ---- execution (mirror of graph/exec.rs::execute) ----
 
 def execute(g, spec, planner, batch=1):
-    """Returns (total_s, conv_s, glue_s, per_conv_details) — planner is
-    a fn(op, spec, ep) -> KernelPlan."""
+    """Returns (total_s, conv_s, glue_s, per_conv_details, residency) —
+    planner is a fn(op, spec, ep) -> KernelPlan.  Batched serving runs
+    each conv through KernelPlan.batched_resident (exec.rs::
+    execute_batched); residency = (resident_conv_layers,
+    resident_filter_bytes_saved)."""
+    from gpusim import plan_dram_load_bytes
     conv_s = 0.0
     glue_s = 0.0
     details = []
+    resident = 0
+    resident_saved = 0.0
     for n in g.nodes:
         if n.kind == "conv":
-            plan = planner(n.conv, spec, n.epilogue).batched(batch)
+            unit = planner(n.conv, spec, n.epilogue)
+            plan = unit.batched_resident(batch, spec)
+            if plan.name.endswith("+fr"):
+                resident += 1
+                resident_saved += (plan_dram_load_bytes(unit.batched(batch))
+                                   - plan_dram_load_bytes(plan))
             s = spec.cycles_to_secs(simulate_cycles(spec, plan))
             conv_s += s
             details.append((n.name, n.conv, plan.name, s))
         elif n.kind != "input":
             s = spec.cycles_to_secs(glue_cycles(spec, glue_bytes(g, n) * batch))
             glue_s += s
-    return conv_s + glue_s, conv_s, glue_s, details
+    return conv_s + glue_s, conv_s, glue_s, details, (resident, resident_saved)
 
 
 def model_report(name, spec, planner, batch=1, fused=False):
@@ -549,7 +560,7 @@ def model_report(name, spec, planner, batch=1, fused=False):
     fusion = None
     if fused:
         g, fusion = fuse(g, spec, planner)
-    total, conv_s, glue_s, details = execute(g, spec, planner, batch)
+    total, conv_s, glue_s, details, residency = execute(g, spec, planner, batch)
     peak, naive, floor = plan_arena(g)
     rep = {
         "name": name, "nodes": len(g.nodes),
@@ -557,6 +568,7 @@ def model_report(name, spec, planner, batch=1, fused=False):
         "total": total, "conv": conv_s, "glue": glue_s,
         "peak": peak, "naive": naive, "floor": floor,
         "details": details,
+        "resident_layers": residency[0], "resident_saved": residency[1],
     }
     if fusion is not None:
         rep["fusion"] = fusion

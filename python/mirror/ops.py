@@ -5,12 +5,16 @@ native op schedules (decimated strips for stride, side-by-side groups),
 the generic lowered route every other backend serves, and the op
 dispatcher with its naive-lowered paper-tuned floor."""
 
+import dataclasses
 from dataclasses import dataclass
 
 import backends
 import tuner
-from gpusim import EP_NONE, simulate_cycles
-from plans import ConvProblem
+from gpusim import (EP_ADD, EP_NONE, EP_RELU, ep_pooled_hw, load_cycles,
+                    round_without_filter_loads, simulate_cycles,
+                    simulate_pipeline_runs, writeback_tail_cycles)
+from plans import (BYTES_F32, ConvProblem, multi_choice, single_choice,
+                   single_recipe, stage_bytes_multi, stride_recipe)
 
 
 @dataclass(frozen=True)
@@ -101,6 +105,161 @@ class ConvOp:
         return s
 
 
+# ---- op-native tuning (mirror of tuner::{score_op, build_op_plan,
+# tune_op, tuned_op, tuned_op_plan}) ----
+
+def op_objective(op, ep, n):
+    """Mirror of OpObjective::for_op: (keep, groups, n, ep, out_hw)."""
+    assert n >= 1
+    return (op.output_keep_fraction(), op.groups, n, ep,
+            (op.oy(), op.ox()))
+
+
+def score_op(unit, spec, params, obj):
+    """Mirror of tuner::score::score_op — exact simulated cycles of a
+    unit candidate pushed through the op transforms (decimated, grouped,
+    fused, batched with cross-image filter residency where it
+    qualifies), in runs form."""
+    keep, groups, n, ep, out_hw = obj
+    if params[0] == "single":
+        _, method, pp, q, st, ld = params
+        c = single_choice(unit, spec, method, pp, q)
+        first, tail, sms, threads, smem_b, stage_b, resident = \
+            single_recipe(unit, spec, c)
+        runs = [(first, 1)]
+        if tail is not None:
+            runs.append(tail)
+        smem_staged = min(smem_b, spec.shared_mem_bytes) + (st - 2) * stage_b
+        l2_fp = unit.m * unit.k * unit.k * BYTES_F32
+    else:
+        _, s, wx, mp, st, ld = params
+        c = multi_choice(unit, spec, s, wx, mp)
+        rnd, count, sms, threads, resident = stride_recipe(unit, spec, c)
+        runs = [(rnd, count)]
+        smem_staged = c.smem_bytes + (st - 2) * stage_bytes_multi(
+            s, wx, mp, unit.k)
+        l2_fp = unit.m * unit.c * unit.k * unit.k * BYTES_F32
+    # decimation: only the kept rows' FMAs are charged, loads stay
+    runs = [(dataclasses.replace(r, fma_ops=r.fma_ops * keep), cnt)
+            for (r, cnt) in runs]
+    # grouping: par groups side by side, the rest as sequential waves
+    par = min(max(spec.sm_count // sms, 1), groups)
+    waves = (groups + par - 1) // par
+    sms_g = sms * par
+    per_image = sum(cnt for _, cnt in runs) * waves
+    if per_image * n > tuner.MAX_ROUNDS:
+        return None
+    image_runs = list(runs) * waves
+    # epilogue pricing against the op-level output map
+    out = unit.out_elems() * BYTES_F32 * keep * groups
+    ep_read = 0.0
+    if ep in (EP_NONE, EP_RELU):
+        pass
+    elif ep == EP_ADD:
+        ep_read = out
+    else:
+        oy, ox = out_hw
+        py, px = ep_pooled_hw(ep, oy, ox)
+        out *= (py * px) / (oy * ox)
+    cfg = tuner._exec_config(sms_g, threads, st, ld)
+    # cross-image filter residency: the capacity and warm-vs-cold guards
+    # of KernelPlan::batched_resident, in recipe form (the grouped plan
+    # pins every wave's filters in smem, hence resident x waves; the L2
+    # tier must hold every group's filter tensor, hence footprint x
+    # groups)
+    resident_g = resident * waves
+    l2_fp_g = l2_fp * groups
+    fits = ((resident_g > 0
+             and smem_staged + resident_g <= spec.shared_mem_bytes)
+            or (l2_fp_g > 0 and l2_fp_g <= spec.l2_resident_budget()))
+    qualify = (n > 1 and fits
+               and all(load_cycles(spec, cfg, round_without_filter_loads(r))
+                       <= load_cycles(spec, cfg, r) + 1e-9
+                       for (r, _) in image_runs))
+    all_runs = list(image_runs)
+    for _ in range(1, n):
+        if qualify:
+            all_runs.extend((round_without_filter_loads(r), cnt)
+                            for (r, cnt) in image_runs)
+        else:
+            all_runs.extend(image_runs)
+    t, _ = simulate_pipeline_runs(spec, cfg, all_runs)
+    loads = sum(r.load_bytes * cnt for (r, cnt) in all_runs) * sms_g
+    out_total = out * n
+    ep_total = ep_read * n
+    tail_c = writeback_tail_cycles(spec, out_total + ep_total, st)
+    floor = (loads + out_total + ep_total) / spec.bytes_per_cycle()
+    return t + max(tail_c, floor - t)
+
+
+def build_op_plan(op, ep, n, spec, params):
+    """Mirror of tuner::build_op_plan: the unit plan for `params` pushed
+    through the serving transforms, native vs lowered priced and the
+    faster kept."""
+    assert op.valid() and n >= 1
+    unit = tuner.build_plan(op.unit(), spec, params)
+
+    def finish(pl):
+        return pl.fused(ep, (op.oy(), op.ox())).batched_resident(n, spec)
+
+    native_base = unit.decimated(op.output_keep_fraction()).grouped(
+        op.groups, spec.sm_count)
+    native_base = _rename(native_base, op_plan_name(unit.name, op, True))
+    native = finish(native_base)
+    if op.groups == 1 and op.output_keep_fraction() == 1.0:
+        return native  # dense: the lowering IS the native route
+    lowered_base = _rename(unit.batched(op.groups),
+                           op_plan_name(unit.name, op, False))
+    lowered = finish(lowered_base)
+    if simulate_cycles(spec, native) <= simulate_cycles(spec, lowered):
+        return native
+    return lowered
+
+
+def tune_op(op, ep, n, spec):
+    """Mirror of tuner::tune_op: direct search over the unit plan space
+    under the op-level objective, seeded (never-lose) by the inherited-
+    geometry plan.  Returns (tuned_cycles, params, inherited_cycles)."""
+    assert op.valid() and n >= 1
+    inherited = tuner.tuned_params(op.unit(), spec)
+    inherited_cycles = simulate_cycles(
+        spec, build_op_plan(op, ep, n, spec, inherited))
+    obj = op_objective(op, ep, n)
+    scored = []
+    for cand in tuner.enumerate_params(op.unit(), spec):
+        s = score_op(op.unit(), spec, cand, obj)
+        if s is not None:
+            scored.append((s, cand))
+    scored.sort(key=lambda x: x[0])
+    best = (inherited_cycles, inherited)
+    checked = 0
+    for _, params in scored:
+        if checked == tuner.TOP_K:
+            break
+        plan = build_op_plan(op, ep, n, spec, params)
+        if not tuner.is_legal(spec, plan):
+            continue
+        checked += 1
+        cycles = simulate_cycles(spec, plan)
+        if cycles < best[0]:
+            best = (cycles, params)
+    return best[0], best[1], inherited_cycles
+
+
+_OPTUNE_CACHE = {}
+
+
+def tuned_op(op, ep, n, spec):
+    key = (op, ep, n, spec.name)
+    if key not in _OPTUNE_CACHE:
+        _OPTUNE_CACHE[key] = tune_op(op, ep, n, spec)
+    return _OPTUNE_CACHE[key]
+
+
+def tuned_op_plan(op, ep, n, spec):
+    return build_op_plan(op, ep, n, spec, tuned_op(op, ep, n, spec)[1])
+
+
 # ---- op plans (mirror of ConvBackend::op_plan + impls::paper_op_plan) ----
 
 def op_plan_name(unit_name, op, native):
@@ -158,7 +317,12 @@ def op_coverage(name, supports, op):
 
 def backend_op_plan(name, op, spec):
     if name == "paper-tuned":
-        return paper_op_plan(tuner.tuned_plan, op, spec)
+        # mirror of impls::PaperTuned::op_plan — non-dense ops go
+        # through the OP-NATIVE tuner, never-lose vs the old
+        # paper_op_plan route by seeding
+        if op.is_dense():
+            return tuner.tuned_plan(op.core, spec)
+        return tuned_op_plan(op, EP_NONE, 1, spec)
     if name == "paper":
         from plans import paper_plan_for
         return paper_op_plan(paper_plan_for, op, spec)
@@ -166,6 +330,17 @@ def backend_op_plan(name, op, spec):
         if n == name:
             return lowered_plan(planfn, op, spec)
     raise KeyError(name)
+
+
+def batched_backend_op_plan(name, op, n, spec):
+    """Mirror of ConvBackend::batched_op_plan: paper-tuned re-tunes
+    under the batch-n objective (filter residency priced); every other
+    backend batches its op plan."""
+    if name == "paper-tuned":
+        if n == 1:
+            return backend_op_plan(name, op, spec)
+        return tuned_op_plan(op, EP_NONE, n, spec)
+    return backend_op_plan(name, op, spec).batched(n)
 
 
 def _decide_op_n(op, n, spec):
@@ -176,8 +351,10 @@ def _decide_op_n(op, n, spec):
     assert op.valid()
     floor = lowered_plan(tuner.tuned_plan, op, spec)
     tuned_cycles = simulate_cycles(spec, floor.batched(n))
+    # paper-tuned is ranked on its batched OP plan — op-native tuned,
+    # with cross-image filter residency where it qualifies
     best = (backends.PAPER_TUNED,
-            simulate_cycles(spec, backend_op_plan("paper-tuned", op, spec).batched(n)))
+            simulate_cycles(spec, batched_backend_op_plan("paper-tuned", op, n, spec)))
     for (name, supports, planfn) in backends.NON_TUNED_BACKENDS:
         if op_coverage(name, supports, op) is None:
             continue
@@ -236,8 +413,13 @@ def dispatch_op_plan(op, spec):
 # ---- fused dispatch (mirror of Dispatcher::decide_fused_op) ----
 
 def fused_backend_op_plan(name, op, ep, spec):
-    """Mirror of ConvBackend::fused_op_plan's default: the backend's op
-    plan with the epilogue folded into its writeback tail."""
+    """Mirror of ConvBackend::fused_op_plan: paper-tuned RE-TUNES over
+    the epilogue axis (impls::PaperTuned::fused_op_plan); every other
+    backend folds the epilogue into its op plan's writeback tail."""
+    if name == "paper-tuned":
+        if ep == EP_NONE:
+            return backend_op_plan(name, op, spec)
+        return tuned_op_plan(op, ep, 1, spec)
     return backend_op_plan(name, op, spec).fused(ep, (op.oy(), op.ox()))
 
 
@@ -288,10 +470,9 @@ def dispatch_fused_op_plan(op, ep, spec):
 
 
 def op_plan_for(op, spec, ep=EP_NONE):
-    """Mirror of plans::op_plan_for (the tuned paper op path, with the
-    epilogue folded into the writeback tail)."""
-    plan = backend_op_plan("paper-tuned", op, spec)
-    return plan if ep == EP_NONE else plan.fused(ep, (op.oy(), op.ox()))
+    """Mirror of plans::op_plan_for (the op-native tuned paper path —
+    fused plans are re-searched under the fused objective)."""
+    return fused_backend_op_plan("paper-tuned", op, ep, spec)
 
 
 def paper_op_plan_for(op, spec, ep=EP_NONE):

@@ -5,7 +5,8 @@ from dataclasses import dataclass
 from typing import Optional, Tuple
 
 from gpusim import (ExecConfig, KernelPlan, Round, mixed_round,
-                    simulate_cycles, simulate_pipeline_runs)
+                    mixed_round_with_filter, simulate_cycles,
+                    simulate_pipeline_runs, tagged_filter)
 
 BYTES_F32 = 4
 LAUNCH_OVERHEAD_CYCLES = 4_000.0
@@ -184,13 +185,15 @@ def single_recipe(p, spec, c):
         halo_bytes = ((p.k - 1) * p.wx * BYTES_F32) / sms
         fma = float(c.th1)
         filter_seg = min(m_per_sm * p.k * p.k * BYTES_F32, 128)
-        first = mixed_round([
+        first = mixed_round_with_filter(
             (filter_bytes, filter_seg),
-            (piece_bytes + halo_bytes, row_seg),
-        ], fma)
+            [(piece_bytes + halo_bytes, row_seg)], fma)
         tail = (Round(piece_bytes, row_seg, fma), c.p - 1) if c.p > 1 else None
+        # the SM's ceil(M/N_sm) filters are already resident by
+        # construction — pinning them across images costs their size
         return first, tail, sms, threads, c.d1_bytes, \
-            single_stage_bytes(p, spec, c.method, c.p, c.q)
+            single_stage_bytes(p, spec, c.method, c.p, c.q), \
+            m_per_sm * p.k * p.k * BYTES_F32
     else:
         wy_per_sm = ceil_div(p.wy, spec.sm_count)
         sms = min(ceil_div(p.wy, wy_per_sm), spec.sm_count)
@@ -199,17 +202,21 @@ def single_recipe(p, spec, c):
         piece_bytes = (m_per_round * p.k * p.k * BYTES_F32) / sms
         filter_seg = min(m_per_round * p.k * p.k * BYTES_F32, 128)
         fma = float(c.th2)
-        first = mixed_round([
+        first = mixed_round_with_filter(
             (piece_bytes, filter_seg),
-            (strip_bytes, row_seg),
-        ], fma)
-        tail = (Round(piece_bytes, filter_seg, fma), c.q - 1) if c.q > 1 else None
+            [(strip_bytes, row_seg)], fma)
+        tail = (tagged_filter(Round(piece_bytes, filter_seg, fma),
+                              piece_bytes, filter_seg),
+                c.q - 1) if c.q > 1 else None
+        # each SM streams ALL M filters past its strip: pinning them
+        # across images costs the full filter set
         return first, tail, sms, threads, c.d2_bytes, \
-            single_stage_bytes(p, spec, c.method, c.p, c.q)
+            single_stage_bytes(p, spec, c.method, c.p, c.q), \
+            p.m * p.k * p.k * BYTES_F32
 
 
 def single_plan_with_choice(p, spec, c):
-    first, tail, sms, threads, smem, stage = single_recipe(p, spec, c)
+    first, tail, sms, threads, smem, stage, resident = single_recipe(p, spec, c)
     runs = [(first, 1)]
     if tail is not None:
         runs.append(tail)
@@ -225,6 +232,8 @@ def single_plan_with_choice(p, spec, c):
         total_fma=float(p.fma_ops()),
         launch_overhead_cycles=LAUNCH_OVERHEAD_CYCLES,
         stage_bytes=stage,
+        filter_resident_smem_bytes=resident,
+        filter_l2_footprint_bytes=p.m * p.k * p.k * BYTES_F32,
     )
 
 
@@ -324,16 +333,19 @@ def stride_recipe(p, spec, c):
     filter_bytes = (c.s_bytes * c.m_prime) / min(strips, spec.sm_count)
     fma_per_round = float(c.m_prime * (c.s_bytes // BYTES_F32) * c.wx_prime)
 
-    rnd = mixed_round([
+    rnd = mixed_round_with_filter(
         (filter_bytes, c.s_bytes),
-        (map_bytes, 128),
-    ], fma_per_round)
+        [(map_bytes, 128)], fma_per_round)
     count = ceil_div(blocks * segs, sms_active)
-    return rnd, count, sms_active, paper_threads_per_sm(spec)
+    # distinct filter groups one SM walks (strips of the same group
+    # revisit the same filters, so this over-counts — conservative)
+    groups_per_sm = min(ceil_div(blocks, sms_active), groups)
+    resident = groups_per_sm * c.m_prime * p.c * p.k * p.k * BYTES_F32
+    return rnd, count, sms_active, paper_threads_per_sm(spec), resident
 
 
 def stride_plan_with_choice(p, spec, c):
-    rnd, count, sms, threads = stride_recipe(p, spec, c)
+    rnd, count, sms, threads, resident = stride_recipe(p, spec, c)
     return KernelPlan(
         name=f"ours-multi[S={c.s_bytes} M'={c.m_prime} W'x={c.wx_prime}]",
         runs=[(rnd, count)],
@@ -345,6 +357,8 @@ def stride_plan_with_choice(p, spec, c):
         total_fma=float(p.fma_ops()),
         launch_overhead_cycles=LAUNCH_OVERHEAD_CYCLES,
         stage_bytes=stage_bytes_multi(c.s_bytes, c.wx_prime, c.m_prime, p.k),
+        filter_resident_smem_bytes=resident,
+        filter_l2_footprint_bytes=p.m * p.c * p.k * p.k * BYTES_F32,
     )
 
 
@@ -357,7 +371,7 @@ def stride_plan_with_segment_choice(p, spec, s_bytes):
         nonlocal best
         if c.smem_bytes > half:
             return
-        rnd, count, sms, threads = stride_recipe(p, spec, c)
+        rnd, count, sms, threads, _ = stride_recipe(p, spec, c)
         cfg = ExecConfig(sms, threads, COMPUTE_EFFICIENCY, LAUNCH_OVERHEAD_CYCLES)
         t, _ = simulate_pipeline_runs(spec, cfg, [(rnd, count)])
         if best is None or t < best[0]:

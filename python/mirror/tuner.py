@@ -104,7 +104,7 @@ def score(p, spec, params):
     if params[0] == "single":
         _, method, pp, q, st, ld = params
         c = single_choice(p, spec, method, pp, q)
-        first, tail, sms, threads, _, _ = single_recipe(p, spec, c)
+        first, tail, sms, threads, _, _, _ = single_recipe(p, spec, c)
         runs = [(first, 1)]
         if tail is not None:
             if tail[1] > MAX_ROUNDS:
@@ -115,7 +115,7 @@ def score(p, spec, params):
         return t + _writeback(spec, p, t, loads, st)
     _, s, wx, mp, st, ld = params
     c = multi_choice(p, spec, s, wx, mp)
-    rnd, count, sms, threads = stride_recipe(p, spec, c)
+    rnd, count, sms, threads, _ = stride_recipe(p, spec, c)
     if count > MAX_ROUNDS:
         return None
     t, _ = simulate_pipeline_runs(spec, _exec_config(sms, threads, st, ld),
@@ -186,11 +186,16 @@ def tune(p, spec, staged=True):
 _CACHE = {}
 
 
-def tuned_plan(p, spec):
+def tuned_params(p, spec):
+    """Memoized unit-tuned PlanParams (mirror of tuner::tuned().params)."""
     key = (p, spec.name)
     if key not in _CACHE:
         _CACHE[key] = tune(p, spec)[1]
-    return build_plan(p, spec, _CACHE[key])
+    return _CACHE[key]
+
+
+def tuned_plan(p, spec):
+    return build_plan(p, spec, tuned_params(p, spec))
 
 
 def depth2_tuned_plan(p, spec):

@@ -231,10 +231,12 @@ def main():
 
     # the pinned §11 table (EXPERIMENTS.md) — drift fails CI
     check(max_fp == 205668352, f"largest job footprint pinned (got {max_fp})")
+    # re-pinned for ISSUE-10: op-native tuned dispatch times shift the
+    # arrival/completion interleaving, hence admission and pool peaks
     pinned = [
-        ("tight", tight, 500, 12, 12, 411287552, 5.935771e-3),
-        ("tight_bytes", tight_bytes, 502, 10, 10, 411202816, 6.539916e-3),
-        ("roomy", roomy, 512, 0, 0, 791509504, 6.511900e-3),
+        ("tight", tight, 500, 12, 12, 411293696, 5.487784e-3),
+        ("tight_bytes", tight_bytes, 501, 11, 11, 411289856, 5.569135e-3),
+        ("roomy", roomy, 512, 0, 0, 653215488, 6.356940e-3),
     ]
     for (label, r, acc, rej, mem, peak, p99) in pinned:
         check(r["accepted"] == acc and r["rejected"] == rej

@@ -35,7 +35,9 @@ from reference import reference_output
 PINNED = {
     "alexnet": (11, 7, 4, 0.1297, 4.40),
     "vgg16": (32, 19, 13, 1.3031, 8.93),
-    "resnet18": (44, 28, 16, 0.3700, 3.20),
+    # resnet18 re-pinned for ISSUE-10: op-native geometries win on the
+    # 1x1 projection layers even at n=1
+    "resnet18": (44, 28, 16, 0.3317, 3.20),
     "inception3a": (16, 10, 7, 0.0563, 2.37),
     "mobilenet_v1": (56, 29, 27, 0.2076, 63.9),
 }

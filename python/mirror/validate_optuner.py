@@ -1,0 +1,280 @@
+#!/usr/bin/env python3
+"""Replay the EXPERIMENTS.md §15 op-native tuning + filter-residency
+tables without a rust toolchain, and enforce the ISSUE-10 acceptance
+gate.
+
+Checks:
+  1. the §15 per-op table at n=16 (MobileNetV1 pointwise stack on the
+     GTX 1080Ti): unit-tuned re-streamed floor vs op-native tuned vs
+     inherited-geometry cycles, pinned bit-exact — drift fails CI;
+  2. the HARD GATE: >= 1.10x geomean speedup over the residency-
+     eligible suite (filter tensor >= 128 KiB and within the L2
+     residency budget — the ops where cross-image filter residency has
+     bytes to save and a legal place to keep them);
+  3. the §15 residency-vs-re-stream table at n in {1, 4, 16, 64},
+     pinned, plus the structural properties: cycles monotone in n and
+     never-lose vs the re-streaming floor (tuner seeding makes the
+     latter true by construction — this replays it end to end);
+  4. eligibility is honest: every gated op's filter tensor fits the L2
+     residency budget, and the excluded 4 MiB head (1024 -> 1024) does
+     NOT fit — its row is pinned at 1.000x, not dropped silently;
+  5. the satellite-2 sweep: retuning under the fused objective
+     (epilogue axis included) never loses to pushing the inherited
+     unfused geometry through `fused`, on every §14 model graph.
+
+--bench-out FILE writes the replayed numbers as JSON (BENCH_10.json in
+CI) so the gate numbers ride along with the build artifacts.
+"""
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent))
+
+import graph as graphmod
+import ops
+import tuner
+from gpusim import gtx_1080ti, simulate_cycles
+from plans import BYTES_F32
+
+# ---- pinned EXPERIMENTS.md §15 values (update together with the doc) ----
+
+# (C, W, M) -> (unit-tuned re-streamed floor, op-native tuned,
+#               inherited-geometry cycles, winning plan) at n = 16
+PINNED_N16 = {
+    (32, 112, 64): (236371.02016528926, 235713.45983471075,
+                    235713.45983471075,
+                    "ours-multi[S=32 M'=64 W'x=256] xb16+fr"),
+    (64, 56, 128): (120640.40198347108, 118010.16066115702,
+                    118010.16066115702,
+                    "ours-multi[S=32 M'=128 W'x=64] s4/cyc xb16+fr"),
+    (128, 56, 128): (162724.26314049587, 157463.78049586777,
+                     157463.78049586777,
+                     "ours-multi[S=32 M'=128 W'x=64] s4/cyc xb16+fr"),
+    (128, 28, 256): (88095.5493553719, 80175.922292011,
+                     81782.97018181818,
+                     "ours-multi[S=32 M'=256 W'x=32] s4/cyc xb16+fr"),
+    (256, 28, 256): (139410.4677921801, 139410.4677921801,
+                     139410.4677921801,
+                     "ours-multi[S=64 M'=128 W'x=32] s4/cyc xb16+fr"),
+    (256, 14, 512): (90179.70247933887, 78829.5356759944,
+                     78829.5356759944,
+                     "ours-multi[S=64 M'=128 W'x=32] s4/cyc xb16+fr"),
+    (512, 14, 512): (160720.26975206615, 151647.3134537721,
+                     151647.3134537721,
+                     "ours-multi[S=64 M'=128 W'x=32] s4/cyc xb16+fr"),
+    (512, 7, 1024): (163726.25983471074, 120114.35371900826,
+                     152025.65896051418,
+                     "ours-multi[S=64 M'=64 W'x=32] xb16+fr"),
+    (1024, 7, 1024): (317632.9520661157, 317632.9520661157,
+                      317632.9520661157,
+                      "ours-multi[S=32 M'=128 W'x=32] s2/tile xb16"),
+}
+
+# the gate suite: filter tensor >= 128 KiB (residency has bytes worth
+# saving) AND within the L2 residency budget (a legal place to keep
+# them).  Both compute-bound members stay in — their honest 1.000x /
+# 1.060x rows are part of the geomean, not cherry-picked away.
+GATE_MIN_FILTER_BYTES = 128 * 1024
+GATE_GEOMEAN = 1.1267
+GATE_FLOOR = 1.10
+
+# (C, W, M) -> {n: (re-streamed floor, op-native tuned)} — §15's
+# residency-vs-re-stream scaling table over the gate suite
+PINNED_BATCH = {
+    (128, 28, 256): {
+        1: (8933.15884819487, 8933.15884819487),
+        4: (22285.50952588082, 22034.254912764005),
+        16: (88095.5493553719, 80175.922292011),
+        64: (352382.19742148754, 307466.86646831915),
+    },
+    (256, 28, 256): {
+        1: (12915.381070417092, 12915.381070417092),
+        4: (38214.39841476972, 38214.39841476972),
+        16: (139410.4677921801, 139410.4677921801),
+        64: (544194.7453018215, 544194.7453018215),
+    },
+    (256, 14, 512): {
+        1: (9181.992315112851, 9181.992315112851),
+        4: (23111.500987289168, 23111.500987289168),
+        16: (90179.70247933887, 78829.5356759944),
+        64: (360718.8099173552, 301701.674430815),
+    },
+    (512, 14, 512): {
+        1: (13733.103426223961, 13733.103426223961),
+        4: (41315.945431733606, 41315.945431733606),
+        16: (160720.26975206615, 151647.3134537721),
+        64: (642881.0790082641, 592972.7855419256),
+    },
+    (512, 7, 1024): {
+        1: (14111.448932966023, 14111.448932966023),
+        4: (43245.12906519742, 37208.0989825528),
+        16: (163726.25983471074, 120114.35371900826),
+        64: (654905.039338843, 460993.6290909091),
+    },
+}
+
+
+def check(cond, msg):
+    if not cond:
+        print(f"FAIL: {msg}")
+        sys.exit(1)
+    print(f"ok: {msg}")
+
+
+def approx(got, want, rel, msg):
+    check(abs(got - want) <= rel * max(abs(want), 1e-12),
+          f"{msg}: got {got:.4f}, pinned {want:.4f}")
+
+
+def exact(got, want, msg):
+    check(abs(got - want) <= 1e-9 * max(abs(want), 1.0),
+          f"{msg}: got {got!r}, pinned {want!r}")
+
+
+def filter_tensor_bytes(op):
+    return op.unit().m * op.unit().c * op.unit().k * op.unit().k * BYTES_F32
+
+
+def eligible(op, spec):
+    fb = filter_tensor_bytes(op)
+    return fb >= GATE_MIN_FILTER_BYTES and fb <= spec.l2_resident_budget()
+
+
+def replay_n16(spec):
+    rows = []
+    print("\n| op | filter | floor (cyc) | op-native (cyc) | inherited "
+          "(cyc) | speedup | plan |")
+    print("|---|---|---|---|---|---|---|")
+    for (c, w, m), (want_floor, want_tuned, want_inh, want_name) \
+            in PINNED_N16.items():
+        op = ops.ConvOp.pointwise(c, w, m)
+        inherited = tuner.tuned_params(op.unit(), spec)
+        floor = simulate_cycles(
+            spec, tuner.build_plan(op.unit(), spec, inherited).batched(16))
+        tc, params, inh = ops.tuned_op(op, ops.EP_NONE, 16, spec)
+        name = ops.build_op_plan(op, ops.EP_NONE, 16, spec, params).name
+        label = f"pw({c},{w},{m})"
+        exact(floor, want_floor, f"§15 {label} n=16 floor")
+        exact(tc, want_tuned, f"§15 {label} n=16 op-native")
+        exact(inh, want_inh, f"§15 {label} n=16 inherited")
+        check(name == want_name, f"§15 {label} winner: {name}")
+        check(tc <= inh * (1 + 1e-9), f"§15 {label}: never loses to inherited")
+        check(tc <= floor * (1 + 1e-9), f"§15 {label}: never loses to floor")
+        fb = filter_tensor_bytes(op)
+        rows.append({"op": label, "filter_bytes": fb, "floor": floor,
+                     "tuned": tc, "inherited": inh,
+                     "speedup": floor / tc, "plan": name,
+                     "gated": eligible(op, spec)})
+        print(f"| {label} | {fb // 1024} KiB | {floor:.0f} | {tc:.0f} "
+              f"| {inh:.0f} | {floor / tc:.3f}x | {name} |")
+    return rows
+
+
+def gate(spec, rows):
+    gated = [r for r in rows if r["gated"]]
+    check(len(gated) == len(PINNED_BATCH),
+          f"gate suite has {len(PINNED_BATCH)} residency-eligible ops")
+    for r in rows:
+        op = next((c, w, m) for (c, w, m) in PINNED_N16
+                  if f"pw({c},{w},{m})" == r["op"])
+        check((op in PINNED_BATCH) == r["gated"],
+              f"{r['op']}: gate membership matches the pinned suite")
+    # the 4 MiB head must be excluded by the budget, not by hand
+    big = ops.ConvOp.pointwise(1024, 7, 1024)
+    check(filter_tensor_bytes(big) > spec.l2_resident_budget(),
+          "pw(1024,7,1024): 4 MiB filter tensor exceeds the L2 budget")
+    gm = math.exp(sum(math.log(r["speedup"]) for r in gated) / len(gated))
+    approx(gm, GATE_GEOMEAN, 0.005, "§15 gate-suite geomean")
+    check(gm >= GATE_FLOOR,
+          f"HARD GATE: geomean {gm:.4f}x >= {GATE_FLOOR}x on the "
+          "residency-eligible MobileNetV1 pointwise suite at n=16")
+    all9 = math.exp(sum(math.log(r["speedup"]) for r in rows) / len(rows))
+    print(f"\ngate suite geomean {gm:.4f}x (floor {GATE_FLOOR}x); "
+          f"all-9-layer geomean {all9:.4f}x")
+    return gm, all9
+
+
+def replay_batch_scaling(spec):
+    out = {}
+    print("\n| op | n | re-stream (cyc) | op-native (cyc) | saved |")
+    print("|---|---|---|---|---|")
+    for (c, w, m), by_n in PINNED_BATCH.items():
+        op = ops.ConvOp.pointwise(c, w, m)
+        label = f"pw({c},{w},{m})"
+        inherited = tuner.tuned_params(op.unit(), spec)
+        last = 0.0
+        out[label] = {}
+        for n, (want_floor, want_tuned) in sorted(by_n.items()):
+            floor = simulate_cycles(
+                spec, tuner.build_plan(op.unit(), spec, inherited).batched(n))
+            tc = ops.tuned_op(op, ops.EP_NONE, n, spec)[0]
+            exact(floor, want_floor, f"§15 {label} n={n} re-stream")
+            exact(tc, want_tuned, f"§15 {label} n={n} op-native")
+            check(tc <= floor * (1 + 1e-9),
+                  f"§15 {label} n={n}: never loses to re-streaming")
+            check(tc > last, f"§15 {label} n={n}: cycles monotone in n")
+            last = tc
+            out[label][n] = {"floor": floor, "tuned": tc}
+            print(f"| {label} | {n} | {floor:.0f} | {tc:.0f} "
+                  f"| {100 * (1 - tc / floor):.1f}% |")
+    return out
+
+
+def fused_retune_sweep(spec):
+    # satellite 2: the tuner's Epilogue axis — retuning under the fused
+    # objective never loses to the fused-inherited plan, per §14 model
+    for (name, build) in graphmod.MODEL_GRAPHS:
+        fused, _ = graphmod.fuse(build(), spec, graphmod.dispatch_planner)
+        seen = set()
+        worst = 1.0
+        for node in fused.nodes:
+            if node.kind != "conv":
+                continue
+            key = (node.conv, node.epilogue)
+            if key in seen:
+                continue
+            seen.add(key)
+            tc, _, inh = ops.tuned_op(node.conv, node.epilogue, 1, spec)
+            check(tc <= inh * (1 + 1e-9),
+                  f"{name}: fused-retuned beats fused-inherited on "
+                  f"{node.conv.label()} +{node.epilogue}")
+            worst = max(worst, tc / max(inh, 1e-12))
+        print(f"ok: {name}: fused retune never loses "
+              f"({len(seen)} unique fused ops)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench-out", metavar="FILE",
+                    help="write the replayed §15 numbers as JSON")
+    args = ap.parse_args()
+    spec = gtx_1080ti()
+
+    rows = replay_n16(spec)
+    gm, all9 = gate(spec, rows)
+    scaling = replay_batch_scaling(spec)
+    fused_retune_sweep(spec)
+
+    if args.bench_out:
+        with open(args.bench_out, "w") as f:
+            json.dump({
+                "bench": "optuner_residency",
+                "device": spec.name,
+                "n": 16,
+                "gate_floor": GATE_FLOOR,
+                "gate_geomean": gm,
+                "all9_geomean": all9,
+                "rows": rows,
+                "batch_scaling": scaling,
+            }, f, indent=2)
+        print(f"\nwrote {args.bench_out}")
+
+    print("\nALL OP-TUNER CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

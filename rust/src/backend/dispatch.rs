@@ -26,8 +26,7 @@
 //! heterogeneous fleets can pick different algorithms per GPU
 //! generation).
 
-use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
+use std::sync::OnceLock;
 
 use crate::conv::{BatchedConv, BatchedConvOp, ConvOp, ConvProblem};
 use crate::gpusim::{simulate, Epilogue, GpuSpec, KernelPlan};
@@ -157,12 +156,17 @@ impl Dispatcher {
     fn decide_op_n(&self, op: &ConvOp, n: usize, spec: &GpuSpec) -> Decision {
         assert!(op.valid(), "invalid op {op:?}");
         let tuned = self.backend(PAPER_TUNED).expect("paper-tuned backend in every registry");
-        // the never-lose floor: the paper-tuned naive lowering
+        // the never-lose floor: the paper-tuned naive lowering,
+        // re-streamed per image (no residency credit — the floor stays
+        // what pre-op-native serving actually dispatched)
         let tuned_cycles = simulate(spec, &lowered_plan(tuned, op, spec).batched(n)).cycles;
-        // paper-tuned serves min(native, lowered), so its entry never
-        // prices above its own floor
-        let mut best =
-            (PAPER_TUNED, simulate(spec, &tuned.op_plan(op, spec).batched(n)).cycles);
+        // paper-tuned is ranked on its batched OP plan — the op-native
+        // tuned schedule, with cross-image filter residency where it
+        // qualifies — which never prices above its own lowered floor
+        let mut best = (
+            PAPER_TUNED,
+            simulate(spec, &tuned.batched_op_plan(&BatchedConvOp::new(*op, n), spec)).cycles,
+        );
         for b in &self.backends {
             if b.name() == PAPER_TUNED || !b.op_coverage(op).supported() {
                 continue;
@@ -286,27 +290,19 @@ pub fn dispatch_fused_op_plan(op: &ConvOp, ep: Epilogue, spec: &GpuSpec) -> Kern
         .fused_op_plan(op, ep, spec)
 }
 
-/// Memo key for batched decisions: (op, batch n, spec name).
-type BatchedKey = (ConvOp, usize, &'static str);
-
-fn batched_memo() -> &'static Mutex<HashMap<BatchedKey, Decision>> {
-    static MEMO: OnceLock<Mutex<HashMap<BatchedKey, Decision>>> = OnceLock::new();
-    MEMO.get_or_init(|| Mutex::new(HashMap::new()))
-}
-
-/// Memoized batched op dispatch decision (in-process only — batch
-/// sizes are a serving-time axis, not a tuning artifact worth
-/// persisting).
+/// Memoized batched op dispatch decision — persisted as PlanCache v6
+/// `kind=dispatch n=...` entries (`tune --save/--load` carries them, so
+/// a preloaded fleet pays zero batched rankings; pre-v6 this memo was
+/// in-process only).  `n = 1` is exactly the historical fused-op key.
 pub fn batched_op_dispatched(b: &BatchedConvOp, spec: &GpuSpec) -> Decision {
     if b.n == 1 {
         return op_dispatched(&b.op, spec);
     }
-    let key = (b.op, b.n, spec.name);
-    if let Some(d) = batched_memo().lock().unwrap().get(&key) {
-        return d.clone();
+    if let Some(d) = tuner::cached_dispatch_batched(&b.op, Epilogue::None, b.n, spec) {
+        return d;
     }
     let d = registry().decide_batched_op(b, spec);
-    batched_memo().lock().unwrap().insert(key, d.clone());
+    tuner::store_dispatch_batched(&b.op, Epilogue::None, b.n, spec, d.clone());
     d
 }
 

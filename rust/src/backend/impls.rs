@@ -12,7 +12,7 @@ use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
 
 use crate::baselines::{cudnn_proxy, dac17, fft_conv, tan128, winograd};
-use crate::conv::{conv2d_multi_cpu, ConvOp, ConvProblem, BYTES_F32};
+use crate::conv::{conv2d_multi_cpu, BatchedConvOp, ConvOp, ConvProblem, BYTES_F32};
 use crate::gpusim::{simulate, Epilogue, GpuSpec, KernelPlan, Loading, Round};
 use crate::plans::{single_channel, stride_fixed};
 use crate::tuner;
@@ -103,12 +103,46 @@ impl ConvBackend for PaperTuned {
         }
     }
 
+    /// Non-dense ops go through the OP-NATIVE tuner (`tuner::tuned_op`):
+    /// the plan space is searched under the decimated/grouped/fused/
+    /// batched objective itself, seeded by the inherited-geometry plan
+    /// (the unit-tuned params pushed through the serving transforms —
+    /// exactly what this method returned before the op-native search
+    /// existed), so the route is never-lose vs the old one by
+    /// construction.
     fn op_plan(&self, op: &ConvOp, spec: &GpuSpec) -> KernelPlan {
         assert!(op.valid(), "invalid op {op:?}");
         if op.is_dense() {
             return self.plan(&op.core, spec);
         }
-        paper_op_plan(self.plan(&op.lower().unit, spec), op, spec, true)
+        tuner::tuned_op_plan(op, Epilogue::None, 1, spec)
+    }
+
+    /// Fused ops are RE-TUNED over the epilogue axis (the fused floor
+    /// reprices the writeback tail, which can flip the plan ranking —
+    /// e.g. a pooled writeback shrinks stores 4x and shifts the best
+    /// M'/W'x trade-off), instead of inheriting the `Epilogue::None`
+    /// winner's geometry.  Never-lose vs the inherited fused plan by
+    /// the same seeding argument as `op_plan`.
+    fn fused_op_plan(&self, op: &ConvOp, ep: Epilogue, spec: &GpuSpec) -> KernelPlan {
+        if ep.is_none() {
+            return self.op_plan(op, spec);
+        }
+        tuner::tuned_op_plan(op, ep, 1, spec)
+    }
+
+    /// Batched ops are tuned under the batch-`n` objective, where
+    /// cross-image filter residency (`KernelPlan::batched_resident`)
+    /// can reward geometries the single-image ranking never picks
+    /// (e.g. wider M' so the per-SM filter block fits beside the
+    /// staging buffers and is streamed once per wave instead of once
+    /// per image).
+    fn batched_op_plan(&self, b: &BatchedConvOp, spec: &GpuSpec) -> KernelPlan {
+        assert!(b.valid(), "invalid batched op");
+        if b.n == 1 {
+            return self.op_plan(&b.op, spec);
+        }
+        tuner::tuned_op_plan(&b.op, Epilogue::None, b.n, spec)
     }
 
     fn execute_reference(&self, p: &ConvProblem, image: &[f32], filters: &[f32]) -> Vec<f32> {
@@ -213,6 +247,8 @@ impl ConvBackend for CpuReference {
             stage_bytes: 0,
             epilogue: Epilogue::None,
             epilogue_read_bytes: 0.0,
+            filter_resident_smem_bytes: 0,
+            filter_l2_footprint_bytes: 0,
         }
     }
 

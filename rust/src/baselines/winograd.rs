@@ -85,6 +85,8 @@ pub fn plan(p: &ConvProblem, spec: &GpuSpec) -> KernelPlan {
         stage_bytes: 0,
         epilogue: Epilogue::None,
         epilogue_read_bytes: 0.0,
+        filter_resident_smem_bytes: 0,
+        filter_l2_footprint_bytes: 0,
     }
 }
 

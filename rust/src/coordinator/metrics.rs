@@ -127,6 +127,10 @@ pub struct Metrics {
     /// fusion wins per model: (nodes fused, glue bytes eliminated per
     /// inference), recorded when a model graph is fused for serving
     pub fusion_by_model: BTreeMap<String, (u64, f64)>,
+    /// filter-residency wins per model: (conv layers whose batched
+    /// schedule kept filters smem-resident, DRAM filter bytes NOT
+    /// re-streamed over the serving batch), recorded per model serve
+    pub residency_by_model: BTreeMap<String, (u64, f64)>,
 }
 
 impl Metrics {
@@ -162,6 +166,14 @@ impl Metrics {
     pub fn record_fusion(&mut self, model: &str, nodes_fused: u64, glue_bytes_eliminated: f64) {
         self.fusion_by_model
             .insert(model.to_string(), (nodes_fused, glue_bytes_eliminated));
+    }
+
+    /// Record a model's filter-residency outcome at its serving batch
+    /// (idempotent per model, like `record_fusion` — the batched
+    /// schedule is deterministic for a given batch size).
+    pub fn record_residency(&mut self, model: &str, resident_layers: u64, filter_bytes_saved: f64) {
+        self.residency_by_model
+            .insert(model.to_string(), (resident_layers, filter_bytes_saved));
     }
 
     /// Sample the executor pool's occupancy/fragmentation/eviction state
@@ -209,6 +221,18 @@ impl Metrics {
                     );
                 }
                 f
+            })
+            .set("residency", {
+                let mut r = Json::obj();
+                for (m, &(n, b)) in &self.residency_by_model {
+                    r = r.set(
+                        m,
+                        Json::obj()
+                            .set("resident_layers", (n as usize).into())
+                            .set("filter_bytes_saved", b.into()),
+                    );
+                }
+                r
             })
             .set("latency", self.latency.to_json())
             .set("latency_by_class", {
@@ -324,6 +348,20 @@ mod tests {
         assert!(json.contains("\"fusion\":{"), "{json}");
         assert!(json.contains("\"nodes_fused\":13"), "{json}");
         assert!(json.contains("\"glue_bytes_eliminated\""), "{json}");
+    }
+
+    #[test]
+    fn residency_wins_are_exported_per_model() {
+        let mut m = Metrics::default();
+        m.record_residency("mobilenet_v1", 13, 2.5e7);
+        m.record_residency("mobilenet_v1", 13, 2.5e7); // idempotent
+        m.record_residency("resnet18", 0, 0.0);
+        assert_eq!(m.residency_by_model.len(), 2);
+        assert_eq!(m.residency_by_model["mobilenet_v1"].0, 13);
+        let json = m.to_json().render();
+        assert!(json.contains("\"residency\":{"), "{json}");
+        assert!(json.contains("\"resident_layers\":13"), "{json}");
+        assert!(json.contains("\"filter_bytes_saved\""), "{json}");
     }
 
     #[test]

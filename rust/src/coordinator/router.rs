@@ -178,6 +178,18 @@ impl Router {
             let advice = crate::backend::op_dispatch_advice(op, spec);
             self.tuned_advice.insert(*op, advice);
         }
+        // serving fuses each model before executing it: run the same
+        // rewrite here so every fused (conv, epilogue) pair's dispatch
+        // decision — and the op-native retuned plans behind it — are
+        // already cached when the first model request arrives
+        for (_, g) in &self.models {
+            let (fused, _) = graph::fuse(g, spec, crate::backend::dispatch_fused_op_plan);
+            for n in fused.nodes() {
+                if let graph::Op::Conv { conv, epilogue } = &n.op {
+                    let _ = crate::backend::fused_op_dispatched(conv, *epilogue, spec);
+                }
+            }
+        }
         ops.len()
     }
 

@@ -539,6 +539,11 @@ fn exec_loop(
                         fusion.nodes_fused as u64,
                         fusion.glue_bytes_eliminated,
                     );
+                    m.record_residency(
+                        &graph.name,
+                        report.resident_conv_layers as u64,
+                        report.resident_filter_bytes_saved,
+                    );
                 }
                 // the output tensor carries the honest simulation data:
                 // per-node seconds in schedule order

@@ -89,11 +89,30 @@ pub struct Round {
     /// segments + map strips), plans pre-combine their efficiencies and
     /// set this instead of `segment_bytes`
     pub eff_override: Option<f64>,
+    /// the share of `load_bytes` that is filter traffic — the stream a
+    /// cross-image residency mode (`KernelPlan::batched_resident`) can
+    /// drop from warm rounds.  0.0 = residency not expressible.
+    pub filter_bytes: f64,
+    /// contiguous-segment size of that filter stream (0 when untagged)
+    pub filter_seg: usize,
+    /// latency-hiding floor: bytes still in flight when `load_bytes`
+    /// shrank because part of the traffic is served by a resident copy
+    /// (L2 or smem) instead of DRAM.  0.0 = `load_bytes` is the
+    /// in-flight volume.
+    pub inflight_bytes: f64,
 }
 
 impl Round {
     pub fn new(load_bytes: f64, segment_bytes: usize, fma_ops: f64) -> Round {
-        Round { load_bytes, segment_bytes, fma_ops, eff_override: None }
+        Round {
+            load_bytes,
+            segment_bytes,
+            fma_ops,
+            eff_override: None,
+            filter_bytes: 0.0,
+            filter_seg: 0,
+            inflight_bytes: 0.0,
+        }
     }
 
     /// Round whose access efficiency was combined from several streams,
@@ -102,7 +121,15 @@ impl Round {
     /// tilewise/ordered with zero segment gain on mixed rounds).
     pub fn with_efficiency(load_bytes: f64, segment_bytes: usize, eff: f64, fma_ops: f64) -> Round {
         assert!(eff > 0.0 && eff <= 1.0);
-        Round { load_bytes, segment_bytes, fma_ops, eff_override: Some(eff) }
+        Round {
+            load_bytes,
+            segment_bytes,
+            fma_ops,
+            eff_override: Some(eff),
+            filter_bytes: 0.0,
+            filter_seg: 0,
+            inflight_bytes: 0.0,
+        }
     }
 
     /// A round fetching several constituent streams
@@ -121,6 +148,73 @@ impl Round {
             streams.iter().filter(|&&(_, s)| s > 0).map(|&(b, s)| b / s as f64).sum();
         let seg = if issues > 0.0 { (total / issues).round().max(1.0) as usize } else { 128 };
         Round::with_efficiency(total, seg, eff, fma_ops)
+    }
+
+    /// `mixed` with the first stream tagged as the filter component, so
+    /// residency transforms know which bytes a warm image can skip.
+    pub fn mixed_with_filter(
+        filter: (f64, usize),
+        rest: &[(f64, usize)],
+        fma_ops: f64,
+    ) -> Round {
+        let mut streams = Vec::with_capacity(1 + rest.len());
+        streams.push(filter);
+        streams.extend_from_slice(rest);
+        let mut r = Round::mixed(&streams, fma_ops);
+        r.filter_bytes = filter.0;
+        r.filter_seg = filter.1;
+        r
+    }
+
+    /// Tag an already-built round's filter component (for rounds that
+    /// fetch nothing but filters, e.g. a streamed filter-piece round).
+    pub fn tagged_filter(mut self, filter_bytes: f64, filter_seg: usize) -> Round {
+        assert!(filter_bytes <= self.load_bytes + 1e-9, "filter tag exceeds round load");
+        self.filter_bytes = filter_bytes;
+        self.filter_seg = filter_seg;
+        self
+    }
+
+    /// The warm-image round.  Filter loads still issue (they hit the
+    /// resident copy, so the issue pattern and in-flight volume that
+    /// hide latency are the cold round's — `inflight_bytes` pins that
+    /// floor), but they cost no DRAM bus time: the round's DRAM bytes
+    /// drop to the non-filter share, repriced by subtracting the filter
+    /// stream's bus time (floored at full speed).
+    pub fn without_filter_loads(&self) -> Round {
+        if self.filter_bytes <= 0.0 {
+            return *self;
+        }
+        let rem_bytes = (self.load_bytes - self.filter_bytes).max(0.0);
+        if rem_bytes <= 0.0 {
+            // a pure-filter round streams nothing from DRAM warm, but
+            // its loads still occupy the pipeline's in-flight window
+            return Round {
+                load_bytes: 0.0,
+                eff_override: None,
+                filter_bytes: 0.0,
+                filter_seg: 0,
+                inflight_bytes: self.load_bytes,
+                ..*self
+            };
+        }
+        let eff = self
+            .eff_override
+            .unwrap_or_else(|| segment_efficiency(self.segment_bytes));
+        let filter_eff = segment_efficiency(self.filter_seg.max(1));
+        let total_bus = self.load_bytes / eff.max(1e-9);
+        // remaining bus time can never undercut moving rem_bytes at
+        // efficiency 1.0, so the recomputed efficiency stays <= 1
+        let rem_bus = (total_bus - self.filter_bytes / filter_eff.max(1e-9)).max(rem_bytes);
+        let new_eff = (rem_bytes / rem_bus).min(1.0);
+        Round {
+            load_bytes: rem_bytes,
+            eff_override: Some(new_eff),
+            filter_bytes: 0.0,
+            filter_seg: 0,
+            inflight_bytes: self.load_bytes,
+            ..*self
+        }
     }
 }
 
@@ -189,7 +283,7 @@ pub fn load_cycles(spec: &GpuSpec, cfg: &ExecConfig, round: &Round) -> f64 {
     let stream = round.load_bytes / (per_sm_bw * occ.max(1e-9));
     let depth = if cfg.loading == Loading::Tilewise { 1.0 } else { (cfg.stages - 1) as f64 };
     let exposed = spec.mem_latency_cycles as f64
-        * latency_exposure(spec, cfg.threads_per_sm, round.load_bytes)
+        * latency_exposure(spec, cfg.threads_per_sm, round.load_bytes.max(round.inflight_bytes))
         / depth;
     let sync = if cfg.loading == Loading::Ordered { ORDERED_SYNC_CYCLES } else { 0.0 };
     exposed + stream + sync
@@ -479,6 +573,37 @@ mod tests {
         let cyc128 = load_cycles(&g, &c, &r128);
         c.loading = Loading::Ordered;
         assert!((load_cycles(&g, &c, &r128) - cyc128 - ORDERED_SYNC_CYCLES).abs() < 1e-9);
+    }
+
+    #[test]
+    fn filter_tagged_round_strips_to_the_map_stream() {
+        let (g, c) = cfg();
+        let r = Round::mixed_with_filter((1000.0, 36), &[(2000.0, 128)], 1e4);
+        assert_eq!(r.filter_bytes, 1000.0);
+        assert_eq!(r.load_bytes, 3000.0);
+        let warm = r.without_filter_loads();
+        assert_eq!(warm.filter_bytes, 0.0);
+        assert_eq!(warm.load_bytes, 2000.0);
+        // the filter share leaves the DRAM bus, so the blended
+        // efficiency recovers toward the pure 128-B map stream's
+        let eff = warm.eff_override.unwrap();
+        assert!(eff > r.eff_override.unwrap(), "stripping the 36-B filters must help");
+        assert!(eff <= 1.0 + 1e-12);
+        // the issue pattern is unchanged (filter loads still issue and
+        // hit the resident copy): segment kept, in-flight volume pinned
+        // at the cold round's
+        assert_eq!(warm.segment_bytes, r.segment_bytes);
+        assert_eq!(warm.inflight_bytes, r.load_bytes);
+        // same FMAs, cheaper load
+        assert_eq!(warm.fma_ops, r.fma_ops);
+        assert!(load_cycles(&g, &c, &warm) < load_cycles(&g, &c, &r));
+        // untagged rounds are untouched; pure-filter rounds vanish
+        let plain = round(1e4, 1e5);
+        assert_eq!(plain.without_filter_loads(), plain);
+        let pure = Round::new(500.0, 128, 1e4).tagged_filter(500.0, 128);
+        let stripped = pure.without_filter_loads();
+        assert_eq!(stripped.load_bytes, 0.0);
+        assert_eq!(load_cycles(&g, &c, &stripped), 0.0);
     }
 
     #[test]

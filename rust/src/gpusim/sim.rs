@@ -119,12 +119,64 @@ pub struct KernelPlan {
     /// bytes the epilogue streams IN through the writeback tail (the
     /// residual operand for `AddResidual`; 0 otherwise)
     pub epilogue_read_bytes: f64,
+    /// shared-memory bytes per SM needed to pin this plan's filter
+    /// working set across images, *on top of* `smem_bytes_per_sm`'s
+    /// staging buffers.  0 = the plan cannot express filter residency
+    /// (its builder did not tag the filter stream).
+    pub filter_resident_smem_bytes: u32,
+    /// total filter tensor the op touches per image (chip-wide) — what
+    /// must stay in L2 for the cache-resident fallback tier.  0 = the
+    /// plan never qualifies for L2 residency.
+    pub filter_l2_footprint_bytes: u64,
+}
+
+/// Where `batched_resident` can keep the filter working set across
+/// images.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidentTier {
+    /// one SM's distinct filters pinned in shared memory left after the
+    /// staging buffers (strongest tier: no cache pressure)
+    Smem,
+    /// the op's whole filter tensor fits the L2 residency budget, so
+    /// warm images hit cache instead of DRAM
+    L2,
 }
 
 impl KernelPlan {
     /// Total bytes the plan moves from global memory (chip-wide, loads).
     pub fn dram_load_bytes(&self) -> f64 {
         self.rounds.iter().map(|r| r.load_bytes).sum::<f64>() * self.sms_active as f64
+    }
+
+    /// Filter bytes the plan streams from global memory (chip-wide) —
+    /// the share `batched_resident` charges once instead of per image.
+    pub fn filter_load_bytes(&self) -> f64 {
+        self.rounds.iter().map(|r| r.filter_bytes).sum::<f64>() * self.sms_active as f64
+    }
+
+    /// Where (if anywhere) this plan can keep its filter working set
+    /// resident across batched images: shared memory left after the
+    /// staging buffers first, the L2 residency budget as fallback.  The
+    /// *capacity* half of the residency qualification; `batched_resident`
+    /// also checks the warm rounds actually win under the pipeline model.
+    pub fn resident_filter_tier(&self, spec: &GpuSpec) -> Option<ResidentTier> {
+        if self.filter_resident_smem_bytes > 0
+            && self.smem_bytes_per_sm as u64 + self.filter_resident_smem_bytes as u64
+                <= spec.shared_mem_bytes as u64
+        {
+            return Some(ResidentTier::Smem);
+        }
+        if self.filter_l2_footprint_bytes > 0
+            && self.filter_l2_footprint_bytes <= spec.l2_resident_budget()
+        {
+            return Some(ResidentTier::L2);
+        }
+        None
+    }
+
+    /// Whether any residency tier fits (see `resident_filter_tier`).
+    pub fn filters_can_stay_resident(&self, spec: &GpuSpec) -> bool {
+        self.resident_filter_tier(spec).is_some()
     }
 
     /// Deepen the ping-pong pipeline to `stages` buffers under
@@ -214,6 +266,15 @@ impl KernelPlan {
             output_bytes: self.output_bytes * groups as f64,
             total_fma: self.total_fma * groups as f64,
             epilogue_read_bytes: self.epilogue_read_bytes * groups as f64,
+            // cross-image residency must pin EVERY wave's filters (an SM
+            // cycles through `waves` different filter sets per image)
+            filter_resident_smem_bytes: self
+                .filter_resident_smem_bytes
+                .saturating_mul(waves as u32),
+            // the L2 tier must hold every group's filter tensor
+            filter_l2_footprint_bytes: self
+                .filter_l2_footprint_bytes
+                .saturating_mul(groups as u64),
             ..self.clone()
         }
     }
@@ -237,6 +298,64 @@ impl KernelPlan {
         KernelPlan {
             name: format!("{} xb{n}", self.name),
             rounds,
+            output_bytes: self.output_bytes * n as f64,
+            total_fma: self.total_fma * n as f64,
+            epilogue_read_bytes: self.epilogue_read_bytes * n as f64,
+            ..self.clone()
+        }
+    }
+
+    /// The batch-`n` schedule with cross-image filter residency: when
+    /// the filter working set stays resident (smem-pinned, or the whole
+    /// filter tensor within the L2 budget), only image 0 streams filters
+    /// from DRAM — every warm image's rounds drop the tagged filter
+    /// DRAM bytes (`Round::without_filter_loads`, which keeps the cold
+    /// round's issue pattern and in-flight volume), so filter traffic
+    /// is charged once per wave instead of once per image.
+    ///
+    /// Never-lose vs `batched(n)` by construction: the transform falls
+    /// back to the conservative re-streaming schedule unless (a) a
+    /// residency tier fits (`resident_filter_tier`; for the smem tier
+    /// the extra bytes are *charged* to `smem_bytes_per_sm`, so
+    /// `simulate_detailed`'s overflow assert is the legality proof) and
+    /// (b) every warm round's load cycles are <= its cold counterpart's
+    /// under the plan's own pipeline config.  Cycles stay monotone in
+    /// `n`: each extra image appends the same warm-round block.
+    pub fn batched_resident(&self, n: usize, spec: &GpuSpec) -> KernelPlan {
+        assert!(n >= 1, "batch must be >= 1");
+        if n == 1 {
+            return self.clone();
+        }
+        let Some(tier) = self.resident_filter_tier(spec) else {
+            return self.batched(n);
+        };
+        let smem_extra =
+            if tier == ResidentTier::Smem { self.filter_resident_smem_bytes } else { 0 };
+        let cfg = ExecConfig {
+            sms_active: self.sms_active,
+            threads_per_sm: self.threads_per_sm,
+            compute_efficiency: self.compute_efficiency,
+            launch_overhead_cycles: self.launch_overhead_cycles,
+            stages: self.stages,
+            loading: self.loading,
+        };
+        let warm: Vec<Round> = self.rounds.iter().map(|r| r.without_filter_loads()).collect();
+        let wins = self.rounds.iter().zip(&warm).all(|(cold, w)| {
+            super::pipeline::load_cycles(spec, &cfg, w)
+                <= super::pipeline::load_cycles(spec, &cfg, cold) + 1e-9
+        });
+        if !wins {
+            return self.batched(n);
+        }
+        let mut rounds = Vec::with_capacity(self.rounds.len() * n);
+        rounds.extend_from_slice(&self.rounds);
+        for _ in 1..n {
+            rounds.extend_from_slice(&warm);
+        }
+        KernelPlan {
+            name: format!("{} xb{n}+fr", self.name),
+            rounds,
+            smem_bytes_per_sm: self.smem_bytes_per_sm + smem_extra,
             output_bytes: self.output_bytes * n as f64,
             total_fma: self.total_fma * n as f64,
             epilogue_read_bytes: self.epilogue_read_bytes * n as f64,
@@ -433,7 +552,30 @@ mod tests {
             stage_bytes: 8 * 1024,
             epilogue: Epilogue::None,
             epilogue_read_bytes: 0.0,
+            filter_resident_smem_bytes: 0,
+            filter_l2_footprint_bytes: 0,
         }
+    }
+
+    /// `plan` with every round's load tagged as `filter_frac` filters
+    /// and a resident working set of `resident_kb` KiB per SM.
+    fn resident_plan(
+        rounds: usize,
+        bytes: f64,
+        fma: f64,
+        filter_frac: f64,
+        resident_kb: u32,
+    ) -> KernelPlan {
+        let mut p = plan(rounds, bytes, fma);
+        for r in &mut p.rounds {
+            *r = Round::mixed_with_filter(
+                (bytes * filter_frac, 36),
+                &[(bytes * (1.0 - filter_frac), 128)],
+                fma,
+            );
+        }
+        p.filter_resident_smem_bytes = resident_kb * 1024;
+        p
     }
 
     #[test]
@@ -541,6 +683,78 @@ mod tests {
     #[should_panic(expected = "batch must be >= 1")]
     fn zero_batch_panics() {
         plan(2, 1e3, 1e4).batched(0);
+    }
+
+    #[test]
+    fn batched_resident_drops_warm_filter_traffic() {
+        let g = gtx_1080ti();
+        // memory-bound rounds, half the traffic is filters, 16 KiB fits
+        let p = resident_plan(8, 1e5, 1e4, 0.5, 16);
+        assert!(p.filters_can_stay_resident(&g));
+        let n = 8;
+        let res = p.batched_resident(n, &g);
+        assert!(res.name.ends_with("+fr"), "{}", res.name);
+        // smem legality is charged, not assumed
+        assert_eq!(res.smem_bytes_per_sm, p.smem_bytes_per_sm + 16 * 1024);
+        // filters leave DRAM once, maps n times
+        let expect_loads =
+            p.dram_load_bytes() + (n - 1) as f64 * (p.dram_load_bytes() - p.filter_load_bytes());
+        assert!((res.dram_load_bytes() - expect_loads).abs() < 1e-6 * expect_loads);
+        // the honest post-residency FMA/byte rises
+        assert!(res.fma_per_byte() > p.batched(n).fma_per_byte());
+        // never-lose vs the re-streaming model, and a strict win here
+        let t_res = simulate(&g, &res).cycles;
+        let t_stream = simulate(&g, &p.batched(n)).cycles;
+        assert!(t_res < t_stream, "resident {t_res} not below re-stream {t_stream}");
+    }
+
+    #[test]
+    fn batched_resident_never_loses_and_is_monotone_in_n() {
+        let g = gtx_1080ti();
+        for (frac, kb) in [(0.5, 16), (0.9, 40), (0.1, 1)] {
+            let p = resident_plan(6, 5e4, 2e4, frac, kb);
+            let mut last = 0.0;
+            for n in [1usize, 2, 4, 8, 16] {
+                let t = simulate(&g, &p.batched_resident(n, &g)).cycles;
+                let floor = simulate(&g, &p.batched(n)).cycles;
+                assert!(t <= floor * (1.0 + 1e-9), "n={n}: {t} > re-stream {floor}");
+                assert!(t > last, "n={n}: cycles not monotone");
+                last = t;
+            }
+        }
+    }
+
+    #[test]
+    fn batched_resident_falls_back_when_filters_do_not_fit() {
+        let g = gtx_1080ti();
+        // 64 KiB resident set on top of 48 KiB staging > 96 KiB budget
+        let p = resident_plan(8, 1e5, 1e4, 0.5, 64);
+        assert!(!p.filters_can_stay_resident(&g));
+        let res = p.batched_resident(4, &g);
+        assert!(!res.name.contains("+fr"), "{}", res.name);
+        assert_eq!(
+            simulate(&g, &res).cycles.to_bits(),
+            simulate(&g, &p.batched(4)).cycles.to_bits()
+        );
+        // untagged plans (no resident bytes) also fall back
+        let plain = plan(8, 1e5, 1e4);
+        assert!(!plain.batched_resident(4, &g).name.contains("+fr"));
+    }
+
+    #[test]
+    fn grouped_scales_the_resident_set_by_waves() {
+        let g = gtx_1080ti();
+        let mut unit = resident_plan(4, 1e4, 1e5, 0.5, 1);
+        unit.sms_active = 1;
+        // 56 groups over 28 SMs: 2 waves -> both waves' filters pinned
+        let grouped = unit.grouped(56, g.sm_count);
+        assert_eq!(grouped.filter_resident_smem_bytes, 2 * 1024);
+        // decimation and fusion leave the residency fields alone
+        assert_eq!(unit.decimated(0.5).filter_resident_smem_bytes, 1024);
+        assert_eq!(
+            unit.fused(Epilogue::Relu, (28, 28)).filter_resident_smem_bytes,
+            1024
+        );
     }
 
     #[test]

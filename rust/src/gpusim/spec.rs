@@ -32,7 +32,15 @@ pub struct GpuSpec {
     pub warp_size: u32,
     /// device (DRAM) memory, bytes — the fleet pool's default hard cap
     pub dram_bytes: u64,
+    /// L2 cache, bytes — the capacity tier cross-image filter residency
+    /// falls back to when the working set outgrows shared memory
+    pub l2_bytes: u64,
 }
+
+/// L2 lines the streaming traffic (map strips in, writeback lines out)
+/// occupies while a resident filter set is held: the residency budget is
+/// the cache minus this reserve.
+pub const L2_STREAM_RESERVE_BYTES: u64 = 256 * 1024;
 
 /// GeForce GTX 1080Ti — the paper's primary testbed (Table 1).
 pub fn gtx_1080ti() -> GpuSpec {
@@ -50,6 +58,7 @@ pub fn gtx_1080ti() -> GpuSpec {
         max_threads_per_sm: 2048,
         warp_size: 32,
         dram_bytes: 11 * 1024 * 1024 * 1024,
+        l2_bytes: 2816 * 1024,
     }
 }
 
@@ -70,6 +79,7 @@ pub fn titan_x_maxwell() -> GpuSpec {
         max_threads_per_sm: 2048,
         warp_size: 32,
         dram_bytes: 12 * 1024 * 1024 * 1024,
+        l2_bytes: 3 * 1024 * 1024,
     }
 }
 
@@ -90,6 +100,7 @@ pub fn tesla_k40() -> GpuSpec {
         max_threads_per_sm: 2048,
         warp_size: 32,
         dram_bytes: 12 * 1024 * 1024 * 1024,
+        l2_bytes: 1536 * 1024,
     }
 }
 
@@ -173,6 +184,12 @@ impl GpuSpec {
     /// Convert cycles to seconds at base clock.
     pub fn cycles_to_secs(&self, cycles: f64) -> f64 {
         cycles / self.clock_hz()
+    }
+
+    /// L2 capacity usable for cross-image filter residency: the cache
+    /// minus a reserve for the streaming working set passing through.
+    pub fn l2_resident_budget(&self) -> u64 {
+        self.l2_bytes.saturating_sub(L2_STREAM_RESERVE_BYTES)
     }
 }
 

@@ -157,6 +157,12 @@ pub struct ModelReport {
     pub glue_seconds: f64,
     /// conv node count (layer instances)
     pub conv_layers: usize,
+    /// conv layers whose batched schedule kept filters smem-resident
+    /// across the batch's images (`KernelPlan::batched_resident` won)
+    pub resident_conv_layers: usize,
+    /// chip-wide DRAM filter bytes the resident layers did NOT re-stream
+    /// over this batch execution, vs the re-streaming batched schedule
+    pub resident_filter_bytes_saved: f64,
     /// arena plan scaled per image: every activation holds `batch`
     /// images, so peak/naive bytes are the per-image plan times `batch`
     pub arena: ArenaPlan,
@@ -223,12 +229,19 @@ pub fn execute_batched(g: &Graph, spec: &GpuSpec, planner: Planner, batch: usize
     }
     let mut nodes = Vec::with_capacity(order.len());
     let (mut conv_s, mut glue_s, mut convs) = (0.0f64, 0.0f64, 0usize);
+    let (mut resident, mut resident_saved) = (0usize, 0.0f64);
     for &id in &order {
         let n = g.node(id);
         let (seconds, detail) = match &n.op {
             Op::Input { .. } => (0.0, "network input".to_string()),
             Op::Conv { conv, epilogue } => {
-                let plan = planner(conv, *epilogue, spec).batched(batch);
+                let unit = planner(conv, *epilogue, spec);
+                let plan = unit.batched_resident(batch, spec);
+                if plan.name.ends_with("+fr") {
+                    resident += 1;
+                    resident_saved += unit.batched(batch).dram_load_bytes()
+                        - plan.dram_load_bytes();
+                }
                 let r = simulate(spec, &plan);
                 convs += 1;
                 conv_s += r.seconds;
@@ -272,6 +285,8 @@ pub fn execute_batched(g: &Graph, spec: &GpuSpec, planner: Planner, batch: usize
         conv_seconds: conv_s,
         glue_seconds: glue_s,
         conv_layers: convs,
+        resident_conv_layers: resident,
+        resident_filter_bytes_saved: resident_saved,
         arena,
     }
 }
@@ -306,7 +321,7 @@ pub fn execute_batched_traced(
             .attr("detail", n.detail.as_str().into())
             .attr("seconds", n.seconds.into());
         if let Op::Conv { conv, epilogue } = &g.node(n.id).op {
-            let plan = planner(conv, *epilogue, spec).batched(batch);
+            let plan = planner(conv, *epilogue, spec).batched_resident(batch, spec);
             for (k, v) in crate::trace::Roofline::measure(spec, &plan).attrs() {
                 sp = sp.attr(&k, v);
             }

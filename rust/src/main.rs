@@ -83,6 +83,9 @@ fn main() {
                  \n  sweep [--suite fig4|fig5] [--gpu 1080ti|titanx] [--no-tune]\
                  \n  tune [--suite fig4|fig5|cnn|all] [--gpu 1080ti|titanx]\
                  \n       [--save FILE] [--load FILE]  plan-space search vs paper picks\
+                 \n       [--ops [--model NAME] [--n B]] op-native mode: tune a model's\
+                 \n                                    (op, epilogue) pairs directly at\
+                 \n                                    batch B (filter residency priced)\
                  \n  model [--model NAME|all] [--gpu ...] [--no-dispatch|--no-tune]\
                  \n        [--no-fuse] [--report]      whole-model graph execution:\
                  \n                                    latency + arena memory plan +\
@@ -612,6 +615,27 @@ fn cmd_fleet(args: &Args) -> i32 {
         })
         .collect();
 
+    // filter-residency wins per shard: the same (device, model) pairs,
+    // priced through the batched executor at the traffic batch —
+    // (device, model, resident conv layers, DRAM filter bytes NOT
+    // re-streamed per batch execution)
+    let residency_rows: Vec<(usize, String, usize, f64)> = served
+        .iter()
+        .map(|((dev, model), _)| {
+            let graph = pasconv::graph::model_graph(model).expect("traffic tags are model names");
+            let spec = &fleet.devices()[*dev].spec;
+            let (fused, _) =
+                pasconv::graph::fuse(&graph, spec, pasconv::backend::dispatch_fused_op_plan);
+            let rep = pasconv::graph::execute_batched(
+                &fused,
+                spec,
+                pasconv::backend::dispatch_fused_op_plan,
+                batch.max(1),
+            );
+            (*dev, model.clone(), rep.resident_conv_layers, rep.resident_filter_bytes_saved)
+        })
+        .collect();
+
     if json {
         let per_device = Json::Arr(
             fleet
@@ -641,6 +665,21 @@ fn cmd_fleet(args: &Args) -> i32 {
                                             .set("jobs", (*jobs).into())
                                             .set("nodes_fused", (*fused).into())
                                             .set("glue_saved_s", (*saved).into())
+                                    })
+                                    .collect(),
+                            ),
+                        )
+                        .set(
+                            "residency",
+                            Json::Arr(
+                                residency_rows
+                                    .iter()
+                                    .filter(|(dev, ..)| *dev == d.id)
+                                    .map(|(_, model, layers, saved)| {
+                                        Json::obj()
+                                            .set("model", model.as_str().into())
+                                            .set("resident_layers", (*layers).into())
+                                            .set("filter_bytes_saved", (*saved).into())
                                     })
                                     .collect(),
                             ),
@@ -750,6 +789,21 @@ fn cmd_fleet(args: &Args) -> i32 {
             }
             ft.print();
         }
+        if residency_rows.iter().any(|(.., saved)| *saved > 0.0) {
+            println!("\nfilter-residency wins per shard (batched serving at xb{batch}):");
+            let mut rt = Table::new(&[
+                "device", "model", "resident layers", "filter bytes saved / batch",
+            ]);
+            for (dev, model, layers, saved) in &residency_rows {
+                rt.row(&[
+                    dev.to_string(),
+                    model.clone(),
+                    layers.to_string(),
+                    format!("{} MiB", pasconv::util::bench::fmt_mib(*saved as usize)),
+                ]);
+            }
+            rt.print();
+        }
     }
     if let Some(path) = trace_path {
         return write_trace(path, &rec);
@@ -824,6 +878,57 @@ fn cmd_tune(args: &Args) -> i32 {
                 return 1;
             }
         }
+    }
+    if args.has("ops") {
+        // op-native mode: tune each of a model's (op, epilogue) pairs
+        // directly under the batched objective instead of inheriting
+        // the stride-1 unit geometry
+        let n = args.get_usize("n", 16);
+        let model = args.get_or("model", "mobilenet_v1");
+        let graph = match pasconv::graph::model_graph(model) {
+            Ok(g) => g,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        };
+        // the epilogue axis comes from the serving-time fusion rewrite,
+        // so this prices exactly the (op, epilogue) pairs serving runs
+        let (fused, _) =
+            pasconv::graph::fuse(&graph, &g, pasconv::backend::dispatch_fused_op_plan);
+        let mut ops: Vec<(pasconv::conv::ConvOp, pasconv::gpusim::Epilogue)> = vec![];
+        for node in fused.nodes() {
+            if let pasconv::graph::Op::Conv { conv, epilogue } = &node.op {
+                if !ops.contains(&(*conv, *epilogue)) {
+                    ops.push((*conv, *epilogue));
+                }
+            }
+        }
+        println!(
+            "== op-native tuning on {} ({model}: {} distinct (op, epilogue) pairs, batch {n}) ==\n",
+            g.name,
+            ops.len()
+        );
+        let report = tuner::op_suite_report(&ops, n, &g);
+        report.table.print();
+        println!(
+            "\nimproved on {}/{} ops; {} filter-resident; geomean speedup {:.3}x, max {:.2}x",
+            report.improved, report.total, report.resident, report.geomean_speedup, report.max_speedup
+        );
+        if let Some(path) = args.get("save") {
+            let snap = tuner::snapshot();
+            if let Err(e) = snap.save(Path::new(path)) {
+                eprintln!("error: {e:#}");
+                return 1;
+            }
+            println!(
+                "saved {} plan + {} op + {} dispatch entries to {path}",
+                snap.len(),
+                snap.op_len(),
+                snap.dispatch_len()
+            );
+        }
+        return 0;
     }
     let mut suite = match args.get_or("suite", "all") {
         "fig4" => fig4_suite(),

@@ -64,13 +64,14 @@ pub fn batched_seconds(b: &BatchedConv, spec: &GpuSpec) -> f64 {
 
 // ---- the op layer (stride / padding / groups) ----
 
-/// The paper kernel's serving plan for a conv op: the tuned unit plan
-/// under the paper backends' native op schedule (decimated strips for
-/// stride, side-by-side groups — never pricing above its own naive
-/// lowering), with the requested writeback epilogue fused onto the
-/// plan's tail.  A `graph::Planner`.
+/// The paper kernel's serving plan for a conv op: tuned directly under
+/// the op's own objective (decimated strips for stride, side-by-side
+/// groups — never pricing above its own naive lowering), with the
+/// requested writeback epilogue fused onto the plan's tail and the
+/// geometry re-searched under that fused objective.  A
+/// `graph::Planner`.
 pub fn op_plan_for(op: &ConvOp, ep: Epilogue, spec: &GpuSpec) -> KernelPlan {
-    PaperTuned.op_plan(op, spec).fused(ep, (op.oy(), op.ox()))
+    PaperTuned.fused_op_plan(op, ep, spec)
 }
 
 /// `op_plan_for` with the paper's closed-form §3 unit picks

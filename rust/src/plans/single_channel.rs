@@ -54,6 +54,9 @@ pub struct SingleRecipe {
     pub smem_bytes: usize,
     /// smem cost of one extra pipeline stage buffer
     pub stage_bytes: usize,
+    /// Distinct filter bytes one SM touches — the shared-memory cost of
+    /// pinning its filters across batched images.
+    pub filter_resident_bytes: usize,
 }
 
 /// Per-SM round recipe for an explicit `SingleChoice`.
@@ -76,8 +79,9 @@ pub fn recipe(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> SingleRecipe
             let halo_bytes = ((p.k - 1) * p.wx * BYTES_F32) as f64 / sms as f64;
             let fma = c.th1 as f64;
             let filter_seg = (m_per_sm * p.k * p.k * BYTES_F32).min(128);
-            let first = Round::mixed(
-                &[(filter_bytes, filter_seg), (piece_bytes + halo_bytes, row_seg)],
+            let first = Round::mixed_with_filter(
+                (filter_bytes, filter_seg),
+                &[(piece_bytes + halo_bytes, row_seg)],
                 fma,
             );
             // subsequent pieces reuse the K-1 halo rows kept on chip
@@ -90,6 +94,9 @@ pub fn recipe(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> SingleRecipe
                 threads_per_sm: threads,
                 smem_bytes: c.d1_bytes,
                 stage_bytes: stage_bytes(p, c.method, c.p, c.q),
+                // the SM's ceil(M/N_sm) filters are already resident by
+                // construction — pinning them across images costs their size
+                filter_resident_bytes: m_per_sm * p.k * p.k * BYTES_F32,
             }
         }
         SingleMethod::MapSplit => {
@@ -102,10 +109,18 @@ pub fn recipe(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> SingleRecipe
             let piece_bytes = (m_per_round * p.k * p.k * BYTES_F32) as f64 / sms as f64;
             let filter_seg = (m_per_round * p.k * p.k * BYTES_F32).min(128);
             let fma = c.th2 as f64;
-            let first =
-                Round::mixed(&[(piece_bytes, filter_seg), (strip_bytes, row_seg)], fma);
-            let tail =
-                (c.q > 1).then(|| (Round::new(piece_bytes, filter_seg, fma), c.q - 1));
+            let first = Round::mixed_with_filter(
+                (piece_bytes, filter_seg),
+                &[(strip_bytes, row_seg)],
+                fma,
+            );
+            let tail = (c.q > 1).then(|| {
+                (
+                    Round::new(piece_bytes, filter_seg, fma)
+                        .tagged_filter(piece_bytes, filter_seg),
+                    c.q - 1,
+                )
+            });
             SingleRecipe {
                 first,
                 tail,
@@ -113,6 +128,9 @@ pub fn recipe(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> SingleRecipe
                 threads_per_sm: threads,
                 smem_bytes: c.d2_bytes,
                 stage_bytes: stage_bytes(p, c.method, c.p, c.q),
+                // each SM streams ALL M filters past its strip: pinning
+                // them across images costs the full filter set
+                filter_resident_bytes: p.m * p.k * p.k * BYTES_F32,
             }
         }
     }
@@ -148,6 +166,8 @@ pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &SingleChoice) -> Ke
         stage_bytes: r.stage_bytes as u32,
         epilogue: Epilogue::None,
         epilogue_read_bytes: 0.0,
+        filter_resident_smem_bytes: r.filter_resident_bytes.min(u32::MAX as usize) as u32,
+        filter_l2_footprint_bytes: (p.m * p.k * p.k * BYTES_F32) as u64,
     }
 }
 

@@ -114,6 +114,9 @@ pub struct StrideRecipe {
     pub count: usize,
     pub sms_active: u32,
     pub threads_per_sm: u32,
+    /// Distinct filter bytes one SM touches over the whole kernel — the
+    /// shared-memory cost of pinning its filters across batched images.
+    pub filter_resident_bytes: usize,
 }
 
 /// Per-SM round recipe for an explicit (S, W'x, M') choice.
@@ -137,11 +140,22 @@ pub fn recipe(p: &ConvProblem, spec: &GpuSpec, c: &StrideFixedChoice) -> StrideR
     let filter_bytes = (c.s_bytes * c.m_prime) as f64 / strips.min(spec.sm_count as usize) as f64;
     let fma_per_round = (c.m_prime * (c.s_bytes / BYTES_F32) * c.wx_prime) as f64;
 
+    // distinct filter groups one SM walks (strips of the same group
+    // revisit the same filters, so this over-counts — conservative: it
+    // only makes cross-image residency harder to qualify)
+    let groups_per_sm = ceil_div(blocks, sms_active as usize).min(groups);
+    let filter_resident_bytes = groups_per_sm * c.m_prime * p.c * p.k * p.k * BYTES_F32;
+
     StrideRecipe {
-        round: Round::mixed(&[(filter_bytes, c.s_bytes), (map_bytes, 128)], fma_per_round),
+        round: Round::mixed_with_filter(
+            (filter_bytes, c.s_bytes),
+            &[(map_bytes, 128)],
+            fma_per_round,
+        ),
         count: ceil_div(blocks * segs, sms_active as usize),
         sms_active,
         threads_per_sm: launch.threads_per_sm(spec),
+        filter_resident_bytes,
     }
 }
 
@@ -163,6 +177,8 @@ pub fn plan_with_choice(p: &ConvProblem, spec: &GpuSpec, c: &StrideFixedChoice) 
         stage_bytes: stage_bytes_multi(c.s_bytes, c.wx_prime, c.m_prime, p.k) as u32,
         epilogue: Epilogue::None,
         epilogue_read_bytes: 0.0,
+        filter_resident_smem_bytes: r.filter_resident_bytes.min(u32::MAX as usize) as u32,
+        filter_l2_footprint_bytes: (p.m * p.c * p.k * p.k * BYTES_F32) as u64,
     }
 }
 

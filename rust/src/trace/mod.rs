@@ -39,7 +39,10 @@ pub mod span;
 pub use chrome::chrome_json;
 pub use fleet_trace::run_traced;
 pub use prometheus::exposition;
-pub use report::{fig4_rows, fig5_rows, model_rows, problem_row, roofline_table, rows_json, RooflineRow};
+pub use report::{
+    batched_model_rows, fig4_rows, fig5_rows, model_rows, problem_row, roofline_table, rows_json,
+    RooflineRow,
+};
 pub use roofline::Roofline;
 pub use sink::{NoopSink, Recorder, TraceSink};
 pub use span::{validate, validate_disjoint, Event, Instant, Span, SpanId, EPS};

@@ -135,6 +135,60 @@ pub fn model_rows(spec: &GpuSpec) -> Vec<RooflineRow> {
         .collect()
 }
 
+/// `model_rows` at a serving batch: conv plans run their batched
+/// schedule with filter residency (`KernelPlan::batched_resident`), so
+/// FMA/byte is the honest *post-residency* ratio — filter bytes a
+/// resident layer does not re-stream leave the denominator.  At
+/// `batch = 1` this degenerates to per-image pricing.
+pub fn batched_model_rows(spec: &GpuSpec, batch: usize) -> Vec<RooflineRow> {
+    assert!(batch >= 1, "batch must be >= 1");
+    MODEL_NAMES
+        .iter()
+        .map(|name| {
+            let g = model_graph(name).expect("canonical model name");
+            let mut fma = 0.0;
+            let mut conv_loads = 0.0;
+            let mut conv_stores = 0.0;
+            let mut conv_charged = 0.0;
+            let mut glue = 0.0;
+            for n in g.nodes() {
+                match &n.op {
+                    Op::Conv { conv, epilogue } => {
+                        let plan = backend::dispatch_fused_op_plan(conv, *epilogue, spec)
+                            .batched_resident(batch, spec);
+                        let b = crate::gpusim::simulate_detailed(spec, &plan);
+                        fma += plan.total_fma;
+                        conv_loads += plan.dram_load_bytes();
+                        conv_stores += plan.output_bytes + plan.epilogue_read_bytes;
+                        conv_charged += plan.dram_load_bytes()
+                            + b.writeback_cycles * spec.bytes_per_cycle();
+                    }
+                    _ => glue += node_glue_bytes(&g, n.id) * batch as f64,
+                }
+            }
+            let report =
+                crate::graph::execute_batched(&g, spec, backend::dispatch_fused_op_plan, batch);
+            let secs = report.total_seconds.max(f64::MIN_POSITIVE);
+            let gflops = 2.0 * fma / secs / 1e9;
+            let flops_frac = 2.0 * fma / secs / spec.peak_flops();
+            let bw_charged = (conv_charged + glue) / secs / 1e9 / spec.bandwidth_gb_s;
+            let bw_total =
+                (conv_loads + conv_stores + glue) / secs / 1e9 / spec.bandwidth_gb_s;
+            RooflineRow {
+                label: format!("{name} xb{batch}"),
+                backend: "dispatched".to_string(),
+                staging: "-".to_string(),
+                fma_per_byte: fma / conv_loads.max(1.0),
+                gflops,
+                flops_pct: 100.0 * flops_frac,
+                bw_charged_pct: 100.0 * bw_charged,
+                bw_total_pct: 100.0 * bw_total,
+                bottleneck: if bw_total >= flops_frac { "memory" } else { "compute" }.to_string(),
+            }
+        })
+        .collect()
+}
+
 /// Render rows as the fixed-width table EXPERIMENTS pins.
 pub fn roofline_table(rows: &[RooflineRow]) -> Table {
     let mut t = Table::new(&[
@@ -228,6 +282,30 @@ mod tests {
         let vgg = rows.iter().find(|r| r.label == "vgg16").unwrap();
         let mob = rows.iter().find(|r| r.label == "mobilenet_v1").unwrap();
         assert!(vgg.fma_per_byte > mob.fma_per_byte);
+    }
+
+    #[test]
+    fn batched_rows_report_post_residency_intensity() {
+        let g = gtx_1080ti();
+        let per_image = batched_model_rows(&g, 1);
+        let batched = batched_model_rows(&g, 16);
+        assert_eq!(batched.len(), MODEL_NAMES.len());
+        // at batch 1 the batched pricing IS model_rows' per-image pricing
+        for (a, b) in per_image.iter().zip(model_rows(&g)) {
+            assert!((a.fma_per_byte - b.fma_per_byte).abs() < 1e-9, "{}", a.label);
+        }
+        for (b1, b16) in per_image.iter().zip(&batched) {
+            // residency can only strip filter bytes from the
+            // denominator, never add traffic: intensity is monotone
+            assert!(
+                b16.fma_per_byte >= b1.fma_per_byte - 1e-9,
+                "{}: xb16 {} < xb1 {}",
+                b16.label,
+                b16.fma_per_byte,
+                b1.fma_per_byte
+            );
+            assert!(b16.bw_total_pct <= 100.0 + 1e-9, "{}", b16.label);
+        }
     }
 
     #[test]

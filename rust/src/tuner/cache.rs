@@ -28,6 +28,20 @@
 //! unit plans at `none`; fusion is applied to the tuned plan), so a
 //! plan line carries `epilogue=none` always — any other value is
 //! corruption, not staleness, and errors.
+//!
+//! Format v6 adds the OP-KEYED tuning slice: plan lines may carry
+//! `stride=`/`pad=`/`groups=`/`n=` plus a real `epilogue=` tag, keyed
+//! by the full `(ConvOp, Epilogue, n)` — the op-native tuner's results
+//! under the decimated/grouped/fused/batched-residency objective.  The
+//! `n=` field is the marker: a plan line without it is a v5 unit entry
+//! and round-trips BYTE-IDENTICALLY (unit lines never serialize the op
+//! fields); with it, the params were searched under the op objective
+//! and must never be served for the unit key.  Dispatch lines gain an
+//! optional `n=` batch field too (defaulting to 1, serialized only
+//! when n > 1, so v5 dispatch lines also round-trip byte-identically)
+//! — batched cross-backend decisions persist instead of living in a
+//! per-process memo.  Bad op fields (`n=0`, garbage integers, pools
+//! that don't fit the op) are corruption and hard-error, never dropped.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -166,6 +180,35 @@ fn validate_entry(idx: usize, p: &ConvProblem, gpu: &str, t: &Tuned) -> Result<(
     Ok(())
 }
 
+/// Validation for v6 op-keyed plan entries: the op itself must be
+/// valid, the fused epilogue must fit its output map, the batch must
+/// be positive, and the params must be sane for the op's LOWERED unit
+/// problem — that is the space the op-native search enumerates, so
+/// range and resource checks run against `op.lower().unit`, not the
+/// grouped/strided core the line's c/wy/wx/m/k fields spell.
+fn validate_op_entry(
+    idx: usize,
+    op: &ConvOp,
+    ep: Epilogue,
+    n: usize,
+    gpu: &str,
+    t: &Tuned,
+) -> Result<()> {
+    let line = idx + 1;
+    if !op.valid() {
+        bail!("line {line}: invalid op {op:?}");
+    }
+    if let Epilogue::MaxPoolWriteback { k, stride } = ep {
+        if k == 0 || stride == 0 || op.oy() < k || op.ox() < k {
+            bail!("line {line}: pool{k}s{stride} does not fit {}x{}", op.oy(), op.ox());
+        }
+    }
+    if n == 0 {
+        bail!("line {line}: batch n must be >= 1");
+    }
+    validate_entry(idx, &op.lower().unit, gpu, t)
+}
+
 /// Validation for `kind=dispatch` entries: the named backend must
 /// exist, cover the op (natively or through the lowering), and not
 /// claim to beat its own floor's definition (cycles <= tuned_cycles —
@@ -206,7 +249,11 @@ fn validate_dispatch(idx: usize, op: &ConvOp, ep: Epilogue, d: &Decision) -> Res
 #[derive(Clone, Debug, Default)]
 pub struct PlanCache {
     entries: HashMap<(ConvProblem, String), Tuned>,
-    dispatch: HashMap<(ConvOp, Epilogue, String), Decision>,
+    /// v6 op-native tuning results keyed by `(op, epilogue, batch, gpu)`
+    /// — a separate map so the unit slice can never serve op-objective
+    /// params (or vice versa) through a key collision.
+    op_entries: HashMap<(ConvOp, Epilogue, usize, String), Tuned>,
+    dispatch: HashMap<(ConvOp, Epilogue, usize, String), Decision>,
     /// Stale entries dropped on parse — pre-v4 plan lines (missing
     /// `stages=`/`loading=`) and pre-v5 lines of either kind (missing
     /// `epilogue=`): counted so callers can report "N stale entries
@@ -230,13 +277,18 @@ impl PlanCache {
         self.dispatch.len()
     }
 
+    /// v6 op-keyed tuning entries only.
+    pub fn op_len(&self) -> usize {
+        self.op_entries.len()
+    }
+
     /// How many pre-v5 (or pre-v4) lines the last `from_lines` dropped.
     pub fn stale_dropped(&self) -> usize {
         self.stale_dropped
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty() && self.dispatch.is_empty()
+        self.entries.is_empty() && self.op_entries.is_empty() && self.dispatch.is_empty()
     }
 
     pub fn get(&self, p: &ConvProblem, spec: &GpuSpec) -> Option<Tuned> {
@@ -247,6 +299,15 @@ impl PlanCache {
         self.entries.insert((p, spec.name.to_string()), t);
     }
 
+    /// Op-native tuning lookup on the v6 key `(op, epilogue, batch, gpu)`.
+    pub fn get_op(&self, op: &ConvOp, ep: Epilogue, n: usize, spec: &GpuSpec) -> Option<Tuned> {
+        self.op_entries.get(&(*op, ep, n, spec.name.to_string())).copied()
+    }
+
+    pub fn insert_op(&mut self, op: ConvOp, ep: Epilogue, n: usize, spec: &GpuSpec, t: Tuned) {
+        self.op_entries.insert((op, ep, n, spec.name.to_string()), t);
+    }
+
     pub fn get_dispatch(&self, op: &ConvOp, spec: &GpuSpec) -> Option<Decision> {
         self.get_dispatch_fused(op, Epilogue::None, spec)
     }
@@ -255,39 +316,57 @@ impl PlanCache {
         self.insert_dispatch_fused(op, Epilogue::None, spec, d);
     }
 
-    /// Dispatch lookup on the full v5 key `(op, epilogue, gpu)` — the
-    /// unfused decisions are exactly the `Epilogue::None` slice.
+    /// Dispatch lookup on the v5 key `(op, epilogue, gpu)` — the
+    /// unfused decisions are exactly the `Epilogue::None` slice, and
+    /// single-image decisions are exactly the `n = 1` slice of v6.
     pub fn get_dispatch_fused(&self, op: &ConvOp, ep: Epilogue, spec: &GpuSpec) -> Option<Decision> {
-        self.dispatch.get(&(*op, ep, spec.name.to_string())).cloned()
+        self.get_dispatch_batched(op, ep, 1, spec)
     }
 
     pub fn insert_dispatch_fused(&mut self, op: ConvOp, ep: Epilogue, spec: &GpuSpec, d: Decision) {
-        self.dispatch.insert((op, ep, spec.name.to_string()), d);
+        self.insert_dispatch_batched(op, ep, 1, spec, d);
+    }
+
+    /// Dispatch lookup on the full v6 key `(op, epilogue, batch, gpu)`.
+    pub fn get_dispatch_batched(
+        &self,
+        op: &ConvOp,
+        ep: Epilogue,
+        n: usize,
+        spec: &GpuSpec,
+    ) -> Option<Decision> {
+        self.dispatch.get(&(*op, ep, n, spec.name.to_string())).cloned()
+    }
+
+    pub fn insert_dispatch_batched(
+        &mut self,
+        op: ConvOp,
+        ep: Epilogue,
+        n: usize,
+        spec: &GpuSpec,
+        d: Decision,
+    ) {
+        self.dispatch.insert((op, ep, n, spec.name.to_string()), d);
     }
 
     /// Absorb every entry of `other` (overwriting duplicates), whatever
     /// GPU name it carries; returns how many entries were absorbed
     /// (plan + dispatch).
     pub fn merge(&mut self, other: PlanCache) -> usize {
-        let n = other.entries.len() + other.dispatch.len();
+        let n = other.entries.len() + other.op_entries.len() + other.dispatch.len();
         self.entries.extend(other.entries);
+        self.op_entries.extend(other.op_entries);
         self.dispatch.extend(other.dispatch);
         self.stale_dropped += other.stale_dropped;
         n
     }
 
     /// One line per entry, deterministically ordered (diff-stable
-    /// files): plan entries first, then dispatch entries.
+    /// files): unit plan entries first (byte-identical to their v5
+    /// serialization), then op-keyed plan entries, then dispatch.
     pub fn to_lines(&self) -> String {
-        let mut keys: Vec<&(ConvProblem, String)> = self.entries.keys().collect();
-        keys.sort_by_key(|(p, g)| (g.clone(), p.c, p.wy, p.wx, p.m, p.k));
-        let mut out = String::from(
-            "# pasconv plan cache v5: problem + gpu -> tuned plan params / fused op dispatch decisions\n",
-        );
-        for key in keys {
-            let (p, gpu) = key;
-            let t = &self.entries[key];
-            let params = match t.params {
+        fn params_str(params: &PlanParams) -> String {
+            match *params {
                 PlanParams::Single { method, p: pp, q, stages, loading } => {
                     let m = match method {
                         SingleMethod::FilterSplit => "filter_split",
@@ -304,30 +383,40 @@ impl PlanCache {
                         loading.name()
                     )
                 }
-            };
+            }
+        }
+        let mut keys: Vec<&(ConvProblem, String)> = self.entries.keys().collect();
+        keys.sort_by_key(|(p, g)| (g.clone(), p.c, p.wy, p.wx, p.m, p.k));
+        let mut out = String::from(
+            "# pasconv plan cache v6: problem/op + gpu -> tuned plan params / fused op dispatch decisions\n",
+        );
+        for key in keys {
+            let (p, gpu) = key;
+            let t = &self.entries[key];
             out.push_str(&format!(
-                "gpu={} c={} wy={} wx={} m={} k={} {params} epilogue=none tuned_cycles={} paper_cycles={}\n",
+                "gpu={} c={} wy={} wx={} m={} k={} {} epilogue=none tuned_cycles={} paper_cycles={}\n",
                 encode_gpu(gpu),
                 p.c,
                 p.wy,
                 p.wx,
                 p.m,
                 p.k,
+                params_str(&t.params),
                 t.tuned_cycles,
                 t.paper_cycles
             ));
         }
-        let mut dkeys: Vec<&(ConvOp, Epilogue, String)> = self.dispatch.keys().collect();
-        dkeys.sort_by_key(|(o, e, g)| {
+        let mut okeys: Vec<&(ConvOp, Epilogue, usize, String)> = self.op_entries.keys().collect();
+        okeys.sort_by_key(|(o, e, n, g)| {
             let p = o.core;
-            (g.clone(), p.c, p.wy, p.wx, p.m, p.k, o.stride, o.pad, o.groups, e.tag())
+            (g.clone(), p.c, p.wy, p.wx, p.m, p.k, o.stride, o.pad, o.groups, e.tag(), *n)
         });
-        for key in dkeys {
-            let (o, ep, gpu) = key;
+        for key in okeys {
+            let (o, ep, n, gpu) = key;
             let p = o.core;
-            let d = &self.dispatch[key];
+            let t = &self.op_entries[key];
             out.push_str(&format!(
-                "gpu={} c={} wy={} wx={} m={} k={} stride={} pad={} groups={} epilogue={} kind=dispatch backend={} cycles={} tuned_cycles={}\n",
+                "gpu={} c={} wy={} wx={} m={} k={} stride={} pad={} groups={} n={} {} epilogue={} tuned_cycles={} paper_cycles={}\n",
                 encode_gpu(gpu),
                 p.c,
                 p.wy,
@@ -337,6 +426,37 @@ impl PlanCache {
                 o.stride,
                 o.pad,
                 o.groups,
+                n,
+                params_str(&t.params),
+                ep.tag(),
+                t.tuned_cycles,
+                t.paper_cycles
+            ));
+        }
+        let mut dkeys: Vec<&(ConvOp, Epilogue, usize, String)> = self.dispatch.keys().collect();
+        dkeys.sort_by_key(|(o, e, n, g)| {
+            let p = o.core;
+            (g.clone(), p.c, p.wy, p.wx, p.m, p.k, o.stride, o.pad, o.groups, e.tag(), *n)
+        });
+        for key in dkeys {
+            let (o, ep, n, gpu) = key;
+            let p = o.core;
+            let d = &self.dispatch[key];
+            // n=1 serializes without the field so v5 files round-trip
+            // byte-identically (below the bumped header)
+            let batch = if *n > 1 { format!(" n={n}") } else { String::new() };
+            out.push_str(&format!(
+                "gpu={} c={} wy={} wx={} m={} k={} stride={} pad={} groups={}{} epilogue={} kind=dispatch backend={} cycles={} tuned_cycles={}\n",
+                encode_gpu(gpu),
+                p.c,
+                p.wy,
+                p.wx,
+                p.m,
+                p.k,
+                o.stride,
+                o.pad,
+                o.groups,
+                batch,
                 ep.tag(),
                 d.backend,
                 d.cycles,
@@ -368,7 +488,7 @@ impl PlanCache {
                 m: usize_field(&fields, idx, "m")?,
                 k: usize_field(&fields, idx, "k")?,
             };
-            let params = match field(&fields, idx, "kind")? {
+            let (params, ep) = match field(&fields, idx, "kind")? {
                 // dispatch entry: backend tag + cycle pair; op fields
                 // optional (v1/v2 lines are dense)
                 "dispatch" => {
@@ -390,6 +510,14 @@ impl PlanCache {
                         Some(e) => Epilogue::parse(e)
                             .ok_or_else(|| anyhow!("line {}: unknown epilogue {e:?}", idx + 1))?,
                     };
+                    // v6 batch field: OPTIONAL, defaulting to 1 — a v5
+                    // decision is exactly a single-image decision, so
+                    // unlike the epilogue axis there is nothing stale
+                    // about serving it on the n=1 slice
+                    let n = usize_field_or(&fields, idx, "n", 1)?;
+                    if n == 0 {
+                        bail!("line {}: batch n must be >= 1", idx + 1);
+                    }
                     let d = Decision {
                         backend: field(&fields, idx, "backend")?.to_string(),
                         cycles: f64_field(&fields, idx, "cycles")?,
@@ -397,7 +525,7 @@ impl PlanCache {
                     };
                     validate_dispatch(idx, &op, ep, &d)?;
                     let gpu = decode_gpu(field(&fields, idx, "gpu")?);
-                    cache.dispatch.insert((op, ep, gpu), d);
+                    cache.dispatch.insert((op, ep, n, gpu), d);
                     continue;
                 }
                 kind @ ("single" | "multi") => {
@@ -412,24 +540,28 @@ impl PlanCache {
                         cache.stale_dropped += 1;
                         continue;
                     }
-                    // plan entries are epilogue-blind by design (unit
-                    // plans are tuned at `none`; fusion transforms the
-                    // tuned plan): any other value is corruption
+                    // unit plan entries are epilogue-blind by design
+                    // (unit plans are tuned at `none`; fusion transforms
+                    // the tuned plan) — any other value is corruption.
+                    // v6 op-keyed entries (the `n=` marker) were tuned
+                    // UNDER the fused objective, so they carry real tags.
                     let e = fields["epilogue"];
-                    match Epilogue::parse(e) {
-                        Some(Epilogue::None) => {}
-                        Some(_) => bail!(
-                            "line {}: plan entries are tuned at epilogue=none; got {e:?}",
-                            idx + 1
-                        ),
+                    let ep = match Epilogue::parse(e) {
+                        Some(ep) => ep,
                         None => bail!("line {}: unknown epilogue {e:?}", idx + 1),
+                    };
+                    if !fields.contains_key("n") && ep != Epilogue::None {
+                        bail!(
+                            "line {}: unit plan entries are tuned at epilogue=none; got {e:?}",
+                            idx + 1
+                        );
                     }
                     let stages = usize_field(&fields, idx, "stages")? as u32;
                     let loading_name = field(&fields, idx, "loading")?;
                     let loading = Loading::parse(loading_name).ok_or_else(|| {
                         anyhow!("line {}: unknown loading {loading_name:?}", idx + 1)
                     })?;
-                    if kind == "single" {
+                    let params = if kind == "single" {
                         PlanParams::Single {
                             method: match field(&fields, idx, "method")? {
                                 "filter_split" => SingleMethod::FilterSplit,
@@ -449,7 +581,8 @@ impl PlanCache {
                             stages,
                             loading,
                         }
-                    }
+                    };
+                    (params, ep)
                 }
                 other => bail!("line {}: unknown kind {other:?}", idx + 1),
             };
@@ -459,8 +592,21 @@ impl PlanCache {
                 paper_cycles: f64_field(&fields, idx, "paper_cycles")?,
             };
             let gpu = decode_gpu(field(&fields, idx, "gpu")?);
-            validate_entry(idx, &problem, &gpu, &tuned)?;
-            cache.entries.insert((problem, gpu), tuned);
+            if fields.contains_key("n") {
+                // v6 op-keyed entry: the op fields + batch join the key
+                let n = usize_field(&fields, idx, "n")?;
+                let op = ConvOp {
+                    core: problem,
+                    stride: usize_field_or(&fields, idx, "stride", 1)?,
+                    pad: usize_field_or(&fields, idx, "pad", 0)?,
+                    groups: usize_field_or(&fields, idx, "groups", 1)?,
+                };
+                validate_op_entry(idx, &op, ep, n, &gpu, &tuned)?;
+                cache.op_entries.insert((op, ep, n, gpu), tuned);
+            } else {
+                validate_entry(idx, &problem, &gpu, &tuned)?;
+                cache.entries.insert((problem, gpu), tuned);
+            }
         }
         Ok(cache)
     }
@@ -474,6 +620,23 @@ impl PlanCache {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading plan cache {}", path.display()))?;
         PlanCache::from_lines(&text)
+    }
+
+    /// All op-keyed entries for one GPU, in the deterministic file
+    /// order (the coordinator's warm-up and the `tune --ops` CLI both
+    /// iterate this).
+    pub fn op_entries_for(&self, spec: &GpuSpec) -> Vec<(ConvOp, Epilogue, usize, Tuned)> {
+        let mut out: Vec<(ConvOp, Epilogue, usize, Tuned)> = self
+            .op_entries
+            .iter()
+            .filter(|((_, _, _, g), _)| g == spec.name)
+            .map(|((o, e, n, _), t)| (*o, *e, *n, *t))
+            .collect();
+        out.sort_by_key(|(o, e, n, _)| {
+            let p = o.core;
+            (p.c, p.wy, p.wx, p.m, p.k, o.stride, o.pad, o.groups, e.tag(), *n)
+        });
+        out
     }
 
     /// All entries for one GPU, in the deterministic file order.
@@ -700,7 +863,7 @@ mod tests {
         let mut cache = PlanCache::from_lines(v4).unwrap();
         assert_eq!((cache.len(), cache.dispatch_len()), (0, 0));
         assert_eq!(cache.stale_dropped(), 3);
-        // re-decide the dropped key and save: the new file is v5
+        // re-decide the dropped key and save: the new file is v6
         let g = gtx_1080ti();
         let op = ConvOp::same(ConvProblem::multi(64, 28, 64, 3));
         cache.insert_dispatch_fused(
@@ -710,7 +873,7 @@ mod tests {
             Decision { backend: "winograd".into(), cycles: 8_000.5, tuned_cycles: 9_000.0 },
         );
         let text = cache.to_lines();
-        assert!(text.starts_with("# pasconv plan cache v5"), "{text}");
+        assert!(text.starts_with("# pasconv plan cache v6"), "{text}");
         assert!(text.contains("epilogue=pool2s2"), "{text}");
         let back = PlanCache::from_lines(&text).unwrap();
         assert_eq!(back.stale_dropped(), 0);
@@ -724,9 +887,9 @@ mod tests {
     }
 
     #[test]
-    fn v3_loads_then_a_fresh_save_round_trips_as_v5() {
+    fn v3_loads_then_a_fresh_save_round_trips_as_v6() {
         // the upgrade path: load a v3 file (plans dropped), re-tune the
-        // dropped key, save — the new file is v5 and round-trips exactly
+        // dropped key, save — the new file is v6 and round-trips exactly
         let v3 = "gpu=GTX_1080Ti c=1 wy=224 wx=224 m=64 k=3 kind=single \
             method=filter_split p=3 q=1 tuned_cycles=10234.5625 paper_cycles=11000.125\n";
         let mut cache = PlanCache::from_lines(v3).unwrap();
@@ -748,13 +911,184 @@ mod tests {
             },
         );
         let text = cache.to_lines();
-        assert!(text.starts_with("# pasconv plan cache v5"), "{text}");
+        assert!(text.starts_with("# pasconv plan cache v6"), "{text}");
         assert!(text.contains("stages=4 loading=ordered epilogue=none"), "{text}");
         let back = PlanCache::from_lines(&text).unwrap();
         assert_eq!(back.stale_dropped(), 0);
         let t = back.get(&ConvProblem::single(224, 64, 3), &g).unwrap();
         assert_eq!(t.params.staging(), (4, Loading::Ordered));
         assert_eq!(back.to_lines(), text);
+    }
+
+    #[test]
+    fn v5_entries_load_unit_keyed_and_resave_byte_identically() {
+        // a genuine v5 file: unit plan lines without stride/pad/groups/n,
+        // dispatch lines without n — every entry loads (nothing is
+        // stale), plans serve on the unit key, and a re-save reproduces
+        // the body byte-for-byte below the bumped header
+        let v5_body = "gpu=GTX_1080Ti c=1 wy=224 wx=224 m=64 k=3 kind=single method=filter_split p=3 q=1 stages=3 loading=cyclic epilogue=none tuned_cycles=10234.5625 paper_cycles=11000.125\n\
+gpu=GTX_1080Ti c=256 wy=14 wx=14 m=256 k=3 kind=multi s=128 wxp=32 mp=64 stages=2 loading=tilewise epilogue=none tuned_cycles=25000 paper_cycles=30303.030303030303\n\
+gpu=G c=8 wy=14 wx=14 m=16 k=3 stride=1 pad=0 groups=1 epilogue=pool2s2 kind=dispatch backend=winograd cycles=1 tuned_cycles=2\n";
+        let v5 = format!(
+            "# pasconv plan cache v5: problem + gpu -> tuned plan params / fused op dispatch decisions\n{v5_body}"
+        );
+        let cache = PlanCache::from_lines(&v5).unwrap();
+        assert_eq!(
+            (cache.len(), cache.op_len(), cache.dispatch_len(), cache.stale_dropped()),
+            (2, 0, 1, 0)
+        );
+        assert!(cache.get(&ConvProblem::single(224, 64, 3), &gtx_1080ti()).is_some());
+        let text = cache.to_lines();
+        assert!(text.starts_with("# pasconv plan cache v6"), "{text}");
+        let body: String = text.lines().skip(1).map(|l| format!("{l}\n")).collect();
+        assert_eq!(body, v5_body, "v5 entries must re-save byte-identically");
+    }
+
+    #[test]
+    fn op_entries_round_trip_on_the_batched_key() {
+        let g = gtx_1080ti();
+        let mut cache = sample();
+        let op = ConvOp::pointwise(512, 14, 512);
+        let t = Tuned {
+            params: PlanParams::Multi {
+                s_bytes: 64,
+                wx_prime: 32,
+                m_prime: 32,
+                stages: 2,
+                loading: Loading::Cyclic,
+            },
+            tuned_cycles: 40_000.5,
+            paper_cycles: 61_000.25,
+        };
+        cache.insert_op(op, Epilogue::None, 16, &g, t);
+        // the same op at a different epilogue and batch: distinct keys
+        cache.insert_op(op, Epilogue::Relu, 16, &g, Tuned { tuned_cycles: 41_000.0, ..t });
+        let dw = ConvOp::depthwise(32, 28, 3, 1);
+        cache.insert_op(
+            dw,
+            Epilogue::None,
+            4,
+            &g,
+            Tuned {
+                params: PlanParams::Single {
+                    method: SingleMethod::FilterSplit,
+                    p: 2,
+                    q: 1,
+                    stages: 2,
+                    loading: Loading::Cyclic,
+                },
+                tuned_cycles: 9_000.0,
+                paper_cycles: 9_500.0,
+            },
+        );
+        let text = cache.to_lines();
+        assert!(text.contains(" n=16 "), "{text}");
+        assert!(text.contains(" n=4 "), "{text}");
+        assert!(text.contains("epilogue=relu"), "{text}");
+        assert!(text.contains("groups=32"), "{text}");
+        let back = PlanCache::from_lines(&text).unwrap();
+        assert_eq!((back.op_len(), back.stale_dropped()), (3, 0));
+        assert_eq!(back.get_op(&op, Epilogue::None, 16, &g).unwrap(), t);
+        // the op key never bleeds into the unit slice or other (ep, n)
+        assert!(back.get_op(&op, Epilogue::None, 1, &g).is_none());
+        assert!(back.get(&op.core, &g).is_none());
+        assert_eq!(back.len(), cache.len(), "unit entries survive alongside");
+        assert_eq!(back.op_entries_for(&g).len(), 3);
+        assert_eq!(back.to_lines(), text, "fixed point");
+    }
+
+    #[test]
+    fn bad_op_entry_fields_hard_error_not_drop() {
+        // n=0 is corruption
+        assert!(PlanCache::from_lines(
+            "gpu=G c=512 wy=14 wx=14 m=512 k=1 stride=1 pad=0 groups=1 n=0 kind=multi \
+             s=64 wxp=32 mp=32 stages=2 loading=cyclic epilogue=none tuned_cycles=1 paper_cycles=2"
+        )
+        .is_err());
+        // garbage batch field
+        assert!(PlanCache::from_lines(
+            "gpu=G c=512 wy=14 wx=14 m=512 k=1 stride=1 pad=0 groups=1 n=lots kind=multi \
+             s=64 wxp=32 mp=32 stages=2 loading=cyclic epilogue=none tuned_cycles=1 paper_cycles=2"
+        )
+        .is_err());
+        // unknown epilogue tag on an op line
+        assert!(PlanCache::from_lines(
+            "gpu=G c=512 wy=14 wx=14 m=512 k=1 stride=1 pad=0 groups=1 n=16 kind=multi \
+             s=64 wxp=32 mp=32 stages=2 loading=cyclic epilogue=blur3 tuned_cycles=1 paper_cycles=2"
+        )
+        .is_err());
+        // a pool epilogue that does not fit the op's 14x14 output
+        assert!(PlanCache::from_lines(
+            "gpu=G c=512 wy=14 wx=14 m=512 k=1 stride=1 pad=0 groups=1 n=16 kind=multi \
+             s=64 wxp=32 mp=32 stages=2 loading=cyclic epilogue=pool16s16 tuned_cycles=1 paper_cycles=2"
+        )
+        .is_err());
+        // tuned above the inherited floor: stale or edited
+        assert!(PlanCache::from_lines(
+            "gpu=G c=512 wy=14 wx=14 m=512 k=1 stride=1 pad=0 groups=1 n=16 kind=multi \
+             s=64 wxp=32 mp=32 stages=2 loading=cyclic epilogue=none tuned_cycles=3 paper_cycles=2"
+        )
+        .is_err());
+        // params kind must match the op's LOWERED unit (groups=1 keeps
+        // C=8 multi-channel, so kind=single is corruption)
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 stride=1 pad=0 groups=1 n=2 kind=single \
+             method=filter_split p=1 q=1 stages=2 loading=cyclic epilogue=none tuned_cycles=1 paper_cycles=2"
+        )
+        .is_err());
+        // a well-formed fused op entry parses and serves on its key
+        let ok = PlanCache::from_lines(
+            "gpu=G c=512 wy=14 wx=14 m=512 k=1 stride=1 pad=0 groups=1 n=16 kind=multi \
+             s=64 wxp=32 mp=32 stages=2 loading=cyclic epilogue=relu tuned_cycles=1 paper_cycles=2"
+        )
+        .unwrap();
+        assert_eq!((ok.op_len(), ok.stale_dropped()), (1, 0));
+        let spec = GpuSpec { name: "G", ..gtx_1080ti() };
+        assert!(ok
+            .get_op(&ConvOp::pointwise(512, 14, 512), Epilogue::Relu, 16, &spec)
+            .is_some());
+    }
+
+    #[test]
+    fn batched_dispatch_entries_round_trip_and_default_to_n1() {
+        let g = gtx_1080ti();
+        let mut cache = PlanCache::new();
+        let op = ConvOp::dense(ConvProblem::multi(256, 14, 256, 1));
+        cache.insert_dispatch(
+            op,
+            &g,
+            Decision { backend: "paper-tuned".into(), cycles: 5_000.0, tuned_cycles: 5_000.0 },
+        );
+        cache.insert_dispatch_batched(
+            op,
+            Epilogue::None,
+            16,
+            &g,
+            Decision { backend: "paper-tuned".into(), cycles: 61_000.0, tuned_cycles: 80_000.0 },
+        );
+        let text = cache.to_lines();
+        // only the batched decision serializes the n= field
+        assert_eq!(text.matches(" n=16").count(), 1, "{text}");
+        assert_eq!(text.matches("kind=dispatch").count(), 2, "{text}");
+        let back = PlanCache::from_lines(&text).unwrap();
+        assert_eq!(back.dispatch_len(), 2);
+        let d = back.get_dispatch_batched(&op, Epilogue::None, 16, &g).unwrap();
+        assert!((d.tuned_cycles - 80_000.0).abs() == 0.0);
+        assert!(back.get_dispatch_batched(&op, Epilogue::None, 4, &g).is_none());
+        // the n=1 slice is exactly the historical fused key
+        assert!(back.get_dispatch(&op, &g).is_some());
+        assert_eq!(back.to_lines(), text);
+        // garbage batch fields on dispatch lines are corruption too
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 n=zero epilogue=none kind=dispatch \
+             backend=winograd cycles=1 tuned_cycles=2"
+        )
+        .is_err());
+        assert!(PlanCache::from_lines(
+            "gpu=G c=8 wy=14 wx=14 m=16 k=3 n=0 epilogue=none kind=dispatch \
+             backend=winograd cycles=1 tuned_cycles=2"
+        )
+        .is_err());
     }
 
     #[test]
@@ -928,10 +1262,28 @@ mod tests {
             &g,
             Decision { backend: "paper-tuned".into(), cycles: 10.0, tuned_cycles: 10.0 },
         );
+        b.insert_op(
+            ConvOp::pointwise(512, 14, 512),
+            Epilogue::None,
+            16,
+            &g,
+            Tuned {
+                params: PlanParams::Multi {
+                    s_bytes: 64,
+                    wx_prime: 32,
+                    m_prime: 32,
+                    stages: 2,
+                    loading: Loading::Cyclic,
+                },
+                tuned_cycles: 40_000.5,
+                paper_cycles: 61_000.25,
+            },
+        );
         let absorbed = a.merge(b.clone());
-        assert_eq!(absorbed, b.len() + b.dispatch_len());
+        assert_eq!(absorbed, b.len() + b.op_len() + b.dispatch_len());
         assert_eq!(a.len(), b.len());
         assert_eq!(a.dispatch_len(), 1);
+        assert_eq!(a.op_len(), 1);
         assert!(!a.is_empty());
     }
 

@@ -192,6 +192,121 @@ fn prop_smem_overflow_panics_cleanly_not_silently() {
 }
 
 #[test]
+fn prop_filter_residency_never_loses_to_restreaming() {
+    // `batched_resident` only replaces `batched` when every warm round
+    // prices at or below its cold twin, so the resident schedule can
+    // never lose to re-streaming the filters each image — and when it
+    // does engage, the pinned working set must respect shared memory.
+    for spec in [gtx_1080ti(), titan_x_maxwell()] {
+        check_no_shrink(
+            &Config { cases: 24, seed: 28 },
+            any_problem,
+            |p| {
+                let plan = tuner::tuned_plan(p, &spec);
+                for n in [2usize, 4, 16] {
+                    let resident = plan.batched_resident(n, &spec);
+                    let restream = plan.batched(n);
+                    let a = simulate(&spec, &resident).cycles;
+                    let b = simulate(&spec, &restream).cycles;
+                    if a > b * (1.0 + 1e-9) {
+                        return Err(format!(
+                            "{} xb{n} on {}: resident {a} > restream {b}",
+                            p.label(),
+                            spec.name
+                        ));
+                    }
+                    if resident.smem_bytes_per_sm > spec.shared_mem_bytes {
+                        return Err(format!(
+                            "{} xb{n}: smem {} over budget {}",
+                            p.label(),
+                            resident.smem_bytes_per_sm,
+                            spec.shared_mem_bytes
+                        ));
+                    }
+                    if resident.name.ends_with("+fr") && !plan.filters_can_stay_resident(&spec)
+                    {
+                        return Err(format!(
+                            "{} xb{n}: residency engaged without legality",
+                            p.label()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_batched_resident_cycles_monotone_in_batch() {
+    // more images can never cost less: the resident schedule is cold
+    // rounds plus (n-1) warm passes, each with non-negative cost
+    for spec in [gtx_1080ti(), titan_x_maxwell()] {
+        check_no_shrink(
+            &Config { cases: 24, seed: 29 },
+            any_problem,
+            |p| {
+                let plan = tuner::tuned_plan(p, &spec);
+                let mut last = 0.0f64;
+                for n in [1usize, 2, 4, 8, 16, 64] {
+                    let c = simulate(&spec, &plan.batched_resident(n, &spec)).cycles;
+                    if c < last * (1.0 - 1e-12) {
+                        return Err(format!(
+                            "{} on {}: xb{n} cycles {c} < smaller batch {last}",
+                            p.label(),
+                            spec.name
+                        ));
+                    }
+                    last = c;
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_residency_stays_legal_under_staged_pipelines() {
+    // deepen the ping-pong first (each extra stage buffer eats shared
+    // memory), then ask for residency: the qualification must count
+    // the staged buffers, never overflow the budget to pin filters
+    for spec in [gtx_1080ti(), titan_x_maxwell()] {
+        check_no_shrink(
+            &Config { cases: 24, seed: 30 },
+            any_problem,
+            |p| {
+                let base = paper_plan_for(p, &spec);
+                if base.stages != 2 || base.loading != Loading::Cyclic {
+                    return Ok(()); // staged() requires the depth-2 cyclic origin
+                }
+                for s in MIN_STAGES..=MAX_STAGES {
+                    let smem = base.smem_bytes_per_sm + (s - 2) * base.stage_bytes;
+                    if smem > spec.shared_mem_bytes {
+                        break;
+                    }
+                    let staged = base.staged(s, Loading::Cyclic);
+                    let resident = staged.batched_resident(8, &spec);
+                    if resident.smem_bytes_per_sm > spec.shared_mem_bytes {
+                        return Err(format!(
+                            "{} s={s}: resident smem {} over budget {}",
+                            p.label(),
+                            resident.smem_bytes_per_sm,
+                            spec.shared_mem_bytes
+                        ));
+                    }
+                    if resident.name.ends_with("+fr")
+                        && !staged.filters_can_stay_resident(&spec)
+                    {
+                        return Err(format!("{} s={s}: residency without legality", p.label()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
 fn prop_plan_cache_round_trips_search_results() {
     let g = gtx_1080ti();
     let mut rng = Rng::new(24);
